@@ -1,0 +1,71 @@
+//! Bench/regeneration harness for paper Figure 2.
+//!
+//! (a) empirical conditional decision-error rate of the Constant STST vs
+//!     the Brownian-bridge closed form, across n and δ;
+//! (b) mean stopping time vs n with the c·sqrt(n) fit and Wald bound.
+//!
+//! Prints the same series the figure plots, then times the simulator
+//! cells with the in-tree bench harness. `cargo bench --bench fig2_boundary`
+
+use attentive::metrics::export::Table;
+use attentive::sim::bridge::{simulate_cell, simulate_decision_errors, BridgeSimConfig};
+use attentive::sim::stopping::{fit_sqrt, simulate_stopping_times, StoppingSimConfig};
+use attentive::util::bench::{black_box, Bench};
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let walks = if quick { 4_000 } else { 30_000 };
+
+    // ---------- Figure 2(a) ----------
+    let cfg = BridgeSimConfig { walks_per_cell: walks, ..Default::default() };
+    let ns = [256usize, 1024, 4096];
+    let deltas = [0.01, 0.05, 0.1, 0.2, 0.3];
+    let pts = simulate_decision_errors(&cfg, &ns, &deltas);
+    let mut t = Table::new(&["n", "delta", "empirical err", "err/delta", "stop rate"]);
+    let mut worst_ratio = 0.0f64;
+    for p in &pts {
+        worst_ratio = worst_ratio.max(p.empirical / p.delta);
+        t.row(&[
+            p.n.to_string(),
+            format!("{:.3}", p.delta),
+            format!("{:.4}", p.empirical),
+            format!("{:.2}", p.empirical / p.delta),
+            format!("{:.3}", p.stop_rate),
+        ]);
+    }
+    println!("Figure 2(a) — decision errors vs theory (worst ratio {worst_ratio:.2})");
+    println!("{}", t.render());
+
+    // ---------- Figure 2(b) ----------
+    let scfg = StoppingSimConfig {
+        walks_per_n: if quick { 2_000 } else { 20_000 },
+        ..Default::default()
+    };
+    let ns2 = [64usize, 128, 256, 512, 1024, 2048, 4096];
+    let spts = simulate_stopping_times(&scfg, &ns2);
+    let (c, r2) = fit_sqrt(&spts);
+    let mut t2 = Table::new(&["n", "mean stop", "fit c*sqrt(n)", "wald bound"]);
+    for p in &spts {
+        t2.row(&[
+            p.n.to_string(),
+            format!("{:.1}", p.mean_stop),
+            format!("{:.1}", c * (p.n as f64).sqrt()),
+            format!("{:.1}", p.wald_bound),
+        ]);
+    }
+    println!("Figure 2(b) — stopping times: E[T] ≈ {c:.2}·sqrt(n), R² = {r2:.4}");
+    println!("{}", t2.render());
+    assert!(r2 > 0.95, "sqrt law fit degraded: R² = {r2}");
+
+    // ---------- Timing ----------
+    let mut bench = if quick { Bench::quick() } else { Bench::new() };
+    let tcfg = BridgeSimConfig { walks_per_cell: 2_000, ..Default::default() };
+    bench.measure_with_items("fig2a/cell n=1024 δ=0.1 (2k walks)", Some(2_000.0), || {
+        black_box(simulate_cell(&tcfg, 1024, 0.1));
+    });
+    let stcfg = StoppingSimConfig { walks_per_n: 2_000, ..Default::default() };
+    bench.measure_with_items("fig2b/stopping n=1024 (2k walks)", Some(2_000.0), || {
+        black_box(simulate_stopping_times(&stcfg, &[1024]));
+    });
+    bench.write_csv(std::path::Path::new("bench_fig2.csv")).ok();
+}

@@ -1,0 +1,121 @@
+//! Hot-path microbenchmarks: the per-example margin machinery that
+//! dominates training wall-clock, plus the native-vs-XLA batched margin
+//! comparison (DESIGN.md §6, EXPERIMENTS.md §Perf).
+//!
+//! `cargo bench --bench margin_hot_path`
+
+use attentive::data::synth::SynthDigits;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::pegasos::{Pegasos, PegasosConfig};
+use attentive::learner::OnlineLearner;
+use attentive::margin::evaluator::{BlockedEvaluator, ScalarEvaluator};
+use attentive::margin::policy::{CoordinatePolicy, OrderGenerator};
+use attentive::runtime::margin_exec::{shapes, BlockedMarginExecutor};
+use attentive::runtime::Runtime;
+use attentive::stst::boundary::{ConstantBoundary, TrivialBoundary};
+use attentive::util::bench::{black_box, Bench};
+use attentive::util::rng::Rng64;
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let mut bench = if quick { Bench::quick() } else { Bench::new() };
+    let dim = 784usize;
+    let mut rng = Rng64::seed_from_u64(1);
+    let w: Vec<f64> = (0..dim).map(|_| rng.range_f64(-0.1, 0.1)).collect();
+    let mut gen = SynthDigits::new(2);
+    let xs: Vec<Vec<f64>> = (0..64).map(|i| gen.render((i % 10) as u8)).collect();
+    let order: Vec<usize> = (0..dim).collect();
+
+    // ---- dense dot (the full-computation unit) -------------------------
+    let mut i = 0;
+    bench.measure_with_items("dot/784", Some(dim as f64), || {
+        i = (i + 1) % xs.len();
+        black_box(attentive::margin::dot(&w, &xs[i]));
+    });
+
+    // ---- scalar sequential walker under each boundary -------------------
+    let scalar = ScalarEvaluator::new();
+    let mut i = 0;
+    bench.measure_with_items("walker/trivial (784 feats)", Some(dim as f64), || {
+        i = (i + 1) % xs.len();
+        black_box(scalar.evaluate(&w, &xs[i], 1.0, &order, 1.0, 0.05, &TrivialBoundary));
+    });
+    let cb = ConstantBoundary::new(0.1);
+    let mut i = 0;
+    bench.measure_with_items("walker/constant-stst", Some(dim as f64), || {
+        i = (i + 1) % xs.len();
+        black_box(scalar.evaluate(&w, &xs[i], 1.0, &order, 1.0, 0.05, &cb));
+    });
+
+    // ---- blocked evaluator (XLA-semantics, native) ----------------------
+    let blocked = BlockedEvaluator::new(shapes::BLOCK);
+    let mut i = 0;
+    bench.measure_with_items("blocked-evaluator/constant-stst b=16", Some(dim as f64), || {
+        i = (i + 1) % xs.len();
+        black_box(blocked.evaluate(&w, &xs[i], 1.0, &order, 1.0, 0.05, &cb));
+    });
+
+    // ---- order generation (policy cost) ---------------------------------
+    for policy in CoordinatePolicy::ALL {
+        let mut g = OrderGenerator::new(policy, 3);
+        g.refresh(&w);
+        bench.measure(format!("policy/{}/next", policy.name()), || {
+            black_box(g.next());
+        });
+    }
+
+    // ---- end-to-end process() per example -------------------------------
+    let stream: Vec<(Vec<f64>, f64)> = (0..256)
+        .map(|i| (gen.render(if i % 2 == 0 { 2 } else { 3 }), if i % 2 == 0 { 1.0 } else { -1.0 }))
+        .collect();
+    {
+        let mut full = Pegasos::full(dim, PegasosConfig { lambda: 1e-4, ..Default::default() });
+        let mut i = 0;
+        bench.measure_with_items("learner/full-pegasos/process", Some(1.0), || {
+            i = (i + 1) % stream.len();
+            black_box(full.process(&stream[i].0, stream[i].1));
+        });
+    }
+    {
+        let mut att = attentive_pegasos(dim, 1e-4, 0.1);
+        // warm the model so early stopping is active (the steady state).
+        for (x, y) in &stream {
+            att.process(x, *y);
+        }
+        let mut i = 0;
+        bench.measure_with_items("learner/attentive-pegasos/process (warm)", Some(1.0), || {
+            i = (i + 1) % stream.len();
+            black_box(att.process(&stream[i].0, stream[i].1));
+        });
+    }
+
+    // ---- XLA batched margin artifact vs native batch --------------------
+    match Runtime::cpu() {
+        Ok(rt) if rt.artifact_available(&BlockedMarginExecutor::artifact_name()) => {
+            let exec = BlockedMarginExecutor::new(&rt).expect("compile");
+            let batch: Vec<&[f64]> = xs.iter().take(shapes::BATCH).map(|v| v.as_slice()).collect();
+            let ys = vec![1.0; shapes::BATCH];
+            bench.measure_with_items(
+                format!("xla/margin-artifact batch={}", shapes::BATCH),
+                Some(shapes::BATCH as f64),
+                || {
+                    black_box(exec.prefixes(&w, &batch, &ys).expect("exec"));
+                },
+            );
+            let mut native_out = vec![0.0f64; shapes::BATCH];
+            bench.measure_with_items(
+                format!("native/dense-margin batch={}", shapes::BATCH),
+                Some(shapes::BATCH as f64),
+                || {
+                    for (o, x) in native_out.iter_mut().zip(batch.iter()) {
+                        *o = attentive::margin::dot(&w, x);
+                    }
+                    black_box(&native_out);
+                },
+            );
+        }
+        _ => println!("artifacts/ absent — skipping XLA margin timing"),
+    }
+
+    bench.write_csv(std::path::Path::new("bench_hot_path.csv")).ok();
+}

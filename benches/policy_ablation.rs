@@ -1,0 +1,162 @@
+//! Ablation harness for paper §4.1's coordinate-selection policies plus
+//! the design choices DESIGN.md calls out:
+//!
+//!   * policy × algorithm grid (sorted / weight-sampled / permuted ×
+//!     attentive / budgeted / full) — the paper's experimental matrix;
+//!   * Constant vs Curved STST (error-spending vs curtailed);
+//!   * corrected eq. (8) root vs the paper-literal eq. (10) boundary;
+//!   * δ sweep (computation/accuracy trade-off).
+//!
+//! `cargo bench --bench policy_ablation` (BENCH_QUICK=1 for CI scale)
+
+use attentive::config::{DataConfig, ExperimentConfig};
+use attentive::coordinator::scheduler::run_experiment;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::metrics::export::Table;
+use attentive::stst::boundary::AnyBoundary;
+
+fn cfg(name: String, boundary: AnyBoundary, policy: CoordinatePolicy, count: usize, runs: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name,
+        data: DataConfig::Synth { seed: 7, count },
+        pair: (2, 3),
+        boundary,
+        policy,
+        lambda: if std::env::var("BENCH_QUICK").is_ok() { 1e-3 } else { 1e-4 },
+        epochs: 5,
+        runs,
+        eval_every: 0,
+        ..ExperimentConfig::paper_default()
+    }
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (count, runs) = if quick { (3_000, 2 ) } else { (12_000, 6) };
+
+    // ---- policy × algorithm grid (paper §4.1) --------------------------
+    println!("=== policy × algorithm grid (digits 2v3, δ=0.1) ===");
+    let mut t = Table::new(&["algorithm", "policy", "avg feats", "gen err", "early-pred err"]);
+    let mut attentive_sorted_feats = f64::NAN;
+    let mut attentive_permuted_feats = f64::NAN;
+    for policy in [
+        CoordinatePolicy::SortedByWeight,
+        CoordinatePolicy::WeightSampled,
+        CoordinatePolicy::Permuted,
+    ] {
+        let att = run_experiment(&cfg(
+            format!("att-{}", policy.name()),
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy,
+            count,
+            runs,
+        ))
+        .unwrap();
+        if policy == CoordinatePolicy::SortedByWeight {
+            attentive_sorted_feats = att.avg_features;
+        }
+        if policy == CoordinatePolicy::Permuted {
+            attentive_permuted_feats = att.avg_features;
+        }
+        t.row(&[
+            "attentive".into(),
+            policy.name().into(),
+            format!("{:.1}", att.avg_features),
+            format!("{:.4}", att.final_test_error),
+            format!("{:.4}", att.final_test_error_early),
+        ]);
+        // Budgeted: impossible with sorted (paper), run the other two.
+        if policy != CoordinatePolicy::SortedByWeight {
+            let k = att.avg_features.round().max(1.0) as usize;
+            let bud = run_experiment(&cfg(
+                format!("bud-{}", policy.name()),
+                AnyBoundary::Budgeted { k },
+                policy,
+                count,
+                runs,
+            ))
+            .unwrap();
+            t.row(&[
+                format!("budgeted(k={k})"),
+                policy.name().into(),
+                format!("{:.1}", bud.avg_features),
+                format!("{:.4}", bud.final_test_error),
+                format!("{:.4}", bud.final_test_error_early),
+            ]);
+        }
+    }
+    let full = run_experiment(&cfg(
+        "full".into(),
+        AnyBoundary::Full,
+        CoordinatePolicy::Sequential,
+        count,
+        runs,
+    ))
+    .unwrap();
+    t.row(&[
+        "full".into(),
+        "sequential".into(),
+        format!("{:.1}", full.avg_features),
+        format!("{:.4}", full.final_test_error),
+        format!("{:.4}", full.final_test_error_early),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "sorted-by-|w| front-loads evidence: {:.1} feats vs permuted {:.1}\n",
+        attentive_sorted_feats, attentive_permuted_feats
+    );
+
+    // ---- Constant vs Curved STST ---------------------------------------
+    println!("=== boundary family ablation ===");
+    let mut t2 = Table::new(&["boundary", "avg feats", "gen err", "early stops/ex"]);
+    for (name, b) in [
+        ("constant (eq. 8 root)", AnyBoundary::Constant { delta: 0.1, paper_literal: false }),
+        ("constant (paper eq. 10)", AnyBoundary::Constant { delta: 0.1, paper_literal: true }),
+        ("curved (curtailed)", AnyBoundary::Curved { delta: 0.1 }),
+        ("full", AnyBoundary::Full),
+    ] {
+        let out = run_experiment(&cfg(
+            format!("b-{name}"),
+            b,
+            CoordinatePolicy::WeightSampled,
+            count,
+            runs,
+        ))
+        .unwrap();
+        let stops: f64 = out
+            .runs
+            .iter()
+            .map(|r| r.metrics.early_stop_rate())
+            .sum::<f64>()
+            / out.runs.len().max(1) as f64;
+        t2.row(&[
+            name.into(),
+            format!("{:.1}", out.avg_features),
+            format!("{:.4}", out.final_test_error),
+            format!("{:.3}", stops),
+        ]);
+    }
+    println!("{}", t2.render());
+
+    // ---- δ sweep --------------------------------------------------------
+    println!("=== delta sweep (computation vs decision-error budget) ===");
+    let mut t3 = Table::new(&["delta", "avg feats", "speedup", "gen err", "early-pred err"]);
+    for delta in [0.01, 0.05, 0.1, 0.2, 0.4] {
+        let out = run_experiment(&cfg(
+            format!("d{delta}"),
+            AnyBoundary::Constant { delta, paper_literal: false },
+            CoordinatePolicy::WeightSampled,
+            count,
+            runs,
+        ))
+        .unwrap();
+        t3.row(&[
+            format!("{delta}"),
+            format!("{:.1}", out.avg_features),
+            format!("{:.1}x", out.speedup(784)),
+            format!("{:.4}", out.final_test_error),
+            format!("{:.4}", out.final_test_error_early),
+        ]);
+    }
+    println!("{}", t3.render());
+}

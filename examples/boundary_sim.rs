@@ -1,0 +1,82 @@
+//! Figure 2 end-to-end: validate the Constant STST boundary against
+//! simulation — (a) empirical decision-error rates vs the Brownian-bridge
+//! closed form across (n, δ); (b) expected stopping time vs the O(√n) law
+//! and the Wald bound. Writes `fig2.csv` next to the binary's CWD.
+//!
+//! Run: `cargo run --release --example boundary_sim`
+
+use attentive::metrics::curve::Curve;
+use attentive::metrics::export::{curves_to_csv, Table};
+use attentive::sim::bridge::{simulate_decision_errors, BridgeSimConfig};
+use attentive::sim::stopping::{fit_sqrt, simulate_stopping_times, StoppingSimConfig};
+use attentive::stst::brownian;
+
+fn main() {
+    // ---- Figure 2(a): decision errors track theory --------------------
+    let cfg = BridgeSimConfig { walks_per_cell: 30_000, ..Default::default() };
+    let ns = [256usize, 1024, 4096];
+    let deltas = [0.01, 0.05, 0.1, 0.2, 0.3];
+    let pts = simulate_decision_errors(&cfg, &ns, &deltas);
+
+    let mut t = Table::new(&["n", "target δ", "empirical", "ratio", "stop rate", "E[T|stop]"]);
+    for p in &pts {
+        t.row(&[
+            p.n.to_string(),
+            format!("{:.3}", p.delta),
+            format!("{:.4}", p.empirical),
+            format!("{:.2}", p.empirical / p.delta),
+            format!("{:.3}", p.stop_rate),
+            format!("{:.1}", p.mean_stop_time),
+        ]);
+    }
+    println!("Figure 2(a) — Constant STST decision errors vs Brownian-bridge theory");
+    println!("{}", t.render());
+
+    // ---- Figure 2(b): stopping time is O(sqrt(n)) ---------------------
+    let scfg = StoppingSimConfig { walks_per_n: 20_000, ..Default::default() };
+    let ns2 = [64usize, 128, 256, 512, 1024, 2048, 4096];
+    let spts = simulate_stopping_times(&scfg, &ns2);
+    let (c, r2) = fit_sqrt(&spts);
+
+    let mut t2 = Table::new(&["n", "mean stop", "c·sqrt(n) fit", "wald bound", "crossed"]);
+    for p in &spts {
+        t2.row(&[
+            p.n.to_string(),
+            format!("{:.1}", p.mean_stop),
+            format!("{:.1}", c * (p.n as f64).sqrt()),
+            format!("{:.1}", p.wald_bound),
+            format!("{:.1}%", p.crossed_frac * 100.0),
+        ]);
+    }
+    println!("Figure 2(b) — mean stopping time: fit E[T] ≈ {c:.2}·sqrt(n), R² = {r2:.4}");
+    println!("{}", t2.render());
+
+    // Closed-form sanity row: the boundary inverts its crossing probability.
+    let tau = brownian::constant_boundary_level(0.1, 0.0, 100.0);
+    println!(
+        "sanity: τ(δ=0.1, var=100) = {:.3}; P(cross) = {:.4} (target 0.1)",
+        tau,
+        brownian::bridge_crossing_prob(tau, 0.0, 100.0)
+    );
+
+    // ---- CSV export ----------------------------------------------------
+    let mut err_curves: Vec<Curve> = Vec::new();
+    for &n in &ns {
+        let mut cv = Curve::new(format!("fig2a/n{n}/empirical-vs-delta"));
+        for p in pts.iter().filter(|p| p.n == n) {
+            cv.push(p.delta, p.empirical);
+        }
+        err_curves.push(cv);
+    }
+    let mut stop_curve = Curve::new("fig2b/mean-stop-vs-n");
+    let mut bound_curve = Curve::new("fig2b/wald-bound-vs-n");
+    for p in &spts {
+        stop_curve.push(p.n as f64, p.mean_stop);
+        bound_curve.push(p.n as f64, p.wald_bound);
+    }
+    err_curves.push(stop_curve);
+    err_curves.push(bound_curve);
+    let path = std::path::Path::new("fig2.csv");
+    curves_to_csv(&err_curves, path).expect("write csv");
+    println!("series written to {}", path.display());
+}

@@ -1,0 +1,62 @@
+//! Quickstart: train Attentive Pegasos on a synthetic 2-vs-3 digit task
+//! and print the headline numbers (features/example, speedup, accuracy).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::SynthDigits;
+use attentive::data::task::BinaryTask;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::pegasos::{Pegasos, PegasosConfig};
+use attentive::learner::OnlineLearner;
+
+fn main() {
+    // 1. Data: deterministic synthetic MNIST-like digits, classes 2 and 3.
+    let ds = SynthDigits::new(7).generate_classes(4_000, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).expect("task");
+    let (train, test) = task.split(0.8);
+    println!(
+        "task {}: {} train / {} test examples, {} features",
+        task.name(),
+        train.len(),
+        test.len(),
+        train.dim()
+    );
+
+    // 2. Learners: full Pegasos vs Attentive Pegasos (Constant STST, δ=0.1).
+    let trainer = Trainer::new(TrainerConfig {
+        epochs: 5,
+        eval_every: 0,
+        curves: false,
+        ..Default::default()
+    });
+
+    let mut full =
+        Pegasos::full(train.dim(), PegasosConfig { lambda: 1e-4, ..Default::default() });
+    let rf = trainer.fit_eval(&mut full, &train, Some(&test));
+
+    let mut att = attentive_pegasos(train.dim(), 1e-4, 0.1);
+    let ra = trainer.fit_eval(&mut att, &train, Some(&test));
+
+    // 3. The paper's headline comparison.
+    println!("\n                      features/example   test error   early-stop predict");
+    println!(
+        "full pegasos          {:>10.1}          {:>8.4}       (always {} feats)",
+        rf.avg_features_per_example(),
+        rf.final_test_error,
+        train.dim()
+    );
+    println!(
+        "attentive pegasos     {:>10.1}          {:>8.4}       err {:.4} @ {:.1} feats",
+        ra.avg_features_per_example(),
+        ra.final_test_error,
+        ra.final_test_error_early,
+        ra.predict_avg_features
+    );
+    println!(
+        "\ntraining speedup: {:.1}x fewer feature evaluations; prediction: {:.1}x",
+        train.dim() as f64 / ra.avg_features_per_example(),
+        train.dim() as f64 / ra.predict_avg_features.max(1.0)
+    );
+    println!("learner: {}", att.name());
+}

@@ -1,0 +1,134 @@
+//! Serving with stochastic focus of attention: train a model, snapshot
+//! it, and serve a mixed easy/hard request stream through the threaded
+//! prediction service — demonstrating that per-request cost tracks input
+//! difficulty, and comparing against the dense XLA predict artifact.
+//!
+//! Run: `cargo run --release --example serving_earlystop`
+
+use std::time::Instant;
+
+use attentive::coordinator::service::{ModelSnapshot, PredictionService};
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::{SynthDigits, SynthConfig};
+use attentive::data::task::BinaryTask;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::OnlineLearner;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::runtime::predict_exec::DensePredictExecutor;
+use attentive::runtime::Runtime;
+use attentive::stst::boundary::AnyBoundary;
+
+fn main() {
+    // ---- Train + snapshot ---------------------------------------------
+    let ds = SynthDigits::new(7).generate_classes(6_000, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).expect("task");
+    let mut learner = attentive_pegasos(task.dim(), 1e-4, 0.1);
+    Trainer::new(TrainerConfig { epochs: 4, eval_every: 0, curves: false, ..Default::default() })
+        .fit(&mut learner, &task);
+    let weights = learner.weights().to_vec();
+    let var = {
+        let vc = learner.var_cache_mut();
+        let a = vc.var_sn(1.0, &weights);
+        let b = vc.var_sn(-1.0, &weights);
+        a.max(b)
+    };
+    let snapshot = ModelSnapshot {
+        weights: weights.clone(),
+        var_sn: var,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        // Permuted, not Sequential: raw pixel order is spatially
+        // correlated (whole rows push the sum one way), violating the
+        // exchangeability the Brownian-bridge boundary assumes — the
+        // reason the paper randomizes coordinate order.
+        policy: CoordinatePolicy::Permuted,
+    };
+
+    // ---- Traffic: clean digits (easy) vs heavily-noised ones (hard) ----
+    let make_noisy = SynthConfig {
+        pixel_noise: 0.35,
+        salt_prob: 0.2,
+        jitter_px: 4.0,
+        ..Default::default()
+    };
+    let mut clean_gen = SynthDigits::new(100);
+    let mut noisy_gen = SynthDigits::with_config(101, make_noisy);
+    let requests: Vec<(Vec<f64>, bool)> = (0..4_000)
+        .map(|i| {
+            let digit = if i % 2 == 0 { 2u8 } else { 3u8 };
+            if i % 4 < 2 {
+                (clean_gen.render(digit), false)
+            } else {
+                (noisy_gen.render(digit), true)
+            }
+        })
+        .collect();
+
+    // ---- Serve ----------------------------------------------------------
+    let (handle, run) = PredictionService::new(snapshot, 16, 1024, 0).with_workers(4).spawn();
+    let t0 = Instant::now();
+    let mut clean_feats = 0usize;
+    let mut noisy_feats = 0usize;
+    let (mut clean_n, mut noisy_n) = (0usize, 0usize);
+    std::thread::scope(|scope| {
+        let mut pending = Vec::new();
+        for chunk in requests.chunks(500) {
+            let handle = handle.clone();
+            pending.push(scope.spawn(move || {
+                let mut out = Vec::new();
+                for (x, hard) in chunk {
+                    let r = handle.score(x.clone()).expect("service alive");
+                    out.push((*hard, r.features_evaluated));
+                }
+                out
+            }));
+        }
+        for p in pending {
+            for (hard, feats) in p.join().unwrap() {
+                if hard {
+                    noisy_feats += feats;
+                    noisy_n += 1;
+                } else {
+                    clean_feats += feats;
+                    clean_n += 1;
+                }
+            }
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let stats = run.stats.snapshot();
+    drop(handle);
+    run.join();
+
+    println!("served {} requests in {:.3}s  ({:.0} req/s, {} batches)", stats.served, dt, stats.served as f64 / dt, stats.batches);
+    println!(
+        "attention at work: clean requests {:.1} feats/pred, noisy requests {:.1} feats/pred (of 784)",
+        clean_feats as f64 / clean_n.max(1) as f64,
+        noisy_feats as f64 / noisy_n.max(1) as f64,
+    );
+    println!("overall avg features/prediction: {:.1} (full evaluation would be 784)", stats.avg_features());
+
+    // ---- Cross-check against the dense XLA predict artifact ------------
+    match Runtime::cpu() {
+        Ok(rt) if rt.artifact_available(&DensePredictExecutor::artifact_name()) => {
+            let exec = DensePredictExecutor::new(&rt).expect("artifact");
+            let sample: Vec<&(Vec<f64>, bool)> = requests.iter().take(64).collect();
+            let mut flat = Vec::new();
+            for (x, _) in &sample {
+                flat.extend_from_slice(x);
+            }
+            let t1 = Instant::now();
+            let margins = exec.margins(&weights, &flat, sample.len()).expect("margins");
+            let xla_dt = t1.elapsed();
+            let mut max_gap = 0.0f64;
+            for ((x, _), m) in sample.iter().zip(&margins) {
+                max_gap = max_gap.max((attentive::margin::dot(&weights, x) - m).abs());
+            }
+            println!(
+                "dense XLA predict artifact: {} margins in {:?}, max |gap| vs native dot = {max_gap:.2e}",
+                margins.len(),
+                xla_dt
+            );
+        }
+        _ => println!("artifacts/ not built — skipping XLA predict cross-check"),
+    }
+}

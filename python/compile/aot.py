@@ -1,0 +1,101 @@
+"""AOT export: lower the L2 programs to HLO TEXT for the rust runtime.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example and
+DESIGN.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emitted artifacts (names must match rust/src/runtime/*):
+  margin_b16.hlo.txt    — margin_program   (w, x, y) -> (prefix,)
+  pegasos_step.hlo.txt  — pegasos_step_program
+  predict_b32.hlo.txt   — predict_program
+  manifest.json         — shapes + sha256 of each artifact (for `make`
+                          freshness checks and runtime diagnostics)
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_margin() -> str:
+    lowered = jax.jit(model.margin_program).lower(
+        f32(model.DIM), f32(model.BATCH, model.DIM), f32(model.BATCH)
+    )
+    return to_hlo_text(lowered)
+
+
+def export_pegasos_step() -> str:
+    lowered = jax.jit(model.pegasos_step_program).lower(
+        f32(model.DIM), f32(model.DIM), f32(), f32(), f32()
+    )
+    return to_hlo_text(lowered)
+
+
+def export_predict() -> str:
+    lowered = jax.jit(model.predict_program).lower(
+        f32(model.DIM), f32(model.BATCH, model.DIM)
+    )
+    return to_hlo_text(lowered)
+
+
+EXPORTS = {
+    f"margin_b{model.BLOCK}.hlo.txt": export_margin,
+    "pegasos_step.hlo.txt": export_pegasos_step,
+    f"predict_b{model.BATCH}.hlo.txt": export_predict,
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", help="export a single artifact by name")
+    args = parser.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "dim": model.DIM,
+        "batch": model.BATCH,
+        "block": model.BLOCK,
+        "n_blocks": model.N_BLOCKS,
+        "artifacts": {},
+    }
+    for name, export in EXPORTS.items():
+        if args.only and name != args.only:
+            continue
+        text = export()
+        path = out_dir / name
+        path.write_text(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()
+        manifest["artifacts"][name] = {"sha256": digest, "bytes": len(text)}
+        print(f"wrote {path} ({len(text)} chars, sha256 {digest[:12]})")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: blocked prefix-margin for a batch of examples.
+
+The paper's hot-spot is the sequential evaluation of ``y * <w, x>``.
+A scalar CPU walks features one by one; a TPU-shaped kernel instead keeps
+a tile of examples VMEM-resident and emits the *running signed margin at
+every block boundary* in one pass:
+
+    prefix[b, k] = y[b] * sum_{j < (k+1)*BLOCK} w[j] * x[b, j]
+
+The rust coordinator applies the STST boundary to the prefix rows
+(block-granular curtailment — DESIGN.md §8).
+
+Kernel geometry:
+  grid = (batch // BATCH_TILE,)
+  per step: x tile (BATCH_TILE, DIM) + w (DIM) live in VMEM
+            (8 x 784 + 784 f32 ≈ 28 KiB — far under the ~16 MiB budget);
+  compute: elementwise w*x on the VPU, block reduce, cumulative sum over
+            blocks (a length-49 scan on an (8, 49) tile), sign by y.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; on a real TPU the same BlockSpec schedule lowers natively
+(see DESIGN.md §Perf for the VMEM/MXU accounting).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Batch rows handled per kernel instance (f32 sublane count).
+BATCH_TILE = 8
+
+
+def _prefix_margin_kernel(n_blocks: int, block: int, w_ref, x_ref, y_ref, out_ref):
+    """Compute all block-prefix margins for one batch tile."""
+    bt = x_ref.shape[0]
+    wx = x_ref[...] * w_ref[...][None, :]                  # (BT, DIM)  VPU
+    per_block = wx.reshape(bt, n_blocks, block).sum(axis=2)  # (BT, NB)
+    prefix = jnp.cumsum(per_block, axis=1)                 # (BT, NB) scan
+    out_ref[...] = y_ref[...][:, None] * prefix
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def blocked_prefix_margin(w, x, y, *, block: int = 16):
+    """Signed prefix margins at block boundaries for a batch.
+
+    Args:
+      w: f32[dim] weight vector.
+      x: f32[batch, dim] examples.
+      y: f32[batch] signed labels (±1).
+      block: features per block; must divide dim.
+
+    Returns:
+      f32[batch, dim // block] running signed margins; column k holds the
+      margin after (k+1)*block features.
+    """
+    batch, dim = x.shape
+    if dim % block != 0:
+        raise ValueError(f"block {block} must divide dim {dim}")
+    if batch % BATCH_TILE != 0:
+        raise ValueError(f"batch {batch} must be a multiple of {BATCH_TILE}")
+    n_blocks = dim // block
+    kernel = functools.partial(_prefix_margin_kernel, n_blocks, block)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // BATCH_TILE,),
+        in_specs=[
+            pl.BlockSpec((dim,), lambda b: (0,)),
+            pl.BlockSpec((BATCH_TILE, dim), lambda b: (b, 0)),
+            pl.BlockSpec((BATCH_TILE,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((BATCH_TILE, n_blocks), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_blocks), x.dtype),
+        interpret=True,
+    )(w, x, y)

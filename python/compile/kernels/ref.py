@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package has a reference implementation here written
+with nothing but ``jnp`` ops in the most obvious way possible. pytest
+(python/tests/test_kernel.py) sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def blocked_prefix_margin_ref(w, x, y, *, block: int = 16):
+    """Reference for kernels.partial_margin.blocked_prefix_margin."""
+    batch, dim = x.shape
+    n_blocks = dim // block
+    wx = x * w[None, :]
+    per_block = wx.reshape(batch, n_blocks, block).sum(axis=2)
+    prefix = jnp.cumsum(per_block, axis=1)
+    return y[:, None] * prefix
+
+
+def pegasos_step_ref(w, x, y, t, lam):
+    """Reference for kernels.pegasos_update.pegasos_step."""
+    decay = 1.0 - 1.0 / t
+    mu = 1.0 / (lam * t)
+    wprime = decay * w + mu * y * x
+    norm = jnp.sqrt(jnp.sum(wprime * wprime))
+    limit = 1.0 / jnp.sqrt(lam)
+    scale = jnp.minimum(1.0, limit / jnp.maximum(norm, 1e-30))
+    return wprime * scale
+
+
+def dense_margins_ref(w, x):
+    """Reference for kernels.pegasos_update.dense_margins."""
+    return jnp.einsum("bd,d->b", x, w)

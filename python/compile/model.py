@@ -1,0 +1,37 @@
+"""L2: the jax compute graphs that get AOT-lowered for the rust runtime.
+
+Three exported programs, all built on the L1 Pallas kernels:
+
+* ``margin_program``       — batched blocked prefix margins (the attentive
+                             filter's compute; kernels/partial_margin.py).
+* ``pegasos_step_program`` — fused update + projection for one violating
+                             example (kernels/pegasos_update.py).
+* ``predict_program``      — dense batched margins (the MXU matmul path).
+
+Shapes are fixed at export time (see aot.py); the rust side
+(``rust/src/runtime/margin_exec.rs::shapes``) must agree.
+"""
+
+from compile.kernels.partial_margin import blocked_prefix_margin
+from compile.kernels.pegasos_update import dense_margins, pegasos_step
+
+# Geometry shared with rust/src/runtime/margin_exec.rs::shapes.
+DIM = 784
+BATCH = 32
+BLOCK = 16
+N_BLOCKS = DIM // BLOCK
+
+
+def margin_program(w, x, y):
+    """f32[DIM], f32[BATCH, DIM], f32[BATCH] -> (f32[BATCH, N_BLOCKS],)."""
+    return (blocked_prefix_margin(w, x, y, block=BLOCK),)
+
+
+def pegasos_step_program(w, x, y, t, lam):
+    """f32[DIM] x f32[DIM] x scalars -> (f32[DIM],)."""
+    return (pegasos_step(w, x, y, t, lam),)
+
+
+def predict_program(w, x):
+    """f32[DIM], f32[BATCH, DIM] -> (f32[BATCH],)."""
+    return (dense_margins(w, x),)

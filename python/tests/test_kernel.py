@@ -1,0 +1,151 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes, block sizes, and value ranges; every case
+asserts allclose between the interpret-mode Pallas kernel and ref.py.
+"""
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.partial_margin import BATCH_TILE, blocked_prefix_margin
+from compile.kernels.pegasos_update import BLOCK as UPDATE_BLOCK
+from compile.kernels.pegasos_update import dense_margins, pegasos_step
+from compile.kernels.ref import (
+    blocked_prefix_margin_ref,
+    dense_margins_ref,
+    pegasos_step_ref,
+)
+
+hypothesis.settings.register_profile(
+    "kernels", max_examples=25, deadline=None, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _assert_close(a, b, rtol=1e-5, atol=1e-5):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- margin
+
+
+@st.composite
+def margin_case(draw):
+    block = draw(st.sampled_from([4, 8, 16, 49]))
+    n_blocks = draw(st.integers(min_value=1, max_value=12))
+    dim = block * n_blocks
+    batch_tiles = draw(st.integers(min_value=1, max_value=3))
+    batch = BATCH_TILE * batch_tiles
+    elems = st.floats(
+        min_value=-2.0, max_value=2.0, allow_nan=False, allow_infinity=False, width=32
+    )
+    w = draw(hnp.arrays(np.float32, (dim,), elements=elems))
+    x = draw(hnp.arrays(np.float32, (batch, dim), elements=elems))
+    y = draw(
+        hnp.arrays(np.float32, (batch,), elements=st.sampled_from([-1.0, 1.0]))
+    )
+    return block, w, x, y
+
+
+@hypothesis.given(margin_case())
+def test_blocked_prefix_margin_matches_ref(case):
+    block, w, x, y = case
+    got = blocked_prefix_margin(w, x, y, block=block)
+    want = blocked_prefix_margin_ref(w, x, y, block=block)
+    assert got.shape == (x.shape[0], x.shape[1] // block)
+    _assert_close(got, want)
+
+
+def test_margin_final_column_is_full_margin():
+    rng = np.random.RandomState(0)
+    w = rng.randn(784).astype(np.float32)
+    x = rng.rand(32, 784).astype(np.float32)
+    y = np.where(np.arange(32) % 2 == 0, 1.0, -1.0).astype(np.float32)
+    prefix = blocked_prefix_margin(w, x, y, block=16)
+    full = y * (x @ w)
+    _assert_close(prefix[:, -1], full, rtol=1e-4, atol=1e-4)
+
+
+def test_margin_prefix_monotone_structure():
+    # prefix[:, k] - prefix[:, k-1] must equal block k's signed sum.
+    rng = np.random.RandomState(1)
+    w = rng.randn(64).astype(np.float32)
+    x = rng.randn(8, 64).astype(np.float32)
+    y = np.ones(8, dtype=np.float32)
+    prefix = np.asarray(blocked_prefix_margin(w, x, y, block=8))
+    wx = x * w[None, :]
+    per_block = wx.reshape(8, 8, 8).sum(axis=2)
+    _assert_close(np.diff(prefix, axis=1), per_block[:, 1:], rtol=1e-4, atol=1e-4)
+
+
+def test_margin_rejects_bad_shapes():
+    w = jnp.zeros(64, jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+    y = jnp.ones(8, jnp.float32)
+    with pytest.raises(ValueError, match="must divide"):
+        blocked_prefix_margin(w, x, y, block=7)
+    with pytest.raises(ValueError, match="multiple"):
+        blocked_prefix_margin(w, x[:5], y[:5], block=8)
+
+
+# ---------------------------------------------------------------- update
+
+
+@st.composite
+def update_case(draw):
+    dim = UPDATE_BLOCK * draw(st.integers(min_value=1, max_value=4))
+    elems = st.floats(
+        min_value=-1.0, max_value=1.0, allow_nan=False, allow_infinity=False, width=32
+    )
+    w = draw(hnp.arrays(np.float32, (dim,), elements=elems))
+    x = draw(hnp.arrays(np.float32, (dim,), elements=elems))
+    y = draw(st.sampled_from([-1.0, 1.0]))
+    t = draw(st.integers(min_value=1, max_value=10_000))
+    lam = draw(st.sampled_from([1e-4, 1e-3, 1e-2, 0.5]))
+    return w, x, np.float32(y), np.float32(t), np.float32(lam)
+
+
+@hypothesis.given(update_case())
+def test_pegasos_step_matches_ref(case):
+    w, x, y, t, lam = case
+    got = pegasos_step(w, x, y, t, lam)
+    want = pegasos_step_ref(w, x, y, t, lam)
+    _assert_close(got, want, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.given(update_case())
+def test_pegasos_step_respects_ball(case):
+    w, x, y, t, lam = case
+    out = np.asarray(pegasos_step(w, x, y, t, lam))
+    norm = np.linalg.norm(out)
+    assert norm <= 1.0 / np.sqrt(lam) * (1.0 + 1e-4)
+
+
+def test_pegasos_first_step_erases_history():
+    # t = 1: decay = 0, so the old weights must not matter.
+    dim = UPDATE_BLOCK
+    w1 = np.ones(dim, dtype=np.float32) * 5
+    w2 = -np.ones(dim, dtype=np.float32) * 3
+    x = np.random.RandomState(2).rand(dim).astype(np.float32)
+    a = pegasos_step(w1, x, np.float32(1), np.float32(1), np.float32(0.01))
+    b = pegasos_step(w2, x, np.float32(1), np.float32(1), np.float32(0.01))
+    _assert_close(a, b)
+
+
+# --------------------------------------------------------------- predict
+
+
+@hypothesis.given(
+    hnp.arrays(
+        np.float32,
+        (16, 49),
+        elements=st.floats(min_value=-1, max_value=1, width=32, allow_nan=False),
+    )
+)
+def test_dense_margins_matches_ref(x):
+    w = np.linspace(-1, 1, 49, dtype=np.float32)
+    _assert_close(dense_margins(w, x), dense_margins_ref(w, x), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,52 @@
+"""L2 model program shape/semantics checks + a numpy Pegasos cross-check."""
+
+import numpy as np
+
+from compile import model
+
+
+def _rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+def test_margin_program_shapes():
+    w = _rand((model.DIM,), 0)
+    x = _rand((model.BATCH, model.DIM), 1)
+    y = np.where(np.arange(model.BATCH) % 2 == 0, 1.0, -1.0).astype(np.float32)
+    (prefix,) = model.margin_program(w, x, y)
+    assert prefix.shape == (model.BATCH, model.N_BLOCKS)
+    # geometry invariant shared with the rust runtime
+    assert model.N_BLOCKS * model.BLOCK == model.DIM
+
+
+def test_pegasos_step_program_matches_numpy():
+    w = _rand((model.DIM,), 2) * 0.1
+    x = _rand((model.DIM,), 3) * 0.5
+    y, t, lam = np.float32(-1.0), np.float32(7.0), np.float32(1e-2)
+    (w_new,) = model.pegasos_step_program(w, x, y, t, lam)
+    mu = 1.0 / (lam * t)
+    ref = (1.0 - 1.0 / t) * w + mu * y * x
+    norm = np.linalg.norm(ref)
+    limit = 1.0 / np.sqrt(lam)
+    if norm > limit:
+        ref = ref * (limit / norm)
+    np.testing.assert_allclose(np.asarray(w_new), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_predict_program_is_matmul():
+    w = _rand((model.DIM,), 4)
+    x = _rand((model.BATCH, model.DIM), 5)
+    (m,) = model.predict_program(w, x)
+    np.testing.assert_allclose(np.asarray(m), x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_margin_program_consistent_with_predict():
+    # The final prefix column must equal y * predict margins.
+    w = _rand((model.DIM,), 6)
+    x = _rand((model.BATCH, model.DIM), 7)
+    y = np.ones(model.BATCH, dtype=np.float32)
+    (prefix,) = model.margin_program(w, x, y)
+    (margins,) = model.predict_program(w, x)
+    np.testing.assert_allclose(
+        np.asarray(prefix[:, -1]), np.asarray(margins), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,348 @@
+//! Experiment configuration.
+//!
+//! A single [`ExperimentConfig`] JSON document describes a full run:
+//! dataset source, task pair, learner/boundary family, coordinate policy,
+//! stream length and seeds. The CLI (`attentive train --config exp.json`)
+//! and the bench harness both consume it, so every figure is reproducible
+//! from a checked-in config.
+
+use std::path::{Path, PathBuf};
+
+
+use crate::error::{Error, Result};
+use crate::margin::policy::CoordinatePolicy;
+use crate::stst::boundary::AnyBoundary;
+use crate::util::json::Json;
+
+/// Where training data comes from.
+#[derive(Debug, Clone)]
+pub enum DataConfig {
+    /// Deterministic synthetic digit glyphs (the MNIST stand-in).
+    Synth {
+        /// RNG seed for the generator.
+        seed: u64,
+        /// Number of examples to generate (split into train/test).
+        count: usize,
+    },
+    /// Real MNIST IDX files in a directory (falls back to synth+warn if
+    /// absent when `fallback_synth` is set).
+    Mnist {
+        /// Directory holding `train-images-idx3-ubyte` etc.
+        dir: PathBuf,
+        /// Fall back to the synthetic generator when files are missing.
+        fallback_synth: bool,
+    },
+    /// A libsvm text file with ±1 labels.
+    Libsvm {
+        /// Path to the file.
+        path: PathBuf,
+        /// Dense feature dimensionality.
+        dim: usize,
+    },
+}
+
+/// Which learner family to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnerKind {
+    /// Pegasos under the configured boundary (the paper's trio:
+    /// boundary=full → Pegasos, constant → Attentive, budgeted → Budgeted).
+    Pegasos,
+    /// Perceptron under the configured boundary (extension).
+    Perceptron,
+    /// Passive-Aggressive I under the configured boundary (extension).
+    PassiveAggressive,
+}
+
+/// Everything needed to reproduce one training run.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Experiment name (used for output file naming).
+    pub name: String,
+    /// Data source.
+    pub data: DataConfig,
+    /// 1-vs-1 pair: positive, negative original class labels.
+    pub pair: (i64, i64),
+    /// Train fraction of the data (rest is test).
+    pub train_fraction: f64,
+    /// Learner family.
+    pub learner: LearnerKind,
+    /// Stopping boundary.
+    pub boundary: AnyBoundary,
+    /// Coordinate selection policy.
+    pub policy: CoordinatePolicy,
+    /// Pegasos regularization λ.
+    pub lambda: f64,
+    /// Margin decision threshold θ (1.0 = hinge).
+    pub theta: f64,
+    /// Number of passes over the training set.
+    pub epochs: u64,
+    /// Runs to average (paper: 10 permutations).
+    pub runs: u64,
+    /// Base RNG seed.
+    pub seed: u64,
+    /// Evaluate test error every this many examples.
+    pub eval_every: u64,
+    /// Finish stopped evaluations out-of-band to audit decision errors.
+    pub audit: bool,
+}
+
+fn default_train_fraction() -> f64 {
+    0.8
+}
+fn default_lambda() -> f64 {
+    1e-4
+}
+fn default_theta() -> f64 {
+    1.0
+}
+fn default_epochs() -> u64 {
+    1
+}
+fn default_runs() -> u64 {
+    10
+}
+fn default_eval_every() -> u64 {
+    200
+}
+
+impl DataConfig {
+    /// Serialize as a tagged JSON object.
+    pub fn to_json(&self) -> Json {
+        match self {
+            DataConfig::Synth { seed, count } => Json::obj([
+                ("source", Json::Str("synth".into())),
+                ("seed", Json::Num(*seed as f64)),
+                ("count", Json::Num(*count as f64)),
+            ]),
+            DataConfig::Mnist { dir, fallback_synth } => Json::obj([
+                ("source", Json::Str("mnist".into())),
+                ("dir", Json::Str(dir.display().to_string())),
+                ("fallback_synth", Json::Bool(*fallback_synth)),
+            ]),
+            DataConfig::Libsvm { path, dim } => Json::obj([
+                ("source", Json::Str("libsvm".into())),
+                ("path", Json::Str(path.display().to_string())),
+                ("dim", Json::Num(*dim as f64)),
+            ]),
+        }
+    }
+
+    /// Parse the tagged JSON form.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let source = v.get("source").and_then(|s| s.as_str()).ok_or("data: missing source")?;
+        match source {
+            "synth" => Ok(DataConfig::Synth {
+                seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
+                count: v.get("count").and_then(|x| x.as_usize()).ok_or("synth: missing count")?,
+            }),
+            "mnist" => Ok(DataConfig::Mnist {
+                dir: PathBuf::from(
+                    v.get("dir").and_then(|x| x.as_str()).ok_or("mnist: missing dir")?,
+                ),
+                fallback_synth: v.get("fallback_synth").and_then(|x| x.as_bool()).unwrap_or(false),
+            }),
+            "libsvm" => Ok(DataConfig::Libsvm {
+                path: PathBuf::from(
+                    v.get("path").and_then(|x| x.as_str()).ok_or("libsvm: missing path")?,
+                ),
+                dim: v.get("dim").and_then(|x| x.as_usize()).ok_or("libsvm: missing dim")?,
+            }),
+            other => Err(format!("unknown data source {other:?}")),
+        }
+    }
+}
+
+impl LearnerKind {
+    /// Kebab-case name.
+    pub fn name(self) -> &'static str {
+        match self {
+            LearnerKind::Pegasos => "pegasos",
+            LearnerKind::Perceptron => "perceptron",
+            LearnerKind::PassiveAggressive => "passive-aggressive",
+        }
+    }
+
+    /// Parse the kebab-case name.
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "pegasos" => Ok(LearnerKind::Pegasos),
+            "perceptron" => Ok(LearnerKind::Perceptron),
+            "passive-aggressive" => Ok(LearnerKind::PassiveAggressive),
+            other => Err(format!("unknown learner {other:?}")),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Paper defaults: synthetic digits, 2-vs-3, Attentive Pegasos with
+    /// the Constant STST at δ = 0.1, weight-sampled coordinates.
+    pub fn paper_default() -> Self {
+        Self {
+            name: "fig3-2v3-attentive".into(),
+            data: DataConfig::Synth { seed: 7, count: 4_000 },
+            pair: (2, 3),
+            train_fraction: default_train_fraction(),
+            learner: LearnerKind::Pegasos,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::WeightSampled,
+            lambda: default_lambda(),
+            theta: default_theta(),
+            epochs: 5,
+            runs: default_runs(),
+            seed: 0,
+            eval_every: default_eval_every(),
+            audit: false,
+        }
+    }
+
+    /// Serialize as JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::Str(self.name.clone())),
+            ("data", self.data.to_json()),
+            ("pair", Json::Arr(vec![Json::Num(self.pair.0 as f64), Json::Num(self.pair.1 as f64)])),
+            ("train_fraction", Json::Num(self.train_fraction)),
+            ("learner", Json::Str(self.learner.name().into())),
+            ("boundary", self.boundary.to_json()),
+            ("policy", Json::Str(self.policy.name().into())),
+            ("lambda", Json::Num(self.lambda)),
+            ("theta", Json::Num(self.theta)),
+            ("epochs", Json::Num(self.epochs as f64)),
+            ("runs", Json::Num(self.runs as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("audit", Json::Bool(self.audit)),
+        ])
+    }
+
+    /// Parse from JSON (missing optional fields take paper defaults).
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let pair = v.get("pair").and_then(|p| p.as_arr()).ok_or("config: missing pair")?;
+        if pair.len() != 2 {
+            return Err("config: pair must have 2 entries".into());
+        }
+        Ok(Self {
+            name: v.get("name").and_then(|s| s.as_str()).ok_or("config: missing name")?.into(),
+            data: DataConfig::from_json(v.get("data").ok_or("config: missing data")?)?,
+            pair: (
+                pair[0].as_i64().ok_or("pair[0] not an int")?,
+                pair[1].as_i64().ok_or("pair[1] not an int")?,
+            ),
+            train_fraction: v
+                .get("train_fraction")
+                .and_then(|x| x.as_f64())
+                .unwrap_or_else(default_train_fraction),
+            learner: LearnerKind::from_name(
+                v.get("learner").and_then(|s| s.as_str()).ok_or("config: missing learner")?,
+            )?,
+            boundary: AnyBoundary::from_json(v.get("boundary").ok_or("config: missing boundary")?)?,
+            policy: CoordinatePolicy::from_name(
+                v.get("policy").and_then(|s| s.as_str()).ok_or("config: missing policy")?,
+            )?,
+            lambda: v.get("lambda").and_then(|x| x.as_f64()).unwrap_or_else(default_lambda),
+            theta: v.get("theta").and_then(|x| x.as_f64()).unwrap_or_else(default_theta),
+            epochs: v.get("epochs").and_then(|x| x.as_u64()).unwrap_or_else(default_epochs),
+            runs: v.get("runs").and_then(|x| x.as_u64()).unwrap_or_else(default_runs),
+            seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(0),
+            eval_every: v
+                .get("eval_every")
+                .and_then(|x| x.as_u64())
+                .unwrap_or_else(default_eval_every),
+            audit: v.get("audit").and_then(|x| x.as_bool()).unwrap_or(false),
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| Error::format(format!("config {}", path.display()), e.to_string()))?;
+        let cfg = Self::from_json(&doc)
+            .map_err(|e| Error::format(format!("config {}", path.display()), e))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty()).map_err(|e| Error::io(path, e))
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.train_fraction) {
+            return Err(Error::Config(format!("train_fraction {} not in [0,1]", self.train_fraction)));
+        }
+        if self.lambda <= 0.0 {
+            return Err(Error::Config(format!("lambda {} must be > 0", self.lambda)));
+        }
+        if self.pair.0 == self.pair.1 {
+            return Err(Error::Config(format!("pair classes identical: {:?}", self.pair)));
+        }
+        if let AnyBoundary::Constant { delta, .. } | AnyBoundary::Curved { delta } = self.boundary {
+            if !(0.0 < delta && delta < 1.0) {
+                return Err(Error::Config(format!("delta {delta} not in (0,1)")));
+            }
+        }
+        if self.runs == 0 || self.epochs == 0 {
+            return Err(Error::Config("runs and epochs must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_is_valid() {
+        ExperimentConfig::paper_default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let p = dir.path().join("exp.json");
+        let cfg = ExperimentConfig::paper_default();
+        cfg.save(&p).unwrap();
+        let back = ExperimentConfig::load(&p).unwrap();
+        assert_eq!(back.name, cfg.name);
+        assert_eq!(back.pair, cfg.pair);
+        assert_eq!(back.policy, cfg.policy);
+    }
+
+    #[test]
+    fn validation_rejects_bad_fields() {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.lambda = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.pair = (3, 3);
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.boundary = AnyBoundary::Constant { delta: 1.2, paper_literal: false };
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.runs = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn defaults_applied_on_sparse_json() {
+        let json = r#"{
+            "name": "t",
+            "data": {"source": "synth", "seed": 1, "count": 100},
+            "pair": [2, 3],
+            "learner": "pegasos",
+            "boundary": {"kind": "full"},
+            "policy": "permuted"
+        }"#;
+        let cfg =
+            ExperimentConfig::from_json(&Json::parse(json).unwrap()).unwrap();
+        assert_eq!(cfg.runs, 10);
+        assert_eq!(cfg.theta, 1.0);
+        assert!((cfg.lambda - 1e-4).abs() < 1e-18);
+        cfg.validate().unwrap();
+    }
+}

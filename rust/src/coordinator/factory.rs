@@ -1,0 +1,146 @@
+//! Learner factory: [`ExperimentConfig`] → boxed [`OnlineLearner`].
+//!
+//! The CLI and the sweep scheduler construct learners from config files;
+//! this is the single place where the (learner family × boundary family)
+//! matrix is materialized.
+
+use crate::config::{DataConfig, ExperimentConfig, LearnerKind};
+use crate::data::dataset::Dataset;
+use crate::data::synth::SynthDigits;
+use crate::data::task::BinaryTask;
+use crate::error::{Error, Result};
+use crate::learner::passive_aggressive::BoundedPa;
+use crate::learner::pegasos::{BoundedPegasos, PegasosConfig};
+use crate::learner::perceptron::BoundedPerceptron;
+use crate::learner::OnlineLearner;
+
+/// Build the learner described by `cfg` (dimensionality from the task).
+/// `run` perturbs the seed so repeated runs differ like the paper's 10
+/// permutations.
+pub fn build_learner(cfg: &ExperimentConfig, dim: usize, run: u64) -> Box<dyn OnlineLearner> {
+    let pcfg = PegasosConfig {
+        lambda: cfg.lambda,
+        theta: cfg.theta,
+        project: true,
+        policy: cfg.policy,
+        seed: cfg.seed ^ run.wrapping_mul(0xA076_1D64_78BD_642F),
+        observe_on_full: true,
+    };
+    let boundary = cfg.boundary.clone();
+    match cfg.learner {
+        LearnerKind::Pegasos => Box::new(BoundedPegasos::new(dim, pcfg, boundary)),
+        LearnerKind::Perceptron => Box::new(BoundedPerceptron::new(dim, pcfg, boundary)),
+        LearnerKind::PassiveAggressive => {
+            // PA's aggressiveness: C = 1/λ keeps the two families'
+            // regularization knobs aligned.
+            Box::new(BoundedPa::new(dim, pcfg, 1.0 / cfg.lambda, boundary))
+        }
+    }
+}
+
+/// Materialize the dataset described by `cfg.data`.
+pub fn build_dataset(cfg: &ExperimentConfig) -> Result<Dataset> {
+    match &cfg.data {
+        DataConfig::Synth { seed, count } => Ok(SynthDigits::new(*seed).generate(*count)),
+        DataConfig::Mnist { dir, fallback_synth } => {
+            match crate::data::mnist::load_mnist_dir(dir)? {
+                Some(ds) => Ok(ds),
+                None if *fallback_synth => {
+                    eprintln!(
+                        "warning: MNIST not found in {}, using synthetic digits",
+                        dir.display()
+                    );
+                    Ok(SynthDigits::new(cfg.seed).generate(10_000))
+                }
+                None => Err(Error::Config(format!(
+                    "MNIST files not found in {} (set fallback_synth to allow synthetic)",
+                    dir.display()
+                ))),
+            }
+        }
+        DataConfig::Libsvm { path, dim } => crate::data::libsvm::read_file(path, *dim),
+    }
+}
+
+/// Dataset → shuffled → 1-vs-1 task → (train, test) split.
+pub fn build_task(cfg: &ExperimentConfig) -> Result<(BinaryTask, BinaryTask)> {
+    let ds = build_dataset(cfg)?;
+    let task = BinaryTask::one_vs_one(&ds, cfg.pair.0, cfg.pair.1)?;
+    // Deterministic shuffle before the split so train/test are unbiased.
+    let order = crate::data::stream::ShuffledIndices::new(task.len(), cfg.seed).epoch(0);
+    let task = task.reindex(&order);
+    Ok(task.split(cfg.train_fraction))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stst::boundary::AnyBoundary;
+
+    #[test]
+    fn factory_builds_all_learner_kinds() {
+        let mut cfg = ExperimentConfig::paper_default();
+        for kind in [LearnerKind::Pegasos, LearnerKind::Perceptron, LearnerKind::PassiveAggressive]
+        {
+            cfg.learner = kind;
+            let l = build_learner(&cfg, 16, 0);
+            assert_eq!(l.dim(), 16);
+            assert!(!l.name().is_empty());
+        }
+    }
+
+    #[test]
+    fn factory_builds_all_boundaries() {
+        let mut cfg = ExperimentConfig::paper_default();
+        for b in [
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            AnyBoundary::Curved { delta: 0.1 },
+            AnyBoundary::Budgeted { k: 10 },
+            AnyBoundary::Full,
+        ] {
+            cfg.boundary = b;
+            let mut l = build_learner(&cfg, 8, 1);
+            let info = l.process(&[0.5; 8], 1.0);
+            assert!(info.evaluated <= 8);
+        }
+    }
+
+    #[test]
+    fn task_split_respects_fraction() {
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.data = DataConfig::Synth { seed: 3, count: 500 };
+        let (train, test) = build_task(&cfg).unwrap();
+        // 500 examples cycle 10 digits -> 50 of class 2 and 50 of class 3.
+        assert_eq!(train.len() + test.len(), 100);
+        assert_eq!(train.len(), 80);
+    }
+
+    #[test]
+    fn run_seed_changes_learner_stream() {
+        let cfg = ExperimentConfig::paper_default();
+        let mut a = build_learner(&cfg, 32, 0);
+        let mut b = build_learner(&cfg, 32, 1);
+        // Same inputs, different policy RNG stream -> (almost surely)
+        // different evaluation counts on a stochastic policy.
+        let x: Vec<f64> = (0..32).map(|i| (i as f64 / 32.0) - 0.4).collect();
+        let mut diff = false;
+        for _ in 0..20 {
+            if a.process(&x, 1.0).evaluated != b.process(&x, 1.0).evaluated {
+                diff = true;
+                break;
+            }
+        }
+        assert!(diff, "different run seeds should perturb the stochastic policy");
+    }
+
+    #[test]
+    fn mnist_source_requires_files_or_fallback() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let mut cfg = ExperimentConfig::paper_default();
+        cfg.data =
+            DataConfig::Mnist { dir: dir.path().to_path_buf(), fallback_synth: false };
+        assert!(build_dataset(&cfg).is_err());
+        cfg.data = DataConfig::Mnist { dir: dir.path().to_path_buf(), fallback_synth: true };
+        assert!(build_dataset(&cfg).is_ok());
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordinator: the training/serving control plane.
+//!
+//! Everything on the request path is rust: the online training loop
+//! ([`trainer`]), the learner factory that materializes a configured
+//! experiment ([`factory`]), the multi-run/multi-task parallel scheduler
+//! that reproduces the paper's 10-permutation averages ([`scheduler`]),
+//! and an async prediction service with attentive early-exit
+//! ([`service`]).
+
+pub mod factory;
+pub mod scheduler;
+pub mod service;
+pub mod trainer;
+
+pub use scheduler::{run_sweep, SweepOutcome};
+pub use trainer::{TrainReport, Trainer, TrainerConfig};

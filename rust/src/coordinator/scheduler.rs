@@ -1,0 +1,143 @@
+//! Multi-run / multi-task parallel scheduler.
+//!
+//! The paper reports every curve as the average of 10 runs over different
+//! dataset permutations, for three algorithms, under three coordinate
+//! policies — a 90-run grid per figure. [`run_sweep`] executes such grids
+//! with rayon, one task per (config, run) cell, aggregating per-config
+//! mean curves and summary rows. Determinism: cell seeds derive from
+//! `(config seed, run index)` only, so results are independent of thread
+//! scheduling.
+
+
+use crate::config::ExperimentConfig;
+use crate::error::Result;
+use crate::metrics::curve::Curve;
+
+use super::factory;
+use super::trainer::{TrainReport, Trainer, TrainerConfig};
+
+/// Aggregated result of all runs of one experiment config.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Config name.
+    pub name: String,
+    /// Learner identity (from the first run).
+    pub learner: String,
+    /// Per-run reports.
+    pub runs: Vec<TrainReport>,
+    /// Mean features curve across runs.
+    pub mean_features: Curve,
+    /// Mean test-error curve across runs.
+    pub mean_test_error: Curve,
+    /// Mean of final test errors (full prediction).
+    pub final_test_error: f64,
+    /// Mean of final test errors (early-stopped prediction).
+    pub final_test_error_early: f64,
+    /// Mean avg-features per training example.
+    pub avg_features: f64,
+    /// Mean avg-features per early-stopped prediction.
+    pub predict_avg_features: f64,
+}
+
+impl SweepOutcome {
+    fn from_runs(name: String, runs: Vec<TrainReport>) -> Self {
+        let n = runs.len().max(1) as f64;
+        let feats: Vec<Curve> = runs.iter().map(|r| r.features_curve.clone()).collect();
+        let errs: Vec<Curve> = runs.iter().map(|r| r.test_error_curve.clone()).collect();
+        SweepOutcome {
+            learner: runs.first().map(|r| r.learner.clone()).unwrap_or_default(),
+            mean_features: Curve::mean(format!("{name}/features"), &feats),
+            mean_test_error: Curve::mean(format!("{name}/test-error"), &errs),
+            final_test_error: runs.iter().map(|r| r.final_test_error).sum::<f64>() / n,
+            final_test_error_early: runs.iter().map(|r| r.final_test_error_early).sum::<f64>()
+                / n,
+            avg_features: runs.iter().map(|r| r.avg_features_per_example()).sum::<f64>() / n,
+            predict_avg_features: runs.iter().map(|r| r.predict_avg_features).sum::<f64>() / n,
+            name,
+            runs,
+        }
+    }
+
+    /// Speedup vs full computation on the training stream.
+    pub fn speedup(&self, dim: usize) -> f64 {
+        if self.avg_features == 0.0 { 1.0 } else { dim as f64 / self.avg_features }
+    }
+}
+
+/// Execute one experiment config: `cfg.runs` independent (permutation,
+/// seed) runs in parallel, aggregated.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Result<SweepOutcome> {
+    cfg.validate()?;
+    let (train, test) = factory::build_task(cfg)?;
+    let run_ids: Vec<u64> = (0..cfg.runs).collect();
+    let runs: Vec<TrainReport> = crate::util::parallel::par_map(&run_ids, |&run| {
+            let mut learner = factory::build_learner(cfg, train.dim(), run);
+            let trainer = Trainer::new(TrainerConfig {
+                epochs: cfg.epochs,
+                eval_every: cfg.eval_every,
+                seed: cfg.seed ^ run.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                audit: cfg.audit,
+                curves: true,
+            });
+            trainer.fit_eval(learner.as_mut(), &train, Some(&test))
+    });
+    Ok(SweepOutcome::from_runs(cfg.name.clone(), runs))
+}
+
+/// Execute a grid of configs (each with its internal runs), configs in
+/// sequence, runs in parallel. Returns outcomes in input order.
+pub fn run_sweep(configs: &[ExperimentConfig]) -> Result<Vec<SweepOutcome>> {
+    configs.iter().map(run_experiment).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DataConfig;
+    use crate::stst::boundary::AnyBoundary;
+
+    fn quick_cfg(name: &str, boundary: AnyBoundary) -> ExperimentConfig {
+        ExperimentConfig {
+            name: name.into(),
+            data: DataConfig::Synth { seed: 11, count: 1500 },
+            boundary,
+            runs: 3,
+            eval_every: 100,
+            ..ExperimentConfig::paper_default()
+        }
+    }
+
+    #[test]
+    fn experiment_aggregates_runs() {
+        let cfg = quick_cfg("t", AnyBoundary::Constant { delta: 0.1, paper_literal: false });
+        let out = run_experiment(&cfg).unwrap();
+        assert_eq!(out.runs.len(), 3);
+        assert!(out.avg_features > 0.0);
+        assert!(!out.mean_features.is_empty());
+        assert!(out.speedup(784) > 1.0, "attentive must save vs 784 dims");
+    }
+
+    #[test]
+    fn sweep_preserves_order_and_determinism() {
+        let cfgs = vec![
+            quick_cfg("a", AnyBoundary::Full),
+            quick_cfg("b", AnyBoundary::Constant { delta: 0.1, paper_literal: false }),
+        ];
+        let out1 = run_sweep(&cfgs).unwrap();
+        let out2 = run_sweep(&cfgs).unwrap();
+        assert_eq!(out1[0].name, "a");
+        assert_eq!(out1[1].name, "b");
+        // Determinism across invocations (thread-schedule independent).
+        assert_eq!(out1[1].avg_features, out2[1].avg_features);
+        assert_eq!(out1[0].final_test_error, out2[0].final_test_error);
+        // Full computes everything; attentive strictly less.
+        assert!(out1[1].avg_features < out1[0].avg_features);
+    }
+
+    #[test]
+    fn invalid_config_rejected() {
+        let mut cfg = quick_cfg("x", AnyBoundary::Full);
+        cfg.lambda = -1.0;
+        assert!(run_experiment(&cfg).is_err());
+    }
+}

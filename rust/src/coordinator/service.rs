@@ -1,0 +1,347 @@
+//! Threaded prediction service with attentive early-exit.
+//!
+//! A model-server-style serving loop: requests (feature vectors) arrive
+//! on an mpsc queue, worker threads drain up to `max_batch` requests at a
+//! time (dynamic batching without a timer: lowest latency at low load,
+//! full batches under pressure), and each example is scored with the
+//! **early-stopped predictor** — easy inputs exit after a handful of
+//! features, hard ones get the full evaluation. The paper's
+//! focus-of-attention becomes a serving-latency mechanism: average
+//! feature cost (≈ service time) scales with input difficulty, not
+//! dimensionality.
+//!
+//! Python is never involved: the model is a plain weight vector (trained
+//! by the coordinator or loaded from a JSON snapshot) and the hot loop is
+//! pure rust.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::learner::predictor::EarlyStopPredictor;
+use crate::margin::policy::{CoordinatePolicy, OrderGenerator};
+use crate::stst::boundary::AnyBoundary;
+use crate::util::json::Json;
+
+/// Immutable model snapshot served by the service.
+#[derive(Debug, Clone)]
+pub struct ModelSnapshot {
+    /// Weight vector.
+    pub weights: Vec<f64>,
+    /// Full-sum variance estimate used by the prediction boundary
+    /// (max over the two classes, conservative).
+    pub var_sn: f64,
+    /// Boundary the service applies at prediction time.
+    pub boundary: AnyBoundary,
+    /// Coordinate policy for the prediction walks.
+    pub policy: CoordinatePolicy,
+}
+
+impl ModelSnapshot {
+    /// Serialize (for `attentive serve --snapshot`).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("weights", Json::Arr(self.weights.iter().map(|&w| Json::Num(w)).collect())),
+            ("var_sn", Json::Num(self.var_sn)),
+            ("boundary", self.boundary.to_json()),
+            ("policy", Json::Str(self.policy.name().into())),
+        ])
+    }
+
+    /// Parse the form produced by [`Self::to_json`].
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        Ok(Self {
+            weights: v
+                .get("weights")
+                .and_then(|a| a.as_arr())
+                .ok_or("snapshot: missing weights")?
+                .iter()
+                .map(|x| x.as_f64().ok_or_else(|| "snapshot: non-numeric weight".to_string()))
+                .collect::<Result<_, _>>()?,
+            var_sn: v.get("var_sn").and_then(|x| x.as_f64()).ok_or("snapshot: missing var_sn")?,
+            boundary: AnyBoundary::from_json(v.get("boundary").ok_or("snapshot: missing boundary")?)?,
+            policy: CoordinatePolicy::from_name(
+                v.get("policy").and_then(|s| s.as_str()).ok_or("snapshot: missing policy")?,
+            )?,
+        })
+    }
+}
+
+/// One scoring request (internal envelope).
+struct ScoreRequest {
+    features: Vec<f64>,
+    respond: SyncSender<ScoreResponse>,
+}
+
+/// Scoring result.
+#[derive(Debug, Clone, Copy)]
+pub struct ScoreResponse {
+    /// Signed margin estimate; the prediction is its sign.
+    pub score: f64,
+    /// Features evaluated before the early exit (≤ dim).
+    pub features_evaluated: usize,
+}
+
+/// Live service counters (lock-free reads).
+#[derive(Debug, Default)]
+pub struct ServiceStats {
+    served: AtomicU64,
+    features: AtomicU64,
+    batches: AtomicU64,
+}
+
+/// A snapshot of [`ServiceStats`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsSnapshot {
+    /// Requests served.
+    pub served: u64,
+    /// Total features evaluated.
+    pub features: u64,
+    /// Batches drained.
+    pub batches: u64,
+}
+
+impl StatsSnapshot {
+    /// Mean features per request.
+    pub fn avg_features(&self) -> f64 {
+        if self.served == 0 { 0.0 } else { self.features as f64 / self.served as f64 }
+    }
+}
+
+impl ServiceStats {
+    /// Read the counters.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            served: self.served.load(Ordering::Relaxed),
+            features: self.features.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Handle for submitting requests to a running service. Cloneable;
+/// dropping every handle shuts the workers down.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<ScoreRequest>,
+}
+
+impl ServiceHandle {
+    /// Score one feature vector, blocking until the result arrives.
+    /// Returns `None` if the service has shut down or the queue is
+    /// persistently full (backpressure).
+    pub fn score(&self, features: Vec<f64>) -> Option<ScoreResponse> {
+        let (tx, rx) = sync_channel(1);
+        match self.tx.try_send(ScoreRequest { features, respond: tx }) {
+            Ok(()) => {}
+            Err(TrySendError::Full(req)) => {
+                // Block on a full queue (backpressure) rather than dropping.
+                self.tx.send(req).ok()?;
+            }
+            Err(TrySendError::Disconnected(_)) => return None,
+        }
+        rx.recv().ok()
+    }
+}
+
+/// The prediction service: owns the model and the batching workers.
+pub struct PredictionService {
+    model: Arc<ModelSnapshot>,
+    /// Max requests drained per batch.
+    pub max_batch: usize,
+    /// Queue capacity (backpressure bound).
+    pub queue: usize,
+    /// Worker threads.
+    pub workers: usize,
+    seed: u64,
+}
+
+/// A running service: join handles + stats.
+pub struct RunningService {
+    /// Shared counters.
+    pub stats: Arc<ServiceStats>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl RunningService {
+    /// Wait for workers to finish (after all [`ServiceHandle`]s drop).
+    pub fn join(self) {
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl PredictionService {
+    /// Service over a model snapshot.
+    pub fn new(model: ModelSnapshot, max_batch: usize, queue: usize, seed: u64) -> Self {
+        Self {
+            model: Arc::new(model),
+            max_batch: max_batch.max(1),
+            queue: queue.max(1),
+            workers: 1,
+            seed,
+        }
+    }
+
+    /// Use `n` worker threads.
+    pub fn with_workers(mut self, n: usize) -> Self {
+        self.workers = n.max(1);
+        self
+    }
+
+    /// Start the workers. Returns a request handle and the running
+    /// service (stats + joins).
+    pub fn spawn(self) -> (ServiceHandle, RunningService) {
+        let (tx, rx) = sync_channel::<ScoreRequest>(self.queue);
+        let rx = Arc::new(Mutex::new(rx));
+        let stats = Arc::new(ServiceStats::default());
+        let mut handles = Vec::new();
+        for worker_id in 0..self.workers {
+            let rx = rx.clone();
+            let model = self.model.clone();
+            let stats = stats.clone();
+            let max_batch = self.max_batch;
+            let seed = self.seed ^ (worker_id as u64) << 32;
+            handles.push(std::thread::spawn(move || {
+                worker_loop(rx, model, stats, max_batch, seed)
+            }));
+        }
+        (ServiceHandle { tx }, RunningService { stats, handles })
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<Receiver<ScoreRequest>>>,
+    model: Arc<ModelSnapshot>,
+    stats: Arc<ServiceStats>,
+    max_batch: usize,
+    seed: u64,
+) {
+    let mut orders = OrderGenerator::new(model.policy, seed);
+    orders.refresh(&model.weights);
+    let mut batch: Vec<ScoreRequest> = Vec::with_capacity(max_batch);
+    loop {
+        // Blocking receive for the first request, opportunistic drain for
+        // the rest — dynamic batching without a timer.
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(first) => batch.push(first),
+                Err(_) => return, // all senders dropped
+            }
+            while batch.len() < max_batch {
+                match guard.try_recv() {
+                    Ok(req) => batch.push(req),
+                    Err(_) => break,
+                }
+            }
+        } // release the lock before compute
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        for req in batch.drain(..) {
+            let resp = if req.features.len() != model.weights.len() {
+                ScoreResponse { score: f64::NAN, features_evaluated: 0 }
+            } else {
+                let predictor = EarlyStopPredictor::new(&model.boundary);
+                let order = orders.next();
+                let (score, k) =
+                    predictor.predict(&model.weights, &req.features, order, model.var_sn);
+                ScoreResponse { score, features_evaluated: k }
+            };
+            stats.served.fetch_add(1, Ordering::Relaxed);
+            stats.features.fetch_add(resp.features_evaluated as u64, Ordering::Relaxed);
+            let _ = req.respond.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(dim: usize) -> ModelSnapshot {
+        ModelSnapshot {
+            weights: vec![1.0; dim],
+            var_sn: 4.0,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+        }
+    }
+
+    #[test]
+    fn easy_requests_exit_early() {
+        let dim = 200;
+        let (h, run) = PredictionService::new(model(dim), 8, 64, 0).spawn();
+        let resp = h.score(vec![1.0; dim]).unwrap();
+        assert!(resp.score > 0.0);
+        assert!(resp.features_evaluated < dim / 4, "took {}", resp.features_evaluated);
+        let resp_neg = h.score(vec![-1.0; dim]).unwrap();
+        assert!(resp_neg.score < 0.0);
+        let s = run.stats.snapshot();
+        assert_eq!(s.served, 2);
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn hard_requests_get_full_evaluation() {
+        let dim = 64;
+        let (h, run) = PredictionService::new(model(dim), 8, 64, 0).spawn();
+        // Oscillating input: sign never certain until the end.
+        let x: Vec<f64> = (0..dim).map(|i| if i % 2 == 0 { 0.01 } else { -0.01 }).collect();
+        let resp = h.score(x).unwrap();
+        assert_eq!(resp.features_evaluated, dim);
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn dimension_mismatch_yields_nan() {
+        let (h, run) = PredictionService::new(model(16), 4, 16, 0).spawn();
+        let resp = h.score(vec![1.0; 3]).unwrap();
+        assert!(resp.score.is_nan());
+        assert_eq!(resp.features_evaluated, 0);
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let dim = 100;
+        let (h, run) = PredictionService::new(model(dim), 16, 64, 1).with_workers(4).spawn();
+        let answered: usize = std::thread::scope(|scope| {
+            let mut joins = Vec::new();
+            for i in 0..8 {
+                let h = h.clone();
+                joins.push(scope.spawn(move || {
+                    let mut ok = 0;
+                    for j in 0..25 {
+                        let sign = if (i + j) % 2 == 0 { 1.0 } else { -1.0 };
+                        let r = h.score(vec![sign; dim]).unwrap();
+                        assert!(!r.score.is_nan());
+                        ok += 1;
+                    }
+                    ok
+                }));
+            }
+            joins.into_iter().map(|j| j.join().unwrap()).sum()
+        });
+        assert_eq!(answered, 200);
+        let s = run.stats.snapshot();
+        assert_eq!(s.served, 200);
+        assert!(s.avg_features() < dim as f64, "early exit should save features");
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn snapshot_json_round_trip() {
+        let m = model(4);
+        let j = m.to_json().to_string_compact();
+        let back = ModelSnapshot::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.weights, m.weights);
+        assert_eq!(back.policy, m.policy);
+        assert_eq!(back.boundary, m.boundary);
+    }
+}

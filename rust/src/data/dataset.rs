@@ -1,0 +1,231 @@
+//! Dense in-memory dataset types.
+//!
+//! Examples are stored row-major in one contiguous buffer (cache-friendly
+//! for the sequential walker, zero-copy slicing for the runtime's batched
+//! literals). Labels are small integers (digit classes 0–9 or ±1 for
+//! binary tasks).
+
+
+use crate::error::{Error, Result};
+
+/// A borrowed view of one example.
+#[derive(Debug, Clone, Copy)]
+pub struct Example<'a> {
+    /// Dense feature vector.
+    pub features: &'a [f64],
+    /// Class label.
+    pub label: i64,
+}
+
+/// Dense dataset: `rows × dim` features + one label per row.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    dim: usize,
+    features: Vec<f64>,
+    labels: Vec<i64>,
+}
+
+impl Dataset {
+    /// Empty dataset with feature dimensionality `dim`.
+    pub fn new(dim: usize) -> Self {
+        Self { dim, features: Vec::new(), labels: Vec::new() }
+    }
+
+    /// Build from parts. `features.len()` must be a multiple of `dim` and
+    /// match `labels.len() * dim`.
+    pub fn from_parts(dim: usize, features: Vec<f64>, labels: Vec<i64>) -> Result<Self> {
+        if dim == 0 || features.len() != labels.len() * dim {
+            return Err(Error::Config(format!(
+                "from_parts: dim={dim}, features={}, labels={}",
+                features.len(),
+                labels.len()
+            )));
+        }
+        Ok(Self { dim, features, labels })
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Is the dataset empty?
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Append one example.
+    pub fn push(&mut self, features: &[f64], label: i64) -> Result<()> {
+        if features.len() != self.dim {
+            return Err(Error::DimMismatch {
+                expected: self.dim,
+                got: features.len(),
+                context: "Dataset::push".into(),
+            });
+        }
+        self.features.extend_from_slice(features);
+        self.labels.push(label);
+        Ok(())
+    }
+
+    /// Borrow example `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> Example<'_> {
+        Example { features: &self.features[i * self.dim..(i + 1) * self.dim], label: self.labels[i] }
+    }
+
+    /// All labels.
+    pub fn labels(&self) -> &[i64] {
+        &self.labels
+    }
+
+    /// Raw feature buffer (row-major), for the runtime's batched literals.
+    pub fn features_raw(&self) -> &[f64] {
+        &self.features
+    }
+
+    /// Iterate over examples.
+    pub fn iter(&self) -> impl Iterator<Item = Example<'_>> + '_ {
+        (0..self.len()).map(move |i| self.get(i))
+    }
+
+    /// Distinct labels in ascending order.
+    pub fn classes(&self) -> Vec<i64> {
+        let mut c: Vec<i64> = self.labels.clone();
+        c.sort_unstable();
+        c.dedup();
+        c
+    }
+
+    /// Count of examples with `label`.
+    pub fn class_count(&self, label: i64) -> usize {
+        self.labels.iter().filter(|&&l| l == label).count()
+    }
+
+    /// Subset by row indices (copies).
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut out = Dataset::new(self.dim);
+        for &i in indices {
+            let e = self.get(i);
+            out.features.extend_from_slice(e.features);
+            out.labels.push(e.label);
+        }
+        out
+    }
+
+    /// Split into (train, test) at `train_fraction` (row order preserved;
+    /// shuffle first via [`crate::data::stream`] if needed).
+    pub fn split(&self, train_fraction: f64) -> (Dataset, Dataset) {
+        let k = ((self.len() as f64) * train_fraction).round() as usize;
+        let k = k.min(self.len());
+        let train: Vec<usize> = (0..k).collect();
+        let test: Vec<usize> = (k..self.len()).collect();
+        (self.subset(&train), self.subset(&test))
+    }
+
+    /// Normalize features into `[-1, 1]` per the paper's `X_i ∈ [−1,1]`
+    /// requirement: affine map from the observed global min/max. No-op on
+    /// constant data.
+    pub fn normalize_to_unit_range(&mut self) {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in &self.features {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if !(hi > lo) {
+            return;
+        }
+        let scale = 2.0 / (hi - lo);
+        for v in &mut self.features {
+            *v = (*v - lo) * scale - 1.0;
+        }
+    }
+
+    /// Global feature range (diagnostics / invariant checks).
+    pub fn feature_range(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &v in &self.features {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        let mut d = Dataset::new(3);
+        d.push(&[0.0, 1.0, 2.0], 7).unwrap();
+        d.push(&[3.0, 4.0, 5.0], 3).unwrap();
+        d.push(&[6.0, 7.0, 8.0], 7).unwrap();
+        d
+    }
+
+    #[test]
+    fn push_get_roundtrip() {
+        let d = toy();
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.dim(), 3);
+        assert_eq!(d.get(1).features, &[3.0, 4.0, 5.0]);
+        assert_eq!(d.get(1).label, 3);
+    }
+
+    #[test]
+    fn push_rejects_wrong_dim() {
+        let mut d = Dataset::new(3);
+        assert!(d.push(&[1.0, 2.0], 0).is_err());
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(Dataset::from_parts(2, vec![1.0; 6], vec![0, 1, 2]).is_ok());
+        assert!(Dataset::from_parts(2, vec![1.0; 5], vec![0, 1, 2]).is_err());
+        assert!(Dataset::from_parts(0, vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn classes_and_counts() {
+        let d = toy();
+        assert_eq!(d.classes(), vec![3, 7]);
+        assert_eq!(d.class_count(7), 2);
+        assert_eq!(d.class_count(3), 1);
+        assert_eq!(d.class_count(9), 0);
+    }
+
+    #[test]
+    fn subset_and_split() {
+        let d = toy();
+        let s = d.subset(&[2, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(0).features, &[6.0, 7.0, 8.0]);
+        let (tr, te) = d.split(2.0 / 3.0);
+        assert_eq!(tr.len(), 2);
+        assert_eq!(te.len(), 1);
+    }
+
+    #[test]
+    fn normalization_hits_unit_range() {
+        let mut d = toy();
+        d.normalize_to_unit_range();
+        let (lo, hi) = d.feature_range();
+        assert!((lo + 1.0).abs() < 1e-12);
+        assert!((hi - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalization_constant_data_noop() {
+        let mut d = Dataset::new(2);
+        d.push(&[5.0, 5.0], 0).unwrap();
+        d.normalize_to_unit_range();
+        assert_eq!(d.get(0).features, &[5.0, 5.0]);
+    }
+}

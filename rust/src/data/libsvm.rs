@@ -1,0 +1,119 @@
+//! libsvm / svmlight text format I/O.
+//!
+//! `label idx:val idx:val ...` with 1-based indices — the lingua franca
+//! for margin-based learners (Pegasos's original release consumed it).
+//! Reading densifies into [`Dataset`]; writing sparsifies (zeros skipped).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::dataset::Dataset;
+
+/// Parse libsvm text. `dim` fixes the dense width; feature indices beyond
+/// it are an error. Labels may be any integers (e.g. ±1 or digits).
+pub fn parse(reader: impl BufRead, dim: usize) -> Result<Dataset> {
+    let mut ds = Dataset::new(dim);
+    let mut row = vec![0.0f64; dim];
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| Error::io("<libsvm stream>", e))?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        row.iter_mut().for_each(|v| *v = 0.0);
+        let mut parts = line.split_whitespace();
+        let label: i64 = parts
+            .next()
+            .ok_or_else(|| Error::format(format!("libsvm line {}", lineno + 1), "empty"))?
+            .parse()
+            .map_err(|e| {
+                Error::format(format!("libsvm line {}", lineno + 1), format!("bad label: {e}"))
+            })?;
+        for tok in parts {
+            let (idx_s, val_s) = tok.split_once(':').ok_or_else(|| {
+                Error::format(format!("libsvm line {}", lineno + 1), format!("bad pair {tok:?}"))
+            })?;
+            let idx: usize = idx_s.parse().map_err(|e| {
+                Error::format(format!("libsvm line {}", lineno + 1), format!("bad index: {e}"))
+            })?;
+            let val: f64 = val_s.parse().map_err(|e| {
+                Error::format(format!("libsvm line {}", lineno + 1), format!("bad value: {e}"))
+            })?;
+            if idx == 0 || idx > dim {
+                return Err(Error::format(
+                    format!("libsvm line {}", lineno + 1),
+                    format!("index {idx} out of 1..={dim}"),
+                ));
+            }
+            row[idx - 1] = val;
+        }
+        ds.push(&row, label)?;
+    }
+    Ok(ds)
+}
+
+/// Read a libsvm file.
+pub fn read_file(path: &Path, dim: usize) -> Result<Dataset> {
+    let f = File::open(path).map_err(|e| Error::io(path, e))?;
+    parse(BufReader::new(f), dim)
+}
+
+/// Write a dataset as libsvm text (zeros omitted; 1-based indices).
+pub fn write_file(ds: &Dataset, path: &Path) -> Result<()> {
+    let f = File::create(path).map_err(|e| Error::io(path, e))?;
+    let mut w = BufWriter::new(f);
+    for ex in ds.iter() {
+        write!(w, "{}", ex.label).map_err(|e| Error::io(path, e))?;
+        for (j, &v) in ex.features.iter().enumerate() {
+            if v != 0.0 {
+                write!(w, " {}:{}", j + 1, v).map_err(|e| Error::io(path, e))?;
+            }
+        }
+        writeln!(w).map_err(|e| Error::io(path, e))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic() {
+        let text = "1 1:0.5 3:-2\n-1 2:1.25\n\n# comment only\n1 1:1 # trailing\n";
+        let ds = parse(Cursor::new(text), 3).unwrap();
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.get(0).features, &[0.5, 0.0, -2.0]);
+        assert_eq!(ds.get(1).features, &[0.0, 1.25, 0.0]);
+        assert_eq!(ds.get(1).label, -1);
+        assert_eq!(ds.get(2).features, &[1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(parse(Cursor::new("x 1:1\n"), 2).is_err(), "bad label");
+        assert!(parse(Cursor::new("1 0:1\n"), 2).is_err(), "index 0");
+        assert!(parse(Cursor::new("1 3:1\n"), 2).is_err(), "index beyond dim");
+        assert!(parse(Cursor::new("1 1=5\n"), 2).is_err(), "bad pair");
+        assert!(parse(Cursor::new("1 1:abc\n"), 2).is_err(), "bad value");
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let path = dir.path().join("toy.svm");
+        let mut ds = Dataset::new(4);
+        ds.push(&[0.0, 1.5, 0.0, -3.0], 1).unwrap();
+        ds.push(&[2.0, 0.0, 0.0, 0.0], -1).unwrap();
+        write_file(&ds, &path).unwrap();
+        let back = read_file(&path, 4).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(0).features, ds.get(0).features);
+        assert_eq!(back.get(1).features, ds.get(1).features);
+        assert_eq!(back.labels(), ds.labels());
+    }
+}

@@ -1,0 +1,190 @@
+//! MNIST IDX-format reader.
+//!
+//! When real MNIST files (`train-images-idx3-ubyte`,
+//! `train-labels-idx1-ubyte`, optionally `.gz`-decompressed) are placed in
+//! a directory, [`load_mnist_dir`] reads them and the whole pipeline runs
+//! on the genuine data instead of the synthetic stand-in. IDX is the
+//! classic big-endian format: magic `0x00000803` (u8 tensor, 3 dims) for
+//! images, `0x00000801` for labels.
+
+use std::fs::File;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+use super::dataset::Dataset;
+
+fn read_u32_be(buf: &[u8], off: usize) -> Result<u32> {
+    buf.get(off..off + 4)
+        .map(|b| u32::from_be_bytes([b[0], b[1], b[2], b[3]]))
+        .ok_or_else(|| Error::format("idx header", "truncated"))
+}
+
+/// Parse an IDX3 (images) byte buffer into `(rows, height, width, pixels)`.
+pub fn parse_idx3(buf: &[u8]) -> Result<(usize, usize, usize, &[u8])> {
+    let magic = read_u32_be(buf, 0)?;
+    if magic != 0x0000_0803 {
+        return Err(Error::format("idx3 magic", format!("expected 0x803, got {magic:#x}")));
+    }
+    let n = read_u32_be(buf, 4)? as usize;
+    let h = read_u32_be(buf, 8)? as usize;
+    let w = read_u32_be(buf, 12)? as usize;
+    let need = 16 + n * h * w;
+    if buf.len() < need {
+        return Err(Error::format("idx3 body", format!("need {need} bytes, have {}", buf.len())));
+    }
+    Ok((n, h, w, &buf[16..need]))
+}
+
+/// Parse an IDX1 (labels) byte buffer into label bytes.
+pub fn parse_idx1(buf: &[u8]) -> Result<&[u8]> {
+    let magic = read_u32_be(buf, 0)?;
+    if magic != 0x0000_0801 {
+        return Err(Error::format("idx1 magic", format!("expected 0x801, got {magic:#x}")));
+    }
+    let n = read_u32_be(buf, 4)? as usize;
+    let need = 8 + n;
+    if buf.len() < need {
+        return Err(Error::format("idx1 body", format!("need {need} bytes, have {}", buf.len())));
+    }
+    Ok(&buf[8..need])
+}
+
+fn read_file(path: &Path) -> Result<Vec<u8>> {
+    let mut f = File::open(path).map_err(|e| Error::io(path, e))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| Error::io(path, e))?;
+    Ok(buf)
+}
+
+/// Load an images+labels IDX pair into a [`Dataset`] with pixel
+/// intensities mapped to the paper's `[−1, 1]` range.
+pub fn load_idx_pair(images: &Path, labels: &Path) -> Result<Dataset> {
+    let img_buf = read_file(images)?;
+    let lab_buf = read_file(labels)?;
+    let (n, h, w, pixels) = parse_idx3(&img_buf)?;
+    let labs = parse_idx1(&lab_buf)?;
+    if labs.len() != n {
+        return Err(Error::format(
+            "idx pair",
+            format!("{n} images but {} labels", labs.len()),
+        ));
+    }
+    let dim = h * w;
+    let mut ds = Dataset::new(dim);
+    let mut row = vec![0.0f64; dim];
+    for i in 0..n {
+        for (j, &p) in pixels[i * dim..(i + 1) * dim].iter().enumerate() {
+            row[j] = (p as f64) / 255.0; // [0,255] -> [0,1] ⊂ [−1,1]
+        }
+        ds.push(&row, labs[i] as i64)?;
+    }
+    Ok(ds)
+}
+
+/// Look for MNIST train files in `dir` and load them if present.
+/// Returns `Ok(None)` when the files are absent (callers fall back to the
+/// synthetic generator), `Err` on malformed files.
+pub fn load_mnist_dir(dir: &Path) -> Result<Option<Dataset>> {
+    let images: PathBuf = dir.join("train-images-idx3-ubyte");
+    let labels: PathBuf = dir.join("train-labels-idx1-ubyte");
+    if !images.exists() || !labels.exists() {
+        return Ok(None);
+    }
+    load_idx_pair(&images, &labels).map(Some)
+}
+
+/// Serialize a dataset back to an IDX pair (used by tests and by
+/// `attentive export-idx` to snapshot synthetic data for other tools).
+/// Features are mapped from `[−1,1]` back to `[0,255]`.
+pub fn write_idx_pair(ds: &Dataset, side: usize, images: &Path, labels: &Path) -> Result<()> {
+    use std::io::Write;
+    if side * side != ds.dim() {
+        return Err(Error::Config(format!("side {side}² != dim {}", ds.dim())));
+    }
+    let n = ds.len() as u32;
+    let mut img = Vec::with_capacity(16 + ds.len() * ds.dim());
+    img.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+    img.extend_from_slice(&n.to_be_bytes());
+    img.extend_from_slice(&(side as u32).to_be_bytes());
+    img.extend_from_slice(&(side as u32).to_be_bytes());
+    for &v in ds.features_raw() {
+        img.push((v * 255.0).round().clamp(0.0, 255.0) as u8);
+    }
+    let mut lab = Vec::with_capacity(8 + ds.len());
+    lab.extend_from_slice(&0x0000_0801u32.to_be_bytes());
+    lab.extend_from_slice(&n.to_be_bytes());
+    for &l in ds.labels() {
+        lab.push(l as u8);
+    }
+    let mut f = File::create(images).map_err(|e| Error::io(images, e))?;
+    f.write_all(&img).map_err(|e| Error::io(images, e))?;
+    let mut f = File::create(labels).map_err(|e| Error::io(labels, e))?;
+    f.write_all(&lab).map_err(|e| Error::io(labels, e))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthDigits;
+
+    #[test]
+    fn idx_round_trip() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let ds = SynthDigits::new(11).generate(25);
+        let img = dir.path().join("train-images-idx3-ubyte");
+        let lab = dir.path().join("train-labels-idx1-ubyte");
+        write_idx_pair(&ds, 28, &img, &lab).unwrap();
+        let loaded = load_mnist_dir(dir.path()).unwrap().expect("files exist");
+        assert_eq!(loaded.len(), 25);
+        assert_eq!(loaded.dim(), 784);
+        assert_eq!(loaded.labels(), ds.labels());
+        // Quantization to u8 loses < 1/255 per pixel.
+        for i in 0..ds.len() {
+            for (a, b) in ds.get(i).features.iter().zip(loaded.get(i).features) {
+                assert!((a - b).abs() < 1.0 / 254.0, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn absent_dir_returns_none() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        assert!(load_mnist_dir(dir.path()).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = vec![0u8; 32];
+        buf[3] = 0x99;
+        assert!(parse_idx3(&buf).is_err());
+        assert!(parse_idx1(&buf).is_err());
+    }
+
+    #[test]
+    fn truncated_body_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0x0000_0803u32.to_be_bytes());
+        buf.extend_from_slice(&2u32.to_be_bytes()); // 2 images
+        buf.extend_from_slice(&28u32.to_be_bytes());
+        buf.extend_from_slice(&28u32.to_be_bytes());
+        buf.extend_from_slice(&[0u8; 100]); // far too short
+        assert!(parse_idx3(&buf).is_err());
+    }
+
+    #[test]
+    fn label_count_mismatch_rejected() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let ds = SynthDigits::new(1).generate(3);
+        let img = dir.path().join("i");
+        let lab = dir.path().join("l");
+        write_idx_pair(&ds, 28, &img, &lab).unwrap();
+        // Corrupt the label count.
+        let mut lb = std::fs::read(&lab).unwrap();
+        lb[7] = 99;
+        std::fs::write(&lab, &lb).unwrap();
+        assert!(load_idx_pair(&img, &lab).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! Dataset substrate.
+//!
+//! The paper evaluates on MNIST 1-vs-1 digit pairs. This module provides
+//! everything needed to reproduce that end-to-end without external
+//! downloads:
+//!
+//! * [`dataset`] — dense in-memory [`dataset::Dataset`] /
+//!   [`dataset::Example`] types, normalization to the paper's
+//!   `x_i ∈ [−1, 1]` range, summary statistics.
+//! * [`synth`] — a deterministic synthetic digit-glyph generator
+//!   (28×28 stroke renderer with per-sample jitter, thickness and noise)
+//!   standing in for MNIST (see DESIGN.md §7 for why the substitution
+//!   preserves the margin structure the STST depends on).
+//! * [`mnist`] — an IDX-format reader so *real* MNIST files are used
+//!   automatically when present (drop them in `data/mnist/`).
+//! * [`task`] — 1-vs-1 binary task extraction ("2 vs 3", "3 vs 8").
+//! * [`stream`] — seeded shuffling iterators for online passes.
+//! * [`libsvm`] — libsvm/svmlight text I/O for interop.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod mnist;
+pub mod stream;
+pub mod synth;
+pub mod task;
+
+pub use dataset::{Dataset, Example};
+pub use task::BinaryTask;

@@ -1,0 +1,74 @@
+//! Seeded streaming/shuffling over datasets and tasks.
+//!
+//! Online learners consume examples in stream order; the paper averages
+//! over 10 random permutations of the dataset. [`ShuffledIndices`]
+//! produces those permutations deterministically per `(seed, epoch)` so
+//! every run — and every parallel shard — is reproducible.
+
+use crate::util::rng::Rng64;
+
+/// Deterministic permutation generator over `0..len`.
+#[derive(Debug, Clone)]
+pub struct ShuffledIndices {
+    len: usize,
+    seed: u64,
+}
+
+impl ShuffledIndices {
+    /// Permutations of `0..len` derived from `seed`.
+    pub fn new(len: usize, seed: u64) -> Self {
+        Self { len, seed }
+    }
+
+    /// The permutation for `epoch` (Fisher–Yates, ChaCha8 keyed on
+    /// `(seed, epoch)`).
+    pub fn epoch(&self, epoch: u64) -> Vec<usize> {
+        let mut rng = Rng64::seed_from_u64(self.seed ^ epoch.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut idx: Vec<usize> = (0..self.len).collect();
+        rng.shuffle(&mut idx);
+        idx
+    }
+
+    /// Iterator over `epochs` permutations chained into one stream.
+    pub fn stream(&self, epochs: u64) -> impl Iterator<Item = usize> + '_ {
+        (0..epochs).flat_map(move |e| self.epoch(e).into_iter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn epoch_is_permutation() {
+        let s = ShuffledIndices::new(50, 7);
+        let p = s.epoch(0);
+        assert_eq!(p.len(), 50);
+        assert_eq!(p.iter().copied().collect::<HashSet<_>>().len(), 50);
+    }
+
+    #[test]
+    fn deterministic_per_seed_and_epoch() {
+        let a = ShuffledIndices::new(30, 1).epoch(2);
+        let b = ShuffledIndices::new(30, 1).epoch(2);
+        assert_eq!(a, b);
+        assert_ne!(a, ShuffledIndices::new(30, 1).epoch(3));
+        assert_ne!(a, ShuffledIndices::new(30, 2).epoch(2));
+    }
+
+    #[test]
+    fn stream_chains_epochs() {
+        let s = ShuffledIndices::new(5, 3);
+        let all: Vec<usize> = s.stream(2).collect();
+        assert_eq!(all.len(), 10);
+        assert_eq!(&all[..5], s.epoch(0).as_slice());
+        assert_eq!(&all[5..], s.epoch(1).as_slice());
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        assert!(ShuffledIndices::new(0, 0).epoch(0).is_empty());
+        assert_eq!(ShuffledIndices::new(1, 0).epoch(5), vec![0]);
+    }
+}

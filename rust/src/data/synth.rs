@@ -1,0 +1,261 @@
+//! Deterministic synthetic digit-glyph generator — the MNIST stand-in.
+//!
+//! Real MNIST is not bundled (no network at build time); per DESIGN.md §7
+//! we substitute a generator that reproduces the *structural properties*
+//! the STST's behaviour depends on:
+//!
+//! * 28×28 grayscale images, many near-zero background pixels (easy mass
+//!   for early stopping) and informative stroke pixels;
+//! * class-conditional feature variance concentrated on the stroke
+//!   regions that differ between digits (what `var_y(x_j)` picks up);
+//! * heavy per-sample variation: translation jitter, stroke thickness,
+//!   multiplicative stroke noise, and salt noise, so pairs like (3, 8)
+//!   are genuinely harder than (2, 3) — matching the paper's 49-vs-72
+//!   average-features narrative.
+//!
+//! Digits are rendered from polyline skeletons on a 28×28 canvas with a
+//! soft (Gaussian-falloff) brush. Everything is driven by `ChaCha8Rng`,
+//! so a `(seed, count)` pair always yields the identical dataset.
+
+use crate::util::rng::Rng64;
+
+use super::dataset::Dataset;
+
+/// Canvas side; features = SIDE × SIDE = 784, as in MNIST.
+pub const SIDE: usize = 28;
+/// Feature dimensionality of generated digits.
+pub const DIM: usize = SIDE * SIDE;
+
+/// Polyline skeletons for digits 0–9 in a normalized [0,1]² box
+/// (x right, y down). Hand-designed to mimic handwritten topology —
+/// crucially 3 traces exactly the right half of 8's two lobes (so the
+/// hard pair (3,8) differs only on the left arcs), while 2 and 3 differ
+/// over larger regions (the easier pair).
+fn skeleton(digit: u8) -> &'static [(f32, f32)] {
+    match digit {
+        0 => &[(0.5, 0.08), (0.22, 0.25), (0.2, 0.7), (0.5, 0.92), (0.78, 0.7), (0.8, 0.25), (0.5, 0.08)],
+        1 => &[(0.35, 0.22), (0.55, 0.08), (0.55, 0.92)],
+        2 => &[(0.25, 0.28), (0.45, 0.08), (0.72, 0.22), (0.68, 0.45), (0.3, 0.75), (0.22, 0.92), (0.8, 0.9)],
+        3 => &[(0.3, 0.12), (0.5, 0.08), (0.72, 0.27), (0.5, 0.47), (0.72, 0.72), (0.5, 0.92), (0.3, 0.88)],
+        4 => &[(0.62, 0.92), (0.62, 0.08), (0.2, 0.62), (0.82, 0.62)],
+        5 => &[(0.75, 0.1), (0.3, 0.1), (0.27, 0.45), (0.6, 0.42), (0.78, 0.65), (0.6, 0.9), (0.25, 0.85)],
+        6 => &[(0.68, 0.1), (0.35, 0.35), (0.25, 0.68), (0.45, 0.9), (0.72, 0.72), (0.55, 0.5), (0.3, 0.62)],
+        7 => &[(0.2, 0.1), (0.8, 0.1), (0.5, 0.55), (0.38, 0.92)],
+        8 => &[(0.5, 0.08), (0.72, 0.27), (0.5, 0.47), (0.72, 0.72), (0.5, 0.92), (0.28, 0.72), (0.5, 0.47), (0.28, 0.27), (0.5, 0.08)],
+        9 => &[(0.72, 0.35), (0.5, 0.08), (0.28, 0.3), (0.5, 0.5), (0.72, 0.35), (0.68, 0.92)],
+        _ => panic!("digit must be 0-9, got {digit}"),
+    }
+}
+
+/// Configuration for the glyph renderer.
+#[derive(Debug, Clone, Copy)]
+pub struct SynthConfig {
+    /// Max translation jitter in pixels (uniform per sample, each axis).
+    pub jitter_px: f32,
+    /// Brush radius mean (pixels).
+    pub stroke_radius: f32,
+    /// Brush radius spread (uniform ± around the mean, per sample).
+    pub stroke_radius_jitter: f32,
+    /// Per-sample global scale jitter (uniform in `1 ± scale_jitter`).
+    pub scale_jitter: f32,
+    /// Std-dev of additive Gaussian pixel noise (on [0,1] intensities).
+    pub pixel_noise: f32,
+    /// Probability a background pixel gets salt noise.
+    pub salt_prob: f32,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            jitter_px: 2.0,
+            stroke_radius: 1.3,
+            stroke_radius_jitter: 0.45,
+            scale_jitter: 0.12,
+            pixel_noise: 0.04,
+            salt_prob: 0.01,
+        }
+    }
+}
+
+/// Deterministic synthetic digit generator.
+#[derive(Debug, Clone)]
+pub struct SynthDigits {
+    rng: Rng64,
+    cfg: SynthConfig,
+}
+
+impl SynthDigits {
+    /// Generator with default renderer config.
+    pub fn new(seed: u64) -> Self {
+        Self::with_config(seed, SynthConfig::default())
+    }
+
+    /// Generator with explicit renderer config.
+    pub fn with_config(seed: u64, cfg: SynthConfig) -> Self {
+        Self { rng: Rng64::seed_from_u64(seed), cfg }
+    }
+
+    /// Render one digit into a fresh 784-vector of intensities in [0, 1].
+    pub fn render(&mut self, digit: u8) -> Vec<f64> {
+        let mut img = vec![0.0f32; DIM];
+        let pts = skeleton(digit);
+        let c = self.cfg;
+
+        let dx = self.rng.range_f64(-c.jitter_px as f64, c.jitter_px as f64) as f32;
+        let dy = self.rng.range_f64(-c.jitter_px as f64, c.jitter_px as f64) as f32;
+        let scale = 1.0 + self.rng.range_f64(-c.scale_jitter as f64, c.scale_jitter as f64) as f32;
+        let radius = (c.stroke_radius
+            + self.rng.range_f64(-c.stroke_radius_jitter as f64, c.stroke_radius_jitter as f64)
+                as f32)
+            .max(0.6);
+        // mild shear for handwriting slant
+        let shear = self.rng.range_f64(-0.15, 0.15) as f32;
+
+        let side = SIDE as f32;
+        let map = |p: (f32, f32)| -> (f32, f32) {
+            let (mut x, y) = ((p.0 - 0.5) * scale, (p.1 - 0.5) * scale);
+            x += shear * y;
+            ((x + 0.5) * (side - 6.0) + 3.0 + dx, (y + 0.5) * (side - 6.0) + 3.0 + dy)
+        };
+
+        // Rasterize each segment with a soft brush.
+        for seg in pts.windows(2) {
+            let (x0, y0) = map(seg[0]);
+            let (x1, y1) = map(seg[1]);
+            let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt().max(1e-3);
+            let steps = (len * 3.0).ceil() as usize;
+            for s in 0..=steps {
+                let t = s as f32 / steps as f32;
+                let (cx, cy) = (x0 + t * (x1 - x0), y0 + t * (y1 - y0));
+                let r = radius.ceil() as i32 + 1;
+                let (icx, icy) = (cx.round() as i32, cy.round() as i32);
+                for py in (icy - r).max(0)..=(icy + r).min(SIDE as i32 - 1) {
+                    for px in (icx - r).max(0)..=(icx + r).min(SIDE as i32 - 1) {
+                        let d2 = (px as f32 - cx).powi(2) + (py as f32 - cy).powi(2);
+                        let v = (-d2 / (radius * radius)).exp();
+                        let idx = py as usize * SIDE + px as usize;
+                        img[idx] = img[idx].max(v);
+                    }
+                }
+            }
+        }
+
+        // Pixel noise + salt.
+        for v in img.iter_mut() {
+            let noise: f32 = self.rng.normal() as f32;
+            *v = (*v + c.pixel_noise * noise).clamp(0.0, 1.0);
+            if *v < 0.05 && (self.rng.f64() as f32) < c.salt_prob {
+                *v = self.rng.range_f64(0.3, 0.9) as f32;
+            }
+        }
+
+        img.into_iter().map(|v| v as f64).collect()
+    }
+
+    /// Generate `count` examples with labels cycling over all ten digits,
+    /// already normalized to the paper's `[−1, 1]` feature range.
+    pub fn generate(&mut self, count: usize) -> Dataset {
+        self.generate_classes(count, &[0, 1, 2, 3, 4, 5, 6, 7, 8, 9])
+    }
+
+    /// Generate `count` examples cycling over `classes` only.
+    pub fn generate_classes(&mut self, count: usize, classes: &[u8]) -> Dataset {
+        assert!(!classes.is_empty());
+        let mut ds = Dataset::new(DIM);
+        for i in 0..count {
+            let digit = classes[i % classes.len()];
+            let img = self.render(digit);
+            // Intensities stay in [0, 1] ⊂ [−1, 1] (the paper's X_i range):
+            // background pixels are exactly 0, so they contribute nothing to
+            // the margin — the sparsity structure a bias-free linear model
+            // needs (and what real MNIST pixel scaling gives).
+            ds.push(&img, digit as i64).expect("dim is fixed");
+        }
+        ds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = SynthDigits::new(5).generate(20);
+        let b = SynthDigits::new(5).generate(20);
+        assert_eq!(a.features_raw(), b.features_raw());
+        assert_eq!(a.labels(), b.labels());
+        let c = SynthDigits::new(6).generate(20);
+        assert_ne!(a.features_raw(), c.features_raw());
+    }
+
+    #[test]
+    fn features_in_unit_range() {
+        let ds = SynthDigits::new(1).generate(30);
+        let (lo, hi) = ds.feature_range();
+        assert!(lo >= 0.0 && hi <= 1.0, "intensities live in [0,1], got [{lo}, {hi}]");
+        assert!(hi > 0.5, "strokes must produce bright pixels, max={hi}");
+    }
+
+    #[test]
+    fn all_ten_digits_render() {
+        let mut g = SynthDigits::new(2);
+        for d in 0..10u8 {
+            let img = g.render(d);
+            let ink: f64 = img.iter().sum();
+            assert!(ink > 10.0, "digit {d} rendered almost blank (ink={ink})");
+            assert!(ink < (DIM as f64) * 0.6, "digit {d} rendered almost full (ink={ink})");
+        }
+    }
+
+    #[test]
+    fn class_conditional_structure_differs() {
+        // Mean image of 2s must differ substantially from mean image of 3s
+        // (otherwise no margin signal exists).
+        let mut g = SynthDigits::new(3);
+        let mean = |digit: u8, g: &mut SynthDigits| -> Vec<f64> {
+            let mut acc = vec![0.0; DIM];
+            for _ in 0..40 {
+                for (a, v) in acc.iter_mut().zip(g.render(digit)) {
+                    *a += v / 40.0;
+                }
+            }
+            acc
+        };
+        let m2 = mean(2, &mut g);
+        let m3 = mean(3, &mut g);
+        let l1: f64 = m2.iter().zip(&m3).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 > 20.0, "class means nearly identical (l1={l1})");
+    }
+
+    #[test]
+    fn hard_pair_is_harder_than_easy_pair() {
+        // (3,8) mean-image distance should be smaller than (2,3) —
+        // the structural reason Fig 4 needs more features than Fig 3.
+        let mut g = SynthDigits::new(4);
+        let mean = |digit: u8, g: &mut SynthDigits| -> Vec<f64> {
+            let mut acc = vec![0.0; DIM];
+            for _ in 0..60 {
+                for (a, v) in acc.iter_mut().zip(g.render(digit)) {
+                    *a += v / 60.0;
+                }
+            }
+            acc
+        };
+        let m2 = mean(2, &mut g);
+        let m3 = mean(3, &mut g);
+        let m8 = mean(8, &mut g);
+        let d23: f64 = m2.iter().zip(&m3).map(|(a, b)| (a - b) * (a - b)).sum();
+        let d38: f64 = m3.iter().zip(&m8).map(|(a, b)| (a - b) * (a - b)).sum();
+        assert!(d38 < d23, "want (3,8) harder than (2,3): d38={d38:.1} d23={d23:.1}");
+    }
+
+    #[test]
+    fn generate_classes_cycles_only_requested() {
+        let ds = SynthDigits::new(9).generate_classes(11, &[2, 3]);
+        assert_eq!(ds.len(), 11);
+        assert_eq!(ds.classes(), vec![2, 3]);
+        assert_eq!(ds.class_count(2), 6);
+        assert_eq!(ds.class_count(3), 5);
+    }
+}

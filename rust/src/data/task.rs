@@ -1,0 +1,187 @@
+//! Binary 1-vs-1 task extraction.
+//!
+//! The paper's experiments are 1-vs-1 MNIST digit classification: select
+//! the examples of two classes, relabel them ±1, and train a binary
+//! margin-based learner. [`BinaryTask`] owns the filtered data plus the
+//! mapping back to original class labels.
+
+
+use crate::error::{Error, Result};
+
+use super::dataset::{Dataset, Example};
+
+/// A binary classification task extracted from a multiclass dataset.
+#[derive(Debug, Clone)]
+pub struct BinaryTask {
+    /// Original class mapped to +1.
+    pub positive_class: i64,
+    /// Original class mapped to −1.
+    pub negative_class: i64,
+    data: Dataset,
+    labels: Vec<f64>,
+}
+
+impl BinaryTask {
+    /// Extract the examples of `positive` and `negative` from `ds` and
+    /// relabel them +1 / −1 (row order preserved).
+    pub fn one_vs_one(ds: &Dataset, positive: i64, negative: i64) -> Result<Self> {
+        if positive == negative {
+            return Err(Error::Config(format!("1-vs-1 with identical classes {positive}")));
+        }
+        let idx: Vec<usize> = (0..ds.len())
+            .filter(|&i| {
+                let l = ds.get(i).label;
+                l == positive || l == negative
+            })
+            .collect();
+        if idx.is_empty() {
+            return Err(Error::UnknownClass(positive));
+        }
+        let data = ds.subset(&idx);
+        let labels: Vec<f64> =
+            data.labels().iter().map(|&l| if l == positive { 1.0 } else { -1.0 }).collect();
+        if !labels.iter().any(|&y| y > 0.0) {
+            return Err(Error::UnknownClass(positive));
+        }
+        if !labels.iter().any(|&y| y < 0.0) {
+            return Err(Error::UnknownClass(negative));
+        }
+        Ok(Self { positive_class: positive, negative_class: negative, data, labels })
+    }
+
+    /// Build directly from a dataset already labeled ±1.
+    pub fn from_signed(data: Dataset) -> Result<Self> {
+        let labels: Vec<f64> = data
+            .labels()
+            .iter()
+            .map(|&l| match l {
+                1 => Ok(1.0),
+                -1 => Ok(-1.0),
+                other => Err(Error::UnknownClass(other)),
+            })
+            .collect::<Result<_>>()?;
+        Ok(Self { positive_class: 1, negative_class: -1, data, labels })
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Is the task empty?
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Example `i` with its ±1 label.
+    #[inline]
+    pub fn get(&self, i: usize) -> (Example<'_>, f64) {
+        (self.data.get(i), self.labels[i])
+    }
+
+    /// Signed labels (±1), one per example.
+    pub fn signed_labels(&self) -> &[f64] {
+        &self.labels
+    }
+
+    /// Underlying (filtered) dataset.
+    pub fn data(&self) -> &Dataset {
+        &self.data
+    }
+
+    /// Task name like `"2v3"` for reports.
+    pub fn name(&self) -> String {
+        format!("{}v{}", self.positive_class, self.negative_class)
+    }
+
+    /// Split into (train, test). Row order preserved; shuffle upstream.
+    pub fn split(&self, train_fraction: f64) -> (BinaryTask, BinaryTask) {
+        let k = ((self.len() as f64) * train_fraction).round() as usize;
+        let k = k.min(self.len());
+        let idx_tr: Vec<usize> = (0..k).collect();
+        let idx_te: Vec<usize> = (k..self.len()).collect();
+        (self.reindex(&idx_tr), self.reindex(&idx_te))
+    }
+
+    /// Reorder/subset by indices.
+    pub fn reindex(&self, indices: &[usize]) -> BinaryTask {
+        BinaryTask {
+            positive_class: self.positive_class,
+            negative_class: self.negative_class,
+            data: self.data.subset(indices),
+            labels: indices.iter().map(|&i| self.labels[i]).collect(),
+        }
+    }
+
+    /// Fraction of positive examples (class balance diagnostic).
+    pub fn positive_fraction(&self) -> f64 {
+        if self.labels.is_empty() {
+            return 0.0;
+        }
+        self.labels.iter().filter(|&&y| y > 0.0).count() as f64 / self.labels.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn multiclass() -> Dataset {
+        let mut d = Dataset::new(2);
+        for (f, l) in [
+            ([0.0, 0.1], 2),
+            ([1.0, 1.1], 3),
+            ([2.0, 2.1], 5),
+            ([3.0, 3.1], 2),
+            ([4.0, 4.1], 3),
+        ] {
+            d.push(&f, l).unwrap();
+        }
+        d
+    }
+
+    #[test]
+    fn one_vs_one_filters_and_relabels() {
+        let t = BinaryTask::one_vs_one(&multiclass(), 2, 3).unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.signed_labels(), &[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(t.get(0).0.features, &[0.0, 0.1]);
+        assert_eq!(t.name(), "2v3");
+        assert!((t.positive_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_vs_one_rejects_missing_class() {
+        assert!(BinaryTask::one_vs_one(&multiclass(), 2, 9).is_err());
+        assert!(BinaryTask::one_vs_one(&multiclass(), 9, 8).is_err());
+        assert!(BinaryTask::one_vs_one(&multiclass(), 2, 2).is_err());
+    }
+
+    #[test]
+    fn from_signed_validates_labels() {
+        let mut d = Dataset::new(1);
+        d.push(&[0.5], 1).unwrap();
+        d.push(&[0.6], -1).unwrap();
+        let t = BinaryTask::from_signed(d).unwrap();
+        assert_eq!(t.signed_labels(), &[1.0, -1.0]);
+
+        let mut bad = Dataset::new(1);
+        bad.push(&[0.5], 2).unwrap();
+        assert!(BinaryTask::from_signed(bad).is_err());
+    }
+
+    #[test]
+    fn split_and_reindex() {
+        let t = BinaryTask::one_vs_one(&multiclass(), 2, 3).unwrap();
+        let (tr, te) = t.split(0.5);
+        assert_eq!(tr.len(), 2);
+        assert_eq!(te.len(), 2);
+        let r = t.reindex(&[3, 0]);
+        assert_eq!(r.signed_labels(), &[-1.0, 1.0]);
+    }
+}

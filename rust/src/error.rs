@@ -1,0 +1,99 @@
+//! Crate-wide error type.
+//!
+//! Every fallible public API in the crate returns [`Result`]. The variants
+//! are deliberately coarse: callers almost always either surface the error
+//! to the CLI or convert it into a metric; fine-grained matching is only
+//! needed for the runtime (artifact-missing) and data (format) paths.
+
+use std::path::PathBuf;
+
+/// Crate result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Unified error for the attentive crate.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// An I/O failure, annotated with the path involved when known.
+    #[error("io error on {path:?}: {source}")]
+    Io {
+        /// Offending path (best effort).
+        path: PathBuf,
+        /// Underlying error.
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// A dataset or artifact file had an invalid format.
+    #[error("format error in {what}: {detail}")]
+    Format {
+        /// What was being parsed (e.g. "idx header", "libsvm line 17").
+        what: String,
+        /// Human-readable detail.
+        detail: String,
+    },
+
+    /// The requested AOT artifact is missing; run `make artifacts`.
+    #[error("missing AOT artifact {0:?}; run `make artifacts` first")]
+    MissingArtifact(PathBuf),
+
+    /// An error bubbled up from the XLA/PJRT runtime.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Invalid configuration or arguments.
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// Dimension mismatch between model and data.
+    #[error("dimension mismatch: expected {expected}, got {got} ({context})")]
+    DimMismatch {
+        /// Expected dimensionality.
+        expected: usize,
+        /// Observed dimensionality.
+        got: usize,
+        /// Where the mismatch happened.
+        context: String,
+    },
+
+    /// A label or class was requested that the dataset does not contain.
+    #[error("unknown class {0}")]
+    UnknownClass(i64),
+}
+
+impl Error {
+    /// Helper: wrap an `std::io::Error` with its path.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Helper: format error.
+    pub fn format(what: impl Into<String>, detail: impl Into<String>) -> Self {
+        Error::Format { what: what.into(), detail: detail.into() }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_mentions_artifact_path() {
+        let e = Error::MissingArtifact(PathBuf::from("artifacts/margin.hlo.txt"));
+        let s = e.to_string();
+        assert!(s.contains("artifacts/margin.hlo.txt"));
+        assert!(s.contains("make artifacts"));
+    }
+
+    #[test]
+    fn dim_mismatch_reports_both_sides() {
+        let e = Error::DimMismatch { expected: 784, got: 64, context: "margin".into() };
+        let s = e.to_string();
+        assert!(s.contains("784") && s.contains("64"));
+    }
+}

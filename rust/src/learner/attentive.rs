@@ -1,0 +1,45 @@
+//! Attentive Pegasos — the paper's Algorithm 1.
+//!
+//! A thin, documented facade over [`BoundedPegasos`] with the Constant
+//! STST boundary: the learner that "computes in the order of O(√n)
+//! features" per example while matching full Pegasos's generalization.
+//! Provided as its own module so the public API mirrors the paper's
+//! naming; [`AttentiveAnyPegasos`] is the runtime-dispatched variant the
+//! CLI uses.
+
+use crate::learner::pegasos::{BoundedPegasos, PegasosConfig};
+use crate::stst::boundary::{AnyBoundary, ConstantBoundary, CurvedBoundary};
+
+/// Attentive Pegasos: Pegasos + Constant STST (Algorithm 1).
+pub type AttentivePegasos = BoundedPegasos<ConstantBoundary>;
+
+/// Pegasos under the conservative Curved STST (prior-work boundary).
+pub type CurvedPegasos = BoundedPegasos<CurvedBoundary>;
+
+/// Pegasos with a boundary chosen at runtime (CLI / config files).
+pub type AttentiveAnyPegasos = BoundedPegasos<AnyBoundary>;
+
+/// Convenience constructor matching the paper's parameterization:
+/// dimensionality, λ, and decision-error rate δ.
+pub fn attentive_pegasos(dim: usize, lambda: f64, delta: f64) -> AttentivePegasos {
+    BoundedPegasos::new(
+        dim,
+        PegasosConfig { lambda, ..Default::default() },
+        ConstantBoundary::new(delta),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::OnlineLearner;
+
+    #[test]
+    fn constructor_wires_delta_and_lambda() {
+        let l = attentive_pegasos(784, 1e-4, 0.1);
+        assert_eq!(l.dim(), 784);
+        assert!((l.boundary().delta - 0.1).abs() < 1e-12);
+        assert!((l.config().lambda - 1e-4).abs() < 1e-18);
+        assert!(l.name().starts_with("pegasos[constant-stst"));
+    }
+}

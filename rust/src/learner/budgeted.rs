@@ -1,0 +1,68 @@
+//! Budgeted Pegasos — the fixed-feature-budget baseline (green curves).
+//!
+//! The paper's comparison protocol (§4.1): first run Attentive Pegasos,
+//! measure its average feature count, then give Budgeted Pegasos exactly
+//! that many features for *every* example ("the budgeted learning
+//! approach would evaluate the same number of features for both
+//! examples", Figure 1). Note sorting is excluded for the budgeted
+//! baseline — "sorting under the Budgeted Pegasos is impossible since we
+//! need to learn the weights in order to sort them."
+
+use crate::learner::pegasos::{BoundedPegasos, PegasosConfig};
+use crate::margin::policy::CoordinatePolicy;
+use crate::stst::boundary::BudgetedBoundary;
+
+/// Budgeted Pegasos: Pegasos + fixed per-example feature budget.
+pub type BudgetedPegasos = BoundedPegasos<BudgetedBoundary>;
+
+/// Build a budgeted learner with budget `k`. Panics if a weight-sorted
+/// policy is requested — that pairing is impossible per the paper.
+pub fn budgeted_pegasos(
+    dim: usize,
+    lambda: f64,
+    k: usize,
+    policy: CoordinatePolicy,
+    seed: u64,
+) -> BudgetedPegasos {
+    assert!(
+        policy != CoordinatePolicy::SortedByWeight,
+        "budgeted + sorted is impossible (paper §4.1): sorting needs learned weights"
+    );
+    BoundedPegasos::new(
+        dim,
+        PegasosConfig { lambda, policy, seed, ..Default::default() },
+        BudgetedBoundary::new(k),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::OnlineLearner;
+
+    #[test]
+    fn budget_is_respected_every_example() {
+        let dim = 100;
+        let mut l = budgeted_pegasos(dim, 0.01, 9, CoordinatePolicy::Permuted, 3);
+        for i in 0..50 {
+            let y = if i % 2 == 0 { 1.0 } else { -1.0 };
+            let x: Vec<f64> = (0..dim).map(|j| ((i + j) % 5) as f64 / 5.0 * y).collect();
+            let info = l.process(&x, y);
+            assert_eq!(info.evaluated, 9, "budgeted must spend exactly k features");
+            assert!(!info.early_stopped);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "impossible")]
+    fn sorted_policy_rejected() {
+        budgeted_pegasos(10, 0.01, 5, CoordinatePolicy::SortedByWeight, 0);
+    }
+
+    #[test]
+    fn budget_larger_than_dim_truncates() {
+        let mut l = budgeted_pegasos(4, 0.01, 100, CoordinatePolicy::Sequential, 0);
+        let info = l.process(&[1.0, 1.0, 1.0, 1.0], 1.0);
+        assert_eq!(info.evaluated, 4);
+    }
+}

@@ -1,0 +1,94 @@
+//! Margin-based online learners with stochastic focus of attention.
+//!
+//! The paper's Algorithm 1 (Attentive Pegasos) and the surrounding cast:
+//!
+//! * [`pegasos`] — the generic boundary-parameterized Pegasos core
+//!   ([`pegasos::BoundedPegasos`]); with the trivial boundary it *is*
+//!   vanilla Pegasos (Shalev-Shwartz et al. 2010).
+//! * [`attentive`] — Attentive Pegasos: the Constant STST boundary.
+//! * [`budgeted`] — Budgeted Pegasos: fixed-k baseline (green curves).
+//! * [`perceptron`] / [`passive_aggressive`] — the same attentive
+//!   treatment applied to Rosenblatt's perceptron and PA-I, backing the
+//!   paper's claim that the stopping rule "applies to the majority of
+//!   margin based learning algorithms".
+//! * [`var_cache`] — incremental maintenance of `var(S_n)` so the
+//!   boundary costs O(1) per coordinate.
+//! * [`predictor`] — early-stopped *prediction* (the paper's right
+//!   subfigures): two-sided STST on the sign of the margin.
+//! * [`multiclass`] — all-pairs 1-vs-1 ensemble of attentive voters
+//!   (the natural MNIST deployment; extension beyond the paper's
+//!   single-pair experiments).
+
+pub mod attentive;
+pub mod budgeted;
+pub mod multiclass;
+pub mod passive_aggressive;
+pub mod pegasos;
+pub mod perceptron;
+pub mod predictor;
+pub mod var_cache;
+
+use crate::margin::walker::WalkOutcome;
+
+/// What one online step did — the trainer's bookkeeping currency.
+#[derive(Debug, Clone, Copy)]
+pub struct StepInfo {
+    /// Feature evaluations spent on this example.
+    pub evaluated: usize,
+    /// Did the model update?
+    pub updated: bool,
+    /// Was the example skipped via the stopping boundary?
+    pub early_stopped: bool,
+    /// Signed margin `y·⟨w,x⟩` at decision time (partial if stopped).
+    pub margin: f64,
+    /// Was the (partial) prediction a mistake (`y·margin ≤ 0`)?
+    pub mistake: bool,
+    /// Raw walk outcome.
+    pub outcome: WalkOutcome,
+}
+
+/// A margin-based online learner consuming a stream of (x, y∈{±1}).
+pub trait OnlineLearner: Send {
+    /// Feature dimensionality.
+    fn dim(&self) -> usize;
+
+    /// Current weight vector.
+    fn weights(&self) -> &[f64];
+
+    /// Consume one example: sequentially evaluate its margin under the
+    /// learner's boundary and update the model if warranted.
+    fn process(&mut self, x: &[f64], y: f64) -> StepInfo;
+
+    /// Full (dense) margin `⟨w, x⟩` — used for test-set evaluation and
+    /// decision-error audits.
+    fn full_margin(&self, x: &[f64]) -> f64 {
+        crate::margin::dot(self.weights(), x)
+    }
+
+    /// Predict with the learner's own early-stopping rule; returns
+    /// `(score, features_evaluated)`. Default: full computation.
+    fn predict_early(&mut self, x: &[f64]) -> (f64, usize) {
+        (self.full_margin(x), self.dim())
+    }
+
+    /// Human-readable identity (algorithm + boundary), for reports.
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learner::pegasos::{BoundedPegasos, PegasosConfig};
+    use crate::stst::boundary::TrivialBoundary;
+
+    #[test]
+    fn default_predict_early_is_full() {
+        let mut l = BoundedPegasos::new(4, PegasosConfig::default(), TrivialBoundary);
+        // Force some weights via an update.
+        l.process(&[1.0, 0.0, 0.0, 0.0], 1.0);
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let (score, k) = l.predict_early(&x);
+        assert_eq!(k, 4);
+        assert!((score - l.full_margin(&x)).abs() < 1e-12);
+    }
+}

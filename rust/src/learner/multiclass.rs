@@ -1,0 +1,198 @@
+//! All-pairs (1-vs-1) multiclass ensemble of attentive binary learners.
+//!
+//! The paper evaluates single 1-vs-1 MNIST pairs; the natural deployment
+//! is the classic all-pairs reduction: one binary learner per unordered
+//! class pair, majority vote at prediction. The attention mechanism
+//! compounds: each of the `C(C-1)/2` voters early-exits independently,
+//! so an easy example costs a few dozen features *per voter* instead of
+//! `n`, and the ensemble's feature budget stays sub-linear in both the
+//! number of classes touched and the dimensionality.
+
+use crate::data::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::learner::pegasos::{BoundedPegasos, PegasosConfig};
+use crate::learner::OnlineLearner;
+use crate::stst::boundary::AnyBoundary;
+
+/// One-vs-one multiclass ensemble over attentive Pegasos voters.
+pub struct OneVsOneEnsemble {
+    classes: Vec<i64>,
+    /// Voter for each pair `(classes[a], classes[b])`, a < b; +1 margin
+    /// votes for `classes[a]`.
+    voters: Vec<((i64, i64), BoundedPegasos<AnyBoundary>)>,
+}
+
+impl OneVsOneEnsemble {
+    /// Build voters for every unordered pair of `classes`.
+    pub fn new(
+        dim: usize,
+        classes: &[i64],
+        cfg: PegasosConfig,
+        boundary: AnyBoundary,
+    ) -> Result<Self> {
+        if classes.len() < 2 {
+            return Err(Error::Config("multiclass needs >= 2 classes".into()));
+        }
+        let mut sorted = classes.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        let mut voters = Vec::new();
+        for a in 0..sorted.len() {
+            for b in a + 1..sorted.len() {
+                let seed = cfg.seed
+                    ^ (a as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (b as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+                let vcfg = PegasosConfig { seed, ..cfg };
+                voters.push((
+                    (sorted[a], sorted[b]),
+                    BoundedPegasos::new(dim, vcfg, boundary.clone()),
+                ));
+            }
+        }
+        Ok(Self { classes: sorted, voters })
+    }
+
+    /// Classes the ensemble distinguishes.
+    pub fn classes(&self) -> &[i64] {
+        &self.classes
+    }
+
+    /// Number of binary voters (`C(C-1)/2`).
+    pub fn voter_count(&self) -> usize {
+        self.voters.len()
+    }
+
+    /// One online pass over a multiclass dataset in the given row order.
+    /// Each example trains only the `C-1` voters whose pair contains its
+    /// label. Returns total feature evaluations spent.
+    pub fn train_pass(&mut self, ds: &Dataset, order: &[usize]) -> u64 {
+        let mut features = 0u64;
+        for &i in order {
+            let ex = ds.get(i);
+            for ((pos, neg), learner) in self.voters.iter_mut() {
+                let y = if ex.label == *pos {
+                    1.0
+                } else if ex.label == *neg {
+                    -1.0
+                } else {
+                    continue;
+                };
+                features += learner.process(ex.features, y).evaluated as u64;
+            }
+        }
+        features
+    }
+
+    /// Predict with early-stopped voters; returns `(class, features)`.
+    /// Ties break toward the smaller class label (deterministic).
+    pub fn predict(&mut self, x: &[f64]) -> (i64, usize) {
+        let mut votes: Vec<(i64, u32)> = self.classes.iter().map(|&c| (c, 0)).collect();
+        let mut features = 0usize;
+        for ((pos, neg), learner) in self.voters.iter_mut() {
+            let (score, k) = learner.predict_early(x);
+            features += k;
+            let winner = if score >= 0.0 { *pos } else { *neg };
+            if let Some(v) = votes.iter_mut().find(|(c, _)| *c == winner) {
+                v.1 += 1;
+            }
+        }
+        let best = votes.iter().max_by_key(|(c, v)| (*v, -*c)).map(|(c, _)| *c).unwrap();
+        (best, features)
+    }
+
+    /// Accuracy + mean features per prediction over a dataset.
+    pub fn evaluate(&mut self, ds: &Dataset) -> (f64, f64) {
+        if ds.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut correct = 0usize;
+        let mut features = 0usize;
+        for ex in ds.iter() {
+            let (pred, k) = {
+                let e = ex;
+                self.predict(e.features)
+            };
+            features += k;
+            if pred == ex.label {
+                correct += 1;
+            }
+        }
+        (correct as f64 / ds.len() as f64, features as f64 / ds.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::stream::ShuffledIndices;
+    use crate::data::synth::SynthDigits;
+
+    fn cfg() -> PegasosConfig {
+        PegasosConfig { lambda: 1e-2, ..Default::default() }
+    }
+
+    #[test]
+    fn pair_enumeration() {
+        let e = OneVsOneEnsemble::new(
+            4,
+            &[3, 1, 2, 1],
+            cfg(),
+            AnyBoundary::Full,
+        )
+        .unwrap();
+        assert_eq!(e.classes(), &[1, 2, 3]);
+        assert_eq!(e.voter_count(), 3);
+        assert!(OneVsOneEnsemble::new(4, &[1], cfg(), AnyBoundary::Full).is_err());
+    }
+
+    #[test]
+    fn three_class_digits_learned_with_attention() {
+        let classes = [1i64, 2, 3];
+        let ds = SynthDigits::new(31).generate_classes(2_400, &[1, 2, 3]);
+        let (train, test) = ds.split(0.8);
+        let mut ens = OneVsOneEnsemble::new(
+            train.dim(),
+            &classes,
+            cfg(),
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        )
+        .unwrap();
+        let order = ShuffledIndices::new(train.len(), 0).epoch(0);
+        let spent = ens.train_pass(&train, &order);
+        // Attention: per (example, voter) cost must be well under dim.
+        let per_voter = spent as f64 / (train.len() as f64 * 2.0); // 2 voters/example
+        assert!(per_voter < 784.0 * 0.7, "per-voter features {per_voter:.0}");
+        let (acc, feats) = ens.evaluate(&test);
+        assert!(acc > 0.85, "3-class accuracy {acc}");
+        assert!(
+            feats < 3.0 * 784.0 * 0.8,
+            "ensemble prediction features {feats:.0} should early-exit"
+        );
+    }
+
+    #[test]
+    fn full_ensemble_matches_or_beats_attentive_cost() {
+        let classes = [2i64, 3];
+        let ds = SynthDigits::new(32).generate_classes(800, &[2, 3]);
+        let (train, test) = ds.split(0.8);
+        let order = ShuffledIndices::new(train.len(), 1).epoch(0);
+
+        let mut full =
+            OneVsOneEnsemble::new(train.dim(), &classes, cfg(), AnyBoundary::Full).unwrap();
+        let f_spent = full.train_pass(&train, &order);
+        let (f_acc, _) = full.evaluate(&test);
+
+        let mut att = OneVsOneEnsemble::new(
+            train.dim(),
+            &classes,
+            cfg(),
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        )
+        .unwrap();
+        let a_spent = att.train_pass(&train, &order);
+        let (a_acc, _) = att.evaluate(&test);
+
+        assert!(a_spent < f_spent, "attentive ensemble must spend less: {a_spent} vs {f_spent}");
+        assert!(a_acc >= f_acc - 0.1, "attentive acc {a_acc} vs full {f_acc}");
+    }
+}

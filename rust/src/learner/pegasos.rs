@@ -1,0 +1,369 @@
+//! Pegasos with a pluggable stopping boundary — the paper's Algorithm 1
+//! in its general form.
+//!
+//! [`BoundedPegasos<B>`] runs the Pegasos SGD/projection scheme
+//! (Shalev-Shwartz, Singer, Srebro, Cotter 2010) but evaluates each
+//! example's margin *sequentially* under boundary `B`:
+//!
+//! * `B = TrivialBoundary` → vanilla **Pegasos** (full computation, the
+//!   red curves of Figures 3–4);
+//! * `B = ConstantBoundary` → **Attentive Pegasos** (blue curves);
+//! * `B = BudgetedBoundary` → **Budgeted Pegasos** (green curves).
+//!
+//! One online step (Algorithm 1):
+//!
+//! ```text
+//! if ∃ i ≤ n :  y·Σ_{j≤i} w_j x_j ≥ θ + τ(δ, var̂(S_n))   →  skip
+//!     (update var̂_y(x_j) for the evaluated prefix)
+//! else (full margin y·⟨w,x⟩ known):
+//!     if y·⟨w,x⟩ < θ:   μ ← 1/(λt);  w ← (1−μλ)w + μ y x;
+//!                        w ← min(1, (1/√λ)/‖w‖)·w          (projection)
+//! ```
+
+
+use crate::margin::policy::{CoordinatePolicy, OrderGenerator};
+use crate::margin::walker::{WalkOutcome, Walker};
+use crate::stst::boundary::Boundary;
+
+use super::predictor::EarlyStopPredictor;
+use super::var_cache::VarCache;
+use super::{OnlineLearner, StepInfo};
+
+/// Hyper-parameters shared by all Pegasos variants.
+#[derive(Debug, Clone, Copy)]
+pub struct PegasosConfig {
+    /// Regularization λ (> 0). Learning rate is `1/(λ t)`.
+    pub lambda: f64,
+    /// Margin decision threshold θ (1.0 = the hinge; the paper's
+    /// "importance threshold").
+    pub theta: f64,
+    /// Apply the `‖w‖ ≤ 1/√λ` projection after each update.
+    pub project: bool,
+    /// Coordinate visit order.
+    pub policy: CoordinatePolicy,
+    /// Seed for the policy's RNG stream.
+    pub seed: u64,
+    /// Update the variance table on fully-evaluated examples too
+    /// (Algorithm 1 as printed only updates it on skipped ones; `true`
+    /// uses all evaluated coordinates — strictly more information,
+    /// flag kept for the fidelity ablation).
+    pub observe_on_full: bool,
+}
+
+impl Default for PegasosConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 1e-4,
+            theta: 1.0,
+            project: true,
+            policy: CoordinatePolicy::WeightSampled,
+            seed: 0,
+            observe_on_full: true,
+        }
+    }
+}
+
+/// Pegasos with sequential margin evaluation under boundary `B`.
+#[derive(Debug, Clone)]
+pub struct BoundedPegasos<B: Boundary> {
+    cfg: PegasosConfig,
+    boundary: B,
+    w: Vec<f64>,
+    /// Update counter t (Pegasos learning-rate schedule).
+    t: u64,
+    vars: VarCache,
+    orders: OrderGenerator,
+    walker: Walker,
+    /// ‖w‖² tracked incrementally for the O(1) projection decision.
+    norm_sq: f64,
+    orders_dirty: bool,
+    /// scratch: coordinates visited by the last walk (variance update).
+    visited: Vec<usize>,
+}
+
+impl<B: Boundary> BoundedPegasos<B> {
+    /// Fresh learner at `w = 0` (norm 0 ≤ 1/√λ, satisfying Pegasos's
+    /// initialization constraint).
+    pub fn new(dim: usize, cfg: PegasosConfig, boundary: B) -> Self {
+        assert!(cfg.lambda > 0.0, "lambda must be positive");
+        Self {
+            cfg,
+            boundary,
+            w: vec![0.0; dim],
+            t: 0,
+            vars: VarCache::new(dim),
+            orders: OrderGenerator::new(cfg.policy, cfg.seed),
+            walker: Walker::new(),
+            norm_sq: 0.0,
+            orders_dirty: true,
+            visited: Vec::with_capacity(dim),
+        }
+    }
+
+    /// The boundary driving the attention mechanism.
+    pub fn boundary(&self) -> &B {
+        &self.boundary
+    }
+
+    /// Hyper-parameters.
+    pub fn config(&self) -> &PegasosConfig {
+        &self.cfg
+    }
+
+    /// Number of updates performed so far.
+    pub fn updates(&self) -> u64 {
+        self.t
+    }
+
+    /// Variance table (exposed for the early-stop predictor and tests).
+    pub fn var_cache_mut(&mut self) -> &mut VarCache {
+        &mut self.vars
+    }
+
+    /// Perform the Pegasos gradient + projection step for a violating
+    /// example. O(n) — allowed, updates only happen on violations.
+    fn update(&mut self, x: &[f64], y: f64) {
+        self.t += 1;
+        let mu = 1.0 / (self.cfg.lambda * self.t as f64);
+        let decay = 1.0 - mu * self.cfg.lambda; // = 1 - 1/t
+        let mut norm_sq = 0.0;
+        for (wj, &xj) in self.w.iter_mut().zip(x) {
+            *wj = decay * *wj + mu * y * xj;
+            norm_sq += *wj * *wj;
+        }
+        self.norm_sq = norm_sq;
+        if self.cfg.project {
+            let limit = 1.0 / self.cfg.lambda.sqrt();
+            let norm = self.norm_sq.sqrt();
+            if norm > limit {
+                let c = limit / norm;
+                for wj in self.w.iter_mut() {
+                    *wj *= c;
+                }
+                self.norm_sq *= c * c;
+            }
+        }
+        self.vars.invalidate();
+        self.orders_dirty = true;
+    }
+}
+
+impl<B: Boundary> OnlineLearner for BoundedPegasos<B> {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn process(&mut self, x: &[f64], y: f64) -> StepInfo {
+        debug_assert_eq!(x.len(), self.w.len());
+        if self.orders_dirty {
+            self.orders.refresh(&self.w);
+            self.orders_dirty = false;
+        }
+        let var_sn = self.vars.var_sn(y, &self.w);
+        // Lazy draws: an early stop after k coordinates costs O(k), not
+        // the O(n) a materialized order would (EXPERIMENTS.md §Perf).
+        let mut visited = std::mem::take(&mut self.visited);
+        let res = self.walker.walk_lazy(
+            &self.w,
+            x,
+            y,
+            &mut self.orders,
+            self.cfg.theta,
+            var_sn,
+            &self.boundary,
+            &mut visited,
+        );
+
+        let mistake = res.partial_margin <= 0.0;
+        let info = match res.outcome {
+            WalkOutcome::EarlyStopped => {
+                // Algorithm 1: update variance over the evaluated prefix,
+                // keep weights, jump to next example.
+                self.vars.observe_prefix(y, &visited, x, res.evaluated, &self.w);
+                StepInfo {
+                    evaluated: res.evaluated,
+                    updated: false,
+                    early_stopped: true,
+                    margin: res.partial_margin,
+                    mistake: false, // skipped examples are confidently correct
+                    outcome: res.outcome,
+                }
+            }
+            WalkOutcome::BudgetExhausted | WalkOutcome::Completed => {
+                // Variance only feeds the STST level; evidence-free
+                // boundaries (full/budgeted) never consult it — vanilla
+                // Pegasos tracks no per-feature statistics (paper Alg. 1).
+                if self.cfg.observe_on_full && self.boundary.is_evidence_based() {
+                    self.vars.observe_prefix(y, &visited, x, res.evaluated, &self.w);
+                }
+                let updated = res.partial_margin < self.cfg.theta;
+                if updated {
+                    self.update(x, y);
+                }
+                StepInfo {
+                    evaluated: res.evaluated,
+                    updated,
+                    early_stopped: false,
+                    margin: res.partial_margin,
+                    mistake,
+                    outcome: res.outcome,
+                }
+            }
+        };
+        self.visited = visited;
+        info
+    }
+
+    fn predict_early(&mut self, x: &[f64]) -> (f64, usize) {
+        use crate::stst::boundary::StopContext;
+        let probe =
+            StopContext { evaluated: 0, total: self.w.len(), theta: 0.0, var_sn: 0.0 };
+        if !self.boundary.is_evidence_based() && self.boundary.budget(&probe).is_none() {
+            // Trivial boundary: the exact dense margin (with-replacement
+            // orders would otherwise give a sampled estimate).
+            return (crate::margin::dot(&self.w, x), self.w.len());
+        }
+        if self.orders_dirty {
+            self.orders.refresh(&self.w);
+            self.orders_dirty = false;
+        }
+        let var_pos = self.vars.var_sn(1.0, &self.w);
+        let var_neg = self.vars.var_sn(-1.0, &self.w);
+        let predictor = EarlyStopPredictor::new(&self.boundary);
+        predictor.predict_lazy(&self.w, x, &mut self.orders, var_pos.max(var_neg))
+    }
+
+    fn name(&self) -> String {
+        format!("pegasos[{}/{}]", self.boundary.name(), self.cfg.policy.name())
+    }
+}
+
+/// Vanilla full-computation Pegasos (trivial boundary).
+pub type Pegasos = BoundedPegasos<crate::stst::boundary::TrivialBoundary>;
+
+impl Pegasos {
+    /// Vanilla Pegasos evaluating every feature of every example.
+    pub fn full(dim: usize, cfg: PegasosConfig) -> Self {
+        BoundedPegasos::new(dim, cfg, crate::stst::boundary::TrivialBoundary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stst::boundary::{ConstantBoundary, TrivialBoundary};
+
+    fn separable_stream(n: usize, dim: usize) -> Vec<(Vec<f64>, f64)> {
+        // y = sign of mean of first half minus second half; strongly
+        // separable with margin.
+        (0..n)
+            .map(|i| {
+                let y = if i % 2 == 0 { 1.0 } else { -1.0 };
+                let x: Vec<f64> = (0..dim)
+                    .map(|j| {
+                        let base = if j < dim / 2 { y } else { -y };
+                        base * (0.8 + 0.2 * ((i * 31 + j * 7) % 10) as f64 / 10.0)
+                    })
+                    .collect();
+                (x, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pegasos_learns_separable_data() {
+        let dim = 20;
+        let mut l = Pegasos::full(dim, PegasosConfig { lambda: 0.01, ..Default::default() });
+        for (x, y) in separable_stream(500, dim) {
+            l.process(&x, y);
+        }
+        // All examples classified correctly at the end.
+        let mut errs = 0;
+        for (x, y) in separable_stream(100, dim) {
+            if y * l.full_margin(&x) <= 0.0 {
+                errs += 1;
+            }
+        }
+        assert_eq!(errs, 0, "vanilla Pegasos failed separable data");
+        assert!(l.updates() > 0);
+    }
+
+    #[test]
+    fn projection_keeps_norm_bounded() {
+        let dim = 10;
+        let lambda = 0.01;
+        let mut l = Pegasos::full(dim, PegasosConfig { lambda, ..Default::default() });
+        for (x, y) in separable_stream(300, dim) {
+            l.process(&x, y);
+            let norm = l.weights().iter().map(|w| w * w).sum::<f64>().sqrt();
+            assert!(norm <= 1.0 / lambda.sqrt() + 1e-9, "norm {norm} exceeds Pegasos ball");
+        }
+    }
+
+    #[test]
+    fn attentive_spends_fewer_features_same_accuracy() {
+        let dim = 64;
+        let stream = separable_stream(1200, dim);
+        let cfg = PegasosConfig { lambda: 0.01, policy: CoordinatePolicy::Sequential, ..Default::default() };
+        let mut full = BoundedPegasos::new(dim, cfg, TrivialBoundary);
+        let mut att = BoundedPegasos::new(dim, cfg, ConstantBoundary::new(0.1));
+        let (mut f_feats, mut a_feats) = (0usize, 0usize);
+        for (x, y) in &stream {
+            f_feats += full.process(x, *y).evaluated;
+            a_feats += att.process(x, *y).evaluated;
+        }
+        assert!(
+            (a_feats as f64) < 0.5 * f_feats as f64,
+            "attentive {a_feats} vs full {f_feats}: expected >2x savings"
+        );
+        // Comparable final accuracy.
+        let test = separable_stream(200, dim);
+        let err = |l: &BoundedPegasos<_>| {
+            test.iter().filter(|(x, y)| y * l.full_margin(x) <= 0.0).count()
+        };
+        let fe = test.iter().filter(|(x, y)| *y * full.full_margin(x) <= 0.0).count();
+        let ae = err(&att);
+        assert!(ae <= fe + 10, "attentive err {ae} vs full err {fe}");
+    }
+
+    #[test]
+    fn early_stopped_examples_do_not_update() {
+        let dim = 16;
+        let cfg = PegasosConfig { lambda: 0.01, policy: CoordinatePolicy::Sequential, ..Default::default() };
+        let mut att = BoundedPegasos::new(dim, cfg, ConstantBoundary::new(0.2));
+        let mut saw_early_stop = false;
+        for (x, y) in separable_stream(800, dim) {
+            let before = att.updates();
+            let info = att.process(&x, y);
+            if info.early_stopped {
+                saw_early_stop = true;
+                assert_eq!(att.updates(), before, "early stop must not update");
+                assert!(!info.updated);
+            }
+        }
+        assert!(saw_early_stop, "attentive learner never early-stopped on easy data");
+    }
+
+    #[test]
+    fn update_counter_and_learning_rate_schedule() {
+        let dim = 4;
+        let mut l = Pegasos::full(dim, PegasosConfig { lambda: 0.5, project: false, ..Default::default() });
+        // First update: mu = 1/(lambda*1) = 2, decay = 1 - 1 = 0 -> w = mu*y*x
+        let x = [1.0, 2.0, 0.0, 0.0];
+        let info = l.process(&x, 1.0);
+        assert!(info.updated);
+        assert!((l.weights()[0] - 2.0).abs() < 1e-12);
+        assert!((l.weights()[1] - 4.0).abs() < 1e-12);
+        assert_eq!(l.updates(), 1);
+    }
+
+    #[test]
+    fn name_includes_boundary_and_policy() {
+        let l = BoundedPegasos::new(4, PegasosConfig::default(), ConstantBoundary::new(0.1));
+        assert_eq!(l.name(), "pegasos[constant-stst/weight-sampled]");
+    }
+}

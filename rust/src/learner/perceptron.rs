@@ -1,0 +1,186 @@
+//! (Attentive) Perceptron — the stopping rule beyond Pegasos.
+//!
+//! The paper argues the STST "applies to the majority of margin based
+//! learning algorithms" and lists Rosenblatt's perceptron as the
+//! canonical passive filter (`update iff y·⟨w,x⟩ ≤ 0`). Here the margin
+//! threshold is θ = 0, which is exactly Theorem 1's simplified boundary
+//! `τ = sqrt(var(S_n))·sqrt(log(1/√δ))`. One update: `w ← w + y x`.
+
+use crate::margin::policy::OrderGenerator;
+use crate::margin::walker::{WalkOutcome, Walker};
+use crate::stst::boundary::Boundary;
+
+use super::pegasos::PegasosConfig;
+use super::var_cache::VarCache;
+use super::{OnlineLearner, StepInfo};
+
+/// Perceptron with sequential margin evaluation under boundary `B`.
+/// Reuses [`PegasosConfig`] for policy/seed plumbing; `lambda` and
+/// `project` are ignored, θ is forced to 0 (the perceptron's filter).
+#[derive(Debug, Clone)]
+pub struct BoundedPerceptron<B: Boundary> {
+    cfg: PegasosConfig,
+    boundary: B,
+    w: Vec<f64>,
+    updates: u64,
+    vars: VarCache,
+    orders: OrderGenerator,
+    walker: Walker,
+    orders_dirty: bool,
+    visited: Vec<usize>,
+}
+
+impl<B: Boundary> BoundedPerceptron<B> {
+    /// Fresh perceptron at `w = 0`.
+    pub fn new(dim: usize, cfg: PegasosConfig, boundary: B) -> Self {
+        let cfg = PegasosConfig { theta: 0.0, ..cfg };
+        Self {
+            cfg,
+            boundary,
+            w: vec![0.0; dim],
+            updates: 0,
+            vars: VarCache::new(dim),
+            orders: OrderGenerator::new(cfg.policy, cfg.seed),
+            walker: Walker::new(),
+            orders_dirty: true,
+            visited: Vec::with_capacity(dim),
+        }
+    }
+
+    /// Updates performed (perceptron mistakes).
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+}
+
+impl<B: Boundary> OnlineLearner for BoundedPerceptron<B> {
+    fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    fn weights(&self) -> &[f64] {
+        &self.w
+    }
+
+    fn process(&mut self, x: &[f64], y: f64) -> StepInfo {
+        if self.orders_dirty {
+            self.orders.refresh(&self.w);
+            self.orders_dirty = false;
+        }
+        let var_sn = self.vars.var_sn(y, &self.w);
+        let mut visited = std::mem::take(&mut self.visited);
+        let res = self.walker.walk_lazy(
+            &self.w,
+            x,
+            y,
+            &mut self.orders,
+            0.0,
+            var_sn,
+            &self.boundary,
+            &mut visited,
+        );
+
+        let info = match res.outcome {
+            WalkOutcome::EarlyStopped => {
+                self.vars.observe_prefix(y, &visited, x, res.evaluated, &self.w);
+                StepInfo {
+                    evaluated: res.evaluated,
+                    updated: false,
+                    early_stopped: true,
+                    margin: res.partial_margin,
+                    mistake: false,
+                    outcome: res.outcome,
+                }
+            }
+            _ => {
+                if self.boundary.is_evidence_based() {
+                    self.vars.observe_prefix(y, &visited, x, res.evaluated, &self.w);
+                }
+                let mistake = res.partial_margin <= 0.0;
+                if mistake {
+                    // w += y x (touches all coordinates; invalidate caches)
+                    for (wj, &xj) in self.w.iter_mut().zip(x) {
+                        *wj += y * xj;
+                    }
+                    self.updates += 1;
+                    self.vars.invalidate();
+                    self.orders_dirty = true;
+                }
+                StepInfo {
+                    evaluated: res.evaluated,
+                    updated: mistake,
+                    early_stopped: false,
+                    margin: res.partial_margin,
+                    mistake,
+                    outcome: res.outcome,
+                }
+            }
+        };
+        self.visited = visited;
+        info
+    }
+
+    fn name(&self) -> String {
+        format!("perceptron[{}/{}]", self.boundary.name(), self.cfg.policy.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::{ConstantBoundary, TrivialBoundary};
+
+    fn stream(n: usize, dim: usize) -> Vec<(Vec<f64>, f64)> {
+        (0..n)
+            .map(|i| {
+                let y = if i % 2 == 0 { 1.0 } else { -1.0 };
+                let x: Vec<f64> =
+                    (0..dim).map(|j| if j < dim / 2 { y * 0.9 } else { -y * 0.7 }).collect();
+                (x, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn perceptron_converges_on_separable() {
+        let dim = 10;
+        let mut p = BoundedPerceptron::new(
+            dim,
+            PegasosConfig { policy: CoordinatePolicy::Sequential, ..Default::default() },
+            TrivialBoundary,
+        );
+        for (x, y) in stream(200, dim) {
+            p.process(&x, y);
+        }
+        for (x, y) in stream(50, dim) {
+            assert!(y * p.full_margin(&x) > 0.0);
+        }
+        // Perceptron mistake bound: finite updates on separable data.
+        assert!(p.updates() < 20);
+    }
+
+    #[test]
+    fn attentive_perceptron_saves_features() {
+        let dim = 64;
+        let cfg = PegasosConfig { policy: CoordinatePolicy::Sequential, ..Default::default() };
+        let mut full = BoundedPerceptron::new(dim, cfg, TrivialBoundary);
+        let mut att = BoundedPerceptron::new(dim, cfg, ConstantBoundary::new(0.1));
+        let (mut ff, mut af) = (0usize, 0usize);
+        for (x, y) in stream(600, dim) {
+            ff += full.process(&x, y).evaluated;
+            af += att.process(&x, y).evaluated;
+        }
+        assert!(af < ff / 2, "attentive perceptron {af} vs full {ff}");
+    }
+
+    #[test]
+    fn theta_forced_to_zero() {
+        let p = BoundedPerceptron::new(
+            4,
+            PegasosConfig { theta: 5.0, ..Default::default() },
+            TrivialBoundary,
+        );
+        assert_eq!(p.cfg.theta, 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Early-stopped prediction (paper §4.1, right subfigures).
+//!
+//! At prediction time the threshold of interest is θ = 0 (sign of the
+//! margin), and the test is **two-sided**: stop as soon as the partial
+//! margin's magnitude clears the Constant STST level
+//! `τ = sqrt(var(S_n)·log(1/√δ))` (Theorem 1's simplified form — the
+//! paper notes the θ=0 boundary makes the decision error a *classification*
+//! error, "a fact clearly evident throughout the experiments").
+
+use crate::margin::policy::OrderGenerator;
+use crate::stst::boundary::{Boundary, StopContext};
+
+/// Two-sided sequential sign predictor under a stopping boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct EarlyStopPredictor<'b, B: Boundary + ?Sized> {
+    boundary: &'b B,
+}
+
+impl<'b, B: Boundary + ?Sized> EarlyStopPredictor<'b, B> {
+    /// Predictor driven by `boundary`.
+    pub fn new(boundary: &'b B) -> Self {
+        Self { boundary }
+    }
+
+    /// Sequentially evaluate `⟨w, x⟩` in `order`, stopping when
+    /// `|S_i| ≥ τ_i` (θ = 0). Returns `(score, features_evaluated)`;
+    /// `score`'s sign is the prediction.
+    pub fn predict(&self, w: &[f64], x: &[f64], order: &[usize], var_sn: f64) -> (f64, usize) {
+        let n = order.len();
+        let mut ctx = StopContext { evaluated: 0, total: n, theta: 0.0, var_sn };
+        let cap = self.boundary.budget(&ctx).unwrap_or(n).min(n);
+        let mut s = 0.0;
+        if !self.boundary.is_evidence_based() {
+            for &j in &order[..cap] {
+                s += w[j] * x[j];
+            }
+            return (s, cap);
+        }
+        for (i, &j) in order[..cap].iter().enumerate() {
+            s += w[j] * x[j];
+            ctx.evaluated = i + 1;
+            if ctx.evaluated < n {
+                let tau = self.boundary.level(&ctx);
+                // Strict: a zero-variance (untrained) model must not
+                // claim confidence at |S| = τ = 0.
+                if s.abs() > tau {
+                    return (s, ctx.evaluated);
+                }
+            }
+        }
+        (s, cap)
+    }
+
+    /// Lazy-order variant of [`Self::predict`]: draws coordinates from
+    /// the policy generator on demand (O(evaluated) policy cost).
+    pub fn predict_lazy(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        orders: &mut OrderGenerator,
+        var_sn: f64,
+    ) -> (f64, usize) {
+        let n = w.len();
+        orders.begin_example();
+        let mut ctx = StopContext { evaluated: 0, total: n, theta: 0.0, var_sn };
+        let cap = self.boundary.budget(&ctx).unwrap_or(n).min(n);
+        let mut s = 0.0;
+        if !self.boundary.is_evidence_based() {
+            for _ in 0..cap {
+                let j = orders.next_coord();
+                s += w[j] * x[j];
+            }
+            return (s, cap);
+        }
+        for i in 0..cap {
+            let j = orders.next_coord();
+            s += w[j] * x[j];
+            ctx.evaluated = i + 1;
+            if ctx.evaluated < n {
+                let tau = self.boundary.level(&ctx);
+                if s.abs() > tau {
+                    return (s, ctx.evaluated);
+                }
+            }
+        }
+        (s, cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stst::boundary::{BudgetedBoundary, ConstantBoundary, TrivialBoundary};
+
+    #[test]
+    fn full_boundary_full_evaluation() {
+        let w = [1.0, -2.0, 3.0];
+        let x = [0.5, 0.5, 0.5];
+        let order = [0usize, 1, 2];
+        let p = EarlyStopPredictor::new(&TrivialBoundary);
+        let (score, k) = p.predict(&w, &x, &order, 1.0);
+        assert_eq!(k, 3);
+        assert!((score - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn confident_example_stops_early_either_sign() {
+        let n = 200;
+        let order: Vec<usize> = (0..n).collect();
+        let b = ConstantBoundary::new(0.1);
+        let p = EarlyStopPredictor::new(&b);
+        let w = vec![1.0; n];
+        let x_pos = vec![1.0; n];
+        let (s_pos, k_pos) = p.predict(&w, &x_pos, &order, 4.0);
+        assert!(s_pos > 0.0);
+        assert!(k_pos < n / 4, "positive example should stop early, took {k_pos}");
+        let x_neg = vec![-1.0; n];
+        let (s_neg, k_neg) = p.predict(&w, &x_neg, &order, 4.0);
+        assert!(s_neg < 0.0);
+        assert_eq!(k_neg, k_pos, "symmetric example stops symmetrically");
+    }
+
+    #[test]
+    fn budgeted_prediction_truncates() {
+        let n = 50;
+        let order: Vec<usize> = (0..n).collect();
+        let b = BudgetedBoundary::new(5);
+        let p = EarlyStopPredictor::new(&b);
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let (s, k) = p.predict(&w, &x, &order, 1.0);
+        assert_eq!(k, 5);
+        assert!((s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ambiguous_example_runs_to_completion() {
+        let n = 64;
+        let order: Vec<usize> = (0..n).collect();
+        let b = ConstantBoundary::new(0.01);
+        let p = EarlyStopPredictor::new(&b);
+        let w = vec![1.0; n];
+        // alternating: partial sums oscillate around 0
+        let x: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 0.01 } else { -0.01 }).collect();
+        let (_, k) = p.predict(&w, &x, &order, 10.0);
+        assert_eq!(k, n, "oscillating margin must not stop early");
+    }
+}

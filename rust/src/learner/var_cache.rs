@@ -1,0 +1,208 @@
+//! Incremental maintenance of `var(S_n) = Σ_j w_j² var_y(x_j)`.
+//!
+//! The boundary needs the full-sum variance *before* evaluating the
+//! example — but computing the Σ from scratch is O(n), which would erase
+//! the O(√n) win. [`VarCache`] keeps the sum per class and patches it:
+//!
+//! * when a feature observation changes `var̂_y(x_j)` (after a walk), the
+//!   cached sum gains `w_j²·(var_new − var_old)` — O(evaluated);
+//! * when the weight vector changes (Pegasos update — already O(n)),
+//!   both sums are rebuilt — O(n), amortized over the many non-update
+//!   examples;
+//! * when the weight vector is only *scaled* (Pegasos projection /
+//!   `(1−μλ)` decay alone), the sums scale by the factor squared — O(1).
+
+use crate::stst::variance::ClassVariance;
+
+/// Cached per-class `Σ w_j² var_y(x_j)` kept in sync with a
+/// [`ClassVariance`] table and a weight vector.
+#[derive(Debug, Clone)]
+pub struct VarCache {
+    /// Underlying per-(class, feature) estimator table.
+    pub table: ClassVariance,
+    sum_pos: f64,
+    sum_neg: f64,
+    dirty: bool,
+    /// Per-coordinate stamp for within-example dedup (see
+    /// [`Self::observe_prefix`]): `seen[j] == stamp` means coordinate `j`
+    /// was already folded in for the current example.
+    seen: Vec<u32>,
+    stamp: u32,
+}
+
+impl VarCache {
+    /// New cache over `dim` features (default warm-up prior).
+    pub fn new(dim: usize) -> Self {
+        Self {
+            table: ClassVariance::new(dim),
+            sum_pos: 0.0,
+            sum_neg: 0.0,
+            dirty: true,
+            seen: vec![0; dim],
+            stamp: 0,
+        }
+    }
+
+    /// Current `var(S_n)` for class `label`, rebuilding lazily if marked
+    /// dirty.
+    #[inline]
+    pub fn var_sn(&mut self, label: f64, weights: &[f64]) -> f64 {
+        if self.dirty {
+            self.rebuild(weights);
+        }
+        if label >= 0.0 { self.sum_pos } else { self.sum_neg }
+    }
+
+    /// Force a full O(n) rebuild from `weights`.
+    pub fn rebuild(&mut self, weights: &[f64]) {
+        self.sum_pos = self.table.sum_variance(1.0, weights);
+        self.sum_neg = self.table.sum_variance(-1.0, weights);
+        self.dirty = false;
+    }
+
+    /// Mark the cache stale (arbitrary weight change).
+    pub fn invalidate(&mut self) {
+        self.dirty = true;
+    }
+
+    /// The weight vector was multiplied by `c` everywhere: sums scale by
+    /// `c²` — O(1).
+    pub fn on_weight_scale(&mut self, c: f64) {
+        if !self.dirty {
+            let c2 = c * c;
+            self.sum_pos *= c2;
+            self.sum_neg *= c2;
+        }
+    }
+
+    /// Observe feature `j` of a `label` example with value `x`, patching
+    /// the cached sum for that class — O(1).
+    #[inline]
+    pub fn observe(&mut self, label: f64, j: usize, x: f64, weights: &[f64]) {
+        let old = self.table.var(label, j);
+        self.table.observe(label, j, x);
+        if !self.dirty {
+            let w2 = weights[j] * weights[j];
+            let delta = w2 * (self.table.var(label, j) - old);
+            if label >= 0.0 {
+                self.sum_pos += delta;
+            } else {
+                self.sum_neg += delta;
+            }
+        }
+    }
+
+    /// Observe the first `upto` visited coordinates (Algorithm 1's
+    /// "Update var_{y}(x_j), j = 1..i"), folding each coordinate in **at
+    /// most once per example**. With-replacement policies re-draw the same
+    /// coordinate within one example; double-counting those identical
+    /// values would deflate the class-conditional variance estimate (two
+    /// equal observations have zero spread), making τ systematically too
+    /// small and the test over-confident — measurably worse decision-error
+    /// rates under the weight-sampled policy.
+    pub fn observe_prefix(
+        &mut self,
+        label: f64,
+        order: &[usize],
+        xs: &[f64],
+        upto: usize,
+        weights: &[f64],
+    ) {
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            // wrapped: clear stale stamps
+            self.seen.iter_mut().for_each(|s| *s = 0);
+            self.stamp = 1;
+        }
+        for &j in order.iter().take(upto) {
+            if self.seen[j] != self.stamp {
+                self.seen[j] = self.stamp;
+                self.observe(label, j, xs[j], weights);
+            }
+        }
+    }
+
+    /// Exactness check (tests): cached vs recomputed gap.
+    pub fn drift_from_exact(&mut self, weights: &[f64]) -> f64 {
+        if self.dirty {
+            self.rebuild(weights);
+        }
+        let exact_pos = self.table.sum_variance(1.0, weights);
+        let exact_neg = self.table.sum_variance(-1.0, weights);
+        (self.sum_pos - exact_pos).abs().max((self.sum_neg - exact_neg).abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn observe_patches_exactly() {
+        let w = vec![0.5, -2.0, 1.0];
+        let mut vc = VarCache::new(3);
+        vc.rebuild(&w);
+        for (label, j, x) in [(1.0, 0, 0.3), (1.0, 0, -0.7), (1.0, 1, 0.9), (-1.0, 2, 0.1), (-1.0, 2, 0.8), (1.0, 0, 0.2)] {
+            vc.observe(label, j, x, &w);
+        }
+        assert!(vc.drift_from_exact(&w) < 1e-12);
+    }
+
+    #[test]
+    fn scale_patches_exactly() {
+        let mut w = vec![1.0, 2.0, 3.0];
+        let mut vc = VarCache::new(3);
+        // give features some observed variance
+        for x in [0.1, 0.9, 0.4] {
+            vc.observe(1.0, 1, x, &w);
+        }
+        vc.rebuild(&w);
+        let c = 0.85;
+        w.iter_mut().for_each(|v| *v *= c);
+        vc.on_weight_scale(c);
+        assert!(vc.drift_from_exact(&w) < 1e-12);
+    }
+
+    #[test]
+    fn invalidate_forces_rebuild() {
+        let mut w = vec![1.0, 1.0];
+        let mut vc = VarCache::new(2);
+        let v0 = vc.var_sn(1.0, &w);
+        // prior variance 1/3 per feature * w² = 2/3
+        assert!((v0 - 2.0 / 3.0).abs() < 1e-12);
+        w[0] = 10.0;
+        vc.invalidate();
+        let v1 = vc.var_sn(1.0, &w);
+        assert!((v1 - (100.0 + 1.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_sums_independent() {
+        let w = vec![1.0; 2];
+        let mut vc = VarCache::new(2);
+        vc.rebuild(&w);
+        // Drive pos-class feature 0 variance to ~0 by repetition
+        for _ in 0..50 {
+            vc.observe(1.0, 0, 0.42, &w);
+        }
+        let pos = vc.var_sn(1.0, &w);
+        let neg = vc.var_sn(-1.0, &w);
+        assert!(pos < neg, "pos {pos} should shrink below neg {neg}");
+    }
+
+    #[test]
+    fn observe_prefix_dedups_within_example() {
+        let w = vec![1.0, 1.0];
+        let mut vc = VarCache::new(2);
+        vc.rebuild(&w);
+        let order = [0usize, 0, 1];
+        let xs = [0.5, -0.5];
+        vc.observe_prefix(1.0, &order, &xs, 3, &w);
+        assert!(vc.drift_from_exact(&w) < 1e-12);
+        // coordinate 0 drawn twice but observed once
+        assert_eq!(vc.table.total_observations(), 2);
+        // ...and the next example observes it again (stamp advanced)
+        vc.observe_prefix(1.0, &order, &xs, 2, &w);
+        assert_eq!(vc.table.total_observations(), 3);
+    }
+}

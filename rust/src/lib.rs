@@ -1,0 +1,70 @@
+//! # attentive — Rapid Learning with Stochastic Focus of Attention
+//!
+//! A production-grade reproduction of *"Rapid Learning with Stochastic
+//! Focus of Attention"* (Pelossof & Ying, ICML 2011).
+//!
+//! The paper's contribution is the **Sequential Thresholded Sum Test
+//! (STST)**: an adaptive early-stopping rule, derived from Brownian-bridge
+//! boundary-crossing probabilities, that lets a margin-based online
+//! learner abandon the evaluation of an example's features as soon as the
+//! partial margin makes the full-margin decision statistically obvious.
+//! Plugged into Pegasos it yields **Attentive Pegasos**, which touches
+//! `O(sqrt(n))` features per example on average instead of `n` with no
+//! loss in accuracy.
+//!
+//! ## Crate layout
+//!
+//! | module | contents |
+//! |---|---|
+//! | [`stst`] | boundary family (Constant / Curved / Budgeted / Trivial), Brownian-bridge math, online variance tracking, decision-error audit |
+//! | [`margin`] | sequential partial-sum walker, coordinate-selection policies, scalar & blocked margin evaluators |
+//! | [`learner`] | Pegasos, Attentive Pegasos (Algorithm 1), Budgeted Pegasos, (attentive) Perceptron, (attentive) Passive-Aggressive |
+//! | [`data`] | synthetic digit-glyph generator, MNIST IDX reader, 1-vs-1 task extraction, normalization, streaming, libsvm I/O |
+//! | [`sim`] | random-walk simulator reproducing Figure 2 (boundary crossing + O(sqrt(n)) stopping times) |
+//! | [`runtime`] | PJRT (XLA) runtime: loads AOT artifacts produced by `python/compile/aot.py` and runs them from rust |
+//! | [`coordinator`] | online training loop, decision-error audit, multi-task parallel scheduler, async prediction service |
+//! | [`metrics`] | counters, learning curves, feature-cost accounting, CSV/JSON export |
+//! | [`config`] | experiment configuration and CLI plumbing |
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use attentive::prelude::*;
+//!
+//! // Generate a synthetic MNIST-like 2-vs-3 task.
+//! let ds = attentive::data::synth::SynthDigits::new(7).generate(2_000);
+//! let task = attentive::data::task::BinaryTask::one_vs_one(&ds, 2, 3).unwrap();
+//!
+//! // Train Attentive Pegasos with the Constant STST boundary, delta = 0.1.
+//! let cfg = attentive::learner::pegasos::PegasosConfig { lambda: 1e-4, ..Default::default() };
+//! let mut learner = attentive::learner::attentive::AttentivePegasos::new(
+//!     task.dim(), cfg, attentive::stst::boundary::ConstantBoundary::new(0.1));
+//! let report = attentive::coordinator::trainer::Trainer::new(Default::default())
+//!     .fit(&mut learner, &task);
+//! println!("avg features/example: {:.1}", report.avg_features_per_example());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod learner;
+pub mod margin;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod stst;
+pub mod util;
+
+/// Convenient glob-import of the most frequently used types.
+pub mod prelude {
+    pub use crate::coordinator::trainer::{Trainer, TrainerConfig, TrainReport};
+    pub use crate::data::dataset::{Dataset, Example};
+    pub use crate::data::task::BinaryTask;
+    pub use crate::error::{Error, Result};
+    pub use crate::learner::attentive::AttentivePegasos;
+    pub use crate::learner::pegasos::{Pegasos, PegasosConfig};
+    pub use crate::learner::OnlineLearner;
+    pub use crate::margin::policy::CoordinatePolicy;
+    pub use crate::stst::boundary::{Boundary, ConstantBoundary, CurvedBoundary};
+}

@@ -1,0 +1,279 @@
+//! `attentive` — CLI launcher for the Stochastic Focus of Attention stack.
+//!
+//! Subcommands:
+//! * `train`       — run one experiment config (or the paper default) and
+//!   print the Figure-3-style summary row.
+//! * `sweep`       — run every `*.json` config in a directory.
+//! * `simulate`    — Figure 2 boundary validation (decision errors +
+//!   stopping times).
+//! * `serve`       — train a model, then serve early-stopped predictions
+//!   over synthetic traffic and print throughput/feature stats.
+//! * `init-config` — write a default config to edit.
+//! * `export-idx`  — snapshot the synthetic digit set as MNIST IDX files.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context};
+
+use attentive::config::ExperimentConfig;
+use attentive::coordinator::scheduler::{run_experiment, run_sweep};
+use attentive::coordinator::service::{ModelSnapshot, PredictionService};
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::SynthDigits;
+use attentive::learner::OnlineLearner;
+use attentive::metrics::export::{curves_to_csv, Table};
+use attentive::sim::bridge::{simulate_decision_errors, BridgeSimConfig};
+use attentive::sim::stopping::{fit_sqrt, simulate_stopping_times, StoppingSimConfig};
+use attentive::util::cli::Args;
+
+const USAGE: &str = "\
+attentive — Rapid Learning with Stochastic Focus of Attention (ICML 2011)
+
+USAGE: attentive <COMMAND> [OPTIONS]
+
+COMMANDS:
+  train        [--config exp.json] [--csv out.csv]
+  sweep        <dir> [--csv out.csv]
+  simulate     [--walks N] [--csv out.csv]
+  serve        [--requests N] [--batch B] [--workers W]
+  init-config  [out.json]
+  export-idx   <dir> [--count N] [--seed S]
+  help
+";
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]).map_err(|e| anyhow::anyhow!(e))?;
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        "init-config" => {
+            let cfg = ExperimentConfig::paper_default();
+            let text = cfg.to_json().to_string_pretty();
+            match args.pos(0) {
+                Some(p) => {
+                    std::fs::write(p, text)?;
+                    println!("wrote {p}");
+                }
+                None => println!("{text}"),
+            }
+            Ok(())
+        }
+        "export-idx" => {
+            let dir = PathBuf::from(args.pos(0).context("export-idx needs a directory")?);
+            let count = args.get_parse("count", 10_000usize).map_err(|e| anyhow::anyhow!(e))?;
+            let seed = args.get_parse("seed", 7u64).map_err(|e| anyhow::anyhow!(e))?;
+            std::fs::create_dir_all(&dir)?;
+            let ds = SynthDigits::new(seed).generate(count);
+            attentive::data::mnist::write_idx_pair(
+                &ds,
+                28,
+                &dir.join("train-images-idx3-ubyte"),
+                &dir.join("train-labels-idx1-ubyte"),
+            )?;
+            println!("wrote {count} examples to {}", dir.display());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = match args.opt("config") {
+        Some(p) => ExperimentConfig::load(std::path::Path::new(p)).context("loading config")?,
+        None => ExperimentConfig::paper_default(),
+    };
+    let dim_hint = 784usize;
+    let out = run_experiment(&cfg)?;
+    let mut table = Table::new(&[
+        "experiment",
+        "learner",
+        "avg feats/ex",
+        "speedup",
+        "test err (full)",
+        "test err (early)",
+        "pred feats",
+    ]);
+    table.row(&[
+        out.name.clone(),
+        out.learner.clone(),
+        format!("{:.1}", out.avg_features),
+        format!("{:.1}x", out.speedup(dim_hint)),
+        format!("{:.4}", out.final_test_error),
+        format!("{:.4}", out.final_test_error_early),
+        format!("{:.1}", out.predict_avg_features),
+    ]);
+    println!("{}", table.render());
+    if let Some(p) = args.opt("csv") {
+        let p = PathBuf::from(p);
+        curves_to_csv(&[out.mean_features.clone(), out.mean_test_error.clone()], &p)?;
+        println!("curves written to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.pos(0).context("sweep needs a config directory")?);
+    let mut configs = Vec::new();
+    for entry in std::fs::read_dir(&dir).context("reading sweep dir")? {
+        let path = entry?.path();
+        if path.extension().is_some_and(|e| e == "json") {
+            configs.push(ExperimentConfig::load(&path)?);
+        }
+    }
+    configs.sort_by(|a, b| a.name.cmp(&b.name));
+    if configs.is_empty() {
+        bail!("no *.json configs in {}", dir.display());
+    }
+    let outcomes = run_sweep(&configs)?;
+    let mut table = Table::new(&[
+        "experiment",
+        "learner",
+        "avg feats/ex",
+        "test err (full)",
+        "test err (early)",
+    ]);
+    let mut curves = Vec::new();
+    for out in &outcomes {
+        table.row(&[
+            out.name.clone(),
+            out.learner.clone(),
+            format!("{:.1}", out.avg_features),
+            format!("{:.4}", out.final_test_error),
+            format!("{:.4}", out.final_test_error_early),
+        ]);
+        curves.push(out.mean_features.clone());
+        curves.push(out.mean_test_error.clone());
+    }
+    println!("{}", table.render());
+    if let Some(p) = args.opt("csv") {
+        curves_to_csv(&curves, &PathBuf::from(p))?;
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let walks = args.get_parse("walks", 20_000usize).map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = BridgeSimConfig { walks_per_cell: walks, ..Default::default() };
+    let ns = [256usize, 1024, 4096];
+    let deltas = [0.01, 0.05, 0.1, 0.2, 0.3];
+    let pts = simulate_decision_errors(&cfg, &ns, &deltas);
+    let mut table =
+        Table::new(&["n", "delta (target)", "empirical err", "stop rate", "mean stop t"]);
+    for p in &pts {
+        table.row(&[
+            p.n.to_string(),
+            format!("{:.3}", p.delta),
+            format!("{:.4}", p.empirical),
+            format!("{:.3}", p.stop_rate),
+            format!("{:.1}", p.mean_stop_time),
+        ]);
+    }
+    println!("Figure 2(a) — decision errors vs theory\n{}", table.render());
+
+    let scfg = StoppingSimConfig::default();
+    let ns2 = [64usize, 128, 256, 512, 1024, 2048, 4096];
+    let spts = simulate_stopping_times(&scfg, &ns2);
+    let (c, r2) = fit_sqrt(&spts);
+    let mut t2 = Table::new(&["n", "mean stop", "std", "wald bound"]);
+    for p in &spts {
+        t2.row(&[
+            p.n.to_string(),
+            format!("{:.1}", p.mean_stop),
+            format!("{:.1}", p.std_stop),
+            format!("{:.1}", p.wald_bound),
+        ]);
+    }
+    println!(
+        "Figure 2(b) — stopping times (fit: E[T] ≈ {c:.2}·sqrt(n), R² = {r2:.4})\n{}",
+        t2.render()
+    );
+    if let Some(p) = args.opt("csv") {
+        use attentive::metrics::curve::Curve;
+        let mut err = Curve::new("fig2a/empirical-error");
+        for q in &pts {
+            err.push(q.n as f64 * 1000.0 + q.delta, q.empirical);
+        }
+        let mut stop = Curve::new("fig2b/mean-stop");
+        for q in &spts {
+            stop.push(q.n as f64, q.mean_stop);
+        }
+        curves_to_csv(&[err, stop], &PathBuf::from(p))?;
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let requests = args.get_parse("requests", 2_000usize).map_err(|e| anyhow::anyhow!(e))?;
+    let batch = args.get_parse("batch", 16usize).map_err(|e| anyhow::anyhow!(e))?;
+    let workers = args.get_parse("workers", 2usize).map_err(|e| anyhow::anyhow!(e))?;
+
+    // Train an attentive model quickly, then serve synthetic traffic.
+    let cfg = ExperimentConfig::paper_default();
+    let (train, _) = attentive::coordinator::factory::build_task(&cfg)?;
+    let mut learner =
+        attentive::learner::attentive::attentive_pegasos(train.dim(), cfg.lambda, 0.1);
+    Trainer::new(TrainerConfig { curves: false, eval_every: 0, ..Default::default() })
+        .fit(&mut learner, &train);
+    let weights: Vec<f64> = learner.weights().to_vec();
+    let var = {
+        let vc = learner.var_cache_mut();
+        let a = vc.var_sn(1.0, &weights);
+        let b = vc.var_sn(-1.0, &weights);
+        a.max(b)
+    };
+    let snapshot = ModelSnapshot {
+        weights,
+        var_sn: var,
+        boundary: attentive::stst::boundary::AnyBoundary::Constant {
+            delta: 0.1,
+            paper_literal: false,
+        },
+        // Permuted: pixel order is spatially correlated, violating the
+        // bridge's exchangeability assumption (see DESIGN.md §4).
+        policy: attentive::margin::policy::CoordinatePolicy::Permuted,
+    };
+
+    let (handle, run) =
+        PredictionService::new(snapshot, batch, 1024, 0).with_workers(workers).spawn();
+    let t0 = std::time::Instant::now();
+    // Client threads generate digit traffic and block on responses.
+    let clients = 8usize;
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let handle = handle.clone();
+            let per_client = requests / clients;
+            scope.spawn(move || {
+                let mut gen = SynthDigits::new(99 + c as u64);
+                for i in 0..per_client {
+                    let digit = if i % 2 == 0 { 2u8 } else { 3u8 };
+                    let img: Vec<f64> = gen.render(digit);
+                    let _ = handle.score(img);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    let s = run.stats.snapshot();
+    drop(handle);
+    run.join();
+    println!(
+        "served {} requests in {:.3}s ({:.0} req/s), avg features/prediction {:.1} of 784, batches {}",
+        s.served,
+        dt,
+        s.served as f64 / dt,
+        s.avg_features(),
+        s.batches
+    );
+    Ok(())
+}

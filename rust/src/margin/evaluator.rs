@@ -1,0 +1,248 @@
+//! Batch-facing margin evaluators: native scalar and block-granular.
+//!
+//! Two faithful implementations of the sequential test, at different
+//! granularities:
+//!
+//! * [`ScalarEvaluator`] — per-feature stopping: the paper's exact
+//!   Algorithm 1 semantics (wraps [`crate::margin::walker::Walker`]).
+//! * [`BlockedEvaluator`] — stopping decisions only at multiples of a
+//!   block size `B`. This mirrors the TPU/XLA execution model where the
+//!   L1 Pallas kernel computes `w⊙x` one VMEM block at a time and emits
+//!   the prefix margin after each block (see
+//!   `python/compile/kernels/partial_margin.py`); the coordinator then
+//!   stops issuing blocks once the prefix clears the boundary. Evaluated
+//!   features are charged in whole blocks (`ceil(T/B)·B`).
+//!
+//! The key invariant — tested here and by proptests — is that the blocked
+//! evaluator with `B = 1` is *exactly* the scalar evaluator, and for
+//! `B > 1` it stops at the first block boundary at or after the scalar
+//! stopping point (never earlier), so its decision-error rate is bounded
+//! by the scalar one's.
+
+use crate::stst::boundary::{Boundary, StopContext};
+
+use super::walker::{WalkOutcome, WalkResult, Walker};
+
+/// Exact per-feature sequential evaluator (Algorithm 1 semantics).
+#[derive(Debug, Default, Clone)]
+pub struct ScalarEvaluator {
+    walker: Walker,
+}
+
+impl ScalarEvaluator {
+    /// New evaluator checking the boundary at every coordinate.
+    pub fn new() -> Self {
+        Self { walker: Walker::new() }
+    }
+
+    /// Sequentially evaluate `y·⟨w,x⟩` under `boundary`. See
+    /// [`Walker::walk`] for parameter semantics.
+    #[inline]
+    pub fn evaluate<B: Boundary + ?Sized>(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        y: f64,
+        order: &[usize],
+        theta: f64,
+        var_sn: f64,
+        boundary: &B,
+    ) -> WalkResult {
+        self.walker.walk(w, x, y, order, theta, var_sn, boundary)
+    }
+}
+
+/// Block-granular sequential evaluator (XLA-artifact semantics).
+#[derive(Debug, Clone)]
+pub struct BlockedEvaluator {
+    /// Block size `B` in features. The XLA artifact is compiled for a
+    /// fixed `B` (default 16 — 49 blocks for 784-dim digits).
+    pub block: usize,
+}
+
+impl BlockedEvaluator {
+    /// New evaluator stopping only at multiples of `block`.
+    pub fn new(block: usize) -> Self {
+        assert!(block > 0, "block size must be positive");
+        Self { block }
+    }
+
+    /// Evaluate with stopping checks at block boundaries only. Features
+    /// are *charged* in whole blocks, matching what the accelerator would
+    /// actually compute.
+    pub fn evaluate<B: Boundary + ?Sized>(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        y: f64,
+        order: &[usize],
+        theta: f64,
+        var_sn: f64,
+        boundary: &B,
+    ) -> WalkResult {
+        debug_assert_eq!(w.len(), x.len());
+        let n = order.len();
+        let mut ctx = StopContext { evaluated: 0, total: n, theta, var_sn };
+        let cap = boundary.budget(&ctx).unwrap_or(n).min(n);
+        let evidence = boundary.is_evidence_based();
+
+        let mut s = 0.0;
+        let mut done = 0;
+        let mut level = f64::INFINITY;
+        while done < cap {
+            let end = (done + self.block).min(cap);
+            for &j in &order[done..end] {
+                s += w[j] * x[j];
+            }
+            done = end;
+            if evidence && done < n {
+                ctx.evaluated = done;
+                level = boundary.level(&ctx);
+                if y * s > theta + level {
+                    return WalkResult {
+                        partial_margin: y * s,
+                        evaluated: done,
+                        outcome: WalkOutcome::EarlyStopped,
+                        level,
+                    };
+                }
+            }
+        }
+        let outcome = if cap < n { WalkOutcome::BudgetExhausted } else { WalkOutcome::Completed };
+        WalkResult { partial_margin: y * s, evaluated: done, outcome, level }
+    }
+
+    /// Given the per-block prefix margins `prefix[k] = y·S_{(k+1)·B}`
+    /// (as produced by the XLA blocked-margin artifact for a whole batch),
+    /// find the stopping block under `boundary`. Returns
+    /// `(features_charged, stopped_early, margin_at_stop)`. This is the
+    /// post-processing the coordinator applies to runtime output; it must
+    /// agree with [`Self::evaluate`] — see `blocked_prefix_agreement`.
+    pub fn decide_from_prefixes<B: Boundary + ?Sized>(
+        &self,
+        prefixes: &[f64],
+        n: usize,
+        theta: f64,
+        var_sn: f64,
+        boundary: &B,
+    ) -> (usize, bool, f64) {
+        let mut ctx = StopContext { evaluated: 0, total: n, theta, var_sn };
+        for (k, &pm) in prefixes.iter().enumerate() {
+            let done = ((k + 1) * self.block).min(n);
+            if done >= n {
+                break;
+            }
+            ctx.evaluated = done;
+            if boundary.is_evidence_based() && pm > theta + boundary.level(&ctx) {
+                return (done, true, pm);
+            }
+        }
+        let full = prefixes.last().copied().unwrap_or(0.0);
+        (n, false, full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stst::boundary::{ConstantBoundary, TrivialBoundary};
+
+    fn wx(n: usize) -> (Vec<f64>, Vec<f64>, Vec<usize>) {
+        let w: Vec<f64> = (0..n).map(|i| ((i * 37 % 17) as f64 - 8.0) / 8.0).collect();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 11 % 23) as f64 - 11.0) / 11.0).collect();
+        (w, x, (0..n).collect())
+    }
+
+    #[test]
+    fn block1_equals_scalar() {
+        let (w, x, order) = wx(257);
+        let b = ConstantBoundary::new(0.2);
+        for y in [1.0, -1.0] {
+            for var in [0.01, 0.5, 5.0] {
+                let s = ScalarEvaluator::new().evaluate(&w, &x, y, &order, 1.0, var, &b);
+                let blk = BlockedEvaluator::new(1).evaluate(&w, &x, y, &order, 1.0, var, &b);
+                assert_eq!(s.evaluated, blk.evaluated);
+                assert_eq!(s.outcome, blk.outcome);
+                assert!((s.partial_margin - blk.partial_margin).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_never_stops_before_scalar_block_boundary() {
+        let n = 784;
+        let w = vec![0.1; n];
+        let x = vec![1.0; n];
+        let order: Vec<usize> = (0..n).collect();
+        let b = ConstantBoundary::new(0.1);
+        let s = ScalarEvaluator::new().evaluate(&w, &x, 1.0, &order, 1.0, 0.5, &b);
+        let blk = BlockedEvaluator::new(16).evaluate(&w, &x, 1.0, &order, 1.0, 0.5, &b);
+        assert_eq!(s.outcome, WalkOutcome::EarlyStopped);
+        assert_eq!(blk.outcome, WalkOutcome::EarlyStopped);
+        assert!(blk.evaluated >= s.evaluated);
+        assert_eq!(blk.evaluated % 16, 0);
+        // and not a block later than needed
+        assert!(blk.evaluated < s.evaluated + 16);
+    }
+
+    #[test]
+    fn blocked_full_margin_matches_dot() {
+        let (w, x, order) = wx(100);
+        let blk = BlockedEvaluator::new(7).evaluate(&w, &x, 1.0, &order, 1.0, 1e9, &TrivialBoundary);
+        let full: f64 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+        assert_eq!(blk.outcome, WalkOutcome::Completed);
+        assert!((blk.partial_margin - full).abs() < 1e-10);
+    }
+
+    #[test]
+    fn blocked_prefix_agreement() {
+        // decide_from_prefixes over the artifact-style prefix array must
+        // match evaluate() run coordinate-wise.
+        let n = 96;
+        let block = 16;
+        let (w, x, order) = wx(n);
+        let bnd = ConstantBoundary::new(0.15);
+        for y in [1.0, -1.0] {
+            // Build the prefix array the XLA kernel would emit.
+            let mut prefixes = Vec::new();
+            let mut s = 0.0;
+            for k in 0..(n / block) {
+                for &j in &order[k * block..(k + 1) * block] {
+                    s += w[j] * x[j];
+                }
+                prefixes.push(y * s);
+            }
+            let ev = BlockedEvaluator::new(block);
+            let direct = ev.evaluate(&w, &x, y, &order, 1.0, 0.8, &bnd);
+            let (charged, stopped, margin) =
+                ev.decide_from_prefixes(&prefixes, n, 1.0, 0.8, &bnd);
+            assert_eq!(charged, direct.evaluated);
+            assert_eq!(stopped, direct.outcome == WalkOutcome::EarlyStopped);
+            assert!((margin - direct.partial_margin).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn last_block_never_early_stops() {
+        // Stopping inside the final block is pointless (the sum is done);
+        // both paths must report Completed with the full margin.
+        let n = 32;
+        let block = 16;
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let order: Vec<usize> = (0..n).collect();
+        let bnd = ConstantBoundary::new(0.5); // very lax
+        let r = BlockedEvaluator::new(block).evaluate(&w, &x, 1.0, &order, 1.0, 0.001, &bnd);
+        // stops at block 1 (16 features) since margin 16 >> boundary
+        assert_eq!(r.outcome, WalkOutcome::EarlyStopped);
+        assert_eq!(r.evaluated, 16);
+        // but if the crossing only happens in the last block:
+        let mut x2 = vec![0.0; n];
+        for v in x2.iter_mut().skip(16) {
+            *v = 1.0;
+        }
+        let r2 = BlockedEvaluator::new(block).evaluate(&w, &x2, 1.0, &order, 1.0, 0.001, &bnd);
+        assert_eq!(r2.outcome, WalkOutcome::Completed);
+        assert_eq!(r2.evaluated, n);
+    }
+}

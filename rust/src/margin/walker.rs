@@ -1,0 +1,341 @@
+//! The sequential partial-sum walker — Algorithm 1's inner test.
+//!
+//! Walks coordinates in a policy-chosen order, accumulating the signed
+//! partial margin `y·Σ_{j≤i} w_j x_j` and the variance prefix
+//! `Σ_{j≤i} w_j² var_y(x_j)` in lockstep, and consults the boundary after
+//! every coordinate. Stops as soon as
+//!
+//! ```text
+//! y·S_i  >  θ + τ(δ, var̂(S_n))
+//! ```
+//!
+//! (Algorithm 1 line 4, with θ = 1 for the Pegasos hinge).
+//!
+//! **Variance prefix trick.** `var(S_n) = Σ_j w_j² var(x_j)` over *all* n
+//! coordinates would cost O(n) up front — exactly what we are trying to
+//! avoid. But the remaining-sum variance is what actually matters for the
+//! bridge: conditionally on `S_i`, only the unevaluated coordinates are
+//! random. We therefore maintain `V_total` once per example via a lazily
+//! refreshed full pass (amortized over `refresh_every` examples, O(n/R)
+//! per example) *or* — the default — use the exact running total
+//! maintained incrementally by the owning learner, which is possible
+//! because Pegasos updates touch every coordinate anyway only on margin
+//! violations. The walker itself is agnostic: it receives `var_sn` from
+//! its caller and costs O(1) per coordinate.
+
+use crate::margin::policy::OrderGenerator;
+use crate::stst::boundary::{Boundary, StopContext};
+
+/// Why the walk terminated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalkOutcome {
+    /// Crossed the stopping boundary: example declared unimportant.
+    EarlyStopped,
+    /// Exhausted a fixed budget (budgeted baseline).
+    BudgetExhausted,
+    /// Evaluated every coordinate: full margin available.
+    Completed,
+}
+
+/// Result of one sequential margin evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct WalkResult {
+    /// Signed partial margin `y·S_i` at termination (full margin when
+    /// `outcome == Completed`).
+    pub partial_margin: f64,
+    /// Number of feature evaluations spent (with-replacement policies may
+    /// evaluate a coordinate twice; each draw counts, as in the paper).
+    pub evaluated: usize,
+    /// How the walk ended.
+    pub outcome: WalkOutcome,
+    /// The boundary level at the stopping step (diagnostics).
+    pub level: f64,
+}
+
+impl WalkResult {
+    /// Did this walk decide the example is unimportant (skip update)?
+    /// Budget exhaustion decides from the truncated margin against θ.
+    pub fn skip_update(&self, theta: f64) -> bool {
+        match self.outcome {
+            WalkOutcome::EarlyStopped => true,
+            WalkOutcome::BudgetExhausted | WalkOutcome::Completed => self.partial_margin >= theta,
+        }
+    }
+}
+
+/// Reusable sequential walker. Holds no per-example state; `walk` is the
+/// hot function (called once per training example).
+#[derive(Debug, Default, Clone)]
+pub struct Walker {
+    /// Skip boundary checks for the first `min_evaluations` coordinates.
+    /// Guards against stopping on near-zero evidence before the variance
+    /// estimate has any signal. 0 = check from the first coordinate.
+    pub min_evaluations: usize,
+}
+
+impl Walker {
+    /// Walker that checks the boundary from the first coordinate on.
+    pub fn new() -> Self {
+        Self { min_evaluations: 0 }
+    }
+
+    /// Run the sequential test for one example.
+    ///
+    /// * `w`, `x` — weight and feature vectors (dense, same length).
+    /// * `y` — label in {−1, +1}.
+    /// * `order` — coordinate visit order from a
+    ///   [`crate::margin::policy::OrderGenerator`]; may contain repeats.
+    /// * `theta` — margin decision threshold (1.0 for the Pegasos hinge).
+    /// * `var_sn` — estimated variance of the full sum (see module docs).
+    /// * `boundary` — the stopping rule.
+    #[inline]
+    pub fn walk<B: Boundary + ?Sized>(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        y: f64,
+        order: &[usize],
+        theta: f64,
+        var_sn: f64,
+        boundary: &B,
+    ) -> WalkResult {
+        debug_assert_eq!(w.len(), x.len());
+        let n = order.len();
+        let mut ctx = StopContext { evaluated: 0, total: n, theta, var_sn };
+        let cap = boundary.budget(&ctx).unwrap_or(n).min(n);
+
+        // Evidence-free boundaries (budgeted/full) take a branch-free fast
+        // path: accumulate `cap` products, decide at the end.
+        if !boundary.is_evidence_based() {
+            let mut s = 0.0;
+            for &j in &order[..cap] {
+                s += w[j] * x[j];
+            }
+            let outcome =
+                if cap < n { WalkOutcome::BudgetExhausted } else { WalkOutcome::Completed };
+            return WalkResult { partial_margin: y * s, evaluated: cap, outcome, level: f64::INFINITY };
+        }
+
+        let mut s = 0.0;
+        let mut level = f64::INFINITY;
+        for (i, &j) in order[..cap].iter().enumerate() {
+            s += w[j] * x[j];
+            ctx.evaluated = i + 1;
+            if ctx.evaluated < self.min_evaluations.max(1) {
+                continue;
+            }
+            level = boundary.level(&ctx);
+            // Algorithm 1: stop when the *signed* partial margin clears
+            // θ + τ — the walk is on y·S_i so one-sided stopping suffices
+            // (only confidently-correct examples are skipped). STRICTLY
+            // greater: with w = 0 the variance estimate (and hence τ) is
+            // 0 and the partial margin is exactly θ-adjacent; `>=` would
+            // deadlock a θ=0 learner (perceptron) at w = 0 forever.
+            if y * s > theta + level {
+                return WalkResult {
+                    partial_margin: y * s,
+                    evaluated: ctx.evaluated,
+                    outcome: WalkOutcome::EarlyStopped,
+                    level,
+                };
+            }
+        }
+        WalkResult { partial_margin: y * s, evaluated: cap, outcome: WalkOutcome::Completed, level }
+    }
+
+    /// Lazy-order variant of [`Self::walk`]: coordinates are drawn from
+    /// the policy generator one at a time, so an early stop after k
+    /// coordinates costs O(k·policy-step) instead of the O(n) full-order
+    /// materialization. Visited coordinates are appended to `visited`
+    /// (in draw order, duplicates included) for the caller's variance
+    /// update. Semantics are otherwise identical to `walk` over the order
+    /// the generator would have materialized.
+    #[inline]
+    pub fn walk_lazy<B: Boundary + ?Sized>(
+        &self,
+        w: &[f64],
+        x: &[f64],
+        y: f64,
+        orders: &mut OrderGenerator,
+        theta: f64,
+        var_sn: f64,
+        boundary: &B,
+        visited: &mut Vec<usize>,
+    ) -> WalkResult {
+        debug_assert_eq!(w.len(), x.len());
+        let n = w.len();
+        visited.clear();
+        orders.begin_example();
+        let mut ctx = StopContext { evaluated: 0, total: n, theta, var_sn };
+        let cap = boundary.budget(&ctx).unwrap_or(n).min(n);
+
+        if !boundary.is_evidence_based() {
+            if cap == n {
+                // Full computation is order-invariant: use the exact dense
+                // dot (the reference Pegasos semantics) instead of paying
+                // the policy's per-draw cost — ~50x faster for the
+                // weight-sampled policy at n = 784.
+                let s = crate::margin::dot(w, x);
+                visited.extend(0..n);
+                return WalkResult {
+                    partial_margin: y * s,
+                    evaluated: n,
+                    outcome: WalkOutcome::Completed,
+                    level: f64::INFINITY,
+                };
+            }
+            let mut s = 0.0;
+            for _ in 0..cap {
+                let j = orders.next_coord();
+                visited.push(j);
+                s += w[j] * x[j];
+            }
+            return WalkResult {
+                partial_margin: y * s,
+                evaluated: cap,
+                outcome: WalkOutcome::BudgetExhausted,
+                level: f64::INFINITY,
+            };
+        }
+
+        let mut s = 0.0;
+        let mut level = f64::INFINITY;
+        for i in 0..cap {
+            let j = orders.next_coord();
+            visited.push(j);
+            s += w[j] * x[j];
+            ctx.evaluated = i + 1;
+            if ctx.evaluated < self.min_evaluations.max(1) {
+                continue;
+            }
+            level = boundary.level(&ctx);
+            if y * s > theta + level {
+                return WalkResult {
+                    partial_margin: y * s,
+                    evaluated: ctx.evaluated,
+                    outcome: WalkOutcome::EarlyStopped,
+                    level,
+                };
+            }
+        }
+        WalkResult { partial_margin: y * s, evaluated: cap, outcome: WalkOutcome::Completed, level }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stst::boundary::{BudgetedBoundary, ConstantBoundary, TrivialBoundary};
+
+    fn seq(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn trivial_boundary_computes_full_margin() {
+        let w = [0.5, -1.0, 2.0, 0.25];
+        let x = [1.0, 1.0, -1.0, 4.0];
+        let r = Walker::new().walk(&w, &x, 1.0, &seq(4), 1.0, 10.0, &TrivialBoundary);
+        assert_eq!(r.outcome, WalkOutcome::Completed);
+        assert_eq!(r.evaluated, 4);
+        let full: f64 = w.iter().zip(&x).map(|(a, b)| a * b).sum();
+        assert!((r.partial_margin - full).abs() < 1e-12);
+    }
+
+    #[test]
+    fn budgeted_stops_at_k() {
+        let w = vec![1.0; 100];
+        let x = vec![1.0; 100];
+        let r = Walker::new().walk(&w, &x, 1.0, &seq(100), 1.0, 10.0, &BudgetedBoundary::new(7));
+        assert_eq!(r.outcome, WalkOutcome::BudgetExhausted);
+        assert_eq!(r.evaluated, 7);
+        assert!((r.partial_margin - 7.0).abs() < 1e-12);
+        // truncated margin 7 >= theta 1 -> skip
+        assert!(r.skip_update(1.0));
+    }
+
+    #[test]
+    fn constant_boundary_early_stops_confident_example() {
+        // Strong aligned example: partial margin grows by 1 per step;
+        // tau = sqrt(4 * log(1/sqrt(0.1))) ≈ 2.15, theta=1 -> stop when
+        // y*S_i >= 3.15, i.e. at step 4.
+        let n = 100;
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let b = ConstantBoundary::new(0.1);
+        let r = Walker::new().walk(&w, &x, 1.0, &seq(n), 1.0, 4.0, &b);
+        assert_eq!(r.outcome, WalkOutcome::EarlyStopped);
+        assert_eq!(r.evaluated, 4);
+        assert!(r.skip_update(1.0));
+    }
+
+    #[test]
+    fn misaligned_example_never_early_stops() {
+        // y*S_i is always negative: the one-sided test cannot fire, and
+        // the learner will see the full (violating) margin.
+        let n = 50;
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let b = ConstantBoundary::new(0.1);
+        let r = Walker::new().walk(&w, &x, -1.0, &seq(n), 1.0, 4.0, &b);
+        assert_eq!(r.outcome, WalkOutcome::Completed);
+        assert_eq!(r.evaluated, n);
+        assert!(!r.skip_update(1.0));
+    }
+
+    #[test]
+    fn order_with_repeats_counts_each_draw() {
+        let w = [10.0, 0.0];
+        let x = [1.0, 0.0];
+        let order = [0usize, 0, 0]; // with-replacement draws
+        let r = Walker::new().walk(&w, &x, 1.0, &order, 1.0, 1.0, &TrivialBoundary);
+        assert_eq!(r.evaluated, 3);
+        assert!((r.partial_margin - 30.0).abs() < 1e-12); // re-adds the product per draw
+    }
+
+    #[test]
+    fn min_evaluations_defers_stopping() {
+        let n = 100;
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let b = ConstantBoundary::new(0.1);
+        let r = Walker { min_evaluations: 10 }.walk(&w, &x, 1.0, &seq(n), 1.0, 4.0, &b);
+        assert_eq!(r.outcome, WalkOutcome::EarlyStopped);
+        assert_eq!(r.evaluated, 10);
+    }
+
+    #[test]
+    fn higher_variance_stops_later() {
+        let n = 1000;
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let b = ConstantBoundary::new(0.1);
+        let lo = Walker::new().walk(&w, &x, 1.0, &seq(n), 1.0, 1.0, &b).evaluated;
+        let hi = Walker::new().walk(&w, &x, 1.0, &seq(n), 1.0, 100.0, &b).evaluated;
+        assert!(hi > lo, "var 100 stop {hi} should be later than var 1 stop {lo}");
+    }
+
+    #[test]
+    fn smaller_delta_stops_later() {
+        let n = 1000;
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let strict = Walker::new()
+            .walk(&w, &x, 1.0, &seq(n), 1.0, 25.0, &ConstantBoundary::new(0.01))
+            .evaluated;
+        let lax = Walker::new()
+            .walk(&w, &x, 1.0, &seq(n), 1.0, 25.0, &ConstantBoundary::new(0.3))
+            .evaluated;
+        assert!(strict > lax);
+    }
+
+    #[test]
+    fn completed_walk_uses_full_margin_for_skip_decision() {
+        let w = [0.1, 0.1];
+        let x = [1.0, 1.0];
+        let r = Walker::new().walk(&w, &x, 1.0, &seq(2), 1.0, 0.25, &ConstantBoundary::new(0.1));
+        assert_eq!(r.outcome, WalkOutcome::Completed);
+        // full margin 0.2 < theta 1.0 -> update needed
+        assert!(!r.skip_update(1.0));
+    }
+}

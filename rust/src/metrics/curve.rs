@@ -1,0 +1,141 @@
+//! Learning curves: (x, y) series with fixed-budget checkpointing.
+//!
+//! The paper's middle/right subfigures plot error versus examples seen.
+//! [`Curve`] records points and supports averaging several runs at shared
+//! x-positions (the paper averages 10 permutations).
+
+
+/// A named (x, y) series.
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    /// Series name (e.g. "attentive/test-error").
+    pub name: String,
+    /// X values (e.g. examples seen).
+    pub xs: Vec<f64>,
+    /// Y values.
+    pub ys: Vec<f64>,
+}
+
+impl Curve {
+    /// Empty named curve.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), xs: Vec::new(), ys: Vec::new() }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.xs.push(x);
+        self.ys.push(y);
+    }
+
+    /// Number of points.
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Is the curve empty?
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Last y value, if any.
+    pub fn last_y(&self) -> Option<f64> {
+        self.ys.last().copied()
+    }
+
+    /// Pointwise mean of several curves sharing x-positions. Curves of
+    /// different lengths are averaged over their common prefix.
+    pub fn mean(name: impl Into<String>, curves: &[Curve]) -> Curve {
+        let mut out = Curve::new(name);
+        if curves.is_empty() {
+            return out;
+        }
+        let len = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+        for i in 0..len {
+            let x = curves[0].xs[i];
+            let y = curves.iter().map(|c| c.ys[i]).sum::<f64>() / curves.len() as f64;
+            out.push(x, y);
+        }
+        out
+    }
+
+    /// Pointwise standard deviation across runs (for error bars).
+    pub fn std(name: impl Into<String>, curves: &[Curve]) -> Curve {
+        let mut out = Curve::new(name);
+        if curves.is_empty() {
+            return out;
+        }
+        let len = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+        for i in 0..len {
+            let mean = curves.iter().map(|c| c.ys[i]).sum::<f64>() / curves.len() as f64;
+            let var = curves.iter().map(|c| (c.ys[i] - mean).powi(2)).sum::<f64>()
+                / curves.len() as f64;
+            out.push(curves[0].xs[i], var.sqrt());
+        }
+        out
+    }
+}
+
+/// Decides when to take curve checkpoints: every `every` examples.
+#[derive(Debug, Clone, Copy)]
+pub struct Checkpointer {
+    /// Checkpoint period in examples.
+    pub every: u64,
+}
+
+impl Checkpointer {
+    /// Checkpoint every `every` examples (min 1).
+    pub fn new(every: u64) -> Self {
+        Self { every: every.max(1) }
+    }
+
+    /// Should we checkpoint after `examples` consumed?
+    #[inline]
+    pub fn due(&self, examples: u64) -> bool {
+        examples % self.every == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut c = Curve::new("t");
+        c.push(1.0, 0.5);
+        c.push(2.0, 0.25);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.last_y(), Some(0.25));
+    }
+
+    #[test]
+    fn mean_and_std_across_runs() {
+        let mut a = Curve::new("a");
+        let mut b = Curve::new("b");
+        for i in 0..5 {
+            a.push(i as f64, 1.0);
+            b.push(i as f64, 3.0);
+        }
+        b.push(5.0, 9.0); // extra point ignored (common prefix)
+        let m = Curve::mean("m", &[a.clone(), b.clone()]);
+        assert_eq!(m.len(), 5);
+        assert!(m.ys.iter().all(|&y| (y - 2.0).abs() < 1e-12));
+        let s = Curve::std("s", &[a, b]);
+        assert!(s.ys.iter().all(|&y| (y - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn mean_of_none_is_empty() {
+        assert!(Curve::mean("m", &[]).is_empty());
+    }
+
+    #[test]
+    fn checkpointer_period() {
+        let c = Checkpointer::new(100);
+        assert!(c.due(100));
+        assert!(c.due(200));
+        assert!(!c.due(150));
+        assert!(Checkpointer::new(0).due(1)); // clamped to 1
+    }
+}

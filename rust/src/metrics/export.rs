@@ -1,0 +1,146 @@
+//! CSV / JSON export of metrics and curves.
+//!
+//! The bench harness regenerates every paper figure as a CSV the plots
+//! (and EXPERIMENTS.md tables) are built from. Writers are tolerant of
+//! ragged curve sets and always emit a header.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+use super::curve::Curve;
+
+/// Write a set of curves as long-format CSV: `series,x,y`.
+pub fn curves_to_csv(curves: &[Curve], path: &Path) -> Result<()> {
+    let f = File::create(path).map_err(|e| Error::io(path, e))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "series,x,y").map_err(|e| Error::io(path, e))?;
+    for c in curves {
+        for (x, y) in c.xs.iter().zip(&c.ys) {
+            writeln!(w, "{},{},{}", c.name, x, y).map_err(|e| Error::io(path, e))?;
+        }
+    }
+    Ok(())
+}
+
+/// Render curves as a long-format CSV string (for stdout reporting).
+pub fn curves_to_csv_string(curves: &[Curve]) -> String {
+    let mut s = String::from("series,x,y\n");
+    for c in curves {
+        for (x, y) in c.xs.iter().zip(&c.ys) {
+            s.push_str(&format!("{},{},{}\n", c.name, x, y));
+        }
+    }
+    s
+}
+
+/// Write a [`Json`] document as pretty JSON.
+pub fn to_json_file(value: &crate::util::json::Json, path: &Path) -> Result<()> {
+    std::fs::write(path, value.to_string_pretty()).map_err(|e| Error::io(path, e))
+}
+
+/// A fixed-width console table builder for bench output (mirrors the
+/// rows the paper's figures display).
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Table with the given column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with padded columns.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], width: &[usize]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate().take(width.len()) {
+                line.push_str(&format!("{:<w$}  ", c, w = width[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * ncol));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r, &width));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_round_shape() {
+        let mut c = Curve::new("s1");
+        c.push(1.0, 2.0);
+        c.push(3.0, 4.0);
+        let s = curves_to_csv_string(&[c]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "series,x,y");
+        assert_eq!(lines[1], "s1,1,2");
+        assert_eq!(lines[2], "s1,3,4");
+    }
+
+    #[test]
+    fn csv_file_write() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let p = dir.path().join("c.csv");
+        let mut c = Curve::new("x");
+        c.push(0.0, 1.0);
+        curves_to_csv(&[c], &p).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.contains("x,0,1"));
+    }
+
+    #[test]
+    fn json_file_write() {
+        let dir = crate::util::tempdir::TempDir::new("t");
+        let p = dir.path().join("m.json");
+        let m = crate::metrics::TrainingMetrics::new();
+        to_json_file(&m.to_json(), &p).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.contains("\"examples\": 0"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "features"]);
+        t.row(&["attentive".into(), "49.2".into()]);
+        t.row(&["full".into(), "784".into()]);
+        let s = t.render();
+        assert!(s.contains("algo"));
+        assert!(s.lines().count() == 4);
+        // all data lines start at the same column for the 2nd field
+        let l1 = s.lines().nth(2).unwrap();
+        let l2 = s.lines().nth(3).unwrap();
+        assert_eq!(l1.find("49.2").map(|i| i > 9), Some(true));
+        assert!(l2.starts_with("full"));
+    }
+}

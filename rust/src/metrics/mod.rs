@@ -1,0 +1,159 @@
+//! Metrics: counters, learning curves, feature-cost accounting, export.
+//!
+//! The paper's figures are all derived from three streams: features
+//! evaluated per example, generalization error over the training stream,
+//! and prediction error under early stopping. [`TrainingMetrics`]
+//! accumulates them with constant-time updates on the hot path;
+//! [`curve::Curve`] down-samples to fixed checkpoints; [`export`] writes
+//! CSV/JSON rows the bench harness and plots consume.
+
+pub mod curve;
+pub mod export;
+
+
+use crate::stst::decision::DecisionAudit;
+
+/// Rolling metrics for one training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainingMetrics {
+    /// Examples consumed.
+    pub examples: u64,
+    /// Total feature evaluations spent.
+    pub features_evaluated: u64,
+    /// Feature evaluations a full-computation learner would have spent
+    /// (`examples × dim`; the denominator of the savings ratio).
+    pub features_full: u64,
+    /// Model updates performed.
+    pub updates: u64,
+    /// Examples skipped via early stop.
+    pub early_stops: u64,
+    /// Online mistakes (sign errors at evaluation time, before update).
+    pub online_mistakes: u64,
+    /// Decision-error audit (populated when auditing is on).
+    pub audit: DecisionAudit,
+}
+
+impl TrainingMetrics {
+    /// Fresh metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one consumed example.
+    #[inline]
+    pub fn record_example(
+        &mut self,
+        dim: usize,
+        evaluated: usize,
+        updated: bool,
+        early_stopped: bool,
+        mistake: bool,
+    ) {
+        self.examples += 1;
+        self.features_evaluated += evaluated as u64;
+        self.features_full += dim as u64;
+        if updated {
+            self.updates += 1;
+        }
+        if early_stopped {
+            self.early_stops += 1;
+        }
+        if mistake {
+            self.online_mistakes += 1;
+        }
+    }
+
+    /// Average features evaluated per example.
+    pub fn avg_features(&self) -> f64 {
+        if self.examples == 0 {
+            0.0
+        } else {
+            self.features_evaluated as f64 / self.examples as f64
+        }
+    }
+
+    /// Computation-saving factor vs. full evaluation (the paper's "15×").
+    pub fn speedup(&self) -> f64 {
+        if self.features_evaluated == 0 {
+            1.0
+        } else {
+            self.features_full as f64 / self.features_evaluated as f64
+        }
+    }
+
+    /// Early-stop rate over examples.
+    pub fn early_stop_rate(&self) -> f64 {
+        if self.examples == 0 { 0.0 } else { self.early_stops as f64 / self.examples as f64 }
+    }
+
+    /// Online mistake rate.
+    pub fn online_error(&self) -> f64 {
+        if self.examples == 0 { 0.0 } else { self.online_mistakes as f64 / self.examples as f64 }
+    }
+
+    /// Serialize to a [`crate::util::json::Json`] object.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj([
+            ("examples", Json::Num(self.examples as f64)),
+            ("features_evaluated", Json::Num(self.features_evaluated as f64)),
+            ("features_full", Json::Num(self.features_full as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("early_stops", Json::Num(self.early_stops as f64)),
+            ("online_mistakes", Json::Num(self.online_mistakes as f64)),
+            ("avg_features", Json::Num(self.avg_features())),
+            ("speedup", Json::Num(self.speedup())),
+            ("decision_error_rate", Json::Num(self.audit.conditional_error_rate())),
+        ])
+    }
+
+    /// Merge a shard (parallel training).
+    pub fn merge(&mut self, other: &TrainingMetrics) {
+        self.examples += other.examples;
+        self.features_evaluated += other.features_evaluated;
+        self.features_full += other.features_full;
+        self.updates += other.updates;
+        self.early_stops += other.early_stops;
+        self.online_mistakes += other.online_mistakes;
+        self.audit.merge(&other.audit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let mut m = TrainingMetrics::new();
+        m.record_example(784, 49, false, true, false);
+        m.record_example(784, 784, true, false, true);
+        assert_eq!(m.examples, 2);
+        assert!((m.avg_features() - 416.5).abs() < 1e-12);
+        assert!((m.speedup() - 1568.0 / 833.0).abs() < 1e-12);
+        assert!((m.early_stop_rate() - 0.5).abs() < 1e-12);
+        assert!((m.online_error() - 0.5).abs() < 1e-12);
+        assert_eq!(m.updates, 1);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = TrainingMetrics::new();
+        assert_eq!(m.avg_features(), 0.0);
+        assert_eq!(m.speedup(), 1.0);
+        assert_eq!(m.online_error(), 0.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = TrainingMetrics::new();
+        a.record_example(10, 5, true, false, false);
+        let mut b = TrainingMetrics::new();
+        b.record_example(10, 10, false, true, true);
+        a.merge(&b);
+        assert_eq!(a.examples, 2);
+        assert_eq!(a.features_evaluated, 15);
+        assert_eq!(a.early_stops, 1);
+        assert_eq!(a.online_mistakes, 1);
+    }
+}

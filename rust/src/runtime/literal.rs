@@ -1,0 +1,76 @@
+//! Literal conversion helpers (f64 host data ⇄ f32 XLA literals).
+//!
+//! The learners keep f64 for numerically robust online statistics; the
+//! artifacts are compiled for f32 (the TPU-native compute type per the
+//! hardware adaptation). These helpers centralize the down/up-casts and
+//! shape plumbing with hard dimension checks.
+
+use crate::error::{Error, Result};
+
+/// Build a 1-D f32 literal from f64 data.
+pub fn vec_f32(data: &[f64]) -> xla::Literal {
+    let f: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    xla::Literal::vec1(&f)
+}
+
+/// Build a rank-2 f32 literal `[rows, cols]` from row-major f64 data.
+pub fn mat_f32(data: &[f64], rows: usize, cols: usize) -> Result<xla::Literal> {
+    if data.len() != rows * cols {
+        return Err(Error::DimMismatch {
+            expected: rows * cols,
+            got: data.len(),
+            context: "mat_f32".into(),
+        });
+    }
+    let f: Vec<f32> = data.iter().map(|&v| v as f32).collect();
+    Ok(xla::Literal::vec1(&f).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar_f32(v: f64) -> xla::Literal {
+    xla::Literal::scalar(v as f32)
+}
+
+/// Extract an f32 literal into f64s, checking the element count.
+pub fn to_vec_f64(lit: &xla::Literal, expect: usize) -> Result<Vec<f64>> {
+    let v: Vec<f32> = lit.to_vec()?;
+    if v.len() != expect {
+        return Err(Error::DimMismatch {
+            expected: expect,
+            got: v.len(),
+            context: "to_vec_f64".into(),
+        });
+    }
+    Ok(v.into_iter().map(|x| x as f64).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_round_trip() {
+        let lit = vec_f32(&[1.0, -2.5, 3.25]);
+        let back = to_vec_f64(&lit, 3).unwrap();
+        assert_eq!(back, vec![1.0, -2.5, 3.25]);
+    }
+
+    #[test]
+    fn mat_shape_checked() {
+        assert!(mat_f32(&[1.0; 6], 2, 3).is_ok());
+        assert!(mat_f32(&[1.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn extract_count_checked() {
+        let lit = vec_f32(&[1.0, 2.0]);
+        assert!(to_vec_f64(&lit, 3).is_err());
+    }
+
+    #[test]
+    fn scalar_builds() {
+        let s = scalar_f32(0.5);
+        let v: f32 = s.get_first_element().unwrap();
+        assert_eq!(v, 0.5);
+    }
+}

@@ -1,0 +1,167 @@
+//! Batched blocked-margin execution (the L1 Pallas kernel, from rust).
+//!
+//! Artifact contract (`artifacts/margin_b{BLOCK}.hlo.txt`, produced by
+//! `python/compile/aot.py::export_margin`):
+//!
+//! ```text
+//! inputs : w  f32[DIM]          — weight vector
+//!          x  f32[BATCH, DIM]   — example batch (policy-ordered rows)
+//!          y  f32[BATCH]        — signed labels
+//! output : (prefix f32[BATCH, NBLOCKS],)
+//!          prefix[b, k] = y[b] · Σ_{j < (k+1)·BLOCK} w[j]·x[b, j]
+//! ```
+//!
+//! The kernel emits the *running signed margin at every block boundary*
+//! for the whole batch in one pass; the coordinator applies the STST
+//! boundary to the prefix rows ([`crate::margin::evaluator::BlockedEvaluator::decide_from_prefixes`])
+//! — block-granular curtailment, the TPU adaptation of Algorithm 1.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::margin::evaluator::BlockedEvaluator;
+use crate::stst::boundary::Boundary;
+
+use super::literal::{mat_f32, to_vec_f64, vec_f32};
+use super::Runtime;
+
+/// Compiled-in artifact geometry (must match aot.py).
+pub mod shapes {
+    /// Feature dimensionality (28×28 digits).
+    pub const DIM: usize = 784;
+    /// Batch rows per kernel call.
+    pub const BATCH: usize = 32;
+    /// Features per block (⇒ 49 blocks).
+    pub const BLOCK: usize = 16;
+    /// Blocks per example.
+    pub const NBLOCKS: usize = DIM / BLOCK;
+}
+
+/// Runs the blocked-margin artifact over example batches.
+pub struct BlockedMarginExecutor {
+    rt: Runtime,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    evaluator: BlockedEvaluator,
+}
+
+impl BlockedMarginExecutor {
+    /// Artifact file name for the compiled block size.
+    pub fn artifact_name() -> String {
+        format!("margin_b{}.hlo.txt", shapes::BLOCK)
+    }
+
+    /// Load and compile the artifact (errors with `MissingArtifact` if
+    /// `make artifacts` has not been run).
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        let exe = rt.load(&Self::artifact_name())?;
+        Ok(Self { rt: rt.clone(), exe, evaluator: BlockedEvaluator::new(shapes::BLOCK) })
+    }
+
+    /// Compute the signed prefix-margin matrix for up to [`shapes::BATCH`]
+    /// examples (rows padded with zeros). Returns one `NBLOCKS`-vector per
+    /// input example.
+    pub fn prefixes(
+        &self,
+        w: &[f64],
+        examples: &[&[f64]],
+        labels: &[f64],
+    ) -> Result<Vec<Vec<f64>>> {
+        if w.len() != shapes::DIM {
+            return Err(Error::DimMismatch {
+                expected: shapes::DIM,
+                got: w.len(),
+                context: "margin_exec weights".into(),
+            });
+        }
+        if examples.len() != labels.len() {
+            return Err(Error::Config(format!(
+                "{} examples but {} labels",
+                examples.len(),
+                labels.len()
+            )));
+        }
+        if examples.len() > shapes::BATCH {
+            return Err(Error::Config(format!(
+                "batch {} exceeds compiled batch {}",
+                examples.len(),
+                shapes::BATCH
+            )));
+        }
+        let mut xbuf = vec![0.0f64; shapes::BATCH * shapes::DIM];
+        for (i, ex) in examples.iter().enumerate() {
+            if ex.len() != shapes::DIM {
+                return Err(Error::DimMismatch {
+                    expected: shapes::DIM,
+                    got: ex.len(),
+                    context: format!("margin_exec example {i}"),
+                });
+            }
+            xbuf[i * shapes::DIM..(i + 1) * shapes::DIM].copy_from_slice(ex);
+        }
+        let mut ybuf = vec![0.0f64; shapes::BATCH];
+        ybuf[..labels.len()].copy_from_slice(labels);
+
+        let outputs = self.rt.execute(
+            &self.exe,
+            &[vec_f32(w), mat_f32(&xbuf, shapes::BATCH, shapes::DIM)?, vec_f32(&ybuf)],
+        )?;
+        let prefix = outputs
+            .first()
+            .ok_or_else(|| Error::Xla("margin artifact returned empty tuple".into()))?;
+        let flat = to_vec_f64(prefix, shapes::BATCH * shapes::NBLOCKS)?;
+        Ok((0..examples.len())
+            .map(|i| flat[i * shapes::NBLOCKS..(i + 1) * shapes::NBLOCKS].to_vec())
+            .collect())
+    }
+
+    /// Full batched sequential decision: run the kernel, then apply the
+    /// boundary to each prefix row. Returns per-example
+    /// `(features_charged, early_stopped, margin_at_stop)`.
+    pub fn decide<B: Boundary + ?Sized>(
+        &self,
+        w: &[f64],
+        examples: &[&[f64]],
+        labels: &[f64],
+        theta: f64,
+        var_sn: &[f64],
+        boundary: &B,
+    ) -> Result<Vec<(usize, bool, f64)>> {
+        let rows = self.prefixes(w, examples, labels)?;
+        Ok(rows
+            .iter()
+            .zip(var_sn)
+            .map(|(row, &v)| {
+                self.evaluator.decide_from_prefixes(row, shapes::DIM, theta, v, boundary)
+            })
+            .collect())
+    }
+
+    /// The block-granular evaluator this executor mirrors (tests use it
+    /// to cross-check native vs XLA decisions).
+    pub fn evaluator(&self) -> &BlockedEvaluator {
+        &self.evaluator
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Pure shape/validation tests; numeric agreement with the native
+    //! evaluator lives in `rust/tests/integration_runtime.rs` (needs
+    //! `make artifacts`).
+    use super::*;
+
+    #[test]
+    fn artifact_name_encodes_block() {
+        assert_eq!(BlockedMarginExecutor::artifact_name(), "margin_b16.hlo.txt");
+        assert_eq!(shapes::NBLOCKS * shapes::BLOCK, shapes::DIM);
+    }
+
+    #[test]
+    fn missing_artifact_surfaces_cleanly() {
+        let rt = Runtime::with_artifact_dir("/definitely-missing").unwrap();
+        match BlockedMarginExecutor::new(&rt) {
+            Err(Error::MissingArtifact(_)) => {}
+            other => panic!("expected MissingArtifact, got {:?}", other.err()),
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! PJRT runtime: loads and executes the AOT-compiled XLA artifacts.
+//!
+//! The build-time half lives in `python/compile/aot.py`: JAX/Pallas
+//! functions are lowered once to **HLO text** (the interchange format the
+//! bundled xla_extension 0.5.1 accepts — jax ≥0.5's serialized protos use
+//! 64-bit ids it rejects) and dropped into `artifacts/`. At runtime this
+//! module:
+//!
+//! 1. opens a [`xla::PjRtClient`] (CPU PJRT plugin);
+//! 2. parses each artifact with `HloModuleProto::from_text_file`;
+//! 3. compiles it into a cached executable;
+//! 4. feeds it rust-owned buffers on the hot path — no Python anywhere.
+//!
+//! Submodules:
+//! * [`literal`] — f64⇄f32 literal conversion helpers with shape checks;
+//! * [`margin_exec`] — the batched blocked-margin kernel (L1 Pallas):
+//!   per-block prefix margins for a whole batch in one call;
+//! * [`pegasos_exec`] — the fused Pegasos update+projection step (L2);
+//! * [`predict_exec`] — dense batched margin (MXU matmul path) for
+//!   test-set evaluation.
+
+pub mod literal;
+pub mod margin_exec;
+pub mod pegasos_exec;
+pub mod predict_exec;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const ARTIFACT_DIR: &str = "artifacts";
+
+/// Shared PJRT client + executable cache.
+///
+/// Compilation is expensive (~ms–s); executables are cached by artifact
+/// path and reused across calls. `Runtime` is cheaply clonable (Arc).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+    cache: Arc<Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>>,
+    artifact_dir: PathBuf,
+}
+
+impl Runtime {
+    /// Open the CPU PJRT client with the default artifact directory.
+    pub fn cpu() -> Result<Self> {
+        Self::with_artifact_dir(ARTIFACT_DIR)
+    }
+
+    /// Open the CPU PJRT client rooted at `artifact_dir`.
+    pub fn with_artifact_dir(artifact_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client: Arc::new(client),
+            cache: Arc::new(Mutex::new(HashMap::new())),
+            artifact_dir: artifact_dir.into(),
+        })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// The PJRT client (for advanced callers).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Resolve an artifact name (`"margin_b16.hlo.txt"`) to its path.
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifact_dir.join(name)
+    }
+
+    /// Is the artifact present on disk?
+    pub fn artifact_available(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let path = self.artifact_path(name);
+        self.load_path(&path)
+    }
+
+    /// Load + compile an explicit path (cached).
+    pub fn load_path(&self, path: &Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(path) {
+            return Ok(exe.clone());
+        }
+        if !path.exists() {
+            return Err(Error::MissingArtifact(path.to_path_buf()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp)?);
+        self.cache.lock().unwrap().insert(path.to_path_buf(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a loaded artifact on literal inputs, returning the output
+    /// literals (tuple outputs are decomposed — aot.py lowers everything
+    /// with `return_tuple=True`).
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| Error::Xla("executable produced no output".into()))?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_opens() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let rt = Runtime::with_artifact_dir("/nonexistent-dir").unwrap();
+        match rt.load("nope.hlo.txt") {
+            Err(Error::MissingArtifact(p)) => {
+                assert!(p.to_string_lossy().contains("nope.hlo.txt"))
+            }
+            other => panic!("expected MissingArtifact, got {:?}", other.map(|_| ())),
+        }
+        assert!(!rt.artifact_available("nope.hlo.txt"));
+    }
+}

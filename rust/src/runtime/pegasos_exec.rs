@@ -1,0 +1,133 @@
+//! Fused Pegasos update+projection step via the L2 artifact.
+//!
+//! Artifact contract (`artifacts/pegasos_step.hlo.txt`, from
+//! `python/compile/aot.py::export_pegasos_step`):
+//!
+//! ```text
+//! inputs : w      f32[DIM]  — current weights
+//!          x      f32[DIM]  — violating example
+//!          y      f32[]     — its label (±1)
+//!          t      f32[]     — update counter (≥ 1)
+//!          lam    f32[]     — regularization λ
+//! output : (w_new f32[DIM],)
+//!          w' = (1 − 1/t)·w + y/(λt)·x ;  w_new = min(1, (1/√λ)/‖w'‖)·w'
+//! ```
+//!
+//! The donated-buffer layout and the fused decay+axpy+projection are the
+//! L2 optimizations described in DESIGN.md §6.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::literal::{scalar_f32, to_vec_f64, vec_f32};
+use super::margin_exec::shapes;
+use super::Runtime;
+
+/// Runs the fused Pegasos step artifact.
+pub struct PegasosStepExecutor {
+    rt: Runtime,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl PegasosStepExecutor {
+    /// Artifact file name.
+    pub const ARTIFACT: &'static str = "pegasos_step.hlo.txt";
+
+    /// Load and compile the artifact.
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self { rt: rt.clone(), exe: rt.load(Self::ARTIFACT)? })
+    }
+
+    /// Execute one update step; returns the new weight vector.
+    pub fn step(&self, w: &[f64], x: &[f64], y: f64, t: u64, lambda: f64) -> Result<Vec<f64>> {
+        if w.len() != shapes::DIM || x.len() != shapes::DIM {
+            return Err(Error::DimMismatch {
+                expected: shapes::DIM,
+                got: w.len().min(x.len()),
+                context: "pegasos_exec".into(),
+            });
+        }
+        if t == 0 {
+            return Err(Error::Config("pegasos step counter t must be >= 1".into()));
+        }
+        let outputs = self.rt.execute(
+            &self.exe,
+            &[vec_f32(w), vec_f32(x), scalar_f32(y), scalar_f32(t as f64), scalar_f32(lambda)],
+        )?;
+        let w_new = outputs
+            .first()
+            .ok_or_else(|| Error::Xla("pegasos artifact returned empty tuple".into()))?;
+        to_vec_f64(w_new, shapes::DIM)
+    }
+
+    /// Reference implementation of the same step in pure rust (used by the
+    /// integration test to verify the artifact's numerics and by callers
+    /// that want the f64 path).
+    pub fn step_reference(w: &[f64], x: &[f64], y: f64, t: u64, lambda: f64) -> Vec<f64> {
+        let mu = 1.0 / (lambda * t as f64);
+        let decay = 1.0 - 1.0 / t as f64;
+        let mut out: Vec<f64> =
+            w.iter().zip(x).map(|(&wj, &xj)| decay * wj + mu * y * xj).collect();
+        let norm = out.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let limit = 1.0 / lambda.sqrt();
+        if norm > limit {
+            let c = limit / norm;
+            out.iter_mut().for_each(|v| *v *= c);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_step_matches_learner_update() {
+        // The standalone reference must agree with BoundedPegasos::update
+        // (t=1: decay 0, mu=1/λ).
+        let w = vec![0.5; shapes::DIM];
+        let x = vec![0.25; shapes::DIM];
+        let lambda = 0.01;
+        let out = PegasosStepExecutor::step_reference(&w, &x, 1.0, 1, lambda);
+        // decay = 0 -> w' = (1/λ)·0.25 = 25 per coord; norm = 25·28 = 700
+        // limit = 10 -> projected
+        let expect_unproj = 25.0;
+        let norm = (expect_unproj * expect_unproj * shapes::DIM as f64).sqrt();
+        let c = (1.0 / lambda.sqrt()) / norm;
+        for v in &out {
+            assert!((v - expect_unproj * c).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn reference_no_projection_inside_ball() {
+        let mut w = vec![0.0; shapes::DIM];
+        w[0] = 0.1;
+        let mut x = vec![0.0; shapes::DIM];
+        x[0] = 0.1;
+        let out = PegasosStepExecutor::step_reference(&w, &x, 1.0, 100, 1.0);
+        // mu = 1/100, decay = 0.99 -> w0 = 0.099 + 0.001 = 0.1; norm 0.1 < 1
+        assert!((out[0] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_artifact_is_clean() {
+        let rt = Runtime::with_artifact_dir("/definitely-missing").unwrap();
+        assert!(matches!(
+            PegasosStepExecutor::new(&rt),
+            Err(Error::MissingArtifact(_))
+        ));
+    }
+
+    #[test]
+    fn zero_t_rejected() {
+        // Construct-free check of the validation path: we need an executor
+        // to call step(), so only exercise the reference precondition here.
+        // (Artifact-backed validation is covered in integration tests.)
+        assert!(PegasosStepExecutor::step_reference(&[0.0; 784], &[0.0; 784], 1.0, 1, 0.1)
+            .iter()
+            .all(|v| *v == 0.0));
+    }
+}

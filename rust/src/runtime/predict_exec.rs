@@ -1,0 +1,94 @@
+//! Dense batched margin (the MXU matmul path) for test-set evaluation.
+//!
+//! Artifact contract (`artifacts/predict_b{BATCH}.hlo.txt`, from
+//! `python/compile/aot.py::export_predict`):
+//!
+//! ```text
+//! inputs : w f32[DIM], x f32[BATCH, DIM]
+//! output : (margins f32[BATCH],)   margins = x @ w
+//! ```
+//!
+//! Used by the serving example and by held-out evaluation when the XLA
+//! path is enabled; on a real TPU this is the systolic-array matmul the
+//! hardware-adaptation section routes dense work to.
+
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+
+use super::literal::{mat_f32, to_vec_f64, vec_f32};
+use super::margin_exec::shapes;
+use super::Runtime;
+
+/// Runs the dense-predict artifact over example batches of any size
+/// (internally tiled into compiled-batch chunks).
+pub struct DensePredictExecutor {
+    rt: Runtime,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl DensePredictExecutor {
+    /// Artifact file name for the compiled batch.
+    pub fn artifact_name() -> String {
+        format!("predict_b{}.hlo.txt", shapes::BATCH)
+    }
+
+    /// Load and compile the artifact.
+    pub fn new(rt: &Runtime) -> Result<Self> {
+        Ok(Self { rt: rt.clone(), exe: rt.load(&Self::artifact_name())? })
+    }
+
+    /// Margins for an arbitrary number of examples (row-major features).
+    pub fn margins(&self, w: &[f64], features: &[f64], count: usize) -> Result<Vec<f64>> {
+        if w.len() != shapes::DIM {
+            return Err(Error::DimMismatch {
+                expected: shapes::DIM,
+                got: w.len(),
+                context: "predict weights".into(),
+            });
+        }
+        if features.len() != count * shapes::DIM {
+            return Err(Error::DimMismatch {
+                expected: count * shapes::DIM,
+                got: features.len(),
+                context: "predict features".into(),
+            });
+        }
+        let w_lit = vec_f32(w);
+        let mut out = Vec::with_capacity(count);
+        let mut xbuf = vec![0.0f64; shapes::BATCH * shapes::DIM];
+        let mut i = 0;
+        while i < count {
+            let chunk = (count - i).min(shapes::BATCH);
+            xbuf.iter_mut().for_each(|v| *v = 0.0);
+            xbuf[..chunk * shapes::DIM]
+                .copy_from_slice(&features[i * shapes::DIM..(i + chunk) * shapes::DIM]);
+            let outputs = self
+                .rt
+                .execute(&self.exe, &[w_lit.clone(), mat_f32(&xbuf, shapes::BATCH, shapes::DIM)?])?;
+            let m = outputs
+                .first()
+                .ok_or_else(|| Error::Xla("predict artifact returned empty tuple".into()))?;
+            let vals = to_vec_f64(m, shapes::BATCH)?;
+            out.extend_from_slice(&vals[..chunk]);
+            i += chunk;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_name_encodes_batch() {
+        assert_eq!(DensePredictExecutor::artifact_name(), "predict_b32.hlo.txt");
+    }
+
+    #[test]
+    fn missing_artifact_is_clean() {
+        let rt = Runtime::with_artifact_dir("/definitely-missing").unwrap();
+        assert!(matches!(DensePredictExecutor::new(&rt), Err(Error::MissingArtifact(_))));
+    }
+}

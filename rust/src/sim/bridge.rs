@@ -1,0 +1,170 @@
+//! Figure 2(a): empirical decision-error rate vs. Brownian-bridge theory.
+//!
+//! For each `(n, δ)` cell we draw many walks, run the Constant STST with
+//! level `τ(δ, var(S_n))` against threshold θ, finish every stopped walk
+//! out-of-band (the audit), and report the empirical conditional
+//! decision-error rate `P(stopped | S_n < θ)` next to the theoretical δ.
+//! The paper's claim: "the boundary behaves similarly to what's expected
+//! from theory".
+
+
+use crate::stst::boundary::{Boundary, ConstantBoundary, StopContext};
+use crate::stst::decision::{DecisionAudit, EvalOutcome};
+
+use super::walks::{WalkGenerator, WeightProfile};
+
+/// One cell of the Figure 2(a) grid.
+#[derive(Debug, Clone)]
+pub struct BridgePoint {
+    /// Walk length.
+    pub n: usize,
+    /// Target decision-error rate.
+    pub delta: f64,
+    /// Decision threshold θ.
+    pub theta: f64,
+    /// Empirical conditional error rate `P(stop before n | S_n < θ)`.
+    pub empirical: f64,
+    /// Number of "important" walks (`S_n < θ`) observed — the
+    /// conditioning set size; governs the error bars.
+    pub important: u64,
+    /// Empirical unconditional stop rate (computation saving).
+    pub stop_rate: f64,
+    /// Mean stopping time over stopped walks.
+    pub mean_stop_time: f64,
+}
+
+/// Simulation parameters for the Figure 2(a) sweep.
+#[derive(Debug, Clone)]
+pub struct BridgeSimConfig {
+    /// Walks per (n, δ) cell.
+    pub walks_per_cell: usize,
+    /// Drift of the increments (must be > 0 per the theory's
+    /// rare-event assumption; smaller drift ⇒ more important walks).
+    pub drift: f64,
+    /// Uniform noise half-width.
+    pub spread: f64,
+    /// Decision threshold θ.
+    pub theta: f64,
+    /// Weight profile.
+    pub profile: WeightProfile,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl Default for BridgeSimConfig {
+    fn default() -> Self {
+        Self {
+            walks_per_cell: 20_000,
+            drift: 0.02,
+            spread: 0.9,
+            theta: 0.0,
+            profile: WeightProfile::Uniform,
+            seed: 0xB51D_6E,
+        }
+    }
+}
+
+/// Run one `(n, δ)` cell: returns the empirical rates.
+pub fn simulate_cell(cfg: &BridgeSimConfig, n: usize, delta: f64) -> BridgePoint {
+    let boundary = ConstantBoundary::new(delta);
+    let mut gen = WalkGenerator::new(
+        cfg.seed ^ (n as u64) << 20 ^ (delta.to_bits().rotate_left(17)),
+        cfg.drift,
+        cfg.spread,
+        cfg.profile,
+    );
+    let var_sn = gen.sum_variance(n);
+    let ctx = StopContext { evaluated: 0, total: n, theta: cfg.theta, var_sn };
+    let tau = boundary.level(&ctx); // constant: independent of i
+
+    let mut audit = DecisionAudit::new();
+    let mut stop_times: u64 = 0;
+    let mut stops: u64 = 0;
+    for _ in 0..cfg.walks_per_cell {
+        let inc = gen.draw(n);
+        // Walk the prefix; record first crossing of theta + tau.
+        let mut s = 0.0;
+        let mut stopped_at: Option<usize> = None;
+        for (i, &d) in inc.iter().enumerate() {
+            s += d;
+            if stopped_at.is_none() && s >= cfg.theta + tau && i + 1 < n {
+                stopped_at = Some(i + 1);
+                // keep summing: the audit needs the full sum
+            }
+        }
+        let important = s < cfg.theta;
+        match (stopped_at, important) {
+            (Some(t), true) => {
+                audit.record(EvalOutcome::StoppedBelow);
+                stop_times += t as u64;
+                stops += 1;
+            }
+            (Some(t), false) => {
+                audit.record(EvalOutcome::StoppedAbove);
+                stop_times += t as u64;
+                stops += 1;
+            }
+            (None, true) => audit.record(EvalOutcome::FullBelow),
+            (None, false) => audit.record(EvalOutcome::FullAbove),
+        }
+    }
+    BridgePoint {
+        n,
+        delta,
+        theta: cfg.theta,
+        empirical: audit.conditional_error_rate(),
+        important: audit.important(),
+        stop_rate: audit.stop_rate(),
+        mean_stop_time: if stops == 0 { n as f64 } else { stop_times as f64 / stops as f64 },
+    }
+}
+
+/// Full Figure 2(a) sweep over `ns × deltas` (parallel over cells).
+pub fn simulate_decision_errors(
+    cfg: &BridgeSimConfig,
+    ns: &[usize],
+    deltas: &[f64],
+) -> Vec<BridgePoint> {
+    let cells: Vec<(usize, f64)> =
+        ns.iter().flat_map(|&n| deltas.iter().map(move |&d| (n, d))).collect();
+    crate::util::parallel::par_map(&cells, |&(n, d)| simulate_cell(cfg, n, d))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_error_tracks_delta() {
+        // The conditional error rate should be within a small factor of δ
+        // (the bridge approximation is asymptotic; generous tolerance).
+        let cfg = BridgeSimConfig { walks_per_cell: 8_000, ..Default::default() };
+        for delta in [0.05, 0.1, 0.3] {
+            let p = simulate_cell(&cfg, 512, delta);
+            assert!(
+                p.empirical < 2.5 * delta + 0.02,
+                "delta={delta}: empirical {} way above target",
+                p.empirical
+            );
+            // and the test is not vacuous: it must actually stop walks
+            assert!(p.stop_rate > 0.3, "delta={delta}: stop rate {}", p.stop_rate);
+        }
+    }
+
+    #[test]
+    fn stricter_delta_fewer_errors() {
+        let cfg = BridgeSimConfig { walks_per_cell: 8_000, ..Default::default() };
+        let strict = simulate_cell(&cfg, 512, 0.01);
+        let lax = simulate_cell(&cfg, 512, 0.4);
+        assert!(strict.empirical <= lax.empirical + 0.02);
+        assert!(strict.mean_stop_time > lax.mean_stop_time);
+    }
+
+    #[test]
+    fn sweep_covers_grid() {
+        let cfg = BridgeSimConfig { walks_per_cell: 500, ..Default::default() };
+        let pts = simulate_decision_errors(&cfg, &[64, 128], &[0.1, 0.2, 0.3]);
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().any(|p| p.n == 64 && p.delta == 0.3));
+    }
+}

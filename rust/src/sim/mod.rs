@@ -1,0 +1,16 @@
+//! Random-walk simulation — reproduces Figure 2.
+//!
+//! * [`walks`] — generators of weighted bounded random walks with
+//!   controllable drift (the `(w_i, X_i)` processes of §3.1).
+//! * [`bridge`] — Figure 2(a): empirical decision-error rates of the
+//!   Constant STST versus the Brownian-bridge closed form, across δ and n.
+//! * [`stopping`] — Figure 2(b): empirical expected stopping times versus
+//!   the Theorem 2 `O(√n)` law.
+
+pub mod bridge;
+pub mod stopping;
+pub mod walks;
+
+pub use bridge::{BridgePoint, simulate_decision_errors};
+pub use stopping::{StoppingPoint, simulate_stopping_times};
+pub use walks::WalkGenerator;

@@ -1,0 +1,159 @@
+//! Figure 2(b): expected stopping time grows as O(√n) (Theorem 2).
+//!
+//! For a sweep of walk lengths `n`, draw positive-drift walks, run the
+//! Constant STST level, record the first crossing time, and compare the
+//! empirical mean stopping time to (a) the Wald bound
+//! `(τ + k)/E[X]` and (b) a fitted `c·√n` law.
+
+
+use crate::stst::boundary::{Boundary, ConstantBoundary, StopContext};
+use crate::stst::wald;
+
+use super::walks::{WalkGenerator, WeightProfile};
+
+/// One point of the Figure 2(b) curve.
+#[derive(Debug, Clone)]
+pub struct StoppingPoint {
+    /// Walk length (number of available features).
+    pub n: usize,
+    /// Empirical mean stopping time (capped at n for non-crossing walks).
+    pub mean_stop: f64,
+    /// Std-dev of the stopping time.
+    pub std_stop: f64,
+    /// Fraction of walks that crossed before n.
+    pub crossed_frac: f64,
+    /// Theorem 2 upper bound `(τ + k)/E[X]`.
+    pub wald_bound: f64,
+    /// Empirical Wald-identity gap `|E[S_T] − E[T]·E[X]| / |E[S_T]|`
+    /// over crossing walks.
+    pub wald_gap: f64,
+}
+
+/// Configuration for the stopping-time sweep.
+#[derive(Debug, Clone)]
+pub struct StoppingSimConfig {
+    /// Walks per n.
+    pub walks_per_n: usize,
+    /// Drift `E[X] > 0`.
+    pub drift: f64,
+    /// Uniform half-width.
+    pub spread: f64,
+    /// δ of the Constant STST.
+    pub delta: f64,
+    /// Base seed.
+    pub seed: u64,
+}
+
+impl Default for StoppingSimConfig {
+    fn default() -> Self {
+        Self { walks_per_n: 5_000, drift: 0.1, spread: 0.8, delta: 0.1, seed: 0x57_0B }
+    }
+}
+
+/// Simulate mean stopping times for each `n` (parallel over n).
+pub fn simulate_stopping_times(cfg: &StoppingSimConfig, ns: &[usize]) -> Vec<StoppingPoint> {
+    crate::util::parallel::par_map(ns, |&n| simulate_one(cfg, n))
+}
+
+fn simulate_one(cfg: &StoppingSimConfig, n: usize) -> StoppingPoint {
+    let boundary = ConstantBoundary::new(cfg.delta);
+    let mut gen = WalkGenerator::new(
+        cfg.seed ^ (n as u64).rotate_left(13),
+        cfg.drift,
+        cfg.spread,
+        WeightProfile::Uniform,
+    );
+    let var_sn = gen.sum_variance(n);
+    let tau =
+        boundary.level(&StopContext { evaluated: 0, total: n, theta: 0.0, var_sn });
+
+    let mut times = Vec::with_capacity(cfg.walks_per_n);
+    let mut sums_at_stop = Vec::new();
+    let mut times_crossing = Vec::new();
+    let mut crossed = 0usize;
+    for _ in 0..cfg.walks_per_n {
+        let inc = gen.draw(n);
+        let mut s = 0.0;
+        let mut t = n;
+        for (i, &d) in inc.iter().enumerate() {
+            s += d;
+            if s >= tau {
+                t = i + 1;
+                crossed += 1;
+                sums_at_stop.push(s);
+                times_crossing.push(t as f64);
+                break;
+            }
+        }
+        times.push(t as f64);
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / times.len() as f64;
+    StoppingPoint {
+        n,
+        mean_stop: mean,
+        std_stop: var.sqrt(),
+        crossed_frac: crossed as f64 / cfg.walks_per_n as f64,
+        wald_bound: wald::expected_stopping_time_bound(var_sn, cfg.delta, 1.0, cfg.drift),
+        wald_gap: wald::wald_identity_gap(&times_crossing, &sums_at_stop, cfg.drift),
+    }
+}
+
+/// Fit `mean_stop ≈ c·√n` over the sweep; returns `(c, r²)`.
+pub fn fit_sqrt(points: &[StoppingPoint]) -> (f64, f64) {
+    let ns: Vec<f64> = points.iter().map(|p| p.n as f64).collect();
+    let ts: Vec<f64> = points.iter().map(|p| p.mean_stop).collect();
+    wald::fit_sqrt_law(&ns, &ts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> StoppingSimConfig {
+        StoppingSimConfig { walks_per_n: 1_500, ..Default::default() }
+    }
+
+    #[test]
+    fn stopping_time_is_sublinear_sqrt_like() {
+        let pts = simulate_stopping_times(&quick_cfg(), &[256, 1024, 4096]);
+        // Quadrupling n should roughly double the stopping time (sqrt law),
+        // certainly not quadruple it.
+        let t0 = pts[0].mean_stop;
+        let t2 = pts[2].mean_stop;
+        let ratio = t2 / t0; // n grew 16x; sqrt law predicts 4x
+        assert!(ratio < 8.0, "stopping time ratio {ratio} too close to linear");
+        assert!(ratio > 2.0, "stopping time ratio {ratio} implausibly flat");
+        let (c, r2) = fit_sqrt(&pts);
+        assert!(c > 0.0);
+        assert!(r2 > 0.95, "sqrt fit r2 {r2}");
+    }
+
+    #[test]
+    fn bound_dominates_empirical_mean() {
+        let pts = simulate_stopping_times(&quick_cfg(), &[512, 2048]);
+        for p in &pts {
+            assert!(
+                p.mean_stop <= p.wald_bound * 1.05,
+                "n={}: mean {} exceeds Wald bound {}",
+                p.n,
+                p.mean_stop,
+                p.wald_bound
+            );
+        }
+    }
+
+    #[test]
+    fn most_walks_cross_under_positive_drift() {
+        let pts = simulate_stopping_times(&quick_cfg(), &[1024]);
+        assert!(pts[0].crossed_frac > 0.9, "crossed {}", pts[0].crossed_frac);
+    }
+
+    #[test]
+    fn wald_identity_approximately_holds() {
+        // Overshoot makes E[S_T] slightly exceed E[T]·E[X]; the relative
+        // gap should still be small for long walks.
+        let pts = simulate_stopping_times(&quick_cfg(), &[4096]);
+        assert!(pts[0].wald_gap < 0.2, "wald gap {}", pts[0].wald_gap);
+    }
+}

@@ -1,0 +1,154 @@
+//! Weighted bounded random-walk generation for boundary validation.
+//!
+//! The STST theory is stated for `S_n = Σ w_i X_i` with `X_i ∈ [−1, 1]`.
+//! [`WalkGenerator`] draws such processes with a chosen drift `E[X]` and
+//! weight profile, deterministic per seed, and exposes exactly the
+//! quantities the boundary needs (`var(S_n)` under independence).
+
+use crate::util::rng::Rng64;
+
+/// Weight profiles for the simulated walks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightProfile {
+    /// All weights 1 (classic random walk).
+    Uniform,
+    /// Weights decay as `1/sqrt(i+1)` (heavy-head, like a sorted |w|).
+    Decaying,
+    /// Weights alternate 0.5 / 1.5 (mild heterogeneity).
+    Alternating,
+}
+
+impl WeightProfile {
+    /// Materialize the profile at dimensionality `n`.
+    pub fn weights(self, n: usize) -> Vec<f64> {
+        match self {
+            WeightProfile::Uniform => vec![1.0; n],
+            WeightProfile::Decaying => {
+                (0..n).map(|i| 1.0 / ((i + 1) as f64).sqrt()).collect()
+            }
+            WeightProfile::Alternating => {
+                (0..n).map(|i| if i % 2 == 0 { 0.5 } else { 1.5 }).collect()
+            }
+        }
+    }
+}
+
+/// Generator of bounded-increment walks `X_i ∈ [−1,1]` with `E[X] = drift`.
+///
+/// Increments are drawn as `X = clamp(drift + U, −1, 1)` where `U` is
+/// uniform on `[−spread, spread]`; for `|drift| + spread ≤ 1` no clamping
+/// occurs and the moments are exact: `E[X] = drift`,
+/// `var(X) = spread²/3`.
+#[derive(Debug, Clone)]
+pub struct WalkGenerator {
+    rng: Rng64,
+    /// Mean increment `E[X]`.
+    pub drift: f64,
+    /// Half-width of the uniform noise.
+    pub spread: f64,
+    /// Weight profile applied to increments.
+    pub profile: WeightProfile,
+}
+
+impl WalkGenerator {
+    /// New generator; panics unless `|drift| + spread ≤ 1` so the
+    /// `X_i ∈ [−1,1]` requirement holds without clamping.
+    pub fn new(seed: u64, drift: f64, spread: f64, profile: WeightProfile) -> Self {
+        assert!(
+            drift.abs() + spread <= 1.0 + 1e-12,
+            "|drift| + spread must be <= 1 (got {drift} + {spread})"
+        );
+        assert!(spread > 0.0, "spread must be positive");
+        Self { rng: Rng64::seed_from_u64(seed), drift, spread, profile }
+    }
+
+    /// Per-increment variance `var(X) = spread²/3`.
+    pub fn increment_variance(&self) -> f64 {
+        self.spread * self.spread / 3.0
+    }
+
+    /// Exact `var(S_n) = Σ w_i² var(X)` for walks of length `n`.
+    pub fn sum_variance(&self, n: usize) -> f64 {
+        let vx = self.increment_variance();
+        self.profile.weights(n).iter().map(|w| w * w * vx).sum()
+    }
+
+    /// Draw one walk of length `n`; returns the weighted increments
+    /// `w_i·X_i` (so partial sums are plain prefixes).
+    pub fn draw(&mut self, n: usize) -> Vec<f64> {
+        let ws = self.profile.weights(n);
+        (0..n)
+            .map(|i| {
+                let x = self.drift + self.rng.range_f64(-self.spread, self.spread);
+                ws[i] * x
+            })
+            .collect()
+    }
+
+    /// Draw a walk and return `(increments, full_sum)`.
+    pub fn draw_with_sum(&mut self, n: usize) -> (Vec<f64>, f64) {
+        let inc = self.draw(n);
+        let s = inc.iter().sum();
+        (inc, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments_match_theory() {
+        let mut g = WalkGenerator::new(0, 0.2, 0.5, WeightProfile::Uniform);
+        let n = 2000;
+        let mut mean = 0.0;
+        let mut var = 0.0;
+        let samples = 200;
+        for _ in 0..samples {
+            let (_, s) = g.draw_with_sum(n);
+            mean += s / samples as f64;
+        }
+        // re-draw for variance around theoretical mean n*drift
+        let tmean = n as f64 * 0.2;
+        for _ in 0..samples {
+            let (_, s) = g.draw_with_sum(n);
+            var += (s - tmean) * (s - tmean) / samples as f64;
+        }
+        assert!((mean - tmean).abs() < 0.05 * tmean, "mean {mean} vs {tmean}");
+        let tvar = g.sum_variance(n);
+        assert!((var - tvar).abs() < 0.35 * tvar, "var {var} vs {tvar}");
+    }
+
+    #[test]
+    fn increments_bounded() {
+        let mut g = WalkGenerator::new(1, 0.3, 0.7, WeightProfile::Uniform);
+        for x in g.draw(5000) {
+            assert!((-1.0..=1.0).contains(&x), "increment {x} out of bounds");
+        }
+    }
+
+    #[test]
+    fn profiles_shape_variance() {
+        let g = WalkGenerator::new(0, 0.1, 0.5, WeightProfile::Decaying);
+        let u = WalkGenerator::new(0, 0.1, 0.5, WeightProfile::Uniform);
+        // Decaying weights give strictly less total variance than uniform.
+        assert!(g.sum_variance(100) < u.sum_variance(100));
+        // Alternating: sum w² = n/2*(0.25+2.25)/... check concrete value
+        let a = WalkGenerator::new(0, 0.1, 0.5, WeightProfile::Alternating);
+        let expected = (50.0 * 0.25 + 50.0 * 2.25) * a.increment_variance();
+        assert!((a.sum_variance(100) - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = WalkGenerator::new(9, 0.1, 0.5, WeightProfile::Uniform).draw(50);
+        let b = WalkGenerator::new(9, 0.1, 0.5, WeightProfile::Uniform).draw(50);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be <= 1")]
+    fn rejects_unbounded_increments() {
+        WalkGenerator::new(0, 0.8, 0.5, WeightProfile::Uniform);
+    }
+}

@@ -1,0 +1,387 @@
+//! Stopping boundaries: the [`Boundary`] trait and concrete families.
+//!
+//! A boundary answers one question for the sequential margin walker: given
+//! how far into the evaluation we are (`i` of `n`), the decision threshold
+//! `θ`, and the (estimated) total variance `var(S_n)`, at what level `τ_i`
+//! should the partial sum trigger an early stop?
+//!
+//! Four families are provided, matching the paper's evaluation:
+//!
+//! * [`ConstantBoundary`] — the paper's Constant STST (Theorem 1): flat in
+//!   `i`, "error-spending" (aggressive early, strict late).
+//! * [`CurvedBoundary`] — the curtailed/conservative prior (paper §3.1).
+//! * [`BudgetedBoundary`] — the budgeted-learning baseline (Cesa-Bianchi
+//!   et al. 2010 / Reyzin 2010 style): evaluate exactly `k` coordinates,
+//!   never stop on evidence. Used as the green curve of Figures 3–4.
+//! * [`TrivialBoundary`] — never stops: full Pegasos ("the trivial
+//!   boundary, which essentially computes everything", §4.1).
+
+
+use super::brownian;
+
+/// Context handed to a boundary at each step of a sequential evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct StopContext {
+    /// Index of the *next* coordinate to be evaluated (1-based count of
+    /// coordinates already evaluated).
+    pub evaluated: usize,
+    /// Total number of coordinates the full evaluation would touch.
+    pub total: usize,
+    /// Decision threshold θ the full sum will be compared against.
+    pub theta: f64,
+    /// Estimated variance of the full sum `var(S_n)` (independence
+    /// assumption: `Σ w_j² var(x_j)`).
+    pub var_sn: f64,
+}
+
+/// A stopping boundary for the sequential thresholded sum test.
+pub trait Boundary: Send + Sync {
+    /// The stopping level `τ_i`: the walker stops as soon as the partial
+    /// sum strictly exceeds this value. Return `f64::INFINITY` to never
+    /// stop at this step.
+    fn level(&self, ctx: &StopContext) -> f64;
+
+    /// Whether this boundary stops on *evidence* (partial sum) at all.
+    /// Budgeted/Trivial return `false`: they are baselines that ignore the
+    /// partial sum's value.
+    fn is_evidence_based(&self) -> bool {
+        true
+    }
+
+    /// Hard cap on the number of coordinates to evaluate, if any
+    /// (budgeted baseline). `None` means "up to `total`".
+    fn budget(&self, _ctx: &StopContext) -> Option<usize> {
+        None
+    }
+
+    /// Short identifier used in metrics/CSV output.
+    fn name(&self) -> &'static str;
+}
+
+/// The paper's Constant STST boundary (Theorem 1 / eq. 8–10).
+///
+/// `τ = θ/2 + sqrt(θ²/4 + var(S_n)·log(1/√δ))`, independent of `i`.
+/// With `paper_literal = true` the exact form printed in the paper's
+/// eq. (10) (`θ + sqrt(...)`, slightly more conservative for θ>0) is used
+/// instead; the two coincide at θ = 0.
+#[derive(Debug, Clone, Copy)]
+pub struct ConstantBoundary {
+    /// Target decision-error rate δ ∈ (0, 1).
+    pub delta: f64,
+    /// Use the paper-literal eq. (10) root instead of the corrected one.
+    pub paper_literal: bool,
+}
+
+impl ConstantBoundary {
+    /// Corrected-algebra constant boundary with decision-error rate `delta`.
+    pub fn new(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta < 1.0, "delta must be in (0,1), got {delta}");
+        Self { delta, paper_literal: false }
+    }
+
+    /// Paper-literal eq. (10) variant (used by Algorithm 1 as printed).
+    pub fn paper_literal(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta < 1.0, "delta must be in (0,1), got {delta}");
+        Self { delta, paper_literal: true }
+    }
+}
+
+impl Boundary for ConstantBoundary {
+    fn level(&self, ctx: &StopContext) -> f64 {
+        if self.paper_literal {
+            brownian::constant_boundary_level_paper(self.delta, ctx.theta, ctx.var_sn)
+        } else {
+            brownian::constant_boundary_level(self.delta, ctx.theta, ctx.var_sn)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        if self.paper_literal { "constant-stst(paper)" } else { "constant-stst" }
+    }
+}
+
+/// The Curved STST — the conservative curtailed boundary of paper §3.1.
+///
+/// Tracks the remaining-sum envelope:
+/// `τ_i = θ + z_{1−δ}·sqrt(var(S_n)·(1 − i/n))`. Constant *conditional*
+/// error along the curve ⇒ far higher than the Constant STST early in the
+/// walk ⇒ stops fewer walks early (the paper's conservatism critique).
+#[derive(Debug, Clone, Copy)]
+pub struct CurvedBoundary {
+    /// Target decision-error rate δ ∈ (0, 1).
+    pub delta: f64,
+}
+
+impl CurvedBoundary {
+    /// Curved boundary with decision-error rate `delta`.
+    pub fn new(delta: f64) -> Self {
+        assert!(delta > 0.0 && delta < 1.0, "delta must be in (0,1), got {delta}");
+        Self { delta }
+    }
+}
+
+impl Boundary for CurvedBoundary {
+    fn level(&self, ctx: &StopContext) -> f64 {
+        if ctx.evaluated >= ctx.total {
+            // The full sum is known; the decision is made directly.
+            return f64::INFINITY;
+        }
+        let frac = ctx.evaluated as f64 / ctx.total.max(1) as f64;
+        brownian::curved_boundary_level(self.delta, ctx.theta, ctx.var_sn, frac)
+    }
+
+    fn name(&self) -> &'static str {
+        "curved-stst"
+    }
+}
+
+/// Budgeted baseline: always evaluate exactly `k` coordinates, then decide
+/// from the truncated partial sum. Ignores evidence entirely.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetedBoundary {
+    /// Number of coordinates to evaluate for every example.
+    pub k: usize,
+}
+
+impl BudgetedBoundary {
+    /// Fixed feature budget of `k` coordinates per example.
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0, "budget must be positive");
+        Self { k }
+    }
+}
+
+impl Boundary for BudgetedBoundary {
+    fn level(&self, _ctx: &StopContext) -> f64 {
+        f64::INFINITY
+    }
+
+    fn is_evidence_based(&self) -> bool {
+        false
+    }
+
+    fn budget(&self, ctx: &StopContext) -> Option<usize> {
+        Some(self.k.min(ctx.total))
+    }
+
+    fn name(&self) -> &'static str {
+        "budgeted"
+    }
+}
+
+/// Trivial boundary: never stops — the full computation (vanilla Pegasos).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrivialBoundary;
+
+impl Boundary for TrivialBoundary {
+    fn level(&self, _ctx: &StopContext) -> f64 {
+        f64::INFINITY
+    }
+
+    fn is_evidence_based(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "full"
+    }
+}
+
+/// Type-erased boundary, for configs that choose the family at runtime.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyBoundary {
+    /// Constant STST (Theorem 1).
+    Constant {
+        /// decision-error rate
+        delta: f64,
+        /// use paper-literal eq. 10
+        paper_literal: bool,
+    },
+    /// Curved STST (conservative prior).
+    Curved {
+        /// decision-error rate
+        delta: f64,
+    },
+    /// Fixed feature budget.
+    Budgeted {
+        /// coordinates per example
+        k: usize,
+    },
+    /// Full evaluation.
+    Full,
+}
+
+impl AnyBoundary {
+    /// Serialize as a tagged JSON object (`{"kind": "constant", ...}`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            AnyBoundary::Constant { delta, paper_literal } => Json::obj([
+                ("kind", Json::Str("constant".into())),
+                ("delta", Json::Num(*delta)),
+                ("paper_literal", Json::Bool(*paper_literal)),
+            ]),
+            AnyBoundary::Curved { delta } => Json::obj([
+                ("kind", Json::Str("curved".into())),
+                ("delta", Json::Num(*delta)),
+            ]),
+            AnyBoundary::Budgeted { k } => Json::obj([
+                ("kind", Json::Str("budgeted".into())),
+                ("k", Json::Num(*k as f64)),
+            ]),
+            AnyBoundary::Full => Json::obj([("kind", Json::Str("full".into()))]),
+        }
+    }
+
+    /// Parse the tagged JSON form produced by [`Self::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Self, String> {
+        let kind = v.get("kind").and_then(|k| k.as_str()).ok_or("boundary: missing kind")?;
+        match kind {
+            "constant" => Ok(AnyBoundary::Constant {
+                delta: v.get("delta").and_then(|d| d.as_f64()).ok_or("constant: missing delta")?,
+                paper_literal: v
+                    .get("paper_literal")
+                    .and_then(|b| b.as_bool())
+                    .unwrap_or(false),
+            }),
+            "curved" => Ok(AnyBoundary::Curved {
+                delta: v.get("delta").and_then(|d| d.as_f64()).ok_or("curved: missing delta")?,
+            }),
+            "budgeted" => Ok(AnyBoundary::Budgeted {
+                k: v.get("k").and_then(|k| k.as_usize()).ok_or("budgeted: missing k")?,
+            }),
+            "full" => Ok(AnyBoundary::Full),
+            other => Err(format!("unknown boundary kind {other:?}")),
+        }
+    }
+}
+
+impl Boundary for AnyBoundary {
+    fn level(&self, ctx: &StopContext) -> f64 {
+        match self {
+            AnyBoundary::Constant { delta, paper_literal: false } => {
+                ConstantBoundary::new(*delta).level(ctx)
+            }
+            AnyBoundary::Constant { delta, paper_literal: true } => {
+                ConstantBoundary::paper_literal(*delta).level(ctx)
+            }
+            AnyBoundary::Curved { delta } => CurvedBoundary::new(*delta).level(ctx),
+            AnyBoundary::Budgeted { .. } | AnyBoundary::Full => f64::INFINITY,
+        }
+    }
+
+    fn is_evidence_based(&self) -> bool {
+        matches!(self, AnyBoundary::Constant { .. } | AnyBoundary::Curved { .. })
+    }
+
+    fn budget(&self, ctx: &StopContext) -> Option<usize> {
+        match self {
+            AnyBoundary::Budgeted { k } => Some((*k).min(ctx.total)),
+            _ => None,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyBoundary::Constant { paper_literal: false, .. } => "constant-stst",
+            AnyBoundary::Constant { paper_literal: true, .. } => "constant-stst(paper)",
+            AnyBoundary::Curved { .. } => "curved-stst",
+            AnyBoundary::Budgeted { .. } => "budgeted",
+            AnyBoundary::Full => "full",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(evaluated: usize, total: usize, theta: f64, var_sn: f64) -> StopContext {
+        StopContext { evaluated, total, theta, var_sn }
+    }
+
+    #[test]
+    fn constant_boundary_flat_in_i() {
+        let b = ConstantBoundary::new(0.1);
+        let l1 = b.level(&ctx(1, 784, 1.0, 50.0));
+        let l2 = b.level(&ctx(400, 784, 1.0, 50.0));
+        assert_eq!(l1, l2);
+        assert!(l1.is_finite() && l1 > 0.0);
+    }
+
+    #[test]
+    fn constant_vs_curved_early_aggressiveness() {
+        // The paper's error-spending argument: early in the walk the
+        // constant boundary sits BELOW the curved (curtailed) one, so it
+        // stops more walks early; late in the walk the relation flips.
+        let c = ConstantBoundary::new(0.1);
+        let k = CurvedBoundary::new(0.1);
+        let early_c = c.level(&ctx(10, 784, 0.0, 50.0));
+        let early_k = k.level(&ctx(10, 784, 0.0, 50.0));
+        assert!(early_k > early_c, "curved {early_k} must exceed constant {early_c} early");
+        let late_c = c.level(&ctx(780, 784, 0.0, 50.0));
+        let late_k = k.level(&ctx(780, 784, 0.0, 50.0));
+        assert!(late_k < late_c, "curved {late_k} must drop below constant {late_c} late");
+    }
+
+    #[test]
+    fn curved_never_stops_at_endpoint() {
+        let k = CurvedBoundary::new(0.1);
+        assert_eq!(k.level(&ctx(784, 784, 1.0, 50.0)), f64::INFINITY);
+        // And approaches theta just before it.
+        let near_end = k.level(&ctx(783, 784, 1.0, 50.0));
+        assert!(near_end > 1.0 && near_end < 1.5, "near-end level {near_end}");
+    }
+
+    #[test]
+    fn budgeted_caps_at_k_and_total() {
+        let b = BudgetedBoundary::new(49);
+        assert_eq!(b.budget(&ctx(0, 784, 1.0, 50.0)), Some(49));
+        assert_eq!(b.budget(&ctx(0, 10, 1.0, 50.0)), Some(10));
+        assert!(!b.is_evidence_based());
+        assert_eq!(b.level(&ctx(5, 784, 1.0, 50.0)), f64::INFINITY);
+    }
+
+    #[test]
+    fn trivial_never_stops() {
+        let t = TrivialBoundary;
+        assert_eq!(t.level(&ctx(5, 784, 1.0, 50.0)), f64::INFINITY);
+        assert_eq!(t.budget(&ctx(5, 784, 1.0, 50.0)), None);
+    }
+
+    #[test]
+    fn any_boundary_dispatch_matches_concrete() {
+        let c = StopContext { evaluated: 10, total: 784, theta: 1.0, var_sn: 42.0 };
+        assert_eq!(
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false }.level(&c),
+            ConstantBoundary::new(0.1).level(&c)
+        );
+        assert_eq!(
+            AnyBoundary::Curved { delta: 0.1 }.level(&c),
+            CurvedBoundary::new(0.1).level(&c)
+        );
+        assert_eq!(AnyBoundary::Budgeted { k: 3 }.budget(&c), Some(3));
+        assert_eq!(AnyBoundary::Full.level(&c), f64::INFINITY);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        for b in [
+            AnyBoundary::Constant { delta: 0.1, paper_literal: true },
+            AnyBoundary::Curved { delta: 0.05 },
+            AnyBoundary::Budgeted { k: 49 },
+            AnyBoundary::Full,
+        ] {
+            let s = b.to_json().to_string_compact();
+            let b2 = AnyBoundary::from_json(&crate::util::json::Json::parse(&s).unwrap()).unwrap();
+            assert_eq!(b2, b);
+        }
+        assert!(AnyBoundary::from_json(&crate::util::json::Json::Null).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "delta must be in (0,1)")]
+    fn rejects_bad_delta() {
+        ConstantBoundary::new(1.5);
+    }
+}

@@ -1,0 +1,283 @@
+//! Brownian-bridge boundary-crossing mathematics (paper §3.2 + Appendix).
+//!
+//! The paper's Lemma 1 / Lemma 2: for a random walk conditioned on its
+//! endpoint (a Brownian bridge after the usual functional-CLT
+//! approximation), the probability that the path touches a constant level
+//! `τ > max(0, θ)` before time `n`, given it ends at `θ`, follows from the
+//! reflection principle:
+//!
+//! ```text
+//! P(T_τ < n | S_n = θ) = φ((2τ−θ)/σ) / φ(θ/σ) = exp(−2τ(τ−θ)/σ²)
+//! ```
+//!
+//! with `σ² = var(S_n)`. All functions here are pure and deterministic;
+//! they are exercised both by unit tests (closed-form identities) and by
+//! the Monte-Carlo simulator in [`crate::sim`] (Figure 2a agreement).
+
+/// Standard normal probability density function.
+pub fn normal_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard normal CDF via the complementary error function
+/// (Abramowitz–Stegun 7.1.26 rational approximation of `erf`, |err| < 1.5e-7;
+/// plenty for boundary design, and dependency-free).
+pub fn normal_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Error function, Abramowitz–Stegun 7.1.26.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Lemma 1: probability that a Brownian bridge ending at `theta` with
+/// total variance `var_sn` touches the constant level `tau` before `n`.
+///
+/// Requires `tau >= theta.max(0.0)`; for `tau` below the endpoint the
+/// crossing is certain and the function saturates at 1.
+pub fn bridge_crossing_prob(tau: f64, theta: f64, var_sn: f64) -> f64 {
+    if var_sn <= 0.0 {
+        // Degenerate bridge: the path is the straight line 0 → θ, so it
+        // crosses τ iff τ lies between the endpoints.
+        return if tau <= theta.max(0.0) && tau >= theta.min(0.0) { 1.0 } else { 0.0 };
+    }
+    if tau <= theta.max(0.0) {
+        return 1.0;
+    }
+    (-2.0 * tau * (tau - theta) / var_sn).exp().min(1.0)
+}
+
+/// Inverse of [`bridge_crossing_prob`] in `tau`: the constant level that a
+/// bridge ending at `theta` crosses with probability exactly `delta`.
+///
+/// Solves `exp(−2τ(τ−θ)/σ²) = δ` ⇔ `τ² − τθ − σ²·log(1/√δ) = 0`, i.e.
+/// (paper eq. 8). The positive root is
+///
+/// ```text
+/// τ = θ/2 + sqrt(θ²/4 + var·log(1/√δ))
+/// ```
+///
+/// which for `θ = 0` reduces to the paper's simplified Constant STST
+/// boundary `τ = sqrt(var)·sqrt(log(1/√δ))` (Theorem 1).
+pub fn constant_boundary_level(delta: f64, theta: f64, var_sn: f64) -> f64 {
+    debug_assert!(delta > 0.0 && delta < 1.0, "delta must be in (0,1), got {delta}");
+    let l = log_inv_sqrt(delta);
+    let half = 0.5 * theta;
+    half + (half * half + var_sn.max(0.0) * l).sqrt()
+}
+
+/// The paper-literal form of eq. (10): `τ = θ + sqrt(θ²/4 + var·L)`.
+///
+/// The paper's algebra between eq. (8) and eq. (10) drops a factor (the
+/// completed square should be `(τ − θ/2)²`); we keep this variant around
+/// because Algorithm 1 and the experiments use it, and the ablation bench
+/// compares both. At `θ = 0` the two coincide.
+pub fn constant_boundary_level_paper(delta: f64, theta: f64, var_sn: f64) -> f64 {
+    let l = log_inv_sqrt(delta);
+    theta + (0.25 * theta * theta + var_sn.max(0.0) * l).sqrt()
+}
+
+/// `log(1/sqrt(delta)) = -0.5 * ln(delta)`, the "error-spending budget"
+/// term that appears in every Constant-STST expression.
+pub fn log_inv_sqrt(delta: f64) -> f64 {
+    -0.5 * delta.ln()
+}
+
+/// Standard normal quantile function (inverse CDF), Acklam's rational
+/// approximation (|relative err| < 1.15e-9 over (0,1)).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile needs p in (0,1), got {p}");
+    // Coefficients for the central and tail regions.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+        1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+        6.680131188771972e+01, -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+        -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Curved (curtailed) STST boundary at relative progress `frac = i/n`
+/// (the conservative prior boundary the paper contrasts against, §3.1).
+///
+/// Derived from the curtailed conditional (paper eq. 2): given the walk
+/// sits at `S_i = s`, the remaining sum is ≈ N(E[S_{in}], var(S_n)(1−i/n)),
+/// so `P(S_n < θ | stop at s) ≤ δ` needs
+///
+/// ```text
+/// τ_i = θ + z_{1−δ} · sqrt( var(S_n) · (1 − i/n) )
+/// ```
+///
+/// (dropping the positive remaining drift E[S_{in}], which only raises the
+/// boundary). The *conditional* error stays constant along the curve —
+/// which is exactly why it is conservative early: at i ≈ 0 the level sits
+/// z·sqrt(var(S_n)) above θ, far higher than the Constant STST's
+/// error-spending level.
+pub fn curved_boundary_level(delta: f64, theta: f64, var_sn: f64, frac: f64) -> f64 {
+    let frac = frac.clamp(0.0, 1.0);
+    let remaining_var = var_sn.max(0.0) * (1.0 - frac);
+    theta + normal_quantile(1.0 - delta) * remaining_var.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // Known values of erf to the approximation's advertised accuracy.
+        assert!(close(erf(0.0), 0.0, 1e-7));
+        assert!(close(erf(1.0), 0.8427007929, 1e-6));
+        assert!(close(erf(2.0), 0.9953222650, 1e-6));
+        assert!(close(erf(-1.0), -0.8427007929, 1e-6));
+    }
+
+    #[test]
+    fn normal_cdf_symmetry_and_tails() {
+        assert!(close(normal_cdf(0.0), 0.5, 1e-9));
+        for z in [0.5, 1.0, 1.96, 3.0] {
+            assert!(close(normal_cdf(z) + normal_cdf(-z), 1.0, 1e-7));
+        }
+        assert!(normal_cdf(8.0) > 0.999999);
+        assert!(normal_cdf(-8.0) < 1e-6);
+    }
+
+    #[test]
+    fn crossing_prob_matches_reflection_ratio() {
+        // exp form must equal the pdf-ratio form of the Appendix (eq. 26-28).
+        let (tau, theta, var): (f64, f64, f64) = (3.0, 1.0, 4.0);
+        let sigma = var.sqrt();
+        let ratio = normal_pdf((2.0 * tau - theta) / sigma) / normal_pdf(theta / sigma);
+        assert!(close(bridge_crossing_prob(tau, theta, var), ratio, 1e-12));
+    }
+
+    #[test]
+    fn crossing_prob_saturates() {
+        assert_eq!(bridge_crossing_prob(0.5, 1.0, 4.0), 1.0); // level below endpoint
+        assert_eq!(bridge_crossing_prob(2.0, 0.0, 0.0), 0.0); // degenerate walk
+        assert_eq!(bridge_crossing_prob(-1.0, -2.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn boundary_inverts_crossing_probability() {
+        for delta in [0.01, 0.05, 0.1, 0.3] {
+            for theta in [0.0, 0.5, 1.0, 2.0] {
+                for var in [0.5, 1.0, 10.0, 100.0] {
+                    let tau = constant_boundary_level(delta, theta, var);
+                    let p = bridge_crossing_prob(tau, theta, var);
+                    assert!(
+                        close(p, delta, 1e-9),
+                        "delta={delta} theta={theta} var={var}: tau={tau} p={p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn simplified_theorem1_form_at_theta_zero() {
+        for delta in [0.01, 0.1, 0.5] {
+            for var in [1.0, 7.0, 784.0] {
+                let tau = constant_boundary_level(delta, 0.0, var);
+                let simplified = var.sqrt() * log_inv_sqrt(delta).sqrt();
+                assert!(close(tau, simplified, 1e-12));
+                // paper-literal agrees at theta = 0
+                assert!(close(constant_boundary_level_paper(delta, 0.0, var), tau, 1e-12));
+            }
+        }
+    }
+
+    #[test]
+    fn paper_literal_is_more_conservative_for_positive_theta() {
+        // paper's tau = theta + sqrt(...) > correct tau = theta/2 + sqrt(...)
+        let (d, v) = (0.1, 10.0);
+        for theta in [0.5, 1.0, 3.0] {
+            assert!(
+                constant_boundary_level_paper(d, theta, v) > constant_boundary_level(d, theta, v)
+            );
+        }
+    }
+
+    #[test]
+    fn boundary_monotonicity() {
+        // tau decreases as delta grows (more error allowed => stop earlier),
+        // increases with variance and with theta.
+        let t1 = constant_boundary_level(0.01, 1.0, 10.0);
+        let t2 = constant_boundary_level(0.2, 1.0, 10.0);
+        assert!(t1 > t2);
+        assert!(constant_boundary_level(0.1, 1.0, 20.0) > constant_boundary_level(0.1, 1.0, 10.0));
+        assert!(constant_boundary_level(0.1, 2.0, 10.0) > constant_boundary_level(0.1, 1.0, 10.0));
+    }
+
+    #[test]
+    fn curved_boundary_shape() {
+        // Monotone decreasing in i: conservative early, permissive late,
+        // exactly theta at the end.
+        let (d, v) = (0.1, 100.0);
+        let start = curved_boundary_level(d, 0.0, v, 0.0);
+        let mid = curved_boundary_level(d, 0.0, v, 0.5);
+        let end = curved_boundary_level(d, 0.0, v, 1.0);
+        assert!(start > mid && mid > end);
+        assert!(close(end, 0.0, 1e-12));
+        // z_{0.9} ≈ 1.2816: start = 1.2816 * 10
+        assert!(close(start, 12.8155, 1e-3));
+        // And it dominates the Constant boundary early on (conservatism).
+        let constant = constant_boundary_level(d, 0.0, v);
+        assert!(start > constant, "curved {start} must exceed constant {constant} at i=0");
+    }
+
+    #[test]
+    fn normal_quantile_reference_values() {
+        assert!(close(normal_quantile(0.5), 0.0, 1e-9));
+        assert!(close(normal_quantile(0.975), 1.959963985, 1e-6));
+        assert!(close(normal_quantile(0.9), 1.2815515655, 1e-6));
+        assert!(close(normal_quantile(0.01), -2.3263478740, 1e-6));
+        // Inverse relationship with our CDF (to the CDF's accuracy).
+        for p in [0.05, 0.3, 0.7, 0.95] {
+            assert!(close(normal_cdf(normal_quantile(p)), p, 1e-5));
+        }
+    }
+
+    #[test]
+    fn log_inv_sqrt_values() {
+        assert!(close(log_inv_sqrt(0.1), 0.5 * (10.0f64).ln(), 1e-12));
+        assert!(close(log_inv_sqrt(1.0), 0.0, 1e-12));
+    }
+}

@@ -1,0 +1,177 @@
+//! Decision-error accounting.
+//!
+//! The paper's quality criterion is not classification error but
+//! **decision error**: the event that the test stopped an example early
+//! (declared it unimportant) when its *full* margin would in fact have
+//! landed below the threshold θ (i.e. the learner should have updated).
+//! Figure 2(a) validates that the empirical decision-error rate matches
+//! the Brownian-bridge prediction; this module provides the audit
+//! machinery used both there and by the trainer's `--audit` mode, which
+//! finishes every stopped evaluation out-of-band to measure the true rate.
+
+
+/// Outcome of one sequential evaluation, as seen by the audit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalOutcome {
+    /// Ran to completion; full margin was below θ (important example).
+    FullBelow,
+    /// Ran to completion; full margin was ≥ θ (unimportant example).
+    FullAbove,
+    /// Stopped early; the audited full margin would have been below θ —
+    /// **a decision error**.
+    StoppedBelow,
+    /// Stopped early; the audited full margin would have been ≥ θ —
+    /// a correct, computation-saving stop.
+    StoppedAbove,
+}
+
+/// Aggregates decision outcomes into the rates the paper reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecisionAudit {
+    full_below: u64,
+    full_above: u64,
+    stopped_below: u64,
+    stopped_above: u64,
+}
+
+impl DecisionAudit {
+    /// Empty audit.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one outcome.
+    pub fn record(&mut self, o: EvalOutcome) {
+        match o {
+            EvalOutcome::FullBelow => self.full_below += 1,
+            EvalOutcome::FullAbove => self.full_above += 1,
+            EvalOutcome::StoppedBelow => self.stopped_below += 1,
+            EvalOutcome::StoppedAbove => self.stopped_above += 1,
+        }
+    }
+
+    /// Total evaluations seen.
+    pub fn total(&self) -> u64 {
+        self.full_below + self.full_above + self.stopped_below + self.stopped_above
+    }
+
+    /// Number of early stops (correct or not).
+    pub fn stopped(&self) -> u64 {
+        self.stopped_below + self.stopped_above
+    }
+
+    /// Decision errors: stops on examples that were actually important.
+    pub fn errors(&self) -> u64 {
+        self.stopped_below
+    }
+
+    /// Important examples: those whose full sum was/would be below θ.
+    pub fn important(&self) -> u64 {
+        self.full_below + self.stopped_below
+    }
+
+    /// The paper's conditional decision-error rate, eq. (3):
+    /// `P(stopped before n | S_n < θ)` — errors over *important* examples.
+    /// This is the quantity the Constant STST bounds by δ.
+    pub fn conditional_error_rate(&self) -> f64 {
+        let important = self.full_below + self.stopped_below;
+        if important == 0 {
+            0.0
+        } else {
+            self.stopped_below as f64 / important as f64
+        }
+    }
+
+    /// Unconditional early-stop rate `P(stop)` — the computation saving.
+    pub fn stop_rate(&self) -> f64 {
+        let t = self.total();
+        if t == 0 { 0.0 } else { self.stopped() as f64 / t as f64 }
+    }
+
+    /// The curtailed conditional `P(S_n < θ | stop)` — eq. (2), the
+    /// quantity the *Curved* STST controls. Reported for comparison.
+    pub fn curtailed_error_rate(&self) -> f64 {
+        let s = self.stopped();
+        if s == 0 { 0.0 } else { self.stopped_below as f64 / s as f64 }
+    }
+
+    /// Merge a shard's audit (parallel training / simulation).
+    pub fn merge(&mut self, other: &DecisionAudit) {
+        self.full_below += other.full_below;
+        self.full_above += other.full_above;
+        self.stopped_below += other.stopped_below;
+        self.stopped_above += other.stopped_above;
+    }
+
+    /// Verify Bayes consistency (paper eq. 1):
+    /// `P(stop|S_n<θ)·P(S_n<θ) = P(S_n<θ|stop)·P(stop)`. Both sides equal
+    /// `stopped_below / total`; returns the (tiny) numerical gap, which is
+    /// exactly 0 for counts — kept as a sanity method used in tests.
+    pub fn bayes_identity_gap(&self) -> f64 {
+        let t = self.total() as f64;
+        if t == 0.0 {
+            return 0.0;
+        }
+        let important = (self.full_below + self.stopped_below) as f64;
+        let lhs = self.conditional_error_rate() * (important / t);
+        let rhs = self.curtailed_error_rate() * self.stop_rate();
+        (lhs - rhs).abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn audit(fb: u64, fa: u64, sb: u64, sa: u64) -> DecisionAudit {
+        let mut a = DecisionAudit::new();
+        for _ in 0..fb {
+            a.record(EvalOutcome::FullBelow);
+        }
+        for _ in 0..fa {
+            a.record(EvalOutcome::FullAbove);
+        }
+        for _ in 0..sb {
+            a.record(EvalOutcome::StoppedBelow);
+        }
+        for _ in 0..sa {
+            a.record(EvalOutcome::StoppedAbove);
+        }
+        a
+    }
+
+    #[test]
+    fn rates_basic() {
+        let a = audit(90, 500, 10, 400);
+        assert_eq!(a.total(), 1000);
+        assert_eq!(a.stopped(), 410);
+        assert_eq!(a.errors(), 10);
+        // conditional: 10 errors out of 100 important
+        assert!((a.conditional_error_rate() - 0.1).abs() < 1e-12);
+        assert!((a.stop_rate() - 0.41).abs() < 1e-12);
+        assert!((a.curtailed_error_rate() - 10.0 / 410.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_audit_is_zero() {
+        let a = DecisionAudit::new();
+        assert_eq!(a.conditional_error_rate(), 0.0);
+        assert_eq!(a.stop_rate(), 0.0);
+        assert_eq!(a.curtailed_error_rate(), 0.0);
+    }
+
+    #[test]
+    fn bayes_identity_holds_exactly() {
+        for (fb, fa, sb, sa) in [(90, 500, 10, 400), (1, 1, 1, 1), (0, 10, 0, 5), (7, 0, 3, 0)] {
+            assert!(audit(fb, fa, sb, sa).bayes_identity_gap() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = audit(1, 2, 3, 4);
+        a.merge(&audit(10, 20, 30, 40));
+        assert_eq!(a.total(), 110);
+        assert_eq!(a.errors(), 33);
+    }
+}

@@ -1,0 +1,43 @@
+//! Sequential Thresholded Sum Tests (STST).
+//!
+//! This module is the paper's core contribution. Given a weighted sum of
+//! bounded random variables `S_n = Σ w_i x_i` that will eventually be
+//! compared to a threshold `θ` ("is this example important enough to
+//! trigger a model update?"), an STST provides *stopping boundaries*
+//! `τ_i` such that evaluation can be abandoned at coordinate `i` as soon
+//! as the partial sum `S_i > τ_i`, while the rate of *decision errors*
+//! (`stop fired but the full sum would actually have landed below θ`)
+//! stays below a user-chosen `δ`.
+//!
+//! The derivation (paper §3, Lemma 1) approximates the conditioned random
+//! walk `(S_i | S_n = θ)` by a Brownian bridge and uses the reflection
+//! principle to get the crossing probability in closed form:
+//!
+//! ```text
+//! P(T_τ < n | S_n = θ) = exp(−2 τ (τ − θ) / var(S_n))
+//! ```
+//!
+//! Solving `exp{·} = δ` for `τ` yields the **Constant STST** boundary —
+//! flat in `i`, "error-spending": generous early, strict late.
+//!
+//! Submodules:
+//! * [`brownian`] — bridge crossing probabilities, Gaussian helpers.
+//! * [`boundary`] — the [`boundary::Boundary`] trait and all concrete
+//!   boundaries (Constant, Curved, Budgeted, Trivial).
+//! * [`variance`] — online per-class, per-feature variance estimation
+//!   (Welford), plus `var(S_n)` aggregation under the independence
+//!   assumption of paper §4.
+//! * [`decision`] — decision-error bookkeeping used to *verify* that the
+//!   empirical error rate honors `δ` (Figure 2a).
+//! * [`wald`] — Wald's identity and expected-stopping-time estimates
+//!   (Theorem 2, `E[T] = O(sqrt(n))`).
+
+pub mod boundary;
+pub mod brownian;
+pub mod decision;
+pub mod variance;
+pub mod wald;
+
+pub use boundary::{Boundary, BudgetedBoundary, ConstantBoundary, CurvedBoundary, TrivialBoundary};
+pub use decision::DecisionAudit;
+pub use variance::{ClassVariance, OnlineVariance};

@@ -1,0 +1,342 @@
+//! Online variance estimation for the STST boundary.
+//!
+//! The Constant STST needs `var(S_n) = var(Σ w_j x_j)`. Under the paper's
+//! §4 independence assumption this is `Σ_j w_j² var(x_j)`, where
+//! `var(x_j)` is the *class-conditional* variance of feature `j`
+//! (Algorithm 1 tracks `var_{y^l}(x_j)` — one estimate per label). We
+//! track per-(class, feature) first/second moments with Welford's
+//! algorithm, updated only on coordinates the walker actually evaluated
+//! (line "Update var_{y^l}(x_j), j = 1..i" of Algorithm 1).
+//!
+//! Because weights change every Pegasos step, `Σ w_j² var(x_j)` cannot be
+//! cached across examples; the evaluator instead folds `w_j²·var̂(x_j)`
+//! into a prefix alongside the partial sum so the boundary is O(1) per
+//! coordinate (see [`crate::margin::walker`]).
+
+
+/// Welford online mean/variance for a single scalar stream.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OnlineVariance {
+    count: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl OnlineVariance {
+    /// Fresh estimator with no observations.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one observation in.
+    #[inline]
+    pub fn update(&mut self, x: f64) {
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Running mean (0 before any observation).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance (uses `n`, not `n-1`: we want a plug-in
+    /// estimate for the boundary, and early robustness matters more than
+    /// unbiasedness). Returns the prior `prior_var` until two observations
+    /// arrive.
+    #[inline]
+    pub fn variance_or(&self, prior_var: f64) -> f64 {
+        if self.count < 2 {
+            prior_var
+        } else {
+            self.m2 / self.count as f64
+        }
+    }
+
+    /// Population variance, 0 before two observations.
+    pub fn variance(&self) -> f64 {
+        self.variance_or(0.0)
+    }
+
+    /// Merge another estimator into this one (parallel Welford / Chan).
+    pub fn merge(&mut self, other: &OnlineVariance) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        let n1 = self.count as f64;
+        let n2 = other.count as f64;
+        let delta = other.mean - self.mean;
+        let n = n1 + n2;
+        self.mean += delta * n2 / n;
+        self.m2 += other.m2 + delta * delta * n1 * n2 / n;
+        self.count += other.count;
+    }
+}
+
+/// Per-class, per-feature variance table: `var_y(x_j)` for y ∈ {−1, +1}.
+///
+/// The prior variance used before a feature has ≥2 observations defaults
+/// to the variance of a uniform variable on `[-1, 1]` (1/3), matching the
+/// paper's `X_i ∈ [−1,1]` normalization — conservative (large τ, stops
+/// late) while estimates warm up.
+#[derive(Debug, Clone)]
+pub struct ClassVariance {
+    dim: usize,
+    prior_var: f64,
+    pos: Vec<OnlineVariance>,
+    neg: Vec<OnlineVariance>,
+}
+
+impl ClassVariance {
+    /// Default prior variance: uniform on [-1, 1].
+    pub const DEFAULT_PRIOR: f64 = 1.0 / 3.0;
+
+    /// New table for `dim` features with the default prior.
+    pub fn new(dim: usize) -> Self {
+        Self::with_prior(dim, Self::DEFAULT_PRIOR)
+    }
+
+    /// New table with an explicit warm-up prior variance.
+    pub fn with_prior(dim: usize, prior_var: f64) -> Self {
+        Self {
+            dim,
+            prior_var,
+            pos: vec![OnlineVariance::default(); dim],
+            neg: vec![OnlineVariance::default(); dim],
+        }
+    }
+
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn side(&self, label: f64) -> &[OnlineVariance] {
+        if label >= 0.0 { &self.pos } else { &self.neg }
+    }
+
+    fn side_mut(&mut self, label: f64) -> &mut [OnlineVariance] {
+        if label >= 0.0 { &mut self.pos } else { &mut self.neg }
+    }
+
+    /// Record that feature `j` of an example with `label` had value `x`.
+    #[inline]
+    pub fn observe(&mut self, label: f64, j: usize, x: f64) {
+        self.side_mut(label)[j].update(x);
+    }
+
+    /// Record the first `upto` coordinates of an evaluated example —
+    /// exactly Algorithm 1's "Update var_{y}(x_j), j = 1, ..., i".
+    /// `order[k]` is the feature index evaluated at step `k`.
+    pub fn observe_prefix(&mut self, label: f64, order: &[usize], xs: &[f64], upto: usize) {
+        let side = self.side_mut(label);
+        for &j in order.iter().take(upto) {
+            side[j].update(xs[j]);
+        }
+    }
+
+    /// Class-conditional variance estimate for feature `j` under `label`.
+    #[inline]
+    pub fn var(&self, label: f64, j: usize) -> f64 {
+        self.side(label)[j].variance_or(self.prior_var)
+    }
+
+    /// `var(S_n) = Σ_j w_j² var_y(x_j)` — the full-sum variance the
+    /// Constant STST plugs into Theorem 1 (independence assumption).
+    pub fn sum_variance(&self, label: f64, weights: &[f64]) -> f64 {
+        debug_assert_eq!(weights.len(), self.dim);
+        let side = self.side(label);
+        weights
+            .iter()
+            .zip(side.iter())
+            .map(|(w, v)| w * w * v.variance_or(self.prior_var))
+            .sum()
+    }
+
+    /// Paper-literal variant: Algorithm 1 prints `Σ_j w_j · var_y(x_j)`
+    /// (no square). Exposed for the ablation bench; can go negative for
+    /// negative weights, so it is clamped at 0.
+    pub fn sum_variance_paper(&self, label: f64, weights: &[f64]) -> f64 {
+        debug_assert_eq!(weights.len(), self.dim);
+        let side = self.side(label);
+        weights
+            .iter()
+            .zip(side.iter())
+            .map(|(w, v)| w * v.variance_or(self.prior_var))
+            .sum::<f64>()
+            .max(0.0)
+    }
+
+    /// Per-feature `w_j² var_y(x_j)` terms, in *feature index* order —
+    /// used by the walker to maintain the variance prefix incrementally.
+    pub fn weighted_terms(&self, label: f64, weights: &[f64], out: &mut Vec<f64>) {
+        debug_assert_eq!(weights.len(), self.dim);
+        let side = self.side(label);
+        out.clear();
+        out.extend(
+            weights
+                .iter()
+                .zip(side.iter())
+                .map(|(w, v)| w * w * v.variance_or(self.prior_var)),
+        );
+    }
+
+    /// Merge a peer table (parallel training shards).
+    pub fn merge(&mut self, other: &ClassVariance) {
+        assert_eq!(self.dim, other.dim, "merging variance tables of different dims");
+        for (a, b) in self.pos.iter_mut().zip(other.pos.iter()) {
+            a.merge(b);
+        }
+        for (a, b) in self.neg.iter_mut().zip(other.neg.iter()) {
+            a.merge(b);
+        }
+    }
+
+    /// Total observations across both classes (for diagnostics).
+    pub fn total_observations(&self) -> u64 {
+        self.pos.iter().chain(self.neg.iter()).map(|v| v.count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_pass_var(xs: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n
+    }
+
+    #[test]
+    fn welford_matches_two_pass() {
+        let xs = [1.0, 2.0, -0.5, 3.25, 0.0, -2.0, 10.0];
+        let mut ov = OnlineVariance::new();
+        for &x in &xs {
+            ov.update(x);
+        }
+        let tp = two_pass_var(&xs);
+        assert!((ov.variance() - tp).abs() < 1e-12, "{} vs {}", ov.variance(), tp);
+        assert!((ov.mean() - xs.iter().sum::<f64>() / xs.len() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_prior_until_two_observations() {
+        let mut ov = OnlineVariance::new();
+        assert_eq!(ov.variance_or(0.5), 0.5);
+        ov.update(3.0);
+        assert_eq!(ov.variance_or(0.5), 0.5);
+        ov.update(5.0);
+        assert!((ov.variance_or(0.5) - 1.0).abs() < 1e-12); // pop var of {3,5}
+    }
+
+    #[test]
+    fn merge_equals_concatenation() {
+        let xs: Vec<f64> = (0..17).map(|i| (i as f64 * 0.7).sin() * 3.0).collect();
+        let (a, b) = xs.split_at(6);
+        let mut oa = OnlineVariance::new();
+        let mut ob = OnlineVariance::new();
+        a.iter().for_each(|&x| oa.update(x));
+        b.iter().for_each(|&x| ob.update(x));
+        oa.merge(&ob);
+        let mut all = OnlineVariance::new();
+        xs.iter().for_each(|&x| all.update(x));
+        assert!((oa.variance() - all.variance()).abs() < 1e-10);
+        assert!((oa.mean() - all.mean()).abs() < 1e-12);
+        assert_eq!(oa.count(), all.count());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = OnlineVariance::new();
+        a.update(1.0);
+        a.update(2.0);
+        let before = a;
+        a.merge(&OnlineVariance::new());
+        assert_eq!(a.count(), before.count());
+        let mut empty = OnlineVariance::new();
+        empty.merge(&before);
+        assert_eq!(empty.count(), 2);
+    }
+
+    #[test]
+    fn class_conditional_separation() {
+        let mut cv = ClassVariance::new(2);
+        // pos class: feature 0 constant, feature 1 varies
+        for x in [1.0, 1.0, 1.0] {
+            cv.observe(1.0, 0, x);
+        }
+        for x in [0.0, 2.0, -2.0] {
+            cv.observe(1.0, 1, x);
+        }
+        // neg class: the mirror
+        for x in [0.0, 4.0] {
+            cv.observe(-1.0, 0, x);
+        }
+        assert!(cv.var(1.0, 0) < 1e-12);
+        assert!(cv.var(1.0, 1) > 1.0);
+        assert!((cv.var(-1.0, 0) - 4.0).abs() < 1e-12);
+        // neg feature 1 unobserved -> prior
+        assert!((cv.var(-1.0, 1) - ClassVariance::DEFAULT_PRIOR).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sum_variance_weights_squared() {
+        let mut cv = ClassVariance::with_prior(3, 0.0);
+        for (j, vals) in [[0.0f64, 2.0], [1.0, 3.0], [5.0, 5.0]].iter().enumerate() {
+            for &x in vals {
+                cv.observe(1.0, j, x);
+            }
+        }
+        // pop vars: 1.0, 1.0, 0.0
+        let w = [2.0, -3.0, 100.0];
+        let v = cv.sum_variance(1.0, &w);
+        assert!((v - (4.0 + 9.0)).abs() < 1e-12);
+        // paper-literal: 2*1 + (-3)*1 + 0 = -1 -> clamped? no: sums to -1 -> 0 clamp
+        // actually 2 - 3 = -1 -> clamped to 0
+        assert_eq!(cv.sum_variance_paper(1.0, &w), 0.0);
+    }
+
+    #[test]
+    fn observe_prefix_only_touches_prefix() {
+        let mut cv = ClassVariance::new(4);
+        let order = [2usize, 0, 3, 1];
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        cv.observe_prefix(1.0, &order, &xs, 2); // features 2 and 0
+        assert_eq!(cv.side(1.0)[2].count(), 1);
+        assert_eq!(cv.side(1.0)[0].count(), 1);
+        assert_eq!(cv.side(1.0)[3].count(), 0);
+        assert_eq!(cv.side(1.0)[1].count(), 0);
+        assert_eq!(cv.total_observations(), 2);
+    }
+
+    #[test]
+    fn table_merge_matches_sequential() {
+        let mut a = ClassVariance::new(2);
+        let mut b = ClassVariance::new(2);
+        let mut both = ClassVariance::new(2);
+        for i in 0..10 {
+            let x = (i as f64).sqrt();
+            a.observe(1.0, 0, x);
+            both.observe(1.0, 0, x);
+        }
+        for i in 0..7 {
+            let x = -(i as f64);
+            b.observe(1.0, 0, x);
+            both.observe(1.0, 0, x);
+        }
+        a.merge(&b);
+        assert!((a.var(1.0, 0) - both.var(1.0, 0)).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,113 @@
+//! Wald's identity and expected-stopping-time bounds (paper Theorem 2).
+//!
+//! Theorem 2: for a walk with increments bounded by `k`, positive drift
+//! `E[X] > 0`, and the Constant STST level `τ = sqrt(var(S_n) log δ^{-1/2})`,
+//! Wald's identity `E[S_T] = E[T]·E[X]` plus the overshoot bound
+//! `S_T ≤ τ + k` gives
+//!
+//! ```text
+//! E[T] ≤ (τ + k) / E[X]  =  O(sqrt(n))        (var(S_n) = O(n))
+//! ```
+//!
+//! These helpers compute the bound and fit the `c·sqrt(n)` law to
+//! empirical stopping times (Figure 2b).
+
+/// Theorem 2's upper bound on the expected stopping time:
+/// `(τ + k) / E[X]` with `τ = sqrt(var_sn · log(1/√δ))`.
+///
+/// Returns `f64::INFINITY` when the drift is non-positive (Wald's bound
+/// requires `E[X] > 0`; with zero/negative drift the walk may never cross).
+pub fn expected_stopping_time_bound(var_sn: f64, delta: f64, increment_bound: f64, drift: f64) -> f64 {
+    if drift <= 0.0 {
+        return f64::INFINITY;
+    }
+    let tau = (var_sn.max(0.0) * super::brownian::log_inv_sqrt(delta)).sqrt();
+    (tau + increment_bound) / drift
+}
+
+/// Least-squares fit of `E[T](n) ≈ c · sqrt(n)` through the origin.
+/// Returns `c` and the R² of the fit in sqrt-space — the Figure 2(b)
+/// check that measured stopping times follow the O(√n) law.
+pub fn fit_sqrt_law(ns: &[f64], stopping_times: &[f64]) -> (f64, f64) {
+    assert_eq!(ns.len(), stopping_times.len());
+    assert!(!ns.is_empty());
+    // Regress t on x = sqrt(n) with zero intercept: c = Σ x t / Σ x².
+    let mut sxt = 0.0;
+    let mut sxx = 0.0;
+    for (&n, &t) in ns.iter().zip(stopping_times) {
+        let x = n.sqrt();
+        sxt += x * t;
+        sxx += x * x;
+    }
+    let c = sxt / sxx;
+    // R² versus the mean-only model.
+    let mean_t = stopping_times.iter().sum::<f64>() / stopping_times.len() as f64;
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for (&n, &t) in ns.iter().zip(stopping_times) {
+        let pred = c * n.sqrt();
+        ss_res += (t - pred) * (t - pred);
+        ss_tot += (t - mean_t) * (t - mean_t);
+    }
+    let r2 = if ss_tot == 0.0 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    (c, r2)
+}
+
+/// Empirical check of Wald's identity `E[S_T] = E[T]·E[X]` over a set of
+/// (stopping time, stopped sum) samples with known drift. Returns the
+/// relative gap `|E[S_T] − E[T]·drift| / max(1, |E[S_T]|)`.
+pub fn wald_identity_gap(stopping_times: &[f64], stopped_sums: &[f64], drift: f64) -> f64 {
+    assert_eq!(stopping_times.len(), stopped_sums.len());
+    if stopping_times.is_empty() {
+        return 0.0;
+    }
+    let et = stopping_times.iter().sum::<f64>() / stopping_times.len() as f64;
+    let es = stopped_sums.iter().sum::<f64>() / stopped_sums.len() as f64;
+    (es - et * drift).abs() / es.abs().max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_scales_as_sqrt_n() {
+        // var(S_n) = n/3 (uniform features): bound(4n)/bound(n) -> 2.
+        let b1 = expected_stopping_time_bound(1000.0 / 3.0, 0.1, 1.0, 0.1);
+        let b4 = expected_stopping_time_bound(4000.0 / 3.0, 0.1, 1.0, 0.1);
+        let ratio = b4 / b1;
+        assert!((ratio - 2.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn bound_infinite_without_drift() {
+        assert!(expected_stopping_time_bound(100.0, 0.1, 1.0, 0.0).is_infinite());
+        assert!(expected_stopping_time_bound(100.0, 0.1, 1.0, -0.5).is_infinite());
+    }
+
+    #[test]
+    fn sqrt_fit_recovers_exact_law() {
+        let ns: Vec<f64> = [64.0, 256.0, 1024.0, 4096.0].to_vec();
+        let ts: Vec<f64> = ns.iter().map(|n| 3.5 * n.sqrt()).collect();
+        let (c, r2) = fit_sqrt_law(&ns, &ts);
+        assert!((c - 3.5).abs() < 1e-9);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn sqrt_fit_rejects_linear_law() {
+        // Times growing linearly in n fit sqrt badly (R² noticeably < 1).
+        let ns: Vec<f64> = (1..=8).map(|i| (i * i * 64) as f64).collect();
+        let ts: Vec<f64> = ns.iter().map(|n| 0.5 * n).collect();
+        let (_, r2) = fit_sqrt_law(&ns, &ts);
+        assert!(r2 < 0.95, "r2 {r2}");
+    }
+
+    #[test]
+    fn wald_gap_zero_for_exact_identity() {
+        let ts = [10.0, 20.0, 30.0];
+        let drift = 0.25;
+        let sums: Vec<f64> = ts.iter().map(|t| t * drift).collect();
+        assert!(wald_identity_gap(&ts, &sums, drift) < 1e-12);
+    }
+}

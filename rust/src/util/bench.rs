@@ -1,0 +1,221 @@
+//! Micro/macro benchmark harness (the offline build's criterion).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false`, so each is
+//! a plain binary; this module supplies the measurement discipline:
+//! warmup, calibrated iteration counts, repeated samples, and robust
+//! statistics (median + MAD), printed as aligned rows and optionally
+//! written to CSV for EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark id (e.g. "fig3/attentive/train").
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad_s: f64,
+    /// Iterations per sample used.
+    pub iters: u64,
+    /// Samples taken.
+    pub samples: usize,
+    /// Optional throughput denominator (items per iteration); when set,
+    /// reports items/s.
+    pub items_per_iter: Option<f64>,
+}
+
+impl Measurement {
+    /// items/s if `items_per_iter` was provided.
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter.map(|it| it / self.median_s)
+    }
+
+    /// Human row: `name  median  ±mad  [throughput]`.
+    pub fn row(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e6 => format!("  {:8.2} Mitems/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:8.2} Kitems/s", t / 1e3),
+            Some(t) => format!("  {t:8.2} items/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ±{:>10}{}",
+            self.name,
+            fmt_time(self.median_s),
+            fmt_time(self.mad_s),
+            tput
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner with fixed measurement discipline.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Target seconds of warmup.
+    pub warmup_s: f64,
+    /// Target seconds per sample.
+    pub sample_s: f64,
+    /// Number of samples.
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_s: 0.3, sample_s: 0.4, samples: 7, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    /// Harness with default discipline (≈3 s per benchmark).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick harness for CI / smoke runs.
+    pub fn quick() -> Self {
+        Self { warmup_s: 0.05, sample_s: 0.08, samples: 3, results: Vec::new() }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn measure(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &Measurement {
+        self.measure_with_items(name, None, move || f())
+    }
+
+    /// Measure with a throughput denominator (items processed per call).
+    pub fn measure_with_items(
+        &mut self,
+        name: impl Into<String>,
+        items_per_iter: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        // Warmup + calibration: find iters such that one sample ≈ sample_s.
+        let t0 = Instant::now();
+        let mut calib_iters: u64 = 0;
+        while t0.elapsed().as_secs_f64() < self.warmup_s {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / calib_iters.max(1) as f64;
+        let iters = ((self.sample_s / per_iter).ceil() as u64).max(1);
+
+        let mut times: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let s = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(s.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        let m = Measurement {
+            name: name.into(),
+            median_s: median,
+            mad_s: mad,
+            iters,
+            samples: self.samples,
+            items_per_iter,
+        };
+        println!("{}", m.row());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as CSV (`name,median_s,mad_s,iters,throughput`).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "name,median_s,mad_s,iters,throughput_items_s")?;
+        for m in &self.results {
+            writeln!(
+                f,
+                "{},{},{},{},{}",
+                m.name,
+                m.median_s,
+                m.mad_s,
+                m.iters,
+                m.throughput().map(|t| t.to_string()).unwrap_or_default()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Prevent the optimizer from discarding a value (stable black_box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench { warmup_s: 0.01, sample_s: 0.01, samples: 3, results: Vec::new() };
+        let mut acc = 0u64;
+        b.measure("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let m = &b.results()[0];
+        assert!(m.median_s > 0.0);
+        assert!(m.iters >= 1);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench { warmup_s: 0.01, sample_s: 0.01, samples: 3, results: Vec::new() };
+        b.measure_with_items("t", Some(100.0), || {
+            black_box(0u64);
+        });
+        assert!(b.results()[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).contains("s"));
+        assert!(fmt_time(2e-3).contains("ms"));
+        assert!(fmt_time(2e-6).contains("µs"));
+        assert!(fmt_time(2e-9).contains("ns"));
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut b = Bench { warmup_s: 0.005, sample_s: 0.005, samples: 2, results: Vec::new() };
+        b.measure("x", || {
+            black_box(1 + 1);
+        });
+        let dir = crate::util::tempdir::TempDir::new("benchcsv");
+        let p = dir.path().join("out.csv");
+        b.write_csv(&p).unwrap();
+        let content = std::fs::read_to_string(&p).unwrap();
+        assert!(content.starts_with("name,median_s"));
+        assert!(content.lines().count() == 2);
+    }
+}

@@ -1,0 +1,97 @@
+//! Randomized property testing (the offline build's proptest).
+//!
+//! [`forall`] runs a property over `cases` random inputs drawn by a
+//! user-supplied generator; on failure it re-runs a simple halving-style
+//! shrink loop (via the generator's `size` hint) and panics with the
+//! failing seed so the case is reproducible by construction.
+
+use super::rng::Rng64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case derives `seed ^ case_index`).
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop` over `cases` inputs produced by `gen` at decreasing sizes
+/// on failure. `gen(rng, size)` should scale input complexity with
+/// `size ∈ (0, 1]`. Panics with the reproducing seed on failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: Config,
+    gen: impl Fn(&mut Rng64, f64) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng64::seed_from_u64(case_seed);
+        let input = gen(&mut rng, 1.0);
+        if let Err(msg) = prop(&input) {
+            // Shrink: retry the same stream at smaller sizes and report the
+            // smallest failing input found.
+            let mut smallest: (f64, T, String) = (1.0, input, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05] {
+                let mut rng = Rng64::seed_from_u64(case_seed);
+                let candidate = gen(&mut rng, size);
+                if let Err(m) = prop(&candidate) {
+                    smallest = (size, candidate, m);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, size {}):\n  input: {:?}\n  error: {}",
+                smallest.0, smallest.1, smallest.2
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(
+            Config { cases: 50, seed: 1 },
+            |rng, size| {
+                let n = 1 + (size * 20.0) as usize;
+                (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect::<Vec<f64>>()
+            },
+            |xs| {
+                if xs.iter().all(|x| x.abs() <= 1.0) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        forall(
+            Config { cases: 20, seed: 2 },
+            |rng, _| rng.below(100),
+            |&n| if n < 90 { Ok(()) } else { Err(format!("{n} >= 90")) },
+        );
+    }
+}

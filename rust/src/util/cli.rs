@@ -1,0 +1,114 @@
+//! Minimal declarative CLI argument parser (the offline build's clap).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean
+//! `--switch`, positional arguments, defaults, and auto-generated help.
+//! The `attentive` binary's needs only — not a general framework.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw tokens (everything after the subcommand). Flags named in
+    /// `switches` are boolean and never consume a value.
+    pub fn parse_with(tokens: &[String], switches: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(rest) = t.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&rest) {
+                    out.switches.push(rest.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.flags.insert(rest.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    /// Parse with no declared boolean switches.
+    pub fn parse(tokens: &[String]) -> Result<Self, String> {
+        Self::parse_with(tokens, &[])
+    }
+
+    /// String flag with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Parsed numeric flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, key: &str) -> bool {
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Positional argument by index.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_and_switches() {
+        let a = Args::parse_with(
+            &toks(&["--walks", "500", "--csv=out.csv", "--audit", "positional"]),
+            &["audit"],
+        )
+        .unwrap();
+        assert_eq!(a.get("walks", "0"), "500");
+        assert_eq!(a.get("csv", ""), "out.csv");
+        assert!(a.has("audit"));
+        assert!(!a.has("missing"));
+        assert_eq!(a.pos(0), Some("positional"));
+    }
+
+    #[test]
+    fn numeric_parsing_with_default() {
+        let a = Args::parse(&toks(&["--n", "42"])).unwrap();
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse("m", 7usize).unwrap(), 7);
+        let bad = Args::parse(&toks(&["--n", "xyz"])).unwrap();
+        assert!(bad.get_parse("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = Args::parse(&toks(&["--verbose"])).unwrap();
+        assert!(a.has("verbose"));
+    }
+}

@@ -1,0 +1,25 @@
+//! In-tree substrates for an offline build.
+//!
+//! The build environment vendors only `xla`, `anyhow`, and `thiserror`;
+//! every other facility the stack needs is implemented here from scratch:
+//!
+//! * [`rng`] — deterministic xoshiro256++ PRNG (replaces `rand`/
+//!   `rand_chacha`): seedable, splittable streams, uniform ranges.
+//! * [`json`] — a complete JSON value model, parser, and printer
+//!   (replaces `serde_json` for configs, reports, and exports).
+//! * [`parallel`] — scoped-thread parallel map with deterministic output
+//!   order (replaces `rayon` for the sweep scheduler and simulators).
+//! * [`bench`] — a micro/macro-benchmark harness with warmup, repeats,
+//!   and robust statistics (replaces `criterion` for `cargo bench`).
+//! * [`cli`] — a tiny declarative argument parser (replaces `clap`).
+//! * [`check`] — randomized property-testing loops with shrinking-lite
+//!   counterexample reporting (replaces `proptest`).
+//! * [`tempdir`] — RAII temporary directories for tests.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod tempdir;

@@ -1,0 +1,133 @@
+//! Scoped-thread parallel map (the offline build's rayon).
+//!
+//! [`par_map`] fans a work list out over `min(jobs, cpus)` scoped worker
+//! threads pulling indices from a shared atomic counter (work stealing by
+//! construction), and returns results **in input order** — determinism is
+//! guaranteed as long as each job is itself deterministic in its inputs,
+//! regardless of thread scheduling.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use for `n` jobs.
+pub fn default_workers(n: usize) -> usize {
+    let cpus = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+    cpus.min(n).max(1)
+}
+
+/// Apply `f` to each item in parallel, preserving input order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = default_workers(n);
+    if workers == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    // SAFETY-free approach: split `slots` into one &mut cell per index via
+    // chunk iteration is awkward with dynamic claiming, so collect results
+    // per worker with indices and scatter afterwards.
+    let results: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        mine.push((i, f(&items[i])));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("par_map worker panicked")).collect()
+    });
+    for bucket in results {
+        for (i, r) in bucket {
+            slots[i] = Some(r);
+        }
+    }
+    slots.into_iter().map(|s| s.expect("par_map slot unfilled")).collect()
+}
+
+/// Parallel for-each over index range `0..n` (no results collected).
+pub fn par_for(n: usize, f: impl Fn(usize) + Sync) {
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |&i| f(i));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |&i| i * 2);
+        assert_eq!(out, (0..1000).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let count = AtomicU64::new(0);
+        let items: Vec<usize> = (0..257).collect();
+        par_map(&items, |_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 257);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, |&x| x).is_empty());
+        assert_eq!(par_map(&[7], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn actually_uses_threads_for_cpu_work() {
+        // Smoke test: heavy jobs complete and produce correct values.
+        let items: Vec<u64> = (0..32).collect();
+        let out = par_map(&items, |&i| {
+            let mut acc = i;
+            for _ in 0..100_000 {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+            }
+            acc
+        });
+        // deterministic regardless of scheduling
+        let seq: Vec<u64> = items
+            .iter()
+            .map(|&i| {
+                let mut acc = i;
+                for _ in 0..100_000 {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(1);
+                }
+                acc
+            })
+            .collect();
+        assert_eq!(out, seq);
+    }
+
+    #[test]
+    fn par_for_covers_range() {
+        let hits = AtomicU64::new(0);
+        par_for(100, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+}

@@ -1,0 +1,204 @@
+//! Deterministic PRNG: xoshiro256++ seeded via SplitMix64.
+//!
+//! Replaces `rand`/`rand_chacha` in this offline build. Properties the
+//! stack relies on:
+//!
+//! * **Reproducibility** — the same seed yields the same stream on every
+//!   platform (pure integer arithmetic, no platform entropy).
+//! * **Stream splitting** — `Rng64::split(tag)` derives an independent
+//!   stream, used to key per-run / per-cell simulation RNGs.
+//! * **Quality** — xoshiro256++ passes BigCrush; far more than the
+//!   bounded-walk simulations and Fisher–Yates shuffles here require.
+
+/// SplitMix64 step — used for seeding and stream derivation.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256++ deterministic generator.
+#[derive(Debug, Clone)]
+pub struct Rng64 {
+    s: [u64; 4],
+}
+
+impl Rng64 {
+    /// Seed via SplitMix64 expansion (any u64, including 0, is fine).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Self { s }
+    }
+
+    /// Derive an independent stream keyed by `tag` (order-free: derived
+    /// streams don't perturb this one).
+    pub fn split(&self, tag: u64) -> Rng64 {
+        let mut sm = self.s[0] ^ self.s[2] ^ tag.wrapping_mul(0xA076_1D64_78BD_642F);
+        let s = [splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm), splitmix64(&mut sm)];
+        Rng64 { s }
+    }
+
+    /// Next raw 64 bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform usize in [0, n) (n > 0). Lemire-style rejection-free for
+    /// our purposes: modulo bias is < 2⁻⁵³ for the n values used here,
+    /// but we use widening multiply anyway for exactness.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // widening multiply: floor(x * n / 2^64) is uniform enough via
+        // 128-bit arithmetic and exact for n << 2^64
+        let x = self.next_u64() as u128;
+        ((x * n as u128) >> 64) as usize
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Standard normal via Box–Muller (one value per call; simple and
+    /// deterministic).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Rng64::seed_from_u64(42);
+        let mut b = Rng64::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng64::seed_from_u64(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform_ish() {
+        let mut r = Rng64::seed_from_u64(7);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut lo_count = 0;
+        for _ in 0..n {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+            if v < 0.5 {
+                lo_count += 1;
+            }
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        let frac = lo_count as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.01, "lo fraction {frac}");
+    }
+
+    #[test]
+    fn below_is_uniform_over_small_range() {
+        let mut r = Rng64::seed_from_u64(11);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expect = n / 7;
+            assert!((c as i64 - expect as i64).abs() < (expect / 10) as i64, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn split_streams_are_independent_and_stable() {
+        let base = Rng64::seed_from_u64(5);
+        let mut a1 = base.split(1);
+        let mut a2 = base.split(1);
+        let mut b = base.split(2);
+        assert_eq!(a1.next_u64(), a2.next_u64(), "same tag, same stream");
+        assert_ne!(a1.next_u64(), b.next_u64(), "different tags differ");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng64::seed_from_u64(3);
+        let n = 50_000;
+        let vals: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = vals.iter().sum::<f64>() / n as f64;
+        let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Rng64::seed_from_u64(9);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "100 elements shuffled in place");
+    }
+
+    #[test]
+    fn range_usize_inclusive_bounds() {
+        let mut r = Rng64::seed_from_u64(1);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..1000 {
+            let v = r.range_usize(3, 5);
+            assert!((3..=5).contains(&v));
+            saw_lo |= v == 3;
+            saw_hi |= v == 5;
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

@@ -1,0 +1,69 @@
+//! RAII temporary directories (the offline build's `tempfile`).
+//!
+//! Creates a uniquely named directory under the system temp dir and
+//! removes it (recursively) on drop. Uniqueness comes from a process-wide
+//! atomic counter + PID + a time component, so parallel tests never
+//! collide.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A temporary directory removed on drop.
+#[derive(Debug)]
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    /// Create `$TMPDIR/attentive-<prefix>-<pid>-<n>-<t>`.
+    pub fn new(prefix: &str) -> Self {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let t = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos())
+            .unwrap_or(0);
+        let path = std::env::temp_dir().join(format!(
+            "attentive-{prefix}-{}-{n}-{t}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        Self { path }
+    }
+
+    /// The directory path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let p;
+        {
+            let d = TempDir::new("t");
+            p = d.path().to_path_buf();
+            assert!(p.exists());
+            std::fs::write(p.join("f.txt"), "x").unwrap();
+        }
+        assert!(!p.exists(), "dir should be removed on drop");
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new("u");
+        let b = TempDir::new("u");
+        assert_ne!(a.path(), b.path());
+    }
+}

@@ -1,0 +1,141 @@
+//! Integration: rust runtime ⇄ AOT artifacts.
+//!
+//! These tests need `make artifacts` to have run; they skip (with a loud
+//! message) when `artifacts/` is absent so `cargo test` stays green on a
+//! fresh checkout. They verify the *numerics* of the XLA path against the
+//! native rust implementations — the cross-layer contract of the whole
+//! three-layer design.
+
+use attentive::data::synth::SynthDigits;
+use attentive::margin::evaluator::BlockedEvaluator;
+use attentive::runtime::margin_exec::{shapes, BlockedMarginExecutor};
+use attentive::runtime::pegasos_exec::PegasosStepExecutor;
+use attentive::runtime::predict_exec::DensePredictExecutor;
+use attentive::runtime::Runtime;
+use attentive::stst::boundary::ConstantBoundary;
+use attentive::util::rng::Rng64;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let rt = Runtime::cpu().expect("PJRT CPU client must open");
+    if !rt.artifact_available(&BlockedMarginExecutor::artifact_name()) {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(rt)
+}
+
+fn toy_weights(dim: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng64::seed_from_u64(seed);
+    (0..dim).map(|_| rng.range_f64(-0.1, 0.1)).collect()
+}
+
+#[test]
+fn margin_artifact_matches_native_prefixes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exec = BlockedMarginExecutor::new(&rt).unwrap();
+    let w = toy_weights(shapes::DIM, 1);
+    let mut gen = SynthDigits::new(5);
+    let imgs: Vec<Vec<f64>> = (0..4).map(|i| gen.render((i % 10) as u8)).collect();
+    let refs: Vec<&[f64]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let ys = [1.0, -1.0, 1.0, -1.0];
+
+    let rows = exec.prefixes(&w, &refs, &ys).unwrap();
+    assert_eq!(rows.len(), 4);
+    for (row, (x, &y)) in rows.iter().zip(imgs.iter().zip(ys.iter())) {
+        assert_eq!(row.len(), shapes::NBLOCKS);
+        // Native prefix computation (sequential order).
+        let mut s = 0.0;
+        let mut native = Vec::new();
+        for k in 0..shapes::NBLOCKS {
+            for j in k * shapes::BLOCK..(k + 1) * shapes::BLOCK {
+                s += w[j] * x[j];
+            }
+            native.push(y * s);
+        }
+        for (a, b) in row.iter().zip(&native) {
+            assert!((a - b).abs() < 1e-4, "xla {a} vs native {b}");
+        }
+    }
+}
+
+#[test]
+fn margin_artifact_decisions_match_blocked_evaluator() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exec = BlockedMarginExecutor::new(&rt).unwrap();
+    let w = toy_weights(shapes::DIM, 2);
+    let mut gen = SynthDigits::new(6);
+    let imgs: Vec<Vec<f64>> = (0..8).map(|i| gen.render((i % 10) as u8)).collect();
+    let refs: Vec<&[f64]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let ys = vec![1.0; 8];
+    let vars = vec![0.05; 8];
+    let boundary = ConstantBoundary::new(0.1);
+
+    let decisions = exec.decide(&w, &refs, &ys, 1.0, &vars, &boundary).unwrap();
+    let native = BlockedEvaluator::new(shapes::BLOCK);
+    let order: Vec<usize> = (0..shapes::DIM).collect();
+    for (i, (charged, stopped, margin)) in decisions.iter().enumerate() {
+        let nres = native.evaluate(&w, &imgs[i], ys[i], &order, 1.0, vars[i], &boundary);
+        assert_eq!(*charged, nres.evaluated, "example {i} charged features");
+        assert_eq!(
+            *stopped,
+            nres.outcome == attentive::margin::walker::WalkOutcome::EarlyStopped,
+            "example {i} stop decision"
+        );
+        assert!((margin - nres.partial_margin).abs() < 1e-4, "example {i} margin");
+    }
+}
+
+#[test]
+fn pegasos_artifact_matches_reference_step() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exec = PegasosStepExecutor::new(&rt).unwrap();
+    let w = toy_weights(shapes::DIM, 3);
+    let x = toy_weights(shapes::DIM, 4);
+    for (y, t, lambda) in [(1.0, 1, 1e-2), (-1.0, 7, 1e-4), (1.0, 1000, 0.5)] {
+        let got = exec.step(&w, &x, y, t, lambda).unwrap();
+        let want = PegasosStepExecutor::step_reference(&w, &x, y, t, lambda);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-4, "t={t} lambda={lambda}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn predict_artifact_matches_dot() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exec = DensePredictExecutor::new(&rt).unwrap();
+    let w = toy_weights(shapes::DIM, 5);
+    // 70 examples: exercises the chunking across the 32-row batch.
+    let mut gen = SynthDigits::new(7);
+    let mut features = Vec::new();
+    let mut expect = Vec::new();
+    for i in 0..70 {
+        let img = gen.render((i % 10) as u8);
+        expect.push(attentive::margin::dot(&w, &img));
+        features.extend_from_slice(&img);
+    }
+    let got = exec.margins(&w, &features, 70).unwrap();
+    assert_eq!(got.len(), 70);
+    for (a, b) in got.iter().zip(&expect) {
+        assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let a = rt.load(&BlockedMarginExecutor::artifact_name()).unwrap();
+    let b = rt.load(&BlockedMarginExecutor::artifact_name()).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second load must hit the cache");
+}
+
+#[test]
+fn manifest_geometry_matches_rust_constants() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let path = rt.artifact_path("manifest.json");
+    let text = std::fs::read_to_string(path).unwrap();
+    let doc = attentive::util::json::Json::parse(&text).unwrap();
+    assert_eq!(doc.get("dim").unwrap().as_usize(), Some(shapes::DIM));
+    assert_eq!(doc.get("batch").unwrap().as_usize(), Some(shapes::BATCH));
+    assert_eq!(doc.get("block").unwrap().as_usize(), Some(shapes::BLOCK));
+}

@@ -1,0 +1,114 @@
+//! Integration: train → snapshot → serve, across thread boundaries and a
+//! JSON round-trip to disk — the serving deployment path end-to-end.
+
+use attentive::coordinator::service::{ModelSnapshot, PredictionService};
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::SynthDigits;
+use attentive::data::task::BinaryTask;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::OnlineLearner;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::stst::boundary::AnyBoundary;
+use attentive::util::json::Json;
+
+fn train_snapshot() -> ModelSnapshot {
+    let ds = SynthDigits::new(17).generate_classes(1_200, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).unwrap();
+    let mut learner = attentive_pegasos(task.dim(), 1e-2, 0.1);
+    Trainer::new(TrainerConfig { epochs: 2, eval_every: 0, curves: false, ..Default::default() })
+        .fit(&mut learner, &task);
+    let weights = learner.weights().to_vec();
+    let var = {
+        let vc = learner.var_cache_mut();
+        let a = vc.var_sn(1.0, &weights);
+        let b = vc.var_sn(-1.0, &weights);
+        a.max(b)
+    };
+    ModelSnapshot {
+        weights,
+        var_sn: var,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        // Permuted, not Sequential: raw pixel order is spatially
+        // correlated (whole rows push the sum one way), violating the
+        // exchangeability the Brownian-bridge boundary assumes — the
+        // reason the paper randomizes coordinate order.
+        policy: CoordinatePolicy::Permuted,
+    }
+}
+
+#[test]
+fn train_snapshot_serve_round_trip() {
+    let snapshot = train_snapshot();
+
+    // Persist and reload the snapshot (deployment hand-off).
+    let dir = attentive::util::tempdir::TempDir::new("svc");
+    let path = dir.path().join("model.json");
+    std::fs::write(&path, snapshot.to_json().to_string_pretty()).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let reloaded = ModelSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(reloaded.weights, snapshot.weights);
+
+    // Serve digit traffic from the reloaded snapshot.
+    let (handle, run) = PredictionService::new(reloaded, 8, 128, 0).with_workers(2).spawn();
+    let mut gen = SynthDigits::new(18);
+    let mut correct = 0;
+    let mut feats = 0usize;
+    let total = 200;
+    for i in 0..total {
+        let digit = if i % 2 == 0 { 2u8 } else { 3u8 };
+        let y = if digit == 2 { 1.0 } else { -1.0 };
+        let resp = handle.score(gen.render(digit)).expect("service up");
+        if y * resp.score > 0.0 {
+            correct += 1;
+        }
+        feats += resp.features_evaluated;
+    }
+    let stats = run.stats.snapshot();
+    drop(handle);
+    run.join();
+
+    assert_eq!(stats.served, total as u64);
+    let acc = correct as f64 / total as f64;
+    assert!(acc > 0.9, "serving accuracy {acc} too low");
+    let avg = feats as f64 / total as f64;
+    assert!(avg < 784.0 * 0.8, "early exit should save features (avg {avg})");
+}
+
+#[test]
+fn service_survives_handle_clones_and_drops() {
+    let snapshot = train_snapshot();
+    let (handle, run) = PredictionService::new(snapshot, 4, 32, 1).spawn();
+    let h2 = handle.clone();
+    drop(handle); // one handle remains
+    let mut gen = SynthDigits::new(19);
+    let r = h2.score(gen.render(2)).expect("still alive via clone");
+    assert!(r.features_evaluated > 0);
+    drop(h2); // last handle gone -> workers exit
+    run.join();
+}
+
+#[test]
+fn full_boundary_service_always_evaluates_everything() {
+    let mut snapshot = train_snapshot();
+    snapshot.boundary = AnyBoundary::Full;
+    let (handle, run) = PredictionService::new(snapshot, 4, 32, 2).spawn();
+    let mut gen = SynthDigits::new(20);
+    for d in [2u8, 3u8] {
+        let r = handle.score(gen.render(d)).unwrap();
+        assert_eq!(r.features_evaluated, 784);
+    }
+    drop(handle);
+    run.join();
+}
+
+#[test]
+fn budgeted_service_caps_features() {
+    let mut snapshot = train_snapshot();
+    snapshot.boundary = AnyBoundary::Budgeted { k: 50 };
+    let (handle, run) = PredictionService::new(snapshot, 4, 32, 3).spawn();
+    let mut gen = SynthDigits::new(21);
+    let r = handle.score(gen.render(3)).unwrap();
+    assert_eq!(r.features_evaluated, 50);
+    drop(handle);
+    run.join();
+}

@@ -1,0 +1,145 @@
+//! Integration: end-to-end training across the full native stack —
+//! data generation → 1-vs-1 task → learners under all four boundaries →
+//! trainer → metrics. This is the Figure 3 pipeline at reduced scale.
+
+use attentive::config::{DataConfig, ExperimentConfig, LearnerKind};
+use attentive::coordinator::scheduler::run_experiment;
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::SynthDigits;
+use attentive::data::task::BinaryTask;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::budgeted::budgeted_pegasos;
+use attentive::learner::pegasos::{Pegasos, PegasosConfig};
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::stst::boundary::AnyBoundary;
+
+fn small_cfg(boundary: AnyBoundary) -> ExperimentConfig {
+    ExperimentConfig {
+        name: format!("it-{}", boundary.to_json().to_string_compact().len()),
+        data: DataConfig::Synth { seed: 33, count: 2_000 },
+        boundary,
+        runs: 2,
+        epochs: 2,
+        eval_every: 0,
+        lambda: 1e-2,
+        ..ExperimentConfig::paper_default()
+    }
+}
+
+#[test]
+fn paper_trio_orders_correctly() {
+    // Full / Attentive / Budgeted on the same task: attentive must match
+    // full's accuracy (±5%) at a fraction of the features; budgeted gets
+    // the attentive budget (the paper's protocol).
+    let full = run_experiment(&small_cfg(AnyBoundary::Full)).unwrap();
+    let att = run_experiment(&small_cfg(AnyBoundary::Constant {
+        delta: 0.1,
+        paper_literal: false,
+    }))
+    .unwrap();
+    let k = att.avg_features.round().max(1.0) as usize;
+    let mut bcfg = small_cfg(AnyBoundary::Budgeted { k });
+    bcfg.policy = CoordinatePolicy::Permuted; // sorted+budgeted impossible
+    let bud = run_experiment(&bcfg).unwrap();
+
+    assert!(att.avg_features < full.avg_features / 2.0);
+    assert!(att.final_test_error <= full.final_test_error + 0.05);
+    assert!((bud.avg_features - k as f64).abs() < 1.0);
+    // Early-stopped prediction: attentive beats budgeted (paper's right
+    // subfigure claim).
+    assert!(
+        att.final_test_error_early <= bud.final_test_error_early + 0.02,
+        "attentive early err {} vs budgeted {}",
+        att.final_test_error_early,
+        bud.final_test_error_early
+    );
+}
+
+#[test]
+fn all_learner_kinds_train_end_to_end() {
+    for kind in [LearnerKind::Pegasos, LearnerKind::Perceptron, LearnerKind::PassiveAggressive] {
+        let mut cfg = small_cfg(AnyBoundary::Constant { delta: 0.1, paper_literal: false });
+        cfg.learner = kind;
+        cfg.runs = 1;
+        let out = run_experiment(&cfg).unwrap();
+        assert!(
+            out.final_test_error < 0.2,
+            "{:?} error {} too high",
+            kind,
+            out.final_test_error
+        );
+        assert!(out.avg_features < 784.0);
+    }
+}
+
+#[test]
+fn delta_controls_the_computation_accuracy_tradeoff() {
+    // Sweeping delta: higher delta = more aggressive stopping = fewer
+    // features; error may rise slightly.
+    let feats: Vec<f64> = [0.01, 0.1, 0.4]
+        .iter()
+        .map(|&d| {
+            run_experiment(&small_cfg(AnyBoundary::Constant { delta: d, paper_literal: false }))
+                .unwrap()
+                .avg_features
+        })
+        .collect();
+    assert!(
+        feats[0] > feats[1] && feats[1] > feats[2],
+        "features must fall with delta: {feats:?}"
+    );
+}
+
+#[test]
+fn curved_boundary_is_more_conservative_than_constant() {
+    let curved =
+        run_experiment(&small_cfg(AnyBoundary::Curved { delta: 0.1 })).unwrap();
+    let constant = run_experiment(&small_cfg(AnyBoundary::Constant {
+        delta: 0.1,
+        paper_literal: false,
+    }))
+    .unwrap();
+    assert!(
+        curved.avg_features >= constant.avg_features,
+        "curved {} should evaluate at least as many features as constant {}",
+        curved.avg_features,
+        constant.avg_features
+    );
+}
+
+#[test]
+fn multi_epoch_training_reduces_error() {
+    let ds = SynthDigits::new(44).generate_classes(1_500, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).unwrap();
+    let (train, test) = task.split(0.8);
+    let one = {
+        let mut l = Pegasos::full(train.dim(), PegasosConfig { lambda: 1e-3, ..Default::default() });
+        Trainer::new(TrainerConfig { epochs: 1, eval_every: 0, curves: false, ..Default::default() })
+            .fit_eval(&mut l, &train, Some(&test))
+            .final_test_error
+    };
+    let five = {
+        let mut l = Pegasos::full(train.dim(), PegasosConfig { lambda: 1e-3, ..Default::default() });
+        Trainer::new(TrainerConfig { epochs: 5, eval_every: 0, curves: false, ..Default::default() })
+            .fit_eval(&mut l, &train, Some(&test))
+            .final_test_error
+    };
+    assert!(five <= one + 0.01, "5 epochs {five} vs 1 epoch {one}");
+}
+
+#[test]
+fn budgeted_uses_attentive_average_protocol() {
+    // The paper's protocol end-to-end: measure attentive's average, hand
+    // it to budgeted as a fixed budget, check budgets respected per step.
+    let ds = SynthDigits::new(55).generate_classes(600, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).unwrap();
+    let mut att = attentive_pegasos(task.dim(), 1e-2, 0.1);
+    let r = Trainer::new(TrainerConfig { eval_every: 0, curves: false, ..Default::default() })
+        .fit(&mut att, &task);
+    let k = r.avg_features_per_example().round().max(1.0) as usize;
+    assert!(k < 784, "attentive average {k} should be well under 784");
+    let mut bud = budgeted_pegasos(task.dim(), 1e-2, k, CoordinatePolicy::Permuted, 0);
+    let rb = Trainer::new(TrainerConfig { eval_every: 0, curves: false, ..Default::default() })
+        .fit(&mut bud, &task);
+    assert!((rb.avg_features_per_example() - k as f64).abs() < 1e-9);
+}

@@ -1,0 +1,389 @@
+//! Randomized property tests over the STST/margin/coordinator invariants
+//! (DESIGN.md §5), using the in-tree `util::check` harness.
+
+use attentive::data::stream::ShuffledIndices;
+use attentive::margin::evaluator::{BlockedEvaluator, ScalarEvaluator};
+use attentive::margin::policy::{CoordinatePolicy, OrderGenerator};
+use attentive::margin::walker::WalkOutcome;
+use attentive::stst::boundary::{Boundary, ConstantBoundary, StopContext};
+use attentive::stst::brownian;
+use attentive::stst::variance::OnlineVariance;
+use attentive::util::check::{forall, Config};
+use attentive::util::rng::Rng64;
+
+/// (a) Boundary monotonicity: τ is decreasing in δ, increasing in var/θ.
+#[test]
+fn prop_boundary_monotone() {
+    forall(
+        Config { cases: 300, seed: 0xB0 },
+        |rng, _| {
+            (
+                rng.range_f64(0.01, 0.5),  // delta
+                rng.range_f64(0.0, 3.0),   // theta
+                rng.range_f64(0.01, 500.0), // var
+            )
+        },
+        |&(delta, theta, var)| {
+            let tau = brownian::constant_boundary_level(delta, theta, var);
+            let tau_lax = brownian::constant_boundary_level((delta * 1.5).min(0.99), theta, var);
+            let tau_var = brownian::constant_boundary_level(delta, theta, var * 2.0);
+            let tau_theta = brownian::constant_boundary_level(delta, theta + 0.5, var);
+            if tau_lax > tau + 1e-12 {
+                return Err(format!("tau not decreasing in delta: {tau} -> {tau_lax}"));
+            }
+            if tau_var < tau {
+                return Err("tau not increasing in var".into());
+            }
+            if tau_theta < tau {
+                return Err("tau not increasing in theta".into());
+            }
+            // And it always inverts the crossing probability exactly.
+            let p = brownian::bridge_crossing_prob(tau, theta, var);
+            if (p - delta).abs() > 1e-6 {
+                return Err(format!("inversion broken: p={p} delta={delta}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (b) As δ→0 the walker stops late or never on any bounded example.
+#[test]
+fn prop_tiny_delta_rarely_stops() {
+    forall(
+        Config { cases: 100, seed: 0xB1 },
+        |rng, size| {
+            let n = 16 + (size * 200.0) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            (w, x)
+        },
+        |(w, x)| {
+            let n = w.len();
+            let order: Vec<usize> = (0..n).collect();
+            // Huge variance + tiny delta => boundary far above any
+            // achievable partial sum of bounded products.
+            let var = (n as f64) * 4.0;
+            let res = ScalarEvaluator::new().evaluate(
+                w,
+                x,
+                1.0,
+                &order,
+                0.0,
+                var,
+                &ConstantBoundary::new(1e-9),
+            );
+            if res.outcome == WalkOutcome::EarlyStopped {
+                return Err(format!("stopped at {} with delta=1e-9", res.evaluated));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (c) Blocked evaluator at block=1 is exactly the scalar evaluator, and
+/// at any block size stops at the first boundary-multiple ≥ scalar stop.
+#[test]
+fn prop_blocked_matches_scalar() {
+    forall(
+        Config { cases: 150, seed: 0xB2 },
+        |rng, size| {
+            let blocks = 1 + (size * 12.0) as usize;
+            let block = 1 << rng.range_usize(0, 4); // 1,2,4,8,16
+            let n = block * blocks.max(2);
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            let var = rng.range_f64(0.001, 2.0);
+            (block, w, x, y, var)
+        },
+        |(block, w, x, y, var)| {
+            let n = w.len();
+            let order: Vec<usize> = (0..n).collect();
+            let b = ConstantBoundary::new(0.1);
+            let scalar = ScalarEvaluator::new().evaluate(w, x, *y, &order, 1.0, *var, &b);
+            let blocked =
+                BlockedEvaluator::new(*block).evaluate(w, x, *y, &order, 1.0, *var, &b);
+            if *block == 1 {
+                if scalar.evaluated != blocked.evaluated
+                    || scalar.outcome != blocked.outcome
+                {
+                    return Err("block=1 must equal scalar".into());
+                }
+                return Ok(());
+            }
+            if blocked.outcome == WalkOutcome::EarlyStopped {
+                if blocked.evaluated % block != 0 {
+                    return Err("blocked stop not at a block boundary".into());
+                }
+                if blocked.evaluated < scalar.evaluated.min(n) && scalar.outcome == WalkOutcome::EarlyStopped && blocked.evaluated + block <= scalar.evaluated {
+                    return Err(format!(
+                        "blocked stopped {} more than a block before scalar {}",
+                        blocked.evaluated, scalar.evaluated
+                    ));
+                }
+            }
+            // Full margins agree when both complete.
+            if blocked.outcome == WalkOutcome::Completed
+                && scalar.outcome == WalkOutcome::Completed
+                && (blocked.partial_margin - scalar.partial_margin).abs() > 1e-9
+            {
+                return Err("completed margins disagree".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (d) Stream shuffler conserves examples (no loss, no duplication).
+#[test]
+fn prop_shuffler_conserves() {
+    forall(
+        Config { cases: 200, seed: 0xB3 },
+        |rng, size| {
+            let len = (size * 500.0) as usize + 1;
+            (len, rng.next_u64(), rng.below(5) as u64)
+        },
+        |&(len, seed, epoch)| {
+            let p = ShuffledIndices::new(len, seed).epoch(epoch);
+            let mut seen = vec![false; len];
+            for &i in &p {
+                if i >= len || seen[i] {
+                    return Err(format!("index {i} out of range or duplicated"));
+                }
+                seen[i] = true;
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("permutation dropped indices".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (e) Variance estimation is permutation-invariant and matches two-pass.
+#[test]
+fn prop_variance_permutation_invariant() {
+    forall(
+        Config { cases: 150, seed: 0xB4 },
+        |rng, size| {
+            let n = 2 + (size * 60.0) as usize;
+            let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let seed = rng.next_u64();
+            (xs, seed)
+        },
+        |(xs, seed)| {
+            let mut fwd = OnlineVariance::new();
+            xs.iter().for_each(|&x| fwd.update(x));
+            let mut shuffled = xs.clone();
+            Rng64::seed_from_u64(*seed).shuffle(&mut shuffled);
+            let mut per = OnlineVariance::new();
+            shuffled.iter().for_each(|&x| per.update(x));
+            if (fwd.variance() - per.variance()).abs() > 1e-9 {
+                return Err("variance depends on order".into());
+            }
+            let n = xs.len() as f64;
+            let mean = xs.iter().sum::<f64>() / n;
+            let tp = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+            if (fwd.variance() - tp).abs() > 1e-8 {
+                return Err(format!("welford {} vs two-pass {tp}", fwd.variance()));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (f) Policy orders are always valid coordinate indices, and permutation
+/// policies touch every coordinate exactly once.
+#[test]
+fn prop_policy_orders_valid() {
+    forall(
+        Config { cases: 120, seed: 0xB5 },
+        |rng, size| {
+            let n = 1 + (size * 100.0) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            (w, rng.next_u64())
+        },
+        |(w, seed)| {
+            for policy in CoordinatePolicy::ALL {
+                let mut g = OrderGenerator::new(policy, *seed);
+                let order = g.order(w).to_vec();
+                if order.len() != w.len() {
+                    return Err(format!("{policy:?}: wrong order length"));
+                }
+                if order.iter().any(|&i| i >= w.len()) {
+                    return Err(format!("{policy:?}: out-of-range index"));
+                }
+                if !matches!(policy, CoordinatePolicy::WeightSampled) {
+                    let mut seen = vec![false; w.len()];
+                    for &i in &order {
+                        if seen[i] {
+                            return Err(format!("{policy:?}: duplicated index {i}"));
+                        }
+                        seen[i] = true;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (g) Budget boundaries never exceed their budget regardless of inputs.
+#[test]
+fn prop_budget_respected() {
+    forall(
+        Config { cases: 150, seed: 0xB6 },
+        |rng, size| {
+            let n = 4 + (size * 300.0) as usize;
+            let k = 1 + rng.below(n);
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            (k, w, x)
+        },
+        |(k, w, x)| {
+            let order: Vec<usize> = (0..w.len()).collect();
+            let b = attentive::stst::boundary::BudgetedBoundary::new(*k);
+            let res = ScalarEvaluator::new().evaluate(w, x, 1.0, &order, 1.0, 1.0, &b);
+            if res.evaluated != (*k).min(w.len()) {
+                return Err(format!("budget {k}, evaluated {}", res.evaluated));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (h2) Curved boundary is monotone decreasing in progress and meets θ
+/// at the end (the curtailed envelope shape).
+#[test]
+fn prop_curved_boundary_monotone_decreasing() {
+    use attentive::stst::boundary::CurvedBoundary;
+    forall(
+        Config { cases: 200, seed: 0xB8 },
+        |rng, _| {
+            (
+                rng.range_f64(0.01, 0.5),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.1, 200.0),
+                4 + rng.below(1000),
+            )
+        },
+        |&(delta, theta, var, n)| {
+            let b = CurvedBoundary::new(delta);
+            let mut prev = f64::INFINITY;
+            for i in [1usize, n / 4, n / 2, 3 * n / 4, n - 1] {
+                let l = b.level(&StopContext { evaluated: i, total: n, theta, var_sn: var });
+                if l > prev + 1e-9 {
+                    return Err(format!("curved level rose at i={i}: {prev} -> {l}"));
+                }
+                if l < theta - 1e-9 {
+                    return Err(format!("curved level {l} fell below theta {theta}"));
+                }
+                prev = l;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (i) Two-sided prediction walks stop symmetrically: negating the input
+/// flips the score's sign but not the stopping step.
+#[test]
+fn prop_predictor_sign_symmetry() {
+    use attentive::learner::predictor::EarlyStopPredictor;
+    forall(
+        Config { cases: 150, seed: 0xB9 },
+        |rng, size| {
+            let n = 8 + (size * 200.0) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let var = rng.range_f64(0.01, 5.0);
+            (w, x, var)
+        },
+        |(w, x, var)| {
+            let order: Vec<usize> = (0..w.len()).collect();
+            let b = ConstantBoundary::new(0.1);
+            let p = EarlyStopPredictor::new(&b);
+            let (s1, k1) = p.predict(w, x, &order, *var);
+            let neg: Vec<f64> = x.iter().map(|v| -v).collect();
+            let (s2, k2) = p.predict(w, &neg, &order, *var);
+            if (s1 + s2).abs() > 1e-9 {
+                return Err(format!("scores not antisymmetric: {s1} vs {s2}"));
+            }
+            if k1 != k2 {
+                return Err(format!("stopping steps differ: {k1} vs {k2}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (j) Lazy walk and materialized-order walk agree exactly for
+/// deterministic (weight-independent-RNG) policies given the same seed.
+#[test]
+fn prop_lazy_walk_matches_slice_walk_sequential() {
+    use attentive::margin::walker::Walker;
+    forall(
+        Config { cases: 150, seed: 0xBA },
+        |rng, size| {
+            let n = 4 + (size * 300.0) as usize;
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+            let var = rng.range_f64(0.01, 3.0);
+            (w, x, y, var)
+        },
+        |(w, x, y, var)| {
+            let n = w.len();
+            let order: Vec<usize> = (0..n).collect();
+            let b = ConstantBoundary::new(0.1);
+            let walker = Walker::new();
+            let slice_res = walker.walk(w, x, *y, &order, 1.0, *var, &b);
+            let mut gen = OrderGenerator::new(CoordinatePolicy::Sequential, 0);
+            gen.refresh(w);
+            let mut visited = Vec::new();
+            let lazy_res = walker.walk_lazy(w, x, *y, &mut gen, 1.0, *var, &b, &mut visited);
+            if slice_res.evaluated != lazy_res.evaluated
+                || slice_res.outcome != lazy_res.outcome
+                || (slice_res.partial_margin - lazy_res.partial_margin).abs() > 1e-12
+            {
+                return Err(format!(
+                    "lazy {:?}@{} vs slice {:?}@{}",
+                    lazy_res.outcome, lazy_res.evaluated, slice_res.outcome, slice_res.evaluated
+                ));
+            }
+            if visited.len() != lazy_res.evaluated {
+                return Err("visited length != evaluated".into());
+            }
+            if visited.iter().enumerate().any(|(i, &j)| i != j) {
+                return Err("sequential visit order wrong".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (h) Constant boundary level is independent of progress i (flatness).
+#[test]
+fn prop_constant_boundary_flat() {
+    forall(
+        Config { cases: 200, seed: 0xB7 },
+        |rng, _| {
+            (
+                rng.range_f64(0.01, 0.9),
+                rng.range_f64(0.0, 2.0),
+                rng.range_f64(0.0, 100.0),
+                rng.range_usize(1, 1000),
+            )
+        },
+        |&(delta, theta, var, i)| {
+            let b = ConstantBoundary::new(delta);
+            let l1 = b.level(&StopContext { evaluated: 1, total: 1001, theta, var_sn: var });
+            let li = b.level(&StopContext { evaluated: i, total: 1001, theta, var_sn: var });
+            if (l1 - li).abs() > 1e-12 {
+                return Err("constant boundary varies with i".into());
+            }
+            Ok(())
+        },
+    );
+}
