@@ -1,0 +1,129 @@
+//! Serving throughput over loopback TCP: attentive early-exit vs full
+//! evaluation on identical traffic.
+//!
+//! Spawns the JSON-lines front-end on an ephemeral port, drives it with
+//! the load-generator client (mixed clean/noisy digit traffic, pipelined
+//! connections), hot-reloads the same weights under the Full boundary via
+//! the control channel, and replays the identical request stream —
+//! reporting req/s and features-touched percentiles for both. The gap is
+//! the paper's focus-of-attention, measured at the wire.
+//!
+//! `cargo bench --bench serve_throughput` (BENCH_QUICK=1 for CI scale)
+
+use attentive::config::ServerConfig;
+use attentive::coordinator::service::ModelSnapshot;
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::SynthDigits;
+use attentive::data::task::BinaryTask;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::metrics::export::Table;
+use attentive::server::loadgen::{self, Client, LoadGenConfig, LoadReport};
+use attentive::server::tcp::TcpServer;
+use attentive::stst::boundary::AnyBoundary;
+
+const DIM: f64 = 784.0;
+
+fn train_snapshot(count: usize) -> ModelSnapshot {
+    let ds = SynthDigits::new(7).generate_classes(count, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).expect("task");
+    let mut learner = attentive_pegasos(task.dim(), 1e-4, 0.1);
+    Trainer::new(TrainerConfig { epochs: 3, eval_every: 0, curves: false, ..Default::default() })
+        .fit(&mut learner, &task);
+    ModelSnapshot::from_trained(
+        &mut learner,
+        AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        CoordinatePolicy::Permuted,
+    )
+}
+
+fn row(table: &mut Table, name: &str, r: &LoadReport) {
+    let early_rate = if r.features.is_empty() {
+        0.0
+    } else {
+        r.features.iter().filter(|&&f| (f as f64) < DIM).count() as f64 / r.features.len() as f64
+    };
+    table.row(&[
+        name.into(),
+        format!("{:.0}", r.req_per_s()),
+        format!("{:.1}", r.avg_features()),
+        format!("{}", r.feature_percentile(0.50)),
+        format!("{}", r.feature_percentile(0.90)),
+        format!("{}", r.feature_percentile(0.99)),
+        format!("{:.3}", early_rate),
+        format!("{}", r.overloaded),
+    ]);
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let (train_count, requests) = if quick { (2_000, 2_000) } else { (6_000, 10_000) };
+
+    let attentive_snapshot = train_snapshot(train_count);
+    let mut full_snapshot = attentive_snapshot.clone();
+    full_snapshot.boundary = AnyBoundary::Full;
+
+    let srv_cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 4,
+        max_batch: 16,
+        queue: 4096,
+        ..Default::default()
+    };
+    let server = TcpServer::serve(&srv_cfg, attentive_snapshot).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+    println!(
+        "loopback serving bench on {addr}: {requests} requests/pass, 8 connections, pipeline 16"
+    );
+
+    let loadcfg = LoadGenConfig {
+        addr: addr.clone(),
+        connections: 8,
+        requests,
+        pipeline: 16,
+        hard_fraction: 0.5,
+        seed: 11, // same seed both passes -> identical traffic
+    };
+
+    let mut table = Table::new(&[
+        "serving",
+        "req/s",
+        "avg feats",
+        "p50",
+        "p90",
+        "p99",
+        "early-exit",
+        "shed",
+    ]);
+
+    let att = loadgen::run(&loadcfg).expect("attentive pass");
+    assert_eq!(att.answered + att.overloaded, requests as u64, "every request answered");
+    row(&mut table, "attentive(δ=0.1)", &att);
+
+    let mut control = Client::connect(&addr).expect("control channel");
+    control.reload(&full_snapshot).expect("hot reload to full evaluation");
+    let full = loadgen::run(&loadcfg).expect("full pass");
+    assert_eq!(full.answered + full.overloaded, requests as u64, "every request answered");
+    row(&mut table, "full", &full);
+
+    println!("{}", table.render());
+    let stats = control.stats().expect("stats");
+    drop(control);
+    server.shutdown();
+
+    println!(
+        "server totals: {} served, {} batches, early-exit rate {:.3}, {} reload(s)",
+        stats.served, stats.batches, stats.early_exit_rate, stats.reloads
+    );
+    if att.avg_features() > 0.0 {
+        println!(
+            "features/request: attentive {:.1} vs full {:.1} ({:.1}x attention saving); \
+             wire throughput {:.0} vs {:.0} req/s",
+            att.avg_features(),
+            full.avg_features(),
+            full.avg_features() / att.avg_features(),
+            att.req_per_s(),
+            full.req_per_s(),
+        );
+    }
+}

@@ -12,10 +12,7 @@ use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::synth::{SynthDigits, SynthConfig};
 use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
-use attentive::learner::OnlineLearner;
 use attentive::margin::policy::CoordinatePolicy;
-use attentive::runtime::predict_exec::DensePredictExecutor;
-use attentive::runtime::Runtime;
 use attentive::stst::boundary::AnyBoundary;
 
 fn main() {
@@ -25,23 +22,16 @@ fn main() {
     let mut learner = attentive_pegasos(task.dim(), 1e-4, 0.1);
     Trainer::new(TrainerConfig { epochs: 4, eval_every: 0, curves: false, ..Default::default() })
         .fit(&mut learner, &task);
-    let weights = learner.weights().to_vec();
-    let var = {
-        let vc = learner.var_cache_mut();
-        let a = vc.var_sn(1.0, &weights);
-        let b = vc.var_sn(-1.0, &weights);
-        a.max(b)
-    };
-    let snapshot = ModelSnapshot {
-        weights: weights.clone(),
-        var_sn: var,
-        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+    let snapshot = ModelSnapshot::from_trained(
+        &mut learner,
+        AnyBoundary::Constant { delta: 0.1, paper_literal: false },
         // Permuted, not Sequential: raw pixel order is spatially
         // correlated (whole rows push the sum one way), violating the
         // exchangeability the Brownian-bridge boundary assumes — the
         // reason the paper randomizes coordinate order.
-        policy: CoordinatePolicy::Permuted,
-    };
+        CoordinatePolicy::Permuted,
+    );
+    let weights = snapshot.weights.clone();
 
     // ---- Traffic: clean digits (easy) vs heavily-noised ones (hard) ----
     let make_noisy = SynthConfig {
@@ -108,6 +98,15 @@ fn main() {
     println!("overall avg features/prediction: {:.1} (full evaluation would be 784)", stats.avg_features());
 
     // ---- Cross-check against the dense XLA predict artifact ------------
+    xla_cross_check(&weights, &requests);
+}
+
+/// Compare the native dot product against the dense XLA predict artifact
+/// (requires the `pjrt` feature and a vendored xla crate).
+#[cfg(feature = "pjrt")]
+fn xla_cross_check(weights: &[f64], requests: &[(Vec<f64>, bool)]) {
+    use attentive::runtime::predict_exec::DensePredictExecutor;
+    use attentive::runtime::Runtime;
     match Runtime::cpu() {
         Ok(rt) if rt.artifact_available(&DensePredictExecutor::artifact_name()) => {
             let exec = DensePredictExecutor::new(&rt).expect("artifact");
@@ -117,11 +116,11 @@ fn main() {
                 flat.extend_from_slice(x);
             }
             let t1 = Instant::now();
-            let margins = exec.margins(&weights, &flat, sample.len()).expect("margins");
+            let margins = exec.margins(weights, &flat, sample.len()).expect("margins");
             let xla_dt = t1.elapsed();
             let mut max_gap = 0.0f64;
             for ((x, _), m) in sample.iter().zip(&margins) {
-                max_gap = max_gap.max((attentive::margin::dot(&weights, x) - m).abs());
+                max_gap = max_gap.max((attentive::margin::dot(weights, x) - m).abs());
             }
             println!(
                 "dense XLA predict artifact: {} margins in {:?}, max |gap| vs native dot = {max_gap:.2e}",
@@ -131,4 +130,9 @@ fn main() {
         }
         _ => println!("artifacts/ not built — skipping XLA predict cross-check"),
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_cross_check(_weights: &[f64], _requests: &[(Vec<f64>, bool)]) {
+    println!("built without the `pjrt` feature — skipping XLA predict cross-check");
 }

@@ -291,6 +291,105 @@ impl ExperimentConfig {
     }
 }
 
+/// Network serving front-end configuration (`attentive serve --listen` /
+/// [`crate::server`]). A standalone JSON document, separate from
+/// [`ExperimentConfig`]: serving deploys a finished model, it does not
+/// describe a training run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerConfig {
+    /// Address to bind, e.g. `"127.0.0.1:7878"` (port 0 = ephemeral).
+    pub listen: String,
+    /// Prediction worker threads.
+    pub workers: usize,
+    /// Max requests drained per worker batch.
+    pub max_batch: usize,
+    /// Admission queue bound: requests beyond this are shed with an
+    /// explicit `overloaded` response instead of buffering unboundedly.
+    pub queue: usize,
+    /// Max responses in flight per connection before the reader blocks
+    /// (per-connection pipelining bound).
+    pub max_pending_per_conn: usize,
+    /// Base RNG seed for the prediction-time coordinate policies.
+    pub seed: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7878".into(),
+            workers: 2,
+            max_batch: 16,
+            queue: 1024,
+            max_pending_per_conn: 64,
+            seed: 0,
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Serialize as JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("listen", Json::Str(self.listen.clone())),
+            ("workers", Json::Num(self.workers as f64)),
+            ("max_batch", Json::Num(self.max_batch as f64)),
+            ("queue", Json::Num(self.queue as f64)),
+            ("max_pending_per_conn", Json::Num(self.max_pending_per_conn as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    /// Parse from JSON; missing fields take the defaults.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let d = ServerConfig::default();
+        Ok(Self {
+            listen: v.get("listen").and_then(|s| s.as_str()).unwrap_or(&d.listen).to_string(),
+            workers: v.get("workers").and_then(|x| x.as_usize()).unwrap_or(d.workers),
+            max_batch: v.get("max_batch").and_then(|x| x.as_usize()).unwrap_or(d.max_batch),
+            queue: v.get("queue").and_then(|x| x.as_usize()).unwrap_or(d.queue),
+            max_pending_per_conn: v
+                .get("max_pending_per_conn")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(d.max_pending_per_conn),
+            seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
+        })
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| Error::format(format!("server config {}", path.display()), e.to_string()))?;
+        let cfg = Self::from_json(&doc)
+            .map_err(|e| Error::format(format!("server config {}", path.display()), e))?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty()).map_err(|e| Error::io(path, e))
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.listen.is_empty() {
+            return Err(Error::Config("server listen address must not be empty".into()));
+        }
+        for (name, v) in [
+            ("workers", self.workers),
+            ("max_batch", self.max_batch),
+            ("queue", self.queue),
+            ("max_pending_per_conn", self.max_pending_per_conn),
+        ] {
+            if v == 0 {
+                return Err(Error::Config(format!("server {name} must be >= 1")));
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -326,6 +425,50 @@ mod tests {
         let mut cfg = ExperimentConfig::paper_default();
         cfg.runs = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn server_config_round_trip_and_defaults() {
+        let cfg = ServerConfig {
+            listen: "0.0.0.0:9000".into(),
+            workers: 8,
+            max_batch: 32,
+            queue: 4096,
+            max_pending_per_conn: 128,
+            seed: 42,
+        };
+        let back = ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back, cfg);
+        // Sparse document: everything defaults.
+        let sparse = ServerConfig::from_json(&Json::parse(r#"{"workers": 4}"#).unwrap()).unwrap();
+        assert_eq!(sparse.workers, 4);
+        assert_eq!(sparse.listen, ServerConfig::default().listen);
+        assert_eq!(sparse.queue, ServerConfig::default().queue);
+        sparse.validate().unwrap();
+    }
+
+    #[test]
+    fn server_config_validation_rejects_zeroes() {
+        let mut cfg = ServerConfig::default();
+        cfg.validate().unwrap();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServerConfig::default();
+        cfg.queue = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServerConfig::default();
+        cfg.listen.clear();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn server_config_file_round_trip() {
+        let dir = crate::util::tempdir::TempDir::new("srvcfg");
+        let p = dir.path().join("server.json");
+        let cfg = ServerConfig { listen: "127.0.0.1:0".into(), ..Default::default() };
+        cfg.save(&p).unwrap();
+        assert_eq!(ServerConfig::load(&p).unwrap(), cfg);
     }
 
     #[test]

@@ -39,6 +39,27 @@ pub struct ModelSnapshot {
 }
 
 impl ModelSnapshot {
+    /// Snapshot a trained Pegasos-family learner for serving: its weight
+    /// vector, a conservative `var(S_n)` estimate (max over the two
+    /// labels), and the given prediction-time boundary and policy. The
+    /// single source of the subtle two-label variance step, shared by the
+    /// CLI, benches, examples, and tests.
+    pub fn from_trained<B: crate::stst::boundary::Boundary>(
+        learner: &mut crate::learner::pegasos::BoundedPegasos<B>,
+        boundary: AnyBoundary,
+        policy: CoordinatePolicy,
+    ) -> Self {
+        use crate::learner::OnlineLearner as _;
+        let weights = learner.weights().to_vec();
+        let var_sn = {
+            let vc = learner.var_cache_mut();
+            let a = vc.var_sn(1.0, &weights);
+            let b = vc.var_sn(-1.0, &weights);
+            a.max(b)
+        };
+        Self { weights, var_sn, boundary, policy }
+    }
+
     /// Serialize (for `attentive serve --snapshot`).
     pub fn to_json(&self) -> Json {
         Json::obj([
@@ -83,12 +104,42 @@ pub struct ScoreResponse {
     pub features_evaluated: usize,
 }
 
+/// Number of log2-spaced buckets in the features-touched histogram:
+/// bucket 0 counts requests that touched 0 features, bucket `i ≥ 1` counts
+/// requests that touched `[2^(i-1), 2^i)` features; the last bucket
+/// absorbs everything above.
+pub const FEATURE_BUCKETS: usize = 16;
+
+/// Histogram bucket index for `evaluated` features.
+#[inline]
+fn feature_bucket(evaluated: usize) -> usize {
+    if evaluated == 0 {
+        0
+    } else {
+        ((usize::BITS - evaluated.leading_zeros()) as usize).min(FEATURE_BUCKETS - 1)
+    }
+}
+
 /// Live service counters (lock-free reads).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ServiceStats {
     served: AtomicU64,
     features: AtomicU64,
     batches: AtomicU64,
+    early_exits: AtomicU64,
+    hist: [AtomicU64; FEATURE_BUCKETS],
+}
+
+impl Default for ServiceStats {
+    fn default() -> Self {
+        Self {
+            served: AtomicU64::new(0),
+            features: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            early_exits: AtomicU64::new(0),
+            hist: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
 }
 
 /// A snapshot of [`ServiceStats`].
@@ -100,6 +151,10 @@ pub struct StatsSnapshot {
     pub features: u64,
     /// Batches drained.
     pub batches: u64,
+    /// Requests that exited before touching every coordinate.
+    pub early_exits: u64,
+    /// Features-touched histogram (see [`FEATURE_BUCKETS`]).
+    pub hist: [u64; FEATURE_BUCKETS],
 }
 
 impl StatsSnapshot {
@@ -107,15 +162,82 @@ impl StatsSnapshot {
     pub fn avg_features(&self) -> f64 {
         if self.served == 0 { 0.0 } else { self.features as f64 / self.served as f64 }
     }
+
+    /// Fraction of requests that exited early.
+    pub fn early_exit_rate(&self) -> f64 {
+        if self.served == 0 { 0.0 } else { self.early_exits as f64 / self.served as f64 }
+    }
+
+    /// Approximate `p`-th percentile (`p ∈ [0, 1]`) of features touched
+    /// per request, reported as the inclusive upper edge of the histogram
+    /// bucket the percentile falls in (0 when nothing was served).
+    pub fn feature_percentile(&self, p: f64) -> u64 {
+        let total: u64 = self.hist.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.hist.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        (1u64 << (FEATURE_BUCKETS - 1)) - 1
+    }
+
+    /// Accumulate another snapshot (e.g. a retired service generation
+    /// after a hot model reload).
+    pub fn add(&mut self, other: &StatsSnapshot) {
+        self.served += other.served;
+        self.features += other.features;
+        self.batches += other.batches;
+        self.early_exits += other.early_exits;
+        for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+            *a += *b;
+        }
+    }
 }
 
 impl ServiceStats {
+    /// Record one served request.
+    #[inline]
+    fn record(&self, evaluated: usize, dim: usize) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.features.fetch_add(evaluated as u64, Ordering::Relaxed);
+        if evaluated < dim {
+            self.early_exits.fetch_add(1, Ordering::Relaxed);
+        }
+        self.hist[feature_bucket(evaluated)].fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Read the counters.
     pub fn snapshot(&self) -> StatsSnapshot {
         StatsSnapshot {
             served: self.served.load(Ordering::Relaxed),
             features: self.features.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            early_exits: self.early_exits.load(Ordering::Relaxed),
+            hist: std::array::from_fn(|i| self.hist[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Why a non-blocking submission was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is full — shed load now, retry later.
+    Overloaded,
+    /// The service has shut down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "service overloaded"),
+            SubmitError::Closed => write!(f, "service closed"),
         }
     }
 }
@@ -142,6 +264,21 @@ impl ServiceHandle {
             Err(TrySendError::Disconnected(_)) => return None,
         }
         rx.recv().ok()
+    }
+
+    /// Non-blocking admission: enqueue the request if the bounded queue
+    /// has room and return the response receiver, otherwise reject
+    /// immediately. This is the load-shedding entry point the network
+    /// server builds its explicit `overloaded` responses on — an admitted
+    /// request is always answered (workers drain the queue even during a
+    /// handle swap), so the receiver's `recv()` will not hang.
+    pub fn submit(&self, features: Vec<f64>) -> Result<Receiver<ScoreResponse>, SubmitError> {
+        let (tx, rx) = sync_channel(1);
+        match self.tx.try_send(ScoreRequest { features, respond: tx }) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
     }
 }
 
@@ -239,8 +376,9 @@ fn worker_loop(
             }
         } // release the lock before compute
         stats.batches.fetch_add(1, Ordering::Relaxed);
+        let dim = model.weights.len();
         for req in batch.drain(..) {
-            let resp = if req.features.len() != model.weights.len() {
+            let resp = if req.features.len() != dim {
                 ScoreResponse { score: f64::NAN, features_evaluated: 0 }
             } else {
                 let predictor = EarlyStopPredictor::new(&model.boundary);
@@ -249,8 +387,10 @@ fn worker_loop(
                     predictor.predict(&model.weights, &req.features, order, model.var_sn);
                 ScoreResponse { score, features_evaluated: k }
             };
-            stats.served.fetch_add(1, Ordering::Relaxed);
-            stats.features.fetch_add(resp.features_evaluated as u64, Ordering::Relaxed);
+            // Dimension-mismatch rejects land in bucket 0 and count as
+            // "early exit"; the network front-end screens those out before
+            // admission, so served traffic keeps the histogram honest.
+            stats.record(resp.features_evaluated, dim);
             let _ = req.respond.send(resp);
         }
     }
@@ -343,5 +483,153 @@ mod tests {
         assert_eq!(back.weights, m.weights);
         assert_eq!(back.policy, m.policy);
         assert_eq!(back.boundary, m.boundary);
+    }
+
+    #[test]
+    fn snapshot_round_trip_preserves_every_field() {
+        let m = ModelSnapshot {
+            weights: vec![0.25, -1.5, 0.0, 3.75e-3],
+            var_sn: 12.5,
+            boundary: AnyBoundary::Curved { delta: 0.05 },
+            policy: CoordinatePolicy::WeightSampled,
+        };
+        let text = m.to_json().to_string_pretty();
+        let back = ModelSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.weights, m.weights);
+        assert_eq!(back.var_sn, m.var_sn);
+        assert_eq!(back.boundary, m.boundary);
+        assert_eq!(back.policy, m.policy);
+    }
+
+    #[test]
+    fn snapshot_from_json_rejects_malformed_input() {
+        let parse = |s: &str| ModelSnapshot::from_json(&Json::parse(s).unwrap());
+        let good = model(2).to_json().to_string_compact();
+        assert!(parse(&good).is_ok());
+
+        // Missing weights.
+        let e = parse(
+            r#"{"var_sn":1,"boundary":{"kind":"full"},"policy":"sequential"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("weights"), "got {e:?}");
+
+        // Non-numeric weight entry.
+        let e = parse(
+            r#"{"weights":[1,"x"],"var_sn":1,"boundary":{"kind":"full"},"policy":"sequential"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("non-numeric"), "got {e:?}");
+
+        // Unknown policy name.
+        let e = parse(
+            r#"{"weights":[1],"var_sn":1,"boundary":{"kind":"full"},"policy":"psychic"}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("psychic"), "got {e:?}");
+
+        // Missing var_sn / boundary.
+        assert!(parse(r#"{"weights":[1],"boundary":{"kind":"full"},"policy":"sequential"}"#)
+            .is_err());
+        assert!(parse(r#"{"weights":[1],"var_sn":1,"policy":"sequential"}"#).is_err());
+
+        // Bad boundary kind bubbles up through AnyBoundary.
+        assert!(parse(
+            r#"{"weights":[1],"var_sn":1,"boundary":{"kind":"bogus"},"policy":"sequential"}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn feature_bucket_edges() {
+        assert_eq!(feature_bucket(0), 0);
+        assert_eq!(feature_bucket(1), 1);
+        assert_eq!(feature_bucket(2), 2);
+        assert_eq!(feature_bucket(3), 2);
+        assert_eq!(feature_bucket(4), 3);
+        assert_eq!(feature_bucket(784), 10);
+        assert_eq!(feature_bucket(1 << 20), FEATURE_BUCKETS - 1);
+    }
+
+    #[test]
+    fn stats_histogram_percentiles_and_early_exit() {
+        let stats = ServiceStats::default();
+        // 90 requests stopping at 10 features, 10 running the full 784.
+        for _ in 0..90 {
+            stats.record(10, 784);
+        }
+        for _ in 0..10 {
+            stats.record(784, 784);
+        }
+        let s = stats.snapshot();
+        assert_eq!(s.served, 100);
+        assert_eq!(s.early_exits, 90);
+        assert!((s.early_exit_rate() - 0.9).abs() < 1e-12);
+        assert!((s.avg_features() - (90.0 * 10.0 + 10.0 * 784.0) / 100.0).abs() < 1e-9);
+        // p50 lands in the [8,16) bucket; p99 in the bucket holding 784.
+        assert_eq!(s.feature_percentile(0.5), 15);
+        assert_eq!(s.feature_percentile(0.99), 1023);
+        assert_eq!(StatsSnapshot::default().feature_percentile(0.5), 0);
+    }
+
+    #[test]
+    fn stats_snapshots_accumulate() {
+        let a = ServiceStats::default();
+        a.record(5, 100);
+        let b = ServiceStats::default();
+        b.record(100, 100);
+        let mut total = a.snapshot();
+        total.add(&b.snapshot());
+        assert_eq!(total.served, 2);
+        assert_eq!(total.features, 105);
+        assert_eq!(total.early_exits, 1);
+        assert_eq!(total.hist.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn full_queue_sheds_with_explicit_submit_error() {
+        // One worker, one queue slot. Pin the worker on a ~1ms full
+        // evaluation, then rapid-fire cheap requests: at most one can sit
+        // in the queue, so the rest MUST come back `Overloaded` — load is
+        // shed, not buffered.
+        let dim = 1 << 20;
+        let m = ModelSnapshot {
+            weights: vec![1.0; dim],
+            var_sn: 4.0,
+            boundary: AnyBoundary::Full,
+            policy: CoordinatePolicy::Sequential,
+        };
+        let (h, run) = PredictionService::new(m, 1, 1, 0).spawn();
+        let big = h.submit(vec![0.5; dim]).expect("first request admitted");
+        let mut admitted = Vec::new();
+        let mut shed = 0;
+        for _ in 0..10 {
+            // Deliberately dim-mismatched: instant to build, and the
+            // worker is busy anyway.
+            match h.submit(Vec::new()) {
+                Ok(rx) => admitted.push(rx),
+                Err(SubmitError::Overloaded) => shed += 1,
+                Err(SubmitError::Closed) => panic!("service alive"),
+            }
+        }
+        assert!(shed >= 8, "a full bounded queue must shed, shed only {shed}/10");
+        // Everything admitted is still answered.
+        assert!(big.recv().unwrap().score > 0.0);
+        for rx in admitted {
+            rx.recv().unwrap();
+        }
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn submit_is_nonblocking_and_answers() {
+        let dim = 32;
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0).spawn();
+        let rx = h.submit(vec![1.0; dim]).expect("queue has room");
+        let resp = rx.recv().expect("admitted requests are always answered");
+        assert!(resp.score > 0.0);
+        drop(h);
+        run.join();
     }
 }

@@ -103,6 +103,50 @@ mod tests {
     }
 
     #[test]
+    fn blank_and_comment_lines_are_skipped() {
+        // Leading/trailing blank lines, whitespace-only lines, full-line
+        // comments, and indented comments all vanish.
+        let text = "\n   \n# header comment\n1 1:1\n\t\n  # indented comment\n-1 2:2\n\n";
+        let ds = parse(Cursor::new(text), 2).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.get(0).features, &[1.0, 0.0]);
+        assert_eq!(ds.get(1).features, &[0.0, 2.0]);
+    }
+
+    #[test]
+    fn out_of_order_indices_densify_correctly() {
+        // libsvm files usually sort indices, but the format does not
+        // require it; later pairs win on duplicates.
+        let ds = parse(Cursor::new("1 3:3 1:1 2:2\n-1 2:9 2:7\n"), 3).unwrap();
+        assert_eq!(ds.get(0).features, &[1.0, 2.0, 3.0]);
+        assert_eq!(ds.get(1).features, &[0.0, 7.0, 0.0]);
+    }
+
+    #[test]
+    fn one_based_index_boundaries() {
+        // Index 1 maps to column 0, index dim to the last column.
+        let ds = parse(Cursor::new("1 1:5 4:7\n"), 4).unwrap();
+        assert_eq!(ds.get(0).features, &[5.0, 0.0, 0.0, 7.0]);
+        // Index dim+1 is out of range even though 0-based it would fit.
+        assert!(parse(Cursor::new("1 5:1\n"), 4).is_err());
+    }
+
+    #[test]
+    fn trailing_whitespace_and_crlf_are_tolerated() {
+        let ds = parse(Cursor::new("1 1:0.5   \n-1 2:1.5\t\r\n"), 2).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.get(0).features, &[0.5, 0.0]);
+        assert_eq!(ds.get(1).features, &[0.0, 1.5]);
+        assert_eq!(ds.get(1).label, -1);
+    }
+
+    #[test]
+    fn labels_may_be_arbitrary_integers() {
+        let ds = parse(Cursor::new("3 1:1\n8 2:1\n"), 2).unwrap();
+        assert_eq!(ds.labels(), vec![3, 8]);
+    }
+
+    #[test]
     fn file_round_trip() {
         let dir = crate::util::tempdir::TempDir::new("t");
         let path = dir.path().join("toy.svm");

@@ -21,8 +21,9 @@
 //! | [`learner`] | Pegasos, Attentive Pegasos (Algorithm 1), Budgeted Pegasos, (attentive) Perceptron, (attentive) Passive-Aggressive |
 //! | [`data`] | synthetic digit-glyph generator, MNIST IDX reader, 1-vs-1 task extraction, normalization, streaming, libsvm I/O |
 //! | [`sim`] | random-walk simulator reproducing Figure 2 (boundary crossing + O(sqrt(n)) stopping times) |
-//! | [`runtime`] | PJRT (XLA) runtime: loads AOT artifacts produced by `python/compile/aot.py` and runs them from rust |
+//! | [`runtime`] | PJRT (XLA) runtime: loads AOT artifacts produced by `python/compile/aot.py` and runs them from rust (feature `pjrt`) |
 //! | [`coordinator`] | online training loop, decision-error audit, multi-task parallel scheduler, async prediction service |
+//! | [`server`] | network serving: JSON-lines TCP front-end with attentive early-exit, bounded-queue load shedding, hot model reload, and a load-generator client |
 //! | [`metrics`] | counters, learning curves, feature-cost accounting, CSV/JSON export |
 //! | [`config`] | experiment configuration and CLI plumbing |
 //!
@@ -51,7 +52,9 @@ pub mod error;
 pub mod learner;
 pub mod margin;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod server;
 pub mod sim;
 pub mod stst;
 pub mod util;

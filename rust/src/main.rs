@@ -6,8 +6,11 @@
 //! * `sweep`       — run every `*.json` config in a directory.
 //! * `simulate`    — Figure 2 boundary validation (decision errors +
 //!   stopping times).
-//! * `serve`       — train a model, then serve early-stopped predictions
-//!   over synthetic traffic and print throughput/feature stats.
+//! * `serve`       — serve early-stopped predictions: either over TCP
+//!   (`--listen ADDR`, JSON-lines protocol with stats + hot reload) or
+//!   in-process over synthetic traffic (throughput/feature stats).
+//! * `bench-serve` — drive a serving front-end over loopback with the
+//!   load-generator client and compare attentive vs full evaluation.
 //! * `init-config` — write a default config to edit.
 //! * `export-idx`  — snapshot the synthetic digit set as MNIST IDX files.
 
@@ -15,16 +18,18 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context};
 
-use attentive::config::ExperimentConfig;
+use attentive::config::{ExperimentConfig, ServerConfig};
 use attentive::coordinator::scheduler::{run_experiment, run_sweep};
 use attentive::coordinator::service::{ModelSnapshot, PredictionService};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::synth::SynthDigits;
-use attentive::learner::OnlineLearner;
 use attentive::metrics::export::{curves_to_csv, Table};
+use attentive::server::loadgen::{self, Client, LoadGenConfig};
+use attentive::server::tcp::TcpServer;
 use attentive::sim::bridge::{simulate_decision_errors, BridgeSimConfig};
 use attentive::sim::stopping::{fit_sqrt, simulate_stopping_times, StoppingSimConfig};
 use attentive::util::cli::Args;
+use attentive::util::json::Json;
 
 const USAGE: &str = "\
 attentive — Rapid Learning with Stochastic Focus of Attention (ICML 2011)
@@ -35,7 +40,14 @@ COMMANDS:
   train        [--config exp.json] [--csv out.csv]
   sweep        <dir> [--csv out.csv]
   simulate     [--walks N] [--csv out.csv]
-  serve        [--requests N] [--batch B] [--workers W]
+  serve        [--listen ADDR] [--snapshot model.json] [--server-config srv.json]
+               [--requests N] [--batch B] [--workers W] [--queue Q]
+               with --listen: JSON-lines TCP server (score/stats/reload/ping ops);
+               otherwise: in-process synthetic-traffic benchmark
+  bench-serve  [--addr ADDR] [--requests N] [--connections C] [--pipeline P]
+               [--hard FRAC] [--batch B] [--workers W] [--queue Q]
+               without --addr: spawns a loopback server and compares
+               attentive vs full-evaluation serving on the same traffic
   init-config  [out.json]
   export-idx   <dir> [--count N] [--seed S]
   help
@@ -53,6 +65,7 @@ fn main() -> anyhow::Result<()> {
         "sweep" => cmd_sweep(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "init-config" => {
             let cfg = ExperimentConfig::paper_default();
             let text = cfg.to_json().to_string_pretty();
@@ -213,36 +226,79 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    let requests = args.get_parse("requests", 2_000usize).map_err(|e| anyhow::anyhow!(e))?;
-    let batch = args.get_parse("batch", 16usize).map_err(|e| anyhow::anyhow!(e))?;
-    let workers = args.get_parse("workers", 2usize).map_err(|e| anyhow::anyhow!(e))?;
-
-    // Train an attentive model quickly, then serve synthetic traffic.
+/// Train a quick attentive snapshot from the paper-default experiment
+/// (used whenever the serve commands are not given `--snapshot`).
+fn train_default_snapshot() -> anyhow::Result<ModelSnapshot> {
     let cfg = ExperimentConfig::paper_default();
     let (train, _) = attentive::coordinator::factory::build_task(&cfg)?;
     let mut learner =
         attentive::learner::attentive::attentive_pegasos(train.dim(), cfg.lambda, 0.1);
     Trainer::new(TrainerConfig { curves: false, eval_every: 0, ..Default::default() })
         .fit(&mut learner, &train);
-    let weights: Vec<f64> = learner.weights().to_vec();
-    let var = {
-        let vc = learner.var_cache_mut();
-        let a = vc.var_sn(1.0, &weights);
-        let b = vc.var_sn(-1.0, &weights);
-        a.max(b)
-    };
-    let snapshot = ModelSnapshot {
-        weights,
-        var_sn: var,
-        boundary: attentive::stst::boundary::AnyBoundary::Constant {
-            delta: 0.1,
-            paper_literal: false,
-        },
+    Ok(ModelSnapshot::from_trained(
+        &mut learner,
+        attentive::stst::boundary::AnyBoundary::Constant { delta: 0.1, paper_literal: false },
         // Permuted: pixel order is spatially correlated, violating the
         // bridge's exchangeability assumption (see DESIGN.md §4).
-        policy: attentive::margin::policy::CoordinatePolicy::Permuted,
+        attentive::margin::policy::CoordinatePolicy::Permuted,
+    ))
+}
+
+/// `--snapshot model.json` if given, otherwise train the default model.
+fn load_or_train_snapshot(args: &Args) -> anyhow::Result<ModelSnapshot> {
+    match args.opt("snapshot") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).context("reading snapshot")?;
+            let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("snapshot json: {e}"))?;
+            ModelSnapshot::from_json(&doc).map_err(|e| anyhow::anyhow!("snapshot: {e}"))
+        }
+        None => {
+            eprintln!("no --snapshot given; training the paper-default attentive model ...");
+            train_default_snapshot()
+        }
+    }
+}
+
+/// Resolve the server knobs: `--server-config` file first, then
+/// individual flag overrides.
+fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
+    let mut cfg = match args.opt("server-config") {
+        Some(p) => ServerConfig::load(std::path::Path::new(p)).context("loading server config")?,
+        None => ServerConfig::default(),
     };
+    if let Some(listen) = args.opt("listen") {
+        cfg.listen = listen.to_string();
+    }
+    cfg.max_batch = args.get_parse("batch", cfg.max_batch).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.workers = args.get_parse("workers", cfg.workers).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.queue = args.get_parse("queue", cfg.queue).map_err(|e| anyhow::anyhow!(e))?;
+    Ok(cfg)
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    if args.opt("listen").is_some() || args.opt("server-config").is_some() {
+        // Network mode: JSON-lines TCP front-end with hot reload.
+        let cfg = server_config_from_args(args)?;
+        let snapshot = load_or_train_snapshot(args)?;
+        let dim = snapshot.weights.len();
+        let server = TcpServer::serve(&cfg, snapshot)?;
+        println!(
+            "serving a dim-{dim} model on {} ({} workers, batch {}, queue {})",
+            server.local_addr(),
+            cfg.workers,
+            cfg.max_batch,
+            cfg.queue
+        );
+        println!("ops: score / stats / reload / ping — one JSON object per line");
+        server.wait();
+        return Ok(());
+    }
+
+    // In-process mode: serve synthetic traffic and print stats.
+    let requests = args.get_parse("requests", 2_000usize).map_err(|e| anyhow::anyhow!(e))?;
+    let batch = args.get_parse("batch", 16usize).map_err(|e| anyhow::anyhow!(e))?;
+    let workers = args.get_parse("workers", 2usize).map_err(|e| anyhow::anyhow!(e))?;
+    let snapshot = load_or_train_snapshot(args)?;
 
     let (handle, run) =
         PredictionService::new(snapshot, batch, 1024, 0).with_workers(workers).spawn();
@@ -275,5 +331,89 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         s.avg_features(),
         s.batches
     );
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
+    let requests = args.get_parse("requests", 4_000usize).map_err(|e| anyhow::anyhow!(e))?;
+    let connections = args.get_parse("connections", 4usize).map_err(|e| anyhow::anyhow!(e))?;
+    let pipeline = args.get_parse("pipeline", 8usize).map_err(|e| anyhow::anyhow!(e))?;
+    let hard = args.get_parse("hard", 0.5f64).map_err(|e| anyhow::anyhow!(e))?;
+
+    let loadcfg = |addr: String| LoadGenConfig {
+        addr,
+        connections,
+        requests,
+        pipeline,
+        hard_fraction: hard,
+        seed: 1,
+    };
+    let mut table = Table::new(&[
+        "serving",
+        "req/s",
+        "avg feats",
+        "p50",
+        "p90",
+        "p99",
+        "answered",
+        "shed",
+    ]);
+    let row = |table: &mut Table, name: &str, r: &attentive::server::loadgen::LoadReport| {
+        table.row(&[
+            name.into(),
+            format!("{:.0}", r.req_per_s()),
+            format!("{:.1}", r.avg_features()),
+            format!("{}", r.feature_percentile(0.50)),
+            format!("{}", r.feature_percentile(0.90)),
+            format!("{}", r.feature_percentile(0.99)),
+            format!("{}", r.answered),
+            format!("{}", r.overloaded),
+        ]);
+    };
+
+    if let Some(addr) = args.opt("addr") {
+        // External server: one pass against whatever it serves.
+        let report = loadgen::run(&loadcfg(addr.to_string()))?;
+        row(&mut table, "external", &report);
+        println!("{}", table.render());
+        return Ok(());
+    }
+
+    // Loopback comparison: same traffic, attentive vs full evaluation,
+    // switched via the hot-reload control channel.
+    let attentive_snapshot = load_or_train_snapshot(args)?;
+    let mut full_snapshot = attentive_snapshot.clone();
+    full_snapshot.boundary = attentive::stst::boundary::AnyBoundary::Full;
+
+    let mut srv_cfg = server_config_from_args(args)?;
+    srv_cfg.listen = "127.0.0.1:0".into();
+    let server = TcpServer::serve(&srv_cfg, attentive_snapshot)?;
+    let addr = server.local_addr().to_string();
+    println!("loopback server on {addr}: {requests} requests × 2 passes ...");
+
+    let report = loadgen::run(&loadcfg(addr.clone()))?;
+    row(&mut table, "attentive", &report);
+
+    let mut control = Client::connect(&addr)?;
+    control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
+    let full_report = loadgen::run(&loadcfg(addr))?;
+    row(&mut table, "full", &full_report);
+
+    println!("{}", table.render());
+    let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
+    drop(control);
+    server.shutdown();
+    println!(
+        "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
+        stats.served, stats.early_exit_rate, stats.reloads, stats.accepted_conns, stats.overloaded
+    );
+    if full_report.avg_features() > 0.0 {
+        println!(
+            "attention saves {:.1}x features per request ({:.1} vs {:.1} of 784)",
+            full_report.avg_features() / report.avg_features().max(1e-9),
+            report.avg_features(),
+            full_report.avg_features()
+        );
+    }
     Ok(())
 }

@@ -1,0 +1,284 @@
+//! [`ModelHub`]: the swappable serving core behind the TCP front-end.
+//!
+//! Wraps [`PredictionService`] and adds the one thing a long-running
+//! server needs that the in-process service does not have: **hot model
+//! reload**. A reload spawns a fresh worker generation for the new
+//! [`ModelSnapshot`], atomically swaps the admission handle, and retires
+//! the old generation. Retiring drops the old generation's only
+//! [`ServiceHandle`], so its workers drain every request already admitted
+//! to their queue — each carries its own response channel — and then
+//! exit: the swap is zero-downtime and drops no request.
+//!
+//! Statistics are aggregated across generations, so throughput and
+//! features-touched histograms survive reloads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+use crate::coordinator::service::{
+    ModelSnapshot, PredictionService, RunningService, ScoreResponse, ServiceHandle, StatsSnapshot,
+    SubmitError,
+};
+
+/// Why the hub rejected a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HubError {
+    /// Admission queue full — shed with an explicit `overloaded` reply.
+    Overloaded,
+    /// The hub has shut down.
+    Closed,
+    /// Feature vector length does not match the serving model.
+    DimMismatch {
+        /// The serving model's dimensionality.
+        expected: usize,
+        /// The request's dimensionality.
+        got: usize,
+    },
+}
+
+impl std::fmt::Display for HubError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HubError::Overloaded => write!(f, "overloaded"),
+            HubError::Closed => write!(f, "service closed"),
+            HubError::DimMismatch { expected, got } => {
+                write!(f, "dimension mismatch: model dim {expected}, request dim {got}")
+            }
+        }
+    }
+}
+
+struct HubState {
+    /// Admission handle of the live generation (`None` after shutdown).
+    handle: Option<ServiceHandle>,
+    /// The live generation's workers + stats.
+    current: Option<RunningService>,
+    /// Older generations still draining (joined at shutdown).
+    retired: Vec<RunningService>,
+    /// Dimensionality of the live model.
+    dim: usize,
+    /// Reload generation (perturbs the policy RNG seed per generation).
+    epoch: u64,
+    /// Totals from generations already joined.
+    closed_total: StatsSnapshot,
+}
+
+/// A prediction service with atomically swappable model generations.
+pub struct ModelHub {
+    inner: Mutex<HubState>,
+    reloads: AtomicU64,
+    max_batch: usize,
+    queue: usize,
+    workers: usize,
+    seed: u64,
+}
+
+impl ModelHub {
+    /// Spawn the first generation for `snapshot`.
+    pub fn new(
+        snapshot: ModelSnapshot,
+        max_batch: usize,
+        queue: usize,
+        workers: usize,
+        seed: u64,
+    ) -> Self {
+        let dim = snapshot.weights.len();
+        let (handle, run) =
+            PredictionService::new(snapshot, max_batch, queue, seed).with_workers(workers).spawn();
+        Self {
+            inner: Mutex::new(HubState {
+                handle: Some(handle),
+                current: Some(run),
+                retired: Vec::new(),
+                dim,
+                epoch: 0,
+                closed_total: StatsSnapshot::default(),
+            }),
+            reloads: AtomicU64::new(0),
+            max_batch,
+            queue,
+            workers,
+            seed,
+        }
+    }
+
+    /// Dimensionality of the model currently being served.
+    pub fn dim(&self) -> usize {
+        self.inner.lock().unwrap().dim
+    }
+
+    /// Hot reloads applied so far.
+    pub fn reloads(&self) -> u64 {
+        self.reloads.load(Ordering::Relaxed)
+    }
+
+    /// Non-blocking admission. On success the returned receiver is
+    /// guaranteed to yield exactly one response: admitted requests are
+    /// answered even if a reload retires their generation first.
+    pub fn submit(&self, features: Vec<f64>) -> Result<Receiver<ScoreResponse>, HubError> {
+        let (handle, dim) = {
+            let st = self.inner.lock().unwrap();
+            (st.handle.clone().ok_or(HubError::Closed)?, st.dim)
+        };
+        if features.len() != dim {
+            return Err(HubError::DimMismatch { expected: dim, got: features.len() });
+        }
+        handle.submit(features).map_err(|e| match e {
+            SubmitError::Overloaded => HubError::Overloaded,
+            SubmitError::Closed => HubError::Closed,
+        })
+    }
+
+    /// Hot-swap the serving model. Spawns the new generation outside the
+    /// lock, then swaps the handle atomically; returns the new
+    /// dimensionality. In-flight requests finish on the old generation.
+    pub fn reload(&self, snapshot: ModelSnapshot) -> Result<usize, HubError> {
+        let dim = snapshot.weights.len();
+        let epoch = {
+            let st = self.inner.lock().unwrap();
+            if st.handle.is_none() {
+                return Err(HubError::Closed);
+            }
+            st.epoch + 1
+        };
+        // Distinct policy RNG stream per generation.
+        let seed = self.seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let (handle, run) = PredictionService::new(snapshot, self.max_batch, self.queue, seed)
+            .with_workers(self.workers)
+            .spawn();
+        let mut st = self.inner.lock().unwrap();
+        if st.handle.is_none() {
+            // Shut down while we were spawning: tear the newcomer down.
+            drop(st);
+            drop(handle);
+            run.join();
+            return Err(HubError::Closed);
+        }
+        st.handle = Some(handle); // old handle dropped -> old workers drain & exit
+        if let Some(old) = st.current.take() {
+            st.retired.push(old);
+        }
+        st.current = Some(run);
+        st.dim = dim;
+        st.epoch = epoch;
+        drop(st);
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        Ok(dim)
+    }
+
+    /// Aggregate statistics across every generation, live and retired.
+    pub fn stats(&self) -> StatsSnapshot {
+        let st = self.inner.lock().unwrap();
+        let mut total = st.closed_total;
+        for run in &st.retired {
+            total.add(&run.stats.snapshot());
+        }
+        if let Some(run) = &st.current {
+            total.add(&run.stats.snapshot());
+        }
+        total
+    }
+
+    /// Stop admitting, drain every generation, and join all workers.
+    /// Returns the final aggregated statistics. Idempotent.
+    pub fn shutdown(&self) -> StatsSnapshot {
+        let (current, retired) = {
+            let mut st = self.inner.lock().unwrap();
+            st.handle = None;
+            (st.current.take(), std::mem::take(&mut st.retired))
+        };
+        let mut drained = StatsSnapshot::default();
+        for run in retired.into_iter().chain(current) {
+            let stats = run.stats.clone();
+            run.join();
+            drained.add(&stats.snapshot());
+        }
+        let mut st = self.inner.lock().unwrap();
+        st.closed_total.add(&drained);
+        st.closed_total
+    }
+}
+
+impl Drop for ModelHub {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::AnyBoundary;
+
+    fn snapshot(dim: usize, w: f64) -> ModelSnapshot {
+        ModelSnapshot {
+            weights: vec![w; dim],
+            var_sn: 4.0,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+        }
+    }
+
+    #[test]
+    fn submit_checks_dimensions_and_answers() {
+        let hub = ModelHub::new(snapshot(16, 1.0), 4, 64, 1, 0);
+        assert_eq!(hub.dim(), 16);
+        let rx = hub.submit(vec![1.0; 16]).unwrap();
+        assert!(rx.recv().unwrap().score > 0.0);
+        match hub.submit(vec![1.0; 3]) {
+            Err(HubError::DimMismatch { expected: 16, got: 3 }) => {}
+            other => panic!("expected dim mismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reload_flips_predictions_and_keeps_stats() {
+        let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
+        let x = vec![1.0; 8];
+        let before = hub.submit(x.clone()).unwrap().recv().unwrap();
+        assert!(before.score > 0.0);
+        assert_eq!(hub.reload(snapshot(8, -1.0)).unwrap(), 8);
+        assert_eq!(hub.reloads(), 1);
+        let after = hub.submit(x).unwrap().recv().unwrap();
+        assert!(after.score < 0.0, "reloaded model must change the prediction");
+        // Stats aggregate across the generations.
+        let s = hub.stats();
+        assert_eq!(s.served, 2);
+        let final_stats = hub.shutdown();
+        assert_eq!(final_stats.served, 2);
+        assert!(matches!(hub.submit(vec![0.0; 8]), Err(HubError::Closed)));
+        assert!(matches!(hub.reload(snapshot(8, 1.0)), Err(HubError::Closed)));
+    }
+
+    #[test]
+    fn reload_mid_flight_drops_no_admitted_request() {
+        let dim = 64;
+        let hub = ModelHub::new(snapshot(dim, 1.0), 4, 256, 2, 7);
+        // Admit a burst, swap generations immediately, then collect.
+        let pending: Vec<_> =
+            (0..100).map(|_| hub.submit(vec![1.0; dim]).unwrap()).collect();
+        hub.reload(snapshot(dim, -1.0)).unwrap();
+        for rx in pending {
+            let resp = rx.recv().expect("admitted before the swap => answered");
+            assert!(!resp.score.is_nan());
+        }
+        // And the new generation serves too.
+        let resp = hub.submit(vec![1.0; dim]).unwrap().recv().unwrap();
+        assert!(resp.score < 0.0);
+        assert_eq!(hub.stats().served, 101);
+    }
+
+    #[test]
+    fn reload_can_change_dimensionality() {
+        let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
+        assert_eq!(hub.reload(snapshot(32, 0.5)).unwrap(), 32);
+        assert_eq!(hub.dim(), 32);
+        assert!(matches!(
+            hub.submit(vec![1.0; 8]),
+            Err(HubError::DimMismatch { expected: 32, got: 8 })
+        ));
+        assert!(hub.submit(vec![1.0; 32]).is_ok());
+    }
+}

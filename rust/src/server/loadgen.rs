@@ -1,0 +1,317 @@
+//! Load-generator client for the TCP serving front-end.
+//!
+//! Two layers:
+//!
+//! * [`Client`] — a synchronous request/response connection, used as the
+//!   control channel (ping / stats / reload) and for one-off scoring.
+//! * [`run`] — the load generator proper: `connections` client threads
+//!   drive the server over loopback (or any address) with a configurable
+//!   pipelining window and an easy/hard traffic mix — clean synthetic
+//!   digits exit early, heavily-noised ones force deep evaluations — and
+//!   the merged [`LoadReport`] carries per-request features-touched
+//!   counts for exact percentile reporting.
+//!
+//! Traffic is 784-dimensional digit imagery (the paper's MNIST shape);
+//! point it at a server that serves a 784-dim model.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use crate::coordinator::service::ModelSnapshot;
+use crate::data::synth::{SynthConfig, SynthDigits};
+use crate::error::{Error, Result};
+use crate::server::protocol::{Request, Response, StatsReport};
+use crate::util::rng::Rng64;
+
+/// A synchronous JSON-lines client connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    /// Connect to a serving front-end.
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).map_err(|e| Error::io(addr, e))?;
+        let read_half = stream.try_clone().map_err(|e| Error::io(addr, e))?;
+        Ok(Client { reader: BufReader::new(read_half), writer: BufWriter::new(stream) })
+    }
+
+    /// Send one request and wait for its response.
+    pub fn call(&mut self, req: &Request) -> Result<Response> {
+        let line = req.to_line();
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| Error::io("<client write>", e))?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).map_err(|e| Error::io("<client read>", e))?;
+        if n == 0 {
+            return Err(Error::format("server reply", "connection closed"));
+        }
+        Response::parse(reply.trim()).map_err(|e| Error::format("server reply", e))
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(Error::format("ping reply", format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Score one feature vector.
+    pub fn score(&mut self, features: Vec<f64>) -> Result<Response> {
+        self.call(&Request::Score { id: None, features })
+    }
+
+    /// Fetch server statistics.
+    pub fn stats(&mut self) -> Result<StatsReport> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(report) => Ok(report),
+            other => Err(Error::format("stats reply", format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Hot-swap the serving model; returns the new dimensionality.
+    pub fn reload(&mut self, snapshot: &ModelSnapshot) -> Result<usize> {
+        match self.call(&Request::Reload { snapshot: snapshot.clone() })? {
+            Response::Reloaded { dim } => Ok(dim),
+            Response::Error { error, .. } => Err(Error::format("reload reply", error)),
+            other => Err(Error::format("reload reply", format!("unexpected {other:?}"))),
+        }
+    }
+}
+
+/// Load-generation parameters.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Server address, e.g. `"127.0.0.1:7878"`.
+    pub addr: String,
+    /// Concurrent client connections.
+    pub connections: usize,
+    /// Total requests across all connections.
+    pub requests: usize,
+    /// In-flight requests per connection (pipelining window).
+    pub pipeline: usize,
+    /// Fraction of requests rendered with heavy noise (hard inputs that
+    /// defeat the early exit); the rest are clean (easy).
+    pub hard_fraction: f64,
+    /// Base RNG seed (per-connection streams are derived from it).
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            connections: 4,
+            requests: 1_000,
+            pipeline: 8,
+            hard_fraction: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+/// Merged outcome of a load-generation run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    /// Requests written to the wire.
+    pub sent: u64,
+    /// Score responses received.
+    pub answered: u64,
+    /// Explicit `overloaded` shed responses received.
+    pub overloaded: u64,
+    /// Other error responses (protocol, dimension, transport).
+    pub errors: u64,
+    /// Sum of features touched over answered requests.
+    pub total_features: u64,
+    /// Wall-clock seconds (max over connections).
+    pub elapsed_s: f64,
+    /// Features touched per answered request (for exact percentiles).
+    pub features: Vec<u32>,
+}
+
+impl LoadReport {
+    /// Mean features touched per answered request.
+    pub fn avg_features(&self) -> f64 {
+        if self.answered == 0 { 0.0 } else { self.total_features as f64 / self.answered as f64 }
+    }
+
+    /// Responses (answered + shed) per second.
+    pub fn req_per_s(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            0.0
+        } else {
+            (self.answered + self.overloaded) as f64 / self.elapsed_s
+        }
+    }
+
+    /// Exact `p`-th percentile (`p ∈ [0, 1]`) of features touched.
+    pub fn feature_percentile(&self, p: f64) -> u32 {
+        if self.features.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.features.clone();
+        sorted.sort_unstable();
+        let idx = (p.clamp(0.0, 1.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[idx]
+    }
+
+    /// Fold another connection's report into this one.
+    pub fn merge(&mut self, other: &LoadReport) {
+        self.sent += other.sent;
+        self.answered += other.answered;
+        self.overloaded += other.overloaded;
+        self.errors += other.errors;
+        self.total_features += other.total_features;
+        self.elapsed_s = self.elapsed_s.max(other.elapsed_s);
+        self.features.extend_from_slice(&other.features);
+    }
+}
+
+/// Renderer config for the hard (heavily-noised) traffic class.
+fn hard_render_config() -> SynthConfig {
+    SynthConfig { pixel_noise: 0.35, salt_prob: 0.2, jitter_px: 4.0, ..Default::default() }
+}
+
+/// Drive the server with mixed easy/hard digit traffic and merge the
+/// per-connection reports.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if cfg.connections == 0 || cfg.pipeline == 0 {
+        return Err(Error::Config("loadgen connections and pipeline must be >= 1".into()));
+    }
+    let per_conn = cfg.requests / cfg.connections;
+    let remainder = cfg.requests % cfg.connections;
+    let reports = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..cfg.connections {
+            let n = per_conn + usize::from(c < remainder);
+            joins.push(scope.spawn(move || drive_connection(cfg, c as u64, n)));
+        }
+        joins.into_iter().map(|j| j.join().expect("loadgen thread panicked")).collect::<Vec<_>>()
+    });
+    let mut merged = LoadReport::default();
+    for r in reports {
+        merged.merge(&r?);
+    }
+    Ok(merged)
+}
+
+/// One connection's worth of traffic: keep up to `pipeline` requests in
+/// flight, count every response class.
+fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadReport> {
+    let mut report = LoadReport::default();
+    if n == 0 {
+        return Ok(report);
+    }
+    let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
+    let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+
+    let base = cfg.seed.wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut clean = SynthDigits::new(base);
+    let mut noisy = SynthDigits::with_config(base ^ 0xA5A5_A5A5, hard_render_config());
+    let mut mix = Rng64::seed_from_u64(base ^ 0x5A5A_5A5A);
+
+    let t0 = Instant::now();
+    let mut next = 0usize;
+    let mut received = 0usize;
+    let mut line = String::new();
+    while received < n {
+        // Fill the pipelining window.
+        let in_flight = next - received;
+        if next < n && in_flight < cfg.pipeline {
+            let digit = if next % 2 == 0 { 2u8 } else { 3u8 };
+            let features = if mix.f64() < cfg.hard_fraction {
+                noisy.render(digit)
+            } else {
+                clean.render(digit)
+            };
+            let req = Request::Score { id: Some(next as u64), features };
+            writer
+                .write_all(req.to_line().as_bytes())
+                .map_err(|e| Error::io("<loadgen write>", e))?;
+            report.sent += 1;
+            next += 1;
+            if next < n && next - received < cfg.pipeline {
+                continue; // keep filling before the (blocking) read
+            }
+            writer.flush().map_err(|e| Error::io("<loadgen flush>", e))?;
+        }
+        // Window full (or everything sent): read one response.
+        line.clear();
+        let bytes = reader.read_line(&mut line).map_err(|e| Error::io("<loadgen read>", e))?;
+        if bytes == 0 {
+            break; // server closed on us; report what we have
+        }
+        received += 1;
+        match Response::parse(line.trim()) {
+            Ok(Response::Score { features_evaluated, .. }) => {
+                report.answered += 1;
+                report.total_features += features_evaluated as u64;
+                report.features.push(features_evaluated as u32);
+            }
+            Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
+            _ => report.errors += 1,
+        }
+    }
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_merge_and_ratios() {
+        let mut a = LoadReport {
+            sent: 10,
+            answered: 9,
+            overloaded: 1,
+            errors: 0,
+            total_features: 900,
+            elapsed_s: 2.0,
+            features: vec![100; 9],
+        };
+        let b = LoadReport {
+            sent: 5,
+            answered: 5,
+            overloaded: 0,
+            errors: 0,
+            total_features: 100,
+            elapsed_s: 1.0,
+            features: vec![20; 5],
+        };
+        a.merge(&b);
+        assert_eq!(a.sent, 15);
+        assert_eq!(a.answered, 14);
+        assert_eq!(a.elapsed_s, 2.0, "merged elapsed is the max");
+        assert!((a.avg_features() - 1000.0 / 14.0).abs() < 1e-9);
+        assert!((a.req_per_s() - 15.0 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles_are_exact_over_collected_counts() {
+        let report = LoadReport {
+            features: (1..=100).collect(),
+            answered: 100,
+            ..Default::default()
+        };
+        assert_eq!(report.feature_percentile(0.0), 1);
+        assert_eq!(report.feature_percentile(0.5), 51);
+        assert_eq!(report.feature_percentile(1.0), 100);
+        assert_eq!(LoadReport::default().feature_percentile(0.5), 0);
+    }
+
+    #[test]
+    fn empty_report_ratios_are_safe() {
+        let r = LoadReport::default();
+        assert_eq!(r.avg_features(), 0.0);
+        assert_eq!(r.req_per_s(), 0.0);
+    }
+}

@@ -1,0 +1,56 @@
+//! Network serving subsystem: a TCP front-end for the attentive
+//! prediction service.
+//!
+//! The paper's Sequential Thresholded Sum Test makes per-example feature
+//! cost a function of input *difficulty* — which is exactly a
+//! serving-latency mechanism. This module puts the early-stopped
+//! predictor behind a wire so it can serve real traffic:
+//!
+//! * [`protocol`] — the JSON-lines request/response wire format (one
+//!   compact JSON document per line, std-only, human-debuggable with
+//!   `nc`).
+//! * [`hub`] — [`hub::ModelHub`]: the swappable model layer. Wraps
+//!   [`crate::coordinator::service::PredictionService`] and supports
+//!   **hot snapshot reload**: a new worker generation is spawned, the
+//!   serving handle is swapped atomically, and the retired generation
+//!   drains its queue to completion — no request is ever dropped.
+//! * [`tcp`] — the front-end proper: accept loop, per-connection
+//!   reader/writer threads, bounded-queue admission control that sheds
+//!   load with an explicit `overloaded` response, and a `stats` endpoint
+//!   exposing throughput, features-touched histograms, and early-exit
+//!   rates.
+//! * [`loadgen`] — a loopback load-generator client: configurable
+//!   connection count, pipelining depth, and easy/hard traffic mix, used
+//!   by `attentive bench-serve`, `benches/serve_throughput.rs`, and the
+//!   loopback integration test.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use attentive::config::ServerConfig;
+//! use attentive::coordinator::service::ModelSnapshot;
+//! use attentive::margin::policy::CoordinatePolicy;
+//! use attentive::server::tcp::TcpServer;
+//! use attentive::stst::boundary::AnyBoundary;
+//!
+//! let snapshot = ModelSnapshot {
+//!     weights: vec![1.0; 784],
+//!     var_sn: 4.0,
+//!     boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+//!     policy: CoordinatePolicy::Permuted,
+//! };
+//! let cfg = ServerConfig { listen: "127.0.0.1:0".into(), ..Default::default() };
+//! let server = TcpServer::serve(&cfg, snapshot).unwrap();
+//! println!("serving on {}", server.local_addr());
+//! server.wait();
+//! ```
+
+pub mod hub;
+pub mod loadgen;
+pub mod protocol;
+pub mod tcp;
+
+pub use hub::ModelHub;
+pub use loadgen::{Client, LoadGenConfig, LoadReport};
+pub use protocol::{Request, Response, StatsReport};
+pub use tcp::TcpServer;

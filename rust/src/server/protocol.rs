@@ -1,0 +1,435 @@
+//! JSON-lines wire protocol for the serving front-end.
+//!
+//! One compact JSON document per `\n`-terminated line, in both
+//! directions. Std-only and deliberately boring: debuggable with `nc`,
+//! parseable by any language, and friendly to line-oriented tooling.
+//!
+//! Requests:
+//!
+//! ```text
+//! {"op":"score","features":[0.0,0.5,...],"id":7}   // id optional
+//! {"op":"stats"}
+//! {"op":"reload","snapshot":{...ModelSnapshot...}}
+//! {"op":"ping"}
+//! ```
+//!
+//! Responses always carry `"ok"`; errors carry `"error"` plus
+//! `"retryable"` (`true` for `overloaded` shed responses, which the
+//! client may retry after backing off):
+//!
+//! ```text
+//! {"ok":true,"op":"score","id":7,"score":1.25,"features_evaluated":34}
+//! {"ok":true,"op":"stats", ...StatsReport...}
+//! {"ok":true,"op":"reload","dim":784}
+//! {"ok":true,"op":"pong"}
+//! {"ok":false,"error":"overloaded","retryable":true}
+//! ```
+//!
+//! Responses on one connection are emitted in request order, so clients
+//! can pipeline without correlating ids (ids are still echoed for
+//! clients that want them).
+
+use crate::coordinator::service::ModelSnapshot;
+use crate::util::json::Json;
+
+/// A client → server message.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Score one feature vector.
+    Score {
+        /// Optional client-chosen correlation id, echoed in the response.
+        id: Option<u64>,
+        /// Dense feature vector (must match the serving model's dim).
+        features: Vec<f64>,
+    },
+    /// Fetch the server's live statistics.
+    Stats,
+    /// Hot-swap the serving model.
+    Reload {
+        /// The replacement model.
+        snapshot: ModelSnapshot,
+    },
+    /// Liveness probe.
+    Ping,
+}
+
+impl Request {
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        let op = v.get("op").and_then(|o| o.as_str()).ok_or("missing op")?;
+        match op {
+            "score" => {
+                let id = v.get("id").and_then(|x| x.as_u64());
+                let features = v
+                    .get("features")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("score: missing features")?
+                    .iter()
+                    .map(|x| x.as_f64().ok_or_else(|| "score: non-numeric feature".to_string()))
+                    .collect::<Result<Vec<_>, _>>()?;
+                // Reject inf/NaN here: a non-finite margin could not be
+                // serialized back as valid JSON.
+                if !features.iter().all(|f| f.is_finite()) {
+                    return Err("score: non-finite feature".into());
+                }
+                Ok(Request::Score { id, features })
+            }
+            "stats" => Ok(Request::Stats),
+            "reload" => Ok(Request::Reload {
+                snapshot: ModelSnapshot::from_json(
+                    v.get("snapshot").ok_or("reload: missing snapshot")?,
+                )?,
+            }),
+            "ping" => Ok(Request::Ping),
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    /// Serialize (client side).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Score { id, features } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("score".into())),
+                    ("features", Json::Arr(features.iter().map(|&f| Json::Num(f)).collect())),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+            Request::Stats => Json::obj([("op", Json::Str("stats".into()))]),
+            Request::Reload { snapshot } => Json::obj([
+                ("op", Json::Str("reload".into())),
+                ("snapshot", snapshot.to_json()),
+            ]),
+            Request::Ping => Json::obj([("op", Json::Str("ping".into()))]),
+        }
+    }
+
+    /// One wire line (compact JSON + newline).
+    pub fn to_line(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+}
+
+/// Server statistics exposed by the `stats` op.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StatsReport {
+    /// Requests scored.
+    pub served: u64,
+    /// Mean features touched per scored request.
+    pub avg_features: f64,
+    /// Fraction of scored requests that exited early.
+    pub early_exit_rate: f64,
+    /// Worker batches drained.
+    pub batches: u64,
+    /// Approx. features-touched percentiles (histogram upper edges).
+    pub features_p50: u64,
+    /// 90th percentile.
+    pub features_p90: u64,
+    /// 99th percentile.
+    pub features_p99: u64,
+    /// Connections accepted since start.
+    pub accepted_conns: u64,
+    /// Requests shed with an `overloaded` response.
+    pub overloaded: u64,
+    /// Lines that failed to parse as a request.
+    pub protocol_errors: u64,
+    /// Hot model reloads applied.
+    pub reloads: u64,
+    /// Seconds since the server started.
+    pub uptime_s: f64,
+    /// Scored requests per second over the whole uptime.
+    pub req_per_s: f64,
+}
+
+impl StatsReport {
+    /// Serialize the payload fields (caller adds the envelope).
+    fn payload(&self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("served", Json::Num(self.served as f64)),
+            ("avg_features", Json::Num(self.avg_features)),
+            ("early_exit_rate", Json::Num(self.early_exit_rate)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("features_p50", Json::Num(self.features_p50 as f64)),
+            ("features_p90", Json::Num(self.features_p90 as f64)),
+            ("features_p99", Json::Num(self.features_p99 as f64)),
+            ("accepted_conns", Json::Num(self.accepted_conns as f64)),
+            ("overloaded", Json::Num(self.overloaded as f64)),
+            ("protocol_errors", Json::Num(self.protocol_errors as f64)),
+            ("reloads", Json::Num(self.reloads as f64)),
+            ("uptime_s", Json::Num(self.uptime_s)),
+            ("req_per_s", Json::Num(self.req_per_s)),
+        ]
+    }
+
+    /// Parse the payload fields (missing fields default to zero, so the
+    /// report stays forward-compatible when the server grows counters).
+    pub fn from_json(v: &Json) -> StatsReport {
+        let num = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
+        let int = |k: &str| v.get(k).and_then(|x| x.as_u64()).unwrap_or(0);
+        StatsReport {
+            served: int("served"),
+            avg_features: num("avg_features"),
+            early_exit_rate: num("early_exit_rate"),
+            batches: int("batches"),
+            features_p50: int("features_p50"),
+            features_p90: int("features_p90"),
+            features_p99: int("features_p99"),
+            accepted_conns: int("accepted_conns"),
+            overloaded: int("overloaded"),
+            protocol_errors: int("protocol_errors"),
+            reloads: int("reloads"),
+            uptime_s: num("uptime_s"),
+            req_per_s: num("req_per_s"),
+        }
+    }
+}
+
+/// A server → client message.
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// A scored request.
+    Score {
+        /// Echo of the request id, if one was sent.
+        id: Option<u64>,
+        /// Signed margin estimate; the prediction is its sign.
+        score: f64,
+        /// Features evaluated before the early exit.
+        features_evaluated: usize,
+    },
+    /// Live statistics.
+    Stats(StatsReport),
+    /// A hot reload was applied; `dim` is the new model's dimensionality.
+    Reloaded {
+        /// New feature dimensionality.
+        dim: usize,
+    },
+    /// Liveness answer.
+    Pong,
+    /// The request failed. `retryable` marks shed load (`overloaded`).
+    Error {
+        /// Echo of the request id, if known.
+        id: Option<u64>,
+        /// What went wrong.
+        error: String,
+        /// Whether retrying later can succeed (backpressure shed).
+        retryable: bool,
+    },
+}
+
+impl Response {
+    /// Serialize (server side).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Score { id, score, features_evaluated } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("score".into())),
+                    ("score", Json::Num(*score)),
+                    ("features_evaluated", Json::Num(*features_evaluated as f64)),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+            Response::Stats(report) => {
+                let mut pairs =
+                    vec![("ok", Json::Bool(true)), ("op", Json::Str("stats".into()))];
+                pairs.extend(report.payload());
+                Json::obj(pairs)
+            }
+            Response::Reloaded { dim } => Json::obj([
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("reload".into())),
+                ("dim", Json::Num(*dim as f64)),
+            ]),
+            Response::Pong => {
+                Json::obj([("ok", Json::Bool(true)), ("op", Json::Str("pong".into()))])
+            }
+            Response::Error { id, error, retryable } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(false)),
+                    ("error", Json::Str(error.clone())),
+                    ("retryable", Json::Bool(*retryable)),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+        }
+    }
+
+    /// One wire line (compact JSON + newline).
+    pub fn to_line(&self) -> String {
+        let mut s = self.to_json().to_string_compact();
+        s.push('\n');
+        s
+    }
+
+    /// Parse one response line (client side).
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        let ok = v.get("ok").and_then(|b| b.as_bool()).ok_or("missing ok")?;
+        if !ok {
+            return Ok(Response::Error {
+                id: v.get("id").and_then(|x| x.as_u64()),
+                error: v
+                    .get("error")
+                    .and_then(|s| s.as_str())
+                    .unwrap_or("unknown error")
+                    .to_string(),
+                retryable: v.get("retryable").and_then(|b| b.as_bool()).unwrap_or(false),
+            });
+        }
+        match v.get("op").and_then(|o| o.as_str()).ok_or("missing op")? {
+            "score" => Ok(Response::Score {
+                id: v.get("id").and_then(|x| x.as_u64()),
+                score: v.get("score").and_then(|x| x.as_f64()).ok_or("score: missing score")?,
+                features_evaluated: v
+                    .get("features_evaluated")
+                    .and_then(|x| x.as_usize())
+                    .ok_or("score: missing features_evaluated")?,
+            }),
+            "stats" => Ok(Response::Stats(StatsReport::from_json(&v))),
+            "reload" => Ok(Response::Reloaded {
+                dim: v.get("dim").and_then(|x| x.as_usize()).ok_or("reload: missing dim")?,
+            }),
+            "pong" => Ok(Response::Pong),
+            other => Err(format!("unknown response op {other:?}")),
+        }
+    }
+
+    /// Is this the `overloaded` shed response?
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Response::Error { error, retryable: true, .. } if error == "overloaded")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::AnyBoundary;
+
+    #[test]
+    fn score_request_round_trip() {
+        let req = Request::Score { id: Some(9), features: vec![0.0, -1.5, 0.25] };
+        let line = req.to_line();
+        assert!(line.ends_with('\n'));
+        match Request::parse(line.trim()).unwrap() {
+            Request::Score { id, features } => {
+                assert_eq!(id, Some(9));
+                assert_eq!(features, vec![0.0, -1.5, 0.25]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Without an id.
+        match Request::parse(&Request::Score { id: None, features: vec![1.0] }.to_line()).unwrap()
+        {
+            Request::Score { id, .. } => assert_eq!(id, None),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn control_requests_round_trip() {
+        assert!(matches!(Request::parse(&Request::Stats.to_line()).unwrap(), Request::Stats));
+        assert!(matches!(Request::parse(&Request::Ping.to_line()).unwrap(), Request::Ping));
+        let snapshot = ModelSnapshot {
+            weights: vec![1.0, -2.0],
+            var_sn: 3.0,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+        };
+        match Request::parse(&Request::Reload { snapshot: snapshot.clone() }.to_line()).unwrap() {
+            Request::Reload { snapshot: back } => {
+                assert_eq!(back.weights, snapshot.weights);
+                assert_eq!(back.boundary, snapshot.boundary);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_parse_rejects_malformed_lines() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{}").is_err(), "missing op");
+        assert!(Request::parse(r#"{"op":"warp"}"#).is_err(), "unknown op");
+        assert!(Request::parse(r#"{"op":"score"}"#).is_err(), "missing features");
+        assert!(
+            Request::parse(r#"{"op":"score","features":[1,"x"]}"#).is_err(),
+            "non-numeric feature"
+        );
+        assert!(
+            Request::parse(r#"{"op":"score","features":[1,1e999]}"#).is_err(),
+            "non-finite feature must be rejected before it can poison a response"
+        );
+        assert!(Request::parse(r#"{"op":"reload"}"#).is_err(), "missing snapshot");
+    }
+
+    #[test]
+    fn response_round_trips() {
+        let r = Response::Score { id: Some(3), score: -0.75, features_evaluated: 41 };
+        match Response::parse(r.to_line().trim()).unwrap() {
+            Response::Score { id, score, features_evaluated } => {
+                assert_eq!(id, Some(3));
+                assert_eq!(score, -0.75);
+                assert_eq!(features_evaluated, 41);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        match Response::parse(&Response::Reloaded { dim: 784 }.to_line()).unwrap() {
+            Response::Reloaded { dim } => assert_eq!(dim, 784),
+            other => panic!("wrong variant {other:?}"),
+        }
+        assert!(matches!(Response::parse(&Response::Pong.to_line()).unwrap(), Response::Pong));
+    }
+
+    #[test]
+    fn stats_report_round_trip() {
+        let report = StatsReport {
+            served: 1000,
+            avg_features: 93.5,
+            early_exit_rate: 0.875,
+            batches: 120,
+            features_p50: 63,
+            features_p90: 511,
+            features_p99: 1023,
+            accepted_conns: 5,
+            overloaded: 17,
+            protocol_errors: 2,
+            reloads: 1,
+            uptime_s: 4.5,
+            req_per_s: 222.2,
+        };
+        match Response::parse(&Response::Stats(report).to_line()).unwrap() {
+            Response::Stats(back) => assert_eq!(back, report),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_responses_flag_retryability() {
+        let shed = Response::Error { id: None, error: "overloaded".into(), retryable: true };
+        let parsed = Response::parse(&shed.to_line()).unwrap();
+        assert!(parsed.is_overloaded());
+        let fatal =
+            Response::Error { id: Some(1), error: "dimension mismatch".into(), retryable: false };
+        match Response::parse(&fatal.to_line()).unwrap() {
+            Response::Error { id, error, retryable } => {
+                assert_eq!(id, Some(1));
+                assert!(error.contains("dimension"));
+                assert!(!retryable);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        assert!(!Response::parse(&fatal.to_line()).unwrap().is_overloaded());
+    }
+}

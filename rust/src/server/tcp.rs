@@ -1,0 +1,363 @@
+//! TCP front-end: accept loop, per-connection reader/writer threads,
+//! bounded-queue admission, and the stats/reload control ops.
+//!
+//! ## Threading model
+//!
+//! One accept thread; per connection, a **reader** thread that parses
+//! JSON-lines requests and a **writer** thread that emits responses in
+//! request order. Score requests are admitted to the
+//! [`ModelHub`]'s bounded queue without blocking: if the queue is full
+//! the reader immediately enqueues an explicit `overloaded` error line
+//! instead of buffering — load is shed at the edge, never accumulated.
+//! Admitted requests travel to the writer as pending response receivers,
+//! bounded by `max_pending_per_conn` (the per-connection pipelining
+//! window): a slow consumer backpressures its own reader, not the whole
+//! server.
+//!
+//! ## Control ops
+//!
+//! `stats` returns the aggregated [`StatsReport`] (throughput,
+//! features-touched percentiles, early-exit rate, shed counts); `reload`
+//! hot-swaps the serving [`ModelSnapshot`] with zero downtime (see
+//! [`ModelHub`]). Both arrive over the same wire as ordinary requests, so
+//! any connection can act as a control channel.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::ServerConfig;
+use crate::coordinator::service::{ModelSnapshot, ScoreResponse};
+use crate::error::{Error, Result};
+use crate::server::hub::{HubError, ModelHub};
+use crate::server::protocol::{Request, Response, StatsReport};
+
+/// Server-wide shared state.
+struct Shared {
+    hub: ModelHub,
+    shutting_down: AtomicBool,
+    accepted: AtomicU64,
+    overloaded: AtomicU64,
+    protocol_errors: AtomicU64,
+    started: Instant,
+    /// Stream clones used to unblock connection readers at shutdown,
+    /// keyed by connection id; entries are removed when the connection
+    /// closes so long-lived servers don't leak fds.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    next_conn_id: AtomicU64,
+    conn_joins: Mutex<Vec<JoinHandle<()>>>,
+    max_pending: usize,
+}
+
+/// A running TCP serving front-end.
+///
+/// Dropping the server shuts it down cleanly (stops accepting, closes
+/// connections, drains every admitted request, joins all threads).
+pub struct TcpServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept_join: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `cfg.listen` and start serving `snapshot`.
+    pub fn serve(cfg: &ServerConfig, snapshot: ModelSnapshot) -> Result<TcpServer> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.listen).map_err(|e| Error::io(&cfg.listen, e))?;
+        let local_addr = listener.local_addr().map_err(|e| Error::io(&cfg.listen, e))?;
+        let shared = Arc::new(Shared {
+            hub: ModelHub::new(snapshot, cfg.max_batch, cfg.queue, cfg.workers, cfg.seed),
+            shutting_down: AtomicBool::new(false),
+            accepted: AtomicU64::new(0),
+            overloaded: AtomicU64::new(0),
+            protocol_errors: AtomicU64::new(0),
+            started: Instant::now(),
+            conns: Mutex::new(HashMap::new()),
+            next_conn_id: AtomicU64::new(0),
+            conn_joins: Mutex::new(Vec::new()),
+            max_pending: cfg.max_pending_per_conn,
+        });
+        let accept_shared = shared.clone();
+        let accept_join = std::thread::spawn(move || accept_loop(listener, accept_shared));
+        Ok(TcpServer { shared, local_addr, accept_join: Some(accept_join) })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Current server statistics (same payload as the `stats` op).
+    pub fn stats(&self) -> StatsReport {
+        report(&self.shared)
+    }
+
+    /// Programmatic hot reload (same semantics as the `reload` op).
+    pub fn reload(&self, snapshot: ModelSnapshot) -> std::result::Result<usize, HubError> {
+        self.shared.hub.reload(snapshot)
+    }
+
+    /// Block on the accept loop. It only exits if the listener itself
+    /// fails (in normal operation the process runs until killed — there
+    /// is no cross-thread stop signal once `self` is consumed; use
+    /// [`Self::shutdown`] instead of `wait` when you need a programmatic
+    /// stop). Cleans up if the loop ever does exit.
+    pub fn wait(mut self) {
+        if let Some(join) = self.accept_join.take() {
+            let _ = join.join();
+        }
+        self.teardown_connections();
+        self.shared.hub.shutdown();
+    }
+
+    /// Stop accepting, drain and answer every admitted request, join all
+    /// threads, and return the final statistics.
+    pub fn shutdown(mut self) -> StatsReport {
+        self.shutdown_impl();
+        report(&self.shared)
+    }
+
+    fn shutdown_impl(&mut self) {
+        let Some(accept_join) = self.accept_join.take() else {
+            return; // already shut down
+        };
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        // Wake the blocking accept() so it observes the flag.
+        let _ = TcpStream::connect(self.local_addr);
+        let _ = accept_join.join();
+        self.teardown_connections();
+        self.shared.hub.shutdown();
+    }
+
+    fn teardown_connections(&self) {
+        // Unblock every connection reader; EOF ends the reader, which
+        // drops the job channel, which lets the writer drain and exit.
+        for (_, stream) in self.shared.conns.lock().unwrap().drain() {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let joins = std::mem::take(&mut *self.shared.conn_joins.lock().unwrap());
+        for join in joins {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    for stream in listener.incoming() {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        shared.accepted.fetch_add(1, Ordering::Relaxed);
+        let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap().insert(conn_id, clone);
+        }
+        let conn_shared = shared.clone();
+        let join = std::thread::spawn(move || {
+            handle_conn(stream, &conn_shared);
+            // Release this connection's shutdown clone (fd) as soon as
+            // the connection ends, not at server teardown.
+            conn_shared.conns.lock().unwrap().remove(&conn_id);
+        });
+        let mut joins = shared.conn_joins.lock().unwrap();
+        // Reap handles of connections that already finished so a
+        // long-running server doesn't accumulate one per connection.
+        joins.retain(|j| !j.is_finished());
+        joins.push(join);
+    }
+}
+
+/// What the reader hands the writer, in request order.
+enum Job {
+    /// A fully-formed response line.
+    Line(String),
+    /// An admitted score request whose response is still being computed.
+    Pending { id: Option<u64>, rx: Receiver<ScoreResponse> },
+}
+
+fn handle_conn(stream: TcpStream, shared: &Shared) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let (jtx, jrx) = sync_channel::<Job>(shared.max_pending);
+    let writer = std::thread::spawn(move || writer_loop(stream, jrx));
+
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let job = match Request::parse(line) {
+            Err(e) => {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                Job::Line(Response::Error { id: None, error: e, retryable: false }.to_line())
+            }
+            Ok(Request::Ping) => Job::Line(Response::Pong.to_line()),
+            Ok(Request::Stats) => Job::Line(Response::Stats(report(shared)).to_line()),
+            Ok(Request::Reload { snapshot }) => match shared.hub.reload(snapshot) {
+                Ok(dim) => Job::Line(Response::Reloaded { dim }.to_line()),
+                Err(e) => Job::Line(
+                    Response::Error { id: None, error: e.to_string(), retryable: false }.to_line(),
+                ),
+            },
+            Ok(Request::Score { id, features }) => match shared.hub.submit(features) {
+                Ok(rx) => Job::Pending { id, rx },
+                Err(HubError::Overloaded) => {
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    Job::Line(
+                        Response::Error { id, error: "overloaded".into(), retryable: true }
+                            .to_line(),
+                    )
+                }
+                Err(e @ HubError::DimMismatch { .. }) => Job::Line(
+                    Response::Error { id, error: e.to_string(), retryable: false }.to_line(),
+                ),
+                Err(HubError::Closed) => break,
+            },
+        };
+        if jtx.send(job).is_err() {
+            break; // writer gone (connection dead)
+        }
+    }
+    drop(jtx); // writer drains the remaining jobs, then exits
+    let _ = writer.join();
+}
+
+fn writer_loop(stream: TcpStream, jrx: Receiver<Job>) {
+    let mut out = BufWriter::new(stream);
+    'outer: loop {
+        let Ok(mut job) = jrx.recv() else { break };
+        // Drain queued jobs before flushing, so a burst costs one syscall
+        // instead of one per response — but never hold already-written
+        // responses hostage to a computation that isn't done yet: flush
+        // before blocking on an unready pending receiver.
+        loop {
+            let line = match job {
+                Job::Line(line) => line,
+                Job::Pending { id, rx } => match rx.try_recv() {
+                    Ok(resp) => render_score(id, Some(resp)),
+                    Err(TryRecvError::Empty) => {
+                        if out.flush().is_err() {
+                            break 'outer;
+                        }
+                        render_score(id, rx.recv().ok())
+                    }
+                    Err(TryRecvError::Disconnected) => render_score(id, None),
+                },
+            };
+            if out.write_all(line.as_bytes()).is_err() {
+                break 'outer;
+            }
+            match jrx.try_recv() {
+                Ok(next) => job = next,
+                Err(_) => break, // empty or disconnected: flush, then re-recv
+            }
+        }
+        if out.flush().is_err() {
+            break;
+        }
+    }
+    let _ = out.flush();
+}
+
+/// Render an admitted request's outcome (`None` = the worker generation
+/// died before answering, which a drained shutdown should never produce).
+fn render_score(id: Option<u64>, resp: Option<ScoreResponse>) -> String {
+    match resp {
+        None => Response::Error { id, error: "service unavailable".into(), retryable: false }
+            .to_line(),
+        // NaN marks the worker-level dimension guard; the hub screens
+        // dimensions at admission, so this only fires if a reload changed
+        // the model dim while the request was in flight.
+        Some(resp) if resp.score.is_nan() => Response::Error {
+            id,
+            error: "dimension mismatch (model reloaded mid-flight)".into(),
+            retryable: true,
+        }
+        .to_line(),
+        // Non-finite margins (e.g. inf weights in a reloaded snapshot)
+        // cannot be serialized as JSON.
+        Some(resp) if !resp.score.is_finite() => {
+            Response::Error { id, error: "non-finite score".into(), retryable: false }.to_line()
+        }
+        Some(resp) => {
+            Response::Score { id, score: resp.score, features_evaluated: resp.features_evaluated }
+                .to_line()
+        }
+    }
+}
+
+fn report(shared: &Shared) -> StatsReport {
+    let s = shared.hub.stats();
+    let uptime = shared.started.elapsed().as_secs_f64().max(1e-9);
+    StatsReport {
+        served: s.served,
+        avg_features: s.avg_features(),
+        early_exit_rate: s.early_exit_rate(),
+        batches: s.batches,
+        features_p50: s.feature_percentile(0.50),
+        features_p90: s.feature_percentile(0.90),
+        features_p99: s.feature_percentile(0.99),
+        accepted_conns: shared.accepted.load(Ordering::Relaxed),
+        overloaded: shared.overloaded.load(Ordering::Relaxed),
+        protocol_errors: shared.protocol_errors.load(Ordering::Relaxed),
+        reloads: shared.hub.reloads(),
+        uptime_s: uptime,
+        req_per_s: s.served as f64 / uptime,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::AnyBoundary;
+
+    fn snapshot(dim: usize) -> ModelSnapshot {
+        ModelSnapshot {
+            weights: vec![1.0; dim],
+            var_sn: 4.0,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+        }
+    }
+
+    fn ephemeral_cfg() -> ServerConfig {
+        ServerConfig { listen: "127.0.0.1:0".into(), ..Default::default() }
+    }
+
+    #[test]
+    fn serve_and_shutdown_is_clean() {
+        let server = TcpServer::serve(&ephemeral_cfg(), snapshot(8)).unwrap();
+        let addr = server.local_addr();
+        assert_ne!(addr.port(), 0, "ephemeral port must be resolved");
+        let stats = server.shutdown();
+        assert_eq!(stats.served, 0);
+    }
+
+    #[test]
+    fn drop_without_explicit_shutdown_does_not_hang() {
+        let server = TcpServer::serve(&ephemeral_cfg(), snapshot(8)).unwrap();
+        drop(server);
+    }
+
+    #[test]
+    fn programmatic_reload_counts() {
+        let server = TcpServer::serve(&ephemeral_cfg(), snapshot(8)).unwrap();
+        assert_eq!(server.reload(snapshot(16)).unwrap(), 16);
+        assert_eq!(server.stats().reloads, 1);
+        server.shutdown();
+    }
+}

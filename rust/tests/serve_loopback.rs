@@ -1,0 +1,237 @@
+//! Loopback integration for the network serving subsystem: TCP server ×
+//! loadgen client × hot reload × backpressure, end-to-end over real
+//! sockets.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use attentive::config::ServerConfig;
+use attentive::coordinator::service::ModelSnapshot;
+use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::synth::SynthDigits;
+use attentive::data::task::BinaryTask;
+use attentive::learner::attentive::attentive_pegasos;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::server::loadgen::{self, Client, LoadGenConfig};
+use attentive::server::protocol::Response;
+use attentive::server::tcp::TcpServer;
+use attentive::stst::boundary::AnyBoundary;
+
+const DIM: usize = 784;
+
+/// A flat hand-built snapshot: every weight `w`, so any all-nonnegative
+/// digit image scores with the sign of `w` — deterministically, whatever
+/// the coordinate order. Early exits are guaranteed on inky images.
+fn flat_snapshot(w: f64) -> ModelSnapshot {
+    ModelSnapshot {
+        weights: vec![w; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    }
+}
+
+/// Train a real attentive model on the synthetic 2-vs-3 task.
+fn trained_snapshot() -> ModelSnapshot {
+    let ds = SynthDigits::new(17).generate_classes(1_200, &[2, 3]);
+    let task = BinaryTask::one_vs_one(&ds, 2, 3).unwrap();
+    let mut learner = attentive_pegasos(task.dim(), 1e-2, 0.1);
+    Trainer::new(TrainerConfig { epochs: 2, eval_every: 0, curves: false, ..Default::default() })
+        .fit(&mut learner, &task);
+    ModelSnapshot::from_trained(
+        &mut learner,
+        AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        CoordinatePolicy::Permuted,
+    )
+}
+
+fn loopback_server(snapshot: ModelSnapshot, queue: usize, workers: usize) -> TcpServer {
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers,
+        queue,
+        ..Default::default()
+    };
+    TcpServer::serve(&cfg, snapshot).expect("bind loopback")
+}
+
+#[test]
+fn thousand_requests_with_midstream_hot_reload() {
+    let server = loopback_server(trained_snapshot(), 4096, 2);
+    let addr = server.local_addr().to_string();
+
+    // Background: >= 1k mixed easy/hard requests from the loadgen client.
+    let load_addr = addr.clone();
+    let load = std::thread::spawn(move || {
+        loadgen::run(&LoadGenConfig {
+            addr: load_addr,
+            connections: 4,
+            requests: 1_000,
+            pipeline: 8,
+            hard_fraction: 0.5,
+            seed: 3,
+        })
+        .expect("loadgen")
+    });
+
+    // Control channel on its own connection, mid-stream.
+    let mut control = Client::connect(&addr).expect("control connect");
+    control.ping().expect("ping");
+    std::thread::sleep(std::time::Duration::from_millis(10));
+
+    let probe: Vec<f64> = SynthDigits::new(555).render(2);
+    assert_eq!(control.reload(&flat_snapshot(1.0)).expect("reload +1"), DIM);
+    let up = match control.score(probe.clone()).expect("probe +1") {
+        Response::Score { score, features_evaluated, .. } => {
+            assert!(features_evaluated <= DIM);
+            score
+        }
+        other => panic!("probe got {other:?}"),
+    };
+    assert!(up > 0.0, "all-(+1) model must score an inky image positive, got {up}");
+
+    assert_eq!(control.reload(&flat_snapshot(-1.0)).expect("reload -1"), DIM);
+    let down = match control.score(probe).expect("probe -1") {
+        Response::Score { score, .. } => score,
+        other => panic!("probe got {other:?}"),
+    };
+    assert!(down < 0.0, "hot reload must change the prediction, got {down}");
+
+    // Every request answered, none dropped, none shed, attention saves.
+    let report = load.join().unwrap();
+    assert_eq!(report.sent, 1_000);
+    assert_eq!(report.answered, 1_000, "hot reload must not drop a request");
+    assert_eq!(report.overloaded, 0);
+    assert_eq!(report.errors, 0);
+    assert!(
+        report.avg_features() < DIM as f64,
+        "avg features/request {} must beat full evaluation",
+        report.avg_features()
+    );
+
+    let stats = control.stats().expect("stats");
+    assert_eq!(stats.reloads, 2);
+    assert!(stats.served >= 1_002, "loadgen + probes all served, got {}", stats.served);
+    assert!(stats.early_exit_rate > 0.0);
+    assert!(stats.req_per_s > 0.0);
+
+    let final_stats = server.shutdown();
+    assert!(final_stats.served >= 1_002);
+}
+
+#[test]
+fn malformed_lines_and_dim_mismatch_keep_connection_alive() {
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+
+    // Raw socket: garbage line first, then a valid ping on the same
+    // connection.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let write = |s: &str| {
+        let mut stream = &stream;
+        stream.write_all(s.as_bytes()).unwrap();
+    };
+    let mut read_line = || {
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "connection closed early");
+        Response::parse(line.trim()).expect("parseable response")
+    };
+    write("this is not json\n");
+    match read_line() {
+        Response::Error { retryable, .. } => assert!(!retryable),
+        other => panic!("expected error, got {other:?}"),
+    }
+    write("{\"op\":\"ping\"}\n");
+    assert!(matches!(read_line(), Response::Pong), "connection must survive a bad line");
+    drop(reader);
+    drop(stream);
+
+    // Typed client: wrong dimensionality is a clean, non-retryable error.
+    let mut client = Client::connect(&addr).unwrap();
+    match client.score(vec![1.0, 2.0, 3.0]).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("dimension"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected dim error, got {other:?}"),
+    }
+    match client.score(vec![0.5; DIM]).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.protocol_errors, 1);
+    server.shutdown();
+}
+
+#[test]
+fn overload_sheds_explicitly_and_recovers() {
+    // Tiny admission queue + single worker: pipelined floods may be shed,
+    // but every request must still get an explicit response.
+    let snapshot = ModelSnapshot {
+        // Zero weights never clear the boundary -> every request walks
+        // all 784 coordinates, keeping the worker busy enough to fill the
+        // one-slot queue under a pipelined flood.
+        weights: vec![0.0; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    };
+    let server = loopback_server(snapshot, 1, 1);
+    let addr = server.local_addr().to_string();
+
+    let report = loadgen::run(&LoadGenConfig {
+        addr: addr.clone(),
+        connections: 4,
+        requests: 400,
+        pipeline: 32,
+        hard_fraction: 1.0,
+        seed: 9,
+    })
+    .expect("loadgen");
+    assert_eq!(report.sent, 400);
+    assert_eq!(
+        report.answered + report.overloaded,
+        400,
+        "every request gets a response: scored or an explicit overloaded shed"
+    );
+    assert_eq!(report.errors, 0);
+
+    // The server survives the flood and still answers.
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.overloaded, report.overloaded);
+    server.shutdown();
+}
+
+#[test]
+fn stats_endpoint_reports_attention_savings() {
+    let server = loopback_server(flat_snapshot(1.0), 256, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let mut gen = SynthDigits::new(77);
+    for i in 0..50 {
+        let digit = if i % 2 == 0 { 2u8 } else { 3u8 };
+        match client.score(gen.render(digit)).unwrap() {
+            Response::Score { features_evaluated, .. } => {
+                assert!(features_evaluated < DIM, "inky image under flat weights exits early")
+            }
+            other => panic!("expected score, got {other:?}"),
+        }
+    }
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.served, 50);
+    assert!(stats.early_exit_rate > 0.9, "got {}", stats.early_exit_rate);
+    assert!(stats.avg_features < DIM as f64);
+    assert!(
+        stats.features_p50 < DIM as u64,
+        "histogram p50 {} must sit below full evaluation",
+        stats.features_p50
+    );
+    assert!(stats.features_p99 >= stats.features_p50);
+    assert!(stats.uptime_s > 0.0);
+    server.shutdown();
+}
