@@ -1,12 +1,18 @@
-//! Serving throughput over loopback TCP: attentive early-exit vs full
-//! evaluation on identical traffic.
+//! Serving throughput over loopback TCP: wire protocol v1 vs v2 and
+//! attentive early-exit vs full evaluation on identical traffic.
 //!
-//! Spawns the JSON-lines front-end on an ephemeral port, drives it with
-//! the load-generator client (mixed clean/noisy digit traffic, pipelined
-//! connections), hot-reloads the same weights under the Full boundary via
-//! the control channel, and replays the identical request stream —
-//! reporting req/s and features-touched percentiles for both. The gap is
-//! the paper's focus-of-attention, measured at the wire.
+//! Spawns the TCP front-end on an ephemeral port and drives it with the
+//! load-generator client (mixed clean/noisy digit traffic, pipelined
+//! connections) over each wire mode — v1 dense JSON lines, the v2
+//! sparse JSON form, and v2 binary frames — then hot-reloads the same
+//! weights under the Full boundary via the control channel and replays
+//! the identical stream. The attentive-vs-full gap is the paper's
+//! focus-of-attention measured at the wire; the v1-vs-v2 gap is the
+//! transport catching up with the evaluator (JSON parse of 784 dense
+//! floats was the per-request bottleneck).
+//!
+//! Writes the machine-readable `BENCH_serve.json` (override the path
+//! with `BENCH_JSON=...`) consumed by CI's bench-smoke gate.
 //!
 //! `cargo bench --bench serve_throughput` (BENCH_QUICK=1 for CI scale)
 
@@ -17,8 +23,8 @@ use attentive::data::synth::SynthDigits;
 use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
 use attentive::margin::policy::CoordinatePolicy;
-use attentive::metrics::export::Table;
-use attentive::server::loadgen::{self, Client, LoadGenConfig, LoadReport};
+use attentive::metrics::export::{to_json_file, Table};
+use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig, LoadReport};
 use attentive::server::tcp::TcpServer;
 use attentive::stst::boundary::AnyBoundary;
 
@@ -48,8 +54,8 @@ fn row(table: &mut Table, name: &str, r: &LoadReport) {
         format!("{:.0}", r.req_per_s()),
         format!("{:.1}", r.avg_features()),
         format!("{}", r.feature_percentile(0.50)),
-        format!("{}", r.feature_percentile(0.90)),
         format!("{}", r.feature_percentile(0.99)),
+        format!("{:.0}", r.bytes_per_req()),
         format!("{:.3}", early_rate),
         format!("{}", r.overloaded),
     ]);
@@ -76,13 +82,15 @@ fn main() {
         "loopback serving bench on {addr}: {requests} requests/pass, 8 connections, pipeline 16"
     );
 
-    let loadcfg = LoadGenConfig {
+    let loadcfg = |mode: ClientMode| LoadGenConfig {
         addr: addr.clone(),
         connections: 8,
         requests,
         pipeline: 16,
         hard_fraction: 0.5,
-        seed: 11, // same seed both passes -> identical traffic
+        mode,
+        sparse_eps: 0.05,
+        seed: 11, // same seed every pass -> identical traffic
     };
 
     let mut table = Table::new(&[
@@ -90,21 +98,32 @@ fn main() {
         "req/s",
         "avg feats",
         "p50",
-        "p90",
         "p99",
+        "B/req",
         "early-exit",
         "shed",
     ]);
 
-    let att = loadgen::run(&loadcfg).expect("attentive pass");
-    assert_eq!(att.answered + att.overloaded, requests as u64, "every request answered");
-    row(&mut table, "attentive(δ=0.1)", &att);
+    // Pass 1-3: the three wire modes against the attentive model.
+    let mut passes: Vec<(String, LoadReport)> = Vec::new();
+    for mode in ClientMode::ALL {
+        let report = loadgen::run(&loadcfg(mode)).expect(mode.name());
+        assert_eq!(
+            report.answered + report.overloaded,
+            requests as u64,
+            "every request answered ({})",
+            mode.name()
+        );
+        row(&mut table, &format!("attentive/{}", mode.name()), &report);
+        passes.push((mode.name().to_string(), report));
+    }
 
+    // Pass 4: full evaluation over v1-dense (the attention baseline).
     let mut control = Client::connect(&addr).expect("control channel");
     control.reload(&full_snapshot).expect("hot reload to full evaluation");
-    let full = loadgen::run(&loadcfg).expect("full pass");
+    let full = loadgen::run(&loadcfg(ClientMode::V1Dense)).expect("full pass");
     assert_eq!(full.answered + full.overloaded, requests as u64, "every request answered");
-    row(&mut table, "full", &full);
+    row(&mut table, "full/v1-dense", &full);
 
     println!("{}", table.render());
     let stats = control.stats().expect("stats");
@@ -115,15 +134,26 @@ fn main() {
         "server totals: {} served, {} batches, early-exit rate {:.3}, {} reload(s)",
         stats.served, stats.batches, stats.early_exit_rate, stats.reloads
     );
-    if att.avg_features() > 0.0 {
+    let v1 = &passes[0].1;
+    let v2b = &passes[2].1;
+    if v1.req_per_s() > 0.0 && v1.avg_features() > 0.0 {
         println!(
-            "features/request: attentive {:.1} vs full {:.1} ({:.1}x attention saving); \
-             wire throughput {:.0} vs {:.0} req/s",
-            att.avg_features(),
+            "wire: v2-binary {:.0} req/s vs v1-dense {:.0} req/s ({:.1}x) at {:.0} vs {:.0} \
+             request bytes; attention: {:.1} vs {:.1} features/request ({:.1}x saving)",
+            v2b.req_per_s(),
+            v1.req_per_s(),
+            v2b.req_per_s() / v1.req_per_s(),
+            v2b.bytes_per_req(),
+            v1.bytes_per_req(),
+            v1.avg_features(),
             full.avg_features(),
-            full.avg_features() / att.avg_features(),
-            att.req_per_s(),
-            full.req_per_s(),
+            full.avg_features() / v1.avg_features(),
         );
     }
+
+    passes.push(("full-v1-dense".to_string(), full));
+    let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let report_json = loadgen::report_to_json(requests, &passes);
+    to_json_file(&report_json, std::path::Path::new(&out)).expect("write bench json");
+    println!("machine-readable report written to {out}");
 }

@@ -309,6 +309,13 @@ pub struct ServerConfig {
     /// Max responses in flight per connection before the reader blocks
     /// (per-connection pipelining bound).
     pub max_pending_per_conn: usize,
+    /// Protocol v2: cap on one binary frame's body length in bytes. A
+    /// corrupt or hostile length prefix beyond this kills the
+    /// connection instead of allocating.
+    pub max_frame_bytes: usize,
+    /// Protocol v2: cap on nonzeros per sparse score request (the wire
+    /// format itself caps at 65535; this may tighten it further).
+    pub max_nnz: usize,
     /// Base RNG seed for the prediction-time coordinate policies.
     pub seed: u64,
 }
@@ -321,6 +328,8 @@ impl Default for ServerConfig {
             max_batch: 16,
             queue: 1024,
             max_pending_per_conn: 64,
+            max_frame_bytes: 1 << 20,
+            max_nnz: u16::MAX as usize,
             seed: 0,
         }
     }
@@ -335,6 +344,8 @@ impl ServerConfig {
             ("max_batch", Json::Num(self.max_batch as f64)),
             ("queue", Json::Num(self.queue as f64)),
             ("max_pending_per_conn", Json::Num(self.max_pending_per_conn as f64)),
+            ("max_frame_bytes", Json::Num(self.max_frame_bytes as f64)),
+            ("max_nnz", Json::Num(self.max_nnz as f64)),
             ("seed", Json::Num(self.seed as f64)),
         ])
     }
@@ -351,6 +362,11 @@ impl ServerConfig {
                 .get("max_pending_per_conn")
                 .and_then(|x| x.as_usize())
                 .unwrap_or(d.max_pending_per_conn),
+            max_frame_bytes: v
+                .get("max_frame_bytes")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(d.max_frame_bytes),
+            max_nnz: v.get("max_nnz").and_then(|x| x.as_usize()).unwrap_or(d.max_nnz),
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
         })
     }
@@ -381,10 +397,19 @@ impl ServerConfig {
             ("max_batch", self.max_batch),
             ("queue", self.queue),
             ("max_pending_per_conn", self.max_pending_per_conn),
+            ("max_frame_bytes", self.max_frame_bytes),
+            ("max_nnz", self.max_nnz),
         ] {
             if v == 0 {
                 return Err(Error::Config(format!("server {name} must be >= 1")));
             }
+        }
+        if self.max_nnz > u16::MAX as usize {
+            return Err(Error::Config(format!(
+                "server max_nnz {} exceeds the wire format's u16 bound {}",
+                self.max_nnz,
+                u16::MAX
+            )));
         }
         Ok(())
     }
@@ -435,6 +460,8 @@ mod tests {
             max_batch: 32,
             queue: 4096,
             max_pending_per_conn: 128,
+            max_frame_bytes: 1 << 16,
+            max_nnz: 2048,
             seed: 42,
         };
         let back = ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
@@ -445,7 +472,17 @@ mod tests {
         assert_eq!(sparse.workers, 4);
         assert_eq!(sparse.listen, ServerConfig::default().listen);
         assert_eq!(sparse.queue, ServerConfig::default().queue);
+        assert_eq!(sparse.max_frame_bytes, 1 << 20);
+        assert_eq!(sparse.max_nnz, u16::MAX as usize);
         sparse.validate().unwrap();
+    }
+
+    #[test]
+    fn server_config_rejects_protocol_knob_abuse() {
+        let cfg = ServerConfig { max_nnz: u16::MAX as usize + 1, ..Default::default() };
+        assert!(cfg.validate().is_err(), "nnz beyond the u16 wire bound");
+        let cfg = ServerConfig { max_frame_bytes: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -89,9 +89,133 @@ impl ModelSnapshot {
     }
 }
 
+/// A scoring payload: dense vector or sparse `(idx, val)` pairs.
+///
+/// The sparse form is the wire protocol v2 request shape and flows
+/// through the hub and the worker loop **without densifying**: the
+/// early-stopped walk visits only the support, so per-request cost
+/// scales with the number of nonzeros, not the model dimensionality.
+#[derive(Debug, Clone)]
+pub enum Features {
+    /// Dense feature vector (length must equal the model dim).
+    Dense(Vec<f64>),
+    /// Sparse pairs. Indices must be strictly increasing (canonical
+    /// form; rejected otherwise by [`Features::validate`]) and values
+    /// finite. Zero coordinates contribute nothing to a linear margin,
+    /// so scoring the support alone is lossless.
+    Sparse {
+        /// Coordinate indices, strictly increasing.
+        idx: Vec<u32>,
+        /// Values at those coordinates, parallel to `idx`.
+        val: Vec<f64>,
+    },
+}
+
+impl From<Vec<f64>> for Features {
+    fn from(features: Vec<f64>) -> Self {
+        Features::Dense(features)
+    }
+}
+
+impl Features {
+    /// Number of stored coordinates (dense: the full length).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Features::Dense(x) => x.len(),
+            Features::Sparse { idx, .. } => idx.len(),
+        }
+    }
+
+    /// Structural validation, independent of any model: parallel array
+    /// lengths, strictly increasing indices (no duplicates), and finite
+    /// values. Both wire parsers (JSON and binary) call this before a
+    /// request can reach the workers.
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            Features::Dense(x) => {
+                if !x.iter().all(|v| v.is_finite()) {
+                    return Err("non-finite feature value".into());
+                }
+            }
+            Features::Sparse { idx, val } => {
+                if idx.len() != val.len() {
+                    return Err(format!(
+                        "sparse idx/val length mismatch: {} vs {}",
+                        idx.len(),
+                        val.len()
+                    ));
+                }
+                if !idx.windows(2).all(|w| w[0] < w[1]) {
+                    return Err("sparse idx must be strictly increasing".into());
+                }
+                if !val.iter().all(|v| v.is_finite()) {
+                    return Err("non-finite feature value".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Check compatibility with a model of dimensionality `dim`.
+    /// Returns `Err((expected, got))` on mismatch; for sparse payloads
+    /// `got` is `max_idx + 1` (the minimum dim that would fit them).
+    /// Scans every index rather than trusting `idx.last()`, so the
+    /// screen is sound even for non-canonical (unsorted) payloads a
+    /// library caller might feed straight into the hub — nothing that
+    /// passes this check can index out of bounds in the worker.
+    pub fn check_dim(&self, dim: usize) -> Result<(), (usize, usize)> {
+        match self {
+            Features::Dense(x) => {
+                if x.len() != dim {
+                    return Err((dim, x.len()));
+                }
+            }
+            Features::Sparse { idx, .. } => {
+                if let Some(&max) = idx.iter().max() {
+                    if max as usize >= dim {
+                        return Err((dim, max as usize + 1));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Materialize a dense vector (tests and diagnostics only — the
+    /// serving path never densifies).
+    pub fn densify(&self, dim: usize) -> Vec<f64> {
+        match self {
+            Features::Dense(x) => x.clone(),
+            Features::Sparse { idx, val } => {
+                let mut out = vec![0.0; dim];
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    if (i as usize) < dim {
+                        out[i as usize] = v;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Sparsify a dense vector: keep entries with `|v| > eps`. The
+    /// client-side converse of [`Features::densify`].
+    pub fn sparsify(features: &[f64], eps: f64) -> Features {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (i, &v) in features.iter().enumerate() {
+            if v.abs() > eps {
+                idx.push(i as u32);
+                val.push(v);
+            }
+        }
+        Features::Sparse { idx, val }
+    }
+}
+
 /// One scoring request (internal envelope).
 struct ScoreRequest {
-    features: Vec<f64>,
+    features: Features,
     respond: SyncSender<ScoreResponse>,
 }
 
@@ -250,12 +374,13 @@ pub struct ServiceHandle {
 }
 
 impl ServiceHandle {
-    /// Score one feature vector, blocking until the result arrives.
-    /// Returns `None` if the service has shut down or the queue is
-    /// persistently full (backpressure).
-    pub fn score(&self, features: Vec<f64>) -> Option<ScoreResponse> {
+    /// Score one feature payload (dense `Vec<f64>` or sparse
+    /// [`Features`]), blocking until the result arrives. Returns `None`
+    /// if the service has shut down or the queue is persistently full
+    /// (backpressure).
+    pub fn score(&self, features: impl Into<Features>) -> Option<ScoreResponse> {
         let (tx, rx) = sync_channel(1);
-        match self.tx.try_send(ScoreRequest { features, respond: tx }) {
+        match self.tx.try_send(ScoreRequest { features: features.into(), respond: tx }) {
             Ok(()) => {}
             Err(TrySendError::Full(req)) => {
                 // Block on a full queue (backpressure) rather than dropping.
@@ -272,9 +397,12 @@ impl ServiceHandle {
     /// server builds its explicit `overloaded` responses on — an admitted
     /// request is always answered (workers drain the queue even during a
     /// handle swap), so the receiver's `recv()` will not hang.
-    pub fn submit(&self, features: Vec<f64>) -> Result<Receiver<ScoreResponse>, SubmitError> {
+    pub fn submit(
+        &self,
+        features: impl Into<Features>,
+    ) -> Result<Receiver<ScoreResponse>, SubmitError> {
         let (tx, rx) = sync_channel(1);
-        match self.tx.try_send(ScoreRequest { features, respond: tx }) {
+        match self.tx.try_send(ScoreRequest { features: features.into(), respond: tx }) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
             Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
@@ -378,19 +506,32 @@ fn worker_loop(
         stats.batches.fetch_add(1, Ordering::Relaxed);
         let dim = model.weights.len();
         for req in batch.drain(..) {
-            let resp = if req.features.len() != dim {
-                ScoreResponse { score: f64::NAN, features_evaluated: 0 }
+            // For sparse payloads "full evaluation" means the whole
+            // support: zero coordinates are skipped losslessly, so both
+            // the walk and the early-exit accounting run against nnz.
+            let (resp, total) = if req.features.check_dim(dim).is_err() {
+                (ScoreResponse { score: f64::NAN, features_evaluated: 0 }, dim)
             } else {
                 let predictor = EarlyStopPredictor::new(&model.boundary);
-                let order = orders.next();
-                let (score, k) =
-                    predictor.predict(&model.weights, &req.features, order, model.var_sn);
-                ScoreResponse { score, features_evaluated: k }
+                let (score, k, total) = match &req.features {
+                    Features::Dense(x) => {
+                        let order = orders.next();
+                        let (s, k) = predictor.predict(&model.weights, x, order, model.var_sn);
+                        (s, k, dim)
+                    }
+                    Features::Sparse { idx, val } => {
+                        let order = orders.next_sparse(&model.weights, idx);
+                        let (s, k) =
+                            predictor.predict_sparse(&model.weights, idx, val, order, model.var_sn);
+                        (s, k, idx.len())
+                    }
+                };
+                (ScoreResponse { score, features_evaluated: k }, total)
             };
             // Dimension-mismatch rejects land in bucket 0 and count as
             // "early exit"; the network front-end screens those out before
             // admission, so served traffic keeps the histogram honest.
-            stats.record(resp.features_evaluated, dim);
+            stats.record(resp.features_evaluated, total);
             let _ = req.respond.send(resp);
         }
     }
@@ -606,7 +747,7 @@ mod tests {
         for _ in 0..10 {
             // Deliberately dim-mismatched: instant to build, and the
             // worker is busy anyway.
-            match h.submit(Vec::new()) {
+            match h.submit(Vec::<f64>::new()) {
                 Ok(rx) => admitted.push(rx),
                 Err(SubmitError::Overloaded) => shed += 1,
                 Err(SubmitError::Closed) => panic!("service alive"),
@@ -620,6 +761,100 @@ mod tests {
         }
         drop(h);
         run.join();
+    }
+
+    #[test]
+    fn sparse_request_scores_support_only() {
+        let dim = 784;
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0).spawn();
+        // 40 nonzeros out of 784: the walk must never exceed the support.
+        let idx: Vec<u32> = (0..40u32).map(|i| i * 19).collect();
+        let val = vec![1.0; 40];
+        let resp = h.score(Features::Sparse { idx, val }).unwrap();
+        assert!(resp.score > 0.0);
+        assert!(resp.features_evaluated <= 40, "took {}", resp.features_evaluated);
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn sparse_scoring_matches_dense_under_full_boundary() {
+        // Sequential policy + Full boundary: the sparse walk must produce
+        // the exact dense dot product (losslessness of the sparse path).
+        let dim = 64;
+        let m = ModelSnapshot {
+            weights: (0..dim).map(|i| (i as f64 * 0.37).sin()).collect(),
+            var_sn: 4.0,
+            boundary: AnyBoundary::Full,
+            policy: CoordinatePolicy::Sequential,
+        };
+        let (h, run) = PredictionService::new(m, 4, 16, 0).spawn();
+        let mut dense = vec![0.0; dim];
+        dense[3] = 0.5;
+        dense[17] = -1.25;
+        dense[40] = 2.0;
+        let sparse = Features::sparsify(&dense, 0.0);
+        let a = h.score(dense).unwrap();
+        let b = h.score(sparse).unwrap();
+        assert!((a.score - b.score).abs() < 1e-12, "dense {} vs sparse {}", a.score, b.score);
+        assert_eq!(b.features_evaluated, 3, "full boundary walks the whole support");
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn sparse_out_of_range_index_yields_nan() {
+        let (h, run) = PredictionService::new(model(16), 4, 16, 0).spawn();
+        let resp = h
+            .score(Features::Sparse { idx: vec![3, 99], val: vec![1.0, 1.0] })
+            .unwrap();
+        assert!(resp.score.is_nan());
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn features_validate_and_round_trip() {
+        let dense = Features::Dense(vec![0.0, 1.5, 0.0, -2.0]);
+        dense.validate().unwrap();
+        let sparse = Features::sparsify(&[0.0, 1.5, 0.0, -2.0], 0.0);
+        sparse.validate().unwrap();
+        assert_eq!(sparse.nnz(), 2);
+        assert_eq!(sparse.densify(4), vec![0.0, 1.5, 0.0, -2.0]);
+        match &sparse {
+            Features::Sparse { idx, val } => {
+                assert_eq!(idx, &[1, 3]);
+                assert_eq!(val, &[1.5, -2.0]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Threshold sparsification drops small entries.
+        let thinned = Features::sparsify(&[0.01, 1.5, -0.02, -2.0], 0.1);
+        assert_eq!(thinned.nnz(), 2);
+
+        // Structural rejections.
+        assert!(Features::Sparse { idx: vec![1], val: vec![1.0, 2.0] }.validate().is_err());
+        assert!(Features::Sparse { idx: vec![2, 2], val: vec![1.0, 2.0] }.validate().is_err());
+        assert!(Features::Sparse { idx: vec![3, 1], val: vec![1.0, 2.0] }.validate().is_err());
+        assert!(Features::Sparse { idx: vec![1], val: vec![f64::NAN] }.validate().is_err());
+        assert!(Features::Dense(vec![1.0, f64::INFINITY]).validate().is_err());
+
+        // Dim checks.
+        assert!(Features::Dense(vec![0.0; 4]).check_dim(4).is_ok());
+        assert_eq!(Features::Dense(vec![0.0; 3]).check_dim(4), Err((4, 3)));
+        assert!(Features::Sparse { idx: vec![3], val: vec![1.0] }.check_dim(4).is_ok());
+        assert_eq!(
+            Features::Sparse { idx: vec![9], val: vec![1.0] }.check_dim(4),
+            Err((4, 10))
+        );
+        // Unsorted garbage (library callers can bypass the wire
+        // parsers): the screen must still catch the out-of-range
+        // middle index, not just trust the last one.
+        assert_eq!(
+            Features::Sparse { idx: vec![9999, 2], val: vec![1.0, 1.0] }.check_dim(784),
+            Err((784, 10_000))
+        );
+        assert!(Features::Sparse { idx: vec![], val: vec![] }.check_dim(4).is_ok());
     }
 
     #[test]

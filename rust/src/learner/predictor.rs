@@ -51,6 +51,43 @@ impl<'b, B: Boundary + ?Sized> EarlyStopPredictor<'b, B> {
         (s, cap)
     }
 
+    /// Sparse variant of [`Self::predict`]: the example is given as
+    /// `(idx, val)` pairs and `order` holds **positions into `idx`**
+    /// (e.g. from [`OrderGenerator::next_sparse`]). Zero coordinates
+    /// contribute nothing to `⟨w, x⟩`, so walking only the support is
+    /// lossless; the stopping context's `total` is the support size —
+    /// per-example cost is O(evaluated) ≤ O(nnz), never O(dim).
+    pub fn predict_sparse(
+        &self,
+        w: &[f64],
+        idx: &[u32],
+        val: &[f64],
+        order: &[usize],
+        var_sn: f64,
+    ) -> (f64, usize) {
+        let n = order.len();
+        let mut ctx = StopContext { evaluated: 0, total: n, theta: 0.0, var_sn };
+        let cap = self.boundary.budget(&ctx).unwrap_or(n).min(n);
+        let mut s = 0.0;
+        if !self.boundary.is_evidence_based() {
+            for &p in &order[..cap] {
+                s += w[idx[p] as usize] * val[p];
+            }
+            return (s, cap);
+        }
+        for (i, &p) in order[..cap].iter().enumerate() {
+            s += w[idx[p] as usize] * val[p];
+            ctx.evaluated = i + 1;
+            if ctx.evaluated < n {
+                let tau = self.boundary.level(&ctx);
+                if s.abs() > tau {
+                    return (s, ctx.evaluated);
+                }
+            }
+        }
+        (s, cap)
+    }
+
     /// Lazy-order variant of [`Self::predict`]: draws coordinates from
     /// the policy generator on demand (O(evaluated) policy cost).
     pub fn predict_lazy(
@@ -131,6 +168,52 @@ mod tests {
         let (s, k) = p.predict(&w, &x, &order, 1.0);
         assert_eq!(k, 5);
         assert!((s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_walk_matches_dense_on_the_support() {
+        // Same boundary, same visiting sequence: the dense walk ordered
+        // support-first must agree with the sparse walk exactly.
+        let n = 32;
+        let w: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64) * 0.1).collect();
+        let mut x = vec![0.0; n];
+        let idx: Vec<u32> = vec![4, 9, 20, 31];
+        let val = vec![0.8, -0.3, 1.1, 0.6];
+        for (&i, &v) in idx.iter().zip(&val) {
+            x[i as usize] = v;
+        }
+        let b = ConstantBoundary::new(0.1);
+        let p = EarlyStopPredictor::new(&b);
+        let sparse_order: Vec<usize> = (0..idx.len()).collect();
+        let (s_sparse, k_sparse) = p.predict_sparse(&w, &idx, &val, &sparse_order, 4.0);
+        // Dense walk visiting the support coordinates first, zeros after.
+        let mut dense_order: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+        dense_order.extend((0..n).filter(|j| !idx.contains(&(*j as u32))));
+        let (s_dense, k_dense) = p.predict(&w, &x, &dense_order, 4.0);
+        if k_sparse < idx.len() {
+            // Early exit happened inside the support: identical walks.
+            assert_eq!(k_dense, k_sparse);
+            assert!((s_dense - s_sparse).abs() < 1e-12);
+        } else {
+            // Sparse capped at nnz; the dense walk's extra zero terms
+            // cannot change the sum.
+            assert!((s_dense - s_sparse).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sparse_budgeted_caps_at_support() {
+        let idx: Vec<u32> = vec![1, 5, 9];
+        let val = vec![1.0, 1.0, 1.0];
+        let w = vec![1.0; 16];
+        let order: Vec<usize> = (0..3).collect();
+        let b = BudgetedBoundary::new(10);
+        let p = EarlyStopPredictor::new(&b);
+        let (s, k) = p.predict_sparse(&w, &idx, &val, &order, 1.0);
+        assert_eq!(k, 3, "budget larger than the support caps at nnz");
+        assert!((s - 3.0).abs() < 1e-12);
+        let (_, k2) = p.predict_sparse(&w, &idx, &val, &order[..0], 1.0);
+        assert_eq!(k2, 0, "empty order evaluates nothing");
     }
 
     #[test]

@@ -24,7 +24,7 @@ use attentive::coordinator::service::{ModelSnapshot, PredictionService};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::synth::SynthDigits;
 use attentive::metrics::export::{curves_to_csv, Table};
-use attentive::server::loadgen::{self, Client, LoadGenConfig};
+use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
 use attentive::server::tcp::TcpServer;
 use attentive::sim::bridge::{simulate_decision_errors, BridgeSimConfig};
 use attentive::sim::stopping::{fit_sqrt, simulate_stopping_times, StoppingSimConfig};
@@ -42,12 +42,17 @@ COMMANDS:
   simulate     [--walks N] [--csv out.csv]
   serve        [--listen ADDR] [--snapshot model.json] [--server-config srv.json]
                [--requests N] [--batch B] [--workers W] [--queue Q]
-               with --listen: JSON-lines TCP server (score/stats/reload/ping ops);
+               with --listen: TCP server (v1 JSON lines; hello {"proto":2}
+               upgrades a connection to v2 binary frames — docs/PROTOCOL.md);
                otherwise: in-process synthetic-traffic benchmark
-  bench-serve  [--addr ADDR] [--requests N] [--connections C] [--pipeline P]
-               [--hard FRAC] [--batch B] [--workers W] [--queue Q]
-               without --addr: spawns a loopback server and compares
-               attentive vs full-evaluation serving on the same traffic
+  bench-serve  [--addr ADDR] [--mode v1-dense|v2-sparse-json|v2-binary]
+               [--requests N] [--connections C] [--pipeline P] [--hard FRAC]
+               [--sparse-eps E] [--batch B] [--workers W] [--queue Q]
+               [--json BENCH_serve.json] [--floors ci/bench_floors.json]
+               without --addr: spawns a loopback server and compares the
+               three wire modes (plus full evaluation) on the same traffic;
+               --json writes the machine-readable report, --floors gates on
+               committed throughput floors (exit 1 on regression)
   init-config  [out.json]
   export-idx   <dir> [--count N] [--seed S]
   help
@@ -289,7 +294,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             cfg.max_batch,
             cfg.queue
         );
-        println!("ops: score / stats / reload / ping — one JSON object per line");
+        println!("ops: score / stats / reload / ping / hello — one JSON object per line");
+        println!("protocol v2: hello {{\"proto\":2}} switches to sparse binary frames");
         server.wait();
         return Ok(());
     }
@@ -334,27 +340,62 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Gate a bench report against committed floors (`ci/bench_floors.json`):
+/// a missing floor key simply does not gate. Returns the violations.
+fn check_bench_floors(report: &Json, floors: &Json) -> Vec<String> {
+    let mut violations = Vec::new();
+    let ratio = report.get("ratio_v2_binary_vs_v1_dense").and_then(|x| x.as_f64());
+    if let Some(min_ratio) =
+        floors.get("v2_binary_vs_v1_dense_min_ratio").and_then(|x| x.as_f64())
+    {
+        match ratio {
+            Some(r) if r >= min_ratio => {}
+            Some(r) => violations.push(format!(
+                "v2-binary is only {r:.2}x v1-dense throughput (floor {min_ratio:.2}x)"
+            )),
+            None => violations.push("report lacks ratio_v2_binary_vs_v1_dense".into()),
+        }
+    }
+    if let Some(min_rps) = floors.get("v2_binary_min_req_per_s").and_then(|x| x.as_f64()) {
+        let rps = report
+            .get("modes")
+            .and_then(|m| m.get("v2-binary"))
+            .and_then(|m| m.get("req_per_s"))
+            .and_then(|x| x.as_f64());
+        match rps {
+            Some(r) if r >= min_rps => {}
+            Some(r) => violations
+                .push(format!("v2-binary {r:.0} req/s below floor {min_rps:.0} req/s")),
+            None => violations.push("report lacks a v2-binary req_per_s entry".into()),
+        }
+    }
+    violations
+}
+
 fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let requests = args.get_parse("requests", 4_000usize).map_err(|e| anyhow::anyhow!(e))?;
     let connections = args.get_parse("connections", 4usize).map_err(|e| anyhow::anyhow!(e))?;
     let pipeline = args.get_parse("pipeline", 8usize).map_err(|e| anyhow::anyhow!(e))?;
     let hard = args.get_parse("hard", 0.5f64).map_err(|e| anyhow::anyhow!(e))?;
+    let sparse_eps = args.get_parse("sparse-eps", 0.05f64).map_err(|e| anyhow::anyhow!(e))?;
 
-    let loadcfg = |addr: String| LoadGenConfig {
+    let loadcfg = |addr: String, mode: ClientMode| LoadGenConfig {
         addr,
         connections,
         requests,
         pipeline,
         hard_fraction: hard,
-        seed: 1,
+        mode,
+        sparse_eps,
+        seed: 1, // same seed every pass -> identical traffic
     };
     let mut table = Table::new(&[
         "serving",
         "req/s",
         "avg feats",
         "p50",
-        "p90",
         "p99",
+        "B/req",
         "answered",
         "shed",
     ]);
@@ -364,56 +405,106 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             format!("{:.0}", r.req_per_s()),
             format!("{:.1}", r.avg_features()),
             format!("{}", r.feature_percentile(0.50)),
-            format!("{}", r.feature_percentile(0.90)),
             format!("{}", r.feature_percentile(0.99)),
+            format!("{:.0}", r.bytes_per_req()),
             format!("{}", r.answered),
             format!("{}", r.overloaded),
         ]);
     };
 
+    let mut passes: Vec<(String, attentive::server::loadgen::LoadReport)> = Vec::new();
+
     if let Some(addr) = args.opt("addr") {
-        // External server: one pass against whatever it serves.
-        let report = loadgen::run(&loadcfg(addr.to_string()))?;
-        row(&mut table, "external", &report);
+        // External server: one pass, on the selected wire mode.
+        let mode = ClientMode::from_name(&args.get("mode", "v1-dense"))
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let report = loadgen::run(&loadcfg(addr.to_string(), mode))?;
+        row(&mut table, mode.name(), &report);
         println!("{}", table.render());
-        return Ok(());
+        passes.push((mode.name().to_string(), report));
+    } else {
+        // Loopback comparison: identical traffic over the three wire
+        // modes against the attentive model, then a v1-dense pass under
+        // full evaluation (the attention baseline), switched via the
+        // hot-reload control channel.
+        let attentive_snapshot = load_or_train_snapshot(args)?;
+        let mut full_snapshot = attentive_snapshot.clone();
+        full_snapshot.boundary = attentive::stst::boundary::AnyBoundary::Full;
+
+        let mut srv_cfg = server_config_from_args(args)?;
+        srv_cfg.listen = "127.0.0.1:0".into();
+        let server = TcpServer::serve(&srv_cfg, attentive_snapshot)?;
+        let addr = server.local_addr().to_string();
+        println!(
+            "loopback server on {addr}: {requests} requests × {} passes ...",
+            ClientMode::ALL.len() + 1
+        );
+
+        for mode in ClientMode::ALL {
+            let report = loadgen::run(&loadcfg(addr.clone(), mode))?;
+            row(&mut table, mode.name(), &report);
+            passes.push((mode.name().to_string(), report));
+        }
+
+        let mut control = Client::connect(&addr)?;
+        control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
+        let full_report = loadgen::run(&loadcfg(addr, ClientMode::V1Dense))?;
+        row(&mut table, "full(v1-dense)", &full_report);
+
+        println!("{}", table.render());
+        let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
+        drop(control);
+        server.shutdown();
+        println!(
+            "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
+            stats.served,
+            stats.early_exit_rate,
+            stats.reloads,
+            stats.accepted_conns,
+            stats.overloaded
+        );
+        let v1 = &passes[0].1;
+        let v2b = &passes[2].1;
+        if v1.req_per_s() > 0.0 {
+            println!(
+                "wire: v2-binary {:.0} req/s vs v1-dense {:.0} req/s ({:.1}x), \
+                 {:.0} vs {:.0} request bytes",
+                v2b.req_per_s(),
+                v1.req_per_s(),
+                v2b.req_per_s() / v1.req_per_s(),
+                v2b.bytes_per_req(),
+                v1.bytes_per_req(),
+            );
+        }
+        if full_report.avg_features() > 0.0 {
+            println!(
+                "attention saves {:.1}x features per request ({:.1} vs {:.1} of 784)",
+                full_report.avg_features() / v1.avg_features().max(1e-9),
+                v1.avg_features(),
+                full_report.avg_features()
+            );
+        }
+        passes.push(("full-v1-dense".to_string(), full_report));
     }
 
-    // Loopback comparison: same traffic, attentive vs full evaluation,
-    // switched via the hot-reload control channel.
-    let attentive_snapshot = load_or_train_snapshot(args)?;
-    let mut full_snapshot = attentive_snapshot.clone();
-    full_snapshot.boundary = attentive::stst::boundary::AnyBoundary::Full;
-
-    let mut srv_cfg = server_config_from_args(args)?;
-    srv_cfg.listen = "127.0.0.1:0".into();
-    let server = TcpServer::serve(&srv_cfg, attentive_snapshot)?;
-    let addr = server.local_addr().to_string();
-    println!("loopback server on {addr}: {requests} requests × 2 passes ...");
-
-    let report = loadgen::run(&loadcfg(addr.clone()))?;
-    row(&mut table, "attentive", &report);
-
-    let mut control = Client::connect(&addr)?;
-    control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
-    let full_report = loadgen::run(&loadcfg(addr))?;
-    row(&mut table, "full", &full_report);
-
-    println!("{}", table.render());
-    let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
-    drop(control);
-    server.shutdown();
-    println!(
-        "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
-        stats.served, stats.early_exit_rate, stats.reloads, stats.accepted_conns, stats.overloaded
-    );
-    if full_report.avg_features() > 0.0 {
-        println!(
-            "attention saves {:.1}x features per request ({:.1} vs {:.1} of 784)",
-            full_report.avg_features() / report.avg_features().max(1e-9),
-            report.avg_features(),
-            full_report.avg_features()
-        );
+    let report_json = loadgen::report_to_json(requests, &passes);
+    if let Some(path) = args.opt("json") {
+        attentive::metrics::export::to_json_file(&report_json, std::path::Path::new(path))?;
+        println!("bench report written to {path}");
+    }
+    if let Some(floors_path) = args.opt("floors") {
+        let text = std::fs::read_to_string(floors_path).context("reading floors file")?;
+        let floors =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("floors {floors_path}: {e}"))?;
+        let violations = check_bench_floors(&report_json, &floors);
+        if violations.is_empty() {
+            println!("bench floors OK ({floors_path})");
+        } else {
+            for v in &violations {
+                eprintln!("FLOOR REGRESSION: {v}");
+            }
+            bail!("{} bench floor(s) violated", violations.len());
+        }
     }
     Ok(())
 }

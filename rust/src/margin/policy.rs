@@ -74,6 +74,10 @@ pub struct OrderGenerator {
     order: Vec<usize>,
     /// scratch for sorting
     keys: Vec<(f64, usize)>,
+    /// scratch: sparse-support visit order (positions into idx/val)
+    sparse: Vec<usize>,
+    /// scratch: cumulative |w| over a sparse support (weight-sampled)
+    sparse_cum: Vec<f64>,
     /// Vose alias table for O(1) weight-sampled draws (rebuilt on refresh)
     alias_prob: Vec<f64>,
     alias_idx: Vec<usize>,
@@ -89,6 +93,8 @@ impl OrderGenerator {
             rng: Rng64::seed_from_u64(seed),
             order: Vec::new(),
             keys: Vec::new(),
+            sparse: Vec::new(),
+            sparse_cum: Vec::new(),
             alias_prob: Vec::new(),
             alias_idx: Vec::new(),
             cursor: 0,
@@ -203,6 +209,58 @@ impl OrderGenerator {
     pub fn order(&mut self, weights: &[f64]) -> &[usize] {
         self.refresh(weights);
         self.next()
+    }
+
+    /// Emit a visit order over the *support* of one sparse example:
+    /// `idx` holds the nonzero coordinate indices, and the returned
+    /// slice holds **positions into `idx`** (length `idx.len()`),
+    /// ordered by the same policy the dense path uses — restricted to
+    /// the support, since zero coordinates contribute nothing to the
+    /// margin and visiting them would waste evaluations. Independent of
+    /// the dense caches built by [`Self::refresh`] (separate scratch),
+    /// so dense and sparse requests can interleave on one generator.
+    ///
+    /// * sequential — positions in natural (ascending-index) order;
+    /// * sorted — positions by `|w[idx[p]]|` descending, ties by position;
+    /// * weight-sampled — `nnz` draws with replacement, `∝ |w[idx[p]]|`
+    ///   (uniform fallback when the support carries no weight mass);
+    /// * permuted — uniform shuffle of the positions.
+    pub fn next_sparse(&mut self, weights: &[f64], idx: &[u32]) -> &[usize] {
+        let m = idx.len();
+        self.sparse.clear();
+        match self.policy {
+            CoordinatePolicy::Sequential => self.sparse.extend(0..m),
+            CoordinatePolicy::SortedByWeight => {
+                self.sparse.extend(0..m);
+                self.sparse.sort_unstable_by(|&a, &b| {
+                    let wa = weights[idx[a] as usize].abs();
+                    let wb = weights[idx[b] as usize].abs();
+                    wb.partial_cmp(&wa).unwrap().then_with(|| a.cmp(&b))
+                });
+            }
+            CoordinatePolicy::WeightSampled => {
+                self.sparse_cum.clear();
+                let mut total = 0.0;
+                for &i in idx {
+                    total += weights[i as usize].abs();
+                    self.sparse_cum.push(total);
+                }
+                for _ in 0..m {
+                    let p = if total > 0.0 {
+                        let u = self.rng.f64() * total;
+                        self.sparse_cum.partition_point(|&c| c <= u).min(m - 1)
+                    } else {
+                        self.rng.below(m)
+                    };
+                    self.sparse.push(p);
+                }
+            }
+            CoordinatePolicy::Permuted => {
+                self.sparse.extend(0..m);
+                self.rng.shuffle(&mut self.sparse);
+            }
+        }
+        &self.sparse
     }
 
     /// Begin lazy per-coordinate iteration for one example. The hot path
@@ -326,6 +384,74 @@ mod tests {
         let order = g.order(&[0.0; 16]).to_vec();
         assert_eq!(order.len(), 16);
         assert!(order.iter().all(|&i| i < 16));
+    }
+
+    #[test]
+    fn sparse_orders_cover_positions_per_policy() {
+        let w = [0.1, -5.0, 2.0, 0.0, 1.0, -0.5];
+        let idx: [u32; 3] = [1, 3, 4]; // support: |w| = 5.0, 0.0, 1.0
+        for policy in CoordinatePolicy::ALL {
+            let mut g = OrderGenerator::new(policy, 9);
+            let order = g.next_sparse(&w, &idx).to_vec();
+            assert_eq!(order.len(), 3, "{policy:?}");
+            assert!(order.iter().all(|&p| p < 3), "{policy:?} out of range: {order:?}");
+        }
+        // Sorted: heaviest support coordinate first.
+        let mut g = OrderGenerator::new(CoordinatePolicy::SortedByWeight, 0);
+        assert_eq!(g.next_sparse(&w, &idx), &[0, 2, 1]);
+        // Sequential: natural position order.
+        let mut g = OrderGenerator::new(CoordinatePolicy::Sequential, 0);
+        assert_eq!(g.next_sparse(&w, &idx), &[0, 1, 2]);
+        // Permuted: a permutation of the positions.
+        let mut g = OrderGenerator::new(CoordinatePolicy::Permuted, 3);
+        let mut o = g.next_sparse(&w, &idx).to_vec();
+        o.sort_unstable();
+        assert_eq!(o, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sparse_weight_sampling_prefers_heavy_support() {
+        let mut w = vec![0.01; 64];
+        w[7] = 10.0;
+        let idx: Vec<u32> = vec![2, 7, 50];
+        let mut g = OrderGenerator::new(CoordinatePolicy::WeightSampled, 5);
+        let mut hits = 0;
+        let mut draws = 0;
+        for _ in 0..200 {
+            for &p in g.next_sparse(&w, &idx) {
+                draws += 1;
+                if p == 1 {
+                    hits += 1; // position 1 = coordinate 7
+                }
+            }
+        }
+        assert_eq!(draws, 600);
+        assert!(hits > 500, "dominant support coordinate drawn {hits}/600");
+        // All-zero support mass falls back to uniform draws.
+        let zero = vec![0.0; 64];
+        let order = g.next_sparse(&zero, &idx).to_vec();
+        assert_eq!(order.len(), 3);
+        assert!(order.iter().all(|&p| p < 3));
+    }
+
+    #[test]
+    fn sparse_order_does_not_clobber_dense_caches() {
+        // Interleaving dense and sparse requests on one generator must
+        // keep the dense sorted order intact (separate scratch).
+        let w = [0.1, -5.0, 2.0, 0.0];
+        let mut g = OrderGenerator::new(CoordinatePolicy::SortedByWeight, 0);
+        g.refresh(&w);
+        let dense_before = g.next().to_vec();
+        let _ = g.next_sparse(&w, &[0, 2]);
+        assert_eq!(g.next(), &dense_before[..]);
+    }
+
+    #[test]
+    fn empty_sparse_support_yields_empty_order() {
+        for policy in CoordinatePolicy::ALL {
+            let mut g = OrderGenerator::new(policy, 1);
+            assert!(g.next_sparse(&[1.0, 2.0], &[]).is_empty(), "{policy:?}");
+        }
     }
 
     #[test]

@@ -17,8 +17,8 @@ use std::sync::mpsc::Receiver;
 use std::sync::Mutex;
 
 use crate::coordinator::service::{
-    ModelSnapshot, PredictionService, RunningService, ScoreResponse, ServiceHandle, StatsSnapshot,
-    SubmitError,
+    Features, ModelSnapshot, PredictionService, RunningService, ScoreResponse, ServiceHandle,
+    StatsSnapshot, SubmitError,
 };
 
 /// Why the hub rejected a request.
@@ -35,6 +35,13 @@ pub enum HubError {
         /// The request's dimensionality.
         got: usize,
     },
+    /// The request pinned a model generation that is no longer serving.
+    StaleGeneration {
+        /// The generation the request asked for.
+        requested: u32,
+        /// The generation actually serving.
+        serving: u32,
+    },
 }
 
 impl std::fmt::Display for HubError {
@@ -44,6 +51,9 @@ impl std::fmt::Display for HubError {
             HubError::Closed => write!(f, "service closed"),
             HubError::DimMismatch { expected, got } => {
                 write!(f, "dimension mismatch: model dim {expected}, request dim {got}")
+            }
+            HubError::StaleGeneration { requested, serving } => {
+                write!(f, "stale generation: requested {requested}, serving {serving}")
             }
         }
     }
@@ -58,7 +68,9 @@ struct HubState {
     retired: Vec<RunningService>,
     /// Dimensionality of the live model.
     dim: usize,
-    /// Reload generation (perturbs the policy RNG seed per generation).
+    /// Serving generation minus one: bumped under the same critical
+    /// section as the handle swap, so each installed model gets a
+    /// unique, monotonic generation even when reloads race.
     epoch: u64,
     /// Totals from generations already joined.
     closed_total: StatsSnapshot,
@@ -68,6 +80,10 @@ struct HubState {
 pub struct ModelHub {
     inner: Mutex<HubState>,
     reloads: AtomicU64,
+    /// Spawn counter salting each worker generation's policy RNG stream
+    /// (independent of `epoch`: spawns that lose a shutdown race still
+    /// consume a salt, which is harmless).
+    spawns: AtomicU64,
     max_batch: usize,
     queue: usize,
     workers: usize,
@@ -96,6 +112,7 @@ impl ModelHub {
                 closed_total: StatsSnapshot::default(),
             }),
             reloads: AtomicU64::new(0),
+            spawns: AtomicU64::new(0),
             max_batch,
             queue,
             workers,
@@ -113,18 +130,64 @@ impl ModelHub {
         self.reloads.load(Ordering::Relaxed)
     }
 
-    /// Non-blocking admission. On success the returned receiver is
-    /// guaranteed to yield exactly one response: admitted requests are
-    /// answered even if a reload retires their generation first.
-    pub fn submit(&self, features: Vec<f64>) -> Result<Receiver<ScoreResponse>, HubError> {
-        let (handle, dim) = {
+    /// Serving model generation, starting at 1 and bumped by every hot
+    /// reload. Exposed on the wire (protocol v2 `hello` and score
+    /// frames) so clients can pin a generation — 0 is reserved there
+    /// for "any generation".
+    pub fn generation(&self) -> u32 {
+        (self.inner.lock().unwrap().epoch as u32).wrapping_add(1)
+    }
+
+    /// Generation and dimensionality of the serving model, read in one
+    /// critical section — the `hello` handshake advertises these as
+    /// one snapshot, so they must not tear across a concurrent reload.
+    pub fn serving_info(&self) -> (u32, usize) {
+        let st = self.inner.lock().unwrap();
+        ((st.epoch as u32).wrapping_add(1), st.dim)
+    }
+
+    /// Non-blocking admission of a dense or sparse payload. On success
+    /// the returned receiver is guaranteed to yield exactly one
+    /// response: admitted requests are answered even if a reload
+    /// retires their generation first. Structural validity (sorted
+    /// indices, finite values) is the wire parsers' job; the hub
+    /// screens dimensions only.
+    pub fn submit(
+        &self,
+        features: impl Into<Features>,
+    ) -> Result<Receiver<ScoreResponse>, HubError> {
+        self.submit_pinned(features, 0).map(|(rx, _)| rx)
+    }
+
+    /// [`Self::submit`] with protocol-v2 generation pinning: `pin` = 0
+    /// admits on any generation; a nonzero `pin` is rejected with
+    /// [`HubError::StaleGeneration`] unless it matches the serving
+    /// generation. The handle and its generation are captured in one
+    /// critical section, so the returned generation is the one whose
+    /// workers answer the request — even if a reload lands before the
+    /// request reaches their queue, a retired generation drains what it
+    /// admitted.
+    pub fn submit_pinned(
+        &self,
+        features: impl Into<Features>,
+        pin: u32,
+    ) -> Result<(Receiver<ScoreResponse>, u32), HubError> {
+        let features = features.into();
+        let (handle, dim, gen) = {
             let st = self.inner.lock().unwrap();
-            (st.handle.clone().ok_or(HubError::Closed)?, st.dim)
+            (
+                st.handle.clone().ok_or(HubError::Closed)?,
+                st.dim,
+                (st.epoch as u32).wrapping_add(1),
+            )
         };
-        if features.len() != dim {
-            return Err(HubError::DimMismatch { expected: dim, got: features.len() });
+        if pin != 0 && pin != gen {
+            return Err(HubError::StaleGeneration { requested: pin, serving: gen });
         }
-        handle.submit(features).map_err(|e| match e {
+        if let Err((expected, got)) = features.check_dim(dim) {
+            return Err(HubError::DimMismatch { expected, got });
+        }
+        handle.submit(features).map(|rx| (rx, gen)).map_err(|e| match e {
             SubmitError::Overloaded => HubError::Overloaded,
             SubmitError::Closed => HubError::Closed,
         })
@@ -133,17 +196,18 @@ impl ModelHub {
     /// Hot-swap the serving model. Spawns the new generation outside the
     /// lock, then swaps the handle atomically; returns the new
     /// dimensionality. In-flight requests finish on the old generation.
+    /// The generation number is bumped inside the swap's critical
+    /// section, so concurrent reloads each install a distinct,
+    /// monotonic generation (any connection can be a control channel).
     pub fn reload(&self, snapshot: ModelSnapshot) -> Result<usize, HubError> {
         let dim = snapshot.weights.len();
-        let epoch = {
-            let st = self.inner.lock().unwrap();
-            if st.handle.is_none() {
-                return Err(HubError::Closed);
-            }
-            st.epoch + 1
-        };
-        // Distinct policy RNG stream per generation.
-        let seed = self.seed ^ epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        if self.inner.lock().unwrap().handle.is_none() {
+            return Err(HubError::Closed);
+        }
+        // Distinct policy RNG stream per spawned generation; its own
+        // counter, so racing reloads never share a stream.
+        let salt = self.spawns.fetch_add(1, Ordering::Relaxed) + 1;
+        let seed = self.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let (handle, run) = PredictionService::new(snapshot, self.max_batch, self.queue, seed)
             .with_workers(self.workers)
             .spawn();
@@ -161,7 +225,7 @@ impl ModelHub {
         }
         st.current = Some(run);
         st.dim = dim;
-        st.epoch = epoch;
+        st.epoch += 1;
         drop(st);
         self.reloads.fetch_add(1, Ordering::Relaxed);
         Ok(dim)
@@ -268,6 +332,47 @@ mod tests {
         let resp = hub.submit(vec![1.0; dim]).unwrap().recv().unwrap();
         assert!(resp.score < 0.0);
         assert_eq!(hub.stats().served, 101);
+    }
+
+    #[test]
+    fn sparse_submissions_screen_dimensions_and_answer() {
+        let hub = ModelHub::new(snapshot(16, 1.0), 4, 64, 1, 0);
+        assert_eq!(hub.generation(), 1);
+        let rx = hub
+            .submit(Features::Sparse { idx: vec![0, 7, 15], val: vec![1.0, 1.0, 1.0] })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert!(resp.score > 0.0);
+        assert!(resp.features_evaluated <= 3);
+        match hub.submit(Features::Sparse { idx: vec![16], val: vec![1.0] }) {
+            Err(HubError::DimMismatch { expected: 16, got: 17 }) => {}
+            other => panic!("expected dim mismatch, got {other:?}"),
+        }
+        hub.reload(snapshot(16, -1.0)).unwrap();
+        assert_eq!(hub.generation(), 2);
+    }
+
+    #[test]
+    fn pinned_submissions_track_generations() {
+        let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
+        // Pin 0 = any; the returned generation is the serving one.
+        let (rx, gen) = hub.submit_pinned(vec![1.0; 8], 0).unwrap();
+        assert_eq!(gen, 1);
+        assert!(rx.recv().unwrap().score > 0.0);
+        // Matching pin admits; mismatched pin sheds with both numbers.
+        assert!(hub.submit_pinned(vec![1.0; 8], 1).is_ok());
+        match hub.submit_pinned(vec![1.0; 8], 9) {
+            Err(HubError::StaleGeneration { requested: 9, serving: 1 }) => {}
+            other => panic!("expected stale generation, got {other:?}"),
+        }
+        hub.reload(snapshot(8, -1.0)).unwrap();
+        match hub.submit_pinned(vec![1.0; 8], 1) {
+            Err(HubError::StaleGeneration { requested: 1, serving: 2 }) => {}
+            other => panic!("expected stale generation after reload, got {other:?}"),
+        }
+        let (rx, gen) = hub.submit_pinned(vec![1.0; 8], 2).unwrap();
+        assert_eq!(gen, 2);
+        assert!(rx.recv().unwrap().score < 0.0, "pinned to the reloaded model");
     }
 
     #[test]

@@ -4,42 +4,138 @@
 //!
 //! * [`Client`] — a synchronous request/response connection, used as the
 //!   control channel (ping / stats / reload) and for one-off scoring.
+//!   Starts in v1 JSON-lines mode; [`Client::negotiate`] upgrades it to
+//!   the v2 binary framing with transparent fallback on old servers.
 //! * [`run`] — the load generator proper: `connections` client threads
 //!   drive the server over loopback (or any address) with a configurable
-//!   pipelining window and an easy/hard traffic mix — clean synthetic
+//!   pipelining window, an easy/hard traffic mix — clean synthetic
 //!   digits exit early, heavily-noised ones force deep evaluations — and
-//!   the merged [`LoadReport`] carries per-request features-touched
-//!   counts for exact percentile reporting.
+//!   a selectable [`ClientMode`] (v1 dense JSON, v2 sparse JSON, or v2
+//!   binary frames). The merged [`LoadReport`] carries per-request
+//!   features-touched counts for exact percentile reporting plus wire
+//!   byte totals for cost-per-request comparisons.
 //!
 //! Traffic is 784-dimensional digit imagery (the paper's MNIST shape);
 //! point it at a server that serves a 784-dim model.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
-use crate::coordinator::service::ModelSnapshot;
+use crate::coordinator::service::{Features, ModelSnapshot};
 use crate::data::synth::{SynthConfig, SynthDigits};
 use crate::error::{Error, Result};
-use crate::server::protocol::{Request, Response, StatsReport};
+use crate::server::frame::{ErrorCode, Frame, FrameError};
+use crate::server::protocol::{Request, Response, StatsReport, PROTO_V2};
 use crate::util::rng::Rng64;
 
-/// A synchronous JSON-lines client connection.
+/// Frame-length cap the client applies to server responses.
+const CLIENT_MAX_FRAME: usize = 1 << 20;
+
+/// Counts raw bytes pulled off a socket (sits under the `BufReader`).
+struct CountingReader<R> {
+    inner: R,
+    bytes: u64,
+}
+
+impl<R> CountingReader<R> {
+    fn new(inner: R) -> Self {
+        Self { inner, bytes: 0 }
+    }
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.bytes += n as u64;
+        Ok(n)
+    }
+}
+
+/// A synchronous client connection (v1 JSON lines until negotiated up).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    proto: u32,
 }
 
 impl Client {
-    /// Connect to a serving front-end.
+    /// Connect to a serving front-end (v1 JSON-lines mode).
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).map_err(|e| Error::io(addr, e))?;
         let read_half = stream.try_clone().map_err(|e| Error::io(addr, e))?;
-        Ok(Client { reader: BufReader::new(read_half), writer: BufWriter::new(stream) })
+        Ok(Client { reader: BufReader::new(read_half), writer: BufWriter::new(stream), proto: 1 })
     }
 
-    /// Send one request and wait for its response.
+    /// The protocol version this connection currently speaks.
+    pub fn proto(&self) -> u32 {
+        self.proto
+    }
+
+    /// Negotiate protocol v2 (binary frames). Returns the granted
+    /// version: 2 on success, 1 when the server declines or predates
+    /// the handshake (transparent fallback — the connection keeps
+    /// working in JSON-lines mode either way).
+    pub fn negotiate(&mut self) -> Result<u32> {
+        if self.proto >= PROTO_V2 {
+            return Ok(self.proto);
+        }
+        let line = Request::Hello { proto: PROTO_V2 }.to_line();
+        self.writer
+            .write_all(line.as_bytes())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| Error::io("<client write>", e))?;
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).map_err(|e| Error::io("<client read>", e))?;
+        if n == 0 {
+            return Err(Error::format("hello reply", "connection closed"));
+        }
+        match Response::parse(reply.trim()).map_err(|e| Error::format("hello reply", e))? {
+            Response::Hello { proto, .. } if proto >= PROTO_V2 => {
+                self.proto = PROTO_V2;
+                Ok(PROTO_V2)
+            }
+            // Declined (proto 1) or a pre-handshake server answering
+            // "unknown op": stay on JSON lines.
+            Response::Hello { .. } | Response::Error { .. } => Ok(1),
+            other => Err(Error::format("hello reply", format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Read one binary frame and lift it into the JSON response type.
+    fn read_frame_response(&mut self) -> Result<Response> {
+        match Frame::read_from(&mut self.reader, CLIENT_MAX_FRAME) {
+            Err(e) => Err(Error::format("server frame", e.to_string())),
+            Ok(Frame::JsonResp(doc)) => {
+                Response::parse(doc.trim()).map_err(|e| Error::format("server reply", e))
+            }
+            Ok(Frame::Score { score, evaluated, .. }) => Ok(Response::Score {
+                id: None,
+                score,
+                features_evaluated: evaluated as usize,
+            }),
+            Ok(Frame::Error { code, retryable, msg }) => Ok(Response::Error {
+                id: None,
+                error: if msg.is_empty() { code.name().to_string() } else { msg },
+                retryable,
+            }),
+            Ok(other) => {
+                Err(Error::format("server frame", format!("unexpected frame {other:?}")))
+            }
+        }
+    }
+
+    /// Send one request and wait for its response (on a v2 connection
+    /// the request rides a `JSON_REQ` envelope frame).
     pub fn call(&mut self, req: &Request) -> Result<Response> {
+        if self.proto >= PROTO_V2 {
+            let frame = Frame::JsonReq(req.to_json().to_string_compact()).encode();
+            self.writer
+                .write_all(&frame)
+                .and_then(|()| self.writer.flush())
+                .map_err(|e| Error::io("<client write>", e))?;
+            return self.read_frame_response();
+        }
         let line = req.to_line();
         self.writer
             .write_all(line.as_bytes())
@@ -61,9 +157,37 @@ impl Client {
         }
     }
 
-    /// Score one feature vector.
+    /// Score one dense feature vector.
     pub fn score(&mut self, features: Vec<f64>) -> Result<Response> {
-        self.call(&Request::Score { id: None, features })
+        self.call(&Request::Score { id: None, features: Features::Dense(features) })
+    }
+
+    /// Score one sparse payload. On a v2 connection this is a native
+    /// `SCORE_SPARSE` frame (`gen` pins a model generation, 0 = any);
+    /// on v1 it falls back to the sparse JSON form — which cannot carry
+    /// a pin, so a nonzero `gen` on a v1 connection is an error rather
+    /// than a silently dropped guarantee.
+    pub fn score_sparse(&mut self, idx: Vec<u32>, val: Vec<f64>, gen: u32) -> Result<Response> {
+        if self.proto < PROTO_V2 && gen != 0 {
+            return Err(Error::format(
+                "score_sparse",
+                "generation pinning needs protocol v2 (call negotiate() first)",
+            ));
+        }
+        if self.proto >= PROTO_V2 {
+            let idx16: Vec<u16> = idx
+                .iter()
+                .map(|&i| u16::try_from(i))
+                .collect::<std::result::Result<_, _>>()
+                .map_err(|_| Error::format("score_sparse", "idx exceeds the u16 wire bound"))?;
+            let frame = Frame::ScoreSparse { gen, idx: idx16, val }.encode();
+            self.writer
+                .write_all(&frame)
+                .and_then(|()| self.writer.flush())
+                .map_err(|e| Error::io("<client write>", e))?;
+            return self.read_frame_response();
+        }
+        self.call(&Request::Score { id: None, features: Features::Sparse { idx, val } })
     }
 
     /// Fetch server statistics.
@@ -84,6 +208,43 @@ impl Client {
     }
 }
 
+/// Which wire the load generator drives the server over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClientMode {
+    /// v1 dense JSON lines (`{"op":"score","features":[...]}`).
+    #[default]
+    V1Dense,
+    /// v2 sparse JSON form over JSON lines (`{"idx":[...],"val":[...]}`).
+    V2SparseJson,
+    /// v2 binary frames after a `hello` handshake (`SCORE_SPARSE`).
+    V2Binary,
+}
+
+impl ClientMode {
+    /// All modes, for sweeps and benches.
+    pub const ALL: [ClientMode; 3] =
+        [ClientMode::V1Dense, ClientMode::V2SparseJson, ClientMode::V2Binary];
+
+    /// Kebab-case name (CLI flag value and bench row label).
+    pub fn name(self) -> &'static str {
+        match self {
+            ClientMode::V1Dense => "v1-dense",
+            ClientMode::V2SparseJson => "v2-sparse-json",
+            ClientMode::V2Binary => "v2-binary",
+        }
+    }
+
+    /// Parse the kebab-case name.
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "v1-dense" => Ok(ClientMode::V1Dense),
+            "v2-sparse-json" => Ok(ClientMode::V2SparseJson),
+            "v2-binary" => Ok(ClientMode::V2Binary),
+            other => Err(format!("unknown client mode {other:?}")),
+        }
+    }
+}
+
 /// Load-generation parameters.
 #[derive(Debug, Clone)]
 pub struct LoadGenConfig {
@@ -98,6 +259,12 @@ pub struct LoadGenConfig {
     /// Fraction of requests rendered with heavy noise (hard inputs that
     /// defeat the early exit); the rest are clean (easy).
     pub hard_fraction: f64,
+    /// Wire mode (see [`ClientMode`]).
+    pub mode: ClientMode,
+    /// Sparsification threshold for the sparse modes: entries with
+    /// `|v| <= eps` are dropped client-side. 0.05 lands synthetic digits
+    /// near MNIST density (~150 of 784 nonzeros).
+    pub sparse_eps: f64,
     /// Base RNG seed (per-connection streams are derived from it).
     pub seed: u64,
 }
@@ -110,6 +277,8 @@ impl Default for LoadGenConfig {
             requests: 1_000,
             pipeline: 8,
             hard_fraction: 0.5,
+            mode: ClientMode::V1Dense,
+            sparse_eps: 0.05,
             seed: 0,
         }
     }
@@ -128,6 +297,10 @@ pub struct LoadReport {
     pub errors: u64,
     /// Sum of features touched over answered requests.
     pub total_features: u64,
+    /// Request bytes written to the wire (payload cost per mode).
+    pub bytes_sent: u64,
+    /// Response bytes read from the wire.
+    pub bytes_recv: u64,
     /// Wall-clock seconds (max over connections).
     pub elapsed_s: f64,
     /// Features touched per answered request (for exact percentiles).
@@ -160,6 +333,11 @@ impl LoadReport {
         sorted[idx]
     }
 
+    /// Mean request bytes written per sent request.
+    pub fn bytes_per_req(&self) -> f64 {
+        if self.sent == 0 { 0.0 } else { self.bytes_sent as f64 / self.sent as f64 }
+    }
+
     /// Fold another connection's report into this one.
     pub fn merge(&mut self, other: &LoadReport) {
         self.sent += other.sent;
@@ -167,9 +345,57 @@ impl LoadReport {
         self.overloaded += other.overloaded;
         self.errors += other.errors;
         self.total_features += other.total_features;
+        self.bytes_sent += other.bytes_sent;
+        self.bytes_recv += other.bytes_recv;
         self.elapsed_s = self.elapsed_s.max(other.elapsed_s);
         self.features.extend_from_slice(&other.features);
     }
+}
+
+/// Machine-readable summary of named load-generation passes — the
+/// payload of `BENCH_serve.json`, consumed by CI's bench-smoke gate.
+/// When both a `v1-dense` and a `v2-binary` pass are present, the
+/// top-level `ratio_v2_binary_vs_v1_dense` records the throughput
+/// multiple the protocol-v2 work bought.
+pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut modes = Vec::new();
+    for (name, r) in passes {
+        modes.push((
+            name.clone(),
+            Json::obj([
+                ("req_per_s", Json::Num(r.req_per_s())),
+                ("avg_features", Json::Num(r.avg_features())),
+                ("features_p50", Json::Num(r.feature_percentile(0.50) as f64)),
+                ("features_p90", Json::Num(r.feature_percentile(0.90) as f64)),
+                ("features_p99", Json::Num(r.feature_percentile(0.99) as f64)),
+                ("answered", Json::Num(r.answered as f64)),
+                ("overloaded", Json::Num(r.overloaded as f64)),
+                ("errors", Json::Num(r.errors as f64)),
+                ("bytes_sent", Json::Num(r.bytes_sent as f64)),
+                ("bytes_recv", Json::Num(r.bytes_recv as f64)),
+                ("bytes_per_req", Json::Num(r.bytes_per_req())),
+                ("elapsed_s", Json::Num(r.elapsed_s)),
+            ]),
+        ))
+    }
+    let find = |mode: ClientMode| {
+        passes.iter().find(|(name, _)| name == mode.name()).map(|(_, r)| r)
+    };
+    let mut pairs = vec![
+        ("bench", Json::Str("serve_throughput".into())),
+        ("requests", Json::Num(requests as f64)),
+        ("modes", Json::Obj(modes.into_iter().collect())),
+    ];
+    if let (Some(v1), Some(v2)) = (find(ClientMode::V1Dense), find(ClientMode::V2Binary)) {
+        if v1.req_per_s() > 0.0 {
+            pairs.push((
+                "ratio_v2_binary_vs_v1_dense",
+                Json::Num(v2.req_per_s() / v1.req_per_s()),
+            ));
+        }
+    }
+    Json::obj(pairs)
 }
 
 /// Renderer config for the hard (heavily-noised) traffic class.
@@ -200,6 +426,35 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
     Ok(merged)
 }
 
+/// Encode one score request on the configured wire.
+fn encode_request(cfg: &LoadGenConfig, id: u64, features: Vec<f64>) -> Vec<u8> {
+    match cfg.mode {
+        ClientMode::V1Dense => Request::Score { id: Some(id), features: Features::Dense(features) }
+            .to_line()
+            .into_bytes(),
+        ClientMode::V2SparseJson => Request::Score {
+            id: Some(id),
+            features: Features::sparsify(&features, cfg.sparse_eps),
+        }
+        .to_line()
+        .into_bytes(),
+        ClientMode::V2Binary => {
+            let Features::Sparse { idx, val } = Features::sparsify(&features, cfg.sparse_eps)
+            else {
+                unreachable!("sparsify always returns the sparse variant")
+            };
+            // Loadgen traffic is 784-dim digit imagery, far inside the
+            // u16 wire bound — checked anyway so a future traffic
+            // generator can't silently wrap indices.
+            let idx = idx
+                .into_iter()
+                .map(|i| u16::try_from(i).expect("loadgen payload index exceeds the u16 wire bound"))
+                .collect();
+            Frame::ScoreSparse { gen: 0, idx, val }.encode()
+        }
+    }
+}
+
 /// One connection's worth of traffic: keep up to `pipeline` requests in
 /// flight, count every response class.
 fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadReport> {
@@ -209,8 +464,31 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     }
     let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
     let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
-    let mut reader = BufReader::new(read_half);
+    let mut reader = BufReader::new(CountingReader::new(read_half));
     let mut writer = BufWriter::new(stream);
+    let mut line = String::new();
+
+    // v2-binary negotiates its framing before any traffic; this driver
+    // targets our own server, so a declined handshake is an error, not
+    // a fallback.
+    if cfg.mode == ClientMode::V2Binary {
+        let hello = Request::Hello { proto: PROTO_V2 }.to_line();
+        writer
+            .write_all(hello.as_bytes())
+            .and_then(|()| writer.flush())
+            .map_err(|e| Error::io("<loadgen hello>", e))?;
+        report.bytes_sent += hello.len() as u64;
+        let bytes = reader.read_line(&mut line).map_err(|e| Error::io("<loadgen hello>", e))?;
+        if bytes == 0 {
+            return Err(Error::format("loadgen hello", "connection closed"));
+        }
+        match Response::parse(line.trim()) {
+            Ok(Response::Hello { proto, .. }) if proto >= PROTO_V2 => {}
+            other => {
+                return Err(Error::format("loadgen hello", format!("not granted v2: {other:?}")))
+            }
+        }
+    }
 
     let base = cfg.seed.wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let mut clean = SynthDigits::new(base);
@@ -220,7 +498,6 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     let t0 = Instant::now();
     let mut next = 0usize;
     let mut received = 0usize;
-    let mut line = String::new();
     while received < n {
         // Fill the pipelining window.
         let in_flight = next - received;
@@ -231,10 +508,9 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
             } else {
                 clean.render(digit)
             };
-            let req = Request::Score { id: Some(next as u64), features };
-            writer
-                .write_all(req.to_line().as_bytes())
-                .map_err(|e| Error::io("<loadgen write>", e))?;
+            let bytes = encode_request(cfg, next as u64, features);
+            writer.write_all(&bytes).map_err(|e| Error::io("<loadgen write>", e))?;
+            report.bytes_sent += bytes.len() as u64;
             report.sent += 1;
             next += 1;
             if next < n && next - received < cfg.pipeline {
@@ -243,22 +519,50 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
             writer.flush().map_err(|e| Error::io("<loadgen flush>", e))?;
         }
         // Window full (or everything sent): read one response.
-        line.clear();
-        let bytes = reader.read_line(&mut line).map_err(|e| Error::io("<loadgen read>", e))?;
-        if bytes == 0 {
-            break; // server closed on us; report what we have
-        }
-        received += 1;
-        match Response::parse(line.trim()) {
-            Ok(Response::Score { features_evaluated, .. }) => {
-                report.answered += 1;
-                report.total_features += features_evaluated as u64;
-                report.features.push(features_evaluated as u32);
+        if cfg.mode == ClientMode::V2Binary {
+            match Frame::read_from(&mut reader, CLIENT_MAX_FRAME) {
+                Err(FrameError::Eof) => break, // server closed; report what we have
+                Err(_) => {
+                    // Framing lost: nothing more on this stream is
+                    // decodable.
+                    report.errors += 1;
+                    break;
+                }
+                Ok(frame) => {
+                    received += 1;
+                    match frame {
+                        Frame::Score { evaluated, .. } => {
+                            report.answered += 1;
+                            report.total_features += evaluated as u64;
+                            report.features.push(evaluated);
+                        }
+                        Frame::Error { code: ErrorCode::Overloaded, .. } => {
+                            report.overloaded += 1
+                        }
+                        _ => report.errors += 1,
+                    }
+                }
             }
-            Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
-            _ => report.errors += 1,
+        } else {
+            line.clear();
+            let bytes =
+                reader.read_line(&mut line).map_err(|e| Error::io("<loadgen read>", e))?;
+            if bytes == 0 {
+                break; // server closed on us; report what we have
+            }
+            received += 1;
+            match Response::parse(line.trim()) {
+                Ok(Response::Score { features_evaluated, .. }) => {
+                    report.answered += 1;
+                    report.total_features += features_evaluated as u64;
+                    report.features.push(features_evaluated as u32);
+                }
+                Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
+                _ => report.errors += 1,
+            }
         }
     }
+    report.bytes_recv = reader.get_ref().bytes;
     report.elapsed_s = t0.elapsed().as_secs_f64();
     Ok(report)
 }
@@ -275,6 +579,8 @@ mod tests {
             overloaded: 1,
             errors: 0,
             total_features: 900,
+            bytes_sent: 1_000,
+            bytes_recv: 500,
             elapsed_s: 2.0,
             features: vec![100; 9],
         };
@@ -284,15 +590,67 @@ mod tests {
             overloaded: 0,
             errors: 0,
             total_features: 100,
+            bytes_sent: 200,
+            bytes_recv: 100,
             elapsed_s: 1.0,
             features: vec![20; 5],
         };
         a.merge(&b);
         assert_eq!(a.sent, 15);
         assert_eq!(a.answered, 14);
+        assert_eq!(a.bytes_sent, 1_200);
+        assert_eq!(a.bytes_recv, 600);
         assert_eq!(a.elapsed_s, 2.0, "merged elapsed is the max");
         assert!((a.avg_features() - 1000.0 / 14.0).abs() < 1e-9);
         assert!((a.req_per_s() - 15.0 / 2.0).abs() < 1e-9);
+        assert!((a.bytes_per_req() - 80.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn client_mode_names_round_trip() {
+        for mode in ClientMode::ALL {
+            assert_eq!(ClientMode::from_name(mode.name()).unwrap(), mode);
+        }
+        assert!(ClientMode::from_name("v3-quantum").is_err());
+        assert_eq!(ClientMode::default(), ClientMode::V1Dense);
+    }
+
+    #[test]
+    fn request_encodings_differ_by_mode() {
+        // Full-precision values like real pixel traffic: JSON floats
+        // serialize at ~17 chars, which is what the binary frame beats.
+        let features: Vec<f64> = (0..784)
+            .map(|i| if i % 5 == 0 { 0.1234567890123 + i as f64 * 1e-7 } else { 0.0 })
+            .collect();
+        let cfg = |mode: ClientMode| LoadGenConfig { mode, ..Default::default() };
+        let dense = encode_request(&cfg(ClientMode::V1Dense), 0, features.clone());
+        let sparse_json = encode_request(&cfg(ClientMode::V2SparseJson), 0, features.clone());
+        let binary = encode_request(&cfg(ClientMode::V2Binary), 0, features.clone());
+        assert!(
+            sparse_json.len() < dense.len(),
+            "sparse JSON ({}) must undercut dense JSON ({})",
+            sparse_json.len(),
+            dense.len()
+        );
+        assert!(
+            binary.len() < sparse_json.len(),
+            "binary ({}) must undercut sparse JSON ({})",
+            binary.len(),
+            sparse_json.len()
+        );
+        // The binary encoding is an exact frame: 4 (len) + 1 (op) +
+        // 4 (gen) + 2 (nnz) + 10 per pair.
+        let nnz = features.iter().filter(|v| v.abs() > 0.05).count();
+        assert_eq!(nnz, 157);
+        assert_eq!(binary.len(), 11 + 10 * nnz);
+        // Sparse modes parse back to the same support.
+        let parsed = Request::parse(std::str::from_utf8(&sparse_json).unwrap().trim()).unwrap();
+        match parsed {
+            Request::Score { features: Features::Sparse { idx, .. }, .. } => {
+                assert_eq!(idx.len(), nnz)
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
     }
 
     #[test]

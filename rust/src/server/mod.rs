@@ -6,9 +6,14 @@
 //! serving-latency mechanism. This module puts the early-stopped
 //! predictor behind a wire so it can serve real traffic:
 //!
-//! * [`protocol`] — the JSON-lines request/response wire format (one
-//!   compact JSON document per line, std-only, human-debuggable with
-//!   `nc`).
+//! * [`protocol`] — the JSON request/response wire format (one compact
+//!   JSON document per line, std-only, human-debuggable with `nc`),
+//!   including the v2 sparse score form (`{"idx":[...],"val":[...]}`)
+//!   and the `hello` framing negotiation.
+//! * [`frame`] — the protocol-v2 length-prefixed binary framing
+//!   (sparse score frames at ~10 bytes/nonzero plus JSON envelope
+//!   frames for control ops), negotiated per connection with
+//!   transparent fallback to v1 JSON lines. See `docs/PROTOCOL.md`.
 //! * [`hub`] — [`hub::ModelHub`]: the swappable model layer. Wraps
 //!   [`crate::coordinator::service::PredictionService`] and supports
 //!   **hot snapshot reload**: a new worker generation is spawned, the
@@ -45,12 +50,14 @@
 //! server.wait();
 //! ```
 
+pub mod frame;
 pub mod hub;
 pub mod loadgen;
 pub mod protocol;
 pub mod tcp;
 
+pub use frame::{ErrorCode, Frame};
 pub use hub::ModelHub;
-pub use loadgen::{Client, LoadGenConfig, LoadReport};
+pub use loadgen::{Client, ClientMode, LoadGenConfig, LoadReport};
 pub use protocol::{Request, Response, StatsReport};
 pub use tcp::TcpServer;

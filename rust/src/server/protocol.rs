@@ -1,17 +1,30 @@
-//! JSON-lines wire protocol for the serving front-end.
+//! JSON wire protocol for the serving front-end, plus the protocol-v2
+//! handshake.
 //!
 //! One compact JSON document per `\n`-terminated line, in both
 //! directions. Std-only and deliberately boring: debuggable with `nc`,
 //! parseable by any language, and friendly to line-oriented tooling.
+//! See `docs/PROTOCOL.md` for the full spec (including the binary
+//! framing in [`crate::server::frame`]).
 //!
 //! Requests:
 //!
 //! ```text
-//! {"op":"score","features":[0.0,0.5,...],"id":7}   // id optional
+//! {"op":"score","features":[0.0,0.5,...],"id":7}   // dense; id optional
+//! {"op":"score","idx":[3,17,40],"val":[0.5,-1.2,2.0]}  // sparse (v2 form)
+//! {"op":"hello","proto":2}                         // framing negotiation
 //! {"op":"stats"}
 //! {"op":"reload","snapshot":{...ModelSnapshot...}}
 //! {"op":"ping"}
 //! ```
+//!
+//! The sparse form carries strictly increasing `idx` with parallel
+//! finite `val` and flows through the server **without densifying** —
+//! the evaluator walks only the support. `hello` negotiates the framing
+//! for the rest of the connection: asking for `"proto":2` switches both
+//! directions to the length-prefixed binary frames of
+//! [`crate::server::frame`]; anything else stays on JSON lines, so v1
+//! clients that never send `hello` are untouched.
 //!
 //! Responses always carry `"ok"`; errors carry `"error"` plus
 //! `"retryable"` (`true` for `overloaded` shed responses, which the
@@ -19,6 +32,7 @@
 //!
 //! ```text
 //! {"ok":true,"op":"score","id":7,"score":1.25,"features_evaluated":34}
+//! {"ok":true,"op":"hello","proto":2,"gen":1,"dim":784}
 //! {"ok":true,"op":"stats", ...StatsReport...}
 //! {"ok":true,"op":"reload","dim":784}
 //! {"ok":true,"op":"pong"}
@@ -29,18 +43,26 @@
 //! can pipeline without correlating ids (ids are still echoed for
 //! clients that want them).
 
-use crate::coordinator::service::ModelSnapshot;
+use crate::coordinator::service::{Features, ModelSnapshot};
 use crate::util::json::Json;
+
+/// Highest protocol version this build speaks.
+pub const PROTO_V2: u32 = 2;
 
 /// A client → server message.
 #[derive(Debug, Clone)]
 pub enum Request {
-    /// Score one feature vector.
+    /// Negotiate the connection's framing (`proto` = requested version).
+    Hello {
+        /// Requested protocol version (1 = JSON lines, 2 = binary frames).
+        proto: u32,
+    },
+    /// Score one feature payload (dense or sparse).
     Score {
         /// Optional client-chosen correlation id, echoed in the response.
         id: Option<u64>,
-        /// Dense feature vector (must match the serving model's dim).
-        features: Vec<f64>,
+        /// The payload; sparse payloads are scored without densifying.
+        features: Features,
     },
     /// Fetch the server's live statistics.
     Stats,
@@ -53,26 +75,59 @@ pub enum Request {
     Ping,
 }
 
+/// Parse a JSON array of finite numbers (shared by the dense and sparse
+/// score forms).
+fn parse_f64_array(v: &Json, what: &str) -> Result<Vec<f64>, String> {
+    let arr = v.as_arr().ok_or_else(|| format!("score: {what} must be an array"))?;
+    arr.iter()
+        .map(|x| x.as_f64().ok_or_else(|| format!("score: non-numeric {what} entry")))
+        .collect()
+}
+
 impl Request {
-    /// Parse one request line.
+    /// Parse one request line (the versioned parser: accepts both the
+    /// v1 dense and the v2 sparse score forms on any connection).
     pub fn parse(line: &str) -> Result<Request, String> {
         let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
         let op = v.get("op").and_then(|o| o.as_str()).ok_or("missing op")?;
         match op {
+            "hello" => {
+                let proto = v.get("proto").and_then(|x| x.as_u64()).unwrap_or(1);
+                Ok(Request::Hello { proto: proto.min(u32::MAX as u64) as u32 })
+            }
             "score" => {
                 let id = v.get("id").and_then(|x| x.as_u64());
-                let features = v
-                    .get("features")
-                    .and_then(|a| a.as_arr())
-                    .ok_or("score: missing features")?
-                    .iter()
-                    .map(|x| x.as_f64().ok_or_else(|| "score: non-numeric feature".to_string()))
-                    .collect::<Result<Vec<_>, _>>()?;
-                // Reject inf/NaN here: a non-finite margin could not be
-                // serialized back as valid JSON.
-                if !features.iter().all(|f| f.is_finite()) {
-                    return Err("score: non-finite feature".into());
-                }
+                let dense = v.get("features");
+                let sparse = (v.get("idx"), v.get("val"));
+                let features = match (dense, sparse) {
+                    (Some(_), (Some(_), _) | (_, Some(_))) => {
+                        return Err("score: give either features or idx/val, not both".into())
+                    }
+                    (Some(arr), _) => Features::Dense(parse_f64_array(arr, "features")?),
+                    (None, (Some(idx), Some(val))) => {
+                        let idx = idx
+                            .as_arr()
+                            .ok_or("score: idx must be an array")?
+                            .iter()
+                            .map(|x| {
+                                x.as_u64()
+                                    .filter(|&i| i <= u32::MAX as u64)
+                                    .map(|i| i as u32)
+                                    .ok_or_else(|| "score: bad idx entry".to_string())
+                            })
+                            .collect::<Result<Vec<_>, _>>()?;
+                        Features::Sparse { idx, val: parse_f64_array(val, "val")? }
+                    }
+                    (None, (Some(_), None)) => return Err("score: idx without val".into()),
+                    (None, (None, Some(_))) => return Err("score: val without idx".into()),
+                    (None, (None, None)) => return Err("score: missing features".into()),
+                };
+                // Reject structural damage (unsorted/duplicate indices,
+                // length mismatch) and non-finite values here: a
+                // non-finite margin could not be serialized back as
+                // valid JSON, and a malformed support must never reach
+                // the margin walker.
+                features.validate().map_err(|e| format!("score: {e}"))?;
                 Ok(Request::Score { id, features })
             }
             "stats" => Ok(Request::Stats),
@@ -89,11 +144,28 @@ impl Request {
     /// Serialize (client side).
     pub fn to_json(&self) -> Json {
         match self {
+            Request::Hello { proto } => Json::obj([
+                ("op", Json::Str("hello".into())),
+                ("proto", Json::Num(*proto as f64)),
+            ]),
             Request::Score { id, features } => {
-                let mut pairs = vec![
-                    ("op", Json::Str("score".into())),
-                    ("features", Json::Arr(features.iter().map(|&f| Json::Num(f)).collect())),
-                ];
+                let mut pairs = vec![("op", Json::Str("score".into()))];
+                match features {
+                    Features::Dense(x) => pairs.push((
+                        "features",
+                        Json::Arr(x.iter().map(|&f| Json::Num(f)).collect()),
+                    )),
+                    Features::Sparse { idx, val } => {
+                        pairs.push((
+                            "idx",
+                            Json::Arr(idx.iter().map(|&i| Json::Num(i as f64)).collect()),
+                        ));
+                        pairs.push((
+                            "val",
+                            Json::Arr(val.iter().map(|&f| Json::Num(f)).collect()),
+                        ));
+                    }
+                }
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
@@ -193,6 +265,15 @@ impl StatsReport {
 /// A server → client message.
 #[derive(Debug, Clone)]
 pub enum Response {
+    /// Handshake answer: the framing the rest of the connection uses.
+    Hello {
+        /// Granted protocol version (may be lower than requested).
+        proto: u32,
+        /// Current serving model generation (see v2 generation pinning).
+        gen: u32,
+        /// Serving model dimensionality.
+        dim: usize,
+    },
     /// A scored request.
     Score {
         /// Echo of the request id, if one was sent.
@@ -226,6 +307,13 @@ impl Response {
     /// Serialize (server side).
     pub fn to_json(&self) -> Json {
         match self {
+            Response::Hello { proto, gen, dim } => Json::obj([
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("hello".into())),
+                ("proto", Json::Num(*proto as f64)),
+                ("gen", Json::Num(*gen as f64)),
+                ("dim", Json::Num(*dim as f64)),
+            ]),
             Response::Score { id, score, features_evaluated } => {
                 let mut pairs = vec![
                     ("ok", Json::Bool(true)),
@@ -289,6 +377,14 @@ impl Response {
             });
         }
         match v.get("op").and_then(|o| o.as_str()).ok_or("missing op")? {
+            "hello" => Ok(Response::Hello {
+                proto: v
+                    .get("proto")
+                    .and_then(|x| x.as_u64())
+                    .ok_or("hello: missing proto")? as u32,
+                gen: v.get("gen").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                dim: v.get("dim").and_then(|x| x.as_usize()).unwrap_or(0),
+            }),
             "score" => Ok(Response::Score {
                 id: v.get("id").and_then(|x| x.as_u64()),
                 score: v.get("score").and_then(|x| x.as_f64()).ok_or("score: missing score")?,
@@ -320,20 +416,90 @@ mod tests {
 
     #[test]
     fn score_request_round_trip() {
-        let req = Request::Score { id: Some(9), features: vec![0.0, -1.5, 0.25] };
+        let req =
+            Request::Score { id: Some(9), features: Features::Dense(vec![0.0, -1.5, 0.25]) };
         let line = req.to_line();
         assert!(line.ends_with('\n'));
         match Request::parse(line.trim()).unwrap() {
-            Request::Score { id, features } => {
+            Request::Score { id, features: Features::Dense(features) } => {
                 assert_eq!(id, Some(9));
                 assert_eq!(features, vec![0.0, -1.5, 0.25]);
             }
             other => panic!("wrong variant {other:?}"),
         }
         // Without an id.
-        match Request::parse(&Request::Score { id: None, features: vec![1.0] }.to_line()).unwrap()
-        {
+        let req = Request::Score { id: None, features: Features::Dense(vec![1.0]) };
+        match Request::parse(&req.to_line()).unwrap() {
             Request::Score { id, .. } => assert_eq!(id, None),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_score_request_round_trip() {
+        let req = Request::Score {
+            id: Some(4),
+            features: Features::Sparse { idx: vec![3, 17, 40], val: vec![0.5, -1.2, 2.0] },
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"idx\"") && line.contains("\"val\""));
+        assert!(!line.contains("\"features\""));
+        match Request::parse(line.trim()).unwrap() {
+            Request::Score { id, features: Features::Sparse { idx, val } } => {
+                assert_eq!(id, Some(4));
+                assert_eq!(idx, vec![3, 17, 40]);
+                assert_eq!(val, vec![0.5, -1.2, 2.0]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_score_request_rejects_malformed_forms() {
+        let parse = Request::parse;
+        assert!(parse(r#"{"op":"score","idx":[1,2]}"#).is_err(), "idx without val");
+        assert!(parse(r#"{"op":"score","val":[1.0]}"#).is_err(), "val without idx");
+        assert!(
+            parse(r#"{"op":"score","features":[1],"idx":[0],"val":[1]}"#).is_err(),
+            "dense and sparse together"
+        );
+        assert!(
+            parse(r#"{"op":"score","idx":[1],"val":[1.0,2.0]}"#).is_err(),
+            "length mismatch"
+        );
+        assert!(
+            parse(r#"{"op":"score","idx":[5,2],"val":[1.0,2.0]}"#).is_err(),
+            "unsorted idx"
+        );
+        assert!(
+            parse(r#"{"op":"score","idx":[2,2],"val":[1.0,2.0]}"#).is_err(),
+            "duplicate idx"
+        );
+        assert!(parse(r#"{"op":"score","idx":[-1],"val":[1.0]}"#).is_err(), "negative idx");
+        assert!(parse(r#"{"op":"score","idx":[1.5],"val":[1.0]}"#).is_err(), "fractional idx");
+        assert!(
+            parse(r#"{"op":"score","idx":[1],"val":[1e999]}"#).is_err(),
+            "non-finite sparse value must be rejected with a structured error"
+        );
+        // The empty support is valid (scores 0.0 immediately).
+        assert!(parse(r#"{"op":"score","idx":[],"val":[]}"#).is_ok());
+    }
+
+    #[test]
+    fn hello_round_trips_and_defaults_to_v1() {
+        match Request::parse(&Request::Hello { proto: 2 }.to_line()).unwrap() {
+            Request::Hello { proto } => assert_eq!(proto, 2),
+            other => panic!("wrong variant {other:?}"),
+        }
+        match Request::parse(r#"{"op":"hello"}"#).unwrap() {
+            Request::Hello { proto } => assert_eq!(proto, 1, "missing proto means v1"),
+            other => panic!("wrong variant {other:?}"),
+        }
+        let resp = Response::Hello { proto: 2, gen: 5, dim: 784 };
+        match Response::parse(&resp.to_line()).unwrap() {
+            Response::Hello { proto, gen, dim } => {
+                assert_eq!((proto, gen, dim), (2, 5, 784));
+            }
             other => panic!("wrong variant {other:?}"),
         }
     }

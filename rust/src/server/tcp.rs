@@ -1,26 +1,37 @@
 //! TCP front-end: accept loop, per-connection reader/writer threads,
-//! bounded-queue admission, and the stats/reload control ops.
+//! bounded-queue admission, per-connection protocol negotiation, and
+//! the stats/reload control ops.
 //!
 //! ## Threading model
 //!
-//! One accept thread; per connection, a **reader** thread that parses
-//! JSON-lines requests and a **writer** thread that emits responses in
-//! request order. Score requests are admitted to the
-//! [`ModelHub`]'s bounded queue without blocking: if the queue is full
-//! the reader immediately enqueues an explicit `overloaded` error line
-//! instead of buffering — load is shed at the edge, never accumulated.
-//! Admitted requests travel to the writer as pending response receivers,
-//! bounded by `max_pending_per_conn` (the per-connection pipelining
-//! window): a slow consumer backpressures its own reader, not the whole
-//! server.
+//! One accept thread; per connection, a **reader** thread that decodes
+//! requests and a **writer** thread that emits responses in request
+//! order. Score requests are admitted to the [`ModelHub`]'s bounded
+//! queue without blocking: if the queue is full the reader immediately
+//! enqueues an explicit `overloaded` error instead of buffering — load
+//! is shed at the edge, never accumulated. Admitted requests travel to
+//! the writer as pending response receivers, bounded by
+//! `max_pending_per_conn` (the per-connection pipelining window): a
+//! slow consumer backpressures its own reader, not the whole server.
+//!
+//! ## Protocol negotiation
+//!
+//! Every connection starts in v1 JSON-lines mode. A
+//! `{"op":"hello","proto":2}` request flips it to the length-prefixed
+//! binary framing of [`crate::server::frame`] — the reader switches
+//! decoders after answering, and each queued job carries its own
+//! rendering instructions, so the in-order response stream stays
+//! consistent across the switch. Clients that never send `hello` (all
+//! v1 clients) are served exactly as before.
 //!
 //! ## Control ops
 //!
 //! `stats` returns the aggregated [`StatsReport`] (throughput,
 //! features-touched percentiles, early-exit rate, shed counts); `reload`
 //! hot-swaps the serving [`ModelSnapshot`] with zero downtime (see
-//! [`ModelHub`]). Both arrive over the same wire as ordinary requests, so
-//! any connection can act as a control channel.
+//! [`ModelHub`]). Both arrive over the same wire as ordinary requests —
+//! in v2 binary mode they ride inside `JSON_REQ`/`JSON_RESP` envelope
+//! frames — so any connection can act as a control channel.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -32,10 +43,11 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::ServerConfig;
-use crate::coordinator::service::{ModelSnapshot, ScoreResponse};
+use crate::coordinator::service::{Features, ModelSnapshot, ScoreResponse};
 use crate::error::{Error, Result};
+use crate::server::frame::{ErrorCode, Frame, FrameError};
 use crate::server::hub::{HubError, ModelHub};
-use crate::server::protocol::{Request, Response, StatsReport};
+use crate::server::protocol::{Request, Response, StatsReport, PROTO_V2};
 
 /// Server-wide shared state.
 struct Shared {
@@ -52,6 +64,8 @@ struct Shared {
     next_conn_id: AtomicU64,
     conn_joins: Mutex<Vec<JoinHandle<()>>>,
     max_pending: usize,
+    max_frame_bytes: usize,
+    max_nnz: usize,
 }
 
 /// A running TCP serving front-end.
@@ -81,6 +95,8 @@ impl TcpServer {
             next_conn_id: AtomicU64::new(0),
             conn_joins: Mutex::new(Vec::new()),
             max_pending: cfg.max_pending_per_conn,
+            max_frame_bytes: cfg.max_frame_bytes,
+            max_nnz: cfg.max_nnz,
         });
         let accept_shared = shared.clone();
         let accept_join = std::thread::spawn(move || accept_loop(listener, accept_shared));
@@ -179,60 +195,252 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
+/// How a pending score's response must be rendered — decided at
+/// admission time, so the writer needs no codec state of its own and
+/// the v1→v2 switch stays consistent across the in-order job stream.
+enum Wire {
+    /// v1 JSON line, echoing the optional request id.
+    V1 { id: Option<u64> },
+    /// v2 binary `SCORE`/`ERROR` frame, stamped with the serving
+    /// generation captured at admission.
+    V2Binary { gen: u32 },
+    /// v2 `JSON_RESP` envelope frame (a JSON-op request on a binary
+    /// connection, e.g. a dense score through the envelope).
+    V2Json { id: Option<u64> },
+}
+
 /// What the reader hands the writer, in request order.
 enum Job {
-    /// A fully-formed response line.
-    Line(String),
+    /// Fully-encoded response bytes (a JSON line or a binary frame).
+    Bytes(Vec<u8>),
     /// An admitted score request whose response is still being computed.
-    Pending { id: Option<u64>, rx: Receiver<ScoreResponse> },
+    Pending { wire: Wire, rx: Receiver<ScoreResponse> },
+}
+
+/// Reader-side verdict for one decoded request.
+enum Step {
+    /// Enqueue this job and keep reading.
+    Job(Job),
+    /// Enqueue, then switch the connection to binary framing.
+    JobThenBinary(Job),
+    /// Enqueue, then close the connection (unrecoverable stream state).
+    JobThenClose(Job),
+    /// Close immediately.
+    Close,
 }
 
 fn handle_conn(stream: TcpStream, shared: &Shared) {
     let Ok(read_half) = stream.try_clone() else { return };
-    let reader = BufReader::new(read_half);
+    let mut reader = BufReader::new(read_half);
     let (jtx, jrx) = sync_channel::<Job>(shared.max_pending);
     let writer = std::thread::spawn(move || writer_loop(stream, jrx));
 
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let job = match Request::parse(line) {
-            Err(e) => {
-                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                Job::Line(Response::Error { id: None, error: e, retryable: false }.to_line())
-            }
-            Ok(Request::Ping) => Job::Line(Response::Pong.to_line()),
-            Ok(Request::Stats) => Job::Line(Response::Stats(report(shared)).to_line()),
-            Ok(Request::Reload { snapshot }) => match shared.hub.reload(snapshot) {
-                Ok(dim) => Job::Line(Response::Reloaded { dim }.to_line()),
-                Err(e) => Job::Line(
-                    Response::Error { id: None, error: e.to_string(), retryable: false }.to_line(),
-                ),
-            },
-            Ok(Request::Score { id, features }) => match shared.hub.submit(features) {
-                Ok(rx) => Job::Pending { id, rx },
-                Err(HubError::Overloaded) => {
-                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
-                    Job::Line(
-                        Response::Error { id, error: "overloaded".into(), retryable: true }
-                            .to_line(),
-                    )
+    let mut binary = false;
+    let mut line = String::new();
+    loop {
+        let step = if binary {
+            read_binary_step(&mut reader, shared)
+        } else {
+            line.clear();
+            match reader.read_line(&mut line) {
+                Ok(0) | Err(_) => Step::Close,
+                Ok(_) => {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        continue;
+                    }
+                    json_step(trimmed, shared)
                 }
-                Err(e @ HubError::DimMismatch { .. }) => Job::Line(
-                    Response::Error { id, error: e.to_string(), retryable: false }.to_line(),
-                ),
-                Err(HubError::Closed) => break,
-            },
+            }
         };
-        if jtx.send(job).is_err() {
-            break; // writer gone (connection dead)
+        match step {
+            Step::Job(job) => {
+                if jtx.send(job).is_err() {
+                    break; // writer gone (connection dead)
+                }
+            }
+            Step::JobThenBinary(job) => {
+                if jtx.send(job).is_err() {
+                    break;
+                }
+                binary = true;
+            }
+            Step::JobThenClose(job) => {
+                let _ = jtx.send(job);
+                break;
+            }
+            Step::Close => break,
         }
     }
     drop(jtx); // writer drains the remaining jobs, then exits
     let _ = writer.join();
+}
+
+/// Handle one v1 JSON line.
+fn json_step(line: &str, shared: &Shared) -> Step {
+    match Request::parse(line) {
+        Err(e) => {
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            Step::Job(Job::Bytes(
+                Response::Error { id: None, error: e, retryable: false }.to_line().into_bytes(),
+            ))
+        }
+        Ok(Request::Hello { proto }) => {
+            // Grant the highest version both sides speak; v1 keeps the
+            // connection on JSON lines (transparent fallback).
+            let granted = if proto >= PROTO_V2 { PROTO_V2 } else { 1 };
+            // One snapshot: (gen, dim) must not tear across a reload.
+            let (gen, dim) = shared.hub.serving_info();
+            let resp = Response::Hello { proto: granted, gen, dim };
+            let job = Job::Bytes(resp.to_line().into_bytes());
+            if granted == PROTO_V2 {
+                Step::JobThenBinary(job)
+            } else {
+                Step::Job(job)
+            }
+        }
+        Ok(req) => json_request_step(req, shared, /* enveloped= */ false),
+    }
+}
+
+/// Handle a JSON-op request arriving either as a bare v1 line
+/// (`enveloped = false`) or inside a v2 `JSON_REQ` frame (`true`); the
+/// response rides the matching vehicle.
+fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
+    let render = |resp: Response| -> Job {
+        if enveloped {
+            Job::Bytes(Frame::JsonResp(resp.to_json().to_string_compact()).encode())
+        } else {
+            Job::Bytes(resp.to_line().into_bytes())
+        }
+    };
+    match req {
+        Request::Hello { .. } => {
+            // Renegotiation inside a binary connection is not a thing;
+            // as a bare v1 line it is handled by `json_step`.
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            Step::Job(render(Response::Error {
+                id: None,
+                error: "hello: already negotiated".into(),
+                retryable: false,
+            }))
+        }
+        Request::Ping => Step::Job(render(Response::Pong)),
+        Request::Stats => Step::Job(render(Response::Stats(report(shared)))),
+        Request::Reload { snapshot } => match shared.hub.reload(snapshot) {
+            Ok(dim) => Step::Job(render(Response::Reloaded { dim })),
+            Err(e) => Step::Job(render(Response::Error {
+                id: None,
+                error: e.to_string(),
+                retryable: false,
+            })),
+        },
+        Request::Score { id, features } => match shared.hub.submit(features) {
+            Ok(rx) => {
+                let wire = if enveloped { Wire::V2Json { id } } else { Wire::V1 { id } };
+                Step::Job(Job::Pending { wire, rx })
+            }
+            Err(HubError::Overloaded) => {
+                shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                Step::Job(render(Response::Error {
+                    id,
+                    error: "overloaded".into(),
+                    retryable: true,
+                }))
+            }
+            // StaleGeneration cannot happen on an unpinned submit; fold
+            // it with DimMismatch for exhaustiveness.
+            Err(e @ (HubError::DimMismatch { .. } | HubError::StaleGeneration { .. })) => {
+                Step::Job(render(Response::Error {
+                    id,
+                    error: e.to_string(),
+                    retryable: false,
+                }))
+            }
+            Err(HubError::Closed) => Step::Close,
+        },
+    }
+}
+
+/// Read and handle one v2 binary frame.
+fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step {
+    let frame = match Frame::read_from(reader, shared.max_frame_bytes) {
+        Ok(frame) => frame,
+        Err(FrameError::Eof) => return Step::Close,
+        Err(e) => {
+            // Framing is lost — a byte stream cannot resync after a bad
+            // prefix. Report once, then close.
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            return Step::JobThenClose(Job::Bytes(
+                Frame::Error {
+                    code: ErrorCode::BadFrame,
+                    retryable: false,
+                    msg: e.to_string(),
+                }
+                .encode(),
+            ));
+        }
+    };
+    let err = |code: ErrorCode, msg: String| -> Step {
+        Step::Job(Job::Bytes(
+            Frame::Error { code, retryable: code.retryable(), msg }.encode(),
+        ))
+    };
+    match frame {
+        Frame::JsonReq(doc) => match Request::parse(doc.trim()) {
+            Err(e) => {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                err(ErrorCode::BadRequest, e)
+            }
+            Ok(req) => json_request_step(req, shared, /* enveloped= */ true),
+        },
+        Frame::ScoreSparse { gen, idx, val } => {
+            if idx.len() > shared.max_nnz {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return err(
+                    ErrorCode::BadRequest,
+                    format!("nnz {} exceeds server cap {}", idx.len(), shared.max_nnz),
+                );
+            }
+            let features = Features::Sparse {
+                idx: idx.into_iter().map(u32::from).collect(),
+                val,
+            };
+            if let Err(e) = features.validate() {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let code = if e.contains("non-finite") {
+                    ErrorCode::NonFinite
+                } else {
+                    ErrorCode::BadRequest
+                };
+                return err(code, e);
+            }
+            // The pin check, admission, and generation stamp all happen
+            // under one hub critical section: the stamped generation is
+            // the one whose workers answer, even across a racing reload.
+            match shared.hub.submit_pinned(features, gen) {
+                Ok((rx, serving)) => {
+                    Step::Job(Job::Pending { wire: Wire::V2Binary { gen: serving }, rx })
+                }
+                Err(e @ HubError::StaleGeneration { .. }) => {
+                    err(ErrorCode::StaleGeneration, e.to_string())
+                }
+                Err(HubError::Overloaded) => {
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    err(ErrorCode::Overloaded, "overloaded".into())
+                }
+                Err(e @ HubError::DimMismatch { .. }) => {
+                    err(ErrorCode::DimMismatch, e.to_string())
+                }
+                Err(HubError::Closed) => Step::Close,
+            }
+        }
+        // Response ops arriving from a client are protocol abuse.
+        Frame::Score { .. } | Frame::Error { .. } | Frame::JsonResp(_) => {
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            err(ErrorCode::BadRequest, "response op sent by client".into())
+        }
+    }
 }
 
 fn writer_loop(stream: TcpStream, jrx: Receiver<Job>) {
@@ -244,20 +452,20 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>) {
         // responses hostage to a computation that isn't done yet: flush
         // before blocking on an unready pending receiver.
         loop {
-            let line = match job {
-                Job::Line(line) => line,
-                Job::Pending { id, rx } => match rx.try_recv() {
-                    Ok(resp) => render_score(id, Some(resp)),
+            let bytes = match job {
+                Job::Bytes(bytes) => bytes,
+                Job::Pending { wire, rx } => match rx.try_recv() {
+                    Ok(resp) => render_score(&wire, Some(resp)),
                     Err(TryRecvError::Empty) => {
                         if out.flush().is_err() {
                             break 'outer;
                         }
-                        render_score(id, rx.recv().ok())
+                        render_score(&wire, rx.recv().ok())
                     }
-                    Err(TryRecvError::Disconnected) => render_score(id, None),
+                    Err(TryRecvError::Disconnected) => render_score(&wire, None),
                 },
             };
-            if out.write_all(line.as_bytes()).is_err() {
+            if out.write_all(&bytes).is_err() {
                 break 'outer;
             }
             match jrx.try_recv() {
@@ -272,30 +480,60 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>) {
     let _ = out.flush();
 }
 
-/// Render an admitted request's outcome (`None` = the worker generation
-/// died before answering, which a drained shutdown should never produce).
-fn render_score(id: Option<u64>, resp: Option<ScoreResponse>) -> String {
-    match resp {
-        None => Response::Error { id, error: "service unavailable".into(), retryable: false }
-            .to_line(),
+/// Render an admitted request's outcome on its negotiated wire (`None`
+/// = the worker generation died before answering, which a drained
+/// shutdown should never produce).
+fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
+    // Classify once; the codes map onto the v1 error strings.
+    let outcome: std::result::Result<ScoreResponse, (ErrorCode, bool, &'static str)> = match resp
+    {
+        None => Err((ErrorCode::Unavailable, false, "service unavailable")),
         // NaN marks the worker-level dimension guard; the hub screens
         // dimensions at admission, so this only fires if a reload changed
         // the model dim while the request was in flight.
-        Some(resp) if resp.score.is_nan() => Response::Error {
-            id,
-            error: "dimension mismatch (model reloaded mid-flight)".into(),
-            retryable: true,
-        }
-        .to_line(),
+        Some(resp) if resp.score.is_nan() => Err((
+            ErrorCode::DimMismatch,
+            true,
+            "dimension mismatch (model reloaded mid-flight)",
+        )),
         // Non-finite margins (e.g. inf weights in a reloaded snapshot)
-        // cannot be serialized as JSON.
+        // cannot be serialized as JSON and are rejected on the binary
+        // wire for parity.
         Some(resp) if !resp.score.is_finite() => {
-            Response::Error { id, error: "non-finite score".into(), retryable: false }.to_line()
+            Err((ErrorCode::NonFinite, false, "non-finite score"))
         }
-        Some(resp) => {
-            Response::Score { id, score: resp.score, features_evaluated: resp.features_evaluated }
-                .to_line()
+        Some(resp) => Ok(resp),
+    };
+    match wire {
+        Wire::V1 { id } | Wire::V2Json { id } => {
+            let resp = match outcome {
+                Ok(r) => Response::Score {
+                    id: *id,
+                    score: r.score,
+                    features_evaluated: r.features_evaluated,
+                },
+                Err((_, retryable, msg)) => {
+                    Response::Error { id: *id, error: msg.into(), retryable }
+                }
+            };
+            match wire {
+                Wire::V2Json { .. } => {
+                    Frame::JsonResp(resp.to_json().to_string_compact()).encode()
+                }
+                _ => resp.to_line().into_bytes(),
+            }
         }
+        Wire::V2Binary { gen } => match outcome {
+            Ok(r) => Frame::Score {
+                gen: *gen,
+                evaluated: r.features_evaluated as u32,
+                score: r.score,
+            }
+            .encode(),
+            Err((code, retryable, msg)) => {
+                Frame::Error { code, retryable, msg: msg.into() }.encode()
+            }
+        },
     }
 }
 

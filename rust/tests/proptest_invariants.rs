@@ -387,3 +387,113 @@ fn prop_constant_boundary_flat() {
         },
     );
 }
+
+/// (i) Wire protocol v2: encode→decode is the identity for every
+/// sparse score frame (random gen/support/values, including empty).
+#[test]
+fn prop_v2_frame_codec_round_trips() {
+    use attentive::server::frame::Frame;
+
+    forall(
+        Config { cases: 300, seed: 0xB8 },
+        |rng, size| {
+            let nnz = (size * 300.0 * rng.f64()) as usize;
+            // Strictly increasing u16 indices.
+            let mut idx: Vec<u16> = Vec::with_capacity(nnz);
+            let mut next = 0u32;
+            for _ in 0..nnz {
+                next += 1 + rng.below(8) as u32;
+                if next > u16::MAX as u32 {
+                    break;
+                }
+                idx.push(next as u16);
+            }
+            let val: Vec<f64> =
+                (0..idx.len()).map(|_| rng.range_f64(-100.0, 100.0)).collect();
+            let gen = rng.next_u64() as u32;
+            (gen, idx, val)
+        },
+        |(gen, idx, val)| {
+            let frame = Frame::ScoreSparse { gen: *gen, idx: idx.clone(), val: val.clone() };
+            let wire = frame.encode();
+            let (back, used) = Frame::decode(&wire, 1 << 20)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if used != wire.len() {
+                return Err(format!("consumed {used} of {} bytes", wire.len()));
+            }
+            if back != frame {
+                return Err(format!("round trip mutated the frame: {back:?}"));
+            }
+            // Every strict prefix must fail to decode (truncation is
+            // always detected, never a silent short parse).
+            for cut in [0, 1, 3, wire.len().saturating_sub(1)] {
+                if cut < wire.len() && Frame::decode(&wire[..cut], 1 << 20).is_ok() {
+                    return Err(format!("truncated decode at {cut} bytes succeeded"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// (j) The sparse scoring path is lossless: under the Full boundary
+/// (no early exit) the sparse walk over the support must equal the
+/// dense dot product of the densified vector, for every policy.
+#[test]
+fn prop_sparse_scoring_is_lossless() {
+    use attentive::learner::predictor::EarlyStopPredictor;
+    use attentive::stst::boundary::TrivialBoundary;
+
+    forall(
+        Config { cases: 200, seed: 0xB9 },
+        |rng, size| {
+            let dim = 8 + (size * 200.0) as usize;
+            let w: Vec<f64> = (0..dim).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let nnz = rng.below(dim / 2 + 1);
+            let mut idx: Vec<u32> = Vec::new();
+            let mut next = 0usize;
+            for _ in 0..nnz {
+                next += 1 + rng.below(3);
+                if next >= dim {
+                    break;
+                }
+                idx.push(next as u32);
+            }
+            let val: Vec<f64> =
+                (0..idx.len()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let policy_seed = rng.next_u64();
+            (w, idx, val, policy_seed)
+        },
+        |(w, idx, val, policy_seed)| {
+            // The dense dot product equals the support sum by
+            // construction (zeros contribute nothing) — that sum is the
+            // lossless reference every policy's sparse walk must hit.
+            let exact: f64 =
+                idx.iter().zip(val.iter()).map(|(&i, &v)| w[i as usize] * v).sum();
+            let predictor = EarlyStopPredictor::new(&TrivialBoundary);
+            for policy in CoordinatePolicy::ALL {
+                let mut orders = OrderGenerator::new(policy, *policy_seed);
+                orders.refresh(w);
+                let order = orders.next_sparse(w, idx).to_vec();
+                if order.len() != idx.len() {
+                    return Err(format!("{policy:?}: order len {} != nnz", order.len()));
+                }
+                let (score, evaluated) = predictor.predict_sparse(w, idx, val, &order, 4.0);
+                if evaluated != idx.len() {
+                    return Err(format!(
+                        "{policy:?}: full boundary must walk the whole support, took {evaluated}"
+                    ));
+                }
+                // Weight-sampled draws with replacement do not visit
+                // each support coordinate exactly once, so exact-sum
+                // equality only holds for the permutation policies.
+                if policy != CoordinatePolicy::WeightSampled
+                    && (score - exact).abs() > 1e-9 * (1.0 + exact.abs())
+                {
+                    return Err(format!("{policy:?}: sparse {score} != dense {exact}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

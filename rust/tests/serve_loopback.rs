@@ -6,13 +6,14 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use attentive::config::ServerConfig;
-use attentive::coordinator::service::ModelSnapshot;
+use attentive::coordinator::service::{Features, ModelSnapshot};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::synth::SynthDigits;
 use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
 use attentive::margin::policy::CoordinatePolicy;
-use attentive::server::loadgen::{self, Client, LoadGenConfig};
+use attentive::server::frame::{ErrorCode, Frame};
+use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
 use attentive::server::protocol::Response;
 use attentive::server::tcp::TcpServer;
 use attentive::stst::boundary::AnyBoundary;
@@ -70,6 +71,7 @@ fn thousand_requests_with_midstream_hot_reload() {
             pipeline: 8,
             hard_fraction: 0.5,
             seed: 3,
+            ..Default::default()
         })
         .expect("loadgen")
     });
@@ -189,6 +191,7 @@ fn overload_sheds_explicitly_and_recovers() {
         pipeline: 32,
         hard_fraction: 1.0,
         seed: 9,
+        ..Default::default()
     })
     .expect("loadgen");
     assert_eq!(report.sent, 400);
@@ -204,6 +207,195 @@ fn overload_sheds_explicitly_and_recovers() {
     client.ping().unwrap();
     let stats = client.stats().unwrap();
     assert_eq!(stats.overloaded, report.overloaded);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_v1_and_v2_clients_share_one_server() {
+    // One server, three concurrent load generators on different wires —
+    // a v1-only client (today's loadgen syntax) must keep working,
+    // unmodified, next to v2 JSON-sparse and v2 binary clients.
+    let server = loopback_server(trained_snapshot(), 4096, 2);
+    let addr = server.local_addr().to_string();
+
+    let run_mode = |mode: ClientMode, seed: u64| {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            loadgen::run(&LoadGenConfig {
+                addr,
+                connections: 2,
+                requests: 300,
+                pipeline: 8,
+                hard_fraction: 0.5,
+                mode,
+                sparse_eps: 0.05,
+                seed,
+            })
+            .expect("loadgen")
+        })
+    };
+    let v1 = run_mode(ClientMode::V1Dense, 21);
+    let v2j = run_mode(ClientMode::V2SparseJson, 22);
+    let v2b = run_mode(ClientMode::V2Binary, 23);
+
+    let mut total_answered = 0;
+    for (name, join) in [("v1-dense", v1), ("v2-sparse-json", v2j), ("v2-binary", v2b)] {
+        let report = join.join().unwrap();
+        assert_eq!(report.sent, 300, "{name}");
+        assert_eq!(report.answered + report.overloaded, 300, "{name}: all answered");
+        assert_eq!(report.errors, 0, "{name}: no protocol errors");
+        assert!(
+            report.avg_features() < DIM as f64,
+            "{name}: attention must save features, avg {}",
+            report.avg_features()
+        );
+        total_answered += report.answered;
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served, total_answered, "every scored request is counted once");
+}
+
+#[test]
+fn v2_negotiated_client_scores_sparse_and_runs_control_ops() {
+    let server = loopback_server(flat_snapshot(1.0), 256, 1);
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.proto(), 1);
+    assert_eq!(client.negotiate().unwrap(), 2, "server must grant v2");
+    assert_eq!(client.proto(), 2);
+
+    // Native sparse frame: 3 nonzeros, all-ones model -> positive score
+    // touching at most 3 coordinates.
+    match client.score_sparse(vec![10, 200, 505], vec![0.9, 0.8, 0.7], 0).unwrap() {
+        Response::Score { score, features_evaluated, .. } => {
+            assert!(score > 0.0);
+            assert!(features_evaluated <= 3, "sparse walk bounded by nnz");
+        }
+        other => panic!("expected score, got {other:?}"),
+    }
+
+    // Dense scoring and control ops ride the JSON envelope frames.
+    match client.score(vec![0.5; DIM]).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.served, 2);
+
+    // Generation pinning: gen 1 is current, gen 42 is stale.
+    assert!(matches!(
+        client.score_sparse(vec![1], vec![1.0], 1).unwrap(),
+        Response::Score { .. }
+    ));
+    match client.score_sparse(vec![1], vec![1.0], 42).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("generation"), "got {error:?}");
+            assert!(retryable, "stale generation is retryable");
+        }
+        other => panic!("expected stale-generation error, got {other:?}"),
+    }
+
+    // Hot reload bumps the generation; the old pin now sheds, the new
+    // one works.
+    client.reload(&flat_snapshot(-1.0)).unwrap();
+    match client.score_sparse(vec![1], vec![1.0], 1).unwrap() {
+        Response::Error { retryable: true, .. } => {}
+        other => panic!("expected stale error after reload, got {other:?}"),
+    }
+    match client.score_sparse(vec![1], vec![1.0], 2).unwrap() {
+        Response::Score { score, .. } => assert!(score < 0.0, "reloaded sign"),
+        other => panic!("expected score, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn v2_rejects_malformed_sparse_payloads_with_structured_errors() {
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    client.negotiate().unwrap();
+
+    // Non-finite value: structured NonFinite error, connection lives.
+    match client.score_sparse(vec![3], vec![f64::NAN], 0).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("non-finite"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected non-finite error, got {other:?}"),
+    }
+    // Unsorted support: BadRequest, connection lives.
+    match client.score_sparse(vec![9, 3], vec![1.0, 1.0], 0).unwrap() {
+        Response::Error { error, .. } => {
+            assert!(error.contains("increasing"), "got {error:?}")
+        }
+        other => panic!("expected bad-request error, got {other:?}"),
+    }
+    // Out-of-range index: DimMismatch.
+    match client.score_sparse(vec![5_000], vec![1.0], 0).unwrap() {
+        Response::Error { error, .. } => assert!(error.contains("dimension"), "got {error:?}"),
+        other => panic!("expected dim error, got {other:?}"),
+    }
+    // The connection still serves after all three rejections.
+    match client.score_sparse(vec![5], vec![1.0], 0).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+
+    // And the sparse JSON form gets the same screening on a v1 line:
+    // the client-side encoder happily serializes the duplicate support,
+    // the server rejects it with a structured, non-retryable error.
+    let mut v1 = Client::connect(&addr).unwrap();
+    let dup = attentive::server::protocol::Request::Score {
+        id: None,
+        features: Features::Sparse { idx: vec![2, 2], val: vec![1.0, 1.0] },
+    };
+    match v1.call(&dup).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("increasing"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected structured rejection, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn raw_v2_frames_with_bad_framing_close_the_connection() {
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+
+    // Handshake by hand on a raw socket.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let write = |bytes: &[u8]| {
+        let mut s = &stream;
+        s.write_all(bytes).unwrap();
+    };
+    write(b"{\"op\":\"hello\",\"proto\":2}\n");
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match Response::parse(line.trim()).unwrap() {
+        Response::Hello { proto: 2, gen: 1, dim } => assert_eq!(dim, DIM),
+        other => panic!("expected hello grant, got {other:?}"),
+    }
+
+    // A frame whose length prefix exceeds the server cap: the server
+    // answers with a BadFrame error frame, then closes.
+    write(&u32::MAX.to_le_bytes());
+    match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+        Frame::Error { code, retryable, .. } => {
+            assert_eq!(code, ErrorCode::BadFrame);
+            assert!(!retryable);
+        }
+        other => panic!("expected BadFrame, got {other:?}"),
+    }
+    // Connection is gone: next read sees EOF.
+    let mut probe = [0u8; 1];
+    use std::io::Read as _;
+    assert_eq!(reader.read(&mut probe).unwrap(), 0, "server must close after framing loss");
     server.shutdown();
 }
 
