@@ -9,7 +9,10 @@
 //! the identical stream. The attentive-vs-full gap is the paper's
 //! focus-of-attention measured at the wire; the v1-vs-v2 gap is the
 //! transport catching up with the evaluator (JSON parse of 784 dense
-//! floats was the per-request bottleneck).
+//! floats was the per-request bottleneck). A final multiclass pass
+//! drives the all-pairs ensemble shard with native binary `classify`
+//! frames, reporting per-voter feature cost — the paper's attention
+//! mechanism compounding across `C(C-1)/2` voters.
 //!
 //! Writes the machine-readable `BENCH_serve.json` (override the path
 //! with `BENCH_JSON=...`) consumed by CI's bench-smoke gate.
@@ -17,11 +20,14 @@
 //! `cargo bench --bench serve_throughput` (BENCH_QUICK=1 for CI scale)
 
 use attentive::config::ServerConfig;
-use attentive::coordinator::service::ModelSnapshot;
+use attentive::coordinator::service::{EnsembleSnapshot, ModelSnapshot};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::stream::ShuffledIndices;
 use attentive::data::synth::SynthDigits;
 use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::multiclass::OneVsOneEnsemble;
+use attentive::learner::pegasos::PegasosConfig;
 use attentive::margin::policy::CoordinatePolicy;
 use attentive::metrics::export::{to_json_file, Table};
 use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig, LoadReport};
@@ -29,6 +35,9 @@ use attentive::server::tcp::TcpServer;
 use attentive::stst::boundary::AnyBoundary;
 
 const DIM: f64 = 784.0;
+/// Digit classes behind the multiclass classify scenario (3 classes →
+/// 3 voters; enough to show per-voter compounding at CI scale).
+const ENSEMBLE_CLASSES: [i64; 3] = [1, 2, 3];
 
 fn train_snapshot(count: usize) -> ModelSnapshot {
     let ds = SynthDigits::new(7).generate_classes(count, &[2, 3]);
@@ -43,11 +52,30 @@ fn train_snapshot(count: usize) -> ModelSnapshot {
     )
 }
 
+fn train_ensemble(count: usize) -> EnsembleSnapshot {
+    let ds = SynthDigits::new(13).generate_classes(count, &[1, 2, 3]);
+    let boundary = AnyBoundary::Constant { delta: 0.1, paper_literal: false };
+    let cfg = PegasosConfig { lambda: 1e-2, seed: 13, ..Default::default() };
+    let mut ensemble =
+        OneVsOneEnsemble::new(ds.dim(), &ENSEMBLE_CLASSES, cfg, boundary.clone())
+            .expect("ensemble");
+    let shuffle = ShuffledIndices::new(ds.len(), 13);
+    for epoch in 0..2 {
+        ensemble.train_pass(&ds, &shuffle.epoch(epoch));
+    }
+    EnsembleSnapshot::from_trained(&mut ensemble, boundary, CoordinatePolicy::Permuted)
+}
+
 fn row(table: &mut Table, name: &str, r: &LoadReport) {
-    let early_rate = if r.features.is_empty() {
-        0.0
+    // The `< DIM` early-exit heuristic only makes sense for single-voter
+    // score traffic; classify counts are summed across voters (and the
+    // payload is sparse), so the column would be meaningless there.
+    let early = if r.total_voters > 0 || r.features.is_empty() {
+        "-".to_string()
     } else {
-        r.features.iter().filter(|&&f| (f as f64) < DIM).count() as f64 / r.features.len() as f64
+        let rate = r.features.iter().filter(|&&f| (f as f64) < DIM).count() as f64
+            / r.features.len() as f64;
+        format!("{rate:.3}")
     };
     table.row(&[
         name.into(),
@@ -56,7 +84,7 @@ fn row(table: &mut Table, name: &str, r: &LoadReport) {
         format!("{}", r.feature_percentile(0.50)),
         format!("{}", r.feature_percentile(0.99)),
         format!("{:.0}", r.bytes_per_req()),
-        format!("{:.3}", early_rate),
+        early,
         format!("{}", r.overloaded),
     ]);
 }
@@ -68,6 +96,8 @@ fn main() {
     let attentive_snapshot = train_snapshot(train_count);
     let mut full_snapshot = attentive_snapshot.clone();
     full_snapshot.boundary = AnyBoundary::Full;
+    let ensemble_snapshot = train_ensemble(train_count.min(3_000));
+    let voters = ensemble_snapshot.voter_count();
 
     let srv_cfg = ServerConfig {
         listen: "127.0.0.1:0".into(),
@@ -76,7 +106,16 @@ fn main() {
         queue: 4096,
         ..Default::default()
     };
-    let server = TcpServer::serve(&srv_cfg, attentive_snapshot).expect("bind loopback");
+    // One port, two shards: the binary 2-vs-3 model (default) and the
+    // all-pairs ensemble behind the `digits` route.
+    let server = TcpServer::serve_models(
+        &srv_cfg,
+        vec![
+            ("default".to_string(), attentive_snapshot.into()),
+            ("digits".to_string(), ensemble_snapshot.into()),
+        ],
+    )
+    .expect("bind loopback");
     let addr = server.local_addr().to_string();
     println!(
         "loopback serving bench on {addr}: {requests} requests/pass, 8 connections, pipeline 16"
@@ -91,6 +130,7 @@ fn main() {
         mode,
         sparse_eps: 0.05,
         seed: 11, // same seed every pass -> identical traffic
+        ..Default::default()
     };
 
     let mut table = Table::new(&[
@@ -118,7 +158,23 @@ fn main() {
         passes.push((mode.name().to_string(), report));
     }
 
-    // Pass 4: full evaluation over v1-dense (the attention baseline).
+    // Pass 4: multiclass classify against the ensemble shard — native
+    // v3 binary frames, ensemble-class digit traffic.
+    let classify = loadgen::run(&LoadGenConfig {
+        mode: ClientMode::Classify,
+        model: Some("digits".to_string()),
+        digits: ENSEMBLE_CLASSES.iter().map(|&c| c as u8).collect(),
+        ..loadcfg(ClientMode::Classify)
+    })
+    .expect("classify pass");
+    assert_eq!(
+        classify.answered + classify.overloaded,
+        requests as u64,
+        "every classify answered"
+    );
+    row(&mut table, "classify/v3-binary", &classify);
+
+    // Pass 5: full evaluation over v1-dense (the attention baseline).
     let mut control = Client::connect(&addr).expect("control channel");
     control.reload(&full_snapshot).expect("hot reload to full evaluation");
     let full = loadgen::run(&loadcfg(ClientMode::V1Dense)).expect("full pass");
@@ -134,6 +190,17 @@ fn main() {
         "server totals: {} served, {} batches, early-exit rate {:.3}, {} reload(s)",
         stats.served, stats.batches, stats.early_exit_rate, stats.reloads
     );
+    if classify.answered > 0 {
+        println!(
+            "multiclass: {} voters/request, {:.1} features/request total, \
+             {:.1} features/voter (vs {:.0} dense per voter) — attention compounds \
+             across the all-pairs vote",
+            voters,
+            classify.avg_features(),
+            classify.avg_features_per_voter(),
+            DIM,
+        );
+    }
     let v1 = &passes[0].1;
     let v2b = &passes[2].1;
     if v1.req_per_s() > 0.0 && v1.avg_features() > 0.0 {
@@ -151,6 +218,7 @@ fn main() {
         );
     }
 
+    passes.push(("classify".to_string(), classify));
     passes.push(("full-v1-dense".to_string(), full));
     let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
     let report_json = loadgen::report_to_json(requests, &passes);

@@ -313,8 +313,11 @@ pub struct ServerConfig {
     /// corrupt or hostile length prefix beyond this kills the
     /// connection instead of allocating.
     pub max_frame_bytes: usize,
-    /// Protocol v2: cap on nonzeros per sparse score request (the wire
-    /// format itself caps at 65535; this may tighten it further).
+    /// Protocol v2+: cap on nonzeros per sparse score/classify request.
+    /// The legacy v2 `SCORE_SPARSE` frame is bounded at 65535 by its
+    /// `nnz:u16` field regardless; the v3 frames carry `nnz:u32`, so
+    /// this knob may range up to `u32::MAX` (the frame-byte cap is the
+    /// practical bound).
     pub max_nnz: usize,
     /// Base RNG seed for the prediction-time coordinate policies.
     pub seed: u64,
@@ -404,11 +407,11 @@ impl ServerConfig {
                 return Err(Error::Config(format!("server {name} must be >= 1")));
             }
         }
-        if self.max_nnz > u16::MAX as usize {
+        if self.max_nnz > u32::MAX as usize {
             return Err(Error::Config(format!(
-                "server max_nnz {} exceeds the wire format's u16 bound {}",
+                "server max_nnz {} exceeds the wire format's u32 bound {}",
                 self.max_nnz,
-                u16::MAX
+                u32::MAX
             )));
         }
         Ok(())
@@ -479,8 +482,16 @@ mod tests {
 
     #[test]
     fn server_config_rejects_protocol_knob_abuse() {
+        // The v3 sparse frames carry nnz as u32, so knobs up to that
+        // bound are now valid (the legacy u16 frame stays self-bounded).
         let cfg = ServerConfig { max_nnz: u16::MAX as usize + 1, ..Default::default() };
-        assert!(cfg.validate().is_err(), "nnz beyond the u16 wire bound");
+        cfg.validate().unwrap();
+        // The over-bound value only exists on 64-bit usize.
+        #[cfg(target_pointer_width = "64")]
+        {
+            let cfg = ServerConfig { max_nnz: u32::MAX as usize + 1, ..Default::default() };
+            assert!(cfg.validate().is_err(), "nnz beyond the u32 wire bound");
+        }
         let cfg = ServerConfig { max_frame_bytes: 0, ..Default::default() };
         assert!(cfg.validate().is_err());
     }

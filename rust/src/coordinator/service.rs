@@ -89,6 +89,328 @@ impl ModelSnapshot {
     }
 }
 
+/// One voter of an [`EnsembleSnapshot`]: the binary model for an
+/// unordered class pair. A positive margin votes for `pos`.
+#[derive(Debug, Clone)]
+pub struct VoterSnapshot {
+    /// Class a positive margin votes for.
+    pub pos: i64,
+    /// Class a negative margin votes for.
+    pub neg: i64,
+    /// Weight vector.
+    pub weights: Vec<f64>,
+    /// Conservative `var(S_n)` estimate for this voter's boundary.
+    pub var_sn: f64,
+}
+
+/// Immutable all-pairs (1-vs-1) multiclass ensemble snapshot — the
+/// serving counterpart of [`crate::learner::multiclass::OneVsOneEnsemble`],
+/// the way [`ModelSnapshot`] is the serving counterpart of a trained
+/// binary learner.
+///
+/// At classification time each of the `C(C-1)/2` voters runs the
+/// two-sided early-stopped sign test independently, so the paper's
+/// attention mechanism compounds: total feature cost is the sum of
+/// per-voter early exits, sub-linear in both support size and voter
+/// count touched, not `voters × dim`.
+#[derive(Debug, Clone)]
+pub struct EnsembleSnapshot {
+    /// Classes the ensemble distinguishes, strictly increasing.
+    pub classes: Vec<i64>,
+    /// Boundary every voter applies at prediction time.
+    pub boundary: AnyBoundary,
+    /// Coordinate policy for the per-voter prediction walks.
+    pub policy: CoordinatePolicy,
+    /// One voter per unordered class pair, in enumeration order
+    /// (`(classes[a], classes[b])` for `a < b`).
+    pub voters: Vec<VoterSnapshot>,
+}
+
+impl EnsembleSnapshot {
+    /// Snapshot a trained [`OneVsOneEnsemble`] for serving: per voter,
+    /// its weight vector and a conservative `var(S_n)` (max over the
+    /// two labels), plus the given prediction-time boundary and policy.
+    ///
+    /// [`OneVsOneEnsemble`]: crate::learner::multiclass::OneVsOneEnsemble
+    pub fn from_trained(
+        ensemble: &mut crate::learner::multiclass::OneVsOneEnsemble,
+        boundary: AnyBoundary,
+        policy: CoordinatePolicy,
+    ) -> Self {
+        use crate::learner::OnlineLearner as _;
+        let classes = ensemble.classes().to_vec();
+        let mut voters = Vec::with_capacity(ensemble.voter_count());
+        for (&(pos, neg), learner) in ensemble.voters_mut() {
+            let weights = learner.weights().to_vec();
+            let var_sn = {
+                let vc = learner.var_cache_mut();
+                let a = vc.var_sn(1.0, &weights);
+                let b = vc.var_sn(-1.0, &weights);
+                a.max(b)
+            };
+            voters.push(VoterSnapshot { pos, neg, weights, var_sn });
+        }
+        Self { classes, boundary, policy, voters }
+    }
+
+    /// Feature dimensionality (shared by every voter).
+    pub fn dim(&self) -> usize {
+        self.voters.first().map_or(0, |v| v.weights.len())
+    }
+
+    /// Number of binary voters (`C(C-1)/2`).
+    pub fn voter_count(&self) -> usize {
+        self.voters.len()
+    }
+
+    /// One coordinate-order generator per voter, seeded independently
+    /// and refreshed against that voter's weights — the per-worker
+    /// serving state for [`Self::classify`]. Weights are immutable for
+    /// the snapshot's lifetime, so the (possibly O(n log n)) refresh
+    /// happens once per worker generation, not per request.
+    pub fn make_orders(&self, seed: u64) -> Vec<OrderGenerator> {
+        self.voters
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                let salt = (i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut gen = OrderGenerator::new(self.policy, seed ^ salt);
+                gen.refresh(&v.weights);
+                gen
+            })
+            .collect()
+    }
+
+    /// Attentive all-pairs vote: every voter early-exits independently,
+    /// votes are tallied, and ties break toward the smaller class label
+    /// (deterministic, matching the offline
+    /// [`OneVsOneEnsemble::predict`]). `orders` must come from
+    /// [`Self::make_orders`] (one generator per voter, same order). The
+    /// response's `score` is the winning vote count and
+    /// `features_evaluated` the total across voters.
+    ///
+    /// [`OneVsOneEnsemble::predict`]:
+    /// crate::learner::multiclass::OneVsOneEnsemble::predict
+    pub fn classify(&self, features: &Features, orders: &mut [OrderGenerator]) -> ScoreResponse {
+        debug_assert_eq!(orders.len(), self.voters.len(), "one order generator per voter");
+        let predictor = EarlyStopPredictor::new(&self.boundary);
+        let mut votes: Vec<(i64, u32)> = self.classes.iter().map(|&c| (c, 0)).collect();
+        let mut evaluated = 0usize;
+        for (voter, orders) in self.voters.iter().zip(orders.iter_mut()) {
+            let (score, k) = match features {
+                Features::Dense(x) => {
+                    let order = orders.next();
+                    predictor.predict(&voter.weights, x, order, voter.var_sn)
+                }
+                Features::Sparse { idx, val } => {
+                    let order = orders.next_sparse(&voter.weights, idx);
+                    predictor.predict_sparse(&voter.weights, idx, val, order, voter.var_sn)
+                }
+            };
+            evaluated += k;
+            let winner = if score >= 0.0 { voter.pos } else { voter.neg };
+            if let Some(slot) = votes.iter_mut().find(|(c, _)| *c == winner) {
+                slot.1 += 1;
+            }
+        }
+        let &(label, won) = votes.iter().max_by_key(|(c, v)| (*v, -*c)).unwrap();
+        ScoreResponse {
+            score: won as f64,
+            features_evaluated: evaluated,
+            classify: Some(ClassifyInfo {
+                label,
+                votes: won,
+                voters: self.voters.len() as u32,
+            }),
+        }
+    }
+
+    /// Serialize (for `attentive serve --model name=path`). Tagged with
+    /// `"kind":"ensemble"`; the presence of `voters` is what
+    /// [`ServingModel::from_json`] dispatches on.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("kind", Json::Str("ensemble".into())),
+            ("classes", Json::Arr(self.classes.iter().map(|&c| Json::Num(c as f64)).collect())),
+            ("boundary", self.boundary.to_json()),
+            ("policy", Json::Str(self.policy.name().into())),
+            (
+                "voters",
+                Json::Arr(
+                    self.voters
+                        .iter()
+                        .map(|v| {
+                            Json::obj([
+                                ("pos", Json::Num(v.pos as f64)),
+                                ("neg", Json::Num(v.neg as f64)),
+                                (
+                                    "weights",
+                                    Json::Arr(v.weights.iter().map(|&w| Json::Num(w)).collect()),
+                                ),
+                                ("var_sn", Json::Num(v.var_sn)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse the form produced by [`Self::to_json`], enforcing the
+    /// structural invariants serving relies on: ≥ 2 strictly increasing
+    /// classes, exactly `C(C-1)/2` voters in pair-enumeration order,
+    /// and one shared dimensionality.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let classes: Vec<i64> = v
+            .get("classes")
+            .and_then(|a| a.as_arr())
+            .ok_or("ensemble: missing classes")?
+            .iter()
+            .map(|x| x.as_i64().ok_or_else(|| "ensemble: non-integer class".to_string()))
+            .collect::<Result<_, _>>()?;
+        if classes.len() < 2 {
+            return Err("ensemble: needs >= 2 classes".into());
+        }
+        if !classes.windows(2).all(|w| w[0] < w[1]) {
+            return Err("ensemble: classes must be strictly increasing".into());
+        }
+        let boundary =
+            AnyBoundary::from_json(v.get("boundary").ok_or("ensemble: missing boundary")?)?;
+        let policy = CoordinatePolicy::from_name(
+            v.get("policy").and_then(|s| s.as_str()).ok_or("ensemble: missing policy")?,
+        )?;
+        let voter_docs =
+            v.get("voters").and_then(|a| a.as_arr()).ok_or("ensemble: missing voters")?;
+        let mut voters = Vec::with_capacity(voter_docs.len());
+        for doc in voter_docs {
+            voters.push(VoterSnapshot {
+                pos: doc.get("pos").and_then(|x| x.as_i64()).ok_or("ensemble voter: missing pos")?,
+                neg: doc.get("neg").and_then(|x| x.as_i64()).ok_or("ensemble voter: missing neg")?,
+                weights: doc
+                    .get("weights")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("ensemble voter: missing weights")?
+                    .iter()
+                    .map(|x| {
+                        x.as_f64().ok_or_else(|| "ensemble voter: non-numeric weight".to_string())
+                    })
+                    .collect::<Result<_, _>>()?,
+                var_sn: doc
+                    .get("var_sn")
+                    .and_then(|x| x.as_f64())
+                    .ok_or("ensemble voter: missing var_sn")?,
+            });
+        }
+        // The voter list must be exactly the pair enumeration: the vote
+        // mapping (and the offline-equivalence guarantee) depends on it.
+        let mut expected = Vec::new();
+        for a in 0..classes.len() {
+            for b in a + 1..classes.len() {
+                expected.push((classes[a], classes[b]));
+            }
+        }
+        if voters.len() != expected.len() {
+            return Err(format!(
+                "ensemble: {} voters for {} classes (need {})",
+                voters.len(),
+                classes.len(),
+                expected.len()
+            ));
+        }
+        for (voter, (pos, neg)) in voters.iter().zip(&expected) {
+            if (voter.pos, voter.neg) != (*pos, *neg) {
+                return Err(format!(
+                    "ensemble: voter pair ({}, {}) out of enumeration order (expected ({pos}, {neg}))",
+                    voter.pos, voter.neg
+                ));
+            }
+        }
+        let dim = voters[0].weights.len();
+        if voters.iter().any(|v| v.weights.len() != dim) {
+            return Err("ensemble: voters disagree on dimensionality".into());
+        }
+        Ok(Self { classes, boundary, policy, voters })
+    }
+}
+
+/// What a serving shard hosts: one binary model or an all-pairs
+/// multiclass ensemble. The service and hub are generic over this, so
+/// both kinds get identical batching, generation-pinning, and
+/// drain-on-swap semantics.
+#[derive(Debug, Clone)]
+pub enum ServingModel {
+    /// A single binary model answering `score` requests.
+    Binary(ModelSnapshot),
+    /// An all-pairs ensemble answering `classify` requests.
+    Ensemble(EnsembleSnapshot),
+}
+
+impl From<ModelSnapshot> for ServingModel {
+    fn from(snapshot: ModelSnapshot) -> Self {
+        ServingModel::Binary(snapshot)
+    }
+}
+
+impl From<EnsembleSnapshot> for ServingModel {
+    fn from(snapshot: EnsembleSnapshot) -> Self {
+        ServingModel::Ensemble(snapshot)
+    }
+}
+
+impl ServingModel {
+    /// Feature dimensionality.
+    pub fn dim(&self) -> usize {
+        match self {
+            ServingModel::Binary(m) => m.weights.len(),
+            ServingModel::Ensemble(e) => e.dim(),
+        }
+    }
+
+    /// `"binary"` or `"ensemble"` — the wire name of the model kind.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ServingModel::Binary(_) => "binary",
+            ServingModel::Ensemble(_) => "ensemble",
+        }
+    }
+
+    /// Voters behind this model (0 for a binary model).
+    pub fn voter_count(&self) -> usize {
+        match self {
+            ServingModel::Binary(_) => 0,
+            ServingModel::Ensemble(e) => e.voter_count(),
+        }
+    }
+
+    /// The request kind this model answers.
+    pub fn kind(&self) -> ReqKind {
+        match self {
+            ServingModel::Binary(_) => ReqKind::Score,
+            ServingModel::Ensemble(_) => ReqKind::Classify,
+        }
+    }
+
+    /// Serialize: a binary model keeps the legacy untagged
+    /// [`ModelSnapshot`] form (existing snapshot files and v1 `reload`
+    /// payloads stay valid); an ensemble is the tagged form with
+    /// `voters`.
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServingModel::Binary(m) => m.to_json(),
+            ServingModel::Ensemble(e) => e.to_json(),
+        }
+    }
+
+    /// Parse either form, dispatching on the presence of `voters`.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        if v.get("voters").is_some() {
+            EnsembleSnapshot::from_json(v).map(ServingModel::Ensemble)
+        } else {
+            ModelSnapshot::from_json(v).map(ServingModel::Binary)
+        }
+    }
+}
+
 /// A scoring payload: dense vector or sparse `(idx, val)` pairs.
 ///
 /// The sparse form is the wire protocol v2 request shape and flows
@@ -213,19 +535,58 @@ impl Features {
     }
 }
 
+/// Which evaluation a request asks for. Must match the serving model's
+/// kind ([`ServingModel::kind`]); the hub screens mismatches before
+/// admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqKind {
+    /// Binary margin (`score` op) — needs a [`ServingModel::Binary`].
+    Score,
+    /// All-pairs vote (`classify` op) — needs a
+    /// [`ServingModel::Ensemble`].
+    Classify,
+}
+
+impl ReqKind {
+    /// Wire name of the op.
+    pub fn name(self) -> &'static str {
+        match self {
+            ReqKind::Score => "score",
+            ReqKind::Classify => "classify",
+        }
+    }
+}
+
 /// One scoring request (internal envelope).
 struct ScoreRequest {
     features: Features,
+    kind: ReqKind,
     respond: SyncSender<ScoreResponse>,
+}
+
+/// Multiclass outcome attached to a classify response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClassifyInfo {
+    /// Predicted class (the vote winner; ties break toward the smaller
+    /// label).
+    pub label: i64,
+    /// Votes the winner collected.
+    pub votes: u32,
+    /// Voters consulted (`C(C-1)/2`).
+    pub voters: u32,
 }
 
 /// Scoring result.
 #[derive(Debug, Clone, Copy)]
 pub struct ScoreResponse {
-    /// Signed margin estimate; the prediction is its sign.
+    /// Binary requests: signed margin estimate (the prediction is its
+    /// sign). Classify requests: the winning vote count.
     pub score: f64,
-    /// Features evaluated before the early exit (≤ dim).
+    /// Features evaluated before the early exit (for classify: summed
+    /// across all voters).
     pub features_evaluated: usize,
+    /// The multiclass outcome (classify requests only).
+    pub classify: Option<ClassifyInfo>,
 }
 
 /// Number of log2-spaced buckets in the features-touched histogram:
@@ -379,8 +740,18 @@ impl ServiceHandle {
     /// if the service has shut down or the queue is persistently full
     /// (backpressure).
     pub fn score(&self, features: impl Into<Features>) -> Option<ScoreResponse> {
+        self.call(features, ReqKind::Score)
+    }
+
+    /// Classify one payload against an ensemble service, blocking until
+    /// the result arrives (see [`Self::score`] for the `None` cases).
+    pub fn classify(&self, features: impl Into<Features>) -> Option<ScoreResponse> {
+        self.call(features, ReqKind::Classify)
+    }
+
+    fn call(&self, features: impl Into<Features>, kind: ReqKind) -> Option<ScoreResponse> {
         let (tx, rx) = sync_channel(1);
-        match self.tx.try_send(ScoreRequest { features: features.into(), respond: tx }) {
+        match self.tx.try_send(ScoreRequest { features: features.into(), kind, respond: tx }) {
             Ok(()) => {}
             Err(TrySendError::Full(req)) => {
                 // Block on a full queue (backpressure) rather than dropping.
@@ -401,8 +772,18 @@ impl ServiceHandle {
         &self,
         features: impl Into<Features>,
     ) -> Result<Receiver<ScoreResponse>, SubmitError> {
+        self.submit_kind(features, ReqKind::Score)
+    }
+
+    /// [`Self::submit`] with an explicit request kind (`classify` for
+    /// ensemble services).
+    pub fn submit_kind(
+        &self,
+        features: impl Into<Features>,
+        kind: ReqKind,
+    ) -> Result<Receiver<ScoreResponse>, SubmitError> {
         let (tx, rx) = sync_channel(1);
-        match self.tx.try_send(ScoreRequest { features: features.into(), respond: tx }) {
+        match self.tx.try_send(ScoreRequest { features: features.into(), kind, respond: tx }) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
             Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
@@ -412,7 +793,7 @@ impl ServiceHandle {
 
 /// The prediction service: owns the model and the batching workers.
 pub struct PredictionService {
-    model: Arc<ModelSnapshot>,
+    model: Arc<ServingModel>,
     /// Max requests drained per batch.
     pub max_batch: usize,
     /// Queue capacity (backpressure bound).
@@ -439,10 +820,17 @@ impl RunningService {
 }
 
 impl PredictionService {
-    /// Service over a model snapshot.
-    pub fn new(model: ModelSnapshot, max_batch: usize, queue: usize, seed: u64) -> Self {
+    /// Service over a serving model (a binary [`ModelSnapshot`] converts
+    /// implicitly; pass a [`ServingModel::Ensemble`] for classify
+    /// serving).
+    pub fn new(
+        model: impl Into<ServingModel>,
+        max_batch: usize,
+        queue: usize,
+        seed: u64,
+    ) -> Self {
         Self {
-            model: Arc::new(model),
+            model: Arc::new(model.into()),
             max_batch: max_batch.max(1),
             queue: queue.max(1),
             workers: 1,
@@ -477,60 +865,125 @@ impl PredictionService {
     }
 }
 
+/// Blocking receive for the first request, opportunistic drain for the
+/// rest — dynamic batching without a timer. Returns `false` when every
+/// sender has dropped (worker should exit).
+fn drain_batch(
+    rx: &Mutex<Receiver<ScoreRequest>>,
+    batch: &mut Vec<ScoreRequest>,
+    max_batch: usize,
+) -> bool {
+    let guard = rx.lock().unwrap();
+    match guard.recv() {
+        Ok(first) => batch.push(first),
+        Err(_) => return false, // all senders dropped
+    }
+    while batch.len() < max_batch {
+        match guard.try_recv() {
+            Ok(req) => batch.push(req),
+            Err(_) => break,
+        }
+    }
+    true // lock released on return, before compute
+}
+
 fn worker_loop(
     rx: Arc<Mutex<Receiver<ScoreRequest>>>,
-    model: Arc<ModelSnapshot>,
+    model: Arc<ServingModel>,
     stats: Arc<ServiceStats>,
+    max_batch: usize,
+    seed: u64,
+) {
+    match &*model {
+        ServingModel::Binary(snapshot) => binary_worker(&rx, snapshot, &stats, max_batch, seed),
+        ServingModel::Ensemble(ensemble) => {
+            ensemble_worker(&rx, ensemble, &stats, max_batch, seed)
+        }
+    }
+}
+
+/// The reject sentinel for a request the hub's screens should have
+/// stopped (wrong kind for the model, or a dimensionality that slipped
+/// past admission across a reload): the NaN score renders as a
+/// structured error at the front-end.
+fn reject() -> ScoreResponse {
+    ScoreResponse { score: f64::NAN, features_evaluated: 0, classify: None }
+}
+
+fn binary_worker(
+    rx: &Mutex<Receiver<ScoreRequest>>,
+    model: &ModelSnapshot,
+    stats: &ServiceStats,
     max_batch: usize,
     seed: u64,
 ) {
     let mut orders = OrderGenerator::new(model.policy, seed);
     orders.refresh(&model.weights);
     let mut batch: Vec<ScoreRequest> = Vec::with_capacity(max_batch);
-    loop {
-        // Blocking receive for the first request, opportunistic drain for
-        // the rest — dynamic batching without a timer.
-        {
-            let guard = rx.lock().unwrap();
-            match guard.recv() {
-                Ok(first) => batch.push(first),
-                Err(_) => return, // all senders dropped
-            }
-            while batch.len() < max_batch {
-                match guard.try_recv() {
-                    Ok(req) => batch.push(req),
-                    Err(_) => break,
-                }
-            }
-        } // release the lock before compute
+    while drain_batch(rx, &mut batch, max_batch) {
         stats.batches.fetch_add(1, Ordering::Relaxed);
         let dim = model.weights.len();
         for req in batch.drain(..) {
             // For sparse payloads "full evaluation" means the whole
             // support: zero coordinates are skipped losslessly, so both
             // the walk and the early-exit accounting run against nnz.
-            let (resp, total) = if req.features.check_dim(dim).is_err() {
-                (ScoreResponse { score: f64::NAN, features_evaluated: 0 }, dim)
-            } else {
-                let predictor = EarlyStopPredictor::new(&model.boundary);
-                let (score, k, total) = match &req.features {
-                    Features::Dense(x) => {
-                        let order = orders.next();
-                        let (s, k) = predictor.predict(&model.weights, x, order, model.var_sn);
-                        (s, k, dim)
-                    }
-                    Features::Sparse { idx, val } => {
-                        let order = orders.next_sparse(&model.weights, idx);
-                        let (s, k) =
-                            predictor.predict_sparse(&model.weights, idx, val, order, model.var_sn);
-                        (s, k, idx.len())
-                    }
+            let (resp, total) =
+                if req.kind != ReqKind::Score || req.features.check_dim(dim).is_err() {
+                    (reject(), dim)
+                } else {
+                    let predictor = EarlyStopPredictor::new(&model.boundary);
+                    let (score, k, total) = match &req.features {
+                        Features::Dense(x) => {
+                            let order = orders.next();
+                            let (s, k) = predictor.predict(&model.weights, x, order, model.var_sn);
+                            (s, k, dim)
+                        }
+                        Features::Sparse { idx, val } => {
+                            let order = orders.next_sparse(&model.weights, idx);
+                            let (s, k) = predictor.predict_sparse(
+                                &model.weights,
+                                idx,
+                                val,
+                                order,
+                                model.var_sn,
+                            );
+                            (s, k, idx.len())
+                        }
+                    };
+                    (ScoreResponse { score, features_evaluated: k, classify: None }, total)
                 };
-                (ScoreResponse { score, features_evaluated: k }, total)
-            };
             // Dimension-mismatch rejects land in bucket 0 and count as
             // "early exit"; the network front-end screens those out before
             // admission, so served traffic keeps the histogram honest.
+            stats.record(resp.features_evaluated, total);
+            let _ = req.respond.send(resp);
+        }
+    }
+}
+
+fn ensemble_worker(
+    rx: &Mutex<Receiver<ScoreRequest>>,
+    ensemble: &EnsembleSnapshot,
+    stats: &ServiceStats,
+    max_batch: usize,
+    seed: u64,
+) {
+    let mut orders = ensemble.make_orders(seed);
+    let mut batch: Vec<ScoreRequest> = Vec::with_capacity(max_batch);
+    let dim = ensemble.dim();
+    let voters = ensemble.voter_count();
+    while drain_batch(rx, &mut batch, max_batch) {
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        for req in batch.drain(..) {
+            // "Full evaluation" for the ensemble is every voter walking
+            // the whole support; early-exit accounting runs against that.
+            let (resp, total) =
+                if req.kind != ReqKind::Classify || req.features.check_dim(dim).is_err() {
+                    (reject(), dim * voters)
+                } else {
+                    let total = req.features.nnz() * voters;
+                    (ensemble.classify(&req.features, &mut orders), total)
+                };
             stats.record(resp.features_evaluated, total);
             let _ = req.respond.send(resp);
         }
@@ -855,6 +1308,117 @@ mod tests {
             Err((784, 10_000))
         );
         assert!(Features::Sparse { idx: vec![], val: vec![] }.check_dim(4).is_ok());
+    }
+
+    /// Flat deterministic 3-class ensemble: every voter's weights are
+    /// all `+1`, so a positive input makes every voter vote its `pos`
+    /// class (votes 0:2, 1:1, 2:0 → label 0) and a negative input its
+    /// `neg` class (votes 1:1, 2:2 → label 2).
+    fn flat_ensemble(dim: usize) -> EnsembleSnapshot {
+        let classes = vec![0i64, 1, 2];
+        let mut voters = Vec::new();
+        for a in 0..classes.len() {
+            for b in a + 1..classes.len() {
+                voters.push(VoterSnapshot {
+                    pos: classes[a],
+                    neg: classes[b],
+                    weights: vec![1.0; dim],
+                    var_sn: 4.0,
+                });
+            }
+        }
+        EnsembleSnapshot {
+            classes,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+            voters,
+        }
+    }
+
+    #[test]
+    fn ensemble_classify_votes_deterministically_and_early_exits() {
+        let dim = 64;
+        let ens = flat_ensemble(dim);
+        assert_eq!(ens.dim(), dim);
+        assert_eq!(ens.voter_count(), 3);
+        let mut orders = ens.make_orders(0);
+        let up = ens.classify(&Features::Dense(vec![1.0; dim]), &mut orders);
+        let info = up.classify.expect("classify outcome");
+        assert_eq!(info.label, 0);
+        assert_eq!(info.votes, 2);
+        assert_eq!(info.voters, 3);
+        assert_eq!(up.score, 2.0, "score carries the winning vote count");
+        assert!(
+            up.features_evaluated < 3 * dim,
+            "voters must early-exit, spent {}",
+            up.features_evaluated
+        );
+        let down = ens.classify(&Features::Dense(vec![-1.0; dim]), &mut orders);
+        assert_eq!(down.classify.unwrap().label, 2);
+        // Sparse payloads walk only the support, per voter.
+        let sparse =
+            ens.classify(&Features::Sparse { idx: vec![3, 9], val: vec![1.0, 1.0] }, &mut orders);
+        assert_eq!(sparse.classify.unwrap().label, 0);
+        assert!(sparse.features_evaluated <= 6, "3 voters × nnz 2 caps the walk");
+    }
+
+    #[test]
+    fn ensemble_snapshot_json_round_trip_and_validation() {
+        let ens = flat_ensemble(4);
+        let text = ens.to_json().to_string_compact();
+        let back = EnsembleSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.classes, ens.classes);
+        assert_eq!(back.voter_count(), 3);
+        assert_eq!(back.voters[1].pos, 0);
+        assert_eq!(back.voters[1].neg, 2);
+        assert_eq!(back.voters[0].weights, vec![1.0; 4]);
+
+        // ServingModel dispatches on the `voters` field.
+        match ServingModel::from_json(&Json::parse(&text).unwrap()).unwrap() {
+            ServingModel::Ensemble(e) => assert_eq!(e.dim(), 4),
+            other => panic!("expected ensemble, got {}", other.kind_name()),
+        }
+        let binary = model(4).to_json().to_string_compact();
+        match ServingModel::from_json(&Json::parse(&binary).unwrap()).unwrap() {
+            ServingModel::Binary(m) => assert_eq!(m.weights.len(), 4),
+            other => panic!("expected binary, got {}", other.kind_name()),
+        }
+
+        // Structural rejections.
+        let parse = |s: &str| EnsembleSnapshot::from_json(&Json::parse(s).unwrap());
+        let mut one_class = ens.clone();
+        one_class.classes = vec![7];
+        assert!(parse(&one_class.to_json().to_string_compact()).is_err(), "one class");
+        let mut missing_voter = ens.clone();
+        missing_voter.voters.pop();
+        assert!(parse(&missing_voter.to_json().to_string_compact()).is_err(), "voter count");
+        let mut swapped = ens.clone();
+        swapped.voters.swap(0, 1);
+        assert!(parse(&swapped.to_json().to_string_compact()).is_err(), "pair order");
+        let mut ragged = ens.clone();
+        ragged.voters[2].weights.push(0.0);
+        assert!(parse(&ragged.to_json().to_string_compact()).is_err(), "ragged dims");
+    }
+
+    #[test]
+    fn ensemble_service_classifies_and_rejects_wrong_kind() {
+        let dim = 32;
+        let (h, run) = PredictionService::new(flat_ensemble(dim), 4, 16, 0).spawn();
+        let resp = h.classify(vec![1.0; dim]).unwrap();
+        assert_eq!(resp.classify.unwrap().label, 0);
+        // A score request against an ensemble shard is the worker-level
+        // reject sentinel (the hub screens this before admission).
+        let resp = h.score(vec![1.0; dim]).unwrap();
+        assert!(resp.score.is_nan());
+        assert!(resp.classify.is_none());
+        // And classify against a binary shard likewise.
+        drop(h);
+        run.join();
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0).spawn();
+        let resp = h.classify(vec![1.0; dim]).unwrap();
+        assert!(resp.score.is_nan());
+        drop(h);
+        run.join();
     }
 
     #[test]

@@ -62,6 +62,18 @@ impl OneVsOneEnsemble {
         self.voters.len()
     }
 
+    /// Mutable view of the voters in pair-enumeration order (`(a, b)`
+    /// with `a < b` over the sorted classes). Mutable because reading a
+    /// voter's serving statistics (`var_sn`) refreshes its variance
+    /// cache — this is how
+    /// [`crate::coordinator::service::EnsembleSnapshot::from_trained`]
+    /// snapshots the ensemble for serving.
+    pub fn voters_mut(
+        &mut self,
+    ) -> impl Iterator<Item = (&(i64, i64), &mut BoundedPegasos<AnyBoundary>)> {
+        self.voters.iter_mut().map(|(pair, learner)| (&*pair, learner))
+    }
+
     /// One online pass over a multiclass dataset in the given row order.
     /// Each example trains only the `C-1` voters whose pair contains its
     /// label. Returns total feature evaluations spent.

@@ -7,8 +7,12 @@
 //! * `simulate`    — Figure 2 boundary validation (decision errors +
 //!   stopping times).
 //! * `serve`       — serve early-stopped predictions: either over TCP
-//!   (`--listen ADDR`, JSON-lines protocol with stats + hot reload) or
+//!   (`--listen ADDR`, JSON-lines protocol with stats + hot reload;
+//!   `--model name=path`, repeatable, hosts a registry of named shards —
+//!   binary models and all-pairs ensembles — behind the one port) or
 //!   in-process over synthetic traffic (throughput/feature stats).
+//! * `train-multiclass` — train the all-pairs 1-vs-1 attentive ensemble
+//!   on synthetic digits and write its serving snapshot.
 //! * `bench-serve` — drive a serving front-end over loopback with the
 //!   load-generator client and compare attentive vs full evaluation.
 //! * `init-config` — write a default config to edit.
@@ -20,14 +24,22 @@ use anyhow::{bail, Context};
 
 use attentive::config::{ExperimentConfig, ServerConfig};
 use attentive::coordinator::scheduler::{run_experiment, run_sweep};
-use attentive::coordinator::service::{ModelSnapshot, PredictionService};
+use attentive::coordinator::service::{
+    EnsembleSnapshot, ModelSnapshot, PredictionService, ServingModel,
+};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
+use attentive::data::stream::ShuffledIndices;
 use attentive::data::synth::SynthDigits;
+use attentive::learner::multiclass::OneVsOneEnsemble;
+use attentive::learner::pegasos::PegasosConfig;
+use attentive::margin::policy::CoordinatePolicy;
 use attentive::metrics::export::{curves_to_csv, Table};
 use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
+use attentive::server::registry::DEFAULT_MODEL;
 use attentive::server::tcp::TcpServer;
 use attentive::sim::bridge::{simulate_decision_errors, BridgeSimConfig};
 use attentive::sim::stopping::{fit_sqrt, simulate_stopping_times, StoppingSimConfig};
+use attentive::stst::boundary::AnyBoundary;
 use attentive::util::cli::Args;
 use attentive::util::json::Json;
 
@@ -38,17 +50,29 @@ USAGE: attentive <COMMAND> [OPTIONS]
 
 COMMANDS:
   train        [--config exp.json] [--csv out.csv]
+  train-multiclass
+               [--classes 1,2,3] [--count N] [--epochs E] [--lambda L]
+               [--delta D] [--seed S] [--out ensemble.json]
+               trains the all-pairs 1-vs-1 attentive ensemble on synthetic
+               digits and writes its serving snapshot (host it with
+               serve --model digits=ensemble.json; score it with classify)
   sweep        <dir> [--csv out.csv]
   simulate     [--walks N] [--csv out.csv]
   serve        [--listen ADDR] [--snapshot model.json] [--server-config srv.json]
-               [--requests N] [--batch B] [--workers W] [--queue Q]
-               with --listen: TCP server (v1 JSON lines; hello {"proto":2}
-               upgrades a connection to v2 binary frames — docs/PROTOCOL.md);
-               otherwise: in-process synthetic-traffic benchmark
-  bench-serve  [--addr ADDR] [--mode v1-dense|v2-sparse-json|v2-binary]
-               [--requests N] [--connections C] [--pipeline P] [--hard FRAC]
-               [--sparse-eps E] [--batch B] [--workers W] [--queue Q]
-               [--json BENCH_serve.json] [--floors ci/bench_floors.json]
+               [--model name=path ...] [--requests N] [--batch B]
+               [--workers W] [--queue Q]
+               with --listen: TCP server (v1 JSON lines; a hello op with
+               proto 2 or 3 upgrades a connection to binary frames —
+               docs/PROTOCOL.md). --model name=path (repeatable) serves a
+               registry of named shards behind one port: each path holds a
+               binary ModelSnapshot or an ensemble snapshot, the first name
+               is the default shard, and every shard hot-reloads
+               independently. otherwise: in-process synthetic benchmark
+  bench-serve  [--addr ADDR] [--mode v1-dense|v2-sparse-json|v2-binary|classify]
+               [--model NAME] [--requests N] [--connections C] [--pipeline P]
+               [--hard FRAC] [--sparse-eps E] [--batch B] [--workers W]
+               [--queue Q] [--json BENCH_serve.json]
+               [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
                three wire modes (plus full evaluation) on the same traffic;
                --json writes the machine-readable report, --floors gates on
@@ -67,6 +91,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::parse(&argv[1..]).map_err(|e| anyhow::anyhow!(e))?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
+        "train-multiclass" => cmd_train_multiclass(&args),
         "sweep" => cmd_sweep(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
@@ -231,6 +256,72 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Train the all-pairs 1-vs-1 attentive ensemble on synthetic digits
+/// and write its serving snapshot.
+fn cmd_train_multiclass(args: &Args) -> anyhow::Result<()> {
+    let mut classes: Vec<i64> = args
+        .get("classes", "1,2,3")
+        .split(',')
+        .map(|s| s.trim().parse::<i64>().map_err(|_| anyhow::anyhow!("bad class {s:?}")))
+        .collect::<anyhow::Result<_>>()?;
+    // Dedup before the count check: OneVsOneEnsemble dedups internally,
+    // so "--classes 3,3" would otherwise slip through as a degenerate
+    // 1-class / 0-voter ensemble that serve later refuses to load.
+    classes.sort_unstable();
+    classes.dedup();
+    if classes.len() < 2 {
+        bail!("train-multiclass needs at least 2 distinct classes");
+    }
+    for &c in &classes {
+        if !(0..=9).contains(&c) {
+            bail!("synthetic digit classes must be 0..=9, got {c}");
+        }
+    }
+    let count = args.get_parse("count", 3_000usize).map_err(|e| anyhow::anyhow!(e))?;
+    let epochs = args.get_parse("epochs", 2u64).map_err(|e| anyhow::anyhow!(e))?;
+    let lambda = args.get_parse("lambda", 1e-2f64).map_err(|e| anyhow::anyhow!(e))?;
+    let delta = args.get_parse("delta", 0.1f64).map_err(|e| anyhow::anyhow!(e))?;
+    let seed = args.get_parse("seed", 7u64).map_err(|e| anyhow::anyhow!(e))?;
+
+    let digit_classes: Vec<u8> = classes.iter().map(|&c| c as u8).collect();
+    let ds = SynthDigits::new(seed).generate_classes(count, &digit_classes);
+    let (train, test) = ds.split(0.8);
+    let boundary = AnyBoundary::Constant { delta, paper_literal: false };
+    let cfg = PegasosConfig { lambda, seed, ..Default::default() };
+    let mut ensemble = OneVsOneEnsemble::new(train.dim(), &classes, cfg, boundary.clone())?;
+    let shuffle = ShuffledIndices::new(train.len(), seed);
+    let mut spent = 0u64;
+    for epoch in 0..epochs {
+        spent += ensemble.train_pass(&train, &shuffle.epoch(epoch));
+    }
+    let (acc, pred_features) = ensemble.evaluate(&test);
+    let per_example = spent as f64 / (train.len() as f64 * epochs as f64);
+    println!(
+        "{} classes, {} voters: accuracy {:.4}, train features/example {:.1}, \
+         predict features/example {:.1} (dim {}, {} voters consulted each)",
+        classes.len(),
+        ensemble.voter_count(),
+        acc,
+        per_example,
+        pred_features,
+        train.dim(),
+        ensemble.voter_count(),
+    );
+    // Permuted prediction order: pixel order is spatially correlated,
+    // violating the bridge's exchangeability assumption (see DESIGN.md).
+    let snapshot =
+        EnsembleSnapshot::from_trained(&mut ensemble, boundary, CoordinatePolicy::Permuted);
+    let text = snapshot.to_json().to_string_pretty();
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(path, text)?;
+            println!("ensemble snapshot written to {path}");
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
 /// Train a quick attentive snapshot from the paper-default experiment
 /// (used whenever the serve commands are not given `--snapshot`).
 fn train_default_snapshot() -> anyhow::Result<ModelSnapshot> {
@@ -280,22 +371,72 @@ fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
     Ok(cfg)
 }
 
+/// Parse the repeatable `--model name=path` flags into registry shards.
+fn parse_model_flags(args: &Args) -> anyhow::Result<Vec<(String, ServingModel)>> {
+    let mut models = Vec::new();
+    for spec in args.opt_all("model") {
+        let (name, path) = spec
+            .split_once('=')
+            .with_context(|| format!("--model {spec:?}: expected name=path"))?;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model {name:?} from {path}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("model {name:?}: {e}"))?;
+        let model =
+            ServingModel::from_json(&doc).map_err(|e| anyhow::anyhow!("model {name:?}: {e}"))?;
+        models.push((name.to_string(), model));
+    }
+    Ok(models)
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
-    if args.opt("listen").is_some() || args.opt("server-config").is_some() {
-        // Network mode: JSON-lines TCP front-end with hot reload.
+    let model_flags = parse_model_flags(args)?;
+    if !model_flags.is_empty() && args.opt("snapshot").is_some() {
+        // Refuse the ambiguity rather than silently ignoring one flag:
+        // with --model the default shard is the first --model entry.
+        bail!(
+            "--snapshot and --model are mutually exclusive; list the default shard first, \
+             e.g. --model default={}",
+            args.opt("snapshot").unwrap_or("model.json")
+        );
+    }
+    if args.opt("listen").is_some()
+        || args.opt("server-config").is_some()
+        || !model_flags.is_empty()
+    {
+        // Network mode: TCP front-end with hot reload, hosting either
+        // one default shard (--snapshot / trained on the fly) or the
+        // full --model registry.
         let cfg = server_config_from_args(args)?;
-        let snapshot = load_or_train_snapshot(args)?;
-        let dim = snapshot.weights.len();
-        let server = TcpServer::serve(&cfg, snapshot)?;
+        let models = if model_flags.is_empty() {
+            vec![(DEFAULT_MODEL.to_string(), load_or_train_snapshot(args)?.into())]
+        } else {
+            model_flags
+        };
+        let summary: Vec<String> = models
+            .iter()
+            .map(|(name, m)| {
+                if m.voter_count() > 0 {
+                    format!("{name}=ensemble(dim {}, {} voters)", m.dim(), m.voter_count())
+                } else {
+                    format!("{name}=binary(dim {})", m.dim())
+                }
+            })
+            .collect();
+        let server = TcpServer::serve_models(&cfg, models)?;
         println!(
-            "serving a dim-{dim} model on {} ({} workers, batch {}, queue {})",
+            "serving {} shard(s) on {} ({} workers/shard, batch {}, queue {}): {}",
+            summary.len(),
             server.local_addr(),
             cfg.workers,
             cfg.max_batch,
-            cfg.queue
+            cfg.queue,
+            summary.join(", ")
         );
-        println!("ops: score / stats / reload / ping / hello — one JSON object per line");
-        println!("protocol v2: hello {{\"proto\":2}} switches to sparse binary frames");
+        println!(
+            "ops: score / classify / stats / models / reload / ping / hello — one JSON \
+             object per line; optional \"model\" field routes to a named shard"
+        );
+        println!("protocol v2/v3: hello {{\"proto\":3}} switches to sparse binary frames");
         server.wait();
         return Ok(());
     }
@@ -356,6 +497,17 @@ fn check_bench_floors(report: &Json, floors: &Json) -> Vec<String> {
             None => violations.push("report lacks ratio_v2_binary_vs_v1_dense".into()),
         }
     }
+    if let Some(min_ratio) =
+        floors.get("v2_sparse_json_vs_v1_dense_min_ratio").and_then(|x| x.as_f64())
+    {
+        match report.get("ratio_v2_sparse_json_vs_v1_dense").and_then(|x| x.as_f64()) {
+            Some(r) if r >= min_ratio => {}
+            Some(r) => violations.push(format!(
+                "v2-sparse-json is only {r:.2}x v1-dense throughput (floor {min_ratio:.2}x)"
+            )),
+            None => violations.push("report lacks ratio_v2_sparse_json_vs_v1_dense".into()),
+        }
+    }
     if let Some(min_rps) = floors.get("v2_binary_min_req_per_s").and_then(|x| x.as_f64()) {
         let rps = report
             .get("modes")
@@ -388,6 +540,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         mode,
         sparse_eps,
         seed: 1, // same seed every pass -> identical traffic
+        ..Default::default()
     };
     let mut table = Table::new(&[
         "serving",
@@ -415,12 +568,24 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let mut passes: Vec<(String, attentive::server::loadgen::LoadReport)> = Vec::new();
 
     if let Some(addr) = args.opt("addr") {
-        // External server: one pass, on the selected wire mode.
+        // External server: one pass, on the selected wire mode
+        // (--model routes it to a named shard; required for classify).
         let mode = ClientMode::from_name(&args.get("mode", "v1-dense"))
             .map_err(|e| anyhow::anyhow!(e))?;
-        let report = loadgen::run(&loadcfg(addr.to_string(), mode))?;
+        let mut cfg = loadcfg(addr.to_string(), mode);
+        cfg.model = args.opt("model").map(str::to_string);
+        let report = loadgen::run(&cfg)?;
         row(&mut table, mode.name(), &report);
         println!("{}", table.render());
+        if report.total_voters > 0 {
+            println!(
+                "classify: {:.1} features/request across {:.1} voters/request \
+                 ({:.1} features/voter)",
+                report.avg_features(),
+                report.total_voters as f64 / report.answered.max(1) as f64,
+                report.avg_features_per_voter()
+            );
+        }
         passes.push((mode.name().to_string(), report));
     } else {
         // Loopback comparison: identical traffic over the three wire

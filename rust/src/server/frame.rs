@@ -11,11 +11,15 @@
 //! with all integers little-endian and floats IEEE-754 f64 LE. Ops:
 //!
 //! ```text
-//! 0x01 SCORE_SPARSE  req   gen:u32 nnz:u16 then nnz × (idx:u16 val:f64)
-//! 0x02 JSON_REQ      req   UTF-8 JSON body (any v1 request document)
-//! 0x81 SCORE         resp  gen:u32 evaluated:u32 score:f64
-//! 0x82 ERROR         resp  code:u8 retryable:u8 msg_len:u16 msg bytes
-//! 0x83 JSON_RESP     resp  UTF-8 JSON body (any v1 response document)
+//! 0x01 SCORE_SPARSE    req   gen:u32 nnz:u16 then nnz × (idx:u16 val:f64)
+//! 0x02 JSON_REQ        req   UTF-8 JSON body (any v1 request document)
+//! 0x03 SCORE_DENSE     req   model:u16 gen:u32 count:u32 then count × f64   (v3)
+//! 0x04 SCORE_SPARSE2   req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
+//! 0x05 CLASSIFY_SPARSE req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
+//! 0x81 SCORE           resp  gen:u32 evaluated:u32 score:f64
+//! 0x82 ERROR           resp  code:u8 retryable:u8 msg_len:u16 msg bytes
+//! 0x83 JSON_RESP       resp  UTF-8 JSON body (any v1 response document)
+//! 0x84 CLASS           resp  gen:u32 label:i64 votes:u32 voters:u32 evaluated:u32  (v3)
 //! ```
 //!
 //! `SCORE_SPARSE` is the hot path: a sparse example at MNIST density
@@ -25,6 +29,17 @@
 //! `JSON_REQ`/`JSON_RESP` envelope the v1 JSON documents so control ops
 //! (stats, reload, ping, dense scores) keep working after the switch
 //! without a second codec.
+//!
+//! The protocol-v3 ops add **model routing** (the interned `u16` shard
+//! id assigned by [`crate::server::registry::ModelRegistry`], 0 = the
+//! default shard) and lift the legacy sparse frame's `u16` index bound
+//! to `u32`. `SCORE_DENSE` extends the binary-framing win to non-sparse
+//! workloads (embeddings, normalized inputs); `CLASSIFY_SPARSE` runs
+//! the attentive all-pairs vote on an ensemble shard and is answered by
+//! a `CLASS` frame. The server decodes the v3 ops on any binary
+//! connection; clients send them only after `hello {"proto":3}` is
+//! granted (the legacy `SCORE_SPARSE` keeps decoding forever, routed to
+//! the default shard).
 //!
 //! A `gen` of 0 in a request means "any model generation"; a nonzero
 //! value pins the request to that generation and the server sheds it
@@ -52,6 +67,11 @@ pub enum ErrorCode {
     StaleGeneration = 6,
     /// Structurally invalid request (unsorted indices, bad JSON, ...).
     BadRequest = 7,
+    /// The request named a model shard the registry does not hold.
+    UnknownModel = 8,
+    /// The op does not match the routed shard's model kind (`score` on
+    /// an ensemble shard, `classify` on a binary one).
+    WrongModel = 9,
 }
 
 impl ErrorCode {
@@ -65,6 +85,8 @@ impl ErrorCode {
             5 => Some(ErrorCode::Unavailable),
             6 => Some(ErrorCode::StaleGeneration),
             7 => Some(ErrorCode::BadRequest),
+            8 => Some(ErrorCode::UnknownModel),
+            9 => Some(ErrorCode::WrongModel),
             _ => None,
         }
     }
@@ -87,6 +109,8 @@ impl ErrorCode {
             ErrorCode::Unavailable => "unavailable",
             ErrorCode::StaleGeneration => "stale-generation",
             ErrorCode::BadRequest => "bad-request",
+            ErrorCode::UnknownModel => "unknown-model",
+            ErrorCode::WrongModel => "wrong-model-kind",
         }
     }
 }
@@ -132,16 +156,24 @@ impl std::fmt::Display for FrameError {
     }
 }
 
-/// Op byte: sparse score request.
+/// Op byte: sparse score request (legacy u16 indices, default shard).
 pub const OP_SCORE_SPARSE: u8 = 0x01;
 /// Op byte: JSON-enveloped request.
 pub const OP_JSON_REQ: u8 = 0x02;
+/// Op byte: dense score request (v3; model-routed, f64-LE payload).
+pub const OP_SCORE_DENSE: u8 = 0x03;
+/// Op byte: sparse score request (v3; model-routed, u32 indices).
+pub const OP_SCORE_SPARSE2: u8 = 0x04;
+/// Op byte: sparse classify request (v3; model-routed all-pairs vote).
+pub const OP_CLASSIFY_SPARSE: u8 = 0x05;
 /// Op byte: score response.
 pub const OP_SCORE: u8 = 0x81;
 /// Op byte: error response.
 pub const OP_ERROR: u8 = 0x82;
 /// Op byte: JSON-enveloped response.
 pub const OP_JSON_RESP: u8 = 0x83;
+/// Op byte: classify response (v3).
+pub const OP_CLASS: u8 = 0x84;
 
 /// One decoded v2 frame (either direction).
 #[derive(Debug, Clone, PartialEq)]
@@ -158,6 +190,40 @@ pub enum Frame {
     },
     /// A v1 JSON request document riding inside a binary frame.
     JsonReq(String),
+    /// v3 dense score request routed to model shard `model` (0 =
+    /// default), pinned to generation `gen` (0 = any).
+    ScoreDense {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// The full dense feature vector.
+        val: Vec<f64>,
+    },
+    /// v3 sparse score request: like `ScoreSparse` but model-routed and
+    /// with `u32` coordinate indices (models beyond 65536 dims fit).
+    ScoreSparse2 {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Coordinate indices (u32 on the wire), strictly increasing.
+        idx: Vec<u32>,
+        /// Values at those coordinates.
+        val: Vec<f64>,
+    },
+    /// v3 sparse classify request: the attentive all-pairs vote on an
+    /// ensemble shard. Same payload layout as `ScoreSparse2`.
+    ClassifySparse {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Coordinate indices (u32 on the wire), strictly increasing.
+        idx: Vec<u32>,
+        /// Values at those coordinates.
+        val: Vec<f64>,
+    },
     /// Score response: the serving generation, coordinates evaluated,
     /// and the signed margin.
     Score {
@@ -179,6 +245,21 @@ pub enum Frame {
     },
     /// A v1 JSON response document riding inside a binary frame.
     JsonResp(String),
+    /// Classify response: the serving generation, the all-pairs vote
+    /// outcome, and total features evaluated across voters.
+    Class {
+        /// Generation that served the request.
+        gen: u32,
+        /// Predicted class (vote winner; ties break toward the smaller
+        /// label).
+        label: i64,
+        /// Votes the winner collected.
+        votes: u32,
+        /// Voters consulted (`C(C-1)/2`).
+        voters: u32,
+        /// Features evaluated, summed across voters.
+        evaluated: u32,
+    },
 }
 
 impl Frame {
@@ -187,7 +268,8 @@ impl Frame {
     /// # Panics
     ///
     /// A `ScoreSparse` frame with more than 65535 pairs (the wire
-    /// format's `nnz:u16` bound) or mismatched `idx`/`val` lengths is
+    /// format's `nnz:u16` bound; the v3 `ScoreSparse2`/`ClassifySparse`
+    /// frames lift this to `u32`) or mismatched `idx`/`val` lengths is
     /// unrepresentable — encoding one panics instead of emitting a
     /// corrupt frame that would surface remotely as a fatal
     /// `BAD_FRAME` on an innocent-looking connection.
@@ -213,6 +295,40 @@ impl Frame {
                 body.push(OP_JSON_REQ);
                 body.extend_from_slice(doc.as_bytes());
             }
+            Frame::ScoreDense { model, gen, val } => {
+                assert!(
+                    val.len() <= u32::MAX as usize,
+                    "dense frame count {} exceeds the u32 wire bound",
+                    val.len()
+                );
+                body.push(OP_SCORE_DENSE);
+                body.extend_from_slice(&model.to_le_bytes());
+                body.extend_from_slice(&gen.to_le_bytes());
+                body.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                for &v in val {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::ScoreSparse2 { model, gen, idx, val }
+            | Frame::ClassifySparse { model, gen, idx, val } => {
+                assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+                assert!(
+                    idx.len() <= u32::MAX as usize,
+                    "sparse frame nnz {} exceeds the u32 wire bound",
+                    idx.len()
+                );
+                body.push(match self {
+                    Frame::ClassifySparse { .. } => OP_CLASSIFY_SPARSE,
+                    _ => OP_SCORE_SPARSE2,
+                });
+                body.extend_from_slice(&model.to_le_bytes());
+                body.extend_from_slice(&gen.to_le_bytes());
+                body.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    body.extend_from_slice(&i.to_le_bytes());
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+            }
             Frame::Score { gen, evaluated, score } => {
                 body.push(OP_SCORE);
                 body.extend_from_slice(&gen.to_le_bytes());
@@ -230,6 +346,14 @@ impl Frame {
             Frame::JsonResp(doc) => {
                 body.push(OP_JSON_RESP);
                 body.extend_from_slice(doc.as_bytes());
+            }
+            Frame::Class { gen, label, votes, voters, evaluated } => {
+                body.push(OP_CLASS);
+                body.extend_from_slice(&gen.to_le_bytes());
+                body.extend_from_slice(&label.to_le_bytes());
+                body.extend_from_slice(&votes.to_le_bytes());
+                body.extend_from_slice(&voters.to_le_bytes());
+                body.extend_from_slice(&evaluated.to_le_bytes());
             }
         }
         let mut out = Vec::with_capacity(4 + body.len());
@@ -269,6 +393,59 @@ impl Frame {
                 let doc = std::str::from_utf8(payload).map_err(|_| FrameError::BadUtf8)?;
                 Ok(Frame::JsonReq(doc.to_string()))
             }
+            OP_SCORE_DENSE => {
+                if payload.len() < 10 {
+                    return Err(FrameError::BadLayout("dense header needs 10 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let count = u32::from_le_bytes(payload[6..10].try_into().unwrap()) as usize;
+                let values = &payload[10..];
+                // Divide instead of multiplying: `count * 8` can wrap on
+                // 32-bit usize targets, letting a hostile count match a
+                // tiny payload and abort on allocation.
+                if values.len() % 8 != 0 || values.len() / 8 != count {
+                    return Err(FrameError::BadLayout(format!(
+                        "count {} does not match {} value bytes",
+                        count,
+                        values.len()
+                    )));
+                }
+                let val = values
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Ok(Frame::ScoreDense { model, gen, val })
+            }
+            OP_SCORE_SPARSE2 | OP_CLASSIFY_SPARSE => {
+                if payload.len() < 10 {
+                    return Err(FrameError::BadLayout("sparse2 header needs 10 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let nnz = u32::from_le_bytes(payload[6..10].try_into().unwrap()) as usize;
+                let pairs = &payload[10..];
+                // Divide instead of multiplying: `nnz * 12` can wrap on
+                // 32-bit usize targets (the legacy u16 frame never could).
+                if pairs.len() % 12 != 0 || pairs.len() / 12 != nnz {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} does not match {} pair bytes",
+                        nnz,
+                        pairs.len()
+                    )));
+                }
+                let mut idx = Vec::with_capacity(nnz);
+                let mut val = Vec::with_capacity(nnz);
+                for p in pairs.chunks_exact(12) {
+                    idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
+                    val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
+                }
+                Ok(if op == OP_CLASSIFY_SPARSE {
+                    Frame::ClassifySparse { model, gen, idx, val }
+                } else {
+                    Frame::ScoreSparse2 { model, gen, idx, val }
+                })
+            }
             OP_SCORE => {
                 if payload.len() != 16 {
                     return Err(FrameError::BadLayout(format!(
@@ -300,6 +477,21 @@ impl Frame {
             OP_JSON_RESP => {
                 let doc = std::str::from_utf8(payload).map_err(|_| FrameError::BadUtf8)?;
                 Ok(Frame::JsonResp(doc.to_string()))
+            }
+            OP_CLASS => {
+                if payload.len() != 24 {
+                    return Err(FrameError::BadLayout(format!(
+                        "class payload must be 24 bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                Ok(Frame::Class {
+                    gen: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+                    label: i64::from_le_bytes(payload[4..12].try_into().unwrap()),
+                    votes: u32::from_le_bytes(payload[12..16].try_into().unwrap()),
+                    voters: u32::from_le_bytes(payload[16..20].try_into().unwrap()),
+                    evaluated: u32::from_le_bytes(payload[20..24].try_into().unwrap()),
+                })
             }
             other => Err(FrameError::BadOp(other)),
         }
@@ -373,6 +565,22 @@ mod tests {
         });
         round_trip(Frame::ScoreSparse { gen: 0, idx: vec![], val: vec![] });
         round_trip(Frame::JsonReq(r#"{"op":"stats"}"#.into()));
+        round_trip(Frame::ScoreDense { model: 3, gen: 2, val: vec![0.5, -1.0, 0.0] });
+        round_trip(Frame::ScoreDense { model: 0, gen: 0, val: vec![] });
+        round_trip(Frame::ScoreSparse2 {
+            model: 1,
+            gen: 9,
+            // Indices beyond the legacy u16 bound must survive.
+            idx: vec![0, 70_000, 4_000_000_000],
+            val: vec![0.25, -1.5, 1.0],
+        });
+        round_trip(Frame::ClassifySparse {
+            model: 2,
+            gen: 4,
+            idx: vec![5, 100_000],
+            val: vec![1.0, 2.0],
+        });
+        round_trip(Frame::Class { gen: 7, label: -3, votes: 9, voters: 45, evaluated: 1234 });
         round_trip(Frame::Score { gen: 3, evaluated: 41, score: -0.75 });
         round_trip(Frame::Error {
             code: ErrorCode::Overloaded,
@@ -411,6 +619,60 @@ mod tests {
         // Streaming: clean close between frames is Eof.
         let mut empty = std::io::Cursor::new(Vec::<u8>::new());
         assert_eq!(Frame::read_from(&mut empty, MAX), Err(FrameError::Eof));
+    }
+
+    #[test]
+    fn v3_frame_layouts_are_exactly_as_documented() {
+        // SCORE_SPARSE2: 1 (op) + 2 (model) + 4 (gen) + 4 (nnz) + 12/pair.
+        let wire =
+            Frame::ScoreSparse2 { model: 7, gen: 2, idx: vec![70_000], val: vec![1.0] }.encode();
+        assert_eq!(&wire[0..4], &23u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_SPARSE2);
+        assert_eq!(&wire[5..7], &7u16.to_le_bytes());
+        assert_eq!(&wire[7..11], &2u32.to_le_bytes());
+        assert_eq!(&wire[11..15], &1u32.to_le_bytes());
+        assert_eq!(&wire[15..19], &70_000u32.to_le_bytes());
+        assert_eq!(&wire[19..27], &1.0f64.to_le_bytes());
+        assert_eq!(wire.len(), 27);
+        // SCORE_DENSE: 1 (op) + 2 (model) + 4 (gen) + 4 (count) + 8/value.
+        let wire = Frame::ScoreDense { model: 1, gen: 3, val: vec![0.5, 0.25] }.encode();
+        assert_eq!(&wire[0..4], &27u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_DENSE);
+        assert_eq!(&wire[11..15], &2u32.to_le_bytes());
+        assert_eq!(wire.len(), 31);
+        // CLASS: 1 (op) + 4 + 8 + 4 + 4 + 4 = 25 body bytes.
+        let wire =
+            Frame::Class { gen: 1, label: 7, votes: 9, voters: 45, evaluated: 100 }.encode();
+        assert_eq!(&wire[0..4], &25u32.to_le_bytes());
+        assert_eq!(wire[4], OP_CLASS);
+        assert_eq!(&wire[9..17], &7i64.to_le_bytes());
+    }
+
+    #[test]
+    fn v3_layout_violations_are_rejected() {
+        // Declared nnz larger than the carried pairs.
+        let mut body = vec![OP_SCORE_SPARSE2];
+        body.extend_from_slice(&0u16.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&5u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1.0f64.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(FrameError::BadLayout(_))));
+        // Dense count mismatch.
+        let mut body = vec![OP_SCORE_DENSE];
+        body.extend_from_slice(&0u16.to_le_bytes());
+        body.extend_from_slice(&0u32.to_le_bytes());
+        body.extend_from_slice(&3u32.to_le_bytes());
+        body.extend_from_slice(&1.0f64.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(FrameError::BadLayout(_))));
+        // Truncated class response.
+        assert!(matches!(
+            Frame::decode_body(&[OP_CLASS, 0, 0, 0, 0]),
+            Err(FrameError::BadLayout(_))
+        ));
+        // Short headers.
+        assert!(Frame::decode_body(&[OP_SCORE_SPARSE2, 0, 0]).is_err());
+        assert!(Frame::decode_body(&[OP_SCORE_DENSE, 0, 0]).is_err());
     }
 
     #[test]
@@ -463,6 +725,8 @@ mod tests {
             ErrorCode::Unavailable,
             ErrorCode::StaleGeneration,
             ErrorCode::BadRequest,
+            ErrorCode::UnknownModel,
+            ErrorCode::WrongModel,
         ] {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
             assert!(!code.name().is_empty());
@@ -473,5 +737,7 @@ mod tests {
         assert!(ErrorCode::StaleGeneration.retryable());
         assert!(!ErrorCode::DimMismatch.retryable());
         assert!(!ErrorCode::BadFrame.retryable());
+        assert!(!ErrorCode::UnknownModel.retryable(), "a fixed shard set never grows mid-run");
+        assert!(!ErrorCode::WrongModel.retryable());
     }
 }

@@ -3,7 +3,7 @@
 //! Wraps [`PredictionService`] and adds the one thing a long-running
 //! server needs that the in-process service does not have: **hot model
 //! reload**. A reload spawns a fresh worker generation for the new
-//! [`ModelSnapshot`], atomically swaps the admission handle, and retires
+//! [`ServingModel`], atomically swaps the admission handle, and retires
 //! the old generation. Retiring drops the old generation's only
 //! [`ServiceHandle`], so its workers drain every request already admitted
 //! to their queue — each carries its own response channel — and then
@@ -17,8 +17,8 @@ use std::sync::mpsc::Receiver;
 use std::sync::Mutex;
 
 use crate::coordinator::service::{
-    Features, ModelSnapshot, PredictionService, RunningService, ScoreResponse, ServiceHandle,
-    StatsSnapshot, SubmitError,
+    Features, PredictionService, ReqKind, RunningService, ScoreResponse, ServiceHandle,
+    ServingModel, StatsSnapshot, SubmitError,
 };
 
 /// Why the hub rejected a request.
@@ -42,6 +42,14 @@ pub enum HubError {
         /// The generation actually serving.
         serving: u32,
     },
+    /// The op does not match the shard's model kind (`score` needs a
+    /// binary model, `classify` an ensemble).
+    WrongKind {
+        /// The op that was requested.
+        op: &'static str,
+        /// The kind of model the shard serves.
+        serving: &'static str,
+    },
 }
 
 impl std::fmt::Display for HubError {
@@ -55,8 +63,30 @@ impl std::fmt::Display for HubError {
             HubError::StaleGeneration { requested, serving } => {
                 write!(f, "stale generation: requested {requested}, serving {serving}")
             }
+            HubError::WrongKind { op, serving } => {
+                let needed = match *op {
+                    "classify" => "an ensemble",
+                    _ => "a binary",
+                };
+                write!(f, "wrong model kind: op {op} needs {needed} model, shard serves {serving}")
+            }
         }
     }
+}
+
+/// One consistent observation of a hub's serving state (taken in a
+/// single critical section, so none of the fields tear across a
+/// concurrent reload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HubInfo {
+    /// Serving model generation (1-based; bumped by every reload).
+    pub gen: u32,
+    /// Feature dimensionality.
+    pub dim: usize,
+    /// `"binary"` or `"ensemble"`.
+    pub kind: &'static str,
+    /// Voters behind the shard (0 for binary).
+    pub voters: usize,
 }
 
 struct HubState {
@@ -68,6 +98,12 @@ struct HubState {
     retired: Vec<RunningService>,
     /// Dimensionality of the live model.
     dim: usize,
+    /// Request kind the live model answers (score / classify).
+    accepts: ReqKind,
+    /// Kind name of the live model (`"binary"` / `"ensemble"`).
+    kind: &'static str,
+    /// Voters behind the live model (0 for binary).
+    voters: usize,
     /// Serving generation minus one: bumped under the same critical
     /// section as the handle swap, so each installed model gets a
     /// unique, monotonic generation even when reloads race.
@@ -91,23 +127,30 @@ pub struct ModelHub {
 }
 
 impl ModelHub {
-    /// Spawn the first generation for `snapshot`.
+    /// Spawn the first generation for `model` (a binary
+    /// [`crate::coordinator::service::ModelSnapshot`] converts
+    /// implicitly).
     pub fn new(
-        snapshot: ModelSnapshot,
+        model: impl Into<ServingModel>,
         max_batch: usize,
         queue: usize,
         workers: usize,
         seed: u64,
     ) -> Self {
-        let dim = snapshot.weights.len();
+        let model = model.into();
+        let (dim, accepts, kind, voters) =
+            (model.dim(), model.kind(), model.kind_name(), model.voter_count());
         let (handle, run) =
-            PredictionService::new(snapshot, max_batch, queue, seed).with_workers(workers).spawn();
+            PredictionService::new(model, max_batch, queue, seed).with_workers(workers).spawn();
         Self {
             inner: Mutex::new(HubState {
                 handle: Some(handle),
                 current: Some(run),
                 retired: Vec::new(),
                 dim,
+                accepts,
+                kind,
+                voters,
                 epoch: 0,
                 closed_total: StatsSnapshot::default(),
             }),
@@ -146,61 +189,94 @@ impl ModelHub {
         ((st.epoch as u32).wrapping_add(1), st.dim)
     }
 
-    /// Non-blocking admission of a dense or sparse payload. On success
-    /// the returned receiver is guaranteed to yield exactly one
-    /// response: admitted requests are answered even if a reload
-    /// retires their generation first. Structural validity (sorted
-    /// indices, finite values) is the wire parsers' job; the hub
-    /// screens dimensions only.
+    /// Full serving-state observation (generation, dim, model kind,
+    /// voters), taken in one critical section — the registry's `models`
+    /// listing must not tear across a reload either.
+    pub fn info(&self) -> HubInfo {
+        let st = self.inner.lock().unwrap();
+        HubInfo {
+            gen: (st.epoch as u32).wrapping_add(1),
+            dim: st.dim,
+            kind: st.kind,
+            voters: st.voters,
+        }
+    }
+
+    /// Non-blocking admission of a dense or sparse payload for a binary
+    /// `score`. On success the returned receiver is guaranteed to yield
+    /// exactly one response: admitted requests are answered even if a
+    /// reload retires their generation first. Structural validity
+    /// (sorted indices, finite values) is the wire parsers' job; the hub
+    /// screens dimensions and model kind only.
     pub fn submit(
         &self,
         features: impl Into<Features>,
     ) -> Result<Receiver<ScoreResponse>, HubError> {
-        self.submit_pinned(features, 0).map(|(rx, _)| rx)
+        self.submit_pinned(features, 0, ReqKind::Score).map(|(rx, _)| rx)
     }
 
-    /// [`Self::submit`] with protocol-v2 generation pinning: `pin` = 0
-    /// admits on any generation; a nonzero `pin` is rejected with
-    /// [`HubError::StaleGeneration`] unless it matches the serving
-    /// generation. The handle and its generation are captured in one
-    /// critical section, so the returned generation is the one whose
-    /// workers answer the request — even if a reload lands before the
-    /// request reaches their queue, a retired generation drains what it
-    /// admitted.
+    /// Non-blocking admission of a `classify` request (all-pairs vote;
+    /// the shard must serve an ensemble).
+    pub fn submit_classify(
+        &self,
+        features: impl Into<Features>,
+    ) -> Result<Receiver<ScoreResponse>, HubError> {
+        self.submit_pinned(features, 0, ReqKind::Classify).map(|(rx, _)| rx)
+    }
+
+    /// [`Self::submit`] with protocol-v2 generation pinning and an
+    /// explicit op kind: `pin` = 0 admits on any generation; a nonzero
+    /// `pin` is rejected with [`HubError::StaleGeneration`] unless it
+    /// matches the serving generation, and an op that does not match
+    /// the serving model's kind is rejected with
+    /// [`HubError::WrongKind`]. The handle, generation, and kind are
+    /// captured in one critical section, so the returned generation is
+    /// the one whose workers answer the request — even if a reload
+    /// lands before the request reaches their queue, a retired
+    /// generation drains what it admitted.
     pub fn submit_pinned(
         &self,
         features: impl Into<Features>,
         pin: u32,
+        kind: ReqKind,
     ) -> Result<(Receiver<ScoreResponse>, u32), HubError> {
         let features = features.into();
-        let (handle, dim, gen) = {
+        let (handle, dim, gen, accepts, serving_kind) = {
             let st = self.inner.lock().unwrap();
             (
                 st.handle.clone().ok_or(HubError::Closed)?,
                 st.dim,
                 (st.epoch as u32).wrapping_add(1),
+                st.accepts,
+                st.kind,
             )
         };
+        if kind != accepts {
+            return Err(HubError::WrongKind { op: kind.name(), serving: serving_kind });
+        }
         if pin != 0 && pin != gen {
             return Err(HubError::StaleGeneration { requested: pin, serving: gen });
         }
         if let Err((expected, got)) = features.check_dim(dim) {
             return Err(HubError::DimMismatch { expected, got });
         }
-        handle.submit(features).map(|rx| (rx, gen)).map_err(|e| match e {
+        handle.submit_kind(features, kind).map(|rx| (rx, gen)).map_err(|e| match e {
             SubmitError::Overloaded => HubError::Overloaded,
             SubmitError::Closed => HubError::Closed,
         })
     }
 
-    /// Hot-swap the serving model. Spawns the new generation outside the
-    /// lock, then swaps the handle atomically; returns the new
+    /// Hot-swap the serving model (the kind may change along with the
+    /// dimensionality). Spawns the new generation outside the lock,
+    /// then swaps the handle atomically; returns the new
     /// dimensionality. In-flight requests finish on the old generation.
     /// The generation number is bumped inside the swap's critical
     /// section, so concurrent reloads each install a distinct,
     /// monotonic generation (any connection can be a control channel).
-    pub fn reload(&self, snapshot: ModelSnapshot) -> Result<usize, HubError> {
-        let dim = snapshot.weights.len();
+    pub fn reload(&self, model: impl Into<ServingModel>) -> Result<usize, HubError> {
+        let model = model.into();
+        let (dim, accepts, kind, voters) =
+            (model.dim(), model.kind(), model.kind_name(), model.voter_count());
         if self.inner.lock().unwrap().handle.is_none() {
             return Err(HubError::Closed);
         }
@@ -208,7 +284,7 @@ impl ModelHub {
         // counter, so racing reloads never share a stream.
         let salt = self.spawns.fetch_add(1, Ordering::Relaxed) + 1;
         let seed = self.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let (handle, run) = PredictionService::new(snapshot, self.max_batch, self.queue, seed)
+        let (handle, run) = PredictionService::new(model, self.max_batch, self.queue, seed)
             .with_workers(self.workers)
             .spawn();
         let mut st = self.inner.lock().unwrap();
@@ -225,6 +301,9 @@ impl ModelHub {
         }
         st.current = Some(run);
         st.dim = dim;
+        st.accepts = accepts;
+        st.kind = kind;
+        st.voters = voters;
         st.epoch += 1;
         drop(st);
         self.reloads.fetch_add(1, Ordering::Relaxed);
@@ -273,6 +352,7 @@ impl Drop for ModelHub {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::{EnsembleSnapshot, ModelSnapshot, VoterSnapshot};
     use crate::margin::policy::CoordinatePolicy;
     use crate::stst::boundary::AnyBoundary;
 
@@ -356,23 +436,75 @@ mod tests {
     fn pinned_submissions_track_generations() {
         let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
         // Pin 0 = any; the returned generation is the serving one.
-        let (rx, gen) = hub.submit_pinned(vec![1.0; 8], 0).unwrap();
+        let (rx, gen) = hub.submit_pinned(vec![1.0; 8], 0, ReqKind::Score).unwrap();
         assert_eq!(gen, 1);
         assert!(rx.recv().unwrap().score > 0.0);
         // Matching pin admits; mismatched pin sheds with both numbers.
-        assert!(hub.submit_pinned(vec![1.0; 8], 1).is_ok());
-        match hub.submit_pinned(vec![1.0; 8], 9) {
+        assert!(hub.submit_pinned(vec![1.0; 8], 1, ReqKind::Score).is_ok());
+        match hub.submit_pinned(vec![1.0; 8], 9, ReqKind::Score) {
             Err(HubError::StaleGeneration { requested: 9, serving: 1 }) => {}
             other => panic!("expected stale generation, got {other:?}"),
         }
         hub.reload(snapshot(8, -1.0)).unwrap();
-        match hub.submit_pinned(vec![1.0; 8], 1) {
+        match hub.submit_pinned(vec![1.0; 8], 1, ReqKind::Score) {
             Err(HubError::StaleGeneration { requested: 1, serving: 2 }) => {}
             other => panic!("expected stale generation after reload, got {other:?}"),
         }
-        let (rx, gen) = hub.submit_pinned(vec![1.0; 8], 2).unwrap();
+        let (rx, gen) = hub.submit_pinned(vec![1.0; 8], 2, ReqKind::Score).unwrap();
         assert_eq!(gen, 2);
         assert!(rx.recv().unwrap().score < 0.0, "pinned to the reloaded model");
+    }
+
+    /// Flat 3-class ensemble (see the service-layer tests): positive
+    /// inputs classify as 0, negative as 2, deterministically.
+    fn ensemble(dim: usize) -> EnsembleSnapshot {
+        let classes = vec![0i64, 1, 2];
+        let mut voters = Vec::new();
+        for a in 0..classes.len() {
+            for b in a + 1..classes.len() {
+                voters.push(VoterSnapshot {
+                    pos: classes[a],
+                    neg: classes[b],
+                    weights: vec![1.0; dim],
+                    var_sn: 4.0,
+                });
+            }
+        }
+        EnsembleSnapshot {
+            classes,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+            voters,
+        }
+    }
+
+    #[test]
+    fn kind_screen_rejects_mismatched_ops_and_reload_can_change_kind() {
+        let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
+        assert_eq!(hub.info().kind, "binary");
+        assert_eq!(hub.info().voters, 0);
+        match hub.submit_classify(vec![1.0; 8]) {
+            Err(HubError::WrongKind { op: "classify", serving: "binary" }) => {}
+            other => panic!("expected wrong-kind, got {other:?}"),
+        }
+        // Swap the shard to an ensemble: classify works, score sheds.
+        hub.reload(ensemble(8)).unwrap();
+        let info = hub.info();
+        assert_eq!((info.kind, info.voters, info.gen), ("ensemble", 3, 2));
+        let resp = hub.submit_classify(vec![1.0; 8]).unwrap().recv().unwrap();
+        assert_eq!(resp.classify.unwrap().label, 0);
+        match hub.submit(vec![1.0; 8]) {
+            Err(HubError::WrongKind { op: "score", serving: "ensemble" }) => {}
+            other => panic!("expected wrong-kind, got {other:?}"),
+        }
+        // Generation pinning applies to classify admissions too.
+        let (rx, gen) = hub.submit_pinned(vec![-1.0; 8], 2, ReqKind::Classify).unwrap();
+        assert_eq!(gen, 2);
+        assert_eq!(rx.recv().unwrap().classify.unwrap().label, 2);
+        match hub.submit_pinned(vec![1.0; 8], 1, ReqKind::Classify) {
+            Err(HubError::StaleGeneration { requested: 1, serving: 2 }) => {}
+            other => panic!("expected stale generation, got {other:?}"),
+        }
     }
 
     #[test]

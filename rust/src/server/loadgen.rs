@@ -3,17 +3,21 @@
 //! Two layers:
 //!
 //! * [`Client`] — a synchronous request/response connection, used as the
-//!   control channel (ping / stats / reload) and for one-off scoring.
-//!   Starts in v1 JSON-lines mode; [`Client::negotiate`] upgrades it to
-//!   the v2 binary framing with transparent fallback on old servers.
+//!   control channel (ping / stats / models / reload) and for one-off
+//!   scoring or classification. Starts in v1 JSON-lines mode;
+//!   [`Client::negotiate`] upgrades it to the binary framing (v3 when
+//!   the server speaks it, v2 otherwise) with transparent fallback on
+//!   old servers.
 //! * [`run`] — the load generator proper: `connections` client threads
 //!   drive the server over loopback (or any address) with a configurable
 //!   pipelining window, an easy/hard traffic mix — clean synthetic
 //!   digits exit early, heavily-noised ones force deep evaluations — and
-//!   a selectable [`ClientMode`] (v1 dense JSON, v2 sparse JSON, or v2
-//!   binary frames). The merged [`LoadReport`] carries per-request
-//!   features-touched counts for exact percentile reporting plus wire
-//!   byte totals for cost-per-request comparisons.
+//!   a selectable [`ClientMode`] (v1 dense JSON, v2 sparse JSON, v2
+//!   binary frames, or binary multiclass `classify`). Requests can be
+//!   routed to a named registry shard (`LoadGenConfig.model`). The
+//!   merged [`LoadReport`] carries per-request features-touched counts
+//!   for exact percentile reporting plus wire byte totals for
+//!   cost-per-request comparisons (and voter totals for classify runs).
 //!
 //! Traffic is 784-dimensional digit imagery (the paper's MNIST shape);
 //! point it at a server that serves a 784-dim model.
@@ -22,11 +26,11 @@ use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
 
-use crate::coordinator::service::{Features, ModelSnapshot};
+use crate::coordinator::service::{Features, ModelSnapshot, ServingModel};
 use crate::data::synth::{SynthConfig, SynthDigits};
 use crate::error::{Error, Result};
 use crate::server::frame::{ErrorCode, Frame, FrameError};
-use crate::server::protocol::{Request, Response, StatsReport, PROTO_V2};
+use crate::server::protocol::{ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3};
 use crate::util::rng::Rng64;
 
 /// Frame-length cap the client applies to server responses.
@@ -72,15 +76,17 @@ impl Client {
         self.proto
     }
 
-    /// Negotiate protocol v2 (binary frames). Returns the granted
-    /// version: 2 on success, 1 when the server declines or predates
+    /// Negotiate binary framing, asking for the highest version this
+    /// build speaks (v3). Returns the granted version: 3 or 2 on
+    /// success (both switch to binary frames; only 3 unlocks the
+    /// model-routed frame ops), 1 when the server declines or predates
     /// the handshake (transparent fallback — the connection keeps
     /// working in JSON-lines mode either way).
     pub fn negotiate(&mut self) -> Result<u32> {
         if self.proto >= PROTO_V2 {
             return Ok(self.proto);
         }
-        let line = Request::Hello { proto: PROTO_V2 }.to_line();
+        let line = Request::Hello { proto: PROTO_V3 }.to_line();
         self.writer
             .write_all(line.as_bytes())
             .and_then(|()| self.writer.flush())
@@ -92,8 +98,8 @@ impl Client {
         }
         match Response::parse(reply.trim()).map_err(|e| Error::format("hello reply", e))? {
             Response::Hello { proto, .. } if proto >= PROTO_V2 => {
-                self.proto = PROTO_V2;
-                Ok(PROTO_V2)
+                self.proto = proto.min(PROTO_V3);
+                Ok(self.proto)
             }
             // Declined (proto 1) or a pre-handshake server answering
             // "unknown op": stay on JSON lines.
@@ -114,6 +120,13 @@ impl Client {
                 score,
                 features_evaluated: evaluated as usize,
             }),
+            Ok(Frame::Class { label, votes, voters, evaluated, .. }) => Ok(Response::Classify {
+                id: None,
+                label,
+                votes,
+                voters,
+                features_evaluated: evaluated as usize,
+            }),
             Ok(Frame::Error { code, retryable, msg }) => Ok(Response::Error {
                 id: None,
                 error: if msg.is_empty() { code.name().to_string() } else { msg },
@@ -123,6 +136,27 @@ impl Client {
                 Err(Error::format("server frame", format!("unexpected frame {other:?}")))
             }
         }
+    }
+
+    /// Send one pre-encoded binary frame and wait for its response.
+    fn call_frame(&mut self, frame: Frame) -> Result<Response> {
+        self.writer
+            .write_all(&frame.encode())
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| Error::io("<client write>", e))?;
+        self.read_frame_response()
+    }
+
+    /// Ensure the connection granted at least `needed` (call
+    /// [`Self::negotiate`] first for 2+).
+    fn require_proto(&self, needed: u32, what: &str) -> Result<()> {
+        if self.proto < needed {
+            return Err(Error::format(
+                what,
+                format!("needs protocol v{needed}, connection speaks v{}", self.proto),
+            ));
+        }
+        Ok(())
     }
 
     /// Send one request and wait for its response (on a v2 connection
@@ -157,16 +191,26 @@ impl Client {
         }
     }
 
-    /// Score one dense feature vector.
+    /// Score one dense feature vector (on the default shard).
     pub fn score(&mut self, features: Vec<f64>) -> Result<Response> {
-        self.call(&Request::Score { id: None, features: Features::Dense(features) })
+        self.call(&Request::Score { id: None, model: None, features: Features::Dense(features) })
     }
 
-    /// Score one sparse payload. On a v2 connection this is a native
-    /// `SCORE_SPARSE` frame (`gen` pins a model generation, 0 = any);
-    /// on v1 it falls back to the sparse JSON form — which cannot carry
-    /// a pin, so a nonzero `gen` on a v1 connection is an error rather
-    /// than a silently dropped guarantee.
+    /// Score one payload on a named registry shard (JSON routing; works
+    /// on any protocol version).
+    pub fn score_model(&mut self, model: &str, features: impl Into<Features>) -> Result<Response> {
+        self.call(&Request::Score {
+            id: None,
+            model: Some(model.to_string()),
+            features: features.into(),
+        })
+    }
+
+    /// Score one sparse payload on the default shard. On a binary
+    /// connection this is a native `SCORE_SPARSE` frame (`gen` pins a
+    /// model generation, 0 = any); on v1 it falls back to the sparse
+    /// JSON form — which cannot carry a pin, so a nonzero `gen` on a v1
+    /// connection is an error rather than a silently dropped guarantee.
     pub fn score_sparse(&mut self, idx: Vec<u32>, val: Vec<f64>, gen: u32) -> Result<Response> {
         if self.proto < PROTO_V2 && gen != 0 {
             return Err(Error::format(
@@ -180,14 +224,63 @@ impl Client {
                 .map(|&i| u16::try_from(i))
                 .collect::<std::result::Result<_, _>>()
                 .map_err(|_| Error::format("score_sparse", "idx exceeds the u16 wire bound"))?;
-            let frame = Frame::ScoreSparse { gen, idx: idx16, val }.encode();
-            self.writer
-                .write_all(&frame)
-                .and_then(|()| self.writer.flush())
-                .map_err(|e| Error::io("<client write>", e))?;
-            return self.read_frame_response();
+            return self.call_frame(Frame::ScoreSparse { gen, idx: idx16, val });
         }
-        self.call(&Request::Score { id: None, features: Features::Sparse { idx, val } })
+        self.call(&Request::Score { id: None, model: None, features: Features::Sparse { idx, val } })
+    }
+
+    /// Score one sparse payload on shard `model` with the v3 frame
+    /// (`u32` indices — dims beyond 65536 fit). Needs a negotiated v3
+    /// connection.
+    pub fn score_sparse2(
+        &mut self,
+        model: u16,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+        gen: u32,
+    ) -> Result<Response> {
+        self.require_proto(PROTO_V3, "score_sparse2")?;
+        self.call_frame(Frame::ScoreSparse2 { model, gen, idx, val })
+    }
+
+    /// Score one dense payload on shard `model` with the v3 binary
+    /// frame. Needs a negotiated v3 connection.
+    pub fn score_dense_binary(
+        &mut self,
+        model: u16,
+        val: Vec<f64>,
+        gen: u32,
+    ) -> Result<Response> {
+        self.require_proto(PROTO_V3, "score_dense_binary")?;
+        self.call_frame(Frame::ScoreDense { model, gen, val })
+    }
+
+    /// Classify one payload (attentive all-pairs vote) on a named
+    /// ensemble shard via the JSON op (works on any protocol version;
+    /// `None` routes to the default shard).
+    pub fn classify(
+        &mut self,
+        model: Option<&str>,
+        features: impl Into<Features>,
+    ) -> Result<Response> {
+        self.call(&Request::Classify {
+            id: None,
+            model: model.map(str::to_string),
+            features: features.into(),
+        })
+    }
+
+    /// Classify one sparse payload on shard `model` with the native v3
+    /// binary frame. Needs a negotiated v3 connection.
+    pub fn classify_sparse(
+        &mut self,
+        model: u16,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+        gen: u32,
+    ) -> Result<Response> {
+        self.require_proto(PROTO_V3, "classify_sparse")?;
+        self.call_frame(Frame::ClassifySparse { model, gen, idx, val })
     }
 
     /// Fetch server statistics.
@@ -198,9 +291,26 @@ impl Client {
         }
     }
 
-    /// Hot-swap the serving model; returns the new dimensionality.
+    /// Fetch the registry's shard table (name → wire id / kind / gen).
+    pub fn models(&mut self) -> Result<Vec<ModelEntry>> {
+        match self.call(&Request::Models)? {
+            Response::Models(entries) => Ok(entries),
+            other => Err(Error::format("models reply", format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Hot-swap the default shard's model; returns the new
+    /// dimensionality.
     pub fn reload(&mut self, snapshot: &ModelSnapshot) -> Result<usize> {
-        match self.call(&Request::Reload { snapshot: snapshot.clone() })? {
+        self.reload_model(None, &snapshot.clone().into())
+    }
+
+    /// Hot-swap a named shard's model (`None` = the default shard);
+    /// returns the new dimensionality.
+    pub fn reload_model(&mut self, model: Option<&str>, snapshot: &ServingModel) -> Result<usize> {
+        let req =
+            Request::Reload { model: model.map(str::to_string), snapshot: snapshot.clone() };
+        match self.call(&req)? {
             Response::Reloaded { dim } => Ok(dim),
             Response::Error { error, .. } => Err(Error::format("reload reply", error)),
             other => Err(Error::format("reload reply", format!("unexpected {other:?}"))),
@@ -218,10 +328,15 @@ pub enum ClientMode {
     V2SparseJson,
     /// v2 binary frames after a `hello` handshake (`SCORE_SPARSE`).
     V2Binary,
+    /// v3 binary multiclass classify frames (`CLASSIFY_SPARSE`) against
+    /// an ensemble shard (set `LoadGenConfig.model`).
+    Classify,
 }
 
 impl ClientMode {
-    /// All modes, for sweeps and benches.
+    /// The binary-score wire modes, for three-way transport sweeps and
+    /// benches (classify targets a different shard kind and is driven
+    /// separately).
     pub const ALL: [ClientMode; 3] =
         [ClientMode::V1Dense, ClientMode::V2SparseJson, ClientMode::V2Binary];
 
@@ -231,6 +346,7 @@ impl ClientMode {
             ClientMode::V1Dense => "v1-dense",
             ClientMode::V2SparseJson => "v2-sparse-json",
             ClientMode::V2Binary => "v2-binary",
+            ClientMode::Classify => "classify",
         }
     }
 
@@ -240,6 +356,7 @@ impl ClientMode {
             "v1-dense" => Ok(ClientMode::V1Dense),
             "v2-sparse-json" => Ok(ClientMode::V2SparseJson),
             "v2-binary" => Ok(ClientMode::V2Binary),
+            "classify" => Ok(ClientMode::Classify),
             other => Err(format!("unknown client mode {other:?}")),
         }
     }
@@ -265,6 +382,13 @@ pub struct LoadGenConfig {
     /// `|v| <= eps` are dropped client-side. 0.05 lands synthetic digits
     /// near MNIST density (~150 of 784 nonzeros).
     pub sparse_eps: f64,
+    /// Registry shard to route to: JSON score modes carry it as the
+    /// `"model"` field, classify resolves it to a wire id via the
+    /// `models` op. `None` drives the default shard.
+    pub model: Option<String>,
+    /// Digit classes the traffic generator cycles through (classify
+    /// runs should match the target ensemble's classes).
+    pub digits: Vec<u8>,
     /// Base RNG seed (per-connection streams are derived from it).
     pub seed: u64,
 }
@@ -279,6 +403,8 @@ impl Default for LoadGenConfig {
             hard_fraction: 0.5,
             mode: ClientMode::V1Dense,
             sparse_eps: 0.05,
+            model: None,
+            digits: vec![2, 3],
             seed: 0,
         }
     }
@@ -305,6 +431,10 @@ pub struct LoadReport {
     pub elapsed_s: f64,
     /// Features touched per answered request (for exact percentiles).
     pub features: Vec<u32>,
+    /// Voters consulted, summed over answered classify requests (0 for
+    /// score traffic); `total_features / total_voters` is the per-voter
+    /// feature cost.
+    pub total_voters: u64,
 }
 
 impl LoadReport {
@@ -338,6 +468,16 @@ impl LoadReport {
         if self.sent == 0 { 0.0 } else { self.bytes_sent as f64 / self.sent as f64 }
     }
 
+    /// Mean features touched per voter consulted (classify runs; 0.0
+    /// when no voter totals were collected).
+    pub fn avg_features_per_voter(&self) -> f64 {
+        if self.total_voters == 0 {
+            0.0
+        } else {
+            self.total_features as f64 / self.total_voters as f64
+        }
+    }
+
     /// Fold another connection's report into this one.
     pub fn merge(&mut self, other: &LoadReport) {
         self.sent += other.sent;
@@ -349,6 +489,7 @@ impl LoadReport {
         self.bytes_recv += other.bytes_recv;
         self.elapsed_s = self.elapsed_s.max(other.elapsed_s);
         self.features.extend_from_slice(&other.features);
+        self.total_voters += other.total_voters;
     }
 }
 
@@ -361,23 +502,26 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
     use crate::util::json::Json;
     let mut modes = Vec::new();
     for (name, r) in passes {
-        modes.push((
-            name.clone(),
-            Json::obj([
-                ("req_per_s", Json::Num(r.req_per_s())),
-                ("avg_features", Json::Num(r.avg_features())),
-                ("features_p50", Json::Num(r.feature_percentile(0.50) as f64)),
-                ("features_p90", Json::Num(r.feature_percentile(0.90) as f64)),
-                ("features_p99", Json::Num(r.feature_percentile(0.99) as f64)),
-                ("answered", Json::Num(r.answered as f64)),
-                ("overloaded", Json::Num(r.overloaded as f64)),
-                ("errors", Json::Num(r.errors as f64)),
-                ("bytes_sent", Json::Num(r.bytes_sent as f64)),
-                ("bytes_recv", Json::Num(r.bytes_recv as f64)),
-                ("bytes_per_req", Json::Num(r.bytes_per_req())),
-                ("elapsed_s", Json::Num(r.elapsed_s)),
-            ]),
-        ))
+        let mut fields = vec![
+            ("req_per_s", Json::Num(r.req_per_s())),
+            ("avg_features", Json::Num(r.avg_features())),
+            ("features_p50", Json::Num(r.feature_percentile(0.50) as f64)),
+            ("features_p90", Json::Num(r.feature_percentile(0.90) as f64)),
+            ("features_p99", Json::Num(r.feature_percentile(0.99) as f64)),
+            ("answered", Json::Num(r.answered as f64)),
+            ("overloaded", Json::Num(r.overloaded as f64)),
+            ("errors", Json::Num(r.errors as f64)),
+            ("bytes_sent", Json::Num(r.bytes_sent as f64)),
+            ("bytes_recv", Json::Num(r.bytes_recv as f64)),
+            ("bytes_per_req", Json::Num(r.bytes_per_req())),
+            ("elapsed_s", Json::Num(r.elapsed_s)),
+        ];
+        if r.total_voters > 0 {
+            // Classify pass: per-voter attention accounting.
+            fields.push(("voters", Json::Num(r.total_voters as f64)));
+            fields.push(("avg_features_per_voter", Json::Num(r.avg_features_per_voter())));
+        }
+        modes.push((name.clone(), Json::obj(fields)))
     }
     let find = |mode: ClientMode| {
         passes.iter().find(|(name, _)| name == mode.name()).map(|(_, r)| r)
@@ -387,11 +531,20 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
         ("requests", Json::Num(requests as f64)),
         ("modes", Json::Obj(modes.into_iter().collect())),
     ];
-    if let (Some(v1), Some(v2)) = (find(ClientMode::V1Dense), find(ClientMode::V2Binary)) {
+    let v1 = find(ClientMode::V1Dense);
+    if let (Some(v1), Some(v2)) = (v1, find(ClientMode::V2Binary)) {
         if v1.req_per_s() > 0.0 {
             pairs.push((
                 "ratio_v2_binary_vs_v1_dense",
                 Json::Num(v2.req_per_s() / v1.req_per_s()),
+            ));
+        }
+    }
+    if let (Some(v1), Some(sj)) = (v1, find(ClientMode::V2SparseJson)) {
+        if v1.req_per_s() > 0.0 {
+            pairs.push((
+                "ratio_v2_sparse_json_vs_v1_dense",
+                Json::Num(sj.req_per_s() / v1.req_per_s()),
             ));
         }
     }
@@ -408,6 +561,22 @@ fn hard_render_config() -> SynthConfig {
 pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
     if cfg.connections == 0 || cfg.pipeline == 0 {
         return Err(Error::Config("loadgen connections and pipeline must be >= 1".into()));
+    }
+    if cfg.digits.is_empty() {
+        return Err(Error::Config("loadgen digits must not be empty".into()));
+    }
+    if cfg.mode == ClientMode::V2Binary && cfg.model.is_some() {
+        return Err(Error::Config(
+            "the legacy v2-binary frame cannot route models; use v2-sparse-json or classify"
+                .into(),
+        ));
+    }
+    if cfg.mode == ClientMode::Classify && cfg.model.is_none() {
+        return Err(Error::Config(
+            "classify mode needs a target ensemble shard: set LoadGenConfig.model \
+             (bench-serve --model NAME)"
+                .into(),
+        ));
     }
     let per_conn = cfg.requests / cfg.connections;
     let remainder = cfg.requests % cfg.connections;
@@ -426,14 +595,20 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
     Ok(merged)
 }
 
-/// Encode one score request on the configured wire.
-fn encode_request(cfg: &LoadGenConfig, id: u64, features: Vec<f64>) -> Vec<u8> {
+/// Encode one score/classify request on the configured wire
+/// (`model_id` is the resolved wire id for the binary classify mode).
+fn encode_request(cfg: &LoadGenConfig, model_id: u16, id: u64, features: Vec<f64>) -> Vec<u8> {
     match cfg.mode {
-        ClientMode::V1Dense => Request::Score { id: Some(id), features: Features::Dense(features) }
-            .to_line()
-            .into_bytes(),
+        ClientMode::V1Dense => Request::Score {
+            id: Some(id),
+            model: cfg.model.clone(),
+            features: Features::Dense(features),
+        }
+        .to_line()
+        .into_bytes(),
         ClientMode::V2SparseJson => Request::Score {
             id: Some(id),
+            model: cfg.model.clone(),
             features: Features::sparsify(&features, cfg.sparse_eps),
         }
         .to_line()
@@ -452,6 +627,13 @@ fn encode_request(cfg: &LoadGenConfig, id: u64, features: Vec<f64>) -> Vec<u8> {
                 .collect();
             Frame::ScoreSparse { gen: 0, idx, val }.encode()
         }
+        ClientMode::Classify => {
+            let Features::Sparse { idx, val } = Features::sparsify(&features, cfg.sparse_eps)
+            else {
+                unreachable!("sparsify always returns the sparse variant")
+            };
+            Frame::ClassifySparse { model: model_id, gen: 0, idx, val }.encode()
+        }
     }
 }
 
@@ -468,11 +650,15 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     let mut writer = BufWriter::new(stream);
     let mut line = String::new();
 
-    // v2-binary negotiates its framing before any traffic; this driver
-    // targets our own server, so a declined handshake is an error, not
-    // a fallback.
-    if cfg.mode == ClientMode::V2Binary {
-        let hello = Request::Hello { proto: PROTO_V2 }.to_line();
+    // The binary modes negotiate their framing before any traffic; this
+    // driver targets our own server, so a declined handshake is an
+    // error, not a fallback. Classify additionally needs the v3 frame
+    // ops and the model's wire id.
+    let binary = matches!(cfg.mode, ClientMode::V2Binary | ClientMode::Classify);
+    let mut model_id = 0u16;
+    if binary {
+        let needed = if cfg.mode == ClientMode::Classify { PROTO_V3 } else { PROTO_V2 };
+        let hello = Request::Hello { proto: PROTO_V3 }.to_line();
         writer
             .write_all(hello.as_bytes())
             .and_then(|()| writer.flush())
@@ -483,9 +669,48 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
             return Err(Error::format("loadgen hello", "connection closed"));
         }
         match Response::parse(line.trim()) {
-            Ok(Response::Hello { proto, .. }) if proto >= PROTO_V2 => {}
+            Ok(Response::Hello { proto, .. }) if proto >= needed => {}
             other => {
-                return Err(Error::format("loadgen hello", format!("not granted v2: {other:?}")))
+                return Err(Error::format(
+                    "loadgen hello",
+                    format!("not granted v{needed}: {other:?}"),
+                ))
+            }
+        }
+        if cfg.mode == ClientMode::Classify {
+            if let Some(name) = &cfg.model {
+                // Resolve the shard name to its wire id via the models
+                // op (a JSON envelope frame on this now-binary stream).
+                let req = Frame::JsonReq(Request::Models.to_json().to_string_compact()).encode();
+                writer
+                    .write_all(&req)
+                    .and_then(|()| writer.flush())
+                    .map_err(|e| Error::io("<loadgen models>", e))?;
+                report.bytes_sent += req.len() as u64;
+                let entries = match Frame::read_from(&mut reader, CLIENT_MAX_FRAME) {
+                    Ok(Frame::JsonResp(doc)) => match Response::parse(doc.trim()) {
+                        Ok(Response::Models(entries)) => entries,
+                        other => {
+                            return Err(Error::format(
+                                "loadgen models",
+                                format!("unexpected reply {other:?}"),
+                            ))
+                        }
+                    },
+                    other => {
+                        return Err(Error::format(
+                            "loadgen models",
+                            format!("unexpected frame {other:?}"),
+                        ))
+                    }
+                };
+                model_id = entries
+                    .iter()
+                    .find(|e| &e.name == name)
+                    .ok_or_else(|| {
+                        Error::format("loadgen models", format!("no shard named {name:?}"))
+                    })?
+                    .id;
             }
         }
     }
@@ -502,13 +727,13 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
         // Fill the pipelining window.
         let in_flight = next - received;
         if next < n && in_flight < cfg.pipeline {
-            let digit = if next % 2 == 0 { 2u8 } else { 3u8 };
+            let digit = cfg.digits[next % cfg.digits.len()];
             let features = if mix.f64() < cfg.hard_fraction {
                 noisy.render(digit)
             } else {
                 clean.render(digit)
             };
-            let bytes = encode_request(cfg, next as u64, features);
+            let bytes = encode_request(cfg, model_id, next as u64, features);
             writer.write_all(&bytes).map_err(|e| Error::io("<loadgen write>", e))?;
             report.bytes_sent += bytes.len() as u64;
             report.sent += 1;
@@ -519,7 +744,7 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
             writer.flush().map_err(|e| Error::io("<loadgen flush>", e))?;
         }
         // Window full (or everything sent): read one response.
-        if cfg.mode == ClientMode::V2Binary {
+        if binary {
             match Frame::read_from(&mut reader, CLIENT_MAX_FRAME) {
                 Err(FrameError::Eof) => break, // server closed; report what we have
                 Err(_) => {
@@ -535,6 +760,12 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
                             report.answered += 1;
                             report.total_features += evaluated as u64;
                             report.features.push(evaluated);
+                        }
+                        Frame::Class { evaluated, voters, .. } => {
+                            report.answered += 1;
+                            report.total_features += evaluated as u64;
+                            report.features.push(evaluated);
+                            report.total_voters += voters as u64;
                         }
                         Frame::Error { code: ErrorCode::Overloaded, .. } => {
                             report.overloaded += 1
@@ -556,6 +787,12 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
                     report.answered += 1;
                     report.total_features += features_evaluated as u64;
                     report.features.push(features_evaluated as u32);
+                }
+                Ok(Response::Classify { features_evaluated, voters, .. }) => {
+                    report.answered += 1;
+                    report.total_features += features_evaluated as u64;
+                    report.features.push(features_evaluated as u32);
+                    report.total_voters += voters as u64;
                 }
                 Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
                 _ => report.errors += 1,
@@ -583,6 +820,7 @@ mod tests {
             bytes_recv: 500,
             elapsed_s: 2.0,
             features: vec![100; 9],
+            total_voters: 27,
         };
         let b = LoadReport {
             sent: 5,
@@ -594,6 +832,7 @@ mod tests {
             bytes_recv: 100,
             elapsed_s: 1.0,
             features: vec![20; 5],
+            total_voters: 0,
         };
         a.merge(&b);
         assert_eq!(a.sent, 15);
@@ -604,6 +843,8 @@ mod tests {
         assert!((a.avg_features() - 1000.0 / 14.0).abs() < 1e-9);
         assert!((a.req_per_s() - 15.0 / 2.0).abs() < 1e-9);
         assert!((a.bytes_per_req() - 80.0).abs() < 1e-9);
+        assert_eq!(a.total_voters, 27);
+        assert!((a.avg_features_per_voter() - 1000.0 / 27.0).abs() < 1e-9);
     }
 
     #[test]
@@ -611,6 +852,11 @@ mod tests {
         for mode in ClientMode::ALL {
             assert_eq!(ClientMode::from_name(mode.name()).unwrap(), mode);
         }
+        assert_eq!(ClientMode::from_name("classify").unwrap(), ClientMode::Classify);
+        assert!(
+            !ClientMode::ALL.contains(&ClientMode::Classify),
+            "the transport sweep drives binary shards only"
+        );
         assert!(ClientMode::from_name("v3-quantum").is_err());
         assert_eq!(ClientMode::default(), ClientMode::V1Dense);
     }
@@ -623,9 +869,9 @@ mod tests {
             .map(|i| if i % 5 == 0 { 0.1234567890123 + i as f64 * 1e-7 } else { 0.0 })
             .collect();
         let cfg = |mode: ClientMode| LoadGenConfig { mode, ..Default::default() };
-        let dense = encode_request(&cfg(ClientMode::V1Dense), 0, features.clone());
-        let sparse_json = encode_request(&cfg(ClientMode::V2SparseJson), 0, features.clone());
-        let binary = encode_request(&cfg(ClientMode::V2Binary), 0, features.clone());
+        let dense = encode_request(&cfg(ClientMode::V1Dense), 0, 0, features.clone());
+        let sparse_json = encode_request(&cfg(ClientMode::V2SparseJson), 0, 0, features.clone());
+        let binary = encode_request(&cfg(ClientMode::V2Binary), 0, 0, features.clone());
         assert!(
             sparse_json.len() < dense.len(),
             "sparse JSON ({}) must undercut dense JSON ({})",
@@ -649,6 +895,32 @@ mod tests {
             Request::Score { features: Features::Sparse { idx, .. }, .. } => {
                 assert_eq!(idx.len(), nnz)
             }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Classify mode: an exact v3 frame — 4 (len) + 1 (op) +
+        // 2 (model) + 4 (gen) + 4 (nnz) + 12 per pair — carrying the
+        // resolved model id.
+        let classify = encode_request(&cfg(ClientMode::Classify), 5, 0, features.clone());
+        assert_eq!(classify.len(), 15 + 12 * nnz);
+        let (frame, used) = Frame::decode(&classify, 1 << 20).unwrap();
+        assert_eq!(used, classify.len());
+        match frame {
+            Frame::ClassifySparse { model, gen, idx, .. } => {
+                assert_eq!(model, 5);
+                assert_eq!(gen, 0);
+                assert_eq!(idx.len(), nnz);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // A routed JSON score carries the model name.
+        let routed = LoadGenConfig {
+            mode: ClientMode::V2SparseJson,
+            model: Some("pair-a".into()),
+            ..Default::default()
+        };
+        let bytes = encode_request(&routed, 0, 0, features);
+        match Request::parse(std::str::from_utf8(&bytes).unwrap().trim()).unwrap() {
+            Request::Score { model, .. } => assert_eq!(model.as_deref(), Some("pair-a")),
             other => panic!("wrong variant {other:?}"),
         }
     }

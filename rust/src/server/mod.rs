@@ -19,11 +19,18 @@
 //!   **hot snapshot reload**: a new worker generation is spawned, the
 //!   serving handle is swapped atomically, and the retired generation
 //!   drains its queue to completion — no request is ever dropped.
+//! * [`registry`] — [`registry::ModelRegistry`]: a named collection of
+//!   independently hot-reloadable hubs behind one port. Shards host
+//!   binary models or the all-pairs multiclass ensemble; routing is
+//!   lock-free (immutable shard table), so a reload of one shard never
+//!   stalls another. The first shard is the default, keeping v1
+//!   single-model clients working unmodified.
 //! * [`tcp`] — the front-end proper: accept loop, per-connection
-//!   reader/writer threads, bounded-queue admission control that sheds
-//!   load with an explicit `overloaded` response, and a `stats` endpoint
-//!   exposing throughput, features-touched histograms, and early-exit
-//!   rates.
+//!   reader/writer threads, route resolution before admission,
+//!   bounded-queue admission control that sheds load with an explicit
+//!   `overloaded` response, and `stats`/`models` endpoints exposing
+//!   throughput, features-touched histograms, early-exit rates, and
+//!   per-wire/per-shard splits.
 //! * [`loadgen`] — a loopback load-generator client: configurable
 //!   connection count, pipelining depth, and easy/hard traffic mix, used
 //!   by `attentive bench-serve`, `benches/serve_throughput.rs`, and the
@@ -54,10 +61,12 @@ pub mod frame;
 pub mod hub;
 pub mod loadgen;
 pub mod protocol;
+pub mod registry;
 pub mod tcp;
 
 pub use frame::{ErrorCode, Frame};
 pub use hub::ModelHub;
 pub use loadgen::{Client, ClientMode, LoadGenConfig, LoadReport};
-pub use protocol::{Request, Response, StatsReport};
+pub use protocol::{ModelEntry, Request, Response, StatsReport};
+pub use registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
 pub use tcp::TcpServer;

@@ -12,19 +12,28 @@
 //! ```text
 //! {"op":"score","features":[0.0,0.5,...],"id":7}   // dense; id optional
 //! {"op":"score","idx":[3,17,40],"val":[0.5,-1.2,2.0]}  // sparse (v2 form)
-//! {"op":"hello","proto":2}                         // framing negotiation
+//! {"op":"score","model":"digits-2v3","idx":[...],"val":[...]}  // routed
+//! {"op":"classify","model":"digits","idx":[...],"val":[...]}   // all-pairs vote
+//! {"op":"hello","proto":3}                         // framing negotiation
 //! {"op":"stats"}
-//! {"op":"reload","snapshot":{...ModelSnapshot...}}
+//! {"op":"models"}                                  // shard table
+//! {"op":"reload","model":"digits-2v3","snapshot":{...ServingModel...}}
 //! {"op":"ping"}
 //! ```
 //!
 //! The sparse form carries strictly increasing `idx` with parallel
 //! finite `val` and flows through the server **without densifying** —
-//! the evaluator walks only the support. `hello` negotiates the framing
-//! for the rest of the connection: asking for `"proto":2` switches both
-//! directions to the length-prefixed binary frames of
-//! [`crate::server::frame`]; anything else stays on JSON lines, so v1
-//! clients that never send `hello` are untouched.
+//! the evaluator walks only the support. The optional `"model"` field
+//! routes a request (or reload) to a named registry shard; omitting it
+//! lands on the default shard, which is how single-model clients keep
+//! working against a multi-model server. `classify` runs the attentive
+//! all-pairs vote on an ensemble shard and answers with the predicted
+//! class plus total features touched across voters. `hello` negotiates
+//! the framing for the rest of the connection: asking for `"proto":2`
+//! (or higher) switches both directions to the length-prefixed binary
+//! frames of [`crate::server::frame`] — a grant of 3 additionally
+//! unlocks the model-routed v3 frame ops; anything else stays on JSON
+//! lines, so v1 clients that never send `hello` are untouched.
 //!
 //! Responses always carry `"ok"`; errors carry `"error"` plus
 //! `"retryable"` (`true` for `overloaded` shed responses, which the
@@ -32,8 +41,10 @@
 //!
 //! ```text
 //! {"ok":true,"op":"score","id":7,"score":1.25,"features_evaluated":34}
-//! {"ok":true,"op":"hello","proto":2,"gen":1,"dim":784}
+//! {"ok":true,"op":"classify","label":3,"votes":9,"voters":45,"features_evaluated":1210}
+//! {"ok":true,"op":"hello","proto":3,"gen":1,"dim":784}
 //! {"ok":true,"op":"stats", ...StatsReport...}
+//! {"ok":true,"op":"models","models":[{"name":"default","id":0,...},...]}
 //! {"ok":true,"op":"reload","dim":784}
 //! {"ok":true,"op":"pong"}
 //! {"ok":false,"error":"overloaded","retryable":true}
@@ -43,33 +54,53 @@
 //! can pipeline without correlating ids (ids are still echoed for
 //! clients that want them).
 
-use crate::coordinator::service::{Features, ModelSnapshot};
+use crate::coordinator::service::{Features, ServingModel};
 use crate::util::json::Json;
 
-/// Highest protocol version this build speaks.
+/// Protocol version 2: binary framing, single-model ops.
 pub const PROTO_V2: u32 = 2;
+/// Highest protocol version this build speaks: binary framing plus the
+/// model-routed v3 frame ops (dense score, u32-indexed sparse score,
+/// classify).
+pub const PROTO_V3: u32 = 3;
 
 /// A client → server message.
 #[derive(Debug, Clone)]
 pub enum Request {
     /// Negotiate the connection's framing (`proto` = requested version).
     Hello {
-        /// Requested protocol version (1 = JSON lines, 2 = binary frames).
+        /// Requested protocol version (1 = JSON lines, 2 = binary
+        /// frames, 3 = binary frames + model-routed ops).
         proto: u32,
     },
-    /// Score one feature payload (dense or sparse).
+    /// Score one feature payload (dense or sparse) on a binary shard.
     Score {
         /// Optional client-chosen correlation id, echoed in the response.
         id: Option<u64>,
+        /// Registry shard to route to (`None` = the default shard).
+        model: Option<String>,
         /// The payload; sparse payloads are scored without densifying.
+        features: Features,
+    },
+    /// Run the attentive all-pairs vote on an ensemble shard.
+    Classify {
+        /// Optional client-chosen correlation id, echoed in the response.
+        id: Option<u64>,
+        /// Registry shard to route to (`None` = the default shard).
+        model: Option<String>,
+        /// The payload; each voter early-exits on it independently.
         features: Features,
     },
     /// Fetch the server's live statistics.
     Stats,
-    /// Hot-swap the serving model.
+    /// List the registry's model shards (name, wire id, kind, gen, dim).
+    Models,
+    /// Hot-swap one shard's serving model.
     Reload {
-        /// The replacement model.
-        snapshot: ModelSnapshot,
+        /// Registry shard to swap (`None` = the default shard).
+        model: Option<String>,
+        /// The replacement model (binary snapshot or ensemble).
+        snapshot: ServingModel,
     },
     /// Liveness probe.
     Ping,
@@ -95,44 +126,51 @@ impl Request {
                 let proto = v.get("proto").and_then(|x| x.as_u64()).unwrap_or(1);
                 Ok(Request::Hello { proto: proto.min(u32::MAX as u64) as u32 })
             }
-            "score" => {
+            op @ ("score" | "classify") => {
                 let id = v.get("id").and_then(|x| x.as_u64());
+                let model = v.get("model").and_then(|s| s.as_str()).map(str::to_string);
                 let dense = v.get("features");
                 let sparse = (v.get("idx"), v.get("val"));
                 let features = match (dense, sparse) {
                     (Some(_), (Some(_), _) | (_, Some(_))) => {
-                        return Err("score: give either features or idx/val, not both".into())
+                        return Err(format!("{op}: give either features or idx/val, not both"))
                     }
                     (Some(arr), _) => Features::Dense(parse_f64_array(arr, "features")?),
                     (None, (Some(idx), Some(val))) => {
                         let idx = idx
                             .as_arr()
-                            .ok_or("score: idx must be an array")?
+                            .ok_or_else(|| format!("{op}: idx must be an array"))?
                             .iter()
                             .map(|x| {
                                 x.as_u64()
                                     .filter(|&i| i <= u32::MAX as u64)
                                     .map(|i| i as u32)
-                                    .ok_or_else(|| "score: bad idx entry".to_string())
+                                    .ok_or_else(|| format!("{op}: bad idx entry"))
                             })
                             .collect::<Result<Vec<_>, _>>()?;
                         Features::Sparse { idx, val: parse_f64_array(val, "val")? }
                     }
-                    (None, (Some(_), None)) => return Err("score: idx without val".into()),
-                    (None, (None, Some(_))) => return Err("score: val without idx".into()),
-                    (None, (None, None)) => return Err("score: missing features".into()),
+                    (None, (Some(_), None)) => return Err(format!("{op}: idx without val")),
+                    (None, (None, Some(_))) => return Err(format!("{op}: val without idx")),
+                    (None, (None, None)) => return Err(format!("{op}: missing features")),
                 };
                 // Reject structural damage (unsorted/duplicate indices,
                 // length mismatch) and non-finite values here: a
                 // non-finite margin could not be serialized back as
                 // valid JSON, and a malformed support must never reach
                 // the margin walker.
-                features.validate().map_err(|e| format!("score: {e}"))?;
-                Ok(Request::Score { id, features })
+                features.validate().map_err(|e| format!("{op}: {e}"))?;
+                Ok(if op == "classify" {
+                    Request::Classify { id, model, features }
+                } else {
+                    Request::Score { id, model, features }
+                })
             }
             "stats" => Ok(Request::Stats),
+            "models" => Ok(Request::Models),
             "reload" => Ok(Request::Reload {
-                snapshot: ModelSnapshot::from_json(
+                model: v.get("model").and_then(|s| s.as_str()).map(str::to_string),
+                snapshot: ServingModel::from_json(
                     v.get("snapshot").ok_or("reload: missing snapshot")?,
                 )?,
             }),
@@ -148,8 +186,16 @@ impl Request {
                 ("op", Json::Str("hello".into())),
                 ("proto", Json::Num(*proto as f64)),
             ]),
-            Request::Score { id, features } => {
-                let mut pairs = vec![("op", Json::Str("score".into()))];
+            Request::Score { id, model, features }
+            | Request::Classify { id, model, features } => {
+                let op = match self {
+                    Request::Classify { .. } => "classify",
+                    _ => "score",
+                };
+                let mut pairs = vec![("op", Json::Str(op.into()))];
+                if let Some(model) = model {
+                    pairs.push(("model", Json::Str(model.clone())));
+                }
                 match features {
                     Features::Dense(x) => pairs.push((
                         "features",
@@ -172,10 +218,15 @@ impl Request {
                 Json::obj(pairs)
             }
             Request::Stats => Json::obj([("op", Json::Str("stats".into()))]),
-            Request::Reload { snapshot } => Json::obj([
-                ("op", Json::Str("reload".into())),
-                ("snapshot", snapshot.to_json()),
-            ]),
+            Request::Models => Json::obj([("op", Json::Str("models".into()))]),
+            Request::Reload { model, snapshot } => {
+                let mut pairs = vec![("op", Json::Str("reload".into()))];
+                if let Some(model) = model {
+                    pairs.push(("model", Json::Str(model.clone())));
+                }
+                pairs.push(("snapshot", snapshot.to_json()));
+                Json::obj(pairs)
+            }
             Request::Ping => Json::obj([("op", Json::Str("ping".into()))]),
         }
     }
@@ -188,8 +239,76 @@ impl Request {
     }
 }
 
+/// Served/bytes counters for one wire class (protocol version ×
+/// encoding), exposed by the `stats` op so protocol-migration progress
+/// and routing skew are observable in production.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WireStats {
+    /// Score/classify responses emitted on this wire class.
+    pub served: u64,
+    /// Response bytes written on this wire class (all ops).
+    pub bytes: u64,
+}
+
+impl WireStats {
+    fn to_json(self) -> Json {
+        Json::obj([
+            ("served", Json::Num(self.served as f64)),
+            ("bytes", Json::Num(self.bytes as f64)),
+        ])
+    }
+
+    fn from_json(v: Option<&Json>) -> WireStats {
+        let int = |k: &str| {
+            v.and_then(|w| w.get(k)).and_then(|x| x.as_u64()).unwrap_or(0)
+        };
+        WireStats { served: int("served"), bytes: int("bytes") }
+    }
+}
+
+/// Per-model-shard slice of the stats report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ModelStatsReport {
+    /// Shard name.
+    pub name: String,
+    /// Requests this shard scored/classified.
+    pub served: u64,
+    /// Mean features touched per request on this shard.
+    pub avg_features: f64,
+    /// Fraction of this shard's requests that exited early.
+    pub early_exit_rate: f64,
+    /// Shard serving generation.
+    pub gen: u32,
+    /// Hot reloads applied to this shard.
+    pub reloads: u64,
+}
+
+impl ModelStatsReport {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::Str(self.name.clone())),
+            ("served", Json::Num(self.served as f64)),
+            ("avg_features", Json::Num(self.avg_features)),
+            ("early_exit_rate", Json::Num(self.early_exit_rate)),
+            ("gen", Json::Num(self.gen as f64)),
+            ("reloads", Json::Num(self.reloads as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> ModelStatsReport {
+        ModelStatsReport {
+            name: v.get("name").and_then(|s| s.as_str()).unwrap_or("").to_string(),
+            served: v.get("served").and_then(|x| x.as_u64()).unwrap_or(0),
+            avg_features: v.get("avg_features").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            early_exit_rate: v.get("early_exit_rate").and_then(|x| x.as_f64()).unwrap_or(0.0),
+            gen: v.get("gen").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+            reloads: v.get("reloads").and_then(|x| x.as_u64()).unwrap_or(0),
+        }
+    }
+}
+
 /// Server statistics exposed by the `stats` op.
-#[derive(Debug, Clone, Copy, Default, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct StatsReport {
     /// Requests scored.
     pub served: u64,
@@ -217,6 +336,14 @@ pub struct StatsReport {
     pub uptime_s: f64,
     /// Scored requests per second over the whole uptime.
     pub req_per_s: f64,
+    /// v1 JSON-lines traffic.
+    pub wire_v1: WireStats,
+    /// v2+ JSON-envelope-frame traffic.
+    pub wire_v2_json: WireStats,
+    /// v2+ native binary-frame traffic.
+    pub wire_v2_binary: WireStats,
+    /// Per-shard counters, in wire-id order (default shard first).
+    pub models: Vec<ModelStatsReport>,
 }
 
 impl StatsReport {
@@ -236,6 +363,15 @@ impl StatsReport {
             ("reloads", Json::Num(self.reloads as f64)),
             ("uptime_s", Json::Num(self.uptime_s)),
             ("req_per_s", Json::Num(self.req_per_s)),
+            (
+                "wire",
+                Json::obj([
+                    ("v1", self.wire_v1.to_json()),
+                    ("v2-json", self.wire_v2_json.to_json()),
+                    ("v2-binary", self.wire_v2_binary.to_json()),
+                ]),
+            ),
+            ("models", Json::Arr(self.models.iter().map(ModelStatsReport::to_json).collect())),
         ]
     }
 
@@ -244,7 +380,16 @@ impl StatsReport {
     pub fn from_json(v: &Json) -> StatsReport {
         let num = |k: &str| v.get(k).and_then(|x| x.as_f64()).unwrap_or(0.0);
         let int = |k: &str| v.get(k).and_then(|x| x.as_u64()).unwrap_or(0);
+        let wire = v.get("wire");
         StatsReport {
+            wire_v1: WireStats::from_json(wire.and_then(|w| w.get("v1"))),
+            wire_v2_json: WireStats::from_json(wire.and_then(|w| w.get("v2-json"))),
+            wire_v2_binary: WireStats::from_json(wire.and_then(|w| w.get("v2-binary"))),
+            models: v
+                .get("models")
+                .and_then(|a| a.as_arr())
+                .map(|arr| arr.iter().map(ModelStatsReport::from_json).collect())
+                .unwrap_or_default(),
             served: int("served"),
             avg_features: num("avg_features"),
             early_exit_rate: num("early_exit_rate"),
@@ -259,6 +404,48 @@ impl StatsReport {
             uptime_s: num("uptime_s"),
             req_per_s: num("req_per_s"),
         }
+    }
+}
+
+/// One row of the `models` op: a registry shard's identity and live
+/// serving state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelEntry {
+    /// Shard name (JSON routing key).
+    pub name: String,
+    /// Interned wire id (binary v3 routing key; 0 = default shard).
+    pub id: u16,
+    /// `"binary"` or `"ensemble"`.
+    pub kind: String,
+    /// Serving generation.
+    pub gen: u32,
+    /// Feature dimensionality.
+    pub dim: usize,
+    /// Voters behind the shard (0 for binary).
+    pub voters: usize,
+}
+
+impl ModelEntry {
+    fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::Str(self.name.clone())),
+            ("id", Json::Num(self.id as f64)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("gen", Json::Num(self.gen as f64)),
+            ("dim", Json::Num(self.dim as f64)),
+            ("voters", Json::Num(self.voters as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ModelEntry, String> {
+        Ok(ModelEntry {
+            name: v.get("name").and_then(|s| s.as_str()).ok_or("models: missing name")?.into(),
+            id: v.get("id").and_then(|x| x.as_u64()).ok_or("models: missing id")? as u16,
+            kind: v.get("kind").and_then(|s| s.as_str()).unwrap_or("binary").into(),
+            gen: v.get("gen").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+            dim: v.get("dim").and_then(|x| x.as_usize()).unwrap_or(0),
+            voters: v.get("voters").and_then(|x| x.as_usize()).unwrap_or(0),
+        })
     }
 }
 
@@ -283,8 +470,24 @@ pub enum Response {
         /// Features evaluated before the early exit.
         features_evaluated: usize,
     },
+    /// A classified request (attentive all-pairs vote).
+    Classify {
+        /// Echo of the request id, if one was sent.
+        id: Option<u64>,
+        /// Predicted class (vote winner; ties break toward the smaller
+        /// label).
+        label: i64,
+        /// Votes the winner collected.
+        votes: u32,
+        /// Voters consulted.
+        voters: u32,
+        /// Features evaluated, summed across voters.
+        features_evaluated: usize,
+    },
     /// Live statistics.
     Stats(StatsReport),
+    /// The registry's shard table.
+    Models(Vec<ModelEntry>),
     /// A hot reload was applied; `dim` is the new model's dimensionality.
     Reloaded {
         /// New feature dimensionality.
@@ -326,12 +529,31 @@ impl Response {
                 }
                 Json::obj(pairs)
             }
+            Response::Classify { id, label, votes, voters, features_evaluated } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("classify".into())),
+                    ("label", Json::Num(*label as f64)),
+                    ("votes", Json::Num(*votes as f64)),
+                    ("voters", Json::Num(*voters as f64)),
+                    ("features_evaluated", Json::Num(*features_evaluated as f64)),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
             Response::Stats(report) => {
                 let mut pairs =
                     vec![("ok", Json::Bool(true)), ("op", Json::Str("stats".into()))];
                 pairs.extend(report.payload());
                 Json::obj(pairs)
             }
+            Response::Models(entries) => Json::obj([
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("models".into())),
+                ("models", Json::Arr(entries.iter().map(ModelEntry::to_json).collect())),
+            ]),
             Response::Reloaded { dim } => Json::obj([
                 ("ok", Json::Bool(true)),
                 ("op", Json::Str("reload".into())),
@@ -393,7 +615,25 @@ impl Response {
                     .and_then(|x| x.as_usize())
                     .ok_or("score: missing features_evaluated")?,
             }),
+            "classify" => Ok(Response::Classify {
+                id: v.get("id").and_then(|x| x.as_u64()),
+                label: v.get("label").and_then(|x| x.as_i64()).ok_or("classify: missing label")?,
+                votes: v.get("votes").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                voters: v.get("voters").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
+                features_evaluated: v
+                    .get("features_evaluated")
+                    .and_then(|x| x.as_usize())
+                    .ok_or("classify: missing features_evaluated")?,
+            }),
             "stats" => Ok(Response::Stats(StatsReport::from_json(&v))),
+            "models" => Ok(Response::Models(
+                v.get("models")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("models: missing models")?
+                    .iter()
+                    .map(ModelEntry::from_json)
+                    .collect::<Result<_, _>>()?,
+            )),
             "reload" => Ok(Response::Reloaded {
                 dim: v.get("dim").and_then(|x| x.as_usize()).ok_or("reload: missing dim")?,
             }),
@@ -411,26 +651,115 @@ impl Response {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::service::ModelSnapshot;
     use crate::margin::policy::CoordinatePolicy;
     use crate::stst::boundary::AnyBoundary;
 
     #[test]
     fn score_request_round_trip() {
-        let req =
-            Request::Score { id: Some(9), features: Features::Dense(vec![0.0, -1.5, 0.25]) };
+        let req = Request::Score {
+            id: Some(9),
+            model: None,
+            features: Features::Dense(vec![0.0, -1.5, 0.25]),
+        };
         let line = req.to_line();
         assert!(line.ends_with('\n'));
+        assert!(!line.contains("\"model\""), "unrouted requests omit the model field");
         match Request::parse(line.trim()).unwrap() {
-            Request::Score { id, features: Features::Dense(features) } => {
+            Request::Score { id, model, features: Features::Dense(features) } => {
                 assert_eq!(id, Some(9));
+                assert_eq!(model, None);
                 assert_eq!(features, vec![0.0, -1.5, 0.25]);
             }
             other => panic!("wrong variant {other:?}"),
         }
         // Without an id.
-        let req = Request::Score { id: None, features: Features::Dense(vec![1.0]) };
+        let req = Request::Score { id: None, model: None, features: Features::Dense(vec![1.0]) };
         match Request::parse(&req.to_line()).unwrap() {
             Request::Score { id, .. } => assert_eq!(id, None),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn routed_score_and_classify_round_trip() {
+        let req = Request::Score {
+            id: None,
+            model: Some("digits-2v3".into()),
+            features: Features::Dense(vec![1.0]),
+        };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Score { model, .. } => assert_eq!(model.as_deref(), Some("digits-2v3")),
+            other => panic!("wrong variant {other:?}"),
+        }
+        let req = Request::Classify {
+            id: Some(3),
+            model: Some("digits".into()),
+            features: Features::Sparse { idx: vec![5, 9], val: vec![1.0, -1.0] },
+        };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Classify { id, model, features: Features::Sparse { idx, .. } } => {
+                assert_eq!(id, Some(3));
+                assert_eq!(model.as_deref(), Some("digits"));
+                assert_eq!(idx, vec![5, 9]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Classify payloads get the same structural screening as score.
+        assert!(Request::parse(r#"{"op":"classify"}"#).is_err(), "missing features");
+        assert!(
+            Request::parse(r#"{"op":"classify","idx":[5,2],"val":[1.0,2.0]}"#).is_err(),
+            "unsorted idx"
+        );
+    }
+
+    #[test]
+    fn classify_response_round_trips() {
+        let resp = Response::Classify {
+            id: Some(11),
+            label: 7,
+            votes: 9,
+            voters: 45,
+            features_evaluated: 1210,
+        };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::Classify { id, label, votes, voters, features_evaluated } => {
+                assert_eq!(id, Some(11));
+                assert_eq!(label, 7);
+                assert_eq!(votes, 9);
+                assert_eq!(voters, 45);
+                assert_eq!(features_evaluated, 1210);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn models_op_round_trips() {
+        assert!(matches!(
+            Request::parse(&Request::Models.to_line()).unwrap(),
+            Request::Models
+        ));
+        let entries = vec![
+            ModelEntry {
+                name: "default".into(),
+                id: 0,
+                kind: "binary".into(),
+                gen: 1,
+                dim: 784,
+                voters: 0,
+            },
+            ModelEntry {
+                name: "digits".into(),
+                id: 1,
+                kind: "ensemble".into(),
+                gen: 3,
+                dim: 784,
+                voters: 45,
+            },
+        ];
+        match Response::parse(&Response::Models(entries.clone()).to_line()).unwrap() {
+            Response::Models(back) => assert_eq!(back, entries),
             other => panic!("wrong variant {other:?}"),
         }
     }
@@ -439,13 +768,14 @@ mod tests {
     fn sparse_score_request_round_trip() {
         let req = Request::Score {
             id: Some(4),
+            model: None,
             features: Features::Sparse { idx: vec![3, 17, 40], val: vec![0.5, -1.2, 2.0] },
         };
         let line = req.to_line();
         assert!(line.contains("\"idx\"") && line.contains("\"val\""));
         assert!(!line.contains("\"features\""));
         match Request::parse(line.trim()).unwrap() {
-            Request::Score { id, features: Features::Sparse { idx, val } } => {
+            Request::Score { id, features: Features::Sparse { idx, val }, .. } => {
                 assert_eq!(id, Some(4));
                 assert_eq!(idx, vec![3, 17, 40]);
                 assert_eq!(val, vec![0.5, -1.2, 2.0]);
@@ -514,11 +844,22 @@ mod tests {
             boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
             policy: CoordinatePolicy::Sequential,
         };
-        match Request::parse(&Request::Reload { snapshot: snapshot.clone() }.to_line()).unwrap() {
-            Request::Reload { snapshot: back } => {
+        let req = Request::Reload {
+            model: Some("pair-a".into()),
+            snapshot: snapshot.clone().into(),
+        };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Reload { model, snapshot: ServingModel::Binary(back) } => {
+                assert_eq!(model.as_deref(), Some("pair-a"));
                 assert_eq!(back.weights, snapshot.weights);
                 assert_eq!(back.boundary, snapshot.boundary);
             }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Unrouted reload (v1 compat) parses with no model.
+        let req = Request::Reload { model: None, snapshot: snapshot.into() };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Reload { model: None, .. } => {}
             other => panic!("wrong variant {other:?}"),
         }
     }
@@ -574,9 +915,44 @@ mod tests {
             reloads: 1,
             uptime_s: 4.5,
             req_per_s: 222.2,
+            wire_v1: WireStats { served: 600, bytes: 48_000 },
+            wire_v2_json: WireStats { served: 100, bytes: 9_000 },
+            wire_v2_binary: WireStats { served: 300, bytes: 7_500 },
+            models: vec![
+                ModelStatsReport {
+                    name: "default".into(),
+                    served: 700,
+                    avg_features: 80.0,
+                    early_exit_rate: 0.9,
+                    gen: 2,
+                    reloads: 1,
+                },
+                ModelStatsReport {
+                    name: "digits".into(),
+                    served: 300,
+                    avg_features: 400.0,
+                    early_exit_rate: 0.8,
+                    gen: 1,
+                    reloads: 0,
+                },
+            ],
         };
-        match Response::parse(&Response::Stats(report).to_line()).unwrap() {
+        match Response::parse(&Response::Stats(report.clone()).to_line()).unwrap() {
             Response::Stats(back) => assert_eq!(back, report),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // A pre-registry report (no wire/models keys) parses with empty
+        // defaults, so old servers stay readable.
+        match Response::parse(
+            r#"{"ok":true,"op":"stats","served":5,"req_per_s":1.0}"#,
+        )
+        .unwrap()
+        {
+            Response::Stats(back) => {
+                assert_eq!(back.served, 5);
+                assert_eq!(back.wire_v1, WireStats::default());
+                assert!(back.models.is_empty());
+            }
             other => panic!("wrong variant {other:?}"),
         }
     }

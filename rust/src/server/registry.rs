@@ -1,0 +1,348 @@
+//! [`ModelRegistry`]: a named collection of independently hot-reloadable
+//! model shards behind one serving port.
+//!
+//! Each shard is a [`ModelHub`] — it keeps the hub's generation-pinning
+//! and drain-on-swap semantics — hosting either a binary model or an
+//! all-pairs multiclass ensemble ([`ServingModel`]). The shard set is
+//! fixed at startup (`serve --model name=path`, repeatable), which makes
+//! routing lock-free: resolving a route only reads an immutable name
+//! table, and a hot reload of one shard contends only on that shard's
+//! internal mutex — **a reload of one model can never stall traffic on
+//! another**.
+//!
+//! The first registered shard is the **default shard** (wire model id
+//! 0): it answers every request that does not name a model, which is how
+//! v1 single-model clients keep working unmodified against a multi-model
+//! server. On the wire, shards are addressed by name (JSON `"model"`
+//! field) or by the interned `u16` id the registry assigns at
+//! registration (binary v3 frames); the `models` op lists the table.
+
+use std::collections::HashMap;
+
+use crate::coordinator::service::{ServingModel, StatsSnapshot};
+use crate::error::{Error, Result};
+use crate::server::hub::{HubError, HubInfo, ModelHub};
+
+/// Name of the shard that answers un-routed (single-model) requests
+/// when none is given explicitly at registration time.
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Why the registry could not route a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// No shard with that name.
+    UnknownName(String),
+    /// No shard with that wire id.
+    UnknownId(u16),
+    /// The shard rejected the request (shed, kind/dim mismatch, ...).
+    Hub(HubError),
+}
+
+impl From<HubError> for RegistryError {
+    fn from(e: HubError) -> Self {
+        RegistryError::Hub(e)
+    }
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownName(name) => write!(f, "unknown model {name:?}"),
+            RegistryError::UnknownId(id) => write!(f, "unknown model id {id}"),
+            RegistryError::Hub(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+/// One serving shard: a named, independently reloadable [`ModelHub`].
+struct Shard {
+    name: String,
+    hub: ModelHub,
+}
+
+/// A shard's identity and live serving state, as listed by the `models`
+/// op.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardInfo {
+    /// Shard name (the JSON routing key).
+    pub name: String,
+    /// Interned wire id (the binary-frame routing key; 0 = default).
+    pub id: u16,
+    /// Live serving state (generation, dim, kind, voters).
+    pub hub: HubInfo,
+    /// Hot reloads applied to this shard.
+    pub reloads: u64,
+}
+
+/// Per-shard slice of the `stats` op.
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    /// Shard name.
+    pub name: String,
+    /// This shard's aggregated service counters.
+    pub stats: StatsSnapshot,
+    /// Serving generation.
+    pub gen: u32,
+    /// Hot reloads applied.
+    pub reloads: u64,
+}
+
+/// A named collection of independently hot-reloadable model shards.
+pub struct ModelRegistry {
+    /// Index = interned wire id. Immutable after construction: routing
+    /// never takes a registry-wide lock.
+    shards: Vec<Shard>,
+    by_name: HashMap<String, u16>,
+}
+
+impl ModelRegistry {
+    /// Build the registry, spawning one hub per `(name, model)` pair.
+    /// The first entry becomes the default shard (wire id 0). Names
+    /// must be unique and non-empty; at most `u16::MAX + 1` shards.
+    pub fn new(
+        models: Vec<(String, ServingModel)>,
+        max_batch: usize,
+        queue: usize,
+        workers: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        if models.is_empty() {
+            return Err(Error::Config("registry needs at least one model shard".into()));
+        }
+        if models.len() > u16::MAX as usize + 1 {
+            return Err(Error::Config(format!(
+                "registry holds at most {} shards, got {}",
+                u16::MAX as usize + 1,
+                models.len()
+            )));
+        }
+        let mut shards = Vec::with_capacity(models.len());
+        let mut by_name = HashMap::with_capacity(models.len());
+        for (i, (name, model)) in models.into_iter().enumerate() {
+            if name.is_empty() {
+                return Err(Error::Config("model shard name must not be empty".into()));
+            }
+            if by_name.insert(name.clone(), i as u16).is_some() {
+                return Err(Error::Config(format!("duplicate model shard name {name:?}")));
+            }
+            // One seed stream per shard, so co-hosted shards never share
+            // a policy RNG sequence.
+            let shard_seed = seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+            shards.push(Shard {
+                name,
+                hub: ModelHub::new(model, max_batch, queue, workers, shard_seed),
+            });
+        }
+        Ok(Self { shards, by_name })
+    }
+
+    /// Number of shards.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when the registry holds no shards (never, post-construction;
+    /// kept for API completeness).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// The default shard's hub (wire id 0).
+    pub fn default_hub(&self) -> &ModelHub {
+        &self.shards[0].hub
+    }
+
+    /// Route by optional name: `None` (and the default shard's own
+    /// name) lands on the default shard. Returns the interned id with
+    /// the hub so binary responses can be stamped.
+    pub fn resolve_name(&self, name: Option<&str>) -> std::result::Result<(u16, &ModelHub), RegistryError> {
+        match name {
+            None => Ok((0, &self.shards[0].hub)),
+            Some(name) => {
+                let &id = self
+                    .by_name
+                    .get(name)
+                    .ok_or_else(|| RegistryError::UnknownName(name.to_string()))?;
+                Ok((id, &self.shards[id as usize].hub))
+            }
+        }
+    }
+
+    /// Route by interned wire id (binary v3 frames; id 0 = default).
+    pub fn resolve_id(&self, id: u16) -> std::result::Result<&ModelHub, RegistryError> {
+        self.shards.get(id as usize).map(|s| &s.hub).ok_or(RegistryError::UnknownId(id))
+    }
+
+    /// Hot-swap one shard's model (`None` routes to the default shard).
+    /// Only that shard's hub mutex is touched; every other shard keeps
+    /// serving untouched.
+    pub fn reload(
+        &self,
+        name: Option<&str>,
+        model: ServingModel,
+    ) -> std::result::Result<usize, RegistryError> {
+        let (_, hub) = self.resolve_name(name)?;
+        hub.reload(model).map_err(RegistryError::Hub)
+    }
+
+    /// Identity + live state of every shard, in wire-id order.
+    pub fn infos(&self) -> Vec<ShardInfo> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(id, s)| ShardInfo {
+                name: s.name.clone(),
+                id: id as u16,
+                hub: s.hub.info(),
+                reloads: s.hub.reloads(),
+            })
+            .collect()
+    }
+
+    /// Per-shard statistics, in wire-id order.
+    pub fn per_shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| ShardStats {
+                name: s.name.clone(),
+                stats: s.hub.stats(),
+                gen: s.hub.generation(),
+                reloads: s.hub.reloads(),
+            })
+            .collect()
+    }
+
+    /// Aggregate statistics across every shard.
+    pub fn stats_total(&self) -> StatsSnapshot {
+        let mut total = StatsSnapshot::default();
+        for s in &self.shards {
+            total.add(&s.hub.stats());
+        }
+        total
+    }
+
+    /// Total hot reloads applied across all shards.
+    pub fn reloads(&self) -> u64 {
+        self.shards.iter().map(|s| s.hub.reloads()).sum()
+    }
+
+    /// Shut every shard down (drain + join). Returns the final
+    /// aggregated statistics. Idempotent.
+    pub fn shutdown(&self) -> StatsSnapshot {
+        let mut total = StatsSnapshot::default();
+        for s in &self.shards {
+            total.add(&s.hub.shutdown());
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ModelSnapshot;
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::AnyBoundary;
+
+    fn snapshot(dim: usize, w: f64) -> ModelSnapshot {
+        ModelSnapshot {
+            weights: vec![w; dim],
+            var_sn: 4.0,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+        }
+    }
+
+    fn two_shard_registry() -> ModelRegistry {
+        ModelRegistry::new(
+            vec![
+                ("default".into(), snapshot(8, 1.0).into()),
+                ("neg".into(), snapshot(16, -1.0).into()),
+            ],
+            4,
+            64,
+            1,
+            0,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_by_name_and_id_with_independent_dims() {
+        let reg = two_shard_registry();
+        assert_eq!(reg.len(), 2);
+        let (id, hub) = reg.resolve_name(None).unwrap();
+        assert_eq!(id, 0);
+        assert!(hub.submit(vec![1.0; 8]).unwrap().recv().unwrap().score > 0.0);
+        let (id, hub) = reg.resolve_name(Some("neg")).unwrap();
+        assert_eq!(id, 1);
+        assert!(hub.submit(vec![1.0; 16]).unwrap().recv().unwrap().score < 0.0);
+        assert!(reg.resolve_id(1).is_ok());
+        match reg.resolve_name(Some("nope")) {
+            Err(RegistryError::UnknownName(name)) => assert_eq!(name, "nope"),
+            other => panic!("expected unknown name, got {other:?}"),
+        }
+        assert_eq!(reg.resolve_id(7), Err(RegistryError::UnknownId(7)));
+        reg.shutdown();
+    }
+
+    #[test]
+    fn reload_touches_one_shard_only() {
+        let reg = two_shard_registry();
+        assert_eq!(reg.reload(Some("neg"), snapshot(16, 1.0).into()).unwrap(), 16);
+        // The reloaded shard flips; the default shard's generation and
+        // behavior are untouched.
+        let (_, neg) = reg.resolve_name(Some("neg")).unwrap();
+        assert_eq!(neg.generation(), 2);
+        assert!(neg.submit(vec![1.0; 16]).unwrap().recv().unwrap().score > 0.0);
+        assert_eq!(reg.default_hub().generation(), 1);
+        assert_eq!(reg.reloads(), 1);
+        let infos = reg.infos();
+        assert_eq!(infos.len(), 2);
+        assert_eq!((infos[0].id, infos[0].hub.gen, infos[0].reloads), (0, 1, 0));
+        assert_eq!((infos[1].id, infos[1].hub.gen, infos[1].reloads), (1, 2, 1));
+        match reg.reload(Some("ghost"), snapshot(4, 1.0).into()) {
+            Err(RegistryError::UnknownName(_)) => {}
+            other => panic!("expected unknown name, got {other:?}"),
+        }
+        reg.shutdown();
+    }
+
+    #[test]
+    fn stats_aggregate_and_split_per_shard() {
+        let reg = two_shard_registry();
+        reg.default_hub().submit(vec![1.0; 8]).unwrap().recv().unwrap();
+        let (_, neg) = reg.resolve_name(Some("neg")).unwrap();
+        neg.submit(vec![1.0; 16]).unwrap().recv().unwrap();
+        neg.submit(vec![-1.0; 16]).unwrap().recv().unwrap();
+        assert_eq!(reg.stats_total().served, 3);
+        let per = reg.per_shard_stats();
+        assert_eq!(per[0].stats.served, 1);
+        assert_eq!(per[1].stats.served, 2);
+        assert_eq!(reg.shutdown().served, 3);
+    }
+
+    #[test]
+    fn construction_rejects_bad_shard_sets() {
+        assert!(ModelRegistry::new(vec![], 4, 64, 1, 0).is_err(), "empty");
+        assert!(
+            ModelRegistry::new(
+                vec![
+                    ("a".into(), snapshot(4, 1.0).into()),
+                    ("a".into(), snapshot(4, 1.0).into()),
+                ],
+                4,
+                64,
+                1,
+                0
+            )
+            .is_err(),
+            "duplicate name"
+        );
+        assert!(
+            ModelRegistry::new(vec![(String::new(), snapshot(4, 1.0).into())], 4, 64, 1, 0)
+                .is_err(),
+            "empty name"
+        );
+    }
+}

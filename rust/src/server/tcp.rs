@@ -1,37 +1,45 @@
 //! TCP front-end: accept loop, per-connection reader/writer threads,
-//! bounded-queue admission, per-connection protocol negotiation, and
-//! the stats/reload control ops.
+//! bounded-queue admission, per-connection protocol negotiation, model
+//! routing, and the stats/models/reload control ops.
 //!
 //! ## Threading model
 //!
 //! One accept thread; per connection, a **reader** thread that decodes
 //! requests and a **writer** thread that emits responses in request
-//! order. Score requests are admitted to the [`ModelHub`]'s bounded
-//! queue without blocking: if the queue is full the reader immediately
-//! enqueues an explicit `overloaded` error instead of buffering — load
-//! is shed at the edge, never accumulated. Admitted requests travel to
-//! the writer as pending response receivers, bounded by
-//! `max_pending_per_conn` (the per-connection pipelining window): a
-//! slow consumer backpressures its own reader, not the whole server.
+//! order. Score/classify requests are routed through the
+//! [`ModelRegistry`] — route resolution is lock-free (the shard table is
+//! immutable) and happens **before** admission, so a hot reload of one
+//! shard can never stall traffic on another — and admitted to the
+//! target [`ModelHub`]'s bounded queue without blocking: if the queue is
+//! full the reader immediately enqueues an explicit `overloaded` error
+//! instead of buffering — load is shed at the edge, never accumulated.
+//! Admitted requests travel to the writer as pending response
+//! receivers, bounded by `max_pending_per_conn` (the per-connection
+//! pipelining window): a slow consumer backpressures its own reader,
+//! not the whole server.
 //!
 //! ## Protocol negotiation
 //!
 //! Every connection starts in v1 JSON-lines mode. A
-//! `{"op":"hello","proto":2}` request flips it to the length-prefixed
-//! binary framing of [`crate::server::frame`] — the reader switches
-//! decoders after answering, and each queued job carries its own
-//! rendering instructions, so the in-order response stream stays
-//! consistent across the switch. Clients that never send `hello` (all
-//! v1 clients) are served exactly as before.
+//! `{"op":"hello","proto":N}` request with `N ≥ 2` flips it to the
+//! length-prefixed binary framing of [`crate::server::frame`] — the
+//! reader switches decoders after answering, and each queued job
+//! carries its own rendering instructions, so the in-order response
+//! stream stays consistent across the switch. A grant of 3 additionally
+//! unlocks the model-routed v3 frame ops (dense score, u32-indexed
+//! sparse score, classify). Clients that never send `hello` (all v1
+//! clients) are served exactly as before, on the default shard.
 //!
 //! ## Control ops
 //!
 //! `stats` returns the aggregated [`StatsReport`] (throughput,
-//! features-touched percentiles, early-exit rate, shed counts); `reload`
-//! hot-swaps the serving [`ModelSnapshot`] with zero downtime (see
-//! [`ModelHub`]). Both arrive over the same wire as ordinary requests —
-//! in v2 binary mode they ride inside `JSON_REQ`/`JSON_RESP` envelope
-//! frames — so any connection can act as a control channel.
+//! features-touched percentiles, early-exit rate, shed counts, plus
+//! per-wire-class and per-shard splits); `models` lists the shard
+//! table; `reload` hot-swaps one shard's serving model with zero
+//! downtime (see [`ModelHub`]). All arrive over the same wire as
+//! ordinary requests — in binary mode they ride inside
+//! `JSON_REQ`/`JSON_RESP` envelope frames — so any connection can act
+//! as a control channel.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -43,15 +51,48 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::ServerConfig;
-use crate::coordinator::service::{Features, ModelSnapshot, ScoreResponse};
+use crate::coordinator::service::{
+    Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
+};
 use crate::error::{Error, Result};
 use crate::server::frame::{ErrorCode, Frame, FrameError};
 use crate::server::hub::{HubError, ModelHub};
-use crate::server::protocol::{Request, Response, StatsReport, PROTO_V2};
+use crate::server::protocol::{
+    ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V3,
+};
+use crate::server::registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
+
+/// Which wire class a response is rendered on — the key of the
+/// per-protocol stats split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WireClass {
+    /// v1 JSON line.
+    V1,
+    /// JSON document inside a v2+ envelope frame.
+    V2Json,
+    /// Native v2+ binary frame.
+    V2Binary,
+}
+
+/// Served/bytes counters for one wire class.
+#[derive(Default)]
+struct WireCounters {
+    served: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl WireCounters {
+    fn snapshot(&self) -> WireStats {
+        WireStats {
+            served: self.served.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
 
 /// Server-wide shared state.
 struct Shared {
-    hub: ModelHub,
+    registry: ModelRegistry,
     shutting_down: AtomicBool,
     accepted: AtomicU64,
     overloaded: AtomicU64,
@@ -66,6 +107,14 @@ struct Shared {
     max_pending: usize,
     max_frame_bytes: usize,
     max_nnz: usize,
+    /// Per-wire-class served/bytes (indexed v1, v2-json, v2-binary).
+    wire: [WireCounters; 3],
+}
+
+impl Shared {
+    fn wire(&self, class: WireClass) -> &WireCounters {
+        &self.wire[class as usize]
+    }
 }
 
 /// A running TCP serving front-end.
@@ -79,13 +128,28 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind `cfg.listen` and start serving `snapshot`.
+    /// Bind `cfg.listen` and start serving `snapshot` as the single
+    /// (default) shard — the original single-model entry point, kept
+    /// for drop-in compatibility.
     pub fn serve(cfg: &ServerConfig, snapshot: ModelSnapshot) -> Result<TcpServer> {
+        Self::serve_models(cfg, vec![(DEFAULT_MODEL.to_string(), snapshot.into())])
+    }
+
+    /// Bind `cfg.listen` and serve a registry of named model shards
+    /// behind the one port. The first entry is the default shard (wire
+    /// model id 0): it answers every request that does not name a
+    /// model, so v1 single-model clients work unmodified.
+    pub fn serve_models(
+        cfg: &ServerConfig,
+        models: Vec<(String, ServingModel)>,
+    ) -> Result<TcpServer> {
         cfg.validate()?;
+        let registry =
+            ModelRegistry::new(models, cfg.max_batch, cfg.queue, cfg.workers, cfg.seed)?;
         let listener = TcpListener::bind(&cfg.listen).map_err(|e| Error::io(&cfg.listen, e))?;
         let local_addr = listener.local_addr().map_err(|e| Error::io(&cfg.listen, e))?;
         let shared = Arc::new(Shared {
-            hub: ModelHub::new(snapshot, cfg.max_batch, cfg.queue, cfg.workers, cfg.seed),
+            registry,
             shutting_down: AtomicBool::new(false),
             accepted: AtomicU64::new(0),
             overloaded: AtomicU64::new(0),
@@ -97,6 +161,7 @@ impl TcpServer {
             max_pending: cfg.max_pending_per_conn,
             max_frame_bytes: cfg.max_frame_bytes,
             max_nnz: cfg.max_nnz,
+            wire: Default::default(),
         });
         let accept_shared = shared.clone();
         let accept_join = std::thread::spawn(move || accept_loop(listener, accept_shared));
@@ -113,9 +178,28 @@ impl TcpServer {
         report(&self.shared)
     }
 
-    /// Programmatic hot reload (same semantics as the `reload` op).
-    pub fn reload(&self, snapshot: ModelSnapshot) -> std::result::Result<usize, HubError> {
-        self.shared.hub.reload(snapshot)
+    /// Programmatic hot reload of the default shard (same semantics as
+    /// an un-routed `reload` op).
+    pub fn reload(
+        &self,
+        model: impl Into<ServingModel>,
+    ) -> std::result::Result<usize, HubError> {
+        self.shared.registry.default_hub().reload(model)
+    }
+
+    /// Programmatic hot reload of a named shard (same semantics as a
+    /// routed `reload` op).
+    pub fn reload_model(
+        &self,
+        name: &str,
+        model: impl Into<ServingModel>,
+    ) -> std::result::Result<usize, RegistryError> {
+        self.shared.registry.reload(Some(name), model.into())
+    }
+
+    /// The registry's shard table (same payload as the `models` op).
+    pub fn models(&self) -> Vec<ModelEntry> {
+        model_entries(&self.shared)
     }
 
     /// Block on the accept loop. It only exits if the listener itself
@@ -128,7 +212,7 @@ impl TcpServer {
             let _ = join.join();
         }
         self.teardown_connections();
-        self.shared.hub.shutdown();
+        self.shared.registry.shutdown();
     }
 
     /// Stop accepting, drain and answer every admitted request, join all
@@ -147,7 +231,7 @@ impl TcpServer {
         let _ = TcpStream::connect(self.local_addr);
         let _ = accept_join.join();
         self.teardown_connections();
-        self.shared.hub.shutdown();
+        self.shared.registry.shutdown();
     }
 
     fn teardown_connections(&self) {
@@ -195,25 +279,38 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     }
 }
 
-/// How a pending score's response must be rendered — decided at
+/// How a pending score/classify response must be rendered — decided at
 /// admission time, so the writer needs no codec state of its own and
 /// the v1→v2 switch stays consistent across the in-order job stream.
 enum Wire {
     /// v1 JSON line, echoing the optional request id.
     V1 { id: Option<u64> },
-    /// v2 binary `SCORE`/`ERROR` frame, stamped with the serving
-    /// generation captured at admission.
+    /// v2+ binary `SCORE`/`CLASS`/`ERROR` frame, stamped with the
+    /// serving generation captured at admission (classify pendings
+    /// render as `CLASS`, score pendings as `SCORE`).
     V2Binary { gen: u32 },
-    /// v2 `JSON_RESP` envelope frame (a JSON-op request on a binary
+    /// v2+ `JSON_RESP` envelope frame (a JSON-op request on a binary
     /// connection, e.g. a dense score through the envelope).
     V2Json { id: Option<u64> },
 }
 
+impl Wire {
+    fn class(&self) -> WireClass {
+        match self {
+            Wire::V1 { .. } => WireClass::V1,
+            Wire::V2Json { .. } => WireClass::V2Json,
+            Wire::V2Binary { .. } => WireClass::V2Binary,
+        }
+    }
+}
+
 /// What the reader hands the writer, in request order.
 enum Job {
-    /// Fully-encoded response bytes (a JSON line or a binary frame).
-    Bytes(Vec<u8>),
-    /// An admitted score request whose response is still being computed.
+    /// Fully-encoded response bytes (a JSON line or a binary frame),
+    /// tagged with the wire class for the byte counters.
+    Bytes(Vec<u8>, WireClass),
+    /// An admitted score/classify request whose response is still being
+    /// computed.
     Pending { wire: Wire, rx: Receiver<ScoreResponse> },
 }
 
@@ -229,11 +326,12 @@ enum Step {
     Close,
 }
 
-fn handle_conn(stream: TcpStream, shared: &Shared) {
+fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let (jtx, jrx) = sync_channel::<Job>(shared.max_pending);
-    let writer = std::thread::spawn(move || writer_loop(stream, jrx));
+    let writer_shared = shared.clone();
+    let writer = std::thread::spawn(move || writer_loop(stream, jrx, &writer_shared));
 
     let mut binary = false;
     let mut line = String::new();
@@ -283,17 +381,20 @@ fn json_step(line: &str, shared: &Shared) -> Step {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
             Step::Job(Job::Bytes(
                 Response::Error { id: None, error: e, retryable: false }.to_line().into_bytes(),
+                WireClass::V1,
             ))
         }
         Ok(Request::Hello { proto }) => {
             // Grant the highest version both sides speak; v1 keeps the
             // connection on JSON lines (transparent fallback).
-            let granted = if proto >= PROTO_V2 { PROTO_V2 } else { 1 };
+            let granted = proto.min(PROTO_V3).max(1);
             // One snapshot: (gen, dim) must not tear across a reload.
-            let (gen, dim) = shared.hub.serving_info();
+            // The handshake advertises the default shard, which is what
+            // single-model clients will be talking to.
+            let (gen, dim) = shared.registry.default_hub().serving_info();
             let resp = Response::Hello { proto: granted, gen, dim };
-            let job = Job::Bytes(resp.to_line().into_bytes());
-            if granted == PROTO_V2 {
+            let job = Job::Bytes(resp.to_line().into_bytes(), WireClass::V1);
+            if granted >= PROTO_V2 {
                 Step::JobThenBinary(job)
             } else {
                 Step::Job(job)
@@ -307,11 +408,12 @@ fn json_step(line: &str, shared: &Shared) -> Step {
 /// (`enveloped = false`) or inside a v2 `JSON_REQ` frame (`true`); the
 /// response rides the matching vehicle.
 fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
+    let class = if enveloped { WireClass::V2Json } else { WireClass::V1 };
     let render = |resp: Response| -> Job {
         if enveloped {
-            Job::Bytes(Frame::JsonResp(resp.to_json().to_string_compact()).encode())
+            Job::Bytes(Frame::JsonResp(resp.to_json().to_string_compact()).encode(), class)
         } else {
-            Job::Bytes(resp.to_line().into_bytes())
+            Job::Bytes(resp.to_line().into_bytes(), class)
         }
     };
     match req {
@@ -327,42 +429,86 @@ fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
         }
         Request::Ping => Step::Job(render(Response::Pong)),
         Request::Stats => Step::Job(render(Response::Stats(report(shared)))),
-        Request::Reload { snapshot } => match shared.hub.reload(snapshot) {
-            Ok(dim) => Step::Job(render(Response::Reloaded { dim })),
-            Err(e) => Step::Job(render(Response::Error {
-                id: None,
-                error: e.to_string(),
-                retryable: false,
-            })),
-        },
-        Request::Score { id, features } => match shared.hub.submit(features) {
-            Ok(rx) => {
-                let wire = if enveloped { Wire::V2Json { id } } else { Wire::V1 { id } };
-                Step::Job(Job::Pending { wire, rx })
+        Request::Models => Step::Job(render(Response::Models(model_entries(shared)))),
+        Request::Reload { model, snapshot } => {
+            match shared.registry.reload(model.as_deref(), snapshot) {
+                Ok(dim) => Step::Job(render(Response::Reloaded { dim })),
+                Err(e) => Step::Job(render(Response::Error {
+                    id: None,
+                    error: e.to_string(),
+                    retryable: false,
+                })),
             }
-            Err(HubError::Overloaded) => {
-                shared.overloaded.fetch_add(1, Ordering::Relaxed);
-                Step::Job(render(Response::Error {
+        }
+        Request::Score { .. } | Request::Classify { .. } => {
+            let (id, model, features, kind) = match req {
+                Request::Score { id, model, features } => (id, model, features, ReqKind::Score),
+                Request::Classify { id, model, features } => {
+                    (id, model, features, ReqKind::Classify)
+                }
+                _ => unreachable!("outer arm admits only score/classify"),
+            };
+            // The nnz knob bounds per-request compute on every wire, not
+            // just the binary one — a classify amplifies each coordinate
+            // by C(C-1)/2 voters, so an uncapped JSON support would
+            // bypass the operator's limit entirely.
+            if matches!(features, Features::Sparse { .. }) && features.nnz() > shared.max_nnz {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return Step::Job(render(Response::Error {
                     id,
-                    error: "overloaded".into(),
-                    retryable: true,
-                }))
+                    error: format!(
+                        "nnz {} exceeds server cap {}",
+                        features.nnz(),
+                        shared.max_nnz
+                    ),
+                    retryable: false,
+                }));
             }
-            // StaleGeneration cannot happen on an unpinned submit; fold
-            // it with DimMismatch for exhaustiveness.
-            Err(e @ (HubError::DimMismatch { .. } | HubError::StaleGeneration { .. })) => {
-                Step::Job(render(Response::Error {
+            // Resolve the route before admission: an unknown model is a
+            // clean structured error, and a valid one hands us the
+            // shard's hub without any registry-wide locking.
+            let hub = match shared.registry.resolve_name(model.as_deref()) {
+                Ok((_, hub)) => hub,
+                Err(e) => {
+                    return Step::Job(render(Response::Error {
+                        id,
+                        error: e.to_string(),
+                        retryable: false,
+                    }))
+                }
+            };
+            match hub.submit_pinned(features, 0, kind) {
+                Ok((rx, _)) => {
+                    let wire = if enveloped { Wire::V2Json { id } } else { Wire::V1 { id } };
+                    Step::Job(Job::Pending { wire, rx })
+                }
+                Err(HubError::Overloaded) => {
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    Step::Job(render(Response::Error {
+                        id,
+                        error: "overloaded".into(),
+                        retryable: true,
+                    }))
+                }
+                // StaleGeneration cannot happen on an unpinned submit;
+                // fold it with the other non-retryable rejections for
+                // exhaustiveness.
+                Err(
+                    e @ (HubError::DimMismatch { .. }
+                    | HubError::StaleGeneration { .. }
+                    | HubError::WrongKind { .. }),
+                ) => Step::Job(render(Response::Error {
                     id,
                     error: e.to_string(),
                     retryable: false,
-                }))
+                })),
+                Err(HubError::Closed) => Step::Close,
             }
-            Err(HubError::Closed) => Step::Close,
-        },
+        }
     }
 }
 
-/// Read and handle one v2 binary frame.
+/// Read and handle one v2/v3 binary frame.
 fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step {
     let frame = match Frame::read_from(reader, shared.max_frame_bytes) {
         Ok(frame) => frame,
@@ -378,13 +524,62 @@ fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step 
                     msg: e.to_string(),
                 }
                 .encode(),
+                WireClass::V2Binary,
             ));
         }
     };
     let err = |code: ErrorCode, msg: String| -> Step {
         Step::Job(Job::Bytes(
             Frame::Error { code, retryable: code.retryable(), msg }.encode(),
+            WireClass::V2Binary,
         ))
+    };
+    // Route, validate, and admit one native score/classify payload: the
+    // shared tail of every binary frame op. The pin check, admission,
+    // and generation stamp all happen under one hub critical section:
+    // the stamped generation is the one whose workers answer, even
+    // across a racing reload.
+    let admit = |model: u16, gen: u32, features: Features, kind: ReqKind| -> Step {
+        // The nnz knob caps sparse supports; dense payloads are bounded
+        // by the frame-length cap alone (enforced at `read_from`), like
+        // dense JSON payloads are bounded by line length.
+        if matches!(features, Features::Sparse { .. }) && features.nnz() > shared.max_nnz {
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            return err(
+                ErrorCode::BadRequest,
+                format!("nnz {} exceeds server cap {}", features.nnz(), shared.max_nnz),
+            );
+        }
+        if let Err(e) = features.validate() {
+            shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            let code = if e.contains("non-finite") {
+                ErrorCode::NonFinite
+            } else {
+                ErrorCode::BadRequest
+            };
+            return err(code, e);
+        }
+        // Route resolution is lock-free and happens before admission: a
+        // reload of another shard can never delay this request.
+        let hub = match shared.registry.resolve_id(model) {
+            Ok(hub) => hub,
+            Err(e) => return err(ErrorCode::UnknownModel, e.to_string()),
+        };
+        match hub.submit_pinned(features, gen, kind) {
+            Ok((rx, serving)) => {
+                Step::Job(Job::Pending { wire: Wire::V2Binary { gen: serving }, rx })
+            }
+            Err(e @ HubError::StaleGeneration { .. }) => {
+                err(ErrorCode::StaleGeneration, e.to_string())
+            }
+            Err(HubError::Overloaded) => {
+                shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                err(ErrorCode::Overloaded, "overloaded".into())
+            }
+            Err(e @ HubError::DimMismatch { .. }) => err(ErrorCode::DimMismatch, e.to_string()),
+            Err(e @ HubError::WrongKind { .. }) => err(ErrorCode::WrongModel, e.to_string()),
+            Err(HubError::Closed) => Step::Close,
+        }
     };
     match frame {
         Frame::JsonReq(doc) => match Request::parse(doc.trim()) {
@@ -394,56 +589,30 @@ fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step 
             }
             Ok(req) => json_request_step(req, shared, /* enveloped= */ true),
         },
+        // Legacy v2 sparse score: u16 indices, always the default shard.
         Frame::ScoreSparse { gen, idx, val } => {
-            if idx.len() > shared.max_nnz {
-                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                return err(
-                    ErrorCode::BadRequest,
-                    format!("nnz {} exceeds server cap {}", idx.len(), shared.max_nnz),
-                );
-            }
-            let features = Features::Sparse {
-                idx: idx.into_iter().map(u32::from).collect(),
-                val,
-            };
-            if let Err(e) = features.validate() {
-                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                let code = if e.contains("non-finite") {
-                    ErrorCode::NonFinite
-                } else {
-                    ErrorCode::BadRequest
-                };
-                return err(code, e);
-            }
-            // The pin check, admission, and generation stamp all happen
-            // under one hub critical section: the stamped generation is
-            // the one whose workers answer, even across a racing reload.
-            match shared.hub.submit_pinned(features, gen) {
-                Ok((rx, serving)) => {
-                    Step::Job(Job::Pending { wire: Wire::V2Binary { gen: serving }, rx })
-                }
-                Err(e @ HubError::StaleGeneration { .. }) => {
-                    err(ErrorCode::StaleGeneration, e.to_string())
-                }
-                Err(HubError::Overloaded) => {
-                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
-                    err(ErrorCode::Overloaded, "overloaded".into())
-                }
-                Err(e @ HubError::DimMismatch { .. }) => {
-                    err(ErrorCode::DimMismatch, e.to_string())
-                }
-                Err(HubError::Closed) => Step::Close,
-            }
+            let features =
+                Features::Sparse { idx: idx.into_iter().map(u32::from).collect(), val };
+            admit(0, gen, features, ReqKind::Score)
+        }
+        Frame::ScoreDense { model, gen, val } => {
+            admit(model, gen, Features::Dense(val), ReqKind::Score)
+        }
+        Frame::ScoreSparse2 { model, gen, idx, val } => {
+            admit(model, gen, Features::Sparse { idx, val }, ReqKind::Score)
+        }
+        Frame::ClassifySparse { model, gen, idx, val } => {
+            admit(model, gen, Features::Sparse { idx, val }, ReqKind::Classify)
         }
         // Response ops arriving from a client are protocol abuse.
-        Frame::Score { .. } | Frame::Error { .. } | Frame::JsonResp(_) => {
+        Frame::Score { .. } | Frame::Error { .. } | Frame::JsonResp(_) | Frame::Class { .. } => {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
             err(ErrorCode::BadRequest, "response op sent by client".into())
         }
     }
 }
 
-fn writer_loop(stream: TcpStream, jrx: Receiver<Job>) {
+fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
     let mut out = BufWriter::new(stream);
     'outer: loop {
         let Ok(mut job) = jrx.recv() else { break };
@@ -452,19 +621,29 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>) {
         // responses hostage to a computation that isn't done yet: flush
         // before blocking on an unready pending receiver.
         loop {
-            let bytes = match job {
-                Job::Bytes(bytes) => bytes,
-                Job::Pending { wire, rx } => match rx.try_recv() {
-                    Ok(resp) => render_score(&wire, Some(resp)),
-                    Err(TryRecvError::Empty) => {
-                        if out.flush().is_err() {
-                            break 'outer;
+            let (bytes, class, scored) = match job {
+                Job::Bytes(bytes, class) => (bytes, class, false),
+                Job::Pending { wire, rx } => {
+                    let resp = match rx.try_recv() {
+                        Ok(resp) => Some(resp),
+                        Err(TryRecvError::Empty) => {
+                            if out.flush().is_err() {
+                                break 'outer;
+                            }
+                            rx.recv().ok()
                         }
-                        render_score(&wire, rx.recv().ok())
-                    }
-                    Err(TryRecvError::Disconnected) => render_score(&wire, None),
-                },
+                        Err(TryRecvError::Disconnected) => None,
+                    };
+                    (render_score(&wire, resp), wire.class(), true)
+                }
             };
+            // Per-wire-class counters: bytes for every response, served
+            // for score/classify outcomes (the migration signal).
+            let counters = shared.wire(class);
+            counters.bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            if scored {
+                counters.served.fetch_add(1, Ordering::Relaxed);
+            }
             if out.write_all(&bytes).is_err() {
                 break 'outer;
             }
@@ -507,10 +686,19 @@ fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
     match wire {
         Wire::V1 { id } | Wire::V2Json { id } => {
             let resp = match outcome {
-                Ok(r) => Response::Score {
-                    id: *id,
-                    score: r.score,
-                    features_evaluated: r.features_evaluated,
+                Ok(r) => match r.classify {
+                    Some(ci) => Response::Classify {
+                        id: *id,
+                        label: ci.label,
+                        votes: ci.votes,
+                        voters: ci.voters,
+                        features_evaluated: r.features_evaluated,
+                    },
+                    None => Response::Score {
+                        id: *id,
+                        score: r.score,
+                        features_evaluated: r.features_evaluated,
+                    },
                 },
                 Err((_, retryable, msg)) => {
                     Response::Error { id: *id, error: msg.into(), retryable }
@@ -524,12 +712,22 @@ fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
             }
         }
         Wire::V2Binary { gen } => match outcome {
-            Ok(r) => Frame::Score {
-                gen: *gen,
-                evaluated: r.features_evaluated as u32,
-                score: r.score,
-            }
-            .encode(),
+            Ok(r) => match r.classify {
+                Some(ci) => Frame::Class {
+                    gen: *gen,
+                    label: ci.label,
+                    votes: ci.votes,
+                    voters: ci.voters,
+                    evaluated: r.features_evaluated as u32,
+                }
+                .encode(),
+                None => Frame::Score {
+                    gen: *gen,
+                    evaluated: r.features_evaluated as u32,
+                    score: r.score,
+                }
+                .encode(),
+            },
             Err((code, retryable, msg)) => {
                 Frame::Error { code, retryable, msg: msg.into() }.encode()
             }
@@ -537,8 +735,25 @@ fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
     }
 }
 
+/// The registry's shard table in wire form (the `models` op payload).
+fn model_entries(shared: &Shared) -> Vec<ModelEntry> {
+    shared
+        .registry
+        .infos()
+        .into_iter()
+        .map(|info| ModelEntry {
+            name: info.name,
+            id: info.id,
+            kind: info.hub.kind.to_string(),
+            gen: info.hub.gen,
+            dim: info.hub.dim,
+            voters: info.hub.voters,
+        })
+        .collect()
+}
+
 fn report(shared: &Shared) -> StatsReport {
-    let s = shared.hub.stats();
+    let s = shared.registry.stats_total();
     let uptime = shared.started.elapsed().as_secs_f64().max(1e-9);
     StatsReport {
         served: s.served,
@@ -551,9 +766,25 @@ fn report(shared: &Shared) -> StatsReport {
         accepted_conns: shared.accepted.load(Ordering::Relaxed),
         overloaded: shared.overloaded.load(Ordering::Relaxed),
         protocol_errors: shared.protocol_errors.load(Ordering::Relaxed),
-        reloads: shared.hub.reloads(),
+        reloads: shared.registry.reloads(),
         uptime_s: uptime,
         req_per_s: s.served as f64 / uptime,
+        wire_v1: shared.wire(WireClass::V1).snapshot(),
+        wire_v2_json: shared.wire(WireClass::V2Json).snapshot(),
+        wire_v2_binary: shared.wire(WireClass::V2Binary).snapshot(),
+        models: shared
+            .registry
+            .per_shard_stats()
+            .into_iter()
+            .map(|shard| ModelStatsReport {
+                name: shard.name,
+                served: shard.stats.served,
+                avg_features: shard.stats.avg_features(),
+                early_exit_rate: shard.stats.early_exit_rate(),
+                gen: shard.gen,
+                reloads: shard.reloads,
+            })
+            .collect(),
     }
 }
 
@@ -597,5 +828,28 @@ mod tests {
         assert_eq!(server.reload(snapshot(16)).unwrap(), 16);
         assert_eq!(server.stats().reloads, 1);
         server.shutdown();
+    }
+
+    #[test]
+    fn multi_shard_serve_lists_models_and_reloads_by_name() {
+        let server = TcpServer::serve_models(
+            &ephemeral_cfg(),
+            vec![
+                ("default".into(), snapshot(8).into()),
+                ("wide".into(), snapshot(32).into()),
+            ],
+        )
+        .unwrap();
+        let models = server.models();
+        assert_eq!(models.len(), 2);
+        assert_eq!((models[0].name.as_str(), models[0].id, models[0].dim), ("default", 0, 8));
+        assert_eq!((models[1].name.as_str(), models[1].id, models[1].dim), ("wide", 1, 32));
+        assert_eq!(server.reload_model("wide", snapshot(64)).unwrap(), 64);
+        assert_eq!(server.models()[1].gen, 2);
+        assert_eq!(server.models()[0].gen, 1, "default shard untouched");
+        assert!(server.reload_model("ghost", snapshot(8)).is_err());
+        let stats = server.shutdown();
+        assert_eq!(stats.models.len(), 2);
+        assert_eq!(stats.models[1].reloads, 1);
     }
 }

@@ -9,7 +9,9 @@ use std::collections::BTreeMap;
 /// Parsed arguments for one subcommand invocation.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
-    flags: BTreeMap<String, String>,
+    /// Every occurrence of each flag, in order (`--model a --model b`
+    /// keeps both; single-value accessors read the last).
+    flags: BTreeMap<String, Vec<String>>,
     switches: Vec<String>,
     positional: Vec<String>,
 }
@@ -24,11 +26,11 @@ impl Args {
             let t = &tokens[i];
             if let Some(rest) = t.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
+                    out.flags.entry(k.to_string()).or_default().push(v.to_string());
                 } else if switches.contains(&rest) {
                     out.switches.push(rest.to_string());
                 } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
-                    out.flags.insert(rest.to_string(), tokens[i + 1].clone());
+                    out.flags.entry(rest.to_string()).or_default().push(tokens[i + 1].clone());
                     i += 1;
                 } else {
                     out.switches.push(rest.to_string());
@@ -46,19 +48,25 @@ impl Args {
         Self::parse_with(tokens, &[])
     }
 
-    /// String flag with default.
+    /// String flag with default (last occurrence wins).
     pub fn get(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+        self.opt(key).map(str::to_string).unwrap_or_else(|| default.to_string())
     }
 
-    /// Optional string flag.
+    /// Optional string flag (last occurrence wins).
     pub fn opt(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
     }
 
-    /// Parsed numeric flag with default.
+    /// Every occurrence of a repeatable flag, in command-line order
+    /// (empty when absent) — e.g. `serve --model a=1.json --model b=2.json`.
+    pub fn opt_all(&self, key: &str) -> Vec<&str> {
+        self.flags.get(key).map_or_else(Vec::new, |v| v.iter().map(|s| s.as_str()).collect())
+    }
+
+    /// Parsed numeric flag with default (last occurrence wins).
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
-        match self.flags.get(key) {
+        match self.opt(key) {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| format!("--{key}: cannot parse {v:?}")),
         }
@@ -110,5 +118,23 @@ mod tests {
     fn trailing_switch() {
         let a = Args::parse(&toks(&["--verbose"])).unwrap();
         assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn repeated_flags_keep_every_occurrence() {
+        let a = Args::parse(&toks(&[
+            "--model",
+            "a=one.json",
+            "--model=b=two.json",
+            "--workers",
+            "2",
+            "--workers",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(a.opt_all("model"), vec!["a=one.json", "b=two.json"]);
+        assert_eq!(a.opt("workers"), Some("4"), "single-value reads take the last");
+        assert_eq!(a.get_parse("workers", 0usize).unwrap(), 4);
+        assert!(a.opt_all("missing").is_empty());
     }
 }

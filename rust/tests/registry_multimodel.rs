@@ -1,0 +1,500 @@
+//! Multi-model registry serving, end-to-end over real sockets: one
+//! `serve` process hosting several independently hot-reloadable binary
+//! shards plus the all-pairs multiclass ensemble, driven by mixed
+//! v1 single-model and v2/v3 routed traffic through one port.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use attentive::config::ServerConfig;
+use attentive::coordinator::service::{
+    EnsembleSnapshot, Features, ModelSnapshot, ServingModel, VoterSnapshot,
+};
+use attentive::data::synth::SynthDigits;
+use attentive::learner::multiclass::OneVsOneEnsemble;
+use attentive::learner::pegasos::PegasosConfig;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::server::frame::{ErrorCode, Frame};
+use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
+use attentive::server::protocol::{Request, Response};
+use attentive::server::tcp::TcpServer;
+use attentive::stst::boundary::AnyBoundary;
+
+const DIM: usize = 784;
+
+/// Flat binary snapshot: every weight `w`, so any inky digit image
+/// scores with the sign of `w` deterministically.
+fn flat_snapshot(dim: usize, w: f64) -> ModelSnapshot {
+    ModelSnapshot {
+        weights: vec![w; dim],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    }
+}
+
+/// Flat deterministic 3-class ensemble over `classes` 0/1/2: all-ones
+/// voters make every voter vote its `pos` on a positive input, so the
+/// vote is 0:2, 1:1, 2:0 → label 0; a negative input yields label 2.
+fn flat_ensemble(dim: usize) -> EnsembleSnapshot {
+    let classes = vec![0i64, 1, 2];
+    let mut voters = Vec::new();
+    for a in 0..classes.len() {
+        for b in a + 1..classes.len() {
+            voters.push(VoterSnapshot {
+                pos: classes[a],
+                neg: classes[b],
+                weights: vec![1.0; dim],
+                var_sn: 4.0,
+            });
+        }
+    }
+    EnsembleSnapshot {
+        classes,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+        voters,
+    }
+}
+
+fn registry_server(models: Vec<(String, ServingModel)>, queue: usize, workers: usize) -> TcpServer {
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers,
+        queue,
+        ..Default::default()
+    };
+    TcpServer::serve_models(&cfg, models).expect("bind loopback registry")
+}
+
+/// The acceptance scenario: ≥ 3 named binary shards plus the all-pairs
+/// ensemble behind one port; mixed v1 single-model and v2/v3 routed
+/// score/classify traffic; one shard hot-reloaded mid-stream; every
+/// admitted request answered correctly with the right generation stamp.
+#[test]
+fn mixed_v1_v3_traffic_across_four_shards_with_midstream_reload() {
+    let server = registry_server(
+        vec![
+            ("default".into(), flat_snapshot(DIM, 1.0).into()),
+            ("neg".into(), flat_snapshot(DIM, -1.0).into()),
+            ("wide".into(), flat_snapshot(70_000, 1.0).into()),
+            ("digits".into(), flat_ensemble(DIM).into()),
+        ],
+        4096,
+        2,
+    );
+    let addr = server.local_addr().to_string();
+
+    // Background v1 single-model load (no model field anywhere): must be
+    // oblivious to the other shards and to the mid-stream reload below.
+    let load_addr = addr.clone();
+    let load = std::thread::spawn(move || {
+        loadgen::run(&LoadGenConfig {
+            addr: load_addr,
+            connections: 3,
+            requests: 400,
+            pipeline: 8,
+            hard_fraction: 0.5,
+            seed: 5,
+            ..Default::default()
+        })
+        .expect("v1 loadgen")
+    });
+
+    // Control + routed traffic on a v1 JSON connection.
+    let mut control = Client::connect(&addr).expect("control connect");
+    let models = control.models().expect("models op");
+    assert_eq!(models.len(), 4);
+    assert_eq!((models[0].name.as_str(), models[0].id, models[0].kind.as_str()), ("default", 0, "binary"));
+    assert_eq!((models[1].name.as_str(), models[1].id), ("neg", 1));
+    assert_eq!((models[2].name.as_str(), models[2].dim), ("wide", 70_000));
+    assert_eq!((models[3].name.as_str(), models[3].kind.as_str(), models[3].voters), ("digits", "ensemble", 3));
+
+    let probe: Vec<f64> = SynthDigits::new(99).render(3);
+    match control.score(probe.clone()).expect("default score") {
+        Response::Score { score, .. } => assert!(score > 0.0, "default shard is all-(+1)"),
+        other => panic!("expected score, got {other:?}"),
+    }
+    match control.score_model("neg", probe.clone()).expect("routed score") {
+        Response::Score { score, .. } => assert!(score < 0.0, "neg shard is all-(-1)"),
+        other => panic!("expected score, got {other:?}"),
+    }
+    // The wide shard has a different dimensionality entirely.
+    match control
+        .score_model("wide", Features::Sparse { idx: vec![69_999], val: vec![2.0] })
+        .expect("wide sparse score")
+    {
+        Response::Score { score, features_evaluated, .. } => {
+            assert!(score > 0.0);
+            assert!(features_evaluated <= 1);
+        }
+        other => panic!("expected score, got {other:?}"),
+    }
+    // Classify on the ensemble shard, dense and sparse.
+    match control.classify(Some("digits"), probe.clone()).expect("classify") {
+        Response::Classify { label, votes, voters, features_evaluated } => {
+            assert_eq!(label, 0, "all-positive voters vote their pos class");
+            assert_eq!((votes, voters), (2, 3));
+            assert!(features_evaluated < 3 * DIM, "voters early-exit");
+        }
+        other => panic!("expected classify, got {other:?}"),
+    }
+    match control
+        .classify(Some("digits"), Features::Sparse { idx: vec![7, 100], val: vec![-1.0, -2.0] })
+        .expect("sparse classify")
+    {
+        Response::Classify { label, .. } => assert_eq!(label, 2, "negative input flips the vote"),
+        other => panic!("expected classify, got {other:?}"),
+    }
+
+    // v3 binary connection: raw frames so the generation stamps are
+    // observable. Route by interned id, pin generations.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let write = |bytes: &[u8]| {
+        let mut s = &stream;
+        s.write_all(bytes).unwrap();
+    };
+    write(Request::Hello { proto: 3 }.to_line().as_bytes());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    match Response::parse(line.trim()).unwrap() {
+        Response::Hello { proto: 3, gen: 1, dim } => assert_eq!(dim, DIM),
+        other => panic!("expected v3 hello grant, got {other:?}"),
+    }
+    let sparse = |v: f64| (vec![10u32, 200, 505], vec![v, v, v]);
+    // Score the neg shard (id 1), any generation: stamped gen 1.
+    let (idx, val) = sparse(1.0);
+    write(&Frame::ScoreSparse2 { model: 1, gen: 0, idx, val }.encode());
+    match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+        Frame::Score { gen, score, .. } => {
+            assert_eq!(gen, 1);
+            assert!(score < 0.0);
+        }
+        other => panic!("expected score frame, got {other:?}"),
+    }
+    // Classify the ensemble shard (id 3): a CLASS frame, stamped.
+    let (idx, val) = sparse(1.0);
+    write(&Frame::ClassifySparse { model: 3, gen: 0, idx, val }.encode());
+    match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+        Frame::Class { gen, label, votes, voters, evaluated } => {
+            assert_eq!(gen, 1);
+            assert_eq!(label, 0);
+            assert_eq!((votes, voters), (2, 3));
+            assert!(evaluated <= 9, "3 voters × nnz 3 bounds the walk");
+        }
+        other => panic!("expected class frame, got {other:?}"),
+    }
+    // Dense binary score op against the default shard.
+    write(&Frame::ScoreDense { model: 0, gen: 1, val: probe.clone() }.encode());
+    match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+        Frame::Score { gen: 1, score, .. } => assert!(score > 0.0),
+        other => panic!("expected dense score frame, got {other:?}"),
+    }
+
+    // Mid-stream hot reload of ONE shard (neg → all-positive): its
+    // generation bumps, its sign flips, and nothing else moves.
+    assert_eq!(
+        control.reload_model(Some("neg"), &flat_snapshot(DIM, 1.0).into()).expect("reload neg"),
+        DIM
+    );
+    match control.score_model("neg", probe.clone()).expect("reloaded score") {
+        Response::Score { score, .. } => assert!(score > 0.0, "reload must flip the shard"),
+        other => panic!("expected score, got {other:?}"),
+    }
+    // Old pin on the reloaded shard sheds; new pin is stamped gen 2.
+    let (idx, val) = sparse(1.0);
+    write(&Frame::ScoreSparse2 { model: 1, gen: 1, idx, val }.encode());
+    match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+        Frame::Error { code, retryable, .. } => {
+            assert_eq!(code, ErrorCode::StaleGeneration);
+            assert!(retryable);
+        }
+        other => panic!("expected stale-generation, got {other:?}"),
+    }
+    let (idx, val) = sparse(1.0);
+    write(&Frame::ScoreSparse2 { model: 1, gen: 2, idx, val }.encode());
+    match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+        Frame::Score { gen: 2, score, .. } => assert!(score > 0.0),
+        other => panic!("expected gen-2 score frame, got {other:?}"),
+    }
+    // The other shards' generations did not move.
+    let models = control.models().unwrap();
+    assert_eq!(models.iter().map(|m| m.gen).collect::<Vec<_>>(), vec![1, 2, 1, 1]);
+
+    // The background v1 load saw a plain single-model server throughout.
+    let report = load.join().unwrap();
+    assert_eq!(report.sent, 400);
+    assert_eq!(report.answered, 400, "mid-stream reload of another shard drops nothing");
+    assert_eq!(report.errors, 0);
+
+    // Stats split per shard and per wire class.
+    let stats = control.stats().expect("stats");
+    assert_eq!(stats.models.len(), 4);
+    assert!(stats.models[0].served >= 401, "default shard carried the v1 load + probes");
+    assert!(stats.models[1].served >= 3, "neg shard probes");
+    assert_eq!(stats.models[1].gen, 2);
+    assert_eq!(stats.models[1].reloads, 1);
+    assert!(stats.models[3].served >= 3, "ensemble classifies count");
+    assert!(stats.wire_v1.served >= 400, "v1 JSON lines carried the loadgen");
+    assert!(stats.wire_v2_binary.served >= 4, "binary frames carried the raw probes");
+    assert!(stats.wire_v1.bytes > 0 && stats.wire_v2_binary.bytes > 0);
+    assert_eq!(stats.reloads, 1);
+
+    drop(reader);
+    drop(stream);
+    let final_stats = server.shutdown();
+    assert!(final_stats.served >= 400 + 8);
+}
+
+#[test]
+fn reloading_one_shard_under_load_never_stalls_or_drops_the_other() {
+    let server = registry_server(
+        vec![
+            ("default".into(), flat_snapshot(DIM, 1.0).into()),
+            ("victim".into(), flat_snapshot(DIM, -1.0).into()),
+        ],
+        4096,
+        2,
+    );
+    let addr = server.local_addr().to_string();
+
+    // Routed sparse-JSON load against the DEFAULT shard...
+    let load_addr = addr.clone();
+    let load = std::thread::spawn(move || {
+        loadgen::run(&LoadGenConfig {
+            addr: load_addr,
+            connections: 3,
+            requests: 600,
+            pipeline: 8,
+            hard_fraction: 0.5,
+            mode: ClientMode::V2SparseJson,
+            seed: 11,
+            ..Default::default()
+        })
+        .expect("loadgen")
+    });
+
+    // ... while the victim shard is hammered with hot reloads.
+    let mut control = Client::connect(&addr).expect("control connect");
+    let mut reloads = 0u64;
+    for i in 0..15 {
+        let w = if i % 2 == 0 { 1.0 } else { -1.0 };
+        assert_eq!(
+            control.reload_model(Some("victim"), &flat_snapshot(DIM, w).into()).unwrap(),
+            DIM
+        );
+        reloads += 1;
+    }
+
+    let report = load.join().unwrap();
+    assert_eq!(report.sent, 600);
+    assert_eq!(
+        report.answered + report.overloaded,
+        600,
+        "every request on the untouched shard is answered"
+    );
+    assert_eq!(report.errors, 0, "no cross-shard interference errors");
+
+    let stats = control.stats().unwrap();
+    let default = &stats.models[0];
+    let victim = &stats.models[1];
+    assert_eq!(default.gen, 1, "default shard generation untouched by 15 reloads next door");
+    assert_eq!(victim.gen as u64, 1 + reloads);
+    assert_eq!(victim.reloads, reloads);
+    assert!(default.served >= report.answered, "load landed on the default shard");
+
+    // The victim still serves after the storm (15 reloads → +1 weights).
+    match control.score_model("victim", SynthDigits::new(1).render(2)).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn unknown_models_and_kind_mismatches_are_structured_errors() {
+    let server = registry_server(
+        vec![
+            ("default".into(), flat_snapshot(DIM, 1.0).into()),
+            ("digits".into(), flat_ensemble(DIM).into()),
+        ],
+        256,
+        1,
+    );
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+
+    // Unknown model name on the JSON wire: structured, not retryable,
+    // connection survives.
+    match client.score_model("nope", vec![1.0; DIM]).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("unknown model"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected unknown-model error, got {other:?}"),
+    }
+    // classify on a binary shard / score on an ensemble shard.
+    match client.classify(None, vec![1.0; DIM]).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("wrong model kind"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected wrong-kind error, got {other:?}"),
+    }
+    match client.score_model("digits", vec![1.0; DIM]).unwrap() {
+        Response::Error { error, .. } => {
+            assert!(error.contains("wrong model kind"), "got {error:?}")
+        }
+        other => panic!("expected wrong-kind error, got {other:?}"),
+    }
+    // Reload routed at a ghost shard.
+    assert!(client.reload_model(Some("ghost"), &flat_snapshot(DIM, 1.0).into()).is_err());
+    client.ping().expect("connection survives all rejections");
+
+    // Same screens on the binary wire, by interned id.
+    assert_eq!(client.negotiate().unwrap(), 3);
+    match client.score_sparse2(99, vec![1], vec![1.0], 0).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("unknown model id"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected unknown-model error, got {other:?}"),
+    }
+    match client.classify_sparse(0, vec![1], vec![1.0], 0).unwrap() {
+        Response::Error { error, .. } => {
+            assert!(error.contains("wrong model kind"), "got {error:?}")
+        }
+        other => panic!("expected wrong-kind error, got {other:?}"),
+    }
+    // And the connection still serves both kinds afterwards.
+    match client.score_sparse2(0, vec![1], vec![1.0], 0).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+    match client.classify_sparse(1, vec![1], vec![1.0], 0).unwrap() {
+        Response::Classify { label, .. } => assert_eq!(label, 0),
+        other => panic!("expected classify, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// The `max_nnz` knob bounds per-request compute on the JSON wire too —
+/// a classify amplifies every coordinate by `C(C-1)/2` voters, so the
+/// cap must not be bypassable by switching encodings.
+#[test]
+fn nnz_cap_applies_to_json_score_and_classify() {
+    let cfg = ServerConfig { listen: "127.0.0.1:0".into(), max_nnz: 4, ..Default::default() };
+    let server = TcpServer::serve_models(
+        &cfg,
+        vec![
+            ("default".into(), flat_snapshot(DIM, 1.0).into()),
+            ("digits".into(), flat_ensemble(DIM).into()),
+        ],
+    )
+    .unwrap();
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    let over = Features::Sparse { idx: vec![1, 2, 3, 4, 5], val: vec![1.0; 5] };
+    match client.score_model("default", over.clone()).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(error.contains("exceeds server cap"), "got {error:?}");
+            assert!(!retryable);
+        }
+        other => panic!("expected nnz-cap error, got {other:?}"),
+    }
+    match client.classify(Some("digits"), over).unwrap() {
+        Response::Error { error, .. } => assert!(error.contains("exceeds server cap")),
+        other => panic!("expected nnz-cap error, got {other:?}"),
+    }
+    // At the cap is fine; dense payloads are not subject to the knob.
+    let at = Features::Sparse { idx: vec![1, 2, 3, 4], val: vec![1.0; 4] };
+    assert!(matches!(
+        client.score_model("default", at).unwrap(),
+        Response::Score { .. }
+    ));
+    assert!(matches!(client.score(vec![0.5; DIM]).unwrap(), Response::Score { .. }));
+    server.shutdown();
+}
+
+/// Property check: the serving-side ensemble classify — locally and
+/// over the wire — reproduces the offline `OneVsOneEnsemble` vote
+/// exactly (label AND total feature count), example by example, under
+/// the deterministic sequential policy.
+#[test]
+fn ensemble_classify_equals_offline_one_vs_one_vote() {
+    let classes = [1i64, 2, 3];
+    let ds = SynthDigits::new(41).generate_classes(1_500, &[1, 2, 3]);
+    let (train, test) = ds.split(0.8);
+    let boundary = AnyBoundary::Constant { delta: 0.1, paper_literal: false };
+    let cfg = PegasosConfig {
+        lambda: 1e-2,
+        policy: CoordinatePolicy::Sequential,
+        seed: 3,
+        ..Default::default()
+    };
+    let mut ensemble = OneVsOneEnsemble::new(train.dim(), &classes, cfg, boundary.clone()).unwrap();
+    let order: Vec<usize> = (0..train.len()).collect();
+    ensemble.train_pass(&train, &order);
+
+    let snapshot = EnsembleSnapshot::from_trained(
+        &mut ensemble,
+        boundary,
+        CoordinatePolicy::Sequential,
+    );
+    assert_eq!(snapshot.voter_count(), 3);
+    let mut orders = snapshot.make_orders(0);
+
+    // Offline vote vs serving-layer classify, on every test example.
+    let mut disagreements = 0usize;
+    for ex in test.iter() {
+        let (offline_label, offline_features) = ensemble.predict(ex.features);
+        let resp = snapshot.classify(&Features::Dense(ex.features.to_vec()), &mut orders);
+        let info = resp.classify.expect("classify outcome");
+        if info.label != offline_label || resp.features_evaluated != offline_features {
+            disagreements += 1;
+        }
+    }
+    assert_eq!(disagreements, 0, "serving classify must equal the offline vote exactly");
+
+    // And through the full wire stack (ensemble as the default shard).
+    let server = registry_server(vec![("digits".into(), snapshot.into())], 256, 1);
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    for ex in test.iter().take(40) {
+        let (offline_label, _) = ensemble.predict(ex.features);
+        match client.classify(None, ex.features.to_vec()).unwrap() {
+            Response::Classify { label, voters, .. } => {
+                assert_eq!(label, offline_label, "wire classify disagrees with offline vote");
+                assert_eq!(voters, 3);
+            }
+            other => panic!("expected classify, got {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+/// The v3 sparse frame lifts the legacy u16 index bound: a shard wider
+/// than 65536 dims is servable over the binary wire.
+#[test]
+fn u32_indices_reach_wide_models_where_the_legacy_frame_cannot() {
+    let wide_dim = 70_000;
+    let server = registry_server(vec![("wide".into(), flat_snapshot(wide_dim, 1.0).into())], 64, 1);
+    let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+    assert_eq!(client.negotiate().unwrap(), 3);
+    // The legacy frame cannot even express the index ...
+    let err = client.score_sparse(vec![69_999], vec![1.0], 0).unwrap_err();
+    assert!(err.to_string().contains("u16"), "got {err}");
+    // ... the v3 frame carries it fine.
+    match client.score_sparse2(0, vec![69_999], vec![1.5], 0).unwrap() {
+        Response::Score { score, features_evaluated, .. } => {
+            assert!(score > 0.0);
+            assert!(features_evaluated <= 1);
+        }
+        other => panic!("expected score, got {other:?}"),
+    }
+    // Dense binary scoring works on the same negotiated connection.
+    match client.score_dense_binary(0, vec![0.001; wide_dim], 0).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected score, got {other:?}"),
+    }
+    server.shutdown();
+}

@@ -262,8 +262,8 @@ fn v2_negotiated_client_scores_sparse_and_runs_control_ops() {
 
     let mut client = Client::connect(&addr).unwrap();
     assert_eq!(client.proto(), 1);
-    assert_eq!(client.negotiate().unwrap(), 2, "server must grant v2");
-    assert_eq!(client.proto(), 2);
+    assert_eq!(client.negotiate().unwrap(), 3, "server must grant v3");
+    assert_eq!(client.proto(), 3);
 
     // Native sparse frame: 3 nonzeros, all-ones model -> positive score
     // touching at most 3 coordinates.
@@ -350,6 +350,7 @@ fn v2_rejects_malformed_sparse_payloads_with_structured_errors() {
     let mut v1 = Client::connect(&addr).unwrap();
     let dup = attentive::server::protocol::Request::Score {
         id: None,
+        model: None,
         features: Features::Sparse { idx: vec![2, 2], val: vec![1.0, 1.0] },
     };
     match v1.call(&dup).unwrap() {
