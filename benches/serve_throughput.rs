@@ -19,7 +19,7 @@
 //!
 //! `cargo bench --bench serve_throughput` (BENCH_QUICK=1 for CI scale)
 
-use attentive::config::ServerConfig;
+use attentive::config::{IoBackend, ServerConfig};
 use attentive::coordinator::service::{EnsembleSnapshot, ModelSnapshot};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::stream::ShuffledIndices;
@@ -104,6 +104,10 @@ fn main() {
         workers: 4,
         max_batch: 16,
         queue: 4096,
+        // Pin the backend: this bench's threads-vs-event-loop delta is
+        // the regression signal, so neither side may drift with the
+        // ATTENTIVE_IO_BACKEND env parameterization.
+        io_backend: IoBackend::Threads,
         ..Default::default()
     };
     // One port, two shards: the binary 2-vs-3 model (default) and the
@@ -111,8 +115,8 @@ fn main() {
     let server = TcpServer::serve_models(
         &srv_cfg,
         vec![
-            ("default".to_string(), attentive_snapshot.into()),
-            ("digits".to_string(), ensemble_snapshot.into()),
+            ("default".to_string(), attentive_snapshot.clone().into()),
+            ("digits".to_string(), ensemble_snapshot.clone().into()),
         ],
     )
     .expect("bind loopback");
@@ -220,8 +224,108 @@ fn main() {
 
     passes.push(("classify".to_string(), classify));
     passes.push(("full-v1-dense".to_string(), full));
+
+    // Backend comparison: the identical wire-mode sweep against a fresh
+    // server running the epoll event loop, at a connection count where
+    // the thread backend's per-connection thread pairs start to hurt.
+    // The delta lands in BENCH_serve.json (`event-loop/<mode>` rows and
+    // the ratio), which is what docs/PERFORMANCE.md tracks.
+    let mut event_ratio: Option<f64> = None;
+    if cfg!(target_os = "linux") {
+        let conns = if quick { 16 } else { 64 };
+        let mut table2 = Table::new(&[
+            "backend",
+            "req/s",
+            "avg feats",
+            "p50",
+            "p99",
+            "B/req",
+            "early-exit",
+            "shed",
+        ]);
+        // Fresh servers for both sides: the original server's default
+        // shard was hot-reloaded to full evaluation above, so neither
+        // backend may reuse it.
+        let event_cfg = ServerConfig {
+            io_backend: IoBackend::EventLoop,
+            event_threads: 4,
+            ..srv_cfg.clone()
+        };
+        let event_server = TcpServer::serve_models(
+            &event_cfg,
+            vec![
+                ("default".to_string(), attentive_snapshot.clone().into()),
+                ("digits".to_string(), ensemble_snapshot.clone().into()),
+            ],
+        )
+        .expect("bind loopback (event loop)");
+        let event_addr = event_server.local_addr().to_string();
+        println!(
+            "event-loop pass on {event_addr}: {requests} requests/pass, {conns} connections"
+        );
+        for mode in ClientMode::ALL {
+            let report = loadgen::run(&LoadGenConfig {
+                addr: event_addr.clone(),
+                connections: conns,
+                ..loadcfg(mode)
+            })
+            .expect(mode.name());
+            assert_eq!(
+                report.answered + report.overloaded,
+                requests as u64,
+                "every request answered (event-loop {})",
+                mode.name()
+            );
+            row(&mut table2, &format!("event-loop/{}", mode.name()), &report);
+            passes.push((format!("event-loop/{}", mode.name()), report));
+        }
+        event_server.shutdown();
+        // Thread backend at the same connection count, v2-binary only:
+        // the apples-to-apples throughput ratio.
+        let threads_server = TcpServer::serve_models(
+            &srv_cfg,
+            vec![
+                ("default".to_string(), attentive_snapshot.into()),
+                ("digits".to_string(), ensemble_snapshot.into()),
+            ],
+        )
+        .expect("bind loopback (threads wide)");
+        let threads_wide = loadgen::run(&LoadGenConfig {
+            addr: threads_server.local_addr().to_string(),
+            connections: conns,
+            ..loadcfg(ClientMode::V2Binary)
+        })
+        .expect("threads wide pass");
+        threads_server.shutdown();
+        row(&mut table2, "threads/v2-binary-wide", &threads_wide);
+        let event_wide = passes
+            .iter()
+            .find(|(name, _)| name == "event-loop/v2-binary")
+            .map(|(_, r)| r.req_per_s())
+            .unwrap_or(0.0);
+        if threads_wide.req_per_s() > 0.0 {
+            let ratio = event_wide / threads_wide.req_per_s();
+            println!(
+                "backends at {conns} connections: event-loop {event_wide:.0} req/s vs \
+                 threads {:.0} req/s ({ratio:.2}x) on v2-binary",
+                threads_wide.req_per_s(),
+            );
+            event_ratio = Some(ratio);
+        }
+        passes.push(("threads-v2-binary-wide".to_string(), threads_wide));
+        println!("{}", table2.render());
+    }
+
     let out = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_serve.json".to_string());
-    let report_json = loadgen::report_to_json(requests, &passes);
+    let mut report_json = loadgen::report_to_json(requests, &passes);
+    if let attentive::util::json::Json::Obj(pairs) = &mut report_json {
+        if let Some(ratio) = event_ratio {
+            pairs.push((
+                "ratio_event_loop_vs_threads_v2_binary".to_string(),
+                attentive::util::json::Json::Num(ratio),
+            ));
+        }
+    }
     to_json_file(&report_json, std::path::Path::new(&out)).expect("write bench json");
     println!("machine-readable report written to {out}");
 }

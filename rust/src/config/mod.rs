@@ -291,6 +291,65 @@ impl ExperimentConfig {
     }
 }
 
+/// Which transport backend the TCP front-end runs requests through.
+///
+/// `Threads` is the original (and default) reader/writer thread pair
+/// per connection — simple, portable, and fine up to a few hundred
+/// connections. `EventLoop` is the epoll-based nonblocking backend
+/// (`rust/src/server/event_loop.rs`, Linux only): `event_threads`
+/// sharded loops multiplex every connection, scaling to thousands of
+/// mostly-idle sockets with an allocation-free steady-state hot path.
+/// Both speak the identical wire protocol; see
+/// `docs/PERFORMANCE.md` for the measured trade-offs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoBackend {
+    /// Reader/writer thread pair per connection (default).
+    #[default]
+    Threads,
+    /// Sharded epoll event loops (Linux only).
+    EventLoop,
+}
+
+impl IoBackend {
+    /// Kebab-case wire/config name.
+    pub fn name(self) -> &'static str {
+        match self {
+            IoBackend::Threads => "threads",
+            IoBackend::EventLoop => "event-loop",
+        }
+    }
+
+    /// Parse the config name (both `event-loop` and `event_loop` are
+    /// accepted — the latter is what shells pass most naturally).
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "threads" => Ok(IoBackend::Threads),
+            "event-loop" | "event_loop" => Ok(IoBackend::EventLoop),
+            other => Err(format!("unknown io backend {other:?} (threads | event-loop)")),
+        }
+    }
+
+    /// The default backend, overridable with `ATTENTIVE_IO_BACKEND`.
+    /// The env hook exists so the serving integration tests run
+    /// unmodified against either backend (CI exercises both); unset
+    /// means `Threads`.
+    ///
+    /// # Panics
+    ///
+    /// On an unparseable value. The variable's whole purpose is to
+    /// redirect a test run onto a specific backend — a typo silently
+    /// falling back to `Threads` would turn that run into a vacuous
+    /// duplicate (and un-gate the event loop in CI), so it fails loudly
+    /// instead.
+    pub fn default_from_env() -> Self {
+        match std::env::var("ATTENTIVE_IO_BACKEND") {
+            Ok(s) => IoBackend::from_name(s.trim())
+                .unwrap_or_else(|e| panic!("ATTENTIVE_IO_BACKEND: {e}")),
+            Err(_) => IoBackend::Threads,
+        }
+    }
+}
+
 /// Network serving front-end configuration (`attentive serve --listen` /
 /// [`crate::server`]). A standalone JSON document, separate from
 /// [`ExperimentConfig`]: serving deploys a finished model, it does not
@@ -321,6 +380,19 @@ pub struct ServerConfig {
     pub max_nnz: usize,
     /// Base RNG seed for the prediction-time coordinate policies.
     pub seed: u64,
+    /// Transport backend: per-connection thread pairs (default) or the
+    /// sharded epoll event loop. Overridable via `ATTENTIVE_IO_BACKEND`
+    /// (see [`IoBackend::default_from_env`]).
+    pub io_backend: IoBackend,
+    /// Event-loop shards (I/O threads) for the `event-loop` backend;
+    /// connections are assigned round-robin at accept. Ignored by the
+    /// `threads` backend.
+    pub event_threads: usize,
+    /// Concurrent-connection admission cap: connections beyond it are
+    /// accepted and immediately closed (so the kernel backlog never
+    /// silently fills). Both backends enforce it; the event loop is the
+    /// one that can realistically reach it.
+    pub max_conns: usize,
 }
 
 impl Default for ServerConfig {
@@ -334,6 +406,9 @@ impl Default for ServerConfig {
             max_frame_bytes: 1 << 20,
             max_nnz: u16::MAX as usize,
             seed: 0,
+            io_backend: IoBackend::default_from_env(),
+            event_threads: 2,
+            max_conns: 16_384,
         }
     }
 }
@@ -350,6 +425,9 @@ impl ServerConfig {
             ("max_frame_bytes", Json::Num(self.max_frame_bytes as f64)),
             ("max_nnz", Json::Num(self.max_nnz as f64)),
             ("seed", Json::Num(self.seed as f64)),
+            ("io_backend", Json::Str(self.io_backend.name().into())),
+            ("event_threads", Json::Num(self.event_threads as f64)),
+            ("max_conns", Json::Num(self.max_conns as f64)),
         ])
     }
 
@@ -371,6 +449,15 @@ impl ServerConfig {
                 .unwrap_or(d.max_frame_bytes),
             max_nnz: v.get("max_nnz").and_then(|x| x.as_usize()).unwrap_or(d.max_nnz),
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
+            io_backend: match v.get("io_backend").and_then(|s| s.as_str()) {
+                Some(name) => IoBackend::from_name(name)?,
+                None => d.io_backend,
+            },
+            event_threads: v
+                .get("event_threads")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(d.event_threads),
+            max_conns: v.get("max_conns").and_then(|x| x.as_usize()).unwrap_or(d.max_conns),
         })
     }
 
@@ -402,10 +489,17 @@ impl ServerConfig {
             ("max_pending_per_conn", self.max_pending_per_conn),
             ("max_frame_bytes", self.max_frame_bytes),
             ("max_nnz", self.max_nnz),
+            ("event_threads", self.event_threads),
+            ("max_conns", self.max_conns),
         ] {
             if v == 0 {
                 return Err(Error::Config(format!("server {name} must be >= 1")));
             }
+        }
+        if self.io_backend == IoBackend::EventLoop && !cfg!(target_os = "linux") {
+            return Err(Error::Config(
+                "io_backend event-loop needs epoll (Linux); use threads here".into(),
+            ));
         }
         if self.max_nnz > u32::MAX as usize {
             return Err(Error::Config(format!(
@@ -466,6 +560,9 @@ mod tests {
             max_frame_bytes: 1 << 16,
             max_nnz: 2048,
             seed: 42,
+            io_backend: IoBackend::Threads,
+            event_threads: 4,
+            max_conns: 2_000,
         };
         let back = ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
             .unwrap();
@@ -477,7 +574,41 @@ mod tests {
         assert_eq!(sparse.queue, ServerConfig::default().queue);
         assert_eq!(sparse.max_frame_bytes, 1 << 20);
         assert_eq!(sparse.max_nnz, u16::MAX as usize);
+        assert_eq!(sparse.event_threads, 2);
+        assert_eq!(sparse.max_conns, 16_384);
         sparse.validate().unwrap();
+    }
+
+    #[test]
+    fn io_backend_names_round_trip_and_gate_validation() {
+        assert_eq!(IoBackend::from_name("threads").unwrap(), IoBackend::Threads);
+        assert_eq!(IoBackend::from_name("event-loop").unwrap(), IoBackend::EventLoop);
+        assert_eq!(IoBackend::from_name("event_loop").unwrap(), IoBackend::EventLoop);
+        assert!(IoBackend::from_name("fibers").is_err());
+        for backend in [IoBackend::Threads, IoBackend::EventLoop] {
+            assert_eq!(IoBackend::from_name(backend.name()).unwrap(), backend);
+        }
+        // An explicit backend survives the JSON round trip.
+        let cfg = ServerConfig { io_backend: IoBackend::EventLoop, ..Default::default() };
+        let back =
+            ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.io_backend, IoBackend::EventLoop);
+        // Unknown backend names are a parse error, not a silent default.
+        assert!(ServerConfig::from_json(
+            &Json::parse(r#"{"io_backend":"quantum"}"#).unwrap()
+        )
+        .is_err());
+        // Knob sanity: the new counts must be >= 1.
+        let cfg = ServerConfig { event_threads: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = ServerConfig { max_conns: 0, ..Default::default() };
+        assert!(cfg.validate().is_err());
+        #[cfg(target_os = "linux")]
+        {
+            let cfg = ServerConfig { io_backend: IoBackend::EventLoop, ..Default::default() };
+            cfg.validate().unwrap();
+        }
     }
 
     #[test]

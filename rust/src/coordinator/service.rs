@@ -192,10 +192,26 @@ impl EnsembleSnapshot {
     /// [`OneVsOneEnsemble::predict`]:
     /// crate::learner::multiclass::OneVsOneEnsemble::predict
     pub fn classify(&self, features: &Features, orders: &mut [OrderGenerator]) -> ScoreResponse {
+        self.classify_with(features, orders, false)
+    }
+
+    /// [`Self::classify`] with an optional per-voter cost breakdown:
+    /// when `verbose` the response additionally carries one
+    /// [`VoterVote`] row per 1-vs-1 voter (pair-enumeration order), so
+    /// clients can attribute the attentive feature spend voter by
+    /// voter. The vote itself is bit-identical either way — verbose
+    /// only records what the non-verbose path already computes.
+    pub fn classify_with(
+        &self,
+        features: &Features,
+        orders: &mut [OrderGenerator],
+        verbose: bool,
+    ) -> ScoreResponse {
         debug_assert_eq!(orders.len(), self.voters.len(), "one order generator per voter");
         let predictor = EarlyStopPredictor::new(&self.boundary);
         let mut votes: Vec<(i64, u32)> = self.classes.iter().map(|&c| (c, 0)).collect();
         let mut evaluated = 0usize;
+        let mut per_voter = verbose.then(|| Vec::with_capacity(self.voters.len()));
         for (voter, orders) in self.voters.iter().zip(orders.iter_mut()) {
             let (score, k) = match features {
                 Features::Dense(x) => {
@@ -212,6 +228,14 @@ impl EnsembleSnapshot {
             if let Some(slot) = votes.iter_mut().find(|(c, _)| *c == winner) {
                 slot.1 += 1;
             }
+            if let Some(rows) = per_voter.as_mut() {
+                rows.push(VoterVote {
+                    pos: voter.pos,
+                    neg: voter.neg,
+                    vote: winner,
+                    features: k as u32,
+                });
+            }
         }
         let &(label, won) = votes.iter().max_by_key(|(c, v)| (*v, -*c)).unwrap();
         ScoreResponse {
@@ -222,6 +246,7 @@ impl EnsembleSnapshot {
                 votes: won,
                 voters: self.voters.len() as u32,
             }),
+            per_voter,
         }
     }
 
@@ -525,13 +550,22 @@ impl Features {
     pub fn sparsify(features: &[f64], eps: f64) -> Features {
         let mut idx = Vec::new();
         let mut val = Vec::new();
+        Features::sparsify_into(features, eps, &mut idx, &mut val);
+        Features::Sparse { idx, val }
+    }
+
+    /// [`Features::sparsify`] into caller-supplied buffers (cleared and
+    /// refilled) — the allocation-free form for encode loops that
+    /// sparsify per request (the load generator's hot path).
+    pub fn sparsify_into(features: &[f64], eps: f64, idx: &mut Vec<u32>, val: &mut Vec<f64>) {
+        idx.clear();
+        val.clear();
         for (i, &v) in features.iter().enumerate() {
             if v.abs() > eps {
                 idx.push(i as u32);
                 val.push(v);
             }
         }
-        Features::Sparse { idx, val }
     }
 }
 
@@ -545,6 +579,10 @@ pub enum ReqKind {
     /// All-pairs vote (`classify` op) — needs a
     /// [`ServingModel::Ensemble`].
     Classify,
+    /// All-pairs vote with the per-voter cost breakdown (`classify`
+    /// with `verbose`, or the binary `CLASSIFY_SPARSE_VERBOSE` op) —
+    /// same admission rules as [`ReqKind::Classify`].
+    ClassifyVerbose,
 }
 
 impl ReqKind {
@@ -552,7 +590,16 @@ impl ReqKind {
     pub fn name(self) -> &'static str {
         match self {
             ReqKind::Score => "score",
-            ReqKind::Classify => "classify",
+            ReqKind::Classify | ReqKind::ClassifyVerbose => "classify",
+        }
+    }
+
+    /// The admission kind: verbose classify is still a classify as far
+    /// as model-kind screening is concerned.
+    pub fn base(self) -> ReqKind {
+        match self {
+            ReqKind::ClassifyVerbose => ReqKind::Classify,
+            other => other,
         }
     }
 }
@@ -576,8 +623,22 @@ pub struct ClassifyInfo {
     pub voters: u32,
 }
 
+/// One voter's row of a verbose-classify breakdown: which 1-vs-1 pair,
+/// which way it voted, and what the attentive early exit spent on it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VoterVote {
+    /// Class a positive margin votes for.
+    pub pos: i64,
+    /// Class a negative margin votes for.
+    pub neg: i64,
+    /// The class this voter actually voted for (`pos` or `neg`).
+    pub vote: i64,
+    /// Features this voter evaluated before its early exit.
+    pub features: u32,
+}
+
 /// Scoring result.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ScoreResponse {
     /// Binary requests: signed margin estimate (the prediction is its
     /// sign). Classify requests: the winning vote count.
@@ -587,6 +648,9 @@ pub struct ScoreResponse {
     pub features_evaluated: usize,
     /// The multiclass outcome (classify requests only).
     pub classify: Option<ClassifyInfo>,
+    /// Per-voter cost breakdown (verbose classify requests only), in
+    /// pair-enumeration order.
+    pub per_voter: Option<Vec<VoterVote>>,
 }
 
 /// Number of log2-spaced buckets in the features-touched histogram:
@@ -907,7 +971,7 @@ fn worker_loop(
 /// past admission across a reload): the NaN score renders as a
 /// structured error at the front-end.
 fn reject() -> ScoreResponse {
-    ScoreResponse { score: f64::NAN, features_evaluated: 0, classify: None }
+    ScoreResponse { score: f64::NAN, features_evaluated: 0, classify: None, per_voter: None }
 }
 
 fn binary_worker(
@@ -950,7 +1014,15 @@ fn binary_worker(
                             (s, k, idx.len())
                         }
                     };
-                    (ScoreResponse { score, features_evaluated: k, classify: None }, total)
+                    (
+                        ScoreResponse {
+                            score,
+                            features_evaluated: k,
+                            classify: None,
+                            per_voter: None,
+                        },
+                        total,
+                    )
                 };
             // Dimension-mismatch rejects land in bucket 0 and count as
             // "early exit"; the network front-end screens those out before
@@ -977,13 +1049,15 @@ fn ensemble_worker(
         for req in batch.drain(..) {
             // "Full evaluation" for the ensemble is every voter walking
             // the whole support; early-exit accounting runs against that.
-            let (resp, total) =
-                if req.kind != ReqKind::Classify || req.features.check_dim(dim).is_err() {
-                    (reject(), dim * voters)
-                } else {
-                    let total = req.features.nnz() * voters;
-                    (ensemble.classify(&req.features, &mut orders), total)
-                };
+            let (resp, total) = if req.kind.base() != ReqKind::Classify
+                || req.features.check_dim(dim).is_err()
+            {
+                (reject(), dim * voters)
+            } else {
+                let total = req.features.nnz() * voters;
+                let verbose = req.kind == ReqKind::ClassifyVerbose;
+                (ensemble.classify_with(&req.features, &mut orders, verbose), total)
+            };
             stats.record(resp.features_evaluated, total);
             let _ = req.respond.send(resp);
         }
@@ -1360,6 +1434,49 @@ mod tests {
             ens.classify(&Features::Sparse { idx: vec![3, 9], val: vec![1.0, 1.0] }, &mut orders);
         assert_eq!(sparse.classify.unwrap().label, 0);
         assert!(sparse.features_evaluated <= 6, "3 voters × nnz 2 caps the walk");
+    }
+
+    #[test]
+    fn verbose_classify_attributes_cost_per_voter_without_changing_the_vote() {
+        let dim = 64;
+        let ens = flat_ensemble(dim);
+        let x = Features::Dense(vec![1.0; dim]);
+        // Two independent order sets so the verbose run replays the
+        // exact same policy stream as the plain one.
+        let mut orders_a = ens.make_orders(7);
+        let mut orders_b = ens.make_orders(7);
+        let plain = ens.classify(&x, &mut orders_a);
+        assert!(plain.per_voter.is_none(), "plain classify carries no breakdown");
+        let verbose = ens.classify_with(&x, &mut orders_b, true);
+        assert_eq!(plain.classify, verbose.classify);
+        assert_eq!(plain.features_evaluated, verbose.features_evaluated);
+        let rows = verbose.per_voter.expect("verbose breakdown");
+        assert_eq!(rows.len(), 3);
+        // Pair-enumeration order, and each row's vote is one of its pair.
+        assert_eq!((rows[0].pos, rows[0].neg), (0, 1));
+        assert_eq!((rows[1].pos, rows[1].neg), (0, 2));
+        assert_eq!((rows[2].pos, rows[2].neg), (1, 2));
+        for row in &rows {
+            assert!(row.vote == row.pos || row.vote == row.neg);
+            assert_eq!(row.vote, row.pos, "all-(+1) voters vote pos on a positive input");
+        }
+        // The rows decompose the total exactly.
+        let sum: usize = rows.iter().map(|r| r.features as usize).sum();
+        assert_eq!(sum, verbose.features_evaluated);
+        // And the kind plumbing: a verbose submit through the service.
+        let (h, run) = PredictionService::new(flat_ensemble(dim), 4, 16, 0).spawn();
+        let rx = h.submit_kind(vec![1.0; dim], ReqKind::ClassifyVerbose).unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.classify.unwrap().label, 0);
+        assert_eq!(resp.per_voter.expect("breakdown over the service").len(), 3);
+        // Non-verbose submits stay lean.
+        let resp = h.classify(vec![1.0; dim]).unwrap();
+        assert!(resp.per_voter.is_none());
+        drop(h);
+        run.join();
+        assert_eq!(ReqKind::ClassifyVerbose.base(), ReqKind::Classify);
+        assert_eq!(ReqKind::ClassifyVerbose.name(), "classify");
+        assert_eq!(ReqKind::Score.base(), ReqKind::Score);
     }
 
     #[test]

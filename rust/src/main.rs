@@ -61,22 +61,33 @@ COMMANDS:
   serve        [--listen ADDR] [--snapshot model.json] [--server-config srv.json]
                [--model name=path ...] [--requests N] [--batch B]
                [--workers W] [--queue Q]
+               [--io-backend threads|event-loop] [--event-threads T]
+               [--max-conns N]
                with --listen: TCP server (v1 JSON lines; a hello op with
                proto 2 or 3 upgrades a connection to binary frames —
                docs/PROTOCOL.md). --model name=path (repeatable) serves a
                registry of named shards behind one port: each path holds a
                binary ModelSnapshot or an ensemble snapshot, the first name
                is the default shard, and every shard hot-reloads
-               independently. otherwise: in-process synthetic benchmark
+               independently. --io-backend event-loop multiplexes all
+               connections over T epoll threads (Linux; thousands of idle
+               connections) instead of a thread pair per connection.
+               otherwise: in-process synthetic benchmark
   bench-serve  [--addr ADDR] [--mode v1-dense|v2-sparse-json|v2-binary|classify]
                [--model NAME] [--requests N] [--connections C] [--pipeline P]
                [--hard FRAC] [--sparse-eps E] [--batch B] [--workers W]
-               [--queue Q] [--json BENCH_serve.json]
-               [--floors ci/bench_floors.json]
+               [--queue Q] [--io-backend threads|event-loop]
+               [--event-threads T] [--open-loop]
+               [--json BENCH_serve.json] [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
-               three wire modes (plus full evaluation) on the same traffic;
-               --json writes the machine-readable report, --floors gates on
-               committed throughput floors (exit 1 on regression)
+               three wire modes, a multiclass classify pass, and full
+               evaluation on the same traffic; --io-backend selects the
+               loopback server's transport; --open-loop sweeps one
+               request at a time across C mostly-idle connections
+               (the many-connections scaling check) instead of
+               pipelining; --json writes the machine-readable report,
+               --floors gates on committed throughput floors (exit 1 on
+               regression)
   init-config  [out.json]
   export-idx   <dir> [--count N] [--seed S]
   help
@@ -88,7 +99,8 @@ fn main() -> anyhow::Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(&argv[1..]).map_err(|e| anyhow::anyhow!(e))?;
+    let args =
+        Args::parse_with(&argv[1..], &["open-loop"]).map_err(|e| anyhow::anyhow!(e))?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "train-multiclass" => cmd_train_multiclass(&args),
@@ -322,6 +334,22 @@ fn cmd_train_multiclass(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Train a small all-pairs ensemble for the bench-serve classify pass
+/// (three classes → three voters; enough to show the per-voter
+/// attention compounding at CI scale).
+fn train_quick_ensemble() -> anyhow::Result<EnsembleSnapshot> {
+    let classes = [1i64, 2, 3];
+    let ds = SynthDigits::new(13).generate_classes(2_000, &[1, 2, 3]);
+    let boundary = AnyBoundary::Constant { delta: 0.1, paper_literal: false };
+    let cfg = PegasosConfig { lambda: 1e-2, seed: 13, ..Default::default() };
+    let mut ensemble = OneVsOneEnsemble::new(ds.dim(), &classes, cfg, boundary.clone())?;
+    let shuffle = ShuffledIndices::new(ds.len(), 13);
+    for epoch in 0..2 {
+        ensemble.train_pass(&ds, &shuffle.epoch(epoch));
+    }
+    Ok(EnsembleSnapshot::from_trained(&mut ensemble, boundary, CoordinatePolicy::Permuted))
+}
+
 /// Train a quick attentive snapshot from the paper-default experiment
 /// (used whenever the serve commands are not given `--snapshot`).
 fn train_default_snapshot() -> anyhow::Result<ModelSnapshot> {
@@ -368,6 +396,14 @@ fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
     cfg.max_batch = args.get_parse("batch", cfg.max_batch).map_err(|e| anyhow::anyhow!(e))?;
     cfg.workers = args.get_parse("workers", cfg.workers).map_err(|e| anyhow::anyhow!(e))?;
     cfg.queue = args.get_parse("queue", cfg.queue).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(backend) = args.opt("io-backend") {
+        cfg.io_backend =
+            attentive::config::IoBackend::from_name(backend).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.event_threads =
+        args.get_parse("event-threads", cfg.event_threads).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.max_conns =
+        args.get_parse("max-conns", cfg.max_conns).map_err(|e| anyhow::anyhow!(e))?;
     Ok(cfg)
 }
 
@@ -508,17 +544,38 @@ fn check_bench_floors(report: &Json, floors: &Json) -> Vec<String> {
             None => violations.push("report lacks ratio_v2_sparse_json_vs_v1_dense".into()),
         }
     }
-    if let Some(min_rps) = floors.get("v2_binary_min_req_per_s").and_then(|x| x.as_f64()) {
-        let rps = report
-            .get("modes")
-            .and_then(|m| m.get("v2-binary"))
-            .and_then(|m| m.get("req_per_s"))
-            .and_then(|x| x.as_f64());
-        match rps {
-            Some(r) if r >= min_rps => {}
-            Some(r) => violations
-                .push(format!("v2-binary {r:.0} req/s below floor {min_rps:.0} req/s")),
-            None => violations.push("report lacks a v2-binary req_per_s entry".into()),
+    // Per-mode absolute floors, generically: any floors key of the form
+    // `<mode>_min_req_per_s` (underscores standing for the dashes in
+    // the mode name) gates that mode's throughput. A key prefixed
+    // `event_loop_` applies only to reports stamped with that backend,
+    // so the event loop can carry its own floor next to the shared
+    // ones.
+    let backend = report.get("io_backend").and_then(|s| s.as_str()).unwrap_or("threads");
+    if let Json::Obj(pairs) = floors {
+        for (key, value) in pairs {
+            let Some(rest) = key.strip_suffix("_min_req_per_s") else { continue };
+            let Some(min_rps) = value.as_f64() else { continue };
+            let (applies, mode_key) = match rest.strip_prefix("event_loop_") {
+                Some(mode) => (backend == "event-loop", mode),
+                None => (true, rest),
+            };
+            if !applies {
+                continue;
+            }
+            let mode_name = mode_key.replace('_', "-");
+            let rps = report
+                .get("modes")
+                .and_then(|m| m.get(&mode_name))
+                .and_then(|m| m.get("req_per_s"))
+                .and_then(|x| x.as_f64());
+            match rps {
+                Some(r) if r >= min_rps => {}
+                Some(r) => violations.push(format!(
+                    "{mode_name} {r:.0} req/s below floor {min_rps:.0} req/s ({key})"
+                )),
+                None => violations
+                    .push(format!("report lacks a {mode_name} req_per_s entry ({key})")),
+            }
         }
     }
     violations
@@ -531,6 +588,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let hard = args.get_parse("hard", 0.5f64).map_err(|e| anyhow::anyhow!(e))?;
     let sparse_eps = args.get_parse("sparse-eps", 0.05f64).map_err(|e| anyhow::anyhow!(e))?;
 
+    let open_loop = args.has("open-loop");
     let loadcfg = |addr: String, mode: ClientMode| LoadGenConfig {
         addr,
         connections,
@@ -540,6 +598,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         mode,
         sparse_eps,
         seed: 1, // same seed every pass -> identical traffic
+        open_loop,
         ..Default::default()
     };
     let mut table = Table::new(&[
@@ -567,7 +626,36 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut passes: Vec<(String, attentive::server::loadgen::LoadReport)> = Vec::new();
 
+    // Open-loop runs exist to prove the many-mostly-idle-connections
+    // claim; a single shed (or transport error) falsifies it, so fail
+    // the command rather than quietly writing a report.
+    let check_open_loop = |name: &str,
+                           r: &attentive::server::loadgen::LoadReport|
+     -> anyhow::Result<()> {
+        if open_loop && (r.overloaded > 0 || r.errors > 0) {
+            bail!(
+                "open-loop pass {name}: {} overloaded shed(s), {} error(s) across {} \
+                 connections — zero of each expected",
+                r.overloaded,
+                r.errors,
+                connections
+            );
+        }
+        Ok(())
+    };
+
+    // Which transport produced this report — resolved from the actual
+    // server config in loopback mode (so a --server-config file's
+    // io_backend is honored), from the flag/env for external servers.
+    let report_backend: attentive::config::IoBackend;
+
     if let Some(addr) = args.opt("addr") {
+        report_backend = match args.opt("io-backend") {
+            Some(name) => {
+                attentive::config::IoBackend::from_name(name).map_err(|e| anyhow::anyhow!(e))?
+            }
+            None => attentive::config::IoBackend::default_from_env(),
+        };
         // External server: one pass, on the selected wire mode
         // (--model routes it to a named shard; required for classify).
         let mode = ClientMode::from_name(&args.get("mode", "v1-dense"))
@@ -575,6 +663,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         let mut cfg = loadcfg(addr.to_string(), mode);
         cfg.model = args.opt("model").map(str::to_string);
         let report = loadgen::run(&cfg)?;
+        check_open_loop(mode.name(), &report)?;
         row(&mut table, mode.name(), &report);
         println!("{}", table.render());
         if report.total_voters > 0 {
@@ -589,70 +678,129 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         passes.push((mode.name().to_string(), report));
     } else {
         // Loopback comparison: identical traffic over the three wire
-        // modes against the attentive model, then a v1-dense pass under
-        // full evaluation (the attention baseline), switched via the
-        // hot-reload control channel.
+        // modes against the attentive model, a multiclass classify pass
+        // against the co-hosted ensemble shard, then a v1-dense pass
+        // under full evaluation (the attention baseline), switched via
+        // the hot-reload control channel.
         let attentive_snapshot = load_or_train_snapshot(args)?;
         let mut full_snapshot = attentive_snapshot.clone();
         full_snapshot.boundary = attentive::stst::boundary::AnyBoundary::Full;
+        let ensemble_snapshot = train_quick_ensemble()?;
 
         let mut srv_cfg = server_config_from_args(args)?;
         srv_cfg.listen = "127.0.0.1:0".into();
-        let server = TcpServer::serve(&srv_cfg, attentive_snapshot)?;
+        let server = TcpServer::serve_models(
+            &srv_cfg,
+            vec![
+                ("default".to_string(), attentive_snapshot.into()),
+                ("digits".to_string(), ensemble_snapshot.into()),
+            ],
+        )?;
+        report_backend = srv_cfg.io_backend;
         let addr = server.local_addr().to_string();
-        println!(
-            "loopback server on {addr}: {requests} requests × {} passes ...",
-            ClientMode::ALL.len() + 1
-        );
 
-        for mode in ClientMode::ALL {
-            let report = loadgen::run(&loadcfg(addr.clone(), mode))?;
+        if open_loop {
+            // Open loop is the many-idle-connections scaling check, not
+            // a wire comparison: run exactly one pass on the selected
+            // mode (default v2-binary) so `--connections 2000` costs
+            // one sweep, not five.
+            let mode = ClientMode::from_name(&args.get("mode", "v2-binary"))
+                .map_err(|e| anyhow::anyhow!(e))?;
+            println!(
+                "loopback server on {addr} ({} backend): open loop, {requests} requests \
+                 across {connections} mostly-idle connections ({}) ...",
+                srv_cfg.io_backend.name(),
+                mode.name()
+            );
+            let mut cfg = loadcfg(addr.clone(), mode);
+            if mode == ClientMode::Classify {
+                cfg.model = Some("digits".to_string());
+                cfg.digits = vec![1, 2, 3];
+            }
+            let report = loadgen::run(&cfg)?;
+            check_open_loop(mode.name(), &report)?;
             row(&mut table, mode.name(), &report);
             passes.push((mode.name().to_string(), report));
-        }
-
-        let mut control = Client::connect(&addr)?;
-        control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
-        let full_report = loadgen::run(&loadcfg(addr, ClientMode::V1Dense))?;
-        row(&mut table, "full(v1-dense)", &full_report);
-
-        println!("{}", table.render());
-        let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
-        drop(control);
-        server.shutdown();
-        println!(
-            "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
-            stats.served,
-            stats.early_exit_rate,
-            stats.reloads,
-            stats.accepted_conns,
-            stats.overloaded
-        );
-        let v1 = &passes[0].1;
-        let v2b = &passes[2].1;
-        if v1.req_per_s() > 0.0 {
+            println!("{}", table.render());
+            let mut control = Client::connect(&addr)?;
+            let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
+            drop(control);
+            server.shutdown();
             println!(
-                "wire: v2-binary {:.0} req/s vs v1-dense {:.0} req/s ({:.1}x), \
-                 {:.0} vs {:.0} request bytes",
-                v2b.req_per_s(),
-                v1.req_per_s(),
-                v2b.req_per_s() / v1.req_per_s(),
-                v2b.bytes_per_req(),
-                v1.bytes_per_req(),
+                "server totals: {} served, {} conns, {} shed — zero sheds required",
+                stats.served, stats.accepted_conns, stats.overloaded
             );
-        }
-        if full_report.avg_features() > 0.0 {
+        } else {
             println!(
-                "attention saves {:.1}x features per request ({:.1} vs {:.1} of 784)",
-                full_report.avg_features() / v1.avg_features().max(1e-9),
-                v1.avg_features(),
-                full_report.avg_features()
+                "loopback server on {addr} ({} backend): {requests} requests × {} passes ...",
+                srv_cfg.io_backend.name(),
+                ClientMode::ALL.len() + 2
             );
+
+            for mode in ClientMode::ALL {
+                let report = loadgen::run(&loadcfg(addr.clone(), mode))?;
+                row(&mut table, mode.name(), &report);
+                passes.push((mode.name().to_string(), report));
+            }
+
+            // Multiclass pass: native binary classify frames against the
+            // co-hosted all-pairs ensemble shard.
+            let classify_report = loadgen::run(&LoadGenConfig {
+                model: Some("digits".to_string()),
+                digits: vec![1, 2, 3],
+                ..loadcfg(addr.clone(), ClientMode::Classify)
+            })?;
+            row(&mut table, "classify", &classify_report);
+            passes.push(("classify".to_string(), classify_report));
+
+            let mut control = Client::connect(&addr)?;
+            control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
+            let full_report = loadgen::run(&loadcfg(addr, ClientMode::V1Dense))?;
+            row(&mut table, "full(v1-dense)", &full_report);
+
+            println!("{}", table.render());
+            let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
+            drop(control);
+            server.shutdown();
+            println!(
+                "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
+                stats.served,
+                stats.early_exit_rate,
+                stats.reloads,
+                stats.accepted_conns,
+                stats.overloaded
+            );
+            let v1 = &passes[0].1;
+            let v2b = &passes[2].1;
+            if v1.req_per_s() > 0.0 {
+                println!(
+                    "wire: v2-binary {:.0} req/s vs v1-dense {:.0} req/s ({:.1}x), \
+                     {:.0} vs {:.0} request bytes",
+                    v2b.req_per_s(),
+                    v1.req_per_s(),
+                    v2b.req_per_s() / v1.req_per_s(),
+                    v2b.bytes_per_req(),
+                    v1.bytes_per_req(),
+                );
+            }
+            if full_report.avg_features() > 0.0 {
+                println!(
+                    "attention saves {:.1}x features per request ({:.1} vs {:.1} of 784)",
+                    full_report.avg_features() / v1.avg_features().max(1e-9),
+                    v1.avg_features(),
+                    full_report.avg_features()
+                );
+            }
+            passes.push(("full-v1-dense".to_string(), full_report));
         }
-        passes.push(("full-v1-dense".to_string(), full_report));
     }
 
-    let report_json = loadgen::report_to_json(requests, &passes);
+    let mut report_json = loadgen::report_to_json(requests, &passes);
+    // Stamp the transport backend so floors can gate the two backends
+    // independently (`event_loop_*` floor keys).
+    if let Json::Obj(pairs) = &mut report_json {
+        pairs.push(("io_backend".to_string(), Json::Str(report_backend.name().to_string())));
+    }
     if let Some(path) = args.opt("json") {
         attentive::metrics::export::to_json_file(&report_json, std::path::Path::new(path))?;
         println!("bench report written to {path}");

@@ -1,0 +1,163 @@
+//! [`BufPool`]: a bounded pool of reusable byte buffers for the
+//! serving transport.
+//!
+//! Every connection needs read/write/deferred buffers, and every
+//! response needs somewhere to serialize. Allocating those per
+//! connection (or worse, per response) puts the allocator on the hot
+//! path; the pool recycles them instead, so at steady state a
+//! connection churn or a response burst touches no allocator at all.
+//! Both transport backends use it: the event loop checks buffers out at
+//! accept and back in at close, and the thread backend's writer uses a
+//! pooled scratch buffer for response rendering.
+//!
+//! The pool is deliberately simple — a mutex around a stack of `Vec`s —
+//! because checkouts happen per *connection*, not per request: the
+//! per-request path works entirely on buffers the connection already
+//! owns. Two bounds keep it honest under adversarial load:
+//!
+//! * at most `max_pooled` buffers are retained (extras are dropped, not
+//!   hoarded), and
+//! * a returned buffer whose capacity grew beyond `max_retained_cap`
+//!   (e.g. after one giant JSON stats response) is dropped rather than
+//!   pinned in memory forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A bounded pool of reusable `Vec<u8>` buffers.
+pub struct BufPool {
+    bufs: Mutex<Vec<Vec<u8>>>,
+    max_pooled: usize,
+    max_retained_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+/// Pool statistics (observability for the allocation-free claim).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufPoolStats {
+    /// Checkouts served from the pool.
+    pub hits: u64,
+    /// Checkouts that had to allocate a fresh buffer.
+    pub misses: u64,
+    /// Buffers currently parked in the pool.
+    pub pooled: usize,
+}
+
+impl BufPool {
+    /// Pool retaining at most `max_pooled` buffers, each of at most
+    /// `max_retained_cap` bytes capacity.
+    pub fn new(max_pooled: usize, max_retained_cap: usize) -> Self {
+        Self {
+            bufs: Mutex::new(Vec::new()),
+            max_pooled,
+            max_retained_cap,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Defaults sized for the serving front-end: enough parked buffers
+    /// to absorb connection churn, capped at 256 KiB capacity each
+    /// (worst-case pool footprint 64 MiB; the rare buffer grown past
+    /// the cap by a giant frame is dropped rather than pinned).
+    pub fn serving_default() -> Self {
+        Self::new(256, 1 << 18)
+    }
+
+    /// Check a buffer out: recycled if available (cleared, capacity
+    /// intact), freshly allocated otherwise.
+    pub fn get(&self) -> Vec<u8> {
+        let recycled = self.bufs.lock().unwrap().pop();
+        match recycled {
+            Some(mut buf) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer. Dropped instead of pooled when the pool is full
+    /// or the buffer outgrew the retention cap.
+    pub fn put(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > self.max_retained_cap {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < self.max_pooled {
+            bufs.push(buf);
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> BufPoolStats {
+        BufPoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            pooled: self.bufs.lock().unwrap().len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_capacity_and_counts_hits() {
+        let pool = BufPool::new(4, 1 << 16);
+        let mut a = pool.get();
+        a.extend_from_slice(&[1, 2, 3, 4]);
+        let cap = a.capacity();
+        assert!(cap >= 4);
+        pool.put(a);
+        let b = pool.get();
+        assert!(b.is_empty(), "recycled buffers come back cleared");
+        assert_eq!(b.capacity(), cap, "capacity survives the round trip");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        pool.put(b);
+        assert_eq!(pool.stats().pooled, 1);
+    }
+
+    #[test]
+    fn bounds_are_enforced() {
+        let pool = BufPool::new(2, 64);
+        // Over-capacity buffers are dropped, not retained.
+        pool.put(Vec::with_capacity(1024));
+        assert_eq!(pool.stats().pooled, 0);
+        // Zero-capacity buffers are not worth pooling.
+        pool.put(Vec::new());
+        assert_eq!(pool.stats().pooled, 0);
+        // The pool never holds more than max_pooled.
+        for _ in 0..5 {
+            pool.put(Vec::with_capacity(16));
+        }
+        assert_eq!(pool.stats().pooled, 2);
+    }
+
+    #[test]
+    fn concurrent_checkouts_are_safe() {
+        let pool = std::sync::Arc::new(BufPool::serving_default());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let pool = pool.clone();
+                scope.spawn(move || {
+                    for i in 0..200 {
+                        let mut buf = pool.get();
+                        buf.extend_from_slice(&[i as u8; 32]);
+                        pool.put(buf);
+                    }
+                });
+            }
+        });
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, 800);
+        assert!(s.pooled <= 256);
+    }
+}

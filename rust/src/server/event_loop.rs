@@ -1,0 +1,808 @@
+//! Epoll event-loop transport backend: thousands of connections on a
+//! handful of I/O threads, with an allocation-free steady-state request
+//! path.
+//!
+//! ## Why
+//!
+//! The thread backend burns a reader+writer thread pair per connection:
+//! correct and simple, but connection count is capped by thread
+//! exhaustion long before the attentive evaluator saturates — exactly
+//! backwards for a paper whose point is that per-request *compute* is
+//! cheap. This backend multiplexes every connection over
+//! `ServerConfig.event_threads` sharded epoll loops instead, so idle
+//! connections cost one `epoll_ctl` registration and ~three pooled
+//! buffers, nothing else.
+//!
+//! ## Architecture
+//!
+//! One blocking accept thread assigns connections round-robin to
+//! loop shards. Each shard owns an epoll instance and a private
+//! `fd → Conn` table; the accept thread hands streams over through a
+//! mutexed inbox and registers the fd with the shard's epoll (safe
+//! cross-thread by epoll's contract; the loop drains the inbox before
+//! processing each wait batch, and level-triggered readiness re-fires
+//! for anything that raced).
+//!
+//! Per connection the loop keeps three pooled, reusable buffers and a
+//! FIFO of **response slots**:
+//!
+//! * `rbuf` — the read ring: raw bytes off the socket, consumed in
+//!   place (v1 lines are scanned for `\n`; binary frames are decoded
+//!   **zero-copy** via [`FrameRef`](crate::server::frame::FrameRef)
+//!   straight out of this buffer — see [`super::tcp::frame_step`]).
+//! * `wbuf` — the write ring: responses serialize into it
+//!   ([`render_score_into`] appends binary frames without allocating)
+//!   and it drains to the socket on writability.
+//! * `dbuf` + `slots` — the ordering machinery: responses must leave in
+//!   request order, so a control response that becomes ready while an
+//!   earlier score is still being computed parks its bytes in `dbuf`
+//!   behind a `Slot::Bytes` marker; `Slot::Pending` holds the worker's
+//!   response receiver. The pump walks slots front-to-back and stops at
+//!   the first unready pending — order is structural, not scheduled.
+//!
+//! ## Backpressure
+//!
+//! Two local conditions pause *reading* (the loop simply drops `EPOLLIN`
+//! interest, so the kernel's TCP window throttles the client — no
+//! thread ever blocks):
+//!
+//! * `slots` at `max_pending_per_conn` (the pipelining bound), or
+//! * `wbuf` beyond a high-water mark (a slow consumer).
+//!
+//! Writability interest (`EPOLLOUT`) is armed exactly while `wbuf` has
+//! unflushed bytes. Admission-queue overload is unchanged from the
+//! thread backend: shed at the edge with an explicit `overloaded`
+//! response.
+//!
+//! ## Wakeups
+//!
+//! Worker completions arrive on per-request mpsc receivers, which epoll
+//! cannot watch. Instead of cross-thread wakeup machinery the loop
+//! polls: while any connection has outstanding slots it waits at most
+//! [`ACTIVE_TICK_MS`]; fully idle it waits [`IDLE_TICK_MS`] (also the
+//! shutdown-flag latency bound). Under load `epoll_wait` returns
+//! immediately anyway, so the tick only matters in the
+//! idle-but-pending tail.
+//!
+//! ## No mio?
+//!
+//! The crate is dependency-free by charter (see `Cargo.toml`), so the
+//! epoll surface is declared directly in [`sys`] — three syscalls and a
+//! struct, the subset mio itself sits on.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::service::ScoreResponse;
+use crate::error::{Error, Result};
+use crate::server::tcp::{
+    frame_step, json_step, render_score_into, Job, Shared, Step, Wire, WireClass,
+};
+
+/// Raw epoll FFI: the kernel ABI subset this backend needs. Linux only.
+mod sys {
+    use std::os::raw::c_int;
+
+    pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+    pub const EPOLL_CTL_ADD: c_int = 1;
+    pub const EPOLL_CTL_MOD: c_int = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    /// `struct epoll_event`. Packed on x86-64 (kernel ABI); natural
+    /// alignment elsewhere.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: c_int) -> c_int;
+        pub fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        pub fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+/// Socket-read granularity.
+const READ_CHUNK: usize = 16 * 1024;
+/// Minimum bound on one v1 JSON line. The threads backend's `read_line`
+/// accepts lines of any length, and big v1 lines are legitimate (a
+/// `reload` carrying a wide ensemble snapshot); the event loop still
+/// needs *some* bound to cap per-connection memory, so it uses
+/// `max(max_frame_bytes, this)` and answers an over-limit line with a
+/// structured error rather than a silent drop.
+const V1_LINE_CAP_MIN: usize = 16 << 20;
+/// Unflushed `wbuf` bytes beyond which the connection stops reading.
+const WBUF_HIGH_WATER: usize = 256 * 1024;
+/// Flushed-prefix size that triggers `wbuf` compaction.
+const WBUF_COMPACT: usize = 64 * 1024;
+/// Consumed-prefix size that triggers `rbuf` compaction.
+const RBUF_COMPACT: usize = 16 * 1024;
+/// Max events harvested per `epoll_wait`.
+const MAX_EVENTS: usize = 256;
+/// Wait bound while any connection has outstanding response slots.
+const ACTIVE_TICK_MS: i32 = 1;
+/// Wait bound while fully idle (also the shutdown-latency bound).
+const IDLE_TICK_MS: i32 = 50;
+
+/// One event-loop shard: an epoll instance plus the accept thread's
+/// hand-off inbox.
+struct LoopShard {
+    epfd: std::os::raw::c_int,
+    inbox: Mutex<Vec<TcpStream>>,
+}
+
+// Safety: epfd is only ever passed to epoll syscalls, which are
+// documented thread-safe; the inbox is mutexed.
+impl Drop for LoopShard {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.epfd) };
+    }
+}
+
+/// In-order response slot (see module docs).
+enum Slot {
+    /// `len` bytes parked in `dbuf`, already counted against the wire
+    /// stats at enqueue time.
+    Bytes { len: usize },
+    /// An admitted request awaiting its worker response.
+    Pending { wire: Wire, rx: Receiver<ScoreResponse> },
+}
+
+/// Per-connection state owned by exactly one loop shard.
+struct Conn {
+    stream: TcpStream,
+    /// Read ring: bytes `[rstart..rbuf.len())` are unconsumed input.
+    rbuf: Vec<u8>,
+    rstart: usize,
+    /// Write ring: bytes `[wstart..wbuf.len())` are unflushed output.
+    wbuf: Vec<u8>,
+    wstart: usize,
+    /// Deferred-response bytes parked behind pendings (`[dstart..)`
+    /// live), drained into `wbuf` by the pump in slot order.
+    dbuf: Vec<u8>,
+    dstart: usize,
+    slots: VecDeque<Slot>,
+    /// Negotiated binary framing (after a granted v2+ `hello`).
+    binary: bool,
+    /// Peer closed its write half (or read failed): no more input, but
+    /// buffered requests still get answered — half-close works.
+    read_closed: bool,
+    /// Tear down once slots and `wbuf` drain; stop consuming input.
+    closing: bool,
+    /// Currently registered epoll interest mask.
+    interest: u32,
+    /// Membership flag for the shard's active (has-slots) list.
+    active: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, shared: &Shared) -> Conn {
+        Conn {
+            stream,
+            rbuf: shared.pool.get(),
+            rstart: 0,
+            wbuf: shared.pool.get(),
+            wstart: 0,
+            dbuf: shared.pool.get(),
+            dstart: 0,
+            slots: VecDeque::new(),
+            binary: false,
+            read_closed: false,
+            closing: false,
+            interest: sys::EPOLLIN | sys::EPOLLRDHUP,
+            active: false,
+        }
+    }
+
+    fn wbuf_pending(&self) -> usize {
+        self.wbuf.len() - self.wstart
+    }
+
+    fn rbuf_unconsumed(&self) -> usize {
+        self.rbuf.len() - self.rstart
+    }
+
+    /// Reading is paused while local buffers are saturated — the kernel
+    /// TCP window then backpressures the peer.
+    fn read_paused(&self, shared: &Shared) -> bool {
+        self.closing
+            || self.read_closed
+            || self.slots.len() >= shared.max_pending
+            || self.wbuf_pending() > WBUF_HIGH_WATER
+            || self.rbuf_unconsumed() > input_cap(shared) + 4
+    }
+}
+
+/// Per-connection input-buffer bound: every legal binary frame fits
+/// (`max_frame_bytes` + prefix), and v1 lines get at least
+/// [`V1_LINE_CAP_MIN`] (the threads backend accepts unbounded lines;
+/// see the constant's docs).
+fn input_cap(shared: &Shared) -> usize {
+    shared.max_frame_bytes.max(V1_LINE_CAP_MIN)
+}
+
+/// Running event backend: the accept thread plus the loop shards.
+pub(crate) struct EventBackend {
+    accept_join: JoinHandle<()>,
+    loop_joins: Vec<JoinHandle<()>>,
+}
+
+impl EventBackend {
+    /// Join everything. Call with `Shared::shutting_down` raised (the
+    /// loops poll it at [`IDLE_TICK_MS`] granularity) and the accept
+    /// thread woken; loops drain every admitted request before exiting.
+    pub(crate) fn join(self) {
+        let _ = self.accept_join.join();
+        for join in self.loop_joins {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Spawn the backend: `event_threads` loop shards plus the accept
+/// thread, all serving `shared`'s registry.
+pub(crate) fn spawn(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    event_threads: usize,
+) -> Result<EventBackend> {
+    let mut shards = Vec::with_capacity(event_threads.max(1));
+    for _ in 0..event_threads.max(1) {
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        if epfd < 0 {
+            return Err(Error::io("epoll_create1", std::io::Error::last_os_error()));
+        }
+        shards.push(Arc::new(LoopShard { epfd, inbox: Mutex::new(Vec::new()) }));
+    }
+    let mut loop_joins = Vec::with_capacity(shards.len());
+    for shard in &shards {
+        let shard = shard.clone();
+        let shared = shared.clone();
+        loop_joins.push(std::thread::spawn(move || run_loop(&shard, &shared)));
+    }
+    let accept_join = std::thread::spawn(move || accept_loop(listener, &shared, &shards));
+    Ok(EventBackend { accept_join, loop_joins })
+}
+
+/// Blocking accept; round-robin shard assignment. Raises the shutdown
+/// flag on exit so the loops always die with it.
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>, shards: &[Arc<LoopShard>]) {
+    let mut next = 0usize;
+    for stream in listener.incoming() {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        // Admission cap: accept-and-close beats a silently full backlog.
+        if shared.live_conns.load(Ordering::Relaxed) >= shared.max_conns as u64 {
+            drop(stream);
+            continue;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            continue;
+        }
+        shared.accepted.fetch_add(1, Ordering::Relaxed);
+        shared.live_conns.fetch_add(1, Ordering::Relaxed);
+        let shard = &shards[next % shards.len()];
+        next = next.wrapping_add(1);
+        let fd = stream.as_raw_fd();
+        // Inbox first, then register: the loop drains the inbox before
+        // each event batch, and level-triggered epoll re-reports
+        // anything that raced the hand-off.
+        shard.inbox.lock().unwrap().push(stream);
+        let mut ev =
+            sys::EpollEvent { events: sys::EPOLLIN | sys::EPOLLRDHUP, data: fd as u64 };
+        unsafe { sys::epoll_ctl(shard.epfd, sys::EPOLL_CTL_ADD, fd, &mut ev) };
+    }
+    shared.shutting_down.store(true, Ordering::SeqCst);
+}
+
+/// One shard's loop: adopt, wait, dispatch, pump, repeat — then drain.
+fn run_loop(shard: &LoopShard, shared: &Shared) {
+    let mut conns: HashMap<i32, Conn> = HashMap::new();
+    // Connections with outstanding response slots, pumped every tick.
+    let mut active: Vec<i32> = Vec::new();
+    let mut events = vec![sys::EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+    // Shared socket-read scratch: zero-initialized once, then only the
+    // received bytes are ever copied out of it.
+    let mut scratch = vec![0u8; READ_CHUNK];
+    loop {
+        adopt(shard, shared, &mut conns);
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let timeout = if active.is_empty() { IDLE_TICK_MS } else { ACTIVE_TICK_MS };
+        let n = unsafe {
+            sys::epoll_wait(shard.epfd, events.as_mut_ptr(), events.len() as i32, timeout)
+        };
+        if n < 0 {
+            if std::io::Error::last_os_error().kind() != std::io::ErrorKind::Interrupted {
+                // A broken epoll fd would otherwise spin; bound it.
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            continue;
+        }
+        // Adopt again: a connection registered mid-wait may already
+        // have an event in this very batch.
+        adopt(shard, shared, &mut conns);
+        for ev in &events[..n as usize] {
+            // Copy out of the (possibly packed) struct before use.
+            let fd = ev.data as i32;
+            let mask = ev.events;
+            handle_event(&mut conns, &mut active, fd, mask, shard, shared, &mut scratch);
+        }
+        // Pump tick: revisit every connection with outstanding slots.
+        let tick = std::mem::take(&mut active);
+        for fd in tick {
+            if let Some(conn) = conns.get_mut(&fd) {
+                conn.active = false;
+            } else {
+                continue;
+            }
+            let dead = {
+                let conn = conns.get_mut(&fd).expect("checked above");
+                !service(conn, shard, shared, fd)
+            };
+            finish_or_requeue(&mut conns, &mut active, fd, dead, shared);
+        }
+    }
+    // Shutdown: every admitted request is still answered — the worker
+    // generations stay alive until `TcpServer` joins this loop, so a
+    // blocking drain terminates.
+    adopt(shard, shared, &mut conns);
+    for (_, conn) in conns.drain() {
+        drain_and_close(conn, shared);
+    }
+}
+
+/// Move accepted connections from the inbox into the shard's table.
+fn adopt(shard: &LoopShard, shared: &Shared, conns: &mut HashMap<i32, Conn>) {
+    let incoming: Vec<TcpStream> = std::mem::take(&mut *shard.inbox.lock().unwrap());
+    for stream in incoming {
+        let fd = stream.as_raw_fd();
+        conns.insert(fd, Conn::new(stream, shared));
+    }
+}
+
+/// Dispatch one epoll event for `fd`.
+fn handle_event(
+    conns: &mut HashMap<i32, Conn>,
+    active: &mut Vec<i32>,
+    fd: i32,
+    mask: u32,
+    shard: &LoopShard,
+    shared: &Shared,
+    scratch: &mut [u8],
+) {
+    let dead = {
+        let Some(conn) = conns.get_mut(&fd) else { return };
+        let mut dead = mask & sys::EPOLLERR != 0;
+        if !dead && mask & (sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLHUP) != 0 {
+            match read_some(conn, shared, scratch) {
+                ReadOutcome::Progress => {}
+                ReadOutcome::Eof => conn.read_closed = true,
+                ReadOutcome::Fatal => dead = true,
+            }
+        }
+        if !dead {
+            dead = !service(conn, shard, shared, fd);
+        }
+        dead
+    };
+    finish_or_requeue(conns, active, fd, dead, shared);
+}
+
+/// Close a dead connection, or re-enter it on the active list while it
+/// still owes responses.
+fn finish_or_requeue(
+    conns: &mut HashMap<i32, Conn>,
+    active: &mut Vec<i32>,
+    fd: i32,
+    dead: bool,
+    shared: &Shared,
+) {
+    if dead {
+        if let Some(conn) = conns.remove(&fd) {
+            close_conn(conn, shared);
+        }
+        return;
+    }
+    if let Some(conn) = conns.get_mut(&fd) {
+        if !conn.slots.is_empty() && !conn.active {
+            conn.active = true;
+            active.push(fd);
+        }
+    }
+}
+
+/// Release a connection's pooled buffers and the live-conn slot.
+/// Dropping the stream closes the fd, which deregisters it from epoll.
+fn close_conn(conn: Conn, shared: &Shared) {
+    shared.pool.put(conn.rbuf);
+    shared.pool.put(conn.wbuf);
+    shared.pool.put(conn.dbuf);
+    shared.live_conns.fetch_sub(1, Ordering::Relaxed);
+}
+
+enum ReadOutcome {
+    Progress,
+    Eof,
+    Fatal,
+}
+
+/// Pull whatever the socket has into `rbuf`, up to the pause bound.
+/// Reads land in the shard's reusable `scratch` and only the bytes
+/// actually received are copied on — no per-read zeroing of the chunk.
+fn read_some(conn: &mut Conn, shared: &Shared, scratch: &mut [u8]) -> ReadOutcome {
+    loop {
+        if conn.read_paused(shared) {
+            return ReadOutcome::Progress;
+        }
+        match conn.stream.read(scratch) {
+            Ok(0) => return ReadOutcome::Eof,
+            Ok(n) => conn.rbuf.extend_from_slice(&scratch[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                return ReadOutcome::Progress;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return ReadOutcome::Fatal,
+        }
+    }
+}
+
+/// Drive one connection as far as it can go right now: resolve ready
+/// slots, consume buffered input, flush, and retune epoll interest.
+/// Returns `false` once the connection should be closed.
+fn service(conn: &mut Conn, shard: &LoopShard, shared: &Shared, fd: i32) -> bool {
+    pump(conn, shared);
+    if !conn.closing {
+        let paused = process_input(conn, shared);
+        pump(conn, shared);
+        if conn.read_closed && !paused && !conn.closing {
+            // Input is exhausted and no more will ever arrive. A
+            // leftover tail gets the threads backend's treatment first
+            // (final unterminated v1 line is processed; a partial
+            // binary frame draws BAD_FRAME); whatever is in flight
+            // still answers, then the connection ends.
+            if conn.rbuf_unconsumed() > 0 {
+                finish_partial_input(conn, shared);
+            }
+            conn.closing = true;
+        }
+    }
+    compact_rbuf(conn);
+    if !flush(conn) {
+        return false;
+    }
+    if (conn.closing || (conn.read_closed && conn.rbuf_unconsumed() == 0))
+        && conn.slots.is_empty()
+        && conn.wbuf_pending() == 0
+    {
+        return false;
+    }
+    update_interest(conn, shard, shared, fd);
+    true
+}
+
+/// Walk the slot FIFO front-to-back, moving everything ready into
+/// `wbuf`; stops at the first pending whose worker hasn't answered.
+fn pump(conn: &mut Conn, shared: &Shared) {
+    loop {
+        let Some(front) = conn.slots.front_mut() else { break };
+        match front {
+            Slot::Bytes { len } => {
+                let len = *len;
+                conn.wbuf.extend_from_slice(&conn.dbuf[conn.dstart..conn.dstart + len]);
+                conn.dstart += len;
+                conn.slots.pop_front();
+            }
+            Slot::Pending { wire, rx } => {
+                let resp = match rx.try_recv() {
+                    Ok(resp) => Some(resp),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => None,
+                };
+                let before = conn.wbuf.len();
+                render_score_into(wire, resp, &mut conn.wbuf);
+                let counters = shared.wire(wire.class());
+                counters.bytes.fetch_add((conn.wbuf.len() - before) as u64, Ordering::Relaxed);
+                counters.served.fetch_add(1, Ordering::Relaxed);
+                conn.slots.pop_front();
+            }
+        }
+    }
+    if conn.slots.is_empty() {
+        conn.dbuf.clear();
+        conn.dstart = 0;
+    }
+}
+
+/// Outcome of trying to carve one message out of the read buffer.
+enum Parsed {
+    /// Not enough bytes yet.
+    NeedMore,
+    /// `n` bytes consumed, nothing to do (blank line).
+    Skip(usize),
+    /// `n` bytes consumed, handle `step`.
+    Msg(usize, Step),
+}
+
+/// Consume as many buffered requests as backpressure allows. Returns
+/// `true` when it stopped because the connection is paused (slots or
+/// write buffer saturated), `false` when it ran out of input.
+fn process_input(conn: &mut Conn, shared: &Shared) -> bool {
+    loop {
+        if conn.closing {
+            return false;
+        }
+        if conn.slots.len() >= shared.max_pending || conn.wbuf_pending() > WBUF_HIGH_WATER {
+            return true;
+        }
+        // Detach the read buffer so the borrowed parse (`FrameRef`
+        // slices into it) can coexist with slot/wbuf mutation. O(1).
+        let rbuf = std::mem::take(&mut conn.rbuf);
+        let input = &rbuf[conn.rstart..];
+        let parsed =
+            if conn.binary { parse_frame(input, shared) } else { parse_line(input, shared) };
+        let outcome = match parsed {
+            Parsed::NeedMore => None,
+            Parsed::Skip(n) => Some((n, None)),
+            Parsed::Msg(n, step) => Some((n, Some(step))),
+        };
+        conn.rbuf = rbuf;
+        match outcome {
+            None => return false,
+            Some((n, step)) => {
+                conn.rstart += n;
+                if let Some(step) = step {
+                    apply_step(conn, step, shared);
+                }
+            }
+        }
+    }
+}
+
+/// v1 mode: carve one `\n`-terminated JSON line.
+fn parse_line(input: &[u8], shared: &Shared) -> Parsed {
+    match input.iter().position(|&b| b == b'\n') {
+        None => {
+            // A line beyond the (generous) cap is answered with a
+            // structured error, then the connection closes — memory
+            // stays bounded and the client learns why.
+            if input.len() > input_cap(shared) {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let resp = crate::server::protocol::Response::Error {
+                    id: None,
+                    error: format!("line exceeds server cap {}", input_cap(shared)),
+                    retryable: false,
+                };
+                return Parsed::Msg(
+                    input.len(),
+                    Step::JobThenClose(Job::Bytes(
+                        resp.to_line().into_bytes(),
+                        WireClass::V1,
+                    )),
+                );
+            }
+            Parsed::NeedMore
+        }
+        Some(pos) => {
+            let consumed = pos + 1;
+            match std::str::from_utf8(&input[..pos]) {
+                // The thread backend's read_line fails the same way on
+                // invalid UTF-8: the connection ends.
+                Err(_) => Parsed::Msg(consumed, Step::Close),
+                Ok(line) => {
+                    let trimmed = line.trim();
+                    if trimmed.is_empty() {
+                        Parsed::Skip(consumed)
+                    } else {
+                        Parsed::Msg(consumed, json_step(trimmed, shared))
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Binary mode: carve one length-prefixed frame and run the shared
+/// zero-copy dispatch ([`frame_step`]) on its body in place.
+fn parse_frame(input: &[u8], shared: &Shared) -> Parsed {
+    if input.len() < 4 {
+        return Parsed::NeedMore;
+    }
+    let len = u32::from_le_bytes(input[0..4].try_into().unwrap()) as usize;
+    if len > shared.max_frame_bytes || len == 0 {
+        // Framing is lost; mirror the thread backend's read-path error
+        // (one BAD_FRAME response, then close). The rest of the buffer
+        // is garbage by definition, so consume it all.
+        shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        let detail = if len == 0 {
+            crate::server::frame::FrameError::Empty
+        } else {
+            crate::server::frame::FrameError::TooLarge { len, max: shared.max_frame_bytes }
+        };
+        let frame = crate::server::frame::Frame::Error {
+            code: crate::server::frame::ErrorCode::BadFrame,
+            retryable: false,
+            msg: detail.to_string(),
+        };
+        return Parsed::Msg(
+            input.len(),
+            Step::JobThenClose(Job::Bytes(frame.encode(), WireClass::V2Binary)),
+        );
+    }
+    if input.len() < 4 + len {
+        return Parsed::NeedMore;
+    }
+    Parsed::Msg(4 + len, frame_step(&input[4..4 + len], shared))
+}
+
+/// Consume the input tail left when the peer closed mid-message,
+/// mirroring the threads backend: `BufRead::read_line` hands its
+/// caller a final unterminated line at EOF (so the event loop processes
+/// it too), and a partial binary frame is a truncated stream answered
+/// with `BAD_FRAME` (what `Frame::read_body`'s failing `read_exact`
+/// produces over there).
+fn finish_partial_input(conn: &mut Conn, shared: &Shared) {
+    let rbuf = std::mem::take(&mut conn.rbuf);
+    if conn.binary {
+        shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        let frame = crate::server::frame::Frame::Error {
+            code: crate::server::frame::ErrorCode::BadFrame,
+            retryable: false,
+            msg: "truncated frame: connection closed mid-frame".into(),
+        };
+        apply_step(
+            conn,
+            Step::JobThenClose(Job::Bytes(frame.encode(), WireClass::V2Binary)),
+            shared,
+        );
+    } else {
+        let step = match std::str::from_utf8(&rbuf[conn.rstart..]) {
+            Ok(line) if !line.trim().is_empty() => Some(json_step(line.trim(), shared)),
+            _ => None,
+        };
+        if let Some(step) = step {
+            apply_step(conn, step, shared);
+        }
+    }
+    conn.rstart = rbuf.len();
+    conn.rbuf = rbuf;
+}
+
+/// Enqueue one reader verdict into the connection's ordered output.
+fn apply_step(conn: &mut Conn, step: Step, shared: &Shared) {
+    match step {
+        Step::Job(job) => apply_job(conn, job, shared),
+        Step::JobThenBinary(job) => {
+            apply_job(conn, job, shared);
+            conn.binary = true;
+        }
+        Step::JobThenClose(job) => {
+            apply_job(conn, job, shared);
+            conn.closing = true;
+        }
+        Step::Close => conn.closing = true,
+    }
+}
+
+fn apply_job(conn: &mut Conn, job: Job, shared: &Shared) {
+    match job {
+        Job::Bytes(bytes, class) => {
+            shared.wire(class).bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            if conn.slots.is_empty() {
+                // Nothing ahead of it: straight to the write ring.
+                conn.wbuf.extend_from_slice(&bytes);
+            } else {
+                // Park behind the outstanding pendings to keep request
+                // order; the pump releases it.
+                conn.dbuf.extend_from_slice(&bytes);
+                conn.slots.push_back(Slot::Bytes { len: bytes.len() });
+            }
+        }
+        Job::Pending { wire, rx } => conn.slots.push_back(Slot::Pending { wire, rx }),
+    }
+}
+
+/// Reclaim the consumed prefix of the read ring (capacity retained).
+fn compact_rbuf(conn: &mut Conn) {
+    if conn.rstart == conn.rbuf.len() {
+        conn.rbuf.clear();
+        conn.rstart = 0;
+    } else if conn.rstart >= RBUF_COMPACT {
+        conn.rbuf.copy_within(conn.rstart.., 0);
+        let remaining = conn.rbuf.len() - conn.rstart;
+        conn.rbuf.truncate(remaining);
+        conn.rstart = 0;
+    }
+}
+
+/// Nonblocking drain of the write ring. Returns `false` on a dead peer.
+fn flush(conn: &mut Conn) -> bool {
+    while conn.wstart < conn.wbuf.len() {
+        match conn.stream.write(&conn.wbuf[conn.wstart..]) {
+            Ok(0) => return false,
+            Ok(n) => conn.wstart += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+    if conn.wstart == conn.wbuf.len() {
+        conn.wbuf.clear();
+        conn.wstart = 0;
+    } else if conn.wstart >= WBUF_COMPACT {
+        conn.wbuf.copy_within(conn.wstart.., 0);
+        let remaining = conn.wbuf.len() - conn.wstart;
+        conn.wbuf.truncate(remaining);
+        conn.wstart = 0;
+    }
+    true
+}
+
+/// Retune epoll interest to the connection's current needs: reads
+/// while not paused, writability exactly while output is pending.
+fn update_interest(conn: &mut Conn, shard: &LoopShard, shared: &Shared, fd: i32) {
+    let mut desired = 0u32;
+    if !conn.read_paused(shared) {
+        desired |= sys::EPOLLIN | sys::EPOLLRDHUP;
+    }
+    if conn.wbuf_pending() > 0 {
+        desired |= sys::EPOLLOUT;
+    }
+    if desired != conn.interest {
+        let mut ev = sys::EpollEvent { events: desired, data: fd as u64 };
+        unsafe { sys::epoll_ctl(shard.epfd, sys::EPOLL_CTL_MOD, fd, &mut ev) };
+        conn.interest = desired;
+    }
+}
+
+/// Shutdown-path teardown: resolve every outstanding slot (blocking on
+/// the still-live workers), best-effort **bounded** write, release.
+fn drain_and_close(mut conn: Conn, shared: &Shared) {
+    while let Some(slot) = conn.slots.pop_front() {
+        match slot {
+            Slot::Bytes { len } => {
+                conn.wbuf.extend_from_slice(&conn.dbuf[conn.dstart..conn.dstart + len]);
+                conn.dstart += len;
+            }
+            Slot::Pending { wire, rx } => {
+                let resp = rx.recv().ok();
+                let before = conn.wbuf.len();
+                render_score_into(&wire, resp, &mut conn.wbuf);
+                let counters = shared.wire(wire.class());
+                counters.bytes.fetch_add((conn.wbuf.len() - before) as u64, Ordering::Relaxed);
+                counters.served.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    // Bounded flush: a peer that stopped reading (full receive window)
+    // must not be able to hang server shutdown — the write timeout
+    // errors out of `write_all`, and whatever didn't fit is abandoned
+    // with the connection. (The threads backend gets the same property
+    // from teardown_connections' socket shutdown.)
+    let _ = conn.stream.set_nonblocking(false);
+    let _ = conn.stream.set_write_timeout(Some(std::time::Duration::from_secs(2)));
+    let _ = conn.stream.write_all(&conn.wbuf[conn.wstart..]);
+    close_conn(conn, shared);
+}

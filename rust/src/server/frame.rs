@@ -11,16 +11,34 @@
 //! with all integers little-endian and floats IEEE-754 f64 LE. Ops:
 //!
 //! ```text
-//! 0x01 SCORE_SPARSE    req   gen:u32 nnz:u16 then nnz × (idx:u16 val:f64)
-//! 0x02 JSON_REQ        req   UTF-8 JSON body (any v1 request document)
-//! 0x03 SCORE_DENSE     req   model:u16 gen:u32 count:u32 then count × f64   (v3)
-//! 0x04 SCORE_SPARSE2   req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
-//! 0x05 CLASSIFY_SPARSE req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
-//! 0x81 SCORE           resp  gen:u32 evaluated:u32 score:f64
-//! 0x82 ERROR           resp  code:u8 retryable:u8 msg_len:u16 msg bytes
-//! 0x83 JSON_RESP       resp  UTF-8 JSON body (any v1 response document)
-//! 0x84 CLASS           resp  gen:u32 label:i64 votes:u32 voters:u32 evaluated:u32  (v3)
+//! 0x01 SCORE_SPARSE     req   gen:u32 nnz:u16 then nnz × (idx:u16 val:f64)
+//! 0x02 JSON_REQ         req   UTF-8 JSON body (any v1 request document)
+//! 0x03 SCORE_DENSE      req   model:u16 gen:u32 count:u32 then count × f64   (v3)
+//! 0x04 SCORE_SPARSE2    req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
+//! 0x05 CLASSIFY_SPARSE  req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
+//! 0x06 CLASSIFY_SPARSE_VERBOSE  req  same payload as 0x05; answered by 0x85  (v3)
+//! 0x81 SCORE            resp  gen:u32 evaluated:u32 score:f64
+//! 0x82 ERROR            resp  code:u8 retryable:u8 msg_len:u16 msg bytes
+//! 0x83 JSON_RESP        resp  UTF-8 JSON body (any v1 response document)
+//! 0x84 CLASS            resp  gen:u32 label:i64 votes:u32 voters:u32 evaluated:u32  (v3)
+//! 0x85 CLASS_VERBOSE    resp  CLASS fields, then count:u32 then
+//!                             count × (pos:i64 neg:i64 vote:i64 features:u32)  (v3)
 //! ```
+//!
+//! ## Zero-copy decode
+//!
+//! [`Frame::decode_body`] materializes owned vectors — the right shape
+//! for clients and tests. The server's hot path uses
+//! [`FrameRef::decode_borrowed`] instead: it parses a frame body into
+//! borrowed byte slices (`pairs`/`vals` pointing straight into the
+//! connection's read buffer), the structural screens
+//! ([`validate_pairs_u32`] and friends) walk those slices in place, and
+//! nothing is allocated until the request is actually admitted
+//! ([`pairs_to_features_u32`]). Symmetrically, [`Frame::encode_into`]
+//! and the `put_*` slice encoders serialize into a caller-supplied
+//! (reusable, pooled) buffer, so the transport's steady-state score
+//! path performs no per-request heap allocation — see
+//! `rust/tests/transport_alloc.rs` for the counting-allocator proof.
 //!
 //! `SCORE_SPARSE` is the hot path: a sparse example at MNIST density
 //! (~150 nonzeros) costs ~1.5 KB on the wire instead of ~9 KB of dense
@@ -47,6 +65,8 @@
 //! moved on. Responses carry the generation that actually served them.
 
 use std::io::Read;
+
+use crate::coordinator::service::{Features, VoterVote};
 
 /// Structured error codes carried by `ERROR` frames (`0x82`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -166,6 +186,8 @@ pub const OP_SCORE_DENSE: u8 = 0x03;
 pub const OP_SCORE_SPARSE2: u8 = 0x04;
 /// Op byte: sparse classify request (v3; model-routed all-pairs vote).
 pub const OP_CLASSIFY_SPARSE: u8 = 0x05;
+/// Op byte: sparse classify request with per-voter breakdown (v3).
+pub const OP_CLASSIFY_SPARSE_VERBOSE: u8 = 0x06;
 /// Op byte: score response.
 pub const OP_SCORE: u8 = 0x81;
 /// Op byte: error response.
@@ -174,6 +196,8 @@ pub const OP_ERROR: u8 = 0x82;
 pub const OP_JSON_RESP: u8 = 0x83;
 /// Op byte: classify response (v3).
 pub const OP_CLASS: u8 = 0x84;
+/// Op byte: classify response with per-voter breakdown (v3).
+pub const OP_CLASS_VERBOSE: u8 = 0x85;
 
 /// One decoded v2 frame (either direction).
 #[derive(Debug, Clone, PartialEq)]
@@ -224,6 +248,19 @@ pub enum Frame {
         /// Values at those coordinates.
         val: Vec<f64>,
     },
+    /// v3 sparse classify request asking for the per-voter breakdown
+    /// (`CLASS_VERBOSE` response). Same payload layout as
+    /// `ClassifySparse`.
+    ClassifySparseVerbose {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Coordinate indices (u32 on the wire), strictly increasing.
+        idx: Vec<u32>,
+        /// Values at those coordinates.
+        val: Vec<f64>,
+    },
     /// Score response: the serving generation, coordinates evaluated,
     /// and the signed margin.
     Score {
@@ -260,6 +297,24 @@ pub enum Frame {
         /// Features evaluated, summed across voters.
         evaluated: u32,
     },
+    /// Classify response with the per-voter cost breakdown: one row per
+    /// 1-vs-1 voter in pair-enumeration order, attributing vote and
+    /// features-touched to each.
+    ClassVerbose {
+        /// Generation that served the request.
+        gen: u32,
+        /// Predicted class (vote winner; ties break toward the smaller
+        /// label).
+        label: i64,
+        /// Votes the winner collected.
+        votes: u32,
+        /// Voters consulted (`C(C-1)/2`).
+        voters: u32,
+        /// Features evaluated, summed across voters.
+        evaluated: u32,
+        /// Per-voter outcome rows, in pair-enumeration order.
+        per_voter: Vec<VoterVote>,
+    },
 }
 
 impl Frame {
@@ -274,7 +329,20 @@ impl Frame {
     /// corrupt frame that would surface remotely as a fatal
     /// `BAD_FRAME` on an innocent-looking connection.
     pub fn encode(&self) -> Vec<u8> {
-        let mut body = Vec::with_capacity(16);
+        let mut out = Vec::with_capacity(32);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-supplied buffer (appended; the buffer is
+    /// *not* cleared, so one buffer can batch many frames). This is the
+    /// transport's allocation-free path: with a pooled or per-connection
+    /// buffer at steady-state capacity, encoding touches no allocator.
+    /// Panics exactly like [`Self::encode`] on unrepresentable frames.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        // Length-prefix placeholder, patched once the body is written.
+        let prefix_at = out.len();
+        out.extend_from_slice(&[0u8; 4]);
         match self {
             Frame::ScoreSparse { gen, idx, val } => {
                 assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
@@ -283,17 +351,17 @@ impl Frame {
                     "sparse frame nnz {} exceeds the u16 wire bound",
                     idx.len()
                 );
-                body.push(OP_SCORE_SPARSE);
-                body.extend_from_slice(&gen.to_le_bytes());
-                body.extend_from_slice(&(idx.len() as u16).to_le_bytes());
+                out.push(OP_SCORE_SPARSE);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u16).to_le_bytes());
                 for (&i, &v) in idx.iter().zip(val.iter()) {
-                    body.extend_from_slice(&i.to_le_bytes());
-                    body.extend_from_slice(&v.to_le_bytes());
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
                 }
             }
             Frame::JsonReq(doc) => {
-                body.push(OP_JSON_REQ);
-                body.extend_from_slice(doc.as_bytes());
+                out.push(OP_JSON_REQ);
+                out.extend_from_slice(doc.as_bytes());
             }
             Frame::ScoreDense { model, gen, val } => {
                 assert!(
@@ -301,65 +369,146 @@ impl Frame {
                     "dense frame count {} exceeds the u32 wire bound",
                     val.len()
                 );
-                body.push(OP_SCORE_DENSE);
-                body.extend_from_slice(&model.to_le_bytes());
-                body.extend_from_slice(&gen.to_le_bytes());
-                body.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                out.push(OP_SCORE_DENSE);
+                out.extend_from_slice(&model.to_le_bytes());
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&(val.len() as u32).to_le_bytes());
                 for &v in val {
-                    body.extend_from_slice(&v.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
                 }
             }
             Frame::ScoreSparse2 { model, gen, idx, val }
-            | Frame::ClassifySparse { model, gen, idx, val } => {
+            | Frame::ClassifySparse { model, gen, idx, val }
+            | Frame::ClassifySparseVerbose { model, gen, idx, val } => {
                 assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
                 assert!(
                     idx.len() <= u32::MAX as usize,
                     "sparse frame nnz {} exceeds the u32 wire bound",
                     idx.len()
                 );
-                body.push(match self {
+                out.push(match self {
                     Frame::ClassifySparse { .. } => OP_CLASSIFY_SPARSE,
+                    Frame::ClassifySparseVerbose { .. } => OP_CLASSIFY_SPARSE_VERBOSE,
                     _ => OP_SCORE_SPARSE2,
                 });
-                body.extend_from_slice(&model.to_le_bytes());
-                body.extend_from_slice(&gen.to_le_bytes());
-                body.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                out.extend_from_slice(&model.to_le_bytes());
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
                 for (&i, &v) in idx.iter().zip(val.iter()) {
-                    body.extend_from_slice(&i.to_le_bytes());
-                    body.extend_from_slice(&v.to_le_bytes());
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
                 }
             }
             Frame::Score { gen, evaluated, score } => {
-                body.push(OP_SCORE);
-                body.extend_from_slice(&gen.to_le_bytes());
-                body.extend_from_slice(&evaluated.to_le_bytes());
-                body.extend_from_slice(&score.to_le_bytes());
+                out.push(OP_SCORE);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&evaluated.to_le_bytes());
+                out.extend_from_slice(&score.to_le_bytes());
             }
             Frame::Error { code, retryable, msg } => {
-                body.push(OP_ERROR);
-                body.push(*code as u8);
-                body.push(u8::from(*retryable));
+                out.push(OP_ERROR);
+                out.push(*code as u8);
+                out.push(u8::from(*retryable));
                 let msg = &msg.as_bytes()[..msg.len().min(u16::MAX as usize)];
-                body.extend_from_slice(&(msg.len() as u16).to_le_bytes());
-                body.extend_from_slice(msg);
+                out.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+                out.extend_from_slice(msg);
             }
             Frame::JsonResp(doc) => {
-                body.push(OP_JSON_RESP);
-                body.extend_from_slice(doc.as_bytes());
+                out.push(OP_JSON_RESP);
+                out.extend_from_slice(doc.as_bytes());
             }
             Frame::Class { gen, label, votes, voters, evaluated } => {
-                body.push(OP_CLASS);
-                body.extend_from_slice(&gen.to_le_bytes());
-                body.extend_from_slice(&label.to_le_bytes());
-                body.extend_from_slice(&votes.to_le_bytes());
-                body.extend_from_slice(&voters.to_le_bytes());
-                body.extend_from_slice(&evaluated.to_le_bytes());
+                out.push(OP_CLASS);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&label.to_le_bytes());
+                out.extend_from_slice(&votes.to_le_bytes());
+                out.extend_from_slice(&voters.to_le_bytes());
+                out.extend_from_slice(&evaluated.to_le_bytes());
+            }
+            Frame::ClassVerbose { gen, label, votes, voters, evaluated, per_voter } => {
+                assert!(
+                    per_voter.len() <= u32::MAX as usize,
+                    "per-voter rows {} exceed the u32 wire bound",
+                    per_voter.len()
+                );
+                out.push(OP_CLASS_VERBOSE);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&label.to_le_bytes());
+                out.extend_from_slice(&votes.to_le_bytes());
+                out.extend_from_slice(&voters.to_le_bytes());
+                out.extend_from_slice(&evaluated.to_le_bytes());
+                out.extend_from_slice(&(per_voter.len() as u32).to_le_bytes());
+                for row in per_voter {
+                    out.extend_from_slice(&row.pos.to_le_bytes());
+                    out.extend_from_slice(&row.neg.to_le_bytes());
+                    out.extend_from_slice(&row.vote.to_le_bytes());
+                    out.extend_from_slice(&row.features.to_le_bytes());
+                }
             }
         }
-        let mut out = Vec::with_capacity(4 + body.len());
-        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-        out.extend_from_slice(&body);
-        out
+        let body_len = (out.len() - prefix_at - 4) as u32;
+        out[prefix_at..prefix_at + 4].copy_from_slice(&body_len.to_le_bytes());
+    }
+
+    /// Encode a sparse score request straight from `(idx, val)` slices
+    /// into a reusable buffer — the legacy `0x01` frame with `u16`
+    /// indices, so `idx` entries beyond `u16::MAX` (or more than 65535
+    /// pairs) are an error rather than silent truncation. The loadgen
+    /// hot loop uses this to avoid building a `Frame` (two `Vec`s) per
+    /// request.
+    pub fn put_score_sparse(
+        out: &mut Vec<u8>,
+        gen: u32,
+        idx: &[u32],
+        val: &[f64],
+    ) -> Result<(), String> {
+        assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+        if idx.len() > u16::MAX as usize || idx.iter().any(|&i| i > u16::MAX as u32) {
+            return Err("idx exceeds the u16 wire bound".into());
+        }
+        let body_len = 1 + 4 + 2 + 10 * idx.len();
+        out.extend_from_slice(&(body_len as u32).to_le_bytes());
+        out.push(OP_SCORE_SPARSE);
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&(idx.len() as u16).to_le_bytes());
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            out.extend_from_slice(&(i as u16).to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    /// Encode a v3 sparse request (`SCORE_SPARSE2`, `CLASSIFY_SPARSE`,
+    /// or `CLASSIFY_SPARSE_VERBOSE` — they share one layout) straight
+    /// from `(idx, val)` slices into a reusable buffer.
+    ///
+    /// # Panics
+    ///
+    /// On an op byte outside the shared-layout trio, or mismatched
+    /// slice lengths.
+    pub fn put_sparse_v3(
+        out: &mut Vec<u8>,
+        op: u8,
+        model: u16,
+        gen: u32,
+        idx: &[u32],
+        val: &[f64],
+    ) {
+        assert!(
+            matches!(op, OP_SCORE_SPARSE2 | OP_CLASSIFY_SPARSE | OP_CLASSIFY_SPARSE_VERBOSE),
+            "op {op:#04x} does not use the v3 sparse layout"
+        );
+        assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+        let body_len = 1 + 2 + 4 + 4 + 12 * idx.len();
+        out.extend_from_slice(&(body_len as u32).to_le_bytes());
+        out.push(op);
+        out.extend_from_slice(&model.to_le_bytes());
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
     }
 
     /// Decode one frame body (the bytes after the length prefix).
@@ -417,7 +566,7 @@ impl Frame {
                     .collect();
                 Ok(Frame::ScoreDense { model, gen, val })
             }
-            OP_SCORE_SPARSE2 | OP_CLASSIFY_SPARSE => {
+            OP_SCORE_SPARSE2 | OP_CLASSIFY_SPARSE | OP_CLASSIFY_SPARSE_VERBOSE => {
                 if payload.len() < 10 {
                     return Err(FrameError::BadLayout("sparse2 header needs 10 bytes".into()));
                 }
@@ -440,10 +589,12 @@ impl Frame {
                     idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
                     val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
                 }
-                Ok(if op == OP_CLASSIFY_SPARSE {
-                    Frame::ClassifySparse { model, gen, idx, val }
-                } else {
-                    Frame::ScoreSparse2 { model, gen, idx, val }
+                Ok(match op {
+                    OP_CLASSIFY_SPARSE => Frame::ClassifySparse { model, gen, idx, val },
+                    OP_CLASSIFY_SPARSE_VERBOSE => {
+                        Frame::ClassifySparseVerbose { model, gen, idx, val }
+                    }
+                    _ => Frame::ScoreSparse2 { model, gen, idx, val },
                 })
             }
             OP_SCORE => {
@@ -493,14 +644,56 @@ impl Frame {
                     evaluated: u32::from_le_bytes(payload[20..24].try_into().unwrap()),
                 })
             }
+            OP_CLASS_VERBOSE => {
+                if payload.len() < 28 {
+                    return Err(FrameError::BadLayout(
+                        "class-verbose header needs 28 bytes".into(),
+                    ));
+                }
+                let count = u32::from_le_bytes(payload[24..28].try_into().unwrap()) as usize;
+                let rows = &payload[28..];
+                // Divide, don't multiply: `count * 28` can wrap on
+                // 32-bit usize targets.
+                if rows.len() % 28 != 0 || rows.len() / 28 != count {
+                    return Err(FrameError::BadLayout(format!(
+                        "per-voter count {} does not match {} row bytes",
+                        count,
+                        rows.len()
+                    )));
+                }
+                let per_voter = rows
+                    .chunks_exact(28)
+                    .map(|r| VoterVote {
+                        pos: i64::from_le_bytes(r[0..8].try_into().unwrap()),
+                        neg: i64::from_le_bytes(r[8..16].try_into().unwrap()),
+                        vote: i64::from_le_bytes(r[16..24].try_into().unwrap()),
+                        features: u32::from_le_bytes(r[24..28].try_into().unwrap()),
+                    })
+                    .collect();
+                Ok(Frame::ClassVerbose {
+                    gen: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+                    label: i64::from_le_bytes(payload[4..12].try_into().unwrap()),
+                    votes: u32::from_le_bytes(payload[12..16].try_into().unwrap()),
+                    voters: u32::from_le_bytes(payload[16..20].try_into().unwrap()),
+                    evaluated: u32::from_le_bytes(payload[20..24].try_into().unwrap()),
+                    per_voter,
+                })
+            }
             other => Err(FrameError::BadOp(other)),
         }
     }
 
-    /// Read and decode one frame from a stream. `max_len` caps the body
-    /// length (a hostile or corrupt prefix must not allocate gigabytes).
+    /// Read one frame *body* (the bytes after the length prefix) into a
+    /// caller-supplied buffer, which is cleared and refilled — a loop
+    /// reading many frames through one buffer reaches a steady state
+    /// with zero allocation. `max_len` caps the body length (a hostile
+    /// or corrupt prefix must not allocate gigabytes).
     /// [`FrameError::Eof`] means the peer closed cleanly between frames.
-    pub fn read_from(reader: &mut impl Read, max_len: usize) -> Result<Frame, FrameError> {
+    pub fn read_body(
+        reader: &mut impl Read,
+        body: &mut Vec<u8>,
+        max_len: usize,
+    ) -> Result<(), FrameError> {
         let mut prefix = [0u8; 4];
         // A clean close before any prefix byte is EOF, not truncation.
         match reader.read(&mut prefix) {
@@ -521,8 +714,17 @@ impl Frame {
         if len == 0 {
             return Err(FrameError::Empty);
         }
-        let mut body = vec![0u8; len];
-        reader.read_exact(&mut body).map_err(|e| FrameError::Truncated(e.to_string()))?;
+        body.clear();
+        body.resize(len, 0);
+        reader.read_exact(body).map_err(|e| FrameError::Truncated(e.to_string()))?;
+        Ok(())
+    }
+
+    /// Read and decode one frame from a stream (see [`Self::read_body`]
+    /// for the length-cap and EOF semantics).
+    pub fn read_from(reader: &mut impl Read, max_len: usize) -> Result<Frame, FrameError> {
+        let mut body = Vec::new();
+        Frame::read_body(reader, &mut body, max_len)?;
         Frame::decode_body(&body)
     }
 
@@ -541,6 +743,227 @@ impl Frame {
             .ok_or_else(|| FrameError::Truncated(format!("body wants {len} bytes")))?;
         Ok((Frame::decode_body(body)?, 4 + len))
     }
+}
+
+/// One request frame parsed without copying its payload: sparse pairs
+/// and dense values stay as byte slices into the connection's read
+/// buffer. The server's hot path decodes with this, screens the slices
+/// in place ([`validate_pairs_u32`] etc.), and only materializes owned
+/// [`Features`] at admission time ([`pairs_to_features_u32`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FrameRef<'a> {
+    /// Legacy `0x01` sparse score: 10-byte `(idx:u16, val:f64)` pairs,
+    /// always the default shard.
+    ScoreSparse {
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Raw pair bytes, length a multiple of 10.
+        pairs: &'a [u8],
+    },
+    /// A v1 JSON request document riding inside a binary frame.
+    JsonReq(&'a str),
+    /// v3 dense score: raw f64-LE values.
+    ScoreDense {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Raw value bytes, length a multiple of 8.
+        vals: &'a [u8],
+    },
+    /// v3 sparse score: 12-byte `(idx:u32, val:f64)` pairs.
+    ScoreSparse2 {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Raw pair bytes, length a multiple of 12.
+        pairs: &'a [u8],
+    },
+    /// v3 sparse classify (same layout as `ScoreSparse2`); `verbose`
+    /// asks for the per-voter `CLASS_VERBOSE` breakdown.
+    ClassifySparse {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Raw pair bytes, length a multiple of 12.
+        pairs: &'a [u8],
+        /// Answer with the per-voter breakdown (`0x85`).
+        verbose: bool,
+    },
+    /// A response op (`0x80..`) sent by the peer — protocol abuse on
+    /// the server side; carried so the caller can report it without
+    /// paying for a full decode.
+    Response(u8),
+}
+
+impl<'a> FrameRef<'a> {
+    /// Parse one frame body without copying the payload. Layout errors
+    /// mirror [`Frame::decode_body`] exactly, so both decoders reject
+    /// the same wire bytes.
+    pub fn decode_borrowed(body: &'a [u8]) -> Result<FrameRef<'a>, FrameError> {
+        let (&op, payload) = body.split_first().ok_or(FrameError::Empty)?;
+        match op {
+            OP_SCORE_SPARSE => {
+                if payload.len() < 6 {
+                    return Err(FrameError::BadLayout("sparse header needs 6 bytes".into()));
+                }
+                let gen = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+                let nnz = u16::from_le_bytes(payload[4..6].try_into().unwrap()) as usize;
+                let pairs = &payload[6..];
+                if pairs.len() != nnz * 10 {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} declares {} pair bytes, frame carries {}",
+                        nnz,
+                        nnz * 10,
+                        pairs.len()
+                    )));
+                }
+                Ok(FrameRef::ScoreSparse { gen, pairs })
+            }
+            OP_JSON_REQ => {
+                let doc = std::str::from_utf8(payload).map_err(|_| FrameError::BadUtf8)?;
+                Ok(FrameRef::JsonReq(doc))
+            }
+            OP_SCORE_DENSE => {
+                if payload.len() < 10 {
+                    return Err(FrameError::BadLayout("dense header needs 10 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let count = u32::from_le_bytes(payload[6..10].try_into().unwrap()) as usize;
+                let vals = &payload[10..];
+                if vals.len() % 8 != 0 || vals.len() / 8 != count {
+                    return Err(FrameError::BadLayout(format!(
+                        "count {} does not match {} value bytes",
+                        count,
+                        vals.len()
+                    )));
+                }
+                Ok(FrameRef::ScoreDense { model, gen, vals })
+            }
+            OP_SCORE_SPARSE2 | OP_CLASSIFY_SPARSE | OP_CLASSIFY_SPARSE_VERBOSE => {
+                if payload.len() < 10 {
+                    return Err(FrameError::BadLayout("sparse2 header needs 10 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let nnz = u32::from_le_bytes(payload[6..10].try_into().unwrap()) as usize;
+                let pairs = &payload[10..];
+                if pairs.len() % 12 != 0 || pairs.len() / 12 != nnz {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} does not match {} pair bytes",
+                        nnz,
+                        pairs.len()
+                    )));
+                }
+                Ok(match op {
+                    OP_SCORE_SPARSE2 => FrameRef::ScoreSparse2 { model, gen, pairs },
+                    verbose_op => FrameRef::ClassifySparse {
+                        model,
+                        gen,
+                        pairs,
+                        verbose: verbose_op == OP_CLASSIFY_SPARSE_VERBOSE,
+                    },
+                })
+            }
+            OP_SCORE | OP_ERROR | OP_JSON_RESP | OP_CLASS | OP_CLASS_VERBOSE => {
+                Ok(FrameRef::Response(op))
+            }
+            other => Err(FrameError::BadOp(other)),
+        }
+    }
+
+    /// Stored coordinates in this frame's payload (dense: full length).
+    pub fn nnz(&self) -> usize {
+        match self {
+            FrameRef::ScoreSparse { pairs, .. } => pairs.len() / 10,
+            FrameRef::ScoreSparse2 { pairs, .. } | FrameRef::ClassifySparse { pairs, .. } => {
+                pairs.len() / 12
+            }
+            FrameRef::ScoreDense { vals, .. } => vals.len() / 8,
+            FrameRef::JsonReq(_) | FrameRef::Response(_) => 0,
+        }
+    }
+}
+
+/// In-place structural screen for legacy 10-byte `(idx:u16, val:f64)`
+/// pairs: strictly increasing indices, finite values. No allocation.
+/// Error strings match [`Features::validate`], so both wire paths
+/// reject with identical messages.
+pub fn validate_pairs_u16(pairs: &[u8]) -> Result<(), &'static str> {
+    let mut prev: i64 = -1;
+    for p in pairs.chunks_exact(10) {
+        let i = u16::from_le_bytes(p[0..2].try_into().unwrap()) as i64;
+        if i <= prev {
+            return Err("sparse idx must be strictly increasing");
+        }
+        prev = i;
+        if !f64::from_le_bytes(p[2..10].try_into().unwrap()).is_finite() {
+            return Err("non-finite feature value");
+        }
+    }
+    Ok(())
+}
+
+/// In-place structural screen for v3 12-byte `(idx:u32, val:f64)`
+/// pairs (see [`validate_pairs_u16`]).
+pub fn validate_pairs_u32(pairs: &[u8]) -> Result<(), &'static str> {
+    let mut prev: i64 = -1;
+    for p in pairs.chunks_exact(12) {
+        let i = u32::from_le_bytes(p[0..4].try_into().unwrap()) as i64;
+        if i <= prev {
+            return Err("sparse idx must be strictly increasing");
+        }
+        prev = i;
+        if !f64::from_le_bytes(p[4..12].try_into().unwrap()).is_finite() {
+            return Err("non-finite feature value");
+        }
+    }
+    Ok(())
+}
+
+/// In-place finiteness screen for raw f64-LE dense values.
+pub fn validate_dense_vals(vals: &[u8]) -> Result<(), &'static str> {
+    for v in vals.chunks_exact(8) {
+        if !f64::from_le_bytes(v.try_into().unwrap()).is_finite() {
+            return Err("non-finite feature value");
+        }
+    }
+    Ok(())
+}
+
+/// Materialize owned [`Features`] from validated legacy u16 pairs —
+/// the admission-time allocation, deferred past every screen.
+pub fn pairs_to_features_u16(pairs: &[u8]) -> Features {
+    let nnz = pairs.len() / 10;
+    let mut idx = Vec::with_capacity(nnz);
+    let mut val = Vec::with_capacity(nnz);
+    for p in pairs.chunks_exact(10) {
+        idx.push(u16::from_le_bytes(p[0..2].try_into().unwrap()) as u32);
+        val.push(f64::from_le_bytes(p[2..10].try_into().unwrap()));
+    }
+    Features::Sparse { idx, val }
+}
+
+/// Materialize owned [`Features`] from validated v3 u32 pairs.
+pub fn pairs_to_features_u32(pairs: &[u8]) -> Features {
+    let nnz = pairs.len() / 12;
+    let mut idx = Vec::with_capacity(nnz);
+    let mut val = Vec::with_capacity(nnz);
+    for p in pairs.chunks_exact(12) {
+        idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
+        val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
+    }
+    Features::Sparse { idx, val }
+}
+
+/// Materialize owned dense [`Features`] from raw f64-LE bytes.
+pub fn dense_to_features(vals: &[u8]) -> Features {
+    Features::Dense(
+        vals.chunks_exact(8).map(|v| f64::from_le_bytes(v.try_into().unwrap())).collect(),
+    )
 }
 
 #[cfg(test)]
@@ -739,5 +1162,243 @@ mod tests {
         assert!(!ErrorCode::BadFrame.retryable());
         assert!(!ErrorCode::UnknownModel.retryable(), "a fixed shard set never grows mid-run");
         assert!(!ErrorCode::WrongModel.retryable());
+    }
+
+    #[test]
+    fn verbose_classify_ops_round_trip() {
+        round_trip(Frame::ClassifySparseVerbose {
+            model: 2,
+            gen: 4,
+            idx: vec![5, 100_000],
+            val: vec![1.0, 2.0],
+        });
+        round_trip(Frame::ClassVerbose {
+            gen: 7,
+            label: 2,
+            votes: 2,
+            voters: 3,
+            evaluated: 120,
+            per_voter: vec![
+                VoterVote { pos: 1, neg: 2, vote: 2, features: 40 },
+                VoterVote { pos: 1, neg: 3, vote: 1, features: 50 },
+                VoterVote { pos: 2, neg: 3, vote: 2, features: 30 },
+            ],
+        });
+        round_trip(Frame::ClassVerbose {
+            gen: 1,
+            label: 0,
+            votes: 0,
+            voters: 0,
+            evaluated: 0,
+            per_voter: vec![],
+        });
+        // CLASS_VERBOSE layout: 4 (len) + 1 (op) + 24 (class fields) +
+        // 4 (count) + 28 per row.
+        let wire = Frame::ClassVerbose {
+            gen: 1,
+            label: -5,
+            votes: 1,
+            voters: 1,
+            evaluated: 9,
+            per_voter: vec![VoterVote { pos: -5, neg: 8, vote: -5, features: 9 }],
+        }
+        .encode();
+        assert_eq!(&wire[0..4], &57u32.to_le_bytes());
+        assert_eq!(wire[4], OP_CLASS_VERBOSE);
+        assert_eq!(&wire[9..17], &(-5i64).to_le_bytes());
+        assert_eq!(&wire[29..33], &1u32.to_le_bytes(), "row count");
+        assert_eq!(&wire[33..41], &(-5i64).to_le_bytes(), "row pos");
+        assert_eq!(wire.len(), 61);
+        // Row-count mismatches are layout errors.
+        let mut bad = wire[4..wire.len() - 1].to_vec();
+        bad[25..29].copy_from_slice(&3u32.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&bad), Err(FrameError::BadLayout(_))));
+    }
+
+    #[test]
+    fn borrowed_decode_matches_owned_decode() {
+        let frames = vec![
+            Frame::ScoreSparse { gen: 7, idx: vec![0, 13, 783], val: vec![0.25, -1.5, 1.0] },
+            Frame::ScoreSparse { gen: 0, idx: vec![], val: vec![] },
+            Frame::JsonReq(r#"{"op":"stats"}"#.into()),
+            Frame::ScoreDense { model: 3, gen: 2, val: vec![0.5, -1.0, 0.0] },
+            Frame::ScoreSparse2 {
+                model: 1,
+                gen: 9,
+                idx: vec![0, 70_000, 4_000_000_000],
+                val: vec![0.25, -1.5, 1.0],
+            },
+            Frame::ClassifySparse { model: 2, gen: 4, idx: vec![5, 100_000], val: vec![1.0, 2.0] },
+            Frame::ClassifySparseVerbose { model: 2, gen: 4, idx: vec![5], val: vec![1.0] },
+        ];
+        for frame in frames {
+            let wire = frame.encode();
+            let body = &wire[4..];
+            let borrowed = FrameRef::decode_borrowed(body).expect("borrowed decode");
+            // The borrowed view reconstructs the exact owned frame.
+            let rebuilt = match borrowed {
+                FrameRef::ScoreSparse { gen, pairs } => {
+                    validate_pairs_u16(pairs).unwrap();
+                    let Features::Sparse { idx, val } = pairs_to_features_u16(pairs) else {
+                        unreachable!()
+                    };
+                    assert_eq!(borrowed.nnz(), idx.len());
+                    Frame::ScoreSparse {
+                        gen,
+                        idx: idx.into_iter().map(|i| i as u16).collect(),
+                        val,
+                    }
+                }
+                FrameRef::JsonReq(doc) => Frame::JsonReq(doc.to_string()),
+                FrameRef::ScoreDense { model, gen, vals } => {
+                    validate_dense_vals(vals).unwrap();
+                    let Features::Dense(val) = dense_to_features(vals) else { unreachable!() };
+                    Frame::ScoreDense { model, gen, val }
+                }
+                FrameRef::ScoreSparse2 { model, gen, pairs } => {
+                    validate_pairs_u32(pairs).unwrap();
+                    let Features::Sparse { idx, val } = pairs_to_features_u32(pairs) else {
+                        unreachable!()
+                    };
+                    Frame::ScoreSparse2 { model, gen, idx, val }
+                }
+                FrameRef::ClassifySparse { model, gen, pairs, verbose } => {
+                    validate_pairs_u32(pairs).unwrap();
+                    let Features::Sparse { idx, val } = pairs_to_features_u32(pairs) else {
+                        unreachable!()
+                    };
+                    if verbose {
+                        Frame::ClassifySparseVerbose { model, gen, idx, val }
+                    } else {
+                        Frame::ClassifySparse { model, gen, idx, val }
+                    }
+                }
+                FrameRef::Response(op) => panic!("request decoded as response {op:#04x}"),
+            };
+            assert_eq!(rebuilt, frame);
+        }
+        // Response ops surface as Response without a payload decode.
+        let wire = Frame::Score { gen: 1, evaluated: 2, score: 3.0 }.encode();
+        assert_eq!(FrameRef::decode_borrowed(&wire[4..]), Ok(FrameRef::Response(OP_SCORE)));
+        // And both decoders agree on rejects.
+        assert!(FrameRef::decode_borrowed(&[]).is_err());
+        assert!(FrameRef::decode_borrowed(&[0x7F]).is_err());
+        let mut bad = Frame::ScoreSparse2 { model: 0, gen: 0, idx: vec![1], val: vec![1.0] }
+            .encode()[4..]
+            .to_vec();
+        bad[7..11].copy_from_slice(&9u32.to_le_bytes()); // nnz lies
+        assert!(FrameRef::decode_borrowed(&bad).is_err());
+        assert!(Frame::decode_body(&bad).is_err());
+    }
+
+    #[test]
+    fn in_place_validators_reject_structural_damage() {
+        let enc = |idx: &[u32], val: &[f64]| {
+            let mut out = Vec::new();
+            Frame::put_sparse_v3(&mut out, OP_SCORE_SPARSE2, 0, 0, idx, val);
+            out[4 + 1 + 2 + 4 + 4..].to_vec() // pair bytes only
+        };
+        assert!(validate_pairs_u32(&enc(&[1, 5, 9], &[1.0, 2.0, 3.0])).is_ok());
+        assert!(validate_pairs_u32(&enc(&[], &[])).is_ok());
+        assert_eq!(
+            validate_pairs_u32(&enc(&[5, 2], &[1.0, 1.0])),
+            Err("sparse idx must be strictly increasing")
+        );
+        assert_eq!(
+            validate_pairs_u32(&enc(&[2, 2], &[1.0, 1.0])),
+            Err("sparse idx must be strictly increasing")
+        );
+        assert_eq!(
+            validate_pairs_u32(&enc(&[1], &[f64::NAN])),
+            Err("non-finite feature value")
+        );
+        // u16 flavor.
+        let enc16 = |idx: &[u32], val: &[f64]| {
+            let mut out = Vec::new();
+            Frame::put_score_sparse(&mut out, 0, idx, val).unwrap();
+            out[4 + 1 + 4 + 2..].to_vec()
+        };
+        assert!(validate_pairs_u16(&enc16(&[1, 5], &[1.0, 2.0])).is_ok());
+        assert!(validate_pairs_u16(&enc16(&[5, 1], &[1.0, 2.0])).is_err());
+        assert!(validate_pairs_u16(&enc16(&[1], &[f64::INFINITY])).is_err());
+        // Dense finiteness.
+        let dense: Vec<u8> = [1.0f64, f64::NAN].iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert!(validate_dense_vals(&dense).is_err());
+        let dense: Vec<u8> = [1.0f64, -2.5].iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert!(validate_dense_vals(&dense).is_ok());
+    }
+
+    #[test]
+    fn slice_encoders_match_frame_encoders() {
+        let idx = vec![3u32, 17, 40];
+        let val = vec![0.5, -1.2, 2.0];
+        let mut out = Vec::new();
+        Frame::put_score_sparse(&mut out, 9, &idx, &val).unwrap();
+        let owned = Frame::ScoreSparse {
+            gen: 9,
+            idx: idx.iter().map(|&i| i as u16).collect(),
+            val: val.clone(),
+        }
+        .encode();
+        assert_eq!(out, owned);
+        // Out-of-bound index is an error, not truncation.
+        let mut scratch = Vec::new();
+        assert!(Frame::put_score_sparse(&mut scratch, 0, &[70_000], &[1.0]).is_err());
+
+        for (op, owned) in [
+            (
+                OP_SCORE_SPARSE2,
+                Frame::ScoreSparse2 { model: 5, gen: 2, idx: idx.clone(), val: val.clone() },
+            ),
+            (
+                OP_CLASSIFY_SPARSE,
+                Frame::ClassifySparse { model: 5, gen: 2, idx: idx.clone(), val: val.clone() },
+            ),
+            (
+                OP_CLASSIFY_SPARSE_VERBOSE,
+                Frame::ClassifySparseVerbose {
+                    model: 5,
+                    gen: 2,
+                    idx: idx.clone(),
+                    val: val.clone(),
+                },
+            ),
+        ] {
+            let mut out = Vec::new();
+            Frame::put_sparse_v3(&mut out, op, 5, 2, &idx, &val);
+            assert_eq!(out, owned.encode(), "op {op:#04x}");
+        }
+        // encode_into appends (batching many frames into one buffer).
+        let mut batch = Vec::new();
+        Frame::Score { gen: 1, evaluated: 2, score: 3.0 }.encode_into(&mut batch);
+        let first_len = batch.len();
+        Frame::Score { gen: 4, evaluated: 5, score: 6.0 }.encode_into(&mut batch);
+        let (a, used) = Frame::decode(&batch, MAX).unwrap();
+        assert_eq!(used, first_len);
+        assert_eq!(a, Frame::Score { gen: 1, evaluated: 2, score: 3.0 });
+        let (b, _) = Frame::decode(&batch[used..], MAX).unwrap();
+        assert_eq!(b, Frame::Score { gen: 4, evaluated: 5, score: 6.0 });
+    }
+
+    #[test]
+    fn read_body_reuses_the_buffer() {
+        let mut wire = Vec::new();
+        Frame::Score { gen: 1, evaluated: 2, score: 3.0 }.encode_into(&mut wire);
+        Frame::Score { gen: 7, evaluated: 8, score: 9.0 }.encode_into(&mut wire);
+        let mut cursor = std::io::Cursor::new(&wire[..]);
+        let mut body = Vec::new();
+        Frame::read_body(&mut cursor, &mut body, MAX).unwrap();
+        let cap = body.capacity();
+        assert_eq!(
+            Frame::decode_body(&body).unwrap(),
+            Frame::Score { gen: 1, evaluated: 2, score: 3.0 }
+        );
+        Frame::read_body(&mut cursor, &mut body, MAX).unwrap();
+        assert_eq!(body.capacity(), cap, "second same-size read must not reallocate");
+        assert_eq!(
+            Frame::decode_body(&body).unwrap(),
+            Frame::Score { gen: 7, evaluated: 8, score: 9.0 }
+        );
+        assert_eq!(Frame::read_body(&mut cursor, &mut body, MAX), Err(FrameError::Eof));
     }
 }

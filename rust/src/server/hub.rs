@@ -251,7 +251,8 @@ impl ModelHub {
                 st.kind,
             )
         };
-        if kind != accepts {
+        // Verbose classify admits wherever classify does.
+        if kind.base() != accepts {
             return Err(HubError::WrongKind { op: kind.name(), serving: serving_kind });
         }
         if pin != 0 && pin != gen {

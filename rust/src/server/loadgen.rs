@@ -18,6 +18,18 @@
 //!   merged [`LoadReport`] carries per-request features-touched counts
 //!   for exact percentile reporting plus wire byte totals for
 //!   cost-per-request comparisons (and voter totals for classify runs).
+//!   `LoadGenConfig.open_loop` flips the driver into **open-loop**
+//!   shape: a few worker threads hold `connections` sockets open
+//!   (thousands, mostly idle at any instant) and sweep one
+//!   request-response at a time across them — the scaling check for
+//!   the event-loop transport backend.
+//!
+//! The request hot path is allocation-free at steady state: digits
+//! render into reusable buffers ([`SynthDigits::render_into`]),
+//! sparsification reuses its index/value vectors, and requests encode
+//! straight from those slices ([`Frame::put_score_sparse`] /
+//! [`Frame::put_sparse_v3`] / a direct JSON writer) — so benchmark CPU
+//! measures the server and the wire, not the generator.
 //!
 //! Traffic is 784-dimensional digit imagery (the paper's MNIST shape);
 //! point it at a server that serves a 784-dim model.
@@ -127,6 +139,16 @@ impl Client {
                 voters,
                 features_evaluated: evaluated as usize,
             }),
+            Ok(Frame::ClassVerbose { label, votes, voters, evaluated, per_voter, .. }) => {
+                Ok(Response::ClassifyVerbose {
+                    id: None,
+                    label,
+                    votes,
+                    voters,
+                    features_evaluated: evaluated as usize,
+                    per_voter,
+                })
+            }
             Ok(Frame::Error { code, retryable, msg }) => Ok(Response::Error {
                 id: None,
                 error: if msg.is_empty() { code.name().to_string() } else { msg },
@@ -267,6 +289,23 @@ impl Client {
             id: None,
             model: model.map(str::to_string),
             features: features.into(),
+            verbose: false,
+        })
+    }
+
+    /// [`Self::classify`] asking for the per-voter cost breakdown
+    /// (`"verbose":true` → a response carrying one row per 1-vs-1
+    /// voter). Works on any protocol version.
+    pub fn classify_verbose(
+        &mut self,
+        model: Option<&str>,
+        features: impl Into<Features>,
+    ) -> Result<Response> {
+        self.call(&Request::Classify {
+            id: None,
+            model: model.map(str::to_string),
+            features: features.into(),
+            verbose: true,
         })
     }
 
@@ -281,6 +320,20 @@ impl Client {
     ) -> Result<Response> {
         self.require_proto(PROTO_V3, "classify_sparse")?;
         self.call_frame(Frame::ClassifySparse { model, gen, idx, val })
+    }
+
+    /// [`Self::classify_sparse`] with the per-voter breakdown: sends
+    /// `CLASSIFY_SPARSE_VERBOSE` (`0x06`), answered by `CLASS_VERBOSE`
+    /// (`0x85`). Needs a negotiated v3 connection.
+    pub fn classify_sparse_verbose(
+        &mut self,
+        model: u16,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+        gen: u32,
+    ) -> Result<Response> {
+        self.require_proto(PROTO_V3, "classify_sparse_verbose")?;
+        self.call_frame(Frame::ClassifySparseVerbose { model, gen, idx, val })
     }
 
     /// Fetch server statistics.
@@ -391,6 +444,14 @@ pub struct LoadGenConfig {
     pub digits: Vec<u8>,
     /// Base RNG seed (per-connection streams are derived from it).
     pub seed: u64,
+    /// Open-loop mode: instead of one driver thread per connection
+    /// pipelining hard, a handful of worker threads each hold a large
+    /// slice of `connections` sockets open and rotate one
+    /// request-response at a time across them. Most connections are
+    /// idle at any instant — the shape that demonstrates (and
+    /// regression-tests) the event-loop backend holding thousands of
+    /// mostly-idle sockets without shedding.
+    pub open_loop: bool,
 }
 
 impl Default for LoadGenConfig {
@@ -406,6 +467,7 @@ impl Default for LoadGenConfig {
             model: None,
             digits: vec![2, 3],
             seed: 0,
+            open_loop: false,
         }
     }
 }
@@ -578,6 +640,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
                 .into(),
         ));
     }
+    if cfg.open_loop {
+        return run_open_loop(cfg);
+    }
     let per_conn = cfg.requests / cfg.connections;
     let remainder = cfg.requests % cfg.connections;
     let reports = std::thread::scope(|scope| {
@@ -595,46 +660,352 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
     Ok(merged)
 }
 
-/// Encode one score/classify request on the configured wire
-/// (`model_id` is the resolved wire id for the binary classify mode).
-fn encode_request(cfg: &LoadGenConfig, model_id: u16, id: u64, features: Vec<f64>) -> Vec<u8> {
-    match cfg.mode {
-        ClientMode::V1Dense => Request::Score {
-            id: Some(id),
-            model: cfg.model.clone(),
-            features: Features::Dense(features),
+/// How many worker threads the open-loop driver multiplexes its
+/// sockets over — deliberately tiny, so `--connections 2000` means two
+/// thousand *sockets*, not two thousand client threads.
+const OPEN_LOOP_SHARDS: usize = 8;
+
+/// Tally one binary response frame into the report.
+fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
+    match frame {
+        Frame::Score { evaluated, .. } => {
+            report.answered += 1;
+            report.total_features += *evaluated as u64;
+            report.features.push(*evaluated);
         }
-        .to_line()
-        .into_bytes(),
-        ClientMode::V2SparseJson => Request::Score {
-            id: Some(id),
-            model: cfg.model.clone(),
-            features: Features::sparsify(&features, cfg.sparse_eps),
+        Frame::Class { evaluated, voters, .. }
+        | Frame::ClassVerbose { evaluated, voters, .. } => {
+            report.answered += 1;
+            report.total_features += *evaluated as u64;
+            report.features.push(*evaluated);
+            report.total_voters += *voters as u64;
         }
-        .to_line()
-        .into_bytes(),
-        ClientMode::V2Binary => {
-            let Features::Sparse { idx, val } = Features::sparsify(&features, cfg.sparse_eps)
-            else {
-                unreachable!("sparsify always returns the sparse variant")
+        Frame::Error { code: ErrorCode::Overloaded, .. } => report.overloaded += 1,
+        _ => report.errors += 1,
+    }
+}
+
+/// Tally one JSON response line into the report.
+fn count_json_response(report: &mut LoadReport, line: &str) {
+    match Response::parse(line.trim()) {
+        Ok(Response::Score { features_evaluated, .. }) => {
+            report.answered += 1;
+            report.total_features += features_evaluated as u64;
+            report.features.push(features_evaluated as u32);
+        }
+        Ok(
+            Response::Classify { features_evaluated, voters, .. }
+            | Response::ClassifyVerbose { features_evaluated, voters, .. },
+        ) => {
+            report.answered += 1;
+            report.total_features += features_evaluated as u64;
+            report.features.push(features_evaluated as u32);
+            report.total_voters += voters as u64;
+        }
+        Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
+        _ => report.errors += 1,
+    }
+}
+
+/// Open-loop driver: a few worker shards, each holding a contiguous
+/// slice of the `connections` sockets open and sweeping one
+/// request-response at a time across them. In-flight requests never
+/// exceed [`OPEN_LOOP_SHARDS`], so against a sane queue nothing is
+/// shed — what this measures is the server *holding* thousands of
+/// mostly-idle connections, which is exactly the event-loop backend's
+/// claim (the thread backend would need two threads per socket just to
+/// sit there).
+fn run_open_loop(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    let shards = cfg.connections.min(OPEN_LOOP_SHARDS).max(1);
+    // Connection c (globally) issues `base + (c < rem)` requests.
+    let reports = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for s in 0..shards {
+            // Contiguous connection ranges per shard.
+            let c0 = cfg.connections * s / shards;
+            let c1 = cfg.connections * (s + 1) / shards;
+            joins.push(scope.spawn(move || drive_open_loop_shard(cfg, s as u64, c0, c1)));
+        }
+        joins.into_iter().map(|j| j.join().expect("loadgen thread panicked")).collect::<Vec<_>>()
+    });
+    let mut merged = LoadReport::default();
+    for r in reports {
+        merged.merge(&r?);
+    }
+    Ok(merged)
+}
+
+/// One open-loop shard: sockets `[c0, c1)`, swept round-robin.
+fn drive_open_loop_shard(
+    cfg: &LoadGenConfig,
+    shard_id: u64,
+    c0: usize,
+    c1: usize,
+) -> Result<LoadReport> {
+    let mut report = LoadReport::default();
+    if c0 >= c1 {
+        return Ok(report);
+    }
+    let base = cfg.requests / cfg.connections;
+    let rem = cfg.requests % cfg.connections;
+    let binary = matches!(cfg.mode, ClientMode::V2Binary | ClientMode::Classify);
+
+    struct Sock {
+        stream: TcpStream,
+        reader: BufReader<CountingReader<TcpStream>>,
+        remaining: usize,
+    }
+
+    // Open (and for binary modes, negotiate) every socket up front —
+    // from here on they mostly sit idle.
+    let mut model_id = 0u16;
+    let mut socks = Vec::with_capacity(c1 - c0);
+    let mut line = String::new();
+    for c in c0..c1 {
+        let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
+        let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
+        // Small read buffer: responses are tiny and there are
+        // thousands of these.
+        let mut reader = BufReader::with_capacity(1024, CountingReader::new(read_half));
+        if binary {
+            let needed = if cfg.mode == ClientMode::Classify { PROTO_V3 } else { PROTO_V2 };
+            let hello = Request::Hello { proto: PROTO_V3 }.to_line();
+            (&stream)
+                .write_all(hello.as_bytes())
+                .map_err(|e| Error::io("<loadgen hello>", e))?;
+            report.bytes_sent += hello.len() as u64;
+            line.clear();
+            let n =
+                reader.read_line(&mut line).map_err(|e| Error::io("<loadgen hello>", e))?;
+            if n == 0 {
+                return Err(Error::format("loadgen hello", "connection closed"));
+            }
+            match Response::parse(line.trim()) {
+                Ok(Response::Hello { proto, .. }) if proto >= needed => {}
+                other => {
+                    return Err(Error::format(
+                        "loadgen hello",
+                        format!("not granted v{needed}: {other:?}"),
+                    ))
+                }
+            }
+            // Resolve the classify shard id once per shard, on the
+            // first negotiated socket.
+            if cfg.mode == ClientMode::Classify && c == c0 {
+                if let Some(name) = &cfg.model {
+                    let req =
+                        Frame::JsonReq(Request::Models.to_json().to_string_compact()).encode();
+                    (&stream).write_all(&req).map_err(|e| Error::io("<loadgen models>", e))?;
+                    report.bytes_sent += req.len() as u64;
+                    let entries = match Frame::read_from(&mut reader, CLIENT_MAX_FRAME) {
+                        Ok(Frame::JsonResp(doc)) => match Response::parse(doc.trim()) {
+                            Ok(Response::Models(entries)) => entries,
+                            other => {
+                                return Err(Error::format(
+                                    "loadgen models",
+                                    format!("unexpected reply {other:?}"),
+                                ))
+                            }
+                        },
+                        other => {
+                            return Err(Error::format(
+                                "loadgen models",
+                                format!("unexpected frame {other:?}"),
+                            ))
+                        }
+                    };
+                    model_id = entries
+                        .iter()
+                        .find(|e| &e.name == name)
+                        .ok_or_else(|| {
+                            Error::format("loadgen models", format!("no shard named {name:?}"))
+                        })?
+                        .id;
+                }
+            }
+        }
+        socks.push(Sock { stream, reader, remaining: base + usize::from(c < rem) });
+    }
+
+    let seed = cfg.seed.wrapping_add(shard_id.wrapping_mul(0xD1B5_4A32_D192_ED03));
+    let mut clean = SynthDigits::new(seed);
+    let mut noisy = SynthDigits::with_config(seed ^ 0xA5A5_A5A5, hard_render_config());
+    let mut mix = Rng64::seed_from_u64(seed ^ 0x5A5A_5A5A);
+    let mut dense = Vec::new();
+    let mut scratch = EncodeScratch::default();
+    let mut frame_body = Vec::new();
+    let mut seq = 0u64;
+
+    let t0 = Instant::now();
+    for round in 0..base + usize::from(rem > 0) {
+        for sock in socks.iter_mut() {
+            if sock.remaining <= round {
+                continue;
+            }
+            let digit = cfg.digits[seq as usize % cfg.digits.len()];
+            if mix.f64() < cfg.hard_fraction {
+                noisy.render_into(digit, &mut dense)
+            } else {
+                clean.render_into(digit, &mut dense)
             };
+            encode_request_into(cfg, model_id, seq, &dense, &mut scratch);
+            seq += 1;
+            if (&sock.stream).write_all(&scratch.out).is_err() {
+                report.errors += 1;
+                sock.remaining = 0;
+                continue;
+            }
+            report.bytes_sent += scratch.out.len() as u64;
+            report.sent += 1;
+            // One in flight per shard: read the response right away.
+            if binary {
+                match Frame::read_body(&mut sock.reader, &mut frame_body, CLIENT_MAX_FRAME)
+                    .and_then(|()| Frame::decode_body(&frame_body))
+                {
+                    Ok(frame) => count_binary_response(&mut report, &frame),
+                    Err(_) => {
+                        report.errors += 1;
+                        sock.remaining = 0;
+                    }
+                }
+            } else {
+                line.clear();
+                match sock.reader.read_line(&mut line) {
+                    Ok(n) if n > 0 => count_json_response(&mut report, &line),
+                    _ => {
+                        report.errors += 1;
+                        sock.remaining = 0;
+                    }
+                }
+            }
+        }
+    }
+    report.bytes_recv = socks.iter().map(|s| s.reader.get_ref().bytes).sum();
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// Reusable per-connection encode state: the sparsified support and
+/// the wire bytes, all recycled request to request so the load
+/// generator itself stays off the allocator (and off the benchmark's
+/// CPU profile).
+#[derive(Default)]
+struct EncodeScratch {
+    idx: Vec<u32>,
+    val: Vec<f64>,
+    out: Vec<u8>,
+}
+
+/// Append one JSON float with the same formatting contract as
+/// [`crate::util::json::Json::Num`] (integers print bare).
+fn push_json_num(out: &mut Vec<u8>, v: f64) {
+    use std::io::Write as _;
+    if v.fract() == 0.0 && v.abs() < 9.0e15 {
+        let _ = write!(out, "{}", v as i64);
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+/// Append a `"key":[numbers...]` JSON fragment from a slice.
+fn push_json_array<T: Copy + Into<f64>>(out: &mut Vec<u8>, key: &str, values: &[T]) {
+    use std::io::Write as _;
+    let _ = write!(out, "\"{key}\":[");
+    for (i, &v) in values.iter().enumerate() {
+        if i > 0 {
+            out.push(b',');
+        }
+        push_json_num(out, v.into());
+    }
+    out.push(b']');
+}
+
+/// Encode one score request as a JSON line straight from slices (the
+/// dense or sparse form depending on which slice set is given).
+fn encode_score_json_into(
+    out: &mut Vec<u8>,
+    model: Option<&str>,
+    id: u64,
+    dense: Option<&[f64]>,
+    sparse: Option<(&[u32], &[f64])>,
+) {
+    use std::io::Write as _;
+    out.extend_from_slice(b"{\"op\":\"score\",");
+    if let Some(model) = model {
+        // Shard names come from the CLI; escape the quote/backslash
+        // cases so a hostile name cannot corrupt the line.
+        let _ = write!(out, "\"model\":\"{}\",", model.replace('\\', "\\\\").replace('"', "\\\""));
+    }
+    match (dense, sparse) {
+        (Some(features), _) => push_json_array(out, "features", features),
+        (None, Some((idx, val))) => {
+            push_json_array(out, "idx", idx);
+            out.push(b',');
+            push_json_array(out, "val", val);
+        }
+        (None, None) => unreachable!("one payload form is always given"),
+    }
+    let _ = write!(out, ",\"id\":{id}}}");
+    out.push(b'\n');
+}
+
+/// Encode one score/classify request on the configured wire into the
+/// reusable scratch (`model_id` is the resolved wire id for the binary
+/// classify mode). The encoded bytes land in `scratch.out`.
+fn encode_request_into(
+    cfg: &LoadGenConfig,
+    model_id: u16,
+    id: u64,
+    features: &[f64],
+    scratch: &mut EncodeScratch,
+) {
+    scratch.out.clear();
+    match cfg.mode {
+        ClientMode::V1Dense => encode_score_json_into(
+            &mut scratch.out,
+            cfg.model.as_deref(),
+            id,
+            Some(features),
+            None,
+        ),
+        ClientMode::V2SparseJson => {
+            Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
+            encode_score_json_into(
+                &mut scratch.out,
+                cfg.model.as_deref(),
+                id,
+                None,
+                Some((&scratch.idx, &scratch.val)),
+            );
+        }
+        ClientMode::V2Binary => {
+            Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
             // Loadgen traffic is 784-dim digit imagery, far inside the
             // u16 wire bound — checked anyway so a future traffic
             // generator can't silently wrap indices.
-            let idx = idx
-                .into_iter()
-                .map(|i| u16::try_from(i).expect("loadgen payload index exceeds the u16 wire bound"))
-                .collect();
-            Frame::ScoreSparse { gen: 0, idx, val }.encode()
+            Frame::put_score_sparse(&mut scratch.out, 0, &scratch.idx, &scratch.val)
+                .expect("loadgen payload index exceeds the u16 wire bound");
         }
         ClientMode::Classify => {
-            let Features::Sparse { idx, val } = Features::sparsify(&features, cfg.sparse_eps)
-            else {
-                unreachable!("sparsify always returns the sparse variant")
-            };
-            Frame::ClassifySparse { model: model_id, gen: 0, idx, val }.encode()
+            Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
+            Frame::put_sparse_v3(
+                &mut scratch.out,
+                crate::server::frame::OP_CLASSIFY_SPARSE,
+                model_id,
+                0,
+                &scratch.idx,
+                &scratch.val,
+            );
         }
     }
+}
+
+/// One-shot form of [`encode_request_into`] (tests and tools).
+#[cfg(test)]
+fn encode_request(cfg: &LoadGenConfig, model_id: u16, id: u64, features: Vec<f64>) -> Vec<u8> {
+    let mut scratch = EncodeScratch::default();
+    encode_request_into(cfg, model_id, id, &features, &mut scratch);
+    scratch.out
 }
 
 /// One connection's worth of traffic: keep up to `pipeline` requests in
@@ -720,6 +1091,13 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     let mut noisy = SynthDigits::with_config(base ^ 0xA5A5_A5A5, hard_render_config());
     let mut mix = Rng64::seed_from_u64(base ^ 0x5A5A_5A5A);
 
+    // Reusable per-connection buffers: the send loop renders,
+    // sparsifies, and encodes with zero steady-state allocation, so
+    // client CPU measures the wire, not the generator.
+    let mut dense = Vec::new();
+    let mut scratch = EncodeScratch::default();
+    let mut frame_body = Vec::new();
+
     let t0 = Instant::now();
     let mut next = 0usize;
     let mut received = 0usize;
@@ -728,14 +1106,14 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
         let in_flight = next - received;
         if next < n && in_flight < cfg.pipeline {
             let digit = cfg.digits[next % cfg.digits.len()];
-            let features = if mix.f64() < cfg.hard_fraction {
-                noisy.render(digit)
+            if mix.f64() < cfg.hard_fraction {
+                noisy.render_into(digit, &mut dense)
             } else {
-                clean.render(digit)
+                clean.render_into(digit, &mut dense)
             };
-            let bytes = encode_request(cfg, model_id, next as u64, features);
-            writer.write_all(&bytes).map_err(|e| Error::io("<loadgen write>", e))?;
-            report.bytes_sent += bytes.len() as u64;
+            encode_request_into(cfg, model_id, next as u64, &dense, &mut scratch);
+            writer.write_all(&scratch.out).map_err(|e| Error::io("<loadgen write>", e))?;
+            report.bytes_sent += scratch.out.len() as u64;
             report.sent += 1;
             next += 1;
             if next < n && next - received < cfg.pipeline {
@@ -745,7 +1123,9 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
         }
         // Window full (or everything sent): read one response.
         if binary {
-            match Frame::read_from(&mut reader, CLIENT_MAX_FRAME) {
+            match Frame::read_body(&mut reader, &mut frame_body, CLIENT_MAX_FRAME)
+                .and_then(|()| Frame::decode_body(&frame_body))
+            {
                 Err(FrameError::Eof) => break, // server closed; report what we have
                 Err(_) => {
                     // Framing lost: nothing more on this stream is

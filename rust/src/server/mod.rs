@@ -25,12 +25,22 @@
 //!   lock-free (immutable shard table), so a reload of one shard never
 //!   stalls another. The first shard is the default, keeping v1
 //!   single-model clients working unmodified.
-//! * [`tcp`] — the front-end proper: accept loop, per-connection
-//!   reader/writer threads, route resolution before admission,
-//!   bounded-queue admission control that sheds load with an explicit
-//!   `overloaded` response, and `stats`/`models` endpoints exposing
-//!   throughput, features-touched histograms, early-exit rates, and
-//!   per-wire/per-shard splits.
+//! * [`tcp`] — the front-end proper: accept loop, route resolution
+//!   before admission, bounded-queue admission control that sheds load
+//!   with an explicit `overloaded` response, and `stats`/`models`
+//!   endpoints exposing throughput, features-touched histograms,
+//!   early-exit rates, and per-wire/per-shard splits. Two transport
+//!   backends (`ServerConfig.io_backend`): per-connection
+//!   reader/writer thread pairs (default, portable) or the epoll event
+//!   loop below.
+//! * `event_loop` (Linux) — the scaling transport: sharded epoll loops
+//!   multiplexing every connection with pooled reusable buffers, a
+//!   zero-copy decode path, and backpressure expressed as epoll
+//!   interest — thousands of mostly-idle connections on a handful of
+//!   I/O threads, with no per-request transport allocation at steady
+//!   state. See `docs/PERFORMANCE.md`.
+//! * [`bufpool`] — the bounded buffer pool behind both backends'
+//!   reusable connection/render buffers.
 //! * [`loadgen`] — a loopback load-generator client: configurable
 //!   connection count, pipelining depth, and easy/hard traffic mix, used
 //!   by `attentive bench-serve`, `benches/serve_throughput.rs`, and the
@@ -57,6 +67,9 @@
 //! server.wait();
 //! ```
 
+pub mod bufpool;
+#[cfg(target_os = "linux")]
+pub(crate) mod event_loop;
 pub mod frame;
 pub mod hub;
 pub mod loadgen;
@@ -64,7 +77,8 @@ pub mod protocol;
 pub mod registry;
 pub mod tcp;
 
-pub use frame::{ErrorCode, Frame};
+pub use bufpool::{BufPool, BufPoolStats};
+pub use frame::{ErrorCode, Frame, FrameRef};
 pub use hub::ModelHub;
 pub use loadgen::{Client, ClientMode, LoadGenConfig, LoadReport};
 pub use protocol::{ModelEntry, Request, Response, StatsReport};

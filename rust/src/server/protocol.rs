@@ -54,7 +54,7 @@
 //! can pipeline without correlating ids (ids are still echoed for
 //! clients that want them).
 
-use crate::coordinator::service::{Features, ServingModel};
+use crate::coordinator::service::{Features, ServingModel, VoterVote};
 use crate::util::json::Json;
 
 /// Protocol version 2: binary framing, single-model ops.
@@ -90,6 +90,11 @@ pub enum Request {
         model: Option<String>,
         /// The payload; each voter early-exits on it independently.
         features: Features,
+        /// Ask for the per-voter cost breakdown (`"verbose":true`): the
+        /// response carries one row per 1-vs-1 voter attributing vote
+        /// and features-touched, so clients can see where the attentive
+        /// budget went.
+        verbose: bool,
     },
     /// Fetch the server's live statistics.
     Stats,
@@ -160,8 +165,12 @@ impl Request {
                 // valid JSON, and a malformed support must never reach
                 // the margin walker.
                 features.validate().map_err(|e| format!("{op}: {e}"))?;
+                let verbose = v.get("verbose").and_then(|b| b.as_bool()).unwrap_or(false);
+                if verbose && op != "classify" {
+                    return Err("score: verbose is a classify-only flag".into());
+                }
                 Ok(if op == "classify" {
-                    Request::Classify { id, model, features }
+                    Request::Classify { id, model, features, verbose }
                 } else {
                     Request::Score { id, model, features }
                 })
@@ -187,12 +196,15 @@ impl Request {
                 ("proto", Json::Num(*proto as f64)),
             ]),
             Request::Score { id, model, features }
-            | Request::Classify { id, model, features } => {
+            | Request::Classify { id, model, features, .. } => {
                 let op = match self {
                     Request::Classify { .. } => "classify",
                     _ => "score",
                 };
                 let mut pairs = vec![("op", Json::Str(op.into()))];
+                if let Request::Classify { verbose: true, .. } = self {
+                    pairs.push(("verbose", Json::Bool(true)));
+                }
                 if let Some(model) = model {
                     pairs.push(("model", Json::Str(model.clone())));
                 }
@@ -484,6 +496,24 @@ pub enum Response {
         /// Features evaluated, summed across voters.
         features_evaluated: usize,
     },
+    /// A classified request with the per-voter cost breakdown
+    /// (`classify` with `"verbose":true`). Same vote as
+    /// [`Response::Classify`], plus one row per 1-vs-1 voter.
+    ClassifyVerbose {
+        /// Echo of the request id, if one was sent.
+        id: Option<u64>,
+        /// Predicted class (vote winner; ties break toward the smaller
+        /// label).
+        label: i64,
+        /// Votes the winner collected.
+        votes: u32,
+        /// Voters consulted.
+        voters: u32,
+        /// Features evaluated, summed across voters.
+        features_evaluated: usize,
+        /// Per-voter rows, in pair-enumeration order.
+        per_voter: Vec<VoterVote>,
+    },
     /// Live statistics.
     Stats(StatsReport),
     /// The registry's shard table.
@@ -537,6 +567,43 @@ impl Response {
                     ("votes", Json::Num(*votes as f64)),
                     ("voters", Json::Num(*voters as f64)),
                     ("features_evaluated", Json::Num(*features_evaluated as f64)),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+            Response::ClassifyVerbose {
+                id,
+                label,
+                votes,
+                voters,
+                features_evaluated,
+                per_voter,
+            } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("classify".into())),
+                    ("label", Json::Num(*label as f64)),
+                    ("votes", Json::Num(*votes as f64)),
+                    ("voters", Json::Num(*voters as f64)),
+                    ("features_evaluated", Json::Num(*features_evaluated as f64)),
+                    (
+                        "per_voter",
+                        Json::Arr(
+                            per_voter
+                                .iter()
+                                .map(|row| {
+                                    Json::obj([
+                                        ("pos", Json::Num(row.pos as f64)),
+                                        ("neg", Json::Num(row.neg as f64)),
+                                        ("vote", Json::Num(row.vote as f64)),
+                                        ("features", Json::Num(row.features as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
                 ];
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
@@ -615,16 +682,57 @@ impl Response {
                     .and_then(|x| x.as_usize())
                     .ok_or("score: missing features_evaluated")?,
             }),
-            "classify" => Ok(Response::Classify {
-                id: v.get("id").and_then(|x| x.as_u64()),
-                label: v.get("label").and_then(|x| x.as_i64()).ok_or("classify: missing label")?,
-                votes: v.get("votes").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
-                voters: v.get("voters").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
-                features_evaluated: v
+            "classify" => {
+                let id = v.get("id").and_then(|x| x.as_u64());
+                let label =
+                    v.get("label").and_then(|x| x.as_i64()).ok_or("classify: missing label")?;
+                let votes = v.get("votes").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                let voters = v.get("voters").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
+                let features_evaluated = v
                     .get("features_evaluated")
                     .and_then(|x| x.as_usize())
-                    .ok_or("classify: missing features_evaluated")?,
-            }),
+                    .ok_or("classify: missing features_evaluated")?;
+                match v.get("per_voter").and_then(|a| a.as_arr()) {
+                    None => Ok(Response::Classify {
+                        id,
+                        label,
+                        votes,
+                        voters,
+                        features_evaluated,
+                    }),
+                    Some(rows) => Ok(Response::ClassifyVerbose {
+                        id,
+                        label,
+                        votes,
+                        voters,
+                        features_evaluated,
+                        per_voter: rows
+                            .iter()
+                            .map(|row| {
+                                Ok(VoterVote {
+                                    pos: row
+                                        .get("pos")
+                                        .and_then(|x| x.as_i64())
+                                        .ok_or("per_voter: missing pos")?,
+                                    neg: row
+                                        .get("neg")
+                                        .and_then(|x| x.as_i64())
+                                        .ok_or("per_voter: missing neg")?,
+                                    vote: row
+                                        .get("vote")
+                                        .and_then(|x| x.as_i64())
+                                        .ok_or("per_voter: missing vote")?,
+                                    features: row
+                                        .get("features")
+                                        .and_then(|x| x.as_u64())
+                                        .unwrap_or(0)
+                                        as u32,
+                                })
+                            })
+                            .collect::<Result<_, String>>()?,
+                    }),
+                }
+            }
             "stats" => Ok(Response::Stats(StatsReport::from_json(&v))),
             "models" => Ok(Response::Models(
                 v.get("models")
@@ -696,12 +804,21 @@ mod tests {
             id: Some(3),
             model: Some("digits".into()),
             features: Features::Sparse { idx: vec![5, 9], val: vec![1.0, -1.0] },
+            verbose: false,
         };
-        match Request::parse(&req.to_line()).unwrap() {
-            Request::Classify { id, model, features: Features::Sparse { idx, .. } } => {
+        let line = req.to_line();
+        assert!(!line.contains("verbose"), "non-verbose requests omit the flag");
+        match Request::parse(&line).unwrap() {
+            Request::Classify {
+                id,
+                model,
+                features: Features::Sparse { idx, .. },
+                verbose,
+            } => {
                 assert_eq!(id, Some(3));
                 assert_eq!(model.as_deref(), Some("digits"));
                 assert_eq!(idx, vec![5, 9]);
+                assert!(!verbose);
             }
             other => panic!("wrong variant {other:?}"),
         }
@@ -711,6 +828,55 @@ mod tests {
             Request::parse(r#"{"op":"classify","idx":[5,2],"val":[1.0,2.0]}"#).is_err(),
             "unsorted idx"
         );
+    }
+
+    #[test]
+    fn verbose_classify_round_trips() {
+        // Request: the flag survives the round trip.
+        let req = Request::Classify {
+            id: None,
+            model: Some("digits".into()),
+            features: Features::Sparse { idx: vec![5], val: vec![1.0] },
+            verbose: true,
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"verbose\":true"));
+        match Request::parse(&line).unwrap() {
+            Request::Classify { verbose, .. } => assert!(verbose),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Verbose on a score is a parse error, not a silent drop.
+        assert!(Request::parse(r#"{"op":"score","verbose":true,"features":[1.0]}"#).is_err());
+        // Response: breakdown rows round-trip through the JSON form.
+        let resp = Response::ClassifyVerbose {
+            id: Some(4),
+            label: 2,
+            votes: 2,
+            voters: 3,
+            features_evaluated: 120,
+            per_voter: vec![
+                VoterVote { pos: 1, neg: 2, vote: 2, features: 40 },
+                VoterVote { pos: 1, neg: 3, vote: 1, features: 50 },
+                VoterVote { pos: 2, neg: 3, vote: 2, features: 30 },
+            ],
+        };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::ClassifyVerbose { id, label, features_evaluated, per_voter, .. } => {
+                assert_eq!(id, Some(4));
+                assert_eq!(label, 2);
+                assert_eq!(features_evaluated, 120);
+                assert_eq!(per_voter.len(), 3);
+                assert_eq!(per_voter[1], VoterVote { pos: 1, neg: 3, vote: 1, features: 50 });
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // A plain classify response still parses as the lean variant.
+        let lean =
+            Response::Classify { id: None, label: 1, votes: 2, voters: 3, features_evaluated: 9 };
+        assert!(matches!(
+            Response::parse(lean.to_line().trim()).unwrap(),
+            Response::Classify { .. }
+        ));
     }
 
     #[test]

@@ -50,12 +50,15 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::config::ServerConfig;
+use crate::config::{IoBackend, ServerConfig};
 use crate::coordinator::service::{
     Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
 };
 use crate::error::{Error, Result};
-use crate::server::frame::{ErrorCode, Frame, FrameError};
+use crate::server::bufpool::BufPool;
+use crate::server::frame::{
+    self, ErrorCode, Frame, FrameError, FrameRef,
+};
 use crate::server::hub::{HubError, ModelHub};
 use crate::server::protocol::{
     ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V3,
@@ -65,7 +68,7 @@ use crate::server::registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
 /// Which wire class a response is rendered on — the key of the
 /// per-protocol stats split.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum WireClass {
+pub(crate) enum WireClass {
     /// v1 JSON line.
     V1,
     /// JSON document inside a v2+ envelope frame.
@@ -76,9 +79,9 @@ enum WireClass {
 
 /// Served/bytes counters for one wire class.
 #[derive(Default)]
-struct WireCounters {
-    served: AtomicU64,
-    bytes: AtomicU64,
+pub(crate) struct WireCounters {
+    pub(crate) served: AtomicU64,
+    pub(crate) bytes: AtomicU64,
 }
 
 impl WireCounters {
@@ -90,31 +93,51 @@ impl WireCounters {
     }
 }
 
-/// Server-wide shared state.
-struct Shared {
-    registry: ModelRegistry,
-    shutting_down: AtomicBool,
-    accepted: AtomicU64,
-    overloaded: AtomicU64,
-    protocol_errors: AtomicU64,
+/// Server-wide shared state (shared by both transport backends; the
+/// thread-backend-only fields are simply idle under the event loop).
+pub(crate) struct Shared {
+    pub(crate) registry: ModelRegistry,
+    pub(crate) shutting_down: AtomicBool,
+    pub(crate) accepted: AtomicU64,
+    pub(crate) overloaded: AtomicU64,
+    pub(crate) protocol_errors: AtomicU64,
     started: Instant,
     /// Stream clones used to unblock connection readers at shutdown,
     /// keyed by connection id; entries are removed when the connection
-    /// closes so long-lived servers don't leak fds.
+    /// closes so long-lived servers don't leak fds. (Thread backend
+    /// only — the event loop owns its connections outright.)
     conns: Mutex<HashMap<u64, TcpStream>>,
     next_conn_id: AtomicU64,
     conn_joins: Mutex<Vec<JoinHandle<()>>>,
-    max_pending: usize,
-    max_frame_bytes: usize,
-    max_nnz: usize,
+    pub(crate) max_pending: usize,
+    pub(crate) max_frame_bytes: usize,
+    pub(crate) max_nnz: usize,
+    /// Concurrent-connection admission cap (both backends).
+    pub(crate) max_conns: usize,
+    /// Live connections right now (for the `max_conns` screen).
+    pub(crate) live_conns: AtomicU64,
     /// Per-wire-class served/bytes (indexed v1, v2-json, v2-binary).
     wire: [WireCounters; 3],
+    /// Recycled transport buffers (connection read/write/deferred
+    /// buffers in the event loop, response scratch in the writer
+    /// threads).
+    pub(crate) pool: BufPool,
 }
 
 impl Shared {
-    fn wire(&self, class: WireClass) -> &WireCounters {
+    pub(crate) fn wire(&self, class: WireClass) -> &WireCounters {
         &self.wire[class as usize]
     }
+}
+
+/// Join handles of whichever transport backend is running.
+enum BackendHandles {
+    /// Thread-per-connection backend: the accept loop's handle
+    /// (connection threads are tracked in [`Shared::conn_joins`]).
+    Threads(JoinHandle<()>),
+    /// Sharded epoll event loop (Linux only).
+    #[cfg(target_os = "linux")]
+    Event(crate::server::event_loop::EventBackend),
 }
 
 /// A running TCP serving front-end.
@@ -124,7 +147,7 @@ impl Shared {
 pub struct TcpServer {
     shared: Arc<Shared>,
     local_addr: SocketAddr,
-    accept_join: Option<JoinHandle<()>>,
+    backend: Option<BackendHandles>,
 }
 
 impl TcpServer {
@@ -161,11 +184,23 @@ impl TcpServer {
             max_pending: cfg.max_pending_per_conn,
             max_frame_bytes: cfg.max_frame_bytes,
             max_nnz: cfg.max_nnz,
+            max_conns: cfg.max_conns,
+            live_conns: AtomicU64::new(0),
             wire: Default::default(),
+            pool: BufPool::serving_default(),
         });
-        let accept_shared = shared.clone();
-        let accept_join = std::thread::spawn(move || accept_loop(listener, accept_shared));
-        Ok(TcpServer { shared, local_addr, accept_join: Some(accept_join) })
+        let backend = match cfg.io_backend {
+            IoBackend::Threads => {
+                let accept_shared = shared.clone();
+                BackendHandles::Threads(std::thread::spawn(move || {
+                    accept_loop(listener, accept_shared)
+                }))
+            }
+            IoBackend::EventLoop => {
+                spawn_event_backend(listener, shared.clone(), cfg.event_threads)?
+            }
+        };
+        Ok(TcpServer { shared, local_addr, backend: Some(backend) })
     }
 
     /// The bound address (resolves port 0 to the ephemeral port).
@@ -208,10 +243,19 @@ impl TcpServer {
     /// [`Self::shutdown`] instead of `wait` when you need a programmatic
     /// stop). Cleans up if the loop ever does exit.
     pub fn wait(mut self) {
-        if let Some(join) = self.accept_join.take() {
-            let _ = join.join();
+        match self.backend.take() {
+            Some(BackendHandles::Threads(join)) => {
+                let _ = join.join();
+                self.teardown_connections();
+            }
+            #[cfg(target_os = "linux")]
+            Some(BackendHandles::Event(backend)) => {
+                // The loops only exit once the flag is raised, which the
+                // accept loop's failure path also sets.
+                backend.join();
+            }
+            None => {}
         }
-        self.teardown_connections();
         self.shared.registry.shutdown();
     }
 
@@ -223,14 +267,20 @@ impl TcpServer {
     }
 
     fn shutdown_impl(&mut self) {
-        let Some(accept_join) = self.accept_join.take() else {
+        let Some(backend) = self.backend.take() else {
             return; // already shut down
         };
         self.shared.shutting_down.store(true, Ordering::SeqCst);
         // Wake the blocking accept() so it observes the flag.
         let _ = TcpStream::connect(self.local_addr);
-        let _ = accept_join.join();
-        self.teardown_connections();
+        match backend {
+            BackendHandles::Threads(accept_join) => {
+                let _ = accept_join.join();
+                self.teardown_connections();
+            }
+            #[cfg(target_os = "linux")]
+            BackendHandles::Event(backend) => backend.join(),
+        }
         self.shared.registry.shutdown();
     }
 
@@ -253,13 +303,46 @@ impl Drop for TcpServer {
     }
 }
 
+/// Start the epoll backend (Linux). `ServerConfig::validate` already
+/// rejects the event loop elsewhere; the stub keeps non-Linux builds
+/// honest if a caller skips validation.
+#[cfg(target_os = "linux")]
+fn spawn_event_backend(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    event_threads: usize,
+) -> Result<BackendHandles> {
+    Ok(BackendHandles::Event(crate::server::event_loop::spawn(
+        listener,
+        shared,
+        event_threads,
+    )?))
+}
+
+#[cfg(not(target_os = "linux"))]
+fn spawn_event_backend(
+    _listener: TcpListener,
+    _shared: Arc<Shared>,
+    _event_threads: usize,
+) -> Result<BackendHandles> {
+    Err(Error::Config("io_backend event-loop needs epoll (Linux); use threads here".into()))
+}
+
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
     for stream in listener.incoming() {
         if shared.shutting_down.load(Ordering::SeqCst) {
             break;
         }
         let Ok(stream) = stream else { continue };
+        // Admission cap: accept-and-close instead of letting the kernel
+        // backlog fill silently — the refused peer sees an immediate
+        // EOF it can back off on.
+        if shared.live_conns.load(Ordering::Relaxed) >= shared.max_conns as u64 {
+            drop(stream);
+            continue;
+        }
         shared.accepted.fetch_add(1, Ordering::Relaxed);
+        shared.live_conns.fetch_add(1, Ordering::Relaxed);
         let conn_id = shared.next_conn_id.fetch_add(1, Ordering::Relaxed);
         if let Ok(clone) = stream.try_clone() {
             shared.conns.lock().unwrap().insert(conn_id, clone);
@@ -270,6 +353,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             // Release this connection's shutdown clone (fd) as soon as
             // the connection ends, not at server teardown.
             conn_shared.conns.lock().unwrap().remove(&conn_id);
+            conn_shared.live_conns.fetch_sub(1, Ordering::Relaxed);
         });
         let mut joins = shared.conn_joins.lock().unwrap();
         // Reap handles of connections that already finished so a
@@ -282,7 +366,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 /// How a pending score/classify response must be rendered — decided at
 /// admission time, so the writer needs no codec state of its own and
 /// the v1→v2 switch stays consistent across the in-order job stream.
-enum Wire {
+pub(crate) enum Wire {
     /// v1 JSON line, echoing the optional request id.
     V1 { id: Option<u64> },
     /// v2+ binary `SCORE`/`CLASS`/`ERROR` frame, stamped with the
@@ -295,7 +379,7 @@ enum Wire {
 }
 
 impl Wire {
-    fn class(&self) -> WireClass {
+    pub(crate) fn class(&self) -> WireClass {
         match self {
             Wire::V1 { .. } => WireClass::V1,
             Wire::V2Json { .. } => WireClass::V2Json,
@@ -305,7 +389,7 @@ impl Wire {
 }
 
 /// What the reader hands the writer, in request order.
-enum Job {
+pub(crate) enum Job {
     /// Fully-encoded response bytes (a JSON line or a binary frame),
     /// tagged with the wire class for the byte counters.
     Bytes(Vec<u8>, WireClass),
@@ -315,7 +399,7 @@ enum Job {
 }
 
 /// Reader-side verdict for one decoded request.
-enum Step {
+pub(crate) enum Step {
     /// Enqueue this job and keep reading.
     Job(Job),
     /// Enqueue, then switch the connection to binary framing.
@@ -335,9 +419,29 @@ fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
 
     let mut binary = false;
     let mut line = String::new();
+    // One body buffer for the whole connection: at steady state the
+    // binary read path touches no allocator.
+    let mut body = shared.pool.get();
     loop {
         let step = if binary {
-            read_binary_step(&mut reader, shared)
+            match Frame::read_body(&mut reader, &mut body, shared.max_frame_bytes) {
+                Ok(()) => frame_step(&body, shared),
+                Err(FrameError::Eof) => Step::Close,
+                Err(e) => {
+                    // Framing is lost — a byte stream cannot resync
+                    // after a bad prefix. Report once, then close.
+                    shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    Step::JobThenClose(Job::Bytes(
+                        Frame::Error {
+                            code: ErrorCode::BadFrame,
+                            retryable: false,
+                            msg: e.to_string(),
+                        }
+                        .encode(),
+                        WireClass::V2Binary,
+                    ))
+                }
+            }
         } else {
             line.clear();
             match reader.read_line(&mut line) {
@@ -370,12 +474,13 @@ fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
             Step::Close => break,
         }
     }
+    shared.pool.put(body);
     drop(jtx); // writer drains the remaining jobs, then exits
     let _ = writer.join();
 }
 
 /// Handle one v1 JSON line.
-fn json_step(line: &str, shared: &Shared) -> Step {
+pub(crate) fn json_step(line: &str, shared: &Shared) -> Step {
     match Request::parse(line) {
         Err(e) => {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
@@ -407,7 +512,7 @@ fn json_step(line: &str, shared: &Shared) -> Step {
 /// Handle a JSON-op request arriving either as a bare v1 line
 /// (`enveloped = false`) or inside a v2 `JSON_REQ` frame (`true`); the
 /// response rides the matching vehicle.
-fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
+pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
     let class = if enveloped { WireClass::V2Json } else { WireClass::V1 };
     let render = |resp: Response| -> Job {
         if enveloped {
@@ -443,8 +548,10 @@ fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
         Request::Score { .. } | Request::Classify { .. } => {
             let (id, model, features, kind) = match req {
                 Request::Score { id, model, features } => (id, model, features, ReqKind::Score),
-                Request::Classify { id, model, features } => {
-                    (id, model, features, ReqKind::Classify)
+                Request::Classify { id, model, features, verbose } => {
+                    let kind =
+                        if verbose { ReqKind::ClassifyVerbose } else { ReqKind::Classify };
+                    (id, model, features, kind)
                 }
                 _ => unreachable!("outer arm admits only score/classify"),
             };
@@ -508,14 +615,18 @@ fn json_request_step(req: Request, shared: &Shared, enveloped: bool) -> Step {
     }
 }
 
-/// Read and handle one v2/v3 binary frame.
-fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step {
-    let frame = match Frame::read_from(reader, shared.max_frame_bytes) {
+/// Handle one v2/v3 binary frame *body*, decoded zero-copy: sparse
+/// payloads are screened (nnz cap, sorted support, finiteness) as raw
+/// byte slices, and owned [`Features`] are only materialized for
+/// requests that are actually going to be admitted. Shared by both
+/// transport backends, so the wire semantics cannot drift between
+/// them.
+pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
+    let frame = match FrameRef::decode_borrowed(body) {
         Ok(frame) => frame,
-        Err(FrameError::Eof) => return Step::Close,
         Err(e) => {
             // Framing is lost — a byte stream cannot resync after a bad
-            // prefix. Report once, then close.
+            // layout. Report once, then close.
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
             return Step::JobThenClose(Job::Bytes(
                 Frame::Error {
@@ -534,31 +645,34 @@ fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step 
             WireClass::V2Binary,
         ))
     };
-    // Route, validate, and admit one native score/classify payload: the
-    // shared tail of every binary frame op. The pin check, admission,
-    // and generation stamp all happen under one hub critical section:
-    // the stamped generation is the one whose workers answer, even
-    // across a racing reload.
-    let admit = |model: u16, gen: u32, features: Features, kind: ReqKind| -> Step {
-        // The nnz knob caps sparse supports; dense payloads are bounded
-        // by the frame-length cap alone (enforced at `read_from`), like
-        // dense JSON payloads are bounded by line length.
-        if matches!(features, Features::Sparse { .. }) && features.nnz() > shared.max_nnz {
+    // In-place structural screen for a sparse payload: the nnz knob
+    // caps per-request compute, then sortedness/finiteness are checked
+    // against the raw pair bytes — nothing allocated for a rejected
+    // request. `Ok(())` clears the payload for admission.
+    let screen = |nnz: usize, check: Result<(), &'static str>| -> Result<(), Step> {
+        if nnz > shared.max_nnz {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
-            return err(
+            return Err(err(
                 ErrorCode::BadRequest,
-                format!("nnz {} exceeds server cap {}", features.nnz(), shared.max_nnz),
-            );
+                format!("nnz {nnz} exceeds server cap {}", shared.max_nnz),
+            ));
         }
-        if let Err(e) = features.validate() {
+        if let Err(e) = check {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
             let code = if e.contains("non-finite") {
                 ErrorCode::NonFinite
             } else {
                 ErrorCode::BadRequest
             };
-            return err(code, e);
+            return Err(err(code, e.to_string()));
         }
+        Ok(())
+    };
+    // Route and admit one screened payload. The pin check, admission,
+    // and generation stamp all happen under one hub critical section:
+    // the stamped generation is the one whose workers answer, even
+    // across a racing reload.
+    let admit = |model: u16, gen: u32, features: Features, kind: ReqKind| -> Step {
         // Route resolution is lock-free and happens before admission: a
         // reload of another shard can never delay this request.
         let hub = match shared.registry.resolve_id(model) {
@@ -582,7 +696,7 @@ fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step 
         }
     };
     match frame {
-        Frame::JsonReq(doc) => match Request::parse(doc.trim()) {
+        FrameRef::JsonReq(doc) => match Request::parse(doc.trim()) {
             Err(e) => {
                 shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 err(ErrorCode::BadRequest, e)
@@ -590,22 +704,41 @@ fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step 
             Ok(req) => json_request_step(req, shared, /* enveloped= */ true),
         },
         // Legacy v2 sparse score: u16 indices, always the default shard.
-        Frame::ScoreSparse { gen, idx, val } => {
-            let features =
-                Features::Sparse { idx: idx.into_iter().map(u32::from).collect(), val };
-            admit(0, gen, features, ReqKind::Score)
+        FrameRef::ScoreSparse { gen, pairs } => {
+            match screen(pairs.len() / 10, frame::validate_pairs_u16(pairs)) {
+                Err(step) => step,
+                Ok(()) => admit(0, gen, frame::pairs_to_features_u16(pairs), ReqKind::Score),
+            }
         }
-        Frame::ScoreDense { model, gen, val } => {
-            admit(model, gen, Features::Dense(val), ReqKind::Score)
+        // The nnz knob caps sparse supports; dense payloads are bounded
+        // by the frame-length cap alone (enforced at read time), like
+        // dense JSON payloads are bounded by line length.
+        FrameRef::ScoreDense { model, gen, vals } => {
+            match screen(0, frame::validate_dense_vals(vals)) {
+                Err(step) => step,
+                Ok(()) => admit(model, gen, frame::dense_to_features(vals), ReqKind::Score),
+            }
         }
-        Frame::ScoreSparse2 { model, gen, idx, val } => {
-            admit(model, gen, Features::Sparse { idx, val }, ReqKind::Score)
+        FrameRef::ScoreSparse2 { model, gen, pairs } => {
+            match screen(pairs.len() / 12, frame::validate_pairs_u32(pairs)) {
+                Err(step) => step,
+                Ok(()) => {
+                    admit(model, gen, frame::pairs_to_features_u32(pairs), ReqKind::Score)
+                }
+            }
         }
-        Frame::ClassifySparse { model, gen, idx, val } => {
-            admit(model, gen, Features::Sparse { idx, val }, ReqKind::Classify)
+        FrameRef::ClassifySparse { model, gen, pairs, verbose } => {
+            match screen(pairs.len() / 12, frame::validate_pairs_u32(pairs)) {
+                Err(step) => step,
+                Ok(()) => {
+                    let kind =
+                        if verbose { ReqKind::ClassifyVerbose } else { ReqKind::Classify };
+                    admit(model, gen, frame::pairs_to_features_u32(pairs), kind)
+                }
+            }
         }
         // Response ops arriving from a client are protocol abuse.
-        Frame::Score { .. } | Frame::Error { .. } | Frame::JsonResp(_) | Frame::Class { .. } => {
+        FrameRef::Response(_) => {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
             err(ErrorCode::BadRequest, "response op sent by client".into())
         }
@@ -614,6 +747,10 @@ fn read_binary_step(reader: &mut BufReader<TcpStream>, shared: &Shared) -> Step 
 
 fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
     let mut out = BufWriter::new(stream);
+    // One pooled render buffer for the connection's whole lifetime:
+    // pending responses serialize into recycled memory, never a fresh
+    // per-response Vec.
+    let mut scratch = shared.pool.get();
     'outer: loop {
         let Ok(mut job) = jrx.recv() else { break };
         // Drain queued jobs before flushing, so a burst costs one syscall
@@ -621,8 +758,12 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
         // responses hostage to a computation that isn't done yet: flush
         // before blocking on an unready pending receiver.
         loop {
-            let (bytes, class, scored) = match job {
-                Job::Bytes(bytes, class) => (bytes, class, false),
+            scratch.clear();
+            let (class, scored): (WireClass, bool) = match job {
+                Job::Bytes(bytes, class) => {
+                    scratch.extend_from_slice(&bytes);
+                    (class, false)
+                }
                 Job::Pending { wire, rx } => {
                     let resp = match rx.try_recv() {
                         Ok(resp) => Some(resp),
@@ -634,17 +775,18 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
                         }
                         Err(TryRecvError::Disconnected) => None,
                     };
-                    (render_score(&wire, resp), wire.class(), true)
+                    render_score_into(&wire, resp, &mut scratch);
+                    (wire.class(), true)
                 }
             };
             // Per-wire-class counters: bytes for every response, served
             // for score/classify outcomes (the migration signal).
             let counters = shared.wire(class);
-            counters.bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            counters.bytes.fetch_add(scratch.len() as u64, Ordering::Relaxed);
             if scored {
                 counters.served.fetch_add(1, Ordering::Relaxed);
             }
-            if out.write_all(&bytes).is_err() {
+            if out.write_all(&scratch).is_err() {
                 break 'outer;
             }
             match jrx.try_recv() {
@@ -657,12 +799,15 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
         }
     }
     let _ = out.flush();
+    shared.pool.put(scratch);
 }
 
-/// Render an admitted request's outcome on its negotiated wire (`None`
-/// = the worker generation died before answering, which a drained
-/// shutdown should never produce).
-fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
+/// Render an admitted request's outcome on its negotiated wire into a
+/// caller-supplied buffer (appended — `None` = the worker generation
+/// died before answering, which a drained shutdown should never
+/// produce). On the binary wire this is allocation-free: score/classify
+/// frames serialize straight into the reusable buffer.
+pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &mut Vec<u8>) {
     // Classify once; the codes map onto the v1 error strings.
     let outcome: std::result::Result<ScoreResponse, (ErrorCode, bool, &'static str)> = match resp
     {
@@ -686,15 +831,23 @@ fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
     match wire {
         Wire::V1 { id } | Wire::V2Json { id } => {
             let resp = match outcome {
-                Ok(r) => match r.classify {
-                    Some(ci) => Response::Classify {
+                Ok(r) => match (r.classify, r.per_voter) {
+                    (Some(ci), Some(per_voter)) => Response::ClassifyVerbose {
+                        id: *id,
+                        label: ci.label,
+                        votes: ci.votes,
+                        voters: ci.voters,
+                        features_evaluated: r.features_evaluated,
+                        per_voter,
+                    },
+                    (Some(ci), None) => Response::Classify {
                         id: *id,
                         label: ci.label,
                         votes: ci.votes,
                         voters: ci.voters,
                         features_evaluated: r.features_evaluated,
                     },
-                    None => Response::Score {
+                    (None, _) => Response::Score {
                         id: *id,
                         score: r.score,
                         features_evaluated: r.features_evaluated,
@@ -706,30 +859,39 @@ fn render_score(wire: &Wire, resp: Option<ScoreResponse>) -> Vec<u8> {
             };
             match wire {
                 Wire::V2Json { .. } => {
-                    Frame::JsonResp(resp.to_json().to_string_compact()).encode()
+                    Frame::JsonResp(resp.to_json().to_string_compact()).encode_into(out)
                 }
-                _ => resp.to_line().into_bytes(),
+                _ => out.extend_from_slice(resp.to_line().as_bytes()),
             }
         }
         Wire::V2Binary { gen } => match outcome {
-            Ok(r) => match r.classify {
-                Some(ci) => Frame::Class {
+            Ok(r) => match (r.classify, r.per_voter) {
+                (Some(ci), Some(per_voter)) => Frame::ClassVerbose {
+                    gen: *gen,
+                    label: ci.label,
+                    votes: ci.votes,
+                    voters: ci.voters,
+                    evaluated: r.features_evaluated as u32,
+                    per_voter,
+                }
+                .encode_into(out),
+                (Some(ci), None) => Frame::Class {
                     gen: *gen,
                     label: ci.label,
                     votes: ci.votes,
                     voters: ci.voters,
                     evaluated: r.features_evaluated as u32,
                 }
-                .encode(),
-                None => Frame::Score {
+                .encode_into(out),
+                (None, _) => Frame::Score {
                     gen: *gen,
                     evaluated: r.features_evaluated as u32,
                     score: r.score,
                 }
-                .encode(),
+                .encode_into(out),
             },
             Err((code, retryable, msg)) => {
-                Frame::Error { code, retryable, msg: msg.into() }.encode()
+                Frame::Error { code, retryable, msg: msg.into() }.encode_into(out)
             }
         },
     }
@@ -827,6 +989,88 @@ mod tests {
         let server = TcpServer::serve(&ephemeral_cfg(), snapshot(8)).unwrap();
         assert_eq!(server.reload(snapshot(16)).unwrap(), 16);
         assert_eq!(server.stats().reloads, 1);
+        server.shutdown();
+    }
+
+    /// The event backend speaks the identical wire protocol: negotiate,
+    /// sparse frames, control ops, hot reload, clean shutdown.
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn event_loop_backend_serves_the_same_wire() {
+        use crate::config::IoBackend;
+        use crate::server::loadgen::Client;
+        use crate::server::protocol::Response;
+        let cfg = ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            io_backend: IoBackend::EventLoop,
+            event_threads: 2,
+            ..Default::default()
+        };
+        let server = TcpServer::serve(&cfg, snapshot(16)).unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        client.ping().unwrap();
+        // v1 dense score.
+        match client.score(vec![1.0; 16]).unwrap() {
+            Response::Score { score, .. } => assert!(score > 0.0),
+            other => panic!("expected score, got {other:?}"),
+        }
+        // Binary negotiation + native sparse frame.
+        assert_eq!(client.negotiate().unwrap(), 3);
+        match client.score_sparse(vec![3, 9], vec![1.0, 1.0], 0).unwrap() {
+            Response::Score { score, features_evaluated, .. } => {
+                assert!(score > 0.0);
+                assert!(features_evaluated <= 2);
+            }
+            other => panic!("expected score, got {other:?}"),
+        }
+        // Dim mismatch stays a structured error, connection survives.
+        match client.score(vec![1.0; 3]).unwrap() {
+            Response::Error { retryable, .. } => assert!(!retryable),
+            other => panic!("expected error, got {other:?}"),
+        }
+        // Hot reload through the same connection.
+        let mut neg = snapshot(16);
+        neg.weights = vec![-1.0; 16];
+        client.reload(&neg).unwrap();
+        match client.score_sparse(vec![3], vec![1.0], 0).unwrap() {
+            Response::Score { score, .. } => assert!(score < 0.0, "reload flips the sign"),
+            other => panic!("expected score, got {other:?}"),
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.wire_v1.served >= 1);
+        assert!(stats.wire_v2_binary.served >= 2);
+        assert_eq!(stats.reloads, 1);
+        drop(client);
+        let final_stats = server.shutdown();
+        assert!(final_stats.served >= 3);
+        assert_eq!(final_stats.accepted_conns, 1);
+    }
+
+    /// `max_conns` sheds surplus connections with an immediate close on
+    /// both backends.
+    #[test]
+    fn max_conns_refuses_surplus_connections() {
+        use std::io::Read as _;
+        let cfg = ServerConfig { listen: "127.0.0.1:0".into(), max_conns: 1, ..Default::default() };
+        let server = TcpServer::serve(&cfg, snapshot(8)).unwrap();
+        let addr = server.local_addr();
+        let first = std::net::TcpStream::connect(addr).unwrap();
+        // Give the accept loop time to admit the first connection.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut second = std::net::TcpStream::connect(addr).unwrap();
+        let mut buf = [0u8; 1];
+        second
+            .set_read_timeout(Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+        // Must be a clean EOF — a read timeout would mean the server
+        // admitted the surplus connection and left it hanging, which is
+        // exactly the regression this test exists to catch.
+        match second.read(&mut buf) {
+            Ok(0) => {}
+            other => panic!("surplus connection must see EOF, got {other:?}"),
+        }
+        drop(first);
         server.shutdown();
     }
 

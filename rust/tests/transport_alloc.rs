@@ -1,0 +1,170 @@
+//! Counting-allocator proof of the transport layer's allocation-free
+//! steady-state score path.
+//!
+//! The claim under test: once buffers are warm, handling one binary
+//! score request at the transport layer — reading the frame body into a
+//! reusable buffer, zero-copy decoding ([`FrameRef::decode_borrowed`]),
+//! in-place validation, and serializing the response into a reusable
+//! buffer ([`Frame::encode_into`]) — performs **zero** heap
+//! allocations. The one deliberate exception is admission
+//! ([`pairs_to_features_u32`]): the owned `Features` handed to the
+//! worker queue is a service-layer cost, measured separately below so
+//! a regression can be attributed to the right layer.
+//!
+//! The counting `#[global_allocator]` wraps `System` for this whole
+//! test binary; each measurement section is single-threaded, so the
+//! global counter is exact.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use attentive::server::bufpool::BufPool;
+use attentive::server::frame::{
+    self, Frame, FrameRef,
+};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A realloc that moves is an allocation for our purposes: the
+        // steady-state claim is that buffers never grow.
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// One steady-state transport iteration: borrow-decode the request
+/// body, screen it in place, and serialize a response into `out`.
+fn transport_iteration(body: &[u8], gen: u32, out: &mut Vec<u8>) {
+    let frame = FrameRef::decode_borrowed(body).expect("decode");
+    let FrameRef::ScoreSparse2 { pairs, .. } = frame else {
+        panic!("expected sparse2, got {frame:?}")
+    };
+    frame::validate_pairs_u32(pairs).expect("valid payload");
+    out.clear();
+    Frame::Score { gen, evaluated: frame.nnz() as u32, score: 1.25 }.encode_into(out);
+}
+
+/// One sequential test driving every scenario: the allocation counter
+/// is process-global, so the measured sections must never run
+/// concurrently (libtest would otherwise interleave them).
+#[test]
+fn transport_allocation_accounting() {
+    steady_state_binary_score_path_is_allocation_free();
+    admission_is_the_only_allocating_stage_and_is_bounded();
+    bufpool_round_trips_without_allocating_after_warmup();
+    read_body_loop_is_allocation_free_at_steady_state();
+}
+
+fn steady_state_binary_score_path_is_allocation_free() {
+    // An MNIST-density sparse request (150 nonzeros of 784).
+    let idx: Vec<u32> = (0..150u32).map(|i| i * 5).collect();
+    let val: Vec<f64> = idx.iter().map(|&i| 0.25 + i as f64 * 1e-3).collect();
+    let wire = Frame::ScoreSparse2 { model: 0, gen: 0, idx, val }.encode();
+    let body = &wire[4..];
+
+    // Warm-up: let the response buffer reach steady-state capacity.
+    let mut out = Vec::new();
+    for g in 0..4 {
+        transport_iteration(body, g, &mut out);
+    }
+
+    let before = allocs();
+    for g in 0..1_000u32 {
+        transport_iteration(body, g, &mut out);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "1000 steady-state transport iterations must not touch the allocator, saw {delta}"
+    );
+    // Sanity: the loop really did produce responses.
+    let (resp, _) = Frame::decode(&out, 1 << 20).expect("response decodes");
+    assert!(matches!(resp, Frame::Score { gen: 999, .. }));
+}
+
+fn admission_is_the_only_allocating_stage_and_is_bounded() {
+    let idx: Vec<u32> = (0..150u32).map(|i| i * 5).collect();
+    let val = vec![1.0f64; 150];
+    let wire = Frame::ScoreSparse2 { model: 0, gen: 0, idx, val }.encode();
+    let body = &wire[4..];
+    let FrameRef::ScoreSparse2 { pairs, .. } = FrameRef::decode_borrowed(body).unwrap() else {
+        panic!("expected sparse2")
+    };
+    // Warm up allocator internals.
+    drop(frame::pairs_to_features_u32(pairs));
+    let before = allocs();
+    let features = frame::pairs_to_features_u32(pairs);
+    let delta = allocs() - before;
+    assert!(
+        (1..=2).contains(&delta),
+        "admission materializes exactly the idx/val vectors (with_capacity, no regrowth), \
+         saw {delta} allocations"
+    );
+    assert_eq!(features.nnz(), 150);
+}
+
+fn bufpool_round_trips_without_allocating_after_warmup() {
+    let pool = BufPool::serving_default();
+    // Warm-up: one buffer grown to working size, returned to the pool.
+    let mut buf = pool.get();
+    buf.resize(8 * 1024, 0);
+    pool.put(buf);
+
+    let before = allocs();
+    for i in 0..1_000usize {
+        let mut buf = pool.get();
+        // Typical response-render usage within warmed capacity.
+        buf.extend_from_slice(&[0u8; 64]);
+        buf.extend_from_slice(&(i as u32).to_le_bytes());
+        pool.put(buf);
+    }
+    let delta = allocs() - before;
+    assert_eq!(delta, 0, "pooled buffer churn must be allocation-free, saw {delta}");
+    let stats = pool.stats();
+    assert_eq!(stats.misses, 1, "only the warm-up checkout missed");
+    assert_eq!(stats.hits, 1_000);
+}
+
+/// The reusable body reader reaches zero allocation too: same-size
+/// frames through one buffer after warm-up.
+fn read_body_loop_is_allocation_free_at_steady_state() {
+    let mut stream_bytes = Vec::new();
+    for g in 0..64u32 {
+        Frame::Score { gen: g, evaluated: 7, score: 0.5 }.encode_into(&mut stream_bytes);
+    }
+    let mut body = Vec::new();
+    // Warm-up pass.
+    let mut cursor = std::io::Cursor::new(&stream_bytes[..]);
+    Frame::read_body(&mut cursor, &mut body, 1 << 20).unwrap();
+
+    let before = allocs();
+    let mut decoded = 0u32;
+    while Frame::read_body(&mut cursor, &mut body, 1 << 20).is_ok() {
+        let frame = FrameRef::decode_borrowed(&body).unwrap();
+        assert!(matches!(frame, FrameRef::Response(_)));
+        decoded += 1;
+    }
+    let delta = allocs() - before;
+    assert_eq!(delta, 0, "read_body reuse must not allocate, saw {delta}");
+    assert_eq!(decoded, 63);
+}

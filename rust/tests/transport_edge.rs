@@ -1,0 +1,441 @@
+//! Transport edge cases, exercised against **both** I/O backends
+//! (thread-per-connection and the epoll event loop): slowloris partial
+//! frames, oversized-frame rejection mid-stream, idle-connection churn,
+//! half-close handling, and the verbose-classify breakdown over every
+//! wire form. Each scenario runs per backend so the two transports
+//! cannot drift apart on edge semantics.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::time::Duration;
+
+use attentive::config::{IoBackend, ServerConfig};
+use attentive::coordinator::service::{
+    EnsembleSnapshot, Features, ModelSnapshot, ServingModel, VoterSnapshot,
+};
+use attentive::server::frame::{ErrorCode, Frame};
+use attentive::server::loadgen::Client;
+use attentive::server::protocol::{Request, Response};
+use attentive::server::tcp::TcpServer;
+use attentive::stst::boundary::AnyBoundary;
+
+const DIM: usize = 784;
+
+/// Flat binary snapshot: deterministic sign for inky digit imagery.
+fn flat_snapshot(w: f64) -> ModelSnapshot {
+    ModelSnapshot {
+        weights: vec![w; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: attentive::margin::policy::CoordinatePolicy::Permuted,
+    }
+}
+
+/// Flat deterministic 3-class ensemble (classes 0/1/2; positive input
+/// → every voter votes its `pos` class → label 0).
+fn flat_ensemble() -> EnsembleSnapshot {
+    let classes = vec![0i64, 1, 2];
+    let mut voters = Vec::new();
+    for a in 0..classes.len() {
+        for b in a + 1..classes.len() {
+            voters.push(VoterSnapshot {
+                pos: classes[a],
+                neg: classes[b],
+                weights: vec![1.0; DIM],
+                var_sn: 4.0,
+            });
+        }
+    }
+    EnsembleSnapshot {
+        classes,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: attentive::margin::policy::CoordinatePolicy::Permuted,
+        voters,
+    }
+}
+
+/// The backends this platform can run (the event loop needs epoll).
+fn backends() -> Vec<IoBackend> {
+    let mut all = vec![IoBackend::Threads];
+    if cfg!(target_os = "linux") {
+        all.push(IoBackend::EventLoop);
+    }
+    all
+}
+
+fn server_on(backend: IoBackend, models: Vec<(String, ServingModel)>) -> TcpServer {
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        io_backend: backend,
+        event_threads: 2,
+        workers: 2,
+        queue: 4096,
+        ..Default::default()
+    };
+    TcpServer::serve_models(&cfg, models).expect("bind loopback")
+}
+
+fn binary_server(backend: IoBackend) -> TcpServer {
+    server_on(backend, vec![("default".into(), flat_snapshot(1.0).into())])
+}
+
+/// Slowloris: a valid request dripped one byte at a time — on a JSON
+/// line and then on a binary frame whose header itself arrives
+/// byte-by-byte. The server must buffer patiently and answer both.
+#[test]
+fn slowloris_partial_requests_are_buffered_not_dropped() {
+    for backend in backends() {
+        let server = binary_server(backend);
+        let addr = server.local_addr().to_string();
+        let stream = TcpStream::connect(&addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+        // v1 line, one byte at a time.
+        let line = Request::Score {
+            id: Some(7),
+            model: None,
+            features: Features::Sparse { idx: vec![3, 40], val: vec![1.0, 1.0] },
+        }
+        .to_line();
+        for &b in line.as_bytes() {
+            (&stream).write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        match Response::parse(reply.trim()).unwrap() {
+            Response::Score { id, score, .. } => {
+                assert_eq!(id, Some(7), "backend {backend:?}");
+                assert!(score > 0.0);
+            }
+            other => panic!("{backend:?}: expected score, got {other:?}"),
+        }
+
+        // Upgrade to binary, then drip a sparse frame byte-by-byte —
+        // including the 4-byte length prefix.
+        (&stream).write_all(b"{\"op\":\"hello\",\"proto\":3}\n").unwrap();
+        reply.clear();
+        reader.read_line(&mut reply).unwrap();
+        assert!(
+            matches!(Response::parse(reply.trim()).unwrap(), Response::Hello { proto: 3, .. }),
+            "backend {backend:?}"
+        );
+        let wire = Frame::ScoreSparse { gen: 0, idx: vec![5, 9], val: vec![1.0, 1.0] }.encode();
+        for &b in &wire {
+            (&stream).write_all(&[b]).unwrap();
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+            Frame::Score { score, evaluated, .. } => {
+                assert!(score > 0.0, "backend {backend:?}");
+                assert!(evaluated <= 2);
+            }
+            other => panic!("{backend:?}: expected score frame, got {other:?}"),
+        }
+        drop(reader);
+        drop(stream);
+        server.shutdown();
+    }
+}
+
+/// Oversized frame mid-stream: after successful binary traffic, a
+/// length prefix beyond the server cap draws one `BAD_FRAME` error and
+/// the connection closes — and the server keeps serving new clients.
+#[test]
+fn oversized_frame_mid_stream_errors_and_closes_only_that_connection() {
+    for backend in backends() {
+        let cfg = ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            io_backend: backend,
+            max_frame_bytes: 4096,
+            ..Default::default()
+        };
+        let server =
+            TcpServer::serve_models(&cfg, vec![("default".into(), flat_snapshot(1.0).into())])
+                .expect("bind");
+        let addr = server.local_addr().to_string();
+
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        (&stream).write_all(b"{\"op\":\"hello\",\"proto\":2}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        // Healthy traffic first.
+        (&stream)
+            .write_all(&Frame::ScoreSparse { gen: 0, idx: vec![1], val: vec![1.0] }.encode())
+            .unwrap();
+        assert!(
+            matches!(Frame::read_from(&mut reader, 1 << 20).unwrap(), Frame::Score { .. }),
+            "backend {backend:?}"
+        );
+        // Now a prefix claiming 1 MiB against the 4 KiB cap.
+        (&stream).write_all(&(1u32 << 20).to_le_bytes()).unwrap();
+        match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+            Frame::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::BadFrame, "backend {backend:?}");
+                assert!(!retryable);
+            }
+            other => panic!("{backend:?}: expected BadFrame, got {other:?}"),
+        }
+        let mut probe = [0u8; 1];
+        assert_eq!(
+            reader.read(&mut probe).unwrap_or(0),
+            0,
+            "{backend:?}: connection must close after framing loss"
+        );
+        // The server is unharmed: a fresh client still scores.
+        let mut client = Client::connect(&addr).unwrap();
+        assert!(matches!(
+            client.score(vec![0.5; DIM]).unwrap(),
+            Response::Score { .. }
+        ));
+        let stats = server.shutdown();
+        assert!(stats.protocol_errors >= 1, "backend {backend:?}");
+    }
+}
+
+/// Idle-connection churn: open a pile of connections, use only a few,
+/// close them all; repeat. The server must neither shed nor leak. The
+/// event loop takes the full 500; the thread backend gets a smaller
+/// pile (it pays two threads per connection — that's the point of the
+/// event loop).
+#[test]
+fn idle_connection_churn_neither_sheds_nor_leaks() {
+    for backend in backends() {
+        let pile = match backend {
+            IoBackend::Threads => 50,
+            IoBackend::EventLoop => 500,
+        };
+        let server = binary_server(backend);
+        let addr = server.local_addr().to_string();
+        for round in 0..2 {
+            let mut idle = Vec::with_capacity(pile);
+            for _ in 0..pile {
+                idle.push(TcpStream::connect(&addr).unwrap());
+            }
+            // Use 10 of them; the rest just sit there.
+            for stream in idle.iter().take(10) {
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                (&*stream)
+                    .write_all(
+                        Request::Score {
+                            id: None,
+                            model: None,
+                            features: Features::Sparse { idx: vec![9], val: vec![1.0] },
+                        }
+                        .to_line()
+                        .as_bytes(),
+                    )
+                    .unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                match Response::parse(line.trim()).unwrap() {
+                    Response::Score { score, .. } => assert!(score > 0.0),
+                    other => panic!("{backend:?} round {round}: got {other:?}"),
+                }
+            }
+            drop(idle); // close all at once
+        }
+        // Wait for the server to observe the closes, then verify it
+        // still serves and shed nothing.
+        let mut client = Client::connect(&addr).unwrap();
+        client.ping().unwrap();
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.overloaded, 0, "backend {backend:?}");
+        assert_eq!(stats.served, 20, "backend {backend:?}");
+        assert_eq!(stats.accepted_conns as usize, 2 * pile + 1, "backend {backend:?}");
+        server.shutdown();
+    }
+}
+
+/// Half-close: the client pipelines requests then shuts down its write
+/// half. Every pipelined request must still be answered before the
+/// server closes the read side.
+#[test]
+fn half_close_still_answers_the_pipeline() {
+    for backend in backends() {
+        let server = binary_server(backend);
+        let addr = server.local_addr().to_string();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let n = 20;
+        for i in 0..n {
+            (&stream)
+                .write_all(
+                    Request::Score {
+                        id: Some(i),
+                        model: None,
+                        features: Features::Sparse { idx: vec![3], val: vec![1.0] },
+                    }
+                    .to_line()
+                    .as_bytes(),
+                )
+                .unwrap();
+        }
+        stream.shutdown(Shutdown::Write).unwrap();
+        let mut answered = 0u64;
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line).unwrap_or(0) == 0 {
+                break; // server finished and closed
+            }
+            match Response::parse(line.trim()).unwrap() {
+                Response::Score { id, .. } => {
+                    assert_eq!(id, Some(answered), "backend {backend:?}: in order");
+                    answered += 1;
+                }
+                other => panic!("{backend:?}: got {other:?}"),
+            }
+        }
+        assert_eq!(answered, n, "backend {backend:?}: every pipelined request answered");
+        server.shutdown();
+    }
+}
+
+/// EOF mid-message, both backends: a final *unterminated* v1 line is
+/// still processed (the threads backend's `read_line` hands it over at
+/// EOF; the event loop matches), and a binary frame truncated by the
+/// close draws one `BAD_FRAME`.
+#[test]
+fn eof_mid_message_matches_across_backends() {
+    for backend in backends() {
+        // Unterminated final line: ping without the newline, then FIN.
+        let server = binary_server(backend);
+        let addr = server.local_addr().to_string();
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        (&stream).write_all(b"{\"op\":\"ping\"}").unwrap(); // no \n
+        stream.shutdown(Shutdown::Write).unwrap();
+        let mut line = String::new();
+        assert!(reader.read_line(&mut line).unwrap() > 0, "backend {backend:?}");
+        assert!(
+            matches!(Response::parse(line.trim()).unwrap(), Response::Pong),
+            "{backend:?}: final unterminated line must still be served"
+        );
+        drop(reader);
+        drop(stream);
+
+        // Truncated binary frame: prefix + partial body, then FIN.
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        (&stream).write_all(b"{\"op\":\"hello\",\"proto\":2}\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let wire = Frame::ScoreSparse { gen: 0, idx: vec![5], val: vec![1.0] }.encode();
+        (&stream).write_all(&wire[..wire.len() - 3]).unwrap();
+        stream.shutdown(Shutdown::Write).unwrap();
+        match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+            Frame::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::BadFrame, "backend {backend:?}");
+                assert!(!retryable);
+            }
+            other => panic!("{backend:?}: expected BadFrame on truncation, got {other:?}"),
+        }
+        let mut probe = [0u8; 1];
+        assert_eq!(reader.read(&mut probe).unwrap_or(1), 0, "{backend:?}: then EOF");
+        server.shutdown();
+    }
+}
+
+/// Verbose classify end to end on every wire form, both backends: the
+/// per-voter rows arrive, decompose the total, and the lean form stays
+/// lean.
+#[test]
+fn verbose_classify_breakdown_over_the_wire() {
+    for backend in backends() {
+        let server = server_on(
+            backend,
+            vec![
+                ("default".into(), flat_snapshot(1.0).into()),
+                ("digits".into(), flat_ensemble().into()),
+            ],
+        );
+        let addr = server.local_addr().to_string();
+        let mut client = Client::connect(&addr).unwrap();
+        let payload = Features::Sparse { idx: vec![5, 100, 300], val: vec![1.0, 1.0, 1.0] };
+
+        // v1 JSON: verbose flag → per-voter rows.
+        match client.classify_verbose(Some("digits"), payload.clone()).unwrap() {
+            Response::ClassifyVerbose { label, voters, features_evaluated, per_voter, .. } => {
+                assert_eq!(label, 0, "backend {backend:?}");
+                assert_eq!(voters, 3);
+                assert_eq!(per_voter.len(), 3);
+                assert_eq!((per_voter[0].pos, per_voter[0].neg), (0, 1));
+                let sum: usize = per_voter.iter().map(|r| r.features as usize).sum();
+                assert_eq!(sum, features_evaluated, "rows decompose the total");
+                for row in &per_voter {
+                    assert!(row.vote == row.pos || row.vote == row.neg);
+                }
+            }
+            other => panic!("{backend:?}: expected verbose classify, got {other:?}"),
+        }
+        // The lean op is unchanged.
+        assert!(matches!(
+            client.classify(Some("digits"), payload.clone()).unwrap(),
+            Response::Classify { .. }
+        ));
+
+        // Binary wire: CLASSIFY_SPARSE_VERBOSE → CLASS_VERBOSE.
+        assert_eq!(client.negotiate().unwrap(), 3);
+        match client
+            .classify_sparse_verbose(1, vec![5, 100, 300], vec![1.0, 1.0, 1.0], 0)
+            .unwrap()
+        {
+            Response::ClassifyVerbose { label, per_voter, features_evaluated, .. } => {
+                assert_eq!(label, 0, "backend {backend:?}");
+                assert_eq!(per_voter.len(), 3);
+                let sum: usize = per_voter.iter().map(|r| r.features as usize).sum();
+                assert_eq!(sum, features_evaluated);
+            }
+            other => panic!("{backend:?}: expected verbose classify frame, got {other:?}"),
+        }
+        // Lean binary classify still answers with the compact CLASS.
+        assert!(matches!(
+            client.classify_sparse(1, vec![5], vec![1.0], 0).unwrap(),
+            Response::Classify { .. }
+        ));
+        server.shutdown();
+    }
+}
+
+/// Open-loop loadgen against the event loop: hundreds of mostly-idle
+/// connections over 2 I/O threads, zero sheds, zero errors. (The CI
+/// bench-smoke job scales this same path to 2000 connections; the
+/// thread backend is exempt by design — it would need 2×N threads.)
+#[cfg(target_os = "linux")]
+#[test]
+fn open_loop_many_idle_connections_event_loop_zero_sheds() {
+    use attentive::server::loadgen::{self, ClientMode, LoadGenConfig};
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        io_backend: IoBackend::EventLoop,
+        event_threads: 2,
+        workers: 2,
+        queue: 1024,
+        ..Default::default()
+    };
+    let server =
+        TcpServer::serve_models(&cfg, vec![("default".into(), flat_snapshot(1.0).into())])
+            .expect("bind");
+    let addr = server.local_addr().to_string();
+    let report = loadgen::run(&LoadGenConfig {
+        addr,
+        connections: 400,
+        requests: 800,
+        mode: ClientMode::V2Binary,
+        hard_fraction: 0.2,
+        open_loop: true,
+        seed: 5,
+        ..Default::default()
+    })
+    .expect("open-loop loadgen");
+    assert_eq!(report.sent, 800);
+    assert_eq!(report.answered, 800, "every open-loop request answered");
+    assert_eq!(report.overloaded, 0, "zero sheds across mostly-idle connections");
+    assert_eq!(report.errors, 0);
+    let stats = server.shutdown();
+    assert_eq!(stats.accepted_conns, 400);
+    assert_eq!(stats.served, 800);
+}
