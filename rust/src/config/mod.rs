@@ -350,11 +350,131 @@ impl IoBackend {
     }
 }
 
+/// Online trainer attached behind the wire (the `learn` op): one
+/// background trainer thread per registry shard owning a live attentive
+/// learner, consuming labeled examples from a bounded queue and
+/// periodically publishing immutable snapshots into the shard's
+/// [`crate::server::hub::ModelHub`] generation swap. See
+/// [`crate::coordinator::online`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainerWireConfig {
+    /// Per-shard learn-queue depth; examples beyond it are shed with an
+    /// explicit retryable `overloaded` ack instead of buffering.
+    pub queue: usize,
+    /// Publish a fresh snapshot after this many model *updates*
+    /// (0 = never publish by count).
+    pub publish_every_updates: u64,
+    /// ... and/or after this many milliseconds since the last publish,
+    /// whichever fires first (0 = never publish by time). At least one
+    /// cadence must be nonzero.
+    pub publish_every_ms: u64,
+    /// Learner family. The wire trainer currently supports `pegasos`
+    /// only (snapshot publishing needs its variance cache).
+    pub learner: LearnerKind,
+    /// Pegasos regularization λ.
+    pub lambda: f64,
+    /// Training-time stopping boundary (the attentive early exit).
+    pub boundary: AnyBoundary,
+    /// Coordinate selection policy.
+    pub policy: CoordinatePolicy,
+    /// Trainer RNG seed.
+    pub seed: u64,
+}
+
+impl Default for TrainerWireConfig {
+    fn default() -> Self {
+        Self {
+            queue: 1024,
+            publish_every_updates: 64,
+            publish_every_ms: 250,
+            learner: LearnerKind::Pegasos,
+            lambda: 1e-2,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::WeightSampled,
+            seed: 0,
+        }
+    }
+}
+
+impl TrainerWireConfig {
+    /// Serialize as JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("queue", Json::Num(self.queue as f64)),
+            ("publish_every_updates", Json::Num(self.publish_every_updates as f64)),
+            ("publish_every_ms", Json::Num(self.publish_every_ms as f64)),
+            ("learner", Json::Str(self.learner.name().into())),
+            ("lambda", Json::Num(self.lambda)),
+            ("boundary", self.boundary.to_json()),
+            ("policy", Json::Str(self.policy.name().into())),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+
+    /// Parse from JSON; missing fields take the defaults.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let d = TrainerWireConfig::default();
+        Ok(Self {
+            queue: v.get("queue").and_then(|x| x.as_usize()).unwrap_or(d.queue),
+            publish_every_updates: v
+                .get("publish_every_updates")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.publish_every_updates),
+            publish_every_ms: v
+                .get("publish_every_ms")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.publish_every_ms),
+            learner: match v.get("learner").and_then(|s| s.as_str()) {
+                Some(name) => LearnerKind::from_name(name)?,
+                None => d.learner,
+            },
+            lambda: v.get("lambda").and_then(|x| x.as_f64()).unwrap_or(d.lambda),
+            boundary: match v.get("boundary") {
+                Some(b) => AnyBoundary::from_json(b)?,
+                None => d.boundary,
+            },
+            policy: match v.get("policy").and_then(|s| s.as_str()) {
+                Some(name) => CoordinatePolicy::from_name(name)?,
+                None => d.policy,
+            },
+            seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
+        })
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.queue == 0 {
+            return Err(Error::Config("trainer queue must be >= 1".into()));
+        }
+        if self.publish_every_updates == 0 && self.publish_every_ms == 0 {
+            return Err(Error::Config(
+                "trainer needs a publish cadence: publish_every_updates and/or publish_every_ms"
+                    .into(),
+            ));
+        }
+        if self.lambda <= 0.0 {
+            return Err(Error::Config(format!("trainer lambda {} must be > 0", self.lambda)));
+        }
+        if let AnyBoundary::Constant { delta, .. } | AnyBoundary::Curved { delta } = self.boundary {
+            if !(0.0 < delta && delta < 1.0) {
+                return Err(Error::Config(format!("trainer delta {delta} not in (0,1)")));
+            }
+        }
+        if self.learner != LearnerKind::Pegasos {
+            return Err(Error::Config(format!(
+                "online trainer supports learner \"pegasos\" (got {:?})",
+                self.learner.name()
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Network serving front-end configuration (`attentive serve --listen` /
 /// [`crate::server`]). A standalone JSON document, separate from
 /// [`ExperimentConfig`]: serving deploys a finished model, it does not
 /// describe a training run.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     /// Address to bind, e.g. `"127.0.0.1:7878"` (port 0 = ephemeral).
     pub listen: String,
@@ -393,6 +513,9 @@ pub struct ServerConfig {
     /// silently fills). Both backends enforce it; the event loop is the
     /// one that can realistically reach it.
     pub max_conns: usize,
+    /// Attach an online trainer to every shard (enables the `learn` op).
+    /// `None` (the default) serves inference-only.
+    pub trainer: Option<TrainerWireConfig>,
 }
 
 impl Default for ServerConfig {
@@ -409,6 +532,7 @@ impl Default for ServerConfig {
             io_backend: IoBackend::default_from_env(),
             event_threads: 2,
             max_conns: 16_384,
+            trainer: None,
         }
     }
 }
@@ -416,7 +540,7 @@ impl Default for ServerConfig {
 impl ServerConfig {
     /// Serialize as JSON.
     pub fn to_json(&self) -> Json {
-        Json::obj([
+        let mut fields = vec![
             ("listen", Json::Str(self.listen.clone())),
             ("workers", Json::Num(self.workers as f64)),
             ("max_batch", Json::Num(self.max_batch as f64)),
@@ -428,7 +552,11 @@ impl ServerConfig {
             ("io_backend", Json::Str(self.io_backend.name().into())),
             ("event_threads", Json::Num(self.event_threads as f64)),
             ("max_conns", Json::Num(self.max_conns as f64)),
-        ])
+        ];
+        if let Some(t) = &self.trainer {
+            fields.push(("trainer", t.to_json()));
+        }
+        Json::obj(fields)
     }
 
     /// Parse from JSON; missing fields take the defaults.
@@ -458,6 +586,10 @@ impl ServerConfig {
                 .and_then(|x| x.as_usize())
                 .unwrap_or(d.event_threads),
             max_conns: v.get("max_conns").and_then(|x| x.as_usize()).unwrap_or(d.max_conns),
+            trainer: match v.get("trainer") {
+                Some(t) => Some(TrainerWireConfig::from_json(t)?),
+                None => d.trainer,
+            },
         })
     }
 
@@ -507,6 +639,9 @@ impl ServerConfig {
                 self.max_nnz,
                 u32::MAX
             )));
+        }
+        if let Some(t) = &self.trainer {
+            t.validate()?;
         }
         Ok(())
     }
@@ -563,11 +698,21 @@ mod tests {
             io_backend: IoBackend::Threads,
             event_threads: 4,
             max_conns: 2_000,
+            trainer: Some(TrainerWireConfig {
+                queue: 512,
+                publish_every_updates: 32,
+                publish_every_ms: 100,
+                learner: LearnerKind::Pegasos,
+                lambda: 1e-3,
+                boundary: AnyBoundary::Constant { delta: 0.05, paper_literal: false },
+                policy: CoordinatePolicy::Permuted,
+                seed: 9,
+            }),
         };
         let back = ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
             .unwrap();
         assert_eq!(back, cfg);
-        // Sparse document: everything defaults.
+        // Sparse document: everything defaults (trainer stays off).
         let sparse = ServerConfig::from_json(&Json::parse(r#"{"workers": 4}"#).unwrap()).unwrap();
         assert_eq!(sparse.workers, 4);
         assert_eq!(sparse.listen, ServerConfig::default().listen);
@@ -576,7 +721,50 @@ mod tests {
         assert_eq!(sparse.max_nnz, u16::MAX as usize);
         assert_eq!(sparse.event_threads, 2);
         assert_eq!(sparse.max_conns, 16_384);
+        assert_eq!(sparse.trainer, None);
         sparse.validate().unwrap();
+    }
+
+    #[test]
+    fn trainer_wire_config_round_trip_and_validation() {
+        // Empty object: all defaults, and the defaults validate.
+        let d = TrainerWireConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, TrainerWireConfig::default());
+        d.validate().unwrap();
+        // Full round trip through the ServerConfig envelope.
+        let cfg = ServerConfig {
+            trainer: Some(TrainerWireConfig { queue: 7, seed: 3, ..Default::default() }),
+            ..Default::default()
+        };
+        let back =
+            ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.trainer, cfg.trainer);
+        // Validation: queue >= 1, some cadence, lambda > 0, sane delta,
+        // and (for now) pegasos only.
+        let t = TrainerWireConfig { queue: 0, ..Default::default() };
+        assert!(t.validate().is_err());
+        let t = TrainerWireConfig {
+            publish_every_updates: 0,
+            publish_every_ms: 0,
+            ..Default::default()
+        };
+        assert!(t.validate().is_err());
+        let t = TrainerWireConfig { lambda: 0.0, ..Default::default() };
+        assert!(t.validate().is_err());
+        let t = TrainerWireConfig {
+            boundary: AnyBoundary::Constant { delta: 1.5, paper_literal: false },
+            ..Default::default()
+        };
+        assert!(t.validate().is_err());
+        let t = TrainerWireConfig { learner: LearnerKind::Perceptron, ..Default::default() };
+        assert!(t.validate().is_err());
+        // A bad nested trainer fails the server-level validate too.
+        let cfg = ServerConfig {
+            trainer: Some(TrainerWireConfig { queue: 0, ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

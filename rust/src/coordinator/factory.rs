@@ -4,7 +4,8 @@
 //! this is the single place where the (learner family × boundary family)
 //! matrix is materialized.
 
-use crate::config::{DataConfig, ExperimentConfig, LearnerKind};
+use crate::config::{DataConfig, ExperimentConfig, LearnerKind, TrainerWireConfig};
+use crate::stst::boundary::AnyBoundary;
 use crate::data::dataset::Dataset;
 use crate::data::synth::SynthDigits;
 use crate::data::task::BinaryTask;
@@ -36,6 +37,22 @@ pub fn build_learner(cfg: &ExperimentConfig, dim: usize, run: u64) -> Box<dyn On
             Box::new(BoundedPa::new(dim, pcfg, 1.0 / cfg.lambda, boundary))
         }
     }
+}
+
+/// Build the concrete attentive Pegasos behind a wire trainer
+/// ([`crate::coordinator::online`]). Concrete (not boxed) because
+/// snapshot publishing needs the learner's variance cache; `validate()`
+/// on [`TrainerWireConfig`] guarantees `learner == Pegasos`.
+pub fn build_wire_pegasos(cfg: &TrainerWireConfig, dim: usize) -> BoundedPegasos<AnyBoundary> {
+    let pcfg = PegasosConfig {
+        lambda: cfg.lambda,
+        theta: 1.0,
+        project: true,
+        policy: cfg.policy,
+        seed: cfg.seed,
+        observe_on_full: true,
+    };
+    BoundedPegasos::new(dim, pcfg, cfg.boundary.clone())
 }
 
 /// Materialize the dataset described by `cfg.data`.

@@ -4,13 +4,15 @@
 //! ([`trainer`]), the learner factory that materializes a configured
 //! experiment ([`factory`]), the multi-run/multi-task parallel scheduler
 //! that reproduces the paper's 10-permutation averages ([`scheduler`]),
-//! and an async prediction service with attentive early-exit
-//! ([`service`]).
+//! an async prediction service with attentive early-exit ([`service`]),
+//! and the wire-fed online trainers behind the `learn` op ([`online`]).
 
 pub mod factory;
+pub mod online;
 pub mod scheduler;
 pub mod service;
 pub mod trainer;
 
+pub use online::{LearnError, OnlineTrainer, TrainerStats, TrainerStatsSnapshot};
 pub use scheduler::{run_sweep, SweepOutcome};
 pub use trainer::{TrainReport, Trainer, TrainerConfig};

@@ -1,0 +1,414 @@
+//! Online-learning subsystem behind the wire: the `learn` op's engine.
+//!
+//! One [`OnlineTrainer`] per registry shard owns a live attentive
+//! Pegasos ([`crate::learner::pegasos::BoundedPegasos`], built via
+//! [`crate::coordinator::factory::build_wire_pegasos`]) on a background
+//! thread. Labeled examples arrive through a bounded MPSC queue —
+//! enqueue never blocks the wire: when the queue is full the example is
+//! *shed* with an explicit, retryable ack, mirroring the score path's
+//! admission control. The thread densifies each example, runs one
+//! attentive `process` step (spending O(√n) features on easy examples,
+//! per the paper), and periodically publishes an immutable
+//! [`ModelSnapshot`] into the shard's [`ModelHub`] generation swap:
+//! after every K updates and/or T milliseconds, whichever fires first.
+//! Concurrent `score`/`classify` traffic picks up the new generation
+//! through the hub's existing swap — zero added cost on the scoring hot
+//! path.
+//!
+//! Determinism: a single consumer thread processes examples in queue
+//! order with a config-seeded learner, so the same accepted sequence
+//! reproduces the same weights as an offline run (tested below).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::TrainerWireConfig;
+use crate::coordinator::factory::build_wire_pegasos;
+use crate::coordinator::service::{Features, ModelSnapshot};
+use crate::learner::OnlineLearner;
+use crate::server::hub::ModelHub;
+
+/// Poll interval when no time-based publish is pending — only bounds
+/// how quickly the thread notices a dropped sender, not learn latency.
+const IDLE_POLL_MS: u64 = 250;
+
+/// One labeled example bound for a shard's trainer.
+#[derive(Debug, Clone)]
+pub struct LearnExample {
+    /// Feature vector (sparse or dense).
+    pub features: Features,
+    /// Label, ±1.
+    pub label: f64,
+}
+
+/// Why a `learn` submission was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnError {
+    /// The bounded learn queue is full; the example was shed. Retryable.
+    Shed,
+    /// The trainer has shut down.
+    Closed,
+}
+
+/// Live counters for one shard's trainer. `examples` counts accepted
+/// (enqueued) submissions; `updates`/`features` are bumped by the
+/// trainer thread as it processes; `sheds` counts queue-full rejects;
+/// `publishes` counts snapshot generations pushed into the hub.
+#[derive(Debug, Default)]
+pub struct TrainerStats {
+    /// Examples accepted into the queue.
+    pub examples: AtomicU64,
+    /// Model updates applied.
+    pub updates: AtomicU64,
+    /// Examples shed on queue overflow.
+    pub sheds: AtomicU64,
+    /// Snapshots published into the hub.
+    pub publishes: AtomicU64,
+    /// Feature evaluations spent while learning (the paper's budget
+    /// axis: sub-linear per example when the attentive boundary fires).
+    pub features: AtomicU64,
+}
+
+/// A point-in-time copy of [`TrainerStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrainerStatsSnapshot {
+    /// Examples accepted into the queue.
+    pub examples: u64,
+    /// Model updates applied.
+    pub updates: u64,
+    /// Examples shed on queue overflow.
+    pub sheds: u64,
+    /// Snapshots published into the hub.
+    pub publishes: u64,
+    /// Feature evaluations spent while learning.
+    pub features: u64,
+}
+
+impl TrainerStats {
+    /// Copy the counters (relaxed: monotone counters, not an invariant).
+    pub fn snapshot(&self) -> TrainerStatsSnapshot {
+        TrainerStatsSnapshot {
+            examples: self.examples.load(Ordering::Relaxed),
+            updates: self.updates.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            publishes: self.publishes.load(Ordering::Relaxed),
+            features: self.features.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Where published snapshots go. Production is a [`ModelHub`] reload;
+/// tests capture snapshots directly. Returns whether the publish stuck.
+pub type PublishSink = Box<dyn FnMut(ModelSnapshot) -> bool + Send>;
+
+/// Handle to one shard's background trainer thread. Shared behind the
+/// registry (`&self` API); shutdown is idempotent and joins the thread.
+pub struct OnlineTrainer {
+    tx: Mutex<Option<SyncSender<LearnExample>>>,
+    join: Mutex<Option<JoinHandle<()>>>,
+    stats: Arc<TrainerStats>,
+}
+
+impl std::fmt::Debug for OnlineTrainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("OnlineTrainer").field("stats", &self.stats.snapshot()).finish()
+    }
+}
+
+impl OnlineTrainer {
+    /// Spawn a trainer publishing into `hub`'s generation swap.
+    pub fn spawn(hub: Arc<ModelHub>, cfg: &TrainerWireConfig, dim: usize) -> Self {
+        Self::spawn_with_sink(cfg, dim, Box::new(move |snap| hub.reload(snap).is_ok()))
+    }
+
+    /// Spawn a trainer publishing into an arbitrary sink (tests, tools).
+    pub fn spawn_with_sink(cfg: &TrainerWireConfig, dim: usize, sink: PublishSink) -> Self {
+        let (tx, rx) = sync_channel(cfg.queue.max(1));
+        let stats = Arc::new(TrainerStats::default());
+        let thread_stats = Arc::clone(&stats);
+        let cfg = cfg.clone();
+        let join = std::thread::Builder::new()
+            .name("online-trainer".into())
+            .spawn(move || run_trainer(rx, cfg, dim, thread_stats, sink))
+            .expect("spawn online trainer thread");
+        Self { tx: Mutex::new(Some(tx)), join: Mutex::new(Some(join)), stats }
+    }
+
+    /// Submit one labeled example without blocking. On success returns
+    /// the cumulative accepted-example count (for the wire ack); a full
+    /// queue sheds the example and reports [`LearnError::Shed`].
+    pub fn learn(&self, features: Features, label: f64) -> Result<u64, LearnError> {
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or(LearnError::Closed)?;
+        match tx.try_send(LearnExample { features, label }) {
+            Ok(()) => Ok(self.stats.examples.fetch_add(1, Ordering::Relaxed) + 1),
+            Err(TrySendError::Full(_)) => {
+                self.stats.sheds.fetch_add(1, Ordering::Relaxed);
+                Err(LearnError::Shed)
+            }
+            Err(TrySendError::Disconnected(_)) => Err(LearnError::Closed),
+        }
+    }
+
+    /// Live counters.
+    pub fn stats(&self) -> TrainerStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Drop the queue and join the thread, which drains remaining
+    /// examples and publishes a final snapshot if anything changed
+    /// since the last publish. Idempotent.
+    pub fn shutdown(&self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(join) = self.join.lock().unwrap().take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for OnlineTrainer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The trainer thread: consume → densify → attentive step → publish on
+/// K updates and/or T ms, whichever first; final publish on shutdown.
+fn run_trainer(
+    rx: Receiver<LearnExample>,
+    cfg: TrainerWireConfig,
+    dim: usize,
+    stats: Arc<TrainerStats>,
+    mut sink: PublishSink,
+) {
+    let mut learner = build_wire_pegasos(&cfg, dim);
+    let mut updates_since_publish = 0u64;
+    let mut dirty = false;
+    let mut last_publish = Instant::now();
+    let time_cadence =
+        (cfg.publish_every_ms > 0).then(|| Duration::from_millis(cfg.publish_every_ms));
+
+    let mut publish = |learner: &mut _, dirty: &mut bool, updates: &mut u64, last: &mut Instant| {
+        let snap = ModelSnapshot::from_trained(learner, cfg.boundary.clone(), cfg.policy);
+        if sink(snap) {
+            stats.publishes.fetch_add(1, Ordering::Relaxed);
+        }
+        *dirty = false;
+        *updates = 0;
+        *last = Instant::now();
+    };
+
+    loop {
+        if dirty {
+            if let Some(t) = time_cadence {
+                if last_publish.elapsed() >= t {
+                    publish(&mut learner, &mut dirty, &mut updates_since_publish, &mut last_publish);
+                }
+            }
+        }
+        let timeout = match (dirty, time_cadence) {
+            (true, Some(t)) => t.saturating_sub(last_publish.elapsed()),
+            _ => Duration::from_millis(IDLE_POLL_MS),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(ex) => {
+                let x = ex.features.densify(dim);
+                let info = learner.process(&x, ex.label);
+                stats.features.fetch_add(info.evaluated as u64, Ordering::Relaxed);
+                dirty = true;
+                if info.updated {
+                    stats.updates.fetch_add(1, Ordering::Relaxed);
+                    updates_since_publish += 1;
+                    if cfg.publish_every_updates > 0
+                        && updates_since_publish >= cfg.publish_every_updates
+                    {
+                        publish(
+                            &mut learner,
+                            &mut dirty,
+                            &mut updates_since_publish,
+                            &mut last_publish,
+                        );
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                if dirty {
+                    publish(&mut learner, &mut dirty, &mut updates_since_publish, &mut last_publish);
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::AnyBoundary;
+
+    fn test_cfg() -> TrainerWireConfig {
+        TrainerWireConfig {
+            queue: 64,
+            publish_every_updates: 0,
+            publish_every_ms: 0, // direct spawns skip validate(); shutdown publishes
+            lambda: 1e-2,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::WeightSampled,
+            seed: 11,
+            ..Default::default()
+        }
+    }
+
+    fn capture_sink() -> (Arc<Mutex<Vec<ModelSnapshot>>>, PublishSink) {
+        let published = Arc::new(Mutex::new(Vec::new()));
+        let sink_ref = Arc::clone(&published);
+        let sink: PublishSink = Box::new(move |snap| {
+            sink_ref.lock().unwrap().push(snap);
+            true
+        });
+        (published, sink)
+    }
+
+    /// Synthetic separable stream: sign of the sum of two informative
+    /// coordinates, embedded sparsely in `dim`.
+    fn stream(n: usize, dim: usize, seed: u64) -> Vec<(Features, f64)> {
+        let mut s = seed.wrapping_mul(2).wrapping_add(1);
+        let mut next = move || {
+            // SplitMix64-style scramble, plenty for test data.
+            s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = s;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            (z ^ (z >> 31)) as f64 / u64::MAX as f64
+        };
+        (0..n)
+            .map(|i| {
+                let a = next() * 2.0 - 1.0;
+                let b = next() * 2.0 - 1.0;
+                let y = if a + b >= 0.0 { 1.0 } else { -1.0 };
+                let (i0, i1) = ((i % 3) as u32, 3 + (i % 5) as u32);
+                let _ = dim;
+                (Features::Sparse { idx: vec![i0, i1], val: vec![a, b] }, y)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn same_seed_matches_offline_run() {
+        let cfg = test_cfg();
+        let dim = 16;
+        let examples = stream(300, dim, 5);
+
+        let (published, sink) = capture_sink();
+        let trainer = OnlineTrainer::spawn_with_sink(&cfg, dim, sink);
+        for (x, y) in &examples {
+            // The queue outruns the feeder here only if the OS starves
+            // the consumer; retry instead of flaking.
+            loop {
+                match trainer.learn(x.clone(), *y) {
+                    Ok(_) => break,
+                    Err(LearnError::Shed) => std::thread::yield_now(),
+                    Err(LearnError::Closed) => panic!("trainer closed early"),
+                }
+            }
+        }
+        trainer.shutdown();
+
+        let mut offline = build_wire_pegasos(&cfg, dim);
+        for (x, y) in &examples {
+            offline.process(&x.densify(dim), *y);
+        }
+        let expect = ModelSnapshot::from_trained(&mut offline, cfg.boundary.clone(), cfg.policy);
+
+        let published = published.lock().unwrap();
+        let last = published.last().expect("shutdown publishes the final snapshot");
+        assert_eq!(last.weights, expect.weights, "same seed ⇒ same weights");
+        assert_eq!(last.var_sn, expect.var_sn);
+        let snap = trainer.stats();
+        assert_eq!(snap.examples, examples.len() as u64);
+        assert!(snap.updates > 0);
+        assert!(snap.features > 0);
+    }
+
+    #[test]
+    fn publishes_every_k_updates() {
+        let cfg = TrainerWireConfig { publish_every_updates: 5, ..test_cfg() };
+        let dim = 8;
+        let (published, sink) = capture_sink();
+        let trainer = OnlineTrainer::spawn_with_sink(&cfg, dim, sink);
+        // Alternating labels on one fixed coordinate keep the running
+        // margin at or below zero on every example (the weight chases
+        // the flipping label), so each of the 23 examples is a
+        // guaranteed update — no dependence on the stochastic walk.
+        for i in 0..23 {
+            let y = if i % 2 == 0 { 1.0 } else { -1.0 };
+            let x = Features::Sparse { idx: vec![0], val: vec![1.0] };
+            while trainer.learn(x.clone(), y) == Err(LearnError::Shed) {
+                std::thread::yield_now();
+            }
+        }
+        trainer.shutdown();
+        let n = published.lock().unwrap().len();
+        // 23 updates at K=5 ⇒ 4 cadence publishes + 1 final partial.
+        assert_eq!(trainer.stats().updates, 23);
+        assert_eq!(n, 5);
+        assert_eq!(trainer.stats().publishes, 5);
+    }
+
+    #[test]
+    fn full_queue_sheds_explicitly() {
+        let cfg = TrainerWireConfig { queue: 2, publish_every_updates: 1, ..test_cfg() };
+        let dim = 4;
+        // A sink that parks the trainer thread so the queue backs up
+        // deterministically: signal entry, then wait for release.
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel();
+        let (release_tx, release_rx) = std::sync::mpsc::channel::<()>();
+        let sink: PublishSink = Box::new(move |_snap| {
+            let _ = entered_tx.send(());
+            let _ = release_rx.recv();
+            true
+        });
+        let trainer = OnlineTrainer::spawn_with_sink(&cfg, dim, sink);
+
+        let x = || Features::Sparse { idx: vec![0], val: vec![1.0] };
+        // First example updates (margin 0 < θ) and triggers a publish,
+        // parking the thread inside the sink.
+        trainer.learn(x(), 1.0).unwrap();
+        entered_rx.recv().unwrap();
+        // Queue is empty and the consumer is parked: fill it, then the
+        // next submission must shed.
+        trainer.learn(x(), 1.0).unwrap();
+        trainer.learn(x(), -1.0).unwrap();
+        assert_eq!(trainer.learn(x(), 1.0), Err(LearnError::Shed));
+        assert_eq!(trainer.stats().sheds, 1);
+        assert_eq!(trainer.stats().examples, 3);
+
+        drop(release_tx); // unpark: further publishes return immediately
+        trainer.shutdown();
+        assert_eq!(trainer.learn(x(), 1.0), Err(LearnError::Closed));
+    }
+
+    #[test]
+    fn time_cadence_publishes_without_updates_pending() {
+        let cfg = TrainerWireConfig {
+            publish_every_updates: 0,
+            publish_every_ms: 20,
+            ..test_cfg()
+        };
+        let dim = 4;
+        let (published, sink) = capture_sink();
+        let trainer = OnlineTrainer::spawn_with_sink(&cfg, dim, sink);
+        trainer.learn(Features::Sparse { idx: vec![0], val: vec![1.0] }, 1.0).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while published.lock().unwrap().is_empty() {
+            assert!(Instant::now() < deadline, "time-based publish never fired");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        trainer.shutdown();
+    }
+}

@@ -791,6 +791,42 @@ impl std::fmt::Display for SubmitError {
     }
 }
 
+/// Fired by a worker after it sends each response. Cloneable and cheap;
+/// the default is a no-op, so the threaded I/O backend (which blocks on
+/// the response channel directly) pays nothing. The event-loop backend
+/// installs a callback that signals its pollers' wake fds, turning
+/// "a completion landed" into an epoll event instead of a tick poll.
+#[derive(Clone, Default)]
+pub struct CompletionNotifier {
+    f: Option<Arc<dyn Fn() + Send + Sync>>,
+}
+
+impl CompletionNotifier {
+    /// A notifier that calls `f` on every completion.
+    pub fn new(f: impl Fn() + Send + Sync + 'static) -> Self {
+        Self { f: Some(Arc::new(f)) }
+    }
+
+    /// Fire the notifier (no-op unless a callback is installed).
+    #[inline]
+    pub fn notify(&self) {
+        if let Some(f) = &self.f {
+            f();
+        }
+    }
+
+    /// Whether a callback is installed.
+    pub fn is_active(&self) -> bool {
+        self.f.is_some()
+    }
+}
+
+impl std::fmt::Debug for CompletionNotifier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CompletionNotifier({})", if self.f.is_some() { "active" } else { "no-op" })
+    }
+}
+
 /// Handle for submitting requests to a running service. Cloneable;
 /// dropping every handle shuts the workers down.
 #[derive(Clone)]
@@ -865,6 +901,7 @@ pub struct PredictionService {
     /// Worker threads.
     pub workers: usize,
     seed: u64,
+    notifier: CompletionNotifier,
 }
 
 /// A running service: join handles + stats.
@@ -899,12 +936,20 @@ impl PredictionService {
             queue: queue.max(1),
             workers: 1,
             seed,
+            notifier: CompletionNotifier::default(),
         }
     }
 
     /// Use `n` worker threads.
     pub fn with_workers(mut self, n: usize) -> Self {
         self.workers = n.max(1);
+        self
+    }
+
+    /// Fire `notifier` after every response send (see
+    /// [`CompletionNotifier`]).
+    pub fn with_notifier(mut self, notifier: CompletionNotifier) -> Self {
+        self.notifier = notifier;
         self
     }
 
@@ -921,8 +966,9 @@ impl PredictionService {
             let stats = stats.clone();
             let max_batch = self.max_batch;
             let seed = self.seed ^ (worker_id as u64) << 32;
+            let notifier = self.notifier.clone();
             handles.push(std::thread::spawn(move || {
-                worker_loop(rx, model, stats, max_batch, seed)
+                worker_loop(rx, model, stats, max_batch, seed, notifier)
             }));
         }
         (ServiceHandle { tx }, RunningService { stats, handles })
@@ -957,11 +1003,14 @@ fn worker_loop(
     stats: Arc<ServiceStats>,
     max_batch: usize,
     seed: u64,
+    notifier: CompletionNotifier,
 ) {
     match &*model {
-        ServingModel::Binary(snapshot) => binary_worker(&rx, snapshot, &stats, max_batch, seed),
+        ServingModel::Binary(snapshot) => {
+            binary_worker(&rx, snapshot, &stats, max_batch, seed, &notifier)
+        }
         ServingModel::Ensemble(ensemble) => {
-            ensemble_worker(&rx, ensemble, &stats, max_batch, seed)
+            ensemble_worker(&rx, ensemble, &stats, max_batch, seed, &notifier)
         }
     }
 }
@@ -980,6 +1029,7 @@ fn binary_worker(
     stats: &ServiceStats,
     max_batch: usize,
     seed: u64,
+    notifier: &CompletionNotifier,
 ) {
     let mut orders = OrderGenerator::new(model.policy, seed);
     orders.refresh(&model.weights);
@@ -1029,6 +1079,7 @@ fn binary_worker(
             // admission, so served traffic keeps the histogram honest.
             stats.record(resp.features_evaluated, total);
             let _ = req.respond.send(resp);
+            notifier.notify();
         }
     }
 }
@@ -1039,6 +1090,7 @@ fn ensemble_worker(
     stats: &ServiceStats,
     max_batch: usize,
     seed: u64,
+    notifier: &CompletionNotifier,
 ) {
     let mut orders = ensemble.make_orders(seed);
     let mut batch: Vec<ScoreRequest> = Vec::with_capacity(max_batch);
@@ -1060,6 +1112,7 @@ fn ensemble_worker(
             };
             stats.record(resp.features_evaluated, total);
             let _ = req.respond.send(resp);
+            notifier.notify();
         }
     }
 }
@@ -1536,6 +1589,28 @@ mod tests {
         assert!(resp.score.is_nan());
         drop(h);
         run.join();
+    }
+
+    #[test]
+    fn completion_notifier_fires_once_per_response() {
+        let fired = Arc::new(AtomicU64::new(0));
+        let count = Arc::clone(&fired);
+        let notifier = CompletionNotifier::new(move || {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(notifier.is_active());
+        assert!(!CompletionNotifier::default().is_active());
+        CompletionNotifier::default().notify(); // no-op, must not panic
+        let dim = 16;
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0)
+            .with_notifier(notifier)
+            .spawn();
+        for _ in 0..5 {
+            h.score(vec![1.0; dim]).unwrap();
+        }
+        drop(h);
+        run.join();
+        assert_eq!(fired.load(Ordering::Relaxed), 5);
     }
 
     #[test]

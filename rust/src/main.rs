@@ -22,7 +22,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context};
 
-use attentive::config::{ExperimentConfig, ServerConfig};
+use attentive::config::{ExperimentConfig, ServerConfig, TrainerWireConfig};
 use attentive::coordinator::scheduler::{run_experiment, run_sweep};
 use attentive::coordinator::service::{
     EnsembleSnapshot, ModelSnapshot, PredictionService, ServingModel,
@@ -62,9 +62,11 @@ COMMANDS:
                [--model name=path ...] [--requests N] [--batch B]
                [--workers W] [--queue Q]
                [--io-backend threads|event-loop] [--event-threads T]
-               [--max-conns N]
+               [--max-conns N] [--learn] [--learn-queue N]
+               [--learn-publish-updates K] [--learn-publish-ms T]
+               [--learn-lambda L] [--learn-seed S]
                with --listen: TCP server (v1 JSON lines; a hello op with
-               proto 2 or 3 upgrades a connection to binary frames —
+               proto 2..4 upgrades a connection to binary frames —
                docs/PROTOCOL.md). --model name=path (repeatable) serves a
                registry of named shards behind one port: each path holds a
                binary ModelSnapshot or an ensemble snapshot, the first name
@@ -72,22 +74,28 @@ COMMANDS:
                independently. --io-backend event-loop multiplexes all
                connections over T epoll threads (Linux; thousands of idle
                connections) instead of a thread pair per connection.
+               --learn attaches an online trainer to every binary shard:
+               the learn op streams labeled examples into a per-shard
+               background Attentive Pegasos that republishes the serving
+               snapshot every K updates and/or T ms.
                otherwise: in-process synthetic benchmark
-  bench-serve  [--addr ADDR] [--mode v1-dense|v2-sparse-json|v2-binary|classify]
+  bench-serve  [--addr ADDR]
+               [--mode v1-dense|v2-sparse-json|v2-binary|classify|learn|mixed]
                [--model NAME] [--requests N] [--connections C] [--pipeline P]
                [--hard FRAC] [--sparse-eps E] [--batch B] [--workers W]
                [--queue Q] [--io-backend threads|event-loop]
                [--event-threads T] [--open-loop]
                [--json BENCH_serve.json] [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
-               three wire modes, a multiclass classify pass, and full
-               evaluation on the same traffic; --io-backend selects the
-               loopback server's transport; --open-loop sweeps one
-               request at a time across C mostly-idle connections
-               (the many-connections scaling check) instead of
-               pipelining; --json writes the machine-readable report,
-               --floors gates on committed throughput floors (exit 1 on
-               regression)
+               three wire modes, a multiclass classify pass, online
+               learn + mixed learn/score passes against a dedicated
+               trainer-backed shard, and full evaluation on the same
+               traffic; --io-backend selects the loopback server's
+               transport; --open-loop sweeps one request at a time
+               across C mostly-idle connections (the many-connections
+               scaling check) instead of pipelining; --json writes the
+               machine-readable report, --floors gates on committed
+               throughput floors (exit 1 on regression)
   init-config  [out.json]
   export-idx   <dir> [--count N] [--seed S]
   help
@@ -100,7 +108,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     };
     let args =
-        Args::parse_with(&argv[1..], &["open-loop"]).map_err(|e| anyhow::anyhow!(e))?;
+        Args::parse_with(&argv[1..], &["open-loop", "learn"]).map_err(|e| anyhow::anyhow!(e))?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "train-multiclass" => cmd_train_multiclass(&args),
@@ -404,6 +412,23 @@ fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
         args.get_parse("event-threads", cfg.event_threads).map_err(|e| anyhow::anyhow!(e))?;
     cfg.max_conns =
         args.get_parse("max-conns", cfg.max_conns).map_err(|e| anyhow::anyhow!(e))?;
+    // `--learn` attaches an online trainer to every binary shard (the
+    // `learn` op); the `--learn-*` knobs also tune a trainer block that
+    // came in via `--server-config`.
+    if args.has("learn") && cfg.trainer.is_none() {
+        cfg.trainer = Some(TrainerWireConfig::default());
+    }
+    if let Some(t) = &mut cfg.trainer {
+        t.queue = args.get_parse("learn-queue", t.queue).map_err(|e| anyhow::anyhow!(e))?;
+        t.publish_every_updates = args
+            .get_parse("learn-publish-updates", t.publish_every_updates)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        t.publish_every_ms = args
+            .get_parse("learn-publish-ms", t.publish_every_ms)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        t.lambda = args.get_parse("learn-lambda", t.lambda).map_err(|e| anyhow::anyhow!(e))?;
+        t.seed = args.get_parse("learn-seed", t.seed).map_err(|e| anyhow::anyhow!(e))?;
+    }
     Ok(cfg)
 }
 
@@ -472,7 +497,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             "ops: score / classify / stats / models / reload / ping / hello — one JSON \
              object per line; optional \"model\" field routes to a named shard"
         );
-        println!("protocol v2/v3: hello {{\"proto\":3}} switches to sparse binary frames");
+        println!("protocol v2-v4: hello {{\"proto\":4}} switches to sparse binary frames");
+        if cfg.trainer.is_some() {
+            println!(
+                "online learning on: the learn op (JSON, or LEARN_SPARSE frames under \
+                 protocol v4) streams labeled examples into each binary shard's trainer"
+            );
+        }
         server.wait();
         return Ok(());
     }
@@ -619,7 +650,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             format!("{}", r.feature_percentile(0.50)),
             format!("{}", r.feature_percentile(0.99)),
             format!("{:.0}", r.bytes_per_req()),
-            format!("{}", r.answered),
+            format!("{}", r.answered + r.learned),
             format!("{}", r.overloaded),
         ]);
     };
@@ -689,11 +720,18 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
 
         let mut srv_cfg = server_config_from_args(args)?;
         srv_cfg.listen = "127.0.0.1:0".into();
+        // Always host a trainer for the learn/mixed passes. They drive a
+        // dedicated third shard so the default shard's reload-to-full
+        // comparison below is never racing trainer publishes.
+        if srv_cfg.trainer.is_none() {
+            srv_cfg.trainer = Some(TrainerWireConfig::default());
+        }
         let server = TcpServer::serve_models(
             &srv_cfg,
             vec![
-                ("default".to_string(), attentive_snapshot.into()),
+                ("default".to_string(), attentive_snapshot.clone().into()),
                 ("digits".to_string(), ensemble_snapshot.into()),
+                ("learn".to_string(), attentive_snapshot.into()),
             ],
         )?;
         report_backend = srv_cfg.io_backend;
@@ -734,7 +772,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             println!(
                 "loopback server on {addr} ({} backend): {requests} requests × {} passes ...",
                 srv_cfg.io_backend.name(),
-                ClientMode::ALL.len() + 2
+                ClientMode::ALL.len() + 4
             );
 
             for mode in ClientMode::ALL {
@@ -753,6 +791,22 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             row(&mut table, "classify", &classify_report);
             passes.push(("classify".to_string(), classify_report));
 
+            // Online-learning passes: pure learn traffic, then a 50/50
+            // learn+score mix, both against the dedicated "learn" shard
+            // (LEARN_SPARSE frames under protocol v4).
+            let learn_report = loadgen::run(&LoadGenConfig {
+                model: Some("learn".to_string()),
+                ..loadcfg(addr.clone(), ClientMode::Learn)
+            })?;
+            row(&mut table, "learn", &learn_report);
+            passes.push(("learn".to_string(), learn_report));
+            let mixed_report = loadgen::run(&LoadGenConfig {
+                model: Some("learn".to_string()),
+                ..loadcfg(addr.clone(), ClientMode::Mixed)
+            })?;
+            row(&mut table, "mixed", &mixed_report);
+            passes.push(("mixed".to_string(), mixed_report));
+
             let mut control = Client::connect(&addr)?;
             control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
             let full_report = loadgen::run(&loadcfg(addr, ClientMode::V1Dense))?;
@@ -770,6 +824,21 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 stats.accepted_conns,
                 stats.overloaded
             );
+            for m in &stats.models {
+                if m.trainer && m.learn_examples > 0 {
+                    println!(
+                        "learn shard {:?}: {} examples → {} updates, {} publish(es) \
+                         (serving gen {}), {} shed, {:.1} features/example",
+                        m.name,
+                        m.learn_examples,
+                        m.learn_updates,
+                        m.learn_publishes,
+                        m.gen,
+                        m.learn_sheds,
+                        m.learn_features as f64 / m.learn_examples.max(1) as f64
+                    );
+                }
+            }
             let v1 = &passes[0].1;
             let v2b = &passes[2].1;
             if v1.req_per_s() > 0.0 {

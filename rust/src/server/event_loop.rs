@@ -57,12 +57,16 @@
 //! ## Wakeups
 //!
 //! Worker completions arrive on per-request mpsc receivers, which epoll
-//! cannot watch. Instead of cross-thread wakeup machinery the loop
-//! polls: while any connection has outstanding slots it waits at most
-//! [`ACTIVE_TICK_MS`]; fully idle it waits [`IDLE_TICK_MS`] (also the
-//! shutdown-flag latency bound). Under load `epoll_wait` returns
-//! immediately anyway, so the tick only matters in the
-//! idle-but-pending tail.
+//! cannot watch directly. Each shard therefore registers an **eventfd**
+//! ([`WakeFd`]) in its epoll set under a sentinel token; the coordinator
+//! workers signal every shard's eventfd through the hub's
+//! [`CompletionNotifier`](crate::coordinator::service::CompletionNotifier)
+//! the moment a response is sent, so `epoll_wait` returns immediately
+//! and the pump tick resolves the slot. With a wake fd installed the
+//! loop waits up to [`IDLE_TICK_MS`] even while slots are outstanding
+//! (the tick is only a lost-wakeup safety net); without one — the
+//! legacy configuration — it falls back to polling at
+//! [`ACTIVE_TICK_MS`] whenever any connection has outstanding slots.
 //!
 //! ## No mio?
 //!
@@ -87,7 +91,7 @@ use crate::server::tcp::{
 
 /// Raw epoll FFI: the kernel ABI subset this backend needs. Linux only.
 mod sys {
-    use std::os::raw::c_int;
+    use std::os::raw::{c_int, c_uint, c_void};
 
     pub const EPOLL_CLOEXEC: c_int = 0o2000000;
     pub const EPOLL_CTL_ADD: c_int = 1;
@@ -97,6 +101,9 @@ mod sys {
     pub const EPOLLERR: u32 = 0x008;
     pub const EPOLLHUP: u32 = 0x010;
     pub const EPOLLRDHUP: u32 = 0x2000;
+
+    pub const EFD_CLOEXEC: c_int = 0o2000000;
+    pub const EFD_NONBLOCK: c_int = 0o4000;
 
     /// `struct epoll_event`. Packed on x86-64 (kernel ABI); natural
     /// alignment elsewhere.
@@ -118,6 +125,61 @@ mod sys {
             timeout: c_int,
         ) -> c_int;
         pub fn close(fd: c_int) -> c_int;
+        pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+        pub fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+        pub fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    }
+}
+
+/// Epoll token reserved for a shard's wake eventfd (never a valid
+/// connection fd, which are nonnegative).
+const WAKE_TOKEN: u64 = u64::MAX;
+
+/// A nonblocking eventfd used to kick a loop shard out of `epoll_wait`
+/// when a coordinator worker completes a request. Signaling from any
+/// thread is a single 8-byte `write`; the owning shard drains the
+/// counter on wake. The fd closes on drop.
+pub(crate) struct WakeFd {
+    fd: std::os::raw::c_int,
+}
+
+// Safety: the fd is only ever used via read/write/epoll syscalls,
+// all of which are thread-safe on a shared descriptor.
+unsafe impl Send for WakeFd {}
+unsafe impl Sync for WakeFd {}
+
+impl WakeFd {
+    /// Create a fresh eventfd (counter 0, nonblocking, cloexec).
+    pub(crate) fn new() -> Result<WakeFd> {
+        let fd = unsafe { sys::eventfd(0, sys::EFD_NONBLOCK | sys::EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(Error::io("eventfd", std::io::Error::last_os_error()));
+        }
+        Ok(WakeFd { fd })
+    }
+
+    /// Wake the owning shard. Nonblocking: if the counter is already
+    /// saturated the write fails with EAGAIN, which is fine — the fd is
+    /// readable either way, so the wakeup is never lost.
+    pub(crate) fn signal(&self) {
+        let one: u64 = 1;
+        unsafe {
+            sys::write(self.fd, (&one as *const u64).cast(), 8);
+        }
+    }
+
+    /// Reset the counter so level-triggered epoll stops reporting it.
+    fn drain(&self) {
+        let mut buf = 0u64;
+        unsafe {
+            sys::read(self.fd, (&mut buf as *mut u64).cast(), 8);
+        }
+    }
+}
+
+impl Drop for WakeFd {
+    fn drop(&mut self) {
+        unsafe { sys::close(self.fd) };
     }
 }
 
@@ -144,10 +206,12 @@ const ACTIVE_TICK_MS: i32 = 1;
 const IDLE_TICK_MS: i32 = 50;
 
 /// One event-loop shard: an epoll instance plus the accept thread's
-/// hand-off inbox.
+/// hand-off inbox, and optionally the wake eventfd the coordinator
+/// workers signal on completion (see module docs, "Wakeups").
 struct LoopShard {
     epfd: std::os::raw::c_int,
     inbox: Mutex<Vec<TcpStream>>,
+    wake: Option<Arc<WakeFd>>,
 }
 
 // Safety: epfd is only ever passed to epoll syscalls, which are
@@ -259,11 +323,16 @@ impl EventBackend {
 }
 
 /// Spawn the backend: `event_threads` loop shards plus the accept
-/// thread, all serving `shared`'s registry.
+/// thread, all serving `shared`'s registry. `wake_fds` carries one
+/// pre-created eventfd per shard (created before the registry so the
+/// hubs' [`CompletionNotifier`](crate::coordinator::service::CompletionNotifier)
+/// can already signal them); pass an empty vec to fall back to the
+/// legacy 1 ms completion-poll tick.
 pub(crate) fn spawn(
     listener: TcpListener,
     shared: Arc<Shared>,
     event_threads: usize,
+    mut wake_fds: Vec<Arc<WakeFd>>,
 ) -> Result<EventBackend> {
     let mut shards = Vec::with_capacity(event_threads.max(1));
     for _ in 0..event_threads.max(1) {
@@ -271,7 +340,15 @@ pub(crate) fn spawn(
         if epfd < 0 {
             return Err(Error::io("epoll_create1", std::io::Error::last_os_error()));
         }
-        shards.push(Arc::new(LoopShard { epfd, inbox: Mutex::new(Vec::new()) }));
+        let wake = if wake_fds.is_empty() { None } else { Some(wake_fds.remove(0)) };
+        if let Some(wake) = &wake {
+            let mut ev = sys::EpollEvent { events: sys::EPOLLIN, data: WAKE_TOKEN };
+            if unsafe { sys::epoll_ctl(epfd, sys::EPOLL_CTL_ADD, wake.fd, &mut ev) } < 0 {
+                unsafe { sys::close(epfd) };
+                return Err(Error::io("epoll_ctl(wake)", std::io::Error::last_os_error()));
+            }
+        }
+        shards.push(Arc::new(LoopShard { epfd, inbox: Mutex::new(Vec::new()), wake }));
     }
     let mut loop_joins = Vec::with_capacity(shards.len());
     for shard in &shards {
@@ -330,7 +407,14 @@ fn run_loop(shard: &LoopShard, shared: &Shared) {
         if shared.shutting_down.load(Ordering::SeqCst) {
             break;
         }
-        let timeout = if active.is_empty() { IDLE_TICK_MS } else { ACTIVE_TICK_MS };
+        // With a wake eventfd the workers interrupt the wait on every
+        // completion, so outstanding slots don't force a short tick —
+        // the remaining timeout is only a lost-wakeup/shutdown bound.
+        let timeout = if active.is_empty() || shard.wake.is_some() {
+            IDLE_TICK_MS
+        } else {
+            ACTIVE_TICK_MS
+        };
         let n = unsafe {
             sys::epoll_wait(shard.epfd, events.as_mut_ptr(), events.len() as i32, timeout)
         };
@@ -346,9 +430,17 @@ fn run_loop(shard: &LoopShard, shared: &Shared) {
         adopt(shard, shared, &mut conns);
         for ev in &events[..n as usize] {
             // Copy out of the (possibly packed) struct before use.
-            let fd = ev.data as i32;
+            let data = ev.data;
             let mask = ev.events;
-            handle_event(&mut conns, &mut active, fd, mask, shard, shared, &mut scratch);
+            if data == WAKE_TOKEN {
+                // Worker-completion wakeup: reset the counter; the pump
+                // tick below resolves whichever slots became ready.
+                if let Some(wake) = &shard.wake {
+                    wake.drain();
+                }
+                continue;
+            }
+            handle_event(&mut conns, &mut active, data as i32, mask, shard, shared, &mut scratch);
         }
         // Pump tick: revisit every connection with outstanding slots.
         let tick = std::mem::take(&mut active);

@@ -17,12 +17,14 @@
 //! 0x04 SCORE_SPARSE2    req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
 //! 0x05 CLASSIFY_SPARSE  req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
 //! 0x06 CLASSIFY_SPARSE_VERBOSE  req  same payload as 0x05; answered by 0x85  (v3)
+//! 0x07 LEARN_SPARSE     req   model:u16 label:i8(±1) nnz:u32 then nnz × (idx:u32 val:f64)  (v4)
 //! 0x81 SCORE            resp  gen:u32 evaluated:u32 score:f64
 //! 0x82 ERROR            resp  code:u8 retryable:u8 msg_len:u16 msg bytes
 //! 0x83 JSON_RESP        resp  UTF-8 JSON body (any v1 response document)
 //! 0x84 CLASS            resp  gen:u32 label:i64 votes:u32 voters:u32 evaluated:u32  (v3)
 //! 0x85 CLASS_VERBOSE    resp  CLASS fields, then count:u32 then
 //!                             count × (pos:i64 neg:i64 vote:i64 features:u32)  (v3)
+//! 0x86 LEARN_ACK        resp  gen:u32 seen:u64  (v4)
 //! ```
 //!
 //! ## Zero-copy decode
@@ -58,6 +60,17 @@
 //! connection; clients send them only after `hello {"proto":3}` is
 //! granted (the legacy `SCORE_SPARSE` keeps decoding forever, routed to
 //! the default shard).
+//!
+//! The protocol-v4 op closes the train→serve loop: `LEARN_SPARSE`
+//! submits one labeled example (`label` is ±1 on the wire) to the
+//! routed shard's online trainer, which periodically publishes fresh
+//! snapshot generations into the same hub the score path serves from.
+//! Accepted examples are answered with `LEARN_ACK` carrying the shard's
+//! *current serving* generation and the cumulative accepted-example
+//! count; a full learn queue sheds with a retryable
+//! [`ErrorCode::Overloaded`], and a shard with no trainer attached
+//! answers a non-retryable [`ErrorCode::WrongModel`]. Clients send
+//! `LEARN_SPARSE` only after `hello {"proto":4}` is granted.
 //!
 //! A `gen` of 0 in a request means "any model generation"; a nonzero
 //! value pins the request to that generation and the server sheds it
@@ -188,6 +201,8 @@ pub const OP_SCORE_SPARSE2: u8 = 0x04;
 pub const OP_CLASSIFY_SPARSE: u8 = 0x05;
 /// Op byte: sparse classify request with per-voter breakdown (v3).
 pub const OP_CLASSIFY_SPARSE_VERBOSE: u8 = 0x06;
+/// Op byte: sparse learn request (v4; model-routed labeled example).
+pub const OP_LEARN_SPARSE: u8 = 0x07;
 /// Op byte: score response.
 pub const OP_SCORE: u8 = 0x81;
 /// Op byte: error response.
@@ -198,6 +213,8 @@ pub const OP_JSON_RESP: u8 = 0x83;
 pub const OP_CLASS: u8 = 0x84;
 /// Op byte: classify response with per-voter breakdown (v3).
 pub const OP_CLASS_VERBOSE: u8 = 0x85;
+/// Op byte: learn acknowledgement (v4).
+pub const OP_LEARN_ACK: u8 = 0x86;
 
 /// One decoded v2 frame (either direction).
 #[derive(Debug, Clone, PartialEq)]
@@ -261,6 +278,20 @@ pub enum Frame {
         /// Values at those coordinates.
         val: Vec<f64>,
     },
+    /// v4 sparse learn request: one labeled example for the routed
+    /// shard's online trainer. Payload layout matches `ScoreSparse2`
+    /// except a `label:i8` (±1) replaces the generation pin (learning
+    /// always feeds the live trainer, never a pinned generation).
+    LearnSparse {
+        /// Interned model shard id.
+        model: u16,
+        /// Example label, ±1.
+        label: i8,
+        /// Coordinate indices (u32 on the wire), strictly increasing.
+        idx: Vec<u32>,
+        /// Values at those coordinates.
+        val: Vec<f64>,
+    },
     /// Score response: the serving generation, coordinates evaluated,
     /// and the signed margin.
     Score {
@@ -314,6 +345,16 @@ pub enum Frame {
         evaluated: u32,
         /// Per-voter outcome rows, in pair-enumeration order.
         per_voter: Vec<VoterVote>,
+    },
+    /// Learn acknowledgement: the example was accepted into the shard's
+    /// learn queue.
+    LearnAck {
+        /// The shard's *current serving* generation at ack time (learn
+        /// is asynchronous: this generation does not yet reflect the
+        /// acked example).
+        gen: u32,
+        /// Cumulative examples accepted by this shard's trainer.
+        seen: u64,
     },
 }
 
@@ -399,6 +440,26 @@ impl Frame {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
+            Frame::LearnSparse { model, label, idx, val } => {
+                assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+                assert!(
+                    idx.len() <= u32::MAX as usize,
+                    "sparse frame nnz {} exceeds the u32 wire bound",
+                    idx.len()
+                );
+                assert!(
+                    *label == 1 || *label == -1,
+                    "learn label must be ±1, got {label}"
+                );
+                out.push(OP_LEARN_SPARSE);
+                out.extend_from_slice(&model.to_le_bytes());
+                out.push(*label as u8);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
             Frame::Score { gen, evaluated, score } => {
                 out.push(OP_SCORE);
                 out.extend_from_slice(&gen.to_le_bytes());
@@ -444,6 +505,11 @@ impl Frame {
                     out.extend_from_slice(&row.vote.to_le_bytes());
                     out.extend_from_slice(&row.features.to_le_bytes());
                 }
+            }
+            Frame::LearnAck { gen, seen } => {
+                out.push(OP_LEARN_ACK);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&seen.to_le_bytes());
             }
         }
         let body_len = (out.len() - prefix_at - 4) as u32;
@@ -504,6 +570,27 @@ impl Frame {
         out.push(op);
         out.extend_from_slice(&model.to_le_bytes());
         out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Encode a v4 `LEARN_SPARSE` request straight from `(idx, val)`
+    /// slices into a reusable buffer (the loadgen learn hot loop).
+    ///
+    /// # Panics
+    ///
+    /// On a label outside ±1 or mismatched slice lengths.
+    pub fn put_learn_sparse(out: &mut Vec<u8>, model: u16, label: i8, idx: &[u32], val: &[f64]) {
+        assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+        assert!(label == 1 || label == -1, "learn label must be ±1, got {label}");
+        let body_len = 1 + 2 + 1 + 4 + 12 * idx.len();
+        out.extend_from_slice(&(body_len as u32).to_le_bytes());
+        out.push(OP_LEARN_SPARSE);
+        out.extend_from_slice(&model.to_le_bytes());
+        out.push(label as u8);
         out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
         for (&i, &v) in idx.iter().zip(val.iter()) {
             out.extend_from_slice(&i.to_le_bytes());
@@ -597,6 +684,37 @@ impl Frame {
                     _ => Frame::ScoreSparse2 { model, gen, idx, val },
                 })
             }
+            OP_LEARN_SPARSE => {
+                if payload.len() < 7 {
+                    return Err(FrameError::BadLayout("learn header needs 7 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let label = payload[2] as i8;
+                if label != 1 && label != -1 {
+                    return Err(FrameError::BadLayout(format!(
+                        "learn label must be ±1, got byte {:#04x}",
+                        payload[2]
+                    )));
+                }
+                let nnz = u32::from_le_bytes(payload[3..7].try_into().unwrap()) as usize;
+                let pairs = &payload[7..];
+                // Divide instead of multiplying: `nnz * 12` can wrap on
+                // 32-bit usize targets.
+                if pairs.len() % 12 != 0 || pairs.len() / 12 != nnz {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} does not match {} pair bytes",
+                        nnz,
+                        pairs.len()
+                    )));
+                }
+                let mut idx = Vec::with_capacity(nnz);
+                let mut val = Vec::with_capacity(nnz);
+                for p in pairs.chunks_exact(12) {
+                    idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
+                    val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
+                }
+                Ok(Frame::LearnSparse { model, label, idx, val })
+            }
             OP_SCORE => {
                 if payload.len() != 16 {
                     return Err(FrameError::BadLayout(format!(
@@ -677,6 +795,18 @@ impl Frame {
                     voters: u32::from_le_bytes(payload[16..20].try_into().unwrap()),
                     evaluated: u32::from_le_bytes(payload[20..24].try_into().unwrap()),
                     per_voter,
+                })
+            }
+            OP_LEARN_ACK => {
+                if payload.len() != 12 {
+                    return Err(FrameError::BadLayout(format!(
+                        "learn-ack payload must be 12 bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                Ok(Frame::LearnAck {
+                    gen: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+                    seen: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
                 })
             }
             other => Err(FrameError::BadOp(other)),
@@ -792,6 +922,16 @@ pub enum FrameRef<'a> {
         /// Answer with the per-voter breakdown (`0x85`).
         verbose: bool,
     },
+    /// v4 sparse learn: 12-byte `(idx:u32, val:f64)` pairs plus the ±1
+    /// example label.
+    LearnSparse {
+        /// Interned model shard id.
+        model: u16,
+        /// Example label, ±1.
+        label: i8,
+        /// Raw pair bytes, length a multiple of 12.
+        pairs: &'a [u8],
+    },
     /// A response op (`0x80..`) sent by the peer — protocol abuse on
     /// the server side; carried so the caller can report it without
     /// paying for a full decode.
@@ -868,7 +1008,30 @@ impl<'a> FrameRef<'a> {
                     },
                 })
             }
-            OP_SCORE | OP_ERROR | OP_JSON_RESP | OP_CLASS | OP_CLASS_VERBOSE => {
+            OP_LEARN_SPARSE => {
+                if payload.len() < 7 {
+                    return Err(FrameError::BadLayout("learn header needs 7 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let label = payload[2] as i8;
+                if label != 1 && label != -1 {
+                    return Err(FrameError::BadLayout(format!(
+                        "learn label must be ±1, got byte {:#04x}",
+                        payload[2]
+                    )));
+                }
+                let nnz = u32::from_le_bytes(payload[3..7].try_into().unwrap()) as usize;
+                let pairs = &payload[7..];
+                if pairs.len() % 12 != 0 || pairs.len() / 12 != nnz {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} does not match {} pair bytes",
+                        nnz,
+                        pairs.len()
+                    )));
+                }
+                Ok(FrameRef::LearnSparse { model, label, pairs })
+            }
+            OP_SCORE | OP_ERROR | OP_JSON_RESP | OP_CLASS | OP_CLASS_VERBOSE | OP_LEARN_ACK => {
                 Ok(FrameRef::Response(op))
             }
             other => Err(FrameError::BadOp(other)),
@@ -879,9 +1042,9 @@ impl<'a> FrameRef<'a> {
     pub fn nnz(&self) -> usize {
         match self {
             FrameRef::ScoreSparse { pairs, .. } => pairs.len() / 10,
-            FrameRef::ScoreSparse2 { pairs, .. } | FrameRef::ClassifySparse { pairs, .. } => {
-                pairs.len() / 12
-            }
+            FrameRef::ScoreSparse2 { pairs, .. }
+            | FrameRef::ClassifySparse { pairs, .. }
+            | FrameRef::LearnSparse { pairs, .. } => pairs.len() / 12,
             FrameRef::ScoreDense { vals, .. } => vals.len() / 8,
             FrameRef::JsonReq(_) | FrameRef::Response(_) => 0,
         }
@@ -1216,6 +1379,72 @@ mod tests {
     }
 
     #[test]
+    fn learn_ops_round_trip_with_documented_layout() {
+        round_trip(Frame::LearnSparse {
+            model: 3,
+            label: -1,
+            idx: vec![0, 70_000, 4_000_000_000],
+            val: vec![0.25, -1.5, 1.0],
+        });
+        round_trip(Frame::LearnSparse { model: 0, label: 1, idx: vec![], val: vec![] });
+        round_trip(Frame::LearnAck { gen: 9, seen: u64::MAX });
+        round_trip(Frame::LearnAck { gen: 0, seen: 0 });
+        // LEARN_SPARSE: 1 (op) + 2 (model) + 1 (label) + 4 (nnz) + 12/pair.
+        let wire =
+            Frame::LearnSparse { model: 7, label: -1, idx: vec![70_000], val: vec![1.0] }.encode();
+        assert_eq!(&wire[0..4], &20u32.to_le_bytes());
+        assert_eq!(wire[4], OP_LEARN_SPARSE);
+        assert_eq!(&wire[5..7], &7u16.to_le_bytes());
+        assert_eq!(wire[7] as i8, -1);
+        assert_eq!(&wire[8..12], &1u32.to_le_bytes());
+        assert_eq!(&wire[12..16], &70_000u32.to_le_bytes());
+        assert_eq!(&wire[16..24], &1.0f64.to_le_bytes());
+        assert_eq!(wire.len(), 24);
+        // LEARN_ACK: 1 (op) + 4 (gen) + 8 (seen).
+        let wire = Frame::LearnAck { gen: 5, seen: 1234 }.encode();
+        assert_eq!(&wire[0..4], &13u32.to_le_bytes());
+        assert_eq!(wire[4], OP_LEARN_ACK);
+        assert_eq!(&wire[5..9], &5u32.to_le_bytes());
+        assert_eq!(&wire[9..17], &1234u64.to_le_bytes());
+        // The slice encoder matches the owned encoder.
+        let idx = vec![3u32, 17, 40];
+        let val = vec![0.5, -1.2, 2.0];
+        let mut out = Vec::new();
+        Frame::put_learn_sparse(&mut out, 5, 1, &idx, &val);
+        let owned =
+            Frame::LearnSparse { model: 5, label: 1, idx: idx.clone(), val: val.clone() }.encode();
+        assert_eq!(out, owned);
+    }
+
+    #[test]
+    fn learn_layout_violations_are_rejected() {
+        // Bad label byte (0) — both decoders must refuse.
+        let mut body = vec![OP_LEARN_SPARSE];
+        body.extend_from_slice(&0u16.to_le_bytes());
+        body.push(0);
+        body.extend_from_slice(&0u32.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(FrameError::BadLayout(_))));
+        assert!(matches!(FrameRef::decode_borrowed(&body), Err(FrameError::BadLayout(_))));
+        // nnz declaring more pairs than carried.
+        let mut body = vec![OP_LEARN_SPARSE];
+        body.extend_from_slice(&0u16.to_le_bytes());
+        body.push(1);
+        body.extend_from_slice(&5u32.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        body.extend_from_slice(&1.0f64.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&body), Err(FrameError::BadLayout(_))));
+        assert!(matches!(FrameRef::decode_borrowed(&body), Err(FrameError::BadLayout(_))));
+        // Short header.
+        assert!(Frame::decode_body(&[OP_LEARN_SPARSE, 0, 0]).is_err());
+        assert!(FrameRef::decode_borrowed(&[OP_LEARN_SPARSE, 0, 0]).is_err());
+        // Truncated ack.
+        assert!(matches!(
+            Frame::decode_body(&[OP_LEARN_ACK, 0, 0, 0, 0]),
+            Err(FrameError::BadLayout(_))
+        ));
+    }
+
+    #[test]
     fn borrowed_decode_matches_owned_decode() {
         let frames = vec![
             Frame::ScoreSparse { gen: 7, idx: vec![0, 13, 783], val: vec![0.25, -1.5, 1.0] },
@@ -1230,6 +1459,8 @@ mod tests {
             },
             Frame::ClassifySparse { model: 2, gen: 4, idx: vec![5, 100_000], val: vec![1.0, 2.0] },
             Frame::ClassifySparseVerbose { model: 2, gen: 4, idx: vec![5], val: vec![1.0] },
+            Frame::LearnSparse { model: 4, label: -1, idx: vec![5, 100_000], val: vec![1.0, 2.0] },
+            Frame::LearnSparse { model: 0, label: 1, idx: vec![], val: vec![] },
         ];
         for frame in frames {
             let wire = frame.encode();
@@ -1273,6 +1504,14 @@ mod tests {
                         Frame::ClassifySparse { model, gen, idx, val }
                     }
                 }
+                FrameRef::LearnSparse { model, label, pairs } => {
+                    validate_pairs_u32(pairs).unwrap();
+                    let Features::Sparse { idx, val } = pairs_to_features_u32(pairs) else {
+                        unreachable!()
+                    };
+                    assert_eq!(borrowed.nnz(), idx.len());
+                    Frame::LearnSparse { model, label, idx, val }
+                }
                 FrameRef::Response(op) => panic!("request decoded as response {op:#04x}"),
             };
             assert_eq!(rebuilt, frame);
@@ -1280,6 +1519,8 @@ mod tests {
         // Response ops surface as Response without a payload decode.
         let wire = Frame::Score { gen: 1, evaluated: 2, score: 3.0 }.encode();
         assert_eq!(FrameRef::decode_borrowed(&wire[4..]), Ok(FrameRef::Response(OP_SCORE)));
+        let wire = Frame::LearnAck { gen: 1, seen: 2 }.encode();
+        assert_eq!(FrameRef::decode_borrowed(&wire[4..]), Ok(FrameRef::Response(OP_LEARN_ACK)));
         // And both decoders agree on rejects.
         assert!(FrameRef::decode_borrowed(&[]).is_err());
         assert!(FrameRef::decode_borrowed(&[0x7F]).is_err());

@@ -17,8 +17,8 @@ use std::sync::mpsc::Receiver;
 use std::sync::Mutex;
 
 use crate::coordinator::service::{
-    Features, PredictionService, ReqKind, RunningService, ScoreResponse, ServiceHandle,
-    ServingModel, StatsSnapshot, SubmitError,
+    CompletionNotifier, Features, PredictionService, ReqKind, RunningService, ScoreResponse,
+    ServiceHandle, ServingModel, StatsSnapshot, SubmitError,
 };
 
 /// Why the hub rejected a request.
@@ -124,6 +124,9 @@ pub struct ModelHub {
     queue: usize,
     workers: usize,
     seed: u64,
+    /// Fired by every generation's workers after each response send;
+    /// survives reloads (applied to every spawned generation).
+    notifier: CompletionNotifier,
 }
 
 impl ModelHub {
@@ -137,11 +140,26 @@ impl ModelHub {
         workers: usize,
         seed: u64,
     ) -> Self {
+        Self::new_with_notifier(model, max_batch, queue, workers, seed, CompletionNotifier::default())
+    }
+
+    /// [`Self::new`] with a worker-completion notifier, installed on the
+    /// first generation and on every generation a reload spawns.
+    pub fn new_with_notifier(
+        model: impl Into<ServingModel>,
+        max_batch: usize,
+        queue: usize,
+        workers: usize,
+        seed: u64,
+        notifier: CompletionNotifier,
+    ) -> Self {
         let model = model.into();
         let (dim, accepts, kind, voters) =
             (model.dim(), model.kind(), model.kind_name(), model.voter_count());
-        let (handle, run) =
-            PredictionService::new(model, max_batch, queue, seed).with_workers(workers).spawn();
+        let (handle, run) = PredictionService::new(model, max_batch, queue, seed)
+            .with_workers(workers)
+            .with_notifier(notifier.clone())
+            .spawn();
         Self {
             inner: Mutex::new(HubState {
                 handle: Some(handle),
@@ -160,6 +178,7 @@ impl ModelHub {
             queue,
             workers,
             seed,
+            notifier,
         }
     }
 
@@ -287,6 +306,7 @@ impl ModelHub {
         let seed = self.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let (handle, run) = PredictionService::new(model, self.max_batch, self.queue, seed)
             .with_workers(self.workers)
+            .with_notifier(self.notifier.clone())
             .spawn();
         let mut st = self.inner.lock().unwrap();
         if st.handle.is_none() {

@@ -42,7 +42,9 @@ use crate::coordinator::service::{Features, ModelSnapshot, ServingModel};
 use crate::data::synth::{SynthConfig, SynthDigits};
 use crate::error::{Error, Result};
 use crate::server::frame::{ErrorCode, Frame, FrameError};
-use crate::server::protocol::{ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3};
+use crate::server::protocol::{
+    ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3, PROTO_V4,
+};
 use crate::util::rng::Rng64;
 
 /// Frame-length cap the client applies to server responses.
@@ -89,16 +91,17 @@ impl Client {
     }
 
     /// Negotiate binary framing, asking for the highest version this
-    /// build speaks (v3). Returns the granted version: 3 or 2 on
-    /// success (both switch to binary frames; only 3 unlocks the
-    /// model-routed frame ops), 1 when the server declines or predates
-    /// the handshake (transparent fallback — the connection keeps
-    /// working in JSON-lines mode either way).
+    /// build speaks (v4). Returns the granted version: 4, 3, or 2 on
+    /// success (all switch to binary frames; 3 unlocks the model-routed
+    /// frame ops and 4 the online-learning `LEARN_SPARSE` frame), 1
+    /// when the server declines or predates the handshake (transparent
+    /// fallback — the connection keeps working in JSON-lines mode
+    /// either way).
     pub fn negotiate(&mut self) -> Result<u32> {
         if self.proto >= PROTO_V2 {
             return Ok(self.proto);
         }
-        let line = Request::Hello { proto: PROTO_V3 }.to_line();
+        let line = Request::Hello { proto: PROTO_V4 }.to_line();
         self.writer
             .write_all(line.as_bytes())
             .and_then(|()| self.writer.flush())
@@ -110,7 +113,7 @@ impl Client {
         }
         match Response::parse(reply.trim()).map_err(|e| Error::format("hello reply", e))? {
             Response::Hello { proto, .. } if proto >= PROTO_V2 => {
-                self.proto = proto.min(PROTO_V3);
+                self.proto = proto.min(PROTO_V4);
                 Ok(self.proto)
             }
             // Declined (proto 1) or a pre-handshake server answering
@@ -149,6 +152,7 @@ impl Client {
                     per_voter,
                 })
             }
+            Ok(Frame::LearnAck { gen, seen }) => Ok(Response::Learned { id: None, gen, seen }),
             Ok(Frame::Error { code, retryable, msg }) => Ok(Response::Error {
                 id: None,
                 error: if msg.is_empty() { code.name().to_string() } else { msg },
@@ -336,6 +340,39 @@ impl Client {
         self.call_frame(Frame::ClassifySparseVerbose { model, gen, idx, val })
     }
 
+    /// Feed one labeled example to a shard's online trainer via the
+    /// JSON `learn` op (works on any protocol version; `None` routes to
+    /// the default shard). The `Learned` response carries the shard's
+    /// current serving generation and the trainer's cumulative
+    /// accepted-example count.
+    pub fn learn(
+        &mut self,
+        model: Option<&str>,
+        label: i8,
+        features: impl Into<Features>,
+    ) -> Result<Response> {
+        self.call(&Request::Learn {
+            id: None,
+            model: model.map(str::to_string),
+            label,
+            features: features.into(),
+        })
+    }
+
+    /// Feed one labeled sparse example with the native v4 binary frame
+    /// (`LEARN_SPARSE`, answered by `LEARN_ACK`). Needs a negotiated v4
+    /// connection.
+    pub fn learn_sparse(
+        &mut self,
+        model: u16,
+        label: i8,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+    ) -> Result<Response> {
+        self.require_proto(PROTO_V4, "learn_sparse")?;
+        self.call_frame(Frame::LearnSparse { model, label, idx, val })
+    }
+
     /// Fetch server statistics.
     pub fn stats(&mut self) -> Result<StatsReport> {
         match self.call(&Request::Stats)? {
@@ -384,6 +421,15 @@ pub enum ClientMode {
     /// v3 binary multiclass classify frames (`CLASSIFY_SPARSE`) against
     /// an ensemble shard (set `LoadGenConfig.model`).
     Classify,
+    /// v4 binary online-learning frames (`LEARN_SPARSE`): every request
+    /// feeds a labeled example to the target shard's trainer. Labels
+    /// come from the generated digit — the pair's first digit is the
+    /// positive class.
+    Learn,
+    /// Mixed online traffic: alternating `LEARN_SPARSE` and
+    /// `SCORE_SPARSE2` frames on the same connection — the serving
+    /// shape of the learn-while-scoring acceptance loop.
+    Mixed,
 }
 
 impl ClientMode {
@@ -400,6 +446,8 @@ impl ClientMode {
             ClientMode::V2SparseJson => "v2-sparse-json",
             ClientMode::V2Binary => "v2-binary",
             ClientMode::Classify => "classify",
+            ClientMode::Learn => "learn",
+            ClientMode::Mixed => "mixed",
         }
     }
 
@@ -410,6 +458,8 @@ impl ClientMode {
             "v2-sparse-json" => Ok(ClientMode::V2SparseJson),
             "v2-binary" => Ok(ClientMode::V2Binary),
             "classify" => Ok(ClientMode::Classify),
+            "learn" => Ok(ClientMode::Learn),
+            "mixed" => Ok(ClientMode::Mixed),
             other => Err(format!("unknown client mode {other:?}")),
         }
     }
@@ -479,6 +529,8 @@ pub struct LoadReport {
     pub sent: u64,
     /// Score responses received.
     pub answered: u64,
+    /// Learn acknowledgements received (examples the trainer accepted).
+    pub learned: u64,
     /// Explicit `overloaded` shed responses received.
     pub overloaded: u64,
     /// Other error responses (protocol, dimension, transport).
@@ -505,12 +557,12 @@ impl LoadReport {
         if self.answered == 0 { 0.0 } else { self.total_features as f64 / self.answered as f64 }
     }
 
-    /// Responses (answered + shed) per second.
+    /// Responses (answered + learned + shed) per second.
     pub fn req_per_s(&self) -> f64 {
         if self.elapsed_s <= 0.0 {
             0.0
         } else {
-            (self.answered + self.overloaded) as f64 / self.elapsed_s
+            (self.answered + self.learned + self.overloaded) as f64 / self.elapsed_s
         }
     }
 
@@ -544,6 +596,7 @@ impl LoadReport {
     pub fn merge(&mut self, other: &LoadReport) {
         self.sent += other.sent;
         self.answered += other.answered;
+        self.learned += other.learned;
         self.overloaded += other.overloaded;
         self.errors += other.errors;
         self.total_features += other.total_features;
@@ -583,6 +636,10 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
             fields.push(("voters", Json::Num(r.total_voters as f64)));
             fields.push(("avg_features_per_voter", Json::Num(r.avg_features_per_voter())));
         }
+        if r.learned > 0 {
+            // Learn pass: accepted-example throughput.
+            fields.push(("learned", Json::Num(r.learned as f64)));
+        }
         modes.push((name.clone(), Json::obj(fields)))
     }
     let find = |mode: ClientMode| {
@@ -616,6 +673,33 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
 /// Renderer config for the hard (heavily-noised) traffic class.
 fn hard_render_config() -> SynthConfig {
     SynthConfig { pixel_noise: 0.35, salt_prob: 0.2, jitter_px: 4.0, ..Default::default() }
+}
+
+/// Lowest protocol grant a mode's frames need.
+fn required_proto(mode: ClientMode) -> u32 {
+    match mode {
+        ClientMode::Classify => PROTO_V3,
+        ClientMode::Learn | ClientMode::Mixed => PROTO_V4,
+        _ => PROTO_V2,
+    }
+}
+
+/// Modes whose frames carry a wire model id (need a `models` lookup
+/// when a named shard is configured).
+fn routes_by_id(mode: ClientMode) -> bool {
+    matches!(mode, ClientMode::Classify | ClientMode::Learn | ClientMode::Mixed)
+}
+
+/// Label for learn traffic: the configured digit cycle's first digit is
+/// the positive class, everything else negative — the same 1-vs-1 task
+/// shape the offline `Trainer` uses.
+fn learn_label(cfg: &LoadGenConfig, seq: u64) -> i8 {
+    let digit = cfg.digits[seq as usize % cfg.digits.len()];
+    if digit == cfg.digits[0] {
+        1
+    } else {
+        -1
+    }
 }
 
 /// Drive the server with mixed easy/hard digit traffic and merge the
@@ -668,6 +752,7 @@ const OPEN_LOOP_SHARDS: usize = 8;
 /// Tally one binary response frame into the report.
 fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
     match frame {
+        Frame::LearnAck { .. } => report.learned += 1,
         Frame::Score { evaluated, .. } => {
             report.answered += 1;
             report.total_features += *evaluated as u64;
@@ -688,6 +773,7 @@ fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
 /// Tally one JSON response line into the report.
 fn count_json_response(report: &mut LoadReport, line: &str) {
     match Response::parse(line.trim()) {
+        Ok(Response::Learned { .. }) => report.learned += 1,
         Ok(Response::Score { features_evaluated, .. }) => {
             report.answered += 1;
             report.total_features += features_evaluated as u64;
@@ -748,7 +834,10 @@ fn drive_open_loop_shard(
     }
     let base = cfg.requests / cfg.connections;
     let rem = cfg.requests % cfg.connections;
-    let binary = matches!(cfg.mode, ClientMode::V2Binary | ClientMode::Classify);
+    let binary = matches!(
+        cfg.mode,
+        ClientMode::V2Binary | ClientMode::Classify | ClientMode::Learn | ClientMode::Mixed
+    );
 
     struct Sock {
         stream: TcpStream,
@@ -768,8 +857,8 @@ fn drive_open_loop_shard(
         // thousands of these.
         let mut reader = BufReader::with_capacity(1024, CountingReader::new(read_half));
         if binary {
-            let needed = if cfg.mode == ClientMode::Classify { PROTO_V3 } else { PROTO_V2 };
-            let hello = Request::Hello { proto: PROTO_V3 }.to_line();
+            let needed = required_proto(cfg.mode);
+            let hello = Request::Hello { proto: PROTO_V4 }.to_line();
             (&stream)
                 .write_all(hello.as_bytes())
                 .map_err(|e| Error::io("<loadgen hello>", e))?;
@@ -789,9 +878,9 @@ fn drive_open_loop_shard(
                     ))
                 }
             }
-            // Resolve the classify shard id once per shard, on the
+            // Resolve the routed shard id once per shard, on the
             // first negotiated socket.
-            if cfg.mode == ClientMode::Classify && c == c0 {
+            if routes_by_id(cfg.mode) && c == c0 {
                 if let Some(name) = &cfg.model {
                     let req =
                         Frame::JsonReq(Request::Models.to_json().to_string_compact()).encode();
@@ -997,6 +1086,39 @@ fn encode_request_into(
                 &scratch.val,
             );
         }
+        ClientMode::Learn => {
+            Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
+            Frame::put_learn_sparse(
+                &mut scratch.out,
+                model_id,
+                learn_label(cfg, id),
+                &scratch.idx,
+                &scratch.val,
+            );
+        }
+        ClientMode::Mixed => {
+            // Deterministic alternation: even sequence numbers learn,
+            // odd ones score — reproducible and exactly half-and-half.
+            Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
+            if id % 2 == 0 {
+                Frame::put_learn_sparse(
+                    &mut scratch.out,
+                    model_id,
+                    learn_label(cfg, id),
+                    &scratch.idx,
+                    &scratch.val,
+                );
+            } else {
+                Frame::put_sparse_v3(
+                    &mut scratch.out,
+                    crate::server::frame::OP_SCORE_SPARSE2,
+                    model_id,
+                    0,
+                    &scratch.idx,
+                    &scratch.val,
+                );
+            }
+        }
     }
 }
 
@@ -1024,12 +1146,16 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     // The binary modes negotiate their framing before any traffic; this
     // driver targets our own server, so a declined handshake is an
     // error, not a fallback. Classify additionally needs the v3 frame
-    // ops and the model's wire id.
-    let binary = matches!(cfg.mode, ClientMode::V2Binary | ClientMode::Classify);
+    // ops, learn/mixed the v4 learn frame, and the routed modes the
+    // model's wire id.
+    let binary = matches!(
+        cfg.mode,
+        ClientMode::V2Binary | ClientMode::Classify | ClientMode::Learn | ClientMode::Mixed
+    );
     let mut model_id = 0u16;
     if binary {
-        let needed = if cfg.mode == ClientMode::Classify { PROTO_V3 } else { PROTO_V2 };
-        let hello = Request::Hello { proto: PROTO_V3 }.to_line();
+        let needed = required_proto(cfg.mode);
+        let hello = Request::Hello { proto: PROTO_V4 }.to_line();
         writer
             .write_all(hello.as_bytes())
             .and_then(|()| writer.flush())
@@ -1048,7 +1174,7 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
                 ))
             }
         }
-        if cfg.mode == ClientMode::Classify {
+        if routes_by_id(cfg.mode) {
             if let Some(name) = &cfg.model {
                 // Resolve the shard name to its wire id via the models
                 // op (a JSON envelope frame on this now-binary stream).
@@ -1135,23 +1261,7 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
                 }
                 Ok(frame) => {
                     received += 1;
-                    match frame {
-                        Frame::Score { evaluated, .. } => {
-                            report.answered += 1;
-                            report.total_features += evaluated as u64;
-                            report.features.push(evaluated);
-                        }
-                        Frame::Class { evaluated, voters, .. } => {
-                            report.answered += 1;
-                            report.total_features += evaluated as u64;
-                            report.features.push(evaluated);
-                            report.total_voters += voters as u64;
-                        }
-                        Frame::Error { code: ErrorCode::Overloaded, .. } => {
-                            report.overloaded += 1
-                        }
-                        _ => report.errors += 1,
-                    }
+                    count_binary_response(&mut report, &frame);
                 }
             }
         } else {
@@ -1162,21 +1272,7 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
                 break; // server closed on us; report what we have
             }
             received += 1;
-            match Response::parse(line.trim()) {
-                Ok(Response::Score { features_evaluated, .. }) => {
-                    report.answered += 1;
-                    report.total_features += features_evaluated as u64;
-                    report.features.push(features_evaluated as u32);
-                }
-                Ok(Response::Classify { features_evaluated, voters, .. }) => {
-                    report.answered += 1;
-                    report.total_features += features_evaluated as u64;
-                    report.features.push(features_evaluated as u32);
-                    report.total_voters += voters as u64;
-                }
-                Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
-                _ => report.errors += 1,
-            }
+            count_json_response(&mut report, &line);
         }
     }
     report.bytes_recv = reader.get_ref().bytes;
@@ -1193,6 +1289,7 @@ mod tests {
         let mut a = LoadReport {
             sent: 10,
             answered: 9,
+            learned: 0,
             overloaded: 1,
             errors: 0,
             total_features: 900,
@@ -1205,6 +1302,7 @@ mod tests {
         let b = LoadReport {
             sent: 5,
             answered: 5,
+            learned: 0,
             overloaded: 0,
             errors: 0,
             total_features: 100,
@@ -1233,9 +1331,16 @@ mod tests {
             assert_eq!(ClientMode::from_name(mode.name()).unwrap(), mode);
         }
         assert_eq!(ClientMode::from_name("classify").unwrap(), ClientMode::Classify);
+        assert_eq!(ClientMode::from_name("learn").unwrap(), ClientMode::Learn);
+        assert_eq!(ClientMode::from_name("mixed").unwrap(), ClientMode::Mixed);
         assert!(
             !ClientMode::ALL.contains(&ClientMode::Classify),
             "the transport sweep drives binary shards only"
+        );
+        assert!(
+            !ClientMode::ALL.contains(&ClientMode::Learn)
+                && !ClientMode::ALL.contains(&ClientMode::Mixed),
+            "learn traffic needs a trainer-enabled server; it is driven separately"
         );
         assert!(ClientMode::from_name("v3-quantum").is_err());
         assert_eq!(ClientMode::default(), ClientMode::V1Dense);
@@ -1290,6 +1395,41 @@ mod tests {
                 assert_eq!(gen, 0);
                 assert_eq!(idx.len(), nnz);
             }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // Learn mode: an exact v4 frame — 4 (len) + 1 (op) + 2 (model) +
+        // 1 (label) + 4 (nnz) + 12 per pair. Sequence 0 renders the
+        // pair's first digit, so the label is +1; sequence 1 is -1.
+        let learn = encode_request(&cfg(ClientMode::Learn), 3, 0, features.clone());
+        assert_eq!(learn.len(), 12 + 12 * nnz);
+        match Frame::decode(&learn, 1 << 20).unwrap().0 {
+            Frame::LearnSparse { model, label, idx, .. } => {
+                assert_eq!(model, 3);
+                assert_eq!(label, 1);
+                assert_eq!(idx.len(), nnz);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        match Frame::decode(&encode_request(&cfg(ClientMode::Learn), 3, 1, features.clone()), 1 << 20)
+            .unwrap()
+            .0
+        {
+            Frame::LearnSparse { label, .. } => assert_eq!(label, -1),
+            other => panic!("wrong frame {other:?}"),
+        }
+        // Mixed mode alternates: even sequences learn, odd ones score.
+        match Frame::decode(&encode_request(&cfg(ClientMode::Mixed), 0, 2, features.clone()), 1 << 20)
+            .unwrap()
+            .0
+        {
+            Frame::LearnSparse { .. } => {}
+            other => panic!("wrong frame {other:?}"),
+        }
+        match Frame::decode(&encode_request(&cfg(ClientMode::Mixed), 0, 3, features.clone()), 1 << 20)
+            .unwrap()
+            .0
+        {
+            Frame::ScoreSparse2 { .. } => {}
             other => panic!("wrong frame {other:?}"),
         }
         // A routed JSON score carries the model name.

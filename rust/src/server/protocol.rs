@@ -14,7 +14,8 @@
 //! {"op":"score","idx":[3,17,40],"val":[0.5,-1.2,2.0]}  // sparse (v2 form)
 //! {"op":"score","model":"digits-2v3","idx":[...],"val":[...]}  // routed
 //! {"op":"classify","model":"digits","idx":[...],"val":[...]}   // all-pairs vote
-//! {"op":"hello","proto":3}                         // framing negotiation
+//! {"op":"learn","y":1,"idx":[...],"val":[...]}     // online-training example
+//! {"op":"hello","proto":4}                         // framing negotiation
 //! {"op":"stats"}
 //! {"op":"models"}                                  // shard table
 //! {"op":"reload","model":"digits-2v3","snapshot":{...ServingModel...}}
@@ -28,12 +29,18 @@
 //! lands on the default shard, which is how single-model clients keep
 //! working against a multi-model server. `classify` runs the attentive
 //! all-pairs vote on an ensemble shard and answers with the predicted
-//! class plus total features touched across voters. `hello` negotiates
-//! the framing for the rest of the connection: asking for `"proto":2`
-//! (or higher) switches both directions to the length-prefixed binary
+//! class plus total features touched across voters. `learn` submits one
+//! labeled example (`"y"` = ±1) to the routed shard's online trainer;
+//! the trainer periodically publishes fresh snapshot generations into
+//! the same hub the score path serves from, and a full learn queue
+//! sheds with a retryable `overloaded` error. `hello` negotiates the
+//! framing for the rest of the connection: asking for `"proto":2` (or
+//! higher) switches both directions to the length-prefixed binary
 //! frames of [`crate::server::frame`] — a grant of 3 additionally
-//! unlocks the model-routed v3 frame ops; anything else stays on JSON
-//! lines, so v1 clients that never send `hello` are untouched.
+//! unlocks the model-routed v3 frame ops, and a grant of 4 the
+//! `LEARN_SPARSE` frame (the learn *capability*; the JSON `learn` op
+//! works on any protocol version). Anything else stays on JSON lines,
+//! so v1 clients that never send `hello` are untouched.
 //!
 //! Responses always carry `"ok"`; errors carry `"error"` plus
 //! `"retryable"` (`true` for `overloaded` shed responses, which the
@@ -42,7 +49,8 @@
 //! ```text
 //! {"ok":true,"op":"score","id":7,"score":1.25,"features_evaluated":34}
 //! {"ok":true,"op":"classify","label":3,"votes":9,"voters":45,"features_evaluated":1210}
-//! {"ok":true,"op":"hello","proto":3,"gen":1,"dim":784}
+//! {"ok":true,"op":"learn","gen":2,"seen":128}
+//! {"ok":true,"op":"hello","proto":4,"gen":1,"dim":784}
 //! {"ok":true,"op":"stats", ...StatsReport...}
 //! {"ok":true,"op":"models","models":[{"name":"default","id":0,...},...]}
 //! {"ok":true,"op":"reload","dim":784}
@@ -59,10 +67,13 @@ use crate::util::json::Json;
 
 /// Protocol version 2: binary framing, single-model ops.
 pub const PROTO_V2: u32 = 2;
-/// Highest protocol version this build speaks: binary framing plus the
-/// model-routed v3 frame ops (dense score, u32-indexed sparse score,
-/// classify).
+/// Protocol version 3: binary framing plus the model-routed v3 frame
+/// ops (dense score, u32-indexed sparse score, classify).
 pub const PROTO_V3: u32 = 3;
+/// Highest protocol version this build speaks: v3 plus the online-
+/// learning capability (the binary `LEARN_SPARSE` frame and its
+/// `LEARN_ACK`).
+pub const PROTO_V4: u32 = 4;
 
 /// A client → server message.
 #[derive(Debug, Clone)]
@@ -70,7 +81,8 @@ pub enum Request {
     /// Negotiate the connection's framing (`proto` = requested version).
     Hello {
         /// Requested protocol version (1 = JSON lines, 2 = binary
-        /// frames, 3 = binary frames + model-routed ops).
+        /// frames, 3 = binary frames + model-routed ops, 4 = v3 plus
+        /// the `LEARN_SPARSE` capability).
         proto: u32,
     },
     /// Score one feature payload (dense or sparse) on a binary shard.
@@ -95,6 +107,18 @@ pub enum Request {
         /// and features-touched, so clients can see where the attentive
         /// budget went.
         verbose: bool,
+    },
+    /// Submit one labeled example to the routed shard's online trainer.
+    Learn {
+        /// Optional client-chosen correlation id, echoed in the response.
+        id: Option<u64>,
+        /// Registry shard to route to (`None` = the default shard).
+        model: Option<String>,
+        /// Example label, ±1.
+        label: i8,
+        /// The payload; sparse payloads are densified by the trainer,
+        /// never on the wire path.
+        features: Features,
     },
     /// Fetch the server's live statistics.
     Stats,
@@ -131,7 +155,7 @@ impl Request {
                 let proto = v.get("proto").and_then(|x| x.as_u64()).unwrap_or(1);
                 Ok(Request::Hello { proto: proto.min(u32::MAX as u64) as u32 })
             }
-            op @ ("score" | "classify") => {
+            op @ ("score" | "classify" | "learn") => {
                 let id = v.get("id").and_then(|x| x.as_u64());
                 let model = v.get("model").and_then(|s| s.as_str()).map(str::to_string);
                 let dense = v.get("features");
@@ -167,13 +191,22 @@ impl Request {
                 features.validate().map_err(|e| format!("{op}: {e}"))?;
                 let verbose = v.get("verbose").and_then(|b| b.as_bool()).unwrap_or(false);
                 if verbose && op != "classify" {
-                    return Err("score: verbose is a classify-only flag".into());
+                    return Err(format!("{op}: verbose is a classify-only flag"));
                 }
-                Ok(if op == "classify" {
-                    Request::Classify { id, model, features, verbose }
-                } else {
-                    Request::Score { id, model, features }
-                })
+                match op {
+                    "classify" => Ok(Request::Classify { id, model, features, verbose }),
+                    "learn" => {
+                        let y = v
+                            .get("y")
+                            .and_then(|x| x.as_i64())
+                            .ok_or("learn: missing label y")?;
+                        if y != 1 && y != -1 {
+                            return Err(format!("learn: y must be 1 or -1, got {y}"));
+                        }
+                        Ok(Request::Learn { id, model, label: y as i8, features })
+                    }
+                    _ => Ok(Request::Score { id, model, features }),
+                }
             }
             "stats" => Ok(Request::Stats),
             "models" => Ok(Request::Models),
@@ -185,6 +218,26 @@ impl Request {
             }),
             "ping" => Ok(Request::Ping),
             other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    /// Append the dense-or-sparse feature fields to a request object.
+    fn push_features(pairs: &mut Vec<(&'static str, Json)>, features: &Features) {
+        match features {
+            Features::Dense(x) => pairs.push((
+                "features",
+                Json::Arr(x.iter().map(|&f| Json::Num(f)).collect()),
+            )),
+            Features::Sparse { idx, val } => {
+                pairs.push((
+                    "idx",
+                    Json::Arr(idx.iter().map(|&i| Json::Num(i as f64)).collect()),
+                ));
+                pairs.push((
+                    "val",
+                    Json::Arr(val.iter().map(|&f| Json::Num(f)).collect()),
+                ));
+            }
         }
     }
 
@@ -208,22 +261,21 @@ impl Request {
                 if let Some(model) = model {
                     pairs.push(("model", Json::Str(model.clone())));
                 }
-                match features {
-                    Features::Dense(x) => pairs.push((
-                        "features",
-                        Json::Arr(x.iter().map(|&f| Json::Num(f)).collect()),
-                    )),
-                    Features::Sparse { idx, val } => {
-                        pairs.push((
-                            "idx",
-                            Json::Arr(idx.iter().map(|&i| Json::Num(i as f64)).collect()),
-                        ));
-                        pairs.push((
-                            "val",
-                            Json::Arr(val.iter().map(|&f| Json::Num(f)).collect()),
-                        ));
-                    }
+                Self::push_features(&mut pairs, features);
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
                 }
+                Json::obj(pairs)
+            }
+            Request::Learn { id, model, label, features } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("learn".into())),
+                    ("y", Json::Num(*label as f64)),
+                ];
+                if let Some(model) = model {
+                    pairs.push(("model", Json::Str(model.clone())));
+                }
+                Self::push_features(&mut pairs, features);
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
@@ -291,8 +343,22 @@ pub struct ModelStatsReport {
     pub early_exit_rate: f64,
     /// Shard serving generation.
     pub gen: u32,
-    /// Hot reloads applied to this shard.
+    /// Hot reloads applied to this shard (wire `reload` + trainer
+    /// publishes alike — every generation swap).
     pub reloads: u64,
+    /// Whether an online trainer is attached to this shard.
+    pub trainer: bool,
+    /// Examples the trainer accepted off the wire.
+    pub learn_examples: u64,
+    /// Accepted examples that updated the live learner.
+    pub learn_updates: u64,
+    /// Examples shed because the learn queue was full.
+    pub learn_sheds: u64,
+    /// Snapshot generations the trainer published into the hub.
+    pub learn_publishes: u64,
+    /// Features the learner evaluated while training (the attentive
+    /// budget actually spent on the learn path).
+    pub learn_features: u64,
 }
 
 impl ModelStatsReport {
@@ -304,17 +370,30 @@ impl ModelStatsReport {
             ("early_exit_rate", Json::Num(self.early_exit_rate)),
             ("gen", Json::Num(self.gen as f64)),
             ("reloads", Json::Num(self.reloads as f64)),
+            ("trainer", Json::Bool(self.trainer)),
+            ("learn_examples", Json::Num(self.learn_examples as f64)),
+            ("learn_updates", Json::Num(self.learn_updates as f64)),
+            ("learn_sheds", Json::Num(self.learn_sheds as f64)),
+            ("learn_publishes", Json::Num(self.learn_publishes as f64)),
+            ("learn_features", Json::Num(self.learn_features as f64)),
         ])
     }
 
     fn from_json(v: &Json) -> ModelStatsReport {
+        let int = |k: &str| v.get(k).and_then(|x| x.as_u64()).unwrap_or(0);
         ModelStatsReport {
             name: v.get("name").and_then(|s| s.as_str()).unwrap_or("").to_string(),
-            served: v.get("served").and_then(|x| x.as_u64()).unwrap_or(0),
+            served: int("served"),
             avg_features: v.get("avg_features").and_then(|x| x.as_f64()).unwrap_or(0.0),
             early_exit_rate: v.get("early_exit_rate").and_then(|x| x.as_f64()).unwrap_or(0.0),
-            gen: v.get("gen").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
-            reloads: v.get("reloads").and_then(|x| x.as_u64()).unwrap_or(0),
+            gen: int("gen") as u32,
+            reloads: int("reloads"),
+            trainer: v.get("trainer").and_then(|b| b.as_bool()).unwrap_or(false),
+            learn_examples: int("learn_examples"),
+            learn_updates: int("learn_updates"),
+            learn_sheds: int("learn_sheds"),
+            learn_publishes: int("learn_publishes"),
+            learn_features: int("learn_features"),
         }
     }
 }
@@ -435,6 +514,8 @@ pub struct ModelEntry {
     pub dim: usize,
     /// Voters behind the shard (0 for binary).
     pub voters: usize,
+    /// Whether the shard accepts `learn` traffic (trainer attached).
+    pub learn: bool,
 }
 
 impl ModelEntry {
@@ -446,6 +527,7 @@ impl ModelEntry {
             ("gen", Json::Num(self.gen as f64)),
             ("dim", Json::Num(self.dim as f64)),
             ("voters", Json::Num(self.voters as f64)),
+            ("learn", Json::Bool(self.learn)),
         ])
     }
 
@@ -457,6 +539,7 @@ impl ModelEntry {
             gen: v.get("gen").and_then(|x| x.as_u64()).unwrap_or(0) as u32,
             dim: v.get("dim").and_then(|x| x.as_usize()).unwrap_or(0),
             voters: v.get("voters").and_then(|x| x.as_usize()).unwrap_or(0),
+            learn: v.get("learn").and_then(|b| b.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -513,6 +596,16 @@ pub enum Response {
         features_evaluated: usize,
         /// Per-voter rows, in pair-enumeration order.
         per_voter: Vec<VoterVote>,
+    },
+    /// A learn example was accepted by the routed shard's trainer.
+    Learned {
+        /// Echo of the request id, if one was sent.
+        id: Option<u64>,
+        /// Shard serving generation at ack time; watching it grow is
+        /// how clients observe trainer publishes land.
+        gen: u32,
+        /// Cumulative examples this shard's trainer has accepted.
+        seen: u64,
     },
     /// Live statistics.
     Stats(StatsReport),
@@ -604,6 +697,18 @@ impl Response {
                                 .collect(),
                         ),
                     ),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+            Response::Learned { id, gen, seen } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("learn".into())),
+                    ("gen", Json::Num(*gen as f64)),
+                    ("seen", Json::Num(*seen as f64)),
                 ];
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
@@ -733,6 +838,11 @@ impl Response {
                     }),
                 }
             }
+            "learn" => Ok(Response::Learned {
+                id: v.get("id").and_then(|x| x.as_u64()),
+                gen: v.get("gen").and_then(|x| x.as_u64()).ok_or("learn: missing gen")? as u32,
+                seen: v.get("seen").and_then(|x| x.as_u64()).ok_or("learn: missing seen")?,
+            }),
             "stats" => Ok(Response::Stats(StatsReport::from_json(&v))),
             "models" => Ok(Response::Models(
                 v.get("models")
@@ -914,6 +1024,7 @@ mod tests {
                 gen: 1,
                 dim: 784,
                 voters: 0,
+                learn: true,
             },
             ModelEntry {
                 name: "digits".into(),
@@ -922,12 +1033,83 @@ mod tests {
                 gen: 3,
                 dim: 784,
                 voters: 45,
+                learn: false,
             },
         ];
         match Response::parse(&Response::Models(entries.clone()).to_line()).unwrap() {
             Response::Models(back) => assert_eq!(back, entries),
             other => panic!("wrong variant {other:?}"),
         }
+    }
+
+    #[test]
+    fn learn_request_round_trips_and_validates_label() {
+        let req = Request::Learn {
+            id: Some(12),
+            model: Some("digits-2v3".into()),
+            label: -1,
+            features: Features::Sparse { idx: vec![3, 17], val: vec![0.5, -1.2] },
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"op\":\"learn\"") && line.contains("\"y\":-1"));
+        match Request::parse(line.trim()).unwrap() {
+            Request::Learn { id, model, label, features: Features::Sparse { idx, val } } => {
+                assert_eq!(id, Some(12));
+                assert_eq!(model.as_deref(), Some("digits-2v3"));
+                assert_eq!(label, -1);
+                assert_eq!(idx, vec![3, 17]);
+                assert_eq!(val, vec![0.5, -1.2]);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Dense form, default shard, positive label.
+        let req = Request::Learn {
+            id: None,
+            model: None,
+            label: 1,
+            features: Features::Dense(vec![0.0, 1.0]),
+        };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Learn { model: None, label: 1, .. } => {}
+            other => panic!("wrong variant {other:?}"),
+        }
+        // The label is mandatory and must be exactly ±1.
+        assert!(Request::parse(r#"{"op":"learn","features":[1.0]}"#).is_err(), "missing y");
+        assert!(Request::parse(r#"{"op":"learn","y":0,"features":[1.0]}"#).is_err(), "y=0");
+        assert!(Request::parse(r#"{"op":"learn","y":2,"features":[1.0]}"#).is_err(), "y=2");
+        // Learn payloads get the same structural screening as score.
+        assert!(
+            Request::parse(r#"{"op":"learn","y":1,"idx":[5,2],"val":[1.0,2.0]}"#).is_err(),
+            "unsorted idx"
+        );
+        assert!(
+            Request::parse(r#"{"op":"learn","y":1,"idx":[1],"val":[1e999]}"#).is_err(),
+            "non-finite value"
+        );
+        assert!(
+            Request::parse(r#"{"op":"learn","y":1,"verbose":true,"features":[1.0]}"#).is_err(),
+            "verbose is classify-only"
+        );
+    }
+
+    #[test]
+    fn learn_response_round_trips() {
+        let resp = Response::Learned { id: Some(12), gen: 7, seen: 4096 };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::Learned { id, gen, seen } => {
+                assert_eq!(id, Some(12));
+                assert_eq!(gen, 7);
+                assert_eq!(seen, 4096);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        match Response::parse(&Response::Learned { id: None, gen: 0, seen: 1 }.to_line())
+            .unwrap()
+        {
+            Response::Learned { id: None, gen: 0, seen: 1 } => {}
+            other => panic!("wrong variant {other:?}"),
+        }
+        assert!(Response::parse(r#"{"ok":true,"op":"learn","gen":1}"#).is_err(), "missing seen");
     }
 
     #[test]
@@ -1092,6 +1274,12 @@ mod tests {
                     early_exit_rate: 0.9,
                     gen: 2,
                     reloads: 1,
+                    trainer: true,
+                    learn_examples: 5_000,
+                    learn_updates: 1_200,
+                    learn_sheds: 3,
+                    learn_publishes: 19,
+                    learn_features: 88_000,
                 },
                 ModelStatsReport {
                     name: "digits".into(),
@@ -1100,6 +1288,12 @@ mod tests {
                     early_exit_rate: 0.8,
                     gen: 1,
                     reloads: 0,
+                    trainer: false,
+                    learn_examples: 0,
+                    learn_updates: 0,
+                    learn_sheds: 0,
+                    learn_publishes: 0,
+                    learn_features: 0,
                 },
             ],
         };

@@ -18,8 +18,11 @@
 //! registration (binary v3 frames); the `models` op lists the table.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::coordinator::service::{ServingModel, StatsSnapshot};
+use crate::config::TrainerWireConfig;
+use crate::coordinator::online::{LearnError, OnlineTrainer, TrainerStatsSnapshot};
+use crate::coordinator::service::{CompletionNotifier, Features, ServingModel, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::server::hub::{HubError, HubInfo, ModelHub};
 
@@ -36,6 +39,12 @@ pub enum RegistryError {
     UnknownId(u16),
     /// The shard rejected the request (shed, kind/dim mismatch, ...).
     Hub(HubError),
+    /// A `learn` was routed to a shard with no online trainer attached.
+    NoTrainer(String),
+    /// The shard's learn queue was full; the example was shed. Retryable.
+    LearnShed,
+    /// The shard's trainer has shut down.
+    TrainerClosed,
 }
 
 impl From<HubError> for RegistryError {
@@ -50,14 +59,43 @@ impl std::fmt::Display for RegistryError {
             RegistryError::UnknownName(name) => write!(f, "unknown model {name:?}"),
             RegistryError::UnknownId(id) => write!(f, "unknown model id {id}"),
             RegistryError::Hub(e) => write!(f, "{e}"),
+            RegistryError::NoTrainer(name) => {
+                write!(f, "model {name:?} has no online trainer attached")
+            }
+            RegistryError::LearnShed => write!(f, "overloaded"),
+            RegistryError::TrainerClosed => write!(f, "trainer closed"),
         }
     }
 }
 
-/// One serving shard: a named, independently reloadable [`ModelHub`].
+/// One serving shard: a named, independently reloadable [`ModelHub`],
+/// optionally fed by a background [`OnlineTrainer`] that publishes
+/// fresh snapshot generations into the hub.
 struct Shard {
     name: String,
-    hub: ModelHub,
+    /// Shared so an attached trainer can publish into the hub's
+    /// generation swap from its own thread.
+    hub: Arc<ModelHub>,
+    trainer: Option<OnlineTrainer>,
+}
+
+impl Shard {
+    /// Route one labeled example to this shard's trainer. Returns
+    /// `(serving generation, cumulative accepted examples)` for the ack.
+    fn learn(&self, features: Features, label: f64) -> std::result::Result<(u32, u64), RegistryError> {
+        let trainer =
+            self.trainer.as_ref().ok_or_else(|| RegistryError::NoTrainer(self.name.clone()))?;
+        // Same dimension screen the score path applies at admission: a
+        // bad payload must never reach the trainer thread.
+        if let Err((expected, got)) = features.check_dim(self.hub.dim()) {
+            return Err(RegistryError::Hub(HubError::DimMismatch { expected, got }));
+        }
+        let seen = trainer.learn(features, label).map_err(|e| match e {
+            LearnError::Shed => RegistryError::LearnShed,
+            LearnError::Closed => RegistryError::TrainerClosed,
+        })?;
+        Ok((self.hub.generation(), seen))
+    }
 }
 
 /// A shard's identity and live serving state, as listed by the `models`
@@ -72,6 +110,8 @@ pub struct ShardInfo {
     pub hub: HubInfo,
     /// Hot reloads applied to this shard.
     pub reloads: u64,
+    /// Whether an online trainer is attached (the shard accepts `learn`).
+    pub learn: bool,
 }
 
 /// Per-shard slice of the `stats` op.
@@ -85,6 +125,8 @@ pub struct ShardStats {
     pub gen: u32,
     /// Hot reloads applied.
     pub reloads: u64,
+    /// Trainer counters, when an online trainer is attached.
+    pub trainer: Option<TrainerStatsSnapshot>,
 }
 
 /// A named collection of independently hot-reloadable model shards.
@@ -105,6 +147,20 @@ impl ModelRegistry {
         queue: usize,
         workers: usize,
         seed: u64,
+    ) -> Result<Self> {
+        Self::new_with_notifier(models, max_batch, queue, workers, seed, CompletionNotifier::default())
+    }
+
+    /// [`Self::new`] with a worker-completion notifier, fired by every
+    /// shard's workers after each response send (the event-loop backend
+    /// uses it to wake its pollers instead of tick-polling).
+    pub fn new_with_notifier(
+        models: Vec<(String, ServingModel)>,
+        max_batch: usize,
+        queue: usize,
+        workers: usize,
+        seed: u64,
+        notifier: CompletionNotifier,
     ) -> Result<Self> {
         if models.is_empty() {
             return Err(Error::Config("registry needs at least one model shard".into()));
@@ -130,10 +186,82 @@ impl ModelRegistry {
             let shard_seed = seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F);
             shards.push(Shard {
                 name,
-                hub: ModelHub::new(model, max_batch, queue, workers, shard_seed),
+                hub: Arc::new(ModelHub::new_with_notifier(
+                    model,
+                    max_batch,
+                    queue,
+                    workers,
+                    shard_seed,
+                    notifier.clone(),
+                )),
+                trainer: None,
             });
         }
         Ok(Self { shards, by_name })
+    }
+
+    /// Attach an online trainer to one shard (`None` = the default
+    /// shard): a background thread that consumes `learn` examples and
+    /// periodically publishes snapshots into the shard's hub. Fails on
+    /// ensemble shards (the trainer publishes binary snapshots) and on
+    /// shards that already have a trainer.
+    pub fn attach_trainer(&mut self, name: Option<&str>, cfg: &TrainerWireConfig) -> Result<()> {
+        let id = match name {
+            None => 0u16,
+            Some(n) => *self
+                .by_name
+                .get(n)
+                .ok_or_else(|| Error::Config(format!("unknown model shard {n:?}")))?,
+        };
+        let shard = &mut self.shards[id as usize];
+        let info = shard.hub.info();
+        if info.kind != "binary" {
+            return Err(Error::Config(format!(
+                "online trainer needs a binary shard, {:?} serves {}",
+                shard.name, info.kind
+            )));
+        }
+        if shard.trainer.is_some() {
+            return Err(Error::Config(format!(
+                "model shard {:?} already has a trainer",
+                shard.name
+            )));
+        }
+        shard.trainer = Some(OnlineTrainer::spawn(Arc::clone(&shard.hub), cfg, info.dim));
+        Ok(())
+    }
+
+    /// Route one labeled example by optional shard name (`None` = the
+    /// default shard). Returns `(serving generation, examples seen)`.
+    pub fn learn(
+        &self,
+        name: Option<&str>,
+        features: Features,
+        label: f64,
+    ) -> std::result::Result<(u32, u64), RegistryError> {
+        let shard = match name {
+            None => &self.shards[0],
+            Some(n) => {
+                let &id = self
+                    .by_name
+                    .get(n)
+                    .ok_or_else(|| RegistryError::UnknownName(n.to_string()))?;
+                &self.shards[id as usize]
+            }
+        };
+        shard.learn(features, label)
+    }
+
+    /// Route one labeled example by interned wire id (binary
+    /// `LEARN_SPARSE` frames; id 0 = default shard).
+    pub fn learn_by_id(
+        &self,
+        id: u16,
+        features: Features,
+        label: f64,
+    ) -> std::result::Result<(u32, u64), RegistryError> {
+        let shard = self.shards.get(id as usize).ok_or(RegistryError::UnknownId(id))?;
+        shard.learn(features, label)
     }
 
     /// Number of shards.
@@ -149,7 +277,18 @@ impl ModelRegistry {
 
     /// The default shard's hub (wire id 0).
     pub fn default_hub(&self) -> &ModelHub {
-        &self.shards[0].hub
+        &*self.shards[0].hub
+    }
+
+    /// Whether the shard routed by `name` has a trainer attached.
+    pub fn has_trainer(&self, name: Option<&str>) -> bool {
+        match name {
+            None => self.shards[0].trainer.is_some(),
+            Some(n) => self
+                .by_name
+                .get(n)
+                .is_some_and(|&id| self.shards[id as usize].trainer.is_some()),
+        }
     }
 
     /// Route by optional name: `None` (and the default shard's own
@@ -157,20 +296,20 @@ impl ModelRegistry {
     /// the hub so binary responses can be stamped.
     pub fn resolve_name(&self, name: Option<&str>) -> std::result::Result<(u16, &ModelHub), RegistryError> {
         match name {
-            None => Ok((0, &self.shards[0].hub)),
+            None => Ok((0, &*self.shards[0].hub)),
             Some(name) => {
                 let &id = self
                     .by_name
                     .get(name)
                     .ok_or_else(|| RegistryError::UnknownName(name.to_string()))?;
-                Ok((id, &self.shards[id as usize].hub))
+                Ok((id, &*self.shards[id as usize].hub))
             }
         }
     }
 
     /// Route by interned wire id (binary v3 frames; id 0 = default).
     pub fn resolve_id(&self, id: u16) -> std::result::Result<&ModelHub, RegistryError> {
-        self.shards.get(id as usize).map(|s| &s.hub).ok_or(RegistryError::UnknownId(id))
+        self.shards.get(id as usize).map(|s| &*s.hub).ok_or(RegistryError::UnknownId(id))
     }
 
     /// Hot-swap one shard's model (`None` routes to the default shard).
@@ -195,6 +334,7 @@ impl ModelRegistry {
                 id: id as u16,
                 hub: s.hub.info(),
                 reloads: s.hub.reloads(),
+                learn: s.trainer.is_some(),
             })
             .collect()
     }
@@ -208,6 +348,7 @@ impl ModelRegistry {
                 stats: s.hub.stats(),
                 gen: s.hub.generation(),
                 reloads: s.hub.reloads(),
+                trainer: s.trainer.as_ref().map(OnlineTrainer::stats),
             })
             .collect()
     }
@@ -226,9 +367,16 @@ impl ModelRegistry {
         self.shards.iter().map(|s| s.hub.reloads()).sum()
     }
 
-    /// Shut every shard down (drain + join). Returns the final
+    /// Shut every shard down (drain + join). Trainers go first — each
+    /// drains its queue and publishes a final snapshot into a hub that
+    /// is still accepting reloads — then the hubs. Returns the final
     /// aggregated statistics. Idempotent.
     pub fn shutdown(&self) -> StatsSnapshot {
+        for s in &self.shards {
+            if let Some(t) = &s.trainer {
+                t.shutdown();
+            }
+        }
         let mut total = StatsSnapshot::default();
         for s in &self.shards {
             total.add(&s.hub.shutdown());
@@ -320,6 +468,86 @@ mod tests {
         assert_eq!(per[0].stats.served, 1);
         assert_eq!(per[1].stats.served, 2);
         assert_eq!(reg.shutdown().served, 3);
+    }
+
+    #[test]
+    fn learn_routes_to_attached_trainer_and_publishes() {
+        let mut reg = two_shard_registry();
+        let cfg = TrainerWireConfig {
+            queue: 64,
+            publish_every_updates: 1, // publish on every update: observable fast
+            publish_every_ms: 0,
+            seed: 3,
+            ..TrainerWireConfig::default()
+        };
+        reg.attach_trainer(None, &cfg).unwrap();
+        assert!(reg.has_trainer(None));
+        assert!(!reg.has_trainer(Some("neg")));
+        assert!(reg.attach_trainer(None, &cfg).is_err(), "double attach");
+        assert!(reg.attach_trainer(Some("ghost"), &cfg).is_err(), "unknown shard");
+        let infos = reg.infos();
+        assert!(infos[0].learn && !infos[1].learn);
+
+        // Unrouted learns land on the default shard's trainer.
+        let x = Features::Sparse { idx: vec![0, 3], val: vec![1.0, -1.0] };
+        let (gen, seen) = reg.learn(None, x.clone(), 1.0).unwrap();
+        assert!(gen >= 1);
+        assert_eq!(seen, 1);
+        assert_eq!(reg.learn_by_id(0, x.clone(), -1.0).unwrap().1, 2);
+        // The first example updates from w = 0 and K = 1 publishes, so
+        // the shard's generation must eventually move past the seed gen.
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while reg.default_hub().generation() < 2 {
+            assert!(std::time::Instant::now() < deadline, "trainer publish never landed");
+            std::thread::yield_now();
+        }
+
+        // Routing errors: no trainer on the other shard, unknown names,
+        // and the same dimension screen the score path has.
+        match reg.learn(Some("neg"), x.clone(), 1.0) {
+            Err(RegistryError::NoTrainer(name)) => assert_eq!(name, "neg"),
+            other => panic!("expected no-trainer, got {other:?}"),
+        }
+        assert!(matches!(
+            reg.learn(Some("ghost"), x.clone(), 1.0),
+            Err(RegistryError::UnknownName(_))
+        ));
+        assert!(matches!(
+            reg.learn_by_id(9, x.clone(), 1.0),
+            Err(RegistryError::UnknownId(9))
+        ));
+        match reg.learn(None, Features::Sparse { idx: vec![8], val: vec![1.0] }, 1.0) {
+            Err(RegistryError::Hub(HubError::DimMismatch { expected: 8, got: 9 })) => {}
+            other => panic!("expected dim mismatch, got {other:?}"),
+        }
+
+        let per = reg.per_shard_stats();
+        let t = per[0].trainer.expect("default shard has a trainer");
+        assert_eq!(t.examples, 2);
+        assert!(per[1].trainer.is_none());
+        reg.shutdown();
+        assert!(matches!(reg.learn(None, x, 1.0), Err(RegistryError::TrainerClosed)));
+    }
+
+    #[test]
+    fn trainer_rejects_ensemble_shards() {
+        use crate::coordinator::service::{EnsembleSnapshot, VoterSnapshot};
+        let ensemble = EnsembleSnapshot {
+            classes: vec![0, 1],
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+            voters: vec![VoterSnapshot {
+                pos: 0,
+                neg: 1,
+                weights: vec![1.0; 8],
+                var_sn: 4.0,
+            }],
+        };
+        let mut reg =
+            ModelRegistry::new(vec![("digits".into(), ensemble.into())], 4, 64, 1, 0).unwrap();
+        let err = reg.attach_trainer(None, &TrainerWireConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("binary"), "got {err}");
+        reg.shutdown();
     }
 
     #[test]

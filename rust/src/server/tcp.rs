@@ -27,8 +27,23 @@
 //! carries its own rendering instructions, so the in-order response
 //! stream stays consistent across the switch. A grant of 3 additionally
 //! unlocks the model-routed v3 frame ops (dense score, u32-indexed
-//! sparse score, classify). Clients that never send `hello` (all v1
+//! sparse score, classify); a grant of 4 advertises the online-learning
+//! capability (`LEARN_SPARSE` / `LEARN_ACK` — the JSON `learn` op works
+//! at any version; like the v3 ops, the grant is capability discovery,
+//! not per-frame enforcement). Clients that never send `hello` (all v1
 //! clients) are served exactly as before, on the default shard.
+//!
+//! ## Online learning
+//!
+//! A `learn` request (JSON op or `LEARN_SPARSE` frame) routes a labeled
+//! example through the registry to the target shard's
+//! [`OnlineTrainer`](crate::coordinator::online::OnlineTrainer) — a
+//! non-blocking `try_send` onto the trainer's bounded queue, so the
+//! wire path never waits on learning: a full queue sheds the example
+//! with an explicit retryable `overloaded` error, exactly like score
+//! admission. The ack carries the shard's current serving generation
+//! and the trainer's cumulative accepted-example count, so clients can
+//! watch snapshot publishes land without a second channel.
 //!
 //! ## Control ops
 //!
@@ -52,7 +67,7 @@ use std::time::Instant;
 
 use crate::config::{IoBackend, ServerConfig};
 use crate::coordinator::service::{
-    Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
+    CompletionNotifier, Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
 };
 use crate::error::{Error, Result};
 use crate::server::bufpool::BufPool;
@@ -61,7 +76,7 @@ use crate::server::frame::{
 };
 use crate::server::hub::{HubError, ModelHub};
 use crate::server::protocol::{
-    ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V3,
+    ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V4,
 };
 use crate::server::registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
 
@@ -167,8 +182,36 @@ impl TcpServer {
         models: Vec<(String, ServingModel)>,
     ) -> Result<TcpServer> {
         cfg.validate()?;
-        let registry =
-            ModelRegistry::new(models, cfg.max_batch, cfg.queue, cfg.workers, cfg.seed)?;
+        // Event backend: the wake eventfds must exist before the
+        // registry so every hub's completion notifier can signal them
+        // from its first spawned worker generation.
+        let (notifier, wake_fds) = match cfg.io_backend {
+            IoBackend::EventLoop => make_event_wakeups(cfg.event_threads)?,
+            IoBackend::Threads => (CompletionNotifier::default(), Vec::new()),
+        };
+        let mut registry = ModelRegistry::new_with_notifier(
+            models,
+            cfg.max_batch,
+            cfg.queue,
+            cfg.workers,
+            cfg.seed,
+            notifier,
+        )?;
+        if let Some(trainer_cfg) = &cfg.trainer {
+            // Online learning: attach a trainer to every binary shard.
+            // Ensemble shards stay read-only — their 1-vs-1 voters are
+            // trained upstream and arrive whole via `reload`.
+            let names: Vec<String> = registry
+                .infos()
+                .into_iter()
+                .filter(|info| info.hub.kind == "binary")
+                .map(|info| info.name)
+                .collect();
+            for name in &names {
+                registry.attach_trainer(Some(name.as_str()), trainer_cfg)?;
+            }
+        }
+        let registry = registry;
         let listener = TcpListener::bind(&cfg.listen).map_err(|e| Error::io(&cfg.listen, e))?;
         let local_addr = listener.local_addr().map_err(|e| Error::io(&cfg.listen, e))?;
         let shared = Arc::new(Shared {
@@ -197,7 +240,7 @@ impl TcpServer {
                 }))
             }
             IoBackend::EventLoop => {
-                spawn_event_backend(listener, shared.clone(), cfg.event_threads)?
+                spawn_event_backend(listener, shared.clone(), cfg.event_threads, wake_fds)?
             }
         };
         Ok(TcpServer { shared, local_addr, backend: Some(backend) })
@@ -303,6 +346,31 @@ impl Drop for TcpServer {
     }
 }
 
+/// Create the event backend's worker-completion wakeups: one eventfd
+/// per loop shard, plus the [`CompletionNotifier`] the coordinator
+/// workers fire to signal them all (Linux only).
+#[cfg(target_os = "linux")]
+fn make_event_wakeups(
+    event_threads: usize,
+) -> Result<(CompletionNotifier, Vec<Arc<crate::server::event_loop::WakeFd>>)> {
+    let mut fds = Vec::with_capacity(event_threads.max(1));
+    for _ in 0..event_threads.max(1) {
+        fds.push(Arc::new(crate::server::event_loop::WakeFd::new()?));
+    }
+    let signal = fds.clone();
+    let notifier = CompletionNotifier::new(move || {
+        for fd in &signal {
+            fd.signal();
+        }
+    });
+    Ok((notifier, fds))
+}
+
+#[cfg(not(target_os = "linux"))]
+fn make_event_wakeups(_event_threads: usize) -> Result<(CompletionNotifier, Vec<()>)> {
+    Ok((CompletionNotifier::default(), Vec::new()))
+}
+
 /// Start the epoll backend (Linux). `ServerConfig::validate` already
 /// rejects the event loop elsewhere; the stub keeps non-Linux builds
 /// honest if a caller skips validation.
@@ -311,11 +379,13 @@ fn spawn_event_backend(
     listener: TcpListener,
     shared: Arc<Shared>,
     event_threads: usize,
+    wake_fds: Vec<Arc<crate::server::event_loop::WakeFd>>,
 ) -> Result<BackendHandles> {
     Ok(BackendHandles::Event(crate::server::event_loop::spawn(
         listener,
         shared,
         event_threads,
+        wake_fds,
     )?))
 }
 
@@ -324,6 +394,7 @@ fn spawn_event_backend(
     _listener: TcpListener,
     _shared: Arc<Shared>,
     _event_threads: usize,
+    _wake_fds: Vec<()>,
 ) -> Result<BackendHandles> {
     Err(Error::Config("io_backend event-loop needs epoll (Linux); use threads here".into()))
 }
@@ -492,7 +563,7 @@ pub(crate) fn json_step(line: &str, shared: &Shared) -> Step {
         Ok(Request::Hello { proto }) => {
             // Grant the highest version both sides speak; v1 keeps the
             // connection on JSON lines (transparent fallback).
-            let granted = proto.min(PROTO_V3).max(1);
+            let granted = proto.min(PROTO_V4).max(1);
             // One snapshot: (gen, dim) must not tear across a reload.
             // The handshake advertises the default shard, which is what
             // single-model clients will be talking to.
@@ -540,6 +611,38 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                 Ok(dim) => Step::Job(render(Response::Reloaded { dim })),
                 Err(e) => Step::Job(render(Response::Error {
                     id: None,
+                    error: e.to_string(),
+                    retryable: false,
+                })),
+            }
+        }
+        Request::Learn { id, model, label, features } => {
+            // Learning cost scales with the support too: the same nnz
+            // knob screens learn payloads on every wire.
+            if matches!(features, Features::Sparse { .. }) && features.nnz() > shared.max_nnz {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return Step::Job(render(Response::Error {
+                    id,
+                    error: format!(
+                        "nnz {} exceeds server cap {}",
+                        features.nnz(),
+                        shared.max_nnz
+                    ),
+                    retryable: false,
+                }));
+            }
+            match shared.registry.learn(model.as_deref(), features, label as f64) {
+                Ok((gen, seen)) => Step::Job(render(Response::Learned { id, gen, seen })),
+                Err(RegistryError::LearnShed) => {
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    Step::Job(render(Response::Error {
+                        id,
+                        error: "overloaded".into(),
+                        retryable: true,
+                    }))
+                }
+                Err(e) => Step::Job(render(Response::Error {
+                    id,
                     error: e.to_string(),
                     retryable: false,
                 })),
@@ -737,6 +840,40 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
                 }
             }
         }
+        // v4 online learning: screen the payload like a score, then a
+        // non-blocking hand-off to the shard's trainer queue — the ack
+        // (or shed) is synchronous, the model update is not.
+        FrameRef::LearnSparse { model, label, pairs } => {
+            match screen(pairs.len() / 12, frame::validate_pairs_u32(pairs)) {
+                Err(step) => step,
+                Ok(()) => {
+                    let features = frame::pairs_to_features_u32(pairs);
+                    match shared.registry.learn_by_id(model, features, f64::from(label)) {
+                        Ok((gen, seen)) => Step::Job(Job::Bytes(
+                            Frame::LearnAck { gen, seen }.encode(),
+                            WireClass::V2Binary,
+                        )),
+                        Err(RegistryError::LearnShed) => {
+                            shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                            err(ErrorCode::Overloaded, "overloaded".into())
+                        }
+                        Err(e @ RegistryError::NoTrainer(_)) => {
+                            err(ErrorCode::WrongModel, e.to_string())
+                        }
+                        Err(e @ RegistryError::TrainerClosed) => {
+                            err(ErrorCode::Unavailable, e.to_string())
+                        }
+                        Err(
+                            e @ (RegistryError::UnknownId(_) | RegistryError::UnknownName(_)),
+                        ) => err(ErrorCode::UnknownModel, e.to_string()),
+                        Err(RegistryError::Hub(e @ HubError::DimMismatch { .. })) => {
+                            err(ErrorCode::DimMismatch, e.to_string())
+                        }
+                        Err(e) => err(ErrorCode::BadRequest, e.to_string()),
+                    }
+                }
+            }
+        }
         // Response ops arriving from a client are protocol abuse.
         FrameRef::Response(_) => {
             shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
@@ -910,6 +1047,7 @@ fn model_entries(shared: &Shared) -> Vec<ModelEntry> {
             gen: info.hub.gen,
             dim: info.hub.dim,
             voters: info.hub.voters,
+            learn: info.learn,
         })
         .collect()
 }
@@ -938,13 +1076,23 @@ fn report(shared: &Shared) -> StatsReport {
             .registry
             .per_shard_stats()
             .into_iter()
-            .map(|shard| ModelStatsReport {
-                name: shard.name,
-                served: shard.stats.served,
-                avg_features: shard.stats.avg_features(),
-                early_exit_rate: shard.stats.early_exit_rate(),
-                gen: shard.gen,
-                reloads: shard.reloads,
+            .map(|shard| {
+                let trainer = shard.trainer;
+                let t = trainer.unwrap_or_default();
+                ModelStatsReport {
+                    name: shard.name,
+                    served: shard.stats.served,
+                    avg_features: shard.stats.avg_features(),
+                    early_exit_rate: shard.stats.early_exit_rate(),
+                    gen: shard.gen,
+                    reloads: shard.reloads,
+                    trainer: trainer.is_some(),
+                    learn_examples: t.examples,
+                    learn_updates: t.updates,
+                    learn_sheds: t.sheds,
+                    learn_publishes: t.publishes,
+                    learn_features: t.features,
+                }
             })
             .collect(),
     }
@@ -1016,7 +1164,7 @@ mod tests {
             other => panic!("expected score, got {other:?}"),
         }
         // Binary negotiation + native sparse frame.
-        assert_eq!(client.negotiate().unwrap(), 3);
+        assert_eq!(client.negotiate().unwrap(), 4);
         match client.score_sparse(vec![3, 9], vec![1.0, 1.0], 0).unwrap() {
             Response::Score { score, features_evaluated, .. } => {
                 assert!(score > 0.0);

@@ -5,12 +5,14 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use attentive::config::ServerConfig;
+use attentive::config::{ServerConfig, TrainerWireConfig};
+use attentive::coordinator::factory::build_wire_pegasos;
 use attentive::coordinator::service::{Features, ModelSnapshot};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::synth::SynthDigits;
 use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
+use attentive::learner::OnlineLearner;
 use attentive::margin::policy::CoordinatePolicy;
 use attentive::server::frame::{ErrorCode, Frame};
 use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
@@ -426,5 +428,290 @@ fn stats_endpoint_reports_attention_savings() {
     );
     assert!(stats.features_p99 >= stats.features_p50);
     assert!(stats.uptime_s > 0.0);
+    server.shutdown();
+}
+
+/// Synthetic separable stream in a small dimension: label = sign(a+b)
+/// with the two active coordinates cycling over a fixed support
+/// (mirrors the online-trainer unit tests, but driven end-to-end over
+/// the wire here). Indices are strictly increasing per example.
+fn learn_stream(n: usize, seed: u64) -> Vec<(Vec<u32>, Vec<f64>, f64)> {
+    let mut s = seed.wrapping_mul(2).wrapping_add(1);
+    let mut next = move || {
+        // SplitMix64-style scramble, plenty for test data.
+        s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) as f64 / u64::MAX as f64
+    };
+    (0..n)
+        .map(|i| {
+            let a = next() * 2.0 - 1.0;
+            let b = next() * 2.0 - 1.0;
+            let y = if a + b >= 0.0 { 1.0 } else { -1.0 };
+            (vec![(i % 3) as u32, 3 + (i % 5) as u32], vec![a, b], y)
+        })
+        .collect()
+}
+
+#[test]
+fn learn_over_the_wire_converges_and_publishes_generations() {
+    const LDIM: usize = 16;
+    let zero = ModelSnapshot {
+        weights: vec![0.0; LDIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    };
+    let frozen = ModelSnapshot { weights: vec![1.0; LDIM], ..zero.clone() };
+    let trainer_cfg = TrainerWireConfig {
+        queue: 4096, // outsizes the stream: nothing sheds
+        publish_every_updates: 1,
+        publish_every_ms: 0, // count-only cadence: deterministic publishes
+        lambda: 1e-2,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::WeightSampled,
+        seed: 11,
+        ..Default::default()
+    };
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        queue: 256,
+        trainer: Some(trainer_cfg.clone()),
+        ..Default::default()
+    };
+    let server = TcpServer::serve_models(
+        &cfg,
+        vec![("default".into(), zero.into()), ("frozen".into(), frozen.into())],
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.negotiate().unwrap(), 4, "server must grant v4");
+
+    // Offline reference: the exact learner the wire trainer builds, fed
+    // the same sequence — the server's counters must land on these.
+    let examples = learn_stream(400, 5);
+    let mut offline = build_wire_pegasos(&trainer_cfg, LDIM);
+    let (mut offline_updates, mut offline_features) = (0u64, 0u64);
+    for (idx, val, y) in &examples {
+        let x = Features::Sparse { idx: idx.clone(), val: val.clone() }.densify(LDIM);
+        let info = offline.process(&x, *y);
+        offline_features += info.evaluated as u64;
+        if info.updated {
+            offline_updates += 1;
+        }
+    }
+
+    // First example rides the JSON learn op, the rest the LEARN_SPARSE
+    // frame: the trainer sees one identical sequence either way.
+    let mut last_seen = 0u64;
+    for (i, (idx, val, y)) in examples.iter().enumerate() {
+        let label: i8 = if *y > 0.0 { 1 } else { -1 };
+        let features = Features::Sparse { idx: idx.clone(), val: val.clone() };
+        let resp = if i == 0 {
+            client.learn(None, label, features).unwrap()
+        } else {
+            client.learn_sparse(0, label, idx.clone(), val.clone()).unwrap()
+        };
+        match resp {
+            Response::Learned { seen, .. } => {
+                assert!(seen > last_seen, "accepted-example count must increase");
+                last_seen = seen;
+            }
+            other => panic!("learn got {other:?}"),
+        }
+    }
+    assert_eq!(last_seen, examples.len() as u64, "queue outsizes the stream: no sheds");
+
+    // Wait for the trainer to drain the queue; once it has, same seed ⇒
+    // the same update count and attention spend as the offline run.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let shard = loop {
+        let stats = client.stats().unwrap();
+        let m = stats.models.iter().find(|m| m.name == "default").expect("default shard").clone();
+        if m.learn_updates >= offline_updates {
+            break m;
+        }
+        assert!(std::time::Instant::now() < deadline, "trainer never drained: {m:?}");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    assert!(shard.trainer, "stats must report the attached trainer");
+    assert_eq!(shard.learn_examples, examples.len() as u64);
+    assert_eq!(shard.learn_updates, offline_updates, "same seed ⇒ same update sequence");
+    assert_eq!(shard.learn_features, offline_features, "same seed ⇒ same attention spend");
+    assert_eq!(shard.learn_sheds, 0);
+    assert!(shard.learn_publishes > 0, "cadence publishes must have landed");
+    assert_eq!(
+        u64::from(shard.gen),
+        1 + shard.learn_publishes,
+        "every publish lands as exactly one hub generation"
+    );
+
+    // The published model classifies fresh draws far above chance — the
+    // shard started all-zero (score 0 for everything), so this is the
+    // served error dropping, not the initial snapshot shining through.
+    let probes = learn_stream(200, 77);
+    let mut agree = 0;
+    for (idx, val, y) in &probes {
+        match client.score_sparse(idx.clone(), val.clone(), 0).unwrap() {
+            Response::Score { score, .. } => {
+                if (score >= 0.0) == (*y >= 0.0) {
+                    agree += 1;
+                }
+            }
+            other => panic!("probe got {other:?}"),
+        }
+    }
+    assert!(agree >= 150, "served error stuck above threshold: {agree}/200 correct");
+
+    // Other shards are untouched: no examples, no new generation.
+    let stats = client.stats().unwrap();
+    let frozen_stats = stats.models.iter().find(|m| m.name == "frozen").unwrap();
+    assert_eq!(frozen_stats.gen, 1, "learning must not leak across shards");
+    assert_eq!(frozen_stats.learn_examples, 0);
+    server.shutdown();
+}
+
+#[test]
+fn learn_floods_shed_explicitly_at_queue_saturation() {
+    // One-slot learn queue, publish on every update: the trainer drains
+    // as slowly as it ever will, so a response-free burst must shed.
+    let trainer_cfg = TrainerWireConfig {
+        queue: 1,
+        publish_every_updates: 1,
+        publish_every_ms: 0,
+        seed: 3,
+        ..Default::default()
+    };
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        queue: 64,
+        trainer: Some(trainer_cfg),
+        ..Default::default()
+    };
+    let server = TcpServer::serve_models(
+        &cfg,
+        vec![("default".into(), flat_snapshot(0.0).into())],
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    // Raw socket: negotiate v4 by hand, then burst LEARN_SPARSE frames
+    // without reading a single response.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    {
+        let mut s = &stream;
+        s.write_all(b"{\"op\":\"hello\",\"proto\":4}\n").unwrap();
+    }
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(matches!(
+        Response::parse(line.trim()).unwrap(),
+        Response::Hello { proto: 4, .. }
+    ));
+
+    const BURST: usize = 200;
+    let idx: Vec<u32> = (0..64).collect();
+    let val = vec![0.5f64; 64];
+    let mut burst = Vec::new();
+    for i in 0..BURST {
+        Frame::put_learn_sparse(&mut burst, 0, if i % 2 == 0 { 1 } else { -1 }, &idx, &val);
+    }
+    {
+        let mut s = &stream;
+        s.write_all(&burst).unwrap();
+    }
+    let (mut acks, mut sheds) = (0u64, 0u64);
+    for _ in 0..BURST {
+        match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+            Frame::LearnAck { .. } => acks += 1,
+            Frame::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::Overloaded);
+                assert!(retryable, "a shed must invite a retry");
+                sheds += 1;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(acks + sheds, BURST as u64, "every burst frame gets an explicit answer");
+    assert!(acks > 0, "the queue admits work");
+    assert!(sheds > 0, "a one-slot queue under a {BURST}-frame burst must shed");
+    drop(reader);
+    drop(stream);
+
+    // The server survives the flood, and the shed/accept split shows up
+    // in both the trainer counters and the server-wide overload count.
+    let mut client = Client::connect(&addr).unwrap();
+    client.ping().unwrap();
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.overloaded, sheds);
+    let shard = stats.models.iter().find(|m| m.name == "default").unwrap();
+    assert_eq!(shard.learn_sheds, sheds);
+    assert_eq!(shard.learn_examples, acks);
+    server.shutdown();
+}
+
+#[test]
+fn mixed_learn_and_score_load_shares_the_wire() {
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 2,
+        queue: 4096,
+        trainer: Some(TrainerWireConfig { seed: 21, ..Default::default() }),
+        ..Default::default()
+    };
+    let server = TcpServer::serve_models(
+        &cfg,
+        vec![
+            ("default".into(), trained_snapshot().into()),
+            ("frozen".into(), flat_snapshot(1.0).into()),
+        ],
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    // Interleaved learn + score on the same connections (even sequence
+    // numbers learn, odd score), against the default shard.
+    let report = loadgen::run(&LoadGenConfig {
+        addr: addr.clone(),
+        connections: 2,
+        requests: 400,
+        pipeline: 8,
+        hard_fraction: 0.5,
+        mode: ClientMode::Mixed,
+        sparse_eps: 0.05,
+        seed: 31,
+        ..Default::default()
+    })
+    .expect("loadgen");
+    assert_eq!(report.sent, 400);
+    assert_eq!(
+        report.answered + report.learned + report.overloaded,
+        400,
+        "every mixed request gets a response: scored, learn-acked, or shed"
+    );
+    assert_eq!(report.errors, 0);
+    assert!(report.learned > 0, "the learn half must be acked");
+    assert!(report.answered > 0, "the score half must be answered");
+    assert!(
+        report.avg_features() < DIM as f64,
+        "scoring keeps its attentive savings under concurrent learning, avg {}",
+        report.avg_features()
+    );
+
+    let mut client = Client::connect(&addr).unwrap();
+    let stats = client.stats().unwrap();
+    let shard = stats.models.iter().find(|m| m.name == "default").unwrap();
+    assert!(shard.trainer);
+    assert!(shard.learn_examples > 0);
+    let frozen_stats = stats.models.iter().find(|m| m.name == "frozen").unwrap();
+    assert_eq!(frozen_stats.gen, 1, "no cross-shard publishes");
+    assert_eq!(frozen_stats.learn_examples, 0);
     server.shutdown();
 }
