@@ -27,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::TrainerWireConfig;
 use crate::coordinator::factory::build_wire_pegasos;
-use crate::coordinator::service::{Features, ModelSnapshot};
+use crate::coordinator::service::{Features, ModelSnapshot, ServingModel};
 use crate::learner::OnlineLearner;
 use crate::server::hub::ModelHub;
 
@@ -119,20 +119,39 @@ impl std::fmt::Debug for OnlineTrainer {
 }
 
 impl OnlineTrainer {
-    /// Spawn a trainer publishing into `hub`'s generation swap.
+    /// Spawn a trainer publishing into `hub`'s generation swap. If the
+    /// shard currently serves a binary model with trained (nonzero)
+    /// weights, the trainer **warm-starts** from that snapshot — weights,
+    /// Pegasos step clock, and variance prior — instead of `w = 0`, so
+    /// attaching a trainer to a loaded shard is immediately incremental
+    /// rather than relearning from scratch.
     pub fn spawn(hub: Arc<ModelHub>, cfg: &TrainerWireConfig, dim: usize) -> Self {
-        Self::spawn_with_sink(cfg, dim, Box::new(move |snap| hub.reload(snap).is_ok()))
+        let init = match &*hub.serving_model() {
+            ServingModel::Binary(snap) => Some(snap.clone()),
+            _ => None,
+        };
+        Self::spawn_inner(cfg, dim, init, Box::new(move |snap| hub.reload(snap).is_ok()))
     }
 
     /// Spawn a trainer publishing into an arbitrary sink (tests, tools).
+    /// Always cold-starts from `w = 0`.
     pub fn spawn_with_sink(cfg: &TrainerWireConfig, dim: usize, sink: PublishSink) -> Self {
+        Self::spawn_inner(cfg, dim, None, sink)
+    }
+
+    fn spawn_inner(
+        cfg: &TrainerWireConfig,
+        dim: usize,
+        init: Option<ModelSnapshot>,
+        sink: PublishSink,
+    ) -> Self {
         let (tx, rx) = sync_channel(cfg.queue.max(1));
         let stats = Arc::new(TrainerStats::default());
         let thread_stats = Arc::clone(&stats);
         let cfg = cfg.clone();
         let join = std::thread::Builder::new()
             .name("online-trainer".into())
-            .spawn(move || run_trainer(rx, cfg, dim, thread_stats, sink))
+            .spawn(move || run_trainer(rx, cfg, dim, init, thread_stats, sink))
             .expect("spawn online trainer thread");
         Self { tx: Mutex::new(Some(tx)), join: Mutex::new(Some(join)), stats }
     }
@@ -181,10 +200,16 @@ fn run_trainer(
     rx: Receiver<LearnExample>,
     cfg: TrainerWireConfig,
     dim: usize,
+    init: Option<ModelSnapshot>,
     stats: Arc<TrainerStats>,
     mut sink: PublishSink,
 ) {
     let mut learner = build_wire_pegasos(&cfg, dim);
+    if let Some(snap) = init {
+        // No-op on zero or malformed snapshots, so a freshly provisioned
+        // shard still trains exactly like an offline from-zero run.
+        learner.warm_start(&snap.weights, snap.var_sn);
+    }
     let mut updates_since_publish = 0u64;
     let mut dirty = false;
     let mut last_publish = Instant::now();
@@ -391,6 +416,43 @@ mod tests {
         drop(release_tx); // unpark: further publishes return immediately
         trainer.shutdown();
         assert_eq!(trainer.learn(x(), 1.0), Err(LearnError::Closed));
+    }
+
+    #[test]
+    fn spawn_warm_starts_from_the_hub_snapshot() {
+        let cfg = TrainerWireConfig { publish_every_updates: 1, ..test_cfg() };
+        let dim = 4;
+        let base = ModelSnapshot {
+            weights: vec![0.5, -0.25, 0.0, 0.0],
+            var_sn: 1.0,
+            boundary: cfg.boundary.clone(),
+            policy: cfg.policy,
+        };
+        let hub = Arc::new(ModelHub::new(base, 4, 64, 1, 0));
+        let trainer = OnlineTrainer::spawn(Arc::clone(&hub), &cfg, dim);
+        // Margin 0 on an untouched coordinate forces an update; with
+        // K=1 that update publishes straight into the hub.
+        trainer.learn(Features::Sparse { idx: vec![2], val: vec![1.0] }, 1.0).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while trainer.stats().publishes == 0 {
+            assert!(Instant::now() < deadline, "publish never fired");
+            std::thread::yield_now();
+        }
+        trainer.shutdown();
+        match &*hub.serving_model() {
+            ServingModel::Binary(s) => {
+                // A cold-started trainer's first update erases the prior
+                // weights (decay 1 − 1/t is 0 at t = 1); the warm start
+                // advances the step clock, so they survive, only damped.
+                assert!(
+                    s.weights[0] > 0.0 && s.weights[1] < 0.0,
+                    "warm-started weights must survive the first update: {:?}",
+                    s.weights
+                );
+                assert!(s.weights[2] > 0.0, "the update itself must land");
+            }
+            other => panic!("expected binary serving model, got {}", other.kind_name()),
+        }
     }
 
     #[test]

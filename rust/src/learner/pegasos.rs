@@ -120,6 +120,57 @@ impl<B: Boundary> BoundedPegasos<B> {
         &mut self.vars
     }
 
+    /// Resume from a published snapshot instead of `w = 0`: restore the
+    /// weight vector (projected back onto the `‖w‖ ≤ 1/√λ` Pegasos ball
+    /// if the restoring λ differs from the training one) and seed the
+    /// variance table so the boundary trusts the snapshot's observed
+    /// spread rather than restarting from the uninformed prior.
+    ///
+    /// A zero or malformed snapshot (all-zero weights, wrong length, a
+    /// non-finite entry) leaves the learner exactly at cold start — so a
+    /// trainer attached to a placeholder shard behaves bit-identically
+    /// to a fresh one.
+    ///
+    /// The update clock matters: Pegasos's first step uses
+    /// `decay = 1 − 1/t = 0`, which would erase restored weights. The
+    /// clock therefore resumes at `t ≈ 1/λ`, the horizon where the
+    /// per-step decay has the same magnitude as the regularizer — late
+    /// enough that the snapshot survives its first violation, early
+    /// enough that the model keeps adapting.
+    pub fn warm_start(&mut self, weights: &[f64], var_sn: f64) {
+        if weights.len() != self.w.len() || weights.iter().any(|w| !w.is_finite()) {
+            return;
+        }
+        let mut norm_sq: f64 = weights.iter().map(|w| w * w).sum();
+        if norm_sq == 0.0 {
+            return;
+        }
+        self.w.copy_from_slice(weights);
+        if self.cfg.project {
+            let limit_sq = 1.0 / self.cfg.lambda;
+            if norm_sq > limit_sq {
+                let c = (limit_sq / norm_sq).sqrt();
+                for wj in self.w.iter_mut() {
+                    *wj *= c;
+                }
+                norm_sq = limit_sq;
+            }
+        }
+        self.norm_sq = norm_sq;
+        self.t = self.t.max((1.0 / self.cfg.lambda).round().max(1.0) as u64);
+        // The snapshot's var_sn is Σ_j w_j²·var(x_j); dividing by Σ w_j²
+        // recovers the average per-feature variance, the right prior for
+        // every coordinate until live observations replace it.
+        let prior = var_sn / norm_sq;
+        let prior = if prior.is_finite() && prior >= 0.0 {
+            prior
+        } else {
+            crate::stst::variance::ClassVariance::DEFAULT_PRIOR
+        };
+        self.vars = VarCache::with_prior(self.w.len(), prior);
+        self.orders_dirty = true;
+    }
+
     /// Perform the Pegasos gradient + projection step for a violating
     /// example. O(n) — allowed, updates only happen on violations.
     fn update(&mut self, x: &[f64], y: f64) {
@@ -365,5 +416,50 @@ mod tests {
     fn name_includes_boundary_and_policy() {
         let l = BoundedPegasos::new(4, PegasosConfig::default(), ConstantBoundary::new(0.1));
         assert_eq!(l.name(), "pegasos[constant-stst/weight-sampled]");
+    }
+
+    #[test]
+    fn warm_start_restores_weights_and_survives_first_update() {
+        let dim = 4;
+        let lambda = 0.25;
+        let cfg = PegasosConfig { lambda, ..Default::default() };
+        let mut l = BoundedPegasos::new(dim, cfg, ConstantBoundary::new(0.1));
+        l.warm_start(&[1.0, -1.0, 0.5, 0.0], 0.75);
+        assert_eq!(l.weights(), &[1.0, -1.0, 0.5, 0.0]);
+        // The clock resumes near 1/λ, so the first violation's decay is
+        // 1 − 1/t ≈ 1 − λ, not 0: restored weights are damped, not erased.
+        assert_eq!(l.updates(), (1.0 / lambda).round() as u64);
+        let info = l.process(&[-1.0, 1.0, -1.0, 1.0], 1.0);
+        assert!(info.updated, "a violating example still updates");
+        assert!(
+            l.weights().iter().any(|w| w.abs() > 1e-6),
+            "warm-started weights must survive the first update"
+        );
+    }
+
+    #[test]
+    fn warm_start_is_a_no_op_on_zero_or_malformed_snapshots() {
+        let cfg = PegasosConfig { lambda: 0.01, ..Default::default() };
+        let fresh = BoundedPegasos::new(4, cfg, ConstantBoundary::new(0.1));
+        let mut l = fresh.clone();
+        l.warm_start(&[0.0; 4], 4.0); // all-zero: stay cold
+        assert_eq!(l.weights(), fresh.weights());
+        assert_eq!(l.updates(), 0, "zero snapshot must not advance the clock");
+        l.warm_start(&[1.0; 3], 4.0); // wrong dim: ignored
+        assert_eq!(l.updates(), 0);
+        l.warm_start(&[1.0, f64::NAN, 0.0, 0.0], 4.0); // non-finite: ignored
+        assert_eq!(l.updates(), 0);
+    }
+
+    #[test]
+    fn warm_start_projects_an_oversized_snapshot_onto_the_ball() {
+        let lambda = 1.0; // ball radius 1
+        let cfg = PegasosConfig { lambda, ..Default::default() };
+        let mut l = BoundedPegasos::new(2, cfg, ConstantBoundary::new(0.1));
+        l.warm_start(&[3.0, 4.0], 1.0); // norm 5 > 1
+        let norm = l.weights().iter().map(|w| w * w).sum::<f64>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-12, "projected norm {norm}");
+        // Direction is preserved.
+        assert!((l.weights()[0] / l.weights()[1] - 0.75).abs() < 1e-12);
     }
 }

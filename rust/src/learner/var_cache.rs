@@ -43,6 +43,22 @@ impl VarCache {
         }
     }
 
+    /// New cache whose unobserved features assume `prior_var` instead of
+    /// the default prior — the warm-start path: a restored snapshot's
+    /// `var_sn` says how much spread the previous run actually saw, and
+    /// seeding the table with it keeps early stopping decisions honest
+    /// until fresh observations take over.
+    pub fn with_prior(dim: usize, prior_var: f64) -> Self {
+        Self {
+            table: ClassVariance::with_prior(dim, prior_var),
+            sum_pos: 0.0,
+            sum_neg: 0.0,
+            dirty: true,
+            seen: vec![0; dim],
+            stamp: 0,
+        }
+    }
+
     /// Current `var(S_n)` for class `label`, rebuilding lazily if marked
     /// dirty.
     #[inline]

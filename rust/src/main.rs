@@ -66,12 +66,14 @@ COMMANDS:
                [--learn-publish-updates K] [--learn-publish-ms T]
                [--learn-lambda L] [--learn-seed S]
                with --listen: TCP server (v1 JSON lines; a hello op with
-               proto 2..4 upgrades a connection to binary frames —
+               proto 2..5 upgrades a connection to binary frames —
                docs/PROTOCOL.md). --model name=path (repeatable) serves a
                registry of named shards behind one port: each path holds a
                binary ModelSnapshot or an ensemble snapshot, the first name
                is the default shard, and every shard hot-reloads
-               independently. --io-backend event-loop multiplexes all
+               independently. Under protocol v5 the add-model and
+               remove-model ops grow and shrink the shard set at runtime
+               without restarting (docs/OPERATIONS.md). --io-backend event-loop multiplexes all
                connections over T epoll threads (Linux; thousands of idle
                connections) instead of a thread pair per connection.
                --learn attaches an online trainer to every binary shard:
@@ -84,7 +86,7 @@ COMMANDS:
                [--model NAME] [--requests N] [--connections C] [--pipeline P]
                [--hard FRAC] [--sparse-eps E] [--batch B] [--workers W]
                [--queue Q] [--io-backend threads|event-loop]
-               [--event-threads T] [--open-loop]
+               [--event-threads T] [--open-loop] [--churn N]
                [--json BENCH_serve.json] [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
                three wire modes, a multiclass classify pass, online
@@ -93,9 +95,11 @@ COMMANDS:
                traffic; --io-backend selects the loopback server's
                transport; --open-loop sweeps one request at a time
                across C mostly-idle connections (the many-connections
-               scaling check) instead of pipelining; --json writes the
-               machine-readable report, --floors gates on committed
-               throughput floors (exit 1 on regression)
+               scaling check) instead of pipelining; --churn N runs N
+               add-model → score → remove-model cycles on throwaway
+               shards alongside each pass (registry churn under load);
+               --json writes the machine-readable report, --floors gates
+               on committed throughput floors (exit 1 on regression)
   init-config  [out.json]
   export-idx   <dir> [--count N] [--seed S]
   help
@@ -494,10 +498,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             summary.join(", ")
         );
         println!(
-            "ops: score / classify / stats / models / reload / ping / hello — one JSON \
-             object per line; optional \"model\" field routes to a named shard"
+            "ops: score / classify / stats / models / reload / add-model / remove-model / \
+             ping / hello — one JSON object per line; optional \"model\" field routes to a \
+             named shard"
         );
-        println!("protocol v2-v4: hello {{\"proto\":4}} switches to sparse binary frames");
+        println!("protocol v2-v5: hello {{\"proto\":5}} switches to sparse binary frames");
         if cfg.trainer.is_some() {
             println!(
                 "online learning on: the learn op (JSON, or LEARN_SPARSE frames under \
@@ -620,6 +625,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let sparse_eps = args.get_parse("sparse-eps", 0.05f64).map_err(|e| anyhow::anyhow!(e))?;
 
     let open_loop = args.has("open-loop");
+    let churn = args.get_parse("churn", 0usize).map_err(|e| anyhow::anyhow!(e))?;
     let loadcfg = |addr: String, mode: ClientMode| LoadGenConfig {
         addr,
         connections,
@@ -630,6 +636,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         sparse_eps,
         seed: 1, // same seed every pass -> identical traffic
         open_loop,
+        churn_cycles: churn,
         ..Default::default()
     };
     let mut table = Table::new(&[

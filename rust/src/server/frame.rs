@@ -72,6 +72,18 @@
 //! answers a non-retryable [`ErrorCode::WrongModel`]. Clients send
 //! `LEARN_SPARSE` only after `hello {"proto":4}` is granted.
 //!
+//! Protocol v5 adds no new frame ops — it is a **capability grant** for
+//! the runtime shard-lifecycle control ops (`add-model` /
+//! `remove-model`), which travel as `JSON_REQ`/`JSON_RESP` envelopes on
+//! binary connections and as plain JSON lines on v1 connections. It
+//! does add three error codes: a duplicate registration answers
+//! [`ErrorCode::ModelExists`], naming a shard that is still draining
+//! out answers the retryable [`ErrorCode::ModelBusy`], and removing the
+//! default shard answers [`ErrorCode::DefaultModel`]. Scoring a shard
+//! whose removal has already unpublished it answers the plain
+//! non-retryable [`ErrorCode::UnknownModel`], exactly as if it had
+//! never existed.
+//!
 //! A `gen` of 0 in a request means "any model generation"; a nonzero
 //! value pins the request to that generation and the server sheds it
 //! with a retryable [`ErrorCode::StaleGeneration`] if a hot reload has
@@ -105,6 +117,14 @@ pub enum ErrorCode {
     /// The op does not match the routed shard's model kind (`score` on
     /// an ensemble shard, `classify` on a binary one).
     WrongModel = 9,
+    /// An `add-model` named a shard that is already registered.
+    ModelExists = 10,
+    /// The shard is mid-removal (draining); retry after the old name
+    /// has fully retired.
+    ModelBusy = 11,
+    /// A `remove-model` named the default shard (id 0), which anchors
+    /// legacy unrouted traffic and cannot be retired.
+    DefaultModel = 12,
 }
 
 impl ErrorCode {
@@ -120,6 +140,9 @@ impl ErrorCode {
             7 => Some(ErrorCode::BadRequest),
             8 => Some(ErrorCode::UnknownModel),
             9 => Some(ErrorCode::WrongModel),
+            10 => Some(ErrorCode::ModelExists),
+            11 => Some(ErrorCode::ModelBusy),
+            12 => Some(ErrorCode::DefaultModel),
             _ => None,
         }
     }
@@ -128,7 +151,10 @@ impl ErrorCode {
     pub fn retryable(self) -> bool {
         matches!(
             self,
-            ErrorCode::Overloaded | ErrorCode::Unavailable | ErrorCode::StaleGeneration
+            ErrorCode::Overloaded
+                | ErrorCode::Unavailable
+                | ErrorCode::StaleGeneration
+                | ErrorCode::ModelBusy
         )
     }
 
@@ -144,6 +170,9 @@ impl ErrorCode {
             ErrorCode::BadRequest => "bad-request",
             ErrorCode::UnknownModel => "unknown-model",
             ErrorCode::WrongModel => "wrong-model-kind",
+            ErrorCode::ModelExists => "model-exists",
+            ErrorCode::ModelBusy => "model-busy",
+            ErrorCode::DefaultModel => "default-model",
         }
     }
 }
@@ -1313,6 +1342,9 @@ mod tests {
             ErrorCode::BadRequest,
             ErrorCode::UnknownModel,
             ErrorCode::WrongModel,
+            ErrorCode::ModelExists,
+            ErrorCode::ModelBusy,
+            ErrorCode::DefaultModel,
         ] {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
             assert!(!code.name().is_empty());
@@ -1323,8 +1355,14 @@ mod tests {
         assert!(ErrorCode::StaleGeneration.retryable());
         assert!(!ErrorCode::DimMismatch.retryable());
         assert!(!ErrorCode::BadFrame.retryable());
-        assert!(!ErrorCode::UnknownModel.retryable(), "a fixed shard set never grows mid-run");
+        // Unknown stays non-retryable even with runtime registration:
+        // the remover already drained the name, so a retry cannot see it
+        // come back — only a fresh add-model (a new shard) could.
+        assert!(!ErrorCode::UnknownModel.retryable());
         assert!(!ErrorCode::WrongModel.retryable());
+        assert!(!ErrorCode::ModelExists.retryable());
+        assert!(ErrorCode::ModelBusy.retryable(), "retry once the old name retires");
+        assert!(!ErrorCode::DefaultModel.retryable());
     }
 
     #[test]

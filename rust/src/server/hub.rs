@@ -14,7 +14,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::service::{
     CompletionNotifier, Features, PredictionService, ReqKind, RunningService, ScoreResponse,
@@ -104,6 +104,9 @@ struct HubState {
     kind: &'static str,
     /// Voters behind the live model (0 for binary).
     voters: usize,
+    /// The live model itself, retained so late trainer attachment can
+    /// warm-start from whatever the shard currently serves.
+    model: Arc<ServingModel>,
     /// Serving generation minus one: bumped under the same critical
     /// section as the handle swap, so each installed model gets a
     /// unique, monotonic generation even when reloads race.
@@ -153,10 +156,10 @@ impl ModelHub {
         seed: u64,
         notifier: CompletionNotifier,
     ) -> Self {
-        let model = model.into();
+        let model = Arc::new(model.into());
         let (dim, accepts, kind, voters) =
             (model.dim(), model.kind(), model.kind_name(), model.voter_count());
-        let (handle, run) = PredictionService::new(model, max_batch, queue, seed)
+        let (handle, run) = PredictionService::new((*model).clone(), max_batch, queue, seed)
             .with_workers(workers)
             .with_notifier(notifier.clone())
             .spawn();
@@ -169,6 +172,7 @@ impl ModelHub {
                 accepts,
                 kind,
                 voters,
+                model,
                 epoch: 0,
                 closed_total: StatsSnapshot::default(),
             }),
@@ -294,7 +298,7 @@ impl ModelHub {
     /// section, so concurrent reloads each install a distinct,
     /// monotonic generation (any connection can be a control channel).
     pub fn reload(&self, model: impl Into<ServingModel>) -> Result<usize, HubError> {
-        let model = model.into();
+        let model = Arc::new(model.into());
         let (dim, accepts, kind, voters) =
             (model.dim(), model.kind(), model.kind_name(), model.voter_count());
         if self.inner.lock().unwrap().handle.is_none() {
@@ -304,10 +308,11 @@ impl ModelHub {
         // counter, so racing reloads never share a stream.
         let salt = self.spawns.fetch_add(1, Ordering::Relaxed) + 1;
         let seed = self.seed ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        let (handle, run) = PredictionService::new(model, self.max_batch, self.queue, seed)
-            .with_workers(self.workers)
-            .with_notifier(self.notifier.clone())
-            .spawn();
+        let (handle, run) =
+            PredictionService::new((*model).clone(), self.max_batch, self.queue, seed)
+                .with_workers(self.workers)
+                .with_notifier(self.notifier.clone())
+                .spawn();
         let mut st = self.inner.lock().unwrap();
         if st.handle.is_none() {
             // Shut down while we were spawning: tear the newcomer down.
@@ -325,10 +330,19 @@ impl ModelHub {
         st.accepts = accepts;
         st.kind = kind;
         st.voters = voters;
+        st.model = model;
         st.epoch += 1;
         drop(st);
         self.reloads.fetch_add(1, Ordering::Relaxed);
         Ok(dim)
+    }
+
+    /// The model currently being served (the last one installed by
+    /// construction or [`Self::reload`]). Cheap: an `Arc` refcount bump
+    /// under the state lock. Used to warm-start a trainer attached to a
+    /// shard that already carries trained weights.
+    pub fn serving_model(&self) -> Arc<ServingModel> {
+        Arc::clone(&self.inner.lock().unwrap().model)
     }
 
     /// Aggregate statistics across every generation, live and retired.
@@ -526,6 +540,22 @@ mod tests {
             Err(HubError::StaleGeneration { requested: 1, serving: 2 }) => {}
             other => panic!("expected stale generation, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn serving_model_tracks_reloads() {
+        let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
+        match &*hub.serving_model() {
+            ServingModel::Binary(s) => assert_eq!(s.weights, vec![1.0; 8]),
+            other => panic!("expected binary serving model, got {}", other.kind_name()),
+        }
+        hub.reload(snapshot(8, -2.5)).unwrap();
+        match &*hub.serving_model() {
+            ServingModel::Binary(s) => assert_eq!(s.weights, vec![-2.5; 8]),
+            other => panic!("expected binary serving model, got {}", other.kind_name()),
+        }
+        hub.reload(ensemble(8)).unwrap();
+        assert_eq!(hub.serving_model().kind_name(), "ensemble");
     }
 
     #[test]

@@ -3,11 +3,11 @@
 //! Two layers:
 //!
 //! * [`Client`] — a synchronous request/response connection, used as the
-//!   control channel (ping / stats / models / reload) and for one-off
-//!   scoring or classification. Starts in v1 JSON-lines mode;
-//!   [`Client::negotiate`] upgrades it to the binary framing (v3 when
-//!   the server speaks it, v2 otherwise) with transparent fallback on
-//!   old servers.
+//!   control channel (ping / stats / models / reload / add-model /
+//!   remove-model) and for one-off scoring or classification. Starts in
+//!   v1 JSON-lines mode; [`Client::negotiate`] upgrades it to the
+//!   binary framing at the highest version the server grants (v5 down
+//!   to v2) with transparent fallback on old servers.
 //! * [`run`] — the load generator proper: `connections` client threads
 //!   drive the server over loopback (or any address) with a configurable
 //!   pipelining window, an easy/hard traffic mix — clean synthetic
@@ -43,7 +43,7 @@ use crate::data::synth::{SynthConfig, SynthDigits};
 use crate::error::{Error, Result};
 use crate::server::frame::{ErrorCode, Frame, FrameError};
 use crate::server::protocol::{
-    ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3, PROTO_V4,
+    ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3, PROTO_V4, PROTO_V5,
 };
 use crate::util::rng::Rng64;
 
@@ -91,9 +91,10 @@ impl Client {
     }
 
     /// Negotiate binary framing, asking for the highest version this
-    /// build speaks (v4). Returns the granted version: 4, 3, or 2 on
+    /// build speaks (v5). Returns the granted version: 5 down to 2 on
     /// success (all switch to binary frames; 3 unlocks the model-routed
-    /// frame ops and 4 the online-learning `LEARN_SPARSE` frame), 1
+    /// frame ops, 4 the online-learning `LEARN_SPARSE` frame, and 5 the
+    /// runtime `add-model` / `remove-model` shard lifecycle ops), 1
     /// when the server declines or predates the handshake (transparent
     /// fallback — the connection keeps working in JSON-lines mode
     /// either way).
@@ -101,7 +102,7 @@ impl Client {
         if self.proto >= PROTO_V2 {
             return Ok(self.proto);
         }
-        let line = Request::Hello { proto: PROTO_V4 }.to_line();
+        let line = Request::Hello { proto: PROTO_V5 }.to_line();
         self.writer
             .write_all(line.as_bytes())
             .and_then(|()| self.writer.flush())
@@ -113,7 +114,7 @@ impl Client {
         }
         match Response::parse(reply.trim()).map_err(|e| Error::format("hello reply", e))? {
             Response::Hello { proto, .. } if proto >= PROTO_V2 => {
-                self.proto = proto.min(PROTO_V4);
+                self.proto = proto.min(PROTO_V5);
                 Ok(self.proto)
             }
             // Declined (proto 1) or a pre-handshake server answering
@@ -406,6 +407,39 @@ impl Client {
             other => Err(Error::format("reload reply", format!("unexpected {other:?}"))),
         }
     }
+
+    /// Register a new shard at runtime (the protocol v5 `add-model`
+    /// op); returns the assigned wire id and the shard's
+    /// dimensionality. With `learn` the server attaches an online
+    /// trainer using its own `--learn` knobs, warm-started from
+    /// `snapshot`.
+    pub fn add_model(
+        &mut self,
+        name: &str,
+        snapshot: &ServingModel,
+        learn: bool,
+    ) -> Result<(u16, usize)> {
+        let req =
+            Request::AddModel { name: name.to_string(), snapshot: snapshot.clone(), learn };
+        match self.call(&req)? {
+            Response::Added { id, dim, .. } => Ok((id, dim)),
+            Response::Error { error, .. } => Err(Error::format("add-model reply", error)),
+            other => Err(Error::format("add-model reply", format!("unexpected {other:?}"))),
+        }
+    }
+
+    /// Retire a shard at runtime (the protocol v5 `remove-model` op).
+    /// The server unroutes the shard before answering; the quiesce and
+    /// drain finish in the background.
+    pub fn remove_model(&mut self, name: &str) -> Result<()> {
+        match self.call(&Request::RemoveModel { name: name.to_string() })? {
+            Response::Removed { .. } => Ok(()),
+            Response::Error { error, .. } => Err(Error::format("remove-model reply", error)),
+            other => {
+                Err(Error::format("remove-model reply", format!("unexpected {other:?}")))
+            }
+        }
+    }
 }
 
 /// Which wire the load generator drives the server over.
@@ -502,6 +536,13 @@ pub struct LoadGenConfig {
     /// regression-tests) the event-loop backend holding thousands of
     /// mostly-idle sockets without shedding.
     pub open_loop: bool,
+    /// Shard churn alongside the main traffic: a dedicated control
+    /// connection cycles `add-model` → routed score → `remove-model`
+    /// this many times on throwaway shards while the configured load
+    /// runs, exercising the registry's epoch-based route swap under
+    /// fire. 0 (the default) disables churn. Needs a protocol v5
+    /// server.
+    pub churn_cycles: usize,
 }
 
 impl Default for LoadGenConfig {
@@ -518,6 +559,7 @@ impl Default for LoadGenConfig {
             digits: vec![2, 3],
             seed: 0,
             open_loop: false,
+            churn_cycles: 0,
         }
     }
 }
@@ -549,6 +591,9 @@ pub struct LoadReport {
     /// score traffic); `total_features / total_voters` is the per-voter
     /// feature cost.
     pub total_voters: u64,
+    /// Completed add→score→remove churn cycles (see
+    /// `LoadGenConfig::churn_cycles`).
+    pub churned: u64,
 }
 
 impl LoadReport {
@@ -605,6 +650,7 @@ impl LoadReport {
         self.elapsed_s = self.elapsed_s.max(other.elapsed_s);
         self.features.extend_from_slice(&other.features);
         self.total_voters += other.total_voters;
+        self.churned += other.churned;
     }
 }
 
@@ -639,6 +685,10 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
         if r.learned > 0 {
             // Learn pass: accepted-example throughput.
             fields.push(("learned", Json::Num(r.learned as f64)));
+        }
+        if r.churned > 0 {
+            // Churn pass: add→score→remove cycles completed mid-load.
+            fields.push(("churn_cycles", Json::Num(r.churned as f64)));
         }
         modes.push((name.clone(), Json::obj(fields)))
     }
@@ -724,9 +774,23 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
                 .into(),
         ));
     }
-    if cfg.open_loop {
-        return run_open_loop(cfg);
+    let (main, churn) = std::thread::scope(|scope| {
+        // Churn rides a dedicated control connection so its add/remove
+        // round-trips never slot into the main traffic's pipelines.
+        let churn = (cfg.churn_cycles > 0).then(|| scope.spawn(move || drive_churn(cfg)));
+        let main = if cfg.open_loop { run_open_loop(cfg) } else { run_closed_loop(cfg) };
+        (main, churn.map(|j| j.join().expect("loadgen churn thread panicked")))
+    });
+    let mut merged = main?;
+    if let Some(churn) = churn {
+        merged.merge(&churn?);
     }
+    Ok(merged)
+}
+
+/// The default (closed-loop) driver: one pipelining thread per
+/// connection.
+fn run_closed_loop(cfg: &LoadGenConfig) -> Result<LoadReport> {
     let per_conn = cfg.requests / cfg.connections;
     let remainder = cfg.requests % cfg.connections;
     let reports = std::thread::scope(|scope| {
@@ -742,6 +806,51 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
         merged.merge(&r?);
     }
     Ok(merged)
+}
+
+/// The churn sidecar: cycle `add-model` → routed score → `remove-model`
+/// on throwaway shards while the main traffic runs. Each cycle uses a
+/// fresh name — removal drains in the background, so reusing a name
+/// immediately could legitimately answer the retryable `model-busy`.
+fn drive_churn(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    use crate::margin::policy::CoordinatePolicy;
+    use crate::stst::boundary::AnyBoundary;
+    let mut report = LoadReport::default();
+    let mut client = Client::connect(&cfg.addr)?;
+    if client.negotiate()? < PROTO_V5 {
+        return Err(Error::format(
+            "loadgen churn",
+            "shard churn needs a protocol v5 server (add-model/remove-model)",
+        ));
+    }
+    let snapshot: ServingModel = ModelSnapshot {
+        weights: vec![1.0; 784],
+        var_sn: 1.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Sequential,
+    }
+    .into();
+    for i in 0..cfg.churn_cycles {
+        let name = format!("churn-{}-{i}", cfg.seed);
+        if client.add_model(&name, &snapshot, false).is_err() {
+            report.errors += 1;
+            continue;
+        }
+        report.sent += 1;
+        match client.score_model(&name, vec![1.0; 784]) {
+            Ok(Response::Score { features_evaluated, .. }) => {
+                report.answered += 1;
+                report.total_features += features_evaluated as u64;
+                report.features.push(features_evaluated as u32);
+            }
+            _ => report.errors += 1,
+        }
+        match client.remove_model(&name) {
+            Ok(()) => report.churned += 1,
+            Err(_) => report.errors += 1,
+        }
+    }
+    Ok(report)
 }
 
 /// How many worker threads the open-loop driver multiplexes its
@@ -858,7 +967,7 @@ fn drive_open_loop_shard(
         let mut reader = BufReader::with_capacity(1024, CountingReader::new(read_half));
         if binary {
             let needed = required_proto(cfg.mode);
-            let hello = Request::Hello { proto: PROTO_V4 }.to_line();
+            let hello = Request::Hello { proto: PROTO_V5 }.to_line();
             (&stream)
                 .write_all(hello.as_bytes())
                 .map_err(|e| Error::io("<loadgen hello>", e))?;
@@ -1155,7 +1264,7 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     let mut model_id = 0u16;
     if binary {
         let needed = required_proto(cfg.mode);
-        let hello = Request::Hello { proto: PROTO_V4 }.to_line();
+        let hello = Request::Hello { proto: PROTO_V5 }.to_line();
         writer
             .write_all(hello.as_bytes())
             .and_then(|()| writer.flush())
@@ -1298,6 +1407,7 @@ mod tests {
             elapsed_s: 2.0,
             features: vec![100; 9],
             total_voters: 27,
+            churned: 2,
         };
         let b = LoadReport {
             sent: 5,
@@ -1311,6 +1421,7 @@ mod tests {
             elapsed_s: 1.0,
             features: vec![20; 5],
             total_voters: 0,
+            churned: 1,
         };
         a.merge(&b);
         assert_eq!(a.sent, 15);
@@ -1323,6 +1434,7 @@ mod tests {
         assert!((a.bytes_per_req() - 80.0).abs() < 1e-9);
         assert_eq!(a.total_voters, 27);
         assert!((a.avg_features_per_voter() - 1000.0 / 27.0).abs() < 1e-9);
+        assert_eq!(a.churned, 3);
     }
 
     #[test]

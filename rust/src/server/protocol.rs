@@ -19,6 +19,8 @@
 //! {"op":"stats"}
 //! {"op":"models"}                                  // shard table
 //! {"op":"reload","model":"digits-2v3","snapshot":{...ServingModel...}}
+//! {"op":"add-model","name":"pair-4v9","snapshot":{...},"learn":true}  // v5
+//! {"op":"remove-model","name":"pair-4v9"}          // v5
 //! {"op":"ping"}
 //! ```
 //!
@@ -33,14 +35,20 @@
 //! labeled example (`"y"` = ±1) to the routed shard's online trainer;
 //! the trainer periodically publishes fresh snapshot generations into
 //! the same hub the score path serves from, and a full learn queue
-//! sheds with a retryable `overloaded` error. `hello` negotiates the
-//! framing for the rest of the connection: asking for `"proto":2` (or
-//! higher) switches both directions to the length-prefixed binary
-//! frames of [`crate::server::frame`] — a grant of 3 additionally
-//! unlocks the model-routed v3 frame ops, and a grant of 4 the
-//! `LEARN_SPARSE` frame (the learn *capability*; the JSON `learn` op
-//! works on any protocol version). Anything else stays on JSON lines,
-//! so v1 clients that never send `hello` are untouched.
+//! sheds with a retryable `overloaded` error. `add-model` registers a
+//! brand-new shard at runtime (inline snapshot or ensemble; `"learn"`
+//! attaches an online trainer warm-started from the model's weights)
+//! and `remove-model` retires one — routes are swapped atomically, so
+//! churn never stalls sibling shards. `hello` negotiates the framing
+//! for the rest of the connection: asking for `"proto":2` (or higher)
+//! switches both directions to the length-prefixed binary frames of
+//! [`crate::server::frame`] — a grant of 3 additionally unlocks the
+//! model-routed v3 frame ops, a grant of 4 the `LEARN_SPARSE` frame
+//! (the learn *capability*; the JSON `learn` op works on any protocol
+//! version), and a grant of 5 advertises the dynamic shard lifecycle
+//! (`add-model` / `remove-model`, which also travel as JSON envelopes
+//! on every framing). Anything else stays on JSON lines, so v1 clients
+//! that never send `hello` are untouched.
 //!
 //! Responses always carry `"ok"`; errors carry `"error"` plus
 //! `"retryable"` (`true` for `overloaded` shed responses, which the
@@ -54,6 +62,8 @@
 //! {"ok":true,"op":"stats", ...StatsReport...}
 //! {"ok":true,"op":"models","models":[{"name":"default","id":0,...},...]}
 //! {"ok":true,"op":"reload","dim":784}
+//! {"ok":true,"op":"add-model","name":"pair-4v9","id":3,"dim":784}
+//! {"ok":true,"op":"remove-model","name":"pair-4v9"}
 //! {"ok":true,"op":"pong"}
 //! {"ok":false,"error":"overloaded","retryable":true}
 //! ```
@@ -70,10 +80,13 @@ pub const PROTO_V2: u32 = 2;
 /// Protocol version 3: binary framing plus the model-routed v3 frame
 /// ops (dense score, u32-indexed sparse score, classify).
 pub const PROTO_V3: u32 = 3;
-/// Highest protocol version this build speaks: v3 plus the online-
-/// learning capability (the binary `LEARN_SPARSE` frame and its
-/// `LEARN_ACK`).
+/// Protocol version 4: v3 plus the online-learning capability (the
+/// binary `LEARN_SPARSE` frame and its `LEARN_ACK`).
 pub const PROTO_V4: u32 = 4;
+/// Highest protocol version this build speaks: v4 plus the dynamic
+/// shard lifecycle capability (`add-model` / `remove-model` control
+/// ops; a v5 grant is how clients discover the server supports them).
+pub const PROTO_V5: u32 = 5;
 
 /// A client → server message.
 #[derive(Debug, Clone)]
@@ -130,6 +143,22 @@ pub enum Request {
         model: Option<String>,
         /// The replacement model (binary snapshot or ensemble).
         snapshot: ServingModel,
+    },
+    /// Register a brand-new shard at runtime (protocol v5 capability).
+    AddModel {
+        /// Name of the new shard (must not collide with a live shard).
+        name: String,
+        /// The model it serves (binary snapshot or ensemble).
+        snapshot: ServingModel,
+        /// Attach an online trainer, warm-started from the snapshot's
+        /// weights, so the new shard accepts `learn` traffic.
+        learn: bool,
+    },
+    /// Retire a shard at runtime (protocol v5 capability). The default
+    /// shard cannot be removed.
+    RemoveModel {
+        /// Name of the shard to retire.
+        name: String,
     },
     /// Liveness probe.
     Ping,
@@ -216,6 +245,24 @@ impl Request {
                     v.get("snapshot").ok_or("reload: missing snapshot")?,
                 )?,
             }),
+            "add-model" => Ok(Request::AddModel {
+                name: v
+                    .get("name")
+                    .and_then(|s| s.as_str())
+                    .ok_or("add-model: missing name")?
+                    .to_string(),
+                snapshot: ServingModel::from_json(
+                    v.get("snapshot").ok_or("add-model: missing snapshot")?,
+                )?,
+                learn: v.get("learn").and_then(|b| b.as_bool()).unwrap_or(false),
+            }),
+            "remove-model" => Ok(Request::RemoveModel {
+                name: v
+                    .get("name")
+                    .and_then(|s| s.as_str())
+                    .ok_or("remove-model: missing name")?
+                    .to_string(),
+            }),
             "ping" => Ok(Request::Ping),
             other => Err(format!("unknown op {other:?}")),
         }
@@ -291,6 +338,21 @@ impl Request {
                 pairs.push(("snapshot", snapshot.to_json()));
                 Json::obj(pairs)
             }
+            Request::AddModel { name, snapshot, learn } => {
+                let mut pairs = vec![
+                    ("op", Json::Str("add-model".into())),
+                    ("name", Json::Str(name.clone())),
+                    ("snapshot", snapshot.to_json()),
+                ];
+                if *learn {
+                    pairs.push(("learn", Json::Bool(true)));
+                }
+                Json::obj(pairs)
+            }
+            Request::RemoveModel { name } => Json::obj([
+                ("op", Json::Str("remove-model".into())),
+                ("name", Json::Str(name.clone())),
+            ]),
             Request::Ping => Json::obj([("op", Json::Str("ping".into()))]),
         }
     }
@@ -359,12 +421,15 @@ pub struct ModelStatsReport {
     /// Features the learner evaluated while training (the attentive
     /// budget actually spent on the learn path).
     pub learn_features: u64,
+    /// Lifecycle state (see [`ModelEntry::state`]).
+    pub state: String,
 }
 
 impl ModelStatsReport {
     fn to_json(&self) -> Json {
         Json::obj([
             ("name", Json::Str(self.name.clone())),
+            ("state", Json::Str(self.state.clone())),
             ("served", Json::Num(self.served as f64)),
             ("avg_features", Json::Num(self.avg_features)),
             ("early_exit_rate", Json::Num(self.early_exit_rate)),
@@ -383,6 +448,7 @@ impl ModelStatsReport {
         let int = |k: &str| v.get(k).and_then(|x| x.as_u64()).unwrap_or(0);
         ModelStatsReport {
             name: v.get("name").and_then(|s| s.as_str()).unwrap_or("").to_string(),
+            state: v.get("state").and_then(|s| s.as_str()).unwrap_or("serving").to_string(),
             served: int("served"),
             avg_features: v.get("avg_features").and_then(|x| x.as_f64()).unwrap_or(0.0),
             early_exit_rate: v.get("early_exit_rate").and_then(|x| x.as_f64()).unwrap_or(0.0),
@@ -516,6 +582,10 @@ pub struct ModelEntry {
     pub voters: usize,
     /// Whether the shard accepts `learn` traffic (trainer attached).
     pub learn: bool,
+    /// Lifecycle state: `"serving"`, `"draining"`, or
+    /// `"removed-pending-drain"` (the latter two only while a v5
+    /// removal quiesces the shard).
+    pub state: String,
 }
 
 impl ModelEntry {
@@ -528,6 +598,7 @@ impl ModelEntry {
             ("dim", Json::Num(self.dim as f64)),
             ("voters", Json::Num(self.voters as f64)),
             ("learn", Json::Bool(self.learn)),
+            ("state", Json::Str(self.state.clone())),
         ])
     }
 
@@ -540,6 +611,7 @@ impl ModelEntry {
             dim: v.get("dim").and_then(|x| x.as_usize()).unwrap_or(0),
             voters: v.get("voters").and_then(|x| x.as_usize()).unwrap_or(0),
             learn: v.get("learn").and_then(|b| b.as_bool()).unwrap_or(false),
+            state: v.get("state").and_then(|s| s.as_str()).unwrap_or("serving").into(),
         })
     }
 }
@@ -615,6 +687,20 @@ pub enum Response {
     Reloaded {
         /// New feature dimensionality.
         dim: usize,
+    },
+    /// A v5 `add-model` landed: the shard is live and routable.
+    Added {
+        /// Name of the new shard.
+        name: String,
+        /// Interned wire id the registry assigned (binary routing key).
+        id: u16,
+        /// The new shard's feature dimensionality.
+        dim: usize,
+    },
+    /// A v5 `remove-model` landed: the shard is unrouted and draining.
+    Removed {
+        /// Name of the retired shard.
+        name: String,
     },
     /// Liveness answer.
     Pong,
@@ -730,6 +816,18 @@ impl Response {
                 ("ok", Json::Bool(true)),
                 ("op", Json::Str("reload".into())),
                 ("dim", Json::Num(*dim as f64)),
+            ]),
+            Response::Added { name, id, dim } => Json::obj([
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("add-model".into())),
+                ("name", Json::Str(name.clone())),
+                ("id", Json::Num(*id as f64)),
+                ("dim", Json::Num(*dim as f64)),
+            ]),
+            Response::Removed { name } => Json::obj([
+                ("ok", Json::Bool(true)),
+                ("op", Json::Str("remove-model".into())),
+                ("name", Json::Str(name.clone())),
             ]),
             Response::Pong => {
                 Json::obj([("ok", Json::Bool(true)), ("op", Json::Str("pong".into()))])
@@ -854,6 +952,22 @@ impl Response {
             )),
             "reload" => Ok(Response::Reloaded {
                 dim: v.get("dim").and_then(|x| x.as_usize()).ok_or("reload: missing dim")?,
+            }),
+            "add-model" => Ok(Response::Added {
+                name: v
+                    .get("name")
+                    .and_then(|s| s.as_str())
+                    .ok_or("add-model: missing name")?
+                    .to_string(),
+                id: v.get("id").and_then(|x| x.as_u64()).ok_or("add-model: missing id")? as u16,
+                dim: v.get("dim").and_then(|x| x.as_usize()).unwrap_or(0),
+            }),
+            "remove-model" => Ok(Response::Removed {
+                name: v
+                    .get("name")
+                    .and_then(|s| s.as_str())
+                    .ok_or("remove-model: missing name")?
+                    .to_string(),
             }),
             "pong" => Ok(Response::Pong),
             other => Err(format!("unknown response op {other:?}")),
@@ -1025,6 +1139,7 @@ mod tests {
                 dim: 784,
                 voters: 0,
                 learn: true,
+                state: "serving".into(),
             },
             ModelEntry {
                 name: "digits".into(),
@@ -1034,10 +1149,82 @@ mod tests {
                 dim: 784,
                 voters: 45,
                 learn: false,
+                state: "draining".into(),
             },
         ];
         match Response::parse(&Response::Models(entries.clone()).to_line()).unwrap() {
             Response::Models(back) => assert_eq!(back, entries),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Pre-v5 rows carry no state; they parse as serving.
+        match Response::parse(
+            r#"{"ok":true,"op":"models","models":[{"name":"default","id":0}]}"#,
+        )
+        .unwrap()
+        {
+            Response::Models(back) => assert_eq!(back[0].state, "serving"),
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn add_and_remove_model_round_trip() {
+        let snapshot = ModelSnapshot {
+            weights: vec![0.5, -1.0],
+            var_sn: 2.0,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::Sequential,
+        };
+        let req = Request::AddModel {
+            name: "pair-4v9".into(),
+            snapshot: snapshot.clone().into(),
+            learn: true,
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"op\":\"add-model\"") && line.contains("\"learn\":true"));
+        match Request::parse(line.trim()).unwrap() {
+            Request::AddModel { name, snapshot: ServingModel::Binary(back), learn } => {
+                assert_eq!(name, "pair-4v9");
+                assert_eq!(back.weights, snapshot.weights);
+                assert!(learn);
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // The learn flag is optional and defaults off.
+        let req = Request::AddModel {
+            name: "pair-4v9".into(),
+            snapshot: snapshot.into(),
+            learn: false,
+        };
+        let line = req.to_line();
+        assert!(!line.contains("learn"), "non-learn adds omit the flag");
+        match Request::parse(line.trim()).unwrap() {
+            Request::AddModel { learn: false, .. } => {}
+            other => panic!("wrong variant {other:?}"),
+        }
+        assert!(Request::parse(r#"{"op":"add-model","name":"x"}"#).is_err(), "missing snapshot");
+        assert!(
+            Request::parse(r#"{"op":"add-model","snapshot":{}}"#).is_err(),
+            "missing name"
+        );
+
+        let req = Request::RemoveModel { name: "pair-4v9".into() };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::RemoveModel { name } => assert_eq!(name, "pair-4v9"),
+            other => panic!("wrong variant {other:?}"),
+        }
+        assert!(Request::parse(r#"{"op":"remove-model"}"#).is_err(), "missing name");
+
+        let resp = Response::Added { name: "pair-4v9".into(), id: 3, dim: 784 };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::Added { name, id, dim } => {
+                assert_eq!((name.as_str(), id, dim), ("pair-4v9", 3, 784));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        let resp = Response::Removed { name: "pair-4v9".into() };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::Removed { name } => assert_eq!(name, "pair-4v9"),
             other => panic!("wrong variant {other:?}"),
         }
     }
@@ -1269,6 +1456,7 @@ mod tests {
             models: vec![
                 ModelStatsReport {
                     name: "default".into(),
+                    state: "serving".into(),
                     served: 700,
                     avg_features: 80.0,
                     early_exit_rate: 0.9,
@@ -1283,6 +1471,7 @@ mod tests {
                 },
                 ModelStatsReport {
                     name: "digits".into(),
+                    state: "draining".into(),
                     served: 300,
                     avg_features: 400.0,
                     early_exit_rate: 0.8,

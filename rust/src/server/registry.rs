@@ -1,24 +1,47 @@
 //! [`ModelRegistry`]: a named collection of independently hot-reloadable
-//! model shards behind one serving port.
+//! model shards behind one serving port, with **runtime add/remove**.
 //!
 //! Each shard is a [`ModelHub`] — it keeps the hub's generation-pinning
 //! and drain-on-swap semantics — hosting either a binary model or an
-//! all-pairs multiclass ensemble ([`ServingModel`]). The shard set is
-//! fixed at startup (`serve --model name=path`, repeatable), which makes
-//! routing lock-free: resolving a route only reads an immutable name
-//! table, and a hot reload of one shard contends only on that shard's
-//! internal mutex — **a reload of one model can never stall traffic on
-//! another**.
+//! all-pairs multiclass ensemble ([`ServingModel`]). Shards registered
+//! at startup (`serve --model name=path`, repeatable) can be joined and
+//! retired at runtime through [`ModelRegistry::add_model`] and
+//! [`ModelRegistry::remove_model`] (the protocol v5 `add-model` /
+//! `remove-model` ops) without stalling traffic on any other shard.
 //!
-//! The first registered shard is the **default shard** (wire model id
-//! 0): it answers every request that does not name a model, which is how
-//! v1 single-model clients keep working unmodified against a multi-model
-//! server. On the wire, shards are addressed by name (JSON `"model"`
-//! field) or by the interned `u16` id the registry assigns at
-//! registration (binary v3 frames); the `models` op lists the table.
+//! # Routing: RCU over an immutable table
+//!
+//! Routes live in an immutable [`RouteTable`] behind an atomic pointer.
+//! Readers resolve lock-free: pin an epoch parity (two counter
+//! increments), deref the table, clone the shard's `Arc`, unpin. Writers
+//! serialize on a mutex, clone the table, apply the change, publish the
+//! new table with one pointer swap, then free the old table only after
+//! every reader pinned to the retiring epoch parity has drained — a
+//! grace period of microseconds, since readers only hold the pin across
+//! a hash lookup. Score and learn admission never touch the writer
+//! mutex, so adding or removing one shard never stalls siblings.
+//!
+//! Wire ids are **monotonic and never reused**: removal leaves a hole in
+//! the slot vector, so a stale binary frame addressing a removed id gets
+//! an `unknown-model` error instead of silently landing on a newcomer.
+//!
+//! # Removal ordering
+//!
+//! Removing a shard first unpublishes its routes (synchronous, covers
+//! the grace period), then hands the shard to a background reclaim
+//! thread that follows the shutdown ordering the online-learning
+//! subsystem established: quiesce and join the shard's
+//! [`OnlineTrainer`] first — it drains its queue and publishes a final
+//! snapshot into a hub that still accepts reloads — then drain the
+//! [`ModelHub`]. Admitted requests are answered even as the shard
+//! drains; its counters fold into the registry totals, which never go
+//! backwards. The **default shard** (wire id 0) answers un-routed
+//! requests and can never be removed.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
 
 use crate::config::TrainerWireConfig;
 use crate::coordinator::online::{LearnError, OnlineTrainer, TrainerStatsSnapshot};
@@ -30,12 +53,18 @@ use crate::server::hub::{HubError, HubInfo, ModelHub};
 /// when none is given explicitly at registration time.
 pub const DEFAULT_MODEL: &str = "default";
 
-/// Why the registry could not route a request.
+/// Lifecycle states, reported by the `models` op as
+/// `"serving"` / `"draining"` / `"removed-pending-drain"`.
+const STATE_SERVING: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+const STATE_REMOVED_PENDING_DRAIN: u8 = 2;
+
+/// Why the registry could not route or apply a request.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RegistryError {
     /// No shard with that name.
     UnknownName(String),
-    /// No shard with that wire id.
+    /// No shard with that wire id (never issued, or removed).
     UnknownId(u16),
     /// The shard rejected the request (shed, kind/dim mismatch, ...).
     Hub(HubError),
@@ -45,6 +74,15 @@ pub enum RegistryError {
     LearnShed,
     /// The shard's trainer has shut down.
     TrainerClosed,
+    /// `add-model` named a shard that already exists.
+    ModelExists(String),
+    /// The name is still draining from a recent removal. Retryable.
+    ModelBusy(String),
+    /// `remove-model` named the default shard, which cannot be removed.
+    DefaultModel(String),
+    /// The add/remove request was malformed (empty name, id space
+    /// exhausted, trainer on an ensemble, ...).
+    Invalid(String),
 }
 
 impl From<HubError> for RegistryError {
@@ -64,6 +102,14 @@ impl std::fmt::Display for RegistryError {
             }
             RegistryError::LearnShed => write!(f, "overloaded"),
             RegistryError::TrainerClosed => write!(f, "trainer closed"),
+            RegistryError::ModelExists(name) => write!(f, "model {name:?} already exists"),
+            RegistryError::ModelBusy(name) => {
+                write!(f, "model {name:?} is still draining; retry shortly")
+            }
+            RegistryError::DefaultModel(name) => {
+                write!(f, "model {name:?} is the default shard and cannot be removed")
+            }
+            RegistryError::Invalid(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -73,18 +119,28 @@ impl std::fmt::Display for RegistryError {
 /// fresh snapshot generations into the hub.
 struct Shard {
     name: String,
+    /// Interned wire id (monotonic; never reused after removal).
+    id: u16,
     /// Shared so an attached trainer can publish into the hub's
     /// generation swap from its own thread.
     hub: Arc<ModelHub>,
-    trainer: Option<OnlineTrainer>,
+    /// Set at most once (`OnceLock`, so attachment works behind the
+    /// shared `Arc` without a shard-level lock on the learn path).
+    trainer: OnceLock<OnlineTrainer>,
+    /// Lifecycle: serving → draining → removed-pending-drain.
+    state: AtomicU8,
 }
 
 impl Shard {
     /// Route one labeled example to this shard's trainer. Returns
     /// `(serving generation, cumulative accepted examples)` for the ack.
-    fn learn(&self, features: Features, label: f64) -> std::result::Result<(u32, u64), RegistryError> {
+    fn learn(
+        &self,
+        features: Features,
+        label: f64,
+    ) -> std::result::Result<(u32, u64), RegistryError> {
         let trainer =
-            self.trainer.as_ref().ok_or_else(|| RegistryError::NoTrainer(self.name.clone()))?;
+            self.trainer.get().ok_or_else(|| RegistryError::NoTrainer(self.name.clone()))?;
         // Same dimension screen the score path applies at admission: a
         // bad payload must never reach the trainer thread.
         if let Err((expected, got)) = features.check_dim(self.hub.dim()) {
@@ -95,6 +151,36 @@ impl Shard {
             LearnError::Closed => RegistryError::TrainerClosed,
         })?;
         Ok((self.hub.generation(), seen))
+    }
+
+    fn state_name(&self) -> &'static str {
+        match self.state.load(Ordering::Acquire) {
+            STATE_SERVING => "serving",
+            STATE_DRAINING => "draining",
+            _ => "removed-pending-drain",
+        }
+    }
+
+    fn info(&self) -> ShardInfo {
+        ShardInfo {
+            name: self.name.clone(),
+            id: self.id,
+            hub: self.hub.info(),
+            reloads: self.hub.reloads(),
+            learn: self.trainer.get().is_some(),
+            state: self.state_name(),
+        }
+    }
+
+    fn shard_stats(&self) -> ShardStats {
+        ShardStats {
+            name: self.name.clone(),
+            stats: self.hub.stats(),
+            gen: self.hub.generation(),
+            reloads: self.hub.reloads(),
+            trainer: self.trainer.get().map(OnlineTrainer::stats),
+            state: self.state_name(),
+        }
     }
 }
 
@@ -112,6 +198,9 @@ pub struct ShardInfo {
     pub reloads: u64,
     /// Whether an online trainer is attached (the shard accepts `learn`).
     pub learn: bool,
+    /// Lifecycle state: `"serving"`, `"draining"`, or
+    /// `"removed-pending-drain"`.
+    pub state: &'static str,
 }
 
 /// Per-shard slice of the `stats` op.
@@ -127,14 +216,91 @@ pub struct ShardStats {
     pub reloads: u64,
     /// Trainer counters, when an online trainer is attached.
     pub trainer: Option<TrainerStatsSnapshot>,
+    /// Lifecycle state (see [`ShardInfo::state`]).
+    pub state: &'static str,
 }
 
-/// A named collection of independently hot-reloadable model shards.
-pub struct ModelRegistry {
-    /// Index = interned wire id. Immutable after construction: routing
-    /// never takes a registry-wide lock.
-    shards: Vec<Shard>,
+/// The immutable routing table readers resolve against. Index = wire
+/// id; a `None` slot is the hole a removed shard leaves behind.
+struct RouteTable {
+    slots: Vec<Option<Arc<Shard>>>,
     by_name: HashMap<String, u16>,
+}
+
+impl RouteTable {
+    fn default_shard(&self) -> &Arc<Shard> {
+        self.slots[0].as_ref().expect("the default shard is never removed")
+    }
+
+    fn get(&self, name: &str) -> Option<&Arc<Shard>> {
+        self.by_name.get(name).and_then(|&id| self.slots[id as usize].as_ref())
+    }
+
+    fn live(&self) -> impl Iterator<Item = &Arc<Shard>> {
+        self.slots.iter().flatten()
+    }
+}
+
+/// Shards unpublished but still draining, plus totals folded in from
+/// shards fully reclaimed — registry counters never go backwards.
+#[derive(Default)]
+struct Retired {
+    shards: Vec<Arc<Shard>>,
+    closed: StatsSnapshot,
+    closed_reloads: u64,
+}
+
+/// A named collection of independently hot-reloadable model shards that
+/// can be added and removed at runtime (see the module docs for the
+/// RCU scheme and removal ordering).
+pub struct ModelRegistry {
+    /// Live routing table. Readers pin an epoch parity and deref
+    /// lock-free; writers clone-and-publish and free the old table only
+    /// after its readers drain.
+    table: AtomicPtr<RouteTable>,
+    /// Bumped by every publish; its parity selects the reader counter
+    /// new pins register on.
+    epoch: AtomicU64,
+    /// In-flight reader counts, one per epoch parity.
+    readers: [AtomicU64; 2],
+    /// Serializes writers (add/remove) and exact whole-registry
+    /// observations (`models` / `stats`). Never taken on the score or
+    /// learn admission path.
+    writer: Mutex<()>,
+    retired: Arc<Mutex<Retired>>,
+    /// Reclaim threads for in-flight removals, joined at shutdown.
+    reclaims: Mutex<Vec<JoinHandle<()>>>,
+    /// Set once shutdown begins: add/remove are rejected after.
+    closed: AtomicBool,
+    /// Registration counter continuing the per-shard seed-salt series
+    /// past the startup shards.
+    regs: AtomicU64,
+    max_batch: usize,
+    queue: usize,
+    workers: usize,
+    seed: u64,
+    notifier: CompletionNotifier,
+}
+
+/// An epoch pin: while alive, no table loaded through
+/// [`ReadGuard::table`] can be reclaimed.
+struct ReadGuard<'a> {
+    reg: &'a ModelRegistry,
+    parity: usize,
+}
+
+impl ReadGuard<'_> {
+    fn table(&self) -> &RouteTable {
+        // Safe: the pin blocks reclamation of the table for as long as
+        // the guard (and thus the returned borrow) lives.
+        unsafe { &*self.reg.table.load(Ordering::Acquire) }
+    }
+}
+
+impl Drop for ReadGuard<'_> {
+    fn drop(&mut self) {
+        self.reg.readers[self.parity].fetch_sub(1, Ordering::AcqRel);
+    }
 }
 
 impl ModelRegistry {
@@ -153,7 +319,8 @@ impl ModelRegistry {
 
     /// [`Self::new`] with a worker-completion notifier, fired by every
     /// shard's workers after each response send (the event-loop backend
-    /// uses it to wake its pollers instead of tick-polling).
+    /// uses it to wake its pollers instead of tick-polling). The
+    /// notifier is retained: shards added at runtime get it too.
     pub fn new_with_notifier(
         models: Vec<(String, ServingModel)>,
         max_batch: usize,
@@ -172,7 +339,7 @@ impl ModelRegistry {
                 models.len()
             )));
         }
-        let mut shards = Vec::with_capacity(models.len());
+        let mut slots = Vec::with_capacity(models.len());
         let mut by_name = HashMap::with_capacity(models.len());
         for (i, (name, model)) in models.into_iter().enumerate() {
             if name.is_empty() {
@@ -184,8 +351,9 @@ impl ModelRegistry {
             // One seed stream per shard, so co-hosted shards never share
             // a policy RNG sequence.
             let shard_seed = seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F);
-            shards.push(Shard {
+            slots.push(Some(Arc::new(Shard {
                 name,
+                id: i as u16,
                 hub: Arc::new(ModelHub::new_with_notifier(
                     model,
                     max_batch,
@@ -194,26 +362,198 @@ impl ModelRegistry {
                     shard_seed,
                     notifier.clone(),
                 )),
-                trainer: None,
-            });
+                trainer: OnceLock::new(),
+                state: AtomicU8::new(STATE_SERVING),
+            })));
         }
-        Ok(Self { shards, by_name })
+        let regs = slots.len() as u64;
+        Ok(Self {
+            table: AtomicPtr::new(Box::into_raw(Box::new(RouteTable { slots, by_name }))),
+            epoch: AtomicU64::new(0),
+            readers: [AtomicU64::new(0), AtomicU64::new(0)],
+            writer: Mutex::new(()),
+            retired: Arc::new(Mutex::new(Retired::default())),
+            reclaims: Mutex::new(Vec::new()),
+            closed: AtomicBool::new(false),
+            regs: AtomicU64::new(regs),
+            max_batch,
+            queue,
+            workers,
+            seed,
+            notifier,
+        })
+    }
+
+    /// Pin the current epoch parity. The retry loop closes the race
+    /// with a concurrent publish: if the epoch moved between the load
+    /// and the increment, the registration may be on a parity whose
+    /// grace period already passed, so back out and re-pin.
+    fn pin(&self) -> ReadGuard<'_> {
+        loop {
+            let e = self.epoch.load(Ordering::Acquire);
+            let parity = (e & 1) as usize;
+            self.readers[parity].fetch_add(1, Ordering::AcqRel);
+            if self.epoch.load(Ordering::Acquire) == e {
+                return ReadGuard { reg: self, parity };
+            }
+            self.readers[parity].fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Swap `new` in as the live table, wait out the grace period, and
+    /// free the old table. Requires the writer lock (the guard
+    /// parameter), which also makes the pre-publish table read in
+    /// add/remove safe.
+    fn publish(&self, _writer: &MutexGuard<'_, ()>, new: RouteTable) {
+        let new_ptr = Box::into_raw(Box::new(new));
+        let old_ptr = self.table.swap(new_ptr, Ordering::AcqRel);
+        let old_epoch = self.epoch.fetch_add(1, Ordering::AcqRel);
+        let parity = (old_epoch & 1) as usize;
+        // Every reader that could hold the old table is registered on
+        // the retiring parity; they resolve routes in microseconds.
+        while self.readers[parity].load(Ordering::Acquire) != 0 {
+            std::thread::yield_now();
+        }
+        drop(unsafe { Box::from_raw(old_ptr) });
+    }
+
+    /// Register a new shard at runtime (the v5 `add-model` op) and
+    /// publish it to the routing table; no other shard observes the
+    /// swap. With `trainer`, an [`OnlineTrainer`] is attached before
+    /// the shard becomes routable, warm-started from the model's own
+    /// weights. Returns `(wire id, dim)`.
+    pub fn add_model(
+        &self,
+        name: &str,
+        model: ServingModel,
+        trainer: Option<&TrainerWireConfig>,
+    ) -> std::result::Result<(u16, usize), RegistryError> {
+        if name.is_empty() {
+            return Err(RegistryError::Invalid("model shard name must not be empty".into()));
+        }
+        if trainer.is_some() && model.kind_name() != "binary" {
+            return Err(RegistryError::Invalid(format!(
+                "online trainer needs a binary shard, {name:?} would serve {}",
+                model.kind_name()
+            )));
+        }
+        let writer = self.writer.lock().unwrap();
+        if self.closed.load(Ordering::Acquire) {
+            return Err(RegistryError::Hub(HubError::Closed));
+        }
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        if table.by_name.contains_key(name) {
+            return Err(RegistryError::ModelExists(name.to_string()));
+        }
+        if self.retired.lock().unwrap().shards.iter().any(|s| s.name == name) {
+            return Err(RegistryError::ModelBusy(name.to_string()));
+        }
+        if table.slots.len() > u16::MAX as usize {
+            return Err(RegistryError::Invalid(format!(
+                "model id space exhausted ({} ids issued)",
+                table.slots.len()
+            )));
+        }
+        let id = table.slots.len() as u16;
+        let salt = self.regs.fetch_add(1, Ordering::Relaxed);
+        let shard_seed = self.seed ^ salt.wrapping_mul(0xA076_1D64_78BD_642F);
+        let dim = model.dim();
+        let shard = Arc::new(Shard {
+            name: name.to_string(),
+            id,
+            hub: Arc::new(ModelHub::new_with_notifier(
+                model,
+                self.max_batch,
+                self.queue,
+                self.workers,
+                shard_seed,
+                self.notifier.clone(),
+            )),
+            trainer: OnceLock::new(),
+            state: AtomicU8::new(STATE_SERVING),
+        });
+        if let Some(cfg) = trainer {
+            // Before publish: the shard is not yet routable, so the
+            // OnceLock set cannot race another attach.
+            let t = OnlineTrainer::spawn(Arc::clone(&shard.hub), cfg, dim);
+            let _ = shard.trainer.set(t);
+        }
+        let mut slots = table.slots.clone();
+        let mut by_name = table.by_name.clone();
+        slots.push(Some(Arc::clone(&shard)));
+        by_name.insert(shard.name.clone(), id);
+        self.publish(&writer, RouteTable { slots, by_name });
+        Ok((id, dim))
+    }
+
+    /// Unpublish a shard (the v5 `remove-model` op). Synchronously
+    /// removes its routes — once this returns, no new request can reach
+    /// the shard, and its wire id is never reissued — then drains it on
+    /// a background reclaim thread: trainer first (final snapshot
+    /// publish + join), then the hub. The default shard (wire id 0)
+    /// cannot be removed.
+    pub fn remove_model(&self, name: &str) -> std::result::Result<(), RegistryError> {
+        let writer = self.writer.lock().unwrap();
+        if self.closed.load(Ordering::Acquire) {
+            return Err(RegistryError::Hub(HubError::Closed));
+        }
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let &id = table
+            .by_name
+            .get(name)
+            .ok_or_else(|| RegistryError::UnknownName(name.to_string()))?;
+        if id == 0 {
+            return Err(RegistryError::DefaultModel(name.to_string()));
+        }
+        let shard = Arc::clone(table.slots[id as usize].as_ref().expect("named shard is live"));
+        let mut slots = table.slots.clone();
+        let mut by_name = table.by_name.clone();
+        slots[id as usize] = None;
+        by_name.remove(name);
+        self.publish(&writer, RouteTable { slots, by_name });
+        shard.state.store(STATE_DRAINING, Ordering::Release);
+        let retired = Arc::clone(&self.retired);
+        retired.lock().unwrap().shards.push(Arc::clone(&shard));
+        // Draining joins threads and can take as long as the trainer's
+        // backlog: keep it off the control path (the event-loop backend
+        // dispatches ops inline on a poller thread).
+        let handle = std::thread::Builder::new()
+            .name(format!("reclaim-{name}"))
+            .spawn(move || {
+                if let Some(t) = shard.trainer.get() {
+                    t.shutdown();
+                }
+                shard.state.store(STATE_REMOVED_PENDING_DRAIN, Ordering::Release);
+                let final_stats = shard.hub.shutdown();
+                let reloads = shard.hub.reloads();
+                let mut r = retired.lock().unwrap();
+                r.shards.retain(|s| !Arc::ptr_eq(s, &shard));
+                r.closed.add(&final_stats);
+                r.closed_reloads += reloads;
+            })
+            .expect("spawn shard reclaim thread");
+        self.reclaims.lock().unwrap().push(handle);
+        Ok(())
     }
 
     /// Attach an online trainer to one shard (`None` = the default
     /// shard): a background thread that consumes `learn` examples and
-    /// periodically publishes snapshots into the shard's hub. Fails on
-    /// ensemble shards (the trainer publishes binary snapshots) and on
-    /// shards that already have a trainer.
-    pub fn attach_trainer(&mut self, name: Option<&str>, cfg: &TrainerWireConfig) -> Result<()> {
-        let id = match name {
-            None => 0u16,
-            Some(n) => *self
-                .by_name
-                .get(n)
-                .ok_or_else(|| Error::Config(format!("unknown model shard {n:?}")))?,
+    /// periodically publishes snapshots into the shard's hub,
+    /// warm-started from the shard's current weights. Fails on ensemble
+    /// shards (the trainer publishes binary snapshots) and on shards
+    /// that already have a trainer.
+    pub fn attach_trainer(&self, name: Option<&str>, cfg: &TrainerWireConfig) -> Result<()> {
+        let shard = {
+            let guard = self.pin();
+            let table = guard.table();
+            let shard = match name {
+                None => table.default_shard(),
+                Some(n) => table
+                    .get(n)
+                    .ok_or_else(|| Error::Config(format!("unknown model shard {n:?}")))?,
+            };
+            Arc::clone(shard)
         };
-        let shard = &mut self.shards[id as usize];
         let info = shard.hub.info();
         if info.kind != "binary" {
             return Err(Error::Config(format!(
@@ -221,13 +561,21 @@ impl ModelRegistry {
                 shard.name, info.kind
             )));
         }
-        if shard.trainer.is_some() {
+        if shard.trainer.get().is_some() {
             return Err(Error::Config(format!(
                 "model shard {:?} already has a trainer",
                 shard.name
             )));
         }
-        shard.trainer = Some(OnlineTrainer::spawn(Arc::clone(&shard.hub), cfg, info.dim));
+        let trainer = OnlineTrainer::spawn(Arc::clone(&shard.hub), cfg, info.dim);
+        if shard.trainer.set(trainer).is_err() {
+            // Lost an attach race; the loser is dropped, which drains
+            // and joins it.
+            return Err(Error::Config(format!(
+                "model shard {:?} already has a trainer",
+                shard.name
+            )));
+        }
         Ok(())
     }
 
@@ -239,14 +587,14 @@ impl ModelRegistry {
         features: Features,
         label: f64,
     ) -> std::result::Result<(u32, u64), RegistryError> {
-        let shard = match name {
-            None => &self.shards[0],
-            Some(n) => {
-                let &id = self
-                    .by_name
-                    .get(n)
-                    .ok_or_else(|| RegistryError::UnknownName(n.to_string()))?;
-                &self.shards[id as usize]
+        let shard = {
+            let guard = self.pin();
+            let table = guard.table();
+            match name {
+                None => Arc::clone(table.default_shard()),
+                Some(n) => Arc::clone(
+                    table.get(n).ok_or_else(|| RegistryError::UnknownName(n.to_string()))?,
+                ),
             }
         };
         shard.learn(features, label)
@@ -260,56 +608,77 @@ impl ModelRegistry {
         features: Features,
         label: f64,
     ) -> std::result::Result<(u32, u64), RegistryError> {
-        let shard = self.shards.get(id as usize).ok_or(RegistryError::UnknownId(id))?;
+        let shard = {
+            let guard = self.pin();
+            guard
+                .table()
+                .slots
+                .get(id as usize)
+                .and_then(|s| s.as_ref())
+                .map(Arc::clone)
+                .ok_or(RegistryError::UnknownId(id))?
+        };
         shard.learn(features, label)
     }
 
-    /// Number of shards.
+    /// Number of live (routable) shards.
     pub fn len(&self) -> usize {
-        self.shards.len()
+        self.pin().table().live().count()
     }
 
     /// True when the registry holds no shards (never, post-construction;
     /// kept for API completeness).
     pub fn is_empty(&self) -> bool {
-        self.shards.is_empty()
+        self.len() == 0
     }
 
     /// The default shard's hub (wire id 0).
-    pub fn default_hub(&self) -> &ModelHub {
-        &*self.shards[0].hub
+    pub fn default_hub(&self) -> Arc<ModelHub> {
+        Arc::clone(&self.pin().table().default_shard().hub)
     }
 
     /// Whether the shard routed by `name` has a trainer attached.
     pub fn has_trainer(&self, name: Option<&str>) -> bool {
+        let guard = self.pin();
+        let table = guard.table();
         match name {
-            None => self.shards[0].trainer.is_some(),
-            Some(n) => self
-                .by_name
-                .get(n)
-                .is_some_and(|&id| self.shards[id as usize].trainer.is_some()),
+            None => table.default_shard().trainer.get().is_some(),
+            Some(n) => table.get(n).is_some_and(|s| s.trainer.get().is_some()),
         }
     }
 
     /// Route by optional name: `None` (and the default shard's own
     /// name) lands on the default shard. Returns the interned id with
-    /// the hub so binary responses can be stamped.
-    pub fn resolve_name(&self, name: Option<&str>) -> std::result::Result<(u16, &ModelHub), RegistryError> {
+    /// the hub so binary responses can be stamped. Lock-free: an epoch
+    /// pin plus an `Arc` refcount bump.
+    pub fn resolve_name(
+        &self,
+        name: Option<&str>,
+    ) -> std::result::Result<(u16, Arc<ModelHub>), RegistryError> {
+        let guard = self.pin();
+        let table = guard.table();
         match name {
-            None => Ok((0, &*self.shards[0].hub)),
-            Some(name) => {
-                let &id = self
-                    .by_name
-                    .get(name)
-                    .ok_or_else(|| RegistryError::UnknownName(name.to_string()))?;
-                Ok((id, &*self.shards[id as usize].hub))
+            None => {
+                let s = table.default_shard();
+                Ok((s.id, Arc::clone(&s.hub)))
+            }
+            Some(n) => {
+                let s = table.get(n).ok_or_else(|| RegistryError::UnknownName(n.to_string()))?;
+                Ok((s.id, Arc::clone(&s.hub)))
             }
         }
     }
 
     /// Route by interned wire id (binary v3 frames; id 0 = default).
-    pub fn resolve_id(&self, id: u16) -> std::result::Result<&ModelHub, RegistryError> {
-        self.shards.get(id as usize).map(|s| &*s.hub).ok_or(RegistryError::UnknownId(id))
+    pub fn resolve_id(&self, id: u16) -> std::result::Result<Arc<ModelHub>, RegistryError> {
+        let guard = self.pin();
+        guard
+            .table()
+            .slots
+            .get(id as usize)
+            .and_then(|s| s.as_ref())
+            .map(|s| Arc::clone(&s.hub))
+            .ok_or(RegistryError::UnknownId(id))
     }
 
     /// Hot-swap one shard's model (`None` routes to the default shard).
@@ -324,64 +693,96 @@ impl ModelRegistry {
         hub.reload(model).map_err(RegistryError::Hub)
     }
 
-    /// Identity + live state of every shard, in wire-id order.
+    /// Identity + live state of every shard — routable shards in
+    /// wire-id order (state `"serving"`), then shards still draining
+    /// from a removal with their lifecycle state. Taken under the
+    /// writer lock so a shard mid-removal appears exactly once.
     pub fn infos(&self) -> Vec<ShardInfo> {
-        self.shards
-            .iter()
-            .enumerate()
-            .map(|(id, s)| ShardInfo {
-                name: s.name.clone(),
-                id: id as u16,
-                hub: s.hub.info(),
-                reloads: s.hub.reloads(),
-                learn: s.trainer.is_some(),
-            })
-            .collect()
+        let _writer = self.writer.lock().unwrap();
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let mut infos: Vec<ShardInfo> = table.live().map(|s| s.info()).collect();
+        infos.extend(self.retired.lock().unwrap().shards.iter().map(|s| s.info()));
+        infos
     }
 
-    /// Per-shard statistics, in wire-id order.
+    /// Per-shard statistics: routable shards in wire-id order, then
+    /// draining shards. Exact under churn (writer lock, like
+    /// [`Self::infos`]).
     pub fn per_shard_stats(&self) -> Vec<ShardStats> {
-        self.shards
-            .iter()
-            .map(|s| ShardStats {
-                name: s.name.clone(),
-                stats: s.hub.stats(),
-                gen: s.hub.generation(),
-                reloads: s.hub.reloads(),
-                trainer: s.trainer.as_ref().map(OnlineTrainer::stats),
-            })
-            .collect()
+        let _writer = self.writer.lock().unwrap();
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let mut stats: Vec<ShardStats> = table.live().map(|s| s.shard_stats()).collect();
+        stats.extend(self.retired.lock().unwrap().shards.iter().map(|s| s.shard_stats()));
+        stats
     }
 
-    /// Aggregate statistics across every shard.
+    /// Aggregate statistics across every shard, including totals folded
+    /// in from removed shards — the counters never go backwards.
     pub fn stats_total(&self) -> StatsSnapshot {
+        let _writer = self.writer.lock().unwrap();
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
         let mut total = StatsSnapshot::default();
-        for s in &self.shards {
+        for s in table.live() {
+            total.add(&s.hub.stats());
+        }
+        let r = self.retired.lock().unwrap();
+        total.add(&r.closed);
+        for s in &r.shards {
             total.add(&s.hub.stats());
         }
         total
     }
 
-    /// Total hot reloads applied across all shards.
+    /// Total hot reloads applied across all shards, removed ones
+    /// included.
     pub fn reloads(&self) -> u64 {
-        self.shards.iter().map(|s| s.hub.reloads()).sum()
+        let _writer = self.writer.lock().unwrap();
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        let mut n: u64 = table.live().map(|s| s.hub.reloads()).sum();
+        let r = self.retired.lock().unwrap();
+        n += r.closed_reloads;
+        n += r.shards.iter().map(|s| s.hub.reloads()).sum::<u64>();
+        n
     }
 
-    /// Shut every shard down (drain + join). Trainers go first — each
-    /// drains its queue and publishes a final snapshot into a hub that
-    /// is still accepting reloads — then the hubs. Returns the final
+    /// Shut every shard down (drain + join). In-flight removals are
+    /// joined first; then, per shard, trainers go first — each drains
+    /// its queue and publishes a final snapshot into a hub that is
+    /// still accepting reloads — then the hubs. Returns the final
     /// aggregated statistics. Idempotent.
     pub fn shutdown(&self) -> StatsSnapshot {
-        for s in &self.shards {
-            if let Some(t) = &s.trainer {
+        self.closed.store(true, Ordering::Release);
+        let handles = std::mem::take(&mut *self.reclaims.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        let _writer = self.writer.lock().unwrap();
+        let table = unsafe { &*self.table.load(Ordering::Acquire) };
+        for s in table.live() {
+            if let Some(t) = s.trainer.get() {
                 t.shutdown();
             }
         }
         let mut total = StatsSnapshot::default();
-        for s in &self.shards {
+        for s in table.live() {
             total.add(&s.hub.shutdown());
         }
+        let r = self.retired.lock().unwrap();
+        total.add(&r.closed);
+        for s in &r.shards {
+            total.add(&s.hub.stats());
+        }
         total
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+        let ptr = *self.table.get_mut();
+        if !ptr.is_null() {
+            drop(unsafe { Box::from_raw(ptr) });
+        }
     }
 }
 
@@ -430,7 +831,7 @@ mod tests {
             Err(RegistryError::UnknownName(name)) => assert_eq!(name, "nope"),
             other => panic!("expected unknown name, got {other:?}"),
         }
-        assert_eq!(reg.resolve_id(7), Err(RegistryError::UnknownId(7)));
+        assert!(matches!(reg.resolve_id(7), Err(RegistryError::UnknownId(7))));
         reg.shutdown();
     }
 
@@ -449,6 +850,7 @@ mod tests {
         assert_eq!(infos.len(), 2);
         assert_eq!((infos[0].id, infos[0].hub.gen, infos[0].reloads), (0, 1, 0));
         assert_eq!((infos[1].id, infos[1].hub.gen, infos[1].reloads), (1, 2, 1));
+        assert!(infos.iter().all(|i| i.state == "serving"));
         match reg.reload(Some("ghost"), snapshot(4, 1.0).into()) {
             Err(RegistryError::UnknownName(_)) => {}
             other => panic!("expected unknown name, got {other:?}"),
@@ -472,7 +874,7 @@ mod tests {
 
     #[test]
     fn learn_routes_to_attached_trainer_and_publishes() {
-        let mut reg = two_shard_registry();
+        let reg = two_shard_registry();
         let cfg = TrainerWireConfig {
             queue: 64,
             publish_every_updates: 1, // publish on every update: observable fast
@@ -543,7 +945,7 @@ mod tests {
                 var_sn: 4.0,
             }],
         };
-        let mut reg =
+        let reg =
             ModelRegistry::new(vec![("digits".into(), ensemble.into())], 4, 64, 1, 0).unwrap();
         let err = reg.attach_trainer(None, &TrainerWireConfig::default()).unwrap_err();
         assert!(err.to_string().contains("binary"), "got {err}");
@@ -572,5 +974,124 @@ mod tests {
                 .is_err(),
             "empty name"
         );
+    }
+
+    #[test]
+    fn add_and_remove_shards_at_runtime() {
+        let reg = ModelRegistry::new(
+            vec![("default".into(), snapshot(8, 1.0).into())],
+            4,
+            64,
+            1,
+            0,
+        )
+        .unwrap();
+        assert_eq!(reg.len(), 1);
+        let (id, dim) = reg.add_model("b", snapshot(16, -1.0).into(), None).unwrap();
+        assert_eq!((id, dim), (1, 16));
+        assert_eq!(reg.len(), 2);
+        let (rid, hub) = reg.resolve_name(Some("b")).unwrap();
+        assert_eq!(rid, 1);
+        assert!(hub.submit(vec![1.0; 16]).unwrap().recv().unwrap().score < 0.0);
+        match reg.add_model("b", snapshot(4, 1.0).into(), None) {
+            Err(RegistryError::ModelExists(n)) => assert_eq!(n, "b"),
+            other => panic!("expected model-exists, got {other:?}"),
+        }
+        match reg.remove_model("default") {
+            Err(RegistryError::DefaultModel(_)) => {}
+            other => panic!("expected default-model, got {other:?}"),
+        }
+        match reg.remove_model("ghost") {
+            Err(RegistryError::UnknownName(_)) => {}
+            other => panic!("expected unknown name, got {other:?}"),
+        }
+        assert!(reg.add_model("", snapshot(4, 1.0).into(), None).is_err(), "empty name");
+        reg.remove_model("b").unwrap();
+        assert!(matches!(reg.resolve_name(Some("b")), Err(RegistryError::UnknownName(_))));
+        assert!(matches!(reg.resolve_id(1), Err(RegistryError::UnknownId(1))));
+        // Ids are never reused: the next registration gets a fresh one.
+        let (id, _) = reg.add_model("c", snapshot(8, 2.0).into(), None).unwrap();
+        assert_eq!(id, 2);
+        // The default shard served through it all.
+        assert!(reg.default_hub().submit(vec![1.0; 8]).unwrap().recv().unwrap().score > 0.0);
+        reg.shutdown();
+        assert!(matches!(
+            reg.add_model("late", snapshot(4, 1.0).into(), None),
+            Err(RegistryError::Hub(HubError::Closed))
+        ));
+    }
+
+    #[test]
+    fn removal_quiesces_the_trainer_then_drains_the_hub() {
+        let reg = ModelRegistry::new(
+            vec![("default".into(), snapshot(8, 1.0).into())],
+            4,
+            64,
+            1,
+            0,
+        )
+        .unwrap();
+        let cfg = TrainerWireConfig {
+            queue: 64,
+            publish_every_updates: 1,
+            publish_every_ms: 0,
+            seed: 3,
+            ..TrainerWireConfig::default()
+        };
+        let (id, dim) = reg.add_model("hot", snapshot(4, 0.0).into(), Some(&cfg)).unwrap();
+        assert_eq!((id, dim), (1, 4));
+        assert!(reg.has_trainer(Some("hot")));
+        assert!(reg.infos().iter().any(|i| i.name == "hot" && i.learn));
+        let x = Features::Sparse { idx: vec![0], val: vec![1.0] };
+        reg.learn(Some("hot"), x.clone(), 1.0).unwrap();
+        let (_, hub) = reg.resolve_name(Some("hot")).unwrap();
+        hub.submit(vec![1.0; 4]).unwrap().recv().unwrap();
+        reg.remove_model("hot").unwrap();
+        assert!(matches!(
+            reg.learn(Some("hot"), x, 1.0),
+            Err(RegistryError::UnknownName(_))
+        ));
+        // Reclaim joins the trainer, then the hub; once it finishes the
+        // shard leaves the listing and its counters survive in the
+        // totals (the trainer's accepted example scored nothing, so
+        // served counts only the one submit above).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        while reg.infos().len() > 1 {
+            assert!(std::time::Instant::now() < deadline, "reclaim never completed");
+            std::thread::yield_now();
+        }
+        assert_eq!(reg.stats_total().served, 1, "removed shard's stats fold into totals");
+        reg.shutdown();
+    }
+
+    #[test]
+    fn churn_never_disturbs_sibling_routes() {
+        let reg = Arc::new(
+            ModelRegistry::new(vec![("default".into(), snapshot(8, 1.0).into())], 4, 256, 2, 0)
+                .unwrap(),
+        );
+        let stop = Arc::new(AtomicBool::new(false));
+        let (r2, s2) = (Arc::clone(&reg), Arc::clone(&stop));
+        let scorer = std::thread::spawn(move || {
+            let mut served = 0u64;
+            while !s2.load(Ordering::Relaxed) {
+                let (_, hub) = r2.resolve_name(None).expect("default route must never fail");
+                let rx = hub.submit(vec![1.0; 8]).expect("sibling must never shed under churn");
+                assert!(rx.recv().unwrap().score > 0.0);
+                served += 1;
+            }
+            served
+        });
+        for round in 0..20 {
+            let name = format!("churn-{round}");
+            reg.add_model(&name, snapshot(16, -1.0).into(), None).unwrap();
+            let (_, hub) = reg.resolve_name(Some(&name)).unwrap();
+            assert!(hub.submit(vec![1.0; 16]).unwrap().recv().unwrap().score < 0.0);
+            reg.remove_model(&name).unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let served = scorer.join().unwrap();
+        assert!(served > 0, "the scorer thread must have made progress");
+        reg.shutdown();
     }
 }

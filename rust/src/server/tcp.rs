@@ -30,8 +30,10 @@
 //! sparse score, classify); a grant of 4 advertises the online-learning
 //! capability (`LEARN_SPARSE` / `LEARN_ACK` — the JSON `learn` op works
 //! at any version; like the v3 ops, the grant is capability discovery,
-//! not per-frame enforcement). Clients that never send `hello` (all v1
-//! clients) are served exactly as before, on the default shard.
+//! not per-frame enforcement); a grant of 5 advertises the runtime
+//! shard-lifecycle capability (`add-model` / `remove-model`, below).
+//! Clients that never send `hello` (all v1 clients) are served exactly
+//! as before, on the default shard.
 //!
 //! ## Online learning
 //!
@@ -50,9 +52,12 @@
 //! `stats` returns the aggregated [`StatsReport`] (throughput,
 //! features-touched percentiles, early-exit rate, shed counts, plus
 //! per-wire-class and per-shard splits); `models` lists the shard
-//! table; `reload` hot-swaps one shard's serving model with zero
-//! downtime (see [`ModelHub`]). All arrive over the same wire as
-//! ordinary requests — in binary mode they ride inside
+//! table with each shard's lifecycle state; `reload` hot-swaps one
+//! shard's serving model with zero downtime (see [`ModelHub`]); the v5
+//! `add-model` / `remove-model` ops register and retire whole shards at
+//! runtime via the registry's epoch-based route swap, so churn on one
+//! shard never stalls traffic on its siblings. All arrive over the same
+//! wire as ordinary requests — in binary mode they ride inside
 //! `JSON_REQ`/`JSON_RESP` envelope frames — so any connection can act
 //! as a control channel.
 
@@ -65,7 +70,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::config::{IoBackend, ServerConfig};
+use crate::config::{IoBackend, ServerConfig, TrainerWireConfig};
 use crate::coordinator::service::{
     CompletionNotifier, Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
 };
@@ -76,7 +81,7 @@ use crate::server::frame::{
 };
 use crate::server::hub::{HubError, ModelHub};
 use crate::server::protocol::{
-    ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V4,
+    ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V5,
 };
 use crate::server::registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
 
@@ -112,6 +117,10 @@ impl WireCounters {
 /// thread-backend-only fields are simply idle under the event loop).
 pub(crate) struct Shared {
     pub(crate) registry: ModelRegistry,
+    /// The server's trainer knobs (`--learn ...`), reused when a v5
+    /// `add-model` asks for a trainer on the new shard; `None` means
+    /// learn-enabled adds are rejected.
+    pub(crate) trainer: Option<TrainerWireConfig>,
     pub(crate) shutting_down: AtomicBool,
     pub(crate) accepted: AtomicU64,
     pub(crate) overloaded: AtomicU64,
@@ -189,7 +198,7 @@ impl TcpServer {
             IoBackend::EventLoop => make_event_wakeups(cfg.event_threads)?,
             IoBackend::Threads => (CompletionNotifier::default(), Vec::new()),
         };
-        let mut registry = ModelRegistry::new_with_notifier(
+        let registry = ModelRegistry::new_with_notifier(
             models,
             cfg.max_batch,
             cfg.queue,
@@ -211,11 +220,11 @@ impl TcpServer {
                 registry.attach_trainer(Some(name.as_str()), trainer_cfg)?;
             }
         }
-        let registry = registry;
         let listener = TcpListener::bind(&cfg.listen).map_err(|e| Error::io(&cfg.listen, e))?;
         let local_addr = listener.local_addr().map_err(|e| Error::io(&cfg.listen, e))?;
         let shared = Arc::new(Shared {
             registry,
+            trainer: cfg.trainer.clone(),
             shutting_down: AtomicBool::new(false),
             accepted: AtomicU64::new(0),
             overloaded: AtomicU64::new(0),
@@ -563,7 +572,7 @@ pub(crate) fn json_step(line: &str, shared: &Shared) -> Step {
         Ok(Request::Hello { proto }) => {
             // Grant the highest version both sides speak; v1 keeps the
             // connection on JSON lines (transparent fallback).
-            let granted = proto.min(PROTO_V4).max(1);
+            let granted = proto.min(PROTO_V5).max(1);
             // One snapshot: (gen, dim) must not tear across a reload.
             // The handshake advertises the default shard, which is what
             // single-model clients will be talking to.
@@ -616,6 +625,38 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                 })),
             }
         }
+        Request::AddModel { name, snapshot, learn } => {
+            // Trainer attach reuses the server's own `--learn` knobs so a
+            // runtime shard behaves exactly like a boot-time one; without
+            // them there is nothing sane to attach.
+            let trainer = match (learn, &shared.trainer) {
+                (false, _) => None,
+                (true, Some(cfg)) => Some(cfg),
+                (true, None) => {
+                    return Step::Job(render(Response::Error {
+                        id: None,
+                        error: "add-model: server has no trainer configured (--learn)".into(),
+                        retryable: false,
+                    }))
+                }
+            };
+            match shared.registry.add_model(&name, snapshot, trainer) {
+                Ok((id, dim)) => Step::Job(render(Response::Added { name, id, dim })),
+                Err(e) => Step::Job(render(Response::Error {
+                    id: None,
+                    error: e.to_string(),
+                    retryable: matches!(e, RegistryError::ModelBusy(_)),
+                })),
+            }
+        }
+        Request::RemoveModel { name } => match shared.registry.remove_model(&name) {
+            Ok(()) => Step::Job(render(Response::Removed { name })),
+            Err(e) => Step::Job(render(Response::Error {
+                id: None,
+                error: e.to_string(),
+                retryable: matches!(e, RegistryError::ModelBusy(_)),
+            })),
+        },
         Request::Learn { id, model, label, features } => {
             // Learning cost scales with the support too: the same nnz
             // knob screens learn payloads on every wire.
@@ -712,7 +753,15 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                     error: e.to_string(),
                     retryable: false,
                 })),
-                Err(HubError::Closed) => Step::Close,
+                // Closed is a race with this shard's retirement (or with
+                // the whole server's shutdown, where the connection dies
+                // momentarily anyway): a structured retryable error keeps
+                // the connection usable for its other routes.
+                Err(e @ HubError::Closed) => Step::Job(render(Response::Error {
+                    id,
+                    error: e.to_string(),
+                    retryable: true,
+                })),
             }
         }
     }
@@ -795,7 +844,9 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
             }
             Err(e @ HubError::DimMismatch { .. }) => err(ErrorCode::DimMismatch, e.to_string()),
             Err(e @ HubError::WrongKind { .. }) => err(ErrorCode::WrongModel, e.to_string()),
-            Err(HubError::Closed) => Step::Close,
+            // A shard mid-retirement (or server shutdown) answers like a
+            // dead worker generation: retryable, connection intact.
+            Err(e @ HubError::Closed) => err(ErrorCode::Unavailable, e.to_string()),
         }
     };
     match frame {
@@ -1048,6 +1099,7 @@ fn model_entries(shared: &Shared) -> Vec<ModelEntry> {
             dim: info.hub.dim,
             voters: info.hub.voters,
             learn: info.learn,
+            state: info.state.to_string(),
         })
         .collect()
 }
@@ -1081,6 +1133,7 @@ fn report(shared: &Shared) -> StatsReport {
                 let t = trainer.unwrap_or_default();
                 ModelStatsReport {
                     name: shard.name,
+                    state: shard.state.to_string(),
                     served: shard.stats.served,
                     avg_features: shard.stats.avg_features(),
                     early_exit_rate: shard.stats.early_exit_rate(),
@@ -1164,7 +1217,7 @@ mod tests {
             other => panic!("expected score, got {other:?}"),
         }
         // Binary negotiation + native sparse frame.
-        assert_eq!(client.negotiate().unwrap(), 4);
+        assert_eq!(client.negotiate().unwrap(), 5);
         match client.score_sparse(vec![3, 9], vec![1.0, 1.0], 0).unwrap() {
             Response::Score { score, features_evaluated, .. } => {
                 assert!(score > 0.0);

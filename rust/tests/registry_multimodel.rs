@@ -353,7 +353,7 @@ fn unknown_models_and_kind_mismatches_are_structured_errors() {
     client.ping().expect("connection survives all rejections");
 
     // Same screens on the binary wire, by interned id.
-    assert_eq!(client.negotiate().unwrap(), 3);
+    assert_eq!(client.negotiate().unwrap(), 5);
     match client.score_sparse2(99, vec![1], vec![1.0], 0).unwrap() {
         Response::Error { error, retryable, .. } => {
             assert!(error.contains("unknown model id"), "got {error:?}");
@@ -479,7 +479,7 @@ fn u32_indices_reach_wide_models_where_the_legacy_frame_cannot() {
     let wide_dim = 70_000;
     let server = registry_server(vec![("wide".into(), flat_snapshot(wide_dim, 1.0).into())], 64, 1);
     let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 3);
+    assert_eq!(client.negotiate().unwrap(), 5);
     // The legacy frame cannot even express the index ...
     let err = client.score_sparse(vec![69_999], vec![1.0], 0).unwrap_err();
     assert!(err.to_string().contains("u16"), "got {err}");

@@ -264,8 +264,8 @@ fn v2_negotiated_client_scores_sparse_and_runs_control_ops() {
 
     let mut client = Client::connect(&addr).unwrap();
     assert_eq!(client.proto(), 1);
-    assert_eq!(client.negotiate().unwrap(), 3, "server must grant v3");
-    assert_eq!(client.proto(), 3);
+    assert_eq!(client.negotiate().unwrap(), 5, "server grants the full v5 capability set");
+    assert_eq!(client.proto(), 5);
 
     // Native sparse frame: 3 nonzeros, all-ones model -> positive score
     // touching at most 3 coordinates.
@@ -490,7 +490,7 @@ fn learn_over_the_wire_converges_and_publishes_generations() {
     let addr = server.local_addr().to_string();
 
     let mut client = Client::connect(&addr).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 4, "server must grant v4");
+    assert_eq!(client.negotiate().unwrap(), 5, "server grants v5");
 
     // Offline reference: the exact learner the wire trainer builds, fed
     // the same sequence — the server's counters must land on these.

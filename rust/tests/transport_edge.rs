@@ -378,7 +378,7 @@ fn verbose_classify_breakdown_over_the_wire() {
         ));
 
         // Binary wire: CLASSIFY_SPARSE_VERBOSE → CLASS_VERBOSE.
-        assert_eq!(client.negotiate().unwrap(), 3);
+        assert_eq!(client.negotiate().unwrap(), 5);
         match client
             .classify_sparse_verbose(1, vec![5, 100, 300], vec![1.0, 1.0, 1.0], 0)
             .unwrap()
