@@ -1,0 +1,144 @@
+//! Microbenchmark for the serving score kernel: precomputed
+//! stop-threshold tables vs the sqrt-laden closed forms, and the
+//! blocked [`TabledPredictor`] vs the scalar [`EarlyStopPredictor`]
+//! walk, on identical inputs.
+//!
+//! Equivalence is asserted — bit-identical `(score, evaluated)` — on
+//! every example before anything is timed, so a speedup can never come
+//! from diverging answers. Three comparisons:
+//!
+//! * `tau/*` — one stop-threshold read: [`Boundary::level`] (closed
+//!   form, `sqrt`/`log` per call) vs [`BoundaryTable::level_at`] (one
+//!   table read).
+//! * `walk/*` — whole dense walks under the Constant and Curved STST:
+//!   scalar per-feature walker vs the blocked LUT kernel.
+//! * `walk/full` — the never-stopping baseline, isolating the pure
+//!   blocked-multiply win with no boundary checks in either path.
+//!
+//! `cargo bench --bench score_kernel` (BENCH_QUICK=1 for CI scale);
+//! writes `bench_score_kernel.csv`.
+
+use attentive::learner::predictor::{EarlyStopPredictor, TabledPredictor};
+use attentive::stst::boundary::{AnyBoundary, Boundary, BoundaryTable, StopContext};
+use attentive::util::bench::{black_box, Bench};
+
+const DIM: usize = 784;
+const VAR_SN: f64 = 4.0;
+
+/// Deterministic pseudo-random f64 in [-1, 1] (xorshift; no deps).
+fn prng(state: &mut u64) -> f64 {
+    *state ^= *state << 13;
+    *state ^= *state >> 7;
+    *state ^= *state << 17;
+    (*state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+}
+
+fn main() {
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let examples = if quick { 200 } else { 2_000 };
+
+    // One weight vector, mixed traffic: even examples confidently
+    // aligned with the weights (stop after a handful of coordinates —
+    // serving's common case), odd examples small-signal (walk long).
+    let mut seed = 0x0dd5_eed5_u64;
+    let w: Vec<f64> = (0..DIM).map(|_| prng(&mut seed)).collect();
+    let xs: Vec<Vec<f64>> = (0..examples)
+        .map(|e| {
+            (0..DIM)
+                .map(|j| {
+                    if e % 2 == 0 {
+                        w[j].signum() * 0.5
+                    } else {
+                        prng(&mut seed) * 0.1
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    let order: Vec<usize> = (0..DIM).collect();
+
+    let constant = AnyBoundary::Constant { delta: 0.1, paper_literal: false };
+    let curved = AnyBoundary::Curved { delta: 0.1 };
+    let full = AnyBoundary::Full;
+
+    // Correctness gate before any timing: the blocked LUT kernel must
+    // reproduce the scalar walker exactly on every example it is about
+    // to be timed on.
+    for boundary in [&constant, &curved, &full] {
+        let table = BoundaryTable::for_boundary(boundary, VAR_SN, DIM);
+        let scalar = EarlyStopPredictor::new(boundary);
+        let tabled = TabledPredictor::new(&table);
+        for x in &xs {
+            assert_eq!(
+                tabled.predict(&w, x, &order),
+                scalar.predict(&w, x, &order, VAR_SN),
+                "blocked kernel diverged ({})",
+                boundary.name()
+            );
+        }
+    }
+
+    let mut bench = if quick { Bench::quick() } else { Bench::new() };
+
+    // ---- One threshold read: closed form vs table ----
+    let lookups = 100_000usize;
+    let litems = Some(lookups as f64);
+    let constant_table = BoundaryTable::for_boundary(&constant, VAR_SN, DIM);
+    let curved_table = BoundaryTable::for_boundary(&curved, VAR_SN, DIM);
+    bench.measure_with_items("tau/constant closed-form", litems, || {
+        let mut acc = 0.0;
+        for i in 0..lookups {
+            let ctx =
+                StopContext { evaluated: 1 + (i % (DIM - 1)), total: DIM, theta: 0.0, var_sn: VAR_SN };
+            acc += constant.level(&ctx);
+        }
+        black_box(acc);
+    });
+    bench.measure_with_items("tau/constant table", litems, || {
+        let mut acc = 0.0;
+        for i in 0..lookups {
+            acc += constant_table.level_at(1 + (i % (DIM - 1)));
+        }
+        black_box(acc);
+    });
+    bench.measure_with_items("tau/curved closed-form", litems, || {
+        let mut acc = 0.0;
+        for i in 0..lookups {
+            let ctx =
+                StopContext { evaluated: 1 + (i % (DIM - 1)), total: DIM, theta: 0.0, var_sn: VAR_SN };
+            acc += curved.level(&ctx);
+        }
+        black_box(acc);
+    });
+    bench.measure_with_items("tau/curved table", litems, || {
+        let mut acc = 0.0;
+        for i in 0..lookups {
+            acc += curved_table.level_at(1 + (i % (DIM - 1)));
+        }
+        black_box(acc);
+    });
+
+    // ---- Whole walks: scalar vs blocked LUT, per family ----
+    let items = Some(examples as f64);
+    for (name, boundary) in [("constant", &constant), ("curved", &curved), ("full", &full)] {
+        let table = BoundaryTable::for_boundary(boundary, VAR_SN, DIM);
+        let scalar = EarlyStopPredictor::new(boundary);
+        bench.measure_with_items(format!("walk/{name} scalar"), items, || {
+            let mut acc = 0.0;
+            for x in &xs {
+                acc += scalar.predict(&w, x, &order, VAR_SN).0;
+            }
+            black_box(acc);
+        });
+        let tabled = TabledPredictor::new(&table);
+        bench.measure_with_items(format!("walk/{name} blocked-lut"), items, || {
+            let mut acc = 0.0;
+            for x in &xs {
+                acc += tabled.predict(&w, x, &order).0;
+            }
+            black_box(acc);
+        });
+    }
+
+    bench.write_csv(std::path::Path::new("bench_score_kernel.csv")).ok();
+}

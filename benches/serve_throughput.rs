@@ -4,7 +4,8 @@
 //! Spawns the TCP front-end on an ephemeral port and drives it with the
 //! load-generator client (mixed clean/noisy digit traffic, pipelined
 //! connections) over each wire mode — v1 dense JSON lines, the v2
-//! sparse JSON form, and v2 binary frames — then hot-reloads the same
+//! sparse JSON form, v2 binary frames, and the same examples packed
+//! into v6 `SCORE_BATCH` frames — then hot-reloads the same
 //! weights under the Full boundary via the control channel and replays
 //! the identical stream. The attentive-vs-full gap is the paper's
 //! focus-of-attention measured at the wire; the v1-vs-v2 gap is the
@@ -162,7 +163,24 @@ fn main() {
         passes.push((mode.name().to_string(), report));
     }
 
-    // Pass 4: multiclass classify against the ensemble shard — native
+    // Pass 4: the identical example stream packed 16 per `SCORE_BATCH`
+    // frame — one queue slot and one worker wakeup per frame. Batch
+    // tallies count per example, so dividing by the v2-binary pass's
+    // req/s reads off the batching speedup directly.
+    let batch = loadgen::run(&LoadGenConfig {
+        mode: ClientMode::Batch,
+        batch_size: 16,
+        ..loadcfg(ClientMode::Batch)
+    })
+    .expect("batch pass");
+    assert_eq!(
+        batch.answered + batch.overloaded,
+        requests as u64,
+        "every batched example answered"
+    );
+    row(&mut table, "attentive/batch", &batch);
+
+    // Pass 5: multiclass classify against the ensemble shard — native
     // v3 binary frames, ensemble-class digit traffic.
     let classify = loadgen::run(&LoadGenConfig {
         mode: ClientMode::Classify,
@@ -178,7 +196,7 @@ fn main() {
     );
     row(&mut table, "classify/v3-binary", &classify);
 
-    // Pass 5: full evaluation over v1-dense (the attention baseline).
+    // Pass 6: full evaluation over v1-dense (the attention baseline).
     let mut control = Client::connect(&addr).expect("control channel");
     control.reload(&full_snapshot).expect("hot reload to full evaluation");
     let full = loadgen::run(&loadcfg(ClientMode::V1Dense)).expect("full pass");
@@ -222,6 +240,17 @@ fn main() {
         );
     }
 
+    if v2b.req_per_s() > 0.0 {
+        println!(
+            "batch: {:.0} examples/s vs {:.0} singles/s over v2-binary ({:.2}x) \
+             at 16 examples per SCORE_BATCH frame",
+            batch.req_per_s(),
+            v2b.req_per_s(),
+            batch.req_per_s() / v2b.req_per_s(),
+        );
+    }
+
+    passes.push(("batch".to_string(), batch));
     passes.push(("classify".to_string(), classify));
     passes.push(("full-v1-dense".to_string(), full));
 
@@ -279,6 +308,23 @@ fn main() {
             row(&mut table2, &format!("event-loop/{}", mode.name()), &report);
             passes.push((format!("event-loop/{}", mode.name()), report));
         }
+        // Batched pass on the event loop — the default Linux backend,
+        // and the one the batch throughput floor gates in CI.
+        let event_batch = loadgen::run(&LoadGenConfig {
+            addr: event_addr.clone(),
+            connections: conns,
+            mode: ClientMode::Batch,
+            batch_size: 16,
+            ..loadcfg(ClientMode::Batch)
+        })
+        .expect("event-loop batch pass");
+        assert_eq!(
+            event_batch.answered + event_batch.overloaded,
+            requests as u64,
+            "every batched example answered (event loop)"
+        );
+        row(&mut table2, "event-loop/batch", &event_batch);
+        passes.push(("event-loop/batch".to_string(), event_batch));
         event_server.shutdown();
         // Thread backend at the same connection count, v2-binary only:
         // the apples-to-apples throughput ratio.

@@ -293,21 +293,35 @@ impl ExperimentConfig {
 
 /// Which transport backend the TCP front-end runs requests through.
 ///
-/// `Threads` is the original (and default) reader/writer thread pair
-/// per connection — simple, portable, and fine up to a few hundred
-/// connections. `EventLoop` is the epoll-based nonblocking backend
-/// (`rust/src/server/event_loop.rs`, Linux only): `event_threads`
-/// sharded loops multiplex every connection, scaling to thousands of
-/// mostly-idle sockets with an allocation-free steady-state hot path.
-/// Both speak the identical wire protocol; see
-/// `docs/PERFORMANCE.md` for the measured trade-offs.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// `EventLoop` is the epoll-based nonblocking backend
+/// (`rust/src/server/event_loop.rs`, Linux only, and the default
+/// there): `event_threads` sharded loops multiplex every connection,
+/// scaling to thousands of mostly-idle sockets with an
+/// allocation-free steady-state hot path. `Threads` is the original
+/// reader/writer thread pair per connection — simple and portable, it
+/// remains the default (and only) backend off Linux and the explicit
+/// fallback everywhere (`--io-backend threads`). Both speak the
+/// identical wire protocol; see `docs/PERFORMANCE.md` for the
+/// measured trade-offs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum IoBackend {
-    /// Reader/writer thread pair per connection (default).
-    #[default]
+    /// Reader/writer thread pair per connection (portable fallback;
+    /// default off Linux).
     Threads,
-    /// Sharded epoll event loops (Linux only).
+    /// Sharded epoll event loops (Linux only; default there).
     EventLoop,
+}
+
+impl Default for IoBackend {
+    /// Platform default: the event loop wherever epoll exists (Linux),
+    /// the portable thread backend everywhere else.
+    fn default() -> Self {
+        if cfg!(target_os = "linux") {
+            IoBackend::EventLoop
+        } else {
+            IoBackend::Threads
+        }
+    }
 }
 
 impl IoBackend {
@@ -332,7 +346,8 @@ impl IoBackend {
     /// The default backend, overridable with `ATTENTIVE_IO_BACKEND`.
     /// The env hook exists so the serving integration tests run
     /// unmodified against either backend (CI exercises both); unset
-    /// means `Threads`.
+    /// means the platform default ([`IoBackend::default`]: event loop
+    /// on Linux, threads elsewhere).
     ///
     /// # Panics
     ///
@@ -345,7 +360,7 @@ impl IoBackend {
         match std::env::var("ATTENTIVE_IO_BACKEND") {
             Ok(s) => IoBackend::from_name(s.trim())
                 .unwrap_or_else(|e| panic!("ATTENTIVE_IO_BACKEND: {e}")),
-            Err(_) => IoBackend::Threads,
+            Err(_) => IoBackend::default(),
         }
     }
 }
@@ -498,6 +513,12 @@ pub struct ServerConfig {
     /// this knob may range up to `u32::MAX` (the frame-byte cap is the
     /// practical bound).
     pub max_nnz: usize,
+    /// Protocol v6: cap on examples per `SCORE_BATCH` / `score-batch`
+    /// request. A batch beyond it is one whole-batch error (never a
+    /// truncation); each admitted example is still screened against
+    /// `max_nnz` individually. The default keeps a worst-case batch of
+    /// `max_nnz`-wide examples far under `max_frame_bytes`.
+    pub max_batch_examples: usize,
     /// Base RNG seed for the prediction-time coordinate policies.
     pub seed: u64,
     /// Transport backend: per-connection thread pairs (default) or the
@@ -528,6 +549,7 @@ impl Default for ServerConfig {
             max_pending_per_conn: 64,
             max_frame_bytes: 1 << 20,
             max_nnz: u16::MAX as usize,
+            max_batch_examples: 128,
             seed: 0,
             io_backend: IoBackend::default_from_env(),
             event_threads: 2,
@@ -548,6 +570,7 @@ impl ServerConfig {
             ("max_pending_per_conn", Json::Num(self.max_pending_per_conn as f64)),
             ("max_frame_bytes", Json::Num(self.max_frame_bytes as f64)),
             ("max_nnz", Json::Num(self.max_nnz as f64)),
+            ("max_batch_examples", Json::Num(self.max_batch_examples as f64)),
             ("seed", Json::Num(self.seed as f64)),
             ("io_backend", Json::Str(self.io_backend.name().into())),
             ("event_threads", Json::Num(self.event_threads as f64)),
@@ -576,6 +599,10 @@ impl ServerConfig {
                 .and_then(|x| x.as_usize())
                 .unwrap_or(d.max_frame_bytes),
             max_nnz: v.get("max_nnz").and_then(|x| x.as_usize()).unwrap_or(d.max_nnz),
+            max_batch_examples: v
+                .get("max_batch_examples")
+                .and_then(|x| x.as_usize())
+                .unwrap_or(d.max_batch_examples),
             seed: v.get("seed").and_then(|x| x.as_u64()).unwrap_or(d.seed),
             io_backend: match v.get("io_backend").and_then(|s| s.as_str()) {
                 Some(name) => IoBackend::from_name(name)?,
@@ -621,6 +648,7 @@ impl ServerConfig {
             ("max_pending_per_conn", self.max_pending_per_conn),
             ("max_frame_bytes", self.max_frame_bytes),
             ("max_nnz", self.max_nnz),
+            ("max_batch_examples", self.max_batch_examples),
             ("event_threads", self.event_threads),
             ("max_conns", self.max_conns),
         ] {
@@ -638,6 +666,13 @@ impl ServerConfig {
                 "server max_nnz {} exceeds the wire format's u32 bound {}",
                 self.max_nnz,
                 u32::MAX
+            )));
+        }
+        if self.max_batch_examples > u16::MAX as usize {
+            return Err(Error::Config(format!(
+                "server max_batch_examples {} exceeds the wire format's u16 bound {}",
+                self.max_batch_examples,
+                u16::MAX
             )));
         }
         if let Some(t) = &self.trainer {
@@ -694,6 +729,7 @@ mod tests {
             max_pending_per_conn: 128,
             max_frame_bytes: 1 << 16,
             max_nnz: 2048,
+            max_batch_examples: 64,
             seed: 42,
             io_backend: IoBackend::Threads,
             event_threads: 4,
@@ -719,6 +755,7 @@ mod tests {
         assert_eq!(sparse.queue, ServerConfig::default().queue);
         assert_eq!(sparse.max_frame_bytes, 1 << 20);
         assert_eq!(sparse.max_nnz, u16::MAX as usize);
+        assert_eq!(sparse.max_batch_examples, 128);
         assert_eq!(sparse.event_threads, 2);
         assert_eq!(sparse.max_conns, 16_384);
         assert_eq!(sparse.trainer, None);
@@ -797,6 +834,36 @@ mod tests {
             let cfg = ServerConfig { io_backend: IoBackend::EventLoop, ..Default::default() };
             cfg.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn io_backend_platform_default_prefers_event_loop_on_linux() {
+        // The platform default must always validate — whichever OS this
+        // test runs on, `ServerConfig::default()` has to be servable.
+        #[cfg(target_os = "linux")]
+        assert_eq!(IoBackend::default(), IoBackend::EventLoop);
+        #[cfg(not(target_os = "linux"))]
+        assert_eq!(IoBackend::default(), IoBackend::Threads);
+        let cfg = ServerConfig { io_backend: IoBackend::default(), ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn max_batch_examples_knob_is_validated_and_round_trips() {
+        // Wire bound: the SCORE_BATCH count field is a u16.
+        let cfg = ServerConfig { max_batch_examples: u16::MAX as usize, ..Default::default() };
+        cfg.validate().unwrap();
+        let cfg =
+            ServerConfig { max_batch_examples: u16::MAX as usize + 1, ..Default::default() };
+        assert!(cfg.validate().is_err(), "batch cap beyond the u16 wire bound");
+        let cfg = ServerConfig { max_batch_examples: 0, ..Default::default() };
+        assert!(cfg.validate().is_err(), "batch cap must admit at least one example");
+        // JSON round trip and sparse default.
+        let cfg = ServerConfig { max_batch_examples: 7, ..Default::default() };
+        let back =
+            ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.max_batch_examples, 7);
     }
 
     #[test]

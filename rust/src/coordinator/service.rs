@@ -19,9 +19,9 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::learner::predictor::EarlyStopPredictor;
+use crate::learner::predictor::TabledPredictor;
 use crate::margin::policy::{CoordinatePolicy, OrderGenerator};
-use crate::stst::boundary::AnyBoundary;
+use crate::stst::boundary::{AnyBoundary, TableCache};
 use crate::util::json::Json;
 
 /// Immutable model snapshot served by the service.
@@ -163,13 +163,17 @@ impl EnsembleSnapshot {
         self.voters.len()
     }
 
-    /// One coordinate-order generator per voter, seeded independently
-    /// and refreshed against that voter's weights — the per-worker
-    /// serving state for [`Self::classify`]. Weights are immutable for
-    /// the snapshot's lifetime, so the (possibly O(n log n)) refresh
-    /// happens once per worker generation, not per request.
-    pub fn make_orders(&self, seed: u64) -> Vec<OrderGenerator> {
-        self.voters
+    /// Per-worker serving state for [`Self::classify`]: one
+    /// coordinate-order generator and one threshold-table cache per
+    /// voter (seeded/built independently against that voter's weights
+    /// and variance), the precomputed class-slot map for the vote tally,
+    /// and the reusable tally buffer. Weights are immutable for the
+    /// snapshot's lifetime, so the (possibly O(n log n)) order refresh
+    /// and the boundary-table build happen once per worker generation,
+    /// not per request.
+    pub fn make_scratch(&self, seed: u64) -> ClassifyScratch {
+        let orders = self
+            .voters
             .iter()
             .enumerate()
             .map(|(i, v)| {
@@ -178,21 +182,41 @@ impl EnsembleSnapshot {
                 gen.refresh(&v.weights);
                 gen
             })
-            .collect()
+            .collect();
+        let dim = self.dim();
+        let tables = self
+            .voters
+            .iter()
+            .map(|v| TableCache::new(self.boundary.clone(), v.var_sn, dim))
+            .collect();
+        // Classes are strictly increasing (enforced by from_json), so
+        // each voter's (pos, neg) resolves to tally slots up front —
+        // the vote loop indexes instead of scanning. A class missing
+        // from `classes` (possible only for hand-built snapshots) maps
+        // to the out-of-range sentinel and its votes are dropped,
+        // matching the old linear scan's behavior.
+        let slot = |c: i64| self.classes.binary_search(&c).map_or(u32::MAX, |i| i as u32);
+        let pair_slots = self.voters.iter().map(|v| (slot(v.pos), slot(v.neg))).collect();
+        ClassifyScratch {
+            orders,
+            tables,
+            pair_slots,
+            tally: vec![0; self.classes.len()],
+        }
     }
 
     /// Attentive all-pairs vote: every voter early-exits independently,
     /// votes are tallied, and ties break toward the smaller class label
     /// (deterministic, matching the offline
-    /// [`OneVsOneEnsemble::predict`]). `orders` must come from
-    /// [`Self::make_orders`] (one generator per voter, same order). The
-    /// response's `score` is the winning vote count and
-    /// `features_evaluated` the total across voters.
+    /// [`OneVsOneEnsemble::predict`]). `scratch` must come from
+    /// [`Self::make_scratch`] on this snapshot. The response's `score`
+    /// is the winning vote count and `features_evaluated` the total
+    /// across voters.
     ///
     /// [`OneVsOneEnsemble::predict`]:
     /// crate::learner::multiclass::OneVsOneEnsemble::predict
-    pub fn classify(&self, features: &Features, orders: &mut [OrderGenerator]) -> ScoreResponse {
-        self.classify_with(features, orders, false)
+    pub fn classify(&self, features: &Features, scratch: &mut ClassifyScratch) -> ScoreResponse {
+        self.classify_with(features, scratch, false)
     }
 
     /// [`Self::classify`] with an optional per-voter cost breakdown:
@@ -204,29 +228,34 @@ impl EnsembleSnapshot {
     pub fn classify_with(
         &self,
         features: &Features,
-        orders: &mut [OrderGenerator],
+        scratch: &mut ClassifyScratch,
         verbose: bool,
     ) -> ScoreResponse {
-        debug_assert_eq!(orders.len(), self.voters.len(), "one order generator per voter");
-        let predictor = EarlyStopPredictor::new(&self.boundary);
-        let mut votes: Vec<(i64, u32)> = self.classes.iter().map(|&c| (c, 0)).collect();
+        let ClassifyScratch { orders, tables, pair_slots, tally } = scratch;
+        debug_assert_eq!(orders.len(), self.voters.len(), "scratch built for this snapshot");
+        tally.clear();
+        tally.resize(self.classes.len(), 0);
         let mut evaluated = 0usize;
         let mut per_voter = verbose.then(|| Vec::with_capacity(self.voters.len()));
-        for (voter, orders) in self.voters.iter().zip(orders.iter_mut()) {
+        let walk = self.voters.iter().zip(orders.iter_mut()).zip(tables.iter_mut());
+        for (((voter, orders), cache), &(pos_slot, neg_slot)) in walk.zip(pair_slots.iter()) {
             let (score, k) = match features {
                 Features::Dense(x) => {
                     let order = orders.next();
-                    predictor.predict(&voter.weights, x, order, voter.var_sn)
+                    let table = cache.for_total(order.len());
+                    TabledPredictor::new(table).predict(&voter.weights, x, order)
                 }
                 Features::Sparse { idx, val } => {
                     let order = orders.next_sparse(&voter.weights, idx);
-                    predictor.predict_sparse(&voter.weights, idx, val, order, voter.var_sn)
+                    let table = cache.for_total(order.len());
+                    TabledPredictor::new(table).predict_sparse(&voter.weights, idx, val, order)
                 }
             };
             evaluated += k;
-            let winner = if score >= 0.0 { voter.pos } else { voter.neg };
-            if let Some(slot) = votes.iter_mut().find(|(c, _)| *c == winner) {
-                slot.1 += 1;
+            let (winner, slot) =
+                if score >= 0.0 { (voter.pos, pos_slot) } else { (voter.neg, neg_slot) };
+            if let Some(count) = tally.get_mut(slot as usize) {
+                *count += 1;
             }
             if let Some(rows) = per_voter.as_mut() {
                 rows.push(VoterVote {
@@ -237,7 +266,17 @@ impl EnsembleSnapshot {
                 });
             }
         }
-        let &(label, won) = votes.iter().max_by_key(|(c, v)| (*v, -*c)).unwrap();
+        // Ascending scan with a strict compare: the first slot holding
+        // the max vote count wins, and classes are ascending — the same
+        // smaller-label tie-break as the offline ensemble.
+        let mut best = 0usize;
+        for (i, &votes) in tally.iter().enumerate() {
+            if votes > tally[best] {
+                best = i;
+            }
+        }
+        let label = self.classes[best];
+        let won = tally[best];
         ScoreResponse {
             score: won as f64,
             features_evaluated: evaluated,
@@ -356,6 +395,26 @@ impl EnsembleSnapshot {
         }
         Ok(Self { classes, boundary, policy, voters })
     }
+}
+
+/// Reusable per-worker classify state built by
+/// [`EnsembleSnapshot::make_scratch`]: order generators and threshold
+/// tables (one per voter), the voter→tally-slot map, and the vote tally
+/// buffer. Holding this across requests is what makes the classify hot
+/// path allocation-free: the old per-call `Vec<(class, votes)>` and its
+/// O(C) linear scan per voter are replaced by a cleared-and-reused
+/// buffer indexed through the precomputed slots.
+#[derive(Debug, Clone)]
+pub struct ClassifyScratch {
+    /// One coordinate-order generator per voter (pair-enumeration order).
+    orders: Vec<OrderGenerator>,
+    /// One threshold-table cache per voter (its own `var_sn`).
+    tables: Vec<TableCache>,
+    /// Tally slots for each voter's (pos, neg) classes; `u32::MAX` marks
+    /// a class missing from `classes` (hand-built snapshots only).
+    pair_slots: Vec<(u32, u32)>,
+    /// Vote tally, one slot per class, cleared per request.
+    tally: Vec<u32>,
 }
 
 /// What a serving shard hosts: one binary model or an all-pairs
@@ -611,6 +670,22 @@ struct ScoreRequest {
     respond: SyncSender<ScoreResponse>,
 }
 
+/// A whole wire batch admitted as **one** queue unit: it occupies a
+/// single queue slot and costs a single worker wakeup, and its examples
+/// are scored back-to-back by one worker in submission order — driving
+/// the order-generator stream exactly as k single submissions would, so
+/// batched results are bit-identical to singles.
+struct BatchRequest {
+    examples: Vec<Features>,
+    respond: SyncSender<Vec<ScoreResponse>>,
+}
+
+/// What travels on the service queue.
+enum Work {
+    One(ScoreRequest),
+    Batch(BatchRequest),
+}
+
 /// Multiclass outcome attached to a classify response.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ClassifyInfo {
@@ -831,7 +906,7 @@ impl std::fmt::Debug for CompletionNotifier {
 /// dropping every handle shuts the workers down.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: SyncSender<ScoreRequest>,
+    tx: SyncSender<Work>,
 }
 
 impl ServiceHandle {
@@ -851,7 +926,8 @@ impl ServiceHandle {
 
     fn call(&self, features: impl Into<Features>, kind: ReqKind) -> Option<ScoreResponse> {
         let (tx, rx) = sync_channel(1);
-        match self.tx.try_send(ScoreRequest { features: features.into(), kind, respond: tx }) {
+        let work = Work::One(ScoreRequest { features: features.into(), kind, respond: tx });
+        match self.tx.try_send(work) {
             Ok(()) => {}
             Err(TrySendError::Full(req)) => {
                 // Block on a full queue (backpressure) rather than dropping.
@@ -883,7 +959,26 @@ impl ServiceHandle {
         kind: ReqKind,
     ) -> Result<Receiver<ScoreResponse>, SubmitError> {
         let (tx, rx) = sync_channel(1);
-        match self.tx.try_send(ScoreRequest { features: features.into(), kind, respond: tx }) {
+        let work = Work::One(ScoreRequest { features: features.into(), kind, respond: tx });
+        match self.tx.try_send(work) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Non-blocking admission of a whole score batch as **one queue
+    /// unit** (see [`BatchRequest`]): either every example is admitted
+    /// together or the batch is shed as a unit. The receiver yields one
+    /// response per example, in submission order; per-example problems
+    /// (dimension mismatch) surface as the NaN reject sentinel in that
+    /// example's slot and never poison the rest of the batch.
+    pub fn submit_batch(
+        &self,
+        examples: Vec<Features>,
+    ) -> Result<Receiver<Vec<ScoreResponse>>, SubmitError> {
+        let (tx, rx) = sync_channel(1);
+        match self.tx.try_send(Work::Batch(BatchRequest { examples, respond: tx })) {
             Ok(()) => Ok(rx),
             Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
             Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
@@ -956,7 +1051,7 @@ impl PredictionService {
     /// Start the workers. Returns a request handle and the running
     /// service (stats + joins).
     pub fn spawn(self) -> (ServiceHandle, RunningService) {
-        let (tx, rx) = sync_channel::<ScoreRequest>(self.queue);
+        let (tx, rx) = sync_channel::<Work>(self.queue);
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(ServiceStats::default());
         let mut handles = Vec::new();
@@ -978,11 +1073,7 @@ impl PredictionService {
 /// Blocking receive for the first request, opportunistic drain for the
 /// rest — dynamic batching without a timer. Returns `false` when every
 /// sender has dropped (worker should exit).
-fn drain_batch(
-    rx: &Mutex<Receiver<ScoreRequest>>,
-    batch: &mut Vec<ScoreRequest>,
-    max_batch: usize,
-) -> bool {
+fn drain_batch(rx: &Mutex<Receiver<Work>>, batch: &mut Vec<Work>, max_batch: usize) -> bool {
     let guard = rx.lock().unwrap();
     match guard.recv() {
         Ok(first) => batch.push(first),
@@ -998,7 +1089,7 @@ fn drain_batch(
 }
 
 fn worker_loop(
-    rx: Arc<Mutex<Receiver<ScoreRequest>>>,
+    rx: Arc<Mutex<Receiver<Work>>>,
     model: Arc<ServingModel>,
     stats: Arc<ServiceStats>,
     max_batch: usize,
@@ -1023,8 +1114,39 @@ fn reject() -> ScoreResponse {
     ScoreResponse { score: f64::NAN, features_evaluated: 0, classify: None, per_voter: None }
 }
 
+/// Score one example against a binary snapshot — the single hot path
+/// shared by lone requests and batch members, so a batched example
+/// drives the order generator and threshold table exactly as the same
+/// example submitted alone would (bit-identical scores, feature counts,
+/// and early-exit accounting). Returns the response plus the "full
+/// evaluation" total for the stats histogram: for sparse payloads that
+/// is the support size — zero coordinates are skipped losslessly, so
+/// both the walk and the early-exit accounting run against nnz.
+fn score_one(
+    model: &ModelSnapshot,
+    orders: &mut OrderGenerator,
+    table: &mut TableCache,
+    features: &Features,
+) -> (ScoreResponse, usize) {
+    let (score, k, total) = match features {
+        Features::Dense(x) => {
+            let order = orders.next();
+            let (s, k) = TabledPredictor::new(table.for_total(order.len()))
+                .predict(&model.weights, x, order);
+            (s, k, model.weights.len())
+        }
+        Features::Sparse { idx, val } => {
+            let order = orders.next_sparse(&model.weights, idx);
+            let (s, k) = TabledPredictor::new(table.for_total(order.len()))
+                .predict_sparse(&model.weights, idx, val, order);
+            (s, k, idx.len())
+        }
+    };
+    (ScoreResponse { score, features_evaluated: k, classify: None, per_voter: None }, total)
+}
+
 fn binary_worker(
-    rx: &Mutex<Receiver<ScoreRequest>>,
+    rx: &Mutex<Receiver<Work>>,
     model: &ModelSnapshot,
     stats: &ServiceStats,
     max_batch: usize,
@@ -1033,86 +1155,99 @@ fn binary_worker(
 ) {
     let mut orders = OrderGenerator::new(model.policy, seed);
     orders.refresh(&model.weights);
-    let mut batch: Vec<ScoreRequest> = Vec::with_capacity(max_batch);
+    let dim = model.weights.len();
+    // Stop thresholds depend only on (boundary, var_sn, walk length) —
+    // constant per snapshot — so the sqrt-laden closed forms are
+    // evaluated once here, not per feature (see stst::BoundaryTable).
+    let mut table = TableCache::new(model.boundary.clone(), model.var_sn, dim);
+    let mut batch: Vec<Work> = Vec::with_capacity(max_batch);
     while drain_batch(rx, &mut batch, max_batch) {
         stats.batches.fetch_add(1, Ordering::Relaxed);
-        let dim = model.weights.len();
-        for req in batch.drain(..) {
-            // For sparse payloads "full evaluation" means the whole
-            // support: zero coordinates are skipped losslessly, so both
-            // the walk and the early-exit accounting run against nnz.
-            let (resp, total) =
-                if req.kind != ReqKind::Score || req.features.check_dim(dim).is_err() {
-                    (reject(), dim)
-                } else {
-                    let predictor = EarlyStopPredictor::new(&model.boundary);
-                    let (score, k, total) = match &req.features {
-                        Features::Dense(x) => {
-                            let order = orders.next();
-                            let (s, k) = predictor.predict(&model.weights, x, order, model.var_sn);
-                            (s, k, dim)
-                        }
-                        Features::Sparse { idx, val } => {
-                            let order = orders.next_sparse(&model.weights, idx);
-                            let (s, k) = predictor.predict_sparse(
-                                &model.weights,
-                                idx,
-                                val,
-                                order,
-                                model.var_sn,
-                            );
-                            (s, k, idx.len())
-                        }
-                    };
-                    (
-                        ScoreResponse {
-                            score,
-                            features_evaluated: k,
-                            classify: None,
-                            per_voter: None,
-                        },
-                        total,
-                    )
-                };
-            // Dimension-mismatch rejects land in bucket 0 and count as
-            // "early exit"; the network front-end screens those out before
-            // admission, so served traffic keeps the histogram honest.
-            stats.record(resp.features_evaluated, total);
-            let _ = req.respond.send(resp);
-            notifier.notify();
+        for work in batch.drain(..) {
+            match work {
+                Work::One(req) => {
+                    // Dimension-mismatch rejects land in bucket 0 and
+                    // count as "early exit"; the network front-end
+                    // screens those out before admission, so served
+                    // traffic keeps the histogram honest.
+                    let (resp, total) =
+                        if req.kind != ReqKind::Score || req.features.check_dim(dim).is_err() {
+                            (reject(), dim)
+                        } else {
+                            score_one(model, &mut orders, &mut table, &req.features)
+                        };
+                    stats.record(resp.features_evaluated, total);
+                    let _ = req.respond.send(resp);
+                    notifier.notify();
+                }
+                Work::Batch(b) => {
+                    // One wakeup, k examples: scored back-to-back in
+                    // submission order. A bad example rejects alone;
+                    // the rest of the batch is unaffected.
+                    let mut out = Vec::with_capacity(b.examples.len());
+                    for features in &b.examples {
+                        let (resp, total) = if features.check_dim(dim).is_err() {
+                            (reject(), dim)
+                        } else {
+                            score_one(model, &mut orders, &mut table, features)
+                        };
+                        stats.record(resp.features_evaluated, total);
+                        out.push(resp);
+                    }
+                    let _ = b.respond.send(out);
+                    notifier.notify();
+                }
+            }
         }
     }
 }
 
 fn ensemble_worker(
-    rx: &Mutex<Receiver<ScoreRequest>>,
+    rx: &Mutex<Receiver<Work>>,
     ensemble: &EnsembleSnapshot,
     stats: &ServiceStats,
     max_batch: usize,
     seed: u64,
     notifier: &CompletionNotifier,
 ) {
-    let mut orders = ensemble.make_orders(seed);
-    let mut batch: Vec<ScoreRequest> = Vec::with_capacity(max_batch);
+    let mut scratch = ensemble.make_scratch(seed);
+    let mut batch: Vec<Work> = Vec::with_capacity(max_batch);
     let dim = ensemble.dim();
     let voters = ensemble.voter_count();
     while drain_batch(rx, &mut batch, max_batch) {
         stats.batches.fetch_add(1, Ordering::Relaxed);
-        for req in batch.drain(..) {
-            // "Full evaluation" for the ensemble is every voter walking
-            // the whole support; early-exit accounting runs against that.
-            let (resp, total) = if req.kind.base() != ReqKind::Classify
-                || req.features.check_dim(dim).is_err()
-            {
-                (reject(), dim * voters)
-            } else {
-                let total = req.features.nnz() * voters;
-                let verbose = req.kind == ReqKind::ClassifyVerbose;
-                (ensemble.classify_with(&req.features, &mut orders, verbose), total)
-            };
-            stats.record(resp.features_evaluated, total);
-            let _ = req.respond.send(resp);
-            notifier.notify();
+        for work in batch.drain(..) {
+            match work {
+                Work::One(req) => {
+                    // "Full evaluation" for the ensemble is every voter
+                    // walking the whole support; early-exit accounting
+                    // runs against that.
+                    let (resp, total) = if req.kind.base() != ReqKind::Classify
+                        || req.features.check_dim(dim).is_err()
+                    {
+                        (reject(), dim * voters)
+                    } else {
+                        let total = req.features.nnz() * voters;
+                        let verbose = req.kind == ReqKind::ClassifyVerbose;
+                        (ensemble.classify_with(&req.features, &mut scratch, verbose), total)
+                    };
+                    stats.record(resp.features_evaluated, total);
+                    let _ = req.respond.send(resp);
+                    notifier.notify();
+                }
+                Work::Batch(b) => {
+                    // Score batches are a binary-shard op; the hub
+                    // screens the kind before admission, so this is the
+                    // library-caller reject path, per example.
+                    let mut out = Vec::with_capacity(b.examples.len());
+                    for _ in &b.examples {
+                        stats.record(0, dim * voters);
+                        out.push(reject());
+                    }
+                    let _ = b.respond.send(out);
+                    notifier.notify();
+                }
+            }
         }
     }
 }
@@ -1468,8 +1603,8 @@ mod tests {
         let ens = flat_ensemble(dim);
         assert_eq!(ens.dim(), dim);
         assert_eq!(ens.voter_count(), 3);
-        let mut orders = ens.make_orders(0);
-        let up = ens.classify(&Features::Dense(vec![1.0; dim]), &mut orders);
+        let mut scratch = ens.make_scratch(0);
+        let up = ens.classify(&Features::Dense(vec![1.0; dim]), &mut scratch);
         let info = up.classify.expect("classify outcome");
         assert_eq!(info.label, 0);
         assert_eq!(info.votes, 2);
@@ -1480,11 +1615,11 @@ mod tests {
             "voters must early-exit, spent {}",
             up.features_evaluated
         );
-        let down = ens.classify(&Features::Dense(vec![-1.0; dim]), &mut orders);
+        let down = ens.classify(&Features::Dense(vec![-1.0; dim]), &mut scratch);
         assert_eq!(down.classify.unwrap().label, 2);
         // Sparse payloads walk only the support, per voter.
         let sparse =
-            ens.classify(&Features::Sparse { idx: vec![3, 9], val: vec![1.0, 1.0] }, &mut orders);
+            ens.classify(&Features::Sparse { idx: vec![3, 9], val: vec![1.0, 1.0] }, &mut scratch);
         assert_eq!(sparse.classify.unwrap().label, 0);
         assert!(sparse.features_evaluated <= 6, "3 voters × nnz 2 caps the walk");
     }
@@ -1494,13 +1629,13 @@ mod tests {
         let dim = 64;
         let ens = flat_ensemble(dim);
         let x = Features::Dense(vec![1.0; dim]);
-        // Two independent order sets so the verbose run replays the
+        // Two independent scratch sets so the verbose run replays the
         // exact same policy stream as the plain one.
-        let mut orders_a = ens.make_orders(7);
-        let mut orders_b = ens.make_orders(7);
-        let plain = ens.classify(&x, &mut orders_a);
+        let mut scratch_a = ens.make_scratch(7);
+        let mut scratch_b = ens.make_scratch(7);
+        let plain = ens.classify(&x, &mut scratch_a);
         assert!(plain.per_voter.is_none(), "plain classify carries no breakdown");
-        let verbose = ens.classify_with(&x, &mut orders_b, true);
+        let verbose = ens.classify_with(&x, &mut scratch_b, true);
         assert_eq!(plain.classify, verbose.classify);
         assert_eq!(plain.features_evaluated, verbose.features_evaluated);
         let rows = verbose.per_voter.expect("verbose breakdown");
@@ -1620,6 +1755,92 @@ mod tests {
         let rx = h.submit(vec![1.0; dim]).expect("queue has room");
         let resp = rx.recv().expect("admitted requests are always answered");
         assert!(resp.score > 0.0);
+        drop(h);
+        run.join();
+    }
+
+    /// Mixed test payloads: confident, ambiguous, and sparse examples.
+    fn batch_examples(dim: usize, k: usize) -> Vec<Features> {
+        (0..k)
+            .map(|i| match i % 3 {
+                0 => Features::Dense(vec![if i % 2 == 0 { 1.0 } else { -1.0 }; dim]),
+                1 => Features::Dense(
+                    (0..dim).map(|j| if (i + j) % 2 == 0 { 0.01 } else { -0.01 }).collect(),
+                ),
+                _ => Features::Sparse {
+                    idx: (0..dim as u32 / 4).map(|j| j * 3).collect(),
+                    val: (0..dim / 4).map(|j| ((i + j) as f64 * 0.7).sin()).collect(),
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_is_bit_identical_to_singles() {
+        // The same examples through one Work::Batch and through k
+        // sequential singles, against two services with the same seed
+        // and a single worker each: every (score, features_evaluated)
+        // pair must match exactly — same order-generator stream, same
+        // thresholds, same FP association.
+        let dim = 64;
+        let examples = batch_examples(dim, 9);
+        let (h_batch, run_batch) = PredictionService::new(model(dim), 8, 64, 42).spawn();
+        let (h_single, run_single) = PredictionService::new(model(dim), 8, 64, 42).spawn();
+        let batched = h_batch.submit_batch(examples.clone()).unwrap().recv().unwrap();
+        assert_eq!(batched.len(), examples.len());
+        for (i, features) in examples.iter().enumerate() {
+            let single = h_single.score(features.clone()).unwrap();
+            assert_eq!(batched[i].score, single.score, "example {i} score");
+            assert_eq!(
+                batched[i].features_evaluated, single.features_evaluated,
+                "example {i} feature count"
+            );
+        }
+        // Early-exit stats identical too (one extra `batches` tick is
+        // the design: the whole batch was one drain unit).
+        let sb = run_batch.stats.snapshot();
+        let ss = run_single.stats.snapshot();
+        assert_eq!(sb.served, ss.served);
+        assert_eq!(sb.features, ss.features);
+        assert_eq!(sb.early_exits, ss.early_exits);
+        assert_eq!(sb.hist, ss.hist);
+        drop(h_batch);
+        drop(h_single);
+        run_batch.join();
+        run_single.join();
+    }
+
+    #[test]
+    fn batch_bad_example_rejects_alone() {
+        let dim = 16;
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0).spawn();
+        let examples = vec![
+            Features::Dense(vec![1.0; dim]),
+            Features::Dense(vec![1.0; 3]), // wrong dim
+            Features::Sparse { idx: vec![2, 99], val: vec![1.0, 1.0] }, // out of range
+            Features::Dense(vec![-1.0; dim]),
+        ];
+        let out = h.submit_batch(examples).unwrap().recv().unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(out[0].score > 0.0);
+        assert!(out[1].score.is_nan(), "dim mismatch rejects in place");
+        assert!(out[2].score.is_nan(), "out-of-range index rejects in place");
+        assert!(out[3].score < 0.0, "later examples are unaffected");
+        drop(h);
+        run.join();
+    }
+
+    #[test]
+    fn batch_against_ensemble_rejects_per_example() {
+        let dim = 16;
+        let (h, run) = PredictionService::new(flat_ensemble(dim), 4, 16, 0).spawn();
+        let out = h
+            .submit_batch(vec![Features::Dense(vec![1.0; dim]); 3])
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.score.is_nan()), "score batch needs a binary shard");
         drop(h);
         run.join();
     }

@@ -8,7 +8,7 @@
 //! error, "a fact clearly evident throughout the experiments").
 
 use crate::margin::policy::OrderGenerator;
-use crate::stst::boundary::{Boundary, StopContext};
+use crate::stst::boundary::{Boundary, BoundaryTable, StopContext};
 
 /// Two-sided sequential sign predictor under a stopping boundary.
 #[derive(Debug, Clone, Copy)]
@@ -124,10 +124,124 @@ impl<'b, B: Boundary + ?Sized> EarlyStopPredictor<'b, B> {
     }
 }
 
+/// Number of terms gathered per block by [`TabledPredictor`]. Small enough
+/// that a wasted partial block on an early stop is cheap, large enough for
+/// the multiply stage to vectorize.
+const BLOCK: usize = 16;
+
+/// Blocked, LUT-driven variant of [`EarlyStopPredictor`] for the serving
+/// hot path.
+///
+/// Two restructurings over the scalar walker, both bit-identical in output:
+///
+/// * Thresholds come from a precomputed [`BoundaryTable`] instead of the
+///   `sqrt`-laden closed form — the table stores the *exact* values
+///   [`Boundary::level`] would return (see `stst::boundary`), and for the
+///   common flat (Constant STST) case the single τ is hoisted out of the
+///   loop entirely.
+/// * Terms are gathered block-at-a-time into a fixed-size buffer (a tight,
+///   auto-vectorizable multiply loop over `[f64; BLOCK]`), then folded into
+///   the running sum **sequentially, one accumulator, in walk order** — so
+///   floating-point association is unchanged and every partial sum `S_i`
+///   matches the scalar walk bit for bit. Stops still fire per feature;
+///   for non-evidence boundaries (budgeted/full) no stop can ever fire, so
+///   those walks run check-free over `chunks_exact` blocks.
+///
+/// The `(score, features_evaluated)` pair is guaranteed equal — as in
+/// `assert_eq!`, not approximately — to [`EarlyStopPredictor`] driven by
+/// the boundary the table was built from.
+#[derive(Debug, Clone, Copy)]
+pub struct TabledPredictor<'t> {
+    table: &'t BoundaryTable,
+}
+
+impl<'t> TabledPredictor<'t> {
+    /// Predictor driven by a precomputed threshold table.
+    pub fn new(table: &'t BoundaryTable) -> Self {
+        Self { table }
+    }
+
+    /// Blocked walk shared by the dense and sparse entry points: `term(j)`
+    /// produces the j-th term, where `j` ranges over `order`'s values.
+    fn walk(&self, order: &[usize], term: impl Fn(usize) -> f64) -> (f64, usize) {
+        let n = order.len();
+        let mut buf = [0.0f64; BLOCK];
+        if !self.table.is_evidence_based() {
+            // No stop can fire: pure blocked accumulation up to the cap.
+            let cap = self.table.cap(n);
+            let mut s = 0.0;
+            let mut chunks = order[..cap].chunks_exact(BLOCK);
+            for chunk in chunks.by_ref() {
+                // Fixed-size gather-multiply: the vectorizable stage.
+                for (slot, &j) in buf.iter_mut().zip(chunk) {
+                    *slot = term(j);
+                }
+                // Single-accumulator fold in walk order: same FP
+                // association as the scalar loop.
+                for &t in &buf {
+                    s += t;
+                }
+            }
+            for &j in chunks.remainder() {
+                s += term(j);
+            }
+            return (s, cap);
+        }
+        debug_assert!(
+            self.table.supports_total(n),
+            "boundary table built for a different walk length"
+        );
+        let flat = self.table.flat_level();
+        let mut s = 0.0;
+        let mut evaluated = 0usize;
+        for chunk in order.chunks(BLOCK) {
+            for (slot, &j) in buf.iter_mut().zip(chunk) {
+                *slot = term(j);
+            }
+            for &t in &buf[..chunk.len()] {
+                s += t;
+                evaluated += 1;
+                // Strict compare, and never at the endpoint — identical
+                // to the scalar walker's stop rule.
+                if evaluated < n {
+                    let tau = match flat {
+                        Some(tau) => tau,
+                        None => self.table.level_at(evaluated),
+                    };
+                    if s.abs() > tau {
+                        return (s, evaluated);
+                    }
+                }
+            }
+        }
+        (s, evaluated)
+    }
+
+    /// Blocked equivalent of [`EarlyStopPredictor::predict`] (`var_sn` is
+    /// baked into the table).
+    pub fn predict(&self, w: &[f64], x: &[f64], order: &[usize]) -> (f64, usize) {
+        self.walk(order, |j| w[j] * x[j])
+    }
+
+    /// Blocked equivalent of [`EarlyStopPredictor::predict_sparse`]:
+    /// `order` holds positions into `idx`/`val`.
+    pub fn predict_sparse(
+        &self,
+        w: &[f64],
+        idx: &[u32],
+        val: &[f64],
+        order: &[usize],
+    ) -> (f64, usize) {
+        self.walk(order, |p| w[idx[p] as usize] * val[p])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::stst::boundary::{BudgetedBoundary, ConstantBoundary, TrivialBoundary};
+    use crate::stst::boundary::{
+        AnyBoundary, BudgetedBoundary, ConstantBoundary, TrivialBoundary,
+    };
 
     #[test]
     fn full_boundary_full_evaluation() {
@@ -227,5 +341,93 @@ mod tests {
         let x: Vec<f64> = (0..n).map(|i| if i % 2 == 0 { 0.01 } else { -0.01 }).collect();
         let (_, k) = p.predict(&w, &x, &order, 10.0);
         assert_eq!(k, n, "oscillating margin must not stop early");
+    }
+
+    /// Deterministic pseudo-random f64 in [-1, 1] (xorshift; no deps).
+    fn prng(state: &mut u64) -> f64 {
+        *state ^= *state << 13;
+        *state ^= *state >> 7;
+        *state ^= *state << 17;
+        (*state >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0
+    }
+
+    fn families() -> Vec<AnyBoundary> {
+        vec![
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            AnyBoundary::Constant { delta: 0.01, paper_literal: true },
+            AnyBoundary::Curved { delta: 0.05 },
+            AnyBoundary::Budgeted { k: 9 },
+            AnyBoundary::Full,
+        ]
+    }
+
+    #[test]
+    fn tabled_predictor_matches_scalar_bit_for_bit_dense() {
+        // The blocked LUT kernel must return *exactly* the scalar
+        // walker's (score, features_evaluated) — assert_eq! on the f64,
+        // no tolerance — across families, walk lengths straddling the
+        // block size, and variances spanning stop-early to never-stop.
+        let mut seed = 0x5eed_1234_u64;
+        for boundary in families() {
+            for &n in &[1usize, 7, 16, 17, 48, 100, 200] {
+                for &var_sn in &[0.05, 4.0, 1e4] {
+                    let w: Vec<f64> = (0..n).map(|_| prng(&mut seed)).collect();
+                    let x: Vec<f64> = (0..n).map(|_| prng(&mut seed)).collect();
+                    let order: Vec<usize> = (0..n).rev().collect();
+                    let table = BoundaryTable::for_boundary(&boundary, var_sn, n);
+                    let scalar = EarlyStopPredictor::new(&boundary);
+                    let tabled = TabledPredictor::new(&table);
+                    assert_eq!(
+                        tabled.predict(&w, &x, &order),
+                        scalar.predict(&w, &x, &order, var_sn),
+                        "{} n={n} var={var_sn}",
+                        boundary.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tabled_predictor_matches_scalar_bit_for_bit_sparse() {
+        let mut seed = 0xfeed_5678_u64;
+        for boundary in families() {
+            for &nnz in &[1usize, 3, 16, 31, 64] {
+                for &var_sn in &[0.05, 4.0, 1e4] {
+                    let dim = nnz * 4;
+                    let w: Vec<f64> = (0..dim).map(|_| prng(&mut seed)).collect();
+                    let idx: Vec<u32> = (0..nnz).map(|i| (i * 4) as u32).collect();
+                    let val: Vec<f64> = (0..nnz).map(|_| prng(&mut seed)).collect();
+                    let order: Vec<usize> = (0..nnz).collect();
+                    let table = BoundaryTable::for_boundary(&boundary, var_sn, nnz);
+                    let scalar = EarlyStopPredictor::new(&boundary);
+                    let tabled = TabledPredictor::new(&table);
+                    assert_eq!(
+                        tabled.predict_sparse(&w, &idx, &val, &order),
+                        scalar.predict_sparse(&w, &idx, &val, &order, var_sn),
+                        "{} nnz={nnz} var={var_sn}",
+                        boundary.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tabled_predictor_stops_early_mid_block() {
+        // Sanity that the equivalence tests above actually exercise the
+        // stop path: a confident example must exit inside a block, not
+        // only at block edges, and at the same step as the scalar walk.
+        let n = 200;
+        let order: Vec<usize> = (0..n).collect();
+        let boundary = AnyBoundary::Constant { delta: 0.1, paper_literal: false };
+        let table = BoundaryTable::for_boundary(&boundary, 4.0, n);
+        let w = vec![1.0; n];
+        let x = vec![1.0; n];
+        let (s, k) = TabledPredictor::new(&table).predict(&w, &x, &order);
+        let scalar = EarlyStopPredictor::new(&boundary);
+        assert_eq!((s, k), scalar.predict(&w, &x, &order, 4.0));
+        assert!(k < n / 4, "confident example should stop early, took {k}");
+        assert!(k % super::BLOCK != 0, "pick a case that stops mid-block, stopped at {k}");
     }
 }

@@ -60,36 +60,44 @@ COMMANDS:
   simulate     [--walks N] [--csv out.csv]
   serve        [--listen ADDR] [--snapshot model.json] [--server-config srv.json]
                [--model name=path ...] [--requests N] [--batch B]
-               [--workers W] [--queue Q]
+               [--workers W] [--queue Q] [--max-batch-examples N]
                [--io-backend threads|event-loop] [--event-threads T]
                [--max-conns N] [--learn] [--learn-queue N]
                [--learn-publish-updates K] [--learn-publish-ms T]
                [--learn-lambda L] [--learn-seed S]
                with --listen: TCP server (v1 JSON lines; a hello op with
-               proto 2..5 upgrades a connection to binary frames —
+               proto 2..6 upgrades a connection to binary frames —
                docs/PROTOCOL.md). --model name=path (repeatable) serves a
                registry of named shards behind one port: each path holds a
                binary ModelSnapshot or an ensemble snapshot, the first name
                is the default shard, and every shard hot-reloads
                independently. Under protocol v5 the add-model and
                remove-model ops grow and shrink the shard set at runtime
-               without restarting (docs/OPERATIONS.md). --io-backend event-loop multiplexes all
-               connections over T epoll threads (Linux; thousands of idle
-               connections) instead of a thread pair per connection.
+               without restarting (docs/OPERATIONS.md); protocol v6 adds
+               batched scoring (SCORE_BATCH frames / the score-batch op,
+               up to --max-batch-examples examples per request costing one
+               queue slot). --io-backend event-loop multiplexes all
+               connections over T epoll threads (the default on Linux;
+               thousands of idle connections) instead of a thread pair per
+               connection; threads is the portable fallback.
                --learn attaches an online trainer to every binary shard:
                the learn op streams labeled examples into a per-shard
                background Attentive Pegasos that republishes the serving
                snapshot every K updates and/or T ms.
                otherwise: in-process synthetic benchmark
   bench-serve  [--addr ADDR]
-               [--mode v1-dense|v2-sparse-json|v2-binary|classify|learn|mixed]
+               [--mode v1-dense|v2-sparse-json|v2-binary|batch|classify|learn|mixed]
                [--model NAME] [--requests N] [--connections C] [--pipeline P]
                [--hard FRAC] [--sparse-eps E] [--batch B] [--workers W]
-               [--queue Q] [--io-backend threads|event-loop]
+               [--queue Q] [--batch-examples N]
+               [--io-backend threads|event-loop]
                [--event-threads T] [--open-loop] [--churn N]
                [--json BENCH_serve.json] [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
-               three wire modes, a multiclass classify pass, online
+               three wire modes, a batched SCORE_BATCH pass
+               (--batch-examples per frame, tallied per example so its
+               req/s divides by the v2-binary singles pass directly), a
+               multiclass classify pass, online
                learn + mixed learn/score passes against a dedicated
                trainer-backed shard, and full evaluation on the same
                traffic; --io-backend selects the loopback server's
@@ -408,6 +416,9 @@ fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
     cfg.max_batch = args.get_parse("batch", cfg.max_batch).map_err(|e| anyhow::anyhow!(e))?;
     cfg.workers = args.get_parse("workers", cfg.workers).map_err(|e| anyhow::anyhow!(e))?;
     cfg.queue = args.get_parse("queue", cfg.queue).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.max_batch_examples = args
+        .get_parse("max-batch-examples", cfg.max_batch_examples)
+        .map_err(|e| anyhow::anyhow!(e))?;
     if let Some(backend) = args.opt("io-backend") {
         cfg.io_backend =
             attentive::config::IoBackend::from_name(backend).map_err(|e| anyhow::anyhow!(e))?;
@@ -489,9 +500,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .collect();
         let server = TcpServer::serve_models(&cfg, models)?;
         println!(
-            "serving {} shard(s) on {} ({} workers/shard, batch {}, queue {}): {}",
+            "serving {} shard(s) on {} ({} backend, {} workers/shard, batch {}, queue {}): {}",
             summary.len(),
             server.local_addr(),
+            cfg.io_backend.name(),
             cfg.workers,
             cfg.max_batch,
             cfg.queue,
@@ -502,7 +514,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
              ping / hello — one JSON object per line; optional \"model\" field routes to a \
              named shard"
         );
-        println!("protocol v2-v5: hello {{\"proto\":5}} switches to sparse binary frames");
+        println!(
+            "protocol v2-v6: hello {{\"proto\":6}} switches to sparse binary frames; v6 adds \
+             batched scoring (SCORE_BATCH frames / the score-batch op, up to {} examples per \
+             request)",
+            cfg.max_batch_examples
+        );
         if cfg.trainer.is_some() {
             println!(
                 "online learning on: the learn op (JSON, or LEARN_SPARSE frames under \
@@ -580,6 +597,19 @@ fn check_bench_floors(report: &Json, floors: &Json) -> Vec<String> {
             None => violations.push("report lacks ratio_v2_sparse_json_vs_v1_dense".into()),
         }
     }
+    // The batched-scoring payoff gate: batch and singles passes both
+    // tally per example, so their req/s ratio is the speedup SCORE_BATCH
+    // buys over single v2-binary frames on identical traffic.
+    if let Some(min_ratio) = floors.get("batch_vs_singles_min_ratio").and_then(|x| x.as_f64()) {
+        match report.get("ratio_batch_vs_singles").and_then(|x| x.as_f64()) {
+            Some(r) if r >= min_ratio => {}
+            Some(r) => violations.push(format!(
+                "batched scoring is only {r:.2}x v2-binary singles throughput \
+                 (floor {min_ratio:.2}x)"
+            )),
+            None => violations.push("report lacks ratio_batch_vs_singles".into()),
+        }
+    }
     // Per-mode absolute floors, generically: any floors key of the form
     // `<mode>_min_req_per_s` (underscores standing for the dashes in
     // the mode name) gates that mode's throughput. A key prefixed
@@ -623,6 +653,8 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let pipeline = args.get_parse("pipeline", 8usize).map_err(|e| anyhow::anyhow!(e))?;
     let hard = args.get_parse("hard", 0.5f64).map_err(|e| anyhow::anyhow!(e))?;
     let sparse_eps = args.get_parse("sparse-eps", 0.05f64).map_err(|e| anyhow::anyhow!(e))?;
+    let batch_examples =
+        args.get_parse("batch-examples", 16usize).map_err(|e| anyhow::anyhow!(e))?;
 
     let open_loop = args.has("open-loop");
     let churn = args.get_parse("churn", 0usize).map_err(|e| anyhow::anyhow!(e))?;
@@ -634,6 +666,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         hard_fraction: hard,
         mode,
         sparse_eps,
+        batch_size: batch_examples,
         seed: 1, // same seed every pass -> identical traffic
         open_loop,
         churn_cycles: churn,
@@ -779,7 +812,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             println!(
                 "loopback server on {addr} ({} backend): {requests} requests × {} passes ...",
                 srv_cfg.io_backend.name(),
-                ClientMode::ALL.len() + 4
+                ClientMode::ALL.len() + 5
             );
 
             for mode in ClientMode::ALL {
@@ -787,6 +820,16 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 row(&mut table, mode.name(), &report);
                 passes.push((mode.name().to_string(), report));
             }
+
+            // Batched pass: the same digit traffic as the v2-binary
+            // singles pass, packed --batch-examples per SCORE_BATCH
+            // frame — each frame costs one queue slot and one worker
+            // wakeup. Tallies are per example, so this row's req/s
+            // divides by the v2-binary row's to give the batching
+            // speedup directly.
+            let batch_report = loadgen::run(&loadcfg(addr.clone(), ClientMode::Batch))?;
+            row(&mut table, "batch", &batch_report);
+            passes.push(("batch".to_string(), batch_report));
 
             // Multiclass pass: native binary classify frames against the
             // co-hosted all-pairs ensemble shard.
@@ -848,6 +891,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             }
             let v1 = &passes[0].1;
             let v2b = &passes[2].1;
+            let batch = &passes[3].1;
             if v1.req_per_s() > 0.0 {
                 println!(
                     "wire: v2-binary {:.0} req/s vs v1-dense {:.0} req/s ({:.1}x), \
@@ -857,6 +901,16 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                     v2b.req_per_s() / v1.req_per_s(),
                     v2b.bytes_per_req(),
                     v1.bytes_per_req(),
+                );
+            }
+            if v2b.req_per_s() > 0.0 {
+                println!(
+                    "batch: {:.0} examples/s vs v2-binary {:.0} req/s ({:.1}x at {} \
+                     examples per SCORE_BATCH frame)",
+                    batch.req_per_s(),
+                    v2b.req_per_s(),
+                    batch.req_per_s() / v2b.req_per_s(),
+                    batch_examples,
                 );
             }
             if full_report.avg_features() > 0.0 {

@@ -86,7 +86,8 @@ use std::thread::JoinHandle;
 use crate::coordinator::service::ScoreResponse;
 use crate::error::{Error, Result};
 use crate::server::tcp::{
-    frame_step, json_step, render_score_into, Job, Shared, Step, Wire, WireClass,
+    frame_step, json_step, render_batch_into, render_score_into, BatchSlot, Job, Shared, Step,
+    Wire, WireClass,
 };
 
 /// Raw epoll FFI: the kernel ABI subset this backend needs. Linux only.
@@ -229,6 +230,10 @@ enum Slot {
     Bytes { len: usize },
     /// An admitted request awaiting its worker response.
     Pending { wire: Wire, rx: Receiver<ScoreResponse> },
+    /// An admitted batch awaiting its worker responses: one receiver
+    /// for the whole batch plus the decode-time per-example verdicts
+    /// (see [`BatchSlot`]); renders as one response when ready.
+    PendingBatch { wire: Wire, rx: Receiver<Vec<ScoreResponse>>, verdicts: Vec<BatchSlot> },
 }
 
 /// Per-connection state owned by exactly one loop shard.
@@ -620,6 +625,21 @@ fn pump(conn: &mut Conn, shared: &Shared) {
                 counters.served.fetch_add(1, Ordering::Relaxed);
                 conn.slots.pop_front();
             }
+            Slot::PendingBatch { wire, rx, verdicts } => {
+                let results = match rx.try_recv() {
+                    Ok(results) => Some(results),
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => None,
+                };
+                let before = conn.wbuf.len();
+                render_batch_into(wire, verdicts, results, &mut conn.wbuf);
+                let counters = shared.wire(wire.class());
+                counters.bytes.fetch_add((conn.wbuf.len() - before) as u64, Ordering::Relaxed);
+                // One per example: batch and single traffic count on
+                // the same served scale.
+                counters.served.fetch_add(verdicts.len() as u64, Ordering::Relaxed);
+                conn.slots.pop_front();
+            }
         }
     }
     if conn.slots.is_empty() {
@@ -813,6 +833,9 @@ fn apply_job(conn: &mut Conn, job: Job, shared: &Shared) {
             }
         }
         Job::Pending { wire, rx } => conn.slots.push_back(Slot::Pending { wire, rx }),
+        Job::PendingBatch { wire, rx, slots } => {
+            conn.slots.push_back(Slot::PendingBatch { wire, rx, verdicts: slots })
+        }
     }
 }
 
@@ -885,6 +908,14 @@ fn drain_and_close(mut conn: Conn, shared: &Shared) {
                 let counters = shared.wire(wire.class());
                 counters.bytes.fetch_add((conn.wbuf.len() - before) as u64, Ordering::Relaxed);
                 counters.served.fetch_add(1, Ordering::Relaxed);
+            }
+            Slot::PendingBatch { wire, rx, verdicts } => {
+                let results = rx.recv().ok();
+                let before = conn.wbuf.len();
+                render_batch_into(&wire, &verdicts, results, &mut conn.wbuf);
+                let counters = shared.wire(wire.class());
+                counters.bytes.fetch_add((conn.wbuf.len() - before) as u64, Ordering::Relaxed);
+                counters.served.fetch_add(verdicts.len() as u64, Ordering::Relaxed);
             }
         }
     }

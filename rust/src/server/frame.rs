@@ -18,6 +18,8 @@
 //! 0x05 CLASSIFY_SPARSE  req   model:u16 gen:u32 nnz:u32 then nnz × (idx:u32 val:f64)  (v3)
 //! 0x06 CLASSIFY_SPARSE_VERBOSE  req  same payload as 0x05; answered by 0x85  (v3)
 //! 0x07 LEARN_SPARSE     req   model:u16 label:i8(±1) nnz:u32 then nnz × (idx:u32 val:f64)  (v4)
+//! 0x08 SCORE_BATCH      req   model:u16 gen:u32 count:u16 then count ×
+//!                             (nnz:u32 then nnz × (idx:u32 val:f64))  (v6)
 //! 0x81 SCORE            resp  gen:u32 evaluated:u32 score:f64
 //! 0x82 ERROR            resp  code:u8 retryable:u8 msg_len:u16 msg bytes
 //! 0x83 JSON_RESP        resp  UTF-8 JSON body (any v1 response document)
@@ -25,6 +27,8 @@
 //! 0x85 CLASS_VERBOSE    resp  CLASS fields, then count:u32 then
 //!                             count × (pos:i64 neg:i64 vote:i64 features:u32)  (v3)
 //! 0x86 LEARN_ACK        resp  gen:u32 seen:u64  (v4)
+//! 0x87 SCORE_BATCH_RESP resp  gen:u32 count:u16 then count ×
+//!                             (status:u8 evaluated:u32 score:f64)  (v6)
 //! ```
 //!
 //! ## Zero-copy decode
@@ -83,6 +87,21 @@
 //! whose removal has already unpublished it answers the plain
 //! non-retryable [`ErrorCode::UnknownModel`], exactly as if it had
 //! never existed.
+//!
+//! The protocol-v6 ops amortize per-request transport overhead:
+//! `SCORE_BATCH` carries up to the server's advertised
+//! `max_batch_examples` sparse examples in one frame, routed to one
+//! shard under one generation pin. The whole batch is admitted as a
+//! single queue slot (one worker wakeup, one response frame), and the
+//! examples are scored back-to-back in submission order, so a batch is
+//! bit-identical to the same examples sent as single `SCORE_SPARSE2`
+//! frames. Whole-batch failures (unknown model, wrong kind, stale pin,
+//! overload) answer with one `ERROR` frame; anything per-example —
+//! a dimension overrun, a structurally invalid example — degrades to a
+//! per-example `status` byte in the `SCORE_BATCH_RESP` row (0 = OK,
+//! else the [`ErrorCode`] wire byte), so one bad example never poisons
+//! its batchmates. Clients send `SCORE_BATCH` only after
+//! `hello {"proto":6}` is granted.
 //!
 //! A `gen` of 0 in a request means "any model generation"; a nonzero
 //! value pins the request to that generation and the server sheds it
@@ -232,6 +251,8 @@ pub const OP_CLASSIFY_SPARSE: u8 = 0x05;
 pub const OP_CLASSIFY_SPARSE_VERBOSE: u8 = 0x06;
 /// Op byte: sparse learn request (v4; model-routed labeled example).
 pub const OP_LEARN_SPARSE: u8 = 0x07;
+/// Op byte: batched sparse score request (v6; model-routed).
+pub const OP_SCORE_BATCH: u8 = 0x08;
 /// Op byte: score response.
 pub const OP_SCORE: u8 = 0x81;
 /// Op byte: error response.
@@ -244,6 +265,25 @@ pub const OP_CLASS: u8 = 0x84;
 pub const OP_CLASS_VERBOSE: u8 = 0x85;
 /// Op byte: learn acknowledgement (v4).
 pub const OP_LEARN_ACK: u8 = 0x86;
+/// Op byte: batched score response (v6).
+pub const OP_SCORE_BATCH_RESP: u8 = 0x87;
+
+/// The `status` byte of an OK `SCORE_BATCH_RESP` row. Any other value
+/// is the [`ErrorCode`] wire byte describing why that one example was
+/// not scored (its batchmates are unaffected).
+pub const BATCH_STATUS_OK: u8 = 0;
+
+/// One per-example row of a `SCORE_BATCH_RESP` frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchResult {
+    /// [`BATCH_STATUS_OK`], or the [`ErrorCode`] wire byte for this
+    /// example's failure (`evaluated`/`score` are 0 in that case).
+    pub status: u8,
+    /// Features evaluated before the early exit.
+    pub evaluated: u32,
+    /// Signed margin estimate; the prediction is its sign.
+    pub score: f64,
+}
 
 /// One decoded v2 frame (either direction).
 #[derive(Debug, Clone, PartialEq)]
@@ -321,6 +361,19 @@ pub enum Frame {
         /// Values at those coordinates.
         val: Vec<f64>,
     },
+    /// v6 batched sparse score request: up to the server's advertised
+    /// `max_batch_examples` examples for one shard under one generation
+    /// pin, admitted as a single queue slot and answered by one
+    /// `SCORE_BATCH_RESP` frame.
+    ScoreBatch {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any), shared by every example.
+        gen: u32,
+        /// Per-example `(idx, val)` sparse vectors, each with strictly
+        /// increasing indices.
+        examples: Vec<(Vec<u32>, Vec<f64>)>,
+    },
     /// Score response: the serving generation, coordinates evaluated,
     /// and the signed margin.
     Score {
@@ -384,6 +437,15 @@ pub enum Frame {
         gen: u32,
         /// Cumulative examples accepted by this shard's trainer.
         seen: u64,
+    },
+    /// v6 batched score response: one row per submitted example, in
+    /// submission order, each with its own status byte so a rejected
+    /// example never poisons its batchmates.
+    ScoreBatchResp {
+        /// Generation that served the batch.
+        gen: u32,
+        /// Per-example outcome rows, in submission order.
+        results: Vec<BatchResult>,
     },
 }
 
@@ -489,6 +551,30 @@ impl Frame {
                     out.extend_from_slice(&v.to_le_bytes());
                 }
             }
+            Frame::ScoreBatch { model, gen, examples } => {
+                assert!(
+                    examples.len() <= u16::MAX as usize,
+                    "batch count {} exceeds the u16 wire bound",
+                    examples.len()
+                );
+                out.push(OP_SCORE_BATCH);
+                out.extend_from_slice(&model.to_le_bytes());
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&(examples.len() as u16).to_le_bytes());
+                for (idx, val) in examples {
+                    assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+                    assert!(
+                        idx.len() <= u32::MAX as usize,
+                        "sparse frame nnz {} exceeds the u32 wire bound",
+                        idx.len()
+                    );
+                    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                    for (&i, &v) in idx.iter().zip(val.iter()) {
+                        out.extend_from_slice(&i.to_le_bytes());
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
             Frame::Score { gen, evaluated, score } => {
                 out.push(OP_SCORE);
                 out.extend_from_slice(&gen.to_le_bytes());
@@ -539,6 +625,21 @@ impl Frame {
                 out.push(OP_LEARN_ACK);
                 out.extend_from_slice(&gen.to_le_bytes());
                 out.extend_from_slice(&seen.to_le_bytes());
+            }
+            Frame::ScoreBatchResp { gen, results } => {
+                assert!(
+                    results.len() <= u16::MAX as usize,
+                    "batch count {} exceeds the u16 wire bound",
+                    results.len()
+                );
+                out.push(OP_SCORE_BATCH_RESP);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&(results.len() as u16).to_le_bytes());
+                for row in results {
+                    out.push(row.status);
+                    out.extend_from_slice(&row.evaluated.to_le_bytes());
+                    out.extend_from_slice(&row.score.to_le_bytes());
+                }
             }
         }
         let body_len = (out.len() - prefix_at - 4) as u32;
@@ -625,6 +726,23 @@ impl Frame {
             out.extend_from_slice(&i.to_le_bytes());
             out.extend_from_slice(&v.to_le_bytes());
         }
+    }
+
+    /// Start encoding a v6 `SCORE_BATCH` request straight into a
+    /// reusable buffer. Examples are appended with
+    /// [`BatchEncoder::push_example`] and the length prefix and count
+    /// are patched by [`BatchEncoder::finish`] — the loadgen batch hot
+    /// loop builds whole frames with zero allocation this way.
+    pub fn begin_score_batch(out: &mut Vec<u8>, model: u16, gen: u32) -> BatchEncoder<'_> {
+        BatchEncoder::begin(out, model, gen)
+    }
+
+    /// Start encoding a v6 `SCORE_BATCH_RESP` straight into a reusable
+    /// buffer (the transport writer's pooled output frame). Rows are
+    /// appended with [`BatchRespEncoder::push_result`] and the prefix
+    /// and count are patched by [`BatchRespEncoder::finish`].
+    pub fn begin_score_batch_resp(out: &mut Vec<u8>, gen: u32) -> BatchRespEncoder<'_> {
+        BatchRespEncoder::begin(out, gen)
     }
 
     /// Decode one frame body (the bytes after the length prefix).
@@ -744,6 +862,50 @@ impl Frame {
                 }
                 Ok(Frame::LearnSparse { model, label, idx, val })
             }
+            OP_SCORE_BATCH => {
+                if payload.len() < 8 {
+                    return Err(FrameError::BadLayout("batch header needs 8 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let count = u16::from_le_bytes(payload[6..8].try_into().unwrap()) as usize;
+                let mut rest = &payload[8..];
+                let mut examples = Vec::with_capacity(count);
+                for n in 0..count {
+                    if rest.len() < 4 {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} header overruns frame"
+                        )));
+                    }
+                    let nnz = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                    rest = &rest[4..];
+                    // Divide instead of multiplying: `nnz * 12` can wrap
+                    // on 32-bit usize targets.
+                    if rest.len() / 12 < nnz {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} nnz {nnz} overruns {} remaining bytes",
+                            rest.len()
+                        )));
+                    }
+                    let (pairs, tail) = rest.split_at(nnz * 12);
+                    let mut idx = Vec::with_capacity(nnz);
+                    let mut val = Vec::with_capacity(nnz);
+                    for p in pairs.chunks_exact(12) {
+                        idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
+                        val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
+                    }
+                    examples.push((idx, val));
+                    rest = tail;
+                }
+                if !rest.is_empty() {
+                    return Err(FrameError::BadLayout(format!(
+                        "batch count {} leaves {} trailing bytes",
+                        count,
+                        rest.len()
+                    )));
+                }
+                Ok(Frame::ScoreBatch { model, gen, examples })
+            }
             OP_SCORE => {
                 if payload.len() != 16 {
                     return Err(FrameError::BadLayout(format!(
@@ -838,6 +1000,32 @@ impl Frame {
                     seen: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
                 })
             }
+            OP_SCORE_BATCH_RESP => {
+                if payload.len() < 6 {
+                    return Err(FrameError::BadLayout("batch-resp header needs 6 bytes".into()));
+                }
+                let gen = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+                let count = u16::from_le_bytes(payload[4..6].try_into().unwrap()) as usize;
+                let rows = &payload[6..];
+                // Divide, don't multiply: `count * 13` can wrap on
+                // 32-bit usize targets.
+                if rows.len() % 13 != 0 || rows.len() / 13 != count {
+                    return Err(FrameError::BadLayout(format!(
+                        "batch-resp count {} does not match {} row bytes",
+                        count,
+                        rows.len()
+                    )));
+                }
+                let results = rows
+                    .chunks_exact(13)
+                    .map(|r| BatchResult {
+                        status: r[0],
+                        evaluated: u32::from_le_bytes(r[1..5].try_into().unwrap()),
+                        score: f64::from_le_bytes(r[5..13].try_into().unwrap()),
+                    })
+                    .collect();
+                Ok(Frame::ScoreBatchResp { gen, results })
+            }
             other => Err(FrameError::BadOp(other)),
         }
     }
@@ -904,6 +1092,107 @@ impl Frame {
     }
 }
 
+/// Incremental, allocation-free encoder for a v6 `SCORE_BATCH` frame
+/// (see [`Frame::begin_score_batch`]). The length prefix and example
+/// count are written as placeholders and patched by [`Self::finish`];
+/// dropping the encoder without calling `finish` leaves a corrupt
+/// placeholder frame in the buffer, so `finish` is not optional.
+#[derive(Debug)]
+pub struct BatchEncoder<'b> {
+    out: &'b mut Vec<u8>,
+    prefix_at: usize,
+    count: u16,
+}
+
+impl<'b> BatchEncoder<'b> {
+    fn begin(out: &'b mut Vec<u8>, model: u16, gen: u32) -> Self {
+        let prefix_at = out.len();
+        out.extend_from_slice(&[0u8; 4]);
+        out.push(OP_SCORE_BATCH);
+        out.extend_from_slice(&model.to_le_bytes());
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // count placeholder
+        Self { out, prefix_at, count: 0 }
+    }
+
+    /// Append one sparse example.
+    ///
+    /// # Panics
+    ///
+    /// On mismatched `idx`/`val` lengths, an `nnz` beyond the `u32`
+    /// wire bound, or a 65536th example (the `count:u16` wire bound).
+    pub fn push_example(&mut self, idx: &[u32], val: &[f64]) {
+        assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+        assert!(
+            idx.len() <= u32::MAX as usize,
+            "sparse frame nnz {} exceeds the u32 wire bound",
+            idx.len()
+        );
+        assert!(self.count < u16::MAX, "batch count exceeds the u16 wire bound");
+        self.count += 1;
+        self.out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            self.out.extend_from_slice(&i.to_le_bytes());
+            self.out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
+    /// Patch the length prefix and example count, completing the frame.
+    /// Returns the number of examples pushed.
+    pub fn finish(self) -> usize {
+        let body_len = (self.out.len() - self.prefix_at - 4) as u32;
+        self.out[self.prefix_at..self.prefix_at + 4].copy_from_slice(&body_len.to_le_bytes());
+        let count_at = self.prefix_at + 4 + 1 + 2 + 4;
+        self.out[count_at..count_at + 2].copy_from_slice(&self.count.to_le_bytes());
+        self.count as usize
+    }
+}
+
+/// Incremental, allocation-free encoder for a v6 `SCORE_BATCH_RESP`
+/// frame (see [`Frame::begin_score_batch_resp`]); the transport writer
+/// renders a whole batch's outcomes into one pooled buffer with this.
+/// Like [`BatchEncoder`], [`Self::finish`] is not optional.
+#[derive(Debug)]
+pub struct BatchRespEncoder<'b> {
+    out: &'b mut Vec<u8>,
+    prefix_at: usize,
+    count: u16,
+}
+
+impl<'b> BatchRespEncoder<'b> {
+    fn begin(out: &'b mut Vec<u8>, gen: u32) -> Self {
+        let prefix_at = out.len();
+        out.extend_from_slice(&[0u8; 4]);
+        out.push(OP_SCORE_BATCH_RESP);
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // count placeholder
+        Self { out, prefix_at, count: 0 }
+    }
+
+    /// Append one per-example outcome row.
+    ///
+    /// # Panics
+    ///
+    /// On a 65536th row (the `count:u16` wire bound).
+    pub fn push_result(&mut self, status: u8, evaluated: u32, score: f64) {
+        assert!(self.count < u16::MAX, "batch count exceeds the u16 wire bound");
+        self.count += 1;
+        self.out.push(status);
+        self.out.extend_from_slice(&evaluated.to_le_bytes());
+        self.out.extend_from_slice(&score.to_le_bytes());
+    }
+
+    /// Patch the length prefix and row count, completing the frame.
+    /// Returns the number of rows pushed.
+    pub fn finish(self) -> usize {
+        let body_len = (self.out.len() - self.prefix_at - 4) as u32;
+        self.out[self.prefix_at..self.prefix_at + 4].copy_from_slice(&body_len.to_le_bytes());
+        let count_at = self.prefix_at + 4 + 1 + 4;
+        self.out[count_at..count_at + 2].copy_from_slice(&self.count.to_le_bytes());
+        self.count as usize
+    }
+}
+
 /// One request frame parsed without copying its payload: sparse pairs
 /// and dense values stay as byte slices into the connection's read
 /// buffer. The server's hot path decodes with this, screens the slices
@@ -960,6 +1249,20 @@ pub enum FrameRef<'a> {
         label: i8,
         /// Raw pair bytes, length a multiple of 12.
         pairs: &'a [u8],
+    },
+    /// v6 batched sparse score: `count` examples, each an `nnz:u32`
+    /// header followed by 12-byte `(idx:u32, val:f64)` pairs. The
+    /// structural walk is done at decode time, so [`batch_pairs`]
+    /// iteration over `examples` cannot overrun.
+    ScoreBatch {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any), shared by every example.
+        gen: u32,
+        /// Number of examples carried.
+        count: usize,
+        /// Raw example bytes (the payload after the count field).
+        examples: &'a [u8],
     },
     /// A response op (`0x80..`) sent by the peer — protocol abuse on
     /// the server side; carried so the caller can report it without
@@ -1060,14 +1363,50 @@ impl<'a> FrameRef<'a> {
                 }
                 Ok(FrameRef::LearnSparse { model, label, pairs })
             }
-            OP_SCORE | OP_ERROR | OP_JSON_RESP | OP_CLASS | OP_CLASS_VERBOSE | OP_LEARN_ACK => {
-                Ok(FrameRef::Response(op))
+            OP_SCORE_BATCH => {
+                if payload.len() < 8 {
+                    return Err(FrameError::BadLayout("batch header needs 8 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let count = u16::from_le_bytes(payload[6..8].try_into().unwrap()) as usize;
+                let examples = &payload[8..];
+                // Structural walk only (O(count) header reads, no
+                // per-pair work): after this, iteration cannot overrun.
+                let mut rest = examples;
+                for n in 0..count {
+                    if rest.len() < 4 {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} header overruns frame"
+                        )));
+                    }
+                    let nnz = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                    rest = &rest[4..];
+                    if rest.len() / 12 < nnz {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} nnz {nnz} overruns {} remaining bytes",
+                            rest.len()
+                        )));
+                    }
+                    rest = &rest[nnz * 12..];
+                }
+                if !rest.is_empty() {
+                    return Err(FrameError::BadLayout(format!(
+                        "batch count {} leaves {} trailing bytes",
+                        count,
+                        rest.len()
+                    )));
+                }
+                Ok(FrameRef::ScoreBatch { model, gen, count, examples })
             }
+            OP_SCORE | OP_ERROR | OP_JSON_RESP | OP_CLASS | OP_CLASS_VERBOSE | OP_LEARN_ACK
+            | OP_SCORE_BATCH_RESP => Ok(FrameRef::Response(op)),
             other => Err(FrameError::BadOp(other)),
         }
     }
 
-    /// Stored coordinates in this frame's payload (dense: full length).
+    /// Stored coordinates in this frame's payload (dense: full length;
+    /// batch: summed across examples).
     pub fn nnz(&self) -> usize {
         match self {
             FrameRef::ScoreSparse { pairs, .. } => pairs.len() / 10,
@@ -1075,9 +1414,50 @@ impl<'a> FrameRef<'a> {
             | FrameRef::ClassifySparse { pairs, .. }
             | FrameRef::LearnSparse { pairs, .. } => pairs.len() / 12,
             FrameRef::ScoreDense { vals, .. } => vals.len() / 8,
+            // Validated structure: total = count × 4 header bytes +
+            // 12 bytes per stored pair.
+            FrameRef::ScoreBatch { count, examples, .. } => {
+                (examples.len() - 4 * count) / 12
+            }
             FrameRef::JsonReq(_) | FrameRef::Response(_) => 0,
         }
     }
+}
+
+/// Iterator over the per-example 12-byte pair slices of a
+/// [`FrameRef::ScoreBatch`] payload, in submission order. The decode
+/// already proved the structure, so each yielded slice is exactly that
+/// example's `nnz × 12` pair bytes, ready for [`validate_pairs_u32`]
+/// and [`pairs_to_features_u32`] — nothing is copied.
+#[derive(Debug, Clone)]
+pub struct BatchPairs<'a> {
+    rest: &'a [u8],
+}
+
+impl<'a> Iterator for BatchPairs<'a> {
+    type Item = &'a [u8];
+
+    fn next(&mut self) -> Option<&'a [u8]> {
+        if self.rest.len() < 4 {
+            return None;
+        }
+        let nnz = u32::from_le_bytes(self.rest[0..4].try_into().unwrap()) as usize;
+        let rest = &self.rest[4..];
+        if rest.len() / 12 < nnz {
+            // Unreachable on a validated payload; stop rather than panic.
+            self.rest = &[];
+            return None;
+        }
+        let (pairs, tail) = rest.split_at(nnz * 12);
+        self.rest = tail;
+        Some(pairs)
+    }
+}
+
+/// Iterate the examples of a validated `SCORE_BATCH` payload (the
+/// `examples` bytes of [`FrameRef::ScoreBatch`]).
+pub fn batch_pairs(examples: &[u8]) -> BatchPairs<'_> {
+    BatchPairs { rest: examples }
 }
 
 /// In-place structural screen for legacy 10-byte `(idx:u16, val:f64)`
@@ -1499,6 +1879,16 @@ mod tests {
             Frame::ClassifySparseVerbose { model: 2, gen: 4, idx: vec![5], val: vec![1.0] },
             Frame::LearnSparse { model: 4, label: -1, idx: vec![5, 100_000], val: vec![1.0, 2.0] },
             Frame::LearnSparse { model: 0, label: 1, idx: vec![], val: vec![] },
+            Frame::ScoreBatch {
+                model: 1,
+                gen: 3,
+                examples: vec![
+                    (vec![0, 70_000], vec![0.5, -1.5]),
+                    (vec![], vec![]),
+                    (vec![7], vec![2.0]),
+                ],
+            },
+            Frame::ScoreBatch { model: 0, gen: 0, examples: vec![] },
         ];
         for frame in frames {
             let wire = frame.encode();
@@ -1550,6 +1940,23 @@ mod tests {
                     assert_eq!(borrowed.nnz(), idx.len());
                     Frame::LearnSparse { model, label, idx, val }
                 }
+                FrameRef::ScoreBatch { model, gen, count, examples } => {
+                    let mut rebuilt = Vec::with_capacity(count);
+                    for pairs in batch_pairs(examples) {
+                        validate_pairs_u32(pairs).unwrap();
+                        let Features::Sparse { idx, val } = pairs_to_features_u32(pairs) else {
+                            unreachable!()
+                        };
+                        rebuilt.push((idx, val));
+                    }
+                    assert_eq!(rebuilt.len(), count, "iterator yields every example");
+                    assert_eq!(
+                        borrowed.nnz(),
+                        rebuilt.iter().map(|(idx, _)| idx.len()).sum::<usize>(),
+                        "batch nnz sums across examples"
+                    );
+                    Frame::ScoreBatch { model, gen, examples: rebuilt }
+                }
                 FrameRef::Response(op) => panic!("request decoded as response {op:#04x}"),
             };
             assert_eq!(rebuilt, frame);
@@ -1559,6 +1966,15 @@ mod tests {
         assert_eq!(FrameRef::decode_borrowed(&wire[4..]), Ok(FrameRef::Response(OP_SCORE)));
         let wire = Frame::LearnAck { gen: 1, seen: 2 }.encode();
         assert_eq!(FrameRef::decode_borrowed(&wire[4..]), Ok(FrameRef::Response(OP_LEARN_ACK)));
+        let wire = Frame::ScoreBatchResp {
+            gen: 1,
+            results: vec![BatchResult { status: 0, evaluated: 2, score: 3.0 }],
+        }
+        .encode();
+        assert_eq!(
+            FrameRef::decode_borrowed(&wire[4..]),
+            Ok(FrameRef::Response(OP_SCORE_BATCH_RESP))
+        );
         // And both decoders agree on rejects.
         assert!(FrameRef::decode_borrowed(&[]).is_err());
         assert!(FrameRef::decode_borrowed(&[0x7F]).is_err());
@@ -1657,6 +2073,140 @@ mod tests {
         assert_eq!(a, Frame::Score { gen: 1, evaluated: 2, score: 3.0 });
         let (b, _) = Frame::decode(&batch[used..], MAX).unwrap();
         assert_eq!(b, Frame::Score { gen: 4, evaluated: 5, score: 6.0 });
+    }
+
+    #[test]
+    fn batch_ops_round_trip_with_documented_layout() {
+        round_trip(Frame::ScoreBatch {
+            model: 3,
+            gen: 9,
+            examples: vec![
+                (vec![0, 70_000, 4_000_000_000], vec![0.25, -1.5, 1.0]),
+                (vec![], vec![]),
+                (vec![13], vec![-2.0]),
+            ],
+        });
+        round_trip(Frame::ScoreBatch { model: 0, gen: 0, examples: vec![] });
+        round_trip(Frame::ScoreBatchResp {
+            gen: 7,
+            results: vec![
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 41, score: -0.75 },
+                BatchResult { status: ErrorCode::DimMismatch as u8, evaluated: 0, score: 0.0 },
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 9, score: 2.5 },
+            ],
+        });
+        round_trip(Frame::ScoreBatchResp { gen: 0, results: vec![] });
+        // SCORE_BATCH: 1 (op) + 2 (model) + 4 (gen) + 2 (count), then
+        // per example 4 (nnz) + 12/pair.
+        let wire = Frame::ScoreBatch {
+            model: 7,
+            gen: 2,
+            examples: vec![(vec![70_000], vec![1.0])],
+        }
+        .encode();
+        assert_eq!(&wire[0..4], &25u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_BATCH);
+        assert_eq!(&wire[5..7], &7u16.to_le_bytes());
+        assert_eq!(&wire[7..11], &2u32.to_le_bytes());
+        assert_eq!(&wire[11..13], &1u16.to_le_bytes());
+        assert_eq!(&wire[13..17], &1u32.to_le_bytes());
+        assert_eq!(&wire[17..21], &70_000u32.to_le_bytes());
+        assert_eq!(&wire[21..29], &1.0f64.to_le_bytes());
+        assert_eq!(wire.len(), 29);
+        // SCORE_BATCH_RESP: 1 (op) + 4 (gen) + 2 (count) + 13/row.
+        let wire = Frame::ScoreBatchResp {
+            gen: 5,
+            results: vec![BatchResult { status: 0, evaluated: 9, score: -0.5 }],
+        }
+        .encode();
+        assert_eq!(&wire[0..4], &20u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_BATCH_RESP);
+        assert_eq!(&wire[5..9], &5u32.to_le_bytes());
+        assert_eq!(&wire[9..11], &1u16.to_le_bytes());
+        assert_eq!(wire[11], 0);
+        assert_eq!(&wire[12..16], &9u32.to_le_bytes());
+        assert_eq!(&wire[16..24], &(-0.5f64).to_le_bytes());
+        assert_eq!(wire.len(), 24);
+    }
+
+    #[test]
+    fn batch_encoders_match_frame_encoders() {
+        // Request builder, appended after existing buffer content so the
+        // placeholder patching is exercised at a nonzero offset.
+        let mut out = Vec::new();
+        Frame::Score { gen: 1, evaluated: 2, score: 3.0 }.encode_into(&mut out);
+        let base = out.len();
+        let mut enc = Frame::begin_score_batch(&mut out, 5, 2);
+        enc.push_example(&[3, 17, 40], &[0.5, -1.2, 2.0]);
+        enc.push_example(&[], &[]);
+        assert_eq!(enc.finish(), 2);
+        let owned = Frame::ScoreBatch {
+            model: 5,
+            gen: 2,
+            examples: vec![(vec![3, 17, 40], vec![0.5, -1.2, 2.0]), (vec![], vec![])],
+        }
+        .encode();
+        assert_eq!(&out[base..], &owned[..]);
+        // Response builder.
+        let mut out = Vec::new();
+        let mut enc = Frame::begin_score_batch_resp(&mut out, 9);
+        enc.push_result(BATCH_STATUS_OK, 7, 1.25);
+        enc.push_result(ErrorCode::NonFinite as u8, 0, 0.0);
+        assert_eq!(enc.finish(), 2);
+        let owned = Frame::ScoreBatchResp {
+            gen: 9,
+            results: vec![
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 7, score: 1.25 },
+                BatchResult { status: ErrorCode::NonFinite as u8, evaluated: 0, score: 0.0 },
+            ],
+        }
+        .encode();
+        assert_eq!(out, owned);
+        // An empty batch still produces a decodable frame.
+        let mut out = Vec::new();
+        let enc = Frame::begin_score_batch(&mut out, 0, 0);
+        assert_eq!(enc.finish(), 0);
+        let (frame, used) = Frame::decode(&out, MAX).unwrap();
+        assert_eq!(used, out.len());
+        assert_eq!(frame, Frame::ScoreBatch { model: 0, gen: 0, examples: vec![] });
+    }
+
+    #[test]
+    fn batch_layout_violations_are_rejected() {
+        let body_of = |frame: &Frame| frame.encode()[4..].to_vec();
+        let good = Frame::ScoreBatch {
+            model: 0,
+            gen: 0,
+            examples: vec![(vec![1], vec![1.0]), (vec![2], vec![2.0])],
+        };
+        // Count declares more examples than carried.
+        let mut bad = body_of(&good);
+        bad[7..9].copy_from_slice(&3u16.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&bad), Err(FrameError::BadLayout(_))));
+        assert!(matches!(FrameRef::decode_borrowed(&bad), Err(FrameError::BadLayout(_))));
+        // Count declares fewer: trailing bytes are an error, not
+        // silently ignored payload.
+        let mut bad = body_of(&good);
+        bad[7..9].copy_from_slice(&1u16.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&bad), Err(FrameError::BadLayout(_))));
+        assert!(matches!(FrameRef::decode_borrowed(&bad), Err(FrameError::BadLayout(_))));
+        // An example's nnz overruns the frame.
+        let mut bad = body_of(&good);
+        bad[9..13].copy_from_slice(&1000u32.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&bad), Err(FrameError::BadLayout(_))));
+        assert!(matches!(FrameRef::decode_borrowed(&bad), Err(FrameError::BadLayout(_))));
+        // Short header.
+        assert!(Frame::decode_body(&[OP_SCORE_BATCH, 0, 0]).is_err());
+        assert!(FrameRef::decode_borrowed(&[OP_SCORE_BATCH, 0, 0]).is_err());
+        // Response: row-count mismatch and short header.
+        let resp = Frame::ScoreBatchResp {
+            gen: 1,
+            results: vec![BatchResult { status: 0, evaluated: 1, score: 1.0 }],
+        };
+        let mut bad = body_of(&resp);
+        bad[5..7].copy_from_slice(&4u16.to_le_bytes());
+        assert!(matches!(Frame::decode_body(&bad), Err(FrameError::BadLayout(_))));
+        assert!(Frame::decode_body(&[OP_SCORE_BATCH_RESP, 0, 0]).is_err());
     }
 
     #[test]

@@ -290,6 +290,42 @@ impl ModelHub {
         })
     }
 
+    /// Non-blocking admission of a whole score batch as **one queue
+    /// unit** (protocol v6 `SCORE_BATCH`). Whole-batch screens — model
+    /// kind, generation pin, queue room — apply once, exactly as for a
+    /// single request; per-example dimensionality is deliberately *not*
+    /// screened here: a bad example rejects alone in its response slot
+    /// (the worker's NaN sentinel, rendered as a per-example status on
+    /// the wire) and cannot poison the rest of the batch. On success
+    /// the receiver yields one response per example in submission
+    /// order, and the returned generation is the one whose workers
+    /// answer — captured in the same critical section as the handle.
+    pub fn submit_batch(
+        &self,
+        examples: Vec<Features>,
+        pin: u32,
+    ) -> Result<(Receiver<Vec<ScoreResponse>>, u32), HubError> {
+        let (handle, gen, accepts, serving_kind) = {
+            let st = self.inner.lock().unwrap();
+            (
+                st.handle.clone().ok_or(HubError::Closed)?,
+                (st.epoch as u32).wrapping_add(1),
+                st.accepts,
+                st.kind,
+            )
+        };
+        if accepts != ReqKind::Score {
+            return Err(HubError::WrongKind { op: "score", serving: serving_kind });
+        }
+        if pin != 0 && pin != gen {
+            return Err(HubError::StaleGeneration { requested: pin, serving: gen });
+        }
+        handle.submit_batch(examples).map(|rx| (rx, gen)).map_err(|e| match e {
+            SubmitError::Overloaded => HubError::Overloaded,
+            SubmitError::Closed => HubError::Closed,
+        })
+    }
+
     /// Hot-swap the serving model (the kind may change along with the
     /// dimensionality). Spawns the new generation outside the lock,
     /// then swaps the handle atomically; returns the new
@@ -540,6 +576,42 @@ mod tests {
             Err(HubError::StaleGeneration { requested: 1, serving: 2 }) => {}
             other => panic!("expected stale generation, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn batch_admission_screens_whole_batch_but_rejects_per_example() {
+        let hub = ModelHub::new(snapshot(8, 1.0), 4, 64, 1, 0);
+        // Kind screen is whole-batch: a batch against an ensemble sheds
+        // before admission, same as a single score.
+        let ens_hub = ModelHub::new(ensemble(8), 4, 64, 1, 0);
+        match ens_hub.submit_batch(vec![Features::Dense(vec![1.0; 8])], 0) {
+            Err(HubError::WrongKind { op: "score", serving: "ensemble" }) => {}
+            other => panic!("expected wrong-kind, got {other:?}"),
+        }
+        // Pin screen is whole-batch too.
+        match hub.submit_batch(vec![Features::Dense(vec![1.0; 8])], 9) {
+            Err(HubError::StaleGeneration { requested: 9, serving: 1 }) => {}
+            other => panic!("expected stale generation, got {other:?}"),
+        }
+        // Dimensionality is per-example: the bad example rejects in its
+        // slot, the rest of the batch is answered normally.
+        let (rx, gen) = hub
+            .submit_batch(
+                vec![
+                    Features::Dense(vec![1.0; 8]),
+                    Features::Dense(vec![1.0; 3]),
+                    Features::Dense(vec![-1.0; 8]),
+                ],
+                1,
+            )
+            .unwrap();
+        assert_eq!(gen, 1);
+        let out = rx.recv().unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out[0].score > 0.0);
+        assert!(out[1].score.is_nan());
+        assert!(out[2].score < 0.0);
+        assert_eq!(hub.stats().served, 3, "each batch example counts as served");
     }
 
     #[test]

@@ -6,14 +6,15 @@
 //!   control channel (ping / stats / models / reload / add-model /
 //!   remove-model) and for one-off scoring or classification. Starts in
 //!   v1 JSON-lines mode; [`Client::negotiate`] upgrades it to the
-//!   binary framing at the highest version the server grants (v5 down
+//!   binary framing at the highest version the server grants (v6 down
 //!   to v2) with transparent fallback on old servers.
 //! * [`run`] — the load generator proper: `connections` client threads
 //!   drive the server over loopback (or any address) with a configurable
 //!   pipelining window, an easy/hard traffic mix — clean synthetic
 //!   digits exit early, heavily-noised ones force deep evaluations — and
 //!   a selectable [`ClientMode`] (v1 dense JSON, v2 sparse JSON, v2
-//!   binary frames, or binary multiclass `classify`). Requests can be
+//!   binary frames, v6 batched `SCORE_BATCH` frames, or binary
+//!   multiclass `classify`). Requests can be
 //!   routed to a named registry shard (`LoadGenConfig.model`). The
 //!   merged [`LoadReport`] carries per-request features-touched counts
 //!   for exact percentile reporting plus wire byte totals for
@@ -41,9 +42,9 @@ use std::time::Instant;
 use crate::coordinator::service::{Features, ModelSnapshot, ServingModel};
 use crate::data::synth::{SynthConfig, SynthDigits};
 use crate::error::{Error, Result};
-use crate::server::frame::{ErrorCode, Frame, FrameError};
+use crate::server::frame::{BatchResult, ErrorCode, Frame, FrameError, BATCH_STATUS_OK};
 use crate::server::protocol::{
-    ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3, PROTO_V4, PROTO_V5,
+    ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3, PROTO_V4, PROTO_V5, PROTO_V6,
 };
 use crate::util::rng::Rng64;
 
@@ -91,18 +92,18 @@ impl Client {
     }
 
     /// Negotiate binary framing, asking for the highest version this
-    /// build speaks (v5). Returns the granted version: 5 down to 2 on
+    /// build speaks (v6). Returns the granted version: 6 down to 2 on
     /// success (all switch to binary frames; 3 unlocks the model-routed
-    /// frame ops, 4 the online-learning `LEARN_SPARSE` frame, and 5 the
-    /// runtime `add-model` / `remove-model` shard lifecycle ops), 1
-    /// when the server declines or predates the handshake (transparent
-    /// fallback — the connection keeps working in JSON-lines mode
-    /// either way).
+    /// frame ops, 4 the online-learning `LEARN_SPARSE` frame, 5 the
+    /// runtime `add-model` / `remove-model` shard lifecycle ops, and 6
+    /// the batched `SCORE_BATCH` scoring frame), 1 when the server
+    /// declines or predates the handshake (transparent fallback — the
+    /// connection keeps working in JSON-lines mode either way).
     pub fn negotiate(&mut self) -> Result<u32> {
         if self.proto >= PROTO_V2 {
             return Ok(self.proto);
         }
-        let line = Request::Hello { proto: PROTO_V5 }.to_line();
+        let line = Request::Hello { proto: PROTO_V6 }.to_line();
         self.writer
             .write_all(line.as_bytes())
             .and_then(|()| self.writer.flush())
@@ -114,7 +115,7 @@ impl Client {
         }
         match Response::parse(reply.trim()).map_err(|e| Error::format("hello reply", e))? {
             Response::Hello { proto, .. } if proto >= PROTO_V2 => {
-                self.proto = proto.min(PROTO_V5);
+                self.proto = proto.min(PROTO_V6);
                 Ok(self.proto)
             }
             // Declined (proto 1) or a pre-handshake server answering
@@ -374,6 +375,63 @@ impl Client {
         self.call_frame(Frame::LearnSparse { model, label, idx, val })
     }
 
+    /// Score a batch of sparse examples on shard `model` with one v6
+    /// `SCORE_BATCH` frame (`gen` pins a model generation, 0 = any).
+    /// The whole batch costs one server queue slot and is scored
+    /// back-to-back by one worker — bit-identical to sending the same
+    /// examples singly. Answers one [`BatchResult`] row per example in
+    /// submission order, each with its own status byte
+    /// ([`BATCH_STATUS_OK`] or an [`ErrorCode`] wire byte), so one bad
+    /// example never poisons its batchmates. Whole-batch failures
+    /// (unknown model, stale pin, overload, an over-long batch) come
+    /// back as a single error. Needs a negotiated v6 connection.
+    pub fn score_batch(
+        &mut self,
+        model: u16,
+        gen: u32,
+        examples: &[(Vec<u32>, Vec<f64>)],
+    ) -> Result<Vec<BatchResult>> {
+        self.require_proto(PROTO_V6, "score_batch")?;
+        let mut out = Vec::new();
+        let mut enc = Frame::begin_score_batch(&mut out, model, gen);
+        for (idx, val) in examples {
+            enc.push_example(idx, val);
+        }
+        enc.finish();
+        self.writer
+            .write_all(&out)
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| Error::io("<client write>", e))?;
+        match Frame::read_from(&mut self.reader, CLIENT_MAX_FRAME) {
+            Err(e) => Err(Error::format("server frame", e.to_string())),
+            Ok(Frame::ScoreBatchResp { results, .. }) => Ok(results),
+            Ok(Frame::Error { code, msg, .. }) => Err(Error::format(
+                "score_batch",
+                if msg.is_empty() { code.name().to_string() } else { msg },
+            )),
+            Ok(other) => {
+                Err(Error::format("server frame", format!("unexpected frame {other:?}")))
+            }
+        }
+    }
+
+    /// Score a batch via the JSON `score-batch` op (the [`Self::score_batch`]
+    /// twin for JSON-lines / envelope connections; works on any
+    /// protocol version, `None` routes to the default shard). The
+    /// response carries one row per example with a per-row `error`
+    /// field instead of a status byte.
+    pub fn score_batch_json(
+        &mut self,
+        model: Option<&str>,
+        examples: Vec<Features>,
+    ) -> Result<Response> {
+        self.call(&Request::ScoreBatch {
+            id: None,
+            model: model.map(str::to_string),
+            examples,
+        })
+    }
+
     /// Fetch server statistics.
     pub fn stats(&mut self) -> Result<StatsReport> {
         match self.call(&Request::Stats)? {
@@ -452,6 +510,12 @@ pub enum ClientMode {
     V2SparseJson,
     /// v2 binary frames after a `hello` handshake (`SCORE_SPARSE`).
     V2Binary,
+    /// v6 batched scoring: `SCORE_BATCH` frames packing
+    /// `LoadGenConfig.batch_size` examples each, answered by one
+    /// `SCORE_BATCH_RESP` row per example. Counts tally per *example*,
+    /// so its `req_per_s` compares directly against `v2-binary`
+    /// singles — that ratio is the batching speedup.
+    Batch,
     /// v3 binary multiclass classify frames (`CLASSIFY_SPARSE`) against
     /// an ensemble shard (set `LoadGenConfig.model`).
     Classify,
@@ -479,6 +543,7 @@ impl ClientMode {
             ClientMode::V1Dense => "v1-dense",
             ClientMode::V2SparseJson => "v2-sparse-json",
             ClientMode::V2Binary => "v2-binary",
+            ClientMode::Batch => "batch",
             ClientMode::Classify => "classify",
             ClientMode::Learn => "learn",
             ClientMode::Mixed => "mixed",
@@ -491,6 +556,7 @@ impl ClientMode {
             "v1-dense" => Ok(ClientMode::V1Dense),
             "v2-sparse-json" => Ok(ClientMode::V2SparseJson),
             "v2-binary" => Ok(ClientMode::V2Binary),
+            "batch" => Ok(ClientMode::Batch),
             "classify" => Ok(ClientMode::Classify),
             "learn" => Ok(ClientMode::Learn),
             "mixed" => Ok(ClientMode::Mixed),
@@ -519,6 +585,11 @@ pub struct LoadGenConfig {
     /// `|v| <= eps` are dropped client-side. 0.05 lands synthetic digits
     /// near MNIST density (~150 of 784 nonzeros).
     pub sparse_eps: f64,
+    /// Examples packed per `SCORE_BATCH` frame in batch mode (ignored
+    /// by the single-request modes). Must stay within the server's
+    /// `max_batch_examples` knob — an over-long batch is one
+    /// whole-batch error, not a truncation.
+    pub batch_size: usize,
     /// Registry shard to route to: JSON score modes carry it as the
     /// `"model"` field, classify resolves it to a wire id via the
     /// `models` op. `None` drives the default shard.
@@ -555,6 +626,7 @@ impl Default for LoadGenConfig {
             hard_fraction: 0.5,
             mode: ClientMode::V1Dense,
             sparse_eps: 0.05,
+            batch_size: 16,
             model: None,
             digits: vec![2, 3],
             seed: 0,
@@ -658,7 +730,9 @@ impl LoadReport {
 /// payload of `BENCH_serve.json`, consumed by CI's bench-smoke gate.
 /// When both a `v1-dense` and a `v2-binary` pass are present, the
 /// top-level `ratio_v2_binary_vs_v1_dense` records the throughput
-/// multiple the protocol-v2 work bought.
+/// multiple the protocol-v2 work bought; a `batch` pass alongside
+/// `v2-binary` adds `ratio_batch_vs_singles` (both passes count per
+/// example, so the ratio is the batching speedup directly).
 pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate::util::json::Json {
     use crate::util::json::Json;
     let mut modes = Vec::new();
@@ -717,6 +791,14 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
             ));
         }
     }
+    if let (Some(single), Some(batch)) = (find(ClientMode::V2Binary), find(ClientMode::Batch)) {
+        if single.req_per_s() > 0.0 {
+            pairs.push((
+                "ratio_batch_vs_singles",
+                Json::Num(batch.req_per_s() / single.req_per_s()),
+            ));
+        }
+    }
     Json::obj(pairs)
 }
 
@@ -730,6 +812,7 @@ fn required_proto(mode: ClientMode) -> u32 {
     match mode {
         ClientMode::Classify => PROTO_V3,
         ClientMode::Learn | ClientMode::Mixed => PROTO_V4,
+        ClientMode::Batch => PROTO_V6,
         _ => PROTO_V2,
     }
 }
@@ -737,7 +820,10 @@ fn required_proto(mode: ClientMode) -> u32 {
 /// Modes whose frames carry a wire model id (need a `models` lookup
 /// when a named shard is configured).
 fn routes_by_id(mode: ClientMode) -> bool {
-    matches!(mode, ClientMode::Classify | ClientMode::Learn | ClientMode::Mixed)
+    matches!(
+        mode,
+        ClientMode::Batch | ClientMode::Classify | ClientMode::Learn | ClientMode::Mixed
+    )
 }
 
 /// Label for learn traffic: the configured digit cycle's first digit is
@@ -774,6 +860,18 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
                 .into(),
         ));
     }
+    if cfg.mode == ClientMode::Batch {
+        if cfg.batch_size == 0 {
+            return Err(Error::Config("loadgen batch_size must be >= 1".into()));
+        }
+        if cfg.open_loop {
+            return Err(Error::Config(
+                "batch mode is closed-loop only (the open-loop driver sweeps one \
+                 request per socket by design)"
+                    .into(),
+            ));
+        }
+    }
     let (main, churn) = std::thread::scope(|scope| {
         // Churn rides a dedicated control connection so its add/remove
         // round-trips never slot into the main traffic's pipelines.
@@ -797,7 +895,10 @@ fn run_closed_loop(cfg: &LoadGenConfig) -> Result<LoadReport> {
         let mut joins = Vec::new();
         for c in 0..cfg.connections {
             let n = per_conn + usize::from(c < remainder);
-            joins.push(scope.spawn(move || drive_connection(cfg, c as u64, n)));
+            joins.push(scope.spawn(move || match cfg.mode {
+                ClientMode::Batch => drive_batch_connection(cfg, c as u64, n),
+                _ => drive_connection(cfg, c as u64, n),
+            }));
         }
         joins.into_iter().map(|j| j.join().expect("loadgen thread panicked")).collect::<Vec<_>>()
     });
@@ -873,6 +974,22 @@ fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
             report.total_features += *evaluated as u64;
             report.features.push(*evaluated);
             report.total_voters += *voters as u64;
+        }
+        Frame::ScoreBatchResp { results, .. } => {
+            // One tally per row: batch traffic counts on the same
+            // per-example scale as the single-frame modes, so batch
+            // and singles `req_per_s` compare directly.
+            for r in results {
+                if r.status == BATCH_STATUS_OK {
+                    report.answered += 1;
+                    report.total_features += r.evaluated as u64;
+                    report.features.push(r.evaluated);
+                } else if r.status == ErrorCode::Overloaded as u8 {
+                    report.overloaded += 1;
+                } else {
+                    report.errors += 1;
+                }
+            }
         }
         Frame::Error { code: ErrorCode::Overloaded, .. } => report.overloaded += 1,
         _ => report.errors += 1,
@@ -967,7 +1084,7 @@ fn drive_open_loop_shard(
         let mut reader = BufReader::with_capacity(1024, CountingReader::new(read_half));
         if binary {
             let needed = required_proto(cfg.mode);
-            let hello = Request::Hello { proto: PROTO_V5 }.to_line();
+            let hello = Request::Hello { proto: PROTO_V6 }.to_line();
             (&stream)
                 .write_all(hello.as_bytes())
                 .map_err(|e| Error::io("<loadgen hello>", e))?;
@@ -1184,6 +1301,15 @@ fn encode_request_into(
             Frame::put_score_sparse(&mut scratch.out, 0, &scratch.idx, &scratch.val)
                 .expect("loadgen payload index exceeds the u16 wire bound");
         }
+        ClientMode::Batch => {
+            // A lone example still rides the batch frame (the
+            // drive_batch_connection hot loop packs multi-example
+            // frames itself; this arm keeps the encoder total).
+            Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
+            let mut enc = Frame::begin_score_batch(&mut scratch.out, model_id, 0);
+            enc.push_example(&scratch.idx, &scratch.val);
+            enc.finish();
+        }
         ClientMode::Classify => {
             Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
             Frame::put_sparse_v3(
@@ -1239,6 +1365,167 @@ fn encode_request(cfg: &LoadGenConfig, model_id: u16, id: u64, features: Vec<f64
     scratch.out
 }
 
+/// Negotiate binary framing on a closed-loop driver connection and, for
+/// the modes whose frames carry a wire model id, resolve the configured
+/// shard name to that id via the `models` op. This driver targets our
+/// own server, so a declined handshake is an error, not a fallback.
+/// Returns the resolved wire id (0 = the default shard).
+fn binary_handshake(
+    cfg: &LoadGenConfig,
+    writer: &mut BufWriter<TcpStream>,
+    reader: &mut BufReader<CountingReader<TcpStream>>,
+    report: &mut LoadReport,
+) -> Result<u16> {
+    let needed = required_proto(cfg.mode);
+    let hello = Request::Hello { proto: PROTO_V6 }.to_line();
+    writer
+        .write_all(hello.as_bytes())
+        .and_then(|()| writer.flush())
+        .map_err(|e| Error::io("<loadgen hello>", e))?;
+    report.bytes_sent += hello.len() as u64;
+    let mut line = String::new();
+    let bytes = reader.read_line(&mut line).map_err(|e| Error::io("<loadgen hello>", e))?;
+    if bytes == 0 {
+        return Err(Error::format("loadgen hello", "connection closed"));
+    }
+    match Response::parse(line.trim()) {
+        Ok(Response::Hello { proto, .. }) if proto >= needed => {}
+        other => {
+            return Err(Error::format(
+                "loadgen hello",
+                format!("not granted v{needed}: {other:?}"),
+            ))
+        }
+    }
+    let mut model_id = 0u16;
+    if routes_by_id(cfg.mode) {
+        if let Some(name) = &cfg.model {
+            // Resolve the shard name to its wire id via the models
+            // op (a JSON envelope frame on this now-binary stream).
+            let req = Frame::JsonReq(Request::Models.to_json().to_string_compact()).encode();
+            writer
+                .write_all(&req)
+                .and_then(|()| writer.flush())
+                .map_err(|e| Error::io("<loadgen models>", e))?;
+            report.bytes_sent += req.len() as u64;
+            let entries = match Frame::read_from(reader, CLIENT_MAX_FRAME) {
+                Ok(Frame::JsonResp(doc)) => match Response::parse(doc.trim()) {
+                    Ok(Response::Models(entries)) => entries,
+                    other => {
+                        return Err(Error::format(
+                            "loadgen models",
+                            format!("unexpected reply {other:?}"),
+                        ))
+                    }
+                },
+                other => {
+                    return Err(Error::format(
+                        "loadgen models",
+                        format!("unexpected frame {other:?}"),
+                    ))
+                }
+            };
+            model_id = entries
+                .iter()
+                .find(|e| &e.name == name)
+                .ok_or_else(|| {
+                    Error::format("loadgen models", format!("no shard named {name:?}"))
+                })?
+                .id;
+        }
+    }
+    Ok(model_id)
+}
+
+/// One batch-mode connection: the same digit traffic as the `v2-binary`
+/// singles mode, but packed `LoadGenConfig.batch_size` examples per
+/// `SCORE_BATCH` frame with the pipelining window counted in frames.
+/// `n` counts *examples* — `sent` / `answered` tally per example, so
+/// the pass's `req_per_s` divides by the singles pass's to give the
+/// batching speedup directly.
+fn drive_batch_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadReport> {
+    let mut report = LoadReport::default();
+    if n == 0 {
+        return Ok(report);
+    }
+    let batch = cfg.batch_size.max(1);
+    let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
+    let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
+    let mut reader = BufReader::new(CountingReader::new(read_half));
+    let mut writer = BufWriter::new(stream);
+    let model_id = binary_handshake(cfg, &mut writer, &mut reader, &mut report)?;
+
+    let base = cfg.seed.wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut clean = SynthDigits::new(base);
+    let mut noisy = SynthDigits::with_config(base ^ 0xA5A5_A5A5, hard_render_config());
+    let mut mix = Rng64::seed_from_u64(base ^ 0x5A5A_5A5A);
+
+    // Reusable buffers as in drive_connection: render, sparsify, and
+    // encode whole batch frames with zero steady-state allocation.
+    let mut dense = Vec::new();
+    let mut scratch = EncodeScratch::default();
+    let mut frame_body = Vec::new();
+
+    let frames = n.div_ceil(batch);
+    let t0 = Instant::now();
+    let mut next = 0usize; // frames encoded + sent
+    let mut received = 0usize; // response frames read
+    let mut seq = 0u64; // examples rendered (digit cycle position)
+    while received < frames {
+        // Fill the pipelining window (counted in frames, so a batch
+        // run keeps `pipeline * batch_size` examples in flight).
+        if next < frames && next - received < cfg.pipeline {
+            // The last frame carries the remainder.
+            let count = batch.min(n - next * batch);
+            scratch.out.clear();
+            let mut enc = Frame::begin_score_batch(&mut scratch.out, model_id, 0);
+            for _ in 0..count {
+                let digit = cfg.digits[seq as usize % cfg.digits.len()];
+                if mix.f64() < cfg.hard_fraction {
+                    noisy.render_into(digit, &mut dense)
+                } else {
+                    clean.render_into(digit, &mut dense)
+                };
+                Features::sparsify_into(
+                    &dense,
+                    cfg.sparse_eps,
+                    &mut scratch.idx,
+                    &mut scratch.val,
+                );
+                enc.push_example(&scratch.idx, &scratch.val);
+                seq += 1;
+            }
+            enc.finish();
+            writer.write_all(&scratch.out).map_err(|e| Error::io("<loadgen write>", e))?;
+            report.bytes_sent += scratch.out.len() as u64;
+            report.sent += count as u64;
+            next += 1;
+            if next < frames && next - received < cfg.pipeline {
+                continue; // keep filling before the (blocking) read
+            }
+            writer.flush().map_err(|e| Error::io("<loadgen flush>", e))?;
+        }
+        // Window full (or everything sent): read one response frame,
+        // which tallies one row per example it carries.
+        match Frame::read_body(&mut reader, &mut frame_body, CLIENT_MAX_FRAME)
+            .and_then(|()| Frame::decode_body(&frame_body))
+        {
+            Err(FrameError::Eof) => break, // server closed; report what we have
+            Err(_) => {
+                report.errors += 1;
+                break;
+            }
+            Ok(frame) => {
+                received += 1;
+                count_binary_response(&mut report, &frame);
+            }
+        }
+    }
+    report.bytes_recv = reader.get_ref().bytes;
+    report.elapsed_s = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
 /// One connection's worth of traffic: keep up to `pipeline` requests in
 /// flight, count every response class.
 fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadReport> {
@@ -1263,62 +1550,7 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     );
     let mut model_id = 0u16;
     if binary {
-        let needed = required_proto(cfg.mode);
-        let hello = Request::Hello { proto: PROTO_V5 }.to_line();
-        writer
-            .write_all(hello.as_bytes())
-            .and_then(|()| writer.flush())
-            .map_err(|e| Error::io("<loadgen hello>", e))?;
-        report.bytes_sent += hello.len() as u64;
-        let bytes = reader.read_line(&mut line).map_err(|e| Error::io("<loadgen hello>", e))?;
-        if bytes == 0 {
-            return Err(Error::format("loadgen hello", "connection closed"));
-        }
-        match Response::parse(line.trim()) {
-            Ok(Response::Hello { proto, .. }) if proto >= needed => {}
-            other => {
-                return Err(Error::format(
-                    "loadgen hello",
-                    format!("not granted v{needed}: {other:?}"),
-                ))
-            }
-        }
-        if routes_by_id(cfg.mode) {
-            if let Some(name) = &cfg.model {
-                // Resolve the shard name to its wire id via the models
-                // op (a JSON envelope frame on this now-binary stream).
-                let req = Frame::JsonReq(Request::Models.to_json().to_string_compact()).encode();
-                writer
-                    .write_all(&req)
-                    .and_then(|()| writer.flush())
-                    .map_err(|e| Error::io("<loadgen models>", e))?;
-                report.bytes_sent += req.len() as u64;
-                let entries = match Frame::read_from(&mut reader, CLIENT_MAX_FRAME) {
-                    Ok(Frame::JsonResp(doc)) => match Response::parse(doc.trim()) {
-                        Ok(Response::Models(entries)) => entries,
-                        other => {
-                            return Err(Error::format(
-                                "loadgen models",
-                                format!("unexpected reply {other:?}"),
-                            ))
-                        }
-                    },
-                    other => {
-                        return Err(Error::format(
-                            "loadgen models",
-                            format!("unexpected frame {other:?}"),
-                        ))
-                    }
-                };
-                model_id = entries
-                    .iter()
-                    .find(|e| &e.name == name)
-                    .ok_or_else(|| {
-                        Error::format("loadgen models", format!("no shard named {name:?}"))
-                    })?
-                    .id;
-            }
-        }
+        model_id = binary_handshake(cfg, &mut writer, &mut reader, &mut report)?;
     }
 
     let base = cfg.seed.wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
@@ -1445,6 +1677,11 @@ mod tests {
         assert_eq!(ClientMode::from_name("classify").unwrap(), ClientMode::Classify);
         assert_eq!(ClientMode::from_name("learn").unwrap(), ClientMode::Learn);
         assert_eq!(ClientMode::from_name("mixed").unwrap(), ClientMode::Mixed);
+        assert_eq!(ClientMode::from_name("batch").unwrap(), ClientMode::Batch);
+        assert!(
+            !ClientMode::ALL.contains(&ClientMode::Batch),
+            "the three-way transport sweep stays single-request; batch is its own pass"
+        );
         assert!(
             !ClientMode::ALL.contains(&ClientMode::Classify),
             "the transport sweep drives binary shards only"
@@ -1555,6 +1792,50 @@ mod tests {
             Request::Score { model, .. } => assert_eq!(model.as_deref(), Some("pair-a")),
             other => panic!("wrong variant {other:?}"),
         }
+    }
+
+    #[test]
+    fn batch_mode_encodes_score_batch_frames() {
+        let features: Vec<f64> = (0..784)
+            .map(|i| if i % 5 == 0 { 0.1234567890123 + i as f64 * 1e-7 } else { 0.0 })
+            .collect();
+        let nnz = features.iter().filter(|v| v.abs() > 0.05).count();
+        let cfg = LoadGenConfig { mode: ClientMode::Batch, ..Default::default() };
+        let bytes = encode_request(&cfg, 9, 0, features);
+        // An exact one-example SCORE_BATCH frame: 4 (len) + 1 (op) +
+        // 2 (model) + 4 (gen) + 2 (count) + 4 (nnz) + 12 per pair.
+        assert_eq!(bytes.len(), 17 + 12 * nnz);
+        let (frame, used) = Frame::decode(&bytes, 1 << 20).unwrap();
+        assert_eq!(used, bytes.len());
+        match frame {
+            Frame::ScoreBatch { model, gen, examples } => {
+                assert_eq!(model, 9);
+                assert_eq!(gen, 0);
+                assert_eq!(examples.len(), 1);
+                assert_eq!(examples[0].0.len(), nnz);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_response_rows_tally_per_example() {
+        let mut report = LoadReport::default();
+        let frame = Frame::ScoreBatchResp {
+            gen: 3,
+            results: vec![
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 40, score: 1.5 },
+                BatchResult { status: ErrorCode::BadRequest as u8, evaluated: 0, score: 0.0 },
+                BatchResult { status: ErrorCode::Overloaded as u8, evaluated: 0, score: 0.0 },
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 60, score: -0.5 },
+            ],
+        };
+        count_binary_response(&mut report, &frame);
+        assert_eq!(report.answered, 2, "one tally per OK row");
+        assert_eq!(report.errors, 1);
+        assert_eq!(report.overloaded, 1);
+        assert_eq!(report.total_features, 100);
+        assert_eq!(report.features, vec![40, 60]);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! {"op":"score","model":"digits-2v3","idx":[...],"val":[...]}  // routed
 //! {"op":"classify","model":"digits","idx":[...],"val":[...]}   // all-pairs vote
 //! {"op":"learn","y":1,"idx":[...],"val":[...]}     // online-training example
+//! {"op":"score-batch","examples":[{"idx":[...],"val":[...]},...]}  // v6
 //! {"op":"hello","proto":4}                         // framing negotiation
 //! {"op":"stats"}
 //! {"op":"models"}                                  // shard table
@@ -47,8 +48,17 @@
 //! (the learn *capability*; the JSON `learn` op works on any protocol
 //! version), and a grant of 5 advertises the dynamic shard lifecycle
 //! (`add-model` / `remove-model`, which also travel as JSON envelopes
-//! on every framing). Anything else stays on JSON lines, so v1 clients
-//! that never send `hello` are untouched.
+//! on every framing), and a grant of 6 the batched scoring capability
+//! (the binary `SCORE_BATCH` frame; the JSON `score-batch` op works on
+//! any protocol version). Anything else stays on JSON lines, so v1
+//! clients that never send `hello` are untouched.
+//!
+//! `score-batch` scores up to the server's `max_batch_examples`
+//! payloads on one binary shard as a single queue admission, answering
+//! with one per-example `results` row each carrying either the score
+//! or that example's error — one bad example never poisons its
+//! batchmates; whole-batch failures (unknown model, wrong kind,
+//! overload) answer with a single plain error response.
 //!
 //! Responses always carry `"ok"`; errors carry `"error"` plus
 //! `"retryable"` (`true` for `overloaded` shed responses, which the
@@ -58,6 +68,8 @@
 //! {"ok":true,"op":"score","id":7,"score":1.25,"features_evaluated":34}
 //! {"ok":true,"op":"classify","label":3,"votes":9,"voters":45,"features_evaluated":1210}
 //! {"ok":true,"op":"learn","gen":2,"seen":128}
+//! {"ok":true,"op":"score-batch","results":[{"score":1.25,"features_evaluated":34},
+//!                                          {"error":"dimension-mismatch"}]}
 //! {"ok":true,"op":"hello","proto":4,"gen":1,"dim":784}
 //! {"ok":true,"op":"stats", ...StatsReport...}
 //! {"ok":true,"op":"models","models":[{"name":"default","id":0,...},...]}
@@ -83,10 +95,15 @@ pub const PROTO_V3: u32 = 3;
 /// Protocol version 4: v3 plus the online-learning capability (the
 /// binary `LEARN_SPARSE` frame and its `LEARN_ACK`).
 pub const PROTO_V4: u32 = 4;
-/// Highest protocol version this build speaks: v4 plus the dynamic
-/// shard lifecycle capability (`add-model` / `remove-model` control
-/// ops; a v5 grant is how clients discover the server supports them).
+/// Protocol version 5: v4 plus the dynamic shard lifecycle capability
+/// (`add-model` / `remove-model` control ops; a v5 grant is how
+/// clients discover the server supports them).
 pub const PROTO_V5: u32 = 5;
+/// Highest protocol version this build speaks: v5 plus the batched
+/// scoring capability (the binary `SCORE_BATCH` frame and its
+/// `SCORE_BATCH_RESP`; a v6 grant is how clients discover the server
+/// accepts batches and respects its advertised `max_batch_examples`).
+pub const PROTO_V6: u32 = 6;
 
 /// A client → server message.
 #[derive(Debug, Clone)]
@@ -120,6 +137,21 @@ pub enum Request {
         /// and features-touched, so clients can see where the attentive
         /// budget went.
         verbose: bool,
+    },
+    /// Score a batch of examples on one binary shard as a single queue
+    /// admission (the protocol-v6 `SCORE_BATCH` capability's JSON
+    /// twin). Examples are scored back-to-back in submission order, so
+    /// the batch is bit-identical to the same examples sent as single
+    /// `score` requests.
+    ScoreBatch {
+        /// Optional client-chosen correlation id, echoed in the response.
+        id: Option<u64>,
+        /// Registry shard to route to (`None` = the default shard).
+        model: Option<String>,
+        /// The payloads, each dense or sparse. Per-example validation
+        /// happens at admission so one malformed example degrades to
+        /// its own error row instead of failing the batch.
+        examples: Vec<Features>,
     },
     /// Submit one labeled example to the routed shard's online trainer.
     Learn {
@@ -173,6 +205,39 @@ fn parse_f64_array(v: &Json, what: &str) -> Result<Vec<f64>, String> {
         .collect()
 }
 
+/// Extract a dense-or-sparse feature payload from a request object (or
+/// one `score-batch` example object). Structural screening
+/// ([`Features::validate`]) is the caller's call: single-example ops
+/// reject the whole request, batch admission degrades to a per-example
+/// error row.
+fn parse_features(v: &Json, op: &str) -> Result<Features, String> {
+    let dense = v.get("features");
+    let sparse = (v.get("idx"), v.get("val"));
+    match (dense, sparse) {
+        (Some(_), (Some(_), _) | (_, Some(_))) => {
+            Err(format!("{op}: give either features or idx/val, not both"))
+        }
+        (Some(arr), _) => Ok(Features::Dense(parse_f64_array(arr, "features")?)),
+        (None, (Some(idx), Some(val))) => {
+            let idx = idx
+                .as_arr()
+                .ok_or_else(|| format!("{op}: idx must be an array"))?
+                .iter()
+                .map(|x| {
+                    x.as_u64()
+                        .filter(|&i| i <= u32::MAX as u64)
+                        .map(|i| i as u32)
+                        .ok_or_else(|| format!("{op}: bad idx entry"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(Features::Sparse { idx, val: parse_f64_array(val, "val")? })
+        }
+        (None, (Some(_), None)) => Err(format!("{op}: idx without val")),
+        (None, (None, Some(_))) => Err(format!("{op}: val without idx")),
+        (None, (None, None)) => Err(format!("{op}: missing features")),
+    }
+}
+
 impl Request {
     /// Parse one request line (the versioned parser: accepts both the
     /// v1 dense and the v2 sparse score forms on any connection).
@@ -187,31 +252,7 @@ impl Request {
             op @ ("score" | "classify" | "learn") => {
                 let id = v.get("id").and_then(|x| x.as_u64());
                 let model = v.get("model").and_then(|s| s.as_str()).map(str::to_string);
-                let dense = v.get("features");
-                let sparse = (v.get("idx"), v.get("val"));
-                let features = match (dense, sparse) {
-                    (Some(_), (Some(_), _) | (_, Some(_))) => {
-                        return Err(format!("{op}: give either features or idx/val, not both"))
-                    }
-                    (Some(arr), _) => Features::Dense(parse_f64_array(arr, "features")?),
-                    (None, (Some(idx), Some(val))) => {
-                        let idx = idx
-                            .as_arr()
-                            .ok_or_else(|| format!("{op}: idx must be an array"))?
-                            .iter()
-                            .map(|x| {
-                                x.as_u64()
-                                    .filter(|&i| i <= u32::MAX as u64)
-                                    .map(|i| i as u32)
-                                    .ok_or_else(|| format!("{op}: bad idx entry"))
-                            })
-                            .collect::<Result<Vec<_>, _>>()?;
-                        Features::Sparse { idx, val: parse_f64_array(val, "val")? }
-                    }
-                    (None, (Some(_), None)) => return Err(format!("{op}: idx without val")),
-                    (None, (None, Some(_))) => return Err(format!("{op}: val without idx")),
-                    (None, (None, None)) => return Err(format!("{op}: missing features")),
-                };
+                let features = parse_features(&v, op)?;
                 // Reject structural damage (unsorted/duplicate indices,
                 // length mismatch) and non-finite values here: a
                 // non-finite margin could not be serialized back as
@@ -236,6 +277,19 @@ impl Request {
                     }
                     _ => Ok(Request::Score { id, model, features }),
                 }
+            }
+            "score-batch" => {
+                let id = v.get("id").and_then(|x| x.as_u64());
+                let model = v.get("model").and_then(|s| s.as_str()).map(str::to_string);
+                let rows = v
+                    .get("examples")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("score-batch: missing examples")?;
+                let examples = rows
+                    .iter()
+                    .map(|ex| parse_features(ex, "score-batch"))
+                    .collect::<Result<Vec<_>, _>>()?;
+                Ok(Request::ScoreBatch { id, model, examples })
             }
             "stats" => Ok(Request::Stats),
             "models" => Ok(Request::Models),
@@ -309,6 +363,29 @@ impl Request {
                     pairs.push(("model", Json::Str(model.clone())));
                 }
                 Self::push_features(&mut pairs, features);
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+            Request::ScoreBatch { id, model, examples } => {
+                let mut pairs = vec![("op", Json::Str("score-batch".into()))];
+                if let Some(model) = model {
+                    pairs.push(("model", Json::Str(model.clone())));
+                }
+                pairs.push((
+                    "examples",
+                    Json::Arr(
+                        examples
+                            .iter()
+                            .map(|features| {
+                                let mut row = Vec::new();
+                                Self::push_features(&mut row, features);
+                                Json::obj(row)
+                            })
+                            .collect(),
+                    ),
+                ));
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
@@ -616,6 +693,30 @@ impl ModelEntry {
     }
 }
 
+/// One per-example row of a `score-batch` response.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchRow {
+    /// `None` = scored; `Some` carries the kebab-case error name for
+    /// this one example (its batchmates are unaffected).
+    pub error: Option<String>,
+    /// Signed margin estimate (0.0 on error rows).
+    pub score: f64,
+    /// Features evaluated before the early exit (0 on error rows).
+    pub features_evaluated: usize,
+}
+
+impl BatchRow {
+    /// A scored row.
+    pub fn ok(score: f64, features_evaluated: usize) -> BatchRow {
+        BatchRow { error: None, score, features_evaluated }
+    }
+
+    /// A per-example error row.
+    pub fn err(error: impl Into<String>) -> BatchRow {
+        BatchRow { error: Some(error.into()), score: 0.0, features_evaluated: 0 }
+    }
+}
+
 /// A server → client message.
 #[derive(Debug, Clone)]
 pub enum Response {
@@ -668,6 +769,14 @@ pub enum Response {
         features_evaluated: usize,
         /// Per-voter rows, in pair-enumeration order.
         per_voter: Vec<VoterVote>,
+    },
+    /// A scored batch: one row per submitted example, in submission
+    /// order, each carrying its own score or error.
+    ScoreBatch {
+        /// Echo of the request id, if one was sent.
+        id: Option<u64>,
+        /// Per-example outcome rows, in submission order.
+        results: Vec<BatchRow>,
     },
     /// A learn example was accepted by the routed shard's trainer.
     Learned {
@@ -779,6 +888,34 @@ impl Response {
                                         ("vote", Json::Num(row.vote as f64)),
                                         ("features", Json::Num(row.features as f64)),
                                     ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                Json::obj(pairs)
+            }
+            Response::ScoreBatch { id, results } => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("op", Json::Str("score-batch".into())),
+                    (
+                        "results",
+                        Json::Arr(
+                            results
+                                .iter()
+                                .map(|row| match &row.error {
+                                    Some(e) => Json::obj([("error", Json::Str(e.clone()))]),
+                                    None => Json::obj([
+                                        ("score", Json::Num(row.score)),
+                                        (
+                                            "features_evaluated",
+                                            Json::Num(row.features_evaluated as f64),
+                                        ),
+                                    ]),
                                 })
                                 .collect(),
                         ),
@@ -940,6 +1077,28 @@ impl Response {
                 id: v.get("id").and_then(|x| x.as_u64()),
                 gen: v.get("gen").and_then(|x| x.as_u64()).ok_or("learn: missing gen")? as u32,
                 seen: v.get("seen").and_then(|x| x.as_u64()).ok_or("learn: missing seen")?,
+            }),
+            "score-batch" => Ok(Response::ScoreBatch {
+                id: v.get("id").and_then(|x| x.as_u64()),
+                results: v
+                    .get("results")
+                    .and_then(|a| a.as_arr())
+                    .ok_or("score-batch: missing results")?
+                    .iter()
+                    .map(|row| {
+                        if let Some(e) = row.get("error").and_then(|s| s.as_str()) {
+                            return Ok(BatchRow::err(e));
+                        }
+                        Ok(BatchRow::ok(
+                            row.get("score")
+                                .and_then(|x| x.as_f64())
+                                .ok_or("score-batch: missing score")?,
+                            row.get("features_evaluated")
+                                .and_then(|x| x.as_usize())
+                                .ok_or("score-batch: missing features_evaluated")?,
+                        ))
+                    })
+                    .collect::<Result<_, String>>()?,
             }),
             "stats" => Ok(Response::Stats(StatsReport::from_json(&v))),
             "models" => Ok(Response::Models(
@@ -1120,6 +1279,74 @@ mod tests {
                 assert_eq!(voters, 45);
                 assert_eq!(features_evaluated, 1210);
             }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn score_batch_round_trips_without_poisoning() {
+        let req = Request::ScoreBatch {
+            id: Some(7),
+            model: Some("digits-2v3".into()),
+            examples: vec![
+                Features::Sparse { idx: vec![3, 17], val: vec![0.5, -1.2] },
+                Features::Dense(vec![1.0, 0.0]),
+                Features::Sparse { idx: vec![], val: vec![] },
+            ],
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"op\":\"score-batch\""));
+        match Request::parse(line.trim()).unwrap() {
+            Request::ScoreBatch { id, model, examples } => {
+                assert_eq!(id, Some(7));
+                assert_eq!(model.as_deref(), Some("digits-2v3"));
+                assert_eq!(examples.len(), 3);
+                assert!(matches!(&examples[1], Features::Dense(x) if x == &vec![1.0, 0.0]));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // A structurally damaged example still parses: validation is
+        // deferred to admission, where it degrades to that example's
+        // own error row instead of failing the batch.
+        match Request::parse(
+            r#"{"op":"score-batch","examples":[{"idx":[5,2],"val":[1.0,2.0]}]}"#,
+        )
+        .unwrap()
+        {
+            Request::ScoreBatch { examples, .. } => assert_eq!(examples.len(), 1),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Malformed JSON structure still fails the whole line.
+        assert!(Request::parse(r#"{"op":"score-batch"}"#).is_err(), "missing examples");
+        assert!(
+            Request::parse(r#"{"op":"score-batch","examples":[{"idx":[1]}]}"#).is_err(),
+            "idx without val"
+        );
+
+        let resp = Response::ScoreBatch {
+            id: Some(7),
+            results: vec![
+                BatchRow::ok(1.25, 34),
+                BatchRow::err("dimension-mismatch"),
+                BatchRow::ok(-0.5, 9),
+            ],
+        };
+        let line = resp.to_line();
+        assert!(line.contains("\"error\":\"dimension-mismatch\""));
+        match Response::parse(line.trim()).unwrap() {
+            Response::ScoreBatch { id, results } => {
+                assert_eq!(id, Some(7));
+                assert_eq!(results.len(), 3);
+                assert_eq!(results[0], BatchRow::ok(1.25, 34));
+                assert_eq!(results[1], BatchRow::err("dimension-mismatch"));
+                assert_eq!(results[2], BatchRow::ok(-0.5, 9));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // An empty batch round-trips too.
+        let resp = Response::ScoreBatch { id: None, results: vec![] };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::ScoreBatch { id: None, results } => assert!(results.is_empty()),
             other => panic!("wrong variant {other:?}"),
         }
     }

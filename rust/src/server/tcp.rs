@@ -31,7 +31,13 @@
 //! capability (`LEARN_SPARSE` / `LEARN_ACK` — the JSON `learn` op works
 //! at any version; like the v3 ops, the grant is capability discovery,
 //! not per-frame enforcement); a grant of 5 advertises the runtime
-//! shard-lifecycle capability (`add-model` / `remove-model`, below).
+//! shard-lifecycle capability (`add-model` / `remove-model`, below); a
+//! grant of 6 advertises batched scoring (`SCORE_BATCH` /
+//! `SCORE_BATCH_RESP`, and the JSON `score-batch` twin) — a whole
+//! batch costs one queue slot and one worker wakeup, its examples are
+//! scored back-to-back by one worker (bit-identical to the same
+//! requests sent singly), and each example carries its own status in
+//! the response, so one bad example never poisons its batchmates.
 //! Clients that never send `hello` (all v1 clients) are served exactly
 //! as before, on the default shard.
 //!
@@ -81,7 +87,8 @@ use crate::server::frame::{
 };
 use crate::server::hub::{HubError, ModelHub};
 use crate::server::protocol::{
-    ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2, PROTO_V5,
+    BatchRow, ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2,
+    PROTO_V6,
 };
 use crate::server::registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
 
@@ -136,6 +143,10 @@ pub(crate) struct Shared {
     pub(crate) max_pending: usize,
     pub(crate) max_frame_bytes: usize,
     pub(crate) max_nnz: usize,
+    /// Per-request example cap for `SCORE_BATCH` / `score-batch`
+    /// (advertised to v6 clients; an over-long batch is one whole-batch
+    /// error, not a truncation).
+    pub(crate) max_batch_examples: usize,
     /// Concurrent-connection admission cap (both backends).
     pub(crate) max_conns: usize,
     /// Live connections right now (for the `max_conns` screen).
@@ -236,6 +247,7 @@ impl TcpServer {
             max_pending: cfg.max_pending_per_conn,
             max_frame_bytes: cfg.max_frame_bytes,
             max_nnz: cfg.max_nnz,
+            max_batch_examples: cfg.max_batch_examples,
             max_conns: cfg.max_conns,
             live_conns: AtomicU64::new(0),
             wire: Default::default(),
@@ -468,6 +480,19 @@ impl Wire {
     }
 }
 
+/// Per-example admission verdict inside a batch, recorded in request
+/// order at decode time so the writer can merge worker results with
+/// screen-time rejections without any index bookkeeping: a `Submitted`
+/// slot consumes the next in-order worker result, a `Rejected` slot
+/// renders its stored error.
+pub(crate) enum BatchSlot {
+    /// Screened clean and admitted with the batch.
+    Submitted,
+    /// Rejected at screen time (nnz cap, unsorted support, non-finite
+    /// value); never reached a worker. Its batchmates are unaffected.
+    Rejected { code: ErrorCode, msg: String },
+}
+
 /// What the reader hands the writer, in request order.
 pub(crate) enum Job {
     /// Fully-encoded response bytes (a JSON line or a binary frame),
@@ -476,6 +501,11 @@ pub(crate) enum Job {
     /// An admitted score/classify request whose response is still being
     /// computed.
     Pending { wire: Wire, rx: Receiver<ScoreResponse> },
+    /// An admitted `SCORE_BATCH` / `score-batch` whose responses are
+    /// still being computed: one receiver for the whole batch (its
+    /// examples are scored back-to-back by one worker), plus the
+    /// decode-time slot verdicts the writer merges into one response.
+    PendingBatch { wire: Wire, rx: Receiver<Vec<ScoreResponse>>, slots: Vec<BatchSlot> },
 }
 
 /// Reader-side verdict for one decoded request.
@@ -572,7 +602,7 @@ pub(crate) fn json_step(line: &str, shared: &Shared) -> Step {
         Ok(Request::Hello { proto }) => {
             // Grant the highest version both sides speak; v1 keeps the
             // connection on JSON lines (transparent fallback).
-            let granted = proto.min(PROTO_V5).max(1);
+            let granted = proto.min(PROTO_V6).max(1);
             // One snapshot: (gen, dim) must not tear across a reload.
             // The handshake advertises the default shard, which is what
             // single-model clients will be talking to.
@@ -683,6 +713,97 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                     }))
                 }
                 Err(e) => Step::Job(render(Response::Error {
+                    id,
+                    error: e.to_string(),
+                    retryable: false,
+                })),
+            }
+        }
+        Request::ScoreBatch { id, model, examples } => {
+            if examples.len() > shared.max_batch_examples {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return Step::Job(render(Response::Error {
+                    id,
+                    error: format!(
+                        "batch count {} exceeds server cap {}",
+                        examples.len(),
+                        shared.max_batch_examples
+                    ),
+                    retryable: false,
+                }));
+            }
+            let hub = match shared.registry.resolve_name(model.as_deref()) {
+                Ok((_, hub)) => hub,
+                Err(e) => {
+                    return Step::Job(render(Response::Error {
+                        id,
+                        error: e.to_string(),
+                        retryable: false,
+                    }))
+                }
+            };
+            // Per-example screens fill a `Rejected` slot instead of
+            // failing the batch: only clean examples travel to the
+            // worker, and the writer merges the verdicts back in order.
+            let mut slots = Vec::with_capacity(examples.len());
+            let mut clean = Vec::with_capacity(examples.len());
+            for features in examples {
+                if matches!(features, Features::Sparse { .. })
+                    && features.nnz() > shared.max_nnz
+                {
+                    shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    slots.push(BatchSlot::Rejected {
+                        code: ErrorCode::BadRequest,
+                        msg: format!(
+                            "nnz {} exceeds server cap {}",
+                            features.nnz(),
+                            shared.max_nnz
+                        ),
+                    });
+                    continue;
+                }
+                match features.validate() {
+                    Err(e) => {
+                        shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        let code = if e.contains("non-finite") {
+                            ErrorCode::NonFinite
+                        } else {
+                            ErrorCode::BadRequest
+                        };
+                        slots.push(BatchSlot::Rejected { code, msg: e });
+                    }
+                    Ok(()) => {
+                        clean.push(features);
+                        slots.push(BatchSlot::Submitted);
+                    }
+                }
+            }
+            // Admit even an all-rejected batch: the empty submit keeps
+            // the one-queue-slot accounting and response ordering
+            // uniform, and the worker answers it with an empty vec.
+            match hub.submit_batch(clean, 0) {
+                Ok((rx, _)) => {
+                    let wire = if enveloped { Wire::V2Json { id } } else { Wire::V1 { id } };
+                    Step::Job(Job::PendingBatch { wire, rx, slots })
+                }
+                Err(HubError::Overloaded) => {
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    Step::Job(render(Response::Error {
+                        id,
+                        error: "overloaded".into(),
+                        retryable: true,
+                    }))
+                }
+                Err(e @ HubError::Closed) => Step::Job(render(Response::Error {
+                    id,
+                    error: e.to_string(),
+                    retryable: true,
+                })),
+                Err(
+                    e @ (HubError::DimMismatch { .. }
+                    | HubError::StaleGeneration { .. }
+                    | HubError::WrongKind { .. }),
+                ) => Step::Job(render(Response::Error {
                     id,
                     error: e.to_string(),
                     retryable: false,
@@ -891,6 +1012,77 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
                 }
             }
         }
+        // v6 batched scoring: one frame, one queue slot, one worker
+        // wakeup. Structural layout was checked by the borrowed decode;
+        // here each example is screened in place like a single sparse
+        // score, with a failed screen demoted to that example's status
+        // row instead of a whole-batch error.
+        FrameRef::ScoreBatch { model, gen, count, examples } => {
+            if count > shared.max_batch_examples {
+                shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return err(
+                    ErrorCode::BadRequest,
+                    format!(
+                        "batch count {count} exceeds server cap {}",
+                        shared.max_batch_examples
+                    ),
+                );
+            }
+            let hub = match shared.registry.resolve_id(model) {
+                Ok(hub) => hub,
+                Err(e) => return err(ErrorCode::UnknownModel, e.to_string()),
+            };
+            let mut slots = Vec::with_capacity(count);
+            let mut clean = Vec::with_capacity(count);
+            for pairs in frame::batch_pairs(examples) {
+                let nnz = pairs.len() / 12;
+                if nnz > shared.max_nnz {
+                    shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    slots.push(BatchSlot::Rejected {
+                        code: ErrorCode::BadRequest,
+                        msg: format!("nnz {nnz} exceeds server cap {}", shared.max_nnz),
+                    });
+                    continue;
+                }
+                match frame::validate_pairs_u32(pairs) {
+                    Err(e) => {
+                        shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        let code = if e.contains("non-finite") {
+                            ErrorCode::NonFinite
+                        } else {
+                            ErrorCode::BadRequest
+                        };
+                        slots.push(BatchSlot::Rejected { code, msg: e.to_string() });
+                    }
+                    Ok(()) => {
+                        clean.push(frame::pairs_to_features_u32(pairs));
+                        slots.push(BatchSlot::Submitted);
+                    }
+                }
+            }
+            // Whole-batch failures (unknown model above, wrong kind,
+            // stale pin, overload, shutdown) stay one `ERROR` frame —
+            // there is no partial outcome to report.
+            match hub.submit_batch(clean, gen) {
+                Ok((rx, serving)) => Step::Job(Job::PendingBatch {
+                    wire: Wire::V2Binary { gen: serving },
+                    rx,
+                    slots,
+                }),
+                Err(e @ HubError::StaleGeneration { .. }) => {
+                    err(ErrorCode::StaleGeneration, e.to_string())
+                }
+                Err(HubError::Overloaded) => {
+                    shared.overloaded.fetch_add(1, Ordering::Relaxed);
+                    err(ErrorCode::Overloaded, "overloaded".into())
+                }
+                Err(e @ HubError::DimMismatch { .. }) => {
+                    err(ErrorCode::DimMismatch, e.to_string())
+                }
+                Err(e @ HubError::WrongKind { .. }) => err(ErrorCode::WrongModel, e.to_string()),
+                Err(e @ HubError::Closed) => err(ErrorCode::Unavailable, e.to_string()),
+            }
+        }
         // v4 online learning: screen the payload like a score, then a
         // non-blocking hand-off to the shard's trainer queue — the ack
         // (or shed) is synchronous, the model update is not.
@@ -947,10 +1139,10 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
         // before blocking on an unready pending receiver.
         loop {
             scratch.clear();
-            let (class, scored): (WireClass, bool) = match job {
+            let (class, scored): (WireClass, u64) = match job {
                 Job::Bytes(bytes, class) => {
                     scratch.extend_from_slice(&bytes);
-                    (class, false)
+                    (class, 0)
                 }
                 Job::Pending { wire, rx } => {
                     let resp = match rx.try_recv() {
@@ -964,15 +1156,31 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
                         Err(TryRecvError::Disconnected) => None,
                     };
                     render_score_into(&wire, resp, &mut scratch);
-                    (wire.class(), true)
+                    (wire.class(), 1)
+                }
+                Job::PendingBatch { wire, rx, slots } => {
+                    let results = match rx.try_recv() {
+                        Ok(results) => Some(results),
+                        Err(TryRecvError::Empty) => {
+                            if out.flush().is_err() {
+                                break 'outer;
+                            }
+                            rx.recv().ok()
+                        }
+                        Err(TryRecvError::Disconnected) => None,
+                    };
+                    render_batch_into(&wire, &slots, results, &mut scratch);
+                    (wire.class(), slots.len() as u64)
                 }
             };
             // Per-wire-class counters: bytes for every response, served
-            // for score/classify outcomes (the migration signal).
+            // for score/classify outcomes (the migration signal; a
+            // batch counts one per example, so batch and single traffic
+            // read on the same scale).
             let counters = shared.wire(class);
             counters.bytes.fetch_add(scratch.len() as u64, Ordering::Relaxed);
-            if scored {
-                counters.served.fetch_add(1, Ordering::Relaxed);
+            if scored > 0 {
+                counters.served.fetch_add(scored, Ordering::Relaxed);
             }
             if out.write_all(&scratch).is_err() {
                 break 'outer;
@@ -1082,6 +1290,76 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
                 Frame::Error { code, retryable, msg: msg.into() }.encode_into(out)
             }
         },
+    }
+}
+
+/// Per-example outcome inside a batch, merged from the slot verdicts
+/// and the worker's in-order results: a `Rejected` slot renders its
+/// screen-time error, a `Submitted` slot consumes the next worker
+/// result and classifies it exactly like [`render_score_into`] does
+/// for a single score (NaN = mid-flight dim change, non-finite =
+/// unserializable margin, missing = worker generation died).
+fn batch_outcome<'a, I: Iterator<Item = ScoreResponse>>(
+    slot: &'a BatchSlot,
+    results: &mut I,
+) -> std::result::Result<(f64, u32), (ErrorCode, &'a str)> {
+    match slot {
+        BatchSlot::Rejected { code, msg } => Err((*code, msg.as_str())),
+        BatchSlot::Submitted => match results.next() {
+            None => Err((ErrorCode::Unavailable, "service unavailable")),
+            Some(r) if r.score.is_nan() => Err((
+                ErrorCode::DimMismatch,
+                "dimension mismatch (model reloaded mid-flight)",
+            )),
+            Some(r) if !r.score.is_finite() => Err((ErrorCode::NonFinite, "non-finite score")),
+            Some(r) => Ok((r.score, r.features_evaluated as u32)),
+        },
+    }
+}
+
+/// Render a whole batch's outcomes on its negotiated wire into a
+/// caller-supplied buffer (appended). On the binary wire this is one
+/// `SCORE_BATCH_RESP` frame serialized allocation-free into the
+/// reusable buffer; on the JSON wires it is one `score-batch` response
+/// with a result row per example. `results` is `None` only when the
+/// worker generation died before answering (a drained shutdown never
+/// produces it); every `Submitted` slot then renders as unavailable.
+pub(crate) fn render_batch_into(
+    wire: &Wire,
+    slots: &[BatchSlot],
+    results: Option<Vec<ScoreResponse>>,
+    out: &mut Vec<u8>,
+) {
+    let mut results = results.into_iter().flatten();
+    match wire {
+        Wire::V1 { id } | Wire::V2Json { id } => {
+            let rows = slots
+                .iter()
+                .map(|slot| match batch_outcome(slot, &mut results) {
+                    Ok((score, evaluated)) => BatchRow::ok(score, evaluated as usize),
+                    Err((_, msg)) => BatchRow::err(msg),
+                })
+                .collect();
+            let resp = Response::ScoreBatch { id: *id, results: rows };
+            match wire {
+                Wire::V2Json { .. } => {
+                    Frame::JsonResp(resp.to_json().to_string_compact()).encode_into(out)
+                }
+                _ => out.extend_from_slice(resp.to_line().as_bytes()),
+            }
+        }
+        Wire::V2Binary { gen } => {
+            let mut enc = Frame::begin_score_batch_resp(out, *gen);
+            for slot in slots {
+                match batch_outcome(slot, &mut results) {
+                    Ok((score, evaluated)) => {
+                        enc.push_result(frame::BATCH_STATUS_OK, evaluated, score)
+                    }
+                    Err((code, _)) => enc.push_result(code as u8, 0, 0.0),
+                }
+            }
+            enc.finish();
+        }
     }
 }
 
@@ -1217,7 +1495,7 @@ mod tests {
             other => panic!("expected score, got {other:?}"),
         }
         // Binary negotiation + native sparse frame.
-        assert_eq!(client.negotiate().unwrap(), 5);
+        assert_eq!(client.negotiate().unwrap(), 6);
         match client.score_sparse(vec![3, 9], vec![1.0, 1.0], 0).unwrap() {
             Response::Score { score, features_evaluated, .. } => {
                 assert!(score > 0.0);

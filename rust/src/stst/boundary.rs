@@ -292,6 +292,143 @@ impl Boundary for AnyBoundary {
     }
 }
 
+/// Precomputed stop-threshold table for the serving hot path (θ = 0).
+///
+/// The level sequence `τ_1..τ_n` of every [`AnyBoundary`] family depends
+/// only on `(var_sn, n, δ)` — constant per published snapshot — so the
+/// `sqrt`-laden closed forms can be evaluated **once** when a snapshot is
+/// installed and the walker compares against stored values instead of
+/// recomputing them per feature. Stop decisions are bit-identical by
+/// construction: every entry is produced by calling the boundary's own
+/// [`Boundary::level`] with the exact [`StopContext`] the scalar walker
+/// would have built (`theta = 0.0`, same `evaluated`/`total`/`var_sn`).
+///
+/// Three internal representations, chosen per family:
+///
+/// * `Flat` — [`ConstantBoundary`]: the level ignores `evaluated`/`total`
+///   entirely, so one `f64` serves every step of every walk length.
+/// * `PerStep` — [`CurvedBoundary`]: `τ_i` depends on `i/n`, so the table
+///   is valid only for the exact `total` it was built for (see
+///   [`Self::supports_total`]; [`TableCache`] handles rebuilds).
+/// * `NonEvidence` — budgeted/full baselines: no level is ever consulted,
+///   only the evaluation cap.
+#[derive(Debug, Clone)]
+pub struct BoundaryTable {
+    kind: TableKind,
+    total: usize,
+}
+
+#[derive(Debug, Clone)]
+enum TableKind {
+    /// Same τ at every step and for any walk length (Constant STST).
+    Flat(f64),
+    /// `levels[i]` is `τ_{i+1}`; valid only for walks of exactly `total`.
+    PerStep(Vec<f64>),
+    /// Never stops on evidence; `budget` caps the walk (budgeted baseline).
+    NonEvidence { budget: Option<usize> },
+}
+
+impl BoundaryTable {
+    /// Build the table for `boundary` at prediction time (θ = 0) with the
+    /// snapshot's variance estimate and an expected walk length `total`
+    /// (`dim` for dense scoring; support size for sparse).
+    pub fn for_boundary(boundary: &AnyBoundary, var_sn: f64, total: usize) -> Self {
+        let kind = match boundary {
+            AnyBoundary::Constant { .. } => {
+                // Flat in `evaluated` and `total`: any context yields τ.
+                let ctx = StopContext { evaluated: 1, total: total.max(1), theta: 0.0, var_sn };
+                TableKind::Flat(boundary.level(&ctx))
+            }
+            AnyBoundary::Curved { .. } => TableKind::PerStep(
+                (1..=total)
+                    .map(|i| {
+                        boundary.level(&StopContext { evaluated: i, total, theta: 0.0, var_sn })
+                    })
+                    .collect(),
+            ),
+            AnyBoundary::Budgeted { k } => TableKind::NonEvidence { budget: Some(*k) },
+            AnyBoundary::Full => TableKind::NonEvidence { budget: None },
+        };
+        Self { kind, total }
+    }
+
+    /// Whether this table is valid for a walk of `total` coordinates.
+    /// Only the per-step (curved) representation is length-specific.
+    pub fn supports_total(&self, total: usize) -> bool {
+        match &self.kind {
+            TableKind::PerStep(_) => total == self.total,
+            _ => true,
+        }
+    }
+
+    /// Whether the underlying boundary stops on evidence at all.
+    pub fn is_evidence_based(&self) -> bool {
+        !matches!(self.kind, TableKind::NonEvidence { .. })
+    }
+
+    /// Number of coordinates a walk of `total` evaluates at most —
+    /// `min(k, total)` for the budgeted baseline, `total` otherwise.
+    pub fn cap(&self, total: usize) -> usize {
+        match &self.kind {
+            TableKind::NonEvidence { budget: Some(k) } => (*k).min(total),
+            _ => total,
+        }
+    }
+
+    /// The stop level `τ_evaluated` (`evaluated` is the 1-based count of
+    /// coordinates already summed, exactly as in [`StopContext`]).
+    #[inline]
+    pub fn level_at(&self, evaluated: usize) -> f64 {
+        match &self.kind {
+            TableKind::Flat(tau) => *tau,
+            TableKind::PerStep(levels) => levels[evaluated - 1],
+            TableKind::NonEvidence { .. } => f64::INFINITY,
+        }
+    }
+
+    /// The single level shared by every step, if the boundary is flat —
+    /// lets the kernel hoist the comparison value out of the walk loop.
+    #[inline]
+    pub fn flat_level(&self) -> Option<f64> {
+        match &self.kind {
+            TableKind::Flat(tau) => Some(*tau),
+            _ => None,
+        }
+    }
+}
+
+/// A [`BoundaryTable`] that rebuilds itself when the walk length changes.
+///
+/// Serving workers hold one of these per model/voter: flat (constant) and
+/// non-evidence tables never rebuild; a curved table rebuilds only when a
+/// request's walk length differs from the previous one (dense requests all
+/// share `total = dim`, so they build exactly once — sparse requests
+/// rebuild per distinct support size, the documented cost of the curved
+/// family on sparse traffic).
+#[derive(Debug, Clone)]
+pub struct TableCache {
+    boundary: AnyBoundary,
+    var_sn: f64,
+    table: BoundaryTable,
+}
+
+impl TableCache {
+    /// Cache seeded for walks of `total` coordinates.
+    pub fn new(boundary: AnyBoundary, var_sn: f64, total: usize) -> Self {
+        let table = BoundaryTable::for_boundary(&boundary, var_sn, total);
+        Self { boundary, var_sn, table }
+    }
+
+    /// The table for a walk of `total` coordinates, rebuilding if needed.
+    #[inline]
+    pub fn for_total(&mut self, total: usize) -> &BoundaryTable {
+        if !self.table.supports_total(total) {
+            self.table = BoundaryTable::for_boundary(&self.boundary, self.var_sn, total);
+        }
+        &self.table
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,5 +520,91 @@ mod tests {
     #[should_panic(expected = "delta must be in (0,1)")]
     fn rejects_bad_delta() {
         ConstantBoundary::new(1.5);
+    }
+
+    #[test]
+    fn boundary_table_is_bit_identical_to_the_closed_form() {
+        // The serving LUT must reproduce Boundary::level exactly — no
+        // tolerance — for every family, across lengths and variances,
+        // at the θ = 0 prediction-time context the workers use.
+        let families = [
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            AnyBoundary::Constant { delta: 0.01, paper_literal: true },
+            AnyBoundary::Curved { delta: 0.05 },
+            AnyBoundary::Budgeted { k: 7 },
+            AnyBoundary::Full,
+        ];
+        for boundary in &families {
+            for &n in &[1usize, 2, 16, 49, 784] {
+                for &var_sn in &[0.0, 1.0, 42.5, 1e6] {
+                    let table = BoundaryTable::for_boundary(boundary, var_sn, n);
+                    for i in 1..=n {
+                        let want = boundary
+                            .level(&StopContext { evaluated: i, total: n, theta: 0.0, var_sn });
+                        let got = table.level_at(i);
+                        // Exact f64 equality — bit-identical stop decisions.
+                        assert_eq!(
+                            got,
+                            want,
+                            "{} n={n} var={var_sn} i={i}",
+                            boundary.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_table_caps_match_budget_semantics() {
+        let full = BoundaryTable::for_boundary(&AnyBoundary::Full, 1.0, 784);
+        assert!(!full.is_evidence_based());
+        assert_eq!(full.cap(784), 784);
+        assert_eq!(full.cap(10), 10);
+        assert_eq!(full.level_at(5), f64::INFINITY);
+
+        let budgeted = BoundaryTable::for_boundary(&AnyBoundary::Budgeted { k: 49 }, 1.0, 784);
+        assert!(!budgeted.is_evidence_based());
+        assert_eq!(budgeted.cap(784), 49, "budget caps long walks");
+        assert_eq!(budgeted.cap(10), 10, "short walks cap at their length");
+
+        let constant = BoundaryTable::for_boundary(
+            &AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            50.0,
+            784,
+        );
+        assert!(constant.is_evidence_based());
+        assert_eq!(constant.cap(784), 784);
+        assert_eq!(constant.flat_level(), Some(constant.level_at(1)));
+        assert!(constant.supports_total(3), "flat tables serve any length");
+
+        let curved = BoundaryTable::for_boundary(&AnyBoundary::Curved { delta: 0.1 }, 50.0, 784);
+        assert!(curved.supports_total(784));
+        assert!(!curved.supports_total(783), "per-step tables are length-specific");
+        assert_eq!(curved.flat_level(), None);
+        assert_eq!(curved.level_at(784), f64::INFINITY, "curved never stops at the endpoint");
+    }
+
+    #[test]
+    fn table_cache_rebuilds_only_when_the_length_changes() {
+        // Flat: one build serves every length.
+        let mut flat =
+            TableCache::new(AnyBoundary::Constant { delta: 0.1, paper_literal: false }, 4.0, 784);
+        let tau = flat.for_total(784).level_at(1);
+        assert_eq!(flat.for_total(12).level_at(1), tau);
+
+        // Curved: the cache transparently rebuilds for a new length and
+        // the rebuilt entries still match the closed form exactly.
+        let boundary = AnyBoundary::Curved { delta: 0.1 };
+        let mut curved = TableCache::new(boundary.clone(), 4.0, 784);
+        assert!(curved.for_total(784).supports_total(784));
+        let rebuilt = curved.for_total(32);
+        assert!(rebuilt.supports_total(32));
+        for i in 1..=32 {
+            assert_eq!(
+                rebuilt.level_at(i),
+                boundary.level(&StopContext { evaluated: i, total: 32, theta: 0.0, var_sn: 4.0 })
+            );
+        }
     }
 }

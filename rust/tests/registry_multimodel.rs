@@ -442,13 +442,13 @@ fn ensemble_classify_equals_offline_one_vs_one_vote() {
         CoordinatePolicy::Sequential,
     );
     assert_eq!(snapshot.voter_count(), 3);
-    let mut orders = snapshot.make_orders(0);
+    let mut scratch = snapshot.make_scratch(0);
 
     // Offline vote vs serving-layer classify, on every test example.
     let mut disagreements = 0usize;
     for ex in test.iter() {
         let (offline_label, offline_features) = ensemble.predict(ex.features);
-        let resp = snapshot.classify(&Features::Dense(ex.features.to_vec()), &mut orders);
+        let resp = snapshot.classify(&Features::Dense(ex.features.to_vec()), &mut scratch);
         let info = resp.classify.expect("classify outcome");
         if info.label != offline_label || resp.features_evaluated != offline_features {
             disagreements += 1;

@@ -5,7 +5,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use attentive::config::{ServerConfig, TrainerWireConfig};
+use attentive::config::{IoBackend, ServerConfig, TrainerWireConfig};
 use attentive::coordinator::factory::build_wire_pegasos;
 use attentive::coordinator::service::{Features, ModelSnapshot};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
@@ -14,7 +14,7 @@ use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
 use attentive::learner::OnlineLearner;
 use attentive::margin::policy::CoordinatePolicy;
-use attentive::server::frame::{ErrorCode, Frame};
+use attentive::server::frame::{ErrorCode, Frame, BATCH_STATUS_OK};
 use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
 use attentive::server::protocol::Response;
 use attentive::server::tcp::TcpServer;
@@ -232,6 +232,7 @@ fn mixed_v1_and_v2_clients_share_one_server() {
                 mode,
                 sparse_eps: 0.05,
                 seed,
+                ..Default::default()
             })
             .expect("loadgen")
         })
@@ -264,8 +265,8 @@ fn v2_negotiated_client_scores_sparse_and_runs_control_ops() {
 
     let mut client = Client::connect(&addr).unwrap();
     assert_eq!(client.proto(), 1);
-    assert_eq!(client.negotiate().unwrap(), 5, "server grants the full v5 capability set");
-    assert_eq!(client.proto(), 5);
+    assert_eq!(client.negotiate().unwrap(), 6, "server grants the full v6 capability set");
+    assert_eq!(client.proto(), 6);
 
     // Native sparse frame: 3 nonzeros, all-ones model -> positive score
     // touching at most 3 coordinates.
@@ -362,6 +363,152 @@ fn v2_rejects_malformed_sparse_payloads_with_structured_errors() {
         }
         other => panic!("expected structured rejection, got {other:?}"),
     }
+    server.shutdown();
+}
+
+/// Batch ≡ singles, bit for bit: k examples scored one frame at a time
+/// on one server must match the same k examples in a single
+/// `SCORE_BATCH` frame on an identically configured twin. Twin servers
+/// (not one server queried twice) because the Permuted order policy
+/// advances a worker-local RNG stream per request — identical configs
+/// replay identical streams, so any divergence is the batch path's
+/// fault, not the RNG's.
+fn batch_matches_singles_on(backend: IoBackend) {
+    let snapshot = trained_snapshot();
+    let serve = || {
+        let cfg = ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            queue: 256,
+            io_backend: backend,
+            ..Default::default()
+        };
+        TcpServer::serve(&cfg, snapshot.clone()).expect("bind loopback")
+    };
+
+    // Twelve sparse digit renders, classes interleaved so scores land
+    // on both sides of zero.
+    let mut digits = SynthDigits::new(41);
+    let examples: Vec<(Vec<u32>, Vec<f64>)> = (0..12)
+        .map(|i| {
+            let dense = digits.render(if i % 2 == 0 { 2 } else { 3 });
+            let (mut idx, mut val) = (Vec::new(), Vec::new());
+            Features::sparsify_into(&dense, 0.05, &mut idx, &mut val);
+            (idx, val)
+        })
+        .collect();
+
+    // Server A: one frame per example.
+    let a = serve();
+    let mut client = Client::connect(&a.local_addr().to_string()).unwrap();
+    assert_eq!(client.negotiate().unwrap(), 6);
+    let singles: Vec<(f64, usize)> = examples
+        .iter()
+        .map(|(idx, val)| match client.score_sparse2(0, idx.clone(), val.clone(), 0).unwrap() {
+            Response::Score { score, features_evaluated, .. } => (score, features_evaluated),
+            other => panic!("single got {other:?}"),
+        })
+        .collect();
+    a.shutdown();
+
+    // Server B: the same examples in one SCORE_BATCH frame.
+    let b = serve();
+    let mut client = Client::connect(&b.local_addr().to_string()).unwrap();
+    assert_eq!(client.negotiate().unwrap(), 6);
+    let rows = client.score_batch(0, 0, &examples).unwrap();
+    assert_eq!(rows.len(), examples.len());
+    for (i, (row, (score, evaluated))) in rows.iter().zip(&singles).enumerate() {
+        assert_eq!(row.status, BATCH_STATUS_OK, "row {i}");
+        assert_eq!(
+            row.score.to_bits(),
+            score.to_bits(),
+            "row {i}: batch must be bit-identical to singles ({} vs {score})",
+            row.score
+        );
+        assert_eq!(row.evaluated as usize, *evaluated, "row {i}: same attention spend");
+    }
+    b.shutdown();
+
+    // Server C: the JSON `score-batch` twin on a plain v1 connection.
+    // The JSON float encoder round-trips f64 exactly, so bit-equality
+    // must survive the text wire too.
+    let c = serve();
+    let mut client = Client::connect(&c.local_addr().to_string()).unwrap();
+    let features: Vec<Features> = examples
+        .iter()
+        .map(|(idx, val)| Features::Sparse { idx: idx.clone(), val: val.clone() })
+        .collect();
+    match client.score_batch_json(None, features).unwrap() {
+        Response::ScoreBatch { results, .. } => {
+            assert_eq!(results.len(), examples.len());
+            for (i, (row, (score, evaluated))) in results.iter().zip(&singles).enumerate() {
+                assert!(row.error.is_none(), "row {i}: {:?}", row.error);
+                assert_eq!(
+                    row.score.to_bits(),
+                    score.to_bits(),
+                    "row {i}: JSON twin must stay bit-identical"
+                );
+                assert_eq!(row.features_evaluated, *evaluated, "row {i}");
+            }
+        }
+        other => panic!("score-batch got {other:?}"),
+    }
+    c.shutdown();
+}
+
+#[test]
+fn batch_scoring_is_bit_identical_to_singles() {
+    batch_matches_singles_on(IoBackend::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn batch_scoring_is_bit_identical_to_singles_on_event_loop() {
+    batch_matches_singles_on(IoBackend::EventLoop);
+}
+
+#[test]
+fn one_bad_batch_example_never_poisons_its_batchmates() {
+    let server = loopback_server(flat_snapshot(1.0), 256, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert_eq!(client.negotiate().unwrap(), 6);
+
+    // Two clean examples bracket three different per-example rejects:
+    // a non-finite value, an unsorted support, an out-of-range index.
+    let examples: Vec<(Vec<u32>, Vec<f64>)> = vec![
+        (vec![3, 40], vec![0.9, 0.8]),
+        (vec![7], vec![f64::NAN]),
+        (vec![9, 4], vec![1.0, 1.0]),
+        (vec![5_000], vec![1.0]),
+        (vec![2, 300], vec![0.5, 0.25]),
+    ];
+    let rows = client.score_batch(0, 0, &examples).unwrap();
+    assert_eq!(rows.len(), 5);
+    let expect = [
+        BATCH_STATUS_OK,
+        ErrorCode::NonFinite as u8,
+        ErrorCode::BadRequest as u8,
+        ErrorCode::DimMismatch as u8,
+        BATCH_STATUS_OK,
+    ];
+    for (i, (row, want)) in rows.iter().zip(expect).enumerate() {
+        assert_eq!(row.status, want, "row {i}");
+        if row.status == BATCH_STATUS_OK {
+            assert!(row.score > 0.0, "row {i}: flat +1 model scores inky input positive");
+        } else {
+            assert_eq!(row.evaluated, 0, "row {i}: a rejected example spends nothing");
+            assert_eq!(row.score.to_bits(), 0.0f64.to_bits(), "row {i}: zeroed payload");
+        }
+    }
+
+    // Whole-batch failures stay whole-batch: a stale generation pin
+    // answers one error frame, not five rows.
+    let err = client.score_batch(0, 42, &examples).expect_err("stale pin must fail");
+    assert!(err.to_string().contains("generation"), "got {err}");
+
+    // The connection survives both shapes of failure.
+    client.ping().unwrap();
     server.shutdown();
 }
 
@@ -490,7 +637,7 @@ fn learn_over_the_wire_converges_and_publishes_generations() {
     let addr = server.local_addr().to_string();
 
     let mut client = Client::connect(&addr).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 5, "server grants v5");
+    assert_eq!(client.negotiate().unwrap(), 6, "server grants v6");
 
     // Offline reference: the exact learner the wire trainer builds, fed
     // the same sequence — the server's counters must land on these.

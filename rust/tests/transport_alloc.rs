@@ -70,6 +70,7 @@ fn transport_iteration(body: &[u8], gen: u32, out: &mut Vec<u8>) {
 #[test]
 fn transport_allocation_accounting() {
     steady_state_binary_score_path_is_allocation_free();
+    steady_state_batch_score_path_is_allocation_free();
     admission_is_the_only_allocating_stage_and_is_bounded();
     bufpool_round_trips_without_allocating_after_warmup();
     read_body_loop_is_allocation_free_at_steady_state();
@@ -100,6 +101,72 @@ fn steady_state_binary_score_path_is_allocation_free() {
     // Sanity: the loop really did produce responses.
     let (resp, _) = Frame::decode(&out, 1 << 20).expect("response decodes");
     assert!(matches!(resp, Frame::Score { gen: 999, .. }));
+}
+
+/// One steady-state batched iteration: borrow-decode a `SCORE_BATCH`
+/// body, screen every example's pairs in place, and render the
+/// per-row `SCORE_BATCH_RESP` into `out`. Returns the row count.
+fn batch_transport_iteration(body: &[u8], gen: u32, out: &mut Vec<u8>) -> usize {
+    let frame = FrameRef::decode_borrowed(body).expect("decode");
+    let FrameRef::ScoreBatch { count, examples, .. } = frame else {
+        panic!("expected batch, got {frame:?}")
+    };
+    out.clear();
+    let mut enc = Frame::begin_score_batch_resp(out, gen);
+    let mut rows = 0usize;
+    for pairs in frame::batch_pairs(examples) {
+        frame::validate_pairs_u32(pairs).expect("valid payload");
+        enc.push_result(frame::BATCH_STATUS_OK, (pairs.len() / 12) as u32, 0.75);
+        rows += 1;
+    }
+    assert_eq!(rows, count);
+    enc.finish();
+    rows
+}
+
+/// The v6 batch path inherits the transport claim: one `SCORE_BATCH`
+/// frame of many examples decodes, screens, and answers through the
+/// same two reusable buffers with zero allocations at steady state —
+/// per-example cost included.
+fn steady_state_batch_score_path_is_allocation_free() {
+    // 16 MNIST-density examples in one frame.
+    let examples: Vec<(Vec<u32>, Vec<f64>)> = (0..16usize)
+        .map(|e| {
+            let idx: Vec<u32> = (0..150u32).map(|i| i * 5 + (e % 3) as u32).collect();
+            let val: Vec<f64> = idx.iter().map(|&i| 0.25 + i as f64 * 1e-3).collect();
+            (idx, val)
+        })
+        .collect();
+    let mut wire = Vec::new();
+    let mut enc = Frame::begin_score_batch(&mut wire, 0, 0);
+    for (idx, val) in &examples {
+        enc.push_example(idx, val);
+    }
+    enc.finish();
+    let body = &wire[4..];
+
+    // Warm-up: the response buffer reaches steady-state capacity.
+    let mut out = Vec::new();
+    for g in 0..4 {
+        batch_transport_iteration(body, g, &mut out);
+    }
+
+    let before = allocs();
+    for g in 0..1_000u32 {
+        assert_eq!(batch_transport_iteration(body, g, &mut out), 16);
+    }
+    let delta = allocs() - before;
+    assert_eq!(
+        delta, 0,
+        "1000 steady-state batch iterations must not touch the allocator, saw {delta}"
+    );
+    // Sanity: the last response decodes to 16 OK rows.
+    let (resp, _) = Frame::decode(&out, 1 << 20).expect("response decodes");
+    let Frame::ScoreBatchResp { gen: 999, results } = resp else {
+        panic!("expected batch response, got {resp:?}")
+    };
+    assert_eq!(results.len(), 16);
+    assert!(results.iter().all(|r| r.status == frame::BATCH_STATUS_OK));
 }
 
 fn admission_is_the_only_allocating_stage_and_is_bounded() {
