@@ -534,6 +534,23 @@ pub struct ServerConfig {
     /// silently fills). Both backends enforce it; the event loop is the
     /// one that can realistically reach it.
     pub max_conns: usize,
+    /// Per-connection write deadline in milliseconds, applied by both
+    /// backends when flushing responses to a peer that has stopped
+    /// reading (0 = wait forever). Bounds how long a dead or stalled
+    /// peer can pin a writer.
+    pub write_timeout_ms: u64,
+    /// Per-connection idle deadline in milliseconds: a connection that
+    /// has neither sent a byte nor has responses owed for this long is
+    /// reaped (0 = never, the default). Both backends enforce it; it is
+    /// the slowloris defense — idle peers stop pinning buffers forever.
+    pub idle_timeout_ms: u64,
+    /// Crash-safe online learning: when set, every trainer-backed shard
+    /// persists its published snapshot generations under
+    /// `<snapshot_dir>/<shard-name>/` (atomic temp+fsync+rename writes)
+    /// and a restarting server warm-starts each trainer from the newest
+    /// valid file there. `None` (the default) keeps learned state
+    /// in-memory only.
+    pub snapshot_dir: Option<PathBuf>,
     /// Attach an online trainer to every shard (enables the `learn` op).
     /// `None` (the default) serves inference-only.
     pub trainer: Option<TrainerWireConfig>,
@@ -554,6 +571,9 @@ impl Default for ServerConfig {
             io_backend: IoBackend::default_from_env(),
             event_threads: 2,
             max_conns: 16_384,
+            write_timeout_ms: 2_000,
+            idle_timeout_ms: 0,
+            snapshot_dir: None,
             trainer: None,
         }
     }
@@ -575,7 +595,12 @@ impl ServerConfig {
             ("io_backend", Json::Str(self.io_backend.name().into())),
             ("event_threads", Json::Num(self.event_threads as f64)),
             ("max_conns", Json::Num(self.max_conns as f64)),
+            ("write_timeout_ms", Json::Num(self.write_timeout_ms as f64)),
+            ("idle_timeout_ms", Json::Num(self.idle_timeout_ms as f64)),
         ];
+        if let Some(dir) = &self.snapshot_dir {
+            fields.push(("snapshot_dir", Json::Str(dir.display().to_string())));
+        }
         if let Some(t) = &self.trainer {
             fields.push(("trainer", t.to_json()));
         }
@@ -613,6 +638,19 @@ impl ServerConfig {
                 .and_then(|x| x.as_usize())
                 .unwrap_or(d.event_threads),
             max_conns: v.get("max_conns").and_then(|x| x.as_usize()).unwrap_or(d.max_conns),
+            write_timeout_ms: v
+                .get("write_timeout_ms")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.write_timeout_ms),
+            idle_timeout_ms: v
+                .get("idle_timeout_ms")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.idle_timeout_ms),
+            snapshot_dir: v
+                .get("snapshot_dir")
+                .and_then(|s| s.as_str())
+                .map(PathBuf::from)
+                .or(d.snapshot_dir),
             trainer: match v.get("trainer") {
                 Some(t) => Some(TrainerWireConfig::from_json(t)?),
                 None => d.trainer,
@@ -734,6 +772,9 @@ mod tests {
             io_backend: IoBackend::Threads,
             event_threads: 4,
             max_conns: 2_000,
+            write_timeout_ms: 5_000,
+            idle_timeout_ms: 30_000,
+            snapshot_dir: Some(PathBuf::from("/var/lib/attentive/snapshots")),
             trainer: Some(TrainerWireConfig {
                 queue: 512,
                 publish_every_updates: 32,
@@ -758,8 +799,34 @@ mod tests {
         assert_eq!(sparse.max_batch_examples, 128);
         assert_eq!(sparse.event_threads, 2);
         assert_eq!(sparse.max_conns, 16_384);
+        assert_eq!(sparse.write_timeout_ms, 2_000);
+        assert_eq!(sparse.idle_timeout_ms, 0);
+        assert_eq!(sparse.snapshot_dir, None);
         assert_eq!(sparse.trainer, None);
         sparse.validate().unwrap();
+    }
+
+    #[test]
+    fn timeout_and_snapshot_knobs_round_trip_and_zero_means_off() {
+        // 0 disables either deadline — explicitly valid, not a zero-knob
+        // config error like the structural counts.
+        let cfg = ServerConfig { write_timeout_ms: 0, idle_timeout_ms: 0, ..Default::default() };
+        cfg.validate().unwrap();
+        let back =
+            ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.write_timeout_ms, 0);
+        assert_eq!(back.idle_timeout_ms, 0);
+        // snapshot_dir is omitted from the JSON when unset and round
+        // trips as a path when set.
+        assert!(!ServerConfig::default().to_json().to_string_compact().contains("snapshot_dir"));
+        let cfg =
+            ServerConfig { snapshot_dir: Some(PathBuf::from("snaps")), ..Default::default() };
+        let back =
+            ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.snapshot_dir, Some(PathBuf::from("snaps")));
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -19,6 +19,8 @@
 //! order with a config-seeded learner, so the same accepted sequence
 //! reproduces the same weights as an offline run (tested below).
 
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -29,7 +31,9 @@ use crate::config::TrainerWireConfig;
 use crate::coordinator::factory::build_wire_pegasos;
 use crate::coordinator::service::{Features, ModelSnapshot, ServingModel};
 use crate::learner::OnlineLearner;
+use crate::server::faultpoint;
 use crate::server::hub::ModelHub;
+use crate::util::json::Json;
 
 /// Poll interval when no time-based publish is pending — only bounds
 /// how quickly the thread notices a dropped sender, not learn latency.
@@ -139,6 +143,38 @@ impl OnlineTrainer {
         Self::spawn_inner(cfg, dim, None, sink)
     }
 
+    /// Like [`OnlineTrainer::spawn`], but every successfully published
+    /// generation is also persisted into `store` (atomic write: temp
+    /// file + fsync + rename). Persist happens *before* the hub swap,
+    /// so a crash immediately after clients observe a generation can
+    /// never leave that generation unrecoverable. The trainer's final
+    /// shutdown publish rides the same sink, giving the "final persist
+    /// on shutdown" guarantee for free. A persist failure is logged and
+    /// does not block serving — the previous generation on disk remains
+    /// the recovery point.
+    pub fn spawn_with_store(
+        hub: Arc<ModelHub>,
+        cfg: &TrainerWireConfig,
+        dim: usize,
+        store: SnapshotStore,
+    ) -> Self {
+        let init = match &*hub.serving_model() {
+            ServingModel::Binary(snap) => Some(snap.clone()),
+            _ => None,
+        };
+        Self::spawn_inner(
+            cfg,
+            dim,
+            init,
+            Box::new(move |snap| {
+                if let Err(e) = store.persist(&snap) {
+                    eprintln!("warning: snapshot persist failed in {}: {e}", store.dir().display());
+                }
+                hub.reload(snap).is_ok()
+            }),
+        )
+    }
+
     fn spawn_inner(
         cfg: &TrainerWireConfig,
         dim: usize,
@@ -192,6 +228,194 @@ impl Drop for OnlineTrainer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// File magic for persisted snapshots ("Attentive SNaPshot").
+const SNAP_MAGIC: &[u8; 4] = b"ASNP";
+/// Header: magic (4) + format version u32 LE (4) + payload length
+/// u32 LE (4) + FNV-1a-64 checksum of the payload u64 LE (8).
+const SNAP_HEADER_LEN: usize = 20;
+/// Persisted-format version; bump on any layout change.
+const SNAP_VERSION: u32 = 1;
+/// Generations kept on disk per shard; older ones are pruned after
+/// each successful persist.
+const SNAP_KEEP: usize = 8;
+
+/// FNV-1a 64-bit — tiny, std-only, and plenty to catch torn writes.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Durable, crash-safe storage for one shard's published
+/// [`ModelSnapshot`] generations.
+///
+/// Layout: one file per generation, `gen-<n, zero-padded to 20>.snap`,
+/// so lexicographic filename order *is* numeric generation order. Each
+/// file is a 20-byte header (magic + version + payload length + FNV-1a
+/// checksum) followed by the snapshot's compact-JSON payload. Writes go
+/// through a temp file in the same directory, `fsync`, `rename`, then a
+/// directory fsync — a crash at any point leaves either the old state
+/// or the new state, never a half-file under the final name. Recovery
+/// ([`SnapshotStore::load_newest`]) walks generations newest-first and
+/// skips any file whose header, length, or checksum doesn't verify, so
+/// a torn write (e.g. power loss mid-`write`, or the injected
+/// `snapshot-fail` fault) silently falls back to the previous good
+/// generation.
+///
+/// The generation counter is seeded past the newest on-disk generation
+/// at open, keeping generations monotonic across process restarts.
+pub struct SnapshotStore {
+    dir: PathBuf,
+    next_gen: AtomicU64,
+}
+
+impl std::fmt::Debug for SnapshotStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotStore")
+            .field("dir", &self.dir)
+            .field("next_gen", &self.next_gen.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl SnapshotStore {
+    /// Open (creating if needed) the store rooted at `dir`. Leftover
+    /// temp files from an interrupted write are removed; the generation
+    /// counter resumes after the newest file present, valid or not —
+    /// a torn generation's number is burned, never reused.
+    pub fn open(dir: impl Into<PathBuf>) -> std::io::Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let mut max_gen = 0u64;
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with(".tmp-") {
+                let _ = std::fs::remove_file(entry.path());
+            } else if let Some(gen) = parse_gen(&name) {
+                max_gen = max_gen.max(gen);
+            }
+        }
+        Ok(Self { dir, next_gen: AtomicU64::new(max_gen + 1) })
+    }
+
+    /// The directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Persist one snapshot as the next generation, atomically, and
+    /// prune generations beyond the newest [`SNAP_KEEP`]. Returns the
+    /// generation number written.
+    pub fn persist(&self, snap: &ModelSnapshot) -> std::io::Result<u64> {
+        let gen = self.next_gen.fetch_add(1, Ordering::Relaxed);
+        let payload = snap.to_json().to_string_compact().into_bytes();
+        let mut bytes = Vec::with_capacity(SNAP_HEADER_LEN + payload.len());
+        bytes.extend_from_slice(SNAP_MAGIC);
+        bytes.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        bytes.extend_from_slice(&payload);
+
+        let final_path = self.dir.join(gen_name(gen));
+        if faultpoint::fires(faultpoint::Point::SnapshotFail) {
+            // Crash emulation: the final name appears holding only a
+            // prefix of the bytes — what a power cut mid-write (with no
+            // temp/rename discipline) would leave. Recovery must skip it.
+            let torn = &bytes[..bytes.len() / 2];
+            std::fs::write(&final_path, torn)?;
+            return Err(std::io::Error::other("injected fault: snapshot-fail (torn file)"));
+        }
+
+        let tmp_path = self.dir.join(format!(".tmp-{}", gen_name(gen)));
+        {
+            let mut f = std::fs::File::create(&tmp_path)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp_path, &final_path)?;
+        // Make the rename itself durable: fsync the directory entry.
+        if let Ok(d) = std::fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+        self.prune();
+        Ok(gen)
+    }
+
+    /// Load the newest on-disk generation that verifies (magic, version,
+    /// length, checksum, JSON parse). Truncated or corrupt files are
+    /// skipped in favor of the previous generation. Returns the
+    /// generation number with the snapshot, or `None` if nothing valid
+    /// is present.
+    pub fn load_newest(&self) -> Option<(u64, ModelSnapshot)> {
+        let mut gens = self.list_gens();
+        gens.sort_unstable_by(|a, b| b.cmp(a));
+        for gen in gens {
+            if let Some(snap) = read_validated(&self.dir.join(gen_name(gen))) {
+                return Some((gen, snap));
+            }
+        }
+        None
+    }
+
+    /// Generation numbers currently on disk, unsorted.
+    fn list_gens(&self) -> Vec<u64> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return Vec::new() };
+        entries
+            .flatten()
+            .filter_map(|e| parse_gen(&e.file_name().to_string_lossy()))
+            .collect()
+    }
+
+    /// Delete all but the newest [`SNAP_KEEP`] generations. Best-effort:
+    /// a failed unlink only means extra files linger.
+    fn prune(&self) {
+        let mut gens = self.list_gens();
+        if gens.len() <= SNAP_KEEP {
+            return;
+        }
+        gens.sort_unstable();
+        for gen in &gens[..gens.len() - SNAP_KEEP] {
+            let _ = std::fs::remove_file(self.dir.join(gen_name(*gen)));
+        }
+    }
+}
+
+/// `gen-<zero-padded-20>.snap`: lexicographic order == numeric order.
+fn gen_name(gen: u64) -> String {
+    format!("gen-{gen:020}.snap")
+}
+
+/// Inverse of [`gen_name`]; `None` for foreign files.
+fn parse_gen(name: &str) -> Option<u64> {
+    name.strip_prefix("gen-")?.strip_suffix(".snap")?.parse().ok()
+}
+
+/// Read and fully verify one snapshot file; `None` on any mismatch.
+fn read_validated(path: &Path) -> Option<ModelSnapshot> {
+    let bytes = std::fs::read(path).ok()?;
+    if bytes.len() < SNAP_HEADER_LEN || &bytes[..4] != SNAP_MAGIC {
+        return None;
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != SNAP_VERSION {
+        return None;
+    }
+    let len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let checksum = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let payload = &bytes[SNAP_HEADER_LEN..];
+    if payload.len() != len || fnv1a(payload) != checksum {
+        return None;
+    }
+    let text = std::str::from_utf8(payload).ok()?;
+    let json = Json::parse(text).ok()?;
+    ModelSnapshot::from_json(&json).ok()
 }
 
 /// The trainer thread: consume → densify → attentive step → publish on
@@ -450,6 +674,122 @@ mod tests {
                     s.weights
                 );
                 assert!(s.weights[2] > 0.0, "the update itself must land");
+            }
+            other => panic!("expected binary serving model, got {}", other.kind_name()),
+        }
+    }
+
+    /// Self-cleaning unique temp dir for store tests (std-only).
+    struct TempDir(PathBuf);
+    impl TempDir {
+        fn new(tag: &str) -> Self {
+            static SEQ: AtomicU64 = AtomicU64::new(0);
+            let n = SEQ.fetch_add(1, Ordering::Relaxed);
+            let dir = std::env::temp_dir().join(format!(
+                "attentive-snap-{tag}-{}-{n}",
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            Self(dir)
+        }
+    }
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = std::fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn snap_with_weights(w: Vec<f64>) -> ModelSnapshot {
+        ModelSnapshot {
+            weights: w,
+            var_sn: 2.5,
+            boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            policy: CoordinatePolicy::WeightSampled,
+        }
+    }
+
+    #[test]
+    fn snapshot_store_round_trips_bit_identical() {
+        let tmp = TempDir::new("rt");
+        let store = SnapshotStore::open(&tmp.0).unwrap();
+        let snap = snap_with_weights(vec![0.125, -3.5, 0.0, 1e-9]);
+        let gen = store.persist(&snap).unwrap();
+        assert_eq!(gen, 1);
+        let (got_gen, got) = store.load_newest().expect("persisted snapshot loads back");
+        assert_eq!(got_gen, 1);
+        // Weights survive the JSON round trip bit-identical: the
+        // serializer prints shortest-round-trip floats.
+        assert_eq!(got.weights, snap.weights);
+        assert_eq!(got.var_sn, snap.var_sn);
+    }
+
+    #[test]
+    fn truncated_newest_falls_back_to_previous_generation() {
+        let tmp = TempDir::new("trunc");
+        let store = SnapshotStore::open(&tmp.0).unwrap();
+        store.persist(&snap_with_weights(vec![1.0, 2.0])).unwrap();
+        let gen2 = store.persist(&snap_with_weights(vec![3.0, 4.0])).unwrap();
+        // Tear the newest file in half, as a crash mid-write would.
+        let path = tmp.0.join(format!("gen-{gen2:020}.snap"));
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let (gen, snap) = store.load_newest().expect("previous generation survives");
+        assert_eq!(gen, 1, "torn newest must be skipped");
+        assert_eq!(snap.weights, vec![1.0, 2.0]);
+        // A checksum-flip (right length, wrong bytes) is also rejected.
+        let mut flipped = bytes.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x01;
+        std::fs::write(&path, &flipped).unwrap();
+        assert_eq!(store.load_newest().unwrap().0, 1, "corrupt payload must be skipped");
+    }
+
+    #[test]
+    fn generations_stay_monotonic_across_reopen_and_prune_keeps_newest() {
+        let tmp = TempDir::new("gens");
+        {
+            let store = SnapshotStore::open(&tmp.0).unwrap();
+            for i in 0..3 {
+                store.persist(&snap_with_weights(vec![i as f64])).unwrap();
+            }
+        }
+        // Reopen: the counter resumes after the newest on-disk file.
+        let store = SnapshotStore::open(&tmp.0).unwrap();
+        assert_eq!(store.persist(&snap_with_weights(vec![9.0])).unwrap(), 4);
+        for i in 0..SNAP_KEEP as u64 + 3 {
+            store.persist(&snap_with_weights(vec![100.0 + i as f64])).unwrap();
+        }
+        let gens: Vec<u64> = {
+            let mut g = store.list_gens();
+            g.sort_unstable();
+            g
+        };
+        assert_eq!(gens.len(), SNAP_KEEP, "prune keeps exactly the newest {SNAP_KEEP}");
+        assert!(gens.windows(2).all(|w| w[1] == w[0] + 1), "kept set is contiguous: {gens:?}");
+        let (newest, snap) = store.load_newest().unwrap();
+        assert_eq!(newest, *gens.last().unwrap());
+        assert_eq!(snap.weights, vec![100.0 + (SNAP_KEEP as f64 + 2.0)]);
+    }
+
+    #[test]
+    fn spawn_with_store_persists_published_generations() {
+        let tmp = TempDir::new("spawn");
+        let cfg = TrainerWireConfig { publish_every_updates: 1, ..test_cfg() };
+        let dim = 4;
+        let base = snap_with_weights(vec![0.0; 4]);
+        let hub = Arc::new(ModelHub::new(base, 4, 64, 1, 0));
+        let store = SnapshotStore::open(&tmp.0).unwrap();
+        let trainer = OnlineTrainer::spawn_with_store(Arc::clone(&hub), &cfg, dim, store);
+        trainer.learn(Features::Sparse { idx: vec![1], val: vec![1.0] }, 1.0).unwrap();
+        trainer.shutdown();
+        // Reopen the directory independently: the published generation
+        // must be on disk and identical to what the hub now serves.
+        let store = SnapshotStore::open(&tmp.0).unwrap();
+        let (_, recovered) = store.load_newest().expect("trainer persisted its publish");
+        match &*hub.serving_model() {
+            ServingModel::Binary(s) => {
+                assert_eq!(recovered.weights, s.weights, "disk matches the serving generation");
+                assert_eq!(recovered.var_sn, s.var_sn);
             }
             other => panic!("expected binary serving model, got {}", other.kind_name()),
         }

@@ -14,7 +14,7 @@
 //! by the coordinator or loaded from a JSON snapshot) and the hot loop is
 //! pure rust.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -728,6 +728,27 @@ pub struct ScoreResponse {
     pub per_voter: Option<Vec<VoterVote>>,
 }
 
+impl ScoreResponse {
+    /// The internal-fault sentinel: a worker panicked while evaluating
+    /// this example (contained by `catch_unwind`). Distinguished from
+    /// the plain NaN reject sentinel by the impossible
+    /// `features_evaluated` value, so the front-end can render it as
+    /// the retryable `internal` error instead of `dimension-mismatch`.
+    pub fn internal_fault() -> Self {
+        ScoreResponse {
+            score: f64::NAN,
+            features_evaluated: usize::MAX,
+            classify: None,
+            per_voter: None,
+        }
+    }
+
+    /// Is this the [`Self::internal_fault`] sentinel?
+    pub fn is_internal_fault(&self) -> bool {
+        self.score.is_nan() && self.features_evaluated == usize::MAX
+    }
+}
+
 /// Number of log2-spaced buckets in the features-touched histogram:
 /// bucket 0 counts requests that touched 0 features, bucket `i ≥ 1` counts
 /// requests that touched `[2^(i-1), 2^i)` features; the last bucket
@@ -751,6 +772,7 @@ pub struct ServiceStats {
     features: AtomicU64,
     batches: AtomicU64,
     early_exits: AtomicU64,
+    panics: AtomicU64,
     hist: [AtomicU64; FEATURE_BUCKETS],
 }
 
@@ -761,6 +783,7 @@ impl Default for ServiceStats {
             features: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             early_exits: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -777,6 +800,10 @@ pub struct StatsSnapshot {
     pub batches: u64,
     /// Requests that exited before touching every coordinate.
     pub early_exits: u64,
+    /// Worker evaluations that panicked and were contained
+    /// (`catch_unwind`): each answered the retryable `internal` error
+    /// and does not count in `served`.
+    pub panics: u64,
     /// Features-touched histogram (see [`FEATURE_BUCKETS`]).
     pub hist: [u64; FEATURE_BUCKETS],
 }
@@ -818,6 +845,7 @@ impl StatsSnapshot {
         self.features += other.features;
         self.batches += other.batches;
         self.early_exits += other.early_exits;
+        self.panics += other.panics;
         for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
             *a += *b;
         }
@@ -843,6 +871,7 @@ impl ServiceStats {
             features: self.features.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             early_exits: self.early_exits.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
             hist: std::array::from_fn(|i| self.hist[i].load(Ordering::Relaxed)),
         }
     }
@@ -907,6 +936,13 @@ impl std::fmt::Debug for CompletionNotifier {
 #[derive(Clone)]
 pub struct ServiceHandle {
     tx: SyncSender<Work>,
+    /// Work units currently waiting in the admission queue. Incremented
+    /// *before* a send attempt (and rolled back on rejection) so the
+    /// counter is always ≥ the true occupancy — never underflowing when
+    /// a worker drains the unit before the submitter's bump lands.
+    depth: Arc<AtomicUsize>,
+    /// The queue's capacity bound.
+    capacity: usize,
 }
 
 impl ServiceHandle {
@@ -927,13 +963,20 @@ impl ServiceHandle {
     fn call(&self, features: impl Into<Features>, kind: ReqKind) -> Option<ScoreResponse> {
         let (tx, rx) = sync_channel(1);
         let work = Work::One(ScoreRequest { features: features.into(), kind, respond: tx });
+        self.depth.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(work) {
             Ok(()) => {}
             Err(TrySendError::Full(req)) => {
                 // Block on a full queue (backpressure) rather than dropping.
-                self.tx.send(req).ok()?;
+                if self.tx.send(req).is_err() {
+                    self.depth.fetch_sub(1, Ordering::Relaxed);
+                    return None;
+                }
             }
-            Err(TrySendError::Disconnected(_)) => return None,
+            Err(TrySendError::Disconnected(_)) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                return None;
+            }
         }
         rx.recv().ok()
     }
@@ -960,10 +1003,16 @@ impl ServiceHandle {
     ) -> Result<Receiver<ScoreResponse>, SubmitError> {
         let (tx, rx) = sync_channel(1);
         let work = Work::One(ScoreRequest { features: features.into(), kind, respond: tx });
+        self.depth.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(work) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(match e {
+                    TrySendError::Full(_) => SubmitError::Overloaded,
+                    TrySendError::Disconnected(_) => SubmitError::Closed,
+                })
+            }
         }
     }
 
@@ -978,11 +1027,25 @@ impl ServiceHandle {
         examples: Vec<Features>,
     ) -> Result<Receiver<Vec<ScoreResponse>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
+        self.depth.fetch_add(1, Ordering::Relaxed);
         match self.tx.try_send(Work::Batch(BatchRequest { examples, respond: tx })) {
             Ok(()) => Ok(rx),
-            Err(TrySendError::Full(_)) => Err(SubmitError::Overloaded),
-            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+            Err(e) => {
+                self.depth.fetch_sub(1, Ordering::Relaxed);
+                Err(match e {
+                    TrySendError::Full(_) => SubmitError::Overloaded,
+                    TrySendError::Disconnected(_) => SubmitError::Closed,
+                })
+            }
         }
+    }
+
+    /// Current admission-queue occupancy and its capacity bound, read
+    /// lock-free. The occupancy is a momentary over-approximation (see
+    /// the `depth` field) clamped to capacity; the front-end derives
+    /// the adaptive `SCORE_BATCH` admission cap from it.
+    pub fn queue_load(&self) -> (usize, usize) {
+        (self.depth.load(Ordering::Relaxed).min(self.capacity), self.capacity)
     }
 }
 
@@ -1054,19 +1117,42 @@ impl PredictionService {
         let (tx, rx) = sync_channel::<Work>(self.queue);
         let rx = Arc::new(Mutex::new(rx));
         let stats = Arc::new(ServiceStats::default());
+        let depth = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::new();
         for worker_id in 0..self.workers {
             let rx = rx.clone();
             let model = self.model.clone();
             let stats = stats.clone();
+            let depth = depth.clone();
             let max_batch = self.max_batch;
             let seed = self.seed ^ (worker_id as u64) << 32;
             let notifier = self.notifier.clone();
-            handles.push(std::thread::spawn(move || {
-                worker_loop(rx, model, stats, max_batch, seed, notifier)
+            // Respawn on escaped panics: per-example evaluation is
+            // already contained inside the loop, so this outer loop is
+            // the backstop that keeps a shard from wedging if a panic
+            // slips out anywhere else in the worker body. A normal
+            // channel-closed exit breaks out.
+            handles.push(std::thread::spawn(move || loop {
+                let body = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    worker_loop(
+                        rx.clone(),
+                        model.clone(),
+                        stats.clone(),
+                        depth.clone(),
+                        max_batch,
+                        seed,
+                        notifier.clone(),
+                    )
+                }));
+                match body {
+                    Ok(()) => break,
+                    Err(_) => {
+                        stats.panics.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
             }));
         }
-        (ServiceHandle { tx }, RunningService { stats, handles })
+        (ServiceHandle { tx, depth, capacity: self.queue }, RunningService { stats, handles })
     }
 }
 
@@ -1074,7 +1160,12 @@ impl PredictionService {
 /// rest — dynamic batching without a timer. Returns `false` when every
 /// sender has dropped (worker should exit).
 fn drain_batch(rx: &Mutex<Receiver<Work>>, batch: &mut Vec<Work>, max_batch: usize) -> bool {
-    let guard = rx.lock().unwrap();
+    // Poison-tolerant: a respawned worker must keep draining even if a
+    // sibling panicked while holding the receiver lock.
+    let guard = match rx.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
     match guard.recv() {
         Ok(first) => batch.push(first),
         Err(_) => return false, // all senders dropped
@@ -1092,16 +1183,17 @@ fn worker_loop(
     rx: Arc<Mutex<Receiver<Work>>>,
     model: Arc<ServingModel>,
     stats: Arc<ServiceStats>,
+    depth: Arc<AtomicUsize>,
     max_batch: usize,
     seed: u64,
     notifier: CompletionNotifier,
 ) {
     match &*model {
         ServingModel::Binary(snapshot) => {
-            binary_worker(&rx, snapshot, &stats, max_batch, seed, &notifier)
+            binary_worker(&rx, snapshot, &stats, &depth, max_batch, seed, &notifier)
         }
         ServingModel::Ensemble(ensemble) => {
-            ensemble_worker(&rx, ensemble, &stats, max_batch, seed, &notifier)
+            ensemble_worker(&rx, ensemble, &stats, &depth, max_batch, seed, &notifier)
         }
     }
 }
@@ -1145,10 +1237,42 @@ fn score_one(
     (ScoreResponse { score, features_evaluated: k, classify: None, per_voter: None }, total)
 }
 
+/// [`score_one`] behind `catch_unwind`: a panic mid-evaluation (a
+/// poisoned example, or the `worker-panic` fault point) answers the
+/// internal-fault sentinel instead of unwinding through the worker, and
+/// the evaluation scratch — possibly torn mid-walk — is rebuilt before
+/// the next example. Panicked evaluations count in `stats.panics`, not
+/// `served`.
+fn score_one_contained(
+    model: &ModelSnapshot,
+    orders: &mut OrderGenerator,
+    table: &mut TableCache,
+    features: &Features,
+    stats: &ServiceStats,
+    seed: u64,
+) -> (ScoreResponse, usize) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        crate::server::faultpoint::maybe_panic();
+        score_one(model, &mut *orders, &mut *table, features)
+    }));
+    match outcome {
+        Ok(pair) => pair,
+        Err(_) => {
+            stats.panics.fetch_add(1, Ordering::Relaxed);
+            let dim = model.weights.len();
+            *orders = OrderGenerator::new(model.policy, seed);
+            orders.refresh(&model.weights);
+            *table = TableCache::new(model.boundary.clone(), model.var_sn, dim);
+            (ScoreResponse::internal_fault(), dim)
+        }
+    }
+}
+
 fn binary_worker(
     rx: &Mutex<Receiver<Work>>,
     model: &ModelSnapshot,
     stats: &ServiceStats,
+    depth: &AtomicUsize,
     max_batch: usize,
     seed: u64,
     notifier: &CompletionNotifier,
@@ -1162,6 +1286,7 @@ fn binary_worker(
     let mut table = TableCache::new(model.boundary.clone(), model.var_sn, dim);
     let mut batch: Vec<Work> = Vec::with_capacity(max_batch);
     while drain_batch(rx, &mut batch, max_batch) {
+        depth.fetch_sub(batch.len(), Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         for work in batch.drain(..) {
             match work {
@@ -1174,9 +1299,18 @@ fn binary_worker(
                         if req.kind != ReqKind::Score || req.features.check_dim(dim).is_err() {
                             (reject(), dim)
                         } else {
-                            score_one(model, &mut orders, &mut table, &req.features)
+                            score_one_contained(
+                                model,
+                                &mut orders,
+                                &mut table,
+                                &req.features,
+                                stats,
+                                seed,
+                            )
                         };
-                    stats.record(resp.features_evaluated, total);
+                    if !resp.is_internal_fault() {
+                        stats.record(resp.features_evaluated, total);
+                    }
                     let _ = req.respond.send(resp);
                     notifier.notify();
                 }
@@ -1189,9 +1323,18 @@ fn binary_worker(
                         let (resp, total) = if features.check_dim(dim).is_err() {
                             (reject(), dim)
                         } else {
-                            score_one(model, &mut orders, &mut table, features)
+                            score_one_contained(
+                                model,
+                                &mut orders,
+                                &mut table,
+                                features,
+                                stats,
+                                seed,
+                            )
                         };
-                        stats.record(resp.features_evaluated, total);
+                        if !resp.is_internal_fault() {
+                            stats.record(resp.features_evaluated, total);
+                        }
                         out.push(resp);
                     }
                     let _ = b.respond.send(out);
@@ -1206,6 +1349,7 @@ fn ensemble_worker(
     rx: &Mutex<Receiver<Work>>,
     ensemble: &EnsembleSnapshot,
     stats: &ServiceStats,
+    depth: &AtomicUsize,
     max_batch: usize,
     seed: u64,
     notifier: &CompletionNotifier,
@@ -1215,6 +1359,7 @@ fn ensemble_worker(
     let dim = ensemble.dim();
     let voters = ensemble.voter_count();
     while drain_batch(rx, &mut batch, max_batch) {
+        depth.fetch_sub(batch.len(), Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         for work in batch.drain(..) {
             match work {
@@ -1229,9 +1374,24 @@ fn ensemble_worker(
                     } else {
                         let total = req.features.nnz() * voters;
                         let verbose = req.kind == ReqKind::ClassifyVerbose;
-                        (ensemble.classify_with(&req.features, &mut scratch, verbose), total)
+                        let outcome =
+                            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                                crate::server::faultpoint::maybe_panic();
+                                ensemble.classify_with(&req.features, &mut scratch, verbose)
+                            }));
+                        match outcome {
+                            Ok(resp) => (resp, total),
+                            Err(_) => {
+                                stats.panics.fetch_add(1, Ordering::Relaxed);
+                                // Scratch may be torn mid-vote: rebuild.
+                                scratch = ensemble.make_scratch(seed);
+                                (ScoreResponse::internal_fault(), total)
+                            }
+                        }
                     };
-                    stats.record(resp.features_evaluated, total);
+                    if !resp.is_internal_fault() {
+                        stats.record(resp.features_evaluated, total);
+                    }
                     let _ = req.respond.send(resp);
                     notifier.notify();
                 }

@@ -65,6 +65,8 @@ COMMANDS:
                [--max-conns N] [--learn] [--learn-queue N]
                [--learn-publish-updates K] [--learn-publish-ms T]
                [--learn-lambda L] [--learn-seed S]
+               [--snapshot-dir DIR] [--write-timeout-ms T]
+               [--idle-timeout-ms T]
                with --listen: TCP server (v1 JSON lines; a hello op with
                proto 2..6 upgrades a connection to binary frames —
                docs/PROTOCOL.md). --model name=path (repeatable) serves a
@@ -84,6 +86,13 @@ COMMANDS:
                the learn op streams labeled examples into a per-shard
                background Attentive Pegasos that republishes the serving
                snapshot every K updates and/or T ms.
+               --snapshot-dir DIR makes training crash-safe: every
+               published generation is persisted atomically under
+               DIR/<shard>/ and a restarted server recovers each shard
+               from its newest valid snapshot (torn files are skipped).
+               --write-timeout-ms bounds slow-reader writes (default
+               2000, 0 = never); --idle-timeout-ms reaps connections
+               with no traffic and no pending work (default 0 = never).
                otherwise: in-process synthetic benchmark
   bench-serve  [--addr ADDR]
                [--mode v1-dense|v2-sparse-json|v2-binary|batch|classify|learn|mixed]
@@ -92,6 +101,7 @@ COMMANDS:
                [--queue Q] [--batch-examples N]
                [--io-backend threads|event-loop]
                [--event-threads T] [--open-loop] [--churn N]
+               [--retries N]
                [--json BENCH_serve.json] [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
                three wire modes, a batched SCORE_BATCH pass
@@ -106,6 +116,10 @@ COMMANDS:
                scaling check) instead of pipelining; --churn N runs N
                add-model → score → remove-model cycles on throwaway
                shards alongside each pass (registry churn under load);
+               --retries N arms per-connection fault recovery: a driver
+               whose socket dies reconnects and re-sends its unanswered
+               window, up to N consecutive times before giving up
+               (progress refreshes the budget; default 0 = fail fast);
                --json writes the machine-readable report, --floors gates
                on committed throughput floors (exit 1 on regression)
   init-config  [out.json]
@@ -427,6 +441,14 @@ fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
         args.get_parse("event-threads", cfg.event_threads).map_err(|e| anyhow::anyhow!(e))?;
     cfg.max_conns =
         args.get_parse("max-conns", cfg.max_conns).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.write_timeout_ms = args
+        .get_parse("write-timeout-ms", cfg.write_timeout_ms)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    cfg.idle_timeout_ms =
+        args.get_parse("idle-timeout-ms", cfg.idle_timeout_ms).map_err(|e| anyhow::anyhow!(e))?;
+    if let Some(dir) = args.opt("snapshot-dir") {
+        cfg.snapshot_dir = Some(std::path::PathBuf::from(dir));
+    }
     // `--learn` attaches an online trainer to every binary shard (the
     // `learn` op); the `--learn-*` knobs also tune a trainer block that
     // came in via `--server-config`.
@@ -524,6 +546,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             println!(
                 "online learning on: the learn op (JSON, or LEARN_SPARSE frames under \
                  protocol v4) streams labeled examples into each binary shard's trainer"
+            );
+        }
+        if let Some(dir) = &cfg.snapshot_dir {
+            println!(
+                "snapshot persistence on: published generations land in {}/<shard>/ and \
+                 the newest valid one is recovered on restart",
+                dir.display()
             );
         }
         server.wait();
@@ -647,6 +676,33 @@ fn check_bench_floors(report: &Json, floors: &Json) -> Vec<String> {
     violations
 }
 
+/// One bench control-channel op (stats, the reload to full evaluation)
+/// with a fresh connection per attempt. The control channel shares the
+/// server with the load passes, so under `ATTENTIVE_FAULT` injection
+/// with `--retries` armed it must ride out a torn write exactly like
+/// the drivers do; with `retries` 0 this is a single plain attempt.
+fn control_retry<T>(
+    addr: &str,
+    retries: u32,
+    what: &str,
+    op: impl Fn(&mut Client) -> attentive::error::Result<T>,
+) -> anyhow::Result<T> {
+    let mut last = String::new();
+    for attempt in 0..=retries {
+        if attempt > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(20 << attempt.min(5)));
+        }
+        match Client::connect(addr) {
+            Ok(mut client) => match op(&mut client) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = e.to_string(),
+            },
+            Err(e) => last = e.to_string(),
+        }
+    }
+    bail!("bench control op {what} failed after {retries} retries: {last}")
+}
+
 fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let requests = args.get_parse("requests", 4_000usize).map_err(|e| anyhow::anyhow!(e))?;
     let connections = args.get_parse("connections", 4usize).map_err(|e| anyhow::anyhow!(e))?;
@@ -658,6 +714,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
 
     let open_loop = args.has("open-loop");
     let churn = args.get_parse("churn", 0usize).map_err(|e| anyhow::anyhow!(e))?;
+    let retries = args.get_parse("retries", 0u32).map_err(|e| anyhow::anyhow!(e))?;
     let loadcfg = |addr: String, mode: ClientMode| LoadGenConfig {
         addr,
         connections,
@@ -670,6 +727,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         seed: 1, // same seed every pass -> identical traffic
         open_loop,
         churn_cycles: churn,
+        retries,
         ..Default::default()
     };
     let mut table = Table::new(&[
@@ -699,9 +757,12 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
 
     // Open-loop runs exist to prove the many-mostly-idle-connections
     // claim; a single shed (or transport error) falsifies it, so fail
-    // the command rather than quietly writing a report.
-    let check_open_loop = |name: &str,
-                           r: &attentive::server::loadgen::LoadReport|
+    // the command rather than quietly writing a report. Likewise with
+    // --retries armed: fault recovery promises every request an intact
+    // answer, so a residual error after the retry budget is a real
+    // failure — this is what the ATTENTIVE_FAULT CI smoke gates on.
+    let check_pass = |name: &str,
+                      r: &attentive::server::loadgen::LoadReport|
      -> anyhow::Result<()> {
         if open_loop && (r.overloaded > 0 || r.errors > 0) {
             bail!(
@@ -710,6 +771,16 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 r.overloaded,
                 r.errors,
                 connections
+            );
+        }
+        if retries > 0 && r.errors > 0 {
+            bail!(
+                "pass {name}: {} error(s) survived a {}-retry budget \
+                 ({} re-sent, {} reconnect(s))",
+                r.errors,
+                retries,
+                r.retries,
+                r.reconnects
             );
         }
         Ok(())
@@ -734,7 +805,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         let mut cfg = loadcfg(addr.to_string(), mode);
         cfg.model = args.opt("model").map(str::to_string);
         let report = loadgen::run(&cfg)?;
-        check_open_loop(mode.name(), &report)?;
+        check_pass(mode.name(), &report)?;
         row(&mut table, mode.name(), &report);
         println!("{}", table.render());
         if report.total_voters > 0 {
@@ -796,13 +867,11 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 cfg.digits = vec![1, 2, 3];
             }
             let report = loadgen::run(&cfg)?;
-            check_open_loop(mode.name(), &report)?;
+            check_pass(mode.name(), &report)?;
             row(&mut table, mode.name(), &report);
             passes.push((mode.name().to_string(), report));
             println!("{}", table.render());
-            let mut control = Client::connect(&addr)?;
-            let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
-            drop(control);
+            let stats = control_retry(&addr, retries, "stats", |c| c.stats())?;
             server.shutdown();
             println!(
                 "server totals: {} served, {} conns, {} shed — zero sheds required",
@@ -817,6 +886,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
 
             for mode in ClientMode::ALL {
                 let report = loadgen::run(&loadcfg(addr.clone(), mode))?;
+                check_pass(mode.name(), &report)?;
                 row(&mut table, mode.name(), &report);
                 passes.push((mode.name().to_string(), report));
             }
@@ -828,6 +898,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             // divides by the v2-binary row's to give the batching
             // speedup directly.
             let batch_report = loadgen::run(&loadcfg(addr.clone(), ClientMode::Batch))?;
+            check_pass("batch", &batch_report)?;
             row(&mut table, "batch", &batch_report);
             passes.push(("batch".to_string(), batch_report));
 
@@ -838,6 +909,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 digits: vec![1, 2, 3],
                 ..loadcfg(addr.clone(), ClientMode::Classify)
             })?;
+            check_pass("classify", &classify_report)?;
             row(&mut table, "classify", &classify_report);
             passes.push(("classify".to_string(), classify_report));
 
@@ -848,23 +920,24 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
                 model: Some("learn".to_string()),
                 ..loadcfg(addr.clone(), ClientMode::Learn)
             })?;
+            check_pass("learn", &learn_report)?;
             row(&mut table, "learn", &learn_report);
             passes.push(("learn".to_string(), learn_report));
             let mixed_report = loadgen::run(&LoadGenConfig {
                 model: Some("learn".to_string()),
                 ..loadcfg(addr.clone(), ClientMode::Mixed)
             })?;
+            check_pass("mixed", &mixed_report)?;
             row(&mut table, "mixed", &mixed_report);
             passes.push(("mixed".to_string(), mixed_report));
 
-            let mut control = Client::connect(&addr)?;
-            control.reload(&full_snapshot).map_err(|e| anyhow::anyhow!("reload: {e}"))?;
-            let full_report = loadgen::run(&loadcfg(addr, ClientMode::V1Dense))?;
+            control_retry(&addr, retries, "reload", |c| c.reload(&full_snapshot))?;
+            let full_report = loadgen::run(&loadcfg(addr.clone(), ClientMode::V1Dense))?;
+            check_pass("full(v1-dense)", &full_report)?;
             row(&mut table, "full(v1-dense)", &full_report);
 
             println!("{}", table.render());
-            let stats = control.stats().map_err(|e| anyhow::anyhow!("stats: {e}"))?;
-            drop(control);
+            let stats = control_retry(&addr, retries, "stats", |c| c.stats())?;
             server.shutdown();
             println!(
                 "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
@@ -923,6 +996,16 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             }
             passes.push(("full-v1-dense".to_string(), full_report));
         }
+    }
+
+    let recovered = passes
+        .iter()
+        .fold((0u64, 0u64), |acc, (_, r)| (acc.0 + r.retries, acc.1 + r.reconnects));
+    if recovered.0 > 0 || recovered.1 > 0 {
+        println!(
+            "fault recovery: {} request(s) re-sent over {} reconnect(s)",
+            recovered.0, recovered.1
+        );
     }
 
     let mut report_json = loadgen::report_to_json(requests, &passes);

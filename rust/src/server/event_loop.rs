@@ -82,9 +82,11 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::coordinator::service::ScoreResponse;
 use crate::error::{Error, Result};
+use crate::server::faultpoint;
 use crate::server::tcp::{
     frame_step, json_step, render_batch_into, render_score_into, BatchSlot, Job, Shared, Step,
     Wire, WireClass,
@@ -261,6 +263,9 @@ struct Conn {
     interest: u32,
     /// Membership flag for the shard's active (has-slots) list.
     active: bool,
+    /// Last time bytes arrived from the peer; the idle sweep reaps
+    /// connections past `idle_timeout_ms` (slowloris defense).
+    last_activity: Instant,
 }
 
 impl Conn {
@@ -279,6 +284,7 @@ impl Conn {
             closing: false,
             interest: sys::EPOLLIN | sys::EPOLLRDHUP,
             active: false,
+            last_activity: Instant::now(),
         }
     }
 
@@ -407,6 +413,7 @@ fn run_loop(shard: &LoopShard, shared: &Shared) {
     // Shared socket-read scratch: zero-initialized once, then only the
     // received bytes are ever copied out of it.
     let mut scratch = vec![0u8; READ_CHUNK];
+    let mut last_sweep = Instant::now();
     loop {
         adopt(shard, shared, &mut conns);
         if shared.shutting_down.load(Ordering::SeqCst) {
@@ -460,6 +467,27 @@ fn run_loop(shard: &LoopShard, shared: &Shared) {
                 !service(conn, shard, shared, fd)
             };
             finish_or_requeue(&mut conns, &mut active, fd, dead, shared);
+        }
+        // Idle sweep (~1 s granularity): reap connections silent past
+        // the deadline. Only truly quiescent ones — a connection still
+        // owed a response, or with unflushed output, is never reaped,
+        // so a deadline can't eat an admitted request's answer.
+        if shared.idle_timeout_ms > 0 && last_sweep.elapsed().as_secs() >= 1 {
+            last_sweep = Instant::now();
+            let idle: Vec<i32> = conns
+                .iter()
+                .filter(|(_, c)| {
+                    c.slots.is_empty()
+                        && c.wbuf_pending() == 0
+                        && c.last_activity.elapsed().as_millis() as u64 > shared.idle_timeout_ms
+                })
+                .map(|(&fd, _)| fd)
+                .collect();
+            for fd in idle {
+                if let Some(conn) = conns.remove(&fd) {
+                    close_conn(conn, shared);
+                }
+            }
         }
     }
     // Shutdown: every admitted request is still answered — the worker
@@ -556,7 +584,10 @@ fn read_some(conn: &mut Conn, shared: &Shared, scratch: &mut [u8]) -> ReadOutcom
         }
         match conn.stream.read(scratch) {
             Ok(0) => return ReadOutcome::Eof,
-            Ok(n) => conn.rbuf.extend_from_slice(&scratch[..n]),
+            Ok(n) => {
+                conn.last_activity = Instant::now();
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+            }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 return ReadOutcome::Progress;
             }
@@ -854,6 +885,18 @@ fn compact_rbuf(conn: &mut Conn) {
 
 /// Nonblocking drain of the write ring. Returns `false` on a dead peer.
 fn flush(conn: &mut Conn) -> bool {
+    if conn.wstart < conn.wbuf.len() {
+        faultpoint::maybe_delay();
+        if faultpoint::fires(faultpoint::Point::TornWrite) {
+            // Crash the connection mid-response: emit a prefix of the
+            // pending bytes, then report the peer dead so the caller
+            // tears the connection down — the client must spot the
+            // truncated frame and reconnect.
+            let pending = &conn.wbuf[conn.wstart..];
+            let _ = conn.stream.write(&pending[..pending.len() / 2]);
+            return false;
+        }
+    }
     while conn.wstart < conn.wbuf.len() {
         match conn.stream.write(&conn.wbuf[conn.wstart..]) {
             Ok(0) => return false,
@@ -925,7 +968,11 @@ fn drain_and_close(mut conn: Conn, shared: &Shared) {
     // with the connection. (The threads backend gets the same property
     // from teardown_connections' socket shutdown.)
     let _ = conn.stream.set_nonblocking(false);
-    let _ = conn.stream.set_write_timeout(Some(std::time::Duration::from_secs(2)));
+    if shared.write_timeout_ms > 0 {
+        let _ = conn
+            .stream
+            .set_write_timeout(Some(std::time::Duration::from_millis(shared.write_timeout_ms)));
+    }
     let _ = conn.stream.write_all(&conn.wbuf[conn.wstart..]);
     close_conn(conn, shared);
 }

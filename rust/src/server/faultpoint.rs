@@ -1,0 +1,262 @@
+//! Fault-injection points for chaos testing the serving stack.
+//!
+//! A fault point is a named place in the server where a test (or an
+//! operator reproducing an incident) can force a failure: a torn
+//! response write, a delayed flush, a worker panic mid-evaluation, or a
+//! snapshot file left truncated as if the process died mid-write. The
+//! points are **zero-cost when off**: every check is a single relaxed
+//! atomic load of a global mask that is zero unless a test (or the
+//! `ATTENTIVE_FAULT` environment variable at `serve` startup) armed
+//! something — no branches into parsing, no allocation, nothing on the
+//! steady-state hot path beyond the one load.
+//!
+//! Spec grammar (env var or [`configure`] argument):
+//!
+//! ```text
+//! ATTENTIVE_FAULT=point:n[:arg][,point:n[:arg]...]
+//! ```
+//!
+//! where `point` is one of `torn-write`, `delay`, `worker-panic`,
+//! `snapshot-fail`; `n` means "fire on every n-th traversal" (n = 1
+//! fires always, n = 0 disarms); and `arg` is the point-specific
+//! parameter (`delay` only: milliseconds to sleep). Firing is
+//! deterministic — a per-point traversal counter, not a coin flip — so
+//! chaos runs reproduce.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+/// A named fault-injection site. The discriminant doubles as the bit
+/// position in the armed mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Point {
+    /// Write only a prefix of a response flush, then drop the
+    /// connection — the client sees a torn frame and must reconnect.
+    TornWrite = 0,
+    /// Sleep before flushing a response (the `arg` is milliseconds) —
+    /// exercises client deadlines without touching the server's answer.
+    Delay = 1,
+    /// Panic inside worker evaluation — exercises `catch_unwind`
+    /// containment and the structured retryable `internal` error.
+    WorkerPanic = 2,
+    /// Leave the snapshot file truncated mid-payload instead of
+    /// completing the atomic write — exercises startup recovery's
+    /// checksum screen.
+    SnapshotFail = 3,
+}
+
+const POINTS: usize = 4;
+
+/// Bit `i` set = point with discriminant `i` is armed. The single load
+/// every traversal pays when everything is off.
+static ARMED: AtomicU32 = AtomicU32::new(0);
+/// Fire on every `period`-th traversal (0 = disarmed).
+static PERIOD: [AtomicU64; POINTS] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+/// Traversals since arming, per point.
+static HITS: [AtomicU64; POINTS] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+/// Point-specific argument (`delay`: milliseconds).
+static ARG: [AtomicU64; POINTS] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+/// Times each point actually fired (observable by tests).
+static FIRED: [AtomicU64; POINTS] =
+    [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)];
+
+impl Point {
+    fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "torn-write" => Ok(Point::TornWrite),
+            "delay" => Ok(Point::Delay),
+            "worker-panic" => Ok(Point::WorkerPanic),
+            "snapshot-fail" => Ok(Point::SnapshotFail),
+            other => Err(format!(
+                "unknown fault point {other:?} (torn-write | delay | worker-panic | snapshot-fail)"
+            )),
+        }
+    }
+}
+
+/// Should this traversal of `point` inject its fault? One relaxed load
+/// when nothing is armed; deterministic every-n-th firing when armed.
+#[inline]
+pub fn fires(point: Point) -> bool {
+    if ARMED.load(Ordering::Relaxed) == 0 {
+        return false;
+    }
+    fires_armed(point)
+}
+
+#[cold]
+fn fires_armed(point: Point) -> bool {
+    let i = point as usize;
+    let period = PERIOD[i].load(Ordering::Relaxed);
+    if period == 0 {
+        return false;
+    }
+    let hit = HITS[i].fetch_add(1, Ordering::Relaxed) + 1;
+    let firing = hit % period == 0;
+    if firing {
+        FIRED[i].fetch_add(1, Ordering::Relaxed);
+    }
+    firing
+}
+
+/// The armed argument for `point` (`delay`: milliseconds). 0 when unset.
+pub fn arg(point: Point) -> u64 {
+    ARG[point as usize].load(Ordering::Relaxed)
+}
+
+/// Times `point` has actually fired since the last [`configure`].
+pub fn fired(point: Point) -> u64 {
+    FIRED[point as usize].load(Ordering::Relaxed)
+}
+
+/// If the `delay` point fires, sleep its configured milliseconds.
+/// Call sites use this instead of pairing [`fires`] with a manual
+/// sleep so the delay semantics stay in one place.
+#[inline]
+pub fn maybe_delay() {
+    if fires(Point::Delay) {
+        std::thread::sleep(std::time::Duration::from_millis(arg(Point::Delay).min(60_000)));
+    }
+}
+
+/// If the `worker-panic` point fires, panic (contained by the worker's
+/// `catch_unwind`).
+#[inline]
+pub fn maybe_panic() {
+    if fires(Point::WorkerPanic) {
+        panic!("injected fault: worker-panic");
+    }
+}
+
+/// Disarm every point and zero the counters.
+pub fn reset() {
+    ARMED.store(0, Ordering::Relaxed);
+    for i in 0..POINTS {
+        PERIOD[i].store(0, Ordering::Relaxed);
+        HITS[i].store(0, Ordering::Relaxed);
+        ARG[i].store(0, Ordering::Relaxed);
+        FIRED[i].store(0, Ordering::Relaxed);
+    }
+}
+
+/// Arm fault points from a spec string (see the module docs for the
+/// grammar). An empty spec disarms everything. Errors leave the
+/// previous arming untouched.
+pub fn configure(spec: &str) -> Result<(), String> {
+    let spec = spec.trim();
+    let mut arming: Vec<(Point, u64, u64)> = Vec::new();
+    if !spec.is_empty() {
+        for part in spec.split(',') {
+            let mut it = part.trim().split(':');
+            let name = it.next().unwrap_or("");
+            let point = Point::from_name(name)?;
+            let period: u64 = it
+                .next()
+                .ok_or_else(|| format!("fault point {name}: missing period (point:n[:arg])"))?
+                .parse()
+                .map_err(|_| format!("fault point {name}: period must be an integer"))?;
+            let arg: u64 = match it.next() {
+                Some(a) => a
+                    .parse()
+                    .map_err(|_| format!("fault point {name}: arg must be an integer"))?,
+                None => 0,
+            };
+            if it.next().is_some() {
+                return Err(format!("fault point {name}: too many fields (point:n[:arg])"));
+            }
+            arming.push((point, period, arg));
+        }
+    }
+    reset();
+    let mut mask = 0u32;
+    for (point, period, arg) in arming {
+        let i = point as usize;
+        PERIOD[i].store(period, Ordering::Relaxed);
+        ARG[i].store(arg, Ordering::Relaxed);
+        if period != 0 {
+            mask |= 1 << i;
+        }
+    }
+    ARMED.store(mask, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Arm from `ATTENTIVE_FAULT` if set (called once at `serve` startup).
+/// Returns the armed spec for the startup banner, `None` when unset.
+///
+/// # Panics
+///
+/// On an unparseable spec: the variable exists to force faults in a
+/// chaos run, and a typo silently running a healthy server would make
+/// that run vacuous.
+pub fn init_from_env() -> Option<String> {
+    match std::env::var("ATTENTIVE_FAULT") {
+        Ok(spec) => {
+            configure(&spec).unwrap_or_else(|e| panic!("ATTENTIVE_FAULT: {e}"));
+            Some(spec)
+        }
+        Err(_) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The arming state is process-global; tests serialize on this.
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn off_by_default_and_after_reset() {
+        let _g = LOCK.lock().unwrap();
+        reset();
+        assert!(!fires(Point::TornWrite));
+        assert!(!fires(Point::WorkerPanic));
+        assert_eq!(fired(Point::TornWrite), 0);
+    }
+
+    #[test]
+    fn every_nth_firing_is_deterministic() {
+        let _g = LOCK.lock().unwrap();
+        configure("torn-write:3").unwrap();
+        let pattern: Vec<bool> = (0..9).map(|_| fires(Point::TornWrite)).collect();
+        assert_eq!(
+            pattern,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        assert_eq!(fired(Point::TornWrite), 3);
+        // Unarmed points in the same config stay silent.
+        assert!(!fires(Point::WorkerPanic));
+        reset();
+    }
+
+    #[test]
+    fn spec_parses_args_and_rejects_garbage() {
+        let _g = LOCK.lock().unwrap();
+        configure("delay:1:250,worker-panic:5").unwrap();
+        assert_eq!(arg(Point::Delay), 250);
+        assert!(fires(Point::Delay));
+        assert!(configure("coin-flip:1").is_err());
+        assert!(configure("delay").is_err());
+        assert!(configure("delay:x").is_err());
+        assert!(configure("delay:1:2:3").is_err());
+        // A failed configure leaves the previous arming in place.
+        assert_eq!(arg(Point::Delay), 250);
+        // Empty spec disarms.
+        configure("").unwrap();
+        assert!(!fires(Point::Delay));
+    }
+
+    #[test]
+    fn period_zero_disarms_a_point() {
+        let _g = LOCK.lock().unwrap();
+        configure("torn-write:0,delay:2").unwrap();
+        assert!(!fires(Point::TornWrite));
+        assert!(!fires(Point::Delay));
+        assert!(fires(Point::Delay));
+        reset();
+    }
+}

@@ -144,6 +144,10 @@ pub enum ErrorCode {
     /// A `remove-model` named the default shard (id 0), which anchors
     /// legacy unrouted traffic and cannot be retired.
     DefaultModel = 12,
+    /// The server failed internally while evaluating this request
+    /// (worker panic, contained by `catch_unwind`). The request itself
+    /// was well-formed and the worker has been respawned — retry.
+    Internal = 13,
 }
 
 impl ErrorCode {
@@ -162,6 +166,7 @@ impl ErrorCode {
             10 => Some(ErrorCode::ModelExists),
             11 => Some(ErrorCode::ModelBusy),
             12 => Some(ErrorCode::DefaultModel),
+            13 => Some(ErrorCode::Internal),
             _ => None,
         }
     }
@@ -174,6 +179,7 @@ impl ErrorCode {
                 | ErrorCode::Unavailable
                 | ErrorCode::StaleGeneration
                 | ErrorCode::ModelBusy
+                | ErrorCode::Internal
         )
     }
 
@@ -192,6 +198,7 @@ impl ErrorCode {
             ErrorCode::ModelExists => "model-exists",
             ErrorCode::ModelBusy => "model-busy",
             ErrorCode::DefaultModel => "default-model",
+            ErrorCode::Internal => "internal",
         }
     }
 }
@@ -1725,6 +1732,7 @@ mod tests {
             ErrorCode::ModelExists,
             ErrorCode::ModelBusy,
             ErrorCode::DefaultModel,
+            ErrorCode::Internal,
         ] {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
             assert!(!code.name().is_empty());
@@ -1743,6 +1751,7 @@ mod tests {
         assert!(!ErrorCode::ModelExists.retryable());
         assert!(ErrorCode::ModelBusy.retryable(), "retry once the old name retires");
         assert!(!ErrorCode::DefaultModel.retryable());
+        assert!(ErrorCode::Internal.retryable(), "a respawned worker can answer the retry");
     }
 
     #[test]

@@ -381,6 +381,18 @@ impl ModelHub {
         Arc::clone(&self.inner.lock().unwrap().model)
     }
 
+    /// Admission-queue occupancy and capacity of the live generation
+    /// (see [`ServiceHandle::queue_load`]); `(0, capacity)` after
+    /// shutdown. The front-end derives the adaptive `SCORE_BATCH`
+    /// admission cap from this.
+    pub fn queue_load(&self) -> (usize, usize) {
+        let st = self.inner.lock().unwrap();
+        match &st.handle {
+            Some(h) => h.queue_load(),
+            None => (0, self.queue),
+        }
+    }
+
     /// Aggregate statistics across every generation, live and retired.
     pub fn stats(&self) -> StatsSnapshot {
         let st = self.inner.lock().unwrap();

@@ -8,6 +8,10 @@
 //!   v1 JSON-lines mode; [`Client::negotiate`] upgrades it to the
 //!   binary framing at the highest version the server grants (v6 down
 //!   to v2) with transparent fallback on old servers.
+//!   [`Client::call_retry`] adds the resilient shape: jittered
+//!   exponential backoff on `retryable` server errors, and
+//!   reconnect-plus-renegotiate when the transport dies under a
+//!   request.
 //! * [`run`] — the load generator proper: `connections` client threads
 //!   drive the server over loopback (or any address) with a configurable
 //!   pipelining window, an easy/hard traffic mix — clean synthetic
@@ -23,7 +27,10 @@
 //!   shape: a few worker threads hold `connections` sockets open
 //!   (thousands, mostly idle at any instant) and sweep one
 //!   request-response at a time across them — the scaling check for
-//!   the event-loop transport backend.
+//!   the event-loop transport backend. `LoadGenConfig.retries` arms
+//!   the closed-loop drivers' fault recovery: a connection that dies
+//!   mid-run is reopened (re-handshaking) and its unanswered window
+//!   re-sent, tallied under `LoadReport.retries` / `reconnects`.
 //!
 //! The request hot path is allocation-free at steady state: digits
 //! render into reusable buffers ([`SynthDigits::render_into`]),
@@ -71,11 +78,53 @@ impl<R: Read> Read for CountingReader<R> {
     }
 }
 
+/// Retry shape for [`Client::call_retry`]: exponential backoff from
+/// `base_backoff_ms` doubling per attempt, capped at `max_backoff_ms`,
+/// with jitter drawn uniformly from the upper half of the window so
+/// simultaneous retriers decorrelate instead of stampeding.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Re-send attempts after the first try (0 = fail fast).
+    pub max_retries: u32,
+    /// Backoff before the first retry, in milliseconds.
+    pub base_backoff_ms: u64,
+    /// Backoff ceiling, in milliseconds.
+    pub max_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 3, base_backoff_ms: 10, max_backoff_ms: 1_000 }
+    }
+}
+
+/// Jittered exponential backoff for retry `attempt` (1-based): double
+/// the base per attempt, cap, then draw from the upper half of the
+/// window.
+fn retry_backoff(rng: &mut Rng64, policy: &RetryPolicy, attempt: u32) -> std::time::Duration {
+    let exp = policy.base_backoff_ms.saturating_mul(1u64 << (attempt.saturating_sub(1)).min(16));
+    let cap = exp.min(policy.max_backoff_ms).max(1);
+    let ms = cap / 2 + rng.next_u64() % (cap / 2 + 1);
+    std::time::Duration::from_millis(ms)
+}
+
 /// A synchronous client connection (v1 JSON lines until negotiated up).
 pub struct Client {
+    addr: String,
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     proto: u32,
+    /// Whether [`Self::negotiate`] ran on this connection — replayed by
+    /// [`Self::reconnect`] so a re-opened stream comes back at the same
+    /// protocol level the caller negotiated.
+    negotiated: bool,
+    /// Requests re-sent by [`Self::call_retry`].
+    retries: u64,
+    /// Fresh connections opened after a transport fault.
+    reconnects: u64,
+    /// Backoff jitter source (seeded from the address, not the clock,
+    /// so runs stay reproducible).
+    rng: Rng64,
 }
 
 impl Client {
@@ -83,12 +132,97 @@ impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).map_err(|e| Error::io(addr, e))?;
         let read_half = stream.try_clone().map_err(|e| Error::io(addr, e))?;
-        Ok(Client { reader: BufReader::new(read_half), writer: BufWriter::new(stream), proto: 1 })
+        let seed = addr
+            .bytes()
+            .fold(0xcbf2_9ce4_8422_2325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100_0000_01b3));
+        Ok(Client {
+            addr: addr.to_string(),
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+            proto: 1,
+            negotiated: false,
+            retries: 0,
+            reconnects: 0,
+            rng: Rng64::seed_from_u64(seed),
+        })
     }
 
     /// The protocol version this connection currently speaks.
     pub fn proto(&self) -> u32 {
         self.proto
+    }
+
+    /// Requests [`Self::call_retry`] has re-sent on this client.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// Connections [`Self::reconnect`] has re-opened on this client.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Tear down the (presumed dead) connection and open a fresh one to
+    /// the same address, replaying the protocol negotiation if this
+    /// client had negotiated binary framing. Any in-flight request on
+    /// the old connection is abandoned — callers re-send.
+    pub fn reconnect(&mut self) -> Result<()> {
+        let fresh = Client::connect(&self.addr)?;
+        self.reader = fresh.reader;
+        self.writer = fresh.writer;
+        self.proto = 1;
+        self.reconnects += 1;
+        if self.negotiated {
+            self.negotiate()?;
+        }
+        Ok(())
+    }
+
+    /// Send one request with retries: a transport fault (reset,
+    /// truncated frame, server restart) reconnects — re-running the
+    /// handshake — and re-sends; a server error marked `retryable`
+    /// (shed, internal panic, model-busy) backs off and re-sends on the
+    /// same connection. Backoff is exponential with jitter (see
+    /// [`RetryPolicy`]). Returns the final response (possibly still a
+    /// retryable error) once the budget is spent, or the final
+    /// transport error if a reconnect fails.
+    ///
+    /// Scoring and control ops are idempotent and safe here. A `learn`
+    /// whose ack is lost to a transport fault may already be applied —
+    /// re-sending double-counts the example, which online training
+    /// tolerates but exactly-once accounting does not.
+    pub fn call_retry(&mut self, req: &Request, policy: &RetryPolicy) -> Result<Response> {
+        let mut attempt = 0u32;
+        loop {
+            match self.call(req) {
+                Ok(Response::Error { retryable: true, .. }) if attempt < policy.max_retries => {
+                    attempt += 1;
+                    self.retries += 1;
+                    let pause = retry_backoff(&mut self.rng, policy, attempt);
+                    std::thread::sleep(pause);
+                }
+                Ok(resp) => return Ok(resp),
+                Err(_) if attempt < policy.max_retries => {
+                    attempt += 1;
+                    self.retries += 1;
+                    let pause = retry_backoff(&mut self.rng, policy, attempt);
+                    std::thread::sleep(pause);
+                    // A reconnect that itself fails (e.g. the fault tore
+                    // the fresh handshake too) spends budget and tries
+                    // again rather than giving up mid-policy.
+                    while let Err(e) = self.reconnect() {
+                        if attempt >= policy.max_retries {
+                            return Err(e);
+                        }
+                        attempt += 1;
+                        self.retries += 1;
+                        let pause = retry_backoff(&mut self.rng, policy, attempt);
+                        std::thread::sleep(pause);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Negotiate binary framing, asking for the highest version this
@@ -103,6 +237,7 @@ impl Client {
         if self.proto >= PROTO_V2 {
             return Ok(self.proto);
         }
+        self.negotiated = true;
         let line = Request::Hello { proto: PROTO_V6 }.to_line();
         self.writer
             .write_all(line.as_bytes())
@@ -614,6 +749,17 @@ pub struct LoadGenConfig {
     /// fire. 0 (the default) disables churn. Needs a protocol v5
     /// server.
     pub churn_cycles: usize,
+    /// Transport-fault retry budget per driver connection: when a
+    /// socket dies mid-run (reset, truncated frame, server restart) the
+    /// closed-loop drivers reconnect, re-run the handshake, and re-send
+    /// the unanswered pipeline window, up to this many *consecutive*
+    /// times — any successfully read response refreshes the budget, so
+    /// a long run rides out periodic faults while a hard-down server
+    /// still fails after this many attempts. 0 (the default) keeps the
+    /// fail-fast shape the benchmarks measure. Retryable *responses*
+    /// (shed, internal) are tallied, never re-sent — the load generator
+    /// measures shedding rather than hiding it.
+    pub retries: u32,
 }
 
 impl Default for LoadGenConfig {
@@ -632,6 +778,7 @@ impl Default for LoadGenConfig {
             seed: 0,
             open_loop: false,
             churn_cycles: 0,
+            retries: 0,
         }
     }
 }
@@ -666,6 +813,11 @@ pub struct LoadReport {
     /// Completed add→score→remove churn cycles (see
     /// `LoadGenConfig::churn_cycles`).
     pub churned: u64,
+    /// Requests re-sent after a transport fault ate their response (see
+    /// `LoadGenConfig::retries`); counted on the same scale as `sent`.
+    pub retries: u64,
+    /// Fresh connections opened mid-run to replace dead ones.
+    pub reconnects: u64,
 }
 
 impl LoadReport {
@@ -723,6 +875,8 @@ impl LoadReport {
         self.features.extend_from_slice(&other.features);
         self.total_voters += other.total_voters;
         self.churned += other.churned;
+        self.retries += other.retries;
+        self.reconnects += other.reconnects;
     }
 }
 
@@ -763,6 +917,11 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
         if r.churned > 0 {
             // Churn pass: add→score→remove cycles completed mid-load.
             fields.push(("churn_cycles", Json::Num(r.churned as f64)));
+        }
+        if r.retries > 0 || r.reconnects > 0 {
+            // Fault-recovery pass: transport retries the drivers absorbed.
+            fields.push(("retries", Json::Num(r.retries as f64)));
+            fields.push(("reconnects", Json::Num(r.reconnects as f64)));
         }
         modes.push((name.clone(), Json::obj(fields)))
     }
@@ -1437,6 +1596,65 @@ fn binary_handshake(
     Ok(model_id)
 }
 
+/// One closed-loop driver connection: the byte-counted reader, the
+/// buffered writer, and the wire model id resolved during the
+/// handshake (0 for the default shard and the JSON modes).
+struct DriverConn {
+    reader: BufReader<CountingReader<TcpStream>>,
+    writer: BufWriter<TcpStream>,
+    model_id: u16,
+}
+
+impl DriverConn {
+    /// Open one driver connection, running the binary handshake (and
+    /// the shard-id lookup) for the frame modes.
+    fn open(cfg: &LoadGenConfig, report: &mut LoadReport) -> Result<DriverConn> {
+        let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
+        let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
+        let mut reader = BufReader::new(CountingReader::new(read_half));
+        let mut writer = BufWriter::new(stream);
+        let binary = matches!(
+            cfg.mode,
+            ClientMode::V2Binary
+                | ClientMode::Batch
+                | ClientMode::Classify
+                | ClientMode::Learn
+                | ClientMode::Mixed
+        );
+        let mut model_id = 0u16;
+        if binary {
+            model_id = binary_handshake(cfg, &mut writer, &mut reader, report)?;
+        }
+        Ok(DriverConn { reader, writer, model_id })
+    }
+}
+
+/// Replace a dead driver connection: fold the dead socket's read-byte
+/// tally into the report, back off with jitter, reopen (re-running the
+/// handshake), and count the `resent` requests the caller is about to
+/// replay. Returns `false` when the reconnect attempt itself fails —
+/// callers stop and report what they have.
+fn reconnect_driver(
+    cfg: &LoadGenConfig,
+    report: &mut LoadReport,
+    conn: &mut DriverConn,
+    rng: &mut Rng64,
+    attempt: u32,
+    resent: u64,
+) -> bool {
+    report.bytes_recv += conn.reader.get_ref().bytes;
+    report.retries += resent;
+    report.reconnects += 1;
+    std::thread::sleep(retry_backoff(rng, &RetryPolicy::default(), attempt));
+    match DriverConn::open(cfg, report) {
+        Ok(fresh) => {
+            *conn = fresh;
+            true
+        }
+        Err(_) => false,
+    }
+}
+
 /// One batch-mode connection: the same digit traffic as the `v2-binary`
 /// singles mode, but packed `LoadGenConfig.batch_size` examples per
 /// `SCORE_BATCH` frame with the pipelining window counted in frames.
@@ -1449,16 +1667,14 @@ fn drive_batch_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result
         return Ok(report);
     }
     let batch = cfg.batch_size.max(1);
-    let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
-    let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
-    let mut reader = BufReader::new(CountingReader::new(read_half));
-    let mut writer = BufWriter::new(stream);
-    let model_id = binary_handshake(cfg, &mut writer, &mut reader, &mut report)?;
+    let mut conn = DriverConn::open(cfg, &mut report)?;
+    let mut retries_left = cfg.retries;
 
     let base = cfg.seed.wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let mut clean = SynthDigits::new(base);
     let mut noisy = SynthDigits::with_config(base ^ 0xA5A5_A5A5, hard_render_config());
     let mut mix = Rng64::seed_from_u64(base ^ 0x5A5A_5A5A);
+    let mut backoff_rng = Rng64::seed_from_u64(base ^ 0x0F0F_0F0F);
 
     // Reusable buffers as in drive_connection: render, sparsify, and
     // encode whole batch frames with zero steady-state allocation.
@@ -1478,7 +1694,7 @@ fn drive_batch_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result
             // The last frame carries the remainder.
             let count = batch.min(n - next * batch);
             scratch.out.clear();
-            let mut enc = Frame::begin_score_batch(&mut scratch.out, model_id, 0);
+            let mut enc = Frame::begin_score_batch(&mut scratch.out, conn.model_id, 0);
             for _ in 0..count {
                 let digit = cfg.digits[seq as usize % cfg.digits.len()];
                 if mix.f64() < cfg.hard_fraction {
@@ -1496,34 +1712,85 @@ fn drive_batch_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result
                 seq += 1;
             }
             enc.finish();
-            writer.write_all(&scratch.out).map_err(|e| Error::io("<loadgen write>", e))?;
-            report.bytes_sent += scratch.out.len() as u64;
-            report.sent += count as u64;
-            next += 1;
-            if next < frames && next - received < cfg.pipeline {
-                continue; // keep filling before the (blocking) read
+            let flush_now = !(next + 1 < frames && next + 1 - received < cfg.pipeline);
+            let wrote = conn.writer.write_all(&scratch.out).and_then(|()| {
+                if flush_now { conn.writer.flush() } else { Ok(()) }
+            });
+            match wrote {
+                Ok(()) => {
+                    report.bytes_sent += scratch.out.len() as u64;
+                    report.sent += count as u64;
+                    next += 1;
+                    if !flush_now {
+                        continue; // keep filling before the (blocking) read
+                    }
+                }
+                Err(e) => {
+                    if retries_left == 0 {
+                        return Err(Error::io("<loadgen write>", e));
+                    }
+                    retries_left -= 1;
+                    let resent = resent_examples(received, next, batch, n);
+                    let attempt = cfg.retries - retries_left;
+                    let ok = reconnect_driver(
+                        cfg, &mut report, &mut conn, &mut backoff_rng, attempt, resent,
+                    );
+                    if !ok {
+                        report.errors += 1;
+                        break;
+                    }
+                    next = received;
+                    continue;
+                }
             }
-            writer.flush().map_err(|e| Error::io("<loadgen flush>", e))?;
         }
         // Window full (or everything sent): read one response frame,
         // which tallies one row per example it carries.
-        match Frame::read_body(&mut reader, &mut frame_body, CLIENT_MAX_FRAME)
+        match Frame::read_body(&mut conn.reader, &mut frame_body, CLIENT_MAX_FRAME)
             .and_then(|()| Frame::decode_body(&frame_body))
         {
-            Err(FrameError::Eof) => break, // server closed; report what we have
-            Err(_) => {
-                report.errors += 1;
-                break;
-            }
             Ok(frame) => {
                 received += 1;
+                // Progress refreshes the budget: `retries` bounds
+                // *consecutive* recoveries, so long runs survive
+                // periodic faults without an unbounded total.
+                retries_left = cfg.retries;
                 count_binary_response(&mut report, &frame);
+            }
+            Err(e) => {
+                // The stream died under us (reset, truncated frame):
+                // with retry budget left, replay the unanswered window
+                // on a fresh connection; otherwise report what we have.
+                if retries_left == 0 {
+                    if !matches!(e, FrameError::Eof) {
+                        report.errors += 1;
+                    }
+                    break;
+                }
+                retries_left -= 1;
+                let resent = resent_examples(received, next, batch, n);
+                let attempt = cfg.retries - retries_left;
+                let ok = reconnect_driver(
+                    cfg, &mut report, &mut conn, &mut backoff_rng, attempt, resent,
+                );
+                if !ok {
+                    report.errors += 1;
+                    break;
+                }
+                next = received;
             }
         }
     }
-    report.bytes_recv = reader.get_ref().bytes;
+    report.bytes_recv += conn.reader.get_ref().bytes;
     report.elapsed_s = t0.elapsed().as_secs_f64();
     Ok(report)
+}
+
+/// Examples carried by the in-flight batch frames `[received, next)` —
+/// the replay size after a batch-mode reconnect (every frame holds
+/// `batch` examples except a short final remainder).
+fn resent_examples(received: usize, next: usize, batch: usize, n: usize) -> u64 {
+    (received..next).map(|f| batch.min(n - f * batch) as u64).sum()
 }
 
 /// One connection's worth of traffic: keep up to `pipeline` requests in
@@ -1533,30 +1800,25 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
     if n == 0 {
         return Ok(report);
     }
-    let stream = TcpStream::connect(&cfg.addr).map_err(|e| Error::io(&cfg.addr, e))?;
-    let read_half = stream.try_clone().map_err(|e| Error::io(&cfg.addr, e))?;
-    let mut reader = BufReader::new(CountingReader::new(read_half));
-    let mut writer = BufWriter::new(stream);
     let mut line = String::new();
 
-    // The binary modes negotiate their framing before any traffic; this
-    // driver targets our own server, so a declined handshake is an
-    // error, not a fallback. Classify additionally needs the v3 frame
-    // ops, learn/mixed the v4 learn frame, and the routed modes the
-    // model's wire id.
+    // The binary modes negotiate their framing before any traffic
+    // (inside `DriverConn::open`); this driver targets our own server,
+    // so a declined handshake is an error, not a fallback. Classify
+    // additionally needs the v3 frame ops, learn/mixed the v4 learn
+    // frame, and the routed modes the model's wire id.
     let binary = matches!(
         cfg.mode,
         ClientMode::V2Binary | ClientMode::Classify | ClientMode::Learn | ClientMode::Mixed
     );
-    let mut model_id = 0u16;
-    if binary {
-        model_id = binary_handshake(cfg, &mut writer, &mut reader, &mut report)?;
-    }
+    let mut conn = DriverConn::open(cfg, &mut report)?;
+    let mut retries_left = cfg.retries;
 
     let base = cfg.seed.wrapping_add(conn_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let mut clean = SynthDigits::new(base);
     let mut noisy = SynthDigits::with_config(base ^ 0xA5A5_A5A5, hard_render_config());
     let mut mix = Rng64::seed_from_u64(base ^ 0x5A5A_5A5A);
+    let mut backoff_rng = Rng64::seed_from_u64(base ^ 0x0F0F_0F0F);
 
     // Reusable per-connection buffers: the send loop renders,
     // sparsifies, and encodes with zero steady-state allocation, so
@@ -1578,45 +1840,104 @@ fn drive_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result<LoadR
             } else {
                 clean.render_into(digit, &mut dense)
             };
-            encode_request_into(cfg, model_id, next as u64, &dense, &mut scratch);
-            writer.write_all(&scratch.out).map_err(|e| Error::io("<loadgen write>", e))?;
-            report.bytes_sent += scratch.out.len() as u64;
-            report.sent += 1;
-            next += 1;
-            if next < n && next - received < cfg.pipeline {
-                continue; // keep filling before the (blocking) read
+            encode_request_into(cfg, conn.model_id, next as u64, &dense, &mut scratch);
+            let flush_now = !(next + 1 < n && next + 1 - received < cfg.pipeline);
+            let wrote = conn.writer.write_all(&scratch.out).and_then(|()| {
+                if flush_now { conn.writer.flush() } else { Ok(()) }
+            });
+            match wrote {
+                Ok(()) => {
+                    report.bytes_sent += scratch.out.len() as u64;
+                    report.sent += 1;
+                    next += 1;
+                    if !flush_now {
+                        continue; // keep filling before the (blocking) read
+                    }
+                }
+                Err(e) => {
+                    if retries_left == 0 {
+                        return Err(Error::io("<loadgen write>", e));
+                    }
+                    retries_left -= 1;
+                    let attempt = cfg.retries - retries_left;
+                    let resent = (next - received) as u64;
+                    let ok = reconnect_driver(
+                        cfg, &mut report, &mut conn, &mut backoff_rng, attempt, resent,
+                    );
+                    if !ok {
+                        report.errors += 1;
+                        break;
+                    }
+                    next = received;
+                    continue;
+                }
             }
-            writer.flush().map_err(|e| Error::io("<loadgen flush>", e))?;
         }
         // Window full (or everything sent): read one response.
         if binary {
-            match Frame::read_body(&mut reader, &mut frame_body, CLIENT_MAX_FRAME)
+            match Frame::read_body(&mut conn.reader, &mut frame_body, CLIENT_MAX_FRAME)
                 .and_then(|()| Frame::decode_body(&frame_body))
             {
-                Err(FrameError::Eof) => break, // server closed; report what we have
-                Err(_) => {
-                    // Framing lost: nothing more on this stream is
-                    // decodable.
-                    report.errors += 1;
-                    break;
-                }
                 Ok(frame) => {
                     received += 1;
+                    retries_left = cfg.retries; // progress refreshes the budget
                     count_binary_response(&mut report, &frame);
+                }
+                Err(e) => {
+                    // Framing lost or the server dropped us: nothing
+                    // more on this stream is decodable. With retry
+                    // budget left, replay the unanswered window on a
+                    // fresh connection; otherwise report what we have.
+                    if retries_left == 0 {
+                        if !matches!(e, FrameError::Eof) {
+                            report.errors += 1;
+                        }
+                        break;
+                    }
+                    retries_left -= 1;
+                    let attempt = cfg.retries - retries_left;
+                    let resent = (next - received) as u64;
+                    let ok = reconnect_driver(
+                        cfg, &mut report, &mut conn, &mut backoff_rng, attempt, resent,
+                    );
+                    if !ok {
+                        report.errors += 1;
+                        break;
+                    }
+                    next = received;
                 }
             }
         } else {
             line.clear();
-            let bytes =
-                reader.read_line(&mut line).map_err(|e| Error::io("<loadgen read>", e))?;
-            if bytes == 0 {
-                break; // server closed on us; report what we have
+            match conn.reader.read_line(&mut line) {
+                Ok(bytes) if bytes > 0 => {
+                    received += 1;
+                    retries_left = cfg.retries; // progress refreshes the budget
+                    count_json_response(&mut report, &line);
+                }
+                other => {
+                    if retries_left == 0 {
+                        if let Err(e) = other {
+                            return Err(Error::io("<loadgen read>", e));
+                        }
+                        break; // server closed on us; report what we have
+                    }
+                    retries_left -= 1;
+                    let attempt = cfg.retries - retries_left;
+                    let resent = (next - received) as u64;
+                    let ok = reconnect_driver(
+                        cfg, &mut report, &mut conn, &mut backoff_rng, attempt, resent,
+                    );
+                    if !ok {
+                        report.errors += 1;
+                        break;
+                    }
+                    next = received;
+                }
             }
-            received += 1;
-            count_json_response(&mut report, &line);
         }
     }
-    report.bytes_recv = reader.get_ref().bytes;
+    report.bytes_recv += conn.reader.get_ref().bytes;
     report.elapsed_s = t0.elapsed().as_secs_f64();
     Ok(report)
 }
@@ -1640,6 +1961,8 @@ mod tests {
             features: vec![100; 9],
             total_voters: 27,
             churned: 2,
+            retries: 1,
+            reconnects: 1,
         };
         let b = LoadReport {
             sent: 5,
@@ -1654,6 +1977,8 @@ mod tests {
             features: vec![20; 5],
             total_voters: 0,
             churned: 1,
+            retries: 2,
+            reconnects: 0,
         };
         a.merge(&b);
         assert_eq!(a.sent, 15);
@@ -1667,6 +1992,27 @@ mod tests {
         assert_eq!(a.total_voters, 27);
         assert!((a.avg_features_per_voter() - 1000.0 / 27.0).abs() < 1e-9);
         assert_eq!(a.churned, 3);
+        assert_eq!(a.retries, 3);
+        assert_eq!(a.reconnects, 1);
+    }
+
+    #[test]
+    fn retry_backoff_doubles_caps_and_jitters_within_bounds() {
+        let policy = RetryPolicy { max_retries: 8, base_backoff_ms: 10, max_backoff_ms: 100 };
+        let mut rng = Rng64::seed_from_u64(7);
+        for attempt in 1..=8u32 {
+            let exp = (10u64 << (attempt - 1)).min(100);
+            for _ in 0..50 {
+                let ms = retry_backoff(&mut rng, &policy, attempt).as_millis() as u64;
+                let lo = exp / 2;
+                assert!(ms >= lo && ms <= exp, "attempt {attempt}: {ms}ms outside [{lo}, {exp}]");
+            }
+        }
+        // A degenerate zero-base policy still sleeps a bounded, nonzero
+        // window rather than spinning.
+        let zero = RetryPolicy { max_retries: 1, base_backoff_ms: 0, max_backoff_ms: 0 };
+        let ms = retry_backoff(&mut rng, &zero, 1).as_millis();
+        assert!(ms <= 1);
     }
 
     #[test]

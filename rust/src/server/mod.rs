@@ -44,7 +44,13 @@
 //! * [`loadgen`] — a loopback load-generator client: configurable
 //!   connection count, pipelining depth, and easy/hard traffic mix, used
 //!   by `attentive bench-serve`, `benches/serve_throughput.rs`, and the
-//!   loopback integration test.
+//!   loopback integration test. Its [`loadgen::Client`] retries
+//!   retryable refusals with exponential backoff + jitter and
+//!   reconnects on connection loss.
+//! * [`faultpoint`] — env/config-gated fault injection (torn writes,
+//!   delayed flushes, forced worker panics, snapshot-write failure)
+//!   behind `ATTENTIVE_FAULT`, driving the `tests/chaos.rs` suite; a
+//!   single relaxed atomic load when disarmed.
 //!
 //! ## Quick tour
 //!
@@ -70,6 +76,7 @@
 pub mod bufpool;
 #[cfg(target_os = "linux")]
 pub(crate) mod event_loop;
+pub mod faultpoint;
 pub mod frame;
 pub mod hub;
 pub mod loadgen;

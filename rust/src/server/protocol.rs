@@ -562,6 +562,14 @@ pub struct StatsReport {
     pub accepted_conns: u64,
     /// Requests shed with an `overloaded` response.
     pub overloaded: u64,
+    /// Batches refused by the adaptive admission cap (queue under
+    /// pressure; retryable) — distinct from whole-queue `overloaded`
+    /// sheds and from the fixed batch-size ceiling.
+    pub batch_shed: u64,
+    /// Worker evaluations that panicked and were contained (the worker
+    /// respawned; the request answered with a retryable `internal`
+    /// error). Not counted in `served`.
+    pub worker_panics: u64,
     /// Lines that failed to parse as a request.
     pub protocol_errors: u64,
     /// Hot model reloads applied.
@@ -593,6 +601,8 @@ impl StatsReport {
             ("features_p99", Json::Num(self.features_p99 as f64)),
             ("accepted_conns", Json::Num(self.accepted_conns as f64)),
             ("overloaded", Json::Num(self.overloaded as f64)),
+            ("batch_shed", Json::Num(self.batch_shed as f64)),
+            ("worker_panics", Json::Num(self.worker_panics as f64)),
             ("protocol_errors", Json::Num(self.protocol_errors as f64)),
             ("reloads", Json::Num(self.reloads as f64)),
             ("uptime_s", Json::Num(self.uptime_s)),
@@ -633,6 +643,8 @@ impl StatsReport {
             features_p99: int("features_p99"),
             accepted_conns: int("accepted_conns"),
             overloaded: int("overloaded"),
+            batch_shed: int("batch_shed"),
+            worker_panics: int("worker_panics"),
             protocol_errors: int("protocol_errors"),
             reloads: int("reloads"),
             uptime_s: num("uptime_s"),
@@ -1673,6 +1685,8 @@ mod tests {
             features_p99: 1023,
             accepted_conns: 5,
             overloaded: 17,
+            batch_shed: 3,
+            worker_panics: 1,
             protocol_errors: 2,
             reloads: 1,
             uptime_s: 4.5,

@@ -39,12 +39,13 @@
 //! requests and can never be removed.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::config::TrainerWireConfig;
-use crate::coordinator::online::{LearnError, OnlineTrainer, TrainerStatsSnapshot};
+use crate::coordinator::online::{LearnError, OnlineTrainer, SnapshotStore, TrainerStatsSnapshot};
 use crate::coordinator::service::{CompletionNotifier, Features, ServingModel, StatsSnapshot};
 use crate::error::{Error, Result};
 use crate::server::hub::{HubError, HubInfo, ModelHub};
@@ -280,6 +281,10 @@ pub struct ModelRegistry {
     workers: usize,
     seed: u64,
     notifier: CompletionNotifier,
+    /// When set ([`Self::set_snapshot_root`]), every trainer spawned
+    /// after persists published generations under
+    /// `<root>/<shard-name>/` via [`SnapshotStore`].
+    snapshot_root: Mutex<Option<PathBuf>>,
 }
 
 /// An epoch pin: while alive, no table loaded through
@@ -381,7 +386,41 @@ impl ModelRegistry {
             workers,
             seed,
             notifier,
+            snapshot_root: Mutex::new(None),
         })
+    }
+
+    /// Enable durable snapshots: trainers attached from now on persist
+    /// every published generation under `<root>/<shard-name>/` with
+    /// atomic writes (see [`SnapshotStore`]). Call before
+    /// [`Self::attach_trainer`] / [`Self::add_model`] so startup
+    /// trainers are covered.
+    pub fn set_snapshot_root(&self, root: PathBuf) {
+        *self.snapshot_root.lock().unwrap() = Some(root);
+    }
+
+    /// Spawn a trainer for one shard, store-backed when a snapshot root
+    /// is configured. An unopenable store (permissions, read-only disk)
+    /// degrades to in-memory publishing with a warning rather than
+    /// refusing the attach — serving beats durability here.
+    fn spawn_trainer(
+        &self,
+        shard_name: &str,
+        hub: Arc<ModelHub>,
+        cfg: &TrainerWireConfig,
+        dim: usize,
+    ) -> OnlineTrainer {
+        let root = self.snapshot_root.lock().unwrap().clone();
+        if let Some(root) = root {
+            match SnapshotStore::open(root.join(shard_name)) {
+                Ok(store) => return OnlineTrainer::spawn_with_store(hub, cfg, dim, store),
+                Err(e) => eprintln!(
+                    "warning: snapshot store for shard {shard_name:?} unavailable ({e}); \
+                     training without persistence"
+                ),
+            }
+        }
+        OnlineTrainer::spawn(hub, cfg, dim)
     }
 
     /// Pin the current epoch parity. The retry loop closes the race
@@ -475,7 +514,7 @@ impl ModelRegistry {
         if let Some(cfg) = trainer {
             // Before publish: the shard is not yet routable, so the
             // OnceLock set cannot race another attach.
-            let t = OnlineTrainer::spawn(Arc::clone(&shard.hub), cfg, dim);
+            let t = self.spawn_trainer(&shard.name, Arc::clone(&shard.hub), cfg, dim);
             let _ = shard.trainer.set(t);
         }
         let mut slots = table.slots.clone();
@@ -567,7 +606,7 @@ impl ModelRegistry {
                 shard.name
             )));
         }
-        let trainer = OnlineTrainer::spawn(Arc::clone(&shard.hub), cfg, info.dim);
+        let trainer = self.spawn_trainer(&shard.name, Arc::clone(&shard.hub), cfg, info.dim);
         if shard.trainer.set(trainer).is_err() {
             // Lost an attach race; the loser is dropped, which drains
             // and joins it.

@@ -77,11 +77,13 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::config::{IoBackend, ServerConfig, TrainerWireConfig};
+use crate::coordinator::online::SnapshotStore;
 use crate::coordinator::service::{
     CompletionNotifier, Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
 };
 use crate::error::{Error, Result};
 use crate::server::bufpool::BufPool;
+use crate::server::faultpoint;
 use crate::server::frame::{
     self, ErrorCode, Frame, FrameError, FrameRef,
 };
@@ -149,6 +151,19 @@ pub(crate) struct Shared {
     pub(crate) max_batch_examples: usize,
     /// Concurrent-connection admission cap (both backends).
     pub(crate) max_conns: usize,
+    /// Write deadline per connection, ms (0 = wait forever): a peer
+    /// that stops reading its responses is cut loose instead of
+    /// parking a writer thread (or event-loop buffer) indefinitely.
+    pub(crate) write_timeout_ms: u64,
+    /// Idle deadline per connection, ms (0 = never): a peer that goes
+    /// silent — including a slowloris trickling one byte per minute —
+    /// is reaped once nothing arrives for this long.
+    pub(crate) idle_timeout_ms: u64,
+    /// Batches refused by the *adaptive* admission cap (queue under
+    /// pressure; retryable) — distinct from `overloaded`, which counts
+    /// whole-queue sheds, and from the fixed `max_batch_examples`
+    /// ceiling, which is a non-retryable protocol error.
+    pub(crate) batch_shed: AtomicU64,
     /// Live connections right now (for the `max_conns` screen).
     pub(crate) live_conns: AtomicU64,
     /// Per-wire-class served/bytes (indexed v1, v2-json, v2-binary).
@@ -202,6 +217,9 @@ impl TcpServer {
         models: Vec<(String, ServingModel)>,
     ) -> Result<TcpServer> {
         cfg.validate()?;
+        if let Some(spec) = faultpoint::init_from_env() {
+            eprintln!("fault injection armed: {spec}");
+        }
         // Event backend: the wake eventfds must exist before the
         // registry so every hub's completion notifier can signal them
         // from its first spawned worker generation.
@@ -217,6 +235,44 @@ impl TcpServer {
             cfg.seed,
             notifier,
         )?;
+        if let Some(dir) = &cfg.snapshot_dir {
+            // Startup recovery: warm every binary shard from its newest
+            // *valid* on-disk generation before any trainer attaches, so
+            // the trainer's warm start resumes exactly where the last
+            // published generation left off. Torn or corrupt files are
+            // skipped inside the store (checksummed header); a shard
+            // with no usable snapshot just serves its boot model.
+            for info in registry.infos() {
+                if info.hub.kind != "binary" {
+                    continue;
+                }
+                let store = match SnapshotStore::open(dir.join(&info.name)) {
+                    Ok(store) => store,
+                    Err(e) => {
+                        eprintln!(
+                            "warning: snapshot dir for shard {:?} unavailable ({e})",
+                            info.name
+                        );
+                        continue;
+                    }
+                };
+                if let Some((gen, snap)) = store.load_newest() {
+                    match registry.reload(Some(&info.name), snap.into()) {
+                        Ok(_) => eprintln!(
+                            "recovered shard {:?} from snapshot generation {gen}",
+                            info.name
+                        ),
+                        Err(e) => eprintln!(
+                            "warning: shard {:?} snapshot generation {gen} not loadable: {e}",
+                            info.name
+                        ),
+                    }
+                }
+            }
+            // From here on, every attached trainer persists its
+            // publishes under `<dir>/<shard-name>/`.
+            registry.set_snapshot_root(dir.clone());
+        }
         if let Some(trainer_cfg) = &cfg.trainer {
             // Online learning: attach a trainer to every binary shard.
             // Ensemble shards stay read-only — their 1-vs-1 voters are
@@ -249,6 +305,9 @@ impl TcpServer {
             max_nnz: cfg.max_nnz,
             max_batch_examples: cfg.max_batch_examples,
             max_conns: cfg.max_conns,
+            write_timeout_ms: cfg.write_timeout_ms,
+            idle_timeout_ms: cfg.idle_timeout_ms,
+            batch_shed: AtomicU64::new(0),
             live_conns: AtomicU64::new(0),
             wire: Default::default(),
             pool: BufPool::serving_default(),
@@ -521,6 +580,20 @@ pub(crate) enum Step {
 }
 
 fn handle_conn(stream: TcpStream, shared: &Arc<Shared>) {
+    // Deadlines, set before the clone so both halves share them: a peer
+    // that stops reading its responses hits the write timeout, one that
+    // goes silent (slowloris included — the timeout is per read call,
+    // so trickled bytes only buy one more window each) hits the read
+    // timeout. Either way the connection closes; admitted requests are
+    // still drained and answered by the writer before it exits.
+    if shared.write_timeout_ms > 0 {
+        let _ = stream
+            .set_write_timeout(Some(std::time::Duration::from_millis(shared.write_timeout_ms)));
+    }
+    if shared.idle_timeout_ms > 0 {
+        let _ = stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(shared.idle_timeout_ms)));
+    }
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
     let (jtx, jrx) = sync_channel::<Job>(shared.max_pending);
@@ -742,6 +815,19 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                     }))
                 }
             };
+            let cap = effective_batch_cap(shared, &hub);
+            if examples.len() > cap {
+                shared.batch_shed.fetch_add(1, Ordering::Relaxed);
+                return Step::Job(render(Response::Error {
+                    id,
+                    error: format!(
+                        "batch count {} exceeds adaptive cap {cap} (queue under pressure); \
+                         retry with a smaller batch",
+                        examples.len()
+                    ),
+                    retryable: true,
+                }));
+            }
             // Per-example screens fill a `Rejected` slot instead of
             // failing the batch: only clean examples travel to the
             // worker, and the writer merges the verdicts back in order.
@@ -888,6 +974,24 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
     }
 }
 
+/// Adaptive `SCORE_BATCH` / `score-batch` admission cap: the
+/// configured `max_batch_examples` ceiling scaled by the target
+/// shard's free queue capacity, never below 1. An empty queue admits
+/// the full ceiling; a deep queue admits only small batches, shedding
+/// the rest with a *retryable* error (counted in `batch_shed`) — one
+/// giant batch cannot monopolize a worker while singles are already
+/// queueing behind it. The depth read is racy by design: it is a
+/// pressure heuristic, and [`crate::server::hub::ModelHub::queue_load`]
+/// over-approximates, so the cap only ever errs toward shedding.
+fn effective_batch_cap(shared: &Shared, hub: &ModelHub) -> usize {
+    let (depth, capacity) = hub.queue_load();
+    if capacity == 0 {
+        return shared.max_batch_examples;
+    }
+    let free = capacity - depth;
+    (shared.max_batch_examples * free / capacity).max(1)
+}
+
 /// Handle one v2/v3 binary frame *body*, decoded zero-copy: sparse
 /// payloads are screened (nnz cap, sorted support, finiteness) as raw
 /// byte slices, and owned [`Features`] are only materialized for
@@ -1032,6 +1136,17 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
                 Ok(hub) => hub,
                 Err(e) => return err(ErrorCode::UnknownModel, e.to_string()),
             };
+            let cap = effective_batch_cap(shared, &hub);
+            if count > cap {
+                shared.batch_shed.fetch_add(1, Ordering::Relaxed);
+                return err(
+                    ErrorCode::Overloaded,
+                    format!(
+                        "batch count {count} exceeds adaptive cap {cap} (queue under \
+                         pressure); retry with a smaller batch"
+                    ),
+                );
+            }
             let mut slots = Vec::with_capacity(count);
             let mut clean = Vec::with_capacity(count);
             for pairs in frame::batch_pairs(examples) {
@@ -1182,6 +1297,14 @@ fn writer_loop(stream: TcpStream, jrx: Receiver<Job>, shared: &Shared) {
             if scored > 0 {
                 counters.served.fetch_add(scored, Ordering::Relaxed);
             }
+            faultpoint::maybe_delay();
+            if faultpoint::fires(faultpoint::Point::TornWrite) {
+                // Crash the connection mid-response: emit a prefix of
+                // the encoded bytes and die without the rest — the
+                // client must spot the truncated frame and reconnect.
+                let _ = out.write_all(&scratch[..scratch.len() / 2]);
+                break 'outer;
+            }
             if out.write_all(&scratch).is_err() {
                 break 'outer;
             }
@@ -1208,6 +1331,14 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
     let outcome: std::result::Result<ScoreResponse, (ErrorCode, bool, &'static str)> = match resp
     {
         None => Err((ErrorCode::Unavailable, false, "service unavailable")),
+        // A contained worker panic. Its sentinel is NaN-scored, so this
+        // arm must precede the NaN dimension guard below. Retryable:
+        // the panicking worker has already been respawned.
+        Some(resp) if resp.is_internal_fault() => Err((
+            ErrorCode::Internal,
+            true,
+            "internal error: evaluation panicked (worker respawned; retry)",
+        )),
         // NaN marks the worker-level dimension guard; the hub screens
         // dimensions at admission, so this only fires if a reload changed
         // the model dim while the request was in flight.
@@ -1307,6 +1438,12 @@ fn batch_outcome<'a, I: Iterator<Item = ScoreResponse>>(
         BatchSlot::Rejected { code, msg } => Err((*code, msg.as_str())),
         BatchSlot::Submitted => match results.next() {
             None => Err((ErrorCode::Unavailable, "service unavailable")),
+            // Contained panic sentinel (NaN-scored): before the NaN
+            // dimension guard, exactly as in `render_score_into`.
+            Some(r) if r.is_internal_fault() => Err((
+                ErrorCode::Internal,
+                "internal error: evaluation panicked (worker respawned; retry)",
+            )),
             Some(r) if r.score.is_nan() => Err((
                 ErrorCode::DimMismatch,
                 "dimension mismatch (model reloaded mid-flight)",
@@ -1395,6 +1532,8 @@ fn report(shared: &Shared) -> StatsReport {
         features_p99: s.feature_percentile(0.99),
         accepted_conns: shared.accepted.load(Ordering::Relaxed),
         overloaded: shared.overloaded.load(Ordering::Relaxed),
+        batch_shed: shared.batch_shed.load(Ordering::Relaxed),
+        worker_panics: s.panics,
         protocol_errors: shared.protocol_errors.load(Ordering::Relaxed),
         reloads: shared.registry.reloads(),
         uptime_s: uptime,

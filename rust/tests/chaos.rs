@@ -1,0 +1,457 @@
+//! Fault-injection (chaos) suite: the `server::faultpoint` hooks drive
+//! torn writes, injected delays, worker panics, and snapshot persist
+//! failures against a real loopback server, and the resilient client
+//! (`Client::call_retry`, loadgen `--retries`) plus the crash-recovery
+//! path (`ServerConfig.snapshot_dir`) must absorb every one of them
+//! without client-visible corruption.
+//!
+//! Faultpoint state is process-global, so every test serializes on one
+//! mutex and resets the table on entry and exit. Servers are built with
+//! `..Default::default()`, so `ATTENTIVE_IO_BACKEND` selects the
+//! backend exactly as the CI gates do — the whole suite runs once per
+//! backend.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use attentive::config::{ServerConfig, TrainerWireConfig};
+use attentive::coordinator::factory::build_wire_pegasos;
+use attentive::coordinator::service::{Features, ModelSnapshot};
+use attentive::data::synth::SynthDigits;
+use attentive::learner::OnlineLearner;
+use attentive::margin::policy::CoordinatePolicy;
+use attentive::server::faultpoint::{self, Point};
+use attentive::server::loadgen::{Client, ClientMode, LoadGenConfig, RetryPolicy};
+use attentive::server::protocol::{Request, Response, StatsReport};
+use attentive::server::tcp::TcpServer;
+use attentive::stst::boundary::AnyBoundary;
+
+const DIM: usize = 784;
+
+/// Serializes the suite: faultpoint state is process-global, so two
+/// chaos tests running concurrently would see each other's faults. A
+/// poisoned lock (a prior test panicked) is still a valid serializer.
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn chaos_guard() -> std::sync::MutexGuard<'static, ()> {
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faultpoint::reset();
+    guard
+}
+
+fn flat_snapshot(w: f64) -> ModelSnapshot {
+    ModelSnapshot {
+        weights: vec![w; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    }
+}
+
+fn loopback_server(snapshot: ModelSnapshot, queue: usize, workers: usize) -> TcpServer {
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers,
+        queue,
+        ..Default::default()
+    };
+    TcpServer::serve(&cfg, snapshot).expect("bind loopback")
+}
+
+/// One dense score request for `Client::call_retry` (JSON path: works
+/// on a non-negotiated connection, so reconnects skip the handshake).
+fn score_request(features: Vec<f64>) -> Request {
+    Request::Score { id: None, model: None, features: Features::Dense(features) }
+}
+
+/// A contained worker panic answers a retryable `internal` error on the
+/// live connection — and the connection (plus the respawned worker)
+/// keeps serving afterwards.
+#[test]
+fn worker_panic_is_contained_and_connection_survives() {
+    let _guard = chaos_guard();
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let probe: Vec<f64> = SynthDigits::new(41).render(2);
+
+    faultpoint::configure("worker-panic:1").unwrap();
+    match client.score(probe.clone()).unwrap() {
+        Response::Error { error, retryable, .. } => {
+            assert!(retryable, "a contained panic must be retryable");
+            assert!(error.contains("internal"), "got {error:?}");
+        }
+        other => panic!("expected an internal error, got {other:?}"),
+    }
+
+    // Disarm: the same connection scores cleanly on the respawned
+    // worker — the panic never escaped the evaluation.
+    faultpoint::reset();
+    match client.score(probe).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0, "got {score}"),
+        other => panic!("expected a score, got {other:?}"),
+    }
+    let stats = client.stats().unwrap();
+    assert!(stats.worker_panics >= 1, "panic counter must tick: {stats:?}");
+
+    server.shutdown();
+}
+
+/// `call_retry` rides out periodic worker panics: every request lands a
+/// clean score even though every third evaluation dies.
+#[test]
+fn call_retry_rides_out_worker_panics() {
+    let _guard = chaos_guard();
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let policy = RetryPolicy { max_retries: 4, base_backoff_ms: 1, max_backoff_ms: 4 };
+    let probe: Vec<f64> = SynthDigits::new(42).render(2);
+
+    faultpoint::configure("worker-panic:3").unwrap();
+    for _ in 0..20 {
+        match client.call_retry(&score_request(probe.clone()), &policy).unwrap() {
+            Response::Score { score, .. } => assert!(score > 0.0, "got {score}"),
+            other => panic!("retry must end in a score, got {other:?}"),
+        }
+    }
+    assert!(client.retries() > 0, "panics every 3rd request must have forced retries");
+    assert!(faultpoint::fired(Point::WorkerPanic) > 0);
+    faultpoint::reset();
+    server.shutdown();
+}
+
+/// Torn writes kill the connection mid-response; `call_retry`
+/// reconnects and re-sends, and every answer that does arrive is intact
+/// (truncation is always detectable, never silent corruption).
+#[test]
+fn call_retry_reconnects_through_torn_writes() {
+    let _guard = chaos_guard();
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let policy = RetryPolicy { max_retries: 10, base_backoff_ms: 1, max_backoff_ms: 4 };
+    let probe: Vec<f64> = SynthDigits::new(43).render(2);
+
+    faultpoint::configure("torn-write:5").unwrap();
+    for _ in 0..30 {
+        match client.call_retry(&score_request(probe.clone()), &policy).unwrap() {
+            // All-(+1) weights on an inky image: any prefix of the
+            // attentive walk is positive, so a sign flip (or a parse of
+            // a truncated line) would be client-visible corruption.
+            Response::Score { score, .. } => assert!(score > 0.0, "got {score}"),
+            other => panic!("retry must end in a score, got {other:?}"),
+        }
+    }
+    assert!(client.reconnects() > 0, "torn writes must have forced reconnects");
+    assert!(faultpoint::fired(Point::TornWrite) > 0);
+
+    // Disarm: the (reconnected) client keeps working.
+    faultpoint::reset();
+    match client.score(probe).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0),
+        other => panic!("expected a score, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// Injected write-path delay: responses still arrive, intact, just
+/// late — the slow-path shape deadline knobs are tuned against.
+#[test]
+fn injected_delay_slows_but_does_not_corrupt() {
+    let _guard = chaos_guard();
+    let server = loopback_server(flat_snapshot(1.0), 64, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    let probe: Vec<f64> = SynthDigits::new(44).render(2);
+
+    faultpoint::configure("delay:1:30").unwrap();
+    let t0 = Instant::now();
+    match client.score(probe).unwrap() {
+        Response::Score { score, .. } => assert!(score > 0.0, "got {score}"),
+        other => panic!("expected a score, got {other:?}"),
+    }
+    let elapsed = t0.elapsed();
+    assert!(elapsed >= Duration::from_millis(25), "delay fault must bite, took {elapsed:?}");
+    faultpoint::reset();
+    server.shutdown();
+}
+
+/// The closed-loop loadgen driver with `retries` armed absorbs torn
+/// writes: every request is eventually answered, zero errors, and the
+/// reconnect/retry counters surface what it cost.
+#[test]
+fn loadgen_retries_survive_torn_writes() {
+    let _guard = chaos_guard();
+    let server = loopback_server(flat_snapshot(1.0), 4096, 2);
+    let addr = server.local_addr().to_string();
+
+    faultpoint::configure("torn-write:40").unwrap();
+    // One connection: write positions are then deterministic, so the
+    // reconnect handshake reply (the write right after a tear) never
+    // lands on a fire position itself.
+    let report = attentive::server::loadgen::run(&LoadGenConfig {
+        addr,
+        connections: 1,
+        requests: 200,
+        pipeline: 4,
+        mode: ClientMode::V2Binary,
+        retries: 8,
+        seed: 7,
+        ..Default::default()
+    })
+    .expect("loadgen must recover");
+    assert!(faultpoint::fired(Point::TornWrite) >= 1);
+    faultpoint::reset();
+
+    assert_eq!(report.answered, 200, "every request answered: {report:?}");
+    assert_eq!(report.errors, 0, "torn frames must never parse: {report:?}");
+    assert!(report.reconnects >= 1, "torn writes must force reconnects: {report:?}");
+    assert!(report.retries >= 1, "rolled-back windows must be re-sent: {report:?}");
+    server.shutdown();
+}
+
+// ---- crash recovery ------------------------------------------------------
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let n = SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir =
+            std::env::temp_dir().join(format!("attentive-chaos-{tag}-{}-{n}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        Self(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+const LDIM: usize = 16;
+
+/// Synthetic separable stream in a small dimension, identical to the
+/// serve_loopback learn suite: label = sign(a+b) on two active
+/// coordinates cycling over a fixed support.
+fn learn_stream(n: usize, seed: u64) -> Vec<(Vec<u32>, Vec<f64>, f64)> {
+    let mut s = seed.wrapping_mul(2).wrapping_add(1);
+    let mut next = move || {
+        s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = s;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) as f64 / u64::MAX as f64
+    };
+    (0..n)
+        .map(|i| {
+            let a = next() * 2.0 - 1.0;
+            let b = next() * 2.0 - 1.0;
+            let y = if a + b >= 0.0 { 1.0 } else { -1.0 };
+            (vec![(i % 3) as u32, 3 + (i % 5) as u32], vec![a, b], y)
+        })
+        .collect()
+}
+
+fn zero_snapshot() -> ModelSnapshot {
+    ModelSnapshot {
+        weights: vec![0.0; LDIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    }
+}
+
+fn trainer_cfg() -> TrainerWireConfig {
+    TrainerWireConfig {
+        queue: 4096, // outsizes the stream: nothing sheds
+        publish_every_updates: 1,
+        publish_every_ms: 0, // count-only cadence: deterministic publishes
+        lambda: 1e-2,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::WeightSampled,
+        seed: 11,
+        ..Default::default()
+    }
+}
+
+fn recovery_server(snapshot_dir: PathBuf) -> TcpServer {
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        // One worker: the per-worker attention RNG stream then depends
+        // only on (seed, scores since the last reload), so two servers
+        // serving identical weights answer identical probe sequences
+        // with bit-identical scores — the recovery contract under test.
+        workers: 1,
+        queue: 256,
+        trainer: Some(trainer_cfg()),
+        snapshot_dir: Some(snapshot_dir),
+        ..Default::default()
+    };
+    TcpServer::serve_models(&cfg, vec![("default".into(), zero_snapshot().into())])
+        .expect("bind loopback")
+}
+
+/// Newest generation number present on disk for the `default` shard —
+/// torn files count: a burned generation still advances the sequence.
+fn max_gen_on_disk(root: &std::path::Path) -> u64 {
+    let dir = root.join("default");
+    let Ok(entries) = std::fs::read_dir(&dir) else { return 0 };
+    entries
+        .flatten()
+        .filter_map(|e| {
+            let name = e.file_name().into_string().ok()?;
+            let digits = name.strip_prefix("gen-")?.strip_suffix(".snap")?;
+            digits.parse::<u64>().ok()
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+fn wait_for_publishes(client: &mut Client, want: u64) -> StatsReport {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let stats = client.stats().unwrap();
+        let shard = stats.models.iter().find(|m| m.name == "default").expect("default shard");
+        if shard.learn_publishes >= want {
+            assert_eq!(shard.learn_publishes, want, "publish count overshot: {shard:?}");
+            return stats;
+        }
+        assert!(Instant::now() < deadline, "trainer never drained: {shard:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn probe_scores(client: &mut Client, probes: &[(Vec<u32>, Vec<f64>, f64)]) -> Vec<f64> {
+    probes
+        .iter()
+        .map(|(idx, val, _)| match client.score_sparse(idx.clone(), val.clone(), 0).unwrap() {
+            // Binary frames carry the f64 verbatim (little-endian
+            // bits), so equality below is bit-exactness over the wire.
+            Response::Score { score, .. } => score,
+            other => panic!("probe got {other:?}"),
+        })
+        .collect()
+}
+
+/// The tentpole end-to-end: learn → publish → persist; tear every
+/// persist (including the shutdown one) and kill the server; restart
+/// from the same `--snapshot-dir`; the recovered server must serve the
+/// newest *valid* generation with bit-identical scores, skip every torn
+/// file, and keep the generation sequence monotonic as learning
+/// resumes.
+#[test]
+fn crash_recovery_restores_newest_valid_snapshot_bit_identically() {
+    let _guard = chaos_guard();
+    let tmp = TempDir::new("recover");
+
+    // Offline reference: the exact learner the wire trainer builds, fed
+    // the same sequence, tells us how many updates (== publishes ==
+    // disk generations, with publish_every_updates=1) each phase lands.
+    let examples = learn_stream(150, 5);
+    let mut offline = build_wire_pegasos(&trainer_cfg(), LDIM);
+    let mut updates_clean = 0u64; // phase 1: first 120, true labels
+    let mut updates_torn = 0u64; // phase 2: last 30, flipped labels
+    for (i, (idx, val, y)) in examples.iter().enumerate() {
+        let x = Features::Sparse { idx: idx.clone(), val: val.clone() }.densify(LDIM);
+        let y = if i < 120 { *y } else { -*y };
+        if offline.process(&x, y).updated {
+            if i < 120 {
+                updates_clean += 1;
+            } else {
+                updates_torn += 1;
+            }
+        }
+    }
+    assert!(updates_clean > 0, "phase 1 must publish at least once");
+    // Flipped labels on a trained model violate the margin: phase 2 is
+    // guaranteed to attempt (torn) persists.
+    assert!(updates_torn > 0, "phase 2 must attempt at least one persist");
+
+    // ---- phase 1: clean learning; every publish persists ------------
+    let server = recovery_server(tmp.0.clone());
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert!(client.negotiate().unwrap() >= 4, "learn frames need protocol v4");
+    for (idx, val, y) in &examples[..120] {
+        let label: i8 = if *y > 0.0 { 1 } else { -1 };
+        match client.learn_sparse(0, label, idx.clone(), val.clone()).unwrap() {
+            Response::Learned { .. } => {}
+            other => panic!("learn got {other:?}"),
+        }
+    }
+    wait_for_publishes(&mut client, updates_clean);
+    assert_eq!(max_gen_on_disk(&tmp.0), updates_clean, "every publish lands one gen file");
+
+    let probes = learn_stream(40, 99);
+    let clean_scores = probe_scores(&mut client, &probes);
+
+    // ---- phase 2: every persist torn, then the "crash" ---------------
+    faultpoint::configure("snapshot-fail:1").unwrap();
+    for (idx, val, y) in &examples[120..] {
+        let label: i8 = if *y > 0.0 { -1 } else { 1 }; // flipped: forces updates
+        match client.learn_sparse(0, label, idx.clone(), val.clone()).unwrap() {
+            Response::Learned { .. } => {}
+            other => panic!("learn got {other:?}"),
+        }
+    }
+    wait_for_publishes(&mut client, updates_clean + updates_torn);
+    let torn_max = max_gen_on_disk(&tmp.0);
+    assert!(
+        torn_max >= updates_clean + updates_torn,
+        "a failed persist still burns its generation: {torn_max} vs {}",
+        updates_clean + updates_torn
+    );
+    // Keep the fault armed through shutdown: the final dirty-state
+    // publish (if any) must be torn too, or phase 3 would recover
+    // phase-2 weights and the bit-identity assertion below would be
+    // vacuous. OnlineTrainer::shutdown joins synchronously, so reset()
+    // after this line cannot race the last persist.
+    drop(client);
+    server.shutdown();
+    assert!(faultpoint::fired(Point::SnapshotFail) >= updates_torn);
+    faultpoint::reset();
+
+    // ---- phase 3: restart from the same dir --------------------------
+    let server = recovery_server(tmp.0.clone());
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    assert!(client.negotiate().unwrap() >= 4);
+    let recovered_scores = probe_scores(&mut client, &probes);
+    assert_eq!(
+        recovered_scores, clean_scores,
+        "recovery must serve the newest valid generation bit-identically, \
+         skipping every torn file"
+    );
+
+    // ---- phase 4: learning resumes; generations stay monotonic -------
+    let resume = learn_stream(40, 123);
+    'resume: for chunk in resume.chunks(10) {
+        for (idx, val, y) in chunk {
+            let label: i8 = if *y > 0.0 { -1 } else { 1 }; // flipped: forces updates
+            match client.learn_sparse(0, label, idx.clone(), val.clone()).unwrap() {
+                Response::Learned { .. } => {}
+                other => panic!("learn got {other:?}"),
+            }
+        }
+        let chunk_deadline = Instant::now() + Duration::from_secs(2);
+        while Instant::now() < chunk_deadline {
+            if max_gen_on_disk(&tmp.0) > torn_max {
+                break 'resume;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    let resumed_max = max_gen_on_disk(&tmp.0);
+    assert!(
+        resumed_max > torn_max,
+        "post-recovery persists must extend the sequence past the burned \
+         generations: {resumed_max} vs {torn_max}"
+    );
+    server.shutdown();
+}
