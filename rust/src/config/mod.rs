@@ -485,6 +485,106 @@ impl TrainerWireConfig {
     }
 }
 
+/// Overload-brownout controller configuration: a feedback loop per
+/// serving shard that samples admission-queue occupancy (and, when
+/// `latency_target_us` is set, a queue-wait EWMA) and moves the shard
+/// through pressure tiers `normal → brown-1 → brown-2 → shed`. Brown
+/// tiers swap in pre-scaled stopping-boundary tables — τ tightened by
+/// `tighten` per tier — so scoring evaluates fewer features per example
+/// exactly when the queue is deep; the `shed` tier additionally rejects
+/// bulk-lane admissions. `None` on [`ServerConfig::brownout`] disables
+/// the controller entirely and keeps scoring bit-identical to the
+/// undegraded path. See `docs/OPERATIONS.md` ("Brownout tiers").
+#[derive(Debug, Clone, PartialEq)]
+pub struct BrownoutConfig {
+    /// Multiplicative τ tightening per brown tier: tier 1 scales the
+    /// boundary by `tighten`, tier 2 by `tighten²`. Must be in (0, 1].
+    pub tighten: f64,
+    /// Pressure (queue occupancy in [0,1], or wait-EWMA / target when a
+    /// latency target is set — whichever is higher) above which the
+    /// controller moves one tier up, after `dwell_ms` of persistence.
+    pub enter: f64,
+    /// Pressure below which the controller moves one tier down, after
+    /// `dwell_ms` — strictly less than `enter` (the hysteresis band).
+    pub exit: f64,
+    /// Minimum milliseconds a tier-change condition must persist before
+    /// the transition fires (flap damping).
+    pub dwell_ms: u64,
+    /// Controller sampling period in milliseconds.
+    pub sample_ms: u64,
+    /// Queue-wait EWMA target in microseconds; 0 (the default) makes
+    /// the controller occupancy-only.
+    pub latency_target_us: u64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> Self {
+        Self {
+            tighten: 0.5,
+            enter: 0.75,
+            exit: 0.35,
+            dwell_ms: 200,
+            sample_ms: 20,
+            latency_target_us: 0,
+        }
+    }
+}
+
+impl BrownoutConfig {
+    /// Serialize as JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("tighten", Json::Num(self.tighten)),
+            ("enter", Json::Num(self.enter)),
+            ("exit", Json::Num(self.exit)),
+            ("dwell_ms", Json::Num(self.dwell_ms as f64)),
+            ("sample_ms", Json::Num(self.sample_ms as f64)),
+            ("latency_target_us", Json::Num(self.latency_target_us as f64)),
+        ])
+    }
+
+    /// Parse from JSON; missing fields take the defaults.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let d = BrownoutConfig::default();
+        Ok(Self {
+            tighten: v.get("tighten").and_then(|x| x.as_f64()).unwrap_or(d.tighten),
+            enter: v.get("enter").and_then(|x| x.as_f64()).unwrap_or(d.enter),
+            exit: v.get("exit").and_then(|x| x.as_f64()).unwrap_or(d.exit),
+            dwell_ms: v.get("dwell_ms").and_then(|x| x.as_u64()).unwrap_or(d.dwell_ms),
+            sample_ms: v.get("sample_ms").and_then(|x| x.as_u64()).unwrap_or(d.sample_ms),
+            latency_target_us: v
+                .get("latency_target_us")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.latency_target_us),
+        })
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(self.tighten > 0.0 && self.tighten <= 1.0) {
+            return Err(Error::Config(format!(
+                "brownout tighten {} not in (0,1]",
+                self.tighten
+            )));
+        }
+        for (name, v) in [("enter", self.enter), ("exit", self.exit)] {
+            if !(v > 0.0 && v <= 1.0) {
+                return Err(Error::Config(format!("brownout {name} {v} not in (0,1]")));
+            }
+        }
+        if self.enter <= self.exit {
+            return Err(Error::Config(format!(
+                "brownout enter {} must exceed exit {} (hysteresis band)",
+                self.enter, self.exit
+            )));
+        }
+        if self.sample_ms == 0 {
+            return Err(Error::Config("brownout sample_ms must be >= 1".into()));
+        }
+        Ok(())
+    }
+}
+
 /// Network serving front-end configuration (`attentive serve --listen` /
 /// [`crate::server`]). A standalone JSON document, separate from
 /// [`ExperimentConfig`]: serving deploys a finished model, it does not
@@ -554,6 +654,17 @@ pub struct ServerConfig {
     /// Attach an online trainer to every shard (enables the `learn` op).
     /// `None` (the default) serves inference-only.
     pub trainer: Option<TrainerWireConfig>,
+    /// Overload-brownout controller (attention-tiered graceful
+    /// degradation). `None` (the default) disables it: no controller
+    /// thread, tier pinned at `normal`, scoring bit-identical to the
+    /// undegraded path.
+    pub brownout: Option<BrownoutConfig>,
+    /// Default request deadline in milliseconds applied at admission to
+    /// requests that carry none of their own (protocol v7
+    /// `deadline_ms`); 0 (the default) means no default deadline — and
+    /// with no per-request deadlines either, the deadline path costs
+    /// nothing.
+    pub deadline_default_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -575,6 +686,8 @@ impl Default for ServerConfig {
             idle_timeout_ms: 0,
             snapshot_dir: None,
             trainer: None,
+            brownout: None,
+            deadline_default_ms: 0,
         }
     }
 }
@@ -597,12 +710,16 @@ impl ServerConfig {
             ("max_conns", Json::Num(self.max_conns as f64)),
             ("write_timeout_ms", Json::Num(self.write_timeout_ms as f64)),
             ("idle_timeout_ms", Json::Num(self.idle_timeout_ms as f64)),
+            ("deadline_default_ms", Json::Num(self.deadline_default_ms as f64)),
         ];
         if let Some(dir) = &self.snapshot_dir {
             fields.push(("snapshot_dir", Json::Str(dir.display().to_string())));
         }
         if let Some(t) = &self.trainer {
             fields.push(("trainer", t.to_json()));
+        }
+        if let Some(b) = &self.brownout {
+            fields.push(("brownout", b.to_json()));
         }
         Json::obj(fields)
     }
@@ -655,6 +772,14 @@ impl ServerConfig {
                 Some(t) => Some(TrainerWireConfig::from_json(t)?),
                 None => d.trainer,
             },
+            brownout: match v.get("brownout") {
+                Some(b) => Some(BrownoutConfig::from_json(b)?),
+                None => d.brownout,
+            },
+            deadline_default_ms: v
+                .get("deadline_default_ms")
+                .and_then(|x| x.as_u64())
+                .unwrap_or(d.deadline_default_ms),
         })
     }
 
@@ -715,6 +840,9 @@ impl ServerConfig {
         }
         if let Some(t) = &self.trainer {
             t.validate()?;
+        }
+        if let Some(b) = &self.brownout {
+            b.validate()?;
         }
         Ok(())
     }
@@ -785,6 +913,15 @@ mod tests {
                 policy: CoordinatePolicy::Permuted,
                 seed: 9,
             }),
+            brownout: Some(BrownoutConfig {
+                tighten: 0.6,
+                enter: 0.8,
+                exit: 0.3,
+                dwell_ms: 150,
+                sample_ms: 10,
+                latency_target_us: 2_000,
+            }),
+            deadline_default_ms: 250,
         };
         let back = ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
             .unwrap();
@@ -803,7 +940,50 @@ mod tests {
         assert_eq!(sparse.idle_timeout_ms, 0);
         assert_eq!(sparse.snapshot_dir, None);
         assert_eq!(sparse.trainer, None);
+        assert_eq!(sparse.brownout, None);
+        assert_eq!(sparse.deadline_default_ms, 0);
         sparse.validate().unwrap();
+    }
+
+    #[test]
+    fn brownout_config_round_trip_and_validation() {
+        // Empty object: all defaults, and the defaults validate.
+        let d = BrownoutConfig::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d, BrownoutConfig::default());
+        d.validate().unwrap();
+        // Omitted from the server JSON when disabled.
+        assert!(!ServerConfig::default().to_json().to_string_compact().contains("brownout"));
+        // Round trip through the ServerConfig envelope.
+        let cfg = ServerConfig {
+            brownout: Some(BrownoutConfig { tighten: 0.4, ..Default::default() }),
+            deadline_default_ms: 50,
+            ..Default::default()
+        };
+        let back =
+            ServerConfig::from_json(&Json::parse(&cfg.to_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.brownout, cfg.brownout);
+        assert_eq!(back.deadline_default_ms, 50);
+        // Validation: tighten in (0,1], enter/exit in (0,1] with
+        // enter > exit, sample_ms >= 1.
+        let b = BrownoutConfig { tighten: 0.0, ..Default::default() };
+        assert!(b.validate().is_err());
+        let b = BrownoutConfig { tighten: 1.5, ..Default::default() };
+        assert!(b.validate().is_err());
+        let b = BrownoutConfig { enter: 0.3, exit: 0.3, ..Default::default() };
+        assert!(b.validate().is_err(), "degenerate hysteresis band");
+        let b = BrownoutConfig { enter: 1.2, ..Default::default() };
+        assert!(b.validate().is_err());
+        let b = BrownoutConfig { exit: 0.0, ..Default::default() };
+        assert!(b.validate().is_err());
+        let b = BrownoutConfig { sample_ms: 0, ..Default::default() };
+        assert!(b.validate().is_err());
+        // A bad nested brownout fails the server-level validate too.
+        let cfg = ServerConfig {
+            brownout: Some(BrownoutConfig { sample_ms: 0, ..Default::default() }),
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -772,6 +772,52 @@ mod tests {
     }
 
     #[test]
+    fn generations_monotonic_across_two_crash_restart_cycles() {
+        let tmp = TempDir::new("crash2");
+        let tear = |gen: u64| {
+            // Crash emulation, as the snapshot-fail point does it: the
+            // final name appears holding only a prefix of valid bytes.
+            let donor = std::fs::read(tmp.0.join(gen_name(gen - 1))).unwrap();
+            std::fs::write(tmp.0.join(gen_name(gen)), &donor[..donor.len() / 2]).unwrap();
+        };
+
+        // Cycle 1: two clean generations, then a crash mid-write of the
+        // third — a torn gen-3 lands on disk, plus a stray temp file.
+        {
+            let store = SnapshotStore::open(&tmp.0).unwrap();
+            assert_eq!(store.persist(&snap_with_weights(vec![1.0])).unwrap(), 1);
+            assert_eq!(store.persist(&snap_with_weights(vec![2.0])).unwrap(), 2);
+            tear(3);
+            std::fs::write(tmp.0.join(format!(".tmp-{}", gen_name(3))), b"partial").unwrap();
+        }
+        // Restart 1: the temp file is swept, the torn generation's
+        // number is burned (never reused), recovery serves gen 2.
+        {
+            let store = SnapshotStore::open(&tmp.0).unwrap();
+            let (gen, snap) = store.load_newest().expect("gen 2 survives the crash");
+            assert_eq!(gen, 2);
+            assert_eq!(snap.weights, vec![2.0]);
+            assert_eq!(store.persist(&snap_with_weights(vec![4.0])).unwrap(), 4);
+            assert!(!tmp.0.join(format!(".tmp-{}", gen_name(3))).exists());
+            // Cycle 2: crash again, mid-write of gen 5.
+            tear(5);
+        }
+        // Restart 2: same contract, one more generation forward.
+        let store = SnapshotStore::open(&tmp.0).unwrap();
+        let (gen, snap) = store.load_newest().expect("gen 4 survives the second crash");
+        assert_eq!(gen, 4);
+        assert_eq!(snap.weights, vec![4.0]);
+        assert_eq!(store.persist(&snap_with_weights(vec![6.0])).unwrap(), 6);
+        // The generation sequence only ever moved forward: across both
+        // crash/restart cycles every write got a fresh number, and the
+        // newest valid snapshot is the last clean write.
+        let mut gens = store.list_gens();
+        gens.sort_unstable();
+        assert_eq!(gens, vec![1, 2, 3, 4, 5, 6], "torn numbers burned, none reused");
+        assert_eq!(store.load_newest().unwrap().0, 6);
+    }
+
+    #[test]
     fn spawn_with_store_persists_published_generations() {
         let tmp = TempDir::new("spawn");
         let cfg = TrainerWireConfig { publish_every_updates: 1, ..test_cfg() };

@@ -14,11 +14,14 @@
 //! by the coordinator or loaded from a JSON snapshot) and the hot loop is
 //! pure rust.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
+use crate::config::BrownoutConfig;
 use crate::learner::predictor::TabledPredictor;
 use crate::margin::policy::{CoordinatePolicy, OrderGenerator};
 use crate::stst::boundary::{AnyBoundary, TableCache};
@@ -286,6 +289,7 @@ impl EnsembleSnapshot {
                 voters: self.voters.len() as u32,
             }),
             per_voter,
+            degraded: false,
         }
     }
 
@@ -663,10 +667,40 @@ impl ReqKind {
     }
 }
 
+/// Admission lane for the two-lane priority queue: `Interactive` work
+/// (single score/classify requests by default) is dequeued ahead of
+/// `Bulk` work (whole `SCORE_BATCH` fan-in by default), with a weighted
+/// pick so a saturated interactive lane can never starve bulk outright
+/// — and bulk fan-in can never starve singles at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Latency-sensitive lane, preferred at dequeue.
+    Interactive,
+    /// Throughput lane; guaranteed at least every
+    /// [`BULK_EVERY`]-th pick when both lanes are non-empty, and the
+    /// first to be rejected under the brownout `shed` tier.
+    Bulk,
+}
+
+/// Per-request admission options ([`ServiceHandle::submit_opts`] /
+/// the hub's `submit_pinned_opts`): an optional absolute deadline —
+/// work still queued past it is answered `DEADLINE_EXCEEDED` at
+/// dequeue instead of being scored — and an optional lane override.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOpts {
+    /// Absolute expiry; `None` (the default) means no deadline.
+    pub deadline: Option<Instant>,
+    /// Lane override; `None` takes the op default (singles →
+    /// interactive, batches → bulk).
+    pub lane: Option<Lane>,
+}
+
 /// One scoring request (internal envelope).
 struct ScoreRequest {
     features: Features,
     kind: ReqKind,
+    /// Absolute deadline; checked at dequeue, not during scoring.
+    deadline: Option<Instant>,
     respond: SyncSender<ScoreResponse>,
 }
 
@@ -677,11 +711,22 @@ struct ScoreRequest {
 /// batched results are bit-identical to singles.
 struct BatchRequest {
     examples: Vec<Features>,
+    /// Absolute deadline for the whole batch (every slot answers
+    /// `DEADLINE_EXCEEDED` when it expires in the queue).
+    deadline: Option<Instant>,
     respond: SyncSender<Vec<ScoreResponse>>,
 }
 
-/// What travels on the service queue.
-enum Work {
+/// What travels on the service queue. Every unit is stamped at
+/// admission so workers can attribute queue-wait time (the brownout
+/// controller's latency signal) and check deadlines at dequeue.
+struct Work {
+    payload: Payload,
+    /// When this unit entered the admission queue.
+    enqueued: Instant,
+}
+
+enum Payload {
     One(ScoreRequest),
     Batch(BatchRequest),
 }
@@ -726,7 +771,15 @@ pub struct ScoreResponse {
     /// Per-voter cost breakdown (verbose classify requests only), in
     /// pair-enumeration order.
     pub per_voter: Option<Vec<VoterVote>>,
+    /// Scored under a brownout tier (tightened stopping boundary): the
+    /// answer traded a sliver of decision confidence for queue relief.
+    /// Always `false` when brownout is disabled.
+    pub degraded: bool,
 }
+
+/// `features_evaluated` value of the [`ScoreResponse::deadline_exceeded`]
+/// sentinel (one below the internal-fault sentinel's `usize::MAX`).
+const DEADLINE_SENTINEL: usize = usize::MAX - 1;
 
 impl ScoreResponse {
     /// The internal-fault sentinel: a worker panicked while evaluating
@@ -740,12 +793,33 @@ impl ScoreResponse {
             features_evaluated: usize::MAX,
             classify: None,
             per_voter: None,
+            degraded: false,
         }
     }
 
     /// Is this the [`Self::internal_fault`] sentinel?
     pub fn is_internal_fault(&self) -> bool {
         self.score.is_nan() && self.features_evaluated == usize::MAX
+    }
+
+    /// The deadline-shed sentinel: the request's deadline expired while
+    /// it sat in the admission queue, so the worker answered without
+    /// scoring it. Distinguished from the other NaN sentinels by its own
+    /// impossible `features_evaluated` value; the front-end renders it
+    /// as the retryable `deadline-exceeded` error.
+    pub fn deadline_exceeded() -> Self {
+        ScoreResponse {
+            score: f64::NAN,
+            features_evaluated: DEADLINE_SENTINEL,
+            classify: None,
+            per_voter: None,
+            degraded: false,
+        }
+    }
+
+    /// Is this the [`Self::deadline_exceeded`] sentinel?
+    pub fn is_deadline_exceeded(&self) -> bool {
+        self.score.is_nan() && self.features_evaluated == DEADLINE_SENTINEL
     }
 }
 
@@ -773,6 +847,21 @@ pub struct ServiceStats {
     batches: AtomicU64,
     early_exits: AtomicU64,
     panics: AtomicU64,
+    /// Requests answered `DEADLINE_EXCEEDED` at dequeue (not scored,
+    /// not in `served`).
+    deadline_sheds: AtomicU64,
+    /// Responses scored under a brownout tier (tightened boundary).
+    degraded: AtomicU64,
+    /// Current brownout tier gauge (0 = normal .. 3 = shed), written by
+    /// the controller and read by the workers each drain.
+    tier: AtomicU64,
+    /// Brownout tier transitions (either direction).
+    tier_transitions: AtomicU64,
+    /// Total queue wait attributed at dequeue, in microseconds, and its
+    /// sample count — the controller turns deltas of these into the
+    /// latency EWMA.
+    wait_us: AtomicU64,
+    wait_samples: AtomicU64,
     hist: [AtomicU64; FEATURE_BUCKETS],
 }
 
@@ -784,6 +873,12 @@ impl Default for ServiceStats {
             batches: AtomicU64::new(0),
             early_exits: AtomicU64::new(0),
             panics: AtomicU64::new(0),
+            deadline_sheds: AtomicU64::new(0),
+            degraded: AtomicU64::new(0),
+            tier: AtomicU64::new(0),
+            tier_transitions: AtomicU64::new(0),
+            wait_us: AtomicU64::new(0),
+            wait_samples: AtomicU64::new(0),
             hist: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -804,6 +899,16 @@ pub struct StatsSnapshot {
     /// (`catch_unwind`): each answered the retryable `internal` error
     /// and does not count in `served`.
     pub panics: u64,
+    /// Requests answered `DEADLINE_EXCEEDED` at dequeue instead of
+    /// being scored (not in `served`).
+    pub deadline_sheds: u64,
+    /// Responses scored under a brownout tier (tightened boundary).
+    pub degraded: u64,
+    /// Current brownout tier (0 = normal .. 3 = shed). A gauge, not a
+    /// counter: [`Self::add`] takes the max across generations.
+    pub tier: u64,
+    /// Brownout tier transitions (either direction).
+    pub tier_transitions: u64,
     /// Features-touched histogram (see [`FEATURE_BUCKETS`]).
     pub hist: [u64; FEATURE_BUCKETS],
 }
@@ -846,6 +951,12 @@ impl StatsSnapshot {
         self.batches += other.batches;
         self.early_exits += other.early_exits;
         self.panics += other.panics;
+        self.deadline_sheds += other.deadline_sheds;
+        self.degraded += other.degraded;
+        // Tier is a gauge: retired generations idle at 0, so the max is
+        // the live generation's tier.
+        self.tier = self.tier.max(other.tier);
+        self.tier_transitions += other.tier_transitions;
         for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
             *a += *b;
         }
@@ -872,6 +983,10 @@ impl ServiceStats {
             batches: self.batches.load(Ordering::Relaxed),
             early_exits: self.early_exits.load(Ordering::Relaxed),
             panics: self.panics.load(Ordering::Relaxed),
+            deadline_sheds: self.deadline_sheds.load(Ordering::Relaxed),
+            degraded: self.degraded.load(Ordering::Relaxed),
+            tier: self.tier.load(Ordering::Relaxed),
+            tier_transitions: self.tier_transitions.load(Ordering::Relaxed),
             hist: std::array::from_fn(|i| self.hist[i].load(Ordering::Relaxed)),
         }
     }
@@ -931,11 +1046,192 @@ impl std::fmt::Debug for CompletionNotifier {
     }
 }
 
+/// When both lanes are non-empty, every `BULK_EVERY`-th dequeue serves
+/// the bulk lane: interactive work is strongly preferred, but bulk can
+/// never be starved outright.
+const BULK_EVERY: u32 = 4;
+
+/// Outcome of a non-blocking [`LaneQueue`] push.
+enum PushError {
+    /// Queue at capacity (or bulk shed under brownout tier 3); the
+    /// work is handed back for the blocking path.
+    Full(Work),
+    /// Every handle dropped: the service is shutting down.
+    Closed,
+}
+
+/// Bounded two-lane admission queue with weighted dequeue — the
+/// priority-admission leg of the overload-brownout subsystem. Replaces
+/// the old single `sync_channel`: one shared capacity bound (so the
+/// backpressure story is unchanged), but interactive work overtakes
+/// queued bulk batches instead of waiting behind them.
+struct LaneQueue {
+    state: Mutex<LaneState>,
+    /// Signaled on push and close (workers wait here).
+    work: Condvar,
+    /// Signaled on drain and close (blocked senders wait here).
+    space: Condvar,
+    capacity: usize,
+    /// Brownout `shed` tier: reject bulk admissions outright (set by
+    /// the controller, checked lock-free on the push paths).
+    shed_bulk: AtomicBool,
+}
+
+struct LaneState {
+    interactive: VecDeque<Work>,
+    bulk: VecDeque<Work>,
+    /// Consecutive interactive picks while bulk waited.
+    streak: u32,
+    /// Live [`ServiceHandle`] count; 0 closes the queue.
+    senders: usize,
+    closed: bool,
+}
+
+/// Poison-tolerant lock: a panicking worker must never wedge the queue
+/// for its respawned replacement or for submitters.
+fn lane_lock(queue: &LaneQueue) -> MutexGuard<'_, LaneState> {
+    match queue.state.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+impl LaneQueue {
+    fn new(capacity: usize) -> Self {
+        Self {
+            state: Mutex::new(LaneState {
+                interactive: VecDeque::new(),
+                bulk: VecDeque::new(),
+                streak: 0,
+                senders: 1,
+                closed: false,
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            capacity,
+            shed_bulk: AtomicBool::new(false),
+        }
+    }
+
+    /// Weighted pick under the lock: interactive preferred; every
+    /// [`BULK_EVERY`]-th pick takes bulk when both lanes are non-empty.
+    fn pick(state: &mut LaneState) -> Option<Work> {
+        let take_bulk = if state.interactive.is_empty() {
+            true
+        } else if state.bulk.is_empty() {
+            false
+        } else {
+            state.streak >= BULK_EVERY - 1
+        };
+        if take_bulk {
+            if let Some(work) = state.bulk.pop_front() {
+                state.streak = 0;
+                return Some(work);
+            }
+        }
+        let work = state.interactive.pop_front();
+        if work.is_some() {
+            state.streak = state.streak.saturating_add(1);
+        }
+        work
+    }
+
+    /// Non-blocking push. Bulk pushes are rejected outright while the
+    /// brownout controller holds the shard in its `shed` tier.
+    fn try_push(&self, work: Work, lane: Lane) -> Result<(), PushError> {
+        if lane == Lane::Bulk && self.shed_bulk.load(Ordering::Relaxed) {
+            return Err(PushError::Full(work));
+        }
+        let mut st = lane_lock(self);
+        if st.closed {
+            return Err(PushError::Closed);
+        }
+        if st.interactive.len() + st.bulk.len() >= self.capacity {
+            return Err(PushError::Full(work));
+        }
+        match lane {
+            Lane::Interactive => st.interactive.push_back(work),
+            Lane::Bulk => st.bulk.push_back(work),
+        }
+        drop(st);
+        self.work.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits for queue room (backpressure), failing only
+    /// on shutdown — or immediately for bulk work under the `shed` tier
+    /// (brownout sheds bulk, it does not buffer it).
+    fn push_blocking(&self, work: Work, lane: Lane) -> Result<(), ()> {
+        if lane == Lane::Bulk && self.shed_bulk.load(Ordering::Relaxed) {
+            return Err(());
+        }
+        let mut st = lane_lock(self);
+        loop {
+            if st.closed {
+                return Err(());
+            }
+            if st.interactive.len() + st.bulk.len() < self.capacity {
+                match lane {
+                    Lane::Interactive => st.interactive.push_back(work),
+                    Lane::Bulk => st.bulk.push_back(work),
+                }
+                drop(st);
+                self.work.notify_one();
+                return Ok(());
+            }
+            st = match self.space.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// Blocking weighted drain: waits for the first unit, then
+    /// opportunistically fills `batch` up to `max_batch` — dynamic
+    /// batching without a timer, exactly as the old channel drain.
+    /// Returns `false` when the queue is closed and fully drained.
+    fn drain(&self, batch: &mut Vec<Work>, max_batch: usize) -> bool {
+        let mut st = lane_lock(self);
+        loop {
+            if let Some(first) = Self::pick(&mut st) {
+                batch.push(first);
+                break;
+            }
+            if st.closed {
+                return false;
+            }
+            st = match self.work.wait(st) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        while batch.len() < max_batch {
+            match Self::pick(&mut st) {
+                Some(work) => batch.push(work),
+                None => break,
+            }
+        }
+        drop(st); // lock released before compute
+        self.space.notify_all();
+        true
+    }
+
+    /// Whether every handle has dropped (the brownout controller's exit
+    /// signal).
+    fn is_closed(&self) -> bool {
+        lane_lock(self).closed
+    }
+
+    /// Flip bulk shedding (brownout tier 3).
+    fn set_shed_bulk(&self, shed: bool) {
+        self.shed_bulk.store(shed, Ordering::Relaxed);
+    }
+}
+
 /// Handle for submitting requests to a running service. Cloneable;
 /// dropping every handle shuts the workers down.
-#[derive(Clone)]
 pub struct ServiceHandle {
-    tx: SyncSender<Work>,
+    queue: Arc<LaneQueue>,
     /// Work units currently waiting in the admission queue. Incremented
     /// *before* a send attempt (and rolled back on rejection) so the
     /// counter is always ≥ the true occupancy — never underflowing when
@@ -943,6 +1239,28 @@ pub struct ServiceHandle {
     depth: Arc<AtomicUsize>,
     /// The queue's capacity bound.
     capacity: usize,
+}
+
+impl Clone for ServiceHandle {
+    fn clone(&self) -> Self {
+        lane_lock(&self.queue).senders += 1;
+        Self { queue: Arc::clone(&self.queue), depth: Arc::clone(&self.depth), capacity: self.capacity }
+    }
+}
+
+impl Drop for ServiceHandle {
+    fn drop(&mut self) {
+        let mut st = lane_lock(&self.queue);
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            // Wake draining workers and blocked senders so they observe
+            // the close.
+            self.queue.work.notify_all();
+            self.queue.space.notify_all();
+        }
+    }
 }
 
 impl ServiceHandle {
@@ -962,18 +1280,26 @@ impl ServiceHandle {
 
     fn call(&self, features: impl Into<Features>, kind: ReqKind) -> Option<ScoreResponse> {
         let (tx, rx) = sync_channel(1);
-        let work = Work::One(ScoreRequest { features: features.into(), kind, respond: tx });
+        let work = Work {
+            payload: Payload::One(ScoreRequest {
+                features: features.into(),
+                kind,
+                deadline: None,
+                respond: tx,
+            }),
+            enqueued: Instant::now(),
+        };
         self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(work) {
+        match self.queue.try_push(work, Lane::Interactive) {
             Ok(()) => {}
-            Err(TrySendError::Full(req)) => {
+            Err(PushError::Full(req)) => {
                 // Block on a full queue (backpressure) rather than dropping.
-                if self.tx.send(req).is_err() {
+                if self.queue.push_blocking(req, Lane::Interactive).is_err() {
                     self.depth.fetch_sub(1, Ordering::Relaxed);
                     return None;
                 }
             }
-            Err(TrySendError::Disconnected(_)) => {
+            Err(PushError::Closed) => {
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 return None;
             }
@@ -1001,16 +1327,36 @@ impl ServiceHandle {
         features: impl Into<Features>,
         kind: ReqKind,
     ) -> Result<Receiver<ScoreResponse>, SubmitError> {
+        self.submit_opts(features, kind, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_kind`] with per-request admission options: an
+    /// absolute deadline (checked at dequeue) and/or a lane override
+    /// (singles default to the interactive lane).
+    pub fn submit_opts(
+        &self,
+        features: impl Into<Features>,
+        kind: ReqKind,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<ScoreResponse>, SubmitError> {
         let (tx, rx) = sync_channel(1);
-        let work = Work::One(ScoreRequest { features: features.into(), kind, respond: tx });
+        let work = Work {
+            payload: Payload::One(ScoreRequest {
+                features: features.into(),
+                kind,
+                deadline: opts.deadline,
+                respond: tx,
+            }),
+            enqueued: Instant::now(),
+        };
         self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(work) {
+        match self.queue.try_push(work, opts.lane.unwrap_or(Lane::Interactive)) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 Err(match e {
-                    TrySendError::Full(_) => SubmitError::Overloaded,
-                    TrySendError::Disconnected(_) => SubmitError::Closed,
+                    PushError::Full(_) => SubmitError::Overloaded,
+                    PushError::Closed => SubmitError::Closed,
                 })
             }
         }
@@ -1026,15 +1372,33 @@ impl ServiceHandle {
         &self,
         examples: Vec<Features>,
     ) -> Result<Receiver<Vec<ScoreResponse>>, SubmitError> {
+        self.submit_batch_opts(examples, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_batch`] with per-request admission options
+    /// (batches default to the bulk lane).
+    pub fn submit_batch_opts(
+        &self,
+        examples: Vec<Features>,
+        opts: SubmitOpts,
+    ) -> Result<Receiver<Vec<ScoreResponse>>, SubmitError> {
         let (tx, rx) = sync_channel(1);
+        let work = Work {
+            payload: Payload::Batch(BatchRequest {
+                examples,
+                deadline: opts.deadline,
+                respond: tx,
+            }),
+            enqueued: Instant::now(),
+        };
         self.depth.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(Work::Batch(BatchRequest { examples, respond: tx })) {
+        match self.queue.try_push(work, opts.lane.unwrap_or(Lane::Bulk)) {
             Ok(()) => Ok(rx),
             Err(e) => {
                 self.depth.fetch_sub(1, Ordering::Relaxed);
                 Err(match e {
-                    TrySendError::Full(_) => SubmitError::Overloaded,
-                    TrySendError::Disconnected(_) => SubmitError::Closed,
+                    PushError::Full(_) => SubmitError::Overloaded,
+                    PushError::Closed => SubmitError::Closed,
                 })
             }
         }
@@ -1060,6 +1424,10 @@ pub struct PredictionService {
     pub workers: usize,
     seed: u64,
     notifier: CompletionNotifier,
+    /// Overload-brownout controller config; `None` (the default) spawns
+    /// no controller and keeps scoring bit-identical to the undegraded
+    /// path.
+    brownout: Option<BrownoutConfig>,
 }
 
 /// A running service: join handles + stats.
@@ -1095,6 +1463,7 @@ impl PredictionService {
             workers: 1,
             seed,
             notifier: CompletionNotifier::default(),
+            brownout: None,
         }
     }
 
@@ -1111,16 +1480,23 @@ impl PredictionService {
         self
     }
 
+    /// Run the overload-brownout controller over this service (see
+    /// [`BrownoutConfig`]); `None` disables it.
+    pub fn with_brownout(mut self, brownout: Option<BrownoutConfig>) -> Self {
+        self.brownout = brownout;
+        self
+    }
+
     /// Start the workers. Returns a request handle and the running
     /// service (stats + joins).
     pub fn spawn(self) -> (ServiceHandle, RunningService) {
-        let (tx, rx) = sync_channel::<Work>(self.queue);
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(LaneQueue::new(self.queue));
         let stats = Arc::new(ServiceStats::default());
         let depth = Arc::new(AtomicUsize::new(0));
+        let tighten = self.brownout.as_ref().map(|b| b.tighten);
         let mut handles = Vec::new();
         for worker_id in 0..self.workers {
-            let rx = rx.clone();
+            let queue = queue.clone();
             let model = self.model.clone();
             let stats = stats.clone();
             let depth = depth.clone();
@@ -1131,17 +1507,18 @@ impl PredictionService {
             // already contained inside the loop, so this outer loop is
             // the backstop that keeps a shard from wedging if a panic
             // slips out anywhere else in the worker body. A normal
-            // channel-closed exit breaks out.
+            // queue-closed exit breaks out.
             handles.push(std::thread::spawn(move || loop {
                 let body = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     worker_loop(
-                        rx.clone(),
+                        queue.clone(),
                         model.clone(),
                         stats.clone(),
                         depth.clone(),
                         max_batch,
                         seed,
                         notifier.clone(),
+                        tighten,
                     )
                 }));
                 match body {
@@ -1152,50 +1529,125 @@ impl PredictionService {
                 }
             }));
         }
-        (ServiceHandle { tx, depth, capacity: self.queue }, RunningService { stats, handles })
+        if let Some(cfg) = self.brownout {
+            let queue = queue.clone();
+            let stats = stats.clone();
+            let depth = depth.clone();
+            let capacity = self.queue;
+            handles.push(std::thread::spawn(move || {
+                brownout_controller(&queue, &stats, &depth, capacity, &cfg)
+            }));
+        }
+        (
+            ServiceHandle { queue, depth, capacity: self.queue },
+            RunningService { stats, handles },
+        )
     }
 }
 
-/// Blocking receive for the first request, opportunistic drain for the
-/// rest — dynamic batching without a timer. Returns `false` when every
-/// sender has dropped (worker should exit).
-fn drain_batch(rx: &Mutex<Receiver<Work>>, batch: &mut Vec<Work>, max_batch: usize) -> bool {
-    // Poison-tolerant: a respawned worker must keep draining even if a
-    // sibling panicked while holding the receiver lock.
-    let guard = match rx.lock() {
-        Ok(g) => g,
-        Err(poisoned) => poisoned.into_inner(),
-    };
-    match guard.recv() {
-        Ok(first) => batch.push(first),
-        Err(_) => return false, // all senders dropped
-    }
-    while batch.len() < max_batch {
-        match guard.try_recv() {
-            Ok(req) => batch.push(req),
-            Err(_) => break,
+/// Highest brownout tier (`shed`): tier 2's tightened boundary plus
+/// outright rejection of bulk-lane admissions.
+const MAX_TIER: u64 = 3;
+
+/// The brownout feedback loop, one thread per spawned service
+/// generation: every `sample_ms` it reads queue occupancy (and, when a
+/// latency target is configured, a queue-wait EWMA from the workers'
+/// dequeue-time accounting) into a pressure signal in [0, 1], then
+/// walks the tier gauge one step at a time with hysteresis — pressure
+/// must sit above `enter` (or below `exit`) for a full `dwell_ms`
+/// before a transition fires, and each further step needs its own
+/// dwell. Exits when every [`ServiceHandle`] has dropped.
+fn brownout_controller(
+    queue: &LaneQueue,
+    stats: &ServiceStats,
+    depth: &AtomicUsize,
+    capacity: usize,
+    cfg: &BrownoutConfig,
+) {
+    let mut tier: u64 = 0;
+    let mut ewma_us: f64 = 0.0;
+    let mut last_wait_us: u64 = 0;
+    let mut last_samples: u64 = 0;
+    // A pending transition: direction (+1 / -1) and when its condition
+    // first held.
+    let mut pending: Option<(i64, Instant)> = None;
+    while !queue.is_closed() {
+        std::thread::sleep(Duration::from_millis(cfg.sample_ms.max(1)));
+        let occupancy = depth.load(Ordering::Relaxed).min(capacity) as f64 / capacity as f64;
+        let mut pressure = occupancy;
+        if cfg.latency_target_us > 0 {
+            let wait_us = stats.wait_us.load(Ordering::Relaxed);
+            let samples = stats.wait_samples.load(Ordering::Relaxed);
+            let delta_n = samples.saturating_sub(last_samples);
+            if delta_n > 0 {
+                let sample = wait_us.saturating_sub(last_wait_us) as f64 / delta_n as f64;
+                ewma_us = if last_samples == 0 { sample } else { 0.2 * sample + 0.8 * ewma_us };
+            }
+            last_wait_us = wait_us;
+            last_samples = samples;
+            pressure = pressure.max((ewma_us / cfg.latency_target_us as f64).min(1.0));
+        }
+        let direction: i64 = if pressure > cfg.enter && tier < MAX_TIER {
+            1
+        } else if pressure < cfg.exit && tier > 0 {
+            -1
+        } else {
+            0
+        };
+        if direction == 0 {
+            pending = None;
+            continue;
+        }
+        let now = Instant::now();
+        match pending {
+            Some((dir, since)) if dir == direction => {
+                if now.duration_since(since) >= Duration::from_millis(cfg.dwell_ms) {
+                    tier = (tier as i64 + direction) as u64;
+                    stats.tier.store(tier, Ordering::Relaxed);
+                    stats.tier_transitions.fetch_add(1, Ordering::Relaxed);
+                    queue.set_shed_bulk(tier >= MAX_TIER);
+                    // The next step (either direction) needs its own
+                    // dwell.
+                    pending = None;
+                }
+            }
+            _ => pending = Some((direction, now)),
         }
     }
-    true // lock released on return, before compute
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    rx: Arc<Mutex<Receiver<Work>>>,
+    queue: Arc<LaneQueue>,
     model: Arc<ServingModel>,
     stats: Arc<ServiceStats>,
     depth: Arc<AtomicUsize>,
     max_batch: usize,
     seed: u64,
     notifier: CompletionNotifier,
+    tighten: Option<f64>,
 ) {
     match &*model {
         ServingModel::Binary(snapshot) => {
-            binary_worker(&rx, snapshot, &stats, &depth, max_batch, seed, &notifier)
+            binary_worker(&queue, snapshot, &stats, &depth, max_batch, seed, &notifier, tighten)
         }
         ServingModel::Ensemble(ensemble) => {
-            ensemble_worker(&rx, ensemble, &stats, &depth, max_batch, seed, &notifier)
+            ensemble_worker(&queue, ensemble, &stats, &depth, max_batch, seed, &notifier)
         }
     }
+}
+
+/// Dequeue-time bookkeeping shared by both workers: attribute the
+/// unit's queue wait (the brownout controller's latency signal) and
+/// decide whether its deadline already expired — doomed work is
+/// answered `DEADLINE_EXCEEDED` without scoring, which is the whole
+/// point of carrying deadlines to the worker. One clock read per unit.
+fn dequeue_check(stats: &ServiceStats, enqueued: Instant, deadline: Option<Instant>) -> bool {
+    let now = Instant::now();
+    let waited = now.duration_since(enqueued).as_micros() as u64;
+    stats.wait_us.fetch_add(waited, Ordering::Relaxed);
+    stats.wait_samples.fetch_add(1, Ordering::Relaxed);
+    matches!(deadline, Some(dl) if now >= dl)
 }
 
 /// The reject sentinel for a request the hub's screens should have
@@ -1203,7 +1655,13 @@ fn worker_loop(
 /// past admission across a reload): the NaN score renders as a
 /// structured error at the front-end.
 fn reject() -> ScoreResponse {
-    ScoreResponse { score: f64::NAN, features_evaluated: 0, classify: None, per_voter: None }
+    ScoreResponse {
+        score: f64::NAN,
+        features_evaluated: 0,
+        classify: None,
+        per_voter: None,
+        degraded: false,
+    }
 }
 
 /// Score one example against a binary snapshot — the single hot path
@@ -1234,7 +1692,16 @@ fn score_one(
             (s, k, idx.len())
         }
     };
-    (ScoreResponse { score, features_evaluated: k, classify: None, per_voter: None }, total)
+    (
+        ScoreResponse {
+            score,
+            features_evaluated: k,
+            classify: None,
+            per_voter: None,
+            degraded: false,
+        },
+        total,
+    )
 }
 
 /// [`score_one`] behind `catch_unwind`: a panic mid-evaluation (a
@@ -1247,6 +1714,7 @@ fn score_one_contained(
     model: &ModelSnapshot,
     orders: &mut OrderGenerator,
     table: &mut TableCache,
+    tighten: f64,
     features: &Features,
     stats: &ServiceStats,
     seed: u64,
@@ -1262,20 +1730,56 @@ fn score_one_contained(
             let dim = model.weights.len();
             *orders = OrderGenerator::new(model.policy, seed);
             orders.refresh(&model.weights);
-            *table = TableCache::new(model.boundary.clone(), model.var_sn, dim);
+            // Rebuild at the same brownout tier the torn cache served.
+            *table = TableCache::new_scaled(model.boundary.clone(), model.var_sn, dim, tighten);
             (ScoreResponse::internal_fault(), dim)
         }
     }
 }
 
+/// The per-tier threshold tables a binary worker scores against. Tier 0
+/// is always the plain construction path (bit-identical to a server
+/// with brownout disabled); brown tiers hold the same boundary with τ
+/// pre-scaled by `tighten` and `tighten²`, so switching tiers is an
+/// index load — no math on the hot path.
+struct TierTables {
+    tables: Vec<(f64, TableCache)>,
+}
+
+impl TierTables {
+    fn new(model: &ModelSnapshot, dim: usize, tighten: Option<f64>) -> Self {
+        let mut tables = vec![(1.0, TableCache::new(model.boundary.clone(), model.var_sn, dim))];
+        if let Some(t) = tighten {
+            for factor in [t, t * t] {
+                tables.push((
+                    factor,
+                    TableCache::new_scaled(model.boundary.clone(), model.var_sn, dim, factor),
+                ));
+            }
+        }
+        Self { tables }
+    }
+
+    /// `(tighten, cache)` for the current tier. Tier 3 (shed) scores
+    /// surviving interactive traffic at the brown-2 tables.
+    fn select(&mut self, stats: &ServiceStats) -> (f64, &mut TableCache, bool) {
+        let tier = stats.tier.load(Ordering::Relaxed) as usize;
+        let idx = tier.min(self.tables.len() - 1);
+        let entry = &mut self.tables[idx];
+        (entry.0, &mut entry.1, idx > 0)
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn binary_worker(
-    rx: &Mutex<Receiver<Work>>,
+    queue: &LaneQueue,
     model: &ModelSnapshot,
     stats: &ServiceStats,
     depth: &AtomicUsize,
     max_batch: usize,
     seed: u64,
     notifier: &CompletionNotifier,
+    tighten: Option<f64>,
 ) {
     let mut orders = OrderGenerator::new(model.policy, seed);
     orders.refresh(&model.weights);
@@ -1283,26 +1787,37 @@ fn binary_worker(
     // Stop thresholds depend only on (boundary, var_sn, walk length) —
     // constant per snapshot — so the sqrt-laden closed forms are
     // evaluated once here, not per feature (see stst::BoundaryTable).
-    let mut table = TableCache::new(model.boundary.clone(), model.var_sn, dim);
+    // With brownout enabled that cost is paid once per tier up front.
+    let mut tiers = TierTables::new(model, dim, tighten);
     let mut batch: Vec<Work> = Vec::with_capacity(max_batch);
-    while drain_batch(rx, &mut batch, max_batch) {
+    while queue.drain(&mut batch, max_batch) {
         depth.fetch_sub(batch.len(), Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         for work in batch.drain(..) {
-            match work {
-                Work::One(req) => {
+            // Tier is re-read per work unit, not per batch: a controller
+            // transition mid-drain takes effect on the next example.
+            let (factor, table, browned) = tiers.select(stats);
+            match work.payload {
+                Payload::One(req) => {
+                    if dequeue_check(stats, work.enqueued, req.deadline) {
+                        stats.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.respond.send(ScoreResponse::deadline_exceeded());
+                        notifier.notify();
+                        continue;
+                    }
                     // Dimension-mismatch rejects land in bucket 0 and
                     // count as "early exit"; the network front-end
                     // screens those out before admission, so served
                     // traffic keeps the histogram honest.
-                    let (resp, total) =
+                    let (mut resp, total) =
                         if req.kind != ReqKind::Score || req.features.check_dim(dim).is_err() {
                             (reject(), dim)
                         } else {
                             score_one_contained(
                                 model,
                                 &mut orders,
-                                &mut table,
+                                table,
+                                factor,
                                 &req.features,
                                 stats,
                                 seed,
@@ -1310,23 +1825,40 @@ fn binary_worker(
                         };
                     if !resp.is_internal_fault() {
                         stats.record(resp.features_evaluated, total);
+                        if browned {
+                            resp.degraded = true;
+                            stats.degraded.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     let _ = req.respond.send(resp);
                     notifier.notify();
                 }
-                Work::Batch(b) => {
+                Payload::Batch(b) => {
+                    if dequeue_check(stats, work.enqueued, b.deadline) {
+                        // The whole batch is doomed together — one
+                        // deadline covers it, shed counts per example.
+                        stats
+                            .deadline_sheds
+                            .fetch_add(b.examples.len() as u64, Ordering::Relaxed);
+                        let out =
+                            vec![ScoreResponse::deadline_exceeded(); b.examples.len()];
+                        let _ = b.respond.send(out);
+                        notifier.notify();
+                        continue;
+                    }
                     // One wakeup, k examples: scored back-to-back in
                     // submission order. A bad example rejects alone;
                     // the rest of the batch is unaffected.
                     let mut out = Vec::with_capacity(b.examples.len());
                     for features in &b.examples {
-                        let (resp, total) = if features.check_dim(dim).is_err() {
+                        let (mut resp, total) = if features.check_dim(dim).is_err() {
                             (reject(), dim)
                         } else {
                             score_one_contained(
                                 model,
                                 &mut orders,
-                                &mut table,
+                                table,
+                                factor,
                                 features,
                                 stats,
                                 seed,
@@ -1334,6 +1866,10 @@ fn binary_worker(
                         };
                         if !resp.is_internal_fault() {
                             stats.record(resp.features_evaluated, total);
+                            if browned {
+                                resp.degraded = true;
+                                stats.degraded.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                         out.push(resp);
                     }
@@ -1346,7 +1882,7 @@ fn binary_worker(
 }
 
 fn ensemble_worker(
-    rx: &Mutex<Receiver<Work>>,
+    queue: &LaneQueue,
     ensemble: &EnsembleSnapshot,
     stats: &ServiceStats,
     depth: &AtomicUsize,
@@ -1358,16 +1894,28 @@ fn ensemble_worker(
     let mut batch: Vec<Work> = Vec::with_capacity(max_batch);
     let dim = ensemble.dim();
     let voters = ensemble.voter_count();
-    while drain_batch(rx, &mut batch, max_batch) {
+    while queue.drain(&mut batch, max_batch) {
         depth.fetch_sub(batch.len(), Ordering::Relaxed);
         stats.batches.fetch_add(1, Ordering::Relaxed);
         for work in batch.drain(..) {
-            match work {
-                Work::One(req) => {
+            // Ensembles share one per-voter order stream across tiers, so
+            // brownout cannot swap their tables without forking the
+            // stream (documented limitation); deadlines and the degraded
+            // flag still apply — a browned ensemble keeps scoring at full
+            // attention but tells the client pressure is on.
+            let browned = stats.tier.load(Ordering::Relaxed) > 0;
+            match work.payload {
+                Payload::One(req) => {
+                    if dequeue_check(stats, work.enqueued, req.deadline) {
+                        stats.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.respond.send(ScoreResponse::deadline_exceeded());
+                        notifier.notify();
+                        continue;
+                    }
                     // "Full evaluation" for the ensemble is every voter
                     // walking the whole support; early-exit accounting
                     // runs against that.
-                    let (resp, total) = if req.kind.base() != ReqKind::Classify
+                    let (mut resp, total) = if req.kind.base() != ReqKind::Classify
                         || req.features.check_dim(dim).is_err()
                     {
                         (reject(), dim * voters)
@@ -1391,11 +1939,25 @@ fn ensemble_worker(
                     };
                     if !resp.is_internal_fault() {
                         stats.record(resp.features_evaluated, total);
+                        if browned {
+                            resp.degraded = true;
+                            stats.degraded.fetch_add(1, Ordering::Relaxed);
+                        }
                     }
                     let _ = req.respond.send(resp);
                     notifier.notify();
                 }
-                Work::Batch(b) => {
+                Payload::Batch(b) => {
+                    if dequeue_check(stats, work.enqueued, b.deadline) {
+                        stats
+                            .deadline_sheds
+                            .fetch_add(b.examples.len() as u64, Ordering::Relaxed);
+                        let out =
+                            vec![ScoreResponse::deadline_exceeded(); b.examples.len()];
+                        let _ = b.respond.send(out);
+                        notifier.notify();
+                        continue;
+                    }
                     // Score batches are a binary-shard op; the hub
                     // screens the kind before admission, so this is the
                     // library-caller reject path, per example.
@@ -2001,6 +2563,240 @@ mod tests {
             .unwrap();
         assert_eq!(out.len(), 3);
         assert!(out.iter().all(|r| r.score.is_nan()), "score batch needs a binary shard");
+        drop(h);
+        run.join();
+    }
+
+    /// A throwaway interactive work unit for direct [`LaneQueue`] tests.
+    fn lane_unit(interactive: bool) -> Work {
+        let payload = if interactive {
+            let (tx, _rx) = sync_channel(1);
+            Payload::One(ScoreRequest {
+                features: Features::Dense(vec![1.0]),
+                kind: ReqKind::Score,
+                deadline: None,
+                respond: tx,
+            })
+        } else {
+            let (tx, _rx) = sync_channel(1);
+            Payload::Batch(BatchRequest { examples: Vec::new(), deadline: None, respond: tx })
+        };
+        Work { payload, enqueued: Instant::now() }
+    }
+
+    #[test]
+    fn weighted_dequeue_prefers_interactive_without_starving_bulk() {
+        let q = LaneQueue::new(32);
+        for _ in 0..8 {
+            assert!(q.try_push(lane_unit(true), Lane::Interactive).is_ok());
+        }
+        for _ in 0..8 {
+            assert!(q.try_push(lane_unit(false), Lane::Bulk).is_ok());
+        }
+        let mut batch = Vec::new();
+        assert!(q.drain(&mut batch, 16));
+        assert_eq!(batch.len(), 16);
+        let picks: Vec<bool> = batch
+            .iter()
+            .map(|w| matches!(w.payload, Payload::Batch(_)))
+            .collect();
+        // Interactive overtakes queued bulk, but every BULK_EVERY-th
+        // pick serves the bulk lane while both are non-empty; once
+        // interactive is dry, the remaining bulk drains straight out.
+        let expected_bulk = [3usize, 7, 10, 11, 12, 13, 14, 15];
+        for (i, &is_bulk) in picks.iter().enumerate() {
+            assert_eq!(is_bulk, expected_bulk.contains(&i), "pick {i} of {picks:?}");
+        }
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_dequeue_not_scored() {
+        let dim = 32;
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0).spawn();
+        // A deadline stamped before submission has always expired by
+        // dequeue time (monotonic clock, `now >= deadline` sheds).
+        let past = SubmitOpts { deadline: Some(Instant::now()), lane: None };
+        let resp = h
+            .submit_opts(vec![1.0; dim], ReqKind::Score, past)
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(resp.is_deadline_exceeded());
+        assert!(resp.score.is_nan());
+        assert!(!resp.is_internal_fault(), "distinct sentinel from internal faults");
+        // A whole expired batch answers the sentinel in every slot and
+        // counts one shed per example.
+        let out = h
+            .submit_batch_opts(
+                batch_examples(dim, 3),
+                SubmitOpts { deadline: Some(Instant::now()), lane: None },
+            )
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out.iter().all(|r| r.is_deadline_exceeded()));
+        // A generous deadline scores normally — the common no-pressure case.
+        let future = SubmitOpts {
+            deadline: Some(Instant::now() + Duration::from_secs(3600)),
+            lane: None,
+        };
+        let resp = h
+            .submit_opts(vec![1.0; dim], ReqKind::Score, future)
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert!(resp.score > 0.0);
+        drop(h);
+        run.join();
+        let s = run.stats.snapshot();
+        assert_eq!(s.deadline_sheds, 4, "1 single + 3 batch slots");
+        assert_eq!(s.served, 1, "shed work never reaches the scorer");
+    }
+
+    #[test]
+    fn brownout_controller_climbs_and_recovers_with_hysteresis() {
+        let capacity = 8;
+        let q = Arc::new(LaneQueue::new(capacity));
+        let stats = Arc::new(ServiceStats::default());
+        let depth = Arc::new(AtomicUsize::new(capacity)); // occupancy 1.0
+        let cfg = BrownoutConfig {
+            tighten: 0.5,
+            enter: 0.75,
+            exit: 0.35,
+            dwell_ms: 5,
+            sample_ms: 1,
+            latency_target_us: 0,
+        };
+        let (qc, sc, dc) = (q.clone(), stats.clone(), depth.clone());
+        let t = std::thread::spawn(move || brownout_controller(&qc, &sc, &dc, capacity, &cfg));
+        let wait_for = |what: &str, cond: &dyn Fn() -> bool| {
+            let start = Instant::now();
+            while !cond() {
+                assert!(start.elapsed() < Duration::from_secs(10), "timed out waiting: {what}");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        };
+        // Sustained saturation walks the gauge one dwell at a time up to
+        // the shed tier, which flips bulk shedding on.
+        wait_for("tier 3", &|| stats.tier.load(Ordering::Relaxed) == MAX_TIER);
+        assert!(q.shed_bulk.load(Ordering::Relaxed));
+        // Pressure release walks it back down and re-opens the bulk lane.
+        depth.store(0, Ordering::Relaxed);
+        wait_for("tier 0", &|| stats.tier.load(Ordering::Relaxed) == 0);
+        assert!(!q.shed_bulk.load(Ordering::Relaxed));
+        assert!(
+            stats.tier_transitions.load(Ordering::Relaxed) >= 6,
+            "3 steps up + 3 steps down"
+        );
+        lane_lock(&q).closed = true;
+        t.join().unwrap();
+    }
+
+    fn budgeted_model(dim: usize, k: usize) -> ModelSnapshot {
+        ModelSnapshot {
+            weights: vec![1.0; dim],
+            var_sn: 4.0,
+            boundary: AnyBoundary::Budgeted { k },
+            policy: CoordinatePolicy::Sequential,
+        }
+    }
+
+    /// The brownout config used by tests that force the tier gauge by
+    /// hand: `enter` at 1.0 is unreachable (pressure is capped at 1.0
+    /// and must strictly exceed it), so the controller never moves the
+    /// gauge on its own.
+    fn inert_brownout(tighten: f64) -> BrownoutConfig {
+        BrownoutConfig {
+            tighten,
+            enter: 1.0,
+            exit: 0.01,
+            dwell_ms: 1,
+            sample_ms: 1,
+            latency_target_us: 0,
+        }
+    }
+
+    #[test]
+    fn brown_tiers_cut_features_evaluated_and_flag_degraded() {
+        let dim = 64;
+        // Oscillating input never crosses a boundary, so a budget-48
+        // walk runs to its cap — the feature spend per tier is exact:
+        // 48, then 48·0.5 = 24, then 48·0.25 = 12.
+        let hard: Vec<f64> = (0..dim).map(|i| if i % 2 == 0 { 0.01 } else { -0.01 }).collect();
+        let (h, run) = PredictionService::new(budgeted_model(dim, 48), 4, 16, 0)
+            .with_brownout(Some(inert_brownout(0.5)))
+            .spawn();
+        let resp = h.score(hard.clone()).unwrap();
+        assert_eq!(resp.features_evaluated, 48, "tier 0 scores at the plain budget");
+        assert!(!resp.degraded);
+        run.stats.tier.store(1, Ordering::Relaxed);
+        let resp = h.score(hard.clone()).unwrap();
+        assert_eq!(resp.features_evaluated, 24, "brown-1 halves the budget");
+        assert!(resp.degraded);
+        // Tiers past the table set (shed keeps scoring survivors) clamp
+        // to the deepest brown table.
+        run.stats.tier.store(MAX_TIER, Ordering::Relaxed);
+        let resp = h.score(hard).unwrap();
+        assert_eq!(resp.features_evaluated, 12, "tier 3 clamps to the tighten² table");
+        assert!(resp.degraded);
+        drop(h);
+        run.join();
+        let s = run.stats.snapshot();
+        assert_eq!(s.degraded, 2, "only brown-tier answers count as degraded");
+        assert_eq!(s.served, 3);
+    }
+
+    #[test]
+    fn brownout_disabled_and_tier_zero_are_bit_identical() {
+        let dim = 64;
+        let examples = batch_examples(dim, 9);
+        let (h_plain, run_plain) = PredictionService::new(model(dim), 8, 64, 42).spawn();
+        let (h_brown, run_brown) = PredictionService::new(model(dim), 8, 64, 42)
+            .with_brownout(Some(inert_brownout(0.5)))
+            .spawn();
+        for (i, features) in examples.iter().enumerate() {
+            let a = h_plain.score(features.clone()).unwrap();
+            let b = h_brown.score(features.clone()).unwrap();
+            assert_eq!(a.score.to_bits(), b.score.to_bits(), "example {i} score");
+            assert_eq!(a.features_evaluated, b.features_evaluated, "example {i} spend");
+            assert!(!b.degraded, "tier 0 answers are never flagged");
+        }
+        drop(h_plain);
+        drop(h_brown);
+        run_plain.join();
+        run_brown.join();
+        let (sp, sb) = (run_plain.stats.snapshot(), run_brown.stats.snapshot());
+        assert_eq!(sp.features, sb.features);
+        assert_eq!(sp.hist, sb.hist);
+        assert_eq!(sb.degraded, 0);
+        assert_eq!(sb.tier_transitions, 0);
+    }
+
+    #[test]
+    fn shed_tier_rejects_bulk_admissions_but_keeps_interactive() {
+        let dim = 16;
+        let (h, run) = PredictionService::new(model(dim), 4, 16, 0).spawn();
+        h.queue.set_shed_bulk(true);
+        let err = h.submit_batch(batch_examples(dim, 2)).unwrap_err();
+        assert!(matches!(err, SubmitError::Overloaded), "bulk is shed, not buffered");
+        let (load, _) = h.queue_load();
+        assert_eq!(load, 0, "rejected batch rolls its depth bump back");
+        // Interactive singles — including the blocking path — still land.
+        assert!(h.score(vec![1.0; dim]).unwrap().score > 0.0);
+        // A lane override routes a batch around the shed.
+        let out = h
+            .submit_batch_opts(
+                batch_examples(dim, 2),
+                SubmitOpts { deadline: None, lane: Some(Lane::Interactive) },
+            )
+            .unwrap()
+            .recv()
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        h.queue.set_shed_bulk(false);
+        let out = h.submit_batch(batch_examples(dim, 2)).unwrap().recv().unwrap();
+        assert_eq!(out.len(), 2);
         drop(h);
         run.join();
     }

@@ -150,6 +150,14 @@ const BLOCK: usize = 16;
 /// The `(score, features_evaluated)` pair is guaranteed equal — as in
 /// `assert_eq!`, not approximately — to [`EarlyStopPredictor`] driven by
 /// the boundary the table was built from.
+///
+/// Under overload brownout the serving layer swaps in a table built by
+/// `BoundaryTable::for_boundary_scaled` with `tighten < 1`: every stop
+/// level shrinks multiplicatively, so a tightened walk stops **no
+/// later** than the plain one on the same example (the partial sums are
+/// identical up to the earlier stop; only the exit step can move, and
+/// only downward). `tighten = 1` is the plain table, bit-identical —
+/// tier 0 costs nothing.
 #[derive(Debug, Clone, Copy)]
 pub struct TabledPredictor<'t> {
     table: &'t BoundaryTable,
@@ -407,6 +415,48 @@ mod tests {
                         scalar.predict_sparse(&w, &idx, &val, &order, var_sn),
                         "{} nnz={nnz} var={var_sn}",
                         boundary.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tightened_tables_stop_no_later_than_plain() {
+        // The brownout guarantee: scaling every stop level down by
+        // `tighten` can only move an exit earlier, never later, and the
+        // two walks' partial sums agree up to the tightened exit. At
+        // `tighten = 1.0` the scaled constructor is the plain one.
+        let mut seed = 0xb07_0u64 + 13;
+        for boundary in families() {
+            for &n in &[7usize, 16, 48, 200] {
+                for &var_sn in &[0.05, 4.0, 1e4] {
+                    let w: Vec<f64> = (0..n).map(|_| prng(&mut seed)).collect();
+                    let x: Vec<f64> = (0..n).map(|_| prng(&mut seed)).collect();
+                    let order: Vec<usize> = (0..n).collect();
+                    let plain = BoundaryTable::for_boundary(&boundary, var_sn, n);
+                    let (s_plain, k_plain) = TabledPredictor::new(&plain).predict(&w, &x, &order);
+                    for &tighten in &[0.5, 0.25, 0.0625] {
+                        let tight =
+                            BoundaryTable::for_boundary_scaled(&boundary, var_sn, n, tighten);
+                        let (s_tight, k_tight) =
+                            TabledPredictor::new(&tight).predict(&w, &x, &order);
+                        assert!(
+                            k_tight <= k_plain,
+                            "{} n={n} var={var_sn} tighten={tighten}: \
+                             tightened walk took {k_tight} > plain {k_plain}",
+                            boundary.name()
+                        );
+                        if k_tight == k_plain {
+                            // Same exit step ⇒ same partial sum, exactly.
+                            assert_eq!(s_tight, s_plain, "{} n={n}", boundary.name());
+                        }
+                    }
+                    let unit = BoundaryTable::for_boundary_scaled(&boundary, var_sn, n, 1.0);
+                    assert_eq!(
+                        TabledPredictor::new(&unit).predict(&w, &x, &order),
+                        (s_plain, k_plain),
+                        "tighten=1.0 must be the plain table, bit for bit"
                     );
                 }
             }

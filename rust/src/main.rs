@@ -22,7 +22,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context};
 
-use attentive::config::{ExperimentConfig, ServerConfig, TrainerWireConfig};
+use attentive::config::{BrownoutConfig, ExperimentConfig, ServerConfig, TrainerWireConfig};
 use attentive::coordinator::scheduler::{run_experiment, run_sweep};
 use attentive::coordinator::service::{
     EnsembleSnapshot, ModelSnapshot, PredictionService, ServingModel,
@@ -66,9 +66,12 @@ COMMANDS:
                [--learn-publish-updates K] [--learn-publish-ms T]
                [--learn-lambda L] [--learn-seed S]
                [--snapshot-dir DIR] [--write-timeout-ms T]
-               [--idle-timeout-ms T]
+               [--idle-timeout-ms T] [--deadline-default-ms T]
+               [--brownout] [--brownout-tighten F] [--brownout-enter F]
+               [--brownout-exit F] [--brownout-dwell-ms T]
+               [--brownout-sample-ms T] [--brownout-latency-us U]
                with --listen: TCP server (v1 JSON lines; a hello op with
-               proto 2..6 upgrades a connection to binary frames —
+               proto 2..7 upgrades a connection to binary frames —
                docs/PROTOCOL.md). --model name=path (repeatable) serves a
                registry of named shards behind one port: each path holds a
                binary ModelSnapshot or an ensemble snapshot, the first name
@@ -93,6 +96,21 @@ COMMANDS:
                --write-timeout-ms bounds slow-reader writes (default
                2000, 0 = never); --idle-timeout-ms reaps connections
                with no traffic and no pending work (default 0 = never).
+               protocol v7 adds overload robustness: requests may carry
+               a relative deadline (deadline_ms / the EX frames) and an
+               admission lane (interactive|bulk) — an expired request is
+               answered with the retryable deadline-exceeded error at
+               dequeue instead of being scored; --deadline-default-ms
+               stamps a default on requests that carry none (0 = off).
+               --brownout arms graceful degradation: a controller
+               samples queue occupancy (and optionally latency vs
+               --brownout-latency-us) every --brownout-sample-ms and
+               walks tiers normal → brown-1 → brown-2 → shed, each brown
+               tier tightening the early-exit thresholds by
+               --brownout-tighten (responses flag degraded: true; tier 3
+               sheds bulk-lane admissions); enter/exit occupancy
+               fractions and --brownout-dwell-ms set the hysteresis
+               (docs/OPERATIONS.md).
                otherwise: in-process synthetic benchmark
   bench-serve  [--addr ADDR]
                [--mode v1-dense|v2-sparse-json|v2-binary|batch|classify|learn|mixed]
@@ -101,7 +119,7 @@ COMMANDS:
                [--queue Q] [--batch-examples N]
                [--io-backend threads|event-loop]
                [--event-threads T] [--open-loop] [--churn N]
-               [--retries N]
+               [--retries N] [--deadline-ms T]
                [--json BENCH_serve.json] [--floors ci/bench_floors.json]
                without --addr: spawns a loopback server and compares the
                three wire modes, a batched SCORE_BATCH pass
@@ -120,6 +138,10 @@ COMMANDS:
                whose socket dies reconnects and re-sends its unanswered
                window, up to N consecutive times before giving up
                (progress refreshes the budget; default 0 = fail fast);
+               --deadline-ms T stamps a relative deadline on every
+               binary score request (v7 EX frames; requests expired in
+               queue are shed with the retryable deadline-exceeded
+               error and tallied, never silently dropped);
                --json writes the machine-readable report, --floors gates
                on committed throughput floors (exit 1 on regression)
   init-config  [out.json]
@@ -133,8 +155,8 @@ fn main() -> anyhow::Result<()> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args =
-        Args::parse_with(&argv[1..], &["open-loop", "learn"]).map_err(|e| anyhow::anyhow!(e))?;
+    let args = Args::parse_with(&argv[1..], &["open-loop", "learn", "brownout"])
+        .map_err(|e| anyhow::anyhow!(e))?;
     match cmd.as_str() {
         "train" => cmd_train(&args),
         "train-multiclass" => cmd_train_multiclass(&args),
@@ -449,6 +471,29 @@ fn server_config_from_args(args: &Args) -> anyhow::Result<ServerConfig> {
     if let Some(dir) = args.opt("snapshot-dir") {
         cfg.snapshot_dir = Some(std::path::PathBuf::from(dir));
     }
+    cfg.deadline_default_ms = args
+        .get_parse("deadline-default-ms", cfg.deadline_default_ms)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    // `--brownout` arms the degradation controller with its defaults;
+    // the `--brownout-*` knobs also tune a brownout block that came in
+    // via `--server-config`.
+    if args.has("brownout") && cfg.brownout.is_none() {
+        cfg.brownout = Some(BrownoutConfig::default());
+    }
+    if let Some(b) = &mut cfg.brownout {
+        b.tighten =
+            args.get_parse("brownout-tighten", b.tighten).map_err(|e| anyhow::anyhow!(e))?;
+        b.enter = args.get_parse("brownout-enter", b.enter).map_err(|e| anyhow::anyhow!(e))?;
+        b.exit = args.get_parse("brownout-exit", b.exit).map_err(|e| anyhow::anyhow!(e))?;
+        b.dwell_ms =
+            args.get_parse("brownout-dwell-ms", b.dwell_ms).map_err(|e| anyhow::anyhow!(e))?;
+        b.sample_ms =
+            args.get_parse("brownout-sample-ms", b.sample_ms).map_err(|e| anyhow::anyhow!(e))?;
+        b.latency_target_us = args
+            .get_parse("brownout-latency-us", b.latency_target_us)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        b.validate().map_err(|e| anyhow::anyhow!("--brownout: {e}"))?;
+    }
     // `--learn` attaches an online trainer to every binary shard (the
     // `learn` op); the `--learn-*` knobs also tune a trainer block that
     // came in via `--server-config`.
@@ -537,11 +582,35 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
              named shard"
         );
         println!(
-            "protocol v2-v6: hello {{\"proto\":6}} switches to sparse binary frames; v6 adds \
+            "protocol v2-v7: hello {{\"proto\":7}} switches to sparse binary frames; v6 adds \
              batched scoring (SCORE_BATCH frames / the score-batch op, up to {} examples per \
-             request)",
+             request); v7 adds per-request deadlines and admission lanes (the EX frames / the \
+             deadline_ms and priority fields)",
             cfg.max_batch_examples
         );
+        if let Some(b) = &cfg.brownout {
+            println!(
+                "brownout on: tiers tighten early-exit thresholds by {} per step \
+                 (enter {:.2} / exit {:.2} occupancy, dwell {} ms, sample {} ms{}); \
+                 degraded responses are flagged, tier 3 sheds bulk-lane admissions",
+                b.tighten,
+                b.enter,
+                b.exit,
+                b.dwell_ms,
+                b.sample_ms,
+                if b.latency_target_us > 0 {
+                    format!(", latency target {} us", b.latency_target_us)
+                } else {
+                    String::new()
+                }
+            );
+        }
+        if cfg.deadline_default_ms > 0 {
+            println!(
+                "default deadline: {} ms stamped on requests that carry none",
+                cfg.deadline_default_ms
+            );
+        }
         if cfg.trainer.is_some() {
             println!(
                 "online learning on: the learn op (JSON, or LEARN_SPARSE frames under \
@@ -715,6 +784,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     let open_loop = args.has("open-loop");
     let churn = args.get_parse("churn", 0usize).map_err(|e| anyhow::anyhow!(e))?;
     let retries = args.get_parse("retries", 0u32).map_err(|e| anyhow::anyhow!(e))?;
+    let deadline_ms = args.get_parse("deadline-ms", 0u32).map_err(|e| anyhow::anyhow!(e))?;
     let loadcfg = |addr: String, mode: ClientMode| LoadGenConfig {
         addr,
         connections,
@@ -728,6 +798,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
         open_loop,
         churn_cycles: churn,
         retries,
+        deadline_ms,
         ..Default::default()
     };
     let mut table = Table::new(&[
@@ -790,6 +861,10 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
     // server config in loopback mode (so a --server-config file's
     // io_backend is honored), from the flag/env for external servers.
     let report_backend: attentive::config::IoBackend;
+    // Server-side robustness counters stamped into the JSON report
+    // (fetched over the control channel at the end of the run):
+    // (worker_panics, batch_shed, deadline_sheds).
+    let mut shed_counters: Option<(u64, u64, u64)> = None;
 
     if let Some(addr) = args.opt("addr") {
         report_backend = match args.opt("io-backend") {
@@ -818,6 +893,11 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             );
         }
         passes.push((mode.name().to_string(), report));
+        // Best-effort: an external server still answers the stats op on
+        // a fresh control connection; skip the stamp if it cannot.
+        if let Ok(stats) = control_retry(addr, retries, "stats", |c| c.stats()) {
+            shed_counters = Some((stats.worker_panics, stats.batch_shed, stats.deadline_sheds));
+        }
     } else {
         // Loopback comparison: identical traffic over the three wire
         // modes against the attentive model, a multiclass classify pass
@@ -873,9 +953,11 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             println!("{}", table.render());
             let stats = control_retry(&addr, retries, "stats", |c| c.stats())?;
             server.shutdown();
+            shed_counters = Some((stats.worker_panics, stats.batch_shed, stats.deadline_sheds));
             println!(
-                "server totals: {} served, {} conns, {} shed — zero sheds required",
-                stats.served, stats.accepted_conns, stats.overloaded
+                "server totals: {} served, {} conns, {} shed, {} deadline shed(s) — zero \
+                 overload sheds required",
+                stats.served, stats.accepted_conns, stats.overloaded, stats.deadline_sheds
             );
         } else {
             println!(
@@ -939,6 +1021,7 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
             println!("{}", table.render());
             let stats = control_retry(&addr, retries, "stats", |c| c.stats())?;
             server.shutdown();
+            shed_counters = Some((stats.worker_panics, stats.batch_shed, stats.deadline_sheds));
             println!(
                 "server totals: {} served, early-exit rate {:.3}, {} reload(s), {} conns, {} shed",
                 stats.served,
@@ -1010,9 +1093,16 @@ fn cmd_bench_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut report_json = loadgen::report_to_json(requests, &passes);
     // Stamp the transport backend so floors can gate the two backends
-    // independently (`event_loop_*` floor keys).
+    // independently (`event_loop_*` floor keys), plus the server-side
+    // robustness counters so a CI run's report records contained
+    // panics and shed work alongside the throughput numbers.
     if let Json::Obj(pairs) = &mut report_json {
         pairs.push(("io_backend".to_string(), Json::Str(report_backend.name().to_string())));
+        if let Some((worker_panics, batch_shed, deadline_sheds)) = shed_counters {
+            pairs.push(("worker_panics".to_string(), Json::Num(worker_panics as f64)));
+            pairs.push(("batch_shed".to_string(), Json::Num(batch_shed as f64)));
+            pairs.push(("deadline_sheds".to_string(), Json::Num(deadline_sheds as f64)));
+        }
     }
     if let Some(path) = args.opt("json") {
         attentive::metrics::export::to_json_file(&report_json, std::path::Path::new(path))?;

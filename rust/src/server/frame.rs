@@ -20,6 +20,10 @@
 //! 0x07 LEARN_SPARSE     req   model:u16 label:i8(±1) nnz:u32 then nnz × (idx:u32 val:f64)  (v4)
 //! 0x08 SCORE_BATCH      req   model:u16 gen:u32 count:u16 then count ×
 //!                             (nnz:u32 then nnz × (idx:u32 val:f64))  (v6)
+//! 0x09 SCORE_SPARSE_EX  req   model:u16 gen:u32 deadline_ms:u32 lane:u8 nnz:u32
+//!                             then nnz × (idx:u32 val:f64)  (v7)
+//! 0x0A SCORE_BATCH_EX   req   model:u16 gen:u32 deadline_ms:u32 lane:u8 count:u16
+//!                             then count × (nnz:u32 then nnz × (idx:u32 val:f64))  (v7)
 //! 0x81 SCORE            resp  gen:u32 evaluated:u32 score:f64
 //! 0x82 ERROR            resp  code:u8 retryable:u8 msg_len:u16 msg bytes
 //! 0x83 JSON_RESP        resp  UTF-8 JSON body (any v1 response document)
@@ -29,6 +33,9 @@
 //! 0x86 LEARN_ACK        resp  gen:u32 seen:u64  (v4)
 //! 0x87 SCORE_BATCH_RESP resp  gen:u32 count:u16 then count ×
 //!                             (status:u8 evaluated:u32 score:f64)  (v6)
+//! 0x88 SCORE_EX         resp  gen:u32 flags:u8 evaluated:u32 score:f64  (v7)
+//! 0x89 SCORE_BATCH_RESP_EX  resp  gen:u32 flags:u8 count:u16 then count ×
+//!                             (status:u8 evaluated:u32 score:f64)  (v7)
 //! ```
 //!
 //! ## Zero-copy decode
@@ -103,6 +110,19 @@
 //! its batchmates. Clients send `SCORE_BATCH` only after
 //! `hello {"proto":6}` is granted.
 //!
+//! The protocol-v7 ops carry the overload-brownout admission fields.
+//! `SCORE_SPARSE_EX` / `SCORE_BATCH_EX` extend their v3/v6 twins with a
+//! `deadline_ms:u32` relative deadline (0 = none; work still queued
+//! past it is answered with the retryable [`ErrorCode::DeadlineExceeded`]
+//! at dequeue instead of being scored) and a `lane:u8` admission-lane
+//! override ([`LANE_DEFAULT`] / [`LANE_INTERACTIVE`] / [`LANE_BULK`]).
+//! They are answered by `SCORE_EX` / `SCORE_BATCH_RESP_EX`, which add a
+//! `flags:u8` ([`FLAG_DEGRADED`] marks a response scored under a
+//! brownout tier with tightened early-exit thresholds). The legacy ops
+//! keep their legacy responses byte-for-byte, so pre-v7 clients are
+//! unaffected. Clients send the EX ops only after `hello {"proto":7}`
+//! is granted.
+//!
 //! A `gen` of 0 in a request means "any model generation"; a nonzero
 //! value pins the request to that generation and the server sheds it
 //! with a retryable [`ErrorCode::StaleGeneration`] if a hot reload has
@@ -148,6 +168,11 @@ pub enum ErrorCode {
     /// (worker panic, contained by `catch_unwind`). The request itself
     /// was well-formed and the worker has been respawned — retry.
     Internal = 13,
+    /// The request's deadline had already expired when a worker dequeued
+    /// it, so it was shed unscored (the answer would have arrived too
+    /// late to be useful). Retryable: a fresh request with a fresh
+    /// deadline can succeed once the queue drains.
+    DeadlineExceeded = 14,
 }
 
 impl ErrorCode {
@@ -167,6 +192,7 @@ impl ErrorCode {
             11 => Some(ErrorCode::ModelBusy),
             12 => Some(ErrorCode::DefaultModel),
             13 => Some(ErrorCode::Internal),
+            14 => Some(ErrorCode::DeadlineExceeded),
             _ => None,
         }
     }
@@ -180,6 +206,7 @@ impl ErrorCode {
                 | ErrorCode::StaleGeneration
                 | ErrorCode::ModelBusy
                 | ErrorCode::Internal
+                | ErrorCode::DeadlineExceeded
         )
     }
 
@@ -199,6 +226,7 @@ impl ErrorCode {
             ErrorCode::ModelBusy => "model-busy",
             ErrorCode::DefaultModel => "default-model",
             ErrorCode::Internal => "internal",
+            ErrorCode::DeadlineExceeded => "deadline-exceeded",
         }
     }
 }
@@ -260,6 +288,12 @@ pub const OP_CLASSIFY_SPARSE_VERBOSE: u8 = 0x06;
 pub const OP_LEARN_SPARSE: u8 = 0x07;
 /// Op byte: batched sparse score request (v6; model-routed).
 pub const OP_SCORE_BATCH: u8 = 0x08;
+/// Op byte: sparse score request with admission extensions (v7;
+/// deadline + lane; answered by `SCORE_EX`).
+pub const OP_SCORE_SPARSE_EX: u8 = 0x09;
+/// Op byte: batched sparse score request with admission extensions
+/// (v7; answered by `SCORE_BATCH_RESP_EX`).
+pub const OP_SCORE_BATCH_EX: u8 = 0x0A;
 /// Op byte: score response.
 pub const OP_SCORE: u8 = 0x81;
 /// Op byte: error response.
@@ -274,11 +308,29 @@ pub const OP_CLASS_VERBOSE: u8 = 0x85;
 pub const OP_LEARN_ACK: u8 = 0x86;
 /// Op byte: batched score response (v6).
 pub const OP_SCORE_BATCH_RESP: u8 = 0x87;
+/// Op byte: score response with flags (v7; answers `SCORE_SPARSE_EX`).
+pub const OP_SCORE_EX: u8 = 0x88;
+/// Op byte: batched score response with flags (v7; answers
+/// `SCORE_BATCH_EX`).
+pub const OP_SCORE_BATCH_RESP_EX: u8 = 0x89;
 
 /// The `status` byte of an OK `SCORE_BATCH_RESP` row. Any other value
 /// is the [`ErrorCode`] wire byte describing why that one example was
 /// not scored (its batchmates are unaffected).
 pub const BATCH_STATUS_OK: u8 = 0;
+
+/// `flags` bit of the v7 EX responses: the answer was produced under a
+/// brownout tier (tightened early-exit thresholds — see the brownout
+/// runbook in `docs/OPERATIONS.md`).
+pub const FLAG_DEGRADED: u8 = 0x01;
+
+/// `lane` byte of the v7 EX requests: take the op's default lane
+/// (single scores → interactive, batches → bulk).
+pub const LANE_DEFAULT: u8 = 0;
+/// `lane` byte: force the latency-sensitive interactive lane.
+pub const LANE_INTERACTIVE: u8 = 1;
+/// `lane` byte: force the throughput bulk lane.
+pub const LANE_BULK: u8 = 2;
 
 /// One per-example row of a `SCORE_BATCH_RESP` frame.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -381,6 +433,45 @@ pub enum Frame {
         /// increasing indices.
         examples: Vec<(Vec<u32>, Vec<f64>)>,
     },
+    /// v7 sparse score request with admission extensions: the
+    /// `ScoreSparse2` payload plus a relative deadline and a lane
+    /// override. Answered by `ScoreEx`.
+    ScoreSparseEx {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Relative deadline in milliseconds (0 = none): still queued
+        /// this long after admission, the request is answered
+        /// `DEADLINE_EXCEEDED` at dequeue instead of being scored.
+        deadline_ms: u32,
+        /// Admission lane ([`LANE_DEFAULT`] / [`LANE_INTERACTIVE`] /
+        /// [`LANE_BULK`]).
+        lane: u8,
+        /// Coordinate indices (u32 on the wire), strictly increasing.
+        idx: Vec<u32>,
+        /// Values at those coordinates.
+        val: Vec<f64>,
+    },
+    /// v7 batched sparse score request with admission extensions: the
+    /// `ScoreBatch` payload plus a relative deadline and a lane
+    /// override, both shared by every example. Answered by
+    /// `ScoreBatchRespEx`.
+    ScoreBatchEx {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any), shared by every example.
+        gen: u32,
+        /// Relative deadline in milliseconds (0 = none); an expired
+        /// batch is shed whole at dequeue.
+        deadline_ms: u32,
+        /// Admission lane ([`LANE_DEFAULT`] / [`LANE_INTERACTIVE`] /
+        /// [`LANE_BULK`]).
+        lane: u8,
+        /// Per-example `(idx, val)` sparse vectors, each with strictly
+        /// increasing indices.
+        examples: Vec<(Vec<u32>, Vec<f64>)>,
+    },
     /// Score response: the serving generation, coordinates evaluated,
     /// and the signed margin.
     Score {
@@ -451,6 +542,26 @@ pub enum Frame {
     ScoreBatchResp {
         /// Generation that served the batch.
         gen: u32,
+        /// Per-example outcome rows, in submission order.
+        results: Vec<BatchResult>,
+    },
+    /// v7 score response with flags (answers `ScoreSparseEx`).
+    ScoreEx {
+        /// Generation that served the request.
+        gen: u32,
+        /// Response flags ([`FLAG_DEGRADED`]).
+        flags: u8,
+        /// Features evaluated before the early exit.
+        evaluated: u32,
+        /// Signed margin estimate; the prediction is its sign.
+        score: f64,
+    },
+    /// v7 batched score response with flags (answers `ScoreBatchEx`).
+    ScoreBatchRespEx {
+        /// Generation that served the batch.
+        gen: u32,
+        /// Response flags ([`FLAG_DEGRADED`]), shared by the batch.
+        flags: u8,
         /// Per-example outcome rows, in submission order.
         results: Vec<BatchResult>,
     },
@@ -582,6 +693,52 @@ impl Frame {
                     }
                 }
             }
+            Frame::ScoreSparseEx { model, gen, deadline_ms, lane, idx, val } => {
+                assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+                assert!(
+                    idx.len() <= u32::MAX as usize,
+                    "sparse frame nnz {} exceeds the u32 wire bound",
+                    idx.len()
+                );
+                assert!(*lane <= LANE_BULK, "bad lane byte {lane}");
+                out.push(OP_SCORE_SPARSE_EX);
+                out.extend_from_slice(&model.to_le_bytes());
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                out.push(*lane);
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    out.extend_from_slice(&i.to_le_bytes());
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::ScoreBatchEx { model, gen, deadline_ms, lane, examples } => {
+                assert!(
+                    examples.len() <= u16::MAX as usize,
+                    "batch count {} exceeds the u16 wire bound",
+                    examples.len()
+                );
+                assert!(*lane <= LANE_BULK, "bad lane byte {lane}");
+                out.push(OP_SCORE_BATCH_EX);
+                out.extend_from_slice(&model.to_le_bytes());
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&deadline_ms.to_le_bytes());
+                out.push(*lane);
+                out.extend_from_slice(&(examples.len() as u16).to_le_bytes());
+                for (idx, val) in examples {
+                    assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+                    assert!(
+                        idx.len() <= u32::MAX as usize,
+                        "sparse frame nnz {} exceeds the u32 wire bound",
+                        idx.len()
+                    );
+                    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                    for (&i, &v) in idx.iter().zip(val.iter()) {
+                        out.extend_from_slice(&i.to_le_bytes());
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
             Frame::Score { gen, evaluated, score } => {
                 out.push(OP_SCORE);
                 out.extend_from_slice(&gen.to_le_bytes());
@@ -641,6 +798,29 @@ impl Frame {
                 );
                 out.push(OP_SCORE_BATCH_RESP);
                 out.extend_from_slice(&gen.to_le_bytes());
+                out.extend_from_slice(&(results.len() as u16).to_le_bytes());
+                for row in results {
+                    out.push(row.status);
+                    out.extend_from_slice(&row.evaluated.to_le_bytes());
+                    out.extend_from_slice(&row.score.to_le_bytes());
+                }
+            }
+            Frame::ScoreEx { gen, flags, evaluated, score } => {
+                out.push(OP_SCORE_EX);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.push(*flags);
+                out.extend_from_slice(&evaluated.to_le_bytes());
+                out.extend_from_slice(&score.to_le_bytes());
+            }
+            Frame::ScoreBatchRespEx { gen, flags, results } => {
+                assert!(
+                    results.len() <= u16::MAX as usize,
+                    "batch count {} exceeds the u16 wire bound",
+                    results.len()
+                );
+                out.push(OP_SCORE_BATCH_RESP_EX);
+                out.extend_from_slice(&gen.to_le_bytes());
+                out.push(*flags);
                 out.extend_from_slice(&(results.len() as u16).to_le_bytes());
                 for row in results {
                     out.push(row.status);
@@ -714,6 +894,37 @@ impl Frame {
         }
     }
 
+    /// Encode a v7 `SCORE_SPARSE_EX` request straight from `(idx, val)`
+    /// slices into a reusable buffer (the loadgen deadline hot loop).
+    ///
+    /// # Panics
+    ///
+    /// On a lane byte beyond [`LANE_BULK`] or mismatched slice lengths.
+    pub fn put_sparse_ex(
+        out: &mut Vec<u8>,
+        model: u16,
+        gen: u32,
+        deadline_ms: u32,
+        lane: u8,
+        idx: &[u32],
+        val: &[f64],
+    ) {
+        assert_eq!(idx.len(), val.len(), "sparse idx/val length mismatch");
+        assert!(lane <= LANE_BULK, "bad lane byte {lane}");
+        let body_len = 1 + 2 + 4 + 4 + 1 + 4 + 12 * idx.len();
+        out.extend_from_slice(&(body_len as u32).to_le_bytes());
+        out.push(OP_SCORE_SPARSE_EX);
+        out.extend_from_slice(&model.to_le_bytes());
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&deadline_ms.to_le_bytes());
+        out.push(lane);
+        out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+        for (&i, &v) in idx.iter().zip(val.iter()) {
+            out.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+
     /// Encode a v4 `LEARN_SPARSE` request straight from `(idx, val)`
     /// slices into a reusable buffer (the loadgen learn hot loop).
     ///
@@ -744,12 +955,41 @@ impl Frame {
         BatchEncoder::begin(out, model, gen)
     }
 
+    /// Start encoding a v7 `SCORE_BATCH_EX` request (the `SCORE_BATCH`
+    /// layout with the admission fields) straight into a reusable
+    /// buffer; examples and `finish` work exactly like
+    /// [`Self::begin_score_batch`].
+    ///
+    /// # Panics
+    ///
+    /// On a lane byte beyond [`LANE_BULK`].
+    pub fn begin_score_batch_ex(
+        out: &mut Vec<u8>,
+        model: u16,
+        gen: u32,
+        deadline_ms: u32,
+        lane: u8,
+    ) -> BatchEncoder<'_> {
+        BatchEncoder::begin_ex(out, model, gen, deadline_ms, lane)
+    }
+
     /// Start encoding a v6 `SCORE_BATCH_RESP` straight into a reusable
     /// buffer (the transport writer's pooled output frame). Rows are
     /// appended with [`BatchRespEncoder::push_result`] and the prefix
     /// and count are patched by [`BatchRespEncoder::finish`].
     pub fn begin_score_batch_resp(out: &mut Vec<u8>, gen: u32) -> BatchRespEncoder<'_> {
         BatchRespEncoder::begin(out, gen)
+    }
+
+    /// Start encoding a v7 `SCORE_BATCH_RESP_EX` (the
+    /// `SCORE_BATCH_RESP` layout plus a `flags` byte) straight into a
+    /// reusable buffer.
+    pub fn begin_score_batch_resp_ex(
+        out: &mut Vec<u8>,
+        gen: u32,
+        flags: u8,
+    ) -> BatchRespEncoder<'_> {
+        BatchRespEncoder::begin_ex(out, gen, flags)
     }
 
     /// Decode one frame body (the bytes after the length prefix).
@@ -913,6 +1153,85 @@ impl Frame {
                 }
                 Ok(Frame::ScoreBatch { model, gen, examples })
             }
+            OP_SCORE_SPARSE_EX => {
+                if payload.len() < 15 {
+                    return Err(FrameError::BadLayout("sparse-ex header needs 15 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let deadline_ms = u32::from_le_bytes(payload[6..10].try_into().unwrap());
+                let lane = payload[10];
+                if lane > LANE_BULK {
+                    return Err(FrameError::BadLayout(format!("bad lane byte {lane}")));
+                }
+                let nnz = u32::from_le_bytes(payload[11..15].try_into().unwrap()) as usize;
+                let pairs = &payload[15..];
+                // Divide instead of multiplying: `nnz * 12` can wrap on
+                // 32-bit usize targets.
+                if pairs.len() % 12 != 0 || pairs.len() / 12 != nnz {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} does not match {} pair bytes",
+                        nnz,
+                        pairs.len()
+                    )));
+                }
+                let mut idx = Vec::with_capacity(nnz);
+                let mut val = Vec::with_capacity(nnz);
+                for p in pairs.chunks_exact(12) {
+                    idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
+                    val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
+                }
+                Ok(Frame::ScoreSparseEx { model, gen, deadline_ms, lane, idx, val })
+            }
+            OP_SCORE_BATCH_EX => {
+                if payload.len() < 13 {
+                    return Err(FrameError::BadLayout("batch-ex header needs 13 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let deadline_ms = u32::from_le_bytes(payload[6..10].try_into().unwrap());
+                let lane = payload[10];
+                if lane > LANE_BULK {
+                    return Err(FrameError::BadLayout(format!("bad lane byte {lane}")));
+                }
+                let count = u16::from_le_bytes(payload[11..13].try_into().unwrap()) as usize;
+                let mut rest = &payload[13..];
+                let mut examples = Vec::with_capacity(count);
+                for n in 0..count {
+                    if rest.len() < 4 {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} header overruns frame"
+                        )));
+                    }
+                    let nnz = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                    rest = &rest[4..];
+                    // Divide instead of multiplying: `nnz * 12` can wrap
+                    // on 32-bit usize targets.
+                    if rest.len() / 12 < nnz {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} nnz {nnz} overruns {} remaining bytes",
+                            rest.len()
+                        )));
+                    }
+                    let (pairs, tail) = rest.split_at(nnz * 12);
+                    let mut idx = Vec::with_capacity(nnz);
+                    let mut val = Vec::with_capacity(nnz);
+                    for p in pairs.chunks_exact(12) {
+                        idx.push(u32::from_le_bytes(p[0..4].try_into().unwrap()));
+                        val.push(f64::from_le_bytes(p[4..12].try_into().unwrap()));
+                    }
+                    examples.push((idx, val));
+                    rest = tail;
+                }
+                if !rest.is_empty() {
+                    return Err(FrameError::BadLayout(format!(
+                        "batch count {} leaves {} trailing bytes",
+                        count,
+                        rest.len()
+                    )));
+                }
+                Ok(Frame::ScoreBatchEx { model, gen, deadline_ms, lane, examples })
+            }
             OP_SCORE => {
                 if payload.len() != 16 {
                     return Err(FrameError::BadLayout(format!(
@@ -1033,6 +1352,49 @@ impl Frame {
                     .collect();
                 Ok(Frame::ScoreBatchResp { gen, results })
             }
+            OP_SCORE_EX => {
+                if payload.len() != 17 {
+                    return Err(FrameError::BadLayout(format!(
+                        "score-ex payload must be 17 bytes, got {}",
+                        payload.len()
+                    )));
+                }
+                Ok(Frame::ScoreEx {
+                    gen: u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+                    flags: payload[4],
+                    evaluated: u32::from_le_bytes(payload[5..9].try_into().unwrap()),
+                    score: f64::from_le_bytes(payload[9..17].try_into().unwrap()),
+                })
+            }
+            OP_SCORE_BATCH_RESP_EX => {
+                if payload.len() < 7 {
+                    return Err(FrameError::BadLayout(
+                        "batch-resp-ex header needs 7 bytes".into(),
+                    ));
+                }
+                let gen = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+                let flags = payload[4];
+                let count = u16::from_le_bytes(payload[5..7].try_into().unwrap()) as usize;
+                let rows = &payload[7..];
+                // Divide, don't multiply: `count * 13` can wrap on
+                // 32-bit usize targets.
+                if rows.len() % 13 != 0 || rows.len() / 13 != count {
+                    return Err(FrameError::BadLayout(format!(
+                        "batch-resp-ex count {} does not match {} row bytes",
+                        count,
+                        rows.len()
+                    )));
+                }
+                let results = rows
+                    .chunks_exact(13)
+                    .map(|r| BatchResult {
+                        status: r[0],
+                        evaluated: u32::from_le_bytes(r[1..5].try_into().unwrap()),
+                        score: f64::from_le_bytes(r[5..13].try_into().unwrap()),
+                    })
+                    .collect();
+                Ok(Frame::ScoreBatchRespEx { gen, flags, results })
+            }
             other => Err(FrameError::BadOp(other)),
         }
     }
@@ -1108,6 +1470,7 @@ impl Frame {
 pub struct BatchEncoder<'b> {
     out: &'b mut Vec<u8>,
     prefix_at: usize,
+    count_at: usize,
     count: u16,
 }
 
@@ -1118,8 +1481,23 @@ impl<'b> BatchEncoder<'b> {
         out.push(OP_SCORE_BATCH);
         out.extend_from_slice(&model.to_le_bytes());
         out.extend_from_slice(&gen.to_le_bytes());
+        let count_at = out.len();
         out.extend_from_slice(&0u16.to_le_bytes()); // count placeholder
-        Self { out, prefix_at, count: 0 }
+        Self { out, prefix_at, count_at, count: 0 }
+    }
+
+    fn begin_ex(out: &'b mut Vec<u8>, model: u16, gen: u32, deadline_ms: u32, lane: u8) -> Self {
+        assert!(lane <= LANE_BULK, "bad lane byte {lane}");
+        let prefix_at = out.len();
+        out.extend_from_slice(&[0u8; 4]);
+        out.push(OP_SCORE_BATCH_EX);
+        out.extend_from_slice(&model.to_le_bytes());
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.extend_from_slice(&deadline_ms.to_le_bytes());
+        out.push(lane);
+        let count_at = out.len();
+        out.extend_from_slice(&0u16.to_le_bytes()); // count placeholder
+        Self { out, prefix_at, count_at, count: 0 }
     }
 
     /// Append one sparse example.
@@ -1149,8 +1527,7 @@ impl<'b> BatchEncoder<'b> {
     pub fn finish(self) -> usize {
         let body_len = (self.out.len() - self.prefix_at - 4) as u32;
         self.out[self.prefix_at..self.prefix_at + 4].copy_from_slice(&body_len.to_le_bytes());
-        let count_at = self.prefix_at + 4 + 1 + 2 + 4;
-        self.out[count_at..count_at + 2].copy_from_slice(&self.count.to_le_bytes());
+        self.out[self.count_at..self.count_at + 2].copy_from_slice(&self.count.to_le_bytes());
         self.count as usize
     }
 }
@@ -1163,6 +1540,7 @@ impl<'b> BatchEncoder<'b> {
 pub struct BatchRespEncoder<'b> {
     out: &'b mut Vec<u8>,
     prefix_at: usize,
+    count_at: usize,
     count: u16,
 }
 
@@ -1172,8 +1550,20 @@ impl<'b> BatchRespEncoder<'b> {
         out.extend_from_slice(&[0u8; 4]);
         out.push(OP_SCORE_BATCH_RESP);
         out.extend_from_slice(&gen.to_le_bytes());
+        let count_at = out.len();
         out.extend_from_slice(&0u16.to_le_bytes()); // count placeholder
-        Self { out, prefix_at, count: 0 }
+        Self { out, prefix_at, count_at, count: 0 }
+    }
+
+    fn begin_ex(out: &'b mut Vec<u8>, gen: u32, flags: u8) -> Self {
+        let prefix_at = out.len();
+        out.extend_from_slice(&[0u8; 4]);
+        out.push(OP_SCORE_BATCH_RESP_EX);
+        out.extend_from_slice(&gen.to_le_bytes());
+        out.push(flags);
+        let count_at = out.len();
+        out.extend_from_slice(&0u16.to_le_bytes()); // count placeholder
+        Self { out, prefix_at, count_at, count: 0 }
     }
 
     /// Append one per-example outcome row.
@@ -1194,8 +1584,7 @@ impl<'b> BatchRespEncoder<'b> {
     pub fn finish(self) -> usize {
         let body_len = (self.out.len() - self.prefix_at - 4) as u32;
         self.out[self.prefix_at..self.prefix_at + 4].copy_from_slice(&body_len.to_le_bytes());
-        let count_at = self.prefix_at + 4 + 1 + 4;
-        self.out[count_at..count_at + 2].copy_from_slice(&self.count.to_le_bytes());
+        self.out[self.count_at..self.count_at + 2].copy_from_slice(&self.count.to_le_bytes());
         self.count as usize
     }
 }
@@ -1266,6 +1655,38 @@ pub enum FrameRef<'a> {
         model: u16,
         /// Model generation pin (0 = any), shared by every example.
         gen: u32,
+        /// Number of examples carried.
+        count: usize,
+        /// Raw example bytes (the payload after the count field).
+        examples: &'a [u8],
+    },
+    /// v7 sparse score with admission fields (`ScoreSparse2` layout
+    /// plus a deadline and a lane override).
+    ScoreSparseEx {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any).
+        gen: u32,
+        /// Relative deadline in milliseconds; 0 = none.
+        deadline_ms: u32,
+        /// Admission lane byte (`LANE_DEFAULT`/`LANE_INTERACTIVE`/
+        /// `LANE_BULK`).
+        lane: u8,
+        /// Raw pair bytes, length a multiple of 12.
+        pairs: &'a [u8],
+    },
+    /// v7 batched sparse score with admission fields (`ScoreBatch`
+    /// layout plus a deadline and a lane override).
+    ScoreBatchEx {
+        /// Interned model shard id.
+        model: u16,
+        /// Model generation pin (0 = any), shared by every example.
+        gen: u32,
+        /// Relative deadline in milliseconds; 0 = none.
+        deadline_ms: u32,
+        /// Admission lane byte (`LANE_DEFAULT`/`LANE_INTERACTIVE`/
+        /// `LANE_BULK`).
+        lane: u8,
         /// Number of examples carried.
         count: usize,
         /// Raw example bytes (the payload after the count field).
@@ -1406,8 +1827,73 @@ impl<'a> FrameRef<'a> {
                 }
                 Ok(FrameRef::ScoreBatch { model, gen, count, examples })
             }
+            OP_SCORE_SPARSE_EX => {
+                if payload.len() < 15 {
+                    return Err(FrameError::BadLayout("sparse-ex header needs 15 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let deadline_ms = u32::from_le_bytes(payload[6..10].try_into().unwrap());
+                let lane = payload[10];
+                if lane > LANE_BULK {
+                    return Err(FrameError::BadLayout(format!("bad lane byte {lane}")));
+                }
+                let nnz = u32::from_le_bytes(payload[11..15].try_into().unwrap()) as usize;
+                let pairs = &payload[15..];
+                if pairs.len() % 12 != 0 || pairs.len() / 12 != nnz {
+                    return Err(FrameError::BadLayout(format!(
+                        "nnz {} does not match {} pair bytes",
+                        nnz,
+                        pairs.len()
+                    )));
+                }
+                Ok(FrameRef::ScoreSparseEx { model, gen, deadline_ms, lane, pairs })
+            }
+            OP_SCORE_BATCH_EX => {
+                if payload.len() < 13 {
+                    return Err(FrameError::BadLayout("batch-ex header needs 13 bytes".into()));
+                }
+                let model = u16::from_le_bytes(payload[0..2].try_into().unwrap());
+                let gen = u32::from_le_bytes(payload[2..6].try_into().unwrap());
+                let deadline_ms = u32::from_le_bytes(payload[6..10].try_into().unwrap());
+                let lane = payload[10];
+                if lane > LANE_BULK {
+                    return Err(FrameError::BadLayout(format!("bad lane byte {lane}")));
+                }
+                let count = u16::from_le_bytes(payload[11..13].try_into().unwrap()) as usize;
+                let examples = &payload[13..];
+                // Structural walk only (O(count) header reads, no
+                // per-pair work): after this, iteration cannot overrun.
+                let mut rest = examples;
+                for n in 0..count {
+                    if rest.len() < 4 {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} header overruns frame"
+                        )));
+                    }
+                    let nnz = u32::from_le_bytes(rest[0..4].try_into().unwrap()) as usize;
+                    rest = &rest[4..];
+                    if rest.len() / 12 < nnz {
+                        return Err(FrameError::BadLayout(format!(
+                            "batch example {n} nnz {nnz} overruns {} remaining bytes",
+                            rest.len()
+                        )));
+                    }
+                    rest = &rest[nnz * 12..];
+                }
+                if !rest.is_empty() {
+                    return Err(FrameError::BadLayout(format!(
+                        "batch count {} leaves {} trailing bytes",
+                        count,
+                        rest.len()
+                    )));
+                }
+                Ok(FrameRef::ScoreBatchEx { model, gen, deadline_ms, lane, count, examples })
+            }
             OP_SCORE | OP_ERROR | OP_JSON_RESP | OP_CLASS | OP_CLASS_VERBOSE | OP_LEARN_ACK
-            | OP_SCORE_BATCH_RESP => Ok(FrameRef::Response(op)),
+            | OP_SCORE_BATCH_RESP | OP_SCORE_EX | OP_SCORE_BATCH_RESP_EX => {
+                Ok(FrameRef::Response(op))
+            }
             other => Err(FrameError::BadOp(other)),
         }
     }
@@ -1419,11 +1905,13 @@ impl<'a> FrameRef<'a> {
             FrameRef::ScoreSparse { pairs, .. } => pairs.len() / 10,
             FrameRef::ScoreSparse2 { pairs, .. }
             | FrameRef::ClassifySparse { pairs, .. }
-            | FrameRef::LearnSparse { pairs, .. } => pairs.len() / 12,
+            | FrameRef::LearnSparse { pairs, .. }
+            | FrameRef::ScoreSparseEx { pairs, .. } => pairs.len() / 12,
             FrameRef::ScoreDense { vals, .. } => vals.len() / 8,
             // Validated structure: total = count × 4 header bytes +
             // 12 bytes per stored pair.
-            FrameRef::ScoreBatch { count, examples, .. } => {
+            FrameRef::ScoreBatch { count, examples, .. }
+            | FrameRef::ScoreBatchEx { count, examples, .. } => {
                 (examples.len() - 4 * count) / 12
             }
             FrameRef::JsonReq(_) | FrameRef::Response(_) => 0,
@@ -1590,6 +2078,35 @@ mod tests {
             msg: "overloaded".into(),
         });
         round_trip(Frame::JsonResp(r#"{"ok":true,"op":"pong"}"#.into()));
+        round_trip(Frame::ScoreSparseEx {
+            model: 1,
+            gen: 9,
+            deadline_ms: 250,
+            lane: LANE_INTERACTIVE,
+            idx: vec![0, 70_000, 4_000_000_000],
+            val: vec![0.25, -1.5, 1.0],
+        });
+        round_trip(Frame::ScoreSparseEx {
+            model: 0,
+            gen: 0,
+            deadline_ms: 0,
+            lane: LANE_DEFAULT,
+            idx: vec![],
+            val: vec![],
+        });
+        round_trip(Frame::ScoreBatchEx {
+            model: 2,
+            gen: 5,
+            deadline_ms: 1_000,
+            lane: LANE_BULK,
+            examples: vec![(vec![0, 7], vec![0.5, -1.0]), (vec![], vec![])],
+        });
+        round_trip(Frame::ScoreEx { gen: 3, flags: FLAG_DEGRADED, evaluated: 41, score: -0.75 });
+        round_trip(Frame::ScoreBatchRespEx {
+            gen: 4,
+            flags: 0,
+            results: vec![BatchResult { status: 0, evaluated: 12, score: 1.5 }],
+        });
     }
 
     #[test]
@@ -1678,6 +2195,199 @@ mod tests {
     }
 
     #[test]
+    fn v7_frame_layouts_are_exactly_as_documented() {
+        // SCORE_SPARSE_EX: 1 (op) + 2 (model) + 4 (gen) + 4 (deadline)
+        // + 1 (lane) + 4 (nnz) + 12/pair.
+        let wire = Frame::ScoreSparseEx {
+            model: 7,
+            gen: 2,
+            deadline_ms: 250,
+            lane: LANE_INTERACTIVE,
+            idx: vec![70_000],
+            val: vec![1.0],
+        }
+        .encode();
+        assert_eq!(&wire[0..4], &28u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_SPARSE_EX);
+        assert_eq!(&wire[5..7], &7u16.to_le_bytes());
+        assert_eq!(&wire[7..11], &2u32.to_le_bytes());
+        assert_eq!(&wire[11..15], &250u32.to_le_bytes());
+        assert_eq!(wire[15], LANE_INTERACTIVE);
+        assert_eq!(&wire[16..20], &1u32.to_le_bytes());
+        assert_eq!(&wire[20..24], &70_000u32.to_le_bytes());
+        assert_eq!(&wire[24..32], &1.0f64.to_le_bytes());
+        assert_eq!(wire.len(), 32);
+        // SCORE_BATCH_EX: 1 (op) + 2 (model) + 4 (gen) + 4 (deadline)
+        // + 1 (lane) + 2 (count) + per-example nnz:u32 + 12/pair.
+        let wire = Frame::ScoreBatchEx {
+            model: 1,
+            gen: 3,
+            deadline_ms: 0,
+            lane: LANE_BULK,
+            examples: vec![(vec![5], vec![0.5])],
+        }
+        .encode();
+        assert_eq!(&wire[0..4], &30u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_BATCH_EX);
+        assert_eq!(&wire[11..15], &0u32.to_le_bytes());
+        assert_eq!(wire[15], LANE_BULK);
+        assert_eq!(&wire[16..18], &1u16.to_le_bytes());
+        assert_eq!(&wire[18..22], &1u32.to_le_bytes());
+        assert_eq!(wire.len(), 34);
+        // SCORE_EX: 1 (op) + 4 (gen) + 1 (flags) + 4 (evaluated)
+        // + 8 (score) = 18 body bytes.
+        let wire =
+            Frame::ScoreEx { gen: 9, flags: FLAG_DEGRADED, evaluated: 41, score: -0.75 }.encode();
+        assert_eq!(&wire[0..4], &18u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_EX);
+        assert_eq!(&wire[5..9], &9u32.to_le_bytes());
+        assert_eq!(wire[9], FLAG_DEGRADED);
+        assert_eq!(&wire[10..14], &41u32.to_le_bytes());
+        assert_eq!(&wire[14..22], &(-0.75f64).to_le_bytes());
+        // SCORE_BATCH_RESP_EX: 1 (op) + 4 (gen) + 1 (flags) + 2 (count)
+        // + 13/row.
+        let wire = Frame::ScoreBatchRespEx {
+            gen: 6,
+            flags: FLAG_DEGRADED,
+            results: vec![BatchResult { status: 0, evaluated: 12, score: 1.5 }],
+        }
+        .encode();
+        assert_eq!(&wire[0..4], &21u32.to_le_bytes());
+        assert_eq!(wire[4], OP_SCORE_BATCH_RESP_EX);
+        assert_eq!(wire[9], FLAG_DEGRADED);
+        assert_eq!(&wire[10..12], &1u16.to_le_bytes());
+        assert_eq!(wire[12], 0, "row status");
+        assert_eq!(wire.len(), 25);
+    }
+
+    #[test]
+    fn v7_layout_violations_are_rejected() {
+        // A lane byte beyond LANE_BULK is structural damage, in both
+        // decoders.
+        let mut body = Frame::ScoreSparseEx {
+            model: 0,
+            gen: 0,
+            deadline_ms: 0,
+            lane: LANE_DEFAULT,
+            idx: vec![1],
+            val: vec![1.0],
+        }
+        .encode()[4..]
+            .to_vec();
+        // Body index 0 is the op byte, so the lane sits at 1 + 10 = 11.
+        body[11] = 3;
+        match Frame::decode_body(&body) {
+            Err(FrameError::BadLayout(msg)) => assert!(msg.contains("lane"), "got {msg}"),
+            other => panic!("expected BadLayout, got {other:?}"),
+        }
+        assert!(FrameRef::decode_borrowed(&body).is_err());
+        let mut body = Frame::ScoreBatchEx {
+            model: 0,
+            gen: 0,
+            deadline_ms: 0,
+            lane: LANE_DEFAULT,
+            examples: vec![],
+        }
+        .encode()[4..]
+            .to_vec();
+        body[11] = 0xFF;
+        assert!(matches!(Frame::decode_body(&body), Err(FrameError::BadLayout(_))));
+        assert!(FrameRef::decode_borrowed(&body).is_err());
+        // nnz lying about the carried pairs.
+        let mut body = Frame::ScoreSparseEx {
+            model: 0,
+            gen: 0,
+            deadline_ms: 0,
+            lane: LANE_DEFAULT,
+            idx: vec![1],
+            val: vec![1.0],
+        }
+        .encode()[4..]
+            .to_vec();
+        body[12..16].copy_from_slice(&9u32.to_le_bytes());
+        match Frame::decode_body(&body) {
+            Err(FrameError::BadLayout(msg)) => assert!(msg.contains("nnz"), "got {msg}"),
+            other => panic!("expected BadLayout, got {other:?}"),
+        }
+        assert!(FrameRef::decode_borrowed(&body).is_err());
+        // Short headers and exact-size responses.
+        assert!(Frame::decode_body(&[OP_SCORE_SPARSE_EX, 0, 0, 0]).is_err());
+        assert!(Frame::decode_body(&[OP_SCORE_BATCH_EX, 0, 0, 0]).is_err());
+        assert!(Frame::decode_body(&[OP_SCORE_EX, 0, 0, 0, 0]).is_err());
+        assert!(Frame::decode_body(&[OP_SCORE_BATCH_RESP_EX, 0, 0]).is_err());
+        // Batch count overrunning the carried examples.
+        let mut body = Frame::ScoreBatchEx {
+            model: 0,
+            gen: 0,
+            deadline_ms: 0,
+            lane: LANE_DEFAULT,
+            examples: vec![(vec![1], vec![1.0])],
+        }
+        .encode()[4..]
+            .to_vec();
+        body[12..14].copy_from_slice(&2u16.to_le_bytes());
+        match Frame::decode_body(&body) {
+            Err(FrameError::BadLayout(msg)) => assert!(msg.contains("overruns"), "got {msg}"),
+            other => panic!("expected BadLayout, got {other:?}"),
+        }
+        assert!(FrameRef::decode_borrowed(&body).is_err());
+    }
+
+    #[test]
+    fn v7_incremental_encoders_match_owned_encoding() {
+        // put_sparse_ex matches Frame::encode byte-for-byte.
+        let frame = Frame::ScoreSparseEx {
+            model: 3,
+            gen: 8,
+            deadline_ms: 125,
+            lane: LANE_INTERACTIVE,
+            idx: vec![2, 70_000],
+            val: vec![0.5, -2.0],
+        };
+        let mut wire = Vec::new();
+        Frame::put_sparse_ex(
+            &mut wire,
+            3,
+            8,
+            125,
+            LANE_INTERACTIVE,
+            &[2, 70_000],
+            &[0.5, -2.0],
+        );
+        assert_eq!(wire, frame.encode());
+        // begin_score_batch_ex + push_example + finish matches too.
+        let examples = vec![(vec![0u32, 7], vec![0.5, -1.0]), (vec![], vec![])];
+        let frame = Frame::ScoreBatchEx {
+            model: 2,
+            gen: 5,
+            deadline_ms: 400,
+            lane: LANE_BULK,
+            examples: examples.clone(),
+        };
+        let mut wire = Vec::new();
+        let mut enc = Frame::begin_score_batch_ex(&mut wire, 2, 5, 400, LANE_BULK);
+        for (idx, val) in &examples {
+            enc.push_example(idx, val);
+        }
+        assert_eq!(enc.finish(), examples.len());
+        assert_eq!(wire, frame.encode());
+        // begin_score_batch_resp_ex + push_result + finish.
+        let results = vec![
+            BatchResult { status: 0, evaluated: 12, score: 1.5 },
+            BatchResult { status: 5, evaluated: 0, score: 0.0 },
+        ];
+        let frame =
+            Frame::ScoreBatchRespEx { gen: 5, flags: FLAG_DEGRADED, results: results.clone() };
+        let mut wire = Vec::new();
+        let mut enc = Frame::begin_score_batch_resp_ex(&mut wire, 5, FLAG_DEGRADED);
+        for r in &results {
+            enc.push_result(r.status, r.evaluated, r.score);
+        }
+        assert_eq!(enc.finish(), results.len());
+        assert_eq!(wire, frame.encode());
+    }
+
+    #[test]
     fn oversized_nnz_is_rejected() {
         // Declare 1000 pairs but carry one: layout error, not a panic or
         // a silent short read.
@@ -1733,6 +2443,7 @@ mod tests {
             ErrorCode::ModelBusy,
             ErrorCode::DefaultModel,
             ErrorCode::Internal,
+            ErrorCode::DeadlineExceeded,
         ] {
             assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
             assert!(!code.name().is_empty());
@@ -1752,6 +2463,11 @@ mod tests {
         assert!(ErrorCode::ModelBusy.retryable(), "retry once the old name retires");
         assert!(!ErrorCode::DefaultModel.retryable());
         assert!(ErrorCode::Internal.retryable(), "a respawned worker can answer the retry");
+        assert!(
+            ErrorCode::DeadlineExceeded.retryable(),
+            "a retry with a fresh deadline can land in a calmer queue"
+        );
+        assert_eq!(ErrorCode::DeadlineExceeded.name(), "deadline-exceeded");
     }
 
     #[test]
@@ -1898,6 +2614,28 @@ mod tests {
                 ],
             },
             Frame::ScoreBatch { model: 0, gen: 0, examples: vec![] },
+            Frame::ScoreSparseEx {
+                model: 1,
+                gen: 9,
+                deadline_ms: 250,
+                lane: LANE_INTERACTIVE,
+                idx: vec![0, 70_000, 4_000_000_000],
+                val: vec![0.25, -1.5, 1.0],
+            },
+            Frame::ScoreBatchEx {
+                model: 2,
+                gen: 5,
+                deadline_ms: 1_000,
+                lane: LANE_BULK,
+                examples: vec![(vec![0, 7], vec![0.5, -1.0]), (vec![], vec![])],
+            },
+            Frame::ScoreBatchEx {
+                model: 0,
+                gen: 0,
+                deadline_ms: 0,
+                lane: LANE_DEFAULT,
+                examples: vec![],
+            },
         ];
         for frame in frames {
             let wire = frame.encode();
@@ -1966,6 +2704,26 @@ mod tests {
                     );
                     Frame::ScoreBatch { model, gen, examples: rebuilt }
                 }
+                FrameRef::ScoreSparseEx { model, gen, deadline_ms, lane, pairs } => {
+                    validate_pairs_u32(pairs).unwrap();
+                    let Features::Sparse { idx, val } = pairs_to_features_u32(pairs) else {
+                        unreachable!()
+                    };
+                    assert_eq!(borrowed.nnz(), idx.len());
+                    Frame::ScoreSparseEx { model, gen, deadline_ms, lane, idx, val }
+                }
+                FrameRef::ScoreBatchEx { model, gen, deadline_ms, lane, count, examples } => {
+                    let mut rebuilt = Vec::with_capacity(count);
+                    for pairs in batch_pairs(examples) {
+                        validate_pairs_u32(pairs).unwrap();
+                        let Features::Sparse { idx, val } = pairs_to_features_u32(pairs) else {
+                            unreachable!()
+                        };
+                        rebuilt.push((idx, val));
+                    }
+                    assert_eq!(rebuilt.len(), count, "iterator yields every example");
+                    Frame::ScoreBatchEx { model, gen, deadline_ms, lane, examples: rebuilt }
+                }
                 FrameRef::Response(op) => panic!("request decoded as response {op:#04x}"),
             };
             assert_eq!(rebuilt, frame);
@@ -1983,6 +2741,14 @@ mod tests {
         assert_eq!(
             FrameRef::decode_borrowed(&wire[4..]),
             Ok(FrameRef::Response(OP_SCORE_BATCH_RESP))
+        );
+        let wire = Frame::ScoreEx { gen: 1, flags: FLAG_DEGRADED, evaluated: 2, score: 3.0 }
+            .encode();
+        assert_eq!(FrameRef::decode_borrowed(&wire[4..]), Ok(FrameRef::Response(OP_SCORE_EX)));
+        let wire = Frame::ScoreBatchRespEx { gen: 1, flags: 0, results: vec![] }.encode();
+        assert_eq!(
+            FrameRef::decode_borrowed(&wire[4..]),
+            Ok(FrameRef::Response(OP_SCORE_BATCH_RESP_EX))
         );
         // And both decoders agree on rejects.
         assert!(FrameRef::decode_borrowed(&[]).is_err());

@@ -16,9 +16,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 
+use crate::config::BrownoutConfig;
 use crate::coordinator::service::{
     CompletionNotifier, Features, PredictionService, ReqKind, RunningService, ScoreResponse,
-    ServiceHandle, ServingModel, StatsSnapshot, SubmitError,
+    ServiceHandle, ServingModel, StatsSnapshot, SubmitError, SubmitOpts,
 };
 
 /// Why the hub rejected a request.
@@ -130,6 +131,10 @@ pub struct ModelHub {
     /// Fired by every generation's workers after each response send;
     /// survives reloads (applied to every spawned generation).
     notifier: CompletionNotifier,
+    /// Overload-brownout config, applied to the first generation and to
+    /// every generation a reload spawns (the controller and the tiered
+    /// threshold tables are per-generation state).
+    brownout: Option<BrownoutConfig>,
 }
 
 impl ModelHub {
@@ -156,12 +161,28 @@ impl ModelHub {
         seed: u64,
         notifier: CompletionNotifier,
     ) -> Self {
+        Self::new_with_opts(model, max_batch, queue, workers, seed, notifier, None)
+    }
+
+    /// [`Self::new_with_notifier`] plus the overload-brownout config;
+    /// like the notifier, it survives reloads — every spawned generation
+    /// gets its own controller and tiered tables.
+    pub fn new_with_opts(
+        model: impl Into<ServingModel>,
+        max_batch: usize,
+        queue: usize,
+        workers: usize,
+        seed: u64,
+        notifier: CompletionNotifier,
+        brownout: Option<BrownoutConfig>,
+    ) -> Self {
         let model = Arc::new(model.into());
         let (dim, accepts, kind, voters) =
             (model.dim(), model.kind(), model.kind_name(), model.voter_count());
         let (handle, run) = PredictionService::new((*model).clone(), max_batch, queue, seed)
             .with_workers(workers)
             .with_notifier(notifier.clone())
+            .with_brownout(brownout.clone())
             .spawn();
         Self {
             inner: Mutex::new(HubState {
@@ -183,6 +204,7 @@ impl ModelHub {
             workers,
             seed,
             notifier,
+            brownout,
         }
     }
 
@@ -263,6 +285,20 @@ impl ModelHub {
         pin: u32,
         kind: ReqKind,
     ) -> Result<(Receiver<ScoreResponse>, u32), HubError> {
+        self.submit_pinned_opts(features, pin, kind, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_pinned`] with per-request admission options: an
+    /// absolute deadline (checked at dequeue — expired work answers the
+    /// retryable `DEADLINE_EXCEEDED` instead of being scored) and/or a
+    /// lane override (singles default to the interactive lane).
+    pub fn submit_pinned_opts(
+        &self,
+        features: impl Into<Features>,
+        pin: u32,
+        kind: ReqKind,
+        opts: SubmitOpts,
+    ) -> Result<(Receiver<ScoreResponse>, u32), HubError> {
         let features = features.into();
         let (handle, dim, gen, accepts, serving_kind) = {
             let st = self.inner.lock().unwrap();
@@ -284,7 +320,7 @@ impl ModelHub {
         if let Err((expected, got)) = features.check_dim(dim) {
             return Err(HubError::DimMismatch { expected, got });
         }
-        handle.submit_kind(features, kind).map(|rx| (rx, gen)).map_err(|e| match e {
+        handle.submit_opts(features, kind, opts).map(|rx| (rx, gen)).map_err(|e| match e {
             SubmitError::Overloaded => HubError::Overloaded,
             SubmitError::Closed => HubError::Closed,
         })
@@ -305,6 +341,19 @@ impl ModelHub {
         examples: Vec<Features>,
         pin: u32,
     ) -> Result<(Receiver<Vec<ScoreResponse>>, u32), HubError> {
+        self.submit_batch_opts(examples, pin, SubmitOpts::default())
+    }
+
+    /// [`Self::submit_batch`] with per-request admission options: one
+    /// deadline covering the whole batch (an expired batch answers
+    /// `DEADLINE_EXCEEDED` in every slot) and/or a lane override
+    /// (batches default to the bulk lane, which brownout tier 3 sheds).
+    pub fn submit_batch_opts(
+        &self,
+        examples: Vec<Features>,
+        pin: u32,
+        opts: SubmitOpts,
+    ) -> Result<(Receiver<Vec<ScoreResponse>>, u32), HubError> {
         let (handle, gen, accepts, serving_kind) = {
             let st = self.inner.lock().unwrap();
             (
@@ -320,7 +369,7 @@ impl ModelHub {
         if pin != 0 && pin != gen {
             return Err(HubError::StaleGeneration { requested: pin, serving: gen });
         }
-        handle.submit_batch(examples).map(|rx| (rx, gen)).map_err(|e| match e {
+        handle.submit_batch_opts(examples, opts).map(|rx| (rx, gen)).map_err(|e| match e {
             SubmitError::Overloaded => HubError::Overloaded,
             SubmitError::Closed => HubError::Closed,
         })
@@ -348,6 +397,7 @@ impl ModelHub {
             PredictionService::new((*model).clone(), self.max_batch, self.queue, seed)
                 .with_workers(self.workers)
                 .with_notifier(self.notifier.clone())
+                .with_brownout(self.brownout.clone())
                 .spawn();
         let mut st = self.inner.lock().unwrap();
         if st.handle.is_none() {

@@ -6,8 +6,12 @@
 //!   control channel (ping / stats / models / reload / add-model /
 //!   remove-model) and for one-off scoring or classification. Starts in
 //!   v1 JSON-lines mode; [`Client::negotiate`] upgrades it to the
-//!   binary framing at the highest version the server grants (v6 down
-//!   to v2) with transparent fallback on old servers.
+//!   binary framing at the highest version the server grants (v7 down
+//!   to v2) with transparent fallback on old servers. On a v7
+//!   connection [`Client::score_sparse_ex`] / [`Client::score_batch_ex`]
+//!   stamp a per-request deadline and admission lane on the wire, and
+//!   [`Client::batcher`] wraps [`Client::score_batch`] in a windowed
+//!   size-or-time batcher.
 //!   [`Client::call_retry`] adds the resilient shape: jittered
 //!   exponential backoff on `retryable` server errors, and
 //!   reconnect-plus-renegotiate when the transport dies under a
@@ -49,9 +53,12 @@ use std::time::Instant;
 use crate::coordinator::service::{Features, ModelSnapshot, ServingModel};
 use crate::data::synth::{SynthConfig, SynthDigits};
 use crate::error::{Error, Result};
-use crate::server::frame::{BatchResult, ErrorCode, Frame, FrameError, BATCH_STATUS_OK};
+use crate::server::frame::{
+    BatchResult, ErrorCode, Frame, FrameError, BATCH_STATUS_OK, FLAG_DEGRADED, LANE_DEFAULT,
+};
 use crate::server::protocol::{
     ModelEntry, Request, Response, StatsReport, PROTO_V2, PROTO_V3, PROTO_V4, PROTO_V5, PROTO_V6,
+    PROTO_V7,
 };
 use crate::util::rng::Rng64;
 
@@ -226,19 +233,21 @@ impl Client {
     }
 
     /// Negotiate binary framing, asking for the highest version this
-    /// build speaks (v6). Returns the granted version: 6 down to 2 on
+    /// build speaks (v7). Returns the granted version: 7 down to 2 on
     /// success (all switch to binary frames; 3 unlocks the model-routed
     /// frame ops, 4 the online-learning `LEARN_SPARSE` frame, 5 the
-    /// runtime `add-model` / `remove-model` shard lifecycle ops, and 6
-    /// the batched `SCORE_BATCH` scoring frame), 1 when the server
-    /// declines or predates the handshake (transparent fallback — the
-    /// connection keeps working in JSON-lines mode either way).
+    /// runtime `add-model` / `remove-model` shard lifecycle ops, 6
+    /// the batched `SCORE_BATCH` scoring frame, and 7 the deadline- and
+    /// lane-carrying `SCORE_SPARSE_EX` / `SCORE_BATCH_EX` frames), 1
+    /// when the server declines or predates the handshake (transparent
+    /// fallback — the connection keeps working in JSON-lines mode
+    /// either way).
     pub fn negotiate(&mut self) -> Result<u32> {
         if self.proto >= PROTO_V2 {
             return Ok(self.proto);
         }
         self.negotiated = true;
-        let line = Request::Hello { proto: PROTO_V6 }.to_line();
+        let line = Request::Hello { proto: PROTO_V7 }.to_line();
         self.writer
             .write_all(line.as_bytes())
             .and_then(|()| self.writer.flush())
@@ -250,7 +259,7 @@ impl Client {
         }
         match Response::parse(reply.trim()).map_err(|e| Error::format("hello reply", e))? {
             Response::Hello { proto, .. } if proto >= PROTO_V2 => {
-                self.proto = proto.min(PROTO_V6);
+                self.proto = proto.min(PROTO_V7);
                 Ok(self.proto)
             }
             // Declined (proto 1) or a pre-handshake server answering
@@ -271,6 +280,13 @@ impl Client {
                 id: None,
                 score,
                 features_evaluated: evaluated as usize,
+                degraded: false,
+            }),
+            Ok(Frame::ScoreEx { score, evaluated, flags, .. }) => Ok(Response::Score {
+                id: None,
+                score,
+                features_evaluated: evaluated as usize,
+                degraded: flags & FLAG_DEGRADED != 0,
             }),
             Ok(Frame::Class { label, votes, voters, evaluated, .. }) => Ok(Response::Classify {
                 id: None,
@@ -278,6 +294,7 @@ impl Client {
                 votes,
                 voters,
                 features_evaluated: evaluated as usize,
+                degraded: false,
             }),
             Ok(Frame::ClassVerbose { label, votes, voters, evaluated, per_voter, .. }) => {
                 Ok(Response::ClassifyVerbose {
@@ -287,6 +304,7 @@ impl Client {
                     voters,
                     features_evaluated: evaluated as usize,
                     per_voter,
+                    degraded: false,
                 })
             }
             Ok(Frame::LearnAck { gen, seen }) => Ok(Response::Learned { id: None, gen, seen }),
@@ -356,7 +374,13 @@ impl Client {
 
     /// Score one dense feature vector (on the default shard).
     pub fn score(&mut self, features: Vec<f64>) -> Result<Response> {
-        self.call(&Request::Score { id: None, model: None, features: Features::Dense(features) })
+        self.call(&Request::Score {
+            id: None,
+            model: None,
+            features: Features::Dense(features),
+            deadline_ms: None,
+            priority: None,
+        })
     }
 
     /// Score one payload on a named registry shard (JSON routing; works
@@ -366,6 +390,8 @@ impl Client {
             id: None,
             model: Some(model.to_string()),
             features: features.into(),
+            deadline_ms: None,
+            priority: None,
         })
     }
 
@@ -389,7 +415,13 @@ impl Client {
                 .map_err(|_| Error::format("score_sparse", "idx exceeds the u16 wire bound"))?;
             return self.call_frame(Frame::ScoreSparse { gen, idx: idx16, val });
         }
-        self.call(&Request::Score { id: None, model: None, features: Features::Sparse { idx, val } })
+        self.call(&Request::Score {
+            id: None,
+            model: None,
+            features: Features::Sparse { idx, val },
+            deadline_ms: None,
+            priority: None,
+        })
     }
 
     /// Score one sparse payload on shard `model` with the v3 frame
@@ -431,6 +463,8 @@ impl Client {
             model: model.map(str::to_string),
             features: features.into(),
             verbose: false,
+            deadline_ms: None,
+            priority: None,
         })
     }
 
@@ -447,6 +481,8 @@ impl Client {
             model: model.map(str::to_string),
             features: features.into(),
             verbose: true,
+            deadline_ms: None,
+            priority: None,
         })
     }
 
@@ -564,6 +600,98 @@ impl Client {
             id: None,
             model: model.map(str::to_string),
             examples,
+            deadline_ms: None,
+            priority: None,
+        })
+    }
+
+    /// Score one sparse payload on shard `model` with the v7
+    /// `SCORE_SPARSE_EX` frame, stamping a relative deadline
+    /// (`deadline_ms`, 0 = server default) and an admission lane byte
+    /// ([`LANE_DEFAULT`] / `LANE_INTERACTIVE` / `LANE_BULK`). A request
+    /// still queued when its deadline passes is answered with the
+    /// retryable `deadline-exceeded` error instead of being scored; a
+    /// response scored under a brownout tier comes back with
+    /// `degraded: true`. Needs a negotiated v7 connection.
+    pub fn score_sparse_ex(
+        &mut self,
+        model: u16,
+        gen: u32,
+        deadline_ms: u32,
+        lane: u8,
+        idx: &[u32],
+        val: &[f64],
+    ) -> Result<Response> {
+        self.require_proto(PROTO_V7, "score_sparse_ex")?;
+        let mut out = Vec::new();
+        Frame::put_sparse_ex(&mut out, model, gen, deadline_ms, lane, idx, val);
+        self.writer
+            .write_all(&out)
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| Error::io("<client write>", e))?;
+        self.read_frame_response()
+    }
+
+    /// [`Self::score_batch`] with the v7 `SCORE_BATCH_EX` frame: the
+    /// whole batch carries one relative deadline and one admission lane
+    /// byte. Returns the per-example rows plus the batch's `degraded`
+    /// flag (scored under a brownout tier). Needs a negotiated v7
+    /// connection.
+    pub fn score_batch_ex(
+        &mut self,
+        model: u16,
+        gen: u32,
+        deadline_ms: u32,
+        lane: u8,
+        examples: &[(Vec<u32>, Vec<f64>)],
+    ) -> Result<(Vec<BatchResult>, bool)> {
+        self.require_proto(PROTO_V7, "score_batch_ex")?;
+        let mut out = Vec::new();
+        let mut enc = Frame::begin_score_batch_ex(&mut out, model, gen, deadline_ms, lane);
+        for (idx, val) in examples {
+            enc.push_example(idx, val);
+        }
+        enc.finish();
+        self.writer
+            .write_all(&out)
+            .and_then(|()| self.writer.flush())
+            .map_err(|e| Error::io("<client write>", e))?;
+        match Frame::read_from(&mut self.reader, CLIENT_MAX_FRAME) {
+            Err(e) => Err(Error::format("server frame", e.to_string())),
+            Ok(Frame::ScoreBatchRespEx { results, flags, .. }) => {
+                Ok((results, flags & FLAG_DEGRADED != 0))
+            }
+            Ok(Frame::Error { code, msg, .. }) => Err(Error::format(
+                "score_batch_ex",
+                if msg.is_empty() { code.name().to_string() } else { msg },
+            )),
+            Ok(other) => {
+                Err(Error::format("server frame", format!("unexpected frame {other:?}")))
+            }
+        }
+    }
+
+    /// Wrap this connection in a windowed batcher: buffered examples
+    /// flush as one `SCORE_BATCH` frame when `k` have accumulated
+    /// (count trigger) or `window_us` microseconds have passed since
+    /// the oldest buffered example (time trigger), whichever comes
+    /// first — amortizing the per-frame round-trip without letting a
+    /// slow trickle sit unbatched forever. Needs a negotiated v6
+    /// connection.
+    pub fn batcher(
+        &mut self,
+        model: u16,
+        gen: u32,
+        k: usize,
+        window_us: u64,
+    ) -> Result<Batcher<'_>> {
+        self.require_proto(PROTO_V6, "batcher")?;
+        Ok(Batcher {
+            client: self,
+            model,
+            gen,
+            window: BatchWindow::new(k, window_us)?,
+            pending: Vec::new(),
         })
     }
 
@@ -632,6 +760,116 @@ impl Client {
                 Err(Error::format("remove-model reply", format!("unexpected {other:?}")))
             }
         }
+    }
+}
+
+/// The size-or-time flush policy behind [`Batcher`]: flush when `k`
+/// examples have accumulated, or when `window` has elapsed since the
+/// oldest buffered example arrived. Kept free of any I/O so both
+/// triggers are unit-testable without a server.
+#[derive(Debug)]
+struct BatchWindow {
+    /// Count trigger: flush at this many buffered examples.
+    k: usize,
+    /// Time trigger: flush `window` after the oldest buffered example.
+    window: std::time::Duration,
+    /// Buffered examples.
+    len: usize,
+    /// Arrival time of the oldest buffered example (`None` when empty).
+    oldest: Option<Instant>,
+}
+
+impl BatchWindow {
+    fn new(k: usize, window_us: u64) -> Result<BatchWindow> {
+        if k == 0 {
+            return Err(Error::Config("batcher k must be >= 1".into()));
+        }
+        Ok(BatchWindow {
+            k,
+            window: std::time::Duration::from_micros(window_us),
+            len: 0,
+            oldest: None,
+        })
+    }
+
+    /// Record one buffered example at time `now`; returns `true` when
+    /// the batch should flush — the push filled it to `k`, or the
+    /// window had already expired.
+    fn note_push(&mut self, now: Instant) -> bool {
+        self.oldest.get_or_insert(now);
+        self.len += 1;
+        self.len >= self.k || self.due(now)
+    }
+
+    /// Whether the time trigger has fired: examples are buffered and
+    /// the oldest has waited at least the window.
+    fn due(&self, now: Instant) -> bool {
+        self.oldest.is_some_and(|t| now.duration_since(t) >= self.window)
+    }
+
+    /// Forget the buffered examples (they were flushed).
+    fn reset(&mut self) {
+        self.len = 0;
+        self.oldest = None;
+    }
+}
+
+/// A client-side windowed batcher (see [`Client::batcher`]): buffers
+/// single sparse examples and flushes them as one `SCORE_BATCH` frame
+/// at `k` examples or `window_us` microseconds, whichever trips first.
+/// Between pushes, call [`Batcher::flush_if_due`] so a lull in arrivals
+/// cannot park a short batch past its window.
+pub struct Batcher<'c> {
+    client: &'c mut Client,
+    model: u16,
+    gen: u32,
+    window: BatchWindow,
+    pending: Vec<(Vec<u32>, Vec<f64>)>,
+}
+
+impl Batcher<'_> {
+    /// Examples currently buffered.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether the time trigger has fired (the oldest buffered example
+    /// has waited at least the window).
+    pub fn due(&self) -> bool {
+        self.window.due(Instant::now())
+    }
+
+    /// Buffer one example. Flushes — returning the batch's rows — when
+    /// this push fills the batch to `k` or the window has expired;
+    /// otherwise buffers and returns `None`.
+    pub fn push(
+        &mut self,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+    ) -> Result<Option<Vec<BatchResult>>> {
+        self.pending.push((idx, val));
+        if self.window.note_push(Instant::now()) {
+            return self.flush().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Flush only if the time trigger has fired — the poll hook for
+    /// callers waiting between arrivals.
+    pub fn flush_if_due(&mut self) -> Result<Option<Vec<BatchResult>>> {
+        if self.due() { self.flush().map(Some) } else { Ok(None) }
+    }
+
+    /// Flush the buffered examples now, regardless of trigger state
+    /// (end-of-stream drain). An empty buffer returns no rows without
+    /// touching the wire.
+    pub fn flush(&mut self) -> Result<Vec<BatchResult>> {
+        if self.pending.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.window.reset();
+        let batch = std::mem::take(&mut self.pending);
+        self.client.score_batch(self.model, self.gen, &batch)
     }
 }
 
@@ -736,11 +974,14 @@ pub struct LoadGenConfig {
     pub seed: u64,
     /// Open-loop mode: instead of one driver thread per connection
     /// pipelining hard, a handful of worker threads each hold a large
-    /// slice of `connections` sockets open and rotate one
-    /// request-response at a time across them. Most connections are
-    /// idle at any instant — the shape that demonstrates (and
-    /// regression-tests) the event-loop backend holding thousands of
-    /// mostly-idle sockets without shedding.
+    /// slice of `connections` sockets open and rotate requests across
+    /// them. With `pipeline == 1` each shard keeps one request in
+    /// flight — most connections idle at any instant, the shape that
+    /// demonstrates (and regression-tests) the event-loop backend
+    /// holding thousands of mostly-idle sockets without shedding. With
+    /// `pipeline > 1` every socket holds a window of that many
+    /// requests in flight per sweep — the past-capacity shape the
+    /// overload smoke drives (see [`run_open_loop`]).
     pub open_loop: bool,
     /// Shard churn alongside the main traffic: a dedicated control
     /// connection cycles `add-model` → routed score → `remove-model`
@@ -760,6 +1001,15 @@ pub struct LoadGenConfig {
     /// (shed, internal) are tallied, never re-sent — the load generator
     /// measures shedding rather than hiding it.
     pub retries: u32,
+    /// Relative deadline stamped on every binary score request, in
+    /// milliseconds: the `v2-binary` mode switches to `SCORE_SPARSE_EX`
+    /// frames and batch mode to `SCORE_BATCH_EX` (both need a protocol
+    /// v7 server). A request still queued past its deadline is answered
+    /// with the retryable `deadline-exceeded` error, tallied under
+    /// `LoadReport.deadline_sheds`. 0 (the default) keeps the legacy
+    /// frames — the server may still apply its own
+    /// `--deadline-default-ms`.
+    pub deadline_ms: u32,
 }
 
 impl Default for LoadGenConfig {
@@ -779,6 +1029,7 @@ impl Default for LoadGenConfig {
             open_loop: false,
             churn_cycles: 0,
             retries: 0,
+            deadline_ms: 0,
         }
     }
 }
@@ -818,6 +1069,13 @@ pub struct LoadReport {
     pub retries: u64,
     /// Fresh connections opened mid-run to replace dead ones.
     pub reconnects: u64,
+    /// Retryable `deadline-exceeded` sheds received: requests the
+    /// server dropped unscored because their deadline passed while
+    /// queued. Counted per example, like `answered`.
+    pub deadline_sheds: u64,
+    /// Answered requests flagged `degraded` (scored under a brownout
+    /// tier with a tightened early-exit boundary).
+    pub degraded: u64,
 }
 
 impl LoadReport {
@@ -877,6 +1135,8 @@ impl LoadReport {
         self.churned += other.churned;
         self.retries += other.retries;
         self.reconnects += other.reconnects;
+        self.deadline_sheds += other.deadline_sheds;
+        self.degraded += other.degraded;
     }
 }
 
@@ -923,6 +1183,11 @@ pub fn report_to_json(requests: usize, passes: &[(String, LoadReport)]) -> crate
             fields.push(("retries", Json::Num(r.retries as f64)));
             fields.push(("reconnects", Json::Num(r.reconnects as f64)));
         }
+        if r.deadline_sheds > 0 || r.degraded > 0 {
+            // Overload pass: brownout degradation and deadline sheds.
+            fields.push(("deadline_sheds", Json::Num(r.deadline_sheds as f64)));
+            fields.push(("degraded", Json::Num(r.degraded as f64)));
+        }
         modes.push((name.clone(), Json::obj(fields)))
     }
     let find = |mode: ClientMode| {
@@ -966,9 +1231,13 @@ fn hard_render_config() -> SynthConfig {
     SynthConfig { pixel_noise: 0.35, salt_prob: 0.2, jitter_px: 4.0, ..Default::default() }
 }
 
-/// Lowest protocol grant a mode's frames need.
-fn required_proto(mode: ClientMode) -> u32 {
-    match mode {
+/// Lowest protocol grant this run's frames need (a nonzero deadline
+/// moves the score wires onto the v7 `*_EX` frames).
+fn required_proto(cfg: &LoadGenConfig) -> u32 {
+    if cfg.deadline_ms > 0 && matches!(cfg.mode, ClientMode::V2Binary | ClientMode::Batch) {
+        return PROTO_V7;
+    }
+    match cfg.mode {
         ClientMode::Classify => PROTO_V3,
         ClientMode::Learn | ClientMode::Mixed => PROTO_V4,
         ClientMode::Batch => PROTO_V6,
@@ -1120,12 +1389,37 @@ const OPEN_LOOP_SHARDS: usize = 8;
 
 /// Tally one binary response frame into the report.
 fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
+    // One tally per batch row: batch traffic counts on the same
+    // per-example scale as the single-frame modes, so batch and
+    // singles `req_per_s` compare directly.
+    fn count_rows(report: &mut LoadReport, results: &[BatchResult], degraded: bool) {
+        for r in results {
+            if r.status == BATCH_STATUS_OK {
+                report.answered += 1;
+                report.total_features += r.evaluated as u64;
+                report.features.push(r.evaluated);
+                report.degraded += u64::from(degraded);
+            } else if r.status == ErrorCode::Overloaded as u8 {
+                report.overloaded += 1;
+            } else if r.status == ErrorCode::DeadlineExceeded as u8 {
+                report.deadline_sheds += 1;
+            } else {
+                report.errors += 1;
+            }
+        }
+    }
     match frame {
         Frame::LearnAck { .. } => report.learned += 1,
         Frame::Score { evaluated, .. } => {
             report.answered += 1;
             report.total_features += *evaluated as u64;
             report.features.push(*evaluated);
+        }
+        Frame::ScoreEx { evaluated, flags, .. } => {
+            report.answered += 1;
+            report.total_features += *evaluated as u64;
+            report.features.push(*evaluated);
+            report.degraded += u64::from(flags & FLAG_DEGRADED != 0);
         }
         Frame::Class { evaluated, voters, .. }
         | Frame::ClassVerbose { evaluated, voters, .. } => {
@@ -1134,23 +1428,12 @@ fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
             report.features.push(*evaluated);
             report.total_voters += *voters as u64;
         }
-        Frame::ScoreBatchResp { results, .. } => {
-            // One tally per row: batch traffic counts on the same
-            // per-example scale as the single-frame modes, so batch
-            // and singles `req_per_s` compare directly.
-            for r in results {
-                if r.status == BATCH_STATUS_OK {
-                    report.answered += 1;
-                    report.total_features += r.evaluated as u64;
-                    report.features.push(r.evaluated);
-                } else if r.status == ErrorCode::Overloaded as u8 {
-                    report.overloaded += 1;
-                } else {
-                    report.errors += 1;
-                }
-            }
+        Frame::ScoreBatchResp { results, .. } => count_rows(report, results, false),
+        Frame::ScoreBatchRespEx { results, flags, .. } => {
+            count_rows(report, results, flags & FLAG_DEGRADED != 0)
         }
         Frame::Error { code: ErrorCode::Overloaded, .. } => report.overloaded += 1,
+        Frame::Error { code: ErrorCode::DeadlineExceeded, .. } => report.deadline_sheds += 1,
         _ => report.errors += 1,
     }
 }
@@ -1159,33 +1442,42 @@ fn count_binary_response(report: &mut LoadReport, frame: &Frame) {
 fn count_json_response(report: &mut LoadReport, line: &str) {
     match Response::parse(line.trim()) {
         Ok(Response::Learned { .. }) => report.learned += 1,
-        Ok(Response::Score { features_evaluated, .. }) => {
+        Ok(Response::Score { features_evaluated, degraded, .. }) => {
             report.answered += 1;
             report.total_features += features_evaluated as u64;
             report.features.push(features_evaluated as u32);
+            report.degraded += u64::from(degraded);
         }
         Ok(
-            Response::Classify { features_evaluated, voters, .. }
-            | Response::ClassifyVerbose { features_evaluated, voters, .. },
+            Response::Classify { features_evaluated, voters, degraded, .. }
+            | Response::ClassifyVerbose { features_evaluated, voters, degraded, .. },
         ) => {
             report.answered += 1;
             report.total_features += features_evaluated as u64;
             report.features.push(features_evaluated as u32);
             report.total_voters += voters as u64;
+            report.degraded += u64::from(degraded);
         }
         Ok(resp) if resp.is_overloaded() => report.overloaded += 1,
+        Ok(resp) if resp.is_deadline_exceeded() => report.deadline_sheds += 1,
         _ => report.errors += 1,
     }
 }
 
 /// Open-loop driver: a few worker shards, each holding a contiguous
-/// slice of the `connections` sockets open and sweeping one
-/// request-response at a time across them. In-flight requests never
-/// exceed [`OPEN_LOOP_SHARDS`], so against a sane queue nothing is
-/// shed — what this measures is the server *holding* thousands of
-/// mostly-idle connections, which is exactly the event-loop backend's
-/// claim (the thread backend would need two threads per socket just to
-/// sit there).
+/// slice of the `connections` sockets open and sweeping requests
+/// across them. With `pipeline == 1` (the default) each shard keeps
+/// one request in flight at a time — in-flight never exceeds
+/// [`OPEN_LOOP_SHARDS`], nothing is shed against a sane queue, and
+/// what this measures is the server *holding* thousands of mostly-idle
+/// connections, which is exactly the event-loop backend's claim (the
+/// thread backend would need two threads per socket just to sit
+/// there). With `pipeline > 1` each sweep writes up to `pipeline`
+/// requests to **every** socket before draining their responses, so
+/// shard-wide in-flight reaches `sockets × pipeline` — the
+/// past-capacity shape the overload smoke drives: the admission queue
+/// genuinely fills, deadlines expire in it, and the brownout
+/// controller sees sustained pressure.
 fn run_open_loop(cfg: &LoadGenConfig) -> Result<LoadReport> {
     let shards = cfg.connections.min(OPEN_LOOP_SHARDS).max(1);
     // Connection c (globally) issues `base + (c < rem)` requests.
@@ -1242,8 +1534,8 @@ fn drive_open_loop_shard(
         // thousands of these.
         let mut reader = BufReader::with_capacity(1024, CountingReader::new(read_half));
         if binary {
-            let needed = required_proto(cfg.mode);
-            let hello = Request::Hello { proto: PROTO_V6 }.to_line();
+            let needed = required_proto(cfg);
+            let hello = Request::Hello { proto: PROTO_V7 }.to_line();
             (&stream)
                 .write_all(hello.as_bytes())
                 .map_err(|e| Error::io("<loadgen hello>", e))?;
@@ -1311,44 +1603,117 @@ fn drive_open_loop_shard(
     let mut seq = 0u64;
 
     let t0 = Instant::now();
-    for round in 0..base + usize::from(rem > 0) {
-        for sock in socks.iter_mut() {
-            if sock.remaining <= round {
-                continue;
-            }
-            let digit = cfg.digits[seq as usize % cfg.digits.len()];
-            if mix.f64() < cfg.hard_fraction {
-                noisy.render_into(digit, &mut dense)
-            } else {
-                clean.render_into(digit, &mut dense)
-            };
-            encode_request_into(cfg, model_id, seq, &dense, &mut scratch);
-            seq += 1;
-            if (&sock.stream).write_all(&scratch.out).is_err() {
-                report.errors += 1;
-                sock.remaining = 0;
-                continue;
-            }
-            report.bytes_sent += scratch.out.len() as u64;
-            report.sent += 1;
-            // One in flight per shard: read the response right away.
-            if binary {
-                match Frame::read_body(&mut sock.reader, &mut frame_body, CLIENT_MAX_FRAME)
-                    .and_then(|()| Frame::decode_body(&frame_body))
-                {
-                    Ok(frame) => count_binary_response(&mut report, &frame),
-                    Err(_) => {
+    if cfg.pipeline > 1 {
+        // Windowed sweep: every socket gets up to `pipeline` requests
+        // written before any response is read, so the shard holds
+        // `sockets × pipeline` in flight — the past-capacity shape.
+        // `remaining` counts down here (the legacy sweep below compares
+        // it against the round index instead). Error accounting keeps
+        // the `sent == answered + sheds + errors` invariant: a dead
+        // read charges one error per undrained in-flight request.
+        let mut burst = vec![0usize; socks.len()];
+        loop {
+            let mut live = false;
+            for (sock, burst) in socks.iter_mut().zip(burst.iter_mut()) {
+                *burst = 0;
+                while sock.remaining > 0 && *burst < cfg.pipeline {
+                    let digit = cfg.digits[seq as usize % cfg.digits.len()];
+                    if mix.f64() < cfg.hard_fraction {
+                        noisy.render_into(digit, &mut dense)
+                    } else {
+                        clean.render_into(digit, &mut dense)
+                    };
+                    encode_request_into(cfg, model_id, seq, &dense, &mut scratch);
+                    seq += 1;
+                    if (&sock.stream).write_all(&scratch.out).is_err() {
                         report.errors += 1;
                         sock.remaining = 0;
+                        break;
+                    }
+                    report.bytes_sent += scratch.out.len() as u64;
+                    report.sent += 1;
+                    sock.remaining -= 1;
+                    *burst += 1;
+                }
+                live |= *burst > 0 || sock.remaining > 0;
+            }
+            for (sock, burst) in socks.iter_mut().zip(burst.iter()) {
+                for drained in 0..*burst {
+                    let ok = if binary {
+                        match Frame::read_body(
+                            &mut sock.reader,
+                            &mut frame_body,
+                            CLIENT_MAX_FRAME,
+                        )
+                        .and_then(|()| Frame::decode_body(&frame_body))
+                        {
+                            Ok(frame) => {
+                                count_binary_response(&mut report, &frame);
+                                true
+                            }
+                            Err(_) => false,
+                        }
+                    } else {
+                        line.clear();
+                        match sock.reader.read_line(&mut line) {
+                            Ok(n) if n > 0 => {
+                                count_json_response(&mut report, &line);
+                                true
+                            }
+                            _ => false,
+                        }
+                    };
+                    if !ok {
+                        report.errors += (*burst - drained) as u64;
+                        sock.remaining = 0;
+                        break;
                     }
                 }
-            } else {
-                line.clear();
-                match sock.reader.read_line(&mut line) {
-                    Ok(n) if n > 0 => count_json_response(&mut report, &line),
-                    _ => {
-                        report.errors += 1;
-                        sock.remaining = 0;
+            }
+            if !live {
+                break;
+            }
+        }
+    } else {
+        for round in 0..base + usize::from(rem > 0) {
+            for sock in socks.iter_mut() {
+                if sock.remaining <= round {
+                    continue;
+                }
+                let digit = cfg.digits[seq as usize % cfg.digits.len()];
+                if mix.f64() < cfg.hard_fraction {
+                    noisy.render_into(digit, &mut dense)
+                } else {
+                    clean.render_into(digit, &mut dense)
+                };
+                encode_request_into(cfg, model_id, seq, &dense, &mut scratch);
+                seq += 1;
+                if (&sock.stream).write_all(&scratch.out).is_err() {
+                    report.errors += 1;
+                    sock.remaining = 0;
+                    continue;
+                }
+                report.bytes_sent += scratch.out.len() as u64;
+                report.sent += 1;
+                // One in flight per shard: read the response right away.
+                if binary {
+                    match Frame::read_body(&mut sock.reader, &mut frame_body, CLIENT_MAX_FRAME)
+                        .and_then(|()| Frame::decode_body(&frame_body))
+                    {
+                        Ok(frame) => count_binary_response(&mut report, &frame),
+                        Err(_) => {
+                            report.errors += 1;
+                            sock.remaining = 0;
+                        }
+                    }
+                } else {
+                    line.clear();
+                    match sock.reader.read_line(&mut line) {
+                        Ok(n) if n > 0 => count_json_response(&mut report, &line),
+                        _ => {
+                            report.errors += 1;
+                            sock.remaining = 0;
+                        }
                     }
                 }
             }
@@ -1454,18 +1819,32 @@ fn encode_request_into(
         }
         ClientMode::V2Binary => {
             Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
-            // Loadgen traffic is 784-dim digit imagery, far inside the
-            // u16 wire bound — checked anyway so a future traffic
-            // generator can't silently wrap indices.
-            Frame::put_score_sparse(&mut scratch.out, 0, &scratch.idx, &scratch.val)
-                .expect("loadgen payload index exceeds the u16 wire bound");
+            if cfg.deadline_ms > 0 {
+                // Deadline runs ride the v7 frame so every request
+                // carries its expiry onto the admission queue.
+                Frame::put_sparse_ex(
+                    &mut scratch.out,
+                    0,
+                    0,
+                    cfg.deadline_ms,
+                    LANE_DEFAULT,
+                    &scratch.idx,
+                    &scratch.val,
+                );
+            } else {
+                // Loadgen traffic is 784-dim digit imagery, far inside
+                // the u16 wire bound — checked anyway so a future
+                // traffic generator can't silently wrap indices.
+                Frame::put_score_sparse(&mut scratch.out, 0, &scratch.idx, &scratch.val)
+                    .expect("loadgen payload index exceeds the u16 wire bound");
+            }
         }
         ClientMode::Batch => {
             // A lone example still rides the batch frame (the
             // drive_batch_connection hot loop packs multi-example
             // frames itself; this arm keeps the encoder total).
             Features::sparsify_into(features, cfg.sparse_eps, &mut scratch.idx, &mut scratch.val);
-            let mut enc = Frame::begin_score_batch(&mut scratch.out, model_id, 0);
+            let mut enc = begin_batch_frame(cfg, &mut scratch.out, model_id);
             enc.push_example(&scratch.idx, &scratch.val);
             enc.finish();
         }
@@ -1516,6 +1895,21 @@ fn encode_request_into(
     }
 }
 
+/// Start a batch request frame on the configured wire: the legacy
+/// `SCORE_BATCH` layout, or its v7 `SCORE_BATCH_EX` twin carrying the
+/// configured deadline when one is set.
+fn begin_batch_frame<'o>(
+    cfg: &LoadGenConfig,
+    out: &'o mut Vec<u8>,
+    model_id: u16,
+) -> crate::server::frame::BatchEncoder<'o> {
+    if cfg.deadline_ms > 0 {
+        Frame::begin_score_batch_ex(out, model_id, 0, cfg.deadline_ms, LANE_DEFAULT)
+    } else {
+        Frame::begin_score_batch(out, model_id, 0)
+    }
+}
+
 /// One-shot form of [`encode_request_into`] (tests and tools).
 #[cfg(test)]
 fn encode_request(cfg: &LoadGenConfig, model_id: u16, id: u64, features: Vec<f64>) -> Vec<u8> {
@@ -1535,8 +1929,8 @@ fn binary_handshake(
     reader: &mut BufReader<CountingReader<TcpStream>>,
     report: &mut LoadReport,
 ) -> Result<u16> {
-    let needed = required_proto(cfg.mode);
-    let hello = Request::Hello { proto: PROTO_V6 }.to_line();
+    let needed = required_proto(cfg);
+    let hello = Request::Hello { proto: PROTO_V7 }.to_line();
     writer
         .write_all(hello.as_bytes())
         .and_then(|()| writer.flush())
@@ -1694,7 +2088,7 @@ fn drive_batch_connection(cfg: &LoadGenConfig, conn_id: u64, n: usize) -> Result
             // The last frame carries the remainder.
             let count = batch.min(n - next * batch);
             scratch.out.clear();
-            let mut enc = Frame::begin_score_batch(&mut scratch.out, conn.model_id, 0);
+            let mut enc = begin_batch_frame(cfg, &mut scratch.out, conn.model_id);
             for _ in 0..count {
                 let digit = cfg.digits[seq as usize % cfg.digits.len()];
                 if mix.f64() < cfg.hard_fraction {
@@ -1963,6 +2357,8 @@ mod tests {
             churned: 2,
             retries: 1,
             reconnects: 1,
+            deadline_sheds: 3,
+            degraded: 4,
         };
         let b = LoadReport {
             sent: 5,
@@ -1979,6 +2375,8 @@ mod tests {
             churned: 1,
             retries: 2,
             reconnects: 0,
+            deadline_sheds: 1,
+            degraded: 0,
         };
         a.merge(&b);
         assert_eq!(a.sent, 15);
@@ -1994,6 +2392,8 @@ mod tests {
         assert_eq!(a.churned, 3);
         assert_eq!(a.retries, 3);
         assert_eq!(a.reconnects, 1);
+        assert_eq!(a.deadline_sheds, 4);
+        assert_eq!(a.degraded, 4);
     }
 
     #[test]
@@ -2182,6 +2582,147 @@ mod tests {
         assert_eq!(report.overloaded, 1);
         assert_eq!(report.total_features, 100);
         assert_eq!(report.features, vec![40, 60]);
+        assert_eq!(report.degraded, 0, "legacy batch frames never carry the degraded flag");
+    }
+
+    #[test]
+    fn v7_responses_tally_sheds_and_degradation() {
+        // A degraded EX batch: OK rows count as answered *and*
+        // degraded; a deadline-shed row lands in its own bucket.
+        let mut report = LoadReport::default();
+        let frame = Frame::ScoreBatchRespEx {
+            gen: 3,
+            flags: FLAG_DEGRADED,
+            results: vec![
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 40, score: 1.5 },
+                BatchResult {
+                    status: ErrorCode::DeadlineExceeded as u8,
+                    evaluated: 0,
+                    score: 0.0,
+                },
+                BatchResult { status: BATCH_STATUS_OK, evaluated: 60, score: -0.5 },
+            ],
+        };
+        count_binary_response(&mut report, &frame);
+        assert_eq!(report.answered, 2);
+        assert_eq!(report.degraded, 2);
+        assert_eq!(report.deadline_sheds, 1);
+        assert_eq!(report.errors, 0, "a deadline shed is not a transport error");
+
+        // Single-frame EX responses and the bare error frame.
+        let mut report = LoadReport::default();
+        count_binary_response(
+            &mut report,
+            &Frame::ScoreEx { gen: 1, flags: FLAG_DEGRADED, evaluated: 7, score: 0.5 },
+        );
+        count_binary_response(
+            &mut report,
+            &Frame::ScoreEx { gen: 1, flags: 0, evaluated: 9, score: 0.5 },
+        );
+        count_binary_response(
+            &mut report,
+            &Frame::Error {
+                code: ErrorCode::DeadlineExceeded,
+                retryable: true,
+                msg: String::new(),
+            },
+        );
+        assert_eq!(report.answered, 2);
+        assert_eq!(report.degraded, 1);
+        assert_eq!(report.deadline_sheds, 1);
+        assert_eq!(report.errors, 0);
+
+        // The JSON twin: a degraded score and a deadline-shed error
+        // (rendered through the real response serializer so the tally
+        // sees exactly the server's line format).
+        let mut report = LoadReport::default();
+        let score =
+            Response::Score { id: None, score: 1.0, features_evaluated: 5, degraded: true };
+        count_json_response(&mut report, &score.to_line());
+        let shed = Response::Error {
+            id: None,
+            error: "deadline exceeded before scoring (shed at dequeue; retry)".into(),
+            retryable: true,
+        };
+        assert!(shed.is_deadline_exceeded());
+        count_json_response(&mut report, &shed.to_line());
+        assert_eq!(report.answered, 1);
+        assert_eq!(report.degraded, 1);
+        assert_eq!(report.deadline_sheds, 1);
+        assert_eq!(report.errors, 0);
+    }
+
+    #[test]
+    fn deadline_config_switches_binary_modes_to_ex_frames() {
+        let features: Vec<f64> = (0..784)
+            .map(|i| if i % 5 == 0 { 0.1234567890123 + i as f64 * 1e-7 } else { 0.0 })
+            .collect();
+        let nnz = features.iter().filter(|v| v.abs() > 0.05).count();
+        let cfg = LoadGenConfig {
+            mode: ClientMode::V2Binary,
+            deadline_ms: 25,
+            ..Default::default()
+        };
+        assert_eq!(required_proto(&cfg), PROTO_V7);
+        let bytes = encode_request(&cfg, 0, 0, features.clone());
+        match Frame::decode(&bytes, 1 << 20).unwrap().0 {
+            Frame::ScoreSparseEx { deadline_ms, lane, idx, .. } => {
+                assert_eq!(deadline_ms, 25);
+                assert_eq!(lane, LANE_DEFAULT);
+                assert_eq!(idx.len(), nnz);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        let cfg = LoadGenConfig {
+            mode: ClientMode::Batch,
+            deadline_ms: 40,
+            ..Default::default()
+        };
+        assert_eq!(required_proto(&cfg), PROTO_V7);
+        let bytes = encode_request(&cfg, 9, 0, features);
+        match Frame::decode(&bytes, 1 << 20).unwrap().0 {
+            Frame::ScoreBatchEx { model, deadline_ms, lane, examples, .. } => {
+                assert_eq!(model, 9);
+                assert_eq!(deadline_ms, 40);
+                assert_eq!(lane, LANE_DEFAULT);
+                assert_eq!(examples.len(), 1);
+            }
+            other => panic!("wrong frame {other:?}"),
+        }
+        // Without a deadline the legacy frames (and proto floors) stay.
+        let cfg = LoadGenConfig { mode: ClientMode::V2Binary, ..Default::default() };
+        assert_eq!(required_proto(&cfg), PROTO_V2);
+    }
+
+    #[test]
+    fn batch_window_count_trigger_fires_at_k() {
+        let now = Instant::now();
+        let mut w = BatchWindow::new(3, 1_000_000).unwrap();
+        assert!(!w.note_push(now), "1 of 3 buffered");
+        assert!(!w.note_push(now), "2 of 3 buffered");
+        assert!(w.note_push(now), "the k-th push flushes");
+        w.reset();
+        assert!(!w.due(now), "reset forgets the oldest arrival");
+        assert!(!w.note_push(now), "the count restarts after a flush");
+        assert!(BatchWindow::new(0, 10).is_err(), "k = 0 can never flush");
+    }
+
+    #[test]
+    fn batch_window_time_trigger_fires_after_window() {
+        let t0 = Instant::now();
+        let mut w = BatchWindow::new(100, 500).unwrap();
+        assert!(!w.due(t0), "an empty window is never due");
+        assert!(!w.note_push(t0), "1 of 100, window fresh");
+        let before = t0 + std::time::Duration::from_micros(499);
+        let after = t0 + std::time::Duration::from_micros(500);
+        assert!(!w.due(before), "window not yet elapsed");
+        assert!(w.due(after), "window elapsed since the oldest push");
+        assert!(
+            w.note_push(after),
+            "a push after the window expires flushes even far below k"
+        );
+        w.reset();
+        assert!(!w.due(after + std::time::Duration::from_secs(1)), "flushing rearms the window");
     }
 
     #[test]

@@ -84,7 +84,7 @@
 //! can pipeline without correlating ids (ids are still echoed for
 //! clients that want them).
 
-use crate::coordinator::service::{Features, ServingModel, VoterVote};
+use crate::coordinator::service::{Features, Lane, ServingModel, VoterVote};
 use crate::util::json::Json;
 
 /// Protocol version 2: binary framing, single-model ops.
@@ -99,11 +99,17 @@ pub const PROTO_V4: u32 = 4;
 /// (`add-model` / `remove-model` control ops; a v5 grant is how
 /// clients discover the server supports them).
 pub const PROTO_V5: u32 = 5;
-/// Highest protocol version this build speaks: v5 plus the batched
-/// scoring capability (the binary `SCORE_BATCH` frame and its
-/// `SCORE_BATCH_RESP`; a v6 grant is how clients discover the server
-/// accepts batches and respects its advertised `max_batch_examples`).
+/// Protocol version 6: v5 plus the batched scoring capability (the
+/// binary `SCORE_BATCH` frame and its `SCORE_BATCH_RESP`; a v6 grant
+/// is how clients discover the server accepts batches and respects its
+/// advertised `max_batch_examples`).
 pub const PROTO_V6: u32 = 6;
+/// Highest protocol version this build speaks: v6 plus the overload
+/// brownout capability — per-request deadlines (`deadline_ms`) and
+/// admission-lane overrides (`priority`) on score/classify/score-batch,
+/// the retryable `deadline-exceeded` error, the `degraded` response
+/// flag, and the binary EX frame ops that carry the same fields.
+pub const PROTO_V7: u32 = 7;
 
 /// A client → server message.
 #[derive(Debug, Clone)]
@@ -123,6 +129,14 @@ pub enum Request {
         model: Option<String>,
         /// The payload; sparse payloads are scored without densifying.
         features: Features,
+        /// Optional relative deadline (protocol v7): work still queued
+        /// `deadline_ms` after admission is answered with the retryable
+        /// `deadline-exceeded` error instead of being scored. `None`
+        /// (or 0) falls back to the server's configured default.
+        deadline_ms: Option<u64>,
+        /// Optional admission-lane override (protocol v7); `None`
+        /// takes the op default (singles → interactive).
+        priority: Option<Lane>,
     },
     /// Run the attentive all-pairs vote on an ensemble shard.
     Classify {
@@ -137,6 +151,11 @@ pub enum Request {
         /// and features-touched, so clients can see where the attentive
         /// budget went.
         verbose: bool,
+        /// Optional relative deadline (protocol v7); see
+        /// [`Request::Score::deadline_ms`].
+        deadline_ms: Option<u64>,
+        /// Optional admission-lane override (protocol v7).
+        priority: Option<Lane>,
     },
     /// Score a batch of examples on one binary shard as a single queue
     /// admission (the protocol-v6 `SCORE_BATCH` capability's JSON
@@ -152,6 +171,12 @@ pub enum Request {
         /// happens at admission so one malformed example degrades to
         /// its own error row instead of failing the batch.
         examples: Vec<Features>,
+        /// Optional relative deadline (protocol v7); an expired batch
+        /// is shed whole — every row answers `deadline-exceeded`.
+        deadline_ms: Option<u64>,
+        /// Optional admission-lane override (protocol v7); `None`
+        /// takes the op default (batches → bulk).
+        priority: Option<Lane>,
     },
     /// Submit one labeled example to the routed shard's online trainer.
     Learn {
@@ -238,6 +263,30 @@ fn parse_features(v: &Json, op: &str) -> Result<Features, String> {
     }
 }
 
+/// Extract the protocol-v7 admission options (`deadline_ms`,
+/// `priority`) from a request object. Both are optional; a present
+/// `priority` must name a known lane.
+fn parse_admission(
+    v: &Json,
+    op: &str,
+) -> Result<(Option<u64>, Option<Lane>), String> {
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => {
+            Some(x.as_u64().ok_or_else(|| format!("{op}: bad deadline_ms"))?)
+        }
+    };
+    let priority = match v.get("priority").map(|p| p.as_str()) {
+        None => None,
+        Some(Some("interactive")) => Some(Lane::Interactive),
+        Some(Some("bulk")) => Some(Lane::Bulk),
+        Some(_) => {
+            return Err(format!("{op}: priority must be \"interactive\" or \"bulk\""))
+        }
+    };
+    Ok((deadline_ms, priority))
+}
+
 impl Request {
     /// Parse one request line (the versioned parser: accepts both the
     /// v1 dense and the v2 sparse score forms on any connection).
@@ -263,8 +312,21 @@ impl Request {
                 if verbose && op != "classify" {
                     return Err(format!("{op}: verbose is a classify-only flag"));
                 }
+                let (deadline_ms, priority) = parse_admission(&v, op)?;
+                if op == "learn" && (deadline_ms.is_some() || priority.is_some()) {
+                    return Err(
+                        "learn: deadline_ms/priority are scoring-only fields".into()
+                    );
+                }
                 match op {
-                    "classify" => Ok(Request::Classify { id, model, features, verbose }),
+                    "classify" => Ok(Request::Classify {
+                        id,
+                        model,
+                        features,
+                        verbose,
+                        deadline_ms,
+                        priority,
+                    }),
                     "learn" => {
                         let y = v
                             .get("y")
@@ -275,7 +337,7 @@ impl Request {
                         }
                         Ok(Request::Learn { id, model, label: y as i8, features })
                     }
-                    _ => Ok(Request::Score { id, model, features }),
+                    _ => Ok(Request::Score { id, model, features, deadline_ms, priority }),
                 }
             }
             "score-batch" => {
@@ -289,7 +351,8 @@ impl Request {
                     .iter()
                     .map(|ex| parse_features(ex, "score-batch"))
                     .collect::<Result<Vec<_>, _>>()?;
-                Ok(Request::ScoreBatch { id, model, examples })
+                let (deadline_ms, priority) = parse_admission(&v, "score-batch")?;
+                Ok(Request::ScoreBatch { id, model, examples, deadline_ms, priority })
             }
             "stats" => Ok(Request::Stats),
             "models" => Ok(Request::Models),
@@ -342,6 +405,26 @@ impl Request {
         }
     }
 
+    /// Append the optional protocol-v7 admission fields to a request
+    /// object (omitted entirely when unset, so pre-v7 servers and
+    /// byte-level captures are unchanged).
+    fn push_admission(
+        pairs: &mut Vec<(&'static str, Json)>,
+        deadline_ms: &Option<u64>,
+        priority: &Option<Lane>,
+    ) {
+        if let Some(ms) = deadline_ms {
+            pairs.push(("deadline_ms", Json::Num(*ms as f64)));
+        }
+        if let Some(lane) = priority {
+            let name = match lane {
+                Lane::Interactive => "interactive",
+                Lane::Bulk => "bulk",
+            };
+            pairs.push(("priority", Json::Str(name.into())));
+        }
+    }
+
     /// Serialize (client side).
     pub fn to_json(&self) -> Json {
         match self {
@@ -349,8 +432,8 @@ impl Request {
                 ("op", Json::Str("hello".into())),
                 ("proto", Json::Num(*proto as f64)),
             ]),
-            Request::Score { id, model, features }
-            | Request::Classify { id, model, features, .. } => {
+            Request::Score { id, model, features, deadline_ms, priority }
+            | Request::Classify { id, model, features, deadline_ms, priority, .. } => {
                 let op = match self {
                     Request::Classify { .. } => "classify",
                     _ => "score",
@@ -362,17 +445,19 @@ impl Request {
                 if let Some(model) = model {
                     pairs.push(("model", Json::Str(model.clone())));
                 }
+                Self::push_admission(&mut pairs, deadline_ms, priority);
                 Self::push_features(&mut pairs, features);
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
                 Json::obj(pairs)
             }
-            Request::ScoreBatch { id, model, examples } => {
+            Request::ScoreBatch { id, model, examples, deadline_ms, priority } => {
                 let mut pairs = vec![("op", Json::Str("score-batch".into()))];
                 if let Some(model) = model {
                     pairs.push(("model", Json::Str(model.clone())));
                 }
+                Self::push_admission(&mut pairs, deadline_ms, priority);
                 pairs.push((
                     "examples",
                     Json::Arr(
@@ -570,6 +655,17 @@ pub struct StatsReport {
     /// respawned; the request answered with a retryable `internal`
     /// error). Not counted in `served`.
     pub worker_panics: u64,
+    /// Requests (counted per example for batches) whose deadline had
+    /// already expired at dequeue and were answered with the retryable
+    /// `deadline-exceeded` error instead of being scored.
+    pub deadline_sheds: u64,
+    /// Responses answered under a brownout tier (flagged `degraded`).
+    pub degraded_responses: u64,
+    /// Current brownout tier (0 = normal, 1–2 = tightened thresholds,
+    /// 3 = shed: bulk admissions refused). Max across shards.
+    pub brownout_tier: u64,
+    /// Brownout tier transitions since start (both directions).
+    pub tier_transitions: u64,
     /// Lines that failed to parse as a request.
     pub protocol_errors: u64,
     /// Hot model reloads applied.
@@ -603,6 +699,10 @@ impl StatsReport {
             ("overloaded", Json::Num(self.overloaded as f64)),
             ("batch_shed", Json::Num(self.batch_shed as f64)),
             ("worker_panics", Json::Num(self.worker_panics as f64)),
+            ("deadline_sheds", Json::Num(self.deadline_sheds as f64)),
+            ("degraded_responses", Json::Num(self.degraded_responses as f64)),
+            ("brownout_tier", Json::Num(self.brownout_tier as f64)),
+            ("tier_transitions", Json::Num(self.tier_transitions as f64)),
             ("protocol_errors", Json::Num(self.protocol_errors as f64)),
             ("reloads", Json::Num(self.reloads as f64)),
             ("uptime_s", Json::Num(self.uptime_s)),
@@ -645,6 +745,10 @@ impl StatsReport {
             overloaded: int("overloaded"),
             batch_shed: int("batch_shed"),
             worker_panics: int("worker_panics"),
+            deadline_sheds: int("deadline_sheds"),
+            degraded_responses: int("degraded_responses"),
+            brownout_tier: int("brownout_tier"),
+            tier_transitions: int("tier_transitions"),
             protocol_errors: int("protocol_errors"),
             reloads: int("reloads"),
             uptime_s: num("uptime_s"),
@@ -749,6 +853,10 @@ pub enum Response {
         score: f64,
         /// Features evaluated before the early exit.
         features_evaluated: usize,
+        /// Scored under a brownout tier (protocol v7): the early-exit
+        /// thresholds were tightened, trading accuracy for latency.
+        /// Omitted from the wire when false.
+        degraded: bool,
     },
     /// A classified request (attentive all-pairs vote).
     Classify {
@@ -763,6 +871,8 @@ pub enum Response {
         voters: u32,
         /// Features evaluated, summed across voters.
         features_evaluated: usize,
+        /// Answered under a brownout tier (protocol v7).
+        degraded: bool,
     },
     /// A classified request with the per-voter cost breakdown
     /// (`classify` with `"verbose":true`). Same vote as
@@ -781,6 +891,8 @@ pub enum Response {
         features_evaluated: usize,
         /// Per-voter rows, in pair-enumeration order.
         per_voter: Vec<VoterVote>,
+        /// Answered under a brownout tier (protocol v7).
+        degraded: bool,
     },
     /// A scored batch: one row per submitted example, in submission
     /// order, each carrying its own score or error.
@@ -789,6 +901,9 @@ pub enum Response {
         id: Option<u64>,
         /// Per-example outcome rows, in submission order.
         results: Vec<BatchRow>,
+        /// At least one row was scored under a brownout tier
+        /// (protocol v7). Omitted from the wire when false.
+        degraded: bool,
     },
     /// A learn example was accepted by the routed shard's trainer.
     Learned {
@@ -847,19 +962,22 @@ impl Response {
                 ("gen", Json::Num(*gen as f64)),
                 ("dim", Json::Num(*dim as f64)),
             ]),
-            Response::Score { id, score, features_evaluated } => {
+            Response::Score { id, score, features_evaluated, degraded } => {
                 let mut pairs = vec![
                     ("ok", Json::Bool(true)),
                     ("op", Json::Str("score".into())),
                     ("score", Json::Num(*score)),
                     ("features_evaluated", Json::Num(*features_evaluated as f64)),
                 ];
+                if *degraded {
+                    pairs.push(("degraded", Json::Bool(true)));
+                }
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
                 Json::obj(pairs)
             }
-            Response::Classify { id, label, votes, voters, features_evaluated } => {
+            Response::Classify { id, label, votes, voters, features_evaluated, degraded } => {
                 let mut pairs = vec![
                     ("ok", Json::Bool(true)),
                     ("op", Json::Str("classify".into())),
@@ -868,6 +986,9 @@ impl Response {
                     ("voters", Json::Num(*voters as f64)),
                     ("features_evaluated", Json::Num(*features_evaluated as f64)),
                 ];
+                if *degraded {
+                    pairs.push(("degraded", Json::Bool(true)));
+                }
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
@@ -880,6 +1001,7 @@ impl Response {
                 voters,
                 features_evaluated,
                 per_voter,
+                degraded,
             } => {
                 let mut pairs = vec![
                     ("ok", Json::Bool(true)),
@@ -905,12 +1027,15 @@ impl Response {
                         ),
                     ),
                 ];
+                if *degraded {
+                    pairs.push(("degraded", Json::Bool(true)));
+                }
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
                 Json::obj(pairs)
             }
-            Response::ScoreBatch { id, results } => {
+            Response::ScoreBatch { id, results, degraded } => {
                 let mut pairs = vec![
                     ("ok", Json::Bool(true)),
                     ("op", Json::Str("score-batch".into())),
@@ -933,6 +1058,9 @@ impl Response {
                         ),
                     ),
                 ];
+                if *degraded {
+                    pairs.push(("degraded", Json::Bool(true)));
+                }
                 if let Some(id) = id {
                     pairs.push(("id", Json::Num(*id as f64)));
                 }
@@ -1033,9 +1161,12 @@ impl Response {
                     .get("features_evaluated")
                     .and_then(|x| x.as_usize())
                     .ok_or("score: missing features_evaluated")?,
+                degraded: v.get("degraded").and_then(|b| b.as_bool()).unwrap_or(false),
             }),
             "classify" => {
                 let id = v.get("id").and_then(|x| x.as_u64());
+                let degraded =
+                    v.get("degraded").and_then(|b| b.as_bool()).unwrap_or(false);
                 let label =
                     v.get("label").and_then(|x| x.as_i64()).ok_or("classify: missing label")?;
                 let votes = v.get("votes").and_then(|x| x.as_u64()).unwrap_or(0) as u32;
@@ -1051,6 +1182,7 @@ impl Response {
                         votes,
                         voters,
                         features_evaluated,
+                        degraded,
                     }),
                     Some(rows) => Ok(Response::ClassifyVerbose {
                         id,
@@ -1058,6 +1190,7 @@ impl Response {
                         votes,
                         voters,
                         features_evaluated,
+                        degraded,
                         per_voter: rows
                             .iter()
                             .map(|row| {
@@ -1092,6 +1225,7 @@ impl Response {
             }),
             "score-batch" => Ok(Response::ScoreBatch {
                 id: v.get("id").and_then(|x| x.as_u64()),
+                degraded: v.get("degraded").and_then(|b| b.as_bool()).unwrap_or(false),
                 results: v
                     .get("results")
                     .and_then(|a| a.as_arr())
@@ -1149,6 +1283,18 @@ impl Response {
     pub fn is_overloaded(&self) -> bool {
         matches!(self, Response::Error { error, retryable: true, .. } if error == "overloaded")
     }
+
+    /// Is this the protocol-v7 `deadline-exceeded` shed response (the
+    /// request's deadline passed while it queued, so the server dropped
+    /// it unscored)? Matches both the bare wire code name and the
+    /// server's descriptive message form.
+    pub fn is_deadline_exceeded(&self) -> bool {
+        matches!(
+            self,
+            Response::Error { error, retryable: true, .. }
+                if error == "deadline-exceeded" || error.starts_with("deadline exceeded")
+        )
+    }
 }
 
 #[cfg(test)]
@@ -1164,12 +1310,16 @@ mod tests {
             id: Some(9),
             model: None,
             features: Features::Dense(vec![0.0, -1.5, 0.25]),
+            deadline_ms: None,
+            priority: None,
         };
         let line = req.to_line();
         assert!(line.ends_with('\n'));
         assert!(!line.contains("\"model\""), "unrouted requests omit the model field");
+        assert!(!line.contains("deadline_ms"), "no deadline means no field on the wire");
+        assert!(!line.contains("priority"), "no lane override means no field on the wire");
         match Request::parse(line.trim()).unwrap() {
-            Request::Score { id, model, features: Features::Dense(features) } => {
+            Request::Score { id, model, features: Features::Dense(features), .. } => {
                 assert_eq!(id, Some(9));
                 assert_eq!(model, None);
                 assert_eq!(features, vec![0.0, -1.5, 0.25]);
@@ -1177,7 +1327,13 @@ mod tests {
             other => panic!("wrong variant {other:?}"),
         }
         // Without an id.
-        let req = Request::Score { id: None, model: None, features: Features::Dense(vec![1.0]) };
+        let req = Request::Score {
+            id: None,
+            model: None,
+            features: Features::Dense(vec![1.0]),
+            deadline_ms: None,
+            priority: None,
+        };
         match Request::parse(&req.to_line()).unwrap() {
             Request::Score { id, .. } => assert_eq!(id, None),
             other => panic!("wrong variant {other:?}"),
@@ -1190,6 +1346,8 @@ mod tests {
             id: None,
             model: Some("digits-2v3".into()),
             features: Features::Dense(vec![1.0]),
+            deadline_ms: None,
+            priority: None,
         };
         match Request::parse(&req.to_line()).unwrap() {
             Request::Score { model, .. } => assert_eq!(model.as_deref(), Some("digits-2v3")),
@@ -1200,6 +1358,8 @@ mod tests {
             model: Some("digits".into()),
             features: Features::Sparse { idx: vec![5, 9], val: vec![1.0, -1.0] },
             verbose: false,
+            deadline_ms: None,
+            priority: None,
         };
         let line = req.to_line();
         assert!(!line.contains("verbose"), "non-verbose requests omit the flag");
@@ -1209,6 +1369,7 @@ mod tests {
                 model,
                 features: Features::Sparse { idx, .. },
                 verbose,
+                ..
             } => {
                 assert_eq!(id, Some(3));
                 assert_eq!(model.as_deref(), Some("digits"));
@@ -1233,6 +1394,8 @@ mod tests {
             model: Some("digits".into()),
             features: Features::Sparse { idx: vec![5], val: vec![1.0] },
             verbose: true,
+            deadline_ms: None,
+            priority: None,
         };
         let line = req.to_line();
         assert!(line.contains("\"verbose\":true"));
@@ -1249,6 +1412,7 @@ mod tests {
             votes: 2,
             voters: 3,
             features_evaluated: 120,
+            degraded: false,
             per_voter: vec![
                 VoterVote { pos: 1, neg: 2, vote: 2, features: 40 },
                 VoterVote { pos: 1, neg: 3, vote: 1, features: 50 },
@@ -1266,8 +1430,14 @@ mod tests {
             other => panic!("wrong variant {other:?}"),
         }
         // A plain classify response still parses as the lean variant.
-        let lean =
-            Response::Classify { id: None, label: 1, votes: 2, voters: 3, features_evaluated: 9 };
+        let lean = Response::Classify {
+            id: None,
+            label: 1,
+            votes: 2,
+            voters: 3,
+            features_evaluated: 9,
+            degraded: false,
+        };
         assert!(matches!(
             Response::parse(lean.to_line().trim()).unwrap(),
             Response::Classify { .. }
@@ -1282,9 +1452,10 @@ mod tests {
             votes: 9,
             voters: 45,
             features_evaluated: 1210,
+            degraded: false,
         };
         match Response::parse(resp.to_line().trim()).unwrap() {
-            Response::Classify { id, label, votes, voters, features_evaluated } => {
+            Response::Classify { id, label, votes, voters, features_evaluated, .. } => {
                 assert_eq!(id, Some(11));
                 assert_eq!(label, 7);
                 assert_eq!(votes, 9);
@@ -1305,11 +1476,13 @@ mod tests {
                 Features::Dense(vec![1.0, 0.0]),
                 Features::Sparse { idx: vec![], val: vec![] },
             ],
+            deadline_ms: None,
+            priority: None,
         };
         let line = req.to_line();
         assert!(line.contains("\"op\":\"score-batch\""));
         match Request::parse(line.trim()).unwrap() {
-            Request::ScoreBatch { id, model, examples } => {
+            Request::ScoreBatch { id, model, examples, .. } => {
                 assert_eq!(id, Some(7));
                 assert_eq!(model.as_deref(), Some("digits-2v3"));
                 assert_eq!(examples.len(), 3);
@@ -1342,11 +1515,12 @@ mod tests {
                 BatchRow::err("dimension-mismatch"),
                 BatchRow::ok(-0.5, 9),
             ],
+            degraded: false,
         };
         let line = resp.to_line();
         assert!(line.contains("\"error\":\"dimension-mismatch\""));
         match Response::parse(line.trim()).unwrap() {
-            Response::ScoreBatch { id, results } => {
+            Response::ScoreBatch { id, results, .. } => {
                 assert_eq!(id, Some(7));
                 assert_eq!(results.len(), 3);
                 assert_eq!(results[0], BatchRow::ok(1.25, 34));
@@ -1356,9 +1530,9 @@ mod tests {
             other => panic!("wrong variant {other:?}"),
         }
         // An empty batch round-trips too.
-        let resp = Response::ScoreBatch { id: None, results: vec![] };
+        let resp = Response::ScoreBatch { id: None, results: vec![], degraded: false };
         match Response::parse(resp.to_line().trim()).unwrap() {
-            Response::ScoreBatch { id: None, results } => assert!(results.is_empty()),
+            Response::ScoreBatch { id: None, results, .. } => assert!(results.is_empty()),
             other => panic!("wrong variant {other:?}"),
         }
     }
@@ -1544,6 +1718,8 @@ mod tests {
             id: Some(4),
             model: None,
             features: Features::Sparse { idx: vec![3, 17, 40], val: vec![0.5, -1.2, 2.0] },
+            deadline_ms: None,
+            priority: None,
         };
         let line = req.to_line();
         assert!(line.contains("\"idx\"") && line.contains("\"val\""));
@@ -1554,6 +1730,117 @@ mod tests {
                 assert_eq!(idx, vec![3, 17, 40]);
                 assert_eq!(val, vec![0.5, -1.2, 2.0]);
             }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v7_admission_fields_round_trip() {
+        // deadline_ms and priority survive the round trip on all three
+        // scoring ops.
+        let req = Request::Score {
+            id: Some(1),
+            model: None,
+            features: Features::Dense(vec![1.0]),
+            deadline_ms: Some(250),
+            priority: Some(Lane::Bulk),
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"deadline_ms\":250"));
+        assert!(line.contains("\"priority\":\"bulk\""));
+        match Request::parse(line.trim()).unwrap() {
+            Request::Score { deadline_ms, priority, .. } => {
+                assert_eq!(deadline_ms, Some(250));
+                assert_eq!(priority, Some(Lane::Bulk));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        let req = Request::Classify {
+            id: None,
+            model: Some("digits".into()),
+            features: Features::Dense(vec![1.0]),
+            verbose: false,
+            deadline_ms: Some(5),
+            priority: None,
+        };
+        match Request::parse(&req.to_line()).unwrap() {
+            Request::Classify { deadline_ms: Some(5), priority: None, .. } => {}
+            other => panic!("wrong variant {other:?}"),
+        }
+        let req = Request::ScoreBatch {
+            id: None,
+            model: None,
+            examples: vec![Features::Dense(vec![1.0])],
+            deadline_ms: None,
+            priority: Some(Lane::Interactive),
+        };
+        let line = req.to_line();
+        assert!(line.contains("\"priority\":\"interactive\""));
+        match Request::parse(line.trim()).unwrap() {
+            Request::ScoreBatch { deadline_ms: None, priority, .. } => {
+                assert_eq!(priority, Some(Lane::Interactive));
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+        // Malformed admission fields are structured parse errors.
+        assert!(
+            Request::parse(r#"{"op":"score","features":[1.0],"priority":"turbo"}"#).is_err(),
+            "unknown lane name"
+        );
+        assert!(
+            Request::parse(r#"{"op":"score","features":[1.0],"deadline_ms":-5}"#).is_err(),
+            "negative deadline"
+        );
+        assert!(
+            Request::parse(r#"{"op":"learn","y":1,"features":[1.0],"deadline_ms":9}"#)
+                .is_err(),
+            "deadlines are scoring-only"
+        );
+        assert!(
+            Request::parse(r#"{"op":"learn","y":1,"features":[1.0],"priority":"bulk"}"#)
+                .is_err(),
+            "lane overrides are scoring-only"
+        );
+    }
+
+    #[test]
+    fn degraded_flag_round_trips_and_is_omitted_when_false() {
+        let resp = Response::Score {
+            id: None,
+            score: 0.5,
+            features_evaluated: 12,
+            degraded: true,
+        };
+        let line = resp.to_line();
+        assert!(line.contains("\"degraded\":true"));
+        match Response::parse(line.trim()).unwrap() {
+            Response::Score { degraded, .. } => assert!(degraded),
+            other => panic!("wrong variant {other:?}"),
+        }
+        // A normal-tier response carries no flag at all, so pre-v7
+        // byte-level captures are unchanged.
+        let resp =
+            Response::Score { id: None, score: 0.5, features_evaluated: 12, degraded: false };
+        assert!(!resp.to_line().contains("degraded"));
+        let resp = Response::ScoreBatch {
+            id: Some(2),
+            results: vec![BatchRow::ok(1.0, 3)],
+            degraded: true,
+        };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::ScoreBatch { degraded, .. } => assert!(degraded),
+            other => panic!("wrong variant {other:?}"),
+        }
+        let resp = Response::Classify {
+            id: None,
+            label: 1,
+            votes: 2,
+            voters: 3,
+            features_evaluated: 9,
+            degraded: true,
+        };
+        match Response::parse(resp.to_line().trim()).unwrap() {
+            Response::Classify { degraded, .. } => assert!(degraded),
             other => panic!("wrong variant {other:?}"),
         }
     }
@@ -1657,9 +1944,14 @@ mod tests {
 
     #[test]
     fn response_round_trips() {
-        let r = Response::Score { id: Some(3), score: -0.75, features_evaluated: 41 };
+        let r = Response::Score {
+            id: Some(3),
+            score: -0.75,
+            features_evaluated: 41,
+            degraded: false,
+        };
         match Response::parse(r.to_line().trim()).unwrap() {
-            Response::Score { id, score, features_evaluated } => {
+            Response::Score { id, score, features_evaluated, .. } => {
                 assert_eq!(id, Some(3));
                 assert_eq!(score, -0.75);
                 assert_eq!(features_evaluated, 41);
@@ -1687,6 +1979,10 @@ mod tests {
             overloaded: 17,
             batch_shed: 3,
             worker_panics: 1,
+            deadline_sheds: 9,
+            degraded_responses: 40,
+            brownout_tier: 2,
+            tier_transitions: 6,
             protocol_errors: 2,
             reloads: 1,
             uptime_s: 4.5,

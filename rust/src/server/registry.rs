@@ -44,7 +44,7 @@ use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 
-use crate::config::TrainerWireConfig;
+use crate::config::{BrownoutConfig, TrainerWireConfig};
 use crate::coordinator::online::{LearnError, OnlineTrainer, SnapshotStore, TrainerStatsSnapshot};
 use crate::coordinator::service::{CompletionNotifier, Features, ServingModel, StatsSnapshot};
 use crate::error::{Error, Result};
@@ -281,6 +281,10 @@ pub struct ModelRegistry {
     workers: usize,
     seed: u64,
     notifier: CompletionNotifier,
+    /// Overload-brownout config, applied to every shard — startup
+    /// shards and shards added at runtime alike (each hub runs its own
+    /// controller against its own admission queue).
+    brownout: Option<BrownoutConfig>,
     /// When set ([`Self::set_snapshot_root`]), every trainer spawned
     /// after persists published generations under
     /// `<root>/<shard-name>/` via [`SnapshotStore`].
@@ -334,6 +338,23 @@ impl ModelRegistry {
         seed: u64,
         notifier: CompletionNotifier,
     ) -> Result<Self> {
+        Self::new_with_opts(models, max_batch, queue, workers, seed, notifier, None)
+    }
+
+    /// [`Self::new_with_notifier`] plus the overload-brownout config.
+    /// Like the notifier, the config is retained: every shard — startup
+    /// and runtime-added — gets its own brownout controller and tiered
+    /// threshold tables; `None` keeps scoring bit-identical to the
+    /// undegraded path.
+    pub fn new_with_opts(
+        models: Vec<(String, ServingModel)>,
+        max_batch: usize,
+        queue: usize,
+        workers: usize,
+        seed: u64,
+        notifier: CompletionNotifier,
+        brownout: Option<BrownoutConfig>,
+    ) -> Result<Self> {
         if models.is_empty() {
             return Err(Error::Config("registry needs at least one model shard".into()));
         }
@@ -359,13 +380,14 @@ impl ModelRegistry {
             slots.push(Some(Arc::new(Shard {
                 name,
                 id: i as u16,
-                hub: Arc::new(ModelHub::new_with_notifier(
+                hub: Arc::new(ModelHub::new_with_opts(
                     model,
                     max_batch,
                     queue,
                     workers,
                     shard_seed,
                     notifier.clone(),
+                    brownout.clone(),
                 )),
                 trainer: OnceLock::new(),
                 state: AtomicU8::new(STATE_SERVING),
@@ -386,6 +408,7 @@ impl ModelRegistry {
             workers,
             seed,
             notifier,
+            brownout,
             snapshot_root: Mutex::new(None),
         })
     }
@@ -500,13 +523,14 @@ impl ModelRegistry {
         let shard = Arc::new(Shard {
             name: name.to_string(),
             id,
-            hub: Arc::new(ModelHub::new_with_notifier(
+            hub: Arc::new(ModelHub::new_with_opts(
                 model,
                 self.max_batch,
                 self.queue,
                 self.workers,
                 shard_seed,
                 self.notifier.clone(),
+                self.brownout.clone(),
             )),
             trainer: OnceLock::new(),
             state: AtomicU8::new(STATE_SERVING),

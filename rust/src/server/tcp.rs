@@ -37,9 +37,14 @@
 //! batch costs one queue slot and one worker wakeup, its examples are
 //! scored back-to-back by one worker (bit-identical to the same
 //! requests sent singly), and each example carries its own status in
-//! the response, so one bad example never poisons its batchmates.
-//! Clients that never send `hello` (all v1 clients) are served exactly
-//! as before, on the default shard.
+//! the response, so one bad example never poisons its batchmates; a
+//! grant of 7 advertises the overload-brownout capability — per-request
+//! deadlines and admission-lane overrides (`deadline_ms` / `priority`
+//! on the JSON ops, the `SCORE_SPARSE_EX` / `SCORE_BATCH_EX` frames on
+//! the binary wire), the retryable `deadline-exceeded` shed answered at
+//! dequeue, and the `degraded` response flag marking brownout-tier
+//! scoring. Clients that never send `hello` (all v1 clients) are served
+//! exactly as before, on the default shard.
 //!
 //! ## Online learning
 //!
@@ -79,7 +84,8 @@ use std::time::Instant;
 use crate::config::{IoBackend, ServerConfig, TrainerWireConfig};
 use crate::coordinator::online::SnapshotStore;
 use crate::coordinator::service::{
-    CompletionNotifier, Features, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
+    CompletionNotifier, Features, Lane, ModelSnapshot, ReqKind, ScoreResponse, ServingModel,
+    SubmitOpts,
 };
 use crate::error::{Error, Result};
 use crate::server::bufpool::BufPool;
@@ -90,7 +96,7 @@ use crate::server::frame::{
 use crate::server::hub::{HubError, ModelHub};
 use crate::server::protocol::{
     BatchRow, ModelEntry, ModelStatsReport, Request, Response, StatsReport, WireStats, PROTO_V2,
-    PROTO_V6,
+    PROTO_V7,
 };
 use crate::server::registry::{ModelRegistry, RegistryError, DEFAULT_MODEL};
 
@@ -166,6 +172,11 @@ pub(crate) struct Shared {
     pub(crate) batch_shed: AtomicU64,
     /// Live connections right now (for the `max_conns` screen).
     pub(crate) live_conns: AtomicU64,
+    /// Default request deadline, ms (0 = none): applied to every
+    /// score/classify/batch admission whose request carries no explicit
+    /// `deadline_ms`, so operators can bound queue-wait latency without
+    /// touching clients.
+    pub(crate) deadline_default_ms: u64,
     /// Per-wire-class served/bytes (indexed v1, v2-json, v2-binary).
     wire: [WireCounters; 3],
     /// Recycled transport buffers (connection read/write/deferred
@@ -227,13 +238,14 @@ impl TcpServer {
             IoBackend::EventLoop => make_event_wakeups(cfg.event_threads)?,
             IoBackend::Threads => (CompletionNotifier::default(), Vec::new()),
         };
-        let registry = ModelRegistry::new_with_notifier(
+        let registry = ModelRegistry::new_with_opts(
             models,
             cfg.max_batch,
             cfg.queue,
             cfg.workers,
             cfg.seed,
             notifier,
+            cfg.brownout.clone(),
         )?;
         if let Some(dir) = &cfg.snapshot_dir {
             // Startup recovery: warm every binary shard from its newest
@@ -309,6 +321,7 @@ impl TcpServer {
             idle_timeout_ms: cfg.idle_timeout_ms,
             batch_shed: AtomicU64::new(0),
             live_conns: AtomicU64::new(0),
+            deadline_default_ms: cfg.deadline_default_ms,
             wire: Default::default(),
             pool: BufPool::serving_default(),
         });
@@ -522,8 +535,11 @@ pub(crate) enum Wire {
     V1 { id: Option<u64> },
     /// v2+ binary `SCORE`/`CLASS`/`ERROR` frame, stamped with the
     /// serving generation captured at admission (classify pendings
-    /// render as `CLASS`, score pendings as `SCORE`).
-    V2Binary { gen: u32 },
+    /// render as `CLASS`, score pendings as `SCORE`). `ex` marks a v7
+    /// EX request, whose score renders as `SCORE_EX` /
+    /// `SCORE_BATCH_RESP_EX` so the `degraded` flag survives the wire
+    /// (legacy frames have nowhere to carry it).
+    V2Binary { gen: u32, ex: bool },
     /// v2+ `JSON_RESP` envelope frame (a JSON-op request on a binary
     /// connection, e.g. a dense score through the envelope).
     V2Json { id: Option<u64> },
@@ -675,7 +691,7 @@ pub(crate) fn json_step(line: &str, shared: &Shared) -> Step {
         Ok(Request::Hello { proto }) => {
             // Grant the highest version both sides speak; v1 keeps the
             // connection on JSON lines (transparent fallback).
-            let granted = proto.min(PROTO_V6).max(1);
+            let granted = proto.min(PROTO_V7).max(1);
             // One snapshot: (gen, dim) must not tear across a reload.
             // The handshake advertises the default shard, which is what
             // single-model clients will be talking to.
@@ -690,6 +706,37 @@ pub(crate) fn json_step(line: &str, shared: &Shared) -> Step {
         }
         Ok(req) => json_request_step(req, shared, /* enveloped= */ false),
     }
+}
+
+/// Resolve a request's admission options: an explicit `deadline_ms`
+/// wins over the server default (`--deadline-default-ms`), and 0
+/// disables. The `Instant::now()` read is skipped entirely when no
+/// deadline applies, so the common no-deadline path stays free. The
+/// lane override passes through untouched (`None` = the op default:
+/// singles → interactive, batches → bulk).
+pub(crate) fn admission_opts(
+    shared: &Shared,
+    deadline_ms: Option<u64>,
+    lane: Option<Lane>,
+) -> SubmitOpts {
+    let ms = deadline_ms.unwrap_or(shared.deadline_default_ms);
+    SubmitOpts {
+        deadline: (ms > 0).then(|| Instant::now() + std::time::Duration::from_millis(ms)),
+        lane,
+    }
+}
+
+/// Map a v7 EX frame's admission fields onto [`admission_opts`] inputs:
+/// a zero deadline means "unset" (the server default applies), and the
+/// lane byte was already range-checked at decode.
+pub(crate) fn ex_admission(deadline_ms: u32, lane: u8) -> (Option<u64>, Option<Lane>) {
+    let deadline = (deadline_ms > 0).then_some(deadline_ms as u64);
+    let lane = match lane {
+        frame::LANE_INTERACTIVE => Some(Lane::Interactive),
+        frame::LANE_BULK => Some(Lane::Bulk),
+        _ => None,
+    };
+    (deadline, lane)
 }
 
 /// Handle a JSON-op request arriving either as a bare v1 line
@@ -792,7 +839,7 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                 })),
             }
         }
-        Request::ScoreBatch { id, model, examples } => {
+        Request::ScoreBatch { id, model, examples, deadline_ms, priority } => {
             if examples.len() > shared.max_batch_examples {
                 shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 return Step::Job(render(Response::Error {
@@ -867,7 +914,8 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
             // Admit even an all-rejected batch: the empty submit keeps
             // the one-queue-slot accounting and response ordering
             // uniform, and the worker answers it with an empty vec.
-            match hub.submit_batch(clean, 0) {
+            match hub.submit_batch_opts(clean, 0, admission_opts(shared, deadline_ms, priority))
+            {
                 Ok((rx, _)) => {
                     let wire = if enveloped { Wire::V2Json { id } } else { Wire::V1 { id } };
                     Step::Job(Job::PendingBatch { wire, rx, slots })
@@ -897,12 +945,14 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
             }
         }
         Request::Score { .. } | Request::Classify { .. } => {
-            let (id, model, features, kind) = match req {
-                Request::Score { id, model, features } => (id, model, features, ReqKind::Score),
-                Request::Classify { id, model, features, verbose } => {
+            let (id, model, features, kind, deadline_ms, priority) = match req {
+                Request::Score { id, model, features, deadline_ms, priority } => {
+                    (id, model, features, ReqKind::Score, deadline_ms, priority)
+                }
+                Request::Classify { id, model, features, verbose, deadline_ms, priority } => {
                     let kind =
                         if verbose { ReqKind::ClassifyVerbose } else { ReqKind::Classify };
-                    (id, model, features, kind)
+                    (id, model, features, kind, deadline_ms, priority)
                 }
                 _ => unreachable!("outer arm admits only score/classify"),
             };
@@ -935,7 +985,12 @@ pub(crate) fn json_request_step(req: Request, shared: &Shared, enveloped: bool) 
                     }))
                 }
             };
-            match hub.submit_pinned(features, 0, kind) {
+            match hub.submit_pinned_opts(
+                features,
+                0,
+                kind,
+                admission_opts(shared, deadline_ms, priority),
+            ) {
                 Ok((rx, _)) => {
                     let wire = if enveloped { Wire::V2Json { id } } else { Wire::V1 { id } };
                     Step::Job(Job::Pending { wire, rx })
@@ -1048,17 +1103,21 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
     // Route and admit one screened payload. The pin check, admission,
     // and generation stamp all happen under one hub critical section:
     // the stamped generation is the one whose workers answer, even
-    // across a racing reload.
-    let admit = |model: u16, gen: u32, features: Features, kind: ReqKind| -> Step {
+    // across a racing reload. `opts` carries the v7 admission fields
+    // (legacy ops pass the server defaults); `ex` picks the response
+    // framing.
+    let admit = |model: u16, gen: u32, features: Features, kind: ReqKind, opts: SubmitOpts,
+                 ex: bool|
+     -> Step {
         // Route resolution is lock-free and happens before admission: a
         // reload of another shard can never delay this request.
         let hub = match shared.registry.resolve_id(model) {
             Ok(hub) => hub,
             Err(e) => return err(ErrorCode::UnknownModel, e.to_string()),
         };
-        match hub.submit_pinned(features, gen, kind) {
+        match hub.submit_pinned_opts(features, gen, kind, opts) {
             Ok((rx, serving)) => {
-                Step::Job(Job::Pending { wire: Wire::V2Binary { gen: serving }, rx })
+                Step::Job(Job::Pending { wire: Wire::V2Binary { gen: serving, ex }, rx })
             }
             Err(e @ HubError::StaleGeneration { .. }) => {
                 err(ErrorCode::StaleGeneration, e.to_string())
@@ -1086,7 +1145,14 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
         FrameRef::ScoreSparse { gen, pairs } => {
             match screen(pairs.len() / 10, frame::validate_pairs_u16(pairs)) {
                 Err(step) => step,
-                Ok(()) => admit(0, gen, frame::pairs_to_features_u16(pairs), ReqKind::Score),
+                Ok(()) => admit(
+                    0,
+                    gen,
+                    frame::pairs_to_features_u16(pairs),
+                    ReqKind::Score,
+                    admission_opts(shared, None, None),
+                    false,
+                ),
             }
         }
         // The nnz knob caps sparse supports; dense payloads are bounded
@@ -1095,14 +1161,45 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
         FrameRef::ScoreDense { model, gen, vals } => {
             match screen(0, frame::validate_dense_vals(vals)) {
                 Err(step) => step,
-                Ok(()) => admit(model, gen, frame::dense_to_features(vals), ReqKind::Score),
+                Ok(()) => admit(
+                    model,
+                    gen,
+                    frame::dense_to_features(vals),
+                    ReqKind::Score,
+                    admission_opts(shared, None, None),
+                    false,
+                ),
             }
         }
         FrameRef::ScoreSparse2 { model, gen, pairs } => {
             match screen(pairs.len() / 12, frame::validate_pairs_u32(pairs)) {
                 Err(step) => step,
+                Ok(()) => admit(
+                    model,
+                    gen,
+                    frame::pairs_to_features_u32(pairs),
+                    ReqKind::Score,
+                    admission_opts(shared, None, None),
+                    false,
+                ),
+            }
+        }
+        // v7 sparse score: the same screen as `ScoreSparse2`, plus the
+        // request's own deadline and lane; the response comes back as
+        // `SCORE_EX` so the degraded flag survives.
+        FrameRef::ScoreSparseEx { model, gen, deadline_ms, lane, pairs } => {
+            match screen(pairs.len() / 12, frame::validate_pairs_u32(pairs)) {
+                Err(step) => step,
                 Ok(()) => {
-                    admit(model, gen, frame::pairs_to_features_u32(pairs), ReqKind::Score)
+                    let (deadline, lane) = ex_admission(deadline_ms, lane);
+                    admit(
+                        model,
+                        gen,
+                        frame::pairs_to_features_u32(pairs),
+                        ReqKind::Score,
+                        admission_opts(shared, deadline, lane),
+                        true,
+                    )
                 }
             }
         }
@@ -1112,16 +1209,35 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
                 Ok(()) => {
                     let kind =
                         if verbose { ReqKind::ClassifyVerbose } else { ReqKind::Classify };
-                    admit(model, gen, frame::pairs_to_features_u32(pairs), kind)
+                    admit(
+                        model,
+                        gen,
+                        frame::pairs_to_features_u32(pairs),
+                        kind,
+                        admission_opts(shared, None, None),
+                        false,
+                    )
                 }
             }
         }
-        // v6 batched scoring: one frame, one queue slot, one worker
+        // v6/v7 batched scoring: one frame, one queue slot, one worker
         // wakeup. Structural layout was checked by the borrowed decode;
         // here each example is screened in place like a single sparse
         // score, with a failed screen demoted to that example's status
-        // row instead of a whole-batch error.
-        FrameRef::ScoreBatch { model, gen, count, examples } => {
+        // row instead of a whole-batch error. The v7 EX twin adds the
+        // request's deadline and lane and answers as
+        // `SCORE_BATCH_RESP_EX`.
+        FrameRef::ScoreBatch { .. } | FrameRef::ScoreBatchEx { .. } => {
+            let (model, gen, count, examples, opts, ex) = match frame {
+                FrameRef::ScoreBatch { model, gen, count, examples } => {
+                    (model, gen, count, examples, admission_opts(shared, None, None), false)
+                }
+                FrameRef::ScoreBatchEx { model, gen, deadline_ms, lane, count, examples } => {
+                    let (deadline, lane) = ex_admission(deadline_ms, lane);
+                    (model, gen, count, examples, admission_opts(shared, deadline, lane), true)
+                }
+                _ => unreachable!("outer arm admits only batch frames"),
+            };
             if count > shared.max_batch_examples {
                 shared.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 return err(
@@ -1178,9 +1294,9 @@ pub(crate) fn frame_step(body: &[u8], shared: &Shared) -> Step {
             // Whole-batch failures (unknown model above, wrong kind,
             // stale pin, overload, shutdown) stay one `ERROR` frame —
             // there is no partial outcome to report.
-            match hub.submit_batch(clean, gen) {
+            match hub.submit_batch_opts(clean, gen, opts) {
                 Ok((rx, serving)) => Step::Job(Job::PendingBatch {
-                    wire: Wire::V2Binary { gen: serving },
+                    wire: Wire::V2Binary { gen: serving, ex },
                     rx,
                     slots,
                 }),
@@ -1339,6 +1455,16 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
             true,
             "internal error: evaluation panicked (worker respawned; retry)",
         )),
+        // Deadline shed: the request expired in the queue and the
+        // worker refused it at dequeue without scoring. Its sentinel is
+        // also NaN-scored, so this arm too must precede the NaN guard.
+        // Retryable: a retry carries a fresh deadline into what may be
+        // a calmer queue.
+        Some(resp) if resp.is_deadline_exceeded() => Err((
+            ErrorCode::DeadlineExceeded,
+            true,
+            "deadline exceeded before scoring (shed at dequeue; retry)",
+        )),
         // NaN marks the worker-level dimension guard; the hub screens
         // dimensions at admission, so this only fires if a reload changed
         // the model dim while the request was in flight.
@@ -1366,6 +1492,7 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
                         voters: ci.voters,
                         features_evaluated: r.features_evaluated,
                         per_voter,
+                        degraded: r.degraded,
                     },
                     (Some(ci), None) => Response::Classify {
                         id: *id,
@@ -1373,11 +1500,13 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
                         votes: ci.votes,
                         voters: ci.voters,
                         features_evaluated: r.features_evaluated,
+                        degraded: r.degraded,
                     },
                     (None, _) => Response::Score {
                         id: *id,
                         score: r.score,
                         features_evaluated: r.features_evaluated,
+                        degraded: r.degraded,
                     },
                 },
                 Err((_, retryable, msg)) => {
@@ -1391,7 +1520,7 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
                 _ => out.extend_from_slice(resp.to_line().as_bytes()),
             }
         }
-        Wire::V2Binary { gen } => match outcome {
+        Wire::V2Binary { gen, ex } => match outcome {
             Ok(r) => match (r.classify, r.per_voter) {
                 (Some(ci), Some(per_voter)) => Frame::ClassVerbose {
                     gen: *gen,
@@ -1408,6 +1537,16 @@ pub(crate) fn render_score_into(wire: &Wire, resp: Option<ScoreResponse>, out: &
                     votes: ci.votes,
                     voters: ci.voters,
                     evaluated: r.features_evaluated as u32,
+                }
+                .encode_into(out),
+                // An EX request answers as SCORE_EX so the degraded
+                // flag survives; legacy requests keep the legacy frame
+                // byte-for-byte.
+                (None, _) if *ex => Frame::ScoreEx {
+                    gen: *gen,
+                    flags: if r.degraded { frame::FLAG_DEGRADED } else { 0 },
+                    evaluated: r.features_evaluated as u32,
+                    score: r.score,
                 }
                 .encode_into(out),
                 (None, _) => Frame::Score {
@@ -1444,6 +1583,12 @@ fn batch_outcome<'a, I: Iterator<Item = ScoreResponse>>(
                 ErrorCode::Internal,
                 "internal error: evaluation panicked (worker respawned; retry)",
             )),
+            // Deadline shed at dequeue: the whole batch expired, so
+            // every submitted slot renders this row.
+            Some(r) if r.is_deadline_exceeded() => Err((
+                ErrorCode::DeadlineExceeded,
+                "deadline exceeded before scoring (shed at dequeue; retry)",
+            )),
             Some(r) if r.score.is_nan() => Err((
                 ErrorCode::DimMismatch,
                 "dimension mismatch (model reloaded mid-flight)",
@@ -1467,6 +1612,10 @@ pub(crate) fn render_batch_into(
     results: Option<Vec<ScoreResponse>>,
     out: &mut Vec<u8>,
 ) {
+    // Batch-level degraded flag: the whole batch is scored by one
+    // worker against one tier table, so any degraded row means the
+    // batch was.
+    let degraded = results.as_deref().is_some_and(|rs| rs.iter().any(|r| r.degraded));
     let mut results = results.into_iter().flatten();
     match wire {
         Wire::V1 { id } | Wire::V2Json { id } => {
@@ -1477,7 +1626,7 @@ pub(crate) fn render_batch_into(
                     Err((_, msg)) => BatchRow::err(msg),
                 })
                 .collect();
-            let resp = Response::ScoreBatch { id: *id, results: rows };
+            let resp = Response::ScoreBatch { id: *id, results: rows, degraded };
             match wire {
                 Wire::V2Json { .. } => {
                     Frame::JsonResp(resp.to_json().to_string_compact()).encode_into(out)
@@ -1485,8 +1634,16 @@ pub(crate) fn render_batch_into(
                 _ => out.extend_from_slice(resp.to_line().as_bytes()),
             }
         }
-        Wire::V2Binary { gen } => {
-            let mut enc = Frame::begin_score_batch_resp(out, *gen);
+        Wire::V2Binary { gen, ex } => {
+            let mut enc = if *ex {
+                Frame::begin_score_batch_resp_ex(
+                    out,
+                    *gen,
+                    if degraded { frame::FLAG_DEGRADED } else { 0 },
+                )
+            } else {
+                Frame::begin_score_batch_resp(out, *gen)
+            };
             for slot in slots {
                 match batch_outcome(slot, &mut results) {
                     Ok((score, evaluated)) => {
@@ -1534,6 +1691,10 @@ fn report(shared: &Shared) -> StatsReport {
         overloaded: shared.overloaded.load(Ordering::Relaxed),
         batch_shed: shared.batch_shed.load(Ordering::Relaxed),
         worker_panics: s.panics,
+        deadline_sheds: s.deadline_sheds,
+        degraded_responses: s.degraded,
+        brownout_tier: s.tier,
+        tier_transitions: s.tier_transitions,
         protocol_errors: shared.protocol_errors.load(Ordering::Relaxed),
         reloads: shared.registry.reloads(),
         uptime_s: uptime,
@@ -1634,7 +1795,7 @@ mod tests {
             other => panic!("expected score, got {other:?}"),
         }
         // Binary negotiation + native sparse frame.
-        assert_eq!(client.negotiate().unwrap(), 6);
+        assert_eq!(client.negotiate().unwrap(), 7);
         match client.score_sparse(vec![3, 9], vec![1.0, 1.0], 0).unwrap() {
             Response::Score { score, features_evaluated, .. } => {
                 assert!(score > 0.0);

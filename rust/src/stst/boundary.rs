@@ -352,6 +352,46 @@ impl BoundaryTable {
         Self { kind, total }
     }
 
+    /// [`Self::for_boundary`] with every stop level tightened by
+    /// `tighten ∈ (0, 1]` — the brownout degradation lever. A tightened
+    /// table stops walks **no later** than the plain one: evidence
+    /// levels are scaled down multiplicatively (`τ_i · tighten`), and
+    /// the budgeted baseline's cap shrinks to `max(1, ⌊k · tighten⌋)`.
+    /// The full boundary is exempt (there is no level to tighten; a
+    /// "never stop" baseline stays a never-stop baseline under
+    /// brownout). `tighten = 1.0` delegates to the plain constructor,
+    /// so a tier-0 table is bit-identical to the undegraded path.
+    pub fn for_boundary_scaled(
+        boundary: &AnyBoundary,
+        var_sn: f64,
+        total: usize,
+        tighten: f64,
+    ) -> Self {
+        assert!(
+            tighten > 0.0 && tighten <= 1.0,
+            "tighten must be in (0,1], got {tighten}"
+        );
+        if tighten == 1.0 {
+            return Self::for_boundary(boundary, var_sn, total);
+        }
+        let mut table = Self::for_boundary(boundary, var_sn, total);
+        match &mut table.kind {
+            TableKind::Flat(tau) => *tau *= tighten,
+            TableKind::PerStep(levels) => {
+                // INFINITY entries (curved endpoint) stay INFINITY.
+                for tau in levels.iter_mut() {
+                    *tau *= tighten;
+                }
+            }
+            TableKind::NonEvidence { budget } => {
+                if let Some(k) = budget {
+                    *k = ((*k as f64 * tighten).floor() as usize).max(1);
+                }
+            }
+        }
+        table
+    }
+
     /// Whether this table is valid for a walk of `total` coordinates.
     /// Only the per-step (curved) representation is length-specific.
     pub fn supports_total(&self, total: usize) -> bool {
@@ -409,21 +449,36 @@ impl BoundaryTable {
 pub struct TableCache {
     boundary: AnyBoundary,
     var_sn: f64,
+    /// Brownout tightening factor applied to every (re)build; `1.0`
+    /// means the plain, bit-identical construction path.
+    tighten: f64,
     table: BoundaryTable,
 }
 
 impl TableCache {
     /// Cache seeded for walks of `total` coordinates.
     pub fn new(boundary: AnyBoundary, var_sn: f64, total: usize) -> Self {
-        let table = BoundaryTable::for_boundary(&boundary, var_sn, total);
-        Self { boundary, var_sn, table }
+        Self::new_scaled(boundary, var_sn, total, 1.0)
+    }
+
+    /// [`Self::new`] with a brownout tightening factor (see
+    /// [`BoundaryTable::for_boundary_scaled`]); rebuilds for new walk
+    /// lengths re-apply the same factor.
+    pub fn new_scaled(boundary: AnyBoundary, var_sn: f64, total: usize, tighten: f64) -> Self {
+        let table = BoundaryTable::for_boundary_scaled(&boundary, var_sn, total, tighten);
+        Self { boundary, var_sn, tighten, table }
     }
 
     /// The table for a walk of `total` coordinates, rebuilding if needed.
     #[inline]
     pub fn for_total(&mut self, total: usize) -> &BoundaryTable {
         if !self.table.supports_total(total) {
-            self.table = BoundaryTable::for_boundary(&self.boundary, self.var_sn, total);
+            self.table = BoundaryTable::for_boundary_scaled(
+                &self.boundary,
+                self.var_sn,
+                total,
+                self.tighten,
+            );
         }
         &self.table
     }
@@ -583,6 +638,68 @@ mod tests {
         assert!(!curved.supports_total(783), "per-step tables are length-specific");
         assert_eq!(curved.flat_level(), None);
         assert_eq!(curved.level_at(784), f64::INFINITY, "curved never stops at the endpoint");
+    }
+
+    #[test]
+    fn scaled_tables_tighten_levels_and_budgets() {
+        // tighten = 1.0 is the identity: bit-identical to the plain
+        // constructor for every family (the brownout tier-0 guarantee).
+        let families = [
+            AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+            AnyBoundary::Curved { delta: 0.05 },
+            AnyBoundary::Budgeted { k: 7 },
+            AnyBoundary::Full,
+        ];
+        for boundary in &families {
+            let plain = BoundaryTable::for_boundary(boundary, 42.5, 49);
+            let unit = BoundaryTable::for_boundary_scaled(boundary, 42.5, 49, 1.0);
+            for i in 1..=49 {
+                assert_eq!(unit.level_at(i), plain.level_at(i), "{}", boundary.name());
+            }
+            assert_eq!(unit.cap(49), plain.cap(49));
+        }
+
+        // tighten < 1.0 lowers every finite evidence level...
+        let c = AnyBoundary::Constant { delta: 0.1, paper_literal: false };
+        let plain = BoundaryTable::for_boundary(&c, 50.0, 784);
+        let tight = BoundaryTable::for_boundary_scaled(&c, 50.0, 784, 0.5);
+        assert_eq!(tight.level_at(1), plain.level_at(1) * 0.5);
+        assert_eq!(tight.flat_level(), Some(plain.level_at(1) * 0.5));
+
+        let k = AnyBoundary::Curved { delta: 0.1 };
+        let plain = BoundaryTable::for_boundary(&k, 50.0, 64);
+        let tight = BoundaryTable::for_boundary_scaled(&k, 50.0, 64, 0.5);
+        for i in 1..64 {
+            assert!(tight.level_at(i) <= plain.level_at(i), "i={i}");
+        }
+        // ...but the curved endpoint sentinel stays INFINITY.
+        assert_eq!(tight.level_at(64), f64::INFINITY);
+
+        // Budgeted: the cap shrinks, floored at one coordinate.
+        let b = AnyBoundary::Budgeted { k: 49 };
+        let tight = BoundaryTable::for_boundary_scaled(&b, 1.0, 784, 0.5);
+        assert_eq!(tight.cap(784), 24);
+        let floor = BoundaryTable::for_boundary_scaled(&AnyBoundary::Budgeted { k: 1 }, 1.0, 784, 0.1);
+        assert_eq!(floor.cap(784), 1, "budget never shrinks below one coordinate");
+
+        // Full stays a never-stop baseline.
+        let full = BoundaryTable::for_boundary_scaled(&AnyBoundary::Full, 1.0, 784, 0.25);
+        assert_eq!(full.cap(784), 784);
+        assert_eq!(full.level_at(5), f64::INFINITY);
+
+        // A scaled cache re-applies its factor on length rebuilds.
+        let mut cache = TableCache::new_scaled(AnyBoundary::Curved { delta: 0.1 }, 4.0, 784, 0.5);
+        let rebuilt = cache.for_total(32);
+        let fresh = BoundaryTable::for_boundary_scaled(&AnyBoundary::Curved { delta: 0.1 }, 4.0, 32, 0.5);
+        for i in 1..=32 {
+            assert_eq!(rebuilt.level_at(i), fresh.level_at(i));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "tighten must be in (0,1]")]
+    fn scaled_table_rejects_bad_factor() {
+        BoundaryTable::for_boundary_scaled(&AnyBoundary::Full, 1.0, 8, 0.0);
     }
 
     #[test]

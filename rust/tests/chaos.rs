@@ -63,7 +63,13 @@ fn loopback_server(snapshot: ModelSnapshot, queue: usize, workers: usize) -> Tcp
 /// One dense score request for `Client::call_retry` (JSON path: works
 /// on a non-negotiated connection, so reconnects skip the handshake).
 fn score_request(features: Vec<f64>) -> Request {
-    Request::Score { id: None, model: None, features: Features::Dense(features) }
+    Request::Score {
+        id: None,
+        model: None,
+        features: Features::Dense(features),
+        deadline_ms: None,
+        priority: None,
+    }
 }
 
 /// A contained worker panic answers a retryable `internal` error on the

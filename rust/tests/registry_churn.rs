@@ -136,7 +136,7 @@ fn churn_cycles_never_disturb_streaming_siblings() {
 
         // Foreground: churn throwaway learn-enabled shards.
         let mut control = Client::connect(&addr).expect("control connect");
-        assert_eq!(control.negotiate().unwrap(), 5, "backend {backend:?}: v5 grant");
+        assert_eq!(control.negotiate().unwrap(), 7, "backend {backend:?}: v7 grant");
         for cycle in 0..3 {
             let name = format!("live-{cycle}");
             let (id, dim) = control

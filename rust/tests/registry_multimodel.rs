@@ -132,7 +132,7 @@ fn mixed_v1_v3_traffic_across_four_shards_with_midstream_reload() {
     }
     // Classify on the ensemble shard, dense and sparse.
     match control.classify(Some("digits"), probe.clone()).expect("classify") {
-        Response::Classify { label, votes, voters, features_evaluated } => {
+        Response::Classify { label, votes, voters, features_evaluated, .. } => {
             assert_eq!(label, 0, "all-positive voters vote their pos class");
             assert_eq!((votes, voters), (2, 3));
             assert!(features_evaluated < 3 * DIM, "voters early-exit");
@@ -353,7 +353,7 @@ fn unknown_models_and_kind_mismatches_are_structured_errors() {
     client.ping().expect("connection survives all rejections");
 
     // Same screens on the binary wire, by interned id.
-    assert_eq!(client.negotiate().unwrap(), 5);
+    assert_eq!(client.negotiate().unwrap(), 7);
     match client.score_sparse2(99, vec![1], vec![1.0], 0).unwrap() {
         Response::Error { error, retryable, .. } => {
             assert!(error.contains("unknown model id"), "got {error:?}");
@@ -479,7 +479,7 @@ fn u32_indices_reach_wide_models_where_the_legacy_frame_cannot() {
     let wide_dim = 70_000;
     let server = registry_server(vec![("wide".into(), flat_snapshot(wide_dim, 1.0).into())], 64, 1);
     let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 5);
+    assert_eq!(client.negotiate().unwrap(), 7);
     // The legacy frame cannot even express the index ...
     let err = client.score_sparse(vec![69_999], vec![1.0], 0).unwrap_err();
     assert!(err.to_string().contains("u16"), "got {err}");

@@ -5,18 +5,18 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
-use attentive::config::{IoBackend, ServerConfig, TrainerWireConfig};
+use attentive::config::{BrownoutConfig, IoBackend, ServerConfig, TrainerWireConfig};
 use attentive::coordinator::factory::build_wire_pegasos;
-use attentive::coordinator::service::{Features, ModelSnapshot};
+use attentive::coordinator::service::{Features, Lane, ModelSnapshot};
 use attentive::coordinator::trainer::{Trainer, TrainerConfig};
 use attentive::data::synth::SynthDigits;
 use attentive::data::task::BinaryTask;
 use attentive::learner::attentive::attentive_pegasos;
 use attentive::learner::OnlineLearner;
 use attentive::margin::policy::CoordinatePolicy;
-use attentive::server::frame::{ErrorCode, Frame, BATCH_STATUS_OK};
+use attentive::server::frame::{ErrorCode, Frame, BATCH_STATUS_OK, LANE_BULK, LANE_DEFAULT};
 use attentive::server::loadgen::{self, Client, ClientMode, LoadGenConfig};
-use attentive::server::protocol::Response;
+use attentive::server::protocol::{Request, Response};
 use attentive::server::tcp::TcpServer;
 use attentive::stst::boundary::AnyBoundary;
 
@@ -265,8 +265,8 @@ fn v2_negotiated_client_scores_sparse_and_runs_control_ops() {
 
     let mut client = Client::connect(&addr).unwrap();
     assert_eq!(client.proto(), 1);
-    assert_eq!(client.negotiate().unwrap(), 6, "server grants the full v6 capability set");
-    assert_eq!(client.proto(), 6);
+    assert_eq!(client.negotiate().unwrap(), 7, "server grants the full v7 capability set");
+    assert_eq!(client.proto(), 7);
 
     // Native sparse frame: 3 nonzeros, all-ones model -> positive score
     // touching at most 3 coordinates.
@@ -355,6 +355,8 @@ fn v2_rejects_malformed_sparse_payloads_with_structured_errors() {
         id: None,
         model: None,
         features: Features::Sparse { idx: vec![2, 2], val: vec![1.0, 1.0] },
+        deadline_ms: None,
+        priority: None,
     };
     match v1.call(&dup).unwrap() {
         Response::Error { error, retryable, .. } => {
@@ -401,7 +403,7 @@ fn batch_matches_singles_on(backend: IoBackend) {
     // Server A: one frame per example.
     let a = serve();
     let mut client = Client::connect(&a.local_addr().to_string()).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 6);
+    assert_eq!(client.negotiate().unwrap(), 7);
     let singles: Vec<(f64, usize)> = examples
         .iter()
         .map(|(idx, val)| match client.score_sparse2(0, idx.clone(), val.clone(), 0).unwrap() {
@@ -414,7 +416,7 @@ fn batch_matches_singles_on(backend: IoBackend) {
     // Server B: the same examples in one SCORE_BATCH frame.
     let b = serve();
     let mut client = Client::connect(&b.local_addr().to_string()).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 6);
+    assert_eq!(client.negotiate().unwrap(), 7);
     let rows = client.score_batch(0, 0, &examples).unwrap();
     assert_eq!(rows.len(), examples.len());
     for (i, (row, (score, evaluated))) in rows.iter().zip(&singles).enumerate() {
@@ -472,7 +474,7 @@ fn one_bad_batch_example_never_poisons_its_batchmates() {
     let server = loopback_server(flat_snapshot(1.0), 256, 1);
     let addr = server.local_addr().to_string();
     let mut client = Client::connect(&addr).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 6);
+    assert_eq!(client.negotiate().unwrap(), 7);
 
     // Two clean examples bracket three different per-example rejects:
     // a non-finite value, an unsorted support, an out-of-range index.
@@ -637,7 +639,7 @@ fn learn_over_the_wire_converges_and_publishes_generations() {
     let addr = server.local_addr().to_string();
 
     let mut client = Client::connect(&addr).unwrap();
-    assert_eq!(client.negotiate().unwrap(), 6, "server grants v6");
+    assert_eq!(client.negotiate().unwrap(), 7, "server grants v7");
 
     // Offline reference: the exact learner the wire trainer builds, fed
     // the same sequence — the server's counters must land on these.
@@ -861,4 +863,403 @@ fn mixed_learn_and_score_load_shares_the_wire() {
     assert_eq!(frozen_stats.gen, 1, "no cross-shard publishes");
     assert_eq!(frozen_stats.learn_examples, 0);
     server.shutdown();
+}
+
+#[test]
+fn deadline_expired_in_queue_sheds_at_dequeue() {
+    // Zero weights never clear the boundary, so every example walks its
+    // full support — a pending-cap's worth of 64×784 batches is several
+    // milliseconds of worker backlog, far past a 1 ms deadline.
+    let snapshot = ModelSnapshot {
+        weights: vec![0.0; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    };
+    let server = loopback_server(snapshot, 256, 1);
+    let addr = server.local_addr().to_string();
+
+    // Raw v7 socket: flood legacy (deadline-free) SCORE_BATCH frames
+    // without reading a response, then one bulk-lane single carrying a
+    // 1 ms deadline. The per-connection pending cap (64) keeps that
+    // many batches in flight, so the single is admitted behind a full
+    // cap of bulk work and must be expired by the time it is dequeued.
+    let stream = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    {
+        let mut s = &stream;
+        s.write_all(b"{\"op\":\"hello\",\"proto\":7}\n").unwrap();
+    }
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(matches!(Response::parse(line.trim()).unwrap(), Response::Hello { proto: 7, .. }));
+
+    const FLOOD: usize = 80;
+    const PER_BATCH: usize = 64;
+    let idx: Vec<u32> = (0..DIM as u32).collect();
+    let val = vec![1.0f64; DIM];
+    let mut batch = Vec::new();
+    {
+        let mut enc = Frame::begin_score_batch(&mut batch, 0, 0);
+        for _ in 0..PER_BATCH {
+            enc.push_example(&idx, &val);
+        }
+        enc.finish();
+    }
+    for _ in 0..FLOOD {
+        let mut s = &stream;
+        s.write_all(&batch).unwrap();
+    }
+    let mut single = Vec::new();
+    Frame::put_sparse_ex(&mut single, 0, 0, 1, LANE_BULK, &[5], &[1.0]);
+    {
+        let mut s = &stream;
+        s.write_all(&single).unwrap();
+    }
+
+    // The JSON twin on its own connection: same 1 ms deadline, same
+    // bulk-lane override, admitted behind the same in-flight backlog.
+    let mut json = Client::connect(&addr).unwrap();
+    let shed = json
+        .call(&Request::Score {
+            id: None,
+            model: None,
+            features: Features::Sparse { idx: vec![5], val: vec![1.0] },
+            deadline_ms: Some(1),
+            priority: Some(Lane::Bulk),
+        })
+        .unwrap();
+    assert!(shed.is_deadline_exceeded(), "JSON deadline shed, got {shed:?}");
+    match shed {
+        Response::Error { retryable, .. } => assert!(retryable, "a shed must invite a retry"),
+        _ => unreachable!(),
+    }
+
+    // Drain the raw socket: every deadline-free batch answered in full,
+    // plus exactly one DEADLINE_EXCEEDED frame for the expired single.
+    let (mut rows_ok, mut deadline_errs) = (0usize, 0usize);
+    for _ in 0..FLOOD + 1 {
+        match Frame::read_from(&mut reader, 1 << 20).unwrap() {
+            Frame::ScoreBatchResp { results, .. } => {
+                assert_eq!(results.len(), PER_BATCH);
+                assert!(results.iter().all(|r| r.status == BATCH_STATUS_OK));
+                rows_ok += results.len();
+            }
+            Frame::Error { code, retryable, .. } => {
+                assert_eq!(code, ErrorCode::DeadlineExceeded);
+                assert!(retryable);
+                deadline_errs += 1;
+            }
+            other => panic!("unexpected frame {other:?}"),
+        }
+    }
+    assert_eq!(rows_ok, FLOOD * PER_BATCH, "deadline-free bulk is never shed");
+    assert_eq!(deadline_errs, 1);
+
+    // A deadline with headroom is a no-op, and `stats` holds exactly
+    // the two sheds.
+    let mut control = Client::connect(&addr).unwrap();
+    control.negotiate().unwrap();
+    match control.score_sparse_ex(0, 0, 60_000, LANE_DEFAULT, &[5], &[1.0]).unwrap() {
+        Response::Score { degraded, .. } => assert!(!degraded, "no brownout on this server"),
+        other => panic!("headroom single got {other:?}"),
+    }
+    let stats = control.stats().unwrap();
+    assert_eq!(stats.deadline_sheds, 2, "one binary + one JSON shed");
+    assert_eq!(stats.degraded_responses, 0);
+    assert_eq!(stats.tier_transitions, 0, "brownout disabled: the tier never moves");
+    server.shutdown();
+}
+
+/// The brownout acceptance run: twin servers under the same
+/// over-capacity single-stream load, one with an aggressive brownout
+/// controller and one without. The brownout twin must answer
+/// everything, climb at least one tier, flag degraded responses, and
+/// spend measurably fewer features per answer than the plain twin.
+#[test]
+fn brownout_cuts_features_under_pressure_and_reports_tiers() {
+    // Weights small enough that the untightened boundary is never (or
+    // barely) cleared within a clean render's support — normal-tier
+    // walks run the full support, keeping the single worker the
+    // bottleneck — while the tier-1/2 boundaries (τ×0.25, τ×0.0625)
+    // are cleared within tens of coordinates.
+    let snapshot = ModelSnapshot {
+        weights: vec![0.02; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    };
+    let serve = |brownout: Option<BrownoutConfig>| {
+        let cfg = ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            queue: 1024,
+            brownout,
+            ..Default::default()
+        };
+        TcpServer::serve(&cfg, snapshot.clone()).expect("bind loopback")
+    };
+    // In-flight (8 conns × 64 pipeline = 512) stays under the queue
+    // bound: nothing sheds, every request is scored, and the queue
+    // sits deep for the controller's whole sampling cadence. The huge
+    // deadline never expires — it is there to switch the driver onto
+    // the v7 EX frames whose responses carry the degraded flag.
+    let load = |addr: String| {
+        loadgen::run(&LoadGenConfig {
+            addr,
+            connections: 8,
+            requests: 30_000,
+            pipeline: 64,
+            hard_fraction: 0.0,
+            mode: ClientMode::V2Binary,
+            sparse_eps: 0.05,
+            deadline_ms: 60_000,
+            seed: 97,
+            ..Default::default()
+        })
+        .expect("loadgen")
+    };
+
+    let plain = serve(None);
+    let plain_addr = plain.local_addr().to_string();
+    let p = load(plain_addr.clone());
+    let mut control = Client::connect(&plain_addr).unwrap();
+    let p_stats = control.stats().unwrap();
+    plain.shutdown();
+    assert_eq!(p.sent, 30_000);
+    assert_eq!(p.answered, 30_000, "under-queue load: every request scored");
+    assert_eq!(p.errors, 0);
+    assert_eq!(p.degraded, 0, "no brownout, no degraded answers");
+    assert_eq!(p_stats.brownout_tier, 0);
+    assert_eq!(p_stats.tier_transitions, 0);
+    assert_eq!(p_stats.degraded_responses, 0);
+
+    let browned = serve(Some(BrownoutConfig {
+        tighten: 0.25,
+        enter: 0.05,
+        exit: 0.02,
+        dwell_ms: 0,
+        sample_ms: 1,
+        latency_target_us: 0,
+    }));
+    let brown_addr = browned.local_addr().to_string();
+    let q = load(brown_addr.clone());
+    let mut control = Client::connect(&brown_addr).unwrap();
+    let q_stats = control.stats().unwrap();
+    browned.shutdown();
+    assert_eq!(q.sent, 30_000);
+    assert_eq!(q.answered, 30_000, "brownout degrades, it must not drop");
+    assert_eq!(q.errors, 0);
+    assert!(q.degraded > 0, "a deep queue must produce brown-tier answers");
+    assert!(q_stats.tier_transitions >= 1, "the controller must have moved");
+    assert_eq!(q_stats.degraded_responses, q.degraded, "server and client agree");
+    assert!(
+        q.avg_features() < 0.8 * p.avg_features(),
+        "brown tiers must cut the mean attention spend: {} vs plain {}",
+        q.avg_features(),
+        p.avg_features()
+    );
+}
+
+/// Brownout disabled — and brownout enabled but never pressured — are
+/// bit-identical to each other over the wire: the tier-0 path reads
+/// the same untightened table, so enabling the controller costs
+/// nothing until pressure actually arrives.
+#[test]
+fn brownout_disabled_and_idle_controller_are_bit_identical() {
+    let snapshot = ModelSnapshot {
+        weights: vec![0.05; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    };
+    let serve = |brownout: Option<BrownoutConfig>| {
+        let cfg = ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            queue: 256,
+            brownout,
+            ..Default::default()
+        };
+        TcpServer::serve(&cfg, snapshot.clone()).expect("bind loopback")
+    };
+    // Thresholds no sequential single-connection stream can reach:
+    // the controller runs but the tier never leaves `normal`.
+    let inert = BrownoutConfig {
+        tighten: 0.5,
+        enter: 0.99,
+        exit: 0.5,
+        dwell_ms: 10_000,
+        sample_ms: 50,
+        latency_target_us: 0,
+    };
+
+    let mut digits = SynthDigits::new(53);
+    let examples: Vec<(Vec<u32>, Vec<f64>)> = (0..12)
+        .map(|i| {
+            let dense = digits.render(if i % 2 == 0 { 2 } else { 3 });
+            let (mut idx, mut val) = (Vec::new(), Vec::new());
+            Features::sparsify_into(&dense, 0.05, &mut idx, &mut val);
+            (idx, val)
+        })
+        .collect();
+
+    let score_all = |server: &TcpServer| -> Vec<(u64, usize, bool)> {
+        let mut client = Client::connect(&server.local_addr().to_string()).unwrap();
+        assert_eq!(client.negotiate().unwrap(), 7);
+        examples
+            .iter()
+            .map(|(idx, val)| {
+                match client.score_sparse2(0, idx.clone(), val.clone(), 0).unwrap() {
+                    Response::Score { score, features_evaluated, degraded, .. } => {
+                        (score.to_bits(), features_evaluated, degraded)
+                    }
+                    other => panic!("single got {other:?}"),
+                }
+            })
+            .collect()
+    };
+
+    let off = serve(None);
+    let rows_off = score_all(&off);
+    off.shutdown();
+    let on = serve(Some(inert));
+    let rows_on = score_all(&on);
+    let mut control = Client::connect(&on.local_addr().to_string()).unwrap();
+    let stats = control.stats().unwrap();
+    on.shutdown();
+
+    assert_eq!(rows_off, rows_on, "idle controller must not perturb a single bit");
+    assert!(rows_off.iter().all(|(_, _, degraded)| !degraded));
+    assert_eq!(stats.degraded_responses, 0);
+    assert_eq!(stats.tier_transitions, 0);
+}
+
+#[test]
+fn batcher_flushes_at_count_and_drains_over_the_wire() {
+    let server = loopback_server(flat_snapshot(1.0), 256, 1);
+    let addr = server.local_addr().to_string();
+    let mut client = Client::connect(&addr).unwrap();
+    client.negotiate().unwrap();
+
+    // Count trigger: k = 3 with a window too wide to ever fire.
+    {
+        let mut b = client.batcher(0, 0, 3, 60_000_000).unwrap();
+        assert!(b.push(vec![10], vec![0.9]).unwrap().is_none());
+        assert!(b.push(vec![20], vec![0.8]).unwrap().is_none());
+        assert_eq!(b.pending(), 2);
+        let rows = b.push(vec![30], vec![0.7]).unwrap().expect("third push fills the batch");
+        assert_eq!(rows.len(), 3);
+        assert!(rows.iter().all(|r| r.status == BATCH_STATUS_OK && r.score > 0.0));
+        assert_eq!(b.pending(), 0, "a flush rearms the window");
+
+        // End-of-stream drain: whatever is buffered goes out as one
+        // final short batch.
+        assert!(b.push(vec![40], vec![0.6]).unwrap().is_none());
+        assert!(b.push(vec![50], vec![0.5]).unwrap().is_none());
+        let rows = b.flush().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(b.flush().unwrap().is_empty(), "an empty drain never touches the wire");
+    }
+
+    // Time trigger: a 1 µs window with a distant count trigger — the
+    // second push lands long after the window and must flush both.
+    {
+        let mut b = client.batcher(0, 0, 100, 1).unwrap();
+        assert!(b.push(vec![10], vec![0.9]).unwrap().is_none(), "first push opens the window");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let rows = b.push(vec![20], vec![0.8]).unwrap().expect("window expired");
+        assert_eq!(rows.len(), 2);
+
+        // flush_if_due: the drain for callers polling between pushes.
+        assert!(b.push(vec![30], vec![0.7]).unwrap().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let rows = b.flush_if_due().unwrap().expect("window expired while idle");
+        assert_eq!(rows.len(), 1);
+    }
+    server.shutdown();
+}
+
+/// The CI overload smoke (both I/O backends): windowed open-loop load
+/// far past a single worker's capacity, every request carrying a 1 ms
+/// deadline, against a brownout-enabled server. Gates: nothing goes
+/// unanswered, deadlines actually shed, and the controller visibly
+/// moves at least one tier.
+fn overload_smoke_with_deadlines_on(backend: IoBackend) {
+    // Zero weights: no early exit ever, so per-request service cost is
+    // the full support walk and does not shrink as tiers climb — the
+    // queue stays saturated for the whole run.
+    let snapshot = ModelSnapshot {
+        weights: vec![0.0; DIM],
+        var_sn: 4.0,
+        boundary: AnyBoundary::Constant { delta: 0.1, paper_literal: false },
+        policy: CoordinatePolicy::Permuted,
+    };
+    let cfg = ServerConfig {
+        listen: "127.0.0.1:0".into(),
+        workers: 1,
+        queue: 8192,
+        io_backend: backend,
+        brownout: Some(BrownoutConfig {
+            tighten: 0.5,
+            enter: 0.05,
+            exit: 0.02,
+            dwell_ms: 0,
+            sample_ms: 1,
+            latency_target_us: 0,
+        }),
+        ..Default::default()
+    };
+    let server = TcpServer::serve(&cfg, snapshot).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    // 128 sockets × 64-request windows = 8192 in flight per sweep —
+    // hours of queue wait in 1 ms-deadline terms. Expired requests are
+    // shed at dequeue in microseconds, so the run still drains fast.
+    let report = loadgen::run(&LoadGenConfig {
+        addr: addr.clone(),
+        connections: 128,
+        requests: 16_384,
+        pipeline: 64,
+        hard_fraction: 1.0,
+        mode: ClientMode::V2Binary,
+        sparse_eps: 0.05,
+        deadline_ms: 1,
+        seed: 13,
+        open_loop: true,
+        ..Default::default()
+    })
+    .expect("loadgen");
+
+    assert_eq!(report.sent, 16_384, "backend {backend:?}");
+    assert_eq!(report.errors, 0, "backend {backend:?}: no protocol errors under overload");
+    assert_eq!(
+        report.answered + report.overloaded + report.deadline_sheds,
+        report.sent,
+        "backend {backend:?}: zero unanswered requests"
+    );
+    assert!(
+        report.deadline_sheds > 0,
+        "backend {backend:?}: a saturated queue must expire 1 ms deadlines"
+    );
+
+    let mut control = Client::connect(&addr).unwrap();
+    let stats = control.stats().unwrap();
+    assert_eq!(stats.deadline_sheds, report.deadline_sheds, "backend {backend:?}");
+    assert!(
+        stats.tier_transitions >= 1,
+        "backend {backend:?}: sustained pressure must move the tier"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn overload_smoke_with_deadlines() {
+    overload_smoke_with_deadlines_on(IoBackend::Threads);
+}
+
+#[cfg(target_os = "linux")]
+#[test]
+fn overload_smoke_with_deadlines_on_event_loop() {
+    overload_smoke_with_deadlines_on(IoBackend::EventLoop);
 }

@@ -96,6 +96,8 @@ fn slowloris_partial_requests_are_buffered_not_dropped() {
             id: Some(7),
             model: None,
             features: Features::Sparse { idx: vec![3, 40], val: vec![1.0, 1.0] },
+            deadline_ms: None,
+            priority: None,
         }
         .to_line();
         for &b in line.as_bytes() {
@@ -223,6 +225,8 @@ fn idle_connection_churn_neither_sheds_nor_leaks() {
                             id: None,
                             model: None,
                             features: Features::Sparse { idx: vec![9], val: vec![1.0] },
+                            deadline_ms: None,
+                            priority: None,
                         }
                         .to_line()
                         .as_bytes(),
@@ -267,6 +271,8 @@ fn half_close_still_answers_the_pipeline() {
                         id: Some(i),
                         model: None,
                         features: Features::Sparse { idx: vec![3], val: vec![1.0] },
+                        deadline_ms: None,
+                        priority: None,
                     }
                     .to_line()
                     .as_bytes(),
@@ -378,7 +384,7 @@ fn verbose_classify_breakdown_over_the_wire() {
         ));
 
         // Binary wire: CLASSIFY_SPARSE_VERBOSE → CLASS_VERBOSE.
-        assert_eq!(client.negotiate().unwrap(), 5);
+        assert_eq!(client.negotiate().unwrap(), 7);
         match client
             .classify_sparse_verbose(1, vec![5, 100, 300], vec![1.0, 1.0, 1.0], 0)
             .unwrap()
